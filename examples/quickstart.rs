@@ -1,0 +1,31 @@
+//! Quickstart: a 5-learner simulated federation in ~20 lines.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Uses the synthetic stress trainer (no artifacts needed). For real
+//! XLA-backed local training see `federated_training.rs`.
+
+use metisfl::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    let env = FederationEnv::builder("quickstart")
+        .learners(5)
+        .rounds(3)
+        .model(ModelSpec::mlp(8, 10, 32)) // 10 hidden layers x 32 units
+        .samples_per_learner(100)
+        .batch_size(100)
+        .build();
+
+    let report = run_simulated(&env)?;
+
+    println!("federation '{}' completed in {:?}", report.env_name, report.wall_clock);
+    for r in &report.round_metrics {
+        println!(
+            "round {}: {}/{} learners, dispatch {:?}, aggregation {:?}, total {:?}",
+            r.round, r.completed, r.participants, r.train_dispatch, r.aggregation,
+            r.federation_round
+        );
+    }
+    println!("final community eval loss: {:?}", report.final_loss);
+    Ok(())
+}

@@ -1,0 +1,39 @@
+//! Mini version of the paper's §4.2 stress test: one (model size,
+//! learner count) cell across all six framework profiles, printing the
+//! per-operation breakdown of Figs. 5–7. For the full sweeps use
+//! `cargo bench --bench fig5|fig6|fig7` (FULL=1 for the paper's grid).
+//!
+//!     cargo run --release --example stress_test -- --learners 25 --layers 20 --units 32
+
+use metisfl::baselines::Framework;
+use metisfl::cli::Command;
+use metisfl::config::ModelSpec;
+use metisfl::harness::{figure_sweep, FigureConfig};
+
+fn main() -> anyhow::Result<()> {
+    let cmd = Command::new("stress_test", "one cross-framework stress cell")
+        .opt("learners", Some("25"), "number of learners")
+        .opt("layers", Some("20"), "hidden layers")
+        .opt("units", Some("32"), "units per hidden layer");
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let a = match cmd.parse(&raw) {
+        Ok(a) => a,
+        Err(metisfl::cli::CliError::Help) => {
+            println!("{}", cmd.help());
+            return Ok(());
+        }
+        Err(e) => return Err(e.into()),
+    };
+    let config = FigureConfig {
+        name: "stress_example",
+        spec: ModelSpec::mlp(8, a.get_usize("layers")?, a.get_usize("units")?),
+        learner_counts: vec![a.get_usize("learners")?],
+        frameworks: Framework::ALL.to_vec(),
+        seed: 42,
+    };
+    let result = figure_sweep(config);
+    result.emit_panels()?;
+    println!("\n(aggregation column for MetisFL gRPC+OMP is modelled at 32 cores on");
+    println!(" 1-core machines — see DESIGN.md §Substitutions; CSVs in bench_out/)");
+    Ok(())
+}

@@ -1,0 +1,130 @@
+"""AOT lowering: JAX/Pallas -> HLO text artifacts + manifest.json.
+
+Run once via ``make artifacts`` (never on the request path):
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Interchange format is HLO **text**, not a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the image's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Per model variant we export:
+  * ``train_<variant>.hlo.txt``   — train_step(flat, x, y, lr) -> (flat', loss)
+  * ``eval_<variant>.hlo.txt``    — eval_step(flat, x, y) -> (loss,)
+  * ``lincomb_<variant>.hlo.txt`` — lincomb(a, b, wa, wb) -> (out,) over [P]
+plus a ``manifest.json`` the Rust runtime reads.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import lincomb
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True; the
+    Rust side unwraps the tuple)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export_variant(spec: M.MlpSpec, batch: int, out_dir: str) -> dict:
+    name = spec.variant_name()
+    p = spec.param_count()
+    flat = jax.ShapeDtypeStruct((p,), jnp.float32)
+    x = jax.ShapeDtypeStruct((batch, spec.input_dim), jnp.float32)
+    y = jax.ShapeDtypeStruct((batch,), jnp.float32)
+    lr = jax.ShapeDtypeStruct((), jnp.float32)
+
+    files = {}
+    train = jax.jit(M.make_train_step(spec), donate_argnums=(0,))
+    files["train"] = f"train_{name}.hlo.txt"
+    with open(os.path.join(out_dir, files["train"]), "w") as f:
+        f.write(to_hlo_text(train.lower(flat, x, y, lr)))
+
+    eval_step = jax.jit(M.make_eval_step(spec))
+    files["eval"] = f"eval_{name}.hlo.txt"
+    with open(os.path.join(out_dir, files["eval"]), "w") as f:
+        f.write(to_hlo_text(eval_step.lower(flat, x, y)))
+
+    vec = jax.ShapeDtypeStruct((p,), jnp.float32)
+    w = jax.ShapeDtypeStruct((), jnp.float32)
+    lc = jax.jit(lambda a, b, wa, wb: (lincomb(a, b, wa, wb),))
+    files["lincomb"] = f"lincomb_{name}.hlo.txt"
+    with open(os.path.join(out_dir, files["lincomb"]), "w") as f:
+        f.write(to_hlo_text(lc.lower(vec, vec, w, w)))
+
+    return {
+        "train": files["train"],
+        "eval": files["eval"],
+        "lincomb": files["lincomb"],
+        "param_count": p,
+        "input_dim": spec.input_dim,
+        "hidden_layers": spec.hidden_layers,
+        "hidden_units": spec.hidden_units,
+        "batch": batch,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--batch", type=int, default=100, help="static batch size")
+    ap.add_argument(
+        "--variants",
+        default="tiny,small",
+        help=(
+            "comma list of: tiny (test-scale), small (quickstart), "
+            "paper100k, paper1m, paper10m"
+        ),
+    )
+    args = ap.parse_args()
+
+    catalog = {
+        # Test-scale variants keep `make artifacts` fast; the paper-scale
+        # MLPs are exported on demand for the full benches/examples.
+        "tiny": (M.MlpSpec(4, 2, 8), 16),
+        "small": (M.MlpSpec(8, 4, 32), args.batch),
+        "paper100k": (M.PAPER_100K, args.batch),
+        "paper1m": (M.PAPER_1M, args.batch),
+        "paper10m": (M.PAPER_10M, args.batch),
+    }
+    os.makedirs(args.out, exist_ok=True)
+    manifest_path = os.path.join(args.out, "manifest.json")
+    manifest = {"variants": {}}
+    if os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+
+    for key in args.variants.split(","):
+        key = key.strip()
+        if not key:
+            continue
+        if key not in catalog:
+            sys.exit(f"unknown variant '{key}' (have {sorted(catalog)})")
+        spec, batch = catalog[key]
+        name = spec.variant_name()
+        if name in manifest["variants"]:
+            print(f"[aot] {name}: already in manifest, skipping")
+            continue
+        print(f"[aot] exporting {key} -> {name} (P={spec.param_count():,}, batch={batch})")
+        manifest["variants"][name] = export_variant(spec, batch, args.out)
+
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"[aot] wrote {manifest_path} ({len(manifest['variants'])} variants)")
+
+
+if __name__ == "__main__":
+    main()

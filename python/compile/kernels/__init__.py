@@ -1,0 +1,11 @@
+"""Layer-1 Pallas kernels (build-time only; lowered into the L2 HLO).
+
+All kernels run with ``interpret=True`` — the CPU PJRT plugin cannot
+execute Mosaic custom-calls, so interpret mode is the correctness target
+on this image; the BlockSpec structure is written for real-TPU execution
+(see DESIGN.md §Hardware-Adaptation).
+"""
+
+from .dense import fused_dense
+from .fedavg import lincomb, weighted_aggregate
+from .sgd import sgd_update

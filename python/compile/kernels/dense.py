@@ -1,0 +1,95 @@
+"""Fused dense layer: ``relu(x @ w + b)`` as a tiled Pallas kernel.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid tiles the output
+``[batch, out]`` matrix into VMEM-resident blocks; each grid step streams
+one ``[bm, k]`` × ``[k, bn]`` panel pair HBM→VMEM (expressed by the
+BlockSpecs) and contracts it on the MXU via ``jnp.dot`` with an f32
+accumulator. Block sizes are clamped multiples of the 8×128 VPU lane
+layout where the model width allows.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _block(dim: int, preferred: int) -> int:
+    """Largest divisor of ``dim`` that is <= preferred (keeps the grid
+    exact without masking — model widths here are 32/100/320)."""
+    b = min(dim, preferred)
+    while dim % b:
+        b -= 1
+    return b
+
+
+def _dense_kernel(x_ref, w_ref, b_ref, o_ref, *, relu: bool):
+    # One [bm, k] x [k, bn] MXU contraction per grid step.
+    acc = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    acc = acc + b_ref[...][None, :]
+    if relu:
+        acc = jnp.maximum(acc, 0.0)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def _dense_forward(x, w, b, relu: bool, bm: int, bn: int):
+    batch, in_dim = x.shape
+    in_dim_w, out_dim = w.shape
+    assert in_dim == in_dim_w, (in_dim, in_dim_w)
+    assert b.shape == (out_dim,)
+    bm = _block(batch, bm)
+    bn = _block(out_dim, bn)
+    grid = (batch // bm, out_dim // bn)
+    return pl.pallas_call(
+        functools.partial(_dense_kernel, relu=relu),
+        out_shape=jax.ShapeDtypeStruct((batch, out_dim), x.dtype),
+        grid=grid,
+        in_specs=[
+            # x panel: full K per (i, j) step, row block i.
+            pl.BlockSpec((bm, in_dim), lambda i, j: (i, 0)),
+            # w panel: full K, column block j.
+            pl.BlockSpec((in_dim, bn), lambda i, j: (0, j)),
+            # bias: column block j.
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x, w, b)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _fused_dense(x, w, b, relu: bool, bm: int, bn: int):
+    return _dense_forward(x, w, b, relu, bm, bn)
+
+
+def _fused_dense_fwd(x, w, b, relu, bm, bn):
+    out = _dense_forward(x, w, b, relu, bm, bn)
+    return out, (x, w, out)
+
+
+def _fused_dense_bwd(relu, bm, bn, res, g):
+    # Backward: standard dense-layer cotangents. pallas_call has no
+    # built-in transpose rule, so the backward matmuls are expressed in
+    # plain XLA ops (they fuse into the same lowered module; the L1
+    # contribution is the forward fused kernel + sgd/lincomb kernels).
+    x, w, out = res
+    if relu:
+        g = g * (out > 0).astype(g.dtype)
+    dx = g @ w.T
+    dw = x.T @ g
+    db = jnp.sum(g, axis=0)
+    return dx, dw, db
+
+
+_fused_dense.defvjp(_fused_dense_fwd, _fused_dense_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("relu", "bm", "bn"))
+def fused_dense(x, w, b, relu: bool = True, bm: int = 128, bn: int = 128):
+    """``relu(x @ w + b)`` (or identity activation) via Pallas.
+
+    x: [batch, in_dim]; w: [in_dim, out_dim]; b: [out_dim].
+    Differentiable (custom VJP), so it can sit inside the L2 train step.
+    """
+    return _fused_dense(x, w, b, relu, bm, bn)

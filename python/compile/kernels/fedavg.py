@@ -1,0 +1,82 @@
+"""FedAvg aggregation kernels.
+
+Two entry points:
+
+* ``lincomb(a, b, wa, wb) = wa*a + wb*b`` over flat parameter vectors —
+  the building block the Rust controller folds over N learners for the
+  XLA-aggregation ablation backend (works for any learner count with one
+  compiled artifact).
+* ``weighted_aggregate(stack, weights)`` — the full ``Σ_j w_j · T^j``
+  reduction over a stacked ``[N, D]`` block, the direct Pallas analog of
+  the paper's one-thread-per-tensor OpenMP loop (Fig. 4): the grid tiles
+  D; each grid step keeps a ``[N, bd]`` panel in VMEM and reduces over
+  the learner axis.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _block(dim: int, preferred: int) -> int:
+    b = min(dim, preferred)
+    while dim % b:
+        b -= 1
+    return b
+
+
+def _lincomb_kernel(a_ref, b_ref, wa_ref, wb_ref, o_ref):
+    o_ref[...] = wa_ref[0] * a_ref[...] + wb_ref[0] * b_ref[...]
+
+
+@jax.jit
+def lincomb(a, b, wa, wb):
+    """``wa*a + wb*b`` elementwise over flat [D] vectors; wa/wb scalars
+    (passed as shape-[1] so they live in SMEM-like blocks)."""
+    (d,) = a.shape
+    bd = _block(d, 64 * 1024)  # 256 KiB f32 per input panel in VMEM
+    wa = jnp.reshape(wa, (1,))
+    wb = jnp.reshape(wb, (1,))
+    return pl.pallas_call(
+        _lincomb_kernel,
+        out_shape=jax.ShapeDtypeStruct((d,), a.dtype),
+        grid=(d // bd,),
+        in_specs=[
+            pl.BlockSpec((bd,), lambda i: (i,)),
+            pl.BlockSpec((bd,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bd,), lambda i: (i,)),
+        interpret=True,
+    )(a, b, wa, wb)
+
+
+def _agg_kernel(stack_ref, w_ref, o_ref):
+    #
+
+    # Reduce the learner axis of the [N, bd] VMEM panel.
+    o_ref[...] = jnp.einsum(
+        "n,nd->d", w_ref[...], stack_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+@jax.jit
+def weighted_aggregate(stack, weights):
+    """``Σ_j weights[j] * stack[j]`` for stack [N, D], weights [N]."""
+    n, d = stack.shape
+    assert weights.shape == (n,)
+    bd = _block(d, 16 * 1024)
+    return pl.pallas_call(
+        _agg_kernel,
+        out_shape=jax.ShapeDtypeStruct((d,), stack.dtype),
+        grid=(d // bd,),
+        in_specs=[
+            pl.BlockSpec((n, bd), lambda i: (0, i)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bd,), lambda i: (i,)),
+        interpret=True,
+    )(stack, weights)

@@ -1,0 +1,20 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness target)."""
+
+import jax.numpy as jnp
+
+
+def fused_dense_ref(x, w, b, relu: bool = True):
+    out = x @ w + b[None, :]
+    return jnp.maximum(out, 0.0) if relu else out
+
+
+def lincomb_ref(a, b, wa, wb):
+    return wa * a + wb * b
+
+
+def weighted_aggregate_ref(stack, weights):
+    return jnp.einsum("n,nd->d", weights, stack)
+
+
+def sgd_update_ref(params, grads, lr):
+    return params - lr * grads

@@ -1,0 +1,42 @@
+"""Fused SGD parameter update: ``p - lr * g`` as a tiled Pallas kernel.
+
+Grid tiles the flat parameter vector; each step streams one parameter /
+gradient panel pair through VMEM and writes the updated panel — a pure
+VPU (elementwise) kernel, included so the whole L2 train step's update
+path is Pallas end-to-end.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _block(dim: int, preferred: int) -> int:
+    b = min(dim, preferred)
+    while dim % b:
+        b -= 1
+    return b
+
+
+def _sgd_kernel(p_ref, g_ref, lr_ref, o_ref):
+    o_ref[...] = p_ref[...] - lr_ref[0] * g_ref[...]
+
+
+@jax.jit
+def sgd_update(params, grads, lr):
+    """``params - lr * grads`` over flat [D] vectors; lr scalar."""
+    (d,) = params.shape
+    bd = _block(d, 64 * 1024)
+    lr = jnp.reshape(lr, (1,))
+    return pl.pallas_call(
+        _sgd_kernel,
+        out_shape=jax.ShapeDtypeStruct((d,), params.dtype),
+        grid=(d // bd,),
+        in_specs=[
+            pl.BlockSpec((bd,), lambda i: (i,)),
+            pl.BlockSpec((bd,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bd,), lambda i: (i,)),
+        interpret=True,
+    )(params, grads, lr)

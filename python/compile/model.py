@@ -1,0 +1,137 @@
+"""Layer-2: the paper's HousingMLP as pure-functional JAX train/eval steps.
+
+The model matches the stress-test architecture of §4.2: ``hidden_layers``
+densely connected layers of ``hidden_units`` units (ReLU), a linear
+regression head, MSE loss, vanilla SGD (footnote 4: 100k → 32 units/layer,
+1M → 100, 10M → 320).
+
+Interface contract with the Rust runtime (``rust/src/runtime``): the model
+travels as ONE flat f32 parameter vector (the controller's tensor-sequence
+layout concatenated in ``ModelSpec::tensor_layout()`` order — per-layer
+``w`` then ``b``, finally head ``w``/``b``):
+
+    train_step(flat_params[P], x[B,F], y[B], lr[])  -> (flat_params'[P], loss[])
+    eval_step(flat_params[P], x[B,F], y[B])         -> (loss[],)
+
+The forward pass calls the L1 Pallas kernels (``fused_dense``); the SGD
+update applies the ``sgd_update`` Pallas kernel to the flat gradient, so
+both hot paths lower into the exported HLO.
+"""
+
+from dataclasses import dataclass
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import fused_dense, sgd_update
+
+
+@dataclass(frozen=True)
+class MlpSpec:
+    """Mirror of the Rust ``ModelSpec`` (keep in sync)."""
+
+    input_dim: int
+    hidden_layers: int
+    hidden_units: int
+    output_dim: int = 1
+
+    def layout(self) -> List[Tuple[Tuple[int, ...], str]]:
+        """Per-tensor shapes in flat-vector order, with names."""
+        shapes = []
+        fan_in = self.input_dim
+        for l in range(self.hidden_layers):
+            shapes.append(((fan_in, self.hidden_units), f"dense_{l}/w"))
+            shapes.append(((self.hidden_units,), f"dense_{l}/b"))
+            fan_in = self.hidden_units
+        shapes.append(((fan_in, self.output_dim), "head/w"))
+        shapes.append(((self.output_dim,), "head/b"))
+        return shapes
+
+    def param_count(self) -> int:
+        return sum(int(jnp.prod(jnp.array(s))) for s, _ in self.layout())
+
+    def variant_name(self) -> str:
+        return (
+            f"mlp_l{self.hidden_layers}_u{self.hidden_units}"
+            f"_in{self.input_dim}_out{self.output_dim}"
+        )
+
+
+# Paper variants (§4.2 footnote 4).
+PAPER_100K = MlpSpec(8, 100, 32)
+PAPER_1M = MlpSpec(8, 100, 100)
+PAPER_10M = MlpSpec(8, 100, 320)
+
+
+def unflatten(spec: MlpSpec, flat):
+    """Split the flat parameter vector into (w, b) pairs."""
+    params = []
+    off = 0
+    for shape, _ in spec.layout():
+        n = 1
+        for d in shape:
+            n *= d
+        params.append(flat[off : off + n].reshape(shape))
+        off += n
+    return params
+
+
+def flatten(tensors) -> jnp.ndarray:
+    return jnp.concatenate([t.reshape(-1) for t in tensors])
+
+
+def forward(spec: MlpSpec, flat, x, *, use_pallas: bool = True):
+    """MLP forward over the flat parameter vector -> predictions [B]."""
+    params = unflatten(spec, flat)
+    h = x
+    n_pairs = len(params) // 2
+    for p in range(n_pairs):
+        w, b = params[2 * p], params[2 * p + 1]
+        is_head = p == n_pairs - 1
+        if use_pallas:
+            h = fused_dense(h, w, b, relu=not is_head)
+        else:
+            h = h @ w + b[None, :]
+            if not is_head:
+                h = jnp.maximum(h, 0.0)
+    return h[:, 0]
+
+
+def mse_loss(spec: MlpSpec, flat, x, y, *, use_pallas: bool = True):
+    pred = forward(spec, flat, x, use_pallas=use_pallas)
+    d = pred - y
+    return jnp.mean(d * d)
+
+
+def make_train_step(spec: MlpSpec, *, use_pallas: bool = True):
+    """One vanilla-SGD step on one batch (the artifact the learner runs)."""
+
+    def train_step(flat, x, y, lr):
+        loss, grad = jax.value_and_grad(
+            lambda p: mse_loss(spec, p, x, y, use_pallas=use_pallas)
+        )(flat)
+        new_flat = sgd_update(flat, grad, lr) if use_pallas else flat - lr * grad
+        return new_flat, loss
+
+    return train_step
+
+def make_eval_step(spec: MlpSpec, *, use_pallas: bool = True):
+    def eval_step(flat, x, y):
+        return (mse_loss(spec, flat, x, y, use_pallas=use_pallas),)
+
+    return eval_step
+
+
+def init_params(spec: MlpSpec, key) -> jnp.ndarray:
+    """He-initialized flat parameter vector (biases zero) — mirrors
+    ``TensorModel::random_init`` on the Rust side in distribution."""
+    tensors = []
+    for shape, _ in spec.layout():
+        if len(shape) > 1:
+            key, sub = jax.random.split(key)
+            scale = (2.0 / shape[0]) ** 0.5
+            tensors.append(scale * jax.random.normal(sub, shape, dtype=jnp.float32))
+        else:
+            tensors.append(jnp.zeros(shape, dtype=jnp.float32))
+    return flatten(tensors)

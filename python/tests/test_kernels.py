@@ -1,0 +1,164 @@
+"""L1 correctness: every Pallas kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes/dtypes; fixed cases pin the paper's widths
+(32/100/320) and edge blocks.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fused_dense, lincomb, sgd_update, weighted_aggregate
+from compile.kernels.ref import (
+    fused_dense_ref,
+    lincomb_ref,
+    sgd_update_ref,
+    weighted_aggregate_ref,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype=jnp.float32)
+
+
+# ----------------------------------------------------------------- dense
+
+
+@pytest.mark.parametrize("units", [32, 100, 320])  # the paper's widths
+@pytest.mark.parametrize("relu", [True, False])
+def test_fused_dense_paper_widths(units, relu):
+    x = rand(0, 100, 8)
+    w = rand(1, 8, units)
+    b = rand(2, units)
+    got = fused_dense(x, w, b, relu=relu)
+    want = fused_dense_ref(x, w, b, relu=relu)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("batch,in_dim,out_dim", [(1, 1, 1), (7, 3, 5), (128, 128, 128)])
+def test_fused_dense_edge_shapes(batch, in_dim, out_dim):
+    x = rand(3, batch, in_dim)
+    w = rand(4, in_dim, out_dim)
+    b = rand(5, out_dim)
+    np.testing.assert_allclose(
+        fused_dense(x, w, b), fused_dense_ref(x, w, b), rtol=1e-5, atol=1e-5
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    batch=st.integers(1, 64),
+    in_dim=st.integers(1, 48),
+    out_dim=st.integers(1, 48),
+    relu=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_dense_hypothesis(batch, in_dim, out_dim, relu, seed):
+    k = jax.random.PRNGKey(seed)
+    kx, kw, kb = jax.random.split(k, 3)
+    x = jax.random.normal(kx, (batch, in_dim), dtype=jnp.float32)
+    w = jax.random.normal(kw, (in_dim, out_dim), dtype=jnp.float32)
+    b = jax.random.normal(kb, (out_dim,), dtype=jnp.float32)
+    got = fused_dense(x, w, b, relu=relu)
+    want = fused_dense_ref(x, w, b, relu=relu)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_fused_dense_block_clamping():
+    # Width 100 does not divide 128: _block must fall back to a divisor.
+    x = rand(6, 60, 100)
+    w = rand(7, 100, 100)
+    b = rand(8, 100)
+    np.testing.assert_allclose(
+        fused_dense(x, w, b), fused_dense_ref(x, w, b), rtol=1e-5, atol=1e-5
+    )
+
+
+# --------------------------------------------------------------- lincomb
+
+
+@pytest.mark.parametrize("d", [1, 7, 1024, 100_000])
+def test_lincomb_sizes(d):
+    a = rand(9, d)
+    b = rand(10, d)
+    got = lincomb(a, b, jnp.float32(0.25), jnp.float32(0.75))
+    want = lincomb_ref(a, b, 0.25, 0.75)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    d=st.integers(1, 4096),
+    wa=st.floats(-2, 2, allow_nan=False, width=32),
+    wb=st.floats(-2, 2, allow_nan=False, width=32),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_lincomb_hypothesis(d, wa, wb, seed):
+    k = jax.random.PRNGKey(seed)
+    ka, kb = jax.random.split(k)
+    a = jax.random.normal(ka, (d,), dtype=jnp.float32)
+    b = jax.random.normal(kb, (d,), dtype=jnp.float32)
+    got = lincomb(a, b, jnp.float32(wa), jnp.float32(wb))
+    np.testing.assert_allclose(got, lincomb_ref(a, b, wa, wb), rtol=1e-4, atol=1e-4)
+
+
+def test_lincomb_fold_equals_weighted_sum():
+    # The Rust backend folds lincomb over N models; verify the fold.
+    n, d = 5, 333
+    models = [rand(20 + i, d) for i in range(n)]
+    coeffs = np.array([0.1, 0.3, 0.2, 0.25, 0.15], dtype=np.float32)
+    acc = models[0]
+    acc_w = coeffs[0]
+    for m, c in zip(models[1:], coeffs[1:]):
+        acc = lincomb(acc, m, jnp.float32(acc_w), jnp.float32(c))
+        acc_w = 1.0
+    want = sum(c * m for c, m in zip(coeffs, models))
+    np.testing.assert_allclose(acc, want, rtol=1e-4, atol=1e-5)
+
+
+# ----------------------------------------------------- weighted_aggregate
+
+
+@pytest.mark.parametrize("n", [1, 2, 10, 50])
+def test_weighted_aggregate_learner_counts(n):
+    stack = rand(11, n, 257)
+    w = jnp.abs(rand(12, n)) + 0.01
+    w = w / w.sum()
+    got = weighted_aggregate(stack, w)
+    np.testing.assert_allclose(
+        got, weighted_aggregate_ref(stack, w), rtol=1e-4, atol=1e-5
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 16), d=st.integers(1, 2048), seed=st.integers(0, 2**31 - 1))
+def test_weighted_aggregate_hypothesis(n, d, seed):
+    k = jax.random.PRNGKey(seed)
+    ks, kw = jax.random.split(k)
+    stack = jax.random.normal(ks, (n, d), dtype=jnp.float32)
+    w = jax.random.uniform(kw, (n,), dtype=jnp.float32)
+    got = weighted_aggregate(stack, w)
+    np.testing.assert_allclose(
+        got, weighted_aggregate_ref(stack, w), rtol=1e-3, atol=1e-4
+    )
+
+
+# ---------------------------------------------------------------- sgd
+
+
+@pytest.mark.parametrize("d", [1, 129, 65536])
+def test_sgd_update_sizes(d):
+    p = rand(13, d)
+    g = rand(14, d)
+    got = sgd_update(p, g, jnp.float32(0.05))
+    np.testing.assert_allclose(got, sgd_update_ref(p, g, 0.05), rtol=1e-6, atol=1e-6)
+
+
+def test_sgd_update_zero_lr_is_identity():
+    p = rand(15, 100)
+    g = rand(16, 100)
+    np.testing.assert_array_equal(sgd_update(p, g, jnp.float32(0.0)), p)

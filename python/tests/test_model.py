@@ -1,0 +1,97 @@
+"""L2 correctness: model shapes, Pallas vs pure-jnp forward parity,
+train-step learning behaviour, and Rust-layout interface contract."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+TINY = M.MlpSpec(4, 2, 8)
+SMALL = M.MlpSpec(8, 4, 32)
+
+
+def test_paper_variant_param_counts():
+    # §4.2 footnote 4.
+    assert 90_000 < M.PAPER_100K.param_count() < 130_000
+    assert 900_000 < M.PAPER_1M.param_count() < 1_100_000
+    assert 9_500_000 < M.PAPER_10M.param_count() < 10_600_000
+
+
+def test_layout_matches_rust_model_spec():
+    # Mirror of ModelSpec::tensor_layout() — names and order must agree.
+    layout = TINY.layout()
+    assert layout[0] == ((4, 8), "dense_0/w")
+    assert layout[1] == ((8,), "dense_0/b")
+    assert layout[-2] == ((8, 1), "head/w")
+    assert layout[-1] == ((1,), "head/b")
+    assert TINY.variant_name() == "mlp_l2_u8_in4_out1"
+    assert TINY.param_count() == 121
+
+
+def test_flatten_unflatten_roundtrip():
+    key = jax.random.PRNGKey(0)
+    flat = M.init_params(SMALL, key)
+    assert flat.shape == (SMALL.param_count(),)
+    tensors = M.unflatten(SMALL, flat)
+    assert len(tensors) == 2 * SMALL.hidden_layers + 2
+    back = M.flatten(tensors)
+    np.testing.assert_array_equal(flat, back)
+
+
+def test_init_biases_zero():
+    flat = M.init_params(TINY, jax.random.PRNGKey(1))
+    tensors = M.unflatten(TINY, flat)
+    for t, (shape, name) in zip(tensors, TINY.layout()):
+        if len(shape) == 1:
+            assert np.all(np.asarray(t) == 0.0), name
+
+
+@pytest.mark.parametrize("spec", [TINY, SMALL])
+def test_pallas_forward_matches_pure_jnp(spec):
+    key = jax.random.PRNGKey(2)
+    flat = M.init_params(spec, key)
+    x = jax.random.normal(jax.random.PRNGKey(3), (16, spec.input_dim), dtype=jnp.float32)
+    with_pallas = M.forward(spec, flat, x, use_pallas=True)
+    without = M.forward(spec, flat, x, use_pallas=False)
+    np.testing.assert_allclose(with_pallas, without, rtol=1e-5, atol=1e-5)
+
+
+def test_train_step_reduces_loss():
+    spec = TINY
+    key = jax.random.PRNGKey(4)
+    flat = M.init_params(spec, key)
+    x = jax.random.normal(jax.random.PRNGKey(5), (32, spec.input_dim), dtype=jnp.float32)
+    y = jnp.sum(x, axis=1)
+    step = jax.jit(M.make_train_step(spec))
+    losses = []
+    for _ in range(40):
+        flat, loss = step(flat, x, y, jnp.float32(0.02))
+        losses.append(float(loss))
+    assert losses[-1] < 0.5 * losses[0], losses[:3] + losses[-3:]
+
+
+def test_train_step_pallas_matches_pure_jnp_numerics():
+    spec = TINY
+    flat0 = M.init_params(spec, jax.random.PRNGKey(6))
+    x = jax.random.normal(jax.random.PRNGKey(7), (8, spec.input_dim), dtype=jnp.float32)
+    y = jnp.sum(x, axis=1)
+    sp = jax.jit(M.make_train_step(spec, use_pallas=True))
+    sj = jax.jit(M.make_train_step(spec, use_pallas=False))
+    fp, lp = sp(flat0, x, y, jnp.float32(0.01))
+    fj, lj = sj(flat0, x, y, jnp.float32(0.01))
+    np.testing.assert_allclose(float(lp), float(lj), rtol=1e-5)
+    np.testing.assert_allclose(fp, fj, rtol=1e-4, atol=1e-5)
+
+
+def test_eval_step_returns_finite_scalar_tuple():
+    spec = TINY
+    flat = M.init_params(spec, jax.random.PRNGKey(8))
+    x = jax.random.normal(jax.random.PRNGKey(9), (16, spec.input_dim), dtype=jnp.float32)
+    y = jnp.zeros((16,), dtype=jnp.float32)
+    (loss,) = jax.jit(M.make_eval_step(spec))(flat, x, y)
+    assert loss.shape == ()
+    assert np.isfinite(float(loss))

@@ -1,0 +1,147 @@
+//! Aggregation ablation (E6): the Fig.-4 claim — parallel per-tensor
+//! aggregation is ~10x sequential and ~100x a Python-style controller —
+//! plus the axpy-kernel micro-comparison and the in-memory vs on-disk
+//! model-store trade-off (Discussion, §5).
+
+use metisfl::baselines::calibration::{self, ParallelModel};
+use metisfl::baselines::{numpy_style_aggregate, python_loop_aggregate};
+use metisfl::config::ModelSpec;
+use metisfl::controller::aggregation::{Backend, WeightedSum};
+use metisfl::controller::store::{InMemoryStore, ModelStore, OnDiskStore, StoredModel};
+use metisfl::harness::runner::{fmt_secs, full_scale, BenchRunner, ReportWriter};
+use metisfl::proto::TaskMeta;
+use metisfl::tensor::{ops, TensorModel};
+use metisfl::util::{Rng, Stopwatch, ThreadPool};
+use std::sync::Arc;
+
+fn main() {
+    let spec = if full_scale() { ModelSpec::paper_1m() } else { ModelSpec::mlp(8, 20, 64) };
+    let learners = if full_scale() { 50 } else { 10 };
+    let cal = calibration::measure();
+    println!(
+        "model: {} params, {} tensors; {} learners; {} hardware threads",
+        spec.param_count(),
+        spec.tensor_count(),
+        learners,
+        cal.hardware_threads
+    );
+
+    let layout = spec.tensor_layout();
+    let mut rng = Rng::new(5);
+    let models: Vec<TensorModel> =
+        (0..learners).map(|_| TensorModel::random_init(&layout, &mut rng)).collect();
+    let refs: Vec<&TensorModel> = models.iter().collect();
+    let coeffs: Vec<f64> = vec![1.0 / learners as f64; learners];
+    let runner = BenchRunner::new();
+    let pool = Arc::new(ThreadPool::with_hardware_threads());
+
+    // --- aggregation strategy comparison ------------------------------
+    let mut report = ReportWriter::new(
+        "agg_ablation_strategies",
+        &["strategy", "time", "vs parallel(modeled)"],
+    );
+    let seq = runner.run(|| {
+        let _ = WeightedSum::compute(&refs, &coeffs, &Backend::Sequential).unwrap();
+    });
+    let par_real = runner.run(|| {
+        let _ =
+            WeightedSum::compute(&refs, &coeffs, &Backend::Parallel(Arc::clone(&pool))).unwrap();
+    });
+    let numpy = runner.run(|| {
+        let _ = numpy_style_aggregate(&refs, &coeffs);
+    });
+    let pyloop = runner.run(|| {
+        let _ = python_loop_aggregate(&refs, &coeffs, calibration::PYTHON_LOOP_TAX);
+    });
+    // Modeled 32-core parallel time from the measured sequential time.
+    let modeled = ParallelModel::paper_machine(&cal)
+        .parallel_time(std::time::Duration::from_secs_f64(seq.mean), spec.tensor_count());
+    let base = modeled.as_secs_f64();
+    let mut row = |name: &str, secs: f64| {
+        report.row(vec![
+            name.into(),
+            fmt_secs(std::time::Duration::from_secs_f64(secs)),
+            format!("{:.1}x", secs / base),
+        ]);
+    };
+    row("parallel per-tensor (modeled 32c)", base);
+    row(&format!("parallel per-tensor (real {}t)", cal.hardware_threads), par_real.mean);
+    row("sequential per-tensor", seq.mean);
+    row("numpy-style temporaries", numpy.mean);
+    row(
+        &format!("python-loop (tax {})", calibration::PYTHON_LOOP_TAX),
+        pyloop.mean,
+    );
+    report.emit().unwrap();
+    println!(
+        "paper claim: OMP ~10x sequential (got {:.1}x modeled), ~100x python-style (got {:.1}x)",
+        seq.mean / base,
+        pyloop.mean / base
+    );
+
+    // --- axpy kernel micro-ablation ------------------------------------
+    // Interleaved best-of-N: this box is a noisy shared core, so paired
+    // minima are the only stable comparison (see EXPERIMENTS.md §Perf).
+    let n = 1 << 20;
+    let x = vec![1.0f32; n];
+    let mut acc = vec![0.0f32; n];
+    let reps = 8;
+    let mut best_zip = f64::MAX;
+    let mut best_unrolled = f64::MAX;
+    for _ in 0..12 {
+        let sw = Stopwatch::start();
+        for _ in 0..reps {
+            ops::axpy(&mut acc, &x, 0.25);
+        }
+        best_zip = best_zip.min(sw.elapsed_secs() / reps as f64);
+        let sw = Stopwatch::start();
+        for _ in 0..reps {
+            ops::axpy_unrolled(&mut acc, &x, 0.25);
+        }
+        best_unrolled = best_unrolled.min(sw.elapsed_secs() / reps as f64);
+    }
+    std::hint::black_box(&acc);
+    let mut report = ReportWriter::new("agg_ablation_axpy", &["kernel", "GB/s (best)"]);
+    let gbps = |secs: f64| format!("{:.2}", (n * 8) as f64 / secs / 1e9);
+    report.row(vec!["axpy (zip loop, production)".into(), gbps(best_zip)]);
+    report.row(vec!["axpy (hand-unrolled 8-wide)".into(), gbps(best_unrolled)]);
+    report.emit().unwrap();
+
+    // --- model store comparison (§5 future work) ------------------------
+    let store_model = TensorModel::random_init(&layout, &mut Rng::new(7));
+    let entry = |i: usize| StoredModel {
+        learner_id: format!("l{i}"),
+        round: 1,
+        meta: TaskMeta { num_samples: 100, ..Default::default() },
+        model: store_model.clone(),
+    };
+    let mut mem = InMemoryStore::new();
+    let sw = Stopwatch::start();
+    for i in 0..learners {
+        mem.insert(entry(i)).unwrap();
+    }
+    let mem_insert = sw.elapsed();
+    let sw = Stopwatch::start();
+    let ids: Vec<String> = (0..learners).map(|i| format!("l{i}")).collect();
+    let _ = mem.select_latest(&ids).unwrap();
+    let mem_select = sw.elapsed();
+
+    let disk_dir = std::env::temp_dir().join(format!("metisfl-bench-store-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&disk_dir);
+    let mut disk = OnDiskStore::open(&disk_dir).unwrap();
+    let sw = Stopwatch::start();
+    for i in 0..learners {
+        disk.insert(entry(i)).unwrap();
+    }
+    let disk_insert = sw.elapsed();
+    let sw = Stopwatch::start();
+    let _ = disk.select_latest(&ids).unwrap();
+    let disk_select = sw.elapsed();
+    std::fs::remove_dir_all(&disk_dir).ok();
+
+    let mut report =
+        ReportWriter::new("agg_ablation_stores", &["store", "insert all", "select all"]);
+    report.row(vec!["in-memory hashmap".into(), fmt_secs(mem_insert), fmt_secs(mem_select)]);
+    report.row(vec!["on-disk".into(), fmt_secs(disk_insert), fmt_secs(disk_select)]);
+    report.emit().unwrap();
+}

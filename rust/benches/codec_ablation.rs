@@ -1,0 +1,122 @@
+//! Serialization ablation (E7): the §3 claim — tensor-as-bytes transfer
+//! has much lower overhead than object-graph (pickle-style) encodings.
+//! Compares encode+decode throughput and wire size for the bytes codec,
+//! pickle-style, and pickle+base64 (IBM-FL-style envelope), plus the
+//! secure-channel (TLS-sim) tax on the bytes path.
+
+use metisfl::baselines::pyserde;
+use metisfl::config::ModelSpec;
+use metisfl::harness::runner::{full_scale, BenchRunner, ReportWriter};
+use metisfl::net::secure::SecureSession;
+use metisfl::proto::{Message, ModelProto};
+use metisfl::tensor::{ByteOrder, DType, TensorModel};
+use metisfl::util::{fmt_bytes, Rng};
+
+fn main() {
+    let spec = if full_scale() { ModelSpec::paper_1m() } else { ModelSpec::mlp(8, 20, 64) };
+    let layout = spec.tensor_layout();
+    let model = TensorModel::random_init(&layout, &mut Rng::new(11));
+    let raw_bytes = model.byte_size_f32();
+    println!("model: {} params ({} payload)", spec.param_count(), fmt_bytes(raw_bytes));
+    let runner = BenchRunner::new();
+
+    let mut report = ReportWriter::new(
+        "codec_ablation",
+        &["codec", "wire size", "expansion", "enc+dec MB/s"],
+    );
+
+    // Isolated tensor codec (no message framing): the raw flatten+dump
+    // path of §3, best-of-12 interleaved (noisy shared core).
+    {
+        use metisfl::tensor::Tensor;
+        let flat = model.to_flat();
+        let t = Tensor::new("all", vec![flat.len()], flat);
+        let mut best = f64::MAX;
+        for _ in 0..12 {
+            let sw = metisfl::util::Stopwatch::start();
+            let enc = t.encode_data(DType::F32, ByteOrder::Little);
+            let back =
+                Tensor::decode_data("all", t.shape.clone(), DType::F32, ByteOrder::Little, &enc)
+                    .unwrap();
+            std::hint::black_box(&back);
+            best = best.min(sw.elapsed_secs());
+        }
+        report.row(vec![
+            "raw tensor codec (no framing)".into(),
+            fmt_bytes(raw_bytes),
+            "1.00x".into(),
+            format!("{:.1}", raw_bytes as f64 / best / 1e6),
+        ]);
+    }
+
+    // Bytes-tensor proto (MetisFL §3).
+    let mut wire_len = 0usize;
+    let s = runner.run(|| {
+        let proto = ModelProto::from_model(&model, DType::F32, ByteOrder::Little);
+        let msg = Message::ShipModel { model: proto }.encode();
+        wire_len = msg.len();
+        let back = Message::decode(&msg).unwrap();
+        std::hint::black_box(&back);
+    });
+    let mbs = |secs: f64| format!("{:.1}", raw_bytes as f64 / secs / 1e6);
+    report.row(vec![
+        "tensor-as-bytes (MetisFL)".into(),
+        fmt_bytes(wire_len),
+        format!("{:.2}x", wire_len as f64 / raw_bytes as f64),
+        mbs(s.mean),
+    ]);
+
+    // Pickle-style.
+    let mut pickle_len = 0usize;
+    let s = runner.run(|| {
+        let bytes = pyserde::pickle_encode(&model, 1);
+        pickle_len = bytes.len();
+        let back = pyserde::pickle_decode(&bytes, 1).unwrap();
+        std::hint::black_box(&back);
+    });
+    report.row(vec![
+        "pickle-style object graph".into(),
+        fmt_bytes(pickle_len),
+        format!("{:.2}x", pickle_len as f64 / raw_bytes as f64),
+        mbs(s.mean),
+    ]);
+
+    // Pickle + base64 envelope.
+    let mut b64_len = 0usize;
+    let s = runner.run(|| {
+        let bytes = pyserde::pickle_encode(&model, 1);
+        let enc = pyserde::base64_encode(&bytes);
+        b64_len = enc.len();
+        let dec = pyserde::base64_decode(&enc).unwrap();
+        let back = pyserde::pickle_decode(&dec, 1).unwrap();
+        std::hint::black_box(&back);
+    });
+    report.row(vec![
+        "pickle + base64 (IBM-FL-style)".into(),
+        fmt_bytes(b64_len),
+        format!("{:.2}x", b64_len as f64 / raw_bytes as f64),
+        mbs(s.mean),
+    ]);
+
+    // Bytes codec through the secure channel (TLS-sim seal+open).
+    let psk = [3u8; 32];
+    let nonce = [1u8; 16];
+    let s = runner.run(|| {
+        let mut tx = SecureSession::derive(&psk, &nonce, &nonce);
+        let mut rx = SecureSession::derive(&psk, &nonce, &nonce);
+        let proto = ModelProto::from_model(&model, DType::F32, ByteOrder::Little);
+        let msg = Message::ShipModel { model: proto }.encode();
+        let sealed = tx.seal(&msg);
+        let opened = rx.open(&sealed).unwrap();
+        let back = Message::decode(&opened).unwrap();
+        std::hint::black_box(&back);
+    });
+    report.row(vec![
+        "tensor-as-bytes + secure channel".into(),
+        fmt_bytes(wire_len + 32),
+        format!("{:.2}x", (wire_len + 32) as f64 / raw_bytes as f64),
+        mbs(s.mean),
+    ]);
+
+    report.emit().unwrap();
+}

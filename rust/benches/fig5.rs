@@ -1,0 +1,28 @@
+//! Figure 5: FL framework operations comparison, 100k-parameter model.
+//!
+//! Panels (a)–(f): train dispatch, train round, aggregation, eval
+//! dispatch, eval round, federation round — framework × learner count.
+//! Default run uses a reduced grid (learners {10,25,50}, smaller model)
+//! so `cargo bench` stays minutes-scale on 1 core; `FULL=1 cargo bench
+//! --bench fig5` reproduces the paper's grid (100k params, up to 200
+//! learners).
+
+use metisfl::config::ModelSpec;
+use metisfl::harness::{figure_sweep, FigureConfig};
+
+fn main() {
+    let config = FigureConfig::paper(
+        "fig5",
+        ModelSpec::paper_100k(),   // FULL=1: 100 layers x 32 units
+        ModelSpec::mlp(8, 10, 16), // reduced: ~3k params, same shape
+    );
+    let result = figure_sweep(config);
+    result.emit_panels().expect("emit fig5 panels");
+    // Shape check the paper's claim: MetisFL+OMP aggregation beats the
+    // Python-style controllers by a large factor.
+    let speedups = result.speedups(metisfl::metrics::FedOp::Aggregation);
+    println!("\naggregation slowdowns vs MetisFL gRPC+OMP at max learners:");
+    for (fw, ratio) in speedups {
+        println!("  {fw:<18} {ratio:8.1}x");
+    }
+}

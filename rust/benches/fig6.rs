@@ -1,0 +1,15 @@
+//! Figure 6: FL framework operations comparison, 1M-parameter model.
+//! See fig5.rs for panel structure and FULL=1 behaviour.
+
+use metisfl::config::ModelSpec;
+use metisfl::harness::{figure_sweep, FigureConfig};
+
+fn main() {
+    let config = FigureConfig::paper(
+        "fig6",
+        ModelSpec::paper_1m(),     // FULL=1: 100 layers x 100 units
+        ModelSpec::mlp(8, 20, 32), // reduced: ~24k params
+    );
+    let result = figure_sweep(config);
+    result.emit_panels().expect("emit fig6 panels");
+}

@@ -1,0 +1,23 @@
+//! Figure 7: FL framework operations comparison, 10M-parameter model.
+//! The most demanding grid: the paper reports NVFlare failing at >=100
+//! learners and IBM FL at 200 (out-of-resource on their testbed; we run
+//! them and report measured values). See fig5.rs for structure.
+
+use metisfl::config::ModelSpec;
+use metisfl::harness::{figure_sweep, FigureConfig};
+use metisfl::metrics::FedOp;
+
+fn main() {
+    let config = FigureConfig::paper(
+        "fig7",
+        ModelSpec::paper_10m(),    // FULL=1: 100 layers x 320 units
+        ModelSpec::mlp(8, 30, 64), // reduced: ~123k params
+    );
+    let result = figure_sweep(config);
+    result.emit_panels().expect("emit fig7 panels");
+
+    println!("\nfederation-round slowdowns vs MetisFL gRPC+OMP at max learners:");
+    for (fw, ratio) in result.speedups(FedOp::FederationRound) {
+        println!("  {fw:<18} {ratio:8.1}x");
+    }
+}

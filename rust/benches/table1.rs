@@ -1,0 +1,14 @@
+//! Table 1: qualitative comparison of FL systems — regenerated from the
+//! capability declarations in `baselines::capabilities`.
+
+fn main() {
+    println!("\n### Table 1 — qualitative comparison of FL systems\n");
+    println!("{}", metisfl::baselines::capabilities::render_table());
+    std::fs::create_dir_all("bench_out").ok();
+    std::fs::write(
+        "bench_out/table1.md",
+        metisfl::baselines::capabilities::render_table(),
+    )
+    .expect("write table1.md");
+    println!("wrote bench_out/table1.md");
+}

@@ -1,0 +1,29 @@
+//! Table 2: federation round time (secs) for the 10M-parameter model,
+//! framework x learner count — the federation-round column of the
+//! Fig.-7 sweep. We reproduce the *shape* (who wins, rough factors,
+//! where failures/crossovers fall), not absolute numbers: learner
+//! compute and the testbed differ (see EXPERIMENTS.md for the
+//! paper-vs-measured comparison).
+
+use metisfl::config::ModelSpec;
+use metisfl::harness::{figure_sweep, FigureConfig};
+use metisfl::metrics::FedOp;
+
+fn main() {
+    let config = FigureConfig::paper(
+        "table2",
+        ModelSpec::paper_10m(),
+        ModelSpec::mlp(8, 30, 64), // reduced-scale default
+    );
+    let result = figure_sweep(config);
+    result.emit_table2().expect("emit table2");
+
+    // Shape checks from the paper (reported, not panicking, so the bench
+    // still emits full output on reduced grids).
+    let s = result.speedups(FedOp::FederationRound);
+    println!("\nshape checks (paper: every framework slower than MetisFL gRPC+OMP):");
+    for (fw, ratio) in &s {
+        let verdict = if *ratio > 1.0 { "ok" } else { "UNEXPECTED" };
+        println!("  {fw:<18} {ratio:8.1}x slower   [{verdict}]");
+    }
+}

@@ -1,0 +1,285 @@
+//! Qualitative capability matrix — regenerates the paper's Table 1.
+//!
+//! Each framework declares its feature set; [`render_table`] prints the
+//! same dimension/row structure the paper reports. Values transcribe the
+//! paper's own Table 1 (they describe the *compared systems*, not our
+//! reimplementation — except the MetisFL column, which this repo
+//! implements and the test suite asserts).
+
+use super::Framework;
+
+/// One framework's qualitative capabilities (Table 1 rows).
+#[derive(Debug, Clone)]
+pub struct Capabilities {
+    pub name: &'static str,
+    // Deployment
+    pub standalone: bool,
+    pub distributed: bool,
+    pub cross_silo: bool,
+    pub cross_device: bool,
+    pub containerized: bool,
+    // ML environment
+    pub backends: &'static [&'static str],
+    pub local_opt: bool,
+    pub global_opt: bool,
+    // Data partitioning
+    pub horizontal: bool,
+    pub vertical: bool,
+    // Privacy & security
+    pub private_training: bool,
+    pub secure_aggregation: &'static str,
+    pub crypto_library: &'static str,
+    // Communication
+    pub centralized: bool,
+    pub decentralized: bool,
+    pub hierarchical: bool,
+    pub tls: bool,
+    pub network: &'static str,
+    // Protocol
+    pub synchronous: bool,
+    pub asynchronous: bool,
+    // Software
+    pub aggregator_language: &'static str,
+}
+
+/// The Table-1 matrix. MetisFL's column reflects this reproduction.
+pub fn capabilities(fw: Framework) -> Capabilities {
+    match fw {
+        Framework::MetisFL | Framework::MetisFLOmp => Capabilities {
+            name: "MetisFL",
+            standalone: true,
+            distributed: true,
+            cross_silo: true,
+            cross_device: true,
+            containerized: true,
+            backends: &["Torch", "TF"],
+            local_opt: true,
+            global_opt: true,
+            horizontal: true,
+            vertical: false,
+            private_training: true,
+            secure_aggregation: "FHE",
+            crypto_library: "PALISADE",
+            centralized: true,
+            decentralized: false,
+            hierarchical: false,
+            tls: true,
+            network: "gRPC",
+            synchronous: true,
+            asynchronous: true,
+            aggregator_language: "C++ (here: Rust)",
+        },
+        Framework::NVFlare => Capabilities {
+            name: "Nvidia FLARE",
+            standalone: true,
+            distributed: true,
+            cross_silo: true,
+            cross_device: false,
+            containerized: true,
+            backends: &["Torch", "TF", "MONAI"],
+            local_opt: true,
+            global_opt: true,
+            horizontal: true,
+            vertical: false,
+            private_training: true,
+            secure_aggregation: "FHE",
+            crypto_library: "TenSeal",
+            centralized: true,
+            decentralized: false,
+            hierarchical: false,
+            tls: true,
+            network: "gRPC",
+            synchronous: true,
+            asynchronous: false,
+            aggregator_language: "Python",
+        },
+        Framework::Flower => Capabilities {
+            name: "Flower",
+            standalone: true,
+            distributed: true,
+            cross_silo: true,
+            cross_device: true,
+            containerized: true,
+            backends: &["Torch", "TF", "MX", "JAX"],
+            local_opt: true,
+            global_opt: true,
+            horizontal: true,
+            vertical: false,
+            private_training: true,
+            secure_aggregation: "Masking/FHE",
+            crypto_library: "native",
+            centralized: true,
+            decentralized: false,
+            hierarchical: false,
+            tls: true,
+            network: "gRPC",
+            synchronous: true,
+            asynchronous: false,
+            aggregator_language: "Python",
+        },
+        Framework::FedML => Capabilities {
+            name: "FedML",
+            standalone: true,
+            distributed: true,
+            cross_silo: true,
+            cross_device: true,
+            containerized: true,
+            backends: &["Torch", "TF", "MX", "JAX"],
+            local_opt: true,
+            global_opt: true,
+            horizontal: true,
+            vertical: false,
+            private_training: true,
+            secure_aggregation: "Masking/FHE",
+            crypto_library: "native",
+            centralized: true,
+            decentralized: true,
+            hierarchical: false,
+            tls: true,
+            network: "MPI",
+            synchronous: true,
+            asynchronous: false,
+            aggregator_language: "Python",
+        },
+        Framework::IbmFL => Capabilities {
+            name: "IBM FL",
+            standalone: true,
+            distributed: true,
+            cross_silo: true,
+            cross_device: false,
+            containerized: true,
+            backends: &["Torch", "TF"],
+            local_opt: true,
+            global_opt: true,
+            horizontal: true,
+            vertical: false,
+            private_training: true,
+            secure_aggregation: "FHE",
+            crypto_library: "HElayers",
+            centralized: true,
+            decentralized: false,
+            hierarchical: false,
+            tls: true,
+            network: "AMQP",
+            synchronous: true,
+            asynchronous: false,
+            aggregator_language: "Python",
+        },
+    }
+}
+
+fn mark(b: bool) -> &'static str {
+    if b {
+        "yes"
+    } else {
+        "no"
+    }
+}
+
+/// Render the Table-1 matrix as aligned markdown.
+pub fn render_table() -> String {
+    let frameworks = [
+        Framework::NVFlare,
+        Framework::Flower,
+        Framework::FedML,
+        Framework::IbmFL,
+        Framework::MetisFL,
+    ];
+    let caps: Vec<Capabilities> = frameworks.iter().map(|&f| capabilities(f)).collect();
+    let mut rows: Vec<(String, Vec<String>)> = Vec::new();
+    let all = |f: fn(&Capabilities) -> String| -> Vec<String> { caps.iter().map(f).collect() };
+    rows.push(("— Deployment —".into(), vec![String::new(); caps.len()]));
+    rows.push(("Standalone".into(), all(|c| mark(c.standalone).into())));
+    rows.push(("Distributed".into(), all(|c| mark(c.distributed).into())));
+    rows.push(("Cross-Silo".into(), all(|c| mark(c.cross_silo).into())));
+    rows.push(("Cross-Device".into(), all(|c| mark(c.cross_device).into())));
+    rows.push(("Containerized".into(), all(|c| mark(c.containerized).into())));
+    rows.push(("— ML Environment —".into(), vec![String::new(); caps.len()]));
+    rows.push(("Backend".into(), all(|c| c.backends.join(" "))));
+    rows.push(("LocalOpt".into(), all(|c| mark(c.local_opt).into())));
+    rows.push(("GlobalOpt".into(), all(|c| mark(c.global_opt).into())));
+    rows.push(("— Data Partitioning —".into(), vec![String::new(); caps.len()]));
+    rows.push(("Horizontal".into(), all(|c| mark(c.horizontal).into())));
+    rows.push(("Vertical".into(), all(|c| mark(c.vertical).into())));
+    rows.push(("— Privacy & Security —".into(), vec![String::new(); caps.len()]));
+    rows.push(("Private Training".into(), all(|c| mark(c.private_training).into())));
+    rows.push(("Secure Aggregation".into(), all(|c| c.secure_aggregation.into())));
+    rows.push(("Crypto Library".into(), all(|c| c.crypto_library.into())));
+    rows.push(("— Communication —".into(), vec![String::new(); caps.len()]));
+    rows.push(("Centralized".into(), all(|c| mark(c.centralized).into())));
+    rows.push(("Decentralized".into(), all(|c| mark(c.decentralized).into())));
+    rows.push(("Hierarchical".into(), all(|c| mark(c.hierarchical).into())));
+    rows.push(("TLS".into(), all(|c| mark(c.tls).into())));
+    rows.push(("Network".into(), all(|c| c.network.into())));
+    rows.push(("— Communication Protocol —".into(), vec![String::new(); caps.len()]));
+    rows.push(("Synchronous".into(), all(|c| mark(c.synchronous).into())));
+    rows.push(("Asynchronous".into(), all(|c| mark(c.asynchronous).into())));
+    rows.push(("— Software —".into(), vec![String::new(); caps.len()]));
+    rows.push(("Aggregator".into(), all(|c| c.aggregator_language.into())));
+
+    let mut out = String::new();
+    out.push_str(&format!("| {:<24} ", "Dimension"));
+    for c in &caps {
+        out.push_str(&format!("| {:<18} ", c.name));
+    }
+    out.push_str("|\n");
+    out.push_str(&format!("|{}", "-".repeat(26)));
+    for _ in &caps {
+        out.push_str(&format!("|{}", "-".repeat(20)));
+    }
+    out.push_str("|\n");
+    for (label, values) in rows {
+        out.push_str(&format!("| {label:<24} "));
+        for v in values {
+            out.push_str(&format!("| {v:<18} "));
+        }
+        out.push_str("|\n");
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn metisfl_is_the_only_async_framework() {
+        // The paper's Table-1 differentiator this repo actually implements
+        // (controller::scheduling::asynchronous + its tests).
+        for fw in Framework::ALL {
+            let c = capabilities(fw);
+            assert_eq!(c.asynchronous, c.name == "MetisFL", "{}", c.name);
+        }
+    }
+
+    #[test]
+    fn metisfl_aggregator_is_not_python() {
+        for fw in Framework::ALL {
+            let c = capabilities(fw);
+            if c.name == "MetisFL" {
+                assert!(!c.aggregator_language.contains("Python"));
+            } else {
+                assert_eq!(c.aggregator_language, "Python");
+            }
+        }
+    }
+
+    #[test]
+    fn no_framework_supports_vertical_partitioning() {
+        for fw in Framework::ALL {
+            assert!(!capabilities(fw).vertical);
+        }
+    }
+
+    #[test]
+    fn table_renders_all_frameworks_and_sections() {
+        let t = render_table();
+        for name in ["Nvidia FLARE", "Flower", "FedML", "IBM FL", "MetisFL"] {
+            assert!(t.contains(name), "missing {name}");
+        }
+        for section in ["Deployment", "Privacy & Security", "Communication Protocol"] {
+            assert!(t.contains(section), "missing {section}");
+        }
+        assert!(t.lines().count() > 25);
+    }
+}

@@ -1,0 +1,254 @@
+//! Tiny declarative CLI argument parser (clap replacement).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments,
+//! subcommands (handled by the caller via [`Args::positional`]), defaults,
+//! and auto-generated `--help` text.
+
+use std::collections::BTreeMap;
+
+/// A declared option.
+#[derive(Debug, Clone)]
+struct OptSpec {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_flag: bool,
+}
+
+/// Declarative command spec; call [`Command::parse`] on raw args.
+#[derive(Debug, Clone, Default)]
+pub struct Command {
+    name: String,
+    about: String,
+    opts: Vec<OptSpec>,
+}
+
+/// Parsed arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    positional: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown option --{0}")]
+    Unknown(String),
+    #[error("option --{0} requires a value")]
+    MissingValue(String),
+    #[error("invalid value for --{key}: {msg}")]
+    Invalid { key: String, msg: String },
+    #[error("help requested")]
+    Help,
+}
+
+impl Command {
+    pub fn new(name: &str, about: &str) -> Self {
+        Command { name: name.into(), about: about.into(), opts: Vec::new() }
+    }
+
+    /// Declare `--name <value>` with an optional default.
+    pub fn opt(mut self, name: &str, default: Option<&str>, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.into(),
+            help: help.into(),
+            default: default.map(|s| s.into()),
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Declare a boolean `--name` flag.
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.into(),
+            help: help.into(),
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    /// Render the help screen.
+    pub fn help(&self) -> String {
+        let mut s = format!("{} — {}\n\nOPTIONS:\n", self.name, self.about);
+        for o in &self.opts {
+            let head = if o.is_flag {
+                format!("  --{}", o.name)
+            } else {
+                format!("  --{} <value>", o.name)
+            };
+            let default = o
+                .default
+                .as_ref()
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            s.push_str(&format!("{head:<28}{}{default}\n", o.help));
+        }
+        s.push_str("  --help                    show this message\n");
+        s
+    }
+
+    /// Parse raw arguments (excluding argv[0] / the subcommand token).
+    pub fn parse(&self, raw: &[String]) -> Result<Args, CliError> {
+        let mut args = Args::default();
+        for o in &self.opts {
+            if let Some(d) = &o.default {
+                args.values.insert(o.name.clone(), d.clone());
+            }
+            if o.is_flag {
+                args.flags.insert(o.name.clone(), false);
+            }
+        }
+        let mut i = 0;
+        while i < raw.len() {
+            let tok = &raw[i];
+            if tok == "--help" || tok == "-h" {
+                return Err(CliError::Help);
+            }
+            if let Some(stripped) = tok.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| CliError::Unknown(key.clone()))?;
+                if spec.is_flag {
+                    let v = match inline_val.as_deref() {
+                        Some("false" | "0" | "no") => false,
+                        _ => true,
+                    };
+                    args.flags.insert(key, v);
+                } else {
+                    let v = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            raw.get(i).cloned().ok_or(CliError::MissingValue(key.clone()))?
+                        }
+                    };
+                    args.values.insert(key, v);
+                }
+            } else {
+                args.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+}
+
+impl Args {
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<usize, CliError> {
+        self.parse_with(key, |s| s.parse::<usize>().map_err(|e| e.to_string()))
+    }
+
+    pub fn get_u64(&self, key: &str) -> Result<u64, CliError> {
+        self.parse_with(key, |s| s.parse::<u64>().map_err(|e| e.to_string()))
+    }
+
+    pub fn get_f64(&self, key: &str) -> Result<f64, CliError> {
+        self.parse_with(key, |s| s.parse::<f64>().map_err(|e| e.to_string()))
+    }
+
+    /// Comma-separated usize list, e.g. `--learners 10,25,50`.
+    pub fn get_usize_list(&self, key: &str) -> Result<Vec<usize>, CliError> {
+        self.parse_with(key, |s| {
+            s.split(',')
+                .map(|t| t.trim().parse::<usize>().map_err(|e| e.to_string()))
+                .collect::<Result<Vec<_>, _>>()
+        })
+    }
+
+    fn parse_with<T>(
+        &self,
+        key: &str,
+        f: impl Fn(&str) -> Result<T, String>,
+    ) -> Result<T, CliError> {
+        let s = self
+            .get(key)
+            .ok_or_else(|| CliError::MissingValue(key.to_string()))?;
+        f(s).map_err(|msg| CliError::Invalid { key: key.to_string(), msg })
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.get(key).copied().unwrap_or(false)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("test", "test command")
+            .opt("rounds", Some("5"), "number of rounds")
+            .opt("name", None, "a name")
+            .flag("verbose", "chatty output")
+    }
+
+    fn s(v: &[&str]) -> Vec<String> {
+        v.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = cmd().parse(&s(&[])).unwrap();
+        assert_eq!(a.get_usize("rounds").unwrap(), 5);
+        assert!(!a.flag("verbose"));
+        let a = cmd().parse(&s(&["--rounds", "9", "--verbose"])).unwrap();
+        assert_eq!(a.get_usize("rounds").unwrap(), 9);
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn equals_syntax_and_positional() {
+        let a = cmd().parse(&s(&["--name=abc", "pos1", "pos2"])).unwrap();
+        assert_eq!(a.get("name"), Some("abc"));
+        assert_eq!(a.positional(), &["pos1".to_string(), "pos2".to_string()]);
+    }
+
+    #[test]
+    fn flag_false_syntax() {
+        let a = cmd().parse(&s(&["--verbose=false"])).unwrap();
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn errors() {
+        assert!(matches!(cmd().parse(&s(&["--bogus"])), Err(CliError::Unknown(_))));
+        assert!(matches!(cmd().parse(&s(&["--name"])), Err(CliError::MissingValue(_))));
+        assert!(matches!(cmd().parse(&s(&["--help"])), Err(CliError::Help)));
+        let a = cmd().parse(&s(&["--rounds", "abc"])).unwrap();
+        assert!(matches!(a.get_usize("rounds"), Err(CliError::Invalid { .. })));
+    }
+
+    #[test]
+    fn usize_list_parsing() {
+        let c = Command::new("t", "t").opt("learners", Some("10,25,50"), "counts");
+        let a = c.parse(&s(&[])).unwrap();
+        assert_eq!(a.get_usize_list("learners").unwrap(), vec![10, 25, 50]);
+        let a = c.parse(&s(&["--learners", "1, 2 ,3"])).unwrap();
+        assert_eq!(a.get_usize_list("learners").unwrap(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn help_mentions_options() {
+        let h = cmd().help();
+        assert!(h.contains("--rounds"));
+        assert!(h.contains("--verbose"));
+        assert!(h.contains("[default: 5]"));
+    }
+}

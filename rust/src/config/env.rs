@@ -1,0 +1,551 @@
+//! Typed federation environment (the paper's YAML env + model recipe).
+
+use crate::json::Value;
+use anyhow::{bail, Context, Result};
+
+/// Communication/aggregation protocol (Table 1, "Communication Protocol").
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Protocol {
+    /// Classic FedAvg rounds: all selected learners train, controller
+    /// aggregates when every update has arrived.
+    Synchronous,
+    /// Semi-synchronous (Stripelis et al. 2022b): learners train for a
+    /// fixed wall-clock budget `lambda` (here: a per-round step budget
+    /// scaler) and the controller aggregates whatever arrived.
+    SemiSynchronous { lambda: f64 },
+    /// Asynchronous: the controller updates the community model on every
+    /// learner completion, discounted by staleness^(-alpha) mixing.
+    Asynchronous { staleness_alpha: f64 },
+}
+
+/// Which implementation performs tensor aggregation on the controller.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AggregationBackend {
+    /// One thread, tensor after tensor (paper's "MetisFL gRPC" line).
+    Sequential,
+    /// One pool task per model tensor (paper's "MetisFL gRPC + OpenMP").
+    Parallel,
+    /// Offload the weighted sum to the AOT-compiled Pallas fedavg kernel
+    /// via PJRT (ablation backend).
+    Xla,
+}
+
+/// Global aggregation rule + backend.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AggregationSpec {
+    pub rule: String, // fedavg | fedadam | fedyogi | fedadagrad
+    pub backend: AggregationBackend,
+    /// Worker threads for the Parallel backend (0 = hardware threads).
+    pub threads: usize,
+    /// Server learning rate for adaptive rules (FedAdam/Yogi/Adagrad).
+    pub server_lr: f64,
+}
+
+impl Default for AggregationSpec {
+    fn default() -> Self {
+        AggregationSpec {
+            rule: "fedavg".into(),
+            backend: AggregationBackend::Parallel,
+            threads: 0,
+            server_lr: 0.1,
+        }
+    }
+}
+
+/// Secure-aggregation configuration (Table 1, "Privacy & Security").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SecureSpec {
+    None,
+    /// Pairwise-PRG additive masking (LightSecAgg/Salvia analog).
+    Masking,
+    /// Mock-CKKS additively homomorphic aggregation (PALISADE analog).
+    Ckks,
+}
+
+/// What executes a learner's local training task.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TrainerKind {
+    /// Real local training: AOT-compiled JAX train/eval steps via PJRT.
+    Xla { artifacts_dir: String },
+    /// Stress-test trainer: produces parameter-shaped noise updates with a
+    /// calibrated compute-time model. Matches the paper's stress tests,
+    /// which measure controller ops, not learning quality.
+    Synthetic { step_time_us: u64 },
+}
+
+/// Transport between driver/controller/learners.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TransportKind {
+    /// In-process channels (paper's "standalone/simulated" deployment).
+    InProc,
+    /// Framed TCP on localhost (paper's "distributed" deployment).
+    Tcp { base_port: u16 },
+}
+
+/// The HousingMLP model family used by the paper's stress tests:
+/// `hidden_layers` densely connected layers of `hidden_units` each
+/// (100k → 32 units, 1M → 100 units, 10M → 320 units; §4.2 fn. 4).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelSpec {
+    pub input_dim: usize,
+    pub hidden_layers: usize,
+    pub hidden_units: usize,
+    pub output_dim: usize,
+}
+
+impl ModelSpec {
+    pub fn mlp(input_dim: usize, hidden_layers: usize, hidden_units: usize) -> ModelSpec {
+        ModelSpec { input_dim, hidden_layers, hidden_units, output_dim: 1 }
+    }
+
+    /// Paper's 100k-parameter variant (100 layers × 32 units).
+    pub fn paper_100k() -> ModelSpec {
+        ModelSpec::mlp(8, 100, 32)
+    }
+
+    /// Paper's 1M-parameter variant (100 layers × 100 units).
+    pub fn paper_1m() -> ModelSpec {
+        ModelSpec::mlp(8, 100, 100)
+    }
+
+    /// Paper's 10M-parameter variant (100 layers × 320 units).
+    pub fn paper_10m() -> ModelSpec {
+        ModelSpec::mlp(8, 100, 320)
+    }
+
+    /// Named variant used in artifact filenames ("mlp100k" etc.).
+    pub fn variant_name(&self) -> String {
+        format!(
+            "mlp_l{}_u{}_in{}_out{}",
+            self.hidden_layers, self.hidden_units, self.input_dim, self.output_dim
+        )
+    }
+
+    /// Per-tensor layout: (name, shape) for every weight/bias, in order.
+    /// This is the `k` of the paper's per-tensor parallel aggregation.
+    pub fn tensor_layout(&self) -> Vec<(String, Vec<usize>)> {
+        let mut out = Vec::with_capacity(2 * self.hidden_layers + 2);
+        let mut fan_in = self.input_dim;
+        for l in 0..self.hidden_layers {
+            out.push((format!("dense_{l}/w"), vec![fan_in, self.hidden_units]));
+            out.push((format!("dense_{l}/b"), vec![self.hidden_units]));
+            fan_in = self.hidden_units;
+        }
+        out.push(("head/w".into(), vec![fan_in, self.output_dim]));
+        out.push(("head/b".into(), vec![self.output_dim]));
+        out
+    }
+
+    /// Total parameter count.
+    pub fn param_count(&self) -> usize {
+        self.tensor_layout().iter().map(|(_, s)| s.iter().product::<usize>()).sum()
+    }
+
+    /// Number of tensors (`k` in Fig. 4).
+    pub fn tensor_count(&self) -> usize {
+        2 * self.hidden_layers + 2
+    }
+}
+
+/// A fully-specified federation environment.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FederationEnv {
+    pub name: String,
+    pub learners: usize,
+    pub rounds: usize,
+    pub protocol: Protocol,
+    pub model: ModelSpec,
+    pub aggregation: AggregationSpec,
+    pub secure: SecureSpec,
+    pub trainer: TrainerKind,
+    pub transport: TransportKind,
+    /// Learner participation per round, in (0, 1]; the paper runs 1.0.
+    pub participation: f64,
+    pub samples_per_learner: usize,
+    pub batch_size: usize,
+    pub local_epochs: usize,
+    pub learning_rate: f64,
+    pub seed: u64,
+    /// Driver heartbeat period in milliseconds.
+    pub heartbeat_ms: u64,
+    /// Per-task timeout in milliseconds (learners exceeding it are dropped
+    /// from the round — failure injection tests rely on this).
+    pub task_timeout_ms: u64,
+}
+
+impl FederationEnv {
+    pub fn builder(name: &str) -> FederationEnvBuilder {
+        FederationEnvBuilder::new(name)
+    }
+
+    /// Load from a YAML-subset environment file (paper Fig. 3).
+    pub fn from_yaml(src: &str) -> Result<FederationEnv> {
+        let v = super::yaml::parse(src).map_err(|e| anyhow::anyhow!(e.to_string()))?;
+        Self::from_value(&v)
+    }
+
+    /// Load from an already-parsed value tree (YAML or JSON).
+    pub fn from_value(v: &Value) -> Result<FederationEnv> {
+        let name = v
+            .get("name")
+            .and_then(|x| x.as_str())
+            .unwrap_or("federation")
+            .to_string();
+        let mut b = FederationEnvBuilder::new(&name);
+        if let Some(n) = v.get("learners").and_then(|x| x.as_usize()) {
+            b = b.learners(n);
+        }
+        if let Some(n) = v.get("rounds").and_then(|x| x.as_usize()) {
+            b = b.rounds(n);
+        }
+        if let Some(m) = v.get("model") {
+            let input_dim = m.get("input_dim").and_then(|x| x.as_usize()).unwrap_or(8);
+            let layers = m.get("hidden_layers").and_then(|x| x.as_usize()).unwrap_or(100);
+            let units = m.get("hidden_units").and_then(|x| x.as_usize()).unwrap_or(32);
+            let mut spec = ModelSpec::mlp(input_dim, layers, units);
+            if let Some(o) = m.get("output_dim").and_then(|x| x.as_usize()) {
+                spec.output_dim = o;
+            }
+            b = b.model(spec);
+        }
+        if let Some(p) = v.get("protocol") {
+            let kind = p
+                .get("kind")
+                .and_then(|x| x.as_str())
+                .or_else(|| p.as_str())
+                .unwrap_or("synchronous");
+            let proto = match kind {
+                "synchronous" | "sync" => Protocol::Synchronous,
+                "semi_synchronous" | "semi-sync" | "semisync" => Protocol::SemiSynchronous {
+                    lambda: p.get("lambda").and_then(|x| x.as_f64()).unwrap_or(1.0),
+                },
+                "asynchronous" | "async" => Protocol::Asynchronous {
+                    staleness_alpha: p
+                        .get("staleness_alpha")
+                        .and_then(|x| x.as_f64())
+                        .unwrap_or(0.5),
+                },
+                other => bail!("unknown protocol kind '{other}'"),
+            };
+            b = b.protocol(proto);
+        }
+        if let Some(a) = v.get("aggregation") {
+            let mut spec = AggregationSpec::default();
+            if let Some(r) = a.get("rule").and_then(|x| x.as_str()) {
+                spec.rule = r.to_string();
+            }
+            if let Some(be) = a.get("backend").and_then(|x| x.as_str()) {
+                spec.backend = match be {
+                    "sequential" => AggregationBackend::Sequential,
+                    "parallel" => AggregationBackend::Parallel,
+                    "xla" => AggregationBackend::Xla,
+                    other => bail!("unknown aggregation backend '{other}'"),
+                };
+            }
+            if let Some(t) = a.get("threads").and_then(|x| x.as_usize()) {
+                spec.threads = t;
+            }
+            if let Some(lr) = a.get("server_lr").and_then(|x| x.as_f64()) {
+                spec.server_lr = lr;
+            }
+            b = b.aggregation(spec);
+        }
+        if let Some(s) = v.get("secure").and_then(|x| x.as_str()) {
+            b = b.secure(match s {
+                "none" => SecureSpec::None,
+                "masking" => SecureSpec::Masking,
+                "ckks" => SecureSpec::Ckks,
+                other => bail!("unknown secure mode '{other}'"),
+            });
+        }
+        if let Some(t) = v.get("trainer") {
+            let kind = t.get("kind").and_then(|x| x.as_str()).unwrap_or("synthetic");
+            b = b.trainer(match kind {
+                "xla" => TrainerKind::Xla {
+                    artifacts_dir: t
+                        .get("artifacts_dir")
+                        .and_then(|x| x.as_str())
+                        .unwrap_or("artifacts")
+                        .to_string(),
+                },
+                "synthetic" => TrainerKind::Synthetic {
+                    step_time_us: t.get("step_time_us").and_then(|x| x.as_u64()).unwrap_or(0),
+                },
+                other => bail!("unknown trainer kind '{other}'"),
+            });
+        }
+        if let Some(t) = v.get("transport") {
+            let kind = t.get("kind").and_then(|x| x.as_str()).or_else(|| t.as_str());
+            b = b.transport(match kind.unwrap_or("inproc") {
+                "inproc" => TransportKind::InProc,
+                "tcp" => TransportKind::Tcp {
+                    base_port: t.get("base_port").and_then(|x| x.as_u64()).unwrap_or(42500) as u16,
+                },
+                other => bail!("unknown transport kind '{other}'"),
+            });
+        }
+        if let Some(x) = v.get("participation").and_then(|x| x.as_f64()) {
+            b = b.participation(x);
+        }
+        if let Some(x) = v.get("samples_per_learner").and_then(|x| x.as_usize()) {
+            b = b.samples_per_learner(x);
+        }
+        if let Some(x) = v.get("batch_size").and_then(|x| x.as_usize()) {
+            b = b.batch_size(x);
+        }
+        if let Some(x) = v.get("local_epochs").and_then(|x| x.as_usize()) {
+            b = b.local_epochs(x);
+        }
+        if let Some(x) = v.get("learning_rate").and_then(|x| x.as_f64()) {
+            b = b.learning_rate(x);
+        }
+        if let Some(x) = v.get("seed").and_then(|x| x.as_u64()) {
+            b = b.seed(x);
+        }
+        if let Some(x) = v.get("heartbeat_ms").and_then(|x| x.as_u64()) {
+            b = b.heartbeat_ms(x);
+        }
+        if let Some(x) = v.get("task_timeout_ms").and_then(|x| x.as_u64()) {
+            b = b.task_timeout_ms(x);
+        }
+        Ok(b.build())
+    }
+
+    /// Load from a file (YAML `.yaml`/`.yml` or JSON `.json`).
+    pub fn from_file(path: &str) -> Result<FederationEnv> {
+        let src = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        if path.ends_with(".json") {
+            let v = crate::json::parse(&src).map_err(|e| anyhow::anyhow!(e.to_string()))?;
+            Self::from_value(&v)
+        } else {
+            Self::from_yaml(&src)
+        }
+    }
+
+    /// Validate invariants; called by `build()` in debug builds and by
+    /// loaders always.
+    pub fn validate(&self) -> Result<()> {
+        if self.learners == 0 {
+            bail!("learners must be >= 1");
+        }
+        if !(self.participation > 0.0 && self.participation <= 1.0) {
+            bail!("participation must be in (0, 1]");
+        }
+        if self.batch_size == 0 || self.samples_per_learner == 0 {
+            bail!("batch_size and samples_per_learner must be >= 1");
+        }
+        if self.model.hidden_layers == 0 || self.model.hidden_units == 0 {
+            bail!("model must have at least one hidden layer/unit");
+        }
+        match self.protocol {
+            Protocol::SemiSynchronous { lambda } if lambda <= 0.0 => {
+                bail!("semi-sync lambda must be > 0")
+            }
+            Protocol::Asynchronous { staleness_alpha } if staleness_alpha < 0.0 => {
+                bail!("staleness_alpha must be >= 0")
+            }
+            _ => Ok(()),
+        }
+    }
+}
+
+/// Builder for [`FederationEnv`] with paper-matching defaults.
+#[derive(Debug, Clone)]
+pub struct FederationEnvBuilder {
+    env: FederationEnv,
+}
+
+impl FederationEnvBuilder {
+    pub fn new(name: &str) -> Self {
+        FederationEnvBuilder {
+            env: FederationEnv {
+                name: name.to_string(),
+                learners: 10,
+                rounds: 1,
+                protocol: Protocol::Synchronous,
+                model: ModelSpec::paper_100k(),
+                aggregation: AggregationSpec::default(),
+                secure: SecureSpec::None,
+                trainer: TrainerKind::Synthetic { step_time_us: 0 },
+                transport: TransportKind::InProc,
+                participation: 1.0,
+                samples_per_learner: 100,
+                batch_size: 100,
+                local_epochs: 1,
+                learning_rate: 0.01,
+                seed: 42,
+                heartbeat_ms: 500,
+                task_timeout_ms: 60_000,
+            },
+        }
+    }
+
+    pub fn learners(mut self, n: usize) -> Self {
+        self.env.learners = n;
+        self
+    }
+    pub fn rounds(mut self, n: usize) -> Self {
+        self.env.rounds = n;
+        self
+    }
+    pub fn protocol(mut self, p: Protocol) -> Self {
+        self.env.protocol = p;
+        self
+    }
+    pub fn model(mut self, m: ModelSpec) -> Self {
+        self.env.model = m;
+        self
+    }
+    pub fn aggregation(mut self, a: AggregationSpec) -> Self {
+        self.env.aggregation = a;
+        self
+    }
+    pub fn secure(mut self, s: SecureSpec) -> Self {
+        self.env.secure = s;
+        self
+    }
+    pub fn trainer(mut self, t: TrainerKind) -> Self {
+        self.env.trainer = t;
+        self
+    }
+    pub fn transport(mut self, t: TransportKind) -> Self {
+        self.env.transport = t;
+        self
+    }
+    pub fn participation(mut self, f: f64) -> Self {
+        self.env.participation = f;
+        self
+    }
+    pub fn samples_per_learner(mut self, n: usize) -> Self {
+        self.env.samples_per_learner = n;
+        self
+    }
+    pub fn batch_size(mut self, n: usize) -> Self {
+        self.env.batch_size = n;
+        self
+    }
+    pub fn local_epochs(mut self, n: usize) -> Self {
+        self.env.local_epochs = n;
+        self
+    }
+    pub fn learning_rate(mut self, lr: f64) -> Self {
+        self.env.learning_rate = lr;
+        self
+    }
+    pub fn seed(mut self, s: u64) -> Self {
+        self.env.seed = s;
+        self
+    }
+    pub fn heartbeat_ms(mut self, ms: u64) -> Self {
+        self.env.heartbeat_ms = ms;
+        self
+    }
+    pub fn task_timeout_ms(mut self, ms: u64) -> Self {
+        self.env.task_timeout_ms = ms;
+        self
+    }
+
+    pub fn build(self) -> FederationEnv {
+        debug_assert!(self.env.validate().is_ok(), "{:?}", self.env.validate());
+        self.env
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_variant_param_counts_match_footnote_4() {
+        // §4.2 fn. 4: 100k → 32 units, 1M → 100 units, 10M → 320 units.
+        let p100k = ModelSpec::paper_100k().param_count();
+        let p1m = ModelSpec::paper_1m().param_count();
+        let p10m = ModelSpec::paper_10m().param_count();
+        assert!((90_000..130_000).contains(&p100k), "{p100k}");
+        assert!((900_000..1_100_000).contains(&p1m), "{p1m}");
+        assert!((9_500_000..10_600_000).contains(&p10m), "{p10m}");
+    }
+
+    #[test]
+    fn tensor_layout_shapes_chain() {
+        let m = ModelSpec::mlp(8, 3, 16);
+        let layout = m.tensor_layout();
+        assert_eq!(layout.len(), 8); // 3×(w,b) + head(w,b)
+        assert_eq!(layout[0].1, vec![8, 16]);
+        assert_eq!(layout[2].1, vec![16, 16]);
+        assert_eq!(layout[6].1, vec![16, 1]);
+        assert_eq!(m.tensor_count(), layout.len());
+        let total: usize = layout.iter().map(|(_, s)| s.iter().product::<usize>()).sum();
+        assert_eq!(total, m.param_count());
+    }
+
+    #[test]
+    fn builder_defaults_match_paper_workload() {
+        let env = FederationEnv::builder("t").build();
+        assert_eq!(env.samples_per_learner, 100);
+        assert_eq!(env.batch_size, 100);
+        assert_eq!(env.participation, 1.0);
+        assert_eq!(env.protocol, Protocol::Synchronous);
+        assert!(env.validate().is_ok());
+    }
+
+    #[test]
+    fn yaml_roundtrip_full_env() {
+        let src = r#"
+name: stress
+learners: 25
+rounds: 4
+model:
+  input_dim: 8
+  hidden_layers: 100
+  hidden_units: 100
+protocol:
+  kind: semi_synchronous
+  lambda: 2.0
+aggregation:
+  rule: fedavg
+  backend: sequential
+  threads: 4
+secure: masking
+trainer:
+  kind: synthetic
+  step_time_us: 150
+transport:
+  kind: tcp
+  base_port: 43000
+participation: 0.5
+seed: 7
+"#;
+        let env = FederationEnv::from_yaml(src).unwrap();
+        assert_eq!(env.name, "stress");
+        assert_eq!(env.learners, 25);
+        assert_eq!(env.model.hidden_units, 100);
+        assert_eq!(env.protocol, Protocol::SemiSynchronous { lambda: 2.0 });
+        assert_eq!(env.aggregation.backend, AggregationBackend::Sequential);
+        assert_eq!(env.aggregation.threads, 4);
+        assert_eq!(env.secure, SecureSpec::Masking);
+        assert_eq!(env.trainer, TrainerKind::Synthetic { step_time_us: 150 });
+        assert_eq!(env.transport, TransportKind::Tcp { base_port: 43000 });
+        assert_eq!(env.participation, 0.5);
+        assert_eq!(env.seed, 7);
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        let mut env = FederationEnv::builder("t").build();
+        env.learners = 0;
+        assert!(env.validate().is_err());
+        let mut env = FederationEnv::builder("t").build();
+        env.participation = 0.0;
+        assert!(env.validate().is_err());
+        let mut env = FederationEnv::builder("t").build();
+        env.protocol = Protocol::SemiSynchronous { lambda: -1.0 };
+        assert!(env.validate().is_err());
+        assert!(FederationEnv::from_yaml("protocol: warp_speed\n").is_err());
+    }
+
+    #[test]
+    fn variant_name_is_stable() {
+        assert_eq!(ModelSpec::paper_100k().variant_name(), "mlp_l100_u32_in8_out1");
+    }
+}

@@ -1,0 +1,18 @@
+//! Federated-environment configuration.
+//!
+//! The paper drives an FL workflow from a "federated environment" YAML
+//! file plus a model/data recipe (§3, Fig. 3). This module supplies:
+//!
+//! * [`yaml`] — an indentation-based YAML-subset parser (offline build:
+//!   no serde_yaml) producing [`crate::json::Value`] trees,
+//! * [`env`] — the typed [`FederationEnv`] with a builder and
+//!   YAML/JSON loaders, and [`ModelSpec`] describing the paper's
+//!   HousingMLP variants (100k / 1M / 10M parameters).
+
+pub mod env;
+pub mod yaml;
+
+pub use env::{
+    AggregationBackend, AggregationSpec, FederationEnv, FederationEnvBuilder, ModelSpec,
+    Protocol, SecureSpec, TrainerKind, TransportKind,
+};

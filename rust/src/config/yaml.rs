@@ -1,0 +1,278 @@
+//! Indentation-based YAML-subset parser.
+//!
+//! Supports the subset used by MetisFL environment files:
+//!
+//! * nested mappings via 2+ space indentation,
+//! * block lists (`- item`, including `- key: value` object items),
+//! * inline scalars: strings (bare or quoted), ints, floats, bools, null,
+//! * `#` comments and blank lines.
+//!
+//! Anchors, multi-line strings, flow collections, and tags are not
+//! supported (and not used by our config files).
+
+use crate::json::Value;
+use std::collections::BTreeMap;
+
+#[derive(Debug, thiserror::Error)]
+#[error("yaml parse error at line {line}: {msg}")]
+pub struct YamlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+struct Line {
+    indent: usize,
+    text: String,
+    num: usize,
+}
+
+/// Parse a YAML-subset document into a JSON value tree.
+pub fn parse(src: &str) -> Result<Value, YamlError> {
+    let lines: Vec<Line> = src
+        .lines()
+        .enumerate()
+        .filter_map(|(i, raw)| {
+            let no_comment = strip_comment(raw);
+            let trimmed = no_comment.trim_end();
+            if trimmed.trim().is_empty() {
+                return None;
+            }
+            let indent = trimmed.len() - trimmed.trim_start().len();
+            Some(Line { indent, text: trimmed.trim_start().to_string(), num: i + 1 })
+        })
+        .collect();
+    if lines.is_empty() {
+        return Ok(Value::Object(BTreeMap::new()));
+    }
+    let mut pos = 0;
+    let v = parse_block(&lines, &mut pos, lines[0].indent)?;
+    if pos != lines.len() {
+        return Err(YamlError {
+            line: lines[pos].num,
+            msg: "unexpected dedent/indent structure".into(),
+        });
+    }
+    Ok(v)
+}
+
+fn strip_comment(raw: &str) -> String {
+    let mut out = String::new();
+    let mut in_squote = false;
+    let mut in_dquote = false;
+    for c in raw.chars() {
+        match c {
+            '\'' if !in_dquote => in_squote = !in_squote,
+            '"' if !in_squote => in_dquote = !in_dquote,
+            '#' if !in_squote && !in_dquote => break,
+            _ => {}
+        }
+        out.push(c);
+    }
+    out
+}
+
+fn parse_block(lines: &[Line], pos: &mut usize, indent: usize) -> Result<Value, YamlError> {
+    if lines[*pos].text.starts_with("- ") || lines[*pos].text == "-" {
+        parse_list(lines, pos, indent)
+    } else {
+        parse_map(lines, pos, indent)
+    }
+}
+
+fn parse_map(lines: &[Line], pos: &mut usize, indent: usize) -> Result<Value, YamlError> {
+    let mut map = BTreeMap::new();
+    while *pos < lines.len() {
+        let line = &lines[*pos];
+        if line.indent < indent {
+            break;
+        }
+        if line.indent > indent {
+            return Err(YamlError { line: line.num, msg: "unexpected indent".into() });
+        }
+        let (key, rest) = split_key(line)?;
+        *pos += 1;
+        let value = if rest.is_empty() {
+            // Nested block (map or list) or empty value.
+            if *pos < lines.len() && lines[*pos].indent > indent {
+                let child_indent = lines[*pos].indent;
+                parse_block(lines, pos, child_indent)?
+            } else {
+                Value::Null
+            }
+        } else {
+            scalar(rest)
+        };
+        map.insert(key, value);
+    }
+    Ok(Value::Object(map))
+}
+
+fn parse_list(lines: &[Line], pos: &mut usize, indent: usize) -> Result<Value, YamlError> {
+    let mut items = Vec::new();
+    while *pos < lines.len() {
+        let line = &lines[*pos];
+        if line.indent != indent || !(line.text.starts_with("- ") || line.text == "-") {
+            if line.indent >= indent && !line.text.starts_with('-') {
+                break;
+            }
+            if line.indent < indent {
+                break;
+            }
+            return Err(YamlError { line: line.num, msg: "malformed list item".into() });
+        }
+        let body = line.text.strip_prefix('-').unwrap().trim_start().to_string();
+        if body.is_empty() {
+            *pos += 1;
+            if *pos < lines.len() && lines[*pos].indent > indent {
+                let child = lines[*pos].indent;
+                items.push(parse_block(lines, pos, child)?);
+            } else {
+                items.push(Value::Null);
+            }
+        } else if body.contains(": ") || body.ends_with(':') {
+            // `- key: value` starts an inline object item; subsequent
+            // more-indented lines extend it.
+            let virtual_line = Line { indent: indent + 2, text: body, num: line.num };
+            let mut sub: Vec<Line> = vec![virtual_line];
+            *pos += 1;
+            while *pos < lines.len() && lines[*pos].indent >= indent + 2 {
+                sub.push(Line {
+                    indent: lines[*pos].indent,
+                    text: lines[*pos].text.clone(),
+                    num: lines[*pos].num,
+                });
+                *pos += 1;
+            }
+            let mut sub_pos = 0;
+            let obj = parse_map(&sub, &mut sub_pos, indent + 2)?;
+            items.push(obj);
+        } else {
+            items.push(scalar(&body));
+            *pos += 1;
+        }
+    }
+    Ok(Value::Array(items))
+}
+
+fn split_key(line: &Line) -> Result<(String, &str), YamlError> {
+    let text = &line.text;
+    let idx = text
+        .find(':')
+        .ok_or_else(|| YamlError { line: line.num, msg: format!("expected 'key:' in '{text}'") })?;
+    let key = text[..idx].trim();
+    if key.is_empty() {
+        return Err(YamlError { line: line.num, msg: "empty key".into() });
+    }
+    let key = unquote(key);
+    Ok((key, text[idx + 1..].trim()))
+}
+
+fn unquote(s: &str) -> String {
+    let b = s.as_bytes();
+    if b.len() >= 2
+        && ((b[0] == b'"' && b[b.len() - 1] == b'"') || (b[0] == b'\'' && b[b.len() - 1] == b'\''))
+    {
+        s[1..s.len() - 1].to_string()
+    } else {
+        s.to_string()
+    }
+}
+
+/// Interpret a scalar token (types inferred like YAML 1.2 core schema).
+fn scalar(s: &str) -> Value {
+    let t = s.trim();
+    match t {
+        "null" | "~" | "" => return Value::Null,
+        "true" | "True" => return Value::Bool(true),
+        "false" | "False" => return Value::Bool(false),
+        _ => {}
+    }
+    let bytes = t.as_bytes();
+    if bytes[0] == b'"' || bytes[0] == b'\'' {
+        return Value::String(unquote(t));
+    }
+    if let Ok(n) = t.parse::<f64>() {
+        // Reject things like "1.2.3" (parse::<f64> would fail anyway) and
+        // leading-plus oddities are fine.
+        return Value::Number(n);
+    }
+    // Inline flow list of scalars: [a, b, c]
+    if t.starts_with('[') && t.ends_with(']') {
+        let inner = &t[1..t.len() - 1];
+        if inner.trim().is_empty() {
+            return Value::Array(vec![]);
+        }
+        return Value::Array(inner.split(',').map(|p| scalar(p.trim())).collect());
+    }
+    Value::String(t.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_flat_mapping() {
+        let v = parse("name: demo\nlearners: 10\nlr: 0.01\nsecure: false\n").unwrap();
+        assert_eq!(v.get("name").unwrap().as_str(), Some("demo"));
+        assert_eq!(v.get("learners").unwrap().as_usize(), Some(10));
+        assert_eq!(v.get("lr").unwrap().as_f64(), Some(0.01));
+        assert_eq!(v.get("secure").unwrap().as_bool(), Some(false));
+    }
+
+    #[test]
+    fn parses_nested_mapping() {
+        let src = "model:\n  hidden_layers: 100\n  hidden_units: 32\nrounds: 3\n";
+        let v = parse(src).unwrap();
+        assert_eq!(v.get("model").unwrap().get("hidden_layers").unwrap().as_usize(), Some(100));
+        assert_eq!(v.get("rounds").unwrap().as_usize(), Some(3));
+    }
+
+    #[test]
+    fn parses_lists() {
+        let src = "hosts:\n  - alpha\n  - beta\nsizes: [1, 2, 3]\n";
+        let v = parse(src).unwrap();
+        let hosts = v.get("hosts").unwrap().as_array().unwrap();
+        assert_eq!(hosts.len(), 2);
+        assert_eq!(hosts[0].as_str(), Some("alpha"));
+        let sizes = v.get("sizes").unwrap().as_array().unwrap();
+        assert_eq!(sizes.iter().filter_map(|x| x.as_usize()).collect::<Vec<_>>(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn parses_object_list_items() {
+        let src = "learners:\n  - host: a\n    port: 1\n  - host: b\n    port: 2\n";
+        let v = parse(src).unwrap();
+        let ls = v.get("learners").unwrap().as_array().unwrap();
+        assert_eq!(ls.len(), 2);
+        assert_eq!(ls[0].get("host").unwrap().as_str(), Some("a"));
+        assert_eq!(ls[1].get("port").unwrap().as_usize(), Some(2));
+    }
+
+    #[test]
+    fn comments_and_blank_lines_ignored() {
+        let src = "# header\n\na: 1  # trailing\n# mid\nb: 'x # not comment'\n";
+        let v = parse(src).unwrap();
+        assert_eq!(v.get("a").unwrap().as_usize(), Some(1));
+        assert_eq!(v.get("b").unwrap().as_str(), Some("x # not comment"));
+    }
+
+    #[test]
+    fn quoted_strings_preserve_type() {
+        let v = parse("a: \"123\"\nb: 123\n").unwrap();
+        assert_eq!(v.get("a").unwrap().as_str(), Some("123"));
+        assert_eq!(v.get("b").unwrap().as_usize(), Some(123));
+    }
+
+    #[test]
+    fn empty_doc_is_empty_object() {
+        assert_eq!(parse("").unwrap(), Value::Object(Default::default()));
+        assert_eq!(parse("# only comments\n").unwrap(), Value::Object(Default::default()));
+    }
+
+    #[test]
+    fn error_has_line_number() {
+        let e = parse("a: 1\n   bogus line without colon\n").unwrap_err();
+        assert_eq!(e.line, 2);
+    }
+}

@@ -1,0 +1,186 @@
+//! FedAvg and the shared per-tensor weighted-sum engine.
+//!
+//! Figure 4: for `N` learners and `k` model tensors, the parallel backend
+//! computes each aggregated tensor `T_i^C = Σ_j (w_j/W) · T_i^j` as one
+//! independent task — "one thread per model tensor".
+
+use super::{check_contributions, AggregationRule, Backend, Contribution};
+use crate::tensor::ops;
+use crate::tensor::{Tensor, TensorModel};
+use anyhow::Result;
+
+/// The weighted-sum engine shared by every rule (and reused by the
+/// baselines with different backends).
+pub struct WeightedSum;
+
+impl WeightedSum {
+    /// `out_i = Σ_j coeff_j · model_j.tensor_i` for every tensor `i`.
+    pub fn compute(
+        models: &[&TensorModel],
+        coeffs: &[f64],
+        backend: &Backend,
+    ) -> Result<TensorModel> {
+        assert_eq!(models.len(), coeffs.len());
+        match backend {
+            Backend::Xla(f) => f(models, coeffs),
+            Backend::Sequential => {
+                let k = models[0].tensor_count();
+                let tensors =
+                    (0..k).map(|i| Self::one_tensor(models, coeffs, i)).collect::<Vec<_>>();
+                Ok(TensorModel::new(tensors))
+            }
+            Backend::Parallel(pool) => {
+                let k = models[0].tensor_count();
+                let tensors = pool.parallel_map(k, |i| Self::one_tensor(models, coeffs, i));
+                Ok(TensorModel::new(tensors))
+            }
+        }
+    }
+
+    /// Aggregate tensor `i` across all models (a single Fig.-4 column).
+    fn one_tensor(models: &[&TensorModel], coeffs: &[f64], i: usize) -> Tensor {
+        let first = &models[0].tensors[i];
+        let mut data = vec![0.0f32; first.elem_count()];
+        ops::scaled_copy(&mut data, &first.data, coeffs[0] as f32);
+        for (m, &c) in models.iter().zip(coeffs).skip(1) {
+            ops::axpy(&mut data, &m.tensors[i].data, c as f32);
+        }
+        Tensor::new(first.name.clone(), first.shape.clone(), data)
+    }
+}
+
+/// Plain federated averaging: community = Σ (w_j/W) · model_j.
+#[derive(Default)]
+pub struct FedAvg;
+
+impl FedAvg {
+    pub fn new() -> FedAvg {
+        FedAvg
+    }
+}
+
+impl AggregationRule for FedAvg {
+    fn aggregate(
+        &mut self,
+        current: &TensorModel,
+        contributions: &[Contribution<'_>],
+        backend: &Backend,
+    ) -> Result<TensorModel> {
+        check_contributions(current, contributions)?;
+        let total: f64 = contributions.iter().map(|c| c.weight).sum();
+        let models: Vec<&TensorModel> = contributions.iter().map(|c| c.model).collect();
+        let coeffs: Vec<f64> = contributions.iter().map(|c| c.weight / total).collect();
+        WeightedSum::compute(&models, &coeffs, backend)
+    }
+
+    fn name(&self) -> &'static str {
+        "fedavg"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelSpec;
+    use crate::util::prop::prop_check;
+    use crate::util::{Rng, ThreadPool};
+    use std::sync::Arc;
+
+    fn setup(n: usize, seed: u64) -> (TensorModel, Vec<TensorModel>) {
+        let layout = ModelSpec::mlp(4, 5, 8).tensor_layout();
+        let mut rng = Rng::new(seed);
+        let current = TensorModel::random_init(&layout, &mut rng);
+        let ms = (0..n).map(|_| TensorModel::random_init(&layout, &mut rng)).collect();
+        (current, ms)
+    }
+
+    fn contributions<'a>(ms: &'a [TensorModel], weights: &[f64]) -> Vec<Contribution<'a>> {
+        ms.iter()
+            .zip(weights)
+            .map(|(m, &w)| Contribution { model: m, weight: w })
+            .collect()
+    }
+
+    #[test]
+    fn uniform_weights_give_arithmetic_mean() {
+        let (current, ms) = setup(4, 1);
+        let cs = contributions(&ms, &[1.0; 4]);
+        let agg = FedAvg::new().aggregate(&current, &cs, &Backend::Sequential).unwrap();
+        for (ti, t) in agg.tensors.iter().enumerate() {
+            for (ei, v) in t.data.iter().enumerate() {
+                let mean: f32 =
+                    ms.iter().map(|m| m.tensors[ti].data[ei]).sum::<f32>() / 4.0;
+                assert!((v - mean).abs() < 1e-5, "tensor {ti} elem {ei}");
+            }
+        }
+    }
+
+    #[test]
+    fn weighted_mean_respects_sample_counts() {
+        let (current, ms) = setup(2, 2);
+        let cs = contributions(&ms, &[300.0, 100.0]);
+        let agg = FedAvg::new().aggregate(&current, &cs, &Backend::Sequential).unwrap();
+        let expect = 0.75 * ms[0].tensors[0].data[0] + 0.25 * ms[1].tensors[0].data[0];
+        assert!((agg.tensors[0].data[0] - expect).abs() < 1e-6);
+    }
+
+    #[test]
+    fn parallel_backend_matches_sequential_exactly() {
+        let (current, ms) = setup(8, 3);
+        let weights: Vec<f64> = (1..=8).map(|i| i as f64 * 10.0).collect();
+        let cs = contributions(&ms, &weights);
+        let seq = FedAvg::new().aggregate(&current, &cs, &Backend::Sequential).unwrap();
+        let pool = Arc::new(ThreadPool::new(4));
+        let cs = contributions(&ms, &weights);
+        let par = FedAvg::new().aggregate(&current, &cs, &Backend::Parallel(pool)).unwrap();
+        // Same operation order per tensor ⇒ bitwise identical.
+        assert_eq!(seq, par);
+    }
+
+    #[test]
+    fn single_contribution_is_identity() {
+        let (current, ms) = setup(1, 4);
+        let cs = contributions(&ms, &[123.0]);
+        let agg = FedAvg::new().aggregate(&current, &cs, &Backend::Sequential).unwrap();
+        assert!(agg.max_abs_diff(&ms[0]) < 1e-6);
+    }
+
+    #[test]
+    fn aggregate_preserves_layout() {
+        let (current, ms) = setup(3, 5);
+        let cs = contributions(&ms, &[1.0, 2.0, 3.0]);
+        let agg = FedAvg::new().aggregate(&current, &cs, &Backend::Sequential).unwrap();
+        assert_eq!(agg.layout(), current.layout());
+    }
+
+    #[test]
+    fn prop_fedavg_invariants() {
+        prop_check("fedavg convexity & symmetry", 25, |g| {
+            let n = g.usize_in(1..6);
+            let seed = g.rng().next_u64();
+            let (current, ms) = setup(n, seed);
+            let weights: Vec<f64> = (0..n).map(|_| g.f64_in(0.1, 10.0)).collect();
+            let cs = contributions(&ms, &weights);
+            let agg = FedAvg::new().aggregate(&current, &cs, &Backend::Sequential).unwrap();
+            // Convexity: every aggregated element lies within [min, max]
+            // of the contributions (up to fp slack).
+            for ti in 0..agg.tensor_count() {
+                for ei in 0..agg.tensors[ti].data.len() {
+                    let vals: Vec<f32> = ms.iter().map(|m| m.tensors[ti].data[ei]).collect();
+                    let lo = vals.iter().cloned().fold(f32::INFINITY, f32::min);
+                    let hi = vals.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                    let v = agg.tensors[ti].data[ei];
+                    assert!(v >= lo - 1e-4 && v <= hi + 1e-4, "elem out of hull");
+                }
+            }
+            // Permutation symmetry.
+            let mut order: Vec<usize> = (0..n).collect();
+            g.rng().shuffle(&mut order);
+            let ms2: Vec<TensorModel> = order.iter().map(|&i| ms[i].clone()).collect();
+            let w2: Vec<f64> = order.iter().map(|&i| weights[i]).collect();
+            let cs2 = contributions(&ms2, &w2);
+            let agg2 = FedAvg::new().aggregate(&current, &cs2, &Backend::Sequential).unwrap();
+            assert!(agg.max_abs_diff(&agg2) < 1e-4, "not permutation symmetric");
+        });
+    }
+}

@@ -1,0 +1,202 @@
+//! Model aggregation — the paper's headline contribution (§3, Fig. 4).
+//!
+//! An [`AggregationRule`] combines `N` learner models (with weights,
+//! typically sample counts) into the new community model. The rule is
+//! orthogonal to the *backend* that executes the weighted sums:
+//!
+//! * [`Backend::Sequential`] — one thread, tensor after tensor (the
+//!   paper's "MetisFL gRPC" configuration),
+//! * [`Backend::Parallel`]  — one pool task per model tensor, the
+//!   "embarrassingly parallelized" OpenMP analog ("MetisFL gRPC+OpenMP"),
+//! * [`Backend::Xla`]       — offload to the AOT-compiled Pallas fedavg
+//!   kernel via PJRT (ablation, wired in `runtime`).
+//!
+//! Rules provided: [`FedAvg`] and the adaptive server optimizers
+//! [`FedAdam`], [`FedYogi`], [`FedAdagrad`] (Reddi et al. 2021), which
+//! all consume the FedAvg mean as a pseudo-gradient — so they reuse the
+//! same parallel weighted-sum hot path.
+
+pub mod fedavg;
+pub mod server_opt;
+
+pub use fedavg::{FedAvg, WeightedSum};
+pub use server_opt::{FedAdagrad, FedAdam, FedYogi};
+
+use crate::config::{AggregationBackend, AggregationSpec};
+use crate::tensor::TensorModel;
+use crate::util::ThreadPool;
+use anyhow::{bail, Result};
+use std::sync::Arc;
+
+/// One learner's contribution to a round.
+pub struct Contribution<'a> {
+    pub model: &'a TensorModel,
+    /// Aggregation weight (the paper uses training-sample counts).
+    pub weight: f64,
+}
+
+/// Execution backend for the per-tensor weighted sums.
+#[derive(Clone)]
+pub enum Backend {
+    Sequential,
+    Parallel(Arc<ThreadPool>),
+    /// XLA offload; boxed function so `controller` need not depend on the
+    /// runtime module directly (wired by `runtime::xla_backend`).
+    Xla(Arc<dyn Fn(&[&TensorModel], &[f64]) -> Result<TensorModel> + Send + Sync>),
+}
+
+impl std::fmt::Debug for Backend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Backend::Sequential => write!(f, "Sequential"),
+            Backend::Parallel(p) => write!(f, "Parallel({} threads)", p.size()),
+            Backend::Xla(_) => write!(f, "Xla"),
+        }
+    }
+}
+
+impl Backend {
+    /// Build from config (Xla must be wired explicitly via the runtime).
+    pub fn from_spec(spec: &AggregationSpec) -> Backend {
+        match spec.backend {
+            AggregationBackend::Sequential => Backend::Sequential,
+            AggregationBackend::Parallel => {
+                let threads = if spec.threads == 0 {
+                    crate::util::threadpool::hardware_threads()
+                } else {
+                    spec.threads
+                };
+                Backend::Parallel(Arc::new(ThreadPool::new(threads)))
+            }
+            AggregationBackend::Xla => {
+                // Falls back to Sequential until the runtime injects the
+                // compiled kernel (Controller::set_xla_backend).
+                Backend::Sequential
+            }
+        }
+    }
+}
+
+/// A global aggregation rule.
+pub trait AggregationRule: Send + Sync {
+    /// Combine contributions into the next community model.
+    ///
+    /// `current` is the present community model (used by adaptive rules;
+    /// plain FedAvg ignores it).
+    fn aggregate(
+        &mut self,
+        current: &TensorModel,
+        contributions: &[Contribution<'_>],
+        backend: &Backend,
+    ) -> Result<TensorModel>;
+
+    fn name(&self) -> &'static str;
+}
+
+/// Build a rule by config name.
+pub fn rule_from_spec(spec: &AggregationSpec) -> Result<Box<dyn AggregationRule>> {
+    Ok(match spec.rule.as_str() {
+        "fedavg" => Box::new(FedAvg::new()),
+        "fedadam" => Box::new(FedAdam::new(spec.server_lr)),
+        "fedyogi" => Box::new(FedYogi::new(spec.server_lr)),
+        "fedadagrad" => Box::new(FedAdagrad::new(spec.server_lr)),
+        other => bail!("unknown aggregation rule '{other}'"),
+    })
+}
+
+/// Validate contributions: non-empty, matching layouts, positive weights.
+pub(crate) fn check_contributions(
+    current: &TensorModel,
+    contributions: &[Contribution<'_>],
+) -> Result<()> {
+    if contributions.is_empty() {
+        bail!("aggregate() with zero contributions");
+    }
+    let total: f64 = contributions.iter().map(|c| c.weight).sum();
+    if total <= 0.0 {
+        bail!("aggregate() with non-positive total weight {total}");
+    }
+    for (i, c) in contributions.iter().enumerate() {
+        if c.weight < 0.0 {
+            bail!("contribution {i} has negative weight {}", c.weight);
+        }
+        if c.model.tensor_count() != current.tensor_count() {
+            bail!(
+                "contribution {i} tensor count {} != community {}",
+                c.model.tensor_count(),
+                current.tensor_count()
+            );
+        }
+        for (a, b) in c.model.tensors.iter().zip(&current.tensors) {
+            if a.shape != b.shape {
+                bail!("contribution {i} tensor '{}' shape {:?} != {:?}", a.name, a.shape, b.shape);
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelSpec;
+    use crate::util::Rng;
+
+    fn models(n: usize) -> (TensorModel, Vec<TensorModel>) {
+        let layout = ModelSpec::mlp(4, 3, 8).tensor_layout();
+        let mut rng = Rng::new(77);
+        let current = TensorModel::random_init(&layout, &mut rng);
+        let ms = (0..n).map(|_| TensorModel::random_init(&layout, &mut rng)).collect();
+        (current, ms)
+    }
+
+    #[test]
+    fn rule_factory_known_and_unknown() {
+        for rule in ["fedavg", "fedadam", "fedyogi", "fedadagrad"] {
+            let spec = AggregationSpec { rule: rule.into(), ..Default::default() };
+            assert!(rule_from_spec(&spec).is_ok(), "{rule}");
+        }
+        let spec = AggregationSpec { rule: "bogus".into(), ..Default::default() };
+        assert!(rule_from_spec(&spec).is_err());
+    }
+
+    #[test]
+    fn contribution_validation() {
+        let (current, ms) = models(2);
+        let ok = vec![
+            Contribution { model: &ms[0], weight: 1.0 },
+            Contribution { model: &ms[1], weight: 2.0 },
+        ];
+        assert!(check_contributions(&current, &ok).is_ok());
+        assert!(check_contributions(&current, &[]).is_err());
+        let zero = vec![Contribution { model: &ms[0], weight: 0.0 }];
+        assert!(check_contributions(&current, &zero).is_err());
+        let neg = vec![
+            Contribution { model: &ms[0], weight: 2.0 },
+            Contribution { model: &ms[1], weight: -1.0 },
+        ];
+        assert!(check_contributions(&current, &neg).is_err());
+        // Mismatched layout.
+        let other = TensorModel::zeros(&ModelSpec::mlp(4, 2, 8).tensor_layout());
+        let bad = vec![Contribution { model: &other, weight: 1.0 }];
+        assert!(check_contributions(&current, &bad).is_err());
+    }
+
+    #[test]
+    fn backend_from_spec() {
+        let spec = AggregationSpec {
+            backend: crate::config::AggregationBackend::Parallel,
+            threads: 3,
+            ..Default::default()
+        };
+        match Backend::from_spec(&spec) {
+            Backend::Parallel(p) => assert_eq!(p.size(), 3),
+            other => panic!("expected parallel, got {other:?}"),
+        }
+        let spec = AggregationSpec {
+            backend: crate::config::AggregationBackend::Sequential,
+            ..Default::default()
+        };
+        assert!(matches!(Backend::from_spec(&spec), Backend::Sequential));
+    }
+}

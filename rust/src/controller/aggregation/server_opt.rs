@@ -1,0 +1,209 @@
+//! Adaptive server optimizers (GlobalOpt row of Table 1).
+//!
+//! FedAdam / FedYogi / FedAdagrad (Reddi et al., *Adaptive Federated
+//! Optimization*, 2021): treat `Δ = fedavg(models) − community` as a
+//! pseudo-gradient and apply the corresponding adaptive update with
+//! server-side moment state. The expensive part — the weighted mean —
+//! reuses [`WeightedSum`], so all backends apply.
+
+use super::{check_contributions, AggregationRule, Backend, Contribution};
+use super::fedavg::WeightedSum;
+use crate::tensor::TensorModel;
+use anyhow::Result;
+
+const BETA1: f64 = 0.9;
+const BETA2: f64 = 0.99;
+const TAU: f64 = 1e-3; // adaptivity floor, per the paper's defaults
+
+enum Variant {
+    Adam,
+    Yogi,
+    Adagrad,
+}
+
+struct AdaptiveState {
+    m: Vec<Vec<f32>>, // first moment per tensor
+    v: Vec<Vec<f32>>, // second moment per tensor
+}
+
+/// Shared implementation of the three adaptive rules.
+struct Adaptive {
+    variant: Variant,
+    server_lr: f64,
+    state: Option<AdaptiveState>,
+}
+
+impl Adaptive {
+    fn new(variant: Variant, server_lr: f64) -> Adaptive {
+        Adaptive { variant, server_lr, state: None }
+    }
+
+    fn step(
+        &mut self,
+        current: &TensorModel,
+        contributions: &[Contribution<'_>],
+        backend: &Backend,
+    ) -> Result<TensorModel> {
+        check_contributions(current, contributions)?;
+        let total: f64 = contributions.iter().map(|c| c.weight).sum();
+        let models: Vec<&TensorModel> = contributions.iter().map(|c| c.model).collect();
+        let coeffs: Vec<f64> = contributions.iter().map(|c| c.weight / total).collect();
+        let mean = WeightedSum::compute(&models, &coeffs, backend)?;
+
+        let state = self.state.get_or_insert_with(|| AdaptiveState {
+            m: current.tensors.iter().map(|t| vec![0.0; t.elem_count()]).collect(),
+            v: current.tensors.iter().map(|t| vec![0.0; t.elem_count()]).collect(),
+        });
+
+        let mut out = current.clone();
+        for ti in 0..out.tensor_count() {
+            let cur = &current.tensors[ti].data;
+            let mean_t = &mean.tensors[ti].data;
+            let m = &mut state.m[ti];
+            let v = &mut state.v[ti];
+            let dst = &mut out.tensors[ti].data;
+            for ei in 0..dst.len() {
+                let delta = (mean_t[ei] - cur[ei]) as f64;
+                m[ei] = (BETA1 * m[ei] as f64 + (1.0 - BETA1) * delta) as f32;
+                let d2 = delta * delta;
+                let vv = v[ei] as f64;
+                let nv = match self.variant {
+                    Variant::Adam => BETA2 * vv + (1.0 - BETA2) * d2,
+                    Variant::Yogi => vv - (1.0 - BETA2) * d2 * (vv - d2).signum(),
+                    Variant::Adagrad => vv + d2,
+                };
+                v[ei] = nv as f32;
+                dst[ei] =
+                    (cur[ei] as f64 + self.server_lr * m[ei] as f64 / (nv.sqrt() + TAU)) as f32;
+            }
+        }
+        Ok(out)
+    }
+}
+
+macro_rules! adaptive_rule {
+    ($name:ident, $variant:expr, $label:literal, $doc:literal) => {
+        #[doc = $doc]
+        pub struct $name(Adaptive);
+
+        impl $name {
+            pub fn new(server_lr: f64) -> $name {
+                $name(Adaptive::new($variant, server_lr))
+            }
+        }
+
+        impl AggregationRule for $name {
+            fn aggregate(
+                &mut self,
+                current: &TensorModel,
+                contributions: &[Contribution<'_>],
+                backend: &Backend,
+            ) -> Result<TensorModel> {
+                self.0.step(current, contributions, backend)
+            }
+
+            fn name(&self) -> &'static str {
+                $label
+            }
+        }
+    };
+}
+
+adaptive_rule!(FedAdam, Variant::Adam, "fedadam", "FedAdam server optimizer.");
+adaptive_rule!(FedYogi, Variant::Yogi, "fedyogi", "FedYogi server optimizer.");
+adaptive_rule!(
+    FedAdagrad,
+    Variant::Adagrad,
+    "fedadagrad",
+    "FedAdagrad server optimizer."
+);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelSpec;
+    use crate::util::Rng;
+
+    fn setup() -> (TensorModel, Vec<TensorModel>) {
+        let layout = ModelSpec::mlp(4, 2, 8).tensor_layout();
+        let mut rng = Rng::new(42);
+        let current = TensorModel::random_init(&layout, &mut rng);
+        let ms = (0..3).map(|_| TensorModel::random_init(&layout, &mut rng)).collect();
+        (current, ms)
+    }
+
+    fn run(rule: &mut dyn AggregationRule, rounds: usize) -> Vec<TensorModel> {
+        let (mut current, ms) = setup();
+        let mut outs = Vec::new();
+        for _ in 0..rounds {
+            let cs: Vec<Contribution> =
+                ms.iter().map(|m| Contribution { model: m, weight: 100.0 }).collect();
+            current = rule.aggregate(&current, &cs, &Backend::Sequential).unwrap();
+            outs.push(current.clone());
+        }
+        outs
+    }
+
+    #[test]
+    fn adaptive_rules_move_toward_the_mean() {
+        let (current, ms) = setup();
+        let cs: Vec<Contribution> =
+            ms.iter().map(|m| Contribution { model: m, weight: 1.0 }).collect();
+        let mean = super::super::FedAvg::new()
+            .aggregate(&current, &cs, &Backend::Sequential)
+            .unwrap();
+        for rule in [
+            &mut FedAdam::new(0.5) as &mut dyn AggregationRule,
+            &mut FedYogi::new(0.5),
+            &mut FedAdagrad::new(0.5),
+        ] {
+            let cs: Vec<Contribution> =
+                ms.iter().map(|m| Contribution { model: m, weight: 1.0 }).collect();
+            let out = rule.aggregate(&current, &cs, &Backend::Sequential).unwrap();
+            // Distance to the fedavg mean must shrink vs. the start.
+            let before = current.max_abs_diff(&mean);
+            let after = out.max_abs_diff(&mean);
+            assert!(after < before, "{}: {after} !< {before}", rule.name());
+        }
+    }
+
+    #[test]
+    fn moment_state_persists_across_rounds() {
+        let mut rule = FedAdam::new(0.1);
+        let outs = run(&mut rule, 3);
+        // Repeated identical pseudo-gradients ⇒ momentum builds ⇒ the
+        // step size (round-over-round movement) must change.
+        let d1 = outs[0].max_abs_diff(&outs[1]);
+        let d2 = outs[1].max_abs_diff(&outs[2]);
+        assert!(d1 > 0.0 && d2 > 0.0);
+        assert!((d1 - d2).abs() > 1e-9, "momentum had no effect");
+    }
+
+    #[test]
+    fn backends_agree_for_adaptive_rules() {
+        use crate::util::ThreadPool;
+        use std::sync::Arc;
+        let (current, ms) = setup();
+        let pool = Arc::new(ThreadPool::new(3));
+        for (mut a, mut b) in [
+            (FedAdam::new(0.3), FedAdam::new(0.3)),
+        ] {
+            let cs: Vec<Contribution> =
+                ms.iter().map(|m| Contribution { model: m, weight: 2.0 }).collect();
+            let seq = a.aggregate(&current, &cs, &Backend::Sequential).unwrap();
+            let cs: Vec<Contribution> =
+                ms.iter().map(|m| Contribution { model: m, weight: 2.0 }).collect();
+            let par = b
+                .aggregate(&current, &cs, &Backend::Parallel(Arc::clone(&pool)))
+                .unwrap();
+            assert_eq!(seq, par);
+        }
+    }
+
+    #[test]
+    fn names_are_stable() {
+        assert_eq!(FedAdam::new(0.1).name(), "fedadam");
+        assert_eq!(FedYogi::new(0.1).name(), "fedyogi");
+        assert_eq!(FedAdagrad::new(0.1).name(), "fedadagrad");
+    }
+}

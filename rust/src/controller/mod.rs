@@ -1,0 +1,683 @@
+//! The federation controller — "the first-class citizen of the system".
+//!
+//! Owns the community model, the learner registry, the model store, the
+//! aggregation rule/backend, and the round lifecycle state. It is exposed
+//! to the network as a [`Service`] handling the Appendix-B RPCs
+//! (`Register`, `MarkTaskCompleted`, heartbeats, …); the round-driving
+//! logic lives in [`scheduling`] (sync / semi-sync / async protocols).
+
+pub mod aggregation;
+pub mod scheduling;
+pub mod selector;
+pub mod store;
+
+use crate::config::{FederationEnv, Protocol, SecureSpec};
+use crate::metrics::{FedOp, OpMetrics};
+use crate::net::{ClientConn, Psk, Service};
+use crate::proto::{Message, ModelProto, TaskMeta};
+use crate::tensor::{ByteOrder, DType, TensorModel};
+use crate::util::{log_debug, log_info, Stopwatch, ThreadPool};
+use aggregation::{Backend, Contribution};
+use anyhow::{bail, Context, Result};
+use selector::Selector;
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+use store::{ModelStore, StoredModel};
+
+/// A registered learner as seen by the controller.
+pub struct LearnerHandle {
+    pub id: String,
+    pub endpoint: String,
+    pub num_samples: usize,
+    pub index: usize,
+    conn: Mutex<Option<Box<dyn ClientConn>>>,
+}
+
+impl LearnerHandle {
+    pub fn new(id: String, endpoint: String, num_samples: usize, index: usize) -> LearnerHandle {
+        LearnerHandle { id, endpoint, num_samples, index, conn: Mutex::new(None) }
+    }
+
+    /// RPC to this learner, (re)connecting lazily. The per-learner lock
+    /// serializes concurrent calls onto one connection.
+    pub fn rpc(&self, psk: Psk, msg: &Message) -> Result<Message> {
+        self.rpc_timed(psk, msg, std::time::Instant::now()).map(|(m, _)| m)
+    }
+
+    /// RPC that also reports *when* (relative to `origin`) the send
+    /// (dispatch) phase finished, separate from the reply wait.
+    pub fn rpc_timed(
+        &self,
+        psk: Psk,
+        msg: &Message,
+        origin: std::time::Instant,
+    ) -> Result<(Message, Duration)> {
+        self.rpc_inner(psk, RawOrMsg::Msg(msg), origin)
+    }
+
+    /// RPC with pre-encoded request bytes (broadcast fast path: the bytes
+    /// are shared across all learners of a round — §Perf).
+    pub fn rpc_raw_timed(
+        &self,
+        psk: Psk,
+        bytes: &[u8],
+        origin: std::time::Instant,
+    ) -> Result<(Message, Duration)> {
+        self.rpc_inner(psk, RawOrMsg::Raw(bytes), origin)
+    }
+
+    fn rpc_inner(
+        &self,
+        psk: Psk,
+        req: RawOrMsg<'_>,
+        origin: std::time::Instant,
+    ) -> Result<(Message, Duration)> {
+        let mut guard = self.conn.lock().unwrap();
+        if guard.is_none() {
+            *guard = Some(
+                crate::net::connect(&self.endpoint, psk)
+                    .with_context(|| format!("connecting to learner {}", self.id))?,
+            );
+        }
+        let conn = guard.as_mut().unwrap();
+        let send_res = match req {
+            RawOrMsg::Msg(m) => conn.send(m),
+            RawOrMsg::Raw(b) => conn.send_raw(b),
+        };
+        let sent_at = origin.elapsed();
+        let result = send_res.and_then(|_| conn.recv());
+        match result {
+            Ok(reply) => Ok((reply, sent_at)),
+            Err(e) => {
+                *guard = None; // force reconnect next time
+                Err(e)
+            }
+        }
+    }
+}
+
+enum RawOrMsg<'a> {
+    Msg(&'a Message),
+    Raw(&'a [u8]),
+}
+
+/// Completion record delivered by `MarkTaskCompleted`.
+struct RoundState {
+    #[allow(dead_code)]
+    round: u64,
+    expecting: HashSet<String>,
+    arrived: Vec<String>,
+}
+
+struct CtrlState {
+    community: Option<TensorModel>,
+    community_round: u64,
+    rule: Box<dyn aggregation::AggregationRule>,
+    store: Box<dyn ModelStore>,
+    learners: Vec<Arc<LearnerHandle>>,
+    last_participation: HashMap<String, u64>,
+    /// Round each learner's current task was dispatched at (staleness).
+    dispatch_round: HashMap<String, u64>,
+    round: Option<RoundState>,
+    /// Async protocol: community updates applied so far.
+    async_updates: u64,
+    /// Async protocol: learners with a task currently in flight.
+    outstanding: HashSet<String>,
+}
+
+/// Injected XLA aggregation kernel (compiled via the runtime module).
+type XlaAggFn = Arc<dyn Fn(&[&TensorModel], &[f64]) -> Result<TensorModel> + Send + Sync>;
+
+/// The federation controller.
+pub struct Controller {
+    pub env: FederationEnv,
+    pub psk: Psk,
+    backend: Backend,
+    state: Mutex<CtrlState>,
+    round_cv: Condvar,
+    metrics: Mutex<OpMetrics>,
+    dispatch_pool: ThreadPool,
+    shutdown: AtomicBool,
+    xla_slot: Mutex<Option<XlaAggFn>>,
+}
+
+impl Controller {
+    pub fn new(env: FederationEnv, psk: Psk) -> Result<Arc<Controller>> {
+        env.validate()?;
+        if env.secure != SecureSpec::None && !matches!(env.transport, crate::config::TransportKind::InProc) {
+            bail!("secure aggregation is only wired for in-process simulation (see DESIGN.md)");
+        }
+        let backend = Backend::from_spec(&env.aggregation);
+        let rule = aggregation::rule_from_spec(&env.aggregation)?;
+        let dispatch_threads = env.learners.clamp(1, 16);
+        Ok(Arc::new(Controller {
+            env,
+            psk,
+            backend,
+            state: Mutex::new(CtrlState {
+                community: None,
+                community_round: 0,
+                rule,
+                store: Box::new(store::InMemoryStore::new()),
+                learners: Vec::new(),
+                last_participation: HashMap::new(),
+                dispatch_round: HashMap::new(),
+                round: None,
+                async_updates: 0,
+                outstanding: HashSet::new(),
+            }),
+            round_cv: Condvar::new(),
+            metrics: Mutex::new(OpMetrics::new()),
+            dispatch_pool: ThreadPool::new(dispatch_threads),
+            shutdown: AtomicBool::new(false),
+            xla_slot: Mutex::new(None),
+        }))
+    }
+
+    /// Replace the model store (e.g. [`store::OnDiskStore`]).
+    pub fn set_store(&self, s: Box<dyn ModelStore>) {
+        self.state.lock().unwrap().store = s;
+    }
+
+    /// Wire the XLA aggregation backend (injected by `runtime` after the
+    /// compiled fedavg kernel is loaded; until then the Xla config choice
+    /// falls back to Sequential).
+    pub fn set_xla_backend(&self, f: XlaAggFn) {
+        *self.xla_slot.lock().unwrap() = Some(f);
+    }
+
+    /// Effective backend for aggregation (resolves the Xla slot).
+    fn effective_backend(&self) -> Backend {
+        if self.env.aggregation.backend == crate::config::AggregationBackend::Xla {
+            if let Some(f) = self.xla_slot.lock().unwrap().clone() {
+                return Backend::Xla(f);
+            }
+        }
+        self.backend.clone()
+    }
+
+    pub fn is_shutdown(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst)
+    }
+
+    /// Registered learner count.
+    pub fn learner_count(&self) -> usize {
+        self.state.lock().unwrap().learners.len()
+    }
+
+    /// Wait until `n` learners registered (driver startup barrier).
+    pub fn wait_for_learners(&self, n: usize, timeout: Duration) -> Result<()> {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut state = self.state.lock().unwrap();
+        while state.learners.len() < n {
+            let remaining = deadline
+                .checked_duration_since(std::time::Instant::now())
+                .ok_or_else(|| anyhow::anyhow!("timeout waiting for {n} learners"))?;
+            let (s, _) = self.round_cv.wait_timeout(state, remaining).unwrap();
+            state = s;
+        }
+        Ok(())
+    }
+
+    /// Snapshot of the community model (initialized by `ShipModel`).
+    pub fn community(&self) -> Option<(TensorModel, u64)> {
+        let s = self.state.lock().unwrap();
+        s.community.clone().map(|m| (m, s.community_round))
+    }
+
+    /// Set the community model directly (driver-local initialization).
+    pub fn ship_model(&self, model: TensorModel) {
+        let mut s = self.state.lock().unwrap();
+        s.community = Some(model);
+        log_info("controller", "community model initialized");
+    }
+
+    /// Register a learner directly (in-proc driver path).
+    pub fn register_learner(&self, id: &str, endpoint: &str, num_samples: usize) -> usize {
+        let mut s = self.state.lock().unwrap();
+        let index = s.learners.len();
+        s.learners.push(Arc::new(LearnerHandle::new(
+            id.to_string(),
+            endpoint.to_string(),
+            num_samples,
+            index,
+        )));
+        log_debug("controller", &format!("registered learner {id} at {endpoint} (#{index})"));
+        self.round_cv.notify_all();
+        index
+    }
+
+    fn learners_snapshot(&self) -> Vec<Arc<LearnerHandle>> {
+        self.state.lock().unwrap().learners.clone()
+    }
+
+    /// Metrics snapshot.
+    pub fn metrics(&self) -> OpMetrics {
+        self.metrics.lock().unwrap().clone()
+    }
+
+    pub(crate) fn record(&self, op: FedOp, d: Duration) {
+        self.metrics.lock().unwrap().record(op, d);
+    }
+
+    // ---- round plumbing used by `scheduling` -------------------------
+
+    /// Open a round: note who we expect and stamp dispatch rounds.
+    fn open_round(&self, round: u64, expecting: &[String]) {
+        let mut s = self.state.lock().unwrap();
+        for id in expecting {
+            s.dispatch_round.insert(id.clone(), round);
+            s.last_participation.insert(id.clone(), round);
+        }
+        s.round = Some(RoundState {
+            round,
+            expecting: expecting.iter().cloned().collect(),
+            arrived: Vec::new(),
+        });
+    }
+
+    /// Block until all expected completions arrived or `timeout` elapsed.
+    /// Returns the learner ids that did arrive.
+    fn wait_round_completions(&self, timeout: Duration) -> Vec<String> {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut s = self.state.lock().unwrap();
+        loop {
+            let done = match &s.round {
+                Some(r) => r.arrived.len() >= r.expecting.len(),
+                None => true,
+            };
+            if done {
+                break;
+            }
+            let Some(remaining) = deadline.checked_duration_since(std::time::Instant::now())
+            else {
+                break;
+            };
+            let (guard, _) = self.round_cv.wait_timeout(s, remaining).unwrap();
+            s = guard;
+        }
+        let mut arrived = s.round.as_ref().map(|r| r.arrived.clone()).unwrap_or_default();
+        s.round = None;
+        // Sort so aggregation order (and thus fp rounding) is independent
+        // of completion timing — parallel and sequential runs of the same
+        // federation produce bitwise-identical community models.
+        arrived.sort();
+        arrived
+    }
+
+    /// Aggregate `learner_ids`' latest stored models into a new community
+    /// model (T4–T7). Returns the new model.
+    fn aggregate_from_store(&self, learner_ids: &[String], round: u64) -> Result<TensorModel> {
+        let backend = self.effective_backend();
+        let mut s = self.state.lock().unwrap();
+        let current = s
+            .community
+            .clone()
+            .ok_or_else(|| anyhow::anyhow!("no community model shipped"))?;
+        let selected = s.store.select_latest(learner_ids)?;
+        if selected.is_empty() {
+            bail!("round {round}: no completed learner models to aggregate");
+        }
+        let contributions: Vec<Contribution> = selected
+            .iter()
+            .map(|m| Contribution {
+                model: &m.model,
+                weight: m.meta.num_samples.max(1) as f64,
+            })
+            .collect();
+        let new_model = s.rule.aggregate(&current, &contributions, &backend)?;
+        s.community = Some(new_model.clone());
+        s.community_round = round;
+        // Keep only the freshest model per learner (paper's in-memory
+        // assumption; lineage stores are opt-in via set_store + evict).
+        s.store.evict(1)?;
+        Ok(new_model)
+    }
+
+    /// Async protocol: mix one completed local model into the community
+    /// model immediately, discounted by staleness (Stripelis 2022b).
+    fn async_mix(&self, entry: &StoredModel, alpha: f64) -> Result<u64> {
+        let backend = self.effective_backend();
+        let mut s = self.state.lock().unwrap();
+        let current = s
+            .community
+            .clone()
+            .ok_or_else(|| anyhow::anyhow!("no community model shipped"))?;
+        let dispatched = s.dispatch_round.get(&entry.learner_id).copied().unwrap_or(0);
+        let staleness = s.community_round.saturating_sub(dispatched) as f64;
+        let w = (1.0 + staleness).powf(-alpha) * 0.5;
+        let models = [&current, &entry.model];
+        let coeffs = [1.0 - w, w];
+        let mixed =
+            aggregation::WeightedSum::compute(&models, &coeffs, &backend)?;
+        s.community = Some(mixed);
+        s.community_round += 1;
+        s.async_updates += 1;
+        let updates = s.async_updates;
+        // Next task for this learner is dispatched against the new round,
+        // and the learner is idle until the scheduler re-dispatches.
+        let community_round = s.community_round;
+        s.dispatch_round.insert(entry.learner_id.clone(), community_round);
+        s.outstanding.remove(&entry.learner_id);
+        Ok(updates)
+    }
+
+    /// Number of async community updates applied so far.
+    pub fn async_updates(&self) -> u64 {
+        self.state.lock().unwrap().async_updates
+    }
+
+    /// Async protocol: does this learner need a fresh task?
+    pub(crate) fn learner_needs_task(&self, id: &str) -> bool {
+        !self.state.lock().unwrap().outstanding.contains(id)
+    }
+
+    /// Async protocol: note that a task is in flight for this learner.
+    pub(crate) fn mark_task_outstanding(&self, id: &str) {
+        self.state.lock().unwrap().outstanding.insert(id.to_string());
+    }
+
+    /// Dispatch one message to `targets` concurrently. The message is
+    /// serialized ONCE and the same bytes fan out to every learner
+    /// (§Perf: dispatch used to re-encode the full model per learner).
+    /// Returns `(dispatch_time, per-learner results)` where
+    /// `dispatch_time` is the wall-clock until every request had been
+    /// submitted (the paper's "task dispatch time"); the results include
+    /// the full reply wait. Used for both train (fire-and-forget + Ack)
+    /// and eval (blocking reply) dispatches.
+    fn broadcast(
+        &self,
+        targets: &[Arc<LearnerHandle>],
+        msg: &Message,
+    ) -> (Duration, Vec<(String, Result<Message>)>) {
+        let psk = self.psk;
+        let origin = std::time::Instant::now();
+        let encoded = msg.encode();
+        let results = self.dispatch_pool.parallel_map(targets.len(), |i| {
+            let h = &targets[i];
+            h.rpc_raw_timed(psk, &encoded, origin)
+        });
+        // Dispatch completes when the slowest send has finished (offsets
+        // are measured from `origin`, so bounded-pool queueing delay is
+        // included — as it is in every framework the paper measures).
+        let dispatch: Duration = results
+            .iter()
+            .filter_map(|r| r.as_ref().ok().map(|(_, sent_at)| *sent_at))
+            .max()
+            .unwrap_or(Duration::ZERO);
+        let out = targets
+            .iter()
+            .zip(results)
+            .map(|(h, r)| (h.id.clone(), r.map(|(reply, _)| reply)))
+            .collect();
+        (dispatch, out)
+    }
+
+    /// Select round participants per the env's participation policy.
+    fn select_participants(&self, rng: &mut crate::util::Rng) -> Vec<Arc<LearnerHandle>> {
+        let learners = self.learners_snapshot();
+        let ids: Vec<String> = learners.iter().map(|l| l.id.clone()).collect();
+        let last = self.state.lock().unwrap().last_participation.clone();
+        let chosen = Selector::from_participation(self.env.participation).select(&ids, &last, rng);
+        let set: HashSet<&String> = chosen.iter().collect();
+        learners.into_iter().filter(|l| set.contains(&l.id)).collect()
+    }
+}
+
+impl Service for Controller {
+    fn handle(&self, msg: Message) -> Message {
+        if self.is_shutdown() {
+            return Message::Error { detail: "controller is shut down".into() };
+        }
+        match msg {
+            Message::Register { learner_id, host, port, num_samples } => {
+                // `host` may be a full endpoint (inproc://… or tcp://…)
+                // or a bare hostname + port pair.
+                let endpoint = if host.contains("://") {
+                    host
+                } else {
+                    format!("tcp://{host}:{port}")
+                };
+                let idx = self.register_learner(&learner_id, &endpoint, num_samples);
+                Message::RegisterAck { accepted: true, assigned_index: idx }
+            }
+            Message::ShipModel { model } => match model.to_model() {
+                Ok(m) => {
+                    self.ship_model(m);
+                    Message::Ack { task_id: 0, ok: true }
+                }
+                Err(e) => Message::Error { detail: format!("bad model: {e:#}") },
+            },
+            Message::MarkTaskCompleted { task_id, learner_id, model, meta } => {
+                match self.on_task_completed(task_id, learner_id, model, meta) {
+                    Ok(()) => Message::Ack { task_id, ok: true },
+                    Err(e) => Message::Error { detail: format!("{e:#}") },
+                }
+            }
+            Message::Heartbeat { .. } => Message::HeartbeatAck {
+                component: "controller".into(),
+                healthy: true,
+            },
+            Message::GetModel => {
+                let s = self.state.lock().unwrap();
+                match &s.community {
+                    Some(m) => Message::ModelReply {
+                        model: ModelProto::from_model(m, DType::F32, ByteOrder::Little),
+                        round: s.community_round,
+                    },
+                    None => Message::Error { detail: "no community model".into() },
+                }
+            }
+            Message::Shutdown => {
+                self.shutdown.store(true, Ordering::SeqCst);
+                self.round_cv.notify_all();
+                Message::Ack { task_id: 0, ok: true }
+            }
+            other => Message::Error { detail: format!("unexpected {}", other.kind()) },
+        }
+    }
+}
+
+impl Controller {
+    /// `MarkTaskCompleted` path: store the model (T4–T5) and either tick
+    /// the round barrier (sync/semi-sync) or mix immediately (async).
+    fn on_task_completed(
+        &self,
+        _task_id: u64,
+        learner_id: String,
+        model: ModelProto,
+        meta: TaskMeta,
+    ) -> Result<()> {
+        let sw = Stopwatch::start();
+        let decoded = model.to_model()?;
+        let decode_time = sw.elapsed();
+        self.record(FedOp::Serialization, decode_time);
+
+        let entry = StoredModel {
+            learner_id: learner_id.clone(),
+            round: self.state.lock().unwrap().community_round,
+            meta,
+            model: decoded,
+        };
+
+        match self.env.protocol {
+            Protocol::Asynchronous { staleness_alpha } => {
+                let sw = Stopwatch::start();
+                // Store (for inspection/metrics parity with sync).
+                {
+                    let mut s = self.state.lock().unwrap();
+                    let insert_sw = Stopwatch::start();
+                    s.store.insert(entry.clone())?;
+                    s.store.evict(1)?;
+                    drop(s);
+                    self.record(FedOp::StoreInsert, insert_sw.elapsed());
+                }
+                self.async_mix(&entry, staleness_alpha)?;
+                self.record(FedOp::Aggregation, sw.elapsed());
+                self.round_cv.notify_all();
+                Ok(())
+            }
+            _ => {
+                let mut s = self.state.lock().unwrap();
+                let insert_sw = Stopwatch::start();
+                s.store.insert(entry)?;
+                let insert_time = insert_sw.elapsed();
+                if let Some(r) = s.round.as_mut() {
+                    if r.expecting.contains(&learner_id)
+                        && !r.arrived.iter().any(|a| a == &learner_id)
+                    {
+                        r.arrived.push(learner_id);
+                    }
+                }
+                drop(s);
+                self.record(FedOp::StoreInsert, insert_time);
+                self.round_cv.notify_all();
+                Ok(())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{FederationEnv, ModelSpec};
+    use crate::util::Rng;
+
+    fn env() -> FederationEnv {
+        FederationEnv::builder("ctrl-test")
+            .learners(3)
+            .model(ModelSpec::mlp(4, 2, 8))
+            .build()
+    }
+
+    fn model(seed: u64) -> TensorModel {
+        let layout = ModelSpec::mlp(4, 2, 8).tensor_layout();
+        TensorModel::random_init(&layout, &mut Rng::new(seed))
+    }
+
+    #[test]
+    fn register_and_ship_via_service() {
+        let ctrl = Controller::new(env(), None).unwrap();
+        let reply = ctrl.handle(Message::Register {
+            learner_id: "l0".into(),
+            host: "inproc://l0".into(),
+            port: 0,
+            num_samples: 100,
+        });
+        assert_eq!(reply, Message::RegisterAck { accepted: true, assigned_index: 0 });
+        assert_eq!(ctrl.learner_count(), 1);
+
+        let m = model(1);
+        let reply = ctrl.handle(Message::ShipModel {
+            model: ModelProto::from_model(&m, DType::F32, ByteOrder::Little),
+        });
+        assert_eq!(reply, Message::Ack { task_id: 0, ok: true });
+        let (community, round) = ctrl.community().unwrap();
+        assert_eq!(round, 0);
+        assert!(community.max_abs_diff(&m) == 0.0);
+    }
+
+    #[test]
+    fn completion_barrier_counts_expected_only() {
+        let ctrl = Controller::new(env(), None).unwrap();
+        ctrl.ship_model(model(1));
+        ctrl.open_round(1, &["a".into(), "b".into()]);
+        // Unexpected learner does not tick the barrier.
+        let mp = ModelProto::from_model(&model(2), DType::F32, ByteOrder::Little);
+        ctrl.handle(Message::MarkTaskCompleted {
+            task_id: 1,
+            learner_id: "zzz".into(),
+            model: mp.clone(),
+            meta: TaskMeta { num_samples: 10, ..Default::default() },
+        });
+        ctrl.handle(Message::MarkTaskCompleted {
+            task_id: 1,
+            learner_id: "a".into(),
+            model: mp.clone(),
+            meta: TaskMeta { num_samples: 10, ..Default::default() },
+        });
+        // Duplicate completion counted once.
+        ctrl.handle(Message::MarkTaskCompleted {
+            task_id: 1,
+            learner_id: "a".into(),
+            model: mp.clone(),
+            meta: TaskMeta { num_samples: 10, ..Default::default() },
+        });
+        let arrived = ctrl.wait_round_completions(Duration::from_millis(50));
+        assert_eq!(arrived, vec!["a".to_string()]); // timeout path
+    }
+
+    #[test]
+    fn aggregate_from_store_updates_community() {
+        let ctrl = Controller::new(env(), None).unwrap();
+        ctrl.ship_model(model(1));
+        let mp_a = ModelProto::from_model(&model(2), DType::F32, ByteOrder::Little);
+        let mp_b = ModelProto::from_model(&model(3), DType::F32, ByteOrder::Little);
+        ctrl.open_round(1, &["a".into(), "b".into()]);
+        for (id, mp) in [("a", mp_a), ("b", mp_b)] {
+            ctrl.handle(Message::MarkTaskCompleted {
+                task_id: 1,
+                learner_id: id.into(),
+                model: mp,
+                meta: TaskMeta { num_samples: 100, ..Default::default() },
+            });
+        }
+        let arrived = ctrl.wait_round_completions(Duration::from_secs(1));
+        assert_eq!(arrived.len(), 2);
+        let new_model = ctrl.aggregate_from_store(&arrived, 1).unwrap();
+        let (community, round) = ctrl.community().unwrap();
+        assert_eq!(round, 1);
+        assert_eq!(community, new_model);
+        // Mean of the two models.
+        let expect = 0.5 * model(2).tensors[0].data[0] + 0.5 * model(3).tensors[0].data[0];
+        assert!((new_model.tensors[0].data[0] - expect).abs() < 1e-5);
+    }
+
+    #[test]
+    fn async_mix_discounts_stale_updates() {
+        let e = FederationEnv::builder("async-test")
+            .learners(2)
+            .model(ModelSpec::mlp(4, 2, 8))
+            .protocol(Protocol::Asynchronous { staleness_alpha: 1.0 })
+            .build();
+        let ctrl = Controller::new(e, None).unwrap();
+        let base = model(1);
+        ctrl.ship_model(base.clone());
+        let update = model(2);
+        let mp = ModelProto::from_model(&update, DType::F32, ByteOrder::Little);
+        // Fresh update (staleness 0): w = 0.5.
+        ctrl.handle(Message::MarkTaskCompleted {
+            task_id: 1,
+            learner_id: "a".into(),
+            model: mp.clone(),
+            meta: TaskMeta { num_samples: 100, ..Default::default() },
+        });
+        let (c1, r1) = ctrl.community().unwrap();
+        assert_eq!(r1, 1);
+        let expect = 0.5 * base.tensors[0].data[0] + 0.5 * update.tensors[0].data[0];
+        assert!((c1.tensors[0].data[0] - expect).abs() < 1e-5);
+        assert_eq!(ctrl.async_updates(), 1);
+    }
+
+    #[test]
+    fn shutdown_rejects_further_messages() {
+        let ctrl = Controller::new(env(), None).unwrap();
+        assert_eq!(ctrl.handle(Message::Shutdown), Message::Ack { task_id: 0, ok: true });
+        assert!(matches!(
+            ctrl.handle(Message::GetModel),
+            Message::Error { .. }
+        ));
+        assert!(ctrl.is_shutdown());
+    }
+
+    #[test]
+    fn secure_over_tcp_rejected() {
+        let mut e = env();
+        e.secure = SecureSpec::Masking;
+        e.transport = crate::config::TransportKind::Tcp { base_port: 45000 };
+        assert!(Controller::new(e, None).is_err());
+    }
+}

@@ -1,0 +1,149 @@
+//! Asynchronous protocol (Table 1's MetisFL-only row).
+//!
+//! No round barrier: the controller dispatches a training task to every
+//! learner once; whenever a learner finishes, `MarkTaskCompleted`
+//! immediately mixes its model into the community model (discounted by
+//! staleness — see [`Controller::async_mix`]) and the scheduler hands
+//! that learner a fresh task against the updated community model.
+//!
+//! The paper reports async progress in "community update requests"; we
+//! group `learners` consecutive community updates into one
+//! [`RoundReport`] so async sessions remain comparable to sync rounds.
+
+use super::super::Controller;
+use crate::metrics::{FedOp, RoundReport};
+use crate::proto::{Message, ModelProto, TaskSpec};
+use crate::tensor::{ByteOrder, DType};
+use crate::util::{log_warn, Rng, Stopwatch};
+use anyhow::{bail, Result};
+use std::time::Duration;
+
+/// Drive an async session producing `rounds` reports (each covering
+/// `learners` community updates).
+pub fn run_async_session(
+    ctrl: &Controller,
+    rounds: usize,
+    rng: &mut Rng,
+) -> Result<Vec<RoundReport>> {
+    let participants = ctrl.select_participants(rng);
+    if participants.is_empty() {
+        bail!("async session: no registered learners");
+    }
+    let n = participants.len();
+    let spec = TaskSpec {
+        epochs: ctrl.env.local_epochs,
+        batch_size: ctrl.env.batch_size,
+        learning_rate: ctrl.env.learning_rate,
+        step_budget: 0,
+    };
+
+    let mut reports = Vec::with_capacity(rounds);
+    let updates_target = (rounds * n) as u64;
+    let start_updates = ctrl.async_updates();
+    let mut dispatched_round: u64 = 0;
+
+    // Initial fan-out.
+    let (community, _) = ctrl
+        .community()
+        .ok_or_else(|| anyhow::anyhow!("async session: community model not initialized"))?;
+    let proto = ModelProto::from_model(&community, DType::F32, ByteOrder::Little);
+    let first_sw = Stopwatch::start();
+    let initial_task = Message::RunTask {
+        task_id: dispatched_round,
+        round: dispatched_round,
+        model: proto,
+        spec: spec.clone(),
+    };
+    let (dispatch_time, acks) = ctrl.broadcast(&participants, &initial_task);
+    drop(initial_task);
+    ctrl.record(FedOp::TrainDispatch, dispatch_time);
+    let mut any_ok = false;
+    for (id, a) in &acks {
+        if a.is_ok() {
+            ctrl.mark_task_outstanding(id);
+            any_ok = true;
+        }
+    }
+    if !any_ok {
+        bail!("async session: every initial dispatch failed");
+    }
+
+    // Re-dispatch loop: poll completed counts; when a learner finishes,
+    // its handle becomes idle. We track idleness via a per-learner
+    // outstanding flag updated from completion deltas.
+    let deadline = std::time::Instant::now()
+        + Duration::from_millis(ctrl.env.task_timeout_ms) * (rounds as u32 + 1);
+    let mut report_sw = Stopwatch::start();
+    let mut last_seen = start_updates;
+    while ctrl.async_updates() - start_updates < updates_target {
+        if std::time::Instant::now() > deadline {
+            log_warn("async", "session deadline exceeded; stopping early");
+            break;
+        }
+        let updates = ctrl.async_updates();
+        if updates > last_seen {
+            // One or more learners completed; hand each a fresh task.
+            // Identify idle learners as those whose dispatch_round is
+            // behind the community round (set by async_mix).
+            for h in &participants {
+                let needs_task = ctrl.learner_needs_task(&h.id);
+                if needs_task {
+                    let (community, cround) = ctrl.community().unwrap();
+                    let proto =
+                        ModelProto::from_model(&community, DType::F32, ByteOrder::Little);
+                    dispatched_round = cround;
+                    let sw = Stopwatch::start();
+                    let r = h.rpc(
+                        ctrl.psk,
+                        &Message::RunTask {
+                            task_id: dispatched_round,
+                            round: dispatched_round,
+                            model: proto,
+                            spec: spec.clone(),
+                        },
+                    );
+                    ctrl.record(FedOp::TrainDispatch, sw.elapsed());
+                    if let Err(e) = r {
+                        log_warn("async", &format!("{}: re-dispatch failed: {e:#}", h.id));
+                    } else {
+                        ctrl.mark_task_outstanding(&h.id);
+                    }
+                }
+            }
+            last_seen = updates;
+        } else {
+            std::thread::sleep(Duration::from_micros(200));
+        }
+
+        // Emit a report every `n` community updates.
+        let done = ctrl.async_updates() - start_updates;
+        while (reports.len() + 1) * n <= done as usize {
+            let elapsed = report_sw.lap();
+            let agg_mean = ctrl.metrics().mean(FedOp::Aggregation);
+            reports.push(RoundReport {
+                round: reports.len() as u64 + 1,
+                participants: n,
+                completed: n,
+                community_eval_loss: None,
+                train_dispatch: ctrl.metrics().mean(FedOp::TrainDispatch),
+                train_round: elapsed,
+                aggregation: agg_mean,
+                eval_dispatch: Duration::ZERO,
+                eval_round: Duration::ZERO,
+                federation_round: elapsed,
+            });
+            ctrl.record(FedOp::FederationRound, elapsed);
+        }
+    }
+    if reports.is_empty() {
+        bail!("async session produced no community updates");
+    }
+    while reports.len() < rounds {
+        // Deadline hit: pad with the last observed cadence so callers see
+        // how far the session got.
+        let last = reports.last().unwrap().clone();
+        reports.push(RoundReport { round: last.round + 1, completed: 0, ..last });
+    }
+    let _ = first_sw;
+    Ok(reports)
+}

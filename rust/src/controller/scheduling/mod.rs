@@ -1,0 +1,38 @@
+//! Round schedulers: synchronous, semi-synchronous, asynchronous.
+//!
+//! The paper's Table 1 highlights protocol support as a MetisFL
+//! differentiator: synchronous (plus the semi-synchronous variant of
+//! Stripelis et al. 2022b) and asynchronous execution. Each scheduler
+//! drives the controller through the Fig.-1 timeline and fills a
+//! [`RoundReport`] with the per-operation timings the evaluation plots.
+
+pub mod asynchronous;
+pub mod semi_sync;
+pub mod sync;
+
+pub use asynchronous::run_async_session;
+pub use semi_sync::run_semi_sync_round;
+pub use sync::run_sync_round;
+
+use super::Controller;
+use crate::config::Protocol;
+use crate::metrics::RoundReport;
+use crate::util::Rng;
+use anyhow::Result;
+
+/// Dispatch to the protocol configured in the controller's env.
+///
+/// For sync / semi-sync this runs exactly one federation round. For the
+/// async protocol one "round" is defined (as in the paper's community
+/// update requests) as `learners` community updates; see
+/// [`run_async_session`] to drive the whole session at once.
+pub fn run_round(ctrl: &Controller, round: u64, rng: &mut Rng) -> Result<RoundReport> {
+    match ctrl.env.protocol {
+        Protocol::Synchronous => run_sync_round(ctrl, round, rng),
+        Protocol::SemiSynchronous { lambda } => run_semi_sync_round(ctrl, round, lambda, rng),
+        Protocol::Asynchronous { .. } => {
+            let mut reports = run_async_session(ctrl, 1, rng)?;
+            Ok(reports.remove(0))
+        }
+    }
+}

@@ -1,0 +1,50 @@
+//! Semi-synchronous rounds (Stripelis, Thompson & Ambite, 2022b).
+//!
+//! Instead of every learner completing a fixed number of epochs, each
+//! learner trains for a *step budget* proportional to the hyperparameter
+//! `λ` and then synchronizes. Fast and slow learners thus finish at
+//! roughly the same wall-clock time, removing the straggler tail that
+//! plain synchronous FedAvg pays every round. The controller-side flow
+//! is otherwise identical to the synchronous scheduler, so the round
+//! reuses [`super::sync::run_round_with_budget`].
+
+use super::super::Controller;
+use crate::metrics::RoundReport;
+use crate::util::Rng;
+use anyhow::Result;
+
+/// Steps per unit λ: one local epoch's worth of batches.
+fn budget_for(ctrl: &Controller, lambda: f64) -> usize {
+    let steps_per_epoch =
+        ctrl.env.samples_per_learner.div_ceil(ctrl.env.batch_size).max(1);
+    ((lambda * steps_per_epoch as f64).round() as usize).max(1)
+}
+
+pub fn run_semi_sync_round(
+    ctrl: &Controller,
+    round: u64,
+    lambda: f64,
+    rng: &mut Rng,
+) -> Result<RoundReport> {
+    let budget = budget_for(ctrl, lambda);
+    super::sync::run_round_with_budget(ctrl, round, budget, rng)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{FederationEnv, ModelSpec};
+
+    #[test]
+    fn budget_scales_with_lambda_and_floors_at_one() {
+        let env = FederationEnv::builder("t")
+            .model(ModelSpec::mlp(4, 2, 8))
+            .samples_per_learner(100)
+            .batch_size(10)
+            .build();
+        let ctrl = crate::controller::Controller::new(env, None).unwrap();
+        assert_eq!(budget_for(&ctrl, 1.0), 10);
+        assert_eq!(budget_for(&ctrl, 2.5), 25);
+        assert_eq!(budget_for(&ctrl, 0.001), 1);
+    }
+}

@@ -1,0 +1,139 @@
+//! Synchronous FedAvg rounds (the paper's evaluation protocol, §4.2).
+//!
+//! Timeline (Fig. 1): select participants → dispatch train tasks
+//! (async callbacks, acked) → barrier on `MarkTaskCompleted` → store /
+//! select / aggregate → dispatch eval tasks → collect evaluations.
+
+use super::super::Controller;
+use crate::metrics::{FedOp, RoundReport};
+use crate::proto::{Message, ModelProto, TaskSpec};
+use crate::tensor::{ByteOrder, DType};
+use crate::util::{log_debug, log_warn, Rng, Stopwatch};
+use anyhow::{bail, Result};
+use std::time::Duration;
+
+pub fn run_sync_round(ctrl: &Controller, round: u64, rng: &mut Rng) -> Result<RoundReport> {
+    run_round_with_budget(ctrl, round, 0, rng)
+}
+
+/// Shared implementation: `step_budget == 0` → plain sync (train by
+/// epochs); `> 0` → semi-sync (train by step budget).
+pub(crate) fn run_round_with_budget(
+    ctrl: &Controller,
+    round: u64,
+    step_budget: usize,
+    rng: &mut Rng,
+) -> Result<RoundReport> {
+    let round_sw = Stopwatch::start();
+    let participants = ctrl.select_participants(rng);
+    if participants.is_empty() {
+        bail!("round {round}: no registered learners");
+    }
+    let (community, _) = ctrl
+        .community()
+        .ok_or_else(|| anyhow::anyhow!("round {round}: community model not initialized"))?;
+
+    // Serialize the community model once per round (tensor-as-bytes, §3).
+    let ser_sw = Stopwatch::start();
+    let model_proto = ModelProto::from_model(&community, DType::F32, ByteOrder::Little);
+    ctrl.record(FedOp::Serialization, ser_sw.elapsed());
+
+    let ids: Vec<String> = participants.iter().map(|h| h.id.clone()).collect();
+    ctrl.open_round(round, &ids);
+
+    // --- Train dispatch (RunTask, acked immediately; Fig. 9) ----------
+    let spec = TaskSpec {
+        epochs: ctrl.env.local_epochs,
+        batch_size: ctrl.env.batch_size,
+        learning_rate: ctrl.env.learning_rate,
+        step_budget,
+    };
+    let train_sw = Stopwatch::start();
+    let run_task =
+        Message::RunTask { task_id: round, round, model: model_proto, spec: spec.clone() };
+    let (dispatch_time, acks) = ctrl.broadcast(&participants, &run_task);
+    drop(run_task);
+    ctrl.record(FedOp::TrainDispatch, dispatch_time);
+    let mut dispatched = 0usize;
+    for (id, ack) in &acks {
+        match ack {
+            Ok(Message::Ack { ok: true, .. }) => dispatched += 1,
+            Ok(other) => log_warn("scheduler", &format!("{id}: unexpected ack {}", other.kind())),
+            Err(e) => log_warn("scheduler", &format!("{id}: train dispatch failed: {e:#}")),
+        }
+    }
+    if dispatched == 0 {
+        bail!("round {round}: every train dispatch failed");
+    }
+
+    // --- Training round barrier (T1–T4) -------------------------------
+    let arrived =
+        ctrl.wait_round_completions(Duration::from_millis(ctrl.env.task_timeout_ms));
+    let train_round_time = train_sw.elapsed();
+    ctrl.record(FedOp::TrainRound, train_round_time);
+    if arrived.len() < dispatched {
+        log_warn(
+            "scheduler",
+            &format!(
+                "round {round}: {}/{} learners completed before timeout",
+                arrived.len(),
+                dispatched
+            ),
+        );
+    }
+    if arrived.is_empty() {
+        bail!("round {round}: no learner completed training");
+    }
+
+    // --- Aggregation (T4–T7) -------------------------------------------
+    let agg_sw = Stopwatch::start();
+    let new_model = ctrl.aggregate_from_store(&arrived, round)?;
+    let aggregation_time = agg_sw.elapsed();
+    ctrl.record(FedOp::Aggregation, aggregation_time);
+    log_debug(
+        "scheduler",
+        &format!("round {round}: aggregated {} models in {:?}", arrived.len(), aggregation_time),
+    );
+
+    // --- Evaluation round (T7–T9, synchronous calls; Fig. 10) ----------
+    let ser_sw = Stopwatch::start();
+    let eval_proto = ModelProto::from_model(&new_model, DType::F32, ByteOrder::Little);
+    ctrl.record(FedOp::Serialization, ser_sw.elapsed());
+    let eval_sw = Stopwatch::start();
+    let eval_task = Message::EvaluateModel { task_id: round, round, model: eval_proto };
+    let (eval_dispatch, replies) = ctrl.broadcast(&participants, &eval_task);
+    drop(eval_task);
+    let eval_round_time = eval_sw.elapsed();
+    ctrl.record(FedOp::EvalDispatch, eval_dispatch);
+    ctrl.record(FedOp::EvalRound, eval_round_time);
+
+    let mut weighted_loss = 0.0f64;
+    let mut total_samples = 0usize;
+    for (id, reply) in &replies {
+        match reply {
+            Ok(Message::EvaluateModelReply { result, .. }) => {
+                weighted_loss += result.loss * result.num_samples as f64;
+                total_samples += result.num_samples;
+            }
+            Ok(other) => log_warn("scheduler", &format!("{id}: unexpected eval {}", other.kind())),
+            Err(e) => log_warn("scheduler", &format!("{id}: eval failed: {e:#}")),
+        }
+    }
+    let community_eval_loss =
+        (total_samples > 0).then(|| weighted_loss / total_samples as f64);
+
+    let federation_round = round_sw.elapsed();
+    ctrl.record(FedOp::FederationRound, federation_round);
+    Ok(RoundReport {
+        round,
+        participants: participants.len(),
+        completed: arrived.len(),
+        community_eval_loss,
+        train_dispatch: dispatch_time,
+        train_round: train_round_time,
+        aggregation: aggregation_time,
+        eval_dispatch,
+        eval_round: eval_round_time,
+        federation_round,
+    })
+}

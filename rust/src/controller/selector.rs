@@ -1,0 +1,120 @@
+//! Learner selection policies for training/evaluation rounds.
+//!
+//! The paper's stress tests run with all learners participating every
+//! round ([`Selector::All`]); [`Selector::RandomFraction`] implements the
+//! standard client-sampling used in cross-device settings, and
+//! [`Selector::FreshnessAware`] prefers learners whose last contribution
+//! is oldest (useful under the async protocol to balance staleness).
+
+use crate::util::Rng;
+use std::collections::HashMap;
+
+/// Selection policy.
+#[derive(Debug, Clone)]
+pub enum Selector {
+    /// Every registered learner (the paper's evaluation setting).
+    All,
+    /// A uniform random fraction in (0, 1], at least one learner.
+    RandomFraction(f64),
+    /// The `k` learners with the oldest last-participation round.
+    FreshnessAware { k: usize },
+}
+
+impl Selector {
+    /// Choose participant indices out of `learner_ids`.
+    ///
+    /// `last_round` maps learner id → last round it contributed (missing =
+    /// never). `rng` drives the random policy deterministically.
+    pub fn select(
+        &self,
+        learner_ids: &[String],
+        last_round: &HashMap<String, u64>,
+        rng: &mut Rng,
+    ) -> Vec<String> {
+        match self {
+            Selector::All => learner_ids.to_vec(),
+            Selector::RandomFraction(f) => {
+                let k = ((learner_ids.len() as f64 * f).ceil() as usize)
+                    .clamp(1, learner_ids.len());
+                rng.sample_indices(learner_ids.len(), k)
+                    .into_iter()
+                    .map(|i| learner_ids[i].clone())
+                    .collect()
+            }
+            Selector::FreshnessAware { k } => {
+                let k = (*k).clamp(1, learner_ids.len());
+                let mut scored: Vec<(u64, &String)> = learner_ids
+                    .iter()
+                    .map(|id| (last_round.get(id).copied().unwrap_or(0), id))
+                    .collect();
+                scored.sort_by(|a, b| a.0.cmp(&b.0).then_with(|| a.1.cmp(b.1)));
+                scored.into_iter().take(k).map(|(_, id)| id.clone()).collect()
+            }
+        }
+    }
+
+    /// Build from a participation fraction (env config convenience).
+    pub fn from_participation(p: f64) -> Selector {
+        if (p - 1.0).abs() < f64::EPSILON {
+            Selector::All
+        } else {
+            Selector::RandomFraction(p)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ids(n: usize) -> Vec<String> {
+        (0..n).map(|i| format!("l{i}")).collect()
+    }
+
+    #[test]
+    fn all_selects_everyone_in_order() {
+        let l = ids(5);
+        let sel = Selector::All.select(&l, &HashMap::new(), &mut Rng::new(0));
+        assert_eq!(sel, l);
+    }
+
+    #[test]
+    fn fraction_selects_expected_count_distinct() {
+        let l = ids(10);
+        let sel = Selector::RandomFraction(0.3).select(&l, &HashMap::new(), &mut Rng::new(1));
+        assert_eq!(sel.len(), 3);
+        let mut d = sel.clone();
+        d.sort();
+        d.dedup();
+        assert_eq!(d.len(), 3);
+        // At least one learner even for tiny fractions.
+        let sel = Selector::RandomFraction(0.01).select(&l, &HashMap::new(), &mut Rng::new(2));
+        assert_eq!(sel.len(), 1);
+    }
+
+    #[test]
+    fn fraction_is_deterministic_per_seed() {
+        let l = ids(20);
+        let a = Selector::RandomFraction(0.5).select(&l, &HashMap::new(), &mut Rng::new(9));
+        let b = Selector::RandomFraction(0.5).select(&l, &HashMap::new(), &mut Rng::new(9));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn freshness_prefers_oldest() {
+        let l = ids(4);
+        let mut last = HashMap::new();
+        last.insert("l0".to_string(), 10u64);
+        last.insert("l1".to_string(), 2);
+        last.insert("l2".to_string(), 7);
+        // l3 never participated → round 0 → first choice.
+        let sel = Selector::FreshnessAware { k: 2 }.select(&l, &last, &mut Rng::new(0));
+        assert_eq!(sel, vec!["l3".to_string(), "l1".to_string()]);
+    }
+
+    #[test]
+    fn from_participation_maps_one_to_all() {
+        assert!(matches!(Selector::from_participation(1.0), Selector::All));
+        assert!(matches!(Selector::from_participation(0.5), Selector::RandomFraction(_)));
+    }
+}

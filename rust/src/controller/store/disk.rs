@@ -1,0 +1,197 @@
+//! On-disk model store (§5 future work: "different model stores (e.g.
+//! distributed key-value or on-disk model stores)").
+//!
+//! Each entry is one file `<dir>/<learner>/<round>.model` containing the
+//! wire encoding of the model (`ModelProto`) prefixed by a small metadata
+//! record. An in-memory index mirrors the directory so `latest()` is one
+//! file read; `insert()` is one file write.
+
+use super::{ModelStore, StoredModel};
+use crate::proto::wire::{WireReader, WireWriter};
+use crate::proto::{ModelProto, TaskMeta};
+use crate::tensor::{ByteOrder, DType};
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+/// File-per-model store rooted at a directory.
+pub struct OnDiskStore {
+    root: PathBuf,
+    /// learner → sorted rounds present on disk.
+    index: HashMap<String, Vec<u64>>,
+    bytes: usize,
+    entries: usize,
+}
+
+impl OnDiskStore {
+    /// Open (and create) a store rooted at `dir`. Existing files are
+    /// re-indexed, so a store survives controller restarts.
+    pub fn open(dir: impl Into<PathBuf>) -> Result<OnDiskStore> {
+        let root = dir.into();
+        std::fs::create_dir_all(&root).with_context(|| format!("create {root:?}"))?;
+        let mut store =
+            OnDiskStore { root: root.clone(), index: HashMap::new(), bytes: 0, entries: 0 };
+        for learner_dir in std::fs::read_dir(&root)? {
+            let learner_dir = learner_dir?;
+            if !learner_dir.file_type()?.is_dir() {
+                continue;
+            }
+            let learner = learner_dir.file_name().to_string_lossy().to_string();
+            for f in std::fs::read_dir(learner_dir.path())? {
+                let f = f?;
+                let name = f.file_name().to_string_lossy().to_string();
+                if let Some(round) = name.strip_suffix(".model").and_then(|s| s.parse().ok()) {
+                    store.index.entry(learner.clone()).or_default().push(round);
+                    store.bytes += f.metadata()?.len() as usize;
+                    store.entries += 1;
+                }
+            }
+        }
+        for v in store.index.values_mut() {
+            v.sort_unstable();
+        }
+        Ok(store)
+    }
+
+    fn path_for(&self, learner: &str, round: u64) -> PathBuf {
+        self.root.join(learner).join(format!("{round}.model"))
+    }
+
+    fn write_entry(&self, entry: &StoredModel) -> Result<usize> {
+        let mut w = WireWriter::with_capacity(entry.model.byte_size_f32() + 256);
+        w.put_str(&entry.learner_id);
+        w.put_varint(entry.round);
+        w.put_varint(entry.meta.train_time_per_batch_us);
+        w.put_varint(entry.meta.completed_steps as u64);
+        w.put_varint(entry.meta.completed_epochs as u64);
+        w.put_varint(entry.meta.num_samples as u64);
+        w.put_f64(entry.meta.train_loss);
+        let proto = ModelProto::from_model(&entry.model, DType::F32, ByteOrder::Little);
+        let model_bytes = crate::proto::Message::ShipModel { model: proto }.encode();
+        w.put_bytes(&model_bytes);
+        let bytes = w.into_bytes();
+        let path = self.path_for(&entry.learner_id, entry.round);
+        std::fs::create_dir_all(path.parent().unwrap())?;
+        std::fs::write(&path, &bytes).with_context(|| format!("write {path:?}"))?;
+        Ok(bytes.len())
+    }
+
+    fn read_entry(&self, learner: &str, round: u64) -> Result<StoredModel> {
+        let path = self.path_for(learner, round);
+        let bytes = std::fs::read(&path).with_context(|| format!("read {path:?}"))?;
+        let mut r = WireReader::new(&bytes);
+        let learner_id = r.get_str()?;
+        let round = r.get_varint()?;
+        let meta = TaskMeta {
+            train_time_per_batch_us: r.get_varint()?,
+            completed_steps: r.get_varint()? as usize,
+            completed_epochs: r.get_varint()? as usize,
+            num_samples: r.get_varint()? as usize,
+            train_loss: r.get_f64()?,
+        };
+        let model_bytes = r.get_bytes()?;
+        let model = match crate::proto::Message::decode(model_bytes)? {
+            crate::proto::Message::ShipModel { model } => model.to_model()?,
+            other => anyhow::bail!("unexpected stored message {}", other.kind()),
+        };
+        Ok(StoredModel { learner_id, round, meta, model })
+    }
+}
+
+impl ModelStore for OnDiskStore {
+    fn insert(&mut self, entry: StoredModel) -> Result<()> {
+        let n = self.write_entry(&entry)?;
+        let rounds = self.index.entry(entry.learner_id.clone()).or_default();
+        match rounds.binary_search(&entry.round) {
+            Ok(_) => {} // overwrite, no index/entry change (bytes may drift slightly)
+            Err(pos) => {
+                rounds.insert(pos, entry.round);
+                self.entries += 1;
+                self.bytes += n;
+            }
+        }
+        Ok(())
+    }
+
+    fn latest(&self, learner_id: &str) -> Result<Option<StoredModel>> {
+        match self.index.get(learner_id).and_then(|v| v.last().copied()) {
+            Some(round) => Ok(Some(self.read_entry(learner_id, round)?)),
+            None => Ok(None),
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.entries
+    }
+
+    fn byte_size(&self) -> usize {
+        self.bytes
+    }
+
+    fn evict(&mut self, keep_last: usize) -> Result<usize> {
+        let mut evicted = 0;
+        for (learner, rounds) in self.index.iter_mut() {
+            while rounds.len() > keep_last {
+                let round = rounds.remove(0);
+                let path = self.root.join(learner).join(format!("{round}.model"));
+                if let Ok(md) = std::fs::metadata(&path) {
+                    self.bytes = self.bytes.saturating_sub(md.len() as usize);
+                }
+                std::fs::remove_file(&path).ok();
+                self.entries -= 1;
+                evicted += 1;
+            }
+        }
+        Ok(evicted)
+    }
+
+    fn name(&self) -> &'static str {
+        "disk"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::test_support;
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("metisfl-store-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn conformance() {
+        let dir = tmpdir("conf");
+        let mut s = OnDiskStore::open(&dir).unwrap();
+        test_support::conformance(&mut s);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn survives_reopen() {
+        let dir = tmpdir("reopen");
+        {
+            let mut s = OnDiskStore::open(&dir).unwrap();
+            s.insert(test_support::entry("a", 0, 1)).unwrap();
+            s.insert(test_support::entry("a", 2, 2)).unwrap();
+            s.insert(test_support::entry("b", 1, 3)).unwrap();
+        }
+        let s = OnDiskStore::open(&dir).unwrap();
+        assert_eq!(s.len(), 3);
+        assert_eq!(s.latest("a").unwrap().unwrap().round, 2);
+        assert_eq!(s.latest("b").unwrap().unwrap().round, 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn overwrite_same_round_is_idempotent_in_index() {
+        let dir = tmpdir("ow");
+        let mut s = OnDiskStore::open(&dir).unwrap();
+        s.insert(test_support::entry("a", 0, 1)).unwrap();
+        s.insert(test_support::entry("a", 0, 99)).unwrap();
+        assert_eq!(s.len(), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

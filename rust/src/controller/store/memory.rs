@@ -1,0 +1,95 @@
+//! In-memory hash-map model store (the paper's §4 baseline assumption).
+
+use super::{ModelStore, StoredModel};
+use anyhow::Result;
+use std::collections::HashMap;
+
+/// Hash-map store with per-learner lineage.
+#[derive(Default)]
+pub struct InMemoryStore {
+    by_learner: HashMap<String, Vec<StoredModel>>,
+}
+
+impl InMemoryStore {
+    pub fn new() -> InMemoryStore {
+        Self::default()
+    }
+
+    /// Full lineage for one learner, oldest→newest.
+    pub fn lineage(&self, learner_id: &str) -> &[StoredModel] {
+        self.by_learner.get(learner_id).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    pub fn learner_count(&self) -> usize {
+        self.by_learner.len()
+    }
+}
+
+impl ModelStore for InMemoryStore {
+    fn insert(&mut self, entry: StoredModel) -> Result<()> {
+        self.by_learner.entry(entry.learner_id.clone()).or_default().push(entry);
+        Ok(())
+    }
+
+    fn latest(&self, learner_id: &str) -> Result<Option<StoredModel>> {
+        Ok(self
+            .by_learner
+            .get(learner_id)
+            .and_then(|v| v.iter().max_by_key(|m| m.round))
+            .cloned())
+    }
+
+    fn len(&self) -> usize {
+        self.by_learner.values().map(|v| v.len()).sum()
+    }
+
+    fn byte_size(&self) -> usize {
+        self.by_learner
+            .values()
+            .flat_map(|v| v.iter())
+            .map(|m| m.model.byte_size_f32())
+            .sum()
+    }
+
+    fn evict(&mut self, keep_last: usize) -> Result<usize> {
+        let mut evicted = 0;
+        for v in self.by_learner.values_mut() {
+            v.sort_by_key(|m| m.round);
+            while v.len() > keep_last {
+                v.remove(0);
+                evicted += 1;
+            }
+        }
+        Ok(evicted)
+    }
+
+    fn name(&self) -> &'static str {
+        "memory"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::test_support;
+    use super::*;
+
+    #[test]
+    fn conformance() {
+        let mut s = InMemoryStore::new();
+        test_support::conformance(&mut s);
+    }
+
+    #[test]
+    fn lineage_grows_and_evicts_in_round_order() {
+        let mut s = InMemoryStore::new();
+        for round in [3u64, 1, 2] {
+            s.insert(test_support::entry("x", round, round)).unwrap();
+        }
+        assert_eq!(s.lineage("x").len(), 3);
+        assert_eq!(s.latest("x").unwrap().unwrap().round, 3);
+        s.evict(2).unwrap();
+        let rounds: Vec<u64> = s.lineage("x").iter().map(|m| m.round).collect();
+        assert_eq!(rounds, vec![2, 3]);
+        assert_eq!(s.learner_count(), 1);
+    }
+}

@@ -1,0 +1,118 @@
+//! Learner model stores.
+//!
+//! §4 assumes "all local models fit in the controller's in-memory store
+//! (e.g., hash map)" — that is [`InMemoryStore`]. §5's future work asks
+//! for alternative stores when they do not fit; [`OnDiskStore`] implements
+//! the on-disk variant behind the same trait so the trade-off can be
+//! benchmarked (`benches/agg_ablation.rs` has a store comparison).
+
+pub mod disk;
+pub mod memory;
+
+pub use disk::OnDiskStore;
+pub use memory::InMemoryStore;
+
+use crate::proto::TaskMeta;
+use crate::tensor::TensorModel;
+use anyhow::Result;
+
+/// A stored model plus its provenance.
+#[derive(Debug, Clone)]
+pub struct StoredModel {
+    pub learner_id: String,
+    pub round: u64,
+    pub meta: TaskMeta,
+    pub model: TensorModel,
+}
+
+/// Storage for learners' local models (insert on `MarkTaskCompleted`,
+/// select at aggregation — T4–T7 in Fig. 1).
+pub trait ModelStore: Send {
+    /// Insert a completed local model (replaces/extends that learner's
+    /// lineage per the implementation's policy).
+    fn insert(&mut self, entry: StoredModel) -> Result<()>;
+
+    /// Latest model for one learner.
+    fn latest(&self, learner_id: &str) -> Result<Option<StoredModel>>;
+
+    /// Latest models for a set of learners (selection step). Learners
+    /// with no stored model are skipped.
+    fn select_latest(&self, learner_ids: &[String]) -> Result<Vec<StoredModel>> {
+        let mut out = Vec::with_capacity(learner_ids.len());
+        for id in learner_ids {
+            if let Some(m) = self.latest(id)? {
+                out.push(m);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Number of stored models (across lineages).
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total stored payload bytes (f32 accounting).
+    fn byte_size(&self) -> usize;
+
+    /// Remove everything older than `keep_last` entries per learner.
+    fn evict(&mut self, keep_last: usize) -> Result<usize>;
+
+    fn name(&self) -> &'static str;
+}
+
+#[cfg(test)]
+pub(crate) mod test_support {
+    use super::*;
+    use crate::config::ModelSpec;
+    use crate::util::Rng;
+
+    pub fn entry(learner: &str, round: u64, seed: u64) -> StoredModel {
+        let layout = ModelSpec::mlp(4, 2, 8).tensor_layout();
+        let mut rng = Rng::new(seed);
+        StoredModel {
+            learner_id: learner.to_string(),
+            round,
+            meta: TaskMeta { num_samples: 100, ..Default::default() },
+            model: TensorModel::random_init(&layout, &mut rng),
+        }
+    }
+
+    /// Conformance suite run against both store implementations.
+    pub fn conformance(store: &mut dyn ModelStore) {
+        assert!(store.is_empty());
+        store.insert(entry("a", 0, 1)).unwrap();
+        store.insert(entry("b", 0, 2)).unwrap();
+        store.insert(entry("a", 1, 3)).unwrap();
+        assert_eq!(store.len(), 3);
+        assert!(store.byte_size() > 0);
+
+        // latest() returns the newest round.
+        let a = store.latest("a").unwrap().unwrap();
+        assert_eq!(a.round, 1);
+        assert!(store.latest("nobody").unwrap().is_none());
+
+        // select_latest skips unknown learners.
+        let sel = store
+            .select_latest(&["a".into(), "zzz".into(), "b".into()])
+            .unwrap();
+        assert_eq!(sel.len(), 2);
+        assert_eq!(sel[0].learner_id, "a");
+        assert_eq!(sel[0].round, 1);
+
+        // Eviction keeps the most recent per learner.
+        let evicted = store.evict(1).unwrap();
+        assert_eq!(evicted, 1);
+        assert_eq!(store.len(), 2);
+        assert_eq!(store.latest("a").unwrap().unwrap().round, 1);
+
+        // Models roundtrip exactly.
+        let fresh = entry("c", 5, 9);
+        store.insert(fresh.clone()).unwrap();
+        let got = store.latest("c").unwrap().unwrap();
+        assert_eq!(got.model, fresh.model);
+        assert_eq!(got.meta.num_samples, 100);
+    }
+}

@@ -1,0 +1,193 @@
+//! Mock-CKKS additively homomorphic encryption (PALISADE substitute).
+//!
+//! Real CKKS encrypts fixed-point-encoded vectors under RLWE; ciphertexts
+//! support addition and carry approximation noise. This mock preserves
+//! exactly those *interface properties* on the aggregation path:
+//!
+//! * `encrypt` fixed-point-encodes f32 → i64 at scale 2^30, adds a
+//!   keyed pseudorandom pad (per-ciphertext nonce) and small Gaussian
+//!   noise (the CKKS approximation error),
+//! * `add` is element-wise i64 addition with nonce-set union,
+//! * `decrypt` re-derives and subtracts all pads, then rescales.
+//!
+//! Ciphertext expansion is 2× payload (i64 vs f32) plus nonce metadata,
+//! in the same ballpark as CKKS's practical expansion for packed vectors.
+//! **Not secure cryptography** — a benchmarking stand-in (DESIGN.md
+//! §Substitutions).
+
+use anyhow::{bail, Result};
+use sha2::{Digest, Sha256};
+
+const SCALE: f64 = (1u64 << 30) as f64;
+
+/// Homomorphic context bound to a symmetric key.
+#[derive(Clone)]
+pub struct CkksContext {
+    key: [u8; 32],
+    /// Std-dev of injected approximation noise, in plaintext units.
+    pub noise_std: f64,
+}
+
+/// An "encrypted" vector: padded fixed-point words + pad nonces.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Ciphertext {
+    pub nonces: Vec<u64>,
+    pub data: Vec<i64>,
+}
+
+impl Ciphertext {
+    /// Serialized size in bytes (payload + nonce metadata).
+    pub fn byte_size(&self) -> usize {
+        self.data.len() * 8 + self.nonces.len() * 8 + 16
+    }
+}
+
+impl CkksContext {
+    pub fn new(key: [u8; 32]) -> CkksContext {
+        CkksContext { key, noise_std: 1e-6 }
+    }
+
+    fn pad_word(&self, nonce: u64, index: usize) -> i64 {
+        // Keyed PRG: SHA-256(key ‖ nonce ‖ block)[lane] as i64 words.
+        let block = index / 4;
+        let lane = index % 4;
+        let mut h = Sha256::new();
+        h.update(b"metisfl-ckks-pad");
+        h.update(self.key);
+        h.update(nonce.to_le_bytes());
+        h.update((block as u64).to_le_bytes());
+        let d = h.finalize();
+        let off = lane * 8;
+        i64::from_le_bytes(d[off..off + 8].try_into().unwrap())
+    }
+
+    /// Encrypt a plaintext vector under a fresh `nonce`.
+    pub fn encrypt(&self, values: &[f32], nonce: u64, rng: &mut crate::util::Rng) -> Ciphertext {
+        let data = values
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| {
+                let noise = rng.next_gaussian() * self.noise_std;
+                let m = ((v as f64 + noise) * SCALE).round() as i64;
+                m.wrapping_add(self.pad_word(nonce, i))
+            })
+            .collect();
+        Ciphertext { nonces: vec![nonce], data }
+    }
+
+    /// Homomorphic addition (consumes neither side).
+    pub fn add(&self, a: &Ciphertext, b: &Ciphertext) -> Result<Ciphertext> {
+        if a.data.len() != b.data.len() {
+            bail!("ciphertext length mismatch: {} vs {}", a.data.len(), b.data.len());
+        }
+        let mut nonces = a.nonces.clone();
+        nonces.extend_from_slice(&b.nonces);
+        let data = a
+            .data
+            .iter()
+            .zip(&b.data)
+            .map(|(x, y)| x.wrapping_add(*y))
+            .collect();
+        Ok(Ciphertext { nonces, data })
+    }
+
+    /// Sum many ciphertexts.
+    pub fn sum(&self, cts: &[Ciphertext]) -> Result<Ciphertext> {
+        let mut iter = cts.iter();
+        let first = iter.next().ok_or_else(|| anyhow::anyhow!("empty ciphertext sum"))?;
+        let mut acc = first.clone();
+        for ct in iter {
+            acc = self.add(&acc, ct)?;
+        }
+        Ok(acc)
+    }
+
+    /// Decrypt by stripping every pad recorded in `nonces`.
+    pub fn decrypt(&self, ct: &Ciphertext) -> Vec<f32> {
+        let mut out = Vec::with_capacity(ct.data.len());
+        for (i, &w) in ct.data.iter().enumerate() {
+            let mut m = w;
+            for &n in &ct.nonces {
+                m = m.wrapping_sub(self.pad_word(n, i));
+            }
+            out.push((m as f64 / SCALE) as f32);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn encrypt_decrypt_roundtrip() {
+        let ctx = CkksContext::new([4u8; 32]);
+        let mut rng = Rng::new(1);
+        let pt = vec![1.5f32, -2.25, 0.0, 1e3];
+        let ct = ctx.encrypt(&pt, 77, &mut rng);
+        let back = ctx.decrypt(&ct);
+        for (a, b) in pt.iter().zip(&back) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn ciphertext_hides_plaintext() {
+        let ctx = CkksContext::new([4u8; 32]);
+        let mut rng = Rng::new(2);
+        let ct = ctx.encrypt(&[0.0f32; 64], 1, &mut rng);
+        let nonzero = ct.data.iter().filter(|&&v| v != 0).count();
+        assert!(nonzero > 60);
+    }
+
+    #[test]
+    fn homomorphic_sum_matches_plain_sum() {
+        let ctx = CkksContext::new([8u8; 32]);
+        let mut rng = Rng::new(3);
+        let pts: Vec<Vec<f32>> = (0..5)
+            .map(|_| (0..33).map(|_| rng.next_gaussian() as f32).collect())
+            .collect();
+        let cts: Vec<Ciphertext> =
+            pts.iter().enumerate().map(|(i, p)| ctx.encrypt(p, i as u64, &mut rng)).collect();
+        let sum_ct = ctx.sum(&cts).unwrap();
+        let sum = ctx.decrypt(&sum_ct);
+        for d in 0..33 {
+            let expect: f32 = pts.iter().map(|p| p[d]).sum();
+            assert!((sum[d] - expect).abs() < 1e-2, "d={d}");
+        }
+    }
+
+    #[test]
+    fn wrong_key_decrypts_garbage() {
+        let ctx = CkksContext::new([1u8; 32]);
+        let other = CkksContext::new([2u8; 32]);
+        let mut rng = Rng::new(4);
+        let pt = vec![1.0f32; 16];
+        let ct = ctx.encrypt(&pt, 9, &mut rng);
+        let wrong = other.decrypt(&ct);
+        let close = wrong.iter().zip(&pt).filter(|(a, b)| (**a - **b).abs() < 0.1).count();
+        assert!(close < 4, "wrong key should not decrypt");
+    }
+
+    #[test]
+    fn mismatched_lengths_rejected() {
+        let ctx = CkksContext::new([0u8; 32]);
+        let mut rng = Rng::new(5);
+        let a = ctx.encrypt(&[1.0], 0, &mut rng);
+        let b = ctx.encrypt(&[1.0, 2.0], 1, &mut rng);
+        assert!(ctx.add(&a, &b).is_err());
+        assert!(ctx.sum(&[]).is_err());
+    }
+
+    #[test]
+    fn expansion_is_about_2x_payload() {
+        let ctx = CkksContext::new([0u8; 32]);
+        let mut rng = Rng::new(6);
+        let ct = ctx.encrypt(&vec![0.5f32; 1000], 0, &mut rng);
+        let plain_bytes = 1000 * 4;
+        assert!(ct.byte_size() >= 2 * plain_bytes);
+        assert!(ct.byte_size() < 3 * plain_bytes);
+    }
+}

@@ -1,0 +1,148 @@
+//! Differential privacy for learner updates (Table 1, "Private
+//! Training" — all compared frameworks support DP; here it is the
+//! standard Gaussian mechanism applied learner-side before upload).
+//!
+//! Pipeline per update: clip the update delta to an L2 ball of radius
+//! `clip_norm`, then add isotropic Gaussian noise with
+//! `σ = noise_multiplier · clip_norm`. The ε accounting helper uses the
+//! classic analytic bound for the Gaussian mechanism (Dwork & Roth,
+//! Thm. A.1): one application is (ε, δ)-DP for
+//! `σ ≥ clip · sqrt(2 ln(1.25/δ)) / ε`.
+
+use crate::tensor::TensorModel;
+use crate::util::Rng;
+
+/// Gaussian-mechanism parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct DpConfig {
+    /// L2 clipping radius for the model *delta* (update − reference).
+    pub clip_norm: f64,
+    /// σ / clip_norm.
+    pub noise_multiplier: f64,
+}
+
+impl DpConfig {
+    /// ε for one release at a given δ (analytic Gaussian bound).
+    pub fn epsilon(&self, delta: f64) -> f64 {
+        assert!(delta > 0.0 && delta < 1.0);
+        (2.0 * (1.25 / delta).ln()).sqrt() / self.noise_multiplier
+    }
+
+    /// Noise σ needed for (ε, δ)-DP with this clip norm.
+    pub fn sigma_for(epsilon: f64, delta: f64, clip_norm: f64) -> f64 {
+        clip_norm * (2.0 * (1.25 / delta).ln()).sqrt() / epsilon
+    }
+}
+
+/// L2 norm of the delta `update − reference`.
+pub fn delta_l2(update: &TensorModel, reference: &TensorModel) -> f64 {
+    update
+        .tensors
+        .iter()
+        .zip(&reference.tensors)
+        .flat_map(|(u, r)| u.data.iter().zip(&r.data))
+        .map(|(u, r)| {
+            let d = (*u - *r) as f64;
+            d * d
+        })
+        .sum::<f64>()
+        .sqrt()
+}
+
+/// Privatize a learner update in place: clip its delta from `reference`
+/// to `cfg.clip_norm`, then add N(0, σ²) noise per element. Returns the
+/// pre-clip delta norm (useful for telemetry/adaptive clipping).
+pub fn privatize_update(
+    update: &mut TensorModel,
+    reference: &TensorModel,
+    cfg: &DpConfig,
+    rng: &mut Rng,
+) -> f64 {
+    let norm = delta_l2(update, reference);
+    let scale = if norm > cfg.clip_norm { cfg.clip_norm / norm } else { 1.0 };
+    let sigma = (cfg.noise_multiplier * cfg.clip_norm) as f32;
+    for (ut, rt) in update.tensors.iter_mut().zip(&reference.tensors) {
+        for (u, r) in ut.data.iter_mut().zip(&rt.data) {
+            let clipped = r + (*u - r) * scale as f32;
+            *u = clipped + sigma * rng.next_gaussian() as f32;
+        }
+    }
+    norm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelSpec;
+    use crate::util::prop::prop_check;
+
+    fn models(seed: u64) -> (TensorModel, TensorModel) {
+        let layout = ModelSpec::mlp(4, 2, 8).tensor_layout();
+        let mut rng = Rng::new(seed);
+        let reference = TensorModel::random_init(&layout, &mut rng);
+        let update = TensorModel::random_init(&layout, &mut rng);
+        (reference, update)
+    }
+
+    #[test]
+    fn clipping_bounds_the_delta_norm() {
+        let (reference, mut update) = models(1);
+        let cfg = DpConfig { clip_norm: 0.5, noise_multiplier: 0.0 }; // no noise
+        let pre = privatize_update(&mut update, &reference, &cfg, &mut Rng::new(2));
+        assert!(pre > 0.5, "test premise: unclipped norm should exceed clip");
+        let post = delta_l2(&update, &reference);
+        assert!((post - 0.5).abs() < 1e-3, "post-clip norm {post}");
+    }
+
+    #[test]
+    fn small_updates_pass_unclipped() {
+        let (reference, _) = models(3);
+        let mut update = reference.clone();
+        update.tensors[0].data[0] += 0.01;
+        let cfg = DpConfig { clip_norm: 10.0, noise_multiplier: 0.0 };
+        privatize_update(&mut update, &reference, &cfg, &mut Rng::new(4));
+        assert!((update.tensors[0].data[0] - reference.tensors[0].data[0] - 0.01).abs() < 1e-6);
+    }
+
+    #[test]
+    fn noise_has_requested_scale() {
+        let (reference, _) = models(5);
+        let mut update = reference.clone(); // zero delta → pure noise out
+        let cfg = DpConfig { clip_norm: 1.0, noise_multiplier: 0.1 };
+        privatize_update(&mut update, &reference, &cfg, &mut Rng::new(6));
+        let n = update.param_count() as f64;
+        let var: f64 = update
+            .tensors
+            .iter()
+            .zip(&reference.tensors)
+            .flat_map(|(u, r)| u.data.iter().zip(&r.data))
+            .map(|(u, r)| ((u - r) as f64).powi(2))
+            .sum::<f64>()
+            / n;
+        let sigma = var.sqrt();
+        assert!((sigma - 0.1).abs() < 0.02, "measured σ {sigma}");
+    }
+
+    #[test]
+    fn epsilon_accounting_roundtrips() {
+        let cfg = DpConfig { clip_norm: 1.0, noise_multiplier: 2.0 };
+        let eps = cfg.epsilon(1e-5);
+        let sigma = DpConfig::sigma_for(eps, 1e-5, 1.0);
+        assert!((sigma - 2.0).abs() < 1e-9);
+        // More noise → smaller ε.
+        let tighter = DpConfig { clip_norm: 1.0, noise_multiplier: 4.0 };
+        assert!(tighter.epsilon(1e-5) < eps);
+    }
+
+    #[test]
+    fn prop_clip_invariant_any_radius() {
+        prop_check("post-clip norm <= radius", 30, |g| {
+            let (reference, mut update) = models(g.rng().next_u64());
+            let clip = g.f64_in(0.01, 5.0);
+            let cfg = DpConfig { clip_norm: clip, noise_multiplier: 0.0 };
+            privatize_update(&mut update, &reference, &cfg, &mut Rng::new(1));
+            let post = delta_l2(&update, &reference);
+            assert!(post <= clip * 1.001 + 1e-6, "post {post} > clip {clip}");
+        });
+    }
+}

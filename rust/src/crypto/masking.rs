@@ -1,0 +1,198 @@
+//! Pairwise additive masking for secure aggregation.
+//!
+//! Learner `i` adds, for every other learner `j`, a pseudorandom vector
+//! derived from the shared pair secret `s_ij`: with sign `+` if `i < j`
+//! and `−` if `i > j`. Summed across all learners the masks cancel
+//! exactly, so the controller can aggregate without seeing any individual
+//! update in the clear. (Dropout recovery — LightSecAgg's actual
+//! contribution — is out of scope; the federation drops the whole round
+//! if a masked learner fails, which our failure-injection tests assert.)
+//!
+//! Masks are generated in i32 "ring" space and added to a fixed-point
+//! encoding of the update so cancellation is *exact* (float masks would
+//! leave rounding residue).
+
+use sha2::{Digest, Sha256};
+
+/// Fixed-point scale: f32 → i32 with ~6 decimal digits preserved.
+const SCALE: f64 = (1u64 << 20) as f64;
+
+/// Per-learner masking state for one round.
+pub struct PairwiseMasker {
+    pub learner_index: usize,
+    pub total_learners: usize,
+    pub round: u64,
+    group_secret: [u8; 32],
+}
+
+impl PairwiseMasker {
+    pub fn new(
+        learner_index: usize,
+        total_learners: usize,
+        round: u64,
+        group_secret: [u8; 32],
+    ) -> Self {
+        assert!(learner_index < total_learners);
+        PairwiseMasker { learner_index, total_learners, round, group_secret }
+    }
+
+    /// The pair secret both endpoints derive identically.
+    fn pair_seed(&self, a: usize, b: usize, chunk: u64) -> [u8; 32] {
+        let (lo, hi) = if a < b { (a, b) } else { (b, a) };
+        let mut h = Sha256::new();
+        h.update(b"metisfl-pair-mask");
+        h.update(self.group_secret);
+        h.update((lo as u64).to_le_bytes());
+        h.update((hi as u64).to_le_bytes());
+        h.update(self.round.to_le_bytes());
+        h.update(chunk.to_le_bytes());
+        h.finalize().into()
+    }
+
+    /// PRG expansion of a pair seed into i32 mask words.
+    fn expand(&self, other: usize, out: &mut [i64], sign: i64) {
+        let mut chunk = 0u64;
+        let mut filled = 0usize;
+        while filled < out.len() {
+            let block = self.pair_seed(self.learner_index, other, chunk);
+            for w in block.chunks_exact(4) {
+                if filled >= out.len() {
+                    break;
+                }
+                let v = i32::from_le_bytes([w[0], w[1], w[2], w[3]]) as i64;
+                out[filled] += sign * v;
+                filled += 1;
+            }
+            chunk += 1;
+        }
+    }
+
+    /// Encode `values` in fixed point and add this learner's net mask.
+    /// Returns the masked i64 vector sent to the controller.
+    pub fn mask(&self, values: &[f32]) -> Vec<i64> {
+        let mut out: Vec<i64> =
+            values.iter().map(|&v| (v as f64 * SCALE).round() as i64).collect();
+        for j in 0..self.total_learners {
+            if j == self.learner_index {
+                continue;
+            }
+            let sign = if self.learner_index < j { 1 } else { -1 };
+            self.expand(j, &mut out, sign);
+        }
+        out
+    }
+
+    /// Controller-side: sum masked vectors from **all** participating
+    /// learners and decode. Panics if lengths mismatch.
+    pub fn unmask_sum(masked: &[Vec<i64>]) -> Vec<f32> {
+        assert!(!masked.is_empty());
+        let n = masked[0].len();
+        let mut acc = vec![0i64; n];
+        for m in masked {
+            assert_eq!(m.len(), n, "masked vector length mismatch");
+            for (a, v) in acc.iter_mut().zip(m) {
+                *a = a.wrapping_add(*v);
+            }
+        }
+        acc.into_iter().map(|v| (v as f64 / SCALE) as f32).collect()
+    }
+
+    /// Fixed-point quantization error bound per element per learner.
+    pub fn quantization_eps(num_learners: usize) -> f32 {
+        (num_learners as f64 / SCALE) as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+    use crate::util::Rng;
+
+    fn gen_updates(rng: &mut Rng, n_learners: usize, dim: usize) -> Vec<Vec<f32>> {
+        (0..n_learners)
+            .map(|_| (0..dim).map(|_| rng.next_gaussian() as f32).collect())
+            .collect()
+    }
+
+    #[test]
+    fn masks_cancel_in_the_sum() {
+        let mut rng = Rng::new(10);
+        let n = 5;
+        let dim = 257;
+        let updates = gen_updates(&mut rng, n, dim);
+        let secret = [9u8; 32];
+        let masked: Vec<Vec<i64>> = (0..n)
+            .map(|i| PairwiseMasker::new(i, n, 3, secret).mask(&updates[i]))
+            .collect();
+        let sum = PairwiseMasker::unmask_sum(&masked);
+        for d in 0..dim {
+            let expect: f32 = updates.iter().map(|u| u[d]).sum();
+            let eps = PairwiseMasker::quantization_eps(n) * 4.0 + 1e-4;
+            assert!((sum[d] - expect).abs() <= eps, "d={d}: {} vs {expect}", sum[d]);
+        }
+    }
+
+    #[test]
+    fn individual_masked_updates_look_random() {
+        let update = vec![0.0f32; 64]; // all-zero plaintext
+        let masked = PairwiseMasker::new(0, 3, 0, [1u8; 32]).mask(&update);
+        // A zero update must not produce a zero (or low-entropy) vector.
+        let nonzero = masked.iter().filter(|&&v| v != 0).count();
+        assert!(nonzero > 60, "only {nonzero} nonzero mask words");
+    }
+
+    #[test]
+    fn different_rounds_produce_different_masks() {
+        let update = vec![1.0f32; 32];
+        let m0 = PairwiseMasker::new(0, 2, 0, [1u8; 32]).mask(&update);
+        let m1 = PairwiseMasker::new(0, 2, 1, [1u8; 32]).mask(&update);
+        assert_ne!(m0, m1);
+    }
+
+    #[test]
+    fn missing_learner_breaks_unmasking() {
+        let mut rng = Rng::new(11);
+        let n = 4;
+        let updates = gen_updates(&mut rng, n, 32);
+        let secret = [2u8; 32];
+        let masked: Vec<Vec<i64>> = (0..n - 1) // one learner dropped
+            .map(|i| PairwiseMasker::new(i, n, 0, secret).mask(&updates[i]))
+            .collect();
+        let sum = PairwiseMasker::unmask_sum(&masked);
+        let expect: f32 = updates[..n - 1].iter().map(|u| u[0]).sum();
+        // Residual masks dominate; the "sum" must be garbage.
+        assert!((sum[0] - expect).abs() > 1.0, "masks unexpectedly cancelled");
+    }
+
+    #[test]
+    fn single_learner_is_identity_quantized() {
+        let update = vec![1.5f32, -2.25, 0.0];
+        let masked = PairwiseMasker::new(0, 1, 0, [0u8; 32]).mask(&update);
+        let sum = PairwiseMasker::unmask_sum(&[masked]);
+        for (a, b) in sum.iter().zip(&update) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn prop_cancellation_for_random_sizes() {
+        prop_check("mask cancellation", 20, |g| {
+            let n = g.usize_in(2..6);
+            let dim = g.usize_in(1..100);
+            let round = g.rng().next_u64() % 1000;
+            let mut rng = Rng::new(g.rng().next_u64());
+            let updates = gen_updates(&mut rng, n, dim);
+            let secret = [g.rng().next_u64() as u8; 32];
+            let masked: Vec<Vec<i64>> = (0..n)
+                .map(|i| PairwiseMasker::new(i, n, round, secret).mask(&updates[i]))
+                .collect();
+            let sum = PairwiseMasker::unmask_sum(&masked);
+            for d in 0..dim {
+                let expect: f32 = updates.iter().map(|u| u[d]).sum();
+                let eps = PairwiseMasker::quantization_eps(n) * 4.0 + 1e-3;
+                assert!((sum[d] - expect).abs() <= eps);
+            }
+        });
+    }
+}

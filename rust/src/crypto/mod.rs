@@ -1,0 +1,19 @@
+//! Secure-aggregation substrates (Table 1, "Privacy & Security").
+//!
+//! Two schemes, both *simulations* of the production mechanisms the
+//! compared frameworks use (DESIGN.md §Substitutions):
+//!
+//! * [`masking`] — pairwise-PRG additive masking in the style of
+//!   LightSecAgg (FedML) / Salvia (Flower): masks cancel in the sum, so
+//!   the controller only ever sees masked individual updates.
+//! * [`ckks`] — a mock of PALISADE's CKKS used by MetisFL: fixed-point
+//!   encoding, additively homomorphic ciphertexts, approximation noise,
+//!   and realistic ciphertext expansion (i64 per f32 + metadata).
+
+pub mod ckks;
+pub mod dp;
+pub mod masking;
+
+pub use ckks::{Ciphertext, CkksContext};
+pub use dp::{privatize_update, DpConfig};
+pub use masking::PairwiseMasker;

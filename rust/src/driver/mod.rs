@@ -1,0 +1,323 @@
+//! The federation driver (paper App. B, Fig. 8).
+//!
+//! Lifecycle: **Initialization** — start the controller, start and
+//! register the learners, ship the initial model state (tensors only to
+//! the controller; the learners get model + recipe); **Monitoring** —
+//! periodic heartbeats to every process; **Shutdown** — learners first,
+//! then the controller.
+//!
+//! Two deployments, matching the paper's Deployment rows:
+//! [`run_simulated`] (in-process transport) and [`run_distributed`]
+//! (framed TCP on localhost).
+
+use crate::config::{FederationEnv, Protocol, SecureSpec, TrainerKind, TransportKind};
+use crate::controller::{scheduling, Controller};
+use crate::learner::{Dataset, Learner, LearnerServicer, SyntheticTrainer, Trainer};
+use crate::metrics::{OpMetrics, RoundReport};
+use crate::net::{Psk, ServerHandle};
+use crate::proto::Message;
+use crate::tensor::TensorModel;
+use crate::util::{log_info, log_warn, Rng, Stopwatch};
+use anyhow::{bail, Context, Result};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Final outcome of a federation run.
+#[derive(Debug, Clone)]
+pub struct FederationReport {
+    pub env_name: String,
+    pub round_metrics: Vec<RoundReport>,
+    pub op_metrics: OpMetrics,
+    /// Community eval loss of the last evaluated round.
+    pub final_loss: Option<f64>,
+    pub wall_clock: Duration,
+    /// Heartbeat probes that failed during monitoring.
+    pub missed_heartbeats: u64,
+}
+
+/// Unique per-process run counter so in-proc endpoint names never clash
+/// across concurrent tests.
+fn next_run_id() -> u64 {
+    static RUN: AtomicU64 = AtomicU64::new(0);
+    RUN.fetch_add(1, Ordering::SeqCst)
+}
+
+/// Build the per-learner trainer from the env.
+fn trainer_for(env: &FederationEnv) -> Result<Arc<dyn Trainer>> {
+    Ok(match &env.trainer {
+        TrainerKind::Synthetic { step_time_us } => {
+            Arc::new(SyntheticTrainer::new(*step_time_us, 0.01))
+        }
+        TrainerKind::Xla { artifacts_dir } => {
+            Arc::new(crate::runtime::XlaTrainer::load(artifacts_dir, &env.model)?)
+        }
+    })
+}
+
+/// Run a simulated (in-process) federation with the env's trainer.
+pub fn run_simulated(env: &FederationEnv) -> Result<FederationReport> {
+    let trainer = trainer_for(env)?;
+    run_with_trainer(env, |_idx| Arc::clone(&trainer))
+}
+
+/// Run a distributed (localhost TCP) federation with the env's trainer.
+pub fn run_distributed(env: &FederationEnv) -> Result<FederationReport> {
+    let mut env = env.clone();
+    if !matches!(env.transport, TransportKind::Tcp { .. }) {
+        env.transport = TransportKind::Tcp { base_port: 0 };
+    }
+    let trainer = trainer_for(&env)?;
+    run_with_trainer(&env, |_idx| Arc::clone(&trainer))
+}
+
+/// Core driver: run a federation with a caller-supplied trainer factory
+/// (one call per learner index).
+pub fn run_with_trainer(
+    env: &FederationEnv,
+    make_trainer: impl Fn(usize) -> Arc<dyn Trainer>,
+) -> Result<FederationReport> {
+    env.validate()?;
+    if env.secure != SecureSpec::None {
+        bail!(
+            "secure aggregation runs through the crypto API \
+             (see examples/secure_aggregation.rs and DESIGN.md §Substitutions)"
+        );
+    }
+    let run = next_run_id();
+    let sw = Stopwatch::start();
+    let psk: Psk = None;
+
+    // --- Initialization (Fig. 8) --------------------------------------
+    let controller = Controller::new(env.clone(), psk)?;
+    let (ctrl_endpoint, _ctrl_server) = serve_component(
+        env,
+        &format!("ctrl-{run}"),
+        0,
+        Arc::clone(&controller) as Arc<dyn crate::net::Service>,
+        psk,
+    )?;
+    log_info("driver", &format!("controller up at {ctrl_endpoint}"));
+
+    let mut learner_servers: Vec<Box<dyn ServerHandle>> = Vec::new();
+    let mut learners: Vec<Arc<Learner>> = Vec::new();
+    let mut learner_endpoints: Vec<String> = Vec::new();
+    let mut data_rng = Rng::new(env.seed);
+    for i in 0..env.learners {
+        let dataset = Dataset::synthetic_housing(
+            env.model.input_dim,
+            env.samples_per_learner,
+            env.samples_per_learner, // paper: same 100 samples for test
+            data_rng.split(i as u64).next_u64(),
+        );
+        let learner =
+            Learner::new(&format!("learner-{i}"), &ctrl_endpoint, psk, make_trainer(i), dataset);
+        let (ep, server) = serve_component(
+            env,
+            &format!("learner-{run}-{i}"),
+            (i + 1) as u16,
+            Arc::new(LearnerServicer(Arc::clone(&learner))) as Arc<dyn crate::net::Service>,
+            psk,
+        )?;
+        learner.register(&ep).with_context(|| format!("registering learner-{i}"))?;
+        learner_endpoints.push(ep);
+        learner_servers.push(server);
+        learners.push(learner);
+    }
+    controller.wait_for_learners(env.learners, Duration::from_secs(30))?;
+
+    // Ship the initial model state (tensors only — Fig. 8).
+    let mut init_rng = Rng::new(env.seed ^ 0x5EED_0F_0E715); // "metis" seed salt
+    let initial = TensorModel::random_init(&env.model.tensor_layout(), &mut init_rng);
+    controller.ship_model(initial);
+
+    // --- Monitoring: heartbeat thread ----------------------------------
+    let stop_monitor = Arc::new(AtomicBool::new(false));
+    let missed = Arc::new(AtomicU64::new(0));
+    let monitor = {
+        let stop = Arc::clone(&stop_monitor);
+        let missed = Arc::clone(&missed);
+        let endpoints: Vec<String> = std::iter::once(ctrl_endpoint.clone())
+            .chain(learner_endpoints.iter().cloned())
+            .collect();
+        let period = Duration::from_millis(env.heartbeat_ms);
+        std::thread::Builder::new()
+            .name("metisfl-monitor".into())
+            .spawn(move || {
+                while !stop.load(Ordering::SeqCst) {
+                    for ep in &endpoints {
+                        if stop.load(Ordering::SeqCst) {
+                            return;
+                        }
+                        let healthy = crate::net::connect(ep, psk)
+                            .and_then(|mut c| c.rpc(&Message::Heartbeat { from: "driver".into() }))
+                            .map(|r| matches!(r, Message::HeartbeatAck { healthy: true, .. }))
+                            .unwrap_or(false);
+                        if !healthy {
+                            missed.fetch_add(1, Ordering::SeqCst);
+                            log_warn("driver", &format!("heartbeat missed for {ep}"));
+                        }
+                    }
+                    // Sleep in short slices so shutdown is prompt even
+                    // with long heartbeat periods.
+                    let deadline = std::time::Instant::now() + period;
+                    while std::time::Instant::now() < deadline && !stop.load(Ordering::SeqCst) {
+                        std::thread::sleep(Duration::from_millis(10).min(period));
+                    }
+                }
+            })
+            .expect("spawn monitor")
+    };
+
+    // --- Federated training --------------------------------------------
+    let mut round_rng = Rng::new(env.seed ^ 0xD157);
+    let round_metrics: Vec<RoundReport> = match env.protocol {
+        Protocol::Asynchronous { .. } => {
+            scheduling::run_async_session(&controller, env.rounds, &mut round_rng)?
+        }
+        _ => {
+            let mut reports = Vec::with_capacity(env.rounds);
+            for round in 1..=env.rounds as u64 {
+                let report = scheduling::run_round(&controller, round, &mut round_rng)?;
+                log_info(
+                    "driver",
+                    &format!(
+                        "round {round}/{}: fed_round={:?} agg={:?} loss={:?}",
+                        env.rounds,
+                        report.federation_round,
+                        report.aggregation,
+                        report.community_eval_loss
+                    ),
+                );
+                reports.push(report);
+            }
+            reports
+        }
+    };
+
+    // --- Shutdown: learners first, then controller (Fig. 8) ------------
+    stop_monitor.store(true, Ordering::SeqCst);
+    let _ = monitor.join();
+    for ep in &learner_endpoints {
+        if let Ok(mut c) = crate::net::connect(ep, psk) {
+            let _ = c.rpc(&Message::Shutdown);
+        }
+    }
+    if let Ok(mut c) = crate::net::connect(&ctrl_endpoint, psk) {
+        let _ = c.rpc(&Message::Shutdown);
+    }
+    for mut s in learner_servers {
+        s.shutdown();
+    }
+
+    let final_loss = round_metrics.iter().rev().find_map(|r| r.community_eval_loss);
+    Ok(FederationReport {
+        env_name: env.name.clone(),
+        round_metrics,
+        op_metrics: controller.metrics(),
+        final_loss,
+        wall_clock: sw.elapsed(),
+        missed_heartbeats: missed.load(Ordering::SeqCst),
+    })
+}
+
+/// Serve a component on the env's transport; returns (endpoint, handle).
+fn serve_component(
+    env: &FederationEnv,
+    inproc_name: &str,
+    port_offset: u16,
+    svc: Arc<dyn crate::net::Service>,
+    psk: Psk,
+) -> Result<(String, Box<dyn ServerHandle>)> {
+    match env.transport {
+        TransportKind::InProc => {
+            let ep = format!("inproc://{inproc_name}");
+            let server = crate::net::serve(&ep, svc, psk)?;
+            Ok((ep, server))
+        }
+        TransportKind::Tcp { base_port } => {
+            let port = if base_port == 0 { 0 } else { base_port + port_offset };
+            let server = crate::net::serve(&format!("tcp://127.0.0.1:{port}"), svc, psk)?;
+            let ep = server.endpoint();
+            Ok((ep, server))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelSpec;
+
+    fn small_env(name: &str) -> FederationEnv {
+        FederationEnv::builder(name)
+            .learners(3)
+            .rounds(2)
+            .model(ModelSpec::mlp(4, 2, 8))
+            .samples_per_learner(20)
+            .batch_size(10)
+            .heartbeat_ms(50)
+            .build()
+    }
+
+    #[test]
+    fn simulated_sync_federation_completes() {
+        let report = run_simulated(&small_env("sim-sync")).unwrap();
+        assert_eq!(report.round_metrics.len(), 2);
+        for r in &report.round_metrics {
+            assert_eq!(r.participants, 3);
+            assert_eq!(r.completed, 3);
+            assert!(r.community_eval_loss.unwrap().is_finite());
+            assert!(r.federation_round >= r.aggregation);
+        }
+        assert!(report.final_loss.is_some());
+    }
+
+    #[test]
+    fn distributed_tcp_federation_completes() {
+        let report = run_distributed(&small_env("sim-tcp")).unwrap();
+        assert_eq!(report.round_metrics.len(), 2);
+        assert_eq!(report.round_metrics[0].completed, 3);
+    }
+
+    #[test]
+    fn semi_sync_protocol_runs() {
+        let mut env = small_env("sim-semisync");
+        env.protocol = Protocol::SemiSynchronous { lambda: 2.0 };
+        let report = run_simulated(&env).unwrap();
+        assert_eq!(report.round_metrics.len(), 2);
+        assert_eq!(report.round_metrics[0].completed, 3);
+    }
+
+    #[test]
+    fn async_protocol_runs() {
+        let mut env = small_env("sim-async");
+        env.protocol = Protocol::Asynchronous { staleness_alpha: 0.5 };
+        env.rounds = 2;
+        let report = run_simulated(&env).unwrap();
+        assert_eq!(report.round_metrics.len(), 2);
+    }
+
+    #[test]
+    fn secure_env_is_rejected_with_pointer_to_example() {
+        let mut env = small_env("sim-secure");
+        env.secure = SecureSpec::Masking;
+        let err = format!("{:#}", run_simulated(&env).unwrap_err());
+        assert!(err.contains("secure_aggregation"), "{err}");
+    }
+
+    #[test]
+    fn rust_sgd_federation_loss_decreases() {
+        let mut env = small_env("sim-sgd");
+        env.rounds = 6;
+        env.learning_rate = 0.02;
+        let report = run_with_trainer(&env, |_| Arc::new(crate::learner::trainer::RustSgdTrainer))
+            .unwrap();
+        let first = report.round_metrics.first().unwrap().community_eval_loss.unwrap();
+        let last = report.round_metrics.last().unwrap().community_eval_loss.unwrap();
+        assert!(
+            last < first,
+            "federated training failed to reduce loss: {first} -> {last}"
+        );
+    }
+}

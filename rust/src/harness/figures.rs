@@ -1,0 +1,237 @@
+//! Figure/table sweeps: framework × learner-count grids per model size.
+//!
+//! Each of Figs. 5/6/7 is one model size ({100k, 1M, 10M} params) with
+//! six panels (train dispatch, train round, aggregation, eval dispatch,
+//! eval round, federation round) over learners {10, 25, 50, 100, 200}.
+//! Table 2 is the federation-round column of Fig. 7.
+
+use super::runner::{fmt_secs, full_scale, BenchRunner, ReportWriter};
+use super::stress::{stress_round, StressTimings, StressWorkload};
+use crate::baselines::calibration::{self, Calibration};
+use crate::baselines::{Framework, FrameworkProfile};
+use crate::config::ModelSpec;
+use crate::metrics::FedOp;
+use crate::util::ThreadPool;
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+/// Sweep configuration for one figure.
+#[derive(Debug, Clone)]
+pub struct FigureConfig {
+    /// Figure id in the paper ("fig5" | "fig6" | "fig7").
+    pub name: &'static str,
+    pub spec: ModelSpec,
+    pub learner_counts: Vec<usize>,
+    pub frameworks: Vec<Framework>,
+    pub seed: u64,
+}
+
+impl FigureConfig {
+    /// Default sweep; `FULL=1` uses the paper's grid and model sizes.
+    pub fn paper(name: &'static str, spec: ModelSpec, reduced_spec: ModelSpec) -> FigureConfig {
+        let (spec, learner_counts) = if full_scale() {
+            (spec, vec![10, 25, 50, 100, 200])
+        } else {
+            (reduced_spec, vec![10, 25, 50])
+        };
+        FigureConfig {
+            name,
+            spec,
+            learner_counts,
+            frameworks: Framework::ALL.to_vec(),
+            seed: 42,
+        }
+    }
+}
+
+/// One (framework, learners) measurement cell.
+#[derive(Debug, Clone)]
+pub struct FigureCell {
+    pub framework: Framework,
+    pub learners: usize,
+    pub timings: StressTimings,
+}
+
+/// A completed figure sweep.
+pub struct FigureResult {
+    pub config: FigureConfig,
+    pub cells: Vec<FigureCell>,
+    pub calibration: Calibration,
+}
+
+/// Run the sweep for one figure.
+pub fn figure_sweep(config: FigureConfig) -> FigureResult {
+    let cal = calibration::measure();
+    let pool = ThreadPool::with_hardware_threads();
+    let runner = BenchRunner::new();
+    let mut cells = Vec::new();
+    for &n in &config.learner_counts {
+        // One workload per learner count, shared across frameworks so
+        // every row sees identical payloads.
+        let w = StressWorkload::new(config.spec.clone(), n, config.seed);
+        for &fw in &config.frameworks {
+            let profile = FrameworkProfile::of(fw);
+            let mut last: Option<StressTimings> = None;
+            // BenchRunner drives repetitions; keep the median-ish last.
+            let _summary = runner.run(|| {
+                last = Some(stress_round(&profile, &w, &pool, &cal));
+            });
+            cells.push(FigureCell { framework: fw, learners: n, timings: last.unwrap() });
+        }
+    }
+    FigureResult { config, cells, calibration: cal }
+}
+
+impl FigureResult {
+    fn cell(&self, fw: Framework, n: usize) -> Option<&FigureCell> {
+        self.cells.iter().find(|c| c.framework == fw && c.learners == n)
+    }
+
+    /// Value of one op for a cell. For MetisFL-OMP aggregation (and the
+    /// rounds containing it) the modelled 32-core time is used when the
+    /// real machine cannot express the parallelism; columns carrying
+    /// modelled values are marked in the panel title.
+    fn op_value(&self, c: &FigureCell, op: FedOp) -> Duration {
+        let t = &c.timings;
+        let agg = t.aggregation_modeled.unwrap_or(t.aggregation);
+        match op {
+            FedOp::TrainDispatch => t.train_dispatch,
+            FedOp::TrainRound => t.train_round,
+            FedOp::Aggregation => agg,
+            FedOp::EvalDispatch => t.eval_dispatch,
+            FedOp::EvalRound => t.eval_round,
+            FedOp::FederationRound => {
+                // Replace the measured aggregation slice with the modelled
+                // one so the round total is consistent.
+                t.federation_round - t.aggregation + agg
+            }
+            _ => Duration::ZERO,
+        }
+    }
+
+    /// Emit all six panels as tables (markdown + CSV).
+    pub fn emit_panels(&self) -> std::io::Result<()> {
+        let modeled = self
+            .cells
+            .iter()
+            .any(|c| c.timings.aggregation_modeled.is_some());
+        println!(
+            "\n## {} — {} params ({} tensors){}",
+            self.config.name,
+            self.config.spec.param_count(),
+            self.config.spec.tensor_count(),
+            if modeled {
+                format!(
+                    " [MetisFL gRPC+OMP aggregation modelled at {} cores; measured {} threads]",
+                    calibration::PAPER_CORES,
+                    self.calibration.hardware_threads
+                )
+            } else {
+                String::new()
+            }
+        );
+        for (panel, op) in ["a", "b", "c", "d", "e", "f"].iter().zip(FedOp::figure_panels()) {
+            let mut headers = vec!["learners".to_string()];
+            headers.extend(self.config.frameworks.iter().map(|f| f.label().to_string()));
+            let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+            let mut w = ReportWriter::new(
+                &format!("{}_{panel}_{}", self.config.name, op.name()),
+                &hdr_refs,
+            );
+            for &n in &self.config.learner_counts {
+                let mut row = vec![n.to_string()];
+                for &fw in &self.config.frameworks {
+                    row.push(match self.cell(fw, n) {
+                        Some(c) => fmt_secs(self.op_value(c, op)),
+                        None => "N/A".into(),
+                    });
+                }
+                w.row(row);
+            }
+            w.emit()?;
+        }
+        Ok(())
+    }
+
+    /// Emit the Table-2 shape: federation round seconds per framework ×
+    /// learner count.
+    pub fn emit_table2(&self) -> std::io::Result<()> {
+        let mut headers = vec!["#Learners".to_string()];
+        headers.extend(self.config.frameworks.iter().map(|f| f.label().to_string()));
+        let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+        let mut w = ReportWriter::new("table2_federation_round", &hdr_refs);
+        for &n in &self.config.learner_counts {
+            let mut row = vec![n.to_string()];
+            for &fw in &self.config.frameworks {
+                row.push(match self.cell(fw, n) {
+                    Some(c) => fmt_secs(self.op_value(c, FedOp::FederationRound)),
+                    None => "N/A".into(),
+                });
+            }
+            w.row(row);
+        }
+        w.emit()?;
+        Ok(())
+    }
+
+    /// Cross-framework ratios for the shape checks (speedup of
+    /// MetisFL-OMP over each framework on an op, at the largest N).
+    pub fn speedups(&self, op: FedOp) -> BTreeMap<&'static str, f64> {
+        let n = *self.config.learner_counts.last().unwrap();
+        let base = self
+            .cell(Framework::MetisFLOmp, n)
+            .map(|c| self.op_value(c, op).as_secs_f64())
+            .unwrap_or(f64::NAN);
+        let mut out = BTreeMap::new();
+        for &fw in &self.config.frameworks {
+            if fw == Framework::MetisFLOmp {
+                continue;
+            }
+            if let Some(c) = self.cell(fw, n) {
+                out.insert(fw.label(), self.op_value(c, op).as_secs_f64() / base);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_sweep() -> FigureResult {
+        figure_sweep(FigureConfig {
+            name: "figtest",
+            spec: ModelSpec::mlp(8, 3, 16),
+            learner_counts: vec![4, 8],
+            frameworks: vec![Framework::MetisFLOmp, Framework::MetisFL, Framework::Flower],
+            seed: 7,
+        })
+    }
+
+    #[test]
+    fn sweep_produces_all_cells() {
+        let r = tiny_sweep();
+        assert_eq!(r.cells.len(), 6);
+        assert!(r.cell(Framework::Flower, 8).is_some());
+        assert!(r.cell(Framework::IbmFL, 8).is_none());
+    }
+
+    #[test]
+    fn metisfl_beats_python_style_controller() {
+        let r = tiny_sweep();
+        let speedups = r.speedups(FedOp::FederationRound);
+        let flower = speedups["Flower"];
+        assert!(flower > 1.0, "expected Flower slower, ratio {flower}");
+    }
+
+    #[test]
+    fn round_times_grow_with_learner_count() {
+        let r = tiny_sweep();
+        for fw in [Framework::MetisFL, Framework::Flower] {
+            let t4 = r.cell(fw, 4).unwrap().timings.federation_round;
+            let t8 = r.cell(fw, 8).unwrap().timings.federation_round;
+            assert!(t8 > t4 / 2, "{}: {t4:?} -> {t8:?}", fw.label());
+        }
+    }
+}

@@ -1,0 +1,18 @@
+//! Benchmark harness (criterion replacement) + the cross-framework
+//! stress-round simulator that regenerates the paper's figures.
+//!
+//! * [`runner`] — warmup/iteration loops producing [`Summary`] stats and
+//!   aligned markdown / CSV emitters under `bench_out/`.
+//! * [`stress`] — executes one federation round's controller operations
+//!   under a [`FrameworkProfile`](crate::baselines::FrameworkProfile),
+//!   timing the six panels of Figs. 5–7 in isolation.
+//! * [`figures`] — the learner-count × framework sweeps for Figs. 5/6/7
+//!   and Table 2 (scaled-down by default; `FULL=1` for the paper's grid).
+
+pub mod figures;
+pub mod runner;
+pub mod stress;
+
+pub use figures::{figure_sweep, FigureConfig, FigureResult};
+pub use runner::{BenchRunner, ReportWriter};
+pub use stress::{stress_round, StressTimings};

@@ -1,0 +1,164 @@
+//! Measurement loops and report emission.
+
+use crate::util::{fmt_duration, Stopwatch, Summary};
+use std::io::Write;
+use std::path::PathBuf;
+use std::time::Duration;
+
+/// Warmup + sample loop (criterion's core loop, simplified).
+pub struct BenchRunner {
+    pub warmup: usize,
+    pub samples: usize,
+}
+
+impl BenchRunner {
+    pub fn new() -> BenchRunner {
+        // Keep CI cheap; benches override with FULL=1.
+        if full_scale() {
+            BenchRunner { warmup: 2, samples: 7 }
+        } else {
+            BenchRunner { warmup: 1, samples: 3 }
+        }
+    }
+
+    /// Measure `f` (seconds per call).
+    pub fn run(&self, mut f: impl FnMut()) -> Summary {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let sw = Stopwatch::start();
+            f();
+            samples.push(sw.elapsed_secs());
+        }
+        Summary::of(&samples)
+    }
+}
+
+impl Default for BenchRunner {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// `FULL=1` switches every bench to the paper's full sweep.
+pub fn full_scale() -> bool {
+    std::env::var("FULL").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Collects rows and writes aligned markdown to stdout + CSV to
+/// `bench_out/<name>.csv`.
+pub struct ReportWriter {
+    name: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl ReportWriter {
+    pub fn new(name: &str, headers: &[&str]) -> ReportWriter {
+        ReportWriter {
+            name: name.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, values: Vec<String>) {
+        assert_eq!(values.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(values);
+    }
+
+    /// Render the aligned markdown table.
+    pub fn to_markdown(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, v) in widths.iter_mut().zip(row) {
+                *w = (*w).max(v.len());
+            }
+        }
+        let mut out = String::new();
+        out.push('|');
+        for (h, w) in self.headers.iter().zip(&widths) {
+            out.push_str(&format!(" {h:<w$} |"));
+        }
+        out.push('\n');
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push('|');
+            for (v, w) in row.iter().zip(&widths) {
+                out.push_str(&format!(" {v:<w$} |"));
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Print markdown to stdout and persist CSV to `bench_out/`.
+    pub fn emit(&self) -> std::io::Result<PathBuf> {
+        println!("\n### {}\n", self.name);
+        println!("{}", self.to_markdown());
+        let dir = PathBuf::from("bench_out");
+        std::fs::create_dir_all(&dir)?;
+        let path = dir.join(format!("{}.csv", self.name));
+        let mut f = std::fs::File::create(&path)?;
+        writeln!(f, "{}", self.headers.join(","))?;
+        for row in &self.rows {
+            writeln!(f, "{}", row.join(","))?;
+        }
+        Ok(path)
+    }
+}
+
+/// Format a duration in seconds for table cells (paper reports seconds).
+pub fn fmt_secs(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 100.0 {
+        format!("{s:.0}")
+    } else if s >= 1.0 {
+        format!("{s:.2}")
+    } else {
+        fmt_duration(d)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runner_collects_samples() {
+        let r = BenchRunner { warmup: 1, samples: 4 };
+        let mut calls = 0;
+        let s = r.run(|| calls += 1);
+        assert_eq!(calls, 5);
+        assert_eq!(s.n, 4);
+        assert!(s.mean >= 0.0);
+    }
+
+    #[test]
+    fn report_markdown_is_aligned_and_csv_written() {
+        let mut w = ReportWriter::new("test-report", &["learners", "a", "b"]);
+        w.row(vec!["10".into(), "1.5".into(), "2.0".into()]);
+        w.row(vec!["200".into(), "10.25".into(), "x".into()]);
+        let md = w.to_markdown();
+        assert!(md.contains("| learners |"));
+        assert!(md.lines().count() == 4);
+        let path = w.emit().unwrap();
+        let csv = std::fs::read_to_string(&path).unwrap();
+        assert!(csv.starts_with("learners,a,b\n"));
+        assert!(csv.contains("200,10.25,x"));
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn fmt_secs_scales() {
+        assert_eq!(fmt_secs(Duration::from_secs(120)), "120");
+        assert_eq!(fmt_secs(Duration::from_millis(2500)), "2.50");
+        assert_eq!(fmt_secs(Duration::from_millis(12)), "12.00ms");
+    }
+}

@@ -1,0 +1,38 @@
+//! Minimal JSON parser + writer (serde_json replacement).
+//!
+//! Used for the AOT `artifacts/manifest.json`, metrics export, and bench
+//! result files. Supports the full JSON grammar except `\u` surrogate
+//! pairs beyond the BMP (sufficient for our machine-generated inputs).
+
+mod parse;
+mod value;
+mod write;
+
+pub use parse::{parse, ParseError};
+pub use value::Value;
+pub use write::{to_string, to_string_pretty};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_nested_document() {
+        let src = r#"{"name":"mlp","sizes":[1,2,3],"meta":{"ok":true,"x":null,"f":1.5}}"#;
+        let v = parse(src).unwrap();
+        assert_eq!(v.get("name").unwrap().as_str().unwrap(), "mlp");
+        assert_eq!(v.get("sizes").unwrap().as_array().unwrap().len(), 3);
+        assert!(v.get("meta").unwrap().get("ok").unwrap().as_bool().unwrap());
+        assert!(v.get("meta").unwrap().get("x").unwrap().is_null());
+        let back = parse(&to_string(&v)).unwrap();
+        assert_eq!(v, back);
+    }
+
+    #[test]
+    fn roundtrip_pretty() {
+        let v = parse(r#"{"a":[1,{"b":"c"}],"d":2.25}"#).unwrap();
+        let pretty = to_string_pretty(&v);
+        assert!(pretty.contains('\n'));
+        assert_eq!(parse(&pretty).unwrap(), v);
+    }
+}

@@ -1,0 +1,155 @@
+//! Synthetic regression dataset (Housing-dataset substitute).
+//!
+//! The paper trains the HousingMLP on the Boston-housing-style dataset,
+//! sampling 100 rows with replacement per learner — the data content is
+//! irrelevant to the stress test, only its shape. We generate a
+//! housing-like regression task: 8 standardized features, target = a
+//! fixed nonlinear function + noise, deterministic per (seed, learner).
+
+use crate::util::Rng;
+
+/// A learner's local train/test split, row-major `[n, features]`.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub features: usize,
+    pub x_train: Vec<f32>,
+    pub y_train: Vec<f32>,
+    pub x_test: Vec<f32>,
+    pub y_test: Vec<f32>,
+}
+
+impl Dataset {
+    /// Generate a synthetic housing-like dataset.
+    pub fn synthetic_housing(
+        features: usize,
+        train_rows: usize,
+        test_rows: usize,
+        seed: u64,
+    ) -> Dataset {
+        let mut rng = Rng::new(seed ^ 0x0BAD_5EED);
+        // Fixed "ground truth" weights shared across learners (IID-ish
+        // sampling with replacement, like the paper's setup).
+        let mut truth_rng = Rng::new(0xFEED_FACE);
+        let w: Vec<f64> = (0..features).map(|_| truth_rng.next_gaussian()).collect();
+        let gen = |rng: &mut Rng, rows: usize| -> (Vec<f32>, Vec<f32>) {
+            let mut x = Vec::with_capacity(rows * features);
+            let mut y = Vec::with_capacity(rows);
+            for _ in 0..rows {
+                let mut dot = 0.0f64;
+                let mut sq = 0.0f64;
+                for f in 0..features {
+                    let v = rng.next_gaussian();
+                    x.push(v as f32);
+                    dot += w[f] * v;
+                    sq += v * v;
+                }
+                // Mildly nonlinear target so the MLP has something to fit.
+                let target = dot + 0.1 * sq / features as f64 + 0.05 * rng.next_gaussian();
+                y.push(target as f32);
+            }
+            (x, y)
+        };
+        let (x_train, y_train) = gen(&mut rng, train_rows);
+        let (x_test, y_test) = gen(&mut rng, test_rows);
+        Dataset { features, x_train, y_train, x_test, y_test }
+    }
+
+    pub fn train_len(&self) -> usize {
+        self.y_train.len()
+    }
+
+    pub fn test_len(&self) -> usize {
+        self.y_test.len()
+    }
+
+    /// Iterate training batches of `batch` rows (last short batch kept).
+    pub fn train_batches(&self, batch: usize) -> impl Iterator<Item = (&[f32], &[f32])> {
+        BatchIter { x: &self.x_train, y: &self.y_train, features: self.features, batch, pos: 0 }
+    }
+
+    /// Iterate test batches.
+    pub fn test_batches(&self, batch: usize) -> impl Iterator<Item = (&[f32], &[f32])> {
+        BatchIter { x: &self.x_test, y: &self.y_test, features: self.features, batch, pos: 0 }
+    }
+}
+
+struct BatchIter<'a> {
+    x: &'a [f32],
+    y: &'a [f32],
+    features: usize,
+    batch: usize,
+    pos: usize,
+}
+
+impl<'a> Iterator for BatchIter<'a> {
+    type Item = (&'a [f32], &'a [f32]);
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.pos >= self.y.len() {
+            return None;
+        }
+        let end = (self.pos + self.batch).min(self.y.len());
+        let xb = &self.x[self.pos * self.features..end * self.features];
+        let yb = &self.y[self.pos..end];
+        self.pos = end;
+        Some((xb, yb))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_are_consistent() {
+        let d = Dataset::synthetic_housing(8, 100, 30, 1);
+        assert_eq!(d.train_len(), 100);
+        assert_eq!(d.test_len(), 30);
+        assert_eq!(d.x_train.len(), 800);
+        assert_eq!(d.x_test.len(), 240);
+    }
+
+    #[test]
+    fn deterministic_per_seed_distinct_across_seeds() {
+        let a = Dataset::synthetic_housing(4, 10, 5, 7);
+        let b = Dataset::synthetic_housing(4, 10, 5, 7);
+        let c = Dataset::synthetic_housing(4, 10, 5, 8);
+        assert_eq!(a.x_train, b.x_train);
+        assert_eq!(a.y_test, b.y_test);
+        assert_ne!(a.x_train, c.x_train);
+    }
+
+    #[test]
+    fn batching_covers_all_rows_once() {
+        let d = Dataset::synthetic_housing(3, 25, 10, 2);
+        let mut rows = 0;
+        for (xb, yb) in d.train_batches(10) {
+            assert_eq!(xb.len(), yb.len() * 3);
+            rows += yb.len();
+        }
+        assert_eq!(rows, 25); // 10 + 10 + 5
+        let sizes: Vec<usize> = d.train_batches(10).map(|(_, y)| y.len()).collect();
+        assert_eq!(sizes, vec![10, 10, 5]);
+    }
+
+    #[test]
+    fn features_are_roughly_standardized() {
+        let d = Dataset::synthetic_housing(8, 2000, 10, 3);
+        let n = d.x_train.len() as f64;
+        let mean: f64 = d.x_train.iter().map(|&v| v as f64).sum::<f64>() / n;
+        let var: f64 =
+            d.x_train.iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>() / n;
+        assert!(mean.abs() < 0.05, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.1, "var={var}");
+    }
+
+    #[test]
+    fn targets_correlate_with_features() {
+        // Sanity: the task must be learnable (non-degenerate targets).
+        let d = Dataset::synthetic_housing(8, 500, 10, 4);
+        let my: f64 = d.y_train.iter().map(|&v| v as f64).sum::<f64>() / 500.0;
+        let vy: f64 =
+            d.y_train.iter().map(|&v| (v as f64 - my).powi(2)).sum::<f64>() / 500.0;
+        assert!(vy > 0.5, "target variance too small: {vy}");
+    }
+}

@@ -1,0 +1,289 @@
+//! The federation learner (paper App. B, Figs. 9–10).
+//!
+//! A learner runs a servicer that accepts controller RPCs:
+//!
+//! * `RunTask` — submits local training to the background task-pool
+//!   executor and replies `Ack` immediately (the controller's
+//!   fire-and-forget dispatch). On completion the executor calls
+//!   `MarkTaskCompleted` back on the controller.
+//! * `EvaluateModel` — evaluates synchronously and replies in-call.
+//!
+//! Local compute is pluggable via [`Trainer`]: the stress tests use
+//! [`SyntheticTrainer`]; real training uses `runtime::XlaTrainer` (the
+//! AOT-compiled JAX train/eval steps).
+
+pub mod data;
+pub mod trainer;
+
+pub use data::Dataset;
+pub use trainer::{SyntheticTrainer, Trainer};
+
+use crate::net::{Psk, Service};
+use crate::proto::{Message, ModelProto, TaskSpec};
+use crate::tensor::{ByteOrder, DType};
+use crate::util::{log_debug, log_warn, ThreadPool};
+use anyhow::{Context, Result};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// A learner node.
+pub struct Learner {
+    pub id: String,
+    controller_endpoint: String,
+    psk: Psk,
+    trainer: Arc<dyn Trainer>,
+    dataset: Arc<Dataset>,
+    /// Background training-task pool ("training task pool executor",
+    /// Fig. 9). One worker: local tasks execute in submission order.
+    executor: ThreadPool,
+    /// Dedicated connection for completion callbacks.
+    callback_conn: Mutex<Option<Box<dyn crate::net::ClientConn>>>,
+    shutdown: AtomicBool,
+    tasks_completed: AtomicU64,
+}
+
+impl Learner {
+    pub fn new(
+        id: &str,
+        controller_endpoint: &str,
+        psk: Psk,
+        trainer: Arc<dyn Trainer>,
+        dataset: Dataset,
+    ) -> Arc<Learner> {
+        Arc::new(Learner {
+            id: id.to_string(),
+            controller_endpoint: controller_endpoint.to_string(),
+            psk,
+            trainer,
+            dataset: Arc::new(dataset),
+            executor: ThreadPool::new(1),
+            callback_conn: Mutex::new(None),
+            shutdown: AtomicBool::new(false),
+            tasks_completed: AtomicU64::new(0),
+        })
+    }
+
+    /// Register with the controller (Fig. 8 initialization).
+    pub fn register(&self, own_endpoint: &str) -> Result<usize> {
+        let reply = self
+            .controller_rpc(&Message::Register {
+                learner_id: self.id.clone(),
+                host: own_endpoint.to_string(),
+                port: 0,
+                num_samples: self.dataset.train_len(),
+            })
+            .context("registering with controller")?;
+        match reply {
+            Message::RegisterAck { accepted: true, assigned_index } => Ok(assigned_index),
+            other => anyhow::bail!("registration rejected: {}", other.kind()),
+        }
+    }
+
+    pub fn is_shutdown(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst)
+    }
+
+    pub fn tasks_completed(&self) -> u64 {
+        self.tasks_completed.load(Ordering::SeqCst)
+    }
+
+    fn controller_rpc(&self, msg: &Message) -> Result<Message> {
+        let mut guard = self.callback_conn.lock().unwrap();
+        if guard.is_none() {
+            *guard = Some(crate::net::connect(&self.controller_endpoint, self.psk)?);
+        }
+        match guard.as_mut().unwrap().rpc(msg) {
+            Ok(r) => Ok(r),
+            Err(e) => {
+                *guard = None;
+                Err(e)
+            }
+        }
+    }
+
+    /// Execute one training task and call back `MarkTaskCompleted`.
+    fn run_train_task(self: &Arc<Self>, task_id: u64, model: ModelProto, spec: TaskSpec) {
+        let learner = Arc::clone(self);
+        self.executor.spawn(move || {
+            if learner.is_shutdown() {
+                return;
+            }
+            let result = (|| -> Result<()> {
+                let m = model.to_model()?;
+                let (trained, meta) = learner.trainer.train(&m, &learner.dataset, &spec)?;
+                let reply = learner.controller_rpc(&Message::MarkTaskCompleted {
+                    task_id,
+                    learner_id: learner.id.clone(),
+                    model: ModelProto::from_model(&trained, DType::F32, ByteOrder::Little),
+                    meta,
+                })?;
+                if let Message::Error { detail } = reply {
+                    anyhow::bail!("controller rejected completion: {detail}");
+                }
+                Ok(())
+            })();
+            match result {
+                Ok(()) => {
+                    learner.tasks_completed.fetch_add(1, Ordering::SeqCst);
+                    log_debug("learner", &format!("{} completed task {task_id}", learner.id));
+                }
+                Err(e) => {
+                    log_warn("learner", &format!("{} task {task_id} failed: {e:#}", learner.id))
+                }
+            }
+        });
+    }
+}
+
+/// The learner servicer: the [`Service`] facade exposed to the network.
+pub struct LearnerServicer(pub Arc<Learner>);
+
+impl Service for LearnerServicer {
+    fn handle(&self, msg: Message) -> Message {
+        let learner = &self.0;
+        if learner.is_shutdown() {
+            return Message::Error { detail: "learner is shut down".into() };
+        }
+        match msg {
+            Message::RunTask { task_id, round: _, model, spec } => {
+                // Submit to the executor; Ack as soon as it is queued
+                // (Fig. 9: "the executor replies with an Ack message").
+                learner.run_train_task(task_id, model, spec);
+                Message::Ack { task_id, ok: true }
+            }
+            Message::EvaluateModel { task_id, round: _, model } => {
+                match model
+                    .to_model()
+                    .and_then(|m| learner.trainer.evaluate(&m, &learner.dataset))
+                {
+                    Ok(result) => Message::EvaluateModelReply {
+                        task_id,
+                        learner_id: learner.id.clone(),
+                        result,
+                    },
+                    Err(e) => Message::Error { detail: format!("eval failed: {e:#}") },
+                }
+            }
+            Message::Heartbeat { .. } => Message::HeartbeatAck {
+                component: format!("learner/{}", learner.id),
+                healthy: true,
+            },
+            Message::Shutdown => {
+                learner.shutdown.store(true, Ordering::SeqCst);
+                Message::Ack { task_id: 0, ok: true }
+            }
+            other => Message::Error { detail: format!("unexpected {}", other.kind()) },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelSpec;
+    use crate::proto::TaskMeta;
+    use crate::tensor::TensorModel;
+    use crate::util::Rng;
+    use std::sync::Mutex as StdMutex;
+
+    /// Controller stub capturing completions.
+    struct Capture {
+        completions: StdMutex<Vec<(u64, String, TaskMeta)>>,
+    }
+    impl Service for Capture {
+        fn handle(&self, msg: Message) -> Message {
+            match msg {
+                Message::MarkTaskCompleted { task_id, learner_id, meta, .. } => {
+                    self.completions.lock().unwrap().push((task_id, learner_id, meta));
+                    Message::Ack { task_id, ok: true }
+                }
+                Message::Register { .. } => {
+                    Message::RegisterAck { accepted: true, assigned_index: 0 }
+                }
+                other => Message::Error { detail: format!("unexpected {}", other.kind()) },
+            }
+        }
+    }
+
+    fn setup(tag: &str) -> (Arc<Learner>, Arc<Capture>, Box<dyn crate::net::ServerHandle>) {
+        let capture = Arc::new(Capture { completions: StdMutex::new(Vec::new()) });
+        let ep = format!("inproc://ctrl-{tag}");
+        let handle = crate::net::serve(&ep, capture.clone(), None).unwrap();
+        let spec = ModelSpec::mlp(4, 2, 8);
+        let dataset = Dataset::synthetic_housing(4, 50, 20, 7);
+        let learner = Learner::new(
+            "l0",
+            &ep,
+            None,
+            Arc::new(SyntheticTrainer::new(0, 0.01)),
+            dataset,
+        );
+        let _ = spec;
+        (learner, capture, handle)
+    }
+
+    fn model() -> ModelProto {
+        let layout = ModelSpec::mlp(4, 2, 8).tensor_layout();
+        let m = TensorModel::random_init(&layout, &mut Rng::new(5));
+        ModelProto::from_model(&m, DType::F32, ByteOrder::Little)
+    }
+
+    #[test]
+    fn run_task_acks_then_calls_back() {
+        let (learner, capture, _h) = setup("runtask");
+        let servicer = LearnerServicer(Arc::clone(&learner));
+        let reply = servicer.handle(Message::RunTask {
+            task_id: 9,
+            round: 1,
+            model: model(),
+            spec: TaskSpec { epochs: 1, batch_size: 10, learning_rate: 0.1, step_budget: 0 },
+        });
+        assert_eq!(reply, Message::Ack { task_id: 9, ok: true });
+        // Wait for the background completion callback.
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        while learner.tasks_completed() == 0 {
+            assert!(std::time::Instant::now() < deadline, "no completion");
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        let completions = capture.completions.lock().unwrap();
+        assert_eq!(completions.len(), 1);
+        assert_eq!(completions[0].0, 9);
+        assert_eq!(completions[0].1, "l0");
+        assert_eq!(completions[0].2.num_samples, 50);
+        assert!(completions[0].2.completed_steps > 0);
+    }
+
+    #[test]
+    fn evaluate_replies_synchronously() {
+        let (learner, _capture, _h) = setup("eval");
+        let servicer = LearnerServicer(Arc::clone(&learner));
+        let reply = servicer.handle(Message::EvaluateModel { task_id: 3, round: 1, model: model() });
+        match reply {
+            Message::EvaluateModelReply { task_id, learner_id, result } => {
+                assert_eq!(task_id, 3);
+                assert_eq!(learner_id, "l0");
+                assert!(result.loss.is_finite());
+                assert_eq!(result.num_samples, 20);
+            }
+            other => panic!("unexpected {}", other.kind()),
+        }
+    }
+
+    #[test]
+    fn shutdown_stops_accepting() {
+        let (learner, _capture, _h) = setup("shutdown");
+        let servicer = LearnerServicer(Arc::clone(&learner));
+        assert_eq!(servicer.handle(Message::Shutdown), Message::Ack { task_id: 0, ok: true });
+        assert!(matches!(
+            servicer.handle(Message::EvaluateModel { task_id: 1, round: 1, model: model() }),
+            Message::Error { .. }
+        ));
+    }
+
+    #[test]
+    fn register_roundtrip() {
+        let (learner, _capture, _h) = setup("register");
+        let idx = learner.register("inproc://l0").unwrap();
+        assert_eq!(idx, 0);
+    }
+}

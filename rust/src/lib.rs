@@ -1,0 +1,64 @@
+//! # MetisFL (reproduction)
+//!
+//! A federated-learning framework whose **federation controller is the
+//! first-class citizen**, reproducing *"MetisFL: An Embarrassingly
+//! Parallelized Controller for Scalable & Efficient Federated Learning
+//! Workflows"* (Stripelis et al., 2023).
+//!
+//! The crate is the Layer-3 coordinator of a three-layer stack:
+//!
+//! * **L3 (this crate)** — controller (parallel per-tensor aggregation,
+//!   model store, sync/semi-sync/async schedulers), learner runtime,
+//!   federation driver, wire protocol, metrics, and the baseline framework
+//!   behavioural models used by the paper's evaluation.
+//! * **L2 (`python/compile/model.py`)** — the HousingMLP model as JAX
+//!   `train_step` / `eval_step`, AOT-lowered to HLO text artifacts.
+//! * **L1 (`python/compile/kernels/`)** — Pallas kernels (fused dense,
+//!   weighted FedAvg, SGD update) called from L2.
+//!
+//! Python runs only at build time (`make artifacts`); the request path is
+//! pure Rust + PJRT.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use metisfl::prelude::*;
+//!
+//! let env = FederationEnv::builder("quickstart")
+//!     .learners(4)
+//!     .rounds(3)
+//!     .model(ModelSpec::mlp(10, 4, 8))
+//!     .build();
+//! let report = metisfl::driver::run_simulated(&env).unwrap();
+//! println!("final loss: {:?}", report.round_metrics.last());
+//! ```
+
+pub mod baselines;
+pub mod cli;
+pub mod config;
+pub mod controller;
+pub mod crypto;
+pub mod driver;
+pub mod harness;
+pub mod json;
+pub mod learner;
+pub mod metrics;
+pub mod net;
+pub mod proto;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+
+/// Convenience re-exports for the common API surface.
+pub mod prelude {
+    pub use crate::config::{FederationEnv, ModelSpec, Protocol};
+    pub use crate::controller::aggregation::{AggregationRule, FedAvg};
+    pub use crate::controller::Controller;
+    pub use crate::driver::{run_simulated, FederationReport};
+    pub use crate::learner::Learner;
+    pub use crate::metrics::FedOp;
+    pub use crate::tensor::{DType, Tensor, TensorModel};
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,239 @@
+//! MetisFL launcher.
+//!
+//! Subcommands mirror the paper's process roles (Fig. 8):
+//!
+//! * `metisfl driver --env <file>`      — full lifecycle from an env file
+//! * `metisfl controller --env <file>`  — standalone controller process
+//! * `metisfl learner --env <file> --index <i> --controller <ep>`
+//! * `metisfl simulate [...]`           — quick in-proc federation
+//! * `metisfl stress [...]`             — one cross-framework stress cell
+//! * `metisfl table1`                   — print the qualitative matrix
+//!
+//! Multi-process deployment: start the controller first, then learners,
+//! then `driver` (or use `simulate`, which hosts everything in-process).
+
+use metisfl::cli::{CliError, Command};
+use metisfl::config::{FederationEnv, ModelSpec, Protocol, TrainerKind};
+use metisfl::net::Service;
+use metisfl::util::log_info;
+use std::sync::Arc;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn usage() -> String {
+    "metisfl <driver|controller|learner|simulate|stress|table1> [options]\n\
+     Run `metisfl <subcommand> --help` for options."
+        .to_string()
+}
+
+fn run(args: &[String]) -> anyhow::Result<()> {
+    let Some(sub) = args.first() else {
+        println!("{}", usage());
+        return Ok(());
+    };
+    let rest = &args[1..];
+    match sub.as_str() {
+        "driver" => cmd_driver(rest),
+        "controller" => cmd_controller(rest),
+        "learner" => cmd_learner(rest),
+        "simulate" => cmd_simulate(rest),
+        "stress" => cmd_stress(rest),
+        "table1" => {
+            println!("{}", metisfl::baselines::capabilities::render_table());
+            Ok(())
+        }
+        "--help" | "-h" | "help" => {
+            println!("{}", usage());
+            Ok(())
+        }
+        other => anyhow::bail!("unknown subcommand '{other}'\n{}", usage()),
+    }
+}
+
+fn parse(cmd: &Command, raw: &[String]) -> anyhow::Result<metisfl::cli::Args> {
+    match cmd.parse(raw) {
+        Ok(a) => Ok(a),
+        Err(CliError::Help) => {
+            println!("{}", cmd.help());
+            std::process::exit(0);
+        }
+        Err(e) => Err(e.into()),
+    }
+}
+
+fn cmd_driver(raw: &[String]) -> anyhow::Result<()> {
+    let cmd = Command::new("metisfl driver", "run a full federation from an env file")
+        .opt("env", None, "federated environment YAML/JSON file")
+        .flag("distributed", "use localhost TCP instead of in-proc");
+    let a = parse(&cmd, raw)?;
+    let env_file = a
+        .get("env")
+        .ok_or_else(|| anyhow::anyhow!("--env <file> is required"))?;
+    let env = FederationEnv::from_file(env_file)?;
+    let report = if a.flag("distributed") {
+        metisfl::driver::run_distributed(&env)?
+    } else {
+        metisfl::driver::run_simulated(&env)?
+    };
+    print_report(&report);
+    Ok(())
+}
+
+fn cmd_controller(raw: &[String]) -> anyhow::Result<()> {
+    let cmd = Command::new("metisfl controller", "run a standalone controller process")
+        .opt("env", None, "federated environment YAML/JSON file")
+        .opt("listen", Some("tcp://127.0.0.1:42500"), "endpoint to serve on");
+    let a = parse(&cmd, raw)?;
+    let env = FederationEnv::from_file(
+        a.get("env").ok_or_else(|| anyhow::anyhow!("--env <file> is required"))?,
+    )?;
+    let controller = metisfl::controller::Controller::new(env, None)?;
+    let server = metisfl::net::serve(
+        a.get("listen").unwrap(),
+        Arc::clone(&controller) as Arc<dyn Service>,
+        None,
+    )?;
+    log_info("main", &format!("controller serving on {}", server.endpoint()));
+    while !controller.is_shutdown() {
+        std::thread::sleep(std::time::Duration::from_millis(100));
+    }
+    log_info("main", "controller received shutdown");
+    Ok(())
+}
+
+fn cmd_learner(raw: &[String]) -> anyhow::Result<()> {
+    let cmd = Command::new("metisfl learner", "run a standalone learner process")
+        .opt("env", None, "federated environment YAML/JSON file")
+        .opt("index", Some("0"), "learner index (data shard)")
+        .opt("controller", Some("tcp://127.0.0.1:42500"), "controller endpoint")
+        .opt("listen", Some("tcp://127.0.0.1:0"), "endpoint to serve on");
+    let a = parse(&cmd, raw)?;
+    let env = FederationEnv::from_file(
+        a.get("env").ok_or_else(|| anyhow::anyhow!("--env <file> is required"))?,
+    )?;
+    let index = a.get_usize("index")?;
+    let dataset = metisfl::learner::Dataset::synthetic_housing(
+        env.model.input_dim,
+        env.samples_per_learner,
+        env.samples_per_learner,
+        env.seed ^ ((index as u64) << 8),
+    );
+    let trainer: Arc<dyn metisfl::learner::Trainer> = match &env.trainer {
+        TrainerKind::Synthetic { step_time_us } => {
+            Arc::new(metisfl::learner::SyntheticTrainer::new(*step_time_us, 0.01))
+        }
+        TrainerKind::Xla { artifacts_dir } => {
+            Arc::new(metisfl::runtime::XlaTrainer::load(artifacts_dir, &env.model)?)
+        }
+    };
+    let learner = metisfl::learner::Learner::new(
+        &format!("learner-{index}"),
+        a.get("controller").unwrap(),
+        None,
+        trainer,
+        dataset,
+    );
+    let server = metisfl::net::serve(
+        a.get("listen").unwrap(),
+        Arc::new(metisfl::learner::LearnerServicer(Arc::clone(&learner))) as Arc<dyn Service>,
+        None,
+    )?;
+    learner.register(&server.endpoint())?;
+    log_info("main", &format!("learner-{index} serving on {}", server.endpoint()));
+    while !learner.is_shutdown() {
+        std::thread::sleep(std::time::Duration::from_millis(100));
+    }
+    Ok(())
+}
+
+fn cmd_simulate(raw: &[String]) -> anyhow::Result<()> {
+    let cmd = Command::new("metisfl simulate", "quick in-process federation")
+        .opt("learners", Some("10"), "number of learners")
+        .opt("rounds", Some("3"), "federation rounds")
+        .opt("layers", Some("10"), "hidden layers")
+        .opt("units", Some("32"), "units per hidden layer")
+        .opt("protocol", Some("sync"), "sync | semisync | async")
+        .opt("backend", Some("parallel"), "aggregation: sequential | parallel | xla")
+        .opt("artifacts", None, "artifacts dir (enables real XLA training)")
+        .flag("distributed", "use localhost TCP instead of in-proc");
+    let a = parse(&cmd, raw)?;
+    let protocol = match a.get("protocol").unwrap() {
+        "sync" => Protocol::Synchronous,
+        "semisync" => Protocol::SemiSynchronous { lambda: 1.0 },
+        "async" => Protocol::Asynchronous { staleness_alpha: 0.5 },
+        other => anyhow::bail!("unknown protocol '{other}'"),
+    };
+    let mut agg = metisfl::config::AggregationSpec::default();
+    agg.backend = match a.get("backend").unwrap() {
+        "sequential" => metisfl::config::AggregationBackend::Sequential,
+        "parallel" => metisfl::config::AggregationBackend::Parallel,
+        "xla" => metisfl::config::AggregationBackend::Xla,
+        other => anyhow::bail!("unknown backend '{other}'"),
+    };
+    let mut builder = FederationEnv::builder("simulate")
+        .learners(a.get_usize("learners")?)
+        .rounds(a.get_usize("rounds")?)
+        .model(ModelSpec::mlp(8, a.get_usize("layers")?, a.get_usize("units")?))
+        .protocol(protocol)
+        .aggregation(agg);
+    if let Some(dir) = a.get("artifacts") {
+        builder = builder.trainer(TrainerKind::Xla { artifacts_dir: dir.to_string() });
+    }
+    let env = builder.build();
+    let report = if a.flag("distributed") {
+        metisfl::driver::run_distributed(&env)?
+    } else {
+        metisfl::driver::run_simulated(&env)?
+    };
+    print_report(&report);
+    Ok(())
+}
+
+fn cmd_stress(raw: &[String]) -> anyhow::Result<()> {
+    let cmd = Command::new("metisfl stress", "one cross-framework stress cell (Figs. 5-7)")
+        .opt("learners", Some("10"), "number of learners")
+        .opt("layers", Some("10"), "hidden layers")
+        .opt("units", Some("32"), "units per hidden layer");
+    let a = parse(&cmd, raw)?;
+    let config = metisfl::harness::FigureConfig {
+        name: "stress",
+        spec: ModelSpec::mlp(8, a.get_usize("layers")?, a.get_usize("units")?),
+        learner_counts: vec![a.get_usize("learners")?],
+        frameworks: metisfl::baselines::Framework::ALL.to_vec(),
+        seed: 42,
+    };
+    metisfl::harness::figure_sweep(config).emit_panels()?;
+    Ok(())
+}
+
+fn print_report(report: &metisfl::driver::FederationReport) {
+    println!("\nfederation '{}' finished in {:?}", report.env_name, report.wall_clock);
+    println!(
+        "{:<7} {:>14} {:>14} {:>14} {:>14} {:>12}",
+        "round", "train_disp", "train_round", "aggregation", "fed_round", "eval_loss"
+    );
+    for r in &report.round_metrics {
+        println!(
+            "{:<7} {:>14} {:>14} {:>14} {:>14} {:>12}",
+            r.round,
+            format!("{:?}", r.train_dispatch),
+            format!("{:?}", r.train_round),
+            format!("{:?}", r.aggregation),
+            format!("{:?}", r.federation_round),
+            r.community_eval_loss.map(|l| format!("{l:.4}")).unwrap_or_else(|| "-".into()),
+        );
+    }
+    if report.missed_heartbeats > 0 {
+        println!("missed heartbeats: {}", report.missed_heartbeats);
+    }
+}

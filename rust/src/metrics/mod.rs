@@ -1,0 +1,240 @@
+//! Operation-level metrics: the paper's T1–T9 federation-round timeline.
+//!
+//! Figure 1 decomposes a federation round into the operations the
+//! evaluation measures in isolation (Figs. 5–7): train-task dispatch,
+//! training round, aggregation, eval-task dispatch, evaluation round, and
+//! the whole federation round. [`FedOp`] enumerates them; [`OpMetrics`]
+//! accumulates wall-clock samples per op; [`RoundReport`] is the per-round
+//! record the driver returns and the bench harness aggregates.
+
+use crate::util::stopwatch::OpTimer;
+use crate::util::Summary;
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+/// The federated operations measured by the paper's stress tests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum FedOp {
+    /// T7–T9 for training: controller → learners `RunTask` submission.
+    TrainDispatch,
+    /// T1–T4: local training wall-clock (dispatch → last completion).
+    TrainRound,
+    /// T4–T7: storing + selecting + aggregating learner models.
+    Aggregation,
+    /// Controller → learners `EvaluateModel` submission.
+    EvalDispatch,
+    /// Dispatch → last evaluation reply.
+    EvalRound,
+    /// T1–T9: the whole federation round.
+    FederationRound,
+    /// Model (de)serialization on the controller (codec ablation).
+    Serialization,
+    /// Learner-model insertion into the model store.
+    StoreInsert,
+}
+
+impl FedOp {
+    pub const ALL: [FedOp; 8] = [
+        FedOp::TrainDispatch,
+        FedOp::TrainRound,
+        FedOp::Aggregation,
+        FedOp::EvalDispatch,
+        FedOp::EvalRound,
+        FedOp::FederationRound,
+        FedOp::Serialization,
+        FedOp::StoreInsert,
+    ];
+
+    /// Stable name used in reports / CSV headers.
+    pub fn name(self) -> &'static str {
+        match self {
+            FedOp::TrainDispatch => "train_dispatch",
+            FedOp::TrainRound => "train_round",
+            FedOp::Aggregation => "aggregation",
+            FedOp::EvalDispatch => "eval_dispatch",
+            FedOp::EvalRound => "eval_round",
+            FedOp::FederationRound => "federation_round",
+            FedOp::Serialization => "serialization",
+            FedOp::StoreInsert => "store_insert",
+        }
+    }
+
+    /// The six panels of Figs. 5–7, in the paper's (a)–(f) order.
+    pub fn figure_panels() -> [FedOp; 6] {
+        [
+            FedOp::TrainDispatch,
+            FedOp::TrainRound,
+            FedOp::Aggregation,
+            FedOp::EvalDispatch,
+            FedOp::EvalRound,
+            FedOp::FederationRound,
+        ]
+    }
+}
+
+/// Accumulates duration samples per operation.
+#[derive(Debug, Default, Clone)]
+pub struct OpMetrics {
+    timers: BTreeMap<FedOp, OpTimer>,
+    samples: BTreeMap<FedOp, Vec<Duration>>,
+}
+
+impl OpMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, op: FedOp, d: Duration) {
+        self.timers.entry(op).or_default().record(d);
+        self.samples.entry(op).or_default().push(d);
+    }
+
+    /// Time a closure under `op`.
+    pub fn time<T>(&mut self, op: FedOp, f: impl FnOnce() -> T) -> T {
+        let sw = crate::util::Stopwatch::start();
+        let r = f();
+        self.record(op, sw.elapsed());
+        r
+    }
+
+    pub fn total(&self, op: FedOp) -> Duration {
+        self.timers.get(&op).map(|t| t.total()).unwrap_or(Duration::ZERO)
+    }
+
+    pub fn count(&self, op: FedOp) -> u64 {
+        self.timers.get(&op).map(|t| t.count()).unwrap_or(0)
+    }
+
+    pub fn mean(&self, op: FedOp) -> Duration {
+        self.timers.get(&op).map(|t| t.mean()).unwrap_or(Duration::ZERO)
+    }
+
+    pub fn samples(&self, op: FedOp) -> &[Duration] {
+        self.samples.get(&op).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    pub fn summary(&self, op: FedOp) -> Option<Summary> {
+        let s = self.samples(op);
+        if s.is_empty() {
+            None
+        } else {
+            Some(Summary::of_durations(s))
+        }
+    }
+
+    /// Merge another metrics set into this one.
+    pub fn merge(&mut self, other: &OpMetrics) {
+        for (op, samples) in &other.samples {
+            for d in samples {
+                self.record(*op, *d);
+            }
+        }
+    }
+
+    /// Export as a JSON object `{op: {mean, p50, ...}}` (seconds).
+    pub fn to_json(&self) -> crate::json::Value {
+        let mut obj = std::collections::BTreeMap::new();
+        for op in FedOp::ALL {
+            if let Some(s) = self.summary(op) {
+                obj.insert(
+                    op.name().to_string(),
+                    crate::json::Value::object(vec![
+                        ("n", (s.n).into()),
+                        ("mean_s", s.mean.into()),
+                        ("p50_s", s.p50.into()),
+                        ("p90_s", s.p90.into()),
+                        ("p99_s", s.p99.into()),
+                        ("max_s", s.max.into()),
+                    ]),
+                );
+            }
+        }
+        crate::json::Value::Object(obj)
+    }
+}
+
+/// Per-round record returned by the driver.
+#[derive(Debug, Clone)]
+pub struct RoundReport {
+    pub round: u64,
+    pub participants: usize,
+    pub completed: usize,
+    /// Sample-weighted mean learner eval loss on the post-aggregation
+    /// community model (None when the round ran without evaluation).
+    pub community_eval_loss: Option<f64>,
+    pub train_dispatch: Duration,
+    pub train_round: Duration,
+    pub aggregation: Duration,
+    pub eval_dispatch: Duration,
+    pub eval_round: Duration,
+    pub federation_round: Duration,
+}
+
+impl RoundReport {
+    pub fn value(&self, op: FedOp) -> Duration {
+        match op {
+            FedOp::TrainDispatch => self.train_dispatch,
+            FedOp::TrainRound => self.train_round,
+            FedOp::Aggregation => self.aggregation,
+            FedOp::EvalDispatch => self.eval_dispatch,
+            FedOp::EvalRound => self.eval_round,
+            FedOp::FederationRound => self.federation_round,
+            _ => Duration::ZERO,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_summarize() {
+        let mut m = OpMetrics::new();
+        m.record(FedOp::Aggregation, Duration::from_millis(10));
+        m.record(FedOp::Aggregation, Duration::from_millis(20));
+        assert_eq!(m.count(FedOp::Aggregation), 2);
+        assert_eq!(m.mean(FedOp::Aggregation), Duration::from_millis(15));
+        let s = m.summary(FedOp::Aggregation).unwrap();
+        assert_eq!(s.n, 2);
+        assert!(m.summary(FedOp::EvalRound).is_none());
+    }
+
+    #[test]
+    fn time_closure_records() {
+        let mut m = OpMetrics::new();
+        let v = m.time(FedOp::TrainDispatch, || 5);
+        assert_eq!(v, 5);
+        assert_eq!(m.count(FedOp::TrainDispatch), 1);
+    }
+
+    #[test]
+    fn merge_combines_samples() {
+        let mut a = OpMetrics::new();
+        let mut b = OpMetrics::new();
+        a.record(FedOp::TrainRound, Duration::from_millis(1));
+        b.record(FedOp::TrainRound, Duration::from_millis(3));
+        b.record(FedOp::EvalRound, Duration::from_millis(2));
+        a.merge(&b);
+        assert_eq!(a.count(FedOp::TrainRound), 2);
+        assert_eq!(a.count(FedOp::EvalRound), 1);
+    }
+
+    #[test]
+    fn json_export_has_all_recorded_ops() {
+        let mut m = OpMetrics::new();
+        m.record(FedOp::Aggregation, Duration::from_millis(5));
+        let j = m.to_json();
+        assert!(j.get("aggregation").is_some());
+        assert!(j.get("eval_round").is_none());
+        assert_eq!(j.get("aggregation").unwrap().get("n").unwrap().as_usize(), Some(1));
+    }
+
+    #[test]
+    fn figure_panels_order_matches_paper() {
+        let p = FedOp::figure_panels();
+        assert_eq!(p[0], FedOp::TrainDispatch); // (a)
+        assert_eq!(p[2], FedOp::Aggregation); // (c)
+        assert_eq!(p[5], FedOp::FederationRound); // (f)
+    }
+}

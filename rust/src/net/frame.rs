@@ -1,0 +1,82 @@
+//! Length-prefixed framing over any `Read`/`Write` pair.
+//!
+//! Frame = `u32` little-endian payload length + payload bytes. A maximum
+//! frame size guards against corrupt/hostile peers; models of the paper's
+//! largest stress-test size (10M f32 params ≈ 40 MiB) fit comfortably.
+
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+
+/// 256 MiB upper bound (≈6× the largest stress-test model).
+pub const MAX_FRAME: usize = 256 * 1024 * 1024;
+
+/// Write one frame.
+pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> Result<()> {
+    if payload.len() > MAX_FRAME {
+        bail!("frame too large: {}", payload.len());
+    }
+    w.write_all(&(payload.len() as u32).to_le_bytes()).context("frame header write")?;
+    w.write_all(payload).context("frame body write")?;
+    w.flush().context("frame flush")?;
+    Ok(())
+}
+
+/// Read one frame (blocking). Returns `None` on clean EOF at a frame
+/// boundary.
+pub fn read_frame(r: &mut impl Read) -> Result<Option<Vec<u8>>> {
+    let mut header = [0u8; 4];
+    match r.read_exact(&mut header) {
+        Ok(()) => {}
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
+        Err(e) => return Err(e).context("frame header read"),
+    }
+    let len = u32::from_le_bytes(header) as usize;
+    if len > MAX_FRAME {
+        bail!("incoming frame too large: {len}");
+    }
+    let mut buf = vec![0u8; len];
+    r.read_exact(&mut buf).context("frame body read")?;
+    Ok(Some(buf))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn roundtrip_frames() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello").unwrap();
+        write_frame(&mut buf, b"").unwrap();
+        write_frame(&mut buf, &[9u8; 1000]).unwrap();
+        let mut c = Cursor::new(buf);
+        assert_eq!(read_frame(&mut c).unwrap().unwrap(), b"hello");
+        assert_eq!(read_frame(&mut c).unwrap().unwrap(), b"");
+        assert_eq!(read_frame(&mut c).unwrap().unwrap(), vec![9u8; 1000]);
+        assert!(read_frame(&mut c).unwrap().is_none());
+    }
+
+    #[test]
+    fn truncated_body_is_error_not_eof() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello").unwrap();
+        buf.truncate(buf.len() - 2);
+        let mut c = Cursor::new(buf);
+        assert!(read_frame(&mut c).is_err());
+    }
+
+    #[test]
+    fn oversized_frame_rejected_without_allocation() {
+        let mut buf = Vec::new();
+        buf.extend((u32::MAX).to_le_bytes());
+        let mut c = Cursor::new(buf);
+        assert!(read_frame(&mut c).is_err());
+    }
+
+    #[test]
+    fn clean_eof_is_none() {
+        let mut c = Cursor::new(Vec::new());
+        assert!(read_frame(&mut c).unwrap().is_none());
+    }
+}

@@ -1,0 +1,163 @@
+//! In-process transport for simulated (standalone) federations.
+//!
+//! Services register in a global name registry; clients dispatch by name.
+//! By default each RPC still encodes + decodes both the request and the
+//! reply, so simulated runs pay the same serialization cost a localhost
+//! socket would (the paper's single-host stress tests). Set
+//! `METISFL_INPROC_ZEROCOPY=1` to skip the codec (useful for isolating
+//! serialization in the ablation benches).
+
+use super::{ClientConn, ServerHandle, Service};
+use crate::proto::Message;
+use anyhow::{bail, Result};
+use once_cell::sync::Lazy;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+static REGISTRY: Lazy<Mutex<HashMap<String, Arc<dyn Service>>>> =
+    Lazy::new(|| Mutex::new(HashMap::new()));
+
+fn zerocopy() -> bool {
+    static FLAG: Lazy<bool> =
+        Lazy::new(|| std::env::var("METISFL_INPROC_ZEROCOPY").map(|v| v == "1").unwrap_or(false));
+    *FLAG
+}
+
+/// Registered in-proc service; unregisters on drop/shutdown.
+pub struct InprocServer {
+    name: String,
+    registered: bool,
+}
+
+impl InprocServer {
+    pub fn register(name: &str, svc: Arc<dyn Service>) -> Result<InprocServer> {
+        let mut reg = REGISTRY.lock().unwrap();
+        if reg.contains_key(name) {
+            bail!("inproc service '{name}' already registered");
+        }
+        reg.insert(name.to_string(), svc);
+        Ok(InprocServer { name: name.to_string(), registered: true })
+    }
+}
+
+impl ServerHandle for InprocServer {
+    fn shutdown(&mut self) {
+        if self.registered {
+            REGISTRY.lock().unwrap().remove(&self.name);
+            self.registered = false;
+        }
+    }
+
+    fn endpoint(&self) -> String {
+        format!("inproc://{}", self.name)
+    }
+}
+
+impl Drop for InprocServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Client handle to a named in-proc service.
+///
+/// `send` performs the request serialization (the dispatch cost a socket
+/// write would pay); `recv` runs the handler and deserializes the reply.
+pub struct InprocClient {
+    svc: Arc<dyn Service>,
+    pending: Option<PendingReq>,
+}
+
+enum PendingReq {
+    Encoded(Vec<u8>),
+    Zerocopy(Message),
+}
+
+impl InprocClient {
+    pub fn connect(name: &str) -> Result<InprocClient> {
+        let reg = REGISTRY.lock().unwrap();
+        match reg.get(name) {
+            Some(svc) => Ok(InprocClient { svc: Arc::clone(svc), pending: None }),
+            None => bail!("inproc service '{name}' not found"),
+        }
+    }
+}
+
+impl ClientConn for InprocClient {
+    fn send(&mut self, msg: &Message) -> Result<()> {
+        if self.pending.is_some() {
+            bail!("inproc send() with a reply still pending");
+        }
+        self.pending = Some(if zerocopy() {
+            PendingReq::Zerocopy(msg.clone())
+        } else {
+            PendingReq::Encoded(msg.encode())
+        });
+        Ok(())
+    }
+
+    fn send_raw(&mut self, bytes: &[u8]) -> Result<()> {
+        if self.pending.is_some() {
+            bail!("inproc send_raw() with a reply still pending");
+        }
+        // One memcpy (the socket write a TCP peer would pay).
+        self.pending = Some(PendingReq::Encoded(bytes.to_vec()));
+        Ok(())
+    }
+
+    fn recv(&mut self) -> Result<Message> {
+        let pending =
+            self.pending.take().ok_or_else(|| anyhow::anyhow!("inproc recv() without send()"))?;
+        match pending {
+            PendingReq::Zerocopy(msg) => Ok(self.svc.handle(msg)),
+            PendingReq::Encoded(bytes) => {
+                let req = Message::decode(&bytes)?;
+                let reply = self.svc.handle(req);
+                Message::decode(&reply.encode())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Echo;
+    impl Service for Echo {
+        fn handle(&self, msg: Message) -> Message {
+            match msg {
+                Message::Heartbeat { from } => {
+                    Message::HeartbeatAck { component: from, healthy: true }
+                }
+                _ => Message::Error { detail: "unexpected".into() },
+            }
+        }
+    }
+
+    #[test]
+    fn register_connect_rpc_unregister() {
+        let mut s = InprocServer::register("rt-test", Arc::new(Echo)).unwrap();
+        assert_eq!(s.endpoint(), "inproc://rt-test");
+        let mut c = InprocClient::connect("rt-test").unwrap();
+        let r = c.rpc(&Message::Heartbeat { from: "a".into() }).unwrap();
+        assert_eq!(r, Message::HeartbeatAck { component: "a".into(), healthy: true });
+        s.shutdown();
+        assert!(InprocClient::connect("rt-test").is_err());
+    }
+
+    #[test]
+    fn duplicate_name_rejected() {
+        let _s = InprocServer::register("dup-test", Arc::new(Echo)).unwrap();
+        assert!(InprocServer::register("dup-test", Arc::new(Echo)).is_err());
+    }
+
+    #[test]
+    fn existing_client_survives_unregister() {
+        let s = InprocServer::register("surv-test", Arc::new(Echo)).unwrap();
+        let mut c = InprocClient::connect("surv-test").unwrap();
+        drop(s);
+        // The Arc keeps the service alive for already-connected clients.
+        assert!(c.rpc(&Message::Heartbeat { from: "b".into() }).is_ok());
+    }
+}

@@ -1,0 +1,151 @@
+//! Transport layer (gRPC replacement).
+//!
+//! All protocol interactions are request/response RPCs over one of two
+//! transports:
+//!
+//! * [`tcp`] — length-prefixed frames over `std::net::TcpStream`, one
+//!   handler thread per connection (the paper's "distributed" deployment),
+//!   optionally wrapped in the [`secure`] authenticated channel (the TLS
+//!   substitute of App. B Fig. 11).
+//! * [`inproc`] — an in-process service registry (the paper's
+//!   "standalone/simulated" deployment). By default messages are still
+//!   encoded + decoded so simulation timings include real (de)serialization
+//!   cost, matching a localhost-gRPC setup minus the kernel.
+//!
+//! A [`Service`] handles one request and returns one reply; [`ClientConn`]
+//! issues RPCs. Endpoints are parsed from strings:
+//! `tcp://127.0.0.1:4250`, `inproc://controller`.
+
+pub mod frame;
+pub mod inproc;
+pub mod secure;
+pub mod tcp;
+
+use crate::proto::Message;
+use anyhow::{bail, Result};
+use std::sync::Arc;
+
+/// A message handler: one request in, one reply out.
+pub trait Service: Send + Sync {
+    fn handle(&self, msg: Message) -> Message;
+}
+
+impl<F: Fn(Message) -> Message + Send + Sync> Service for F {
+    fn handle(&self, msg: Message) -> Message {
+        self(msg)
+    }
+}
+
+/// A client connection capable of blocking RPCs.
+///
+/// `send`/`recv` are split so callers can time the dispatch (serialize +
+/// submit) phase separately from the reply wait — the distinction the
+/// paper's "task dispatch time" vs "round time" metrics rely on. Calls
+/// must be strictly paired: send, then recv.
+pub trait ClientConn: Send {
+    /// Serialize and submit one request.
+    fn send(&mut self, msg: &Message) -> Result<()>;
+    /// Submit pre-encoded request bytes (broadcast fast path: the
+    /// controller encodes a round's model once and fans the same bytes
+    /// out to every learner — §Perf).
+    fn send_raw(&mut self, bytes: &[u8]) -> Result<()>;
+    /// Block for the matching reply.
+    fn recv(&mut self) -> Result<Message>;
+
+    /// Blocking request/response.
+    fn rpc(&mut self, msg: &Message) -> Result<Message> {
+        self.send(msg)?;
+        self.recv()
+    }
+}
+
+/// A running server; dropping it (or calling `shutdown`) stops the
+/// accept/dispatch loop.
+pub trait ServerHandle: Send {
+    fn shutdown(&mut self);
+    /// The concrete endpoint (with resolved port for tcp://host:0).
+    fn endpoint(&self) -> String;
+}
+
+/// Pre-shared key for the secure channel (None = plaintext).
+pub type Psk = Option<[u8; 32]>;
+
+/// Parse + connect to an endpoint string.
+pub fn connect(endpoint: &str, psk: Psk) -> Result<Box<dyn ClientConn>> {
+    if let Some(addr) = endpoint.strip_prefix("tcp://") {
+        Ok(Box::new(tcp::TcpClient::connect(addr, psk)?))
+    } else if let Some(name) = endpoint.strip_prefix("inproc://") {
+        Ok(Box::new(inproc::InprocClient::connect(name)?))
+    } else {
+        bail!("unknown endpoint scheme: {endpoint}");
+    }
+}
+
+/// Parse + serve on an endpoint string.
+pub fn serve(endpoint: &str, svc: Arc<dyn Service>, psk: Psk) -> Result<Box<dyn ServerHandle>> {
+    if let Some(addr) = endpoint.strip_prefix("tcp://") {
+        Ok(Box::new(tcp::TcpServer::bind(addr, svc, psk)?))
+    } else if let Some(name) = endpoint.strip_prefix("inproc://") {
+        Ok(Box::new(inproc::InprocServer::register(name, svc)?))
+    } else {
+        bail!("unknown endpoint scheme: {endpoint}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Echo;
+    impl Service for Echo {
+        fn handle(&self, msg: Message) -> Message {
+            match msg {
+                Message::Heartbeat { from } => {
+                    Message::HeartbeatAck { component: from, healthy: true }
+                }
+                other => Message::Error { detail: format!("unexpected {}", other.kind()) },
+            }
+        }
+    }
+
+    #[test]
+    fn endpoint_scheme_dispatch() {
+        assert!(connect("bogus://x", None).is_err());
+        assert!(serve("bogus://x", Arc::new(Echo), None).is_err());
+    }
+
+    #[test]
+    fn tcp_roundtrip_plaintext() {
+        let server = serve("tcp://127.0.0.1:0", Arc::new(Echo), None).unwrap();
+        let mut c = connect(&server.endpoint(), None).unwrap();
+        let reply = c.rpc(&Message::Heartbeat { from: "t".into() }).unwrap();
+        assert_eq!(reply, Message::HeartbeatAck { component: "t".into(), healthy: true });
+    }
+
+    #[test]
+    fn tcp_roundtrip_secure() {
+        let psk = Some([7u8; 32]);
+        let server = serve("tcp://127.0.0.1:0", Arc::new(Echo), psk).unwrap();
+        let mut c = connect(&server.endpoint(), psk).unwrap();
+        let reply = c.rpc(&Message::Heartbeat { from: "s".into() }).unwrap();
+        assert_eq!(reply, Message::HeartbeatAck { component: "s".into(), healthy: true });
+    }
+
+    #[test]
+    fn secure_psk_mismatch_fails() {
+        let server = serve("tcp://127.0.0.1:0", Arc::new(Echo), Some([1u8; 32])).unwrap();
+        let r = connect(&server.endpoint(), Some([2u8; 32]))
+            .and_then(|mut c| c.rpc(&Message::Heartbeat { from: "x".into() }));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn inproc_roundtrip() {
+        let server = serve("inproc://echo-test", Arc::new(Echo), None).unwrap();
+        let mut c = connect("inproc://echo-test", None).unwrap();
+        let reply = c.rpc(&Message::Heartbeat { from: "i".into() }).unwrap();
+        assert_eq!(reply, Message::HeartbeatAck { component: "i".into(), healthy: true });
+        drop(server);
+        assert!(connect("inproc://echo-test", None).is_err());
+    }
+}

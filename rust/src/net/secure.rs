@@ -1,0 +1,217 @@
+//! Authenticated encrypted channel — the TLS substitute.
+//!
+//! The paper secures gRPC channels with SSL certificates (App. B,
+//! Fig. 11). Offline we cannot link a TLS stack, so we exercise the same
+//! code-path shape with a pre-shared-key channel:
+//!
+//! 1. **Handshake**: both sides exchange 16-byte random nonces, derive a
+//!    session key `k = HMAC-SHA256(psk, "metisfl-session" ‖ nonce_c ‖
+//!    nonce_s)`, and exchange key-confirmation MACs (mutual
+//!    authentication; mismatched PSKs fail here).
+//! 2. **Records**: every frame is AES-128-CTR encrypted under `k[0..16]`
+//!    with a per-record counter IV, then authenticated with
+//!    HMAC-SHA256(k[16..32]) over (seq ‖ ciphertext) — encrypt-then-MAC.
+//!
+//! This is a *simulation* of TLS for benchmarking purposes (per-byte
+//! crypto cost on the wire path), documented in DESIGN.md §Substitutions.
+//! Do not reuse as a production transport.
+
+use aes::cipher::{BlockEncrypt, KeyInit};
+use aes::Aes128;
+use anyhow::{bail, Result};
+use hmac::{Hmac, Mac};
+use sha2::Sha256;
+
+type HmacSha256 = Hmac<Sha256>;
+
+const CONFIRM_C: &[u8] = b"metisfl-confirm-client";
+const CONFIRM_S: &[u8] = b"metisfl-confirm-server";
+
+/// Session state after a successful handshake.
+pub struct SecureSession {
+    enc_key: Aes128,
+    mac_key: [u8; 16],
+    send_seq: u64,
+    recv_seq: u64,
+}
+
+/// Nonce material exchanged in the clear during the handshake.
+pub struct Handshake {
+    pub nonce: [u8; 16],
+}
+
+impl Handshake {
+    pub fn new(entropy: &mut crate::util::Rng) -> Handshake {
+        let mut nonce = [0u8; 16];
+        for c in nonce.chunks_exact_mut(8) {
+            c.copy_from_slice(&entropy.next_u64().to_le_bytes());
+        }
+        Handshake { nonce }
+    }
+}
+
+fn hkdf(psk: &[u8; 32], client_nonce: &[u8; 16], server_nonce: &[u8; 16]) -> [u8; 32] {
+    let mut mac = <HmacSha256 as Mac>::new_from_slice(psk).expect("hmac key");
+    mac.update(b"metisfl-session");
+    mac.update(client_nonce);
+    mac.update(server_nonce);
+    mac.finalize().into_bytes().into()
+}
+
+/// Key-confirmation MAC each side sends to prove PSK knowledge.
+pub fn confirmation(
+    psk: &[u8; 32],
+    client_nonce: &[u8; 16],
+    server_nonce: &[u8; 16],
+    is_client: bool,
+) -> [u8; 32] {
+    let session = hkdf(psk, client_nonce, server_nonce);
+    let mut mac = <HmacSha256 as Mac>::new_from_slice(&session).expect("hmac key");
+    mac.update(if is_client { CONFIRM_C } else { CONFIRM_S });
+    mac.finalize().into_bytes().into()
+}
+
+impl SecureSession {
+    /// Derive a session from the PSK and both handshake nonces.
+    pub fn derive(psk: &[u8; 32], client_nonce: &[u8; 16], server_nonce: &[u8; 16]) -> Self {
+        let session = hkdf(psk, client_nonce, server_nonce);
+        let mut enc = [0u8; 16];
+        enc.copy_from_slice(&session[..16]);
+        let mut mac_key = [0u8; 16];
+        mac_key.copy_from_slice(&session[16..]);
+        SecureSession {
+            enc_key: Aes128::new(&enc.into()),
+            mac_key,
+            send_seq: 0,
+            recv_seq: 0,
+        }
+    }
+
+    /// Constant-time-ish comparison (length + fold over XOR).
+    fn ct_eq(a: &[u8], b: &[u8]) -> bool {
+        a.len() == b.len() && a.iter().zip(b).fold(0u8, |acc, (x, y)| acc | (x ^ y)) == 0
+    }
+
+    fn keystream_xor(&self, seq: u64, data: &mut [u8]) {
+        // AES-128-CTR with IV = seq ‖ block counter.
+        let mut block_idx: u64 = 0;
+        for chunk in data.chunks_mut(16) {
+            let mut block = [0u8; 16];
+            block[..8].copy_from_slice(&seq.to_le_bytes());
+            block[8..].copy_from_slice(&block_idx.to_le_bytes());
+            let mut b = block.into();
+            self.enc_key.encrypt_block(&mut b);
+            for (d, k) in chunk.iter_mut().zip(b.iter()) {
+                *d ^= k;
+            }
+            block_idx += 1;
+        }
+    }
+
+    fn record_mac(&self, seq: u64, ciphertext: &[u8]) -> [u8; 32] {
+        let mut mac = <HmacSha256 as Mac>::new_from_slice(&self.mac_key).expect("hmac key");
+        mac.update(&seq.to_le_bytes());
+        mac.update(ciphertext);
+        mac.finalize().into_bytes().into()
+    }
+
+    /// Encrypt+authenticate one outgoing record.
+    pub fn seal(&mut self, plaintext: &[u8]) -> Vec<u8> {
+        let seq = self.send_seq;
+        self.send_seq += 1;
+        let mut out = Vec::with_capacity(plaintext.len() + 32);
+        out.extend_from_slice(plaintext);
+        self.keystream_xor(seq, &mut out);
+        let tag = self.record_mac(seq, &out);
+        out.extend_from_slice(&tag);
+        out
+    }
+
+    /// Verify+decrypt one incoming record.
+    pub fn open(&mut self, record: &[u8]) -> Result<Vec<u8>> {
+        if record.len() < 32 {
+            bail!("secure record too short");
+        }
+        let seq = self.recv_seq;
+        let (ciphertext, tag) = record.split_at(record.len() - 32);
+        let expect = self.record_mac(seq, ciphertext);
+        if !Self::ct_eq(tag, &expect) {
+            bail!("secure record MAC mismatch (seq {seq})");
+        }
+        self.recv_seq += 1;
+        let mut out = ciphertext.to_vec();
+        self.keystream_xor(seq, &mut out);
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn pair(psk_c: [u8; 32], psk_s: [u8; 32]) -> (SecureSession, SecureSession, [u8; 32], [u8; 32]) {
+        let mut rng = Rng::new(1);
+        let hc = Handshake::new(&mut rng);
+        let hs = Handshake::new(&mut rng);
+        let client = SecureSession::derive(&psk_c, &hc.nonce, &hs.nonce);
+        let server = SecureSession::derive(&psk_s, &hc.nonce, &hs.nonce);
+        let conf_c = confirmation(&psk_c, &hc.nonce, &hs.nonce, true);
+        let conf_c_expected = confirmation(&psk_s, &hc.nonce, &hs.nonce, true);
+        (client, server, conf_c, conf_c_expected)
+    }
+
+    #[test]
+    fn seal_open_roundtrip() {
+        let (mut c, mut s, _, _) = pair([9u8; 32], [9u8; 32]);
+        for msg in [&b"hello"[..], &[0u8; 0][..], &[0xAB; 1000][..]] {
+            let sealed = c.seal(msg);
+            if !msg.is_empty() {
+                assert_ne!(&sealed[..msg.len()], msg); // actually encrypted
+            }
+            let opened = s.open(&sealed).unwrap();
+            assert_eq!(opened, msg);
+        }
+    }
+
+    #[test]
+    fn bidirectional_sequences_independent() {
+        let (mut c, mut s, _, _) = pair([3u8; 32], [3u8; 32]);
+        let a = c.seal(b"from client");
+        // Server->client uses the server's own send_seq starting at 0.
+        let b = s.seal(b"from server");
+        assert_eq!(s.open(&a).unwrap(), b"from client");
+        assert_eq!(c.open(&b).unwrap(), b"from server");
+    }
+
+    #[test]
+    fn tampering_detected() {
+        let (mut c, mut s, _, _) = pair([5u8; 32], [5u8; 32]);
+        let mut sealed = c.seal(b"payload");
+        sealed[0] ^= 1;
+        assert!(s.open(&sealed).is_err());
+    }
+
+    #[test]
+    fn replay_detected_via_sequence() {
+        let (mut c, mut s, _, _) = pair([5u8; 32], [5u8; 32]);
+        let sealed = c.seal(b"one");
+        assert!(s.open(&sealed).is_ok());
+        // Replaying the same record must fail (MAC binds seq=1 now).
+        assert!(s.open(&sealed).is_err());
+    }
+
+    #[test]
+    fn psk_mismatch_breaks_confirmation_and_records() {
+        let (mut c, mut s, conf_c, conf_c_expected) = pair([1u8; 32], [2u8; 32]);
+        assert_ne!(conf_c, conf_c_expected);
+        let sealed = c.seal(b"x");
+        assert!(s.open(&sealed).is_err());
+    }
+
+    #[test]
+    fn short_record_rejected() {
+        let (_, mut s, _, _) = pair([5u8; 32], [5u8; 32]);
+        assert!(s.open(&[0u8; 10]).is_err());
+    }
+}

@@ -1,0 +1,304 @@
+//! Framed TCP transport with optional secure channel.
+//!
+//! One handler thread per accepted connection; requests are processed in
+//! arrival order per connection, concurrently across connections — the
+//! same execution shape as a gRPC server with per-stream dispatch.
+
+use super::frame::{read_frame, write_frame};
+use super::secure::{confirmation, Handshake, SecureSession};
+use super::{ClientConn, Psk, ServerHandle, Service};
+use crate::proto::Message;
+use crate::util::{log_debug, log_warn, Rng};
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Client side of the PSK handshake (no-op when `psk` is None).
+fn client_handshake(stream: &mut TcpStream, psk: &Psk) -> Result<Option<SecureSession>> {
+    let Some(psk) = psk else { return Ok(None) };
+    let mut entropy = entropy_rng();
+    let hs = Handshake::new(&mut entropy);
+    stream.write_all(&hs.nonce)?;
+    let mut server_nonce = [0u8; 16];
+    stream.read_exact(&mut server_nonce)?;
+    // Send our confirmation, check theirs.
+    let my_conf = confirmation(psk, &hs.nonce, &server_nonce, true);
+    stream.write_all(&my_conf)?;
+    let mut their_conf = [0u8; 32];
+    stream.read_exact(&mut their_conf)?;
+    let expect = confirmation(psk, &hs.nonce, &server_nonce, false);
+    if their_conf != expect {
+        bail!("server key confirmation failed (PSK mismatch?)");
+    }
+    Ok(Some(SecureSession::derive(psk, &hs.nonce, &server_nonce)))
+}
+
+/// Server side of the PSK handshake.
+fn server_handshake(stream: &mut TcpStream, psk: &Psk) -> Result<Option<SecureSession>> {
+    let Some(psk) = psk else { return Ok(None) };
+    let mut client_nonce = [0u8; 16];
+    stream.read_exact(&mut client_nonce)?;
+    let mut entropy = entropy_rng();
+    let hs = Handshake::new(&mut entropy);
+    stream.write_all(&hs.nonce)?;
+    let mut their_conf = [0u8; 32];
+    stream.read_exact(&mut their_conf)?;
+    let expect = confirmation(psk, &client_nonce, &hs.nonce, true);
+    if their_conf != expect {
+        bail!("client key confirmation failed (PSK mismatch?)");
+    }
+    let my_conf = confirmation(psk, &client_nonce, &hs.nonce, false);
+    stream.write_all(&my_conf)?;
+    Ok(Some(SecureSession::derive(psk, &client_nonce, &hs.nonce)))
+}
+
+/// Process-unique nonce entropy: time seed + counter (not a CSPRNG; the
+/// channel is a TLS *simulation*, see `secure.rs`).
+fn entropy_rng() -> Rng {
+    static COUNTER: AtomicU64 = AtomicU64::new(0);
+    let t = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_nanos() as u64)
+        .unwrap_or(0x5EED);
+    Rng::new(t ^ COUNTER.fetch_add(0x9E37_79B9, Ordering::Relaxed))
+}
+
+fn send_msg(
+    stream: &mut TcpStream,
+    session: &mut Option<SecureSession>,
+    msg: &Message,
+) -> Result<()> {
+    let payload = msg.encode();
+    match session {
+        Some(s) => write_frame(stream, &s.seal(&payload)),
+        None => write_frame(stream, &payload),
+    }
+}
+
+fn recv_msg(
+    stream: &mut TcpStream,
+    session: &mut Option<SecureSession>,
+) -> Result<Option<Message>> {
+    let Some(raw) = read_frame(stream)? else { return Ok(None) };
+    let payload = match session {
+        Some(s) => s.open(&raw)?,
+        None => raw,
+    };
+    Ok(Some(Message::decode(&payload)?))
+}
+
+/// Blocking RPC client over one TCP connection.
+pub struct TcpClient {
+    stream: TcpStream,
+    session: Option<SecureSession>,
+}
+
+impl TcpClient {
+    pub fn connect(addr: &str, psk: Psk) -> Result<TcpClient> {
+        let mut last_err = None;
+        // Brief retry window: learners may dial the controller while its
+        // listener is still coming up.
+        for _ in 0..50 {
+            match TcpStream::connect(addr) {
+                Ok(mut stream) => {
+                    stream.set_nodelay(true).ok();
+                    let session = client_handshake(&mut stream, &psk)
+                        .with_context(|| format!("handshake with {addr}"))?;
+                    return Ok(TcpClient { stream, session });
+                }
+                Err(e) => {
+                    last_err = Some(e);
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+            }
+        }
+        bail!("connect {addr}: {:?}", last_err);
+    }
+}
+
+impl ClientConn for TcpClient {
+    fn send(&mut self, msg: &Message) -> Result<()> {
+        send_msg(&mut self.stream, &mut self.session, msg)
+    }
+
+    fn send_raw(&mut self, bytes: &[u8]) -> Result<()> {
+        match &mut self.session {
+            Some(s) => write_frame(&mut self.stream, &s.seal(bytes)),
+            None => write_frame(&mut self.stream, bytes),
+        }
+    }
+
+    fn recv(&mut self) -> Result<Message> {
+        match recv_msg(&mut self.stream, &mut self.session)? {
+            Some(reply) => Ok(reply),
+            None => bail!("connection closed awaiting reply"),
+        }
+    }
+}
+
+/// Accept-loop server; one thread per connection.
+pub struct TcpServer {
+    local: String,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl TcpServer {
+    pub fn bind(addr: &str, svc: Arc<dyn Service>, psk: Psk) -> Result<TcpServer> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+        let local = format!("tcp://{}", listener.local_addr()?);
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let local2 = local.clone();
+        let accept_thread = std::thread::Builder::new()
+            .name("metisfl-accept".into())
+            .spawn(move || {
+                // Poll with a timeout so shutdown is prompt.
+                listener.set_nonblocking(true).ok();
+                let mut conn_threads = Vec::new();
+                while !stop2.load(Ordering::SeqCst) {
+                    match listener.accept() {
+                        Ok((stream, peer)) => {
+                            log_debug("net", &format!("{local2} accepted {peer}"));
+                            let svc = Arc::clone(&svc);
+                            let psk = psk;
+                            let h = std::thread::Builder::new()
+                                .name("metisfl-conn".into())
+                                .spawn(move || {
+                                    if let Err(e) = conn_loop(stream, svc, psk) {
+                                        log_debug("net", &format!("conn ended: {e:#}"));
+                                    }
+                                })
+                                .expect("spawn conn thread");
+                            conn_threads.push(h);
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(5));
+                        }
+                        Err(e) => {
+                            log_warn("net", &format!("accept error: {e}"));
+                            break;
+                        }
+                    }
+                }
+                // Connections close themselves when peers disconnect; we
+                // do not join here to keep shutdown prompt.
+            })
+            .expect("spawn accept thread");
+        Ok(TcpServer { local, stop, accept_thread: Some(accept_thread) })
+    }
+}
+
+fn conn_loop(mut stream: TcpStream, svc: Arc<dyn Service>, psk: Psk) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let mut session = server_handshake(&mut stream, &psk)?;
+    while let Some(msg) = recv_msg(&mut stream, &mut session)? {
+        let reply = svc.handle(msg);
+        send_msg(&mut stream, &mut session, &reply)?;
+    }
+    Ok(())
+}
+
+impl ServerHandle for TcpServer {
+    fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+    }
+
+    fn endpoint(&self) -> String {
+        self.local.clone()
+    }
+}
+
+impl Drop for TcpServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Count(AtomicU64);
+    impl Service for Count {
+        fn handle(&self, msg: Message) -> Message {
+            let n = self.0.fetch_add(1, Ordering::SeqCst);
+            match msg {
+                Message::Heartbeat { .. } => {
+                    Message::HeartbeatAck { component: format!("{n}"), healthy: true }
+                }
+                _ => Message::Error { detail: "unexpected".into() },
+            }
+        }
+    }
+
+    #[test]
+    fn sequential_rpcs_on_one_connection() {
+        let svc = Arc::new(Count(AtomicU64::new(0)));
+        let mut server = TcpServer::bind("127.0.0.1:0", svc, None).unwrap();
+        let addr = server.endpoint().strip_prefix("tcp://").unwrap().to_string();
+        let mut c = TcpClient::connect(&addr, None).unwrap();
+        for i in 0..5u64 {
+            let reply = c.rpc(&Message::Heartbeat { from: "t".into() }).unwrap();
+            assert_eq!(
+                reply,
+                Message::HeartbeatAck { component: format!("{i}"), healthy: true }
+            );
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn concurrent_connections_served() {
+        let svc = Arc::new(Count(AtomicU64::new(0)));
+        let server = TcpServer::bind("127.0.0.1:0", svc.clone(), None).unwrap();
+        let addr = server.endpoint().strip_prefix("tcp://").unwrap().to_string();
+        let mut joins = Vec::new();
+        for _ in 0..4 {
+            let addr = addr.clone();
+            joins.push(std::thread::spawn(move || {
+                let mut c = TcpClient::connect(&addr, None).unwrap();
+                for _ in 0..3 {
+                    c.rpc(&Message::Heartbeat { from: "x".into() }).unwrap();
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        assert_eq!(svc.0.load(Ordering::SeqCst), 12);
+    }
+
+    #[test]
+    fn large_model_payload_roundtrips() {
+        use crate::proto::{ModelProto, TensorProto};
+        use crate::tensor::{ByteOrder, DType, Tensor};
+        struct EchoModel;
+        impl Service for EchoModel {
+            fn handle(&self, msg: Message) -> Message {
+                match msg {
+                    Message::ShipModel { model } => Message::ModelReply { model, round: 0 },
+                    _ => Message::Error { detail: "unexpected".into() },
+                }
+            }
+        }
+        let server = TcpServer::bind("127.0.0.1:0", Arc::new(EchoModel), None).unwrap();
+        let addr = server.endpoint().strip_prefix("tcp://").unwrap().to_string();
+        let mut c = TcpClient::connect(&addr, None).unwrap();
+        let t = Tensor::new("big", vec![1024, 256], vec![1.25f32; 1024 * 256]);
+        let model = ModelProto {
+            tensors: vec![TensorProto::from_tensor(&t, DType::F32, ByteOrder::Little)],
+        };
+        let reply = c.rpc(&Message::ShipModel { model: model.clone() }).unwrap();
+        match reply {
+            Message::ModelReply { model: m, .. } => assert_eq!(m, model),
+            other => panic!("unexpected {}", other.kind()),
+        }
+    }
+}

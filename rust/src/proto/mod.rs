@@ -1,0 +1,508 @@
+//! Message schema for controller ⇄ learner ⇄ driver communication.
+//!
+//! Mirrors the RPCs in the paper's Appendix B flow diagrams (Figs. 8–10):
+//! registration, `RunTask` (async train dispatch, acked immediately),
+//! `MarkTaskCompleted` (learner-initiated completion callback),
+//! `EvaluateModel` (synchronous eval call), heartbeats, and shutdown.
+//! Models travel as sequences of byte tensors (§3).
+
+pub mod wire;
+
+use crate::tensor::{ByteOrder, DType, Tensor, TensorModel};
+use anyhow::{bail, Result};
+use wire::{WireReader, WireWriter};
+
+/// Wire form of one tensor: structure metadata + raw bytes (paper §3).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorProto {
+    pub name: String,
+    pub dtype: DType,
+    pub byte_order: ByteOrder,
+    pub shape: Vec<usize>,
+    pub data: Vec<u8>,
+}
+
+impl TensorProto {
+    /// Encode an in-memory tensor (f32) into wire form.
+    pub fn from_tensor(t: &Tensor, dtype: DType, order: ByteOrder) -> TensorProto {
+        TensorProto {
+            name: t.name.clone(),
+            dtype,
+            byte_order: order,
+            shape: t.shape.clone(),
+            data: t.encode_data(dtype, order),
+        }
+    }
+
+    /// Decode back into an in-memory f32 tensor.
+    pub fn to_tensor(&self) -> Result<Tensor> {
+        Tensor::decode_data(
+            self.name.clone(),
+            self.shape.clone(),
+            self.dtype,
+            self.byte_order,
+            &self.data,
+        )
+    }
+
+    fn write(&self, w: &mut WireWriter) {
+        w.put_str(&self.name);
+        w.put_u8(self.dtype.code());
+        w.put_u8(self.byte_order.code());
+        w.put_usize_list(&self.shape);
+        w.put_bytes(&self.data);
+    }
+
+    fn read(r: &mut WireReader) -> Result<TensorProto> {
+        let name = r.get_str()?;
+        let dtype = DType::from_code(r.get_u8()?)?;
+        let byte_order = ByteOrder::from_code(r.get_u8()?)?;
+        let shape = r.get_usize_list()?;
+        let data = r.get_bytes()?.to_vec();
+        let expected: usize = shape.iter().product::<usize>() * dtype.size_bytes();
+        if data.len() != expected {
+            bail!("tensor '{name}': payload {} != expected {expected}", data.len());
+        }
+        Ok(TensorProto { name, dtype, byte_order, shape, data })
+    }
+}
+
+/// Wire form of a whole model.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ModelProto {
+    pub tensors: Vec<TensorProto>,
+}
+
+impl ModelProto {
+    pub fn from_model(m: &TensorModel, dtype: DType, order: ByteOrder) -> ModelProto {
+        ModelProto {
+            tensors: m.tensors.iter().map(|t| TensorProto::from_tensor(t, dtype, order)).collect(),
+        }
+    }
+
+    pub fn to_model(&self) -> Result<TensorModel> {
+        Ok(TensorModel::new(
+            self.tensors.iter().map(|t| t.to_tensor()).collect::<Result<Vec<_>>>()?,
+        ))
+    }
+
+    pub fn byte_size(&self) -> usize {
+        self.tensors.iter().map(|t| t.data.len()).sum()
+    }
+
+    fn write(&self, w: &mut WireWriter) {
+        w.put_varint(self.tensors.len() as u64);
+        for t in &self.tensors {
+            t.write(w);
+        }
+    }
+
+    fn read(r: &mut WireReader) -> Result<ModelProto> {
+        let n = r.get_varint()? as usize;
+        if n > 1_000_000 {
+            bail!("implausible tensor count {n}");
+        }
+        let tensors = (0..n).map(|_| TensorProto::read(r)).collect::<Result<Vec<_>>>()?;
+        Ok(ModelProto { tensors })
+    }
+}
+
+/// Local-training hyperparameters carried by a train task.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskSpec {
+    pub epochs: usize,
+    pub batch_size: usize,
+    pub learning_rate: f64,
+    /// Semi-sync step budget: max local SGD steps this round (0 = by epochs).
+    pub step_budget: usize,
+}
+
+/// Execution metadata returned with a completed train task (App. B:
+/// "training time per batch, number of completed steps and epochs").
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct TaskMeta {
+    pub train_time_per_batch_us: u64,
+    pub completed_steps: usize,
+    pub completed_epochs: usize,
+    pub num_samples: usize,
+    pub train_loss: f64,
+}
+
+/// Evaluation result.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct EvalResult {
+    pub loss: f64,
+    pub num_samples: usize,
+    pub eval_time_us: u64,
+}
+
+/// All protocol messages. Request/response pairing is handled by the
+/// transport; `Ack` is the generic fast reply.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Message {
+    /// Learner → controller: join the federation.
+    Register { learner_id: String, host: String, port: u16, num_samples: usize },
+    /// Controller → learner reply.
+    RegisterAck { accepted: bool, assigned_index: usize },
+    /// Driver → controller: initial community model state.
+    ShipModel { model: ModelProto },
+    /// Controller → learner: asynchronous training dispatch (Fig. 9).
+    RunTask { task_id: u64, round: u64, model: ModelProto, spec: TaskSpec },
+    /// Immediate acknowledgment (false = submission failed).
+    Ack { task_id: u64, ok: bool },
+    /// Learner → controller: local training finished (Fig. 9).
+    MarkTaskCompleted { task_id: u64, learner_id: String, model: ModelProto, meta: TaskMeta },
+    /// Controller → learner: synchronous evaluation call (Fig. 10).
+    EvaluateModel { task_id: u64, round: u64, model: ModelProto },
+    /// Learner → controller eval reply (carried in the same call).
+    EvaluateModelReply { task_id: u64, learner_id: String, result: EvalResult },
+    /// Driver → any: liveness probe (Fig. 8 "Monitoring").
+    Heartbeat { from: String },
+    HeartbeatAck { component: String, healthy: bool },
+    /// Driver → any: orderly shutdown (learners first, then controller).
+    Shutdown,
+    /// Generic error reply.
+    Error { detail: String },
+    /// Driver → controller: fetch current community model.
+    GetModel,
+    ModelReply { model: ModelProto, round: u64 },
+}
+
+// Message discriminants on the wire.
+const T_REGISTER: u8 = 1;
+const T_REGISTER_ACK: u8 = 2;
+const T_SHIP_MODEL: u8 = 3;
+const T_RUN_TASK: u8 = 4;
+const T_ACK: u8 = 5;
+const T_MARK_COMPLETED: u8 = 6;
+const T_EVALUATE: u8 = 7;
+const T_EVALUATE_REPLY: u8 = 8;
+const T_HEARTBEAT: u8 = 9;
+const T_HEARTBEAT_ACK: u8 = 10;
+const T_SHUTDOWN: u8 = 11;
+const T_ERROR: u8 = 12;
+const T_GET_MODEL: u8 = 13;
+const T_MODEL_REPLY: u8 = 14;
+
+impl Message {
+    /// Serialize to wire bytes (discriminant + positional fields).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = WireWriter::with_capacity(self.encoded_size_hint());
+        match self {
+            Message::Register { learner_id, host, port, num_samples } => {
+                w.put_u8(T_REGISTER);
+                w.put_str(learner_id);
+                w.put_str(host);
+                w.put_varint(*port as u64);
+                w.put_varint(*num_samples as u64);
+            }
+            Message::RegisterAck { accepted, assigned_index } => {
+                w.put_u8(T_REGISTER_ACK);
+                w.put_bool(*accepted);
+                w.put_varint(*assigned_index as u64);
+            }
+            Message::ShipModel { model } => {
+                w.put_u8(T_SHIP_MODEL);
+                model.write(&mut w);
+            }
+            Message::RunTask { task_id, round, model, spec } => {
+                w.put_u8(T_RUN_TASK);
+                w.put_varint(*task_id);
+                w.put_varint(*round);
+                model.write(&mut w);
+                w.put_varint(spec.epochs as u64);
+                w.put_varint(spec.batch_size as u64);
+                w.put_f64(spec.learning_rate);
+                w.put_varint(spec.step_budget as u64);
+            }
+            Message::Ack { task_id, ok } => {
+                w.put_u8(T_ACK);
+                w.put_varint(*task_id);
+                w.put_bool(*ok);
+            }
+            Message::MarkTaskCompleted { task_id, learner_id, model, meta } => {
+                w.put_u8(T_MARK_COMPLETED);
+                w.put_varint(*task_id);
+                w.put_str(learner_id);
+                model.write(&mut w);
+                w.put_varint(meta.train_time_per_batch_us);
+                w.put_varint(meta.completed_steps as u64);
+                w.put_varint(meta.completed_epochs as u64);
+                w.put_varint(meta.num_samples as u64);
+                w.put_f64(meta.train_loss);
+            }
+            Message::EvaluateModel { task_id, round, model } => {
+                w.put_u8(T_EVALUATE);
+                w.put_varint(*task_id);
+                w.put_varint(*round);
+                model.write(&mut w);
+            }
+            Message::EvaluateModelReply { task_id, learner_id, result } => {
+                w.put_u8(T_EVALUATE_REPLY);
+                w.put_varint(*task_id);
+                w.put_str(learner_id);
+                w.put_f64(result.loss);
+                w.put_varint(result.num_samples as u64);
+                w.put_varint(result.eval_time_us);
+            }
+            Message::Heartbeat { from } => {
+                w.put_u8(T_HEARTBEAT);
+                w.put_str(from);
+            }
+            Message::HeartbeatAck { component, healthy } => {
+                w.put_u8(T_HEARTBEAT_ACK);
+                w.put_str(component);
+                w.put_bool(*healthy);
+            }
+            Message::Shutdown => w.put_u8(T_SHUTDOWN),
+            Message::Error { detail } => {
+                w.put_u8(T_ERROR);
+                w.put_str(detail);
+            }
+            Message::GetModel => w.put_u8(T_GET_MODEL),
+            Message::ModelReply { model, round } => {
+                w.put_u8(T_MODEL_REPLY);
+                model.write(&mut w);
+                w.put_varint(*round);
+            }
+        }
+        w.into_bytes()
+    }
+
+    /// Parse from wire bytes.
+    pub fn decode(buf: &[u8]) -> Result<Message> {
+        let mut r = WireReader::new(buf);
+        let tag = r.get_u8()?;
+        let msg = match tag {
+            T_REGISTER => Message::Register {
+                learner_id: r.get_str()?,
+                host: r.get_str()?,
+                port: r.get_varint()? as u16,
+                num_samples: r.get_varint()? as usize,
+            },
+            T_REGISTER_ACK => Message::RegisterAck {
+                accepted: r.get_bool()?,
+                assigned_index: r.get_varint()? as usize,
+            },
+            T_SHIP_MODEL => Message::ShipModel { model: ModelProto::read(&mut r)? },
+            T_RUN_TASK => Message::RunTask {
+                task_id: r.get_varint()?,
+                round: r.get_varint()?,
+                model: ModelProto::read(&mut r)?,
+                spec: TaskSpec {
+                    epochs: r.get_varint()? as usize,
+                    batch_size: r.get_varint()? as usize,
+                    learning_rate: r.get_f64()?,
+                    step_budget: r.get_varint()? as usize,
+                },
+            },
+            T_ACK => Message::Ack { task_id: r.get_varint()?, ok: r.get_bool()? },
+            T_MARK_COMPLETED => Message::MarkTaskCompleted {
+                task_id: r.get_varint()?,
+                learner_id: r.get_str()?,
+                model: ModelProto::read(&mut r)?,
+                meta: TaskMeta {
+                    train_time_per_batch_us: r.get_varint()?,
+                    completed_steps: r.get_varint()? as usize,
+                    completed_epochs: r.get_varint()? as usize,
+                    num_samples: r.get_varint()? as usize,
+                    train_loss: r.get_f64()?,
+                },
+            },
+            T_EVALUATE => Message::EvaluateModel {
+                task_id: r.get_varint()?,
+                round: r.get_varint()?,
+                model: ModelProto::read(&mut r)?,
+            },
+            T_EVALUATE_REPLY => Message::EvaluateModelReply {
+                task_id: r.get_varint()?,
+                learner_id: r.get_str()?,
+                result: EvalResult {
+                    loss: r.get_f64()?,
+                    num_samples: r.get_varint()? as usize,
+                    eval_time_us: r.get_varint()?,
+                },
+            },
+            T_HEARTBEAT => Message::Heartbeat { from: r.get_str()? },
+            T_HEARTBEAT_ACK => Message::HeartbeatAck {
+                component: r.get_str()?,
+                healthy: r.get_bool()?,
+            },
+            T_SHUTDOWN => Message::Shutdown,
+            T_ERROR => Message::Error { detail: r.get_str()? },
+            T_GET_MODEL => Message::GetModel,
+            T_MODEL_REPLY => {
+                let model = ModelProto::read(&mut r)?;
+                Message::ModelReply { model, round: r.get_varint()? }
+            }
+            t => bail!("unknown message tag {t}"),
+        };
+        if !r.is_done() {
+            bail!("trailing bytes after message (tag {tag})");
+        }
+        Ok(msg)
+    }
+
+    /// Rough encoded size, to pre-size buffers (exact for tensor payloads).
+    pub fn encoded_size_hint(&self) -> usize {
+        let model_size = |m: &ModelProto| {
+            m.byte_size() + m.tensors.iter().map(|t| t.name.len() + 24).sum::<usize>() + 16
+        };
+        match self {
+            Message::ShipModel { model }
+            | Message::EvaluateModel { model, .. }
+            | Message::ModelReply { model, .. } => model_size(model) + 32,
+            Message::RunTask { model, .. } => model_size(model) + 64,
+            Message::MarkTaskCompleted { model, .. } => model_size(model) + 96,
+            _ => 128,
+        }
+    }
+
+    /// Short human-readable name for logs/metrics.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Message::Register { .. } => "Register",
+            Message::RegisterAck { .. } => "RegisterAck",
+            Message::ShipModel { .. } => "ShipModel",
+            Message::RunTask { .. } => "RunTask",
+            Message::Ack { .. } => "Ack",
+            Message::MarkTaskCompleted { .. } => "MarkTaskCompleted",
+            Message::EvaluateModel { .. } => "EvaluateModel",
+            Message::EvaluateModelReply { .. } => "EvaluateModelReply",
+            Message::Heartbeat { .. } => "Heartbeat",
+            Message::HeartbeatAck { .. } => "HeartbeatAck",
+            Message::Shutdown => "Shutdown",
+            Message::Error { .. } => "Error",
+            Message::GetModel => "GetModel",
+            Message::ModelReply { .. } => "ModelReply",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelSpec;
+    use crate::util::Rng;
+
+    fn sample_model() -> TensorModel {
+        let layout = ModelSpec::mlp(4, 2, 8).tensor_layout();
+        let mut rng = Rng::new(3);
+        TensorModel::random_init(&layout, &mut rng)
+    }
+
+    #[test]
+    fn tensor_proto_roundtrip() {
+        let m = sample_model();
+        let p = TensorProto::from_tensor(&m.tensors[0], DType::F32, ByteOrder::Little);
+        let t = p.to_tensor().unwrap();
+        assert_eq!(t, m.tensors[0]);
+    }
+
+    #[test]
+    fn model_proto_roundtrip_all_dtypes() {
+        let m = sample_model();
+        for dtype in [DType::F32, DType::F64] {
+            for order in [ByteOrder::Little, ByteOrder::Big] {
+                let p = ModelProto::from_model(&m, dtype, order);
+                let back = p.to_model().unwrap();
+                assert_eq!(back.param_count(), m.param_count());
+                assert!(m.max_abs_diff(&back) == 0.0, "{dtype:?} {order:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn every_message_roundtrips() {
+        let model = ModelProto::from_model(&sample_model(), DType::F32, ByteOrder::Little);
+        let msgs = vec![
+            Message::Register {
+                learner_id: "l1".into(),
+                host: "127.0.0.1".into(),
+                port: 9000,
+                num_samples: 100,
+            },
+            Message::RegisterAck { accepted: true, assigned_index: 3 },
+            Message::ShipModel { model: model.clone() },
+            Message::RunTask {
+                task_id: 7,
+                round: 2,
+                model: model.clone(),
+                spec: TaskSpec {
+                    epochs: 1,
+                    batch_size: 100,
+                    learning_rate: 0.01,
+                    step_budget: 0,
+                },
+            },
+            Message::Ack { task_id: 7, ok: true },
+            Message::MarkTaskCompleted {
+                task_id: 7,
+                learner_id: "l1".into(),
+                model: model.clone(),
+                meta: TaskMeta {
+                    train_time_per_batch_us: 1500,
+                    completed_steps: 10,
+                    completed_epochs: 1,
+                    num_samples: 100,
+                    train_loss: 0.5,
+                },
+            },
+            Message::EvaluateModel { task_id: 8, round: 2, model: model.clone() },
+            Message::EvaluateModelReply {
+                task_id: 8,
+                learner_id: "l1".into(),
+                result: EvalResult { loss: 0.25, num_samples: 100, eval_time_us: 800 },
+            },
+            Message::Heartbeat { from: "driver".into() },
+            Message::HeartbeatAck { component: "controller".into(), healthy: true },
+            Message::Shutdown,
+            Message::Error { detail: "nope".into() },
+            Message::GetModel,
+            Message::ModelReply { model, round: 5 },
+        ];
+        for m in msgs {
+            let bytes = m.encode();
+            let back = Message::decode(&bytes).unwrap();
+            assert_eq!(back, m, "roundtrip failed for {}", m.kind());
+        }
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        assert!(Message::decode(&[]).is_err());
+        assert!(Message::decode(&[200]).is_err());
+        // Valid tag but truncated body.
+        let mut bytes = Message::Heartbeat { from: "x".into() }.encode();
+        bytes.truncate(bytes.len() - 1);
+        assert!(Message::decode(&bytes).is_err());
+        // Trailing bytes rejected.
+        let mut bytes = Message::Shutdown.encode();
+        bytes.push(0);
+        assert!(Message::decode(&bytes).is_err());
+    }
+
+    #[test]
+    fn tensor_payload_length_validated() {
+        let m = sample_model();
+        let mut p = TensorProto::from_tensor(&m.tensors[0], DType::F32, ByteOrder::Little);
+        p.data.truncate(p.data.len() - 4);
+        let mut w = WireWriter::new();
+        w.put_u8(super::T_SHIP_MODEL);
+        w.put_varint(1);
+        p.write(&mut w);
+        assert!(Message::decode(&w.into_bytes()).is_err());
+    }
+
+    #[test]
+    fn size_hint_covers_encoded_size() {
+        let model = ModelProto::from_model(&sample_model(), DType::F32, ByteOrder::Little);
+        let m = Message::RunTask {
+            task_id: 1,
+            round: 1,
+            model,
+            spec: TaskSpec { epochs: 1, batch_size: 10, learning_rate: 0.1, step_budget: 0 },
+        };
+        assert!(m.encoded_size_hint() >= m.encode().len());
+    }
+}

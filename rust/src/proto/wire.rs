@@ -1,0 +1,269 @@
+//! Binary wire primitives (protobuf replacement).
+//!
+//! Positional encoding with varint lengths: each message type writes its
+//! fields in a fixed order, so no per-field tags are needed. Tensor
+//! payloads are raw byte blobs (bulk `memcpy`), which is the property the
+//! paper credits for MetisFL's low (de)serialization overhead (§3).
+
+use anyhow::{bail, Result};
+
+/// Append-only wire writer.
+#[derive(Default)]
+pub struct WireWriter {
+    buf: Vec<u8>,
+}
+
+impl WireWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity(n: usize) -> Self {
+        WireWriter { buf: Vec::with_capacity(n) }
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    /// LEB128 unsigned varint.
+    pub fn put_varint(&mut self, mut v: u64) {
+        loop {
+            let byte = (v & 0x7F) as u8;
+            v >>= 7;
+            if v == 0 {
+                self.buf.push(byte);
+                return;
+            }
+            self.buf.push(byte | 0x80);
+        }
+    }
+
+    /// Zig-zag signed varint.
+    pub fn put_signed(&mut self, v: i64) {
+        self.put_varint(((v << 1) ^ (v >> 63)) as u64);
+    }
+
+    pub fn put_f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_bool(&mut self, v: bool) {
+        self.put_u8(v as u8);
+    }
+
+    /// Length-prefixed byte blob.
+    pub fn put_bytes(&mut self, v: &[u8]) {
+        self.put_varint(v.len() as u64);
+        self.buf.extend_from_slice(v);
+    }
+
+    /// Length-prefixed UTF-8 string.
+    pub fn put_str(&mut self, v: &str) {
+        self.put_bytes(v.as_bytes());
+    }
+
+    /// Length-prefixed list of usize (shapes etc.).
+    pub fn put_usize_list(&mut self, v: &[usize]) {
+        self.put_varint(v.len() as u64);
+        for &x in v {
+            self.put_varint(x as u64);
+        }
+    }
+}
+
+/// Cursor-based wire reader.
+pub struct WireReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> WireReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        WireReader { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.remaining() == 0
+    }
+
+    pub fn get_u8(&mut self) -> Result<u8> {
+        if self.pos >= self.buf.len() {
+            bail!("wire underrun at {}", self.pos);
+        }
+        let v = self.buf[self.pos];
+        self.pos += 1;
+        Ok(v)
+    }
+
+    pub fn get_varint(&mut self) -> Result<u64> {
+        let mut v: u64 = 0;
+        let mut shift = 0u32;
+        loop {
+            let byte = self.get_u8()?;
+            if shift >= 64 {
+                bail!("varint overflow");
+            }
+            v |= ((byte & 0x7F) as u64) << shift;
+            if byte & 0x80 == 0 {
+                return Ok(v);
+            }
+            shift += 7;
+        }
+    }
+
+    pub fn get_signed(&mut self) -> Result<i64> {
+        let u = self.get_varint()?;
+        Ok(((u >> 1) as i64) ^ -((u & 1) as i64))
+    }
+
+    pub fn get_f32(&mut self) -> Result<f32> {
+        let b = self.take(4)?;
+        Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn get_f64(&mut self) -> Result<f64> {
+        let b = self.take(8)?;
+        Ok(f64::from_le_bytes(b.try_into().unwrap()))
+    }
+
+    pub fn get_bool(&mut self) -> Result<bool> {
+        Ok(self.get_u8()? != 0)
+    }
+
+    pub fn get_bytes(&mut self) -> Result<&'a [u8]> {
+        let n = self.get_varint()? as usize;
+        self.take(n)
+    }
+
+    pub fn get_str(&mut self) -> Result<String> {
+        let b = self.get_bytes()?;
+        Ok(std::str::from_utf8(b)
+            .map_err(|_| anyhow::anyhow!("invalid utf-8 string on wire"))?
+            .to_string())
+    }
+
+    pub fn get_usize_list(&mut self) -> Result<Vec<usize>> {
+        let n = self.get_varint()? as usize;
+        if n > self.remaining() {
+            bail!("list length {n} exceeds remaining {}", self.remaining());
+        }
+        (0..n).map(|_| self.get_varint().map(|v| v as usize)).collect()
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            bail!("wire underrun: need {n}, have {}", self.remaining());
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+
+    #[test]
+    fn varint_boundaries() {
+        for v in [0u64, 1, 127, 128, 300, 16383, 16384, u32::MAX as u64, u64::MAX] {
+            let mut w = WireWriter::new();
+            w.put_varint(v);
+            let bytes = w.into_bytes();
+            let mut r = WireReader::new(&bytes);
+            assert_eq!(r.get_varint().unwrap(), v);
+            assert!(r.is_done());
+        }
+    }
+
+    #[test]
+    fn signed_zigzag_roundtrip() {
+        for v in [0i64, 1, -1, 63, -64, i64::MAX, i64::MIN] {
+            let mut w = WireWriter::new();
+            w.put_signed(v);
+            let bytes = w.into_bytes();
+            assert_eq!(WireReader::new(&bytes).get_signed().unwrap(), v);
+        }
+    }
+
+    #[test]
+    fn mixed_fields_roundtrip() {
+        let mut w = WireWriter::new();
+        w.put_str("hello");
+        w.put_f32(1.5);
+        w.put_f64(-2.25);
+        w.put_bool(true);
+        w.put_bytes(&[1, 2, 3]);
+        w.put_usize_list(&[10, 0, 999]);
+        let bytes = w.into_bytes();
+        let mut r = WireReader::new(&bytes);
+        assert_eq!(r.get_str().unwrap(), "hello");
+        assert_eq!(r.get_f32().unwrap(), 1.5);
+        assert_eq!(r.get_f64().unwrap(), -2.25);
+        assert!(r.get_bool().unwrap());
+        assert_eq!(r.get_bytes().unwrap(), &[1, 2, 3]);
+        assert_eq!(r.get_usize_list().unwrap(), vec![10, 0, 999]);
+        assert!(r.is_done());
+    }
+
+    #[test]
+    fn underrun_is_an_error_not_a_panic() {
+        let mut r = WireReader::new(&[0x80]); // unterminated varint
+        assert!(r.get_varint().is_err());
+        let mut r = WireReader::new(&[5, 1, 2]); // bytes blob longer than buffer
+        assert!(r.get_bytes().is_err());
+        let mut r = WireReader::new(&[]);
+        assert!(r.get_f32().is_err());
+    }
+
+    #[test]
+    fn malicious_list_length_rejected() {
+        let mut w = WireWriter::new();
+        w.put_varint(u64::MAX); // claims a huge list
+        let bytes = w.into_bytes();
+        let mut r = WireReader::new(&bytes);
+        assert!(r.get_usize_list().is_err());
+    }
+
+    #[test]
+    fn prop_random_field_sequences_roundtrip() {
+        prop_check("wire roundtrip", 100, |g| {
+            let blob = g.bytes(0..300);
+            let s_len = g.usize_in(0..20);
+            let s: String = (0..s_len).map(|_| 'x').collect();
+            let v = g.rng().next_u64();
+            let mut w = WireWriter::new();
+            w.put_varint(v);
+            w.put_bytes(&blob);
+            w.put_str(&s);
+            let bytes = w.into_bytes();
+            let mut r = WireReader::new(&bytes);
+            assert_eq!(r.get_varint().unwrap(), v);
+            assert_eq!(r.get_bytes().unwrap(), &blob[..]);
+            assert_eq!(r.get_str().unwrap(), s);
+            assert!(r.is_done());
+        });
+    }
+}

@@ -1,0 +1,482 @@
+//! PJRT runtime: load and execute the AOT-compiled L2/L1 artifacts.
+//!
+//! `make artifacts` lowers the JAX model (`python/compile/`) to HLO text
+//! files plus a `manifest.json`. This module loads them through the `xla`
+//! crate (`PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `compile` → `execute`) and exposes:
+//!
+//! * [`XlaTrainer`] — a [`Trainer`] running the compiled
+//!   `train_step`/`eval_step` (real local training on the request path,
+//!   no Python),
+//! * [`xla_fedavg_backend`] — the compiled Pallas lincomb kernel as an
+//!   aggregation [`Backend`](crate::controller::aggregation::Backend)
+//!   for the XLA-aggregation ablation.
+//!
+//! The `xla` crate's types are `Rc`-based (thread-confined), so a single
+//! [`XlaService`] thread owns the PJRT client and all compiled
+//! executables; callers talk to it over channels with plain `Vec<f32>`
+//! payloads. One compile per artifact per process (cached), shared by all
+//! simulated learners.
+
+use crate::config::ModelSpec;
+use crate::json::{self, Value};
+use crate::learner::{Dataset, Trainer};
+use crate::proto::{EvalResult, TaskMeta, TaskSpec};
+use crate::tensor::TensorModel;
+use crate::util::{log_info, Stopwatch};
+use anyhow::{bail, Context, Result};
+use once_cell::sync::Lazy;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+use std::sync::Mutex;
+
+/// A tensor crossing the service channel: data + shape.
+pub type HostTensor = (Vec<f32>, Vec<i64>);
+
+enum XlaReq {
+    Compile { path: PathBuf, reply: mpsc::Sender<Result<usize>> },
+    Execute { exe: usize, inputs: Vec<HostTensor>, reply: mpsc::Sender<Result<Vec<Vec<f32>>>> },
+}
+
+/// Handle to the process-wide XLA service thread.
+pub struct XlaService {
+    tx: Mutex<mpsc::Sender<XlaReq>>,
+}
+
+static SERVICE: Lazy<XlaService> = Lazy::new(XlaService::spawn);
+
+impl XlaService {
+    /// The process-wide service (PJRT client created on first use).
+    pub fn global() -> &'static XlaService {
+        &SERVICE
+    }
+
+    fn spawn() -> XlaService {
+        let (tx, rx) = mpsc::channel::<XlaReq>();
+        std::thread::Builder::new()
+            .name("metisfl-xla".into())
+            .spawn(move || Self::serve(rx))
+            .expect("spawn xla service");
+        XlaService { tx: Mutex::new(tx) }
+    }
+
+    fn serve(rx: mpsc::Receiver<XlaReq>) {
+        let client = match xla::PjRtClient::cpu() {
+            Ok(c) => c,
+            Err(e) => {
+                // Fail every request with a clear error.
+                while let Ok(req) = rx.recv() {
+                    let msg = format!("PJRT CPU client unavailable: {e}");
+                    match req {
+                        XlaReq::Compile { reply, .. } => {
+                            let _ = reply.send(Err(anyhow::anyhow!(msg)));
+                        }
+                        XlaReq::Execute { reply, .. } => {
+                            let _ = reply.send(Err(anyhow::anyhow!(msg)));
+                        }
+                    }
+                }
+                return;
+            }
+        };
+        log_info("runtime", &format!("PJRT client up: {}", client.platform_name()));
+        let mut exes: Vec<xla::PjRtLoadedExecutable> = Vec::new();
+        let mut cache: HashMap<PathBuf, usize> = HashMap::new();
+        while let Ok(req) = rx.recv() {
+            match req {
+                XlaReq::Compile { path, reply } => {
+                    let result = (|| -> Result<usize> {
+                        if let Some(&id) = cache.get(&path) {
+                            return Ok(id);
+                        }
+                        let sw = Stopwatch::start();
+                        let proto = xla::HloModuleProto::from_text_file(&path)
+                            .map_err(|e| anyhow::anyhow!("parse {path:?}: {e}"))?;
+                        let comp = xla::XlaComputation::from_proto(&proto);
+                        let exe = client
+                            .compile(&comp)
+                            .map_err(|e| anyhow::anyhow!("compile {path:?}: {e}"))?;
+                        let id = exes.len();
+                        exes.push(exe);
+                        cache.insert(path.clone(), id);
+                        log_info(
+                            "runtime",
+                            &format!("compiled {path:?} in {:?} (exe #{id})", sw.elapsed()),
+                        );
+                        Ok(id)
+                    })();
+                    let _ = reply.send(result);
+                }
+                XlaReq::Execute { exe, inputs, reply } => {
+                    let result = (|| -> Result<Vec<Vec<f32>>> {
+                        let e = exes
+                            .get(exe)
+                            .ok_or_else(|| anyhow::anyhow!("bad exe id {exe}"))?;
+                        let literals: Vec<xla::Literal> = inputs
+                            .iter()
+                            .map(|(data, shape)| -> Result<xla::Literal> {
+                                let lit = xla::Literal::vec1(data);
+                                if shape.len() == 1 && shape[0] as usize == data.len() {
+                                    Ok(lit)
+                                } else {
+                                    lit.reshape(shape)
+                                        .map_err(|er| anyhow::anyhow!("reshape: {er}"))
+                                }
+                            })
+                            .collect::<Result<_>>()?;
+                        let out = e
+                            .execute::<xla::Literal>(&literals)
+                            .map_err(|er| anyhow::anyhow!("execute: {er}"))?;
+                        let root = out[0][0]
+                            .to_literal_sync()
+                            .map_err(|er| anyhow::anyhow!("fetch: {er}"))?;
+                        // Artifacts are lowered with return_tuple=True.
+                        let parts = root
+                            .to_tuple()
+                            .map_err(|er| anyhow::anyhow!("untuple: {er}"))?;
+                        parts
+                            .into_iter()
+                            .map(|p| {
+                                p.to_vec::<f32>().map_err(|er| anyhow::anyhow!("to_vec: {er}"))
+                            })
+                            .collect()
+                    })();
+                    let _ = reply.send(result);
+                }
+            }
+        }
+    }
+
+    /// Compile (or fetch from cache) an HLO text file.
+    pub fn compile(&self, path: &Path) -> Result<usize> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send(XlaReq::Compile { path: path.to_path_buf(), reply })
+            .map_err(|_| anyhow::anyhow!("xla service down"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("xla service dropped reply"))?
+    }
+
+    /// Execute a compiled module; returns the decomposed output tuple.
+    pub fn execute(&self, exe: usize, inputs: Vec<HostTensor>) -> Result<Vec<Vec<f32>>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send(XlaReq::Execute { exe, inputs, reply })
+            .map_err(|_| anyhow::anyhow!("xla service down"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("xla service dropped reply"))?
+    }
+}
+
+/// One model variant's artifact set, per `manifest.json`.
+#[derive(Debug, Clone)]
+pub struct VariantInfo {
+    pub name: String,
+    pub train_file: String,
+    pub eval_file: String,
+    pub lincomb_file: String,
+    pub param_count: usize,
+    pub input_dim: usize,
+    pub hidden_layers: usize,
+    pub hidden_units: usize,
+    pub batch: usize,
+}
+
+/// Loaded artifact manifest.
+pub struct Artifacts {
+    pub dir: PathBuf,
+    variants: HashMap<String, VariantInfo>,
+}
+
+impl Artifacts {
+    pub fn load(dir: impl Into<PathBuf>) -> Result<Artifacts> {
+        let dir = dir.into();
+        let manifest_path = dir.join("manifest.json");
+        let src = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?} — run `make artifacts`"))?;
+        let v = json::parse(&src).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+        let mut variants = HashMap::new();
+        let vmap = v
+            .get("variants")
+            .and_then(Value::as_object)
+            .ok_or_else(|| anyhow::anyhow!("manifest missing 'variants'"))?;
+        for (name, info) in vmap {
+            let get_str = |k: &str| -> Result<String> {
+                Ok(info
+                    .get(k)
+                    .and_then(Value::as_str)
+                    .ok_or_else(|| anyhow::anyhow!("variant {name}: missing {k}"))?
+                    .to_string())
+            };
+            let get_n = |k: &str| -> Result<usize> {
+                info.get(k)
+                    .and_then(Value::as_usize)
+                    .ok_or_else(|| anyhow::anyhow!("variant {name}: missing {k}"))
+            };
+            variants.insert(
+                name.clone(),
+                VariantInfo {
+                    name: name.clone(),
+                    train_file: get_str("train")?,
+                    eval_file: get_str("eval")?,
+                    lincomb_file: get_str("lincomb")?,
+                    param_count: get_n("param_count")?,
+                    input_dim: get_n("input_dim")?,
+                    hidden_layers: get_n("hidden_layers")?,
+                    hidden_units: get_n("hidden_units")?,
+                    batch: get_n("batch")?,
+                },
+            );
+        }
+        Ok(Artifacts { dir, variants })
+    }
+
+    pub fn variant(&self, name: &str) -> Option<&VariantInfo> {
+        self.variants.get(name)
+    }
+
+    pub fn variant_names(&self) -> Vec<&str> {
+        self.variants.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Find the variant matching a model spec.
+    pub fn for_spec(&self, spec: &ModelSpec) -> Result<&VariantInfo> {
+        self.variant(&spec.variant_name()).ok_or_else(|| {
+            anyhow::anyhow!(
+                "no artifact variant '{}' (have: {:?}) — run `make artifacts`",
+                spec.variant_name(),
+                self.variants.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    fn file(&self, name: &str) -> PathBuf {
+        self.dir.join(name)
+    }
+}
+
+/// Real local training via the AOT-compiled JAX steps.
+pub struct XlaTrainer {
+    train_exe: usize,
+    eval_exe: usize,
+    batch: usize,
+    features: usize,
+    layout: Vec<(String, Vec<usize>)>,
+    param_count: usize,
+}
+
+impl XlaTrainer {
+    /// Load + compile the artifacts for `spec` (cached per process).
+    pub fn load(artifacts_dir: &str, spec: &ModelSpec) -> Result<XlaTrainer> {
+        let arts = Artifacts::load(artifacts_dir)?;
+        let info = arts.for_spec(spec)?;
+        if info.param_count != spec.param_count() {
+            bail!(
+                "artifact param count {} != spec {} — stale artifacts?",
+                info.param_count,
+                spec.param_count()
+            );
+        }
+        let svc = XlaService::global();
+        let train_exe = svc.compile(&arts.file(&info.train_file))?;
+        let eval_exe = svc.compile(&arts.file(&info.eval_file))?;
+        Ok(XlaTrainer {
+            train_exe,
+            eval_exe,
+            batch: info.batch,
+            features: info.input_dim,
+            layout: spec.tensor_layout(),
+            param_count: info.param_count,
+        })
+    }
+
+    /// Pad/repeat a short batch to the compiled static batch size.
+    fn pad_batch(&self, x: &[f32], y: &[f32]) -> (Vec<f32>, Vec<f32>) {
+        let rows = y.len();
+        if rows == self.batch {
+            return (x.to_vec(), y.to_vec());
+        }
+        let mut xp = Vec::with_capacity(self.batch * self.features);
+        let mut yp = Vec::with_capacity(self.batch);
+        for r in 0..self.batch {
+            let src = r % rows;
+            xp.extend_from_slice(&x[src * self.features..(src + 1) * self.features]);
+            yp.push(y[src]);
+        }
+        (xp, yp)
+    }
+}
+
+impl Trainer for XlaTrainer {
+    fn train(
+        &self,
+        model: &TensorModel,
+        data: &Dataset,
+        spec: &TaskSpec,
+    ) -> Result<(TensorModel, TaskMeta)> {
+        if data.features != self.features {
+            bail!("dataset features {} != compiled {}", data.features, self.features);
+        }
+        let sw = Stopwatch::start();
+        let svc = XlaService::global();
+        let mut flat = model.to_flat();
+        if flat.len() != self.param_count {
+            bail!("model params {} != compiled {}", flat.len(), self.param_count);
+        }
+        let mut steps = 0usize;
+        let mut last_loss = 0.0f64;
+        let budget = if spec.step_budget > 0 { spec.step_budget } else { usize::MAX };
+        let lr = spec.learning_rate as f32;
+        'outer: for _ in 0..spec.epochs.max(1) {
+            for (xb, yb) in data.train_batches(self.batch) {
+                let (xp, yp) = self.pad_batch(xb, yb);
+                let out = svc.execute(
+                    self.train_exe,
+                    vec![
+                        (std::mem::take(&mut flat), vec![self.param_count as i64]),
+                        (xp, vec![self.batch as i64, self.features as i64]),
+                        (yp, vec![self.batch as i64]),
+                        (vec![lr], vec![]),
+                    ],
+                )?;
+                let mut it = out.into_iter();
+                flat = it.next().ok_or_else(|| anyhow::anyhow!("train_step: no params out"))?;
+                last_loss = it
+                    .next()
+                    .and_then(|l| l.first().copied())
+                    .ok_or_else(|| anyhow::anyhow!("train_step: no loss out"))?
+                    as f64;
+                steps += 1;
+                if steps >= budget {
+                    break 'outer;
+                }
+            }
+        }
+        let trained = TensorModel::from_flat(&self.layout, &flat)?;
+        let elapsed = sw.elapsed();
+        Ok((
+            trained,
+            TaskMeta {
+                train_time_per_batch_us: (elapsed.as_micros() as u64 / steps.max(1) as u64)
+                    .max(1),
+                completed_steps: steps,
+                completed_epochs: spec.epochs.max(1),
+                num_samples: data.train_len(),
+                train_loss: last_loss,
+            },
+        ))
+    }
+
+    fn evaluate(&self, model: &TensorModel, data: &Dataset) -> Result<EvalResult> {
+        let sw = Stopwatch::start();
+        let svc = XlaService::global();
+        let flat = model.to_flat();
+        let mut total = 0.0f64;
+        let mut batches = 0usize;
+        for (xb, yb) in data.test_batches(self.batch) {
+            let (xp, yp) = self.pad_batch(xb, yb);
+            let out = svc.execute(
+                self.eval_exe,
+                vec![
+                    (flat.clone(), vec![self.param_count as i64]),
+                    (xp, vec![self.batch as i64, self.features as i64]),
+                    (yp, vec![self.batch as i64]),
+                ],
+            )?;
+            total += out
+                .first()
+                .and_then(|l| l.first().copied())
+                .ok_or_else(|| anyhow::anyhow!("eval_step: no loss out"))? as f64;
+            batches += 1;
+        }
+        Ok(EvalResult {
+            loss: total / batches.max(1) as f64,
+            num_samples: data.test_len(),
+            eval_time_us: sw.elapsed().as_micros() as u64,
+        })
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+}
+
+/// Build the XLA aggregation backend from the compiled Pallas lincomb
+/// kernel: `lincomb(a, b, wa, wb) = wa·a + wb·b` over flat params.
+/// The weighted sum over N models is a left fold of N−1 lincomb calls.
+pub fn xla_fedavg_backend(
+    artifacts_dir: &str,
+    spec: &ModelSpec,
+) -> Result<std::sync::Arc<dyn Fn(&[&TensorModel], &[f64]) -> Result<TensorModel> + Send + Sync>>
+{
+    let arts = Artifacts::load(artifacts_dir)?;
+    let info = arts.for_spec(spec)?;
+    let exe = XlaService::global().compile(&arts.file(&info.lincomb_file))?;
+    let param_count = info.param_count;
+    let layout = spec.tensor_layout();
+    Ok(std::sync::Arc::new(move |models: &[&TensorModel], coeffs: &[f64]| {
+        if models.is_empty() {
+            bail!("xla aggregation with zero models");
+        }
+        let svc = XlaService::global();
+        let dims = vec![param_count as i64];
+        let mut acc = models[0].to_flat();
+        let mut acc_w = coeffs[0] as f32;
+        for (m, &c) in models.iter().zip(coeffs).skip(1) {
+            let out = svc.execute(
+                exe,
+                vec![
+                    (acc, dims.clone()),
+                    (m.to_flat(), dims.clone()),
+                    (vec![acc_w], vec![]),
+                    (vec![c as f32], vec![]),
+                ],
+            )?;
+            acc = out.into_iter().next().ok_or_else(|| anyhow::anyhow!("lincomb: no out"))?;
+            acc_w = 1.0; // coefficients already applied into acc
+        }
+        if acc_w != 1.0 {
+            for v in acc.iter_mut() {
+                *v *= acc_w;
+            }
+        }
+        TensorModel::from_flat(&layout, &acc)
+    }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifacts_missing_dir_is_helpful_error() {
+        let e = Artifacts::load("/nonexistent-metisfl").err().unwrap();
+        assert!(format!("{e:#}").contains("make artifacts"));
+    }
+
+    #[test]
+    fn manifest_parsing() {
+        let dir = std::env::temp_dir().join(format!("metisfl-manifest-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"variants":{"mlp_l2_u8_in4_out1":{"train":"t.hlo.txt","eval":"e.hlo.txt",
+                "lincomb":"l.hlo.txt","param_count":121,"input_dim":4,"hidden_layers":2,
+                "hidden_units":8,"batch":16}}}"#,
+        )
+        .unwrap();
+        let arts = Artifacts::load(&dir).unwrap();
+        let spec = ModelSpec::mlp(4, 2, 8);
+        let info = arts.for_spec(&spec).unwrap();
+        assert_eq!(info.param_count, 121);
+        assert_eq!(info.batch, 16);
+        assert!(arts.variant("nope").is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    // Real execution tests live in rust/tests/runtime_xla.rs (they need
+    // `make artifacts` to have run).
+}

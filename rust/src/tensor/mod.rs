@@ -1,0 +1,455 @@
+//! Model tensors and the paper's tensor-as-bytes representation.
+//!
+//! MetisFL ships models over the network "as a sequence of tensors with
+//! each tensor being represented in a byte protobuf data type ... by first
+//! flattening each tensor/matrix, then dumping the tensor (as bytes), and
+//! finally constructing a proto message that represents the structure of
+//! the original tensor ... e.g. tensor's byte order and data type" (§3).
+//!
+//! In-memory, tensors hold `f32` (the training dtype); the wire encoding
+//! ([`Tensor::encode_data`] / [`Tensor::decode_data`]) supports `f32`,
+//! `f64` and `bf16` payloads in either byte order, so the codec tests can
+//! exercise cross-endian / mixed-precision reconstruction.
+
+pub mod ops;
+
+use anyhow::{bail, Result};
+
+/// Wire element type of an encoded tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    F64,
+    Bf16,
+}
+
+impl DType {
+    pub fn size_bytes(self) -> usize {
+        match self {
+            DType::F32 => 4,
+            DType::F64 => 8,
+            DType::Bf16 => 2,
+        }
+    }
+
+    pub fn code(self) -> u8 {
+        match self {
+            DType::F32 => 0,
+            DType::F64 => 1,
+            DType::Bf16 => 2,
+        }
+    }
+
+    pub fn from_code(c: u8) -> Result<DType> {
+        Ok(match c {
+            0 => DType::F32,
+            1 => DType::F64,
+            2 => DType::Bf16,
+            _ => bail!("unknown dtype code {c}"),
+        })
+    }
+}
+
+/// Wire byte order of an encoded tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ByteOrder {
+    Little,
+    Big,
+}
+
+impl ByteOrder {
+    pub fn code(self) -> u8 {
+        match self {
+            ByteOrder::Little => 0,
+            ByteOrder::Big => 1,
+        }
+    }
+
+    pub fn from_code(c: u8) -> Result<ByteOrder> {
+        Ok(match c {
+            0 => ByteOrder::Little,
+            1 => ByteOrder::Big,
+            _ => bail!("unknown byte order code {c}"),
+        })
+    }
+}
+
+/// A named, shaped, f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(name: impl Into<String>, shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        let t = Tensor { name: name.into(), shape, data };
+        assert_eq!(t.data.len(), t.elem_count(), "shape/data mismatch for {}", t.name);
+        t
+    }
+
+    pub fn zeros(name: impl Into<String>, shape: Vec<usize>) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor { name: name.into(), shape, data: vec![0.0; n] }
+    }
+
+    pub fn elem_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn byte_size(&self, dtype: DType) -> usize {
+        self.elem_count() * dtype.size_bytes()
+    }
+
+    /// Flatten-and-dump (paper §3): encode elements as raw bytes in the
+    /// requested dtype and byte order.
+    pub fn encode_data(&self, dtype: DType, order: ByteOrder) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.byte_size(dtype));
+        match (dtype, order) {
+            #[cfg(target_endian = "little")]
+            (DType::F32, ByteOrder::Little) => {
+                // Hot path: the in-memory representation already *is* the
+                // wire format on little-endian hosts — one memcpy (§Perf:
+                // ~5× over the per-element encode).
+                // SAFETY: f32 has no invalid bit patterns; the slice
+                // covers exactly the Vec's initialized storage.
+                let bytes = unsafe {
+                    std::slice::from_raw_parts(
+                        self.data.as_ptr() as *const u8,
+                        self.data.len() * 4,
+                    )
+                };
+                out.extend_from_slice(bytes);
+            }
+            #[cfg(target_endian = "big")]
+            (DType::F32, ByteOrder::Little) => {
+                out.extend(self.data.iter().flat_map(|v| v.to_le_bytes()));
+            }
+            (DType::F32, ByteOrder::Big) => {
+                out.extend(self.data.iter().flat_map(|v| v.to_be_bytes()));
+            }
+            (DType::F64, ByteOrder::Little) => {
+                out.extend(self.data.iter().flat_map(|v| (*v as f64).to_le_bytes()));
+            }
+            (DType::F64, ByteOrder::Big) => {
+                out.extend(self.data.iter().flat_map(|v| (*v as f64).to_be_bytes()));
+            }
+            (DType::Bf16, o) => {
+                for v in &self.data {
+                    let b = f32_to_bf16_bits(*v);
+                    match o {
+                        ByteOrder::Little => out.extend(b.to_le_bytes()),
+                        ByteOrder::Big => out.extend(b.to_be_bytes()),
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Reconstruct element data from wire bytes (inverse of
+    /// [`Tensor::encode_data`]).
+    pub fn decode_data(
+        name: impl Into<String>,
+        shape: Vec<usize>,
+        dtype: DType,
+        order: ByteOrder,
+        bytes: &[u8],
+    ) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if bytes.len() != n * dtype.size_bytes() {
+            bail!(
+                "tensor byte length mismatch: expected {} ({} elems × {}B), got {}",
+                n * dtype.size_bytes(),
+                n,
+                dtype.size_bytes(),
+                bytes.len()
+            );
+        }
+        let mut data = Vec::with_capacity(n);
+        match (dtype, order) {
+            #[cfg(target_endian = "little")]
+            (DType::F32, ByteOrder::Little) => {
+                // Hot path: bulk memcpy (see encode_data).
+                // SAFETY: `bytes.len() == n * 4` was validated above; any
+                // bit pattern is a valid f32; the destination was reserved
+                // for exactly `n` elements.
+                unsafe {
+                    std::ptr::copy_nonoverlapping(
+                        bytes.as_ptr(),
+                        data.as_mut_ptr() as *mut u8,
+                        n * 4,
+                    );
+                    data.set_len(n);
+                }
+            }
+            #[cfg(target_endian = "big")]
+            (DType::F32, ByteOrder::Little) => {
+                for c in bytes.chunks_exact(4) {
+                    data.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+                }
+            }
+            (DType::F32, ByteOrder::Big) => {
+                for c in bytes.chunks_exact(4) {
+                    data.push(f32::from_be_bytes([c[0], c[1], c[2], c[3]]));
+                }
+            }
+            (DType::F64, ByteOrder::Little) => {
+                for c in bytes.chunks_exact(8) {
+                    data.push(f64::from_le_bytes(c.try_into().unwrap()) as f32);
+                }
+            }
+            (DType::F64, ByteOrder::Big) => {
+                for c in bytes.chunks_exact(8) {
+                    data.push(f64::from_be_bytes(c.try_into().unwrap()) as f32);
+                }
+            }
+            (DType::Bf16, o) => {
+                for c in bytes.chunks_exact(2) {
+                    let bits = match o {
+                        ByteOrder::Little => u16::from_le_bytes([c[0], c[1]]),
+                        ByteOrder::Big => u16::from_be_bytes([c[0], c[1]]),
+                    };
+                    data.push(bf16_bits_to_f32(bits));
+                }
+            }
+        }
+        Ok(Tensor { name: name.into(), shape, data })
+    }
+}
+
+/// Round-to-nearest-even f32 → bf16 bit pattern.
+pub fn f32_to_bf16_bits(v: f32) -> u16 {
+    let bits = v.to_bits();
+    if v.is_nan() {
+        return ((bits >> 16) as u16) | 0x0040; // quiet NaN
+    }
+    let round_bit = 0x0000_8000u32;
+    let lower = bits & 0xFFFF;
+    let mut upper = (bits >> 16) as u16;
+    if lower > round_bit || (lower == round_bit && (upper & 1) == 1) {
+        upper = upper.wrapping_add(1);
+    }
+    upper
+}
+
+/// bf16 bit pattern → f32.
+pub fn bf16_bits_to_f32(bits: u16) -> f32 {
+    f32::from_bits((bits as u32) << 16)
+}
+
+/// A model as an ordered sequence of tensors — the unit the controller
+/// stores, ships, and aggregates (one pool task per tensor, Fig. 4).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorModel {
+    pub tensors: Vec<Tensor>,
+}
+
+impl TensorModel {
+    pub fn new(tensors: Vec<Tensor>) -> TensorModel {
+        TensorModel { tensors }
+    }
+
+    /// Zero-initialized model matching a layout.
+    pub fn zeros(layout: &[(String, Vec<usize>)]) -> TensorModel {
+        TensorModel {
+            tensors: layout
+                .iter()
+                .map(|(n, s)| Tensor::zeros(n.clone(), s.clone()))
+                .collect(),
+        }
+    }
+
+    /// Random-normal initialized model (He-like scaling per tensor fan-in).
+    pub fn random_init(layout: &[(String, Vec<usize>)], rng: &mut crate::util::Rng) -> TensorModel {
+        TensorModel {
+            tensors: layout
+                .iter()
+                .map(|(n, s)| {
+                    let count: usize = s.iter().product();
+                    let fan_in = s.first().copied().unwrap_or(1).max(1);
+                    let scale = (2.0 / fan_in as f64).sqrt() as f32;
+                    let mut data = vec![0.0f32; count];
+                    // Biases (rank-1) start at zero like the reference model.
+                    if s.len() > 1 {
+                        rng.fill_gaussian_f32(&mut data, scale);
+                    }
+                    Tensor::new(n.clone(), s.clone(), data)
+                })
+                .collect(),
+        }
+    }
+
+    pub fn tensor_count(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.tensors.iter().map(|t| t.elem_count()).sum()
+    }
+
+    pub fn byte_size_f32(&self) -> usize {
+        self.param_count() * 4
+    }
+
+    /// Concatenate all tensors into one flat vector (the layout the L2
+    /// `train_step(flat_params, ...)` artifact consumes).
+    pub fn to_flat(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.param_count());
+        for t in &self.tensors {
+            out.extend_from_slice(&t.data);
+        }
+        out
+    }
+
+    /// Rebuild a model from a flat vector using `layout` for names/shapes.
+    pub fn from_flat(layout: &[(String, Vec<usize>)], flat: &[f32]) -> Result<TensorModel> {
+        let expected: usize = layout.iter().map(|(_, s)| s.iter().product::<usize>()).sum();
+        if flat.len() != expected {
+            bail!("flat length {} != layout total {}", flat.len(), expected);
+        }
+        let mut tensors = Vec::with_capacity(layout.len());
+        let mut off = 0;
+        for (name, shape) in layout {
+            let n: usize = shape.iter().product();
+            tensors.push(Tensor::new(name.clone(), shape.clone(), flat[off..off + n].to_vec()));
+            off += n;
+        }
+        Ok(TensorModel { tensors })
+    }
+
+    /// Layout (name, shape) pairs of this model.
+    pub fn layout(&self) -> Vec<(String, Vec<usize>)> {
+        self.tensors.iter().map(|t| (t.name.clone(), t.shape.clone())).collect()
+    }
+
+    /// Max absolute element difference against another model.
+    pub fn max_abs_diff(&self, other: &TensorModel) -> f32 {
+        self.tensors
+            .iter()
+            .zip(&other.tensors)
+            .flat_map(|(a, b)| a.data.iter().zip(&b.data).map(|(x, y)| (x - y).abs()))
+            .fold(0.0, f32::max)
+    }
+
+    /// L2 norm of all parameters.
+    pub fn l2_norm(&self) -> f64 {
+        self.tensors
+            .iter()
+            .flat_map(|t| t.data.iter())
+            .map(|&x| (x as f64) * (x as f64))
+            .sum::<f64>()
+            .sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+    use crate::util::Rng;
+
+    #[test]
+    fn encode_decode_roundtrip_f32_both_orders() {
+        let t = Tensor::new("w", vec![2, 3], vec![1.0, -2.5, 3.25, 0.0, f32::MIN, f32::MAX]);
+        for order in [ByteOrder::Little, ByteOrder::Big] {
+            let bytes = t.encode_data(DType::F32, order);
+            assert_eq!(bytes.len(), 24);
+            let back = Tensor::decode_data("w", vec![2, 3], DType::F32, order, &bytes).unwrap();
+            assert_eq!(back, t);
+        }
+    }
+
+    #[test]
+    fn f64_roundtrip_is_exact_for_f32_values() {
+        let t = Tensor::new("w", vec![4], vec![1.5, -0.25, 1e30, -1e-30]);
+        for order in [ByteOrder::Little, ByteOrder::Big] {
+            let bytes = t.encode_data(DType::F64, order);
+            assert_eq!(bytes.len(), 32);
+            let back = Tensor::decode_data("w", vec![4], DType::F64, order, &bytes).unwrap();
+            assert_eq!(back.data, t.data);
+        }
+    }
+
+    #[test]
+    fn bf16_roundtrip_within_tolerance() {
+        let t = Tensor::new("w", vec![3], vec![1.0, -3.14159, 1234.5]);
+        let bytes = t.encode_data(DType::Bf16, ByteOrder::Little);
+        assert_eq!(bytes.len(), 6);
+        let back = Tensor::decode_data("w", vec![3], DType::Bf16, ByteOrder::Little, &bytes).unwrap();
+        for (a, b) in t.data.iter().zip(&back.data) {
+            let rel = (a - b).abs() / a.abs().max(1e-6);
+            assert!(rel < 0.01, "a={a} b={b}");
+        }
+    }
+
+    #[test]
+    fn bf16_special_values() {
+        assert_eq!(bf16_bits_to_f32(f32_to_bf16_bits(0.0)), 0.0);
+        assert!(bf16_bits_to_f32(f32_to_bf16_bits(f32::NAN)).is_nan());
+        assert_eq!(bf16_bits_to_f32(f32_to_bf16_bits(f32::INFINITY)), f32::INFINITY);
+        assert_eq!(bf16_bits_to_f32(f32_to_bf16_bits(1.0)), 1.0);
+    }
+
+    #[test]
+    fn decode_rejects_length_mismatch() {
+        let r = Tensor::decode_data("w", vec![2], DType::F32, ByteOrder::Little, &[0u8; 7]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn flat_roundtrip_preserves_model() {
+        let layout = crate::config::ModelSpec::mlp(4, 3, 8).tensor_layout();
+        let mut rng = Rng::new(1);
+        let m = TensorModel::random_init(&layout, &mut rng);
+        let flat = m.to_flat();
+        assert_eq!(flat.len(), m.param_count());
+        let back = TensorModel::from_flat(&layout, &flat).unwrap();
+        assert_eq!(back, m);
+        assert_eq!(back.layout(), layout);
+    }
+
+    #[test]
+    fn from_flat_rejects_wrong_length() {
+        let layout = crate::config::ModelSpec::mlp(4, 2, 8).tensor_layout();
+        assert!(TensorModel::from_flat(&layout, &[0.0; 3]).is_err());
+    }
+
+    #[test]
+    fn random_init_biases_zero_weights_nonzero() {
+        let layout = crate::config::ModelSpec::mlp(4, 2, 8).tensor_layout();
+        let mut rng = Rng::new(2);
+        let m = TensorModel::random_init(&layout, &mut rng);
+        for t in &m.tensors {
+            if t.shape.len() == 1 {
+                assert!(t.data.iter().all(|&x| x == 0.0), "{} should be zero", t.name);
+            } else {
+                assert!(t.data.iter().any(|&x| x != 0.0), "{} should be random", t.name);
+            }
+        }
+    }
+
+    #[test]
+    fn prop_codec_roundtrips_for_random_shapes() {
+        prop_check("tensor codec roundtrip", 100, |g| {
+            let shape = g.shape(3, 512);
+            let n: usize = shape.iter().product();
+            let data: Vec<f32> = (0..n).map(|_| g.rng().next_gaussian() as f32).collect();
+            let t = Tensor::new("t", shape.clone(), data);
+            let order = if g.bool() { ByteOrder::Little } else { ByteOrder::Big };
+            let bytes = t.encode_data(DType::F32, order);
+            let back = Tensor::decode_data("t", shape, DType::F32, order, &bytes).unwrap();
+            assert_eq!(back.data, t.data);
+        });
+    }
+
+    #[test]
+    fn model_norms_and_diffs() {
+        let a = TensorModel::new(vec![Tensor::new("x", vec![2], vec![3.0, 4.0])]);
+        let b = TensorModel::new(vec![Tensor::new("x", vec![2], vec![3.0, 4.5])]);
+        assert!((a.l2_norm() - 5.0).abs() < 1e-9);
+        assert_eq!(a.max_abs_diff(&b), 0.5);
+        assert_eq!(a.byte_size_f32(), 8);
+    }
+}

@@ -1,0 +1,153 @@
+//! Hot-path element-wise kernels for aggregation.
+//!
+//! The controller's dominant op is the weighted sum `acc += w · x` over
+//! megabytes of `f32` (one call per learner per tensor, Fig. 4). The
+//! implementations below are written to let LLVM auto-vectorize: fixed
+//! 8-lane unrolled main loops over `chunks_exact`, no bounds checks in the
+//! body. `benches/agg_ablation.rs` measures them against the naive form.
+
+/// `acc[i] += w * x[i]` — the FedAvg accumulation kernel.
+///
+/// Written as a plain zip loop: LLVM fully autovectorizes it, and the
+/// §Perf pass measured the hand-unrolled 8-wide variant 20% *slower*
+/// (the manual unroll defeated vectorization; see EXPERIMENTS.md §Perf
+/// and `benches/agg_ablation.rs`, which still measures the old form as
+/// `axpy_unrolled`).
+#[inline]
+pub fn axpy(acc: &mut [f32], x: &[f32], w: f32) {
+    assert_eq!(acc.len(), x.len(), "axpy length mismatch");
+    for (a, b) in acc.iter_mut().zip(x) {
+        *a += w * b;
+    }
+}
+
+/// `out[i] = w * x[i]` — initialize an accumulator from the first learner.
+#[inline]
+pub fn scaled_copy(out: &mut [f32], x: &[f32], w: f32) {
+    assert_eq!(out.len(), x.len(), "scaled_copy length mismatch");
+    for (o, b) in out.iter_mut().zip(x) {
+        *o = w * b;
+    }
+}
+
+/// The §Perf pass's rejected hand-unrolled axpy, kept for the ablation
+/// bench so the regression stays measurable.
+pub fn axpy_unrolled(acc: &mut [f32], x: &[f32], w: f32) {
+    assert_eq!(acc.len(), x.len(), "axpy length mismatch");
+    let mut ac = acc.chunks_exact_mut(8);
+    let mut xc = x.chunks_exact(8);
+    for (a, b) in (&mut ac).zip(&mut xc) {
+        a[0] += w * b[0];
+        a[1] += w * b[1];
+        a[2] += w * b[2];
+        a[3] += w * b[3];
+        a[4] += w * b[4];
+        a[5] += w * b[5];
+        a[6] += w * b[6];
+        a[7] += w * b[7];
+    }
+    for (a, b) in ac.into_remainder().iter_mut().zip(xc.remainder()) {
+        *a += w * b;
+    }
+}
+
+/// `v[i] *= s`.
+#[inline]
+pub fn scale(v: &mut [f32], s: f32) {
+    for x in v.iter_mut() {
+        *x *= s;
+    }
+}
+
+/// `out[i] = a[i] - b[i]` (model deltas for adaptive server optimizers).
+#[inline]
+pub fn sub(out: &mut [f32], a: &[f32], b: &[f32]) {
+    assert_eq!(out.len(), a.len());
+    assert_eq!(a.len(), b.len());
+    for i in 0..out.len() {
+        out[i] = a[i] - b[i];
+    }
+}
+
+/// Dot product (f64 accumulator for stability).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| *x as f64 * *y as f64).sum()
+}
+
+/// Reference axpy used by tests (indexed form, no iterator fusion).
+pub fn axpy_naive(acc: &mut [f32], x: &[f32], w: f32) {
+    assert_eq!(acc.len(), x.len());
+    for i in 0..acc.len() {
+        acc[i] += w * x[i];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+
+    #[test]
+    fn axpy_matches_naive() {
+        prop_check("axpy == naive", 100, |g| {
+            let x = g.vec_f32(0..200);
+            let mut acc: Vec<f32> = x.iter().map(|v| v * 0.5).collect();
+            let mut acc2 = acc.clone();
+            let w = g.f32_in(-2.0, 2.0);
+            axpy(&mut acc, &x, w);
+            axpy_naive(&mut acc2, &x, w);
+            assert_eq!(acc, acc2);
+        });
+    }
+
+    #[test]
+    fn scaled_copy_matches_manual() {
+        prop_check("scaled_copy", 100, |g| {
+            let x = g.vec_f32(0..100);
+            let w = g.f32_in(-3.0, 3.0);
+            let mut out = vec![7.0f32; x.len()];
+            scaled_copy(&mut out, &x, w);
+            for (o, b) in out.iter().zip(&x) {
+                assert_eq!(*o, w * b);
+            }
+        });
+    }
+
+    #[test]
+    fn axpy_handles_non_multiple_of_eight() {
+        for n in [0usize, 1, 7, 8, 9, 15, 16, 17] {
+            let x: Vec<f32> = (0..n).map(|i| i as f32).collect();
+            let mut acc = vec![1.0f32; n];
+            axpy(&mut acc, &x, 2.0);
+            for (i, a) in acc.iter().enumerate() {
+                assert_eq!(*a, 1.0 + 2.0 * i as f32);
+            }
+        }
+    }
+
+    #[test]
+    fn sub_and_dot() {
+        let a = [3.0f32, 4.0, 5.0];
+        let b = [1.0f32, 1.0, 1.0];
+        let mut out = [0.0f32; 3];
+        sub(&mut out, &a, &b);
+        assert_eq!(out, [2.0, 3.0, 4.0]);
+        assert_eq!(dot(&a, &b), 12.0);
+    }
+
+    #[test]
+    fn scale_in_place() {
+        let mut v = vec![1.0f32, -2.0, 3.0];
+        scale(&mut v, -2.0);
+        assert_eq!(v, vec![-2.0, 4.0, -6.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn axpy_length_mismatch_panics() {
+        let mut acc = vec![0.0f32; 3];
+        axpy(&mut acc, &[1.0, 2.0], 1.0);
+    }
+}

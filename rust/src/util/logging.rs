@@ -1,0 +1,93 @@
+//! Minimal leveled stderr logger (`log` crate replacement).
+//!
+//! Level is read once from `METISFL_LOG` (`debug`, `info` (default),
+//! `warn`, `error`, `off`). Timestamps are milliseconds since process
+//! start so interleaved controller/learner logs are easy to correlate.
+
+use once_cell::sync::Lazy;
+use std::io::Write;
+use std::sync::Mutex;
+use std::time::Instant;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum LogLevel {
+    Debug = 0,
+    Info = 1,
+    Warn = 2,
+    Error = 3,
+    Off = 4,
+}
+
+static START: Lazy<Instant> = Lazy::new(Instant::now);
+static LEVEL: Lazy<LogLevel> = Lazy::new(|| {
+    match std::env::var("METISFL_LOG").unwrap_or_default().to_ascii_lowercase().as_str() {
+        "debug" => LogLevel::Debug,
+        "warn" => LogLevel::Warn,
+        "error" => LogLevel::Error,
+        "off" | "none" => LogLevel::Off,
+        _ => LogLevel::Info,
+    }
+});
+static SINK: Lazy<Mutex<()>> = Lazy::new(|| Mutex::new(()));
+
+/// Current minimum level.
+pub fn level() -> LogLevel {
+    *LEVEL
+}
+
+pub fn enabled(l: LogLevel) -> bool {
+    l >= *LEVEL && *LEVEL != LogLevel::Off
+}
+
+pub fn log_at(l: LogLevel, component: &str, msg: &str) {
+    if !enabled(l) {
+        return;
+    }
+    let ms = START.elapsed().as_millis();
+    let tag = match l {
+        LogLevel::Debug => "DEBUG",
+        LogLevel::Info => "INFO ",
+        LogLevel::Warn => "WARN ",
+        LogLevel::Error => "ERROR",
+        LogLevel::Off => return,
+    };
+    let _g = SINK.lock().unwrap();
+    let _ = writeln!(std::io::stderr(), "[{ms:>8}ms {tag} {component}] {msg}");
+}
+
+pub fn log_debug(component: &str, msg: &str) {
+    log_at(LogLevel::Debug, component, msg);
+}
+
+pub fn log_info(component: &str, msg: &str) {
+    log_at(LogLevel::Info, component, msg);
+}
+
+pub fn log_warn(component: &str, msg: &str) {
+    log_at(LogLevel::Warn, component, msg);
+}
+
+pub fn log_error(component: &str, msg: &str) {
+    log_at(LogLevel::Error, component, msg);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_are_ordered() {
+        assert!(LogLevel::Debug < LogLevel::Info);
+        assert!(LogLevel::Info < LogLevel::Warn);
+        assert!(LogLevel::Warn < LogLevel::Error);
+        assert!(LogLevel::Error < LogLevel::Off);
+    }
+
+    #[test]
+    fn logging_does_not_panic() {
+        log_debug("test", "debug message");
+        log_info("test", "info message");
+        log_warn("test", "warn message");
+        log_error("test", "error message");
+    }
+}

@@ -1,0 +1,75 @@
+//! Low-level substrates used across the crate.
+//!
+//! Everything here exists because the build is fully offline: no `rayon`,
+//! `rand`, `log`, `criterion` or `proptest` crates are available, so the
+//! crate ships its own (small, well-tested) equivalents:
+//!
+//! * [`threadpool`] — fixed-size pool + scoped `parallel_for`, the OpenMP
+//!   analog used by the parallel aggregator (paper Fig. 4).
+//! * [`rng`] — deterministic xoshiro256** PRNG (seedable, splittable).
+//! * [`stopwatch`] — wall-clock timers for the T1–T9 operation metrics.
+//! * [`logging`] — leveled stderr logger (`METISFL_LOG=debug|info|warn`).
+//! * [`stats`] — mean / std / percentile summaries for the bench harness.
+//! * [`prop`] — miniature property-based testing runner.
+
+pub mod logging;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod stopwatch;
+pub mod threadpool;
+
+pub use logging::{log_debug, log_info, log_warn, LogLevel};
+pub use rng::Rng;
+pub use stats::Summary;
+pub use stopwatch::Stopwatch;
+pub use threadpool::ThreadPool;
+
+/// Format a `std::time::Duration` as engineering-friendly text (ns/µs/ms/s).
+pub fn fmt_duration(d: std::time::Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns}ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2}µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2}ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.2}s", ns as f64 / 1e9)
+    }
+}
+
+/// Format a byte count as human-readable text.
+pub fn fmt_bytes(b: usize) -> String {
+    if b < 1024 {
+        format!("{b}B")
+    } else if b < 1024 * 1024 {
+        format!("{:.1}KiB", b as f64 / 1024.0)
+    } else if b < 1024 * 1024 * 1024 {
+        format!("{:.1}MiB", b as f64 / (1024.0 * 1024.0))
+    } else {
+        format!("{:.2}GiB", b as f64 / (1024.0 * 1024.0 * 1024.0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn duration_formatting_picks_sane_units() {
+        assert_eq!(fmt_duration(Duration::from_nanos(12)), "12ns");
+        assert_eq!(fmt_duration(Duration::from_micros(12)), "12.00µs");
+        assert_eq!(fmt_duration(Duration::from_millis(12)), "12.00ms");
+        assert_eq!(fmt_duration(Duration::from_secs(12)), "12.00s");
+    }
+
+    #[test]
+    fn byte_formatting_picks_sane_units() {
+        assert_eq!(fmt_bytes(12), "12B");
+        assert_eq!(fmt_bytes(12 * 1024), "12.0KiB");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024), "3.0MiB");
+        assert_eq!(fmt_bytes(5 * 1024 * 1024 * 1024), "5.00GiB");
+    }
+}

@@ -1,0 +1,175 @@
+//! Miniature property-based testing runner (proptest replacement).
+//!
+//! Usage (`no_run`: doctest binaries lack the xla rpath on this image):
+//!
+//! ```no_run
+//! use metisfl::util::prop::{prop_check, Gen};
+//! prop_check("vec reverse twice is identity", 200, |g| {
+//!     let v = g.vec_f32(0..64);
+//!     let mut w = v.clone();
+//!     w.reverse();
+//!     w.reverse();
+//!     assert_eq!(v, w);
+//! });
+//! ```
+//!
+//! Each case gets a fresh deterministic generator derived from a base seed
+//! (`METISFL_PROP_SEED`, default 0xC0FFEE) and the case index; on failure
+//! the panic message names the case seed so the exact input can be
+//! replayed with `METISFL_PROP_SEED=<seed> METISFL_PROP_CASES=1`.
+
+use super::rng::Rng;
+
+/// Random input generator handed to each property case.
+pub struct Gen {
+    rng: Rng,
+    pub case_seed: u64,
+}
+
+impl Gen {
+    pub fn from_seed(seed: u64) -> Gen {
+        Gen { rng: Rng::new(seed), case_seed: seed }
+    }
+
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+
+    pub fn usize_in(&mut self, r: std::ops::Range<usize>) -> usize {
+        assert!(r.start < r.end);
+        r.start + self.rng.gen_range(r.end - r.start)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.gen_range_f64(lo as f64, hi as f64) as f32
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.gen_range_f64(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.gen_bool(0.5)
+    }
+
+    /// Vec of f32 with length drawn from `len`, values N(0,1)-ish plus
+    /// occasional exact zeros and large magnitudes to probe edge cases.
+    pub fn vec_f32(&mut self, len: std::ops::Range<usize>) -> Vec<f32> {
+        let n = self.usize_in(len.start..len.end.max(len.start + 1));
+        (0..n)
+            .map(|_| match self.rng.gen_range(10) {
+                0 => 0.0,
+                1 => 1e6 * self.rng.next_gaussian() as f32,
+                _ => self.rng.next_gaussian() as f32,
+            })
+            .collect()
+    }
+
+    /// Vec of f64 analogous to [`Gen::vec_f32`].
+    pub fn vec_f64(&mut self, len: std::ops::Range<usize>) -> Vec<f64> {
+        let n = self.usize_in(len.start..len.end.max(len.start + 1));
+        (0..n).map(|_| self.rng.next_gaussian()).collect()
+    }
+
+    /// Random tensor shape with `rank in 1..=max_rank` and bounded element
+    /// count.
+    pub fn shape(&mut self, max_rank: usize, max_elems: usize) -> Vec<usize> {
+        let rank = self.usize_in(1..max_rank + 1);
+        let mut dims = vec![1usize; rank];
+        let mut elems = 1usize;
+        for d in dims.iter_mut() {
+            let cap = (max_elems / elems).max(1).min(16);
+            *d = self.usize_in(1..cap + 1);
+            elems *= *d;
+        }
+        dims
+    }
+
+    /// Random byte vector.
+    pub fn bytes(&mut self, len: std::ops::Range<usize>) -> Vec<u8> {
+        let n = self.usize_in(len.start..len.end.max(len.start + 1));
+        (0..n).map(|_| (self.rng.next_u64() & 0xFF) as u8).collect()
+    }
+}
+
+fn base_seed() -> u64 {
+    std::env::var("METISFL_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE)
+}
+
+fn case_count(default_cases: usize) -> usize {
+    std::env::var("METISFL_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default_cases)
+}
+
+/// Run `property` against `cases` random generators. Panics (with the
+/// failing case seed) on the first failure.
+pub fn prop_check(name: &str, cases: usize, property: impl Fn(&mut Gen)) {
+    let base = base_seed();
+    let cases = case_count(cases);
+    for i in 0..cases {
+        let seed = base.wrapping_add(i as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut g = Gen::from_seed(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| property(&mut g)));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed on case {i} (replay with \
+                 METISFL_PROP_SEED={seed} METISFL_PROP_CASES=1): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        prop_check("sum commutes", 50, |g| {
+            let a = g.f64_in(-10.0, 10.0);
+            let b = g.f64_in(-10.0, 10.0);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let r = std::panic::catch_unwind(|| {
+            prop_check("always fails", 5, |_| panic!("nope"));
+        });
+        let msg = match r {
+            Err(e) => e.downcast_ref::<String>().cloned().unwrap_or_default(),
+            Ok(()) => panic!("property should have failed"),
+        };
+        assert!(msg.contains("METISFL_PROP_SEED="), "{msg}");
+        assert!(msg.contains("always fails"), "{msg}");
+    }
+
+    #[test]
+    fn shapes_respect_bounds() {
+        prop_check("shape bounds", 100, |g| {
+            let s = g.shape(4, 256);
+            assert!(!s.is_empty() && s.len() <= 4);
+            assert!(s.iter().product::<usize>() <= 256);
+            assert!(s.iter().all(|&d| d >= 1));
+        });
+    }
+
+    #[test]
+    fn gen_is_deterministic_per_seed() {
+        let mut a = Gen::from_seed(99);
+        let mut b = Gen::from_seed(99);
+        assert_eq!(a.vec_f32(1..32), b.vec_f32(1..32));
+        assert_eq!(a.bytes(1..32), b.bytes(1..32));
+    }
+}

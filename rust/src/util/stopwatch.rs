@@ -1,0 +1,129 @@
+//! Wall-clock instrumentation used by the T1–T9 operation metrics
+//! (paper Fig. 1) and the bench harness.
+
+use std::time::{Duration, Instant};
+
+/// A restartable wall-clock stopwatch.
+#[derive(Debug, Clone)]
+pub struct Stopwatch {
+    started: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch { started: Instant::now() }
+    }
+
+    /// Elapsed time since `start`/`restart`.
+    pub fn elapsed(&self) -> Duration {
+        self.started.elapsed()
+    }
+
+    /// Elapsed seconds as f64.
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    /// Reset the origin and return the time elapsed until now.
+    pub fn lap(&mut self) -> Duration {
+        let now = Instant::now();
+        let d = now - self.started;
+        self.started = now;
+        d
+    }
+}
+
+/// Accumulates durations of repeated occurrences of one operation.
+#[derive(Debug, Default, Clone)]
+pub struct OpTimer {
+    total: Duration,
+    count: u64,
+    max: Duration,
+}
+
+impl OpTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        self.total += d;
+        self.count += 1;
+        if d > self.max {
+            self.max = d;
+        }
+    }
+
+    /// Time a closure and record its duration; returns the closure result.
+    pub fn time<T>(&mut self, f: impl FnOnce() -> T) -> T {
+        let sw = Stopwatch::start();
+        let r = f();
+        self.record(sw.elapsed());
+        r
+    }
+
+    pub fn total(&self) -> Duration {
+        self.total
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn max(&self) -> Duration {
+        self.max
+    }
+
+    pub fn mean(&self) -> Duration {
+        if self.count == 0 {
+            Duration::ZERO
+        } else {
+            self.total / self.count as u32
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_measures_forward_time() {
+        let sw = Stopwatch::start();
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(sw.elapsed() >= Duration::from_millis(4));
+    }
+
+    #[test]
+    fn lap_resets_origin() {
+        let mut sw = Stopwatch::start();
+        std::thread::sleep(Duration::from_millis(3));
+        let first = sw.lap();
+        assert!(first >= Duration::from_millis(2));
+        assert!(sw.elapsed() < first);
+    }
+
+    #[test]
+    fn op_timer_accumulates() {
+        let mut t = OpTimer::new();
+        t.record(Duration::from_millis(10));
+        t.record(Duration::from_millis(30));
+        assert_eq!(t.count(), 2);
+        assert_eq!(t.total(), Duration::from_millis(40));
+        assert_eq!(t.mean(), Duration::from_millis(20));
+        assert_eq!(t.max(), Duration::from_millis(30));
+    }
+
+    #[test]
+    fn op_timer_time_closure() {
+        let mut t = OpTimer::new();
+        let v = t.time(|| 42);
+        assert_eq!(v, 42);
+        assert_eq!(t.count(), 1);
+    }
+
+    #[test]
+    fn empty_timer_mean_is_zero() {
+        assert_eq!(OpTimer::new().mean(), Duration::ZERO);
+    }
+}

@@ -1,0 +1,321 @@
+//! Fixed-size thread pool — the OpenMP analog.
+//!
+//! The paper parallelizes model aggregation with "one thread per model
+//! tensor ... thread parallelism is enabled using OpenMP" (§3, Fig. 4). In
+//! Rust we use a long-lived pool of workers fed through a shared injector
+//! queue plus a scoped `parallel_for` that blocks until every task in the
+//! batch has completed, which is exactly the `#pragma omp parallel for`
+//! execution shape.
+//!
+//! The pool is intentionally simple (single global `Mutex<VecDeque>`): the
+//! tasks it runs — per-tensor weighted sums over megabytes of `f32` — are
+//! large enough that queue contention is unmeasurable (see
+//! `benches/agg_ablation.rs`), and simplicity keeps the scheduler easy to
+//! reason about under panics.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+struct Queue {
+    tasks: Mutex<(VecDeque<Task>, bool)>, // (queue, shutting_down)
+    available: Condvar,
+}
+
+/// A fixed-size worker pool with scoped fork/join semantics.
+pub struct ThreadPool {
+    queue: Arc<Queue>,
+    workers: Vec<JoinHandle<()>>,
+    size: usize,
+}
+
+impl ThreadPool {
+    /// Create a pool with `size` workers (`size >= 1`).
+    pub fn new(size: usize) -> Self {
+        let size = size.max(1);
+        let queue = Arc::new(Queue {
+            tasks: Mutex::new((VecDeque::new(), false)),
+            available: Condvar::new(),
+        });
+        let workers = (0..size)
+            .map(|i| {
+                let q = Arc::clone(&queue);
+                std::thread::Builder::new()
+                    .name(format!("metisfl-pool-{i}"))
+                    .spawn(move || worker_loop(q))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        ThreadPool { queue, workers, size }
+    }
+
+    /// Pool with one worker per available hardware thread.
+    pub fn with_hardware_threads() -> Self {
+        Self::new(hardware_threads())
+    }
+
+    /// Number of workers.
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Fire-and-forget task submission.
+    pub fn spawn<F: FnOnce() + Send + 'static>(&self, f: F) {
+        let mut guard = self.queue.tasks.lock().unwrap();
+        guard.0.push_back(Box::new(f));
+        drop(guard);
+        self.queue.available.notify_one();
+    }
+
+    /// Run `f(i)` for every `i in 0..n`, distributing over the pool, and
+    /// block until all iterations are done — `#pragma omp parallel for`.
+    ///
+    /// `f` only needs to live for the duration of the call; internally the
+    /// closure is smuggled across the `'static` boundary and the scope
+    /// guard guarantees it is not used after return (panics in tasks are
+    /// propagated to the caller as a panic here).
+    pub fn parallel_for<F>(&self, n: usize, f: F)
+    where
+        F: Fn(usize) + Send + Sync,
+    {
+        if n == 0 {
+            return;
+        }
+        if n == 1 {
+            f(0);
+            return;
+        }
+        let done = Arc::new(Barrier::new(n));
+        // SAFETY: we block on `done.wait()` before returning, so no task
+        // can observe `f` after the borrow expires.
+        let f_static: &(dyn Fn(usize) + Send + Sync) = &f;
+        let f_static: &'static (dyn Fn(usize) + Send + Sync) =
+            unsafe { std::mem::transmute(f_static) };
+        for i in 0..n {
+            let d = Arc::clone(&done);
+            self.spawn(move || {
+                let guard = PanicGuard(&d);
+                f_static(i);
+                std::mem::forget(guard);
+                d.task_done(false);
+            });
+        }
+        done.wait();
+    }
+
+    /// Map `f` over `0..n` in parallel, collecting results in index order.
+    pub fn parallel_map<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Send + Sync,
+    {
+        let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        {
+            let slots = SyncSlots(out.as_mut_ptr());
+            let slots_ref = &slots;
+            self.parallel_for(n, move |i| {
+                // SAFETY: each index is written exactly once by one task.
+                unsafe { *slots_ref.0.add(i) = Some(f(i)) };
+            });
+        }
+        out.into_iter().map(|t| t.expect("slot filled")).collect()
+    }
+
+    /// Split `0..n` into `chunks ≈ size()` contiguous ranges and run `f`
+    /// on each range in parallel. Better than `parallel_for` when the
+    /// per-index work is tiny.
+    pub fn parallel_chunks<F>(&self, n: usize, f: F)
+    where
+        F: Fn(std::ops::Range<usize>) + Send + Sync,
+    {
+        let chunks = self.size.min(n.max(1));
+        let chunk = n.div_ceil(chunks);
+        self.parallel_for(chunks, |c| {
+            let lo = c * chunk;
+            let hi = ((c + 1) * chunk).min(n);
+            if lo < hi {
+                f(lo..hi);
+            }
+        });
+    }
+}
+
+struct SyncSlots<T>(*mut Option<T>);
+// SAFETY: disjoint-index writes only (see parallel_map).
+unsafe impl<T: Send> Send for SyncSlots<T> {}
+unsafe impl<T: Send> Sync for SyncSlots<T> {}
+
+/// Counts completed tasks; `wait` blocks until all have finished and
+/// re-raises if any task panicked.
+struct Barrier {
+    remaining: AtomicUsize,
+    panicked: AtomicUsize,
+    mutex: Mutex<()>,
+    cv: Condvar,
+}
+
+impl Barrier {
+    fn new(n: usize) -> Self {
+        Barrier {
+            remaining: AtomicUsize::new(n),
+            panicked: AtomicUsize::new(0),
+            mutex: Mutex::new(()),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn task_done(&self, panicked: bool) {
+        if panicked {
+            self.panicked.fetch_add(1, Ordering::SeqCst);
+        }
+        if self.remaining.fetch_sub(1, Ordering::SeqCst) == 1 {
+            let _g = self.mutex.lock().unwrap();
+            self.cv.notify_all();
+        }
+    }
+
+    fn wait(&self) {
+        let mut g = self.mutex.lock().unwrap();
+        while self.remaining.load(Ordering::SeqCst) != 0 {
+            g = self.cv.wait(g).unwrap();
+        }
+        if self.panicked.load(Ordering::SeqCst) != 0 {
+            panic!("a parallel_for task panicked");
+        }
+    }
+}
+
+/// Marks the barrier done-with-panic if the task unwinds.
+struct PanicGuard<'a>(&'a Barrier);
+impl Drop for PanicGuard<'_> {
+    fn drop(&mut self) {
+        self.0.task_done(true);
+    }
+}
+
+fn worker_loop(q: Arc<Queue>) {
+    loop {
+        let task = {
+            let mut guard = q.tasks.lock().unwrap();
+            loop {
+                if let Some(t) = guard.0.pop_front() {
+                    break Some(t);
+                }
+                if guard.1 {
+                    break None;
+                }
+                guard = q.available.wait(guard).unwrap();
+            }
+        };
+        match task {
+            Some(t) => {
+                // Worker survives task panics; the barrier's PanicGuard
+                // reports them to the waiting caller.
+                let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(t));
+            }
+            None => return,
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut guard = self.queue.tasks.lock().unwrap();
+            guard.1 = true;
+        }
+        self.queue.available.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Detected hardware parallelism (≥1).
+pub fn hardware_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn parallel_for_runs_every_index_exactly_once() {
+        let pool = ThreadPool::new(4);
+        let hits: Vec<AtomicUsize> = (0..64).map(|_| AtomicUsize::new(0)).collect();
+        pool.parallel_for(64, |i| {
+            hits[i].fetch_add(1, Ordering::SeqCst);
+        });
+        for h in &hits {
+            assert_eq!(h.load(Ordering::SeqCst), 1);
+        }
+    }
+
+    #[test]
+    fn parallel_map_preserves_index_order() {
+        let pool = ThreadPool::new(3);
+        let v = pool.parallel_map(100, |i| i * i);
+        assert_eq!(v, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_chunks_covers_range_without_overlap() {
+        let pool = ThreadPool::new(4);
+        let sum = AtomicU64::new(0);
+        pool.parallel_chunks(1000, |r| {
+            let local: u64 = r.map(|i| i as u64).sum();
+            sum.fetch_add(local, Ordering::SeqCst);
+        });
+        assert_eq!(sum.load(Ordering::SeqCst), 999 * 1000 / 2);
+    }
+
+    #[test]
+    fn zero_and_one_iteration_edge_cases() {
+        let pool = ThreadPool::new(2);
+        pool.parallel_for(0, |_| panic!("must not run"));
+        // n == 1 runs inline on the caller thread.
+        pool.parallel_for(1, |i| {
+            assert_eq!(i, 0);
+        });
+        let v = pool.parallel_map(1, |_| 7);
+        assert_eq!(v, vec![7]);
+    }
+
+    #[test]
+    fn task_panic_propagates_to_caller() {
+        let pool = ThreadPool::new(2);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.parallel_for(8, |i| {
+                if i == 3 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(r.is_err());
+        // Pool must still be usable afterwards.
+        let v = pool.parallel_map(4, |i| i + 1);
+        assert_eq!(v, vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn spawn_fire_and_forget_completes() {
+        let pool = ThreadPool::new(2);
+        let done = Arc::new(AtomicUsize::new(0));
+        for _ in 0..16 {
+            let d = Arc::clone(&done);
+            pool.spawn(move || {
+                d.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        while done.load(Ordering::SeqCst) != 16 {
+            assert!(std::time::Instant::now() < deadline, "tasks did not finish");
+            std::thread::yield_now();
+        }
+    }
+}

@@ -1,0 +1,252 @@
+//! Cross-module integration: config → controller → learner → driver over
+//! both transports, protocol variants, aggregation rules/backends, stores,
+//! and the YAML config surface.
+
+use metisfl::config::{
+    AggregationBackend, AggregationSpec, FederationEnv, ModelSpec, TransportKind,
+};
+use metisfl::controller::store::{InMemoryStore, ModelStore, OnDiskStore, StoredModel};
+use metisfl::driver::{run_simulated, run_with_trainer};
+use metisfl::learner::trainer::RustSgdTrainer;
+use metisfl::learner::SyntheticTrainer;
+use metisfl::metrics::FedOp;
+use metisfl::proto::TaskMeta;
+use metisfl::tensor::TensorModel;
+use metisfl::util::Rng;
+use std::sync::Arc;
+
+fn base_env(name: &str) -> FederationEnv {
+    FederationEnv::builder(name)
+        .learners(4)
+        .rounds(2)
+        .model(ModelSpec::mlp(4, 3, 8))
+        .samples_per_learner(20)
+        .batch_size(10)
+        .heartbeat_ms(50)
+        .build()
+}
+
+#[test]
+fn sync_round_metrics_are_complete_and_ordered() {
+    let report = run_simulated(&base_env("int-sync")).unwrap();
+    assert_eq!(report.round_metrics.len(), 2);
+    for r in &report.round_metrics {
+        assert_eq!(r.completed, 4);
+        assert!(r.train_round >= r.train_dispatch, "{r:?}");
+        assert!(r.eval_round >= r.eval_dispatch, "{r:?}");
+        assert!(
+            r.federation_round >= r.train_round + r.aggregation,
+            "round total must cover train + aggregation: {r:?}"
+        );
+    }
+    // Controller-side op metrics were recorded too.
+    assert!(report.op_metrics.count(FedOp::Aggregation) >= 2);
+    assert!(report.op_metrics.count(FedOp::TrainDispatch) >= 2);
+    assert!(report.op_metrics.count(FedOp::StoreInsert) >= 8);
+}
+
+#[test]
+fn all_aggregation_rules_run_end_to_end() {
+    for rule in ["fedavg", "fedadam", "fedyogi", "fedadagrad"] {
+        let mut env = base_env(&format!("int-rule-{rule}"));
+        env.aggregation = AggregationSpec { rule: rule.into(), ..Default::default() };
+        let report = run_simulated(&env).unwrap();
+        assert_eq!(report.round_metrics.len(), 2, "{rule}");
+        assert!(report.final_loss.unwrap().is_finite(), "{rule}");
+    }
+}
+
+#[test]
+fn sequential_and_parallel_backends_agree_on_learned_model() {
+    // Identical seeds + deterministic trainers ⇒ same community loss.
+    let mut seq_env = base_env("int-backend-seq");
+    seq_env.aggregation.backend = AggregationBackend::Sequential;
+    let mut par_env = base_env("int-backend-par");
+    par_env.aggregation.backend = AggregationBackend::Parallel;
+    par_env.aggregation.threads = 3;
+    let a = run_with_trainer(&seq_env, |_| Arc::new(RustSgdTrainer)).unwrap();
+    let b = run_with_trainer(&par_env, |_| Arc::new(RustSgdTrainer)).unwrap();
+    let la = a.final_loss.unwrap();
+    let lb = b.final_loss.unwrap();
+    assert!((la - lb).abs() < 1e-9, "{la} vs {lb}");
+}
+
+#[test]
+fn tcp_and_inproc_transports_agree() {
+    let mut tcp_env = base_env("int-tcp");
+    tcp_env.transport = TransportKind::Tcp { base_port: 0 };
+    let a = run_with_trainer(&tcp_env, |_| Arc::new(RustSgdTrainer)).unwrap();
+    let b = run_with_trainer(&base_env("int-inproc"), |_| Arc::new(RustSgdTrainer)).unwrap();
+    assert!((a.final_loss.unwrap() - b.final_loss.unwrap()).abs() < 1e-9);
+    assert_eq!(a.round_metrics.len(), b.round_metrics.len());
+}
+
+#[test]
+fn on_disk_store_survives_completions() {
+    // Exercise the §5 future-work store through the controller service.
+    use metisfl::controller::Controller;
+    use metisfl::net::Service;
+    use metisfl::proto::{Message, ModelProto};
+    use metisfl::tensor::{ByteOrder, DType};
+
+    let dir = std::env::temp_dir().join(format!("metisfl-int-store-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let env = base_env("int-disk-store");
+    let ctrl = Controller::new(env, None).unwrap();
+    ctrl.set_store(Box::new(OnDiskStore::open(&dir).unwrap()));
+
+    let layout = ModelSpec::mlp(4, 3, 8).tensor_layout();
+    let mut rng = Rng::new(5);
+    ctrl.ship_model(TensorModel::random_init(&layout, &mut rng));
+    for id in ["a", "b"] {
+        let m = TensorModel::random_init(&layout, &mut rng);
+        let reply = ctrl.handle(Message::MarkTaskCompleted {
+            task_id: 1,
+            learner_id: id.into(),
+            model: ModelProto::from_model(&m, DType::F32, ByteOrder::Little),
+            meta: TaskMeta { num_samples: 10, ..Default::default() },
+        });
+        assert!(matches!(reply, Message::Ack { ok: true, .. }), "{reply:?}");
+    }
+    // Entries landed on disk and survive reopen.
+    let reopened = OnDiskStore::open(&dir).unwrap();
+    assert_eq!(reopened.len(), 2);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn store_parity_memory_vs_disk() {
+    let dir = std::env::temp_dir().join(format!("metisfl-int-parity-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let layout = ModelSpec::mlp(4, 2, 8).tensor_layout();
+    let mut rng = Rng::new(6);
+    let mut mem = InMemoryStore::new();
+    let mut disk = OnDiskStore::open(&dir).unwrap();
+    for round in 0..3u64 {
+        for learner in ["x", "y"] {
+            let entry = StoredModel {
+                learner_id: learner.into(),
+                round,
+                meta: TaskMeta { num_samples: 7, ..Default::default() },
+                model: TensorModel::random_init(&layout, &mut rng),
+            };
+            mem.insert(entry.clone()).unwrap();
+            disk.insert(entry).unwrap();
+        }
+    }
+    for learner in ["x", "y"] {
+        let a = mem.latest(learner).unwrap().unwrap();
+        let b = disk.latest(learner).unwrap().unwrap();
+        assert_eq!(a.round, b.round);
+        assert_eq!(a.model, b.model);
+    }
+    assert_eq!(mem.len(), disk.len());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn participation_fraction_selects_subset() {
+    let mut env = base_env("int-participation");
+    env.learners = 6;
+    env.participation = 0.5;
+    let report = run_simulated(&env).unwrap();
+    for r in &report.round_metrics {
+        assert_eq!(r.participants, 3, "{r:?}");
+        assert_eq!(r.completed, 3);
+    }
+}
+
+#[test]
+fn heterogeneous_trainers_still_synchronize() {
+    let env = base_env("int-hetero");
+    let report = run_with_trainer(&env, |idx| {
+        Arc::new(SyntheticTrainer::new(200 * idx as u64, 0.01))
+            as Arc<dyn metisfl::learner::Trainer>
+    })
+    .unwrap();
+    for r in &report.round_metrics {
+        assert_eq!(r.completed, 4);
+    }
+}
+
+#[test]
+fn yaml_env_file_drives_a_federation() {
+    let yaml = r#"
+name: from-yaml
+learners: 3
+rounds: 1
+model:
+  input_dim: 4
+  hidden_layers: 2
+  hidden_units: 8
+samples_per_learner: 20
+batch_size: 10
+trainer:
+  kind: synthetic
+  step_time_us: 0
+"#;
+    let env = FederationEnv::from_yaml(yaml).unwrap();
+    let report = run_simulated(&env).unwrap();
+    assert_eq!(report.env_name, "from-yaml");
+    assert_eq!(report.round_metrics.len(), 1);
+}
+
+#[test]
+fn monitor_reports_zero_missed_heartbeats_on_healthy_run() {
+    let mut env = base_env("int-heartbeat");
+    env.heartbeat_ms = 5;
+    let report = run_simulated(&env).unwrap();
+    assert_eq!(report.missed_heartbeats, 0);
+}
+
+#[test]
+fn shipped_env_files_parse_and_validate() {
+    for f in ["envs/quickstart.yaml", "envs/xla_training.yaml", "envs/paper_stress_100k.yaml", "envs/async_semi.yaml"] {
+        let env = FederationEnv::from_file(f).unwrap_or_else(|e| panic!("{f}: {e:#}"));
+        env.validate().unwrap_or_else(|e| panic!("{f}: {e:#}"));
+    }
+    // The paper-scale env really is ~100k params.
+    let env = FederationEnv::from_file("envs/paper_stress_100k.yaml").unwrap();
+    assert!((90_000..130_000).contains(&env.model.param_count()));
+}
+
+#[test]
+fn dp_privatized_federation_round() {
+    // Learner-side DP (Table 1 "Private Training"): wrap the trainer so
+    // every upload is clipped + noised before it leaves the learner.
+    use metisfl::crypto::{privatize_update, DpConfig};
+    use metisfl::learner::{Dataset, Trainer};
+    use metisfl::proto::{EvalResult, TaskSpec};
+
+    struct DpTrainer(SyntheticTrainer, DpConfig);
+    impl Trainer for DpTrainer {
+        fn train(
+            &self,
+            model: &TensorModel,
+            data: &Dataset,
+            spec: &TaskSpec,
+        ) -> anyhow::Result<(TensorModel, metisfl::proto::TaskMeta)> {
+            let (mut out, meta) = self.0.train(model, data, spec)?;
+            let mut rng = Rng::new(0xD9);
+            privatize_update(&mut out, model, &self.1, &mut rng);
+            Ok((out, meta))
+        }
+        fn evaluate(&self, model: &TensorModel, data: &Dataset) -> anyhow::Result<EvalResult> {
+            self.0.evaluate(model, data)
+        }
+        fn name(&self) -> &'static str {
+            "dp"
+        }
+    }
+
+    let env = base_env("int-dp");
+    let cfg = DpConfig { clip_norm: 0.5, noise_multiplier: 0.01 };
+    let report = run_with_trainer(&env, move |_| {
+        Arc::new(DpTrainer(SyntheticTrainer::new(0, 0.05), cfg)) as Arc<dyn Trainer>
+    })
+    .unwrap();
+    assert_eq!(report.round_metrics.len(), 2);
+    assert!(report.final_loss.unwrap().is_finite());
+    // ε accounting sanity for the chosen σ.
+    assert!(cfg.epsilon(1e-5) > 0.0);
+}

@@ -1,0 +1,248 @@
+//! Property-based tests on coordinator invariants: aggregation algebra,
+//! codec roundtrips, wire-format robustness, selector guarantees, store
+//! semantics, and crypto cancellation — all via the crate's own
+//! mini-prop framework (`util::prop`).
+
+use metisfl::config::ModelSpec;
+use metisfl::controller::aggregation::{AggregationRule, Backend, Contribution, FedAvg};
+use metisfl::controller::selector::Selector;
+use metisfl::controller::store::{InMemoryStore, ModelStore, StoredModel};
+use metisfl::crypto::PairwiseMasker;
+use metisfl::proto::{Message, ModelProto, TaskMeta, TaskSpec};
+use metisfl::tensor::{ByteOrder, DType, TensorModel};
+use metisfl::util::prop::{prop_check, Gen};
+use metisfl::util::{Rng, ThreadPool};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+fn rand_model(g: &mut Gen, spec: &ModelSpec) -> TensorModel {
+    let seed = g.rng().next_u64();
+    TensorModel::random_init(&spec.tensor_layout(), &mut Rng::new(seed))
+}
+
+fn rand_spec(g: &mut Gen) -> ModelSpec {
+    ModelSpec::mlp(g.usize_in(1..6), g.usize_in(1..5), g.usize_in(1..12))
+}
+
+#[test]
+fn prop_fedavg_idempotent_on_identical_models() {
+    prop_check("fedavg(m, m, ..., m) == m", 40, |g| {
+        let spec = rand_spec(g);
+        let m = rand_model(g, &spec);
+        let n = g.usize_in(1..6);
+        let cs: Vec<Contribution> = (0..n)
+            .map(|_| Contribution { model: &m, weight: g.f64_in(0.5, 100.0) })
+            .collect();
+        let agg = FedAvg::new().aggregate(&m, &cs, &Backend::Sequential).unwrap();
+        assert!(agg.max_abs_diff(&m) < 1e-4);
+    });
+}
+
+#[test]
+fn prop_fedavg_scale_invariant_in_weights() {
+    prop_check("fedavg(w) == fedavg(c*w)", 40, |g| {
+        let spec = rand_spec(g);
+        let current = rand_model(g, &spec);
+        let n = g.usize_in(2..5);
+        let models: Vec<TensorModel> = (0..n).map(|_| rand_model(g, &spec)).collect();
+        let weights: Vec<f64> = (0..n).map(|_| g.f64_in(0.1, 10.0)).collect();
+        let scale = g.f64_in(0.5, 50.0);
+        let a = FedAvg::new()
+            .aggregate(
+                &current,
+                &models
+                    .iter()
+                    .zip(&weights)
+                    .map(|(m, &w)| Contribution { model: m, weight: w })
+                    .collect::<Vec<_>>(),
+                &Backend::Sequential,
+            )
+            .unwrap();
+        let b = FedAvg::new()
+            .aggregate(
+                &current,
+                &models
+                    .iter()
+                    .zip(&weights)
+                    .map(|(m, &w)| Contribution { model: m, weight: w * scale })
+                    .collect::<Vec<_>>(),
+                &Backend::Sequential,
+            )
+            .unwrap();
+        assert!(a.max_abs_diff(&b) < 1e-4);
+    });
+}
+
+#[test]
+fn prop_parallel_equals_sequential_bitwise() {
+    let pool = Arc::new(ThreadPool::new(3));
+    prop_check("parallel == sequential", 30, |g| {
+        let spec = rand_spec(g);
+        let current = rand_model(g, &spec);
+        let n = g.usize_in(1..7);
+        let models: Vec<TensorModel> = (0..n).map(|_| rand_model(g, &spec)).collect();
+        let weights: Vec<f64> = models.iter().map(|_| 1.0).collect();
+        fn mk<'a>(ms: &'a [TensorModel], ws: &[f64]) -> Vec<Contribution<'a>> {
+            ms.iter().zip(ws).map(|(m, &w)| Contribution { model: m, weight: w }).collect()
+        }
+        let seq = FedAvg::new()
+            .aggregate(&current, &mk(&models, &weights), &Backend::Sequential)
+            .unwrap();
+        let par = FedAvg::new()
+            .aggregate(&current, &mk(&models, &weights), &Backend::Parallel(Arc::clone(&pool)))
+            .unwrap();
+        assert_eq!(seq, par);
+    });
+}
+
+#[test]
+fn prop_model_proto_roundtrip_any_shape() {
+    prop_check("ModelProto roundtrip", 50, |g| {
+        let spec = rand_spec(g);
+        let m = rand_model(g, &spec);
+        let order = if g.bool() { ByteOrder::Little } else { ByteOrder::Big };
+        let proto = ModelProto::from_model(&m, DType::F32, order);
+        let back = proto.to_model().unwrap();
+        assert_eq!(back, m);
+    });
+}
+
+#[test]
+fn prop_message_decode_never_panics_on_corruption() {
+    prop_check("decode(corrupt) is Err or Ok, never panic", 100, |g| {
+        let spec = ModelSpec::mlp(3, 2, 4);
+        let m = TensorModel::random_init(&spec.tensor_layout(), &mut Rng::new(7));
+        let mut bytes = Message::RunTask {
+            task_id: 1,
+            round: 1,
+            model: ModelProto::from_model(&m, DType::F32, ByteOrder::Little),
+            spec: TaskSpec { epochs: 1, batch_size: 10, learning_rate: 0.1, step_budget: 0 },
+        }
+        .encode();
+        // Random corruption: flip bytes, truncate, or extend.
+        match g.usize_in(0..3) {
+            0 => {
+                for _ in 0..g.usize_in(1..8) {
+                    let i = g.usize_in(0..bytes.len());
+                    bytes[i] ^= (g.rng().next_u64() & 0xFF) as u8;
+                }
+            }
+            1 => {
+                let keep = g.usize_in(0..bytes.len());
+                bytes.truncate(keep);
+            }
+            _ => bytes.extend(g.bytes(1..16)),
+        }
+        let _ = Message::decode(&bytes); // must not panic
+    });
+}
+
+#[test]
+fn prop_selector_never_exceeds_population_and_is_distinct() {
+    prop_check("selector invariants", 60, |g| {
+        let n = g.usize_in(1..30);
+        let ids: Vec<String> = (0..n).map(|i| format!("l{i}")).collect();
+        let mut rng = Rng::new(g.rng().next_u64());
+        let sel = match g.usize_in(0..3) {
+            0 => Selector::All,
+            1 => Selector::RandomFraction(g.f64_in(0.01, 1.0)),
+            _ => Selector::FreshnessAware { k: g.usize_in(1..40) },
+        };
+        let chosen = sel.select(&ids, &HashMap::new(), &mut rng);
+        assert!(!chosen.is_empty());
+        assert!(chosen.len() <= n);
+        let mut d = chosen.clone();
+        d.sort();
+        d.dedup();
+        assert_eq!(d.len(), chosen.len(), "duplicates from {sel:?}");
+        for c in &chosen {
+            assert!(ids.contains(c));
+        }
+    });
+}
+
+#[test]
+fn prop_store_latest_is_max_round() {
+    prop_check("store.latest == max round inserted", 40, |g| {
+        let spec = ModelSpec::mlp(2, 1, 4);
+        let mut store = InMemoryStore::new();
+        let n_inserts = g.usize_in(1..20);
+        let mut max_round: HashMap<String, u64> = HashMap::new();
+        for _ in 0..n_inserts {
+            let learner = format!("l{}", g.usize_in(0..4));
+            let round = g.rng().next_u64() % 50;
+            store
+                .insert(StoredModel {
+                    learner_id: learner.clone(),
+                    round,
+                    meta: TaskMeta::default(),
+                    model: rand_model(g, &spec),
+                })
+                .unwrap();
+            let e = max_round.entry(learner).or_insert(0);
+            *e = (*e).max(round);
+        }
+        for (learner, expect) in max_round {
+            assert_eq!(store.latest(&learner).unwrap().unwrap().round, expect);
+        }
+    });
+}
+
+#[test]
+fn prop_store_eviction_preserves_latest() {
+    prop_check("evict keeps newest", 30, |g| {
+        let spec = ModelSpec::mlp(2, 1, 4);
+        let mut store = InMemoryStore::new();
+        let rounds: Vec<u64> = (0..g.usize_in(2..10)).map(|i| i as u64).collect();
+        for &r in &rounds {
+            store
+                .insert(StoredModel {
+                    learner_id: "x".into(),
+                    round: r,
+                    meta: TaskMeta::default(),
+                    model: rand_model(g, &spec),
+                })
+                .unwrap();
+        }
+        let keep = g.usize_in(1..4);
+        store.evict(keep).unwrap();
+        assert_eq!(store.len(), keep.min(rounds.len()));
+        assert_eq!(store.latest("x").unwrap().unwrap().round, *rounds.last().unwrap());
+    });
+}
+
+#[test]
+fn prop_masking_sum_matches_plaintext() {
+    prop_check("pairwise masks cancel", 15, |g| {
+        let n = g.usize_in(2..5);
+        let dim = g.usize_in(1..64);
+        let secret = [(g.rng().next_u64() & 0xFF) as u8; 32];
+        let round = g.rng().next_u64() % 100;
+        let updates: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..dim).map(|_| g.f32_in(-2.0, 2.0)).collect())
+            .collect();
+        let masked: Vec<Vec<i64>> = updates
+            .iter()
+            .enumerate()
+            .map(|(i, u)| PairwiseMasker::new(i, n, round, secret).mask(u))
+            .collect();
+        let sum = PairwiseMasker::unmask_sum(&masked);
+        for d in 0..dim {
+            let expect: f32 = updates.iter().map(|u| u[d]).sum();
+            let eps = PairwiseMasker::quantization_eps(n) * 4.0 + 1e-3;
+            assert!((sum[d] - expect).abs() <= eps, "dim {d}");
+        }
+    });
+}
+
+#[test]
+fn prop_flat_roundtrip_any_model() {
+    prop_check("to_flat/from_flat identity", 60, |g| {
+        let spec = rand_spec(g);
+        let m = rand_model(g, &spec);
+        let layout = m.layout();
+        let flat = m.to_flat();
+        let back = TensorModel::from_flat(&layout, &flat).unwrap();
+        assert_eq!(back, m);
+    });
+}

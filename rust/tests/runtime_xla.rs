@@ -1,0 +1,131 @@
+//! End-to-end runtime tests: load the AOT artifacts, execute the compiled
+//! train/eval/lincomb modules via PJRT, and validate numerics against the
+//! pure-rust reference trainer. Requires `make artifacts` (tiny+small
+//! variants); tests self-skip when artifacts are absent so `cargo test`
+//! stays green on a fresh checkout.
+
+use metisfl::config::ModelSpec;
+use metisfl::controller::aggregation::{Backend, WeightedSum};
+use metisfl::learner::trainer::RustSgdTrainer;
+use metisfl::learner::{Dataset, Trainer};
+use metisfl::proto::TaskSpec;
+use metisfl::runtime::{Artifacts, XlaTrainer};
+use metisfl::tensor::TensorModel;
+use metisfl::util::Rng;
+
+const DIR: &str = "artifacts";
+
+fn have_artifacts() -> bool {
+    match Artifacts::load(DIR) {
+        Ok(a) => a.variant("mlp_l2_u8_in4_out1").is_some(),
+        Err(_) => false,
+    }
+}
+
+fn tiny_spec() -> ModelSpec {
+    ModelSpec::mlp(4, 2, 8)
+}
+
+fn tiny_model(seed: u64) -> TensorModel {
+    TensorModel::random_init(&tiny_spec().tensor_layout(), &mut Rng::new(seed))
+}
+
+#[test]
+fn xla_trainer_runs_and_matches_rust_reference() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let spec = tiny_spec();
+    let xla = XlaTrainer::load(DIR, &spec).unwrap();
+    let model = tiny_model(11);
+    // Batch must match the compiled static batch (16 for tiny).
+    let data = Dataset::synthetic_housing(4, 32, 32, 3);
+    let task = TaskSpec { epochs: 1, batch_size: 16, learning_rate: 0.01, step_budget: 0 };
+
+    let (xla_out, xla_meta) = xla.train(&model, &data, &task).unwrap();
+    let (rust_out, rust_meta) = RustSgdTrainer.train(&model, &data, &task).unwrap();
+
+    assert_eq!(xla_meta.completed_steps, 2);
+    assert_eq!(rust_meta.completed_steps, 2);
+    // Same SGD on the same batches: parameters must agree to fp tolerance.
+    let diff = xla_out.max_abs_diff(&rust_out);
+    assert!(diff < 1e-3, "xla vs rust param diff {diff}");
+    assert!((xla_meta.train_loss - rust_meta.train_loss).abs() < 1e-2);
+}
+
+#[test]
+fn xla_eval_matches_rust_reference() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let spec = tiny_spec();
+    let xla = XlaTrainer::load(DIR, &spec).unwrap();
+    let model = tiny_model(13);
+    let data = Dataset::synthetic_housing(4, 16, 16, 5);
+    let a = xla.evaluate(&model, &data).unwrap();
+    let b = RustSgdTrainer.evaluate(&model, &data).unwrap();
+    assert!((a.loss - b.loss).abs() / b.loss.max(1e-9) < 1e-3, "{} vs {}", a.loss, b.loss);
+    assert_eq!(a.num_samples, 16);
+}
+
+#[test]
+fn xla_training_reduces_loss_over_rounds() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let spec = tiny_spec();
+    let xla = XlaTrainer::load(DIR, &spec).unwrap();
+    let data = Dataset::synthetic_housing(4, 64, 32, 7);
+    let mut model = tiny_model(17);
+    let before = xla.evaluate(&model, &data).unwrap().loss;
+    let task = TaskSpec { epochs: 2, batch_size: 16, learning_rate: 0.02, step_budget: 0 };
+    for _ in 0..10 {
+        let (next, _) = xla.train(&model, &data, &task).unwrap();
+        model = next;
+    }
+    let after = xla.evaluate(&model, &data).unwrap().loss;
+    assert!(after < before * 0.8, "loss did not decrease: {before} -> {after}");
+}
+
+#[test]
+fn xla_lincomb_backend_matches_rust_weighted_sum() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let spec = tiny_spec();
+    let backend_fn = metisfl::runtime::xla_fedavg_backend(DIR, &spec).unwrap();
+    let models: Vec<TensorModel> = (0..4).map(|i| tiny_model(100 + i)).collect();
+    let refs: Vec<&TensorModel> = models.iter().collect();
+    let coeffs = [0.4, 0.3, 0.2, 0.1];
+    let xla_result = backend_fn(&refs, &coeffs).unwrap();
+    let rust_result = WeightedSum::compute(&refs, &coeffs, &Backend::Sequential).unwrap();
+    let diff = xla_result.max_abs_diff(&rust_result);
+    assert!(diff < 1e-5, "xla vs rust aggregation diff {diff}");
+}
+
+#[test]
+fn simulated_federation_with_xla_trainer() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    use metisfl::config::{FederationEnv, TrainerKind};
+    let env = FederationEnv::builder("xla-fed")
+        .learners(3)
+        .rounds(3)
+        .model(tiny_spec())
+        .samples_per_learner(32)
+        .batch_size(16)
+        .learning_rate(0.02)
+        .trainer(TrainerKind::Xla { artifacts_dir: DIR.into() })
+        .build();
+    let report = metisfl::driver::run_simulated(&env).unwrap();
+    assert_eq!(report.round_metrics.len(), 3);
+    let first = report.round_metrics.first().unwrap().community_eval_loss.unwrap();
+    let last = report.round_metrics.last().unwrap().community_eval_loss.unwrap();
+    assert!(last < first, "federated XLA training did not learn: {first} -> {last}");
+}
