@@ -25,11 +25,11 @@ fn main() -> anyhow::Result<()> {
     // Learner updates (equal sample counts → uniform FedAvg weights).
     let layout = spec.tensor_layout();
     let mut rng = Rng::new(99);
-    let updates: Vec<TensorModel> =
-        (0..n).map(|_| TensorModel::random_init(&layout, &mut rng)).collect();
-    let refs: Vec<&TensorModel> = updates.iter().collect();
+    let updates: Vec<std::sync::Arc<TensorModel>> = (0..n)
+        .map(|_| std::sync::Arc::new(TensorModel::random_init(&layout, &mut rng)))
+        .collect();
     let coeffs = vec![1.0 / n as f64; n];
-    let plain = WeightedSum::compute(&refs, &coeffs, &Backend::Sequential)?;
+    let plain = WeightedSum::compute(&updates, &coeffs, &Backend::Sequential)?;
 
     // --- pairwise masking ----------------------------------------------
     let group_secret = [42u8; 32];

@@ -1,12 +1,14 @@
 //! Aggregation ablation (E6): the Fig.-4 claim — parallel per-tensor
 //! aggregation is ~10x sequential and ~100x a Python-style controller —
-//! plus the axpy-kernel micro-comparison and the in-memory vs on-disk
-//! model-store trade-off (Discussion, §5).
+//! extended with the chunk-partitioned backend (scratch reuse on/off),
+//! the layout-degeneracy cell where per-tensor parallelism caps at the
+//! tensor count, the axpy-kernel micro-comparison, and the in-memory vs
+//! on-disk model-store trade-off (Discussion, §5).
 
 use metisfl::baselines::calibration::{self, ParallelModel};
 use metisfl::baselines::{numpy_style_aggregate, python_loop_aggregate};
 use metisfl::config::ModelSpec;
-use metisfl::controller::aggregation::{Backend, WeightedSum};
+use metisfl::controller::aggregation::{Backend, ScratchArena, WeightedSum};
 use metisfl::controller::store::{InMemoryStore, ModelStore, OnDiskStore, StoredModel};
 use metisfl::harness::runner::{fmt_secs, full_scale, BenchRunner, ReportWriter};
 use metisfl::proto::TaskMeta;
@@ -28,9 +30,10 @@ fn main() {
 
     let layout = spec.tensor_layout();
     let mut rng = Rng::new(5);
-    let models: Vec<TensorModel> =
-        (0..learners).map(|_| TensorModel::random_init(&layout, &mut rng)).collect();
-    let refs: Vec<&TensorModel> = models.iter().collect();
+    let models: Vec<Arc<TensorModel>> = (0..learners)
+        .map(|_| Arc::new(TensorModel::random_init(&layout, &mut rng)))
+        .collect();
+    let refs: Vec<&TensorModel> = models.iter().map(|m| m.as_ref()).collect();
     let coeffs: Vec<f64> = vec![1.0 / learners as f64; learners];
     let runner = BenchRunner::new();
     let pool = Arc::new(ThreadPool::with_hardware_threads());
@@ -41,11 +44,30 @@ fn main() {
         &["strategy", "time", "vs parallel(modeled)"],
     );
     let seq = runner.run(|| {
-        let _ = WeightedSum::compute(&refs, &coeffs, &Backend::Sequential).unwrap();
+        let _ = WeightedSum::compute(&models, &coeffs, &Backend::Sequential).unwrap();
     });
     let par_real = runner.run(|| {
         let _ =
-            WeightedSum::compute(&refs, &coeffs, &Backend::Parallel(Arc::clone(&pool))).unwrap();
+            WeightedSum::compute(&models, &coeffs, &Backend::Parallel(Arc::clone(&pool))).unwrap();
+    });
+    // Chunked with scratch reuse: recycle each output so steady-state
+    // iterations allocate nothing — the controller's configuration.
+    let scratch = Arc::new(ScratchArena::new());
+    let chunked_backend =
+        Backend::Chunked { pool: Arc::clone(&pool), scratch: Arc::clone(&scratch) };
+    let chunked_reuse = runner.run(|| {
+        let out = WeightedSum::compute(&models, &coeffs, &chunked_backend).unwrap();
+        scratch.reclaim_model(Arc::new(out));
+    });
+    let chunked_allocs = scratch.fresh_allocations();
+    // Chunked without reuse: a fresh arena per call isolates the cost of
+    // cold allocation in the otherwise identical sweep.
+    let chunked_fresh = runner.run(|| {
+        let cold = Backend::Chunked {
+            pool: Arc::clone(&pool),
+            scratch: Arc::new(ScratchArena::new()),
+        };
+        let _ = WeightedSum::compute(&models, &coeffs, &cold).unwrap();
     });
     let numpy = runner.run(|| {
         let _ = numpy_style_aggregate(&refs, &coeffs);
@@ -66,6 +88,14 @@ fn main() {
     };
     row("parallel per-tensor (modeled 32c)", base);
     row(&format!("parallel per-tensor (real {}t)", cal.hardware_threads), par_real.mean);
+    row(
+        &format!("chunked + scratch reuse (real {}t)", cal.hardware_threads),
+        chunked_reuse.mean,
+    );
+    row(
+        &format!("chunked, fresh alloc (real {}t)", cal.hardware_threads),
+        chunked_fresh.mean,
+    );
     row("sequential per-tensor", seq.mean);
     row("numpy-style temporaries", numpy.mean);
     row(
@@ -78,6 +108,56 @@ fn main() {
         seq.mean / base,
         pyloop.mean / base
     );
+    println!(
+        "chunked steady state: {} fresh output allocations across {} timed runs",
+        chunked_allocs,
+        runner.warmup + runner.samples
+    );
+
+    // --- layout degeneracy: 2 giant tensors ----------------------------
+    // Per-tensor parallelism caps at 2 threads here no matter the
+    // machine; the chunked sweep still uses every core.
+    let wide_n = if full_scale() { 1 << 21 } else { 1 << 18 };
+    let wide_layout: Vec<(String, Vec<usize>)> =
+        vec![("a".into(), vec![wide_n]), ("b".into(), vec![wide_n])];
+    let wide_models: Vec<Arc<TensorModel>> = (0..learners)
+        .map(|_| Arc::new(TensorModel::random_init(&wide_layout, &mut rng)))
+        .collect();
+    let mut report = ReportWriter::new(
+        "agg_ablation_two_tensor",
+        &["strategy (2 equal giant tensors)", "time", "speedup vs sequential"],
+    );
+    let wseq = runner.run(|| {
+        let _ = WeightedSum::compute(&wide_models, &coeffs, &Backend::Sequential).unwrap();
+    });
+    let wpar = runner.run(|| {
+        let _ = WeightedSum::compute(&wide_models, &coeffs, &Backend::Parallel(Arc::clone(&pool)))
+            .unwrap();
+    });
+    let wide_scratch = Arc::new(ScratchArena::new());
+    let wide_backend =
+        Backend::Chunked { pool: Arc::clone(&pool), scratch: Arc::clone(&wide_scratch) };
+    let wchk = runner.run(|| {
+        let out = WeightedSum::compute(&wide_models, &coeffs, &wide_backend).unwrap();
+        wide_scratch.reclaim_model(Arc::new(out));
+    });
+    let mut row = |name: &str, secs: f64| {
+        report.row(vec![
+            name.into(),
+            fmt_secs(std::time::Duration::from_secs_f64(secs)),
+            format!("{:.2}x", wseq.mean / secs),
+        ]);
+    };
+    row("sequential", wseq.mean);
+    row("parallel per-tensor (caps at 2 threads)", wpar.mean);
+    row(&format!("chunked ({} threads)", pool.size()), wchk.mean);
+    report.emit().unwrap();
+    if pool.size() > 2 {
+        println!(
+            "two-tensor cell: chunked vs per-tensor parallel = {:.2}x (expect >= ~1 when cores > 2)",
+            wpar.mean / wchk.mean
+        );
+    }
 
     // --- axpy kernel micro-ablation ------------------------------------
     // Interleaved best-of-N: this box is a noisy shared core, so paired
@@ -108,12 +188,12 @@ fn main() {
     report.emit().unwrap();
 
     // --- model store comparison (§5 future work) ------------------------
-    let store_model = TensorModel::random_init(&layout, &mut Rng::new(7));
+    let store_model = Arc::new(TensorModel::random_init(&layout, &mut Rng::new(7)));
     let entry = |i: usize| StoredModel {
         learner_id: format!("l{i}"),
         round: 1,
         meta: TaskMeta { num_samples: 100, ..Default::default() },
-        model: store_model.clone(),
+        model: Arc::clone(&store_model),
     };
     let mut mem = InMemoryStore::new();
     let sw = Stopwatch::start();

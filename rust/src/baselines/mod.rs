@@ -188,7 +188,7 @@ impl FrameworkProfile {
     /// ParallelTensor backend; returns the new community model.
     pub fn aggregate(
         &self,
-        models: &[&TensorModel],
+        models: &[std::sync::Arc<TensorModel>],
         coeffs: &[f64],
         pool: &crate::util::ThreadPool,
     ) -> TensorModel {
@@ -205,8 +205,14 @@ impl FrameworkProfile {
             AggKind::SequentialTensor => {
                 WeightedSum::compute(models, coeffs, &Backend::Sequential).expect("aggregate")
             }
-            AggKind::NumpyTemporaries => numpy_style_aggregate(models, coeffs),
-            AggKind::PythonLoop { tax } => python_loop_aggregate(models, coeffs, tax),
+            AggKind::NumpyTemporaries => {
+                let refs: Vec<&TensorModel> = models.iter().map(|m| m.as_ref()).collect();
+                numpy_style_aggregate(&refs, coeffs)
+            }
+            AggKind::PythonLoop { tax } => {
+                let refs: Vec<&TensorModel> = models.iter().map(|m| m.as_ref()).collect();
+                python_loop_aggregate(&refs, coeffs, tax)
+            }
         }
     }
 }
@@ -275,22 +281,23 @@ mod tests {
     use crate::controller::aggregation::{Backend, WeightedSum};
     use crate::util::{Rng, ThreadPool};
 
-    fn models(n: usize) -> Vec<TensorModel> {
+    fn models(n: usize) -> Vec<std::sync::Arc<TensorModel>> {
         let layout = ModelSpec::mlp(4, 3, 8).tensor_layout();
         let mut rng = Rng::new(1);
-        (0..n).map(|_| TensorModel::random_init(&layout, &mut rng)).collect()
+        (0..n)
+            .map(|_| std::sync::Arc::new(TensorModel::random_init(&layout, &mut rng)))
+            .collect()
     }
 
     #[test]
     fn all_aggregation_models_agree_numerically() {
         let ms = models(5);
-        let refs: Vec<&TensorModel> = ms.iter().collect();
         let coeffs = [0.1, 0.2, 0.3, 0.25, 0.15];
-        let truth = WeightedSum::compute(&refs, &coeffs, &Backend::Sequential).unwrap();
+        let truth = WeightedSum::compute(&ms, &coeffs, &Backend::Sequential).unwrap();
         let pool = ThreadPool::new(2);
         for fw in Framework::ALL {
             let p = FrameworkProfile::of(fw);
-            let got = p.aggregate(&refs, &coeffs, &pool);
+            let got = p.aggregate(&ms, &coeffs, &pool);
             let diff = truth.max_abs_diff(&got);
             assert!(diff < 1e-4, "{}: diff {diff}", fw.label());
         }

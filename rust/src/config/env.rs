@@ -25,6 +25,11 @@ pub enum AggregationBackend {
     Sequential,
     /// One pool task per model tensor (paper's "MetisFL gRPC + OpenMP").
     Parallel,
+    /// Chunk-partitioned element sweep with reusable scratch buffers:
+    /// parallelism scales with cores regardless of tensor layout, and
+    /// steady-state rounds allocate nothing. Bitwise identical results
+    /// to Sequential/Parallel.
+    Chunked,
     /// Offload the weighted sum to the AOT-compiled Pallas fedavg kernel
     /// via PJRT (ablation backend).
     Xla,
@@ -238,6 +243,7 @@ impl FederationEnv {
                 spec.backend = match be {
                     "sequential" => AggregationBackend::Sequential,
                     "parallel" => AggregationBackend::Parallel,
+                    "chunked" => AggregationBackend::Chunked,
                     "xla" => AggregationBackend::Xla,
                     other => bail!("unknown aggregation backend '{other}'"),
                 };
@@ -547,5 +553,16 @@ seed: 7
     #[test]
     fn variant_name_is_stable() {
         assert_eq!(ModelSpec::paper_100k().variant_name(), "mlp_l100_u32_in8_out1");
+    }
+
+    #[test]
+    fn chunked_backend_parses_from_yaml() {
+        let env = FederationEnv::from_yaml(
+            "aggregation:\n  rule: fedavg\n  backend: chunked\n  threads: 2\n",
+        )
+        .unwrap();
+        assert_eq!(env.aggregation.backend, AggregationBackend::Chunked);
+        assert_eq!(env.aggregation.threads, 2);
+        assert!(FederationEnv::from_yaml("aggregation:\n  backend: warp\n").is_err());
     }
 }

@@ -13,12 +13,19 @@
 use crate::json::Value;
 use std::collections::BTreeMap;
 
-#[derive(Debug, thiserror::Error)]
-#[error("yaml parse error at line {line}: {msg}")]
+#[derive(Debug)]
 pub struct YamlError {
     pub line: usize,
     pub msg: String,
 }
+
+impl std::fmt::Display for YamlError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "yaml parse error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for YamlError {}
 
 struct Line {
     indent: usize,

@@ -1,13 +1,20 @@
-//! FedAvg and the shared per-tensor weighted-sum engine.
+//! FedAvg and the shared weighted-sum engine.
 //!
 //! Figure 4: for `N` learners and `k` model tensors, the parallel backend
 //! computes each aggregated tensor `T_i^C = Σ_j (w_j/W) · T_i^j` as one
-//! independent task — "one thread per model tensor".
+//! independent task — "one thread per model tensor". The chunked backend
+//! goes further: it partitions the *element space* `Σ_i |T_i|` into
+//! ~`pool.size()` contiguous ranges, so parallelism is independent of
+//! how the parameters happen to be sliced into tensors. Every element is
+//! accumulated in learner order under all CPU backends, so the three
+//! produce bitwise-identical results.
 
-use super::{check_contributions, AggregationRule, Backend, Contribution};
+use super::{check_contributions, AggregationRule, Backend, Contribution, ScratchArena};
 use crate::tensor::ops;
-use crate::tensor::{Tensor, TensorModel};
+use crate::tensor::{FlatSpans, Tensor, TensorModel};
+use crate::util::ThreadPool;
 use anyhow::Result;
+use std::sync::Arc;
 
 /// The weighted-sum engine shared by every rule (and reused by the
 /// baselines with different backends).
@@ -15,12 +22,17 @@ pub struct WeightedSum;
 
 impl WeightedSum {
     /// `out_i = Σ_j coeff_j · model_j.tensor_i` for every tensor `i`.
+    ///
+    /// Models are passed as `Arc`s end to end — the engine never copies
+    /// an input; its only O(params) writes go to the output (which the
+    /// chunked backend draws from its [`ScratchArena`]).
     pub fn compute(
-        models: &[&TensorModel],
+        models: &[Arc<TensorModel>],
         coeffs: &[f64],
         backend: &Backend,
     ) -> Result<TensorModel> {
         assert_eq!(models.len(), coeffs.len());
+        assert!(!models.is_empty(), "weighted sum of zero models");
         match backend {
             Backend::Xla(f) => f(models, coeffs),
             Backend::Sequential => {
@@ -34,11 +46,14 @@ impl WeightedSum {
                 let tensors = pool.parallel_map(k, |i| Self::one_tensor(models, coeffs, i));
                 Ok(TensorModel::new(tensors))
             }
+            Backend::Chunked { pool, scratch } => {
+                Ok(Self::compute_chunked(models, coeffs, pool, scratch))
+            }
         }
     }
 
     /// Aggregate tensor `i` across all models (a single Fig.-4 column).
-    fn one_tensor(models: &[&TensorModel], coeffs: &[f64], i: usize) -> Tensor {
+    fn one_tensor(models: &[Arc<TensorModel>], coeffs: &[f64], i: usize) -> Tensor {
         let first = &models[0].tensors[i];
         let mut data = vec![0.0f32; first.elem_count()];
         ops::scaled_copy(&mut data, &first.data, coeffs[0] as f32);
@@ -47,7 +62,79 @@ impl WeightedSum {
         }
         Tensor::new(first.name.clone(), first.shape.clone(), data)
     }
+
+    /// Chunk-partitioned sweep: split the flat element space into
+    /// ~`pool.size()` contiguous ranges; each worker walks its range's
+    /// tensor spans and, per span, accumulates all learners before
+    /// moving on (one pass over the output, per-learner inputs streamed
+    /// through cache once per chunk). Output buffers come from `scratch`.
+    fn compute_chunked(
+        models: &[Arc<TensorModel>],
+        coeffs: &[f64],
+        pool: &ThreadPool,
+        scratch: &ScratchArena,
+    ) -> TensorModel {
+        let reference = &models[0];
+        // The per-tensor backends panic on mismatched layouts via the
+        // kernels' length asserts; the span slicing below would silently
+        // truncate instead, so enforce the same contract up front.
+        for (j, m) in models.iter().enumerate().skip(1) {
+            assert_eq!(
+                m.tensor_count(),
+                reference.tensor_count(),
+                "model {j} tensor count mismatch"
+            );
+            for (a, b) in reference.tensors.iter().zip(&m.tensors) {
+                assert_eq!(
+                    a.data.len(),
+                    b.data.len(),
+                    "model {j} tensor '{}' length mismatch",
+                    a.name
+                );
+            }
+        }
+        let offsets = reference.tensor_offsets();
+        let total = *offsets.last().unwrap();
+        let mut bufs: Vec<Vec<f32>> =
+            reference.tensors.iter().map(|t| scratch.take(t.elem_count())).collect();
+        {
+            let outs: Vec<OutPtr> = bufs.iter_mut().map(|b| OutPtr(b.as_mut_ptr())).collect();
+            let outs = &outs;
+            pool.parallel_chunks(total, |range| {
+                for (t, local) in FlatSpans::new(&offsets, range) {
+                    // SAFETY: `parallel_chunks` hands out disjoint global
+                    // ranges and `FlatSpans` maps them to disjoint
+                    // (tensor, local) spans, so no two tasks alias any
+                    // output element; each buffer outlives the scoped
+                    // `parallel_chunks` barrier.
+                    let dst = unsafe {
+                        std::slice::from_raw_parts_mut(
+                            outs[t].0.add(local.start),
+                            local.len(),
+                        )
+                    };
+                    ops::scaled_copy(dst, &models[0].tensors[t].data[local.clone()], coeffs[0] as f32);
+                    for (m, &c) in models.iter().zip(coeffs).skip(1) {
+                        ops::axpy(dst, &m.tensors[t].data[local.clone()], c as f32);
+                    }
+                }
+            });
+        }
+        let tensors = reference
+            .tensors
+            .iter()
+            .zip(bufs)
+            .map(|(t, data)| Tensor::new(t.name.clone(), t.shape.clone(), data))
+            .collect();
+        TensorModel::new(tensors)
+    }
 }
+
+/// Raw output cursor shared across pool workers; soundness argued at the
+/// single write site in [`WeightedSum::compute_chunked`].
+struct OutPtr(*mut f32);
+unsafe impl Send for OutPtr {}
+unsafe impl Sync for OutPtr {}
 
 /// Plain federated averaging: community = Σ (w_j/W) · model_j.
 #[derive(Default)]
@@ -63,12 +150,13 @@ impl AggregationRule for FedAvg {
     fn aggregate(
         &mut self,
         current: &TensorModel,
-        contributions: &[Contribution<'_>],
+        contributions: &[Contribution],
         backend: &Backend,
     ) -> Result<TensorModel> {
         check_contributions(current, contributions)?;
         let total: f64 = contributions.iter().map(|c| c.weight).sum();
-        let models: Vec<&TensorModel> = contributions.iter().map(|c| c.model).collect();
+        let models: Vec<Arc<TensorModel>> =
+            contributions.iter().map(|c| Arc::clone(&c.model)).collect();
         let coeffs: Vec<f64> = contributions.iter().map(|c| c.weight / total).collect();
         WeightedSum::compute(&models, &coeffs, backend)
     }
@@ -86,19 +174,28 @@ mod tests {
     use crate::util::{Rng, ThreadPool};
     use std::sync::Arc;
 
-    fn setup(n: usize, seed: u64) -> (TensorModel, Vec<TensorModel>) {
+    fn setup(n: usize, seed: u64) -> (TensorModel, Vec<Arc<TensorModel>>) {
         let layout = ModelSpec::mlp(4, 5, 8).tensor_layout();
         let mut rng = Rng::new(seed);
         let current = TensorModel::random_init(&layout, &mut rng);
-        let ms = (0..n).map(|_| TensorModel::random_init(&layout, &mut rng)).collect();
+        let ms = (0..n)
+            .map(|_| Arc::new(TensorModel::random_init(&layout, &mut rng)))
+            .collect();
         (current, ms)
     }
 
-    fn contributions<'a>(ms: &'a [TensorModel], weights: &[f64]) -> Vec<Contribution<'a>> {
+    fn contributions(ms: &[Arc<TensorModel>], weights: &[f64]) -> Vec<Contribution> {
         ms.iter()
             .zip(weights)
-            .map(|(m, &w)| Contribution { model: m, weight: w })
+            .map(|(m, &w)| Contribution { model: Arc::clone(m), weight: w })
             .collect()
+    }
+
+    fn chunked(threads: usize) -> Backend {
+        Backend::Chunked {
+            pool: Arc::new(ThreadPool::new(threads)),
+            scratch: Arc::new(super::super::ScratchArena::new()),
+        }
     }
 
     #[test]
@@ -135,6 +232,43 @@ mod tests {
         let par = FedAvg::new().aggregate(&current, &cs, &Backend::Parallel(pool)).unwrap();
         // Same operation order per tensor ⇒ bitwise identical.
         assert_eq!(seq, par);
+    }
+
+    #[test]
+    fn chunked_backend_matches_sequential_exactly() {
+        let (current, ms) = setup(6, 9);
+        let weights: Vec<f64> = (1..=6).map(|i| i as f64 * 3.0).collect();
+        let seq = FedAvg::new()
+            .aggregate(&current, &contributions(&ms, &weights), &Backend::Sequential)
+            .unwrap();
+        for threads in [1, 2, 3, 7] {
+            let backend = chunked(threads);
+            let chk = FedAvg::new()
+                .aggregate(&current, &contributions(&ms, &weights), &backend)
+                .unwrap();
+            // Same per-element accumulation order ⇒ bitwise identical.
+            assert_eq!(seq, chk, "{threads} threads");
+        }
+    }
+
+    #[test]
+    fn chunked_backend_reuses_scratch_buffers() {
+        let (current, ms) = setup(4, 10);
+        let backend = chunked(3);
+        let scratch = Arc::clone(backend.scratch().unwrap());
+        let first = FedAvg::new()
+            .aggregate(&current, &contributions(&ms, &[1.0; 4]), &backend)
+            .unwrap();
+        let after_first = scratch.fresh_allocations();
+        assert_eq!(after_first, current.tensor_count());
+        // Recycle the previous output (what the controller does when it
+        // replaces the community model) — the next round allocates nothing.
+        scratch.reclaim_model(Arc::new(first));
+        let second = FedAvg::new()
+            .aggregate(&current, &contributions(&ms, &[1.0; 4]), &backend)
+            .unwrap();
+        assert_eq!(scratch.fresh_allocations(), after_first);
+        assert_eq!(second.tensor_count(), current.tensor_count());
     }
 
     #[test]
@@ -176,7 +310,7 @@ mod tests {
             // Permutation symmetry.
             let mut order: Vec<usize> = (0..n).collect();
             g.rng().shuffle(&mut order);
-            let ms2: Vec<TensorModel> = order.iter().map(|&i| ms[i].clone()).collect();
+            let ms2: Vec<Arc<TensorModel>> = order.iter().map(|&i| Arc::clone(&ms[i])).collect();
             let w2: Vec<f64> = order.iter().map(|&i| weights[i]).collect();
             let cs2 = contributions(&ms2, &w2);
             let agg2 = FedAvg::new().aggregate(&current, &cs2, &Backend::Sequential).unwrap();

@@ -1,0 +1,231 @@
+//! Reusable output-buffer arena for the aggregation hot path.
+//!
+//! The chunked weighted-sum backend writes each aggregated tensor into a
+//! buffer checked out of a [`ScratchArena`] instead of a fresh `Vec`.
+//! When the controller replaces the community model, the previous
+//! round's buffers are reclaimed (see [`ScratchArena::reclaim_model`]),
+//! so once the federation reaches steady state — same model layout every
+//! round — `WeightedSum::compute` performs **zero heap allocation** for
+//! its outputs: round `N` aggregates into the buffers round `N-1`'s
+//! community model vacated.
+//!
+//! Buffers in the free list keep their previous contents (`len` stays at
+//! the initialized extent), so checkout can shrink/grow them with safe
+//! `Vec::resize`: no `unsafe`, and the zero-fill only happens for bytes
+//! a buffer never held before.
+
+use crate::tensor::TensorModel;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Free-list caps. Count bounds bookkeeping; the element cap bounds
+/// actual memory: rules whose *output* is not arena-drawn (the adaptive
+/// optimizers deep-clone `current`) recycle one model's worth of
+/// community buffers per round without a matching checkout, so without
+/// a byte bound the pool would grow by a full model every round. 2^26
+/// f32s = 256 MiB retained worst case; steady-state FedAvg needs only
+/// one model's worth.
+const MAX_POOLED: usize = 4096;
+const MAX_POOLED_ELEMS: usize = 1 << 26;
+
+/// A pool of reusable `Vec<f32>` element buffers.
+pub struct ScratchArena {
+    /// Free buffers plus the running sum of their capacities.
+    free: Mutex<(Vec<Vec<f32>>, usize)>,
+    fresh_allocs: AtomicUsize,
+    max_pooled: usize,
+    max_pooled_elems: usize,
+}
+
+impl Default for ScratchArena {
+    fn default() -> ScratchArena {
+        ScratchArena::new()
+    }
+}
+
+impl ScratchArena {
+    pub fn new() -> ScratchArena {
+        ScratchArena::with_caps(MAX_POOLED, MAX_POOLED_ELEMS)
+    }
+
+    /// Arena with explicit free-list caps (tests; memory-tight deploys).
+    pub fn with_caps(max_pooled: usize, max_pooled_elems: usize) -> ScratchArena {
+        ScratchArena {
+            free: Mutex::new((Vec::new(), 0)),
+            fresh_allocs: AtomicUsize::new(0),
+            max_pooled,
+            max_pooled_elems,
+        }
+    }
+
+    /// Check out a buffer of exactly `len` elements. Reuses the smallest
+    /// pooled buffer whose capacity fits (no reallocation); falls back to
+    /// a fresh zeroed allocation, which is counted in
+    /// [`ScratchArena::fresh_allocations`].
+    pub fn take(&self, len: usize) -> Vec<f32> {
+        let mut guard = self.free.lock().unwrap();
+        let (free, pooled_elems) = &mut *guard;
+        let mut best: Option<(usize, usize)> = None; // (index, capacity)
+        for (i, buf) in free.iter().enumerate() {
+            let cap = buf.capacity();
+            let tighter = match best {
+                None => true,
+                Some((_, c)) => cap < c,
+            };
+            if cap >= len && tighter {
+                best = Some((i, cap));
+                if cap == len {
+                    break;
+                }
+            }
+        }
+        if let Some((i, cap)) = best {
+            let mut buf = free.swap_remove(i);
+            *pooled_elems -= cap;
+            drop(guard);
+            buf.resize(len, 0.0);
+            return buf;
+        }
+        drop(guard);
+        self.fresh_allocs.fetch_add(1, Ordering::Relaxed);
+        vec![0.0; len]
+    }
+
+    /// Return a buffer to the free list. Buffers beyond the count or
+    /// memory caps are dropped instead of pooled.
+    pub fn recycle(&self, buf: Vec<f32>) {
+        if buf.capacity() == 0 {
+            return;
+        }
+        let mut guard = self.free.lock().unwrap();
+        let (free, pooled_elems) = &mut *guard;
+        if free.len() < self.max_pooled && *pooled_elems + buf.capacity() <= self.max_pooled_elems
+        {
+            *pooled_elems += buf.capacity();
+            free.push(buf);
+        }
+    }
+
+    /// Reclaim every tensor buffer of a model nobody else references.
+    /// Returns `false` (and reclaims nothing) if the `Arc` is still
+    /// shared — e.g. a scheduler snapshot is alive — which simply means
+    /// the next round pays its allocations; correctness is unaffected.
+    pub fn reclaim_model(&self, model: Arc<TensorModel>) -> bool {
+        match Arc::try_unwrap(model) {
+            Ok(model) => {
+                for t in model.tensors {
+                    self.recycle(t.data);
+                }
+                true
+            }
+            Err(_) => false,
+        }
+    }
+
+    /// Buffers currently pooled.
+    pub fn pooled(&self) -> usize {
+        self.free.lock().unwrap().0.len()
+    }
+
+    /// Total f32 elements of capacity currently pooled.
+    pub fn pooled_elems(&self) -> usize {
+        self.free.lock().unwrap().1
+    }
+
+    /// Total fresh heap allocations served so far (steady-state rounds
+    /// must not move this counter — asserted by the controller tests).
+    pub fn fresh_allocations(&self) -> usize {
+        self.fresh_allocs.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn take_recycle_roundtrip_reuses_capacity() {
+        let arena = ScratchArena::new();
+        let buf = arena.take(100);
+        assert_eq!(buf.len(), 100);
+        assert_eq!(arena.fresh_allocations(), 1);
+        let ptr = buf.as_ptr();
+        arena.recycle(buf);
+        assert_eq!(arena.pooled(), 1);
+        // Same-size checkout reuses the same allocation.
+        let buf = arena.take(100);
+        assert_eq!(buf.as_ptr(), ptr);
+        assert_eq!(arena.fresh_allocations(), 1);
+        // Smaller checkout also reuses (shrink, no realloc).
+        arena.recycle(buf);
+        let buf = arena.take(40);
+        assert_eq!(buf.len(), 40);
+        assert_eq!(buf.as_ptr(), ptr);
+        assert_eq!(arena.fresh_allocations(), 1);
+    }
+
+    #[test]
+    fn take_prefers_tightest_fit() {
+        let arena = ScratchArena::new();
+        let small = arena.take(10);
+        let large = arena.take(1000);
+        let large_ptr = large.as_ptr();
+        arena.recycle(small);
+        arena.recycle(large);
+        // A 500-element request must not burn the 10-cap buffer, and must
+        // pick the 1000-cap one over allocating.
+        let buf = arena.take(500);
+        assert_eq!(buf.as_ptr(), large_ptr);
+        assert_eq!(arena.fresh_allocations(), 2);
+        assert_eq!(arena.pooled(), 1);
+    }
+
+    #[test]
+    fn reclaim_model_requires_unique_ownership() {
+        let arena = ScratchArena::new();
+        let model = Arc::new(TensorModel::new(vec![
+            Tensor::new("a", vec![3], vec![1.0, 2.0, 3.0]),
+            Tensor::new("b", vec![2], vec![4.0, 5.0]),
+        ]));
+        let held = Arc::clone(&model);
+        assert!(!arena.reclaim_model(model));
+        assert_eq!(arena.pooled(), 0);
+        assert!(arena.reclaim_model(held));
+        assert_eq!(arena.pooled(), 2);
+    }
+
+    #[test]
+    fn zero_len_buffers_are_not_pooled() {
+        let arena = ScratchArena::new();
+        arena.recycle(Vec::new());
+        assert_eq!(arena.pooled(), 0);
+        let buf = arena.take(0);
+        assert!(buf.is_empty());
+    }
+
+    #[test]
+    fn memory_cap_bounds_retained_buffers() {
+        // Recycling more capacity than the element cap drops the excess
+        // instead of retaining it forever (the adaptive-rule + chunked
+        // backend round pattern recycles without matching checkouts).
+        let arena = ScratchArena::with_caps(100, 1000);
+        for _ in 0..6 {
+            arena.recycle(Vec::with_capacity(250));
+        }
+        assert_eq!(arena.pooled(), 4);
+        assert_eq!(arena.pooled_elems(), 1000);
+        // Elements are re-accounted on checkout.
+        let buf = arena.take(250);
+        assert_eq!(arena.pooled(), 3);
+        assert_eq!(arena.pooled_elems(), 750);
+        drop(buf);
+        // Count cap applies independently of the element cap.
+        let tiny = ScratchArena::with_caps(2, 1000);
+        for _ in 0..5 {
+            tiny.recycle(Vec::with_capacity(8));
+        }
+        assert_eq!(tiny.pooled(), 2);
+        assert_eq!(tiny.pooled_elems(), 16);
+    }
+}

@@ -6,10 +6,12 @@
 //! server-side moment state. The expensive part — the weighted mean —
 //! reuses [`WeightedSum`], so all backends apply.
 
-use super::{check_contributions, AggregationRule, Backend, Contribution};
 use super::fedavg::WeightedSum;
+use super::{check_contributions, model_l2_norm, AggregationRule, Backend, Contribution};
 use crate::tensor::TensorModel;
+use crate::util::logging;
 use anyhow::Result;
+use std::sync::Arc;
 
 const BETA1: f64 = 0.9;
 const BETA2: f64 = 0.99;
@@ -41,14 +43,23 @@ impl Adaptive {
     fn step(
         &mut self,
         current: &TensorModel,
-        contributions: &[Contribution<'_>],
+        contributions: &[Contribution],
         backend: &Backend,
     ) -> Result<TensorModel> {
         check_contributions(current, contributions)?;
         let total: f64 = contributions.iter().map(|c| c.weight).sum();
-        let models: Vec<&TensorModel> = contributions.iter().map(|c| c.model).collect();
+        let models: Vec<Arc<TensorModel>> =
+            contributions.iter().map(|c| Arc::clone(&c.model)).collect();
         let coeffs: Vec<f64> = contributions.iter().map(|c| c.weight / total).collect();
         let mean = WeightedSum::compute(&models, &coeffs, backend)?;
+        // Norm bookkeeping (diagnostics only — never alters the update):
+        // chunk-reduced ‖mean‖₂ tracks pseudo-gradient health per round.
+        if logging::enabled(logging::LogLevel::Debug) {
+            logging::log_debug(
+                "server-opt",
+                &format!("pseudo-gradient mean norm ‖m̄‖₂ = {:.6}", model_l2_norm(&mean, backend)),
+            );
+        }
 
         let state = self.state.get_or_insert_with(|| AdaptiveState {
             m: current.tensors.iter().map(|t| vec![0.0; t.elem_count()]).collect(),
@@ -77,6 +88,11 @@ impl Adaptive {
                     (cur[ei] as f64 + self.server_lr * m[ei] as f64 / (nv.sqrt() + TAU)) as f32;
             }
         }
+        // The mean was a chunked-backend temporary: hand its buffers back
+        // so the next round's weighted sum allocates nothing.
+        if let Some(scratch) = backend.scratch() {
+            scratch.reclaim_model(Arc::new(mean));
+        }
         Ok(out)
     }
 }
@@ -96,7 +112,7 @@ macro_rules! adaptive_rule {
             fn aggregate(
                 &mut self,
                 current: &TensorModel,
-                contributions: &[Contribution<'_>],
+                contributions: &[Contribution],
                 backend: &Backend,
             ) -> Result<TensorModel> {
                 self.0.step(current, contributions, backend)
@@ -124,21 +140,27 @@ mod tests {
     use crate::config::ModelSpec;
     use crate::util::Rng;
 
-    fn setup() -> (TensorModel, Vec<TensorModel>) {
+    fn setup() -> (TensorModel, Vec<Arc<TensorModel>>) {
         let layout = ModelSpec::mlp(4, 2, 8).tensor_layout();
         let mut rng = Rng::new(42);
         let current = TensorModel::random_init(&layout, &mut rng);
-        let ms = (0..3).map(|_| TensorModel::random_init(&layout, &mut rng)).collect();
+        let ms = (0..3)
+            .map(|_| Arc::new(TensorModel::random_init(&layout, &mut rng)))
+            .collect();
         (current, ms)
+    }
+
+    fn cs(ms: &[Arc<TensorModel>], weight: f64) -> Vec<Contribution> {
+        ms.iter()
+            .map(|m| Contribution { model: Arc::clone(m), weight })
+            .collect()
     }
 
     fn run(rule: &mut dyn AggregationRule, rounds: usize) -> Vec<TensorModel> {
         let (mut current, ms) = setup();
         let mut outs = Vec::new();
         for _ in 0..rounds {
-            let cs: Vec<Contribution> =
-                ms.iter().map(|m| Contribution { model: m, weight: 100.0 }).collect();
-            current = rule.aggregate(&current, &cs, &Backend::Sequential).unwrap();
+            current = rule.aggregate(&current, &cs(&ms, 100.0), &Backend::Sequential).unwrap();
             outs.push(current.clone());
         }
         outs
@@ -147,19 +169,15 @@ mod tests {
     #[test]
     fn adaptive_rules_move_toward_the_mean() {
         let (current, ms) = setup();
-        let cs: Vec<Contribution> =
-            ms.iter().map(|m| Contribution { model: m, weight: 1.0 }).collect();
         let mean = super::super::FedAvg::new()
-            .aggregate(&current, &cs, &Backend::Sequential)
+            .aggregate(&current, &cs(&ms, 1.0), &Backend::Sequential)
             .unwrap();
         for rule in [
             &mut FedAdam::new(0.5) as &mut dyn AggregationRule,
             &mut FedYogi::new(0.5),
             &mut FedAdagrad::new(0.5),
         ] {
-            let cs: Vec<Contribution> =
-                ms.iter().map(|m| Contribution { model: m, weight: 1.0 }).collect();
-            let out = rule.aggregate(&current, &cs, &Backend::Sequential).unwrap();
+            let out = rule.aggregate(&current, &cs(&ms, 1.0), &Backend::Sequential).unwrap();
             // Distance to the fedavg mean must shrink vs. the start.
             let before = current.max_abs_diff(&mean);
             let after = out.max_abs_diff(&mean);
@@ -181,22 +199,23 @@ mod tests {
 
     #[test]
     fn backends_agree_for_adaptive_rules() {
+        use crate::controller::aggregation::ScratchArena;
         use crate::util::ThreadPool;
-        use std::sync::Arc;
         let (current, ms) = setup();
         let pool = Arc::new(ThreadPool::new(3));
-        for (mut a, mut b) in [
-            (FedAdam::new(0.3), FedAdam::new(0.3)),
-        ] {
-            let cs: Vec<Contribution> =
-                ms.iter().map(|m| Contribution { model: m, weight: 2.0 }).collect();
-            let seq = a.aggregate(&current, &cs, &Backend::Sequential).unwrap();
-            let cs: Vec<Contribution> =
-                ms.iter().map(|m| Contribution { model: m, weight: 2.0 }).collect();
-            let par = b
-                .aggregate(&current, &cs, &Backend::Parallel(Arc::clone(&pool)))
-                .unwrap();
-            assert_eq!(seq, par);
+        let backends = [
+            Backend::Parallel(Arc::clone(&pool)),
+            Backend::Chunked {
+                pool: Arc::clone(&pool),
+                scratch: Arc::new(ScratchArena::new()),
+            },
+        ];
+        for backend in &backends {
+            let mut a = FedAdam::new(0.3);
+            let mut b = FedAdam::new(0.3);
+            let seq = a.aggregate(&current, &cs(&ms, 2.0), &Backend::Sequential).unwrap();
+            let other = b.aggregate(&current, &cs(&ms, 2.0), backend).unwrap();
+            assert_eq!(seq, other, "{backend:?}");
         }
     }
 

@@ -112,7 +112,10 @@ struct RoundState {
 }
 
 struct CtrlState {
-    community: Option<TensorModel>,
+    /// Community model, shared by pointer: schedulers snapshot it, the
+    /// store hands back `Arc`s, and aggregation reads through them — the
+    /// controller never deep-copies a model on the hot path.
+    community: Option<Arc<TensorModel>>,
     community_round: u64,
     rule: Box<dyn aggregation::AggregationRule>,
     store: Box<dyn ModelStore>,
@@ -128,7 +131,7 @@ struct CtrlState {
 }
 
 /// Injected XLA aggregation kernel (compiled via the runtime module).
-type XlaAggFn = Arc<dyn Fn(&[&TensorModel], &[f64]) -> Result<TensorModel> + Send + Sync>;
+pub use aggregation::XlaAggFn;
 
 /// The federation controller.
 pub struct Controller {
@@ -222,7 +225,10 @@ impl Controller {
     }
 
     /// Snapshot of the community model (initialized by `ShipModel`).
-    pub fn community(&self) -> Option<(TensorModel, u64)> {
+    /// Returns a shared pointer — no copy. Callers that keep the snapshot
+    /// across an aggregation (schedulers) should drop it once serialized
+    /// so the controller can recycle the buffers on replacement.
+    pub fn community(&self) -> Option<(Arc<TensorModel>, u64)> {
         let s = self.state.lock().unwrap();
         s.community.clone().map(|m| (m, s.community_round))
     }
@@ -230,7 +236,7 @@ impl Controller {
     /// Set the community model directly (driver-local initialization).
     pub fn ship_model(&self, model: TensorModel) {
         let mut s = self.state.lock().unwrap();
-        s.community = Some(model);
+        s.community = Some(Arc::new(model));
         log_info("controller", "community model initialized");
     }
 
@@ -308,8 +314,13 @@ impl Controller {
     }
 
     /// Aggregate `learner_ids`' latest stored models into a new community
-    /// model (T4–T7). Returns the new model.
-    fn aggregate_from_store(&self, learner_ids: &[String], round: u64) -> Result<TensorModel> {
+    /// model (T4–T7). Returns the new model (shared, not copied).
+    ///
+    /// Hot-path properties: `current` and every selection from the store
+    /// are `Arc` clones — no model is deep-copied — and with the chunked
+    /// backend the output is written into recycled scratch buffers, so a
+    /// steady-state round performs zero O(params) allocation.
+    fn aggregate_from_store(&self, learner_ids: &[String], round: u64) -> Result<Arc<TensorModel>> {
         let backend = self.effective_backend();
         let mut s = self.state.lock().unwrap();
         let current = s
@@ -323,16 +334,32 @@ impl Controller {
         let contributions: Vec<Contribution> = selected
             .iter()
             .map(|m| Contribution {
-                model: &m.model,
+                model: Arc::clone(&m.model),
                 weight: m.meta.num_samples.max(1) as f64,
             })
             .collect();
-        let new_model = s.rule.aggregate(&current, &contributions, &backend)?;
-        s.community = Some(new_model.clone());
+        let new_model = Arc::new(s.rule.aggregate(&current, &contributions, &backend)?);
+        let previous = s.community.replace(Arc::clone(&new_model));
         s.community_round = round;
         // Keep only the freshest model per learner (paper's in-memory
         // assumption; lineage stores are opt-in via set_store + evict).
         s.store.evict(1)?;
+        drop(s);
+        // Release our handles on the outgoing community model, then hand
+        // its buffers back to the arena for the next round's output.
+        drop(current);
+        if let (Some(prev), Some(scratch)) = (previous, backend.scratch()) {
+            scratch.reclaim_model(prev);
+        }
+        if crate::util::logging::enabled(crate::util::logging::LogLevel::Debug) {
+            log_debug(
+                "controller",
+                &format!(
+                    "round {round}: community ‖w‖₂ = {:.6}",
+                    aggregation::model_l2_norm(&new_model, &backend)
+                ),
+            );
+        }
         Ok(new_model)
     }
 
@@ -348,11 +375,16 @@ impl Controller {
         let dispatched = s.dispatch_round.get(&entry.learner_id).copied().unwrap_or(0);
         let staleness = s.community_round.saturating_sub(dispatched) as f64;
         let w = (1.0 + staleness).powf(-alpha) * 0.5;
-        let models = [&current, &entry.model];
+        let models = [Arc::clone(&current), Arc::clone(&entry.model)];
         let coeffs = [1.0 - w, w];
         let mixed =
-            aggregation::WeightedSum::compute(&models, &coeffs, &backend)?;
-        s.community = Some(mixed);
+            Arc::new(aggregation::WeightedSum::compute(&models, &coeffs, &backend)?);
+        let previous = s.community.replace(mixed);
+        drop(models);
+        drop(current);
+        if let (Some(prev), Some(scratch)) = (previous, backend.scratch()) {
+            scratch.reclaim_model(prev);
+        }
         s.community_round += 1;
         s.async_updates += 1;
         let updates = s.async_updates;
@@ -499,7 +531,7 @@ impl Controller {
             learner_id: learner_id.clone(),
             round: self.state.lock().unwrap().community_round,
             meta,
-            model: decoded,
+            model: Arc::new(decoded),
         };
 
         match self.env.protocol {
@@ -634,6 +666,64 @@ mod tests {
         // Mean of the two models.
         let expect = 0.5 * model(2).tensors[0].data[0] + 0.5 * model(3).tensors[0].data[0];
         assert!((new_model.tensors[0].data[0] - expect).abs() < 1e-5);
+    }
+
+    #[test]
+    fn chunked_steady_state_rounds_do_not_allocate_output_buffers() {
+        use crate::config::{AggregationBackend, AggregationSpec};
+        let mut e = env();
+        e.aggregation = AggregationSpec {
+            backend: AggregationBackend::Chunked,
+            threads: 2,
+            ..Default::default()
+        };
+        let ctrl = Controller::new(e, None).unwrap();
+        ctrl.ship_model(model(1));
+        let scratch = Arc::clone(ctrl.backend.scratch().expect("chunked backend"));
+        let tensor_count = model(1).tensor_count();
+        let mut allocs_per_round = Vec::new();
+        for round in 1..=5u64 {
+            ctrl.open_round(round, &["a".into(), "b".into()]);
+            for (i, id) in ["a", "b"].into_iter().enumerate() {
+                let m = model(100 + round * 2 + i as u64);
+                ctrl.handle(Message::MarkTaskCompleted {
+                    task_id: round,
+                    learner_id: id.into(),
+                    model: ModelProto::from_model(&m, DType::F32, ByteOrder::Little),
+                    meta: TaskMeta { num_samples: 10, ..Default::default() },
+                });
+            }
+            let arrived = ctrl.wait_round_completions(Duration::from_secs(1));
+            assert_eq!(arrived.len(), 2);
+            ctrl.aggregate_from_store(&arrived, round).unwrap();
+            allocs_per_round.push(scratch.fresh_allocations());
+        }
+        // Round 1 pays one buffer per output tensor; every later round
+        // reuses the buffers reclaimed from the replaced community model.
+        assert_eq!(allocs_per_round[0], tensor_count);
+        assert_eq!(
+            allocs_per_round.last(),
+            allocs_per_round.first(),
+            "steady-state rounds allocated output buffers: {allocs_per_round:?}"
+        );
+    }
+
+    #[test]
+    fn aggregate_result_is_shared_not_copied() {
+        let ctrl = Controller::new(env(), None).unwrap();
+        ctrl.ship_model(model(1));
+        ctrl.open_round(1, &["a".into()]);
+        ctrl.handle(Message::MarkTaskCompleted {
+            task_id: 1,
+            learner_id: "a".into(),
+            model: ModelProto::from_model(&model(2), DType::F32, ByteOrder::Little),
+            meta: TaskMeta { num_samples: 10, ..Default::default() },
+        });
+        let arrived = ctrl.wait_round_completions(Duration::from_secs(1));
+        let new_model = ctrl.aggregate_from_store(&arrived, 1).unwrap();
+        let (community, _) = ctrl.community().unwrap();
+        // Same allocation: the slot and the return value alias one model.
+        assert!(Arc::ptr_eq(&new_model, &community));
     }
 
     #[test]

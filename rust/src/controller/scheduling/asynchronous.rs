@@ -47,6 +47,9 @@ pub fn run_async_session(
         .community()
         .ok_or_else(|| anyhow::anyhow!("async session: community model not initialized"))?;
     let proto = ModelProto::from_model(&community, DType::F32, ByteOrder::Little);
+    // Release the snapshot so async mixing can recycle the model's
+    // buffers when it is replaced.
+    drop(community);
     let first_sw = Stopwatch::start();
     let initial_task = Message::RunTask {
         task_id: dispatched_round,

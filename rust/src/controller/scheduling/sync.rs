@@ -37,6 +37,10 @@ pub(crate) fn run_round_with_budget(
     let ser_sw = Stopwatch::start();
     let model_proto = ModelProto::from_model(&community, DType::F32, ByteOrder::Little);
     ctrl.record(FedOp::Serialization, ser_sw.elapsed());
+    // Release the snapshot now that it's serialized: aggregation replaces
+    // the community model, and a sole-owner `Arc` at that point lets the
+    // controller recycle its buffers into the scratch arena.
+    drop(community);
 
     let ids: Vec<String> = participants.iter().map(|h| h.id.clone()).collect();
     ctrl.open_round(round, &ids);

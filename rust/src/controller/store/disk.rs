@@ -94,7 +94,7 @@ impl OnDiskStore {
             crate::proto::Message::ShipModel { model } => model.to_model()?,
             other => anyhow::bail!("unexpected stored message {}", other.kind()),
         };
-        Ok(StoredModel { learner_id, round, meta, model })
+        Ok(StoredModel { learner_id, round, meta, model: std::sync::Arc::new(model) })
     }
 }
 

@@ -1,4 +1,10 @@
 //! In-memory hash-map model store (the paper's §4 baseline assumption).
+//!
+//! Lineages are kept **insertion-ordered by round** (insert finds its
+//! slot via partition point, ties land after their equals), so
+//! `latest()` is `last()` — O(1) plus an `Arc` clone — and eviction is a
+//! front drain, instead of the seed's re-sort-on-every-evict and
+//! full-scan `max_by_key` per `latest()` call.
 
 use super::{ModelStore, StoredModel};
 use anyhow::Result;
@@ -15,7 +21,7 @@ impl InMemoryStore {
         Self::default()
     }
 
-    /// Full lineage for one learner, oldest→newest.
+    /// Full lineage for one learner, oldest→newest round.
     pub fn lineage(&self, learner_id: &str) -> &[StoredModel] {
         self.by_learner.get(learner_id).map(|v| v.as_slice()).unwrap_or(&[])
     }
@@ -27,16 +33,16 @@ impl InMemoryStore {
 
 impl ModelStore for InMemoryStore {
     fn insert(&mut self, entry: StoredModel) -> Result<()> {
-        self.by_learner.entry(entry.learner_id.clone()).or_default().push(entry);
+        let lineage = self.by_learner.entry(entry.learner_id.clone()).or_default();
+        // Sorted insert; `<=` sends same-round re-submissions after their
+        // predecessors, preserving the old "latest wins" tie-break.
+        let pos = lineage.partition_point(|m| m.round <= entry.round);
+        lineage.insert(pos, entry);
         Ok(())
     }
 
     fn latest(&self, learner_id: &str) -> Result<Option<StoredModel>> {
-        Ok(self
-            .by_learner
-            .get(learner_id)
-            .and_then(|v| v.iter().max_by_key(|m| m.round))
-            .cloned())
+        Ok(self.by_learner.get(learner_id).and_then(|v| v.last()).cloned())
     }
 
     fn len(&self) -> usize {
@@ -54,11 +60,10 @@ impl ModelStore for InMemoryStore {
     fn evict(&mut self, keep_last: usize) -> Result<usize> {
         let mut evicted = 0;
         for v in self.by_learner.values_mut() {
-            v.sort_by_key(|m| m.round);
-            while v.len() > keep_last {
-                v.remove(0);
-                evicted += 1;
-            }
+            // Already round-ordered: drop the oldest prefix in one drain.
+            let excess = v.len().saturating_sub(keep_last);
+            v.drain(..excess);
+            evicted += excess;
         }
         Ok(evicted)
     }
@@ -77,6 +82,30 @@ mod tests {
     fn conformance() {
         let mut s = InMemoryStore::new();
         test_support::conformance(&mut s);
+    }
+
+    #[test]
+    fn out_of_order_inserts_keep_lineage_sorted() {
+        let mut s = InMemoryStore::new();
+        for round in [5u64, 1, 3, 2, 4] {
+            s.insert(test_support::entry("x", round, round)).unwrap();
+        }
+        let rounds: Vec<u64> = s.lineage("x").iter().map(|m| m.round).collect();
+        assert_eq!(rounds, vec![1, 2, 3, 4, 5]);
+        assert_eq!(s.latest("x").unwrap().unwrap().round, 5);
+    }
+
+    #[test]
+    fn same_round_resubmission_latest_wins() {
+        let mut s = InMemoryStore::new();
+        s.insert(test_support::entry("x", 7, 1)).unwrap();
+        let second = test_support::entry("x", 7, 2);
+        let expect = second.model.clone();
+        s.insert(second).unwrap();
+        // Ties are ordered by insertion: the re-submission is "latest".
+        let got = s.latest("x").unwrap().unwrap();
+        assert_eq!(got.model, expect);
+        assert_eq!(s.len(), 2);
     }
 
     #[test]

@@ -15,14 +15,20 @@ pub use memory::InMemoryStore;
 use crate::proto::TaskMeta;
 use crate::tensor::TensorModel;
 use anyhow::Result;
+use std::sync::Arc;
 
 /// A stored model plus its provenance.
+///
+/// The model is held by `Arc`: cloning a `StoredModel` (to hand a round's
+/// selection to the aggregator, or to keep a lineage entry alive) copies
+/// a pointer plus small metadata, never the parameter buffers — the
+/// store is zero-copy on the aggregation hot path.
 #[derive(Debug, Clone)]
 pub struct StoredModel {
     pub learner_id: String,
     pub round: u64,
     pub meta: TaskMeta,
-    pub model: TensorModel,
+    pub model: Arc<TensorModel>,
 }
 
 /// Storage for learners' local models (insert on `MarkTaskCompleted`,
@@ -76,7 +82,7 @@ pub(crate) mod test_support {
             learner_id: learner.to_string(),
             round,
             meta: TaskMeta { num_samples: 100, ..Default::default() },
-            model: TensorModel::random_init(&layout, &mut rng),
+            model: Arc::new(TensorModel::random_init(&layout, &mut rng)),
         }
     }
 

@@ -170,17 +170,19 @@ pub fn stress_round(
             encode_model(profile, update)
         })
         .collect();
-    // Controller receives + stores every local model.
-    let received: Vec<TensorModel> =
-        uploads.iter().map(|u| decode_model(profile, u, &w.community)).collect();
+    // Controller receives + stores every local model (shared from here
+    // on — the production store/aggregation path passes `Arc`s).
+    let received: Vec<std::sync::Arc<TensorModel>> = uploads
+        .iter()
+        .map(|u| std::sync::Arc::new(decode_model(profile, u, &w.community)))
+        .collect();
     let train_round = train_dispatch + sw.elapsed();
 
     // --- (c) aggregation ------------------------------------------------
-    let refs: Vec<&TensorModel> = received.iter().collect();
     let total: f64 = w.weights.iter().sum();
     let coeffs: Vec<f64> = w.weights.iter().map(|x| x / total).collect();
     let sw = Stopwatch::start();
-    let new_community = profile.aggregate(&refs, &coeffs, pool);
+    let new_community = profile.aggregate(&received, &coeffs, pool);
     let aggregation = sw.elapsed();
 
     // 1-core substitution: model the 32-core OpenMP time from the
@@ -193,7 +195,7 @@ pub fn stress_round(
         // Measure the sequential time once on the same inputs.
         let sw = Stopwatch::start();
         let _ = crate::controller::aggregation::WeightedSum::compute(
-            &refs,
+            &received,
             &coeffs,
             &crate::controller::aggregation::Backend::Sequential,
         );

@@ -163,7 +163,7 @@ fn cmd_simulate(raw: &[String]) -> anyhow::Result<()> {
         .opt("layers", Some("10"), "hidden layers")
         .opt("units", Some("32"), "units per hidden layer")
         .opt("protocol", Some("sync"), "sync | semisync | async")
-        .opt("backend", Some("parallel"), "aggregation: sequential | parallel | xla")
+        .opt("backend", Some("chunked"), "aggregation: sequential | parallel | chunked | xla")
         .opt("artifacts", None, "artifacts dir (enables real XLA training)")
         .flag("distributed", "use localhost TCP instead of in-proc");
     let a = parse(&cmd, raw)?;
@@ -177,6 +177,7 @@ fn cmd_simulate(raw: &[String]) -> anyhow::Result<()> {
     agg.backend = match a.get("backend").unwrap() {
         "sequential" => metisfl::config::AggregationBackend::Sequential,
         "parallel" => metisfl::config::AggregationBackend::Parallel,
+        "chunked" => metisfl::config::AggregationBackend::Chunked,
         "xla" => metisfl::config::AggregationBackend::Xla,
         other => anyhow::bail!("unknown backend '{other}'"),
     };

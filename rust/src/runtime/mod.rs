@@ -407,17 +407,18 @@ impl Trainer for XlaTrainer {
 /// Build the XLA aggregation backend from the compiled Pallas lincomb
 /// kernel: `lincomb(a, b, wa, wb) = wa·a + wb·b` over flat params.
 /// The weighted sum over N models is a left fold of N−1 lincomb calls.
+/// Models arrive as `Arc`s (the controller's zero-copy plumbing); the
+/// only copies made here are the flat staging buffers PJRT consumes.
 pub fn xla_fedavg_backend(
     artifacts_dir: &str,
     spec: &ModelSpec,
-) -> Result<std::sync::Arc<dyn Fn(&[&TensorModel], &[f64]) -> Result<TensorModel> + Send + Sync>>
-{
+) -> Result<crate::controller::aggregation::XlaAggFn> {
     let arts = Artifacts::load(artifacts_dir)?;
     let info = arts.for_spec(spec)?;
     let exe = XlaService::global().compile(&arts.file(&info.lincomb_file))?;
     let param_count = info.param_count;
     let layout = spec.tensor_layout();
-    Ok(std::sync::Arc::new(move |models: &[&TensorModel], coeffs: &[f64]| {
+    Ok(std::sync::Arc::new(move |models: &[std::sync::Arc<TensorModel>], coeffs: &[f64]| {
         if models.is_empty() {
             bail!("xla aggregation with zero models");
         }

@@ -219,6 +219,62 @@ impl Tensor {
     }
 }
 
+/// Spans of a global element range across a model's tensors.
+///
+/// Given the prefix-sum `offsets` from [`TensorModel::tensor_offsets`]
+/// and a range of the model's flat element space, yields
+/// `(tensor_index, local_range)` pairs in tensor order covering exactly
+/// that range. Zero-element tensors are skipped. This lets a worker
+/// sweep an arbitrary contiguous chunk of the element space without the
+/// model ever being materialized as one flat buffer.
+pub struct FlatSpans<'a> {
+    offsets: &'a [usize],
+    pos: usize,
+    end: usize,
+    tensor: usize,
+}
+
+impl<'a> FlatSpans<'a> {
+    /// `range` must lie within `0..offsets.last()`.
+    pub fn new(offsets: &'a [usize], range: std::ops::Range<usize>) -> FlatSpans<'a> {
+        assert!(offsets.len() >= 2, "offsets must cover at least zero tensors plus total");
+        let total = *offsets.last().unwrap();
+        assert!(range.end <= total, "range {range:?} exceeds element count {total}");
+        // Largest t with offsets[t] <= pos; empty tensors at pos sort
+        // before it, so offsets[t + 1] > pos is guaranteed.
+        let tensor = if range.start >= range.end {
+            offsets.len() - 1 // exhausted immediately
+        } else {
+            offsets.partition_point(|&o| o <= range.start) - 1
+        };
+        FlatSpans { offsets, pos: range.start, end: range.end, tensor }
+    }
+}
+
+impl Iterator for FlatSpans<'_> {
+    /// `(tensor_index, local_element_range)`.
+    type Item = (usize, std::ops::Range<usize>);
+
+    fn next(&mut self) -> Option<Self::Item> {
+        while self.pos < self.end {
+            let t = self.tensor;
+            let t_start = self.offsets[t];
+            let t_end = self.offsets[t + 1];
+            if t_end <= self.pos {
+                // Zero-element tensor (or one fully before pos): skip.
+                self.tensor += 1;
+                continue;
+            }
+            let lo = self.pos - t_start;
+            let hi = t_end.min(self.end) - t_start;
+            self.pos = t_start + hi;
+            self.tensor += 1;
+            return Some((t, lo..hi));
+        }
+        None
+    }
+}
+
 /// Round-to-nearest-even f32 → bf16 bit pattern.
 pub fn f32_to_bf16_bits(v: f32) -> u16 {
     let bits = v.to_bits();
@@ -322,6 +378,22 @@ impl TensorModel {
     /// Layout (name, shape) pairs of this model.
     pub fn layout(&self) -> Vec<(String, Vec<usize>)> {
         self.tensors.iter().map(|t| (t.name.clone(), t.shape.clone())).collect()
+    }
+
+    /// Exclusive prefix sums of tensor element counts:
+    /// `offsets[i]..offsets[i+1]` is tensor `i`'s slice of the model's
+    /// flat element space (`offsets.len() == tensor_count() + 1`,
+    /// `offsets.last() == param_count()`). This is the index map the
+    /// chunk-partitioned aggregation backend sweeps over.
+    pub fn tensor_offsets(&self) -> Vec<usize> {
+        let mut offsets = Vec::with_capacity(self.tensors.len() + 1);
+        let mut total = 0usize;
+        offsets.push(0);
+        for t in &self.tensors {
+            total += t.elem_count();
+            offsets.push(total);
+        }
+        offsets
     }
 
     /// Max absolute element difference against another model.
@@ -441,6 +513,77 @@ mod tests {
             let bytes = t.encode_data(DType::F32, order);
             let back = Tensor::decode_data("t", shape, DType::F32, order, &bytes).unwrap();
             assert_eq!(back.data, t.data);
+        });
+    }
+
+    #[test]
+    fn tensor_offsets_are_prefix_sums() {
+        let m = TensorModel::new(vec![
+            Tensor::new("a", vec![2, 3], vec![0.0; 6]),
+            Tensor::new("b", vec![4], vec![0.0; 4]),
+            Tensor::new("c", vec![1], vec![0.0]),
+        ]);
+        assert_eq!(m.tensor_offsets(), vec![0, 6, 10, 11]);
+        assert_eq!(*m.tensor_offsets().last().unwrap(), m.param_count());
+    }
+
+    #[test]
+    fn flat_spans_cover_ranges_exactly() {
+        let offsets = [0usize, 6, 10, 11];
+        // Full range.
+        let spans: Vec<_> = FlatSpans::new(&offsets, 0..11).collect();
+        assert_eq!(spans, vec![(0, 0..6), (1, 0..4), (2, 0..1)]);
+        // Range inside one tensor.
+        let spans: Vec<_> = FlatSpans::new(&offsets, 2..5).collect();
+        assert_eq!(spans, vec![(0, 2..5)]);
+        // Range straddling a boundary, starting exactly on one.
+        let spans: Vec<_> = FlatSpans::new(&offsets, 6..11).collect();
+        assert_eq!(spans, vec![(1, 0..4), (2, 0..1)]);
+        // Empty range.
+        assert_eq!(FlatSpans::new(&offsets, 4..4).count(), 0);
+    }
+
+    #[test]
+    fn flat_spans_skip_zero_element_tensors() {
+        // Tensors with a zero dim contribute no elements.
+        let offsets = [0usize, 0, 5, 5, 9];
+        let spans: Vec<_> = FlatSpans::new(&offsets, 0..9).collect();
+        assert_eq!(spans, vec![(1, 0..5), (3, 0..4)]);
+        let spans: Vec<_> = FlatSpans::new(&offsets, 5..9).collect();
+        assert_eq!(spans, vec![(3, 0..4)]);
+    }
+
+    #[test]
+    fn prop_flat_spans_partition_matches_serial_sweep() {
+        prop_check("flat spans partition", 60, |g| {
+            let k = g.usize_in(1..8);
+            let counts: Vec<usize> = (0..k).map(|_| g.usize_in(0..20)).collect();
+            let mut offsets = vec![0usize];
+            for c in &counts {
+                offsets.push(offsets.last().unwrap() + c);
+            }
+            let total = *offsets.last().unwrap();
+            let chunks = g.usize_in(1..6);
+            let chunk = total.div_ceil(chunks.max(1)).max(1);
+            // Concatenating span sweeps over chunked ranges must visit
+            // every (tensor, local index) pair exactly once, in order.
+            let mut visited: Vec<(usize, usize)> = Vec::new();
+            let mut lo = 0;
+            while lo < total {
+                let hi = (lo + chunk).min(total);
+                for (t, local) in FlatSpans::new(&offsets, lo..hi) {
+                    for i in local {
+                        visited.push((t, i));
+                    }
+                }
+                lo = hi;
+            }
+            let expect: Vec<(usize, usize)> = counts
+                .iter()
+                .enumerate()
+                .flat_map(|(t, &c)| (0..c).map(move |i| (t, i)))
+                .collect();
+            assert_eq!(visited, expect);
         });
     }
 

@@ -1,10 +1,15 @@
 //! Hot-path element-wise kernels for aggregation.
 //!
 //! The controller's dominant op is the weighted sum `acc += w · x` over
-//! megabytes of `f32` (one call per learner per tensor, Fig. 4). The
-//! implementations below are written to let LLVM auto-vectorize: fixed
-//! 8-lane unrolled main loops over `chunks_exact`, no bounds checks in the
-//! body. `benches/agg_ablation.rs` measures them against the naive form.
+//! megabytes of `f32`. Per-tensor backends issue one call per learner
+//! per tensor (Fig. 4); the chunked backend issues one call per learner
+//! per *span* — the slice of a tensor that falls inside a worker's
+//! element range — so the same kernels serve both partitions. [`dot`]
+//! doubles as the chunk-local partial sum behind
+//! `ThreadPool::reduce_chunks` norm bookkeeping. The implementations are
+//! written to let LLVM auto-vectorize: plain zip loops, no bounds checks
+//! in the body. `benches/agg_ablation.rs` measures them against the
+//! naive form.
 
 /// `acc[i] += w * x[i]` — the FedAvg accumulation kernel.
 ///

@@ -124,6 +124,14 @@ impl ThreadPool {
         out.into_iter().map(|t| t.expect("slot filled")).collect()
     }
 
+    /// Shared partition arithmetic for [`ThreadPool::parallel_chunks`]
+    /// and [`ThreadPool::reduce_chunks`]: `(chunk_count, chunk_size)`
+    /// such that chunk `c` covers `c*size .. min((c+1)*size, n)`.
+    fn chunk_layout(&self, n: usize) -> (usize, usize) {
+        let chunks = self.size.min(n.max(1));
+        (chunks, n.div_ceil(chunks))
+    }
+
     /// Split `0..n` into `chunks ≈ size()` contiguous ranges and run `f`
     /// on each range in parallel. Better than `parallel_for` when the
     /// per-index work is tiny.
@@ -131,8 +139,7 @@ impl ThreadPool {
     where
         F: Fn(std::ops::Range<usize>) + Send + Sync,
     {
-        let chunks = self.size.min(n.max(1));
-        let chunk = n.div_ceil(chunks);
+        let (chunks, chunk) = self.chunk_layout(n);
         self.parallel_for(chunks, |c| {
             let lo = c * chunk;
             let hi = ((c + 1) * chunk).min(n);
@@ -140,6 +147,34 @@ impl ThreadPool {
                 f(lo..hi);
             }
         });
+    }
+
+    /// Chunk-local partial-sum reduction: evaluate `f` over the same
+    /// contiguous ranges as [`ThreadPool::parallel_chunks`] (shared
+    /// [`ThreadPool::chunk_layout`] arithmetic) and sum the per-chunk
+    /// partials **in chunk order**, so the result is deterministic for a
+    /// fixed pool size regardless of which worker finishes first. Used
+    /// for norm bookkeeping on the aggregation hot path (the per-chunk
+    /// `f` typically wraps [`crate::tensor::ops::dot`]) and by
+    /// server-optimizer / metrics diagnostics.
+    pub fn reduce_chunks<F>(&self, n: usize, f: F) -> f64
+    where
+        F: Fn(std::ops::Range<usize>) -> f64 + Send + Sync,
+    {
+        if n == 0 {
+            return 0.0;
+        }
+        let (chunks, chunk) = self.chunk_layout(n);
+        let partials = self.parallel_map(chunks, |c| {
+            let lo = c * chunk;
+            let hi = ((c + 1) * chunk).min(n);
+            if lo < hi {
+                f(lo..hi)
+            } else {
+                0.0
+            }
+        });
+        partials.iter().sum()
     }
 }
 
@@ -272,6 +307,23 @@ mod tests {
             sum.fetch_add(local, Ordering::SeqCst);
         });
         assert_eq!(sum.load(Ordering::SeqCst), 999 * 1000 / 2);
+    }
+
+    #[test]
+    fn reduce_chunks_matches_serial_sum_deterministically() {
+        let data: Vec<f64> = (0..10_000).map(|i| (i as f64) * 0.25 - 7.0).collect();
+        let serial: f64 = data.iter().sum();
+        let pool = ThreadPool::new(4);
+        let reduce = || pool.reduce_chunks(data.len(), |r| data[r].iter().sum());
+        let first = reduce();
+        // Chunk-ordered summation ⇒ bitwise identical across runs.
+        for _ in 0..5 {
+            assert_eq!(reduce().to_bits(), first.to_bits());
+        }
+        assert!((first - serial).abs() < 1e-6, "{first} vs {serial}");
+        // Edge cases: empty input and fewer items than workers.
+        assert_eq!(pool.reduce_chunks(0, |_| panic!("must not run")), 0.0);
+        assert_eq!(pool.reduce_chunks(2, |r| r.len() as f64), 2.0);
     }
 
     #[test]

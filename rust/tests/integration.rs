@@ -72,6 +72,26 @@ fn sequential_and_parallel_backends_agree_on_learned_model() {
 }
 
 #[test]
+fn chunked_backend_agrees_end_to_end_and_over_multiple_rounds() {
+    // The chunked backend drives whole federations to the same losses as
+    // sequential aggregation, across several rounds of scratch reuse.
+    let mut seq_env = base_env("int-backend-seq2");
+    seq_env.rounds = 4;
+    seq_env.aggregation.backend = AggregationBackend::Sequential;
+    let mut chk_env = base_env("int-backend-chunked");
+    chk_env.rounds = 4;
+    chk_env.aggregation.backend = AggregationBackend::Chunked;
+    chk_env.aggregation.threads = 3;
+    let a = run_with_trainer(&seq_env, |_| Arc::new(RustSgdTrainer)).unwrap();
+    let b = run_with_trainer(&chk_env, |_| Arc::new(RustSgdTrainer)).unwrap();
+    assert_eq!(a.round_metrics.len(), b.round_metrics.len());
+    for (ra, rb) in a.round_metrics.iter().zip(&b.round_metrics) {
+        let (la, lb) = (ra.community_eval_loss.unwrap(), rb.community_eval_loss.unwrap());
+        assert!((la - lb).abs() < 1e-12, "round {}: {la} vs {lb}", ra.round);
+    }
+}
+
+#[test]
 fn tcp_and_inproc_transports_agree() {
     let mut tcp_env = base_env("int-tcp");
     tcp_env.transport = TransportKind::Tcp { base_port: 0 };
@@ -128,7 +148,7 @@ fn store_parity_memory_vs_disk() {
                 learner_id: learner.into(),
                 round,
                 meta: TaskMeta { num_samples: 7, ..Default::default() },
-                model: TensorModel::random_init(&layout, &mut rng),
+                model: Arc::new(TensorModel::random_init(&layout, &mut rng)),
             };
             mem.insert(entry.clone()).unwrap();
             disk.insert(entry).unwrap();

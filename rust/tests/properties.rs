@@ -4,7 +4,9 @@
 //! mini-prop framework (`util::prop`).
 
 use metisfl::config::ModelSpec;
-use metisfl::controller::aggregation::{AggregationRule, Backend, Contribution, FedAvg};
+use metisfl::controller::aggregation::{
+    AggregationRule, Backend, Contribution, FedAvg, ScratchArena,
+};
 use metisfl::controller::selector::Selector;
 use metisfl::controller::store::{InMemoryStore, ModelStore, StoredModel};
 use metisfl::crypto::PairwiseMasker;
@@ -28,14 +30,21 @@ fn rand_spec(g: &mut Gen) -> ModelSpec {
 fn prop_fedavg_idempotent_on_identical_models() {
     prop_check("fedavg(m, m, ..., m) == m", 40, |g| {
         let spec = rand_spec(g);
-        let m = rand_model(g, &spec);
+        let m = Arc::new(rand_model(g, &spec));
         let n = g.usize_in(1..6);
         let cs: Vec<Contribution> = (0..n)
-            .map(|_| Contribution { model: &m, weight: g.f64_in(0.5, 100.0) })
+            .map(|_| Contribution { model: Arc::clone(&m), weight: g.f64_in(0.5, 100.0) })
             .collect();
         let agg = FedAvg::new().aggregate(&m, &cs, &Backend::Sequential).unwrap();
         assert!(agg.max_abs_diff(&m) < 1e-4);
     });
+}
+
+fn mk(ms: &[Arc<TensorModel>], ws: &[f64]) -> Vec<Contribution> {
+    ms.iter()
+        .zip(ws)
+        .map(|(m, &w)| Contribution { model: Arc::clone(m), weight: w })
+        .collect()
 }
 
 #[test]
@@ -44,30 +53,16 @@ fn prop_fedavg_scale_invariant_in_weights() {
         let spec = rand_spec(g);
         let current = rand_model(g, &spec);
         let n = g.usize_in(2..5);
-        let models: Vec<TensorModel> = (0..n).map(|_| rand_model(g, &spec)).collect();
+        let models: Vec<Arc<TensorModel>> =
+            (0..n).map(|_| Arc::new(rand_model(g, &spec))).collect();
         let weights: Vec<f64> = (0..n).map(|_| g.f64_in(0.1, 10.0)).collect();
         let scale = g.f64_in(0.5, 50.0);
+        let scaled: Vec<f64> = weights.iter().map(|w| w * scale).collect();
         let a = FedAvg::new()
-            .aggregate(
-                &current,
-                &models
-                    .iter()
-                    .zip(&weights)
-                    .map(|(m, &w)| Contribution { model: m, weight: w })
-                    .collect::<Vec<_>>(),
-                &Backend::Sequential,
-            )
+            .aggregate(&current, &mk(&models, &weights), &Backend::Sequential)
             .unwrap();
         let b = FedAvg::new()
-            .aggregate(
-                &current,
-                &models
-                    .iter()
-                    .zip(&weights)
-                    .map(|(m, &w)| Contribution { model: m, weight: w * scale })
-                    .collect::<Vec<_>>(),
-                &Backend::Sequential,
-            )
+            .aggregate(&current, &mk(&models, &scaled), &Backend::Sequential)
             .unwrap();
         assert!(a.max_abs_diff(&b) < 1e-4);
     });
@@ -80,11 +75,9 @@ fn prop_parallel_equals_sequential_bitwise() {
         let spec = rand_spec(g);
         let current = rand_model(g, &spec);
         let n = g.usize_in(1..7);
-        let models: Vec<TensorModel> = (0..n).map(|_| rand_model(g, &spec)).collect();
+        let models: Vec<Arc<TensorModel>> =
+            (0..n).map(|_| Arc::new(rand_model(g, &spec))).collect();
         let weights: Vec<f64> = models.iter().map(|_| 1.0).collect();
-        fn mk<'a>(ms: &'a [TensorModel], ws: &[f64]) -> Vec<Contribution<'a>> {
-            ms.iter().zip(ws).map(|(m, &w)| Contribution { model: m, weight: w }).collect()
-        }
         let seq = FedAvg::new()
             .aggregate(&current, &mk(&models, &weights), &Backend::Sequential)
             .unwrap();
@@ -93,6 +86,66 @@ fn prop_parallel_equals_sequential_bitwise() {
             .unwrap();
         assert_eq!(seq, par);
     });
+}
+
+/// The chunked backend must be bitwise identical to the sequential one
+/// across arbitrary tensor layouts, learner counts, and pool sizes —
+/// including the adversarial layouts where per-tensor parallelism
+/// degenerates (one giant tensor; hundreds of tiny tensors).
+#[test]
+fn prop_chunked_equals_sequential_bitwise() {
+    fn layout_model(g: &mut Gen, layout: &[(String, Vec<usize>)]) -> Arc<TensorModel> {
+        let seed = g.rng().next_u64();
+        Arc::new(TensorModel::random_init(layout, &mut Rng::new(seed)))
+    }
+
+    prop_check("chunked == sequential (random mlp layouts)", 30, |g| {
+        let spec = rand_spec(g);
+        let current = rand_model(g, &spec);
+        let n = g.usize_in(1..7);
+        let models: Vec<Arc<TensorModel>> =
+            (0..n).map(|_| Arc::new(rand_model(g, &spec))).collect();
+        let weights: Vec<f64> = (0..n).map(|_| g.f64_in(0.1, 10.0)).collect();
+        let threads = g.usize_in(1..6);
+        let backend = Backend::Chunked {
+            pool: Arc::new(ThreadPool::new(threads)),
+            scratch: Arc::new(ScratchArena::new()),
+        };
+        let seq = FedAvg::new()
+            .aggregate(&current, &mk(&models, &weights), &Backend::Sequential)
+            .unwrap();
+        let chk = FedAvg::new()
+            .aggregate(&current, &mk(&models, &weights), &backend)
+            .unwrap();
+        assert_eq!(seq, chk, "{threads} threads, layout {:?}", current.layout());
+    });
+
+    // Degenerate layouts: one giant tensor (per-tensor parallelism caps
+    // at 1) and 500 tiny tensors (per-tensor task overhead dominates).
+    let giant: Vec<(String, Vec<usize>)> = vec![("giant".into(), vec![1 << 15])];
+    let tiny: Vec<(String, Vec<usize>)> =
+        (0..500).map(|i| (format!("t{i}"), vec![7])).collect();
+    for (label, layout) in [("giant", &giant), ("tiny", &tiny)] {
+        prop_check(&format!("chunked == sequential ({label} layout)"), 10, |g| {
+            let current = layout_model(g, layout);
+            let n = g.usize_in(1..5);
+            let models: Vec<Arc<TensorModel>> =
+                (0..n).map(|_| layout_model(g, layout)).collect();
+            let weights: Vec<f64> = (0..n).map(|_| g.f64_in(0.1, 10.0)).collect();
+            let threads = g.usize_in(1..6);
+            let backend = Backend::Chunked {
+                pool: Arc::new(ThreadPool::new(threads)),
+                scratch: Arc::new(ScratchArena::new()),
+            };
+            let seq = FedAvg::new()
+                .aggregate(&current, &mk(&models, &weights), &Backend::Sequential)
+                .unwrap();
+            let chk = FedAvg::new()
+                .aggregate(&current, &mk(&models, &weights), &backend)
+                .unwrap();
+            assert_eq!(seq, chk, "{label}: {threads} threads");
+        });
+    }
 }
 
 #[test]
@@ -176,7 +229,7 @@ fn prop_store_latest_is_max_round() {
                     learner_id: learner.clone(),
                     round,
                     meta: TaskMeta::default(),
-                    model: rand_model(g, &spec),
+                    model: Arc::new(rand_model(g, &spec)),
                 })
                 .unwrap();
             let e = max_round.entry(learner).or_insert(0);
@@ -200,7 +253,7 @@ fn prop_store_eviction_preserves_latest() {
                     learner_id: "x".into(),
                     round: r,
                     meta: TaskMeta::default(),
-                    model: rand_model(g, &spec),
+                    model: Arc::new(rand_model(g, &spec)),
                 })
                 .unwrap();
         }

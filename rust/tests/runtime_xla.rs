@@ -98,11 +98,11 @@ fn xla_lincomb_backend_matches_rust_weighted_sum() {
     }
     let spec = tiny_spec();
     let backend_fn = metisfl::runtime::xla_fedavg_backend(DIR, &spec).unwrap();
-    let models: Vec<TensorModel> = (0..4).map(|i| tiny_model(100 + i)).collect();
-    let refs: Vec<&TensorModel> = models.iter().collect();
+    let models: Vec<std::sync::Arc<TensorModel>> =
+        (0..4).map(|i| std::sync::Arc::new(tiny_model(100 + i))).collect();
     let coeffs = [0.4, 0.3, 0.2, 0.1];
-    let xla_result = backend_fn(&refs, &coeffs).unwrap();
-    let rust_result = WeightedSum::compute(&refs, &coeffs, &Backend::Sequential).unwrap();
+    let xla_result = backend_fn(&models, &coeffs).unwrap();
+    let rust_result = WeightedSum::compute(&models, &coeffs, &Backend::Sequential).unwrap();
     let diff = xla_result.max_abs_diff(&rust_result);
     assert!(diff < 1e-5, "xla vs rust aggregation diff {diff}");
 }

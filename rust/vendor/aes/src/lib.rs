@@ -1,0 +1,220 @@
+//! Minimal AES-128 (FIPS 197, encryption only), vendored with the `aes`
+//! crate's call surface (`Aes128`, `cipher::{KeyInit, BlockEncrypt}`) so
+//! the workspace builds fully offline. Blocks and keys are plain
+//! `[u8; 16]`, which the call sites construct via `.into()` exactly as
+//! they would a `GenericArray`.
+//!
+//! The S-box is derived at first use from its definition (multiplicative
+//! inverse in GF(2⁸) followed by the affine transform) rather than a
+//! transcribed table; the FIPS-197 appendix vector below pins the whole
+//! pipeline. This is a software reference implementation — fine for the
+//! simulated-TLS wire-cost benchmarks it backs, not hardened against
+//! timing side channels.
+
+use std::sync::OnceLock;
+
+/// Trait surface mirroring the upstream `cipher` crate subset in use.
+pub mod cipher {
+    /// Construct a cipher from a fixed-size key.
+    pub trait KeyInit: Sized {
+        fn new(key: &[u8; 16]) -> Self;
+    }
+
+    /// Encrypt one 16-byte block in place.
+    pub trait BlockEncrypt {
+        fn encrypt_block(&self, block: &mut [u8; 16]);
+    }
+}
+
+/// GF(2⁸) multiplication modulo x⁸ + x⁴ + x³ + x + 1 (0x11B).
+fn gf_mul(mut a: u8, mut b: u8) -> u8 {
+    let mut acc = 0u8;
+    while b != 0 {
+        if b & 1 != 0 {
+            acc ^= a;
+        }
+        let hi = a & 0x80;
+        a <<= 1;
+        if hi != 0 {
+            a ^= 0x1B;
+        }
+        b >>= 1;
+    }
+    acc
+}
+
+fn sbox() -> &'static [u8; 256] {
+    static SBOX: OnceLock<[u8; 256]> = OnceLock::new();
+    SBOX.get_or_init(|| {
+        // Multiplicative inverses by exhaustive search (256² once).
+        let mut inv = [0u8; 256];
+        for x in 1..=255u8 {
+            for y in 1..=255u8 {
+                if gf_mul(x, y) == 1 {
+                    inv[x as usize] = y;
+                    break;
+                }
+            }
+        }
+        let mut table = [0u8; 256];
+        for (x, slot) in table.iter_mut().enumerate() {
+            let b = inv[x];
+            let mut s = 0u8;
+            for i in 0..8 {
+                let bit = (b >> i)
+                    ^ (b >> ((i + 4) % 8))
+                    ^ (b >> ((i + 5) % 8))
+                    ^ (b >> ((i + 6) % 8))
+                    ^ (b >> ((i + 7) % 8))
+                    ^ (0x63 >> i);
+                s |= (bit & 1) << i;
+            }
+            *slot = s;
+        }
+        table
+    })
+}
+
+/// AES-128 with expanded round keys (11 × 16 bytes).
+pub struct Aes128 {
+    round_keys: [[u8; 16]; 11],
+}
+
+impl cipher::KeyInit for Aes128 {
+    fn new(key: &[u8; 16]) -> Aes128 {
+        let sbox = sbox();
+        let mut w = [[0u8; 4]; 44];
+        for (i, c) in key.chunks_exact(4).enumerate() {
+            w[i].copy_from_slice(c);
+        }
+        let mut rcon = 1u8;
+        for i in 4..44 {
+            let mut t = w[i - 1];
+            if i % 4 == 0 {
+                // RotWord + SubWord + Rcon.
+                t = [
+                    sbox[t[1] as usize] ^ rcon,
+                    sbox[t[2] as usize],
+                    sbox[t[3] as usize],
+                    sbox[t[0] as usize],
+                ];
+                rcon = gf_mul(rcon, 2);
+            }
+            for (out, prev) in t.iter_mut().zip(w[i - 4]) {
+                *out ^= prev;
+            }
+            w[i] = t;
+        }
+        let mut round_keys = [[0u8; 16]; 11];
+        for (r, rk) in round_keys.iter_mut().enumerate() {
+            for c in 0..4 {
+                rk[4 * c..4 * c + 4].copy_from_slice(&w[4 * r + c]);
+            }
+        }
+        Aes128 { round_keys }
+    }
+}
+
+impl Aes128 {
+    fn add_round_key(state: &mut [u8; 16], rk: &[u8; 16]) {
+        for (s, k) in state.iter_mut().zip(rk) {
+            *s ^= k;
+        }
+    }
+
+    fn sub_bytes(state: &mut [u8; 16]) {
+        let sbox = sbox();
+        for s in state.iter_mut() {
+            *s = sbox[*s as usize];
+        }
+    }
+
+    /// State layout (FIPS 197 §3.4): byte `i` holds `s[i % 4][i / 4]` —
+    /// row `r` of the state lives at indices `r, r+4, r+8, r+12`.
+    fn shift_rows(state: &mut [u8; 16]) {
+        let old = *state;
+        for r in 1..4 {
+            for c in 0..4 {
+                state[4 * c + r] = old[4 * ((c + r) % 4) + r];
+            }
+        }
+    }
+
+    fn mix_columns(state: &mut [u8; 16]) {
+        for c in 0..4 {
+            let col = [state[4 * c], state[4 * c + 1], state[4 * c + 2], state[4 * c + 3]];
+            state[4 * c] = gf_mul(col[0], 2) ^ gf_mul(col[1], 3) ^ col[2] ^ col[3];
+            state[4 * c + 1] = col[0] ^ gf_mul(col[1], 2) ^ gf_mul(col[2], 3) ^ col[3];
+            state[4 * c + 2] = col[0] ^ col[1] ^ gf_mul(col[2], 2) ^ gf_mul(col[3], 3);
+            state[4 * c + 3] = gf_mul(col[0], 3) ^ col[1] ^ col[2] ^ gf_mul(col[3], 2);
+        }
+    }
+}
+
+impl cipher::BlockEncrypt for Aes128 {
+    fn encrypt_block(&self, block: &mut [u8; 16]) {
+        Self::add_round_key(block, &self.round_keys[0]);
+        for round in 1..10 {
+            Self::sub_bytes(block);
+            Self::shift_rows(block);
+            Self::mix_columns(block);
+            Self::add_round_key(block, &self.round_keys[round]);
+        }
+        Self::sub_bytes(block);
+        Self::shift_rows(block);
+        Self::add_round_key(block, &self.round_keys[10]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::cipher::{BlockEncrypt, KeyInit};
+    use super::*;
+
+    #[test]
+    fn sbox_known_entries() {
+        let s = sbox();
+        // S-box corners from FIPS 197 Fig. 7.
+        assert_eq!(s[0x00], 0x63);
+        assert_eq!(s[0x01], 0x7c);
+        assert_eq!(s[0x53], 0xed);
+        assert_eq!(s[0xff], 0x16);
+    }
+
+    #[test]
+    fn fips197_appendix_c1_vector() {
+        let key: [u8; 16] = [
+            0x00, 0x01, 0x02, 0x03, 0x04, 0x05, 0x06, 0x07, 0x08, 0x09, 0x0a, 0x0b, 0x0c,
+            0x0d, 0x0e, 0x0f,
+        ];
+        let mut block: [u8; 16] = [
+            0x00, 0x11, 0x22, 0x33, 0x44, 0x55, 0x66, 0x77, 0x88, 0x99, 0xaa, 0xbb, 0xcc,
+            0xdd, 0xee, 0xff,
+        ];
+        let expect: [u8; 16] = [
+            0x69, 0xc4, 0xe0, 0xd8, 0x6a, 0x7b, 0x04, 0x30, 0xd8, 0xcd, 0xb7, 0x80, 0x70,
+            0xb4, 0xc5, 0x5a,
+        ];
+        let aes = Aes128::new(&key);
+        aes.encrypt_block(&mut block);
+        assert_eq!(block, expect);
+    }
+
+    #[test]
+    fn gf_mul_basics() {
+        assert_eq!(gf_mul(0x57, 0x13), 0xfe); // FIPS 197 §4.2 example
+        assert_eq!(gf_mul(1, 0xAB), 0xAB);
+        assert_eq!(gf_mul(0, 0xFF), 0);
+    }
+
+    #[test]
+    fn distinct_blocks_encrypt_distinct() {
+        let aes = Aes128::new(&[7u8; 16]);
+        let mut a = [0u8; 16];
+        let mut b = [0u8; 16];
+        b[0] = 1;
+        aes.encrypt_block(&mut a);
+        aes.encrypt_block(&mut b);
+        assert_ne!(a, b);
+    }
+}

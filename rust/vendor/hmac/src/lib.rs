@@ -1,0 +1,133 @@
+//! Minimal HMAC (RFC 2104) over the vendored SHA-256, exposing the
+//! `hmac` crate's call surface (`Hmac<Sha256>` + the `Mac` trait with
+//! `new_from_slice` / `update` / `finalize().into_bytes()`), so the
+//! workspace builds fully offline.
+
+use sha2::{Digest, Sha256};
+use std::marker::PhantomData;
+
+const BLOCK: usize = 64;
+
+/// HMAC keyed by digest `D` (only `Sha256` is instantiated here).
+pub struct Hmac<D> {
+    inner: Sha256,
+    opad_key: [u8; BLOCK],
+    _d: PhantomData<D>,
+}
+
+/// Error for invalid key lengths — HMAC accepts any length, so this is
+/// uninhabited in practice; kept for API parity.
+#[derive(Debug)]
+pub struct InvalidLength;
+
+impl std::fmt::Display for InvalidLength {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "invalid HMAC key length")
+    }
+}
+
+impl std::error::Error for InvalidLength {}
+
+/// Finalized MAC output (stands in for the upstream `CtOutput`).
+pub struct CtOutput([u8; 32]);
+
+impl CtOutput {
+    pub fn into_bytes(self) -> [u8; 32] {
+        self.0
+    }
+}
+
+/// Subset of the `digest::Mac` trait used by this workspace.
+pub trait Mac: Sized {
+    fn new_from_slice(key: &[u8]) -> Result<Self, InvalidLength>;
+    fn update(&mut self, data: &[u8]);
+    fn finalize(self) -> CtOutput;
+}
+
+impl Mac for Hmac<Sha256> {
+    fn new_from_slice(key: &[u8]) -> Result<Self, InvalidLength> {
+        // Keys longer than the block size are hashed first (RFC 2104).
+        let mut k = [0u8; BLOCK];
+        if key.len() > BLOCK {
+            let mut h = Sha256::new();
+            h.update(key);
+            k[..32].copy_from_slice(&h.finalize());
+        } else {
+            k[..key.len()].copy_from_slice(key);
+        }
+        let mut ipad_key = [0u8; BLOCK];
+        let mut opad_key = [0u8; BLOCK];
+        for i in 0..BLOCK {
+            ipad_key[i] = k[i] ^ 0x36;
+            opad_key[i] = k[i] ^ 0x5c;
+        }
+        let mut inner = Sha256::new();
+        inner.update(ipad_key);
+        Ok(Hmac { inner, opad_key, _d: PhantomData })
+    }
+
+    fn update(&mut self, data: &[u8]) {
+        self.inner.update(data);
+    }
+
+    fn finalize(self) -> CtOutput {
+        let inner_hash = self.inner.finalize();
+        let mut outer = Sha256::new();
+        outer.update(self.opad_key);
+        outer.update(inner_hash);
+        CtOutput(outer.finalize())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hex(bytes: &[u8]) -> String {
+        bytes.iter().map(|b| format!("{b:02x}")).collect()
+    }
+
+    fn hmac(key: &[u8], msg: &[u8]) -> String {
+        let mut m = <Hmac<Sha256> as Mac>::new_from_slice(key).unwrap();
+        m.update(msg);
+        hex(&m.finalize().into_bytes())
+    }
+
+    #[test]
+    fn rfc4231_test_case_1() {
+        // Key = 20 x 0x0b, data = "Hi There".
+        assert_eq!(
+            hmac(&[0x0b; 20], b"Hi There"),
+            "b0344c61d8db38535ca8afceaf0bf12b881dc200c9833da726e9376c2e32cff7"
+        );
+    }
+
+    #[test]
+    fn rfc4231_test_case_2() {
+        assert_eq!(
+            hmac(b"Jefe", b"what do ya want for nothing?"),
+            "5bdcc146bf60754e6a042426089575c75a003f089d2739839dec58b964ec3843"
+        );
+    }
+
+    #[test]
+    fn long_keys_are_hashed_first() {
+        // A >64-byte key must hash to the same MAC as its SHA-256 digest
+        // used as the key directly.
+        let long_key = vec![0xAAu8; 100];
+        let mut h = Sha256::new();
+        h.update(&long_key);
+        let short = h.finalize();
+        assert_eq!(hmac(&long_key, b"msg"), hmac(&short, b"msg"));
+    }
+
+    #[test]
+    fn incremental_update_matches_one_shot() {
+        let mut a = <Hmac<Sha256> as Mac>::new_from_slice(b"key").unwrap();
+        a.update(b"hello ");
+        a.update(b"world");
+        let mut b = <Hmac<Sha256> as Mac>::new_from_slice(b"key").unwrap();
+        b.update(b"hello world");
+        assert_eq!(a.finalize().into_bytes(), b.finalize().into_bytes());
+    }
+}

@@ -1,0 +1,53 @@
+//! Minimal, API-compatible subset of the `once_cell` crate, vendored so
+//! the workspace builds fully offline. Only `sync::Lazy` is provided —
+//! the single type this workspace uses — implemented over
+//! `std::sync::OnceLock`.
+
+pub mod sync {
+    use std::ops::Deref;
+    use std::sync::OnceLock;
+
+    /// A value lazily initialized on first access, safe to use in
+    /// `static` items (`new` is `const`).
+    pub struct Lazy<T, F = fn() -> T> {
+        cell: OnceLock<T>,
+        init: F,
+    }
+
+    impl<T, F: Fn() -> T> Lazy<T, F> {
+        pub const fn new(init: F) -> Lazy<T, F> {
+            Lazy { cell: OnceLock::new(), init }
+        }
+
+        /// Force initialization and return the value.
+        pub fn force(this: &Lazy<T, F>) -> &T {
+            this.cell.get_or_init(|| (this.init)())
+        }
+    }
+
+    impl<T, F: Fn() -> T> Deref for Lazy<T, F> {
+        type Target = T;
+        fn deref(&self) -> &T {
+            Lazy::force(self)
+        }
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+        use std::sync::atomic::{AtomicUsize, Ordering};
+
+        static CALLS: AtomicUsize = AtomicUsize::new(0);
+        static VALUE: Lazy<u64> = Lazy::new(|| {
+            CALLS.fetch_add(1, Ordering::SeqCst);
+            42
+        });
+
+        #[test]
+        fn initializes_once_and_derefs() {
+            assert_eq!(*VALUE, 42);
+            assert_eq!(*VALUE, 42);
+            assert_eq!(CALLS.load(Ordering::SeqCst), 1);
+        }
+    }
+}
