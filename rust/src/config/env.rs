@@ -176,6 +176,15 @@ pub struct FederationEnv {
     /// Per-task timeout in milliseconds (learners exceeding it are dropped
     /// from the round — failure injection tests rely on this).
     pub task_timeout_ms: u64,
+    /// Data-plane chunk size in bytes for learner → controller model
+    /// uploads. 0 (default) = one-shot `MarkTaskCompleted`; > 0 streams
+    /// completed models as `ModelStreamBegin`/`ModelChunk`/`ModelStreamEnd`
+    /// so controller-side peak *wire* ingest memory is bounded by
+    /// chunk × in-flight learners instead of learners × model size.
+    /// Values below the sender's 1 KiB floor
+    /// (`proto::client::MIN_CHUNK_BYTES`) are clamped up to it.
+    /// Results are bitwise identical either way.
+    pub stream_chunk_bytes: usize,
 }
 
 impl FederationEnv {
@@ -314,6 +323,9 @@ impl FederationEnv {
         if let Some(x) = v.get("task_timeout_ms").and_then(|x| x.as_u64()) {
             b = b.task_timeout_ms(x);
         }
+        if let Some(x) = v.get("stream_chunk_bytes").and_then(|x| x.as_usize()) {
+            b = b.stream_chunk_bytes(x);
+        }
         Ok(b.build())
     }
 
@@ -382,6 +394,7 @@ impl FederationEnvBuilder {
                 seed: 42,
                 heartbeat_ms: 500,
                 task_timeout_ms: 60_000,
+                stream_chunk_bytes: 0,
             },
         }
     }
@@ -448,6 +461,10 @@ impl FederationEnvBuilder {
     }
     pub fn task_timeout_ms(mut self, ms: u64) -> Self {
         self.env.task_timeout_ms = ms;
+        self
+    }
+    pub fn stream_chunk_bytes(mut self, bytes: usize) -> Self {
+        self.env.stream_chunk_bytes = bytes;
         self
     }
 
@@ -553,6 +570,14 @@ seed: 7
     #[test]
     fn variant_name_is_stable() {
         assert_eq!(ModelSpec::paper_100k().variant_name(), "mlp_l100_u32_in8_out1");
+    }
+
+    #[test]
+    fn stream_chunk_bytes_defaults_off_and_parses() {
+        let env = FederationEnv::builder("t").build();
+        assert_eq!(env.stream_chunk_bytes, 0);
+        let env = FederationEnv::from_yaml("stream_chunk_bytes: 65536\n").unwrap();
+        assert_eq!(env.stream_chunk_bytes, 65536);
     }
 
     #[test]

@@ -14,17 +14,32 @@ pub mod store;
 use crate::config::{FederationEnv, Protocol, SecureSpec};
 use crate::metrics::{FedOp, OpMetrics};
 use crate::net::{ClientConn, Psk, Service};
-use crate::proto::{Message, ModelProto, TaskMeta};
-use crate::tensor::{ByteOrder, DType, TensorModel};
+use crate::proto::wire::{fnv1a64, FNV64_INIT};
+use crate::proto::{
+    ErrorCode, Message, ModelProto, StreamPurpose, TaskMeta, TensorLayoutProto, PROTO_VERSION,
+};
+use crate::tensor::{decode_elems_into, ByteOrder, DType, Tensor, TensorModel};
 use crate::util::{log_debug, log_info, Stopwatch, ThreadPool};
-use aggregation::{Backend, Contribution};
+use aggregation::{Backend, Contribution, ScratchArena};
 use anyhow::{bail, Context, Result};
 use selector::Selector;
 use std::collections::{HashMap, HashSet};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 use store::{ModelStore, StoredModel};
+
+/// Caps on the inbound data plane, so a buggy or hostile peer cannot
+/// grow controller memory without bound: concurrent open streams, the
+/// wire payload one stream may announce, the *aggregate* wire payload
+/// announced across all open streams (decoded f32 buffers can be up to
+/// 2× the wire size for bf16 payloads), and how long an idle stream
+/// may sit before being reclaimed (a learner that dies between `Begin`
+/// and `End` must not pin its buffers — or a registry slot — forever).
+const MAX_OPEN_STREAMS: usize = 256;
+const MAX_STREAM_BYTES: usize = 1 << 30; // 1 GiB wire payload per stream
+const MAX_TOTAL_STREAM_BYTES: usize = 4 << 30; // 4 GiB announced across streams
+const STREAM_IDLE_TIMEOUT: Duration = Duration::from_secs(300);
 
 /// A registered learner as seen by the controller.
 pub struct LearnerHandle {
@@ -111,6 +126,161 @@ struct RoundState {
     arrived: Vec<String>,
 }
 
+/// An in-flight inbound model stream: the data-plane accumulator that
+/// becomes a [`Contribution`] (or the community model) at `End`.
+///
+/// Buffers are pre-sized from the `Begin` layout and drawn from the
+/// aggregation backend's [`ScratchArena`] when it has one, so a
+/// steady-state streamed round recycles the same buffers the previous
+/// community model vacated. Chunks decode **on arrival**, directly into
+/// the partially-filled tensors — the controller never holds a
+/// whole-model wire buffer, and none of this touches the `CtrlState`
+/// mutex until the final, already-decoded hand-off.
+struct StreamTensor {
+    name: String,
+    shape: Vec<usize>,
+    dtype: DType,
+    order: ByteOrder,
+    elems: usize,
+}
+
+struct ModelStream {
+    purpose: StreamPurpose,
+    task_id: u64,
+    learner_id: String,
+    meta: TaskMeta,
+    /// Announced structure, one entry per tensor.
+    layout: Vec<StreamTensor>,
+    /// Decoded output buffers, arena-drawn when available.
+    bufs: Vec<Vec<f32>>,
+    /// Elements decoded so far, per tensor.
+    filled: Vec<usize>,
+    /// Tensor currently being filled.
+    cur_tensor: usize,
+    /// Wire payload bytes consumed so far / expected in total.
+    received: usize,
+    expected: usize,
+    next_seq: u64,
+    /// Partial-element bytes straddling a chunk boundary (< element size).
+    carry: Vec<u8>,
+    /// Running FNV-1a 64 over the payload bytes.
+    digest: u64,
+    /// Arena to return `bufs` to if the stream dies.
+    scratch: Option<Arc<ScratchArena>>,
+    /// Last `Begin`/`Chunk` arrival; idle streams past
+    /// [`STREAM_IDLE_TIMEOUT`] are garbage-collected.
+    last_activity: std::time::Instant,
+    /// Set by [`ModelStream::recycle`]: the buffers are gone. A chunk
+    /// handler that raced the close (it cloned the registry `Arc`
+    /// before removal) must fail gracefully instead of indexing the
+    /// drained `bufs`.
+    dead: bool,
+}
+
+impl ModelStream {
+    /// Fold one chunk's bytes into the partial model.
+    fn ingest(&mut self, mut bytes: &[u8]) -> Result<()> {
+        if self.received + bytes.len() > self.expected {
+            bail!(
+                "stream overrun: {} + {} > expected {}",
+                self.received,
+                bytes.len(),
+                self.expected
+            );
+        }
+        self.digest = fnv1a64(self.digest, bytes);
+        self.received += bytes.len();
+        while !bytes.is_empty() {
+            // Advance past tensors that are already full (zero-element
+            // tensors fall through immediately).
+            while self.cur_tensor < self.layout.len()
+                && self.filled[self.cur_tensor] == self.layout[self.cur_tensor].elems
+            {
+                self.cur_tensor += 1;
+            }
+            let t = self.cur_tensor;
+            if t >= self.layout.len() {
+                bail!("stream bytes beyond announced layout");
+            }
+            let (dtype, order, elems) =
+                (self.layout[t].dtype, self.layout[t].order, self.layout[t].elems);
+            let esz = dtype.size_bytes();
+            // Complete a partial element left over from the last chunk.
+            if !self.carry.is_empty() {
+                let need = esz - self.carry.len();
+                let take = need.min(bytes.len());
+                self.carry.extend_from_slice(&bytes[..take]);
+                bytes = &bytes[take..];
+                if self.carry.len() == esz {
+                    let idx = self.filled[t];
+                    let carry = std::mem::take(&mut self.carry);
+                    decode_elems_into(dtype, order, &carry, &mut self.bufs[t][idx..idx + 1]);
+                    self.filled[t] += 1;
+                }
+                continue;
+            }
+            // Bulk-decode whole elements into this tensor's buffer.
+            let max_bytes = (elems - self.filled[t]) * esz;
+            let take = bytes.len().min(max_bytes);
+            let whole = (take / esz) * esz;
+            if whole > 0 {
+                let lo = self.filled[t];
+                let n = whole / esz;
+                decode_elems_into(dtype, order, &bytes[..whole], &mut self.bufs[t][lo..lo + n]);
+                self.filled[t] += n;
+            }
+            self.carry.extend_from_slice(&bytes[whole..take]);
+            bytes = &bytes[take..];
+        }
+        Ok(())
+    }
+
+    /// Finish the stream, returning the decoded model.
+    fn finish(mut self, digest: u64) -> std::result::Result<TensorModel, (Self, anyhow::Error)> {
+        if self.received != self.expected {
+            let e = anyhow::anyhow!(
+                "stream truncated: got {} of {} payload bytes",
+                self.received,
+                self.expected
+            );
+            return Err((self, e));
+        }
+        if !self.carry.is_empty() {
+            let e = anyhow::anyhow!("stream ends mid-element ({} carry bytes)", self.carry.len());
+            return Err((self, e));
+        }
+        if digest != self.digest {
+            let e = anyhow::anyhow!(
+                "stream digest mismatch: sender {:#018x}, receiver {:#018x}",
+                digest,
+                self.digest
+            );
+            return Err((self, e));
+        }
+        let bufs = std::mem::take(&mut self.bufs);
+        let tensors = self
+            .layout
+            .iter()
+            .zip(bufs)
+            .map(|(t, data)| Tensor::new(t.name.clone(), t.shape.clone(), data))
+            .collect();
+        Ok(TensorModel::new(tensors))
+    }
+
+    /// Hand every buffer back to the arena (stream abandoned or failed)
+    /// and mark the stream dead for any handler still holding its `Arc`.
+    fn recycle(&mut self) {
+        self.dead = true;
+        if let Some(scratch) = &self.scratch {
+            for buf in self.bufs.drain(..) {
+                scratch.recycle(buf);
+            }
+        } else {
+            self.bufs.clear();
+        }
+    }
+}
+
 struct CtrlState {
     /// Community model, shared by pointer: schedulers snapshot it, the
     /// store hands back `Arc`s, and aggregation reads through them — the
@@ -144,6 +314,20 @@ pub struct Controller {
     dispatch_pool: ThreadPool,
     shutdown: AtomicBool,
     xla_slot: Mutex<Option<XlaAggFn>>,
+    /// Inbound data-plane streams, keyed by stream id. Deliberately
+    /// *outside* the `CtrlState` mutex: chunk ingest for one learner
+    /// never contends with the round barrier or another learner's
+    /// stream (per-stream locks below the registry lock).
+    streams: Mutex<HashMap<u64, Arc<Mutex<ModelStream>>>>,
+    /// Wire bytes announced by currently-open streams (admission budget
+    /// against [`MAX_TOTAL_STREAM_BYTES`]).
+    open_stream_bytes: AtomicUsize,
+    /// Wire-payload bytes currently held for model ingest (one-shot
+    /// protos being decoded + stream chunks in flight), plus the
+    /// high-water mark. This is the "second whole-model buffer" the
+    /// data plane eliminates; tests assert the streamed bound.
+    wire_in_flight: AtomicUsize,
+    wire_peak: AtomicUsize,
 }
 
 impl Controller {
@@ -176,6 +360,10 @@ impl Controller {
             dispatch_pool: ThreadPool::new(dispatch_threads),
             shutdown: AtomicBool::new(false),
             xla_slot: Mutex::new(None),
+            streams: Mutex::new(HashMap::new()),
+            open_stream_bytes: AtomicUsize::new(0),
+            wire_in_flight: AtomicUsize::new(0),
+            wire_peak: AtomicUsize::new(0),
         }))
     }
 
@@ -456,14 +644,287 @@ impl Controller {
         let set: HashSet<&String> = chosen.iter().collect();
         learners.into_iter().filter(|l| set.contains(&l.id)).collect()
     }
+
+    // ---- model ingest bookkeeping ------------------------------------
+
+    fn wire_hold(&self, bytes: usize) {
+        let now = self.wire_in_flight.fetch_add(bytes, Ordering::SeqCst) + bytes;
+        self.wire_peak.fetch_max(now, Ordering::SeqCst);
+    }
+
+    fn wire_release(&self, bytes: usize) {
+        self.wire_in_flight.fetch_sub(bytes, Ordering::SeqCst);
+    }
+
+    /// High-water mark of wire-payload bytes held for model ingest. With
+    /// one-shot uploads this reaches `Σ in-flight models' byte size`;
+    /// with the streaming data plane it is bounded by
+    /// `chunk size × in-flight streams` (asserted end-to-end in
+    /// `tests/streaming.rs`).
+    pub fn peak_wire_ingest_bytes(&self) -> usize {
+        self.wire_peak.load(Ordering::SeqCst)
+    }
+
+    /// Streams currently open on the data plane.
+    pub fn open_streams(&self) -> usize {
+        self.streams.lock().unwrap().len()
+    }
+
+    // ---- data plane: inbound model streams ---------------------------
+    //
+    // Everything here stays off the `CtrlState` mutex; only the final
+    // `End` hand-off (already decoded) takes it, exactly like the
+    // decode-before-lock one-shot path.
+
+    fn on_stream_begin(
+        &self,
+        stream_id: u64,
+        task_id: u64,
+        purpose: StreamPurpose,
+        learner_id: String,
+        layout: Vec<TensorLayoutProto>,
+        meta: TaskMeta,
+    ) -> Message {
+        if layout.is_empty() {
+            return Message::error(ErrorCode::StreamProtocol, "empty stream layout");
+        }
+        let mut parsed = Vec::with_capacity(layout.len());
+        let mut expected = 0usize;
+        for t in &layout {
+            let elems = match t.elem_count_checked() {
+                Ok(n) => n,
+                Err(e) => return Message::error(ErrorCode::StreamProtocol, format!("{e:#}")),
+            };
+            let bytes = match t.byte_len_checked() {
+                Ok(n) => n,
+                Err(e) => return Message::error(ErrorCode::StreamProtocol, format!("{e:#}")),
+            };
+            expected = match expected.checked_add(bytes) {
+                Some(n) if n <= MAX_STREAM_BYTES => n,
+                _ => {
+                    return Message::error(
+                        ErrorCode::StreamProtocol,
+                        format!("stream exceeds {MAX_STREAM_BYTES} payload bytes"),
+                    )
+                }
+            };
+            parsed.push(StreamTensor {
+                name: t.name.clone(),
+                shape: t.shape.clone(),
+                dtype: t.dtype,
+                order: t.byte_order,
+                elems,
+            });
+        }
+        // Admission control runs BEFORE any buffer is allocated, so an
+        // unauthenticated `Begin` flood cannot commit memory: reclaim
+        // idle streams, then check slot, duplicate id, and the aggregate
+        // announced-bytes budget.
+        self.gc_idle_streams();
+        {
+            let streams = self.streams.lock().unwrap();
+            if streams.len() >= MAX_OPEN_STREAMS {
+                return Message::error(
+                    ErrorCode::StreamProtocol,
+                    format!("too many open streams (max {MAX_OPEN_STREAMS})"),
+                );
+            }
+            if streams.contains_key(&stream_id) {
+                return Message::error(
+                    ErrorCode::StreamProtocol,
+                    format!("stream id {stream_id:#x} already open"),
+                );
+            }
+        }
+        let budget = self.open_stream_bytes.fetch_add(expected, Ordering::SeqCst) + expected;
+        if budget > MAX_TOTAL_STREAM_BYTES {
+            self.open_stream_bytes.fetch_sub(expected, Ordering::SeqCst);
+            return Message::error(
+                ErrorCode::StreamProtocol,
+                format!("open streams would exceed {MAX_TOTAL_STREAM_BYTES} announced bytes"),
+            );
+        }
+        // Pre-size the decode buffers from the arena (when the backend
+        // owns one): a steady-state streamed round re-fills the buffers
+        // the previous community model vacated.
+        let scratch = self.effective_backend().scratch().cloned();
+        let bufs: Vec<Vec<f32>> = parsed
+            .iter()
+            .map(|t| match &scratch {
+                Some(s) => s.take(t.elems),
+                None => vec![0.0; t.elems],
+            })
+            .collect();
+        let filled = vec![0usize; parsed.len()];
+        let mut stream = ModelStream {
+            purpose,
+            task_id,
+            learner_id,
+            meta,
+            layout: parsed,
+            bufs,
+            filled,
+            cur_tensor: 0,
+            received: 0,
+            expected,
+            next_seq: 0,
+            carry: Vec::new(),
+            digest: FNV64_INIT,
+            scratch,
+            last_activity: std::time::Instant::now(),
+            dead: false,
+        };
+        let mut streams = self.streams.lock().unwrap();
+        // Re-check under the lock: a racing Begin may have taken the id
+        // or the last slot while we were allocating.
+        if streams.len() >= MAX_OPEN_STREAMS || streams.contains_key(&stream_id) {
+            drop(streams);
+            stream.recycle();
+            self.open_stream_bytes.fetch_sub(expected, Ordering::SeqCst);
+            return Message::error(
+                ErrorCode::StreamProtocol,
+                format!("stream id {stream_id:#x} rejected (slot raced away)"),
+            );
+        }
+        streams.insert(stream_id, Arc::new(Mutex::new(stream)));
+        Message::Ack { task_id: stream_id, ok: true }
+    }
+
+    /// Reclaim streams with no activity for [`STREAM_IDLE_TIMEOUT`]: a
+    /// learner that died mid-stream must not pin its buffers or leak a
+    /// registry slot until the cap locks streaming out entirely.
+    fn gc_idle_streams(&self) {
+        let expired: Vec<u64> = {
+            let streams = self.streams.lock().unwrap();
+            streams
+                .iter()
+                .filter(|(_, s)| {
+                    s.lock().unwrap().last_activity.elapsed() > STREAM_IDLE_TIMEOUT
+                })
+                .map(|(id, _)| *id)
+                .collect()
+        };
+        for id in expired {
+            log_debug("controller", &format!("reclaiming idle stream {id:#x}"));
+            self.kill_stream(id);
+        }
+    }
+
+    fn on_stream_chunk(&self, stream_id: u64, seq: u64, bytes: Vec<u8>) -> Message {
+        let Some(stream) = self.streams.lock().unwrap().get(&stream_id).cloned() else {
+            return Message::error(
+                ErrorCode::StreamProtocol,
+                format!("chunk for unknown stream {stream_id:#x}"),
+            );
+        };
+        self.wire_hold(bytes.len());
+        let sw = Stopwatch::start();
+        let result = {
+            let mut s = stream.lock().unwrap();
+            if s.dead {
+                // We raced a close: the registry entry is already gone
+                // and the buffers were recycled.
+                Err(anyhow::anyhow!("chunk for a closed stream"))
+            } else if seq != s.next_seq {
+                Err(anyhow::anyhow!("chunk seq {seq}, expected {}", s.next_seq))
+            } else {
+                s.last_activity = std::time::Instant::now();
+                s.next_seq += 1;
+                s.ingest(&bytes)
+            }
+        };
+        self.record(FedOp::Serialization, sw.elapsed());
+        self.wire_release(bytes.len());
+        match result {
+            Ok(()) => Message::Ack { task_id: stream_id, ok: true },
+            Err(e) => {
+                self.kill_stream(stream_id);
+                Message::error(ErrorCode::StreamProtocol, format!("{e:#}"))
+            }
+        }
+    }
+
+    fn on_stream_end(&self, stream_id: u64, digest: u64) -> Message {
+        let Some(stream) = self.streams.lock().unwrap().remove(&stream_id) else {
+            return Message::error(
+                ErrorCode::StreamProtocol,
+                format!("end for unknown stream {stream_id:#x}"),
+            );
+        };
+        // Sole holder now (the registry entry is gone; chunk handlers
+        // clone the Arc only while the entry exists and hold it briefly).
+        let stream = match Arc::try_unwrap(stream) {
+            Ok(m) => m.into_inner().unwrap(),
+            Err(arc) => {
+                // A racing chunk still holds the Arc: a protocol
+                // violation (chunks after End); drop the stream.
+                let mut s = arc.lock().unwrap();
+                self.open_stream_bytes.fetch_sub(s.expected, Ordering::SeqCst);
+                s.recycle();
+                return Message::error(
+                    ErrorCode::StreamProtocol,
+                    "stream closed while chunks were in flight",
+                );
+            }
+        };
+        self.open_stream_bytes.fetch_sub(stream.expected, Ordering::SeqCst);
+        let (purpose, task_id, learner_id, meta) = (
+            stream.purpose,
+            stream.task_id,
+            stream.learner_id.clone(),
+            stream.meta.clone(),
+        );
+        let model = match stream.finish(digest) {
+            Ok(m) => m,
+            Err((mut s, e)) => {
+                s.recycle();
+                return Message::error(ErrorCode::StreamProtocol, format!("{e:#}"));
+            }
+        };
+        match purpose {
+            StreamPurpose::ShipModel => {
+                self.ship_model(model);
+                Message::Ack { task_id: stream_id, ok: true }
+            }
+            StreamPurpose::TaskCompletion => {
+                match self.complete_task(task_id, learner_id, model, meta) {
+                    Ok(()) => Message::Ack { task_id: stream_id, ok: true },
+                    Err(e) => Message::error(ErrorCode::Internal, format!("{e:#}")),
+                }
+            }
+        }
+    }
+
+    /// Drop a failed/abandoned stream, recycle its buffers, and return
+    /// its announced bytes to the admission budget.
+    fn kill_stream(&self, stream_id: u64) {
+        if let Some(stream) = self.streams.lock().unwrap().remove(&stream_id) {
+            let mut s = stream.lock().unwrap();
+            self.open_stream_bytes.fetch_sub(s.expected, Ordering::SeqCst);
+            s.recycle();
+        }
+    }
 }
 
 impl Service for Controller {
     fn handle(&self, msg: Message) -> Message {
         if self.is_shutdown() {
-            return Message::Error { detail: "controller is shut down".into() };
+            return Message::error(ErrorCode::Unavailable, "controller is shut down");
         }
         match msg {
+            Message::Hello { proto_version } => {
+                if proto_version == PROTO_VERSION {
+                    Message::HelloAck {
+                        proto_version: PROTO_VERSION,
+                        component: "controller".into(),
+                    }
+                } else {
+                    Message::error(
+                        ErrorCode::VersionMismatch,
+                        format!("controller speaks v{PROTO_VERSION}, peer v{proto_version}"),
+                    )
+                }
+            }
             Message::Register { learner_id, host, port, num_samples } => {
                 // `host` may be a full endpoint (inproc://… or tcp://…)
                 // or a bare hostname + port pair.
@@ -475,31 +936,77 @@ impl Service for Controller {
                 let idx = self.register_learner(&learner_id, &endpoint, num_samples);
                 Message::RegisterAck { accepted: true, assigned_index: idx }
             }
-            Message::ShipModel { model } => match model.to_model() {
-                Ok(m) => {
-                    self.ship_model(m);
-                    Message::Ack { task_id: 0, ok: true }
-                }
-                Err(e) => Message::Error { detail: format!("bad model: {e:#}") },
-            },
-            Message::MarkTaskCompleted { task_id, learner_id, model, meta } => {
-                match self.on_task_completed(task_id, learner_id, model, meta) {
-                    Ok(()) => Message::Ack { task_id, ok: true },
-                    Err(e) => Message::Error { detail: format!("{e:#}") },
+            Message::ShipModel { model } => {
+                // Decode outside every lock; the wire buffer is released
+                // before the model is installed.
+                let wire = model.byte_size();
+                self.wire_hold(wire);
+                let decoded = model.to_model();
+                drop(model);
+                self.wire_release(wire);
+                match decoded {
+                    Ok(m) => {
+                        self.ship_model(m);
+                        Message::Ack { task_id: 0, ok: true }
+                    }
+                    Err(e) => Message::error(ErrorCode::InvalidModel, format!("bad model: {e:#}")),
                 }
             }
-            Message::Heartbeat { .. } => Message::HeartbeatAck {
-                component: "controller".into(),
-                healthy: true,
-            },
-            Message::GetModel => {
-                let s = self.state.lock().unwrap();
-                match &s.community {
-                    Some(m) => Message::ModelReply {
-                        model: ModelProto::from_model(m, DType::F32, ByteOrder::Little),
-                        round: s.community_round,
+            Message::MarkTaskCompleted { task_id, learner_id, model, meta } => {
+                // One-shot path: decode before touching any controller
+                // lock. The gauge brackets exactly the wire buffer's
+                // lifetime (held only while decoding) so the streamed
+                // vs one-shot comparison in tests/streaming.rs measures
+                // real memory, not an accounting artifact.
+                let sw = Stopwatch::start();
+                let wire = model.byte_size();
+                self.wire_hold(wire);
+                let decoded = model.to_model();
+                drop(model);
+                self.wire_release(wire);
+                self.record(FedOp::Serialization, sw.elapsed());
+                match decoded {
+                    Err(e) => {
+                        Message::error(ErrorCode::InvalidModel, format!("bad model: {e:#}"))
+                    }
+                    Ok(m) => match self.complete_task(task_id, learner_id, m, meta) {
+                        Ok(()) => Message::Ack { task_id, ok: true },
+                        Err(e) => Message::error(ErrorCode::Internal, format!("{e:#}")),
                     },
-                    None => Message::Error { detail: "no community model".into() },
+                }
+            }
+            Message::ModelStreamBegin {
+                stream_id,
+                task_id,
+                round: _,
+                purpose,
+                learner_id,
+                layout,
+                meta,
+            } => self.on_stream_begin(stream_id, task_id, purpose, learner_id, layout, meta),
+            Message::ModelChunk { stream_id, seq, bytes } => {
+                self.on_stream_chunk(stream_id, seq, bytes)
+            }
+            Message::ModelStreamEnd { stream_id, digest } => {
+                self.on_stream_end(stream_id, digest)
+            }
+            Message::Heartbeat { .. } => {
+                // The driver probes every `heartbeat_ms`, which makes
+                // this a natural periodic sweep for streams abandoned by
+                // a dead peer (otherwise they'd only be reclaimed when
+                // the next streamed upload begins).
+                self.gc_idle_streams();
+                Message::HeartbeatAck { component: "controller".into(), healthy: true }
+            }
+            Message::GetModel => {
+                // Snapshot under the lock, serialize after releasing it —
+                // encoding a 10M-param model must not stall completions.
+                match self.community() {
+                    Some((m, round)) => Message::ModelReply {
+                        model: ModelProto::from_model(&m, DType::F32, ByteOrder::Little),
+                        round,
+                    },
+                    None => Message::error(ErrorCode::NotFound, "no community model"),
                 }
             }
             Message::Shutdown => {
@@ -507,31 +1014,29 @@ impl Service for Controller {
                 self.round_cv.notify_all();
                 Message::Ack { task_id: 0, ok: true }
             }
-            other => Message::Error { detail: format!("unexpected {}", other.kind()) },
+            other => {
+                Message::error(ErrorCode::Unsupported, format!("unexpected {}", other.kind()))
+            }
         }
     }
 }
 
 impl Controller {
-    /// `MarkTaskCompleted` path: store the model (T4–T5) and either tick
-    /// the round barrier (sync/semi-sync) or mix immediately (async).
-    fn on_task_completed(
+    /// Decoded-model completion path shared by the one-shot and
+    /// streaming ingests: store the model (T4–T5) and either tick the
+    /// round barrier (sync/semi-sync) or mix immediately (async).
+    fn complete_task(
         &self,
         _task_id: u64,
         learner_id: String,
-        model: ModelProto,
+        model: TensorModel,
         meta: TaskMeta,
     ) -> Result<()> {
-        let sw = Stopwatch::start();
-        let decoded = model.to_model()?;
-        let decode_time = sw.elapsed();
-        self.record(FedOp::Serialization, decode_time);
-
         let entry = StoredModel {
             learner_id: learner_id.clone(),
             round: self.state.lock().unwrap().community_round,
             meta,
-            model: Arc::new(decoded),
+            model: Arc::new(model),
         };
 
         match self.env.protocol {
@@ -750,6 +1255,200 @@ mod tests {
         let expect = 0.5 * base.tensors[0].data[0] + 0.5 * update.tensors[0].data[0];
         assert!((c1.tensors[0].data[0] - expect).abs() < 1e-5);
         assert_eq!(ctrl.async_updates(), 1);
+    }
+
+    /// Drive a model through the streaming trio directly against
+    /// `handle()` (no transport), via the REAL sender walk
+    /// (`proto::client::stream_model_with`) so the test exercises the
+    /// exact bytes/digest/seq the production client produces.
+    fn stream_via_handle(
+        ctrl: &Controller,
+        purpose: StreamPurpose,
+        task_id: u64,
+        learner_id: &str,
+        m: &TensorModel,
+        meta: TaskMeta,
+        chunk: usize,
+    ) -> crate::proto::client::RpcResult<()> {
+        crate::proto::client::stream_model_with(
+            |msg| Ok(ctrl.handle(msg)),
+            purpose,
+            task_id,
+            0,
+            learner_id,
+            m,
+            &meta,
+            chunk,
+        )
+    }
+
+    #[test]
+    fn streamed_round_is_bitwise_identical_to_one_shot() {
+        // Same federation driven twice: learner uploads as one-shot
+        // MarkTaskCompleted vs. as chunked streams (with a chunk size
+        // that splits elements and tensors arbitrarily). The aggregated
+        // community models must be bitwise identical.
+        let one_shot = Controller::new(env(), None).unwrap();
+        let streamed = Controller::new(env(), None).unwrap();
+        one_shot.ship_model(model(1));
+        streamed.ship_model(model(1));
+        for ctrl in [&one_shot, &streamed] {
+            ctrl.open_round(1, &["a".into(), "b".into()]);
+        }
+        for (i, id) in ["a", "b"].into_iter().enumerate() {
+            let m = model(40 + i as u64);
+            let meta = TaskMeta { num_samples: 10 + i, ..Default::default() };
+            let reply = one_shot.handle(Message::MarkTaskCompleted {
+                task_id: 1,
+                learner_id: id.into(),
+                model: ModelProto::from_model(&m, DType::F32, ByteOrder::Little),
+                meta: meta.clone(),
+            });
+            assert!(matches!(reply, Message::Ack { ok: true, .. }), "{reply:?}");
+            // 13-byte chunks: split mid-element and across tensor
+            // boundaries on purpose (the unclamped sender walk makes
+            // sub-MIN_CHUNK sizes reachable).
+            stream_via_handle(&streamed, StreamPurpose::TaskCompletion, 1, id, &m, meta, 13)
+                .unwrap();
+        }
+        for ctrl in [&one_shot, &streamed] {
+            let arrived = ctrl.wait_round_completions(Duration::from_secs(1));
+            assert_eq!(arrived.len(), 2);
+            ctrl.aggregate_from_store(&arrived, 1).unwrap();
+        }
+        let (a, _) = one_shot.community().unwrap();
+        let (b, _) = streamed.community().unwrap();
+        assert_eq!(*a, *b, "streamed aggregation diverged from one-shot");
+        assert_eq!(streamed.open_streams(), 0);
+    }
+
+    #[test]
+    fn streamed_ship_model_installs_community() {
+        let ctrl = Controller::new(env(), None).unwrap();
+        let m = model(9);
+        stream_via_handle(&ctrl, StreamPurpose::ShipModel, 0, "", &m, TaskMeta::default(), 32)
+            .unwrap();
+        let (community, _) = ctrl.community().unwrap();
+        assert_eq!(*community, m);
+    }
+
+    #[test]
+    fn stream_protocol_violations_are_typed_errors() {
+        let ctrl = Controller::new(env(), None).unwrap();
+        // Chunk/end for a stream that was never opened.
+        for msg in [
+            Message::ModelChunk { stream_id: 77, seq: 0, bytes: vec![0; 4] },
+            Message::ModelStreamEnd { stream_id: 77, digest: 0 },
+        ] {
+            match ctrl.handle(msg) {
+                Message::Error { code, .. } => assert_eq!(code, ErrorCode::StreamProtocol),
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        let m = model(3);
+        let begin = |stream_id: u64| Message::ModelStreamBegin {
+            stream_id,
+            task_id: 1,
+            round: 0,
+            purpose: StreamPurpose::TaskCompletion,
+            learner_id: "a".into(),
+            layout: TensorLayoutProto::f32_layout_of(&m),
+            meta: TaskMeta::default(),
+        };
+        // Duplicate stream id.
+        assert!(matches!(ctrl.handle(begin(5)), Message::Ack { ok: true, .. }));
+        match ctrl.handle(begin(5)) {
+            Message::Error { code, .. } => assert_eq!(code, ErrorCode::StreamProtocol),
+            other => panic!("unexpected {other:?}"),
+        }
+        // Out-of-order chunk kills the stream…
+        match ctrl.handle(Message::ModelChunk { stream_id: 5, seq: 3, bytes: vec![0; 4] }) {
+            Message::Error { code, .. } => assert_eq!(code, ErrorCode::StreamProtocol),
+            other => panic!("unexpected {other:?}"),
+        }
+        // …so the follow-up end sees an unknown stream.
+        assert!(matches!(
+            ctrl.handle(Message::ModelStreamEnd { stream_id: 5, digest: 0 }),
+            Message::Error { .. }
+        ));
+        assert_eq!(ctrl.open_streams(), 0);
+        // Truncated stream: end before all bytes arrived.
+        assert!(matches!(ctrl.handle(begin(6)), Message::Ack { ok: true, .. }));
+        match ctrl.handle(Message::ModelStreamEnd { stream_id: 6, digest: FNV64_INIT }) {
+            Message::Error { code, detail } => {
+                assert_eq!(code, ErrorCode::StreamProtocol);
+                assert!(detail.contains("truncated"), "{detail}");
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // Digest mismatch.
+        assert!(matches!(ctrl.handle(begin(8)), Message::Ack { ok: true, .. }));
+        let mut seq = 0u64;
+        for t in &m.tensors {
+            let bytes = t.encode_data(DType::F32, ByteOrder::Little);
+            ctrl.handle(Message::ModelChunk { stream_id: 8, seq, bytes });
+            seq += 1;
+        }
+        match ctrl.handle(Message::ModelStreamEnd { stream_id: 8, digest: 0xBAD }) {
+            Message::Error { code, detail } => {
+                assert_eq!(code, ErrorCode::StreamProtocol);
+                assert!(detail.contains("digest"), "{detail}");
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // None of this touched round/community state.
+        assert!(ctrl.community().is_none());
+        assert_eq!(ctrl.open_streams(), 0);
+    }
+
+    #[test]
+    fn one_shot_ingest_holds_whole_model_streamed_holds_chunks() {
+        let m = model(2);
+        let model_bytes = m.byte_size_f32();
+        let one_shot = Controller::new(env(), None).unwrap();
+        one_shot.ship_model(model(1));
+        one_shot.handle(Message::MarkTaskCompleted {
+            task_id: 1,
+            learner_id: "a".into(),
+            model: ModelProto::from_model(&m, DType::F32, ByteOrder::Little),
+            meta: TaskMeta::default(),
+        });
+        assert!(one_shot.peak_wire_ingest_bytes() >= model_bytes);
+
+        let streamed = Controller::new(env(), None).unwrap();
+        streamed.ship_model(model(1));
+        let chunk = 16;
+        stream_via_handle(
+            &streamed,
+            StreamPurpose::TaskCompletion,
+            1,
+            "a",
+            &m,
+            TaskMeta::default(),
+            chunk,
+        )
+        .unwrap();
+        assert!(
+            streamed.peak_wire_ingest_bytes() <= chunk,
+            "streamed ingest held {} wire bytes for a {chunk}-byte chunk",
+            streamed.peak_wire_ingest_bytes()
+        );
+    }
+
+    #[test]
+    fn hello_handshake_checks_version() {
+        let ctrl = Controller::new(env(), None).unwrap();
+        match ctrl.handle(Message::Hello { proto_version: PROTO_VERSION }) {
+            Message::HelloAck { proto_version, component } => {
+                assert_eq!(proto_version, PROTO_VERSION);
+                assert_eq!(component, "controller");
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        match ctrl.handle(Message::Hello { proto_version: 999 }) {
+            Message::Error { code, .. } => assert_eq!(code, ErrorCode::VersionMismatch),
+            other => panic!("unexpected {other:?}"),
+        }
     }
 
     #[test]

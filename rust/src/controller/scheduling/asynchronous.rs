@@ -12,6 +12,7 @@
 
 use super::super::Controller;
 use crate::metrics::{FedOp, RoundReport};
+use crate::proto::client;
 use crate::proto::{Message, ModelProto, TaskSpec};
 use crate::tensor::{ByteOrder, DType};
 use crate::util::{log_warn, Rng, Stopwatch};
@@ -62,9 +63,15 @@ pub fn run_async_session(
     ctrl.record(FedOp::TrainDispatch, dispatch_time);
     let mut any_ok = false;
     for (id, a) in &acks {
-        if a.is_ok() {
-            ctrl.mark_task_outstanding(id);
-            any_ok = true;
+        match a {
+            Ok(reply) if client::ack_of(reply).is_ok() => {
+                ctrl.mark_task_outstanding(id);
+                any_ok = true;
+            }
+            Ok(reply) => {
+                log_warn("async", &format!("{id}: dispatch rejected: {}", reply.kind()))
+            }
+            Err(e) => log_warn("async", &format!("{id}: dispatch failed: {e:#}")),
         }
     }
     if !any_ok {
@@ -106,10 +113,17 @@ pub fn run_async_session(
                         },
                     );
                     ctrl.record(FedOp::TrainDispatch, sw.elapsed());
-                    if let Err(e) = r {
-                        log_warn("async", &format!("{}: re-dispatch failed: {e:#}", h.id));
-                    } else {
-                        ctrl.mark_task_outstanding(&h.id);
+                    match r {
+                        Ok(reply) if client::ack_of(&reply).is_ok() => {
+                            ctrl.mark_task_outstanding(&h.id)
+                        }
+                        Ok(reply) => log_warn(
+                            "async",
+                            &format!("{}: re-dispatch rejected: {}", h.id, reply.kind()),
+                        ),
+                        Err(e) => {
+                            log_warn("async", &format!("{}: re-dispatch failed: {e:#}", h.id))
+                        }
                     }
                 }
             }

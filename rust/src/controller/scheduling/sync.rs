@@ -6,6 +6,7 @@
 
 use super::super::Controller;
 use crate::metrics::{FedOp, RoundReport};
+use crate::proto::client;
 use crate::proto::{Message, ModelProto, TaskSpec};
 use crate::tensor::{ByteOrder, DType};
 use crate::util::{log_debug, log_warn, Rng, Stopwatch};
@@ -61,8 +62,10 @@ pub(crate) fn run_round_with_budget(
     let mut dispatched = 0usize;
     for (id, ack) in &acks {
         match ack {
-            Ok(Message::Ack { ok: true, .. }) => dispatched += 1,
-            Ok(other) => log_warn("scheduler", &format!("{id}: unexpected ack {}", other.kind())),
+            Ok(reply) => match client::ack_of(reply) {
+                Ok(_) => dispatched += 1,
+                Err(e) => log_warn("scheduler", &format!("{id}: dispatch rejected: {e}")),
+            },
             Err(e) => log_warn("scheduler", &format!("{id}: train dispatch failed: {e:#}")),
         }
     }
@@ -115,11 +118,13 @@ pub(crate) fn run_round_with_budget(
     let mut total_samples = 0usize;
     for (id, reply) in &replies {
         match reply {
-            Ok(Message::EvaluateModelReply { result, .. }) => {
-                weighted_loss += result.loss * result.num_samples as f64;
-                total_samples += result.num_samples;
-            }
-            Ok(other) => log_warn("scheduler", &format!("{id}: unexpected eval {}", other.kind())),
+            Ok(reply) => match client::eval_reply_of(reply) {
+                Ok((_, result)) => {
+                    weighted_loss += result.loss * result.num_samples as f64;
+                    total_samples += result.num_samples;
+                }
+                Err(e) => log_warn("scheduler", &format!("{id}: eval rejected: {e}")),
+            },
             Err(e) => log_warn("scheduler", &format!("{id}: eval failed: {e:#}")),
         }
     }

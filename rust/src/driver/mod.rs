@@ -15,7 +15,7 @@ use crate::controller::{scheduling, Controller};
 use crate::learner::{Dataset, Learner, LearnerServicer, SyntheticTrainer, Trainer};
 use crate::metrics::{OpMetrics, RoundReport};
 use crate::net::{Psk, ServerHandle};
-use crate::proto::Message;
+use crate::proto::client;
 use crate::tensor::TensorModel;
 use crate::util::{log_info, log_warn, Rng, Stopwatch};
 use anyhow::{bail, Context, Result};
@@ -34,6 +34,11 @@ pub struct FederationReport {
     pub wall_clock: Duration,
     /// Heartbeat probes that failed during monitoring.
     pub missed_heartbeats: u64,
+    /// Controller high-water mark of wire-payload bytes held during
+    /// model ingest (see [`Controller::peak_wire_ingest_bytes`]): with
+    /// one-shot uploads this grows with learners × model size, with the
+    /// streaming data plane it is bounded by chunk × in-flight streams.
+    pub peak_wire_ingest_bytes: usize,
 }
 
 /// Unique per-process run counter so in-proc endpoint names never clash
@@ -112,6 +117,7 @@ pub fn run_with_trainer(
         );
         let learner =
             Learner::new(&format!("learner-{i}"), &ctrl_endpoint, psk, make_trainer(i), dataset);
+        learner.set_stream_chunk(env.stream_chunk_bytes);
         let (ep, server) = serve_component(
             env,
             &format!("learner-{run}-{i}"),
@@ -150,8 +156,9 @@ pub fn run_with_trainer(
                             return;
                         }
                         let healthy = crate::net::connect(ep, psk)
-                            .and_then(|mut c| c.rpc(&Message::Heartbeat { from: "driver".into() }))
-                            .map(|r| matches!(r, Message::HeartbeatAck { healthy: true, .. }))
+                            .map_err(client::RpcError::Transport)
+                            .and_then(|mut c| client::heartbeat(c.as_mut(), "driver"))
+                            .map(|(_, healthy)| healthy)
                             .unwrap_or(false);
                         if !healthy {
                             missed.fetch_add(1, Ordering::SeqCst);
@@ -200,11 +207,11 @@ pub fn run_with_trainer(
     let _ = monitor.join();
     for ep in &learner_endpoints {
         if let Ok(mut c) = crate::net::connect(ep, psk) {
-            let _ = c.rpc(&Message::Shutdown);
+            let _ = client::shutdown(c.as_mut());
         }
     }
     if let Ok(mut c) = crate::net::connect(&ctrl_endpoint, psk) {
-        let _ = c.rpc(&Message::Shutdown);
+        let _ = client::shutdown(c.as_mut());
     }
     for mut s in learner_servers {
         s.shutdown();
@@ -218,6 +225,7 @@ pub fn run_with_trainer(
         final_loss,
         wall_clock: sw.elapsed(),
         missed_heartbeats: missed.load(Ordering::SeqCst),
+        peak_wire_ingest_bytes: controller.peak_wire_ingest_bytes(),
     })
 }
 

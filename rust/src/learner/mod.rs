@@ -18,12 +18,13 @@ pub mod trainer;
 pub use data::Dataset;
 pub use trainer::{SyntheticTrainer, Trainer};
 
-use crate::net::{Psk, Service};
-use crate::proto::{Message, ModelProto, TaskSpec};
+use crate::net::{ClientConn, Psk, Service};
+use crate::proto::client::{self, RpcError};
+use crate::proto::{ErrorCode, Message, ModelProto, StreamPurpose, TaskSpec, PROTO_VERSION};
 use crate::tensor::{ByteOrder, DType};
 use crate::util::{log_debug, log_warn, ThreadPool};
-use anyhow::{Context, Result};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use anyhow::Result;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 /// A learner node.
@@ -37,7 +38,10 @@ pub struct Learner {
     /// Fig. 9). One worker: local tasks execute in submission order.
     executor: ThreadPool,
     /// Dedicated connection for completion callbacks.
-    callback_conn: Mutex<Option<Box<dyn crate::net::ClientConn>>>,
+    callback_conn: Mutex<Option<Box<dyn ClientConn>>>,
+    /// Data-plane chunk size for completed-model uploads; 0 = one-shot
+    /// `MarkTaskCompleted` (see `FederationEnv::stream_chunk_bytes`).
+    stream_chunk: AtomicUsize,
     shutdown: AtomicBool,
     tasks_completed: AtomicU64,
 }
@@ -58,25 +62,28 @@ impl Learner {
             dataset: Arc::new(dataset),
             executor: ThreadPool::new(1),
             callback_conn: Mutex::new(None),
+            stream_chunk: AtomicUsize::new(0),
             shutdown: AtomicBool::new(false),
             tasks_completed: AtomicU64::new(0),
         })
     }
 
+    /// Upload completed models over the streaming data plane in chunks
+    /// of `bytes` (0 = one-shot).
+    pub fn set_stream_chunk(&self, bytes: usize) {
+        self.stream_chunk.store(bytes, Ordering::SeqCst);
+    }
+
+    pub fn stream_chunk(&self) -> usize {
+        self.stream_chunk.load(Ordering::SeqCst)
+    }
+
     /// Register with the controller (Fig. 8 initialization).
     pub fn register(&self, own_endpoint: &str) -> Result<usize> {
-        let reply = self
-            .controller_rpc(&Message::Register {
-                learner_id: self.id.clone(),
-                host: own_endpoint.to_string(),
-                port: 0,
-                num_samples: self.dataset.train_len(),
-            })
-            .context("registering with controller")?;
-        match reply {
-            Message::RegisterAck { accepted: true, assigned_index } => Ok(assigned_index),
-            other => anyhow::bail!("registration rejected: {}", other.kind()),
-        }
+        self.with_callback_conn(|conn| {
+            client::register(conn, &self.id, own_endpoint, self.dataset.train_len())
+        })
+        .map_err(|e| anyhow::anyhow!("registering with controller: {e}"))
     }
 
     pub fn is_shutdown(&self) -> bool {
@@ -87,22 +94,36 @@ impl Learner {
         self.tasks_completed.load(Ordering::SeqCst)
     }
 
-    fn controller_rpc(&self, msg: &Message) -> Result<Message> {
+    /// Run `f` against the (lazily dialed) callback connection. A fresh
+    /// connection opens with the versioned `Hello` handshake; transport
+    /// failures drop the connection so the next call re-dials, while
+    /// remote (application) errors keep it.
+    fn with_callback_conn<T>(
+        &self,
+        f: impl FnOnce(&mut dyn ClientConn) -> Result<T, RpcError>,
+    ) -> Result<T, RpcError> {
         let mut guard = self.callback_conn.lock().unwrap();
         if guard.is_none() {
-            *guard = Some(crate::net::connect(&self.controller_endpoint, self.psk)?);
+            let mut conn = crate::net::connect(&self.controller_endpoint, self.psk)
+                .map_err(RpcError::Transport)?;
+            client::hello(conn.as_mut())?;
+            *guard = Some(conn);
         }
-        match guard.as_mut().unwrap().rpc(msg) {
-            Ok(r) => Ok(r),
+        match f(guard.as_mut().unwrap().as_mut()) {
+            Ok(v) => Ok(v),
             Err(e) => {
-                *guard = None;
+                if e.is_transport() {
+                    *guard = None; // force reconnect next time
+                }
                 Err(e)
             }
         }
     }
 
-    /// Execute one training task and call back `MarkTaskCompleted`.
-    fn run_train_task(self: &Arc<Self>, task_id: u64, model: ModelProto, spec: TaskSpec) {
+    /// Execute one training task and call back `MarkTaskCompleted` —
+    /// one-shot for small models, chunk-streamed when a data-plane chunk
+    /// size is configured.
+    fn run_train_task(self: &Arc<Self>, task_id: u64, round: u64, model: ModelProto, spec: TaskSpec) {
         let learner = Arc::clone(self);
         self.executor.spawn(move || {
             if learner.is_shutdown() {
@@ -111,16 +132,27 @@ impl Learner {
             let result = (|| -> Result<()> {
                 let m = model.to_model()?;
                 let (trained, meta) = learner.trainer.train(&m, &learner.dataset, &spec)?;
-                let reply = learner.controller_rpc(&Message::MarkTaskCompleted {
-                    task_id,
-                    learner_id: learner.id.clone(),
-                    model: ModelProto::from_model(&trained, DType::F32, ByteOrder::Little),
-                    meta,
-                })?;
-                if let Message::Error { detail } = reply {
-                    anyhow::bail!("controller rejected completion: {detail}");
-                }
-                Ok(())
+                let chunk = learner.stream_chunk();
+                let upload = if chunk > 0 {
+                    learner.with_callback_conn(|conn| {
+                        client::stream_model(
+                            conn,
+                            StreamPurpose::TaskCompletion,
+                            task_id,
+                            round,
+                            &learner.id,
+                            &trained,
+                            &meta,
+                            chunk,
+                        )
+                    })
+                } else {
+                    let proto = ModelProto::from_model(&trained, DType::F32, ByteOrder::Little);
+                    learner.with_callback_conn(|conn| {
+                        client::mark_task_completed(conn, task_id, &learner.id, proto, meta)
+                    })
+                };
+                upload.map_err(|e| anyhow::anyhow!("completion callback: {e}"))
             })();
             match result {
                 Ok(()) => {
@@ -142,13 +174,26 @@ impl Service for LearnerServicer {
     fn handle(&self, msg: Message) -> Message {
         let learner = &self.0;
         if learner.is_shutdown() {
-            return Message::Error { detail: "learner is shut down".into() };
+            return Message::error(ErrorCode::Unavailable, "learner is shut down");
         }
         match msg {
-            Message::RunTask { task_id, round: _, model, spec } => {
+            Message::Hello { proto_version } => {
+                if proto_version == PROTO_VERSION {
+                    Message::HelloAck {
+                        proto_version: PROTO_VERSION,
+                        component: format!("learner/{}", learner.id),
+                    }
+                } else {
+                    Message::error(
+                        ErrorCode::VersionMismatch,
+                        format!("learner speaks v{PROTO_VERSION}, peer v{proto_version}"),
+                    )
+                }
+            }
+            Message::RunTask { task_id, round, model, spec } => {
                 // Submit to the executor; Ack as soon as it is queued
                 // (Fig. 9: "the executor replies with an Ack message").
-                learner.run_train_task(task_id, model, spec);
+                learner.run_train_task(task_id, round, model, spec);
                 Message::Ack { task_id, ok: true }
             }
             Message::EvaluateModel { task_id, round: _, model } => {
@@ -161,7 +206,7 @@ impl Service for LearnerServicer {
                         learner_id: learner.id.clone(),
                         result,
                     },
-                    Err(e) => Message::Error { detail: format!("eval failed: {e:#}") },
+                    Err(e) => Message::error(ErrorCode::Internal, format!("eval failed: {e:#}")),
                 }
             }
             Message::Heartbeat { .. } => Message::HeartbeatAck {
@@ -172,7 +217,13 @@ impl Service for LearnerServicer {
                 learner.shutdown.store(true, Ordering::SeqCst);
                 Message::Ack { task_id: 0, ok: true }
             }
-            other => Message::Error { detail: format!("unexpected {}", other.kind()) },
+            // Learners have no inbound data plane: models arrive inline
+            // with RunTask/EvaluateModel (dispatch fan-out reuses one
+            // encoded buffer across all learners — streaming would undo
+            // that sharing).
+            other => {
+                Message::error(ErrorCode::Unsupported, format!("unexpected {}", other.kind()))
+            }
         }
     }
 }
@@ -193,6 +244,10 @@ mod tests {
     impl Service for Capture {
         fn handle(&self, msg: Message) -> Message {
             match msg {
+                Message::Hello { .. } => Message::HelloAck {
+                    proto_version: PROTO_VERSION,
+                    component: "capture".into(),
+                },
                 Message::MarkTaskCompleted { task_id, learner_id, meta, .. } => {
                     self.completions.lock().unwrap().push((task_id, learner_id, meta));
                     Message::Ack { task_id, ok: true }
@@ -200,7 +255,9 @@ mod tests {
                 Message::Register { .. } => {
                     Message::RegisterAck { accepted: true, assigned_index: 0 }
                 }
-                other => Message::Error { detail: format!("unexpected {}", other.kind()) },
+                other => {
+                    Message::error(ErrorCode::Unsupported, format!("unexpected {}", other.kind()))
+                }
             }
         }
     }
@@ -285,5 +342,48 @@ mod tests {
         let (learner, _capture, _h) = setup("register");
         let idx = learner.register("inproc://l0").unwrap();
         assert_eq!(idx, 0);
+    }
+
+    #[test]
+    fn streamed_callback_reaches_a_real_controller() {
+        // With a data-plane chunk size configured, the completion
+        // callback travels as Begin/Chunk/End and the controller ingests
+        // it — end to end through a real (async-protocol) controller, so
+        // the community model advances on arrival.
+        use crate::config::{FederationEnv, ModelSpec, Protocol};
+        use crate::controller::Controller;
+        use crate::tensor::TensorModel;
+        use crate::util::Rng;
+
+        let env = FederationEnv::builder("learner-stream-test")
+            .learners(1)
+            .model(ModelSpec::mlp(4, 2, 8))
+            .protocol(Protocol::Asynchronous { staleness_alpha: 1.0 })
+            .build();
+        let ctrl = Controller::new(env, None).unwrap();
+        let layout = ModelSpec::mlp(4, 2, 8).tensor_layout();
+        ctrl.ship_model(TensorModel::random_init(&layout, &mut Rng::new(1)));
+        let ep = "inproc://learner-stream-ctrl";
+        let _h = crate::net::serve(ep, Arc::clone(&ctrl) as Arc<dyn Service>, None).unwrap();
+
+        let dataset = Dataset::synthetic_housing(4, 50, 20, 7);
+        let learner =
+            Learner::new("l0", ep, None, Arc::new(SyntheticTrainer::new(0, 0.01)), dataset);
+        learner.set_stream_chunk(crate::proto::client::MIN_CHUNK_BYTES);
+        let servicer = LearnerServicer(Arc::clone(&learner));
+        let reply = servicer.handle(Message::RunTask {
+            task_id: 1,
+            round: 0,
+            model: model(),
+            spec: TaskSpec { epochs: 1, batch_size: 10, learning_rate: 0.1, step_budget: 0 },
+        });
+        assert_eq!(reply, Message::Ack { task_id: 1, ok: true });
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        while learner.tasks_completed() == 0 {
+            assert!(std::time::Instant::now() < deadline, "no streamed completion");
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        assert_eq!(ctrl.async_updates(), 1, "stream did not reach the controller");
+        assert_eq!(ctrl.open_streams(), 0);
     }
 }

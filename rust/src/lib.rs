@@ -57,6 +57,8 @@ pub mod prelude {
     pub use crate::driver::{run_simulated, FederationReport};
     pub use crate::learner::Learner;
     pub use crate::metrics::FedOp;
+    pub use crate::proto::client::{ControllerClient, LearnerClient, RpcError};
+    pub use crate::proto::ErrorCode;
     pub use crate::tensor::{DType, Tensor, TensorModel};
 }
 

@@ -1,11 +1,32 @@
 //! Length-prefixed framing over any `Read`/`Write` pair.
 //!
-//! Frame = `u32` little-endian payload length + payload bytes. A maximum
-//! frame size guards against corrupt/hostile peers; models of the paper's
-//! largest stress-test size (10M f32 params ≈ 40 MiB) fit comfortably.
+//! Frame = 8-byte header + payload bytes. The header is
+//!
+//! ```text
+//! [0x4D 0x46] [version u8] [reserved u8] [payload length u32 LE]
+//!  "M"  "F"
+//! ```
+//!
+//! The magic bytes and version make a garbage or mismatched peer fail
+//! with a *diagnosable* error on the first frame — instead of a random
+//! prefix being interpreted as a length and triggering a giant
+//! allocation or a hang. A maximum frame size additionally bounds what a
+//! well-formed header may ask us to allocate; models of the paper's
+//! largest stress-test size (10M f32 params ≈ 40 MiB) fit comfortably,
+//! and larger models move over the chunked data plane anyway.
 
 use anyhow::{bail, Context, Result};
 use std::io::{Read, Write};
+
+/// Frame magic: ASCII "MF". Anything else on the wire is not a MetisFL
+/// framed peer (an HTTP client, TLS hello, random noise, …).
+pub const FRAME_MAGIC: [u8; 2] = *b"MF";
+
+/// Framing-layer version. Bumped only when the header layout changes —
+/// message-schema evolution is negotiated end-to-end via `Hello`.
+pub const FRAME_VERSION: u8 = 1;
+
+const HEADER_LEN: usize = 8;
 
 /// 256 MiB upper bound (≈6× the largest stress-test model).
 pub const MAX_FRAME: usize = 256 * 1024 * 1024;
@@ -15,22 +36,39 @@ pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> Result<()> {
     if payload.len() > MAX_FRAME {
         bail!("frame too large: {}", payload.len());
     }
-    w.write_all(&(payload.len() as u32).to_le_bytes()).context("frame header write")?;
+    let mut header = [0u8; HEADER_LEN];
+    header[..2].copy_from_slice(&FRAME_MAGIC);
+    header[2] = FRAME_VERSION;
+    header[4..].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    w.write_all(&header).context("frame header write")?;
     w.write_all(payload).context("frame body write")?;
     w.flush().context("frame flush")?;
     Ok(())
 }
 
 /// Read one frame (blocking). Returns `None` on clean EOF at a frame
-/// boundary.
+/// boundary; bad magic / version / length are hard errors.
 pub fn read_frame(r: &mut impl Read) -> Result<Option<Vec<u8>>> {
-    let mut header = [0u8; 4];
+    let mut header = [0u8; HEADER_LEN];
     match r.read_exact(&mut header) {
         Ok(()) => {}
         Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
         Err(e) => return Err(e).context("frame header read"),
     }
-    let len = u32::from_le_bytes(header) as usize;
+    if header[..2] != FRAME_MAGIC {
+        bail!(
+            "bad frame magic {:02x}{:02x}: peer is not speaking the MetisFL framed protocol",
+            header[0],
+            header[1]
+        );
+    }
+    if header[2] != FRAME_VERSION {
+        bail!(
+            "frame protocol version mismatch: ours v{FRAME_VERSION}, peer v{}",
+            header[2]
+        );
+    }
+    let len = u32::from_le_bytes(header[4..].try_into().unwrap()) as usize;
     if len > MAX_FRAME {
         bail!("incoming frame too large: {len}");
     }
@@ -69,9 +107,35 @@ mod tests {
     #[test]
     fn oversized_frame_rejected_without_allocation() {
         let mut buf = Vec::new();
+        buf.extend(FRAME_MAGIC);
+        buf.push(FRAME_VERSION);
+        buf.push(0);
         buf.extend((u32::MAX).to_le_bytes());
         let mut c = Cursor::new(buf);
-        assert!(read_frame(&mut c).is_err());
+        let err = format!("{:#}", read_frame(&mut c).unwrap_err());
+        assert!(err.contains("too large"), "{err}");
+    }
+
+    #[test]
+    fn garbage_peer_fails_on_magic_not_allocation() {
+        // An HTTP client says "GET ..."; the old format would read
+        // 0x20544547 (~542 MB) as a length. Now it dies on magic.
+        let mut c = Cursor::new(b"GET / HTTP/1.1\r\n".to_vec());
+        let err = format!("{:#}", read_frame(&mut c).unwrap_err());
+        assert!(err.contains("bad frame magic"), "{err}");
+    }
+
+    #[test]
+    fn frame_version_mismatch_is_a_clear_error() {
+        let mut buf = Vec::new();
+        buf.extend(FRAME_MAGIC);
+        buf.push(FRAME_VERSION + 1);
+        buf.push(0);
+        buf.extend(5u32.to_le_bytes());
+        buf.extend(b"hello");
+        let mut c = Cursor::new(buf);
+        let err = format!("{:#}", read_frame(&mut c).unwrap_err());
+        assert!(err.contains("version mismatch"), "{err}");
     }
 
     #[test]

@@ -130,7 +130,7 @@ mod tests {
                 Message::Heartbeat { from } => {
                     Message::HeartbeatAck { component: from, healthy: true }
                 }
-                _ => Message::Error { detail: "unexpected".into() },
+                _ => Message::error(crate::proto::ErrorCode::Unsupported, "unexpected"),
             }
         }
     }

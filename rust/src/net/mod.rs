@@ -15,6 +15,42 @@
 //! A [`Service`] handles one request and returns one reply; [`ClientConn`]
 //! issues RPCs. Endpoints are parsed from strings:
 //! `tcp://127.0.0.1:4250`, `inproc://controller`.
+//!
+//! # Protocol
+//!
+//! The RPC surface is split into two planes, both riding the same
+//! framed request/response transport:
+//!
+//! ## Control plane
+//!
+//! Small typed messages — registration, task dispatch/acks, heartbeats,
+//! shutdown — issued through the stubs in [`crate::proto::client`]
+//! rather than hand-rolled `match` blocks. Sessions open with a
+//! versioned `Hello`/`HelloAck` handshake
+//! ([`crate::proto::PROTO_VERSION`]); failures carry a structured
+//! [`crate::proto::ErrorCode`]. On tcp, every frame additionally starts
+//! with the [`frame::FRAME_MAGIC`] + [`frame::FRAME_VERSION`] header, so
+//! a non-MetisFL peer fails on its first bytes instead of driving an
+//! unbounded allocation.
+//!
+//! ## Data plane
+//!
+//! Bulk model payloads move as a chunked stream:
+//!
+//! ```text
+//! ModelStreamBegin { stream_id, task_id, round, purpose, layout, meta }
+//! ModelChunk       { stream_id, seq: 0.., bytes }   (element-ordered)
+//! ModelStreamEnd   { stream_id, digest: fnv1a64(payload) }
+//! ```
+//!
+//! Each step is acked, so strict send/recv pairing is preserved on every
+//! transport (including the secure channel's per-record sequence MACs).
+//! The sender encodes one tensor at a time; the receiver decodes each
+//! chunk on arrival straight into arena-backed tensor buffers sized from
+//! `layout` — neither side ever materializes a whole-model wire buffer,
+//! receive overlaps decode, and controller-side peak extra memory is
+//! O(chunk × in-flight streams) instead of O(learners × model). The
+//! streamed and one-shot paths are property-tested bitwise-identical.
 
 pub mod frame;
 pub mod inproc;
@@ -103,7 +139,10 @@ mod tests {
                 Message::Heartbeat { from } => {
                     Message::HeartbeatAck { component: from, healthy: true }
                 }
-                other => Message::Error { detail: format!("unexpected {}", other.kind()) },
+                other => Message::error(
+                    crate::proto::ErrorCode::Unsupported,
+                    format!("unexpected {}", other.kind()),
+                ),
             }
         }
     }

@@ -233,7 +233,7 @@ mod tests {
                 Message::Heartbeat { .. } => {
                     Message::HeartbeatAck { component: format!("{n}"), healthy: true }
                 }
-                _ => Message::Error { detail: "unexpected".into() },
+                _ => Message::error(crate::proto::ErrorCode::Unsupported, "unexpected"),
             }
         }
     }
@@ -284,7 +284,7 @@ mod tests {
             fn handle(&self, msg: Message) -> Message {
                 match msg {
                     Message::ShipModel { model } => Message::ModelReply { model, round: 0 },
-                    _ => Message::Error { detail: "unexpected".into() },
+                    _ => Message::error(crate::proto::ErrorCode::Unsupported, "unexpected"),
                 }
             }
         }

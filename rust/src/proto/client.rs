@@ -1,0 +1,532 @@
+//! Typed control-plane stubs + data-plane streaming sender.
+//!
+//! The raw transport ([`crate::net::ClientConn`]) moves opaque
+//! [`Message`]s; everything above it used to hand-roll `match msg`
+//! blocks and stringly errors. This module is the typed facade:
+//!
+//! * [`ControllerClient`] / [`LearnerClient`] — one method per RPC,
+//!   returning domain values or a structured [`RpcError`]. Both open
+//!   their session with the versioned [`hello`] handshake.
+//! * [`stream_model`] — the data-plane sender: walks a model tensor by
+//!   tensor and ships it as `ModelStreamBegin` → `ModelChunk`* →
+//!   `ModelStreamEnd`. Sender-side peak extra memory is one encoded
+//!   tensor plus one chunk, regardless of model size.
+//! * Reply interpreters ([`ack_of`], [`eval_reply_of`]) shared with the
+//!   schedulers' broadcast paths, which keep the encode-once
+//!   `send_raw` fan-out but no longer parse replies by hand.
+//!
+//! Free functions take `&mut dyn ClientConn` so components that own a
+//! long-lived connection (the learner's completion-callback channel, a
+//! `LearnerHandle`) can borrow it to the stub layer without giving up
+//! ownership.
+
+use super::wire::{fnv1a64, FNV64_INIT};
+use super::{
+    ErrorCode, EvalResult, Message, ModelProto, StreamPurpose, TaskMeta, TaskSpec,
+    TensorLayoutProto, PROTO_VERSION,
+};
+use crate::net::{ClientConn, Psk};
+use crate::tensor::{ByteOrder, DType, TensorModel};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Default data-plane chunk size (256 KiB): large enough to amortize
+/// per-chunk framing/ack overhead, small enough that in-flight receive
+/// memory stays negligible next to any model worth streaming.
+pub const DEFAULT_CHUNK_BYTES: usize = 256 * 1024;
+
+/// Smallest permitted chunk (guards against pathological 1-byte chunk
+/// configs turning one model into millions of RPCs).
+pub const MIN_CHUNK_BYTES: usize = 1024;
+
+/// Typed RPC failure taxonomy.
+#[derive(Debug)]
+pub enum RpcError {
+    /// Transport-level failure: connect, send, recv, or codec. The
+    /// connection is suspect — callers should drop and re-dial.
+    Transport(anyhow::Error),
+    /// The peer replied with a structured [`Message::Error`]. The
+    /// connection itself is healthy.
+    Remote { code: ErrorCode, detail: String },
+    /// The peer replied with a well-formed message of the wrong kind.
+    Unexpected { expected: &'static str, got: String },
+}
+
+impl RpcError {
+    /// The remote error code, when this is a remote failure.
+    pub fn remote_code(&self) -> Option<ErrorCode> {
+        match self {
+            RpcError::Remote { code, .. } => Some(*code),
+            _ => None,
+        }
+    }
+
+    /// Should the caller tear down and re-establish the connection?
+    pub fn is_transport(&self) -> bool {
+        matches!(self, RpcError::Transport(_))
+    }
+}
+
+impl std::fmt::Display for RpcError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RpcError::Transport(e) => write!(f, "transport error: {e:#}"),
+            RpcError::Remote { code, detail } => write!(f, "remote error [{code}]: {detail}"),
+            RpcError::Unexpected { expected, got } => {
+                write!(f, "unexpected reply: wanted {expected}, got {got}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for RpcError {}
+
+impl From<anyhow::Error> for RpcError {
+    fn from(e: anyhow::Error) -> Self {
+        RpcError::Transport(e)
+    }
+}
+
+pub type RpcResult<T> = Result<T, RpcError>;
+
+/// One blocking RPC; `Error` replies surface as [`RpcError::Remote`].
+pub fn rpc(conn: &mut dyn ClientConn, msg: &Message) -> RpcResult<Message> {
+    match conn.rpc(msg) {
+        Ok(Message::Error { code, detail }) => Err(RpcError::Remote { code, detail }),
+        Ok(reply) => Ok(reply),
+        Err(e) => Err(RpcError::Transport(e)),
+    }
+}
+
+/// Interpret any reply as a positive `Ack`, returning its task id.
+pub fn ack_of(reply: &Message) -> RpcResult<u64> {
+    match reply {
+        Message::Ack { task_id, ok: true } => Ok(*task_id),
+        Message::Ack { task_id, ok: false } => Err(RpcError::Remote {
+            code: ErrorCode::Rejected,
+            detail: format!("task {task_id} refused"),
+        }),
+        Message::Error { code, detail } => {
+            Err(RpcError::Remote { code: *code, detail: detail.clone() })
+        }
+        other => Err(RpcError::Unexpected { expected: "Ack", got: other.kind().to_string() }),
+    }
+}
+
+/// Interpret a reply as an `EvaluateModelReply`.
+pub fn eval_reply_of(reply: &Message) -> RpcResult<(&str, &EvalResult)> {
+    match reply {
+        Message::EvaluateModelReply { learner_id, result, .. } => {
+            Ok((learner_id.as_str(), result))
+        }
+        Message::Error { code, detail } => {
+            Err(RpcError::Remote { code: *code, detail: detail.clone() })
+        }
+        other => Err(RpcError::Unexpected {
+            expected: "EvaluateModelReply",
+            got: other.kind().to_string(),
+        }),
+    }
+}
+
+fn expect_ack(reply: Message) -> RpcResult<u64> {
+    ack_of(&reply)
+}
+
+/// Versioned session opener: announce [`PROTO_VERSION`], return the
+/// peer's version. Mismatches come back as
+/// `RpcError::Remote { code: VersionMismatch, .. }` from the peer.
+pub fn hello(conn: &mut dyn ClientConn) -> RpcResult<u32> {
+    match rpc(conn, &Message::Hello { proto_version: PROTO_VERSION })? {
+        Message::HelloAck { proto_version, .. } => Ok(proto_version),
+        other => Err(RpcError::Unexpected { expected: "HelloAck", got: other.kind().to_string() }),
+    }
+}
+
+/// Liveness probe; returns `(component, healthy)`.
+pub fn heartbeat(conn: &mut dyn ClientConn, from: &str) -> RpcResult<(String, bool)> {
+    match rpc(conn, &Message::Heartbeat { from: from.to_string() })? {
+        Message::HeartbeatAck { component, healthy } => Ok((component, healthy)),
+        other => Err(RpcError::Unexpected {
+            expected: "HeartbeatAck",
+            got: other.kind().to_string(),
+        }),
+    }
+}
+
+/// Orderly shutdown request.
+pub fn shutdown(conn: &mut dyn ClientConn) -> RpcResult<()> {
+    expect_ack(rpc(conn, &Message::Shutdown)?)?;
+    Ok(())
+}
+
+/// Learner → controller registration; returns the assigned index.
+pub fn register(
+    conn: &mut dyn ClientConn,
+    learner_id: &str,
+    endpoint: &str,
+    num_samples: usize,
+) -> RpcResult<usize> {
+    let msg = Message::Register {
+        learner_id: learner_id.to_string(),
+        host: endpoint.to_string(),
+        port: 0,
+        num_samples,
+    };
+    match rpc(conn, &msg)? {
+        Message::RegisterAck { accepted: true, assigned_index } => Ok(assigned_index),
+        Message::RegisterAck { accepted: false, .. } => Err(RpcError::Remote {
+            code: ErrorCode::Rejected,
+            detail: "registration rejected".into(),
+        }),
+        other => Err(RpcError::Unexpected {
+            expected: "RegisterAck",
+            got: other.kind().to_string(),
+        }),
+    }
+}
+
+/// One-shot completion callback (small models / compatibility path).
+pub fn mark_task_completed(
+    conn: &mut dyn ClientConn,
+    task_id: u64,
+    learner_id: &str,
+    model: ModelProto,
+    meta: TaskMeta,
+) -> RpcResult<()> {
+    let msg = Message::MarkTaskCompleted {
+        task_id,
+        learner_id: learner_id.to_string(),
+        model,
+        meta,
+    };
+    expect_ack(rpc(conn, &msg)?)?;
+    Ok(())
+}
+
+/// Process-unique stream id: a per-process random-ish salt (boot time)
+/// plus an odd-multiplier counter walk, so concurrent senders — in this
+/// process or another — practically never collide at the receiver.
+pub fn next_stream_id() -> u64 {
+    static SALT: once_cell::sync::Lazy<u64> = once_cell::sync::Lazy::new(|| {
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0x5EED)
+            ^ (std::process::id() as u64).rotate_left(32)
+    });
+    static CTR: AtomicU64 = AtomicU64::new(1);
+    SALT.wrapping_add(CTR.fetch_add(1, Ordering::Relaxed).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+}
+
+/// Stream one model over the data plane: `Begin` (layout + routing +
+/// metadata) → element-ordered `Chunk`s → `End` (running FNV-1a digest).
+///
+/// Tensors are encoded one at a time (f32, little-endian) and sliced
+/// into `chunk_bytes` chunks (clamped to [`MIN_CHUNK_BYTES`]), so the
+/// sender never holds a whole-model wire buffer. Each step is a
+/// request/response RPC on `conn`, which keeps the data plane working
+/// over every transport (tcp, secure, inproc) with strict send/recv
+/// pairing.
+#[allow(clippy::too_many_arguments)]
+pub fn stream_model(
+    conn: &mut dyn ClientConn,
+    purpose: StreamPurpose,
+    task_id: u64,
+    round: u64,
+    learner_id: &str,
+    model: &TensorModel,
+    meta: &TaskMeta,
+    chunk_bytes: usize,
+) -> RpcResult<()> {
+    let chunk_bytes = chunk_bytes.max(MIN_CHUNK_BYTES);
+    stream_model_with(
+        |msg| rpc(&mut *conn, &msg),
+        purpose,
+        task_id,
+        round,
+        learner_id,
+        model,
+        meta,
+        chunk_bytes,
+    )
+}
+
+/// The data-plane send walk itself — `Begin` → `Chunk`s → `End` with
+/// the running digest — shared by [`stream_model`] and the tests that
+/// must mirror the real sender byte for byte (including adversarial
+/// sub-minimum chunk sizes, which is why this layer does NOT clamp).
+/// `rpc_fn` delivers one request and returns the peer's reply.
+#[doc(hidden)]
+#[allow(clippy::too_many_arguments)]
+pub fn stream_model_with(
+    mut rpc_fn: impl FnMut(Message) -> RpcResult<Message>,
+    purpose: StreamPurpose,
+    task_id: u64,
+    round: u64,
+    learner_id: &str,
+    model: &TensorModel,
+    meta: &TaskMeta,
+    chunk_bytes: usize,
+) -> RpcResult<()> {
+    let chunk_bytes = chunk_bytes.max(1);
+    let stream_id = next_stream_id();
+    let begin = Message::ModelStreamBegin {
+        stream_id,
+        task_id,
+        round,
+        purpose,
+        learner_id: learner_id.to_string(),
+        layout: TensorLayoutProto::f32_layout_of(model),
+        meta: meta.clone(),
+    };
+    expect_ack(rpc_fn(begin)?)?;
+    let mut seq = 0u64;
+    let mut digest = FNV64_INIT;
+    for t in &model.tensors {
+        let bytes = t.encode_data(DType::F32, ByteOrder::Little);
+        for part in bytes.chunks(chunk_bytes) {
+            digest = fnv1a64(digest, part);
+            expect_ack(rpc_fn(Message::ModelChunk { stream_id, seq, bytes: part.to_vec() })?)?;
+            seq += 1;
+        }
+    }
+    expect_ack(rpc_fn(Message::ModelStreamEnd { stream_id, digest })?)?;
+    Ok(())
+}
+
+/// Typed stub for driver/learner → controller RPCs.
+pub struct ControllerClient {
+    conn: Box<dyn ClientConn>,
+    /// Protocol version the controller reported in the handshake.
+    pub peer_version: u32,
+}
+
+impl ControllerClient {
+    /// Dial and perform the versioned handshake.
+    pub fn connect(endpoint: &str, psk: Psk) -> RpcResult<ControllerClient> {
+        Self::from_conn(crate::net::connect(endpoint, psk).map_err(RpcError::Transport)?)
+    }
+
+    /// Wrap an existing connection, performing the handshake on it.
+    pub fn from_conn(mut conn: Box<dyn ClientConn>) -> RpcResult<ControllerClient> {
+        let peer_version = hello(conn.as_mut())?;
+        Ok(ControllerClient { conn, peer_version })
+    }
+
+    pub fn register(
+        &mut self,
+        learner_id: &str,
+        endpoint: &str,
+        num_samples: usize,
+    ) -> RpcResult<usize> {
+        register(self.conn.as_mut(), learner_id, endpoint, num_samples)
+    }
+
+    /// One-shot community-model initialization.
+    pub fn ship_model(&mut self, model: ModelProto) -> RpcResult<()> {
+        expect_ack(rpc(self.conn.as_mut(), &Message::ShipModel { model })?)?;
+        Ok(())
+    }
+
+    /// Streamed community-model initialization (large models).
+    pub fn ship_model_streamed(&mut self, model: &TensorModel, chunk_bytes: usize) -> RpcResult<()> {
+        stream_model(
+            self.conn.as_mut(),
+            StreamPurpose::ShipModel,
+            0,
+            0,
+            "",
+            model,
+            &TaskMeta::default(),
+            chunk_bytes,
+        )
+    }
+
+    pub fn mark_task_completed(
+        &mut self,
+        task_id: u64,
+        learner_id: &str,
+        model: ModelProto,
+        meta: TaskMeta,
+    ) -> RpcResult<()> {
+        mark_task_completed(self.conn.as_mut(), task_id, learner_id, model, meta)
+    }
+
+    /// Streamed completion callback (large models).
+    #[allow(clippy::too_many_arguments)]
+    pub fn mark_task_completed_streamed(
+        &mut self,
+        task_id: u64,
+        round: u64,
+        learner_id: &str,
+        model: &TensorModel,
+        meta: &TaskMeta,
+        chunk_bytes: usize,
+    ) -> RpcResult<()> {
+        stream_model(
+            self.conn.as_mut(),
+            StreamPurpose::TaskCompletion,
+            task_id,
+            round,
+            learner_id,
+            model,
+            meta,
+            chunk_bytes,
+        )
+    }
+
+    /// Fetch the current community model and its round.
+    pub fn get_model(&mut self) -> RpcResult<(ModelProto, u64)> {
+        match rpc(self.conn.as_mut(), &Message::GetModel)? {
+            Message::ModelReply { model, round } => Ok((model, round)),
+            other => Err(RpcError::Unexpected {
+                expected: "ModelReply",
+                got: other.kind().to_string(),
+            }),
+        }
+    }
+
+    pub fn heartbeat(&mut self, from: &str) -> RpcResult<(String, bool)> {
+        heartbeat(self.conn.as_mut(), from)
+    }
+
+    pub fn shutdown(&mut self) -> RpcResult<()> {
+        shutdown(self.conn.as_mut())
+    }
+
+    /// Surrender the underlying connection.
+    pub fn into_inner(self) -> Box<dyn ClientConn> {
+        self.conn
+    }
+}
+
+/// Typed stub for controller/driver → learner RPCs.
+pub struct LearnerClient {
+    conn: Box<dyn ClientConn>,
+    pub peer_version: u32,
+}
+
+impl LearnerClient {
+    pub fn connect(endpoint: &str, psk: Psk) -> RpcResult<LearnerClient> {
+        Self::from_conn(crate::net::connect(endpoint, psk).map_err(RpcError::Transport)?)
+    }
+
+    pub fn from_conn(mut conn: Box<dyn ClientConn>) -> RpcResult<LearnerClient> {
+        let peer_version = hello(conn.as_mut())?;
+        Ok(LearnerClient { conn, peer_version })
+    }
+
+    /// Fire-and-forget train dispatch; Ok(()) once the learner acked.
+    pub fn run_task(
+        &mut self,
+        task_id: u64,
+        round: u64,
+        model: ModelProto,
+        spec: TaskSpec,
+    ) -> RpcResult<()> {
+        let msg = Message::RunTask { task_id, round, model, spec };
+        expect_ack(rpc(self.conn.as_mut(), &msg)?)?;
+        Ok(())
+    }
+
+    /// Synchronous evaluation call.
+    pub fn evaluate(
+        &mut self,
+        task_id: u64,
+        round: u64,
+        model: ModelProto,
+    ) -> RpcResult<EvalResult> {
+        let msg = Message::EvaluateModel { task_id, round, model };
+        let reply = rpc(self.conn.as_mut(), &msg)?;
+        eval_reply_of(&reply).map(|(_, r)| r.clone())
+    }
+
+    pub fn heartbeat(&mut self, from: &str) -> RpcResult<(String, bool)> {
+        heartbeat(self.conn.as_mut(), from)
+    }
+
+    pub fn shutdown(&mut self) -> RpcResult<()> {
+        shutdown(self.conn.as_mut())
+    }
+
+    pub fn into_inner(self) -> Box<dyn ClientConn> {
+        self.conn
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::{serve, Service};
+    use std::sync::Arc;
+
+    /// Minimal control-plane peer: handshake + heartbeat + ack.
+    struct Peer;
+    impl Service for Peer {
+        fn handle(&self, msg: Message) -> Message {
+            match msg {
+                Message::Hello { proto_version } if proto_version == PROTO_VERSION => {
+                    Message::HelloAck { proto_version: PROTO_VERSION, component: "peer".into() }
+                }
+                Message::Hello { proto_version } => Message::error(
+                    ErrorCode::VersionMismatch,
+                    format!("we speak v{PROTO_VERSION}, peer v{proto_version}"),
+                ),
+                Message::Heartbeat { from } => {
+                    Message::HeartbeatAck { component: from, healthy: true }
+                }
+                Message::Shutdown => Message::Ack { task_id: 0, ok: true },
+                other => Message::error(ErrorCode::Unsupported, other.kind()),
+            }
+        }
+    }
+
+    #[test]
+    fn stub_handshake_and_typed_calls() {
+        let server = serve("inproc://client-stub-test", Arc::new(Peer), None).unwrap();
+        let mut c = ControllerClient::connect(&server.endpoint(), None).unwrap();
+        assert_eq!(c.peer_version, PROTO_VERSION);
+        let (component, healthy) = c.heartbeat("t").unwrap();
+        assert_eq!(component, "t");
+        assert!(healthy);
+        c.shutdown().unwrap();
+    }
+
+    #[test]
+    fn remote_errors_carry_codes() {
+        let server = serve("inproc://client-err-test", Arc::new(Peer), None).unwrap();
+        let mut conn = crate::net::connect(&server.endpoint(), None).unwrap();
+        // Peer answers GetModel with Unsupported — the stub surfaces it
+        // as a typed remote error, not a string.
+        let err = rpc(conn.as_mut(), &Message::GetModel).unwrap_err();
+        assert_eq!(err.remote_code(), Some(ErrorCode::Unsupported));
+        assert!(!err.is_transport());
+        drop(server);
+    }
+
+    #[test]
+    fn ack_interpreters_cover_the_reply_space() {
+        assert_eq!(ack_of(&Message::Ack { task_id: 9, ok: true }).unwrap(), 9);
+        let e = ack_of(&Message::Ack { task_id: 9, ok: false }).unwrap_err();
+        assert_eq!(e.remote_code(), Some(ErrorCode::Rejected));
+        let e = ack_of(&Message::error(ErrorCode::Unavailable, "down")).unwrap_err();
+        assert_eq!(e.remote_code(), Some(ErrorCode::Unavailable));
+        let e = ack_of(&Message::GetModel).unwrap_err();
+        assert!(matches!(e, RpcError::Unexpected { expected: "Ack", .. }));
+    }
+
+    #[test]
+    fn stream_ids_are_unique_under_concurrency() {
+        let mut joins = Vec::new();
+        for _ in 0..4 {
+            joins.push(std::thread::spawn(|| {
+                (0..256).map(|_| next_stream_id()).collect::<Vec<u64>>()
+            }));
+        }
+        let mut all: Vec<u64> = joins.into_iter().flat_map(|j| j.join().unwrap()).collect();
+        let n = all.len();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), n, "stream id collision");
+    }
+}

@@ -5,12 +5,194 @@
 //! `MarkTaskCompleted` (learner-initiated completion callback),
 //! `EvaluateModel` (synchronous eval call), heartbeats, and shutdown.
 //! Models travel as sequences of byte tensors (§3).
+//!
+//! The surface is split into two planes (see `net` for the transport
+//! view):
+//!
+//! * **Control plane** — small typed request/response messages, issued
+//!   through the stubs in [`client`] ([`client::ControllerClient`],
+//!   [`client::LearnerClient`]). Sessions open with a versioned
+//!   [`Message::Hello`] handshake, and failures carry a structured
+//!   [`ErrorCode`] instead of a bare string.
+//! * **Data plane** — bulk model payloads move as a chunked stream
+//!   ([`Message::ModelStreamBegin`] → [`Message::ModelChunk`]* →
+//!   [`Message::ModelStreamEnd`]), so neither side ever materializes a
+//!   whole-model wire buffer and the receiver can decode/ingest while
+//!   the network is still delivering. One-shot `ShipModel` /
+//!   `MarkTaskCompleted` remain for small models; both paths produce
+//!   bitwise-identical results (property-tested).
 
+pub mod client;
 pub mod wire;
+
+/// Protocol version spoken by this build, negotiated via
+/// [`Message::Hello`]. v1 = the pre-split single-plane protocol; v2 adds
+/// the typed control plane + streaming data plane.
+pub const PROTO_VERSION: u32 = 2;
 
 use crate::tensor::{ByteOrder, DType, Tensor, TensorModel};
 use anyhow::{bail, Result};
 use wire::{WireReader, WireWriter};
+
+/// Structured error taxonomy carried by [`Message::Error`] replies.
+///
+/// Callers branch on the code (retry? reconnect? give up?); `detail` is
+/// for humans and logs only.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// Unclassified server-side failure.
+    Internal,
+    /// Component is shut down or not serving.
+    Unavailable,
+    /// Model payload failed decoding or validation.
+    InvalidModel,
+    /// Message kind not handled by this component.
+    Unsupported,
+    /// Request was understood but refused (e.g. negative ack).
+    Rejected,
+    /// Requested entity does not exist (e.g. no community model yet).
+    NotFound,
+    /// Data-plane stream protocol violation (bad seq, size, digest).
+    StreamProtocol,
+    /// Peer speaks an incompatible protocol version.
+    VersionMismatch,
+}
+
+impl ErrorCode {
+    pub fn code(self) -> u8 {
+        match self {
+            ErrorCode::Internal => 0,
+            ErrorCode::Unavailable => 1,
+            ErrorCode::InvalidModel => 2,
+            ErrorCode::Unsupported => 3,
+            ErrorCode::Rejected => 4,
+            ErrorCode::NotFound => 5,
+            ErrorCode::StreamProtocol => 6,
+            ErrorCode::VersionMismatch => 7,
+        }
+    }
+
+    pub fn from_code(c: u8) -> Result<ErrorCode> {
+        Ok(match c {
+            0 => ErrorCode::Internal,
+            1 => ErrorCode::Unavailable,
+            2 => ErrorCode::InvalidModel,
+            3 => ErrorCode::Unsupported,
+            4 => ErrorCode::Rejected,
+            5 => ErrorCode::NotFound,
+            6 => ErrorCode::StreamProtocol,
+            7 => ErrorCode::VersionMismatch,
+            _ => bail!("unknown error code {c}"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ErrorCode::Internal => "internal",
+            ErrorCode::Unavailable => "unavailable",
+            ErrorCode::InvalidModel => "invalid_model",
+            ErrorCode::Unsupported => "unsupported",
+            ErrorCode::Rejected => "rejected",
+            ErrorCode::NotFound => "not_found",
+            ErrorCode::StreamProtocol => "stream_protocol",
+            ErrorCode::VersionMismatch => "version_mismatch",
+        }
+    }
+}
+
+impl std::fmt::Display for ErrorCode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// What a model stream delivers once complete.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StreamPurpose {
+    /// Driver → controller community-model initialization (`ShipModel`).
+    ShipModel,
+    /// Learner → controller training completion (`MarkTaskCompleted`).
+    TaskCompletion,
+}
+
+impl StreamPurpose {
+    pub fn code(self) -> u8 {
+        match self {
+            StreamPurpose::ShipModel => 0,
+            StreamPurpose::TaskCompletion => 1,
+        }
+    }
+
+    pub fn from_code(c: u8) -> Result<StreamPurpose> {
+        Ok(match c {
+            0 => StreamPurpose::ShipModel,
+            1 => StreamPurpose::TaskCompletion,
+            _ => bail!("unknown stream purpose {c}"),
+        })
+    }
+}
+
+/// Per-tensor structure metadata announced by `ModelStreamBegin`: the
+/// receiver pre-sizes its decode buffers from this, before any payload
+/// byte arrives.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorLayoutProto {
+    pub name: String,
+    pub dtype: DType,
+    pub byte_order: ByteOrder,
+    pub shape: Vec<usize>,
+}
+
+impl TensorLayoutProto {
+    /// The stream layout `stream_model` announces for `model`: one
+    /// entry per tensor, f32 little-endian payload (the data plane's
+    /// only sender encoding today). Single source of truth shared by
+    /// the client stub and the tests that mirror it.
+    pub fn f32_layout_of(model: &TensorModel) -> Vec<TensorLayoutProto> {
+        model
+            .tensors
+            .iter()
+            .map(|t| TensorLayoutProto {
+                name: t.name.clone(),
+                dtype: DType::F32,
+                byte_order: ByteOrder::Little,
+                shape: t.shape.clone(),
+            })
+            .collect()
+    }
+
+    /// Element count, guarding against shape-product overflow from a
+    /// hostile peer.
+    pub fn elem_count_checked(&self) -> Result<usize> {
+        self.shape
+            .iter()
+            .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+            .ok_or_else(|| anyhow::anyhow!("tensor '{}' shape overflows usize", self.name))
+    }
+
+    /// Encoded payload bytes this tensor contributes to the stream.
+    pub fn byte_len_checked(&self) -> Result<usize> {
+        self.elem_count_checked()?
+            .checked_mul(self.dtype.size_bytes())
+            .ok_or_else(|| anyhow::anyhow!("tensor '{}' byte size overflows usize", self.name))
+    }
+
+    fn write(&self, w: &mut WireWriter) {
+        w.put_str(&self.name);
+        w.put_u8(self.dtype.code());
+        w.put_u8(self.byte_order.code());
+        w.put_usize_list(&self.shape);
+    }
+
+    fn read(r: &mut WireReader) -> Result<TensorLayoutProto> {
+        Ok(TensorLayoutProto {
+            name: r.get_str()?,
+            dtype: DType::from_code(r.get_u8()?)?,
+            byte_order: ByteOrder::from_code(r.get_u8()?)?,
+            shape: r.get_usize_list()?,
+        })
+    }
+}
 
 /// Wire form of one tensor: structure metadata + raw bytes (paper §3).
 #[derive(Debug, Clone, PartialEq)]
@@ -161,11 +343,43 @@ pub enum Message {
     HeartbeatAck { component: String, healthy: bool },
     /// Driver → any: orderly shutdown (learners first, then controller).
     Shutdown,
-    /// Generic error reply.
-    Error { detail: String },
+    /// Structured error reply (see [`ErrorCode`]).
+    Error { code: ErrorCode, detail: String },
     /// Driver → controller: fetch current community model.
     GetModel,
     ModelReply { model: ModelProto, round: u64 },
+    /// Control-plane session opener: announce our protocol version.
+    Hello { proto_version: u32 },
+    /// Accepting reply to `Hello` (versions matched).
+    HelloAck { proto_version: u32, component: String },
+    /// Data plane: open a model stream. Carries everything *except* the
+    /// payload — stream identity, routing fields, per-tensor layout (so
+    /// the receiver can pre-size decode buffers), and the task metadata
+    /// that `MarkTaskCompleted` would have carried inline.
+    ModelStreamBegin {
+        stream_id: u64,
+        task_id: u64,
+        round: u64,
+        purpose: StreamPurpose,
+        learner_id: String,
+        layout: Vec<TensorLayoutProto>,
+        meta: TaskMeta,
+    },
+    /// Data plane: one contiguous slice of the stream's flat payload
+    /// (tensor byte blobs concatenated in layout order). `seq` starts at
+    /// 0 and increments by 1; chunks need not align to element or tensor
+    /// boundaries.
+    ModelChunk { stream_id: u64, seq: u64, bytes: Vec<u8> },
+    /// Data plane: close a stream. `digest` is the FNV-1a 64 hash of all
+    /// payload bytes in stream order ([`wire::fnv1a64`]).
+    ModelStreamEnd { stream_id: u64, digest: u64 },
+}
+
+impl Message {
+    /// Convenience constructor for structured error replies.
+    pub fn error(code: ErrorCode, detail: impl Into<String>) -> Message {
+        Message::Error { code, detail: detail.into() }
+    }
 }
 
 // Message discriminants on the wire.
@@ -183,6 +397,29 @@ const T_SHUTDOWN: u8 = 11;
 const T_ERROR: u8 = 12;
 const T_GET_MODEL: u8 = 13;
 const T_MODEL_REPLY: u8 = 14;
+const T_HELLO: u8 = 15;
+const T_HELLO_ACK: u8 = 16;
+const T_STREAM_BEGIN: u8 = 17;
+const T_CHUNK: u8 = 18;
+const T_STREAM_END: u8 = 19;
+
+fn write_meta(w: &mut WireWriter, meta: &TaskMeta) {
+    w.put_varint(meta.train_time_per_batch_us);
+    w.put_varint(meta.completed_steps as u64);
+    w.put_varint(meta.completed_epochs as u64);
+    w.put_varint(meta.num_samples as u64);
+    w.put_f64(meta.train_loss);
+}
+
+fn read_meta(r: &mut WireReader) -> Result<TaskMeta> {
+    Ok(TaskMeta {
+        train_time_per_batch_us: r.get_varint()?,
+        completed_steps: r.get_varint()? as usize,
+        completed_epochs: r.get_varint()? as usize,
+        num_samples: r.get_varint()? as usize,
+        train_loss: r.get_f64()?,
+    })
+}
 
 impl Message {
     /// Serialize to wire bytes (discriminant + positional fields).
@@ -225,11 +462,7 @@ impl Message {
                 w.put_varint(*task_id);
                 w.put_str(learner_id);
                 model.write(&mut w);
-                w.put_varint(meta.train_time_per_batch_us);
-                w.put_varint(meta.completed_steps as u64);
-                w.put_varint(meta.completed_epochs as u64);
-                w.put_varint(meta.num_samples as u64);
-                w.put_f64(meta.train_loss);
+                write_meta(&mut w, meta);
             }
             Message::EvaluateModel { task_id, round, model } => {
                 w.put_u8(T_EVALUATE);
@@ -255,8 +488,9 @@ impl Message {
                 w.put_bool(*healthy);
             }
             Message::Shutdown => w.put_u8(T_SHUTDOWN),
-            Message::Error { detail } => {
+            Message::Error { code, detail } => {
                 w.put_u8(T_ERROR);
+                w.put_u8(code.code());
                 w.put_str(detail);
             }
             Message::GetModel => w.put_u8(T_GET_MODEL),
@@ -264,6 +498,47 @@ impl Message {
                 w.put_u8(T_MODEL_REPLY);
                 model.write(&mut w);
                 w.put_varint(*round);
+            }
+            Message::Hello { proto_version } => {
+                w.put_u8(T_HELLO);
+                w.put_varint(*proto_version as u64);
+            }
+            Message::HelloAck { proto_version, component } => {
+                w.put_u8(T_HELLO_ACK);
+                w.put_varint(*proto_version as u64);
+                w.put_str(component);
+            }
+            Message::ModelStreamBegin {
+                stream_id,
+                task_id,
+                round,
+                purpose,
+                learner_id,
+                layout,
+                meta,
+            } => {
+                w.put_u8(T_STREAM_BEGIN);
+                w.put_varint(*stream_id);
+                w.put_varint(*task_id);
+                w.put_varint(*round);
+                w.put_u8(purpose.code());
+                w.put_str(learner_id);
+                w.put_varint(layout.len() as u64);
+                for t in layout {
+                    t.write(&mut w);
+                }
+                write_meta(&mut w, meta);
+            }
+            Message::ModelChunk { stream_id, seq, bytes } => {
+                w.put_u8(T_CHUNK);
+                w.put_varint(*stream_id);
+                w.put_varint(*seq);
+                w.put_bytes(bytes);
+            }
+            Message::ModelStreamEnd { stream_id, digest } => {
+                w.put_u8(T_STREAM_END);
+                w.put_varint(*stream_id);
+                w.put_varint(*digest);
             }
         }
         w.into_bytes()
@@ -301,13 +576,7 @@ impl Message {
                 task_id: r.get_varint()?,
                 learner_id: r.get_str()?,
                 model: ModelProto::read(&mut r)?,
-                meta: TaskMeta {
-                    train_time_per_batch_us: r.get_varint()?,
-                    completed_steps: r.get_varint()? as usize,
-                    completed_epochs: r.get_varint()? as usize,
-                    num_samples: r.get_varint()? as usize,
-                    train_loss: r.get_f64()?,
-                },
+                meta: read_meta(&mut r)?,
             },
             T_EVALUATE => Message::EvaluateModel {
                 task_id: r.get_varint()?,
@@ -329,12 +598,53 @@ impl Message {
                 healthy: r.get_bool()?,
             },
             T_SHUTDOWN => Message::Shutdown,
-            T_ERROR => Message::Error { detail: r.get_str()? },
+            T_ERROR => Message::Error {
+                code: ErrorCode::from_code(r.get_u8()?)?,
+                detail: r.get_str()?,
+            },
             T_GET_MODEL => Message::GetModel,
             T_MODEL_REPLY => {
                 let model = ModelProto::read(&mut r)?;
                 Message::ModelReply { model, round: r.get_varint()? }
             }
+            T_HELLO => Message::Hello { proto_version: r.get_varint()? as u32 },
+            T_HELLO_ACK => Message::HelloAck {
+                proto_version: r.get_varint()? as u32,
+                component: r.get_str()?,
+            },
+            T_STREAM_BEGIN => {
+                let stream_id = r.get_varint()?;
+                let task_id = r.get_varint()?;
+                let round = r.get_varint()?;
+                let purpose = StreamPurpose::from_code(r.get_u8()?)?;
+                let learner_id = r.get_str()?;
+                let n = r.get_varint()? as usize;
+                if n > 1_000_000 {
+                    bail!("implausible stream layout tensor count {n}");
+                }
+                let layout = (0..n)
+                    .map(|_| TensorLayoutProto::read(&mut r))
+                    .collect::<Result<Vec<_>>>()?;
+                let meta = read_meta(&mut r)?;
+                Message::ModelStreamBegin {
+                    stream_id,
+                    task_id,
+                    round,
+                    purpose,
+                    learner_id,
+                    layout,
+                    meta,
+                }
+            }
+            T_CHUNK => Message::ModelChunk {
+                stream_id: r.get_varint()?,
+                seq: r.get_varint()?,
+                bytes: r.get_bytes()?.to_vec(),
+            },
+            T_STREAM_END => Message::ModelStreamEnd {
+                stream_id: r.get_varint()?,
+                digest: r.get_varint()?,
+            },
             t => bail!("unknown message tag {t}"),
         };
         if !r.is_done() {
@@ -354,6 +664,15 @@ impl Message {
             | Message::ModelReply { model, .. } => model_size(model) + 32,
             Message::RunTask { model, .. } => model_size(model) + 64,
             Message::MarkTaskCompleted { model, .. } => model_size(model) + 96,
+            Message::ModelChunk { bytes, .. } => bytes.len() + 48,
+            Message::ModelStreamBegin { layout, learner_id, .. } => {
+                layout
+                    .iter()
+                    .map(|t| t.name.len() + 8 * t.shape.len() + 16)
+                    .sum::<usize>()
+                    + learner_id.len()
+                    + 128
+            }
             _ => 128,
         }
     }
@@ -375,6 +694,11 @@ impl Message {
             Message::Error { .. } => "Error",
             Message::GetModel => "GetModel",
             Message::ModelReply { .. } => "ModelReply",
+            Message::Hello { .. } => "Hello",
+            Message::HelloAck { .. } => "HelloAck",
+            Message::ModelStreamBegin { .. } => "ModelStreamBegin",
+            Message::ModelChunk { .. } => "ModelChunk",
+            Message::ModelStreamEnd { .. } => "ModelStreamEnd",
         }
     }
 }
@@ -457,8 +781,31 @@ mod tests {
             Message::Heartbeat { from: "driver".into() },
             Message::HeartbeatAck { component: "controller".into(), healthy: true },
             Message::Shutdown,
-            Message::Error { detail: "nope".into() },
+            Message::Error { code: ErrorCode::Rejected, detail: "nope".into() },
             Message::GetModel,
+            Message::Hello { proto_version: PROTO_VERSION },
+            Message::HelloAck { proto_version: PROTO_VERSION, component: "controller".into() },
+            Message::ModelStreamBegin {
+                stream_id: 0xDEAD_BEEF,
+                task_id: 7,
+                round: 2,
+                purpose: StreamPurpose::TaskCompletion,
+                learner_id: "l1".into(),
+                layout: model
+                    .tensors
+                    .iter()
+                    .map(|t| TensorLayoutProto {
+                        name: t.name.clone(),
+                        dtype: t.dtype,
+                        byte_order: t.byte_order,
+                        shape: t.shape.clone(),
+                    })
+                    .collect(),
+                meta: TaskMeta { num_samples: 100, train_loss: 0.25, ..Default::default() },
+            },
+            Message::ModelChunk { stream_id: 0xDEAD_BEEF, seq: 3, bytes: vec![1, 2, 3, 4, 5] },
+            Message::ModelChunk { stream_id: 1, seq: 0, bytes: Vec::new() },
+            Message::ModelStreamEnd { stream_id: 0xDEAD_BEEF, digest: u64::MAX },
             Message::ModelReply { model, round: 5 },
         ];
         for m in msgs {
@@ -466,6 +813,44 @@ mod tests {
             let back = Message::decode(&bytes).unwrap();
             assert_eq!(back, m, "roundtrip failed for {}", m.kind());
         }
+    }
+
+    #[test]
+    fn every_error_code_roundtrips() {
+        for code in [
+            ErrorCode::Internal,
+            ErrorCode::Unavailable,
+            ErrorCode::InvalidModel,
+            ErrorCode::Unsupported,
+            ErrorCode::Rejected,
+            ErrorCode::NotFound,
+            ErrorCode::StreamProtocol,
+            ErrorCode::VersionMismatch,
+        ] {
+            assert_eq!(ErrorCode::from_code(code.code()).unwrap(), code);
+            let m = Message::error(code, "d");
+            assert_eq!(Message::decode(&m.encode()).unwrap(), m);
+        }
+        assert!(ErrorCode::from_code(200).is_err());
+    }
+
+    #[test]
+    fn stream_layout_overflow_guards() {
+        let t = TensorLayoutProto {
+            name: "huge".into(),
+            dtype: DType::F32,
+            byte_order: ByteOrder::Little,
+            shape: vec![usize::MAX, 2],
+        };
+        assert!(t.elem_count_checked().is_err());
+        let t = TensorLayoutProto {
+            name: "edge".into(),
+            dtype: DType::F64,
+            byte_order: ByteOrder::Little,
+            shape: vec![usize::MAX / 4],
+        };
+        assert!(t.elem_count_checked().is_ok());
+        assert!(t.byte_len_checked().is_err());
     }
 
     #[test]

@@ -7,6 +7,26 @@
 
 use anyhow::{bail, Result};
 
+/// FNV-1a 64-bit offset basis — the initial state for [`fnv1a64`].
+pub const FNV64_INIT: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// Incremental FNV-1a 64-bit hash: fold `bytes` into `state`.
+///
+/// This is the data-plane stream digest: cheap enough to run at wire
+/// speed on every `ModelChunk`, stateful so the sender never needs the
+/// whole payload in memory, and byte-order-independent of the tensor
+/// contents (it hashes the encoded wire bytes, not the decoded floats).
+/// It detects corruption/reordering, not adversaries — the secure
+/// channel's HMAC covers integrity against tampering.
+pub fn fnv1a64(state: u64, bytes: &[u8]) -> u64 {
+    let mut h = state;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
 /// Append-only wire writer.
 #[derive(Default)]
 pub struct WireWriter {
@@ -245,6 +265,21 @@ mod tests {
         let bytes = w.into_bytes();
         let mut r = WireReader::new(&bytes);
         assert!(r.get_usize_list().is_err());
+    }
+
+    #[test]
+    fn fnv1a64_matches_reference_vectors_and_chunks_freely() {
+        // Reference FNV-1a 64 vectors.
+        assert_eq!(fnv1a64(FNV64_INIT, b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a64(FNV64_INIT, b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a64(FNV64_INIT, b"foobar"), 0x85944171f73967e8);
+        // Incremental folding is split-point independent.
+        let data = b"the quick brown fox";
+        let whole = fnv1a64(FNV64_INIT, data);
+        for split in 0..data.len() {
+            let part = fnv1a64(fnv1a64(FNV64_INIT, &data[..split]), &data[split..]);
+            assert_eq!(part, whole, "split at {split}");
+        }
     }
 
     #[test]

@@ -219,6 +219,53 @@ impl Tensor {
     }
 }
 
+/// Decode `bytes` (encoded per `dtype`/`order`) into `dst` f32 slots.
+/// `bytes.len()` must equal `dst.len() * dtype.size_bytes()`.
+///
+/// This is the span-granular core of [`Tensor::decode_data`], exposed so
+/// the streaming data plane can decode arriving `ModelChunk` payloads
+/// directly into a partially-filled tensor buffer — no whole-model wire
+/// buffer ever exists on the receiver. Element values are bit-identical
+/// to a [`Tensor::decode_data`] pass over the same bytes.
+pub fn decode_elems_into(dtype: DType, order: ByteOrder, bytes: &[u8], dst: &mut [f32]) {
+    assert_eq!(
+        bytes.len(),
+        dst.len() * dtype.size_bytes(),
+        "decode span byte/element mismatch"
+    );
+    match (dtype, order) {
+        (DType::F32, ByteOrder::Little) => {
+            for (c, d) in bytes.chunks_exact(4).zip(dst.iter_mut()) {
+                *d = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+            }
+        }
+        (DType::F32, ByteOrder::Big) => {
+            for (c, d) in bytes.chunks_exact(4).zip(dst.iter_mut()) {
+                *d = f32::from_be_bytes([c[0], c[1], c[2], c[3]]);
+            }
+        }
+        (DType::F64, ByteOrder::Little) => {
+            for (c, d) in bytes.chunks_exact(8).zip(dst.iter_mut()) {
+                *d = f64::from_le_bytes(c.try_into().unwrap()) as f32;
+            }
+        }
+        (DType::F64, ByteOrder::Big) => {
+            for (c, d) in bytes.chunks_exact(8).zip(dst.iter_mut()) {
+                *d = f64::from_be_bytes(c.try_into().unwrap()) as f32;
+            }
+        }
+        (DType::Bf16, o) => {
+            for (c, d) in bytes.chunks_exact(2).zip(dst.iter_mut()) {
+                let bits = match o {
+                    ByteOrder::Little => u16::from_le_bytes([c[0], c[1]]),
+                    ByteOrder::Big => u16::from_be_bytes([c[0], c[1]]),
+                };
+                *d = bf16_bits_to_f32(bits);
+            }
+        }
+    }
+}
+
 /// Spans of a global element range across a model's tensors.
 ///
 /// Given the prefix-sum `offsets` from [`TensorModel::tensor_offsets`]
@@ -513,6 +560,33 @@ mod tests {
             let bytes = t.encode_data(DType::F32, order);
             let back = Tensor::decode_data("t", shape, DType::F32, order, &bytes).unwrap();
             assert_eq!(back.data, t.data);
+        });
+    }
+
+    #[test]
+    fn prop_decode_elems_into_matches_decode_data_bitwise() {
+        prop_check("decode_elems_into == decode_data", 60, |g| {
+            let shape = g.shape(2, 256);
+            let n: usize = shape.iter().product();
+            let data: Vec<f32> = (0..n).map(|_| g.rng().next_gaussian() as f32).collect();
+            let t = Tensor::new("t", shape.clone(), data);
+            let dtype = match g.usize_in(0..3) {
+                0 => DType::F32,
+                1 => DType::F64,
+                _ => DType::Bf16,
+            };
+            let order = if g.bool() { ByteOrder::Little } else { ByteOrder::Big };
+            let bytes = t.encode_data(dtype, order);
+            let whole = Tensor::decode_data("t", shape, dtype, order, &bytes).unwrap();
+            // Decode the same bytes span-wise at an arbitrary element split.
+            let mut out = vec![0.0f32; n];
+            let esz = dtype.size_bytes();
+            let split = g.usize_in(0..n + 1);
+            decode_elems_into(dtype, order, &bytes[..split * esz], &mut out[..split]);
+            decode_elems_into(dtype, order, &bytes[split * esz..], &mut out[split..]);
+            for (a, b) in whole.data.iter().zip(&out) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
         });
     }
 

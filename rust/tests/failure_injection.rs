@@ -6,9 +6,9 @@
 use metisfl::config::{FederationEnv, ModelSpec};
 use metisfl::controller::{scheduling, Controller};
 use metisfl::driver::run_with_trainer;
-use metisfl::learner::{Dataset, SyntheticTrainer, Trainer};
+use metisfl::learner::{Dataset, Learner, LearnerServicer, SyntheticTrainer, Trainer};
 use metisfl::net::{serve, Service};
-use metisfl::proto::{EvalResult, Message, TaskMeta, TaskSpec};
+use metisfl::proto::{ErrorCode, EvalResult, Message, TaskMeta, TaskSpec};
 use metisfl::tensor::TensorModel;
 use metisfl::util::Rng;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -196,7 +196,7 @@ impl Service for Slammer {
         self.0.fetch_add(1, Ordering::SeqCst);
         // Reply with an unparseable error body? The transport writes a
         // valid frame, so simulate a server bug via Error reply instead.
-        Message::Error { detail: "server fault injected".into() }
+        Message::error(ErrorCode::Internal, "server fault injected")
     }
 }
 
@@ -205,7 +205,90 @@ fn rpc_surfaces_server_faults_as_errors() {
     let server = serve("tcp://127.0.0.1:0", Arc::new(Slammer(AtomicUsize::new(0))), None).unwrap();
     let mut c = metisfl::net::connect(&server.endpoint(), None).unwrap();
     match c.rpc(&Message::GetModel).unwrap() {
-        Message::Error { detail } => assert!(detail.contains("injected")),
+        Message::Error { code, detail } => {
+            assert_eq!(code, ErrorCode::Internal);
+            assert!(detail.contains("injected"));
+        }
         other => panic!("unexpected {other:?}"),
     }
+}
+
+#[test]
+fn learner_connection_broken_mid_recv_is_reestablished_on_next_dispatch() {
+    // The flaky learner's first accepted connection swallows the request
+    // and slams the socket shut, leaving the controller blocked in
+    // `recv()` until EOF. `LearnerHandle::rpc_inner` must surface the
+    // error, drop the cached connection, and re-dial on the *next*
+    // dispatch — after which the round completes with every learner.
+    use metisfl::net::frame::{read_frame, write_frame};
+
+    let mut e = env("fail-reconnect", 2, 2_000);
+    e.transport = metisfl::config::TransportKind::Tcp { base_port: 0 };
+    let ctrl = Controller::new(e, None).unwrap();
+    let ctrl_server =
+        serve("tcp://127.0.0.1:0", Arc::clone(&ctrl) as Arc<dyn Service>, None).unwrap();
+    let ctrl_ep = ctrl_server.endpoint();
+
+    // Healthy learner on the stock TCP server.
+    let healthy = Learner::new(
+        "healthy",
+        &ctrl_ep,
+        None,
+        Arc::new(SyntheticTrainer::new(0, 0.01)),
+        Dataset::synthetic_housing(4, 20, 20, 1),
+    );
+    let healthy_server = serve(
+        "tcp://127.0.0.1:0",
+        Arc::new(LearnerServicer(Arc::clone(&healthy))) as Arc<dyn Service>,
+        None,
+    )
+    .unwrap();
+    healthy.register(&healthy_server.endpoint()).unwrap();
+
+    // Flaky learner behind a hand-rolled accept loop.
+    let flaky = Learner::new(
+        "flaky",
+        &ctrl_ep,
+        None,
+        Arc::new(SyntheticTrainer::new(0, 0.01)),
+        Dataset::synthetic_housing(4, 20, 20, 2),
+    );
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let flaky_ep = format!("tcp://{}", listener.local_addr().unwrap());
+    let servicer = LearnerServicer(Arc::clone(&flaky));
+    std::thread::spawn(move || {
+        let mut first = true;
+        for stream in listener.incoming() {
+            let Ok(mut stream) = stream else { break };
+            if first {
+                first = false;
+                // Consume the request, then close without replying.
+                let _ = read_frame(&mut stream);
+                drop(stream);
+                continue;
+            }
+            while let Ok(Some(raw)) = read_frame(&mut stream) {
+                let reply = match Message::decode(&raw) {
+                    Ok(msg) => servicer.handle(msg),
+                    Err(e) => Message::error(ErrorCode::Internal, format!("{e:#}")),
+                };
+                if write_frame(&mut stream, &reply.encode()).is_err() {
+                    break;
+                }
+            }
+        }
+    });
+    flaky.register(&flaky_ep).unwrap();
+    ctrl.wait_for_learners(2, std::time::Duration::from_secs(10)).unwrap();
+
+    let layout = ModelSpec::mlp(4, 2, 8).tensor_layout();
+    ctrl.ship_model(TensorModel::random_init(&layout, &mut Rng::new(5)));
+
+    // Round 1: the flaky dispatch dies mid-recv; survivors carry it.
+    let r1 = scheduling::run_round(&ctrl, 1, &mut Rng::new(6)).unwrap();
+    assert_eq!(r1.completed, 1, "flaky learner should have missed round 1");
+    // Round 2: the handle re-dials and the full round completes.
+    let r2 = scheduling::run_round(&ctrl, 2, &mut Rng::new(7)).unwrap();
+    assert_eq!(r2.completed, 2, "connection was not re-established");
+    assert!(r2.community_eval_loss.unwrap().is_finite());
 }

@@ -10,7 +10,10 @@ use metisfl::controller::aggregation::{
 use metisfl::controller::selector::Selector;
 use metisfl::controller::store::{InMemoryStore, ModelStore, StoredModel};
 use metisfl::crypto::PairwiseMasker;
-use metisfl::proto::{Message, ModelProto, TaskMeta, TaskSpec};
+use metisfl::proto::client;
+use metisfl::proto::{
+    Message, ModelProto, StreamPurpose, TaskMeta, TaskSpec, TensorLayoutProto,
+};
 use metisfl::tensor::{ByteOrder, DType, TensorModel};
 use metisfl::util::prop::{prop_check, Gen};
 use metisfl::util::{Rng, ThreadPool};
@@ -187,6 +190,114 @@ fn prop_message_decode_never_panics_on_corruption() {
             _ => bytes.extend(g.bytes(1..16)),
         }
         let _ = Message::decode(&bytes); // must not panic
+    });
+}
+
+#[test]
+fn prop_streaming_trio_roundtrips_any_layout() {
+    prop_check("stream messages roundtrip", 50, |g| {
+        let n_tensors = g.usize_in(1..6);
+        let layout: Vec<TensorLayoutProto> = (0..n_tensors)
+            .map(|i| TensorLayoutProto {
+                name: format!("t{i}"),
+                dtype: match g.usize_in(0..3) {
+                    0 => DType::F32,
+                    1 => DType::F64,
+                    _ => DType::Bf16,
+                },
+                byte_order: if g.bool() { ByteOrder::Little } else { ByteOrder::Big },
+                shape: g.shape(3, 64),
+            })
+            .collect();
+        let begin = Message::ModelStreamBegin {
+            stream_id: g.rng().next_u64(),
+            task_id: g.rng().next_u64(),
+            round: g.rng().next_u64(),
+            purpose: if g.bool() {
+                StreamPurpose::ShipModel
+            } else {
+                StreamPurpose::TaskCompletion
+            },
+            learner_id: format!("learner-{}", g.usize_in(0..100)),
+            layout,
+            meta: TaskMeta {
+                train_time_per_batch_us: g.rng().next_u64() % 10_000,
+                completed_steps: g.usize_in(0..500),
+                completed_epochs: g.usize_in(0..10),
+                num_samples: g.usize_in(0..10_000),
+                train_loss: g.f64_in(-10.0, 10.0),
+            },
+        };
+        let chunk = Message::ModelChunk {
+            stream_id: g.rng().next_u64(),
+            seq: g.rng().next_u64(),
+            bytes: g.bytes(0..512),
+        };
+        let end = Message::ModelStreamEnd {
+            stream_id: g.rng().next_u64(),
+            digest: g.rng().next_u64(),
+        };
+        for m in [begin, chunk, end] {
+            let back = Message::decode(&m.encode()).unwrap();
+            assert_eq!(back, m, "roundtrip failed for {}", m.kind());
+        }
+    });
+}
+
+/// Same update delivered one-shot vs streamed (at an adversarial chunk
+/// size) must leave two identical controllers bitwise identical. Uses
+/// the async protocol so ingest alone advances the community model.
+#[test]
+fn prop_streamed_ingest_equals_one_shot_bitwise() {
+    use metisfl::config::{FederationEnv, Protocol};
+    use metisfl::controller::Controller;
+    use metisfl::net::Service;
+
+    prop_check("streamed == one-shot ingest", 15, |g| {
+        let spec = rand_spec(g);
+        let mk_ctrl = |name: &str| {
+            let env = FederationEnv::builder(name)
+                .learners(2)
+                .model(spec.clone())
+                .protocol(Protocol::Asynchronous { staleness_alpha: 1.0 })
+                .build();
+            Controller::new(env, None).unwrap()
+        };
+        let one_shot = mk_ctrl("prop-oneshot");
+        let streamed = mk_ctrl("prop-streamed");
+        let base = rand_model(g, &spec);
+        one_shot.ship_model(base.clone());
+        streamed.ship_model(base);
+        let update = rand_model(g, &spec);
+        let meta = TaskMeta { num_samples: g.usize_in(1..500), ..Default::default() };
+
+        let reply = one_shot.handle(Message::MarkTaskCompleted {
+            task_id: 1,
+            learner_id: "a".into(),
+            model: ModelProto::from_model(&update, DType::F32, ByteOrder::Little),
+            meta: meta.clone(),
+        });
+        assert!(matches!(reply, Message::Ack { ok: true, .. }), "{reply:?}");
+
+        // Stream the identical update in 1..64-byte chunks through the
+        // real (unclamped) sender walk.
+        let chunk_size = g.usize_in(1..64);
+        client::stream_model_with(
+            |msg| Ok(streamed.handle(msg)),
+            StreamPurpose::TaskCompletion,
+            1,
+            0,
+            "a",
+            &update,
+            &meta,
+            chunk_size,
+        )
+        .unwrap();
+
+        let (a, ra) = one_shot.community().unwrap();
+        let (b, rb) = streamed.community().unwrap();
+        assert_eq!(ra, rb);
+        assert_eq!(*a, *b, "streamed ingest diverged (chunk {chunk_size})");
     });
 }
 

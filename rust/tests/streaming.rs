@@ -1,0 +1,155 @@
+//! Data-plane end-to-end scenarios: streamed vs one-shot federations
+//! must be bitwise identical over both transports, streamed ingest must
+//! bound controller wire memory by chunk × in-flight learners (not
+//! learners × model), and the typed control-plane stubs must handshake
+//! against the real controller.
+
+use metisfl::config::{FederationEnv, ModelSpec, TransportKind};
+use metisfl::controller::Controller;
+use metisfl::driver::run_with_trainer;
+use metisfl::learner::trainer::RustSgdTrainer;
+use metisfl::learner::SyntheticTrainer;
+use metisfl::net::{serve, Service};
+use metisfl::proto::client::{ControllerClient, RpcError};
+use metisfl::proto::{ErrorCode, Message, PROTO_VERSION};
+use metisfl::tensor::TensorModel;
+use metisfl::util::Rng;
+use std::sync::Arc;
+
+fn env(name: &str, stream_chunk_bytes: usize) -> FederationEnv {
+    FederationEnv::builder(name)
+        .learners(3)
+        .rounds(3)
+        // ~3.5k params ≈ 14 KiB f32 — several MIN_CHUNK_BYTES chunks.
+        .model(ModelSpec::mlp(8, 4, 32))
+        .samples_per_learner(20)
+        .batch_size(10)
+        .heartbeat_ms(10_000)
+        .stream_chunk_bytes(stream_chunk_bytes)
+        .build()
+}
+
+/// Round-by-round losses of two runs must agree to the last bit: the
+/// deterministic trainer + sorted aggregation order make any data-plane
+/// divergence (one mis-decoded element) visible in the loss bits.
+fn assert_bitwise_equal_runs(a: &metisfl::driver::FederationReport, b: &metisfl::driver::FederationReport) {
+    assert_eq!(a.round_metrics.len(), b.round_metrics.len());
+    for (ra, rb) in a.round_metrics.iter().zip(&b.round_metrics) {
+        let (la, lb) = (
+            ra.community_eval_loss.expect("one-shot round evaluated"),
+            rb.community_eval_loss.expect("streamed round evaluated"),
+        );
+        assert_eq!(
+            la.to_bits(),
+            lb.to_bits(),
+            "round {}: one-shot {la} != streamed {lb}",
+            ra.round
+        );
+        assert_eq!(ra.completed, rb.completed, "round {}", ra.round);
+    }
+}
+
+#[test]
+fn streamed_and_one_shot_federations_agree_bitwise_inproc() {
+    let one_shot = run_with_trainer(&env("stream-eq-inproc-a", 0), |_| Arc::new(RustSgdTrainer))
+        .unwrap();
+    let streamed =
+        run_with_trainer(&env("stream-eq-inproc-b", 2048), |_| Arc::new(RustSgdTrainer)).unwrap();
+    assert_bitwise_equal_runs(&one_shot, &streamed);
+}
+
+#[test]
+fn streamed_and_one_shot_federations_agree_bitwise_tcp() {
+    let mut a = env("stream-eq-tcp-a", 0);
+    a.transport = TransportKind::Tcp { base_port: 0 };
+    let mut b = env("stream-eq-tcp-b", 2048);
+    b.transport = TransportKind::Tcp { base_port: 0 };
+    let one_shot = run_with_trainer(&a, |_| Arc::new(RustSgdTrainer)).unwrap();
+    let streamed = run_with_trainer(&b, |_| Arc::new(RustSgdTrainer)).unwrap();
+    assert_bitwise_equal_runs(&one_shot, &streamed);
+}
+
+#[test]
+fn streaming_bounds_controller_ingest_memory_by_chunks_not_models() {
+    // Same federation twice; the only difference is the upload path.
+    // One-shot: the controller holds ≥ one whole model of wire payload
+    // per in-flight completion. Streamed: the high-water mark is bounded
+    // by chunk × learners — the ISSUE's O(model + in-flight chunks)
+    // claim, asserted end to end through a real driver run.
+    let learners = 3;
+    let chunk = metisfl::proto::client::MIN_CHUNK_BYTES;
+    let model_bytes = ModelSpec::mlp(8, 4, 32).param_count() * 4;
+    assert!(
+        model_bytes > learners * chunk * 2,
+        "model too small for a meaningful bound: {model_bytes}"
+    );
+
+    let one_shot = run_with_trainer(&env("stream-mem-oneshot", 0), |_| {
+        Arc::new(SyntheticTrainer::new(0, 0.01))
+    })
+    .unwrap();
+    assert!(
+        one_shot.peak_wire_ingest_bytes >= model_bytes,
+        "one-shot ingest should hold at least one whole model: {} < {model_bytes}",
+        one_shot.peak_wire_ingest_bytes
+    );
+
+    let streamed = run_with_trainer(&env("stream-mem-streamed", chunk), |_| {
+        Arc::new(SyntheticTrainer::new(0, 0.01))
+    })
+    .unwrap();
+    assert!(streamed.peak_wire_ingest_bytes > 0, "streamed run never ingested");
+    assert!(
+        streamed.peak_wire_ingest_bytes <= learners * chunk,
+        "streamed ingest peak {} exceeds chunk ({chunk}) × learners ({learners})",
+        streamed.peak_wire_ingest_bytes
+    );
+    assert!(
+        streamed.peak_wire_ingest_bytes < model_bytes,
+        "streamed ingest peak {} not below one model ({model_bytes})",
+        streamed.peak_wire_ingest_bytes
+    );
+    // Both runs completed full rounds.
+    assert_eq!(one_shot.round_metrics.last().unwrap().completed, learners);
+    assert_eq!(streamed.round_metrics.last().unwrap().completed, learners);
+}
+
+#[test]
+fn controller_client_handshake_and_error_taxonomy_over_tcp() {
+    let e = env("stream-stub-tcp", 0);
+    let ctrl = Controller::new(e, None).unwrap();
+    let server = serve("tcp://127.0.0.1:0", Arc::clone(&ctrl) as Arc<dyn Service>, None).unwrap();
+
+    // Versioned handshake succeeds and reports the controller's version.
+    let mut client = ControllerClient::connect(&server.endpoint(), None).unwrap();
+    assert_eq!(client.peer_version, PROTO_VERSION);
+
+    // Before any model is shipped, GetModel is a typed NotFound.
+    match client.get_model() {
+        Err(RpcError::Remote { code, .. }) => assert_eq!(code, ErrorCode::NotFound),
+        other => panic!("expected NotFound, got {other:?}"),
+    }
+
+    // A mismatched version is refused with VersionMismatch.
+    let mut raw = metisfl::net::connect(&server.endpoint(), None).unwrap();
+    match raw.rpc(&Message::Hello { proto_version: 1 }).unwrap() {
+        Message::Error { code, .. } => assert_eq!(code, ErrorCode::VersionMismatch),
+        other => panic!("unexpected {other:?}"),
+    }
+
+    // Ship a model through the streamed stub path and read it back.
+    let layout = ModelSpec::mlp(8, 4, 32).tensor_layout();
+    let m = TensorModel::random_init(&layout, &mut Rng::new(11));
+    client.ship_model_streamed(&m, 2048).unwrap();
+    let (proto, round) = client.get_model().unwrap();
+    assert_eq!(round, 0);
+    assert_eq!(proto.to_model().unwrap(), m);
+    assert_eq!(ctrl.open_streams(), 0);
+
+    client.shutdown().unwrap();
+    // The controller now refuses RPCs with Unavailable.
+    match ControllerClient::connect(&server.endpoint(), None) {
+        Err(RpcError::Remote { code, .. }) => assert_eq!(code, ErrorCode::Unavailable),
+        other => panic!("expected Unavailable, got {:?}", other.err().map(|e| e.to_string())),
+    }
+}
