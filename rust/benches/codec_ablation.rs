@@ -3,13 +3,20 @@
 //! Compares encode+decode throughput and wire size for the bytes codec,
 //! pickle-style, and pickle+base64 (IBM-FL-style envelope), plus the
 //! secure-channel (TLS-sim) tax on the bytes path.
+//!
+//! Two extra reports cover the negotiated wire codecs:
+//! `codec_ablation_wire` isolates f32 / bf16 / delta encode+decode
+//! throughput and wire size, and `codec_ablation_federation` runs small
+//! end-to-end federations per data-plane configuration (one-shot,
+//! streamed f32/delta/bf16) — the dispatch-streaming ablation recipe in
+//! EXPERIMENTS.md.
 
 use metisfl::baselines::pyserde;
-use metisfl::config::ModelSpec;
-use metisfl::harness::runner::{full_scale, BenchRunner, ReportWriter};
+use metisfl::config::{FederationEnv, ModelSpec, WireCodecChoice};
+use metisfl::harness::runner::{fmt_secs, full_scale, BenchRunner, ReportWriter};
 use metisfl::net::secure::SecureSession;
 use metisfl::proto::{Message, ModelProto};
-use metisfl::tensor::{ByteOrder, DType, TensorModel};
+use metisfl::tensor::{ByteOrder, CodecId, DType, TensorModel};
 use metisfl::util::{fmt_bytes, Rng};
 
 fn main() {
@@ -119,4 +126,103 @@ fn main() {
     ]);
 
     report.emit().unwrap();
+
+    // --- negotiated wire codecs (f32 / bf16 / delta) -------------------
+    // Encode+decode through the WireCodec trait the data plane uses; the
+    // delta base is a nearby model (one training step away), the regime
+    // delta is designed for.
+    let mut wire_report = ReportWriter::new(
+        "codec_ablation_wire",
+        &["wire codec", "wire size", "zero bytes", "enc+dec MB/s"],
+    );
+    let base: TensorModel = {
+        let mut m = model.clone();
+        for t in &mut m.tensors {
+            for v in t.data.iter_mut().step_by(17) {
+                *v += 1e-3;
+            }
+        }
+        m
+    };
+    for id in CodecId::ALL {
+        let codec = id.codec();
+        let mut wire = 0usize;
+        let mut zeros = 0usize;
+        let s = runner.run(|| {
+            wire = 0;
+            zeros = 0;
+            for (i, t) in model.tensors.iter().enumerate() {
+                let b = id.needs_base().then(|| &base.tensors[i].data[..]);
+                let enc = codec.encode(&t.data, b);
+                wire += enc.len();
+                zeros += enc.iter().filter(|&&x| x == 0).count();
+                let mut dst = vec![0.0f32; t.data.len()];
+                codec.decode_into(&enc, b, &mut dst);
+                std::hint::black_box(&dst);
+            }
+        });
+        wire_report.row(vec![
+            id.name().into(),
+            fmt_bytes(wire),
+            format!("{:.0}%", 100.0 * zeros as f64 / wire as f64),
+            mbs(s.mean),
+        ]);
+    }
+    wire_report.emit().unwrap();
+
+    // --- end-to-end federation rows (dispatch-streaming ablation) ------
+    // Same small federation per data-plane configuration; wall-clock is
+    // indicative only (not CI-gated), the wire gauge is the load-bearing
+    // column.
+    let mut fed_report = ReportWriter::new(
+        "codec_ablation_federation",
+        &["data plane", "fed round mean", "peak wire ingest", "final loss"],
+    );
+    let fed_spec =
+        if full_scale() { ModelSpec::mlp(8, 40, 64) } else { ModelSpec::mlp(8, 10, 32) };
+    let rounds = if full_scale() { 4 } else { 2 };
+    let cells: &[(&str, usize, WireCodecChoice)] = &[
+        ("one-shot f32", 0, WireCodecChoice::F32),
+        ("streamed f32 (64 KiB chunks)", 64 * 1024, WireCodecChoice::F32),
+        ("streamed delta (64 KiB chunks)", 64 * 1024, WireCodecChoice::Delta),
+        ("streamed bf16 up+down (64 KiB)", 64 * 1024, WireCodecChoice::Bf16),
+    ];
+    for (label, chunk, codec) in cells {
+        let env = FederationEnv::builder(&format!("codec-fed-{}", label.replace(' ', "-")))
+            .learners(4)
+            .rounds(rounds)
+            .model(fed_spec.clone())
+            .samples_per_learner(20)
+            .batch_size(10)
+            .stream_chunk_bytes(*chunk)
+            .wire_codec(*codec)
+            .bf16_dispatch(*codec == WireCodecChoice::Bf16)
+            .build();
+        match metisfl::driver::run_simulated(&env) {
+            Ok(report) => {
+                let mean = report
+                    .round_metrics
+                    .iter()
+                    .map(|r| r.federation_round)
+                    .sum::<std::time::Duration>()
+                    / report.round_metrics.len().max(1) as u32;
+                fed_report.row(vec![
+                    (*label).into(),
+                    fmt_secs(mean),
+                    fmt_bytes(report.peak_wire_ingest_bytes),
+                    report
+                        .final_loss
+                        .map(|l| format!("{l:.4}"))
+                        .unwrap_or_else(|| "-".into()),
+                ]);
+            }
+            Err(e) => fed_report.row(vec![
+                (*label).into(),
+                format!("failed: {e:#}"),
+                "-".into(),
+                "-".into(),
+            ]),
+        }
+    }
+    fed_report.emit().unwrap();
 }

@@ -1,7 +1,49 @@
 //! Typed federation environment (the paper's YAML env + model recipe).
 
 use crate::json::Value;
+use crate::tensor::CodecId;
 use anyhow::{bail, Context, Result};
+
+/// Data-plane wire codec selection (`wire_codec` env field). The
+/// concrete per-path codecs are resolved by
+/// [`FederationEnv::dispatch_codec`] / [`FederationEnv::upload_codec`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum WireCodecChoice {
+    /// Pick the best lossless codec the deployment supports: delta when
+    /// the data plane streams (the stream establishes the shared base),
+    /// plain f32 otherwise. Never picks a lossy codec.
+    #[default]
+    Auto,
+    /// Always tensor-as-bytes f32 (the §3 baseline).
+    F32,
+    /// Half-precision bf16 on uploads (and on dispatch too when
+    /// `bf16_dispatch` is set). Lossy — bounded-error, not bitwise.
+    Bf16,
+    /// XOR-delta against the last acknowledged community model, falling
+    /// back to full f32 when no base is shared (see `delta_fallback`).
+    Delta,
+}
+
+impl WireCodecChoice {
+    pub fn name(self) -> &'static str {
+        match self {
+            WireCodecChoice::Auto => "auto",
+            WireCodecChoice::F32 => "f32",
+            WireCodecChoice::Bf16 => "bf16",
+            WireCodecChoice::Delta => "delta",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<WireCodecChoice> {
+        Ok(match s {
+            "auto" => WireCodecChoice::Auto,
+            "f32" => WireCodecChoice::F32,
+            "bf16" => WireCodecChoice::Bf16,
+            "delta" => WireCodecChoice::Delta,
+            other => bail!("unknown wire codec '{other}' (auto|f32|bf16|delta)"),
+        })
+    }
+}
 
 /// Communication/aggregation protocol (Table 1, "Communication Protocol").
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -182,9 +224,23 @@ pub struct FederationEnv {
     /// so controller-side peak *wire* ingest memory is bounded by
     /// chunk × in-flight learners instead of learners × model size.
     /// Values below the sender's 1 KiB floor
-    /// (`proto::client::MIN_CHUNK_BYTES`) are clamped up to it.
-    /// Results are bitwise identical either way.
+    /// (`proto::client::MIN_CHUNK_BYTES`) are clamped up to it (a
+    /// warning is logged once at env-load time; the effective value is
+    /// surfaced as `FederationReport::effective_stream_chunk_bytes`).
+    /// Results are bitwise identical either way. When positive, the
+    /// controller ALSO streams dispatch (train/eval fan-out) over the
+    /// same chunked data plane — the v3 symmetric data plane.
     pub stream_chunk_bytes: usize,
+    /// Data-plane wire codec (`auto | f32 | bf16 | delta`).
+    pub wire_codec: WireCodecChoice,
+    /// bf16 per-codec field: also apply bf16 to controller → learner
+    /// dispatch (lossy model broadcast — learners train on a rounded
+    /// model). Default false: bf16 compresses uploads only.
+    pub bf16_dispatch: bool,
+    /// delta per-codec field: when a peer lacks the shared base, retry
+    /// with a full f32 stream (true, default) instead of surfacing the
+    /// refusal as a dispatch/upload error (false).
+    pub delta_fallback: bool,
 }
 
 impl FederationEnv {
@@ -324,9 +380,19 @@ impl FederationEnv {
             b = b.task_timeout_ms(x);
         }
         if let Some(x) = v.get("stream_chunk_bytes").and_then(|x| x.as_usize()) {
+            warn_once_on_clamped_chunk(x);
             b = b.stream_chunk_bytes(x);
         }
-        Ok(b.build())
+        if let Some(s) = v.get("wire_codec").and_then(|x| x.as_str()) {
+            b = b.wire_codec(WireCodecChoice::parse(s)?);
+        }
+        if let Some(x) = v.get("bf16_dispatch").and_then(|x| x.as_bool()) {
+            b = b.bf16_dispatch(x);
+        }
+        if let Some(x) = v.get("delta_fallback").and_then(|x| x.as_bool()) {
+            b = b.delta_fallback(x);
+        }
+        b.try_build()
     }
 
     /// Load from a file (YAML `.yaml`/`.yml` or JSON `.json`).
@@ -355,6 +421,20 @@ impl FederationEnv {
         if self.model.hidden_layers == 0 || self.model.hidden_units == 0 {
             bail!("model must have at least one hidden layer/unit");
         }
+        // Codecs ride the chunked stream: an explicit non-default codec
+        // with streaming off would silently do nothing — refuse instead.
+        if matches!(self.wire_codec, WireCodecChoice::Bf16 | WireCodecChoice::Delta)
+            && self.stream_chunk_bytes == 0
+        {
+            bail!(
+                "wire_codec: {} requires stream_chunk_bytes > 0 (codecs ride the streamed \
+                 data plane; one-shot messages are always f32)",
+                self.wire_codec.name()
+            );
+        }
+        if self.bf16_dispatch && self.wire_codec != WireCodecChoice::Bf16 {
+            bail!("bf16_dispatch: true requires wire_codec: bf16");
+        }
         match self.protocol {
             Protocol::SemiSynchronous { lambda } if lambda <= 0.0 => {
                 bail!("semi-sync lambda must be > 0")
@@ -364,6 +444,74 @@ impl FederationEnv {
             }
             _ => Ok(()),
         }
+    }
+
+    /// Effective data-plane chunk size: 0 = one-shot; positive values
+    /// are clamped up to the sender floor
+    /// ([`crate::proto::client::MIN_CHUNK_BYTES`]). This is the value
+    /// senders actually use, surfaced in `FederationReport`.
+    pub fn effective_stream_chunk(&self) -> usize {
+        if self.stream_chunk_bytes == 0 {
+            0
+        } else {
+            self.stream_chunk_bytes.max(crate::proto::client::MIN_CHUNK_BYTES)
+        }
+    }
+
+    /// Concrete codec for learner → controller model uploads.
+    pub fn upload_codec(&self) -> CodecId {
+        match self.wire_codec {
+            WireCodecChoice::F32 => CodecId::F32,
+            WireCodecChoice::Bf16 => CodecId::Bf16,
+            WireCodecChoice::Delta => CodecId::Delta,
+            // Auto: delta needs the streamed dispatch to establish the
+            // shared base; without streaming, stay on plain f32.
+            WireCodecChoice::Auto => {
+                if self.effective_stream_chunk() > 0 {
+                    CodecId::Delta
+                } else {
+                    CodecId::F32
+                }
+            }
+        }
+    }
+
+    /// Concrete codec for controller → learner streamed dispatch (only
+    /// consulted when `stream_chunk_bytes > 0`).
+    pub fn dispatch_codec(&self) -> CodecId {
+        match self.wire_codec {
+            WireCodecChoice::F32 => CodecId::F32,
+            // Lossy dispatch is opt-in: learners would train on a
+            // rounded model.
+            WireCodecChoice::Bf16 => {
+                if self.bf16_dispatch {
+                    CodecId::Bf16
+                } else {
+                    CodecId::F32
+                }
+            }
+            WireCodecChoice::Delta | WireCodecChoice::Auto => CodecId::Delta,
+        }
+    }
+}
+
+/// Log (once per process) when a sub-floor `stream_chunk_bytes` is
+/// loaded from an env file — the value silently clamping up used to
+/// make "why is my chunk size ignored?" a debugging session.
+fn warn_once_on_clamped_chunk(configured: usize) {
+    use std::sync::Once;
+    static WARNED: Once = Once::new();
+    let floor = crate::proto::client::MIN_CHUNK_BYTES;
+    if configured > 0 && configured < floor {
+        WARNED.call_once(|| {
+            crate::util::log_warn(
+                "config",
+                &format!(
+                    "stream_chunk_bytes {configured} is below the {floor}-byte sender floor; \
+                     using {floor} (see FederationReport::effective_stream_chunk_bytes)"
+                ),
+            );
+        });
     }
 }
 
@@ -395,6 +543,9 @@ impl FederationEnvBuilder {
                 heartbeat_ms: 500,
                 task_timeout_ms: 60_000,
                 stream_chunk_bytes: 0,
+                wire_codec: WireCodecChoice::Auto,
+                bf16_dispatch: false,
+                delta_fallback: true,
             },
         }
     }
@@ -467,10 +618,30 @@ impl FederationEnvBuilder {
         self.env.stream_chunk_bytes = bytes;
         self
     }
+    pub fn wire_codec(mut self, c: WireCodecChoice) -> Self {
+        self.env.wire_codec = c;
+        self
+    }
+    pub fn bf16_dispatch(mut self, on: bool) -> Self {
+        self.env.bf16_dispatch = on;
+        self
+    }
+    pub fn delta_fallback(mut self, on: bool) -> Self {
+        self.env.delta_fallback = on;
+        self
+    }
 
     pub fn build(self) -> FederationEnv {
         debug_assert!(self.env.validate().is_ok(), "{:?}", self.env.validate());
         self.env
+    }
+
+    /// [`FederationEnvBuilder::build`] that surfaces invalid configs as
+    /// an `Err` instead of a debug panic — what the file loaders use,
+    /// so a bad env file is a typed error for the operator.
+    pub fn try_build(self) -> Result<FederationEnv> {
+        self.env.validate()?;
+        Ok(self.env)
     }
 }
 
@@ -576,8 +747,68 @@ seed: 7
     fn stream_chunk_bytes_defaults_off_and_parses() {
         let env = FederationEnv::builder("t").build();
         assert_eq!(env.stream_chunk_bytes, 0);
+        assert_eq!(env.effective_stream_chunk(), 0);
         let env = FederationEnv::from_yaml("stream_chunk_bytes: 65536\n").unwrap();
         assert_eq!(env.stream_chunk_bytes, 65536);
+        assert_eq!(env.effective_stream_chunk(), 65536);
+    }
+
+    #[test]
+    fn sub_floor_chunk_is_clamped_with_effective_value_surfaced() {
+        let floor = crate::proto::client::MIN_CHUNK_BYTES;
+        // Loading a sub-floor value parses (warning logged once) and the
+        // effective chunk is the floor — what senders actually use.
+        let env = FederationEnv::from_yaml("stream_chunk_bytes: 10\n").unwrap();
+        assert_eq!(env.stream_chunk_bytes, 10);
+        assert_eq!(env.effective_stream_chunk(), floor);
+    }
+
+    #[test]
+    fn wire_codec_parses_and_resolves() {
+        let env = FederationEnv::builder("t").build();
+        assert_eq!(env.wire_codec, WireCodecChoice::Auto);
+        assert!(env.delta_fallback);
+        assert!(!env.bf16_dispatch);
+        // Auto without streaming: everything stays f32.
+        assert_eq!(env.upload_codec(), CodecId::F32);
+        // Auto with streaming: lossless delta both ways.
+        let env = FederationEnv::from_yaml("stream_chunk_bytes: 2048\n").unwrap();
+        assert_eq!(env.upload_codec(), CodecId::Delta);
+        assert_eq!(env.dispatch_codec(), CodecId::Delta);
+        // bf16 compresses uploads; dispatch stays lossless unless opted in.
+        let env =
+            FederationEnv::from_yaml("stream_chunk_bytes: 2048\nwire_codec: bf16\n").unwrap();
+        assert_eq!(env.upload_codec(), CodecId::Bf16);
+        assert_eq!(env.dispatch_codec(), CodecId::F32);
+        let env = FederationEnv::from_yaml(
+            "stream_chunk_bytes: 2048\nwire_codec: bf16\nbf16_dispatch: true\n",
+        )
+        .unwrap();
+        assert_eq!(env.dispatch_codec(), CodecId::Bf16);
+        let env = FederationEnv::from_yaml(
+            "stream_chunk_bytes: 2048\nwire_codec: delta\ndelta_fallback: false\n",
+        )
+        .unwrap();
+        assert_eq!(env.upload_codec(), CodecId::Delta);
+        assert!(!env.delta_fallback);
+        assert!(FederationEnv::from_yaml("wire_codec: zstd\n").is_err());
+    }
+
+    #[test]
+    fn explicit_codec_without_streaming_is_a_typed_error() {
+        // A non-default codec with streaming off would silently do
+        // nothing — loaders refuse it instead.
+        for src in [
+            "wire_codec: bf16\n",
+            "wire_codec: delta\n",
+            "stream_chunk_bytes: 2048\nbf16_dispatch: true\n",
+        ] {
+            let err = format!("{:#}", FederationEnv::from_yaml(src).unwrap_err());
+            assert!(
+                err.contains("wire_codec") || err.contains("bf16_dispatch"),
+                "{src}: {err}"
+            );
+        }
     }
 
     #[test]

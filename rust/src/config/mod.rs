@@ -14,5 +14,5 @@ pub mod yaml;
 
 pub use env::{
     AggregationBackend, AggregationSpec, FederationEnv, FederationEnvBuilder, ModelSpec,
-    Protocol, SecureSpec, TrainerKind, TransportKind,
+    Protocol, SecureSpec, TrainerKind, TransportKind, WireCodecChoice,
 };

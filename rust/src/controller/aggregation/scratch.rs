@@ -139,6 +139,20 @@ impl ScratchArena {
     }
 }
 
+/// The arena doubles as the data plane's decode-buffer source: inbound
+/// model streams fill buffers the previous community model (and the
+/// store's evicted contributions) vacated, so a steady-state streamed
+/// round allocates nothing on ingest either.
+impl crate::proto::ingest::BufferPool for ScratchArena {
+    fn take(&self, len: usize) -> Vec<f32> {
+        ScratchArena::take(self, len)
+    }
+
+    fn recycle(&self, buf: Vec<f32>) {
+        ScratchArena::recycle(self, buf)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -14,32 +14,23 @@ pub mod store;
 use crate::config::{FederationEnv, Protocol, SecureSpec};
 use crate::metrics::{FedOp, OpMetrics};
 use crate::net::{ClientConn, Psk, Service};
+use crate::proto::client::{self, StreamSend};
+use crate::proto::ingest::{BufferPool, FinishedStream, StreamBegin, StreamIngest};
 use crate::proto::wire::{fnv1a64, FNV64_INIT};
 use crate::proto::{
-    ErrorCode, Message, ModelProto, StreamPurpose, TaskMeta, TensorLayoutProto, PROTO_VERSION,
+    ErrorCode, Message, ModelProto, StreamPurpose, TaskMeta, TaskSpec, TensorLayoutProto,
+    PROTO_VERSION,
 };
-use crate::tensor::{decode_elems_into, ByteOrder, DType, Tensor, TensorModel};
+use crate::tensor::{ByteOrder, CodecId, DType, TensorModel};
 use crate::util::{log_debug, log_info, Stopwatch, ThreadPool};
 use aggregation::{Backend, Contribution, ScratchArena};
 use anyhow::{bail, Context, Result};
 use selector::Selector;
 use std::collections::{HashMap, HashSet};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 use store::{ModelStore, StoredModel};
-
-/// Caps on the inbound data plane, so a buggy or hostile peer cannot
-/// grow controller memory without bound: concurrent open streams, the
-/// wire payload one stream may announce, the *aggregate* wire payload
-/// announced across all open streams (decoded f32 buffers can be up to
-/// 2× the wire size for bf16 payloads), and how long an idle stream
-/// may sit before being reclaimed (a learner that dies between `Begin`
-/// and `End` must not pin its buffers — or a registry slot — forever).
-const MAX_OPEN_STREAMS: usize = 256;
-const MAX_STREAM_BYTES: usize = 1 << 30; // 1 GiB wire payload per stream
-const MAX_TOTAL_STREAM_BYTES: usize = 4 << 30; // 4 GiB announced across streams
-const STREAM_IDLE_TIMEOUT: Duration = Duration::from_secs(300);
 
 /// A registered learner as seen by the controller.
 pub struct LearnerHandle {
@@ -126,161 +117,6 @@ struct RoundState {
     arrived: Vec<String>,
 }
 
-/// An in-flight inbound model stream: the data-plane accumulator that
-/// becomes a [`Contribution`] (or the community model) at `End`.
-///
-/// Buffers are pre-sized from the `Begin` layout and drawn from the
-/// aggregation backend's [`ScratchArena`] when it has one, so a
-/// steady-state streamed round recycles the same buffers the previous
-/// community model vacated. Chunks decode **on arrival**, directly into
-/// the partially-filled tensors — the controller never holds a
-/// whole-model wire buffer, and none of this touches the `CtrlState`
-/// mutex until the final, already-decoded hand-off.
-struct StreamTensor {
-    name: String,
-    shape: Vec<usize>,
-    dtype: DType,
-    order: ByteOrder,
-    elems: usize,
-}
-
-struct ModelStream {
-    purpose: StreamPurpose,
-    task_id: u64,
-    learner_id: String,
-    meta: TaskMeta,
-    /// Announced structure, one entry per tensor.
-    layout: Vec<StreamTensor>,
-    /// Decoded output buffers, arena-drawn when available.
-    bufs: Vec<Vec<f32>>,
-    /// Elements decoded so far, per tensor.
-    filled: Vec<usize>,
-    /// Tensor currently being filled.
-    cur_tensor: usize,
-    /// Wire payload bytes consumed so far / expected in total.
-    received: usize,
-    expected: usize,
-    next_seq: u64,
-    /// Partial-element bytes straddling a chunk boundary (< element size).
-    carry: Vec<u8>,
-    /// Running FNV-1a 64 over the payload bytes.
-    digest: u64,
-    /// Arena to return `bufs` to if the stream dies.
-    scratch: Option<Arc<ScratchArena>>,
-    /// Last `Begin`/`Chunk` arrival; idle streams past
-    /// [`STREAM_IDLE_TIMEOUT`] are garbage-collected.
-    last_activity: std::time::Instant,
-    /// Set by [`ModelStream::recycle`]: the buffers are gone. A chunk
-    /// handler that raced the close (it cloned the registry `Arc`
-    /// before removal) must fail gracefully instead of indexing the
-    /// drained `bufs`.
-    dead: bool,
-}
-
-impl ModelStream {
-    /// Fold one chunk's bytes into the partial model.
-    fn ingest(&mut self, mut bytes: &[u8]) -> Result<()> {
-        if self.received + bytes.len() > self.expected {
-            bail!(
-                "stream overrun: {} + {} > expected {}",
-                self.received,
-                bytes.len(),
-                self.expected
-            );
-        }
-        self.digest = fnv1a64(self.digest, bytes);
-        self.received += bytes.len();
-        while !bytes.is_empty() {
-            // Advance past tensors that are already full (zero-element
-            // tensors fall through immediately).
-            while self.cur_tensor < self.layout.len()
-                && self.filled[self.cur_tensor] == self.layout[self.cur_tensor].elems
-            {
-                self.cur_tensor += 1;
-            }
-            let t = self.cur_tensor;
-            if t >= self.layout.len() {
-                bail!("stream bytes beyond announced layout");
-            }
-            let (dtype, order, elems) =
-                (self.layout[t].dtype, self.layout[t].order, self.layout[t].elems);
-            let esz = dtype.size_bytes();
-            // Complete a partial element left over from the last chunk.
-            if !self.carry.is_empty() {
-                let need = esz - self.carry.len();
-                let take = need.min(bytes.len());
-                self.carry.extend_from_slice(&bytes[..take]);
-                bytes = &bytes[take..];
-                if self.carry.len() == esz {
-                    let idx = self.filled[t];
-                    let carry = std::mem::take(&mut self.carry);
-                    decode_elems_into(dtype, order, &carry, &mut self.bufs[t][idx..idx + 1]);
-                    self.filled[t] += 1;
-                }
-                continue;
-            }
-            // Bulk-decode whole elements into this tensor's buffer.
-            let max_bytes = (elems - self.filled[t]) * esz;
-            let take = bytes.len().min(max_bytes);
-            let whole = (take / esz) * esz;
-            if whole > 0 {
-                let lo = self.filled[t];
-                let n = whole / esz;
-                decode_elems_into(dtype, order, &bytes[..whole], &mut self.bufs[t][lo..lo + n]);
-                self.filled[t] += n;
-            }
-            self.carry.extend_from_slice(&bytes[whole..take]);
-            bytes = &bytes[take..];
-        }
-        Ok(())
-    }
-
-    /// Finish the stream, returning the decoded model.
-    fn finish(mut self, digest: u64) -> std::result::Result<TensorModel, (Self, anyhow::Error)> {
-        if self.received != self.expected {
-            let e = anyhow::anyhow!(
-                "stream truncated: got {} of {} payload bytes",
-                self.received,
-                self.expected
-            );
-            return Err((self, e));
-        }
-        if !self.carry.is_empty() {
-            let e = anyhow::anyhow!("stream ends mid-element ({} carry bytes)", self.carry.len());
-            return Err((self, e));
-        }
-        if digest != self.digest {
-            let e = anyhow::anyhow!(
-                "stream digest mismatch: sender {:#018x}, receiver {:#018x}",
-                digest,
-                self.digest
-            );
-            return Err((self, e));
-        }
-        let bufs = std::mem::take(&mut self.bufs);
-        let tensors = self
-            .layout
-            .iter()
-            .zip(bufs)
-            .map(|(t, data)| Tensor::new(t.name.clone(), t.shape.clone(), data))
-            .collect();
-        Ok(TensorModel::new(tensors))
-    }
-
-    /// Hand every buffer back to the arena (stream abandoned or failed)
-    /// and mark the stream dead for any handler still holding its `Arc`.
-    fn recycle(&mut self) {
-        self.dead = true;
-        if let Some(scratch) = &self.scratch {
-            for buf in self.bufs.drain(..) {
-                scratch.recycle(buf);
-            }
-        } else {
-            self.bufs.clear();
-        }
-    }
-}
-
 struct CtrlState {
     /// Community model, shared by pointer: schedulers snapshot it, the
     /// store hands back `Arc`s, and aggregation reads through them — the
@@ -314,20 +150,23 @@ pub struct Controller {
     dispatch_pool: ThreadPool,
     shutdown: AtomicBool,
     xla_slot: Mutex<Option<XlaAggFn>>,
-    /// Inbound data-plane streams, keyed by stream id. Deliberately
+    /// Inbound data-plane engine (upload streams). Deliberately
     /// *outside* the `CtrlState` mutex: chunk ingest for one learner
     /// never contends with the round barrier or another learner's
-    /// stream (per-stream locks below the registry lock).
-    streams: Mutex<HashMap<u64, Arc<Mutex<ModelStream>>>>,
-    /// Wire bytes announced by currently-open streams (admission budget
-    /// against [`MAX_TOTAL_STREAM_BYTES`]).
-    open_stream_bytes: AtomicUsize,
-    /// Wire-payload bytes currently held for model ingest (one-shot
-    /// protos being decoded + stream chunks in flight), plus the
-    /// high-water mark. This is the "second whole-model buffer" the
-    /// data plane eliminates; tests assert the streamed bound.
-    wire_in_flight: AtomicUsize,
-    wire_peak: AtomicUsize,
+    /// stream. Also owns the wire-memory gauge shared with the one-shot
+    /// decode paths.
+    ingest: StreamIngest,
+    /// Identity + pointer of the community model most recently fanned
+    /// out over a lossless streamed dispatch — the shared base the next
+    /// delta-coded dispatch encodes against. Only populated when the
+    /// env's wire codec resolves to delta, so it never pins buffers the
+    /// arena could otherwise recycle.
+    last_broadcast: Mutex<Option<(u64, Arc<TensorModel>)>>,
+    /// Codec `encode` invocations performed by streamed dispatch — the
+    /// encode-once probe: fanning one model out to N learners must cost
+    /// `tensor_count` encodes, not `N × tensor_count` (asserted in
+    /// tests/streaming.rs).
+    dispatch_encodes: AtomicU64,
 }
 
 impl Controller {
@@ -360,11 +199,16 @@ impl Controller {
             dispatch_pool: ThreadPool::new(dispatch_threads),
             shutdown: AtomicBool::new(false),
             xla_slot: Mutex::new(None),
-            streams: Mutex::new(HashMap::new()),
-            open_stream_bytes: AtomicUsize::new(0),
-            wire_in_flight: AtomicUsize::new(0),
-            wire_peak: AtomicUsize::new(0),
+            ingest: StreamIngest::default(),
+            last_broadcast: Mutex::new(None),
+            dispatch_encodes: AtomicU64::new(0),
         }))
+    }
+
+    /// The inbound data-plane engine (clock injection for deterministic
+    /// idle-GC tests; gauges for ops dashboards).
+    pub fn ingest(&self) -> &StreamIngest {
+        &self.ingest
     }
 
     /// Replace the model store (e.g. [`store::OnDiskStore`]).
@@ -531,13 +375,26 @@ impl Controller {
         s.community_round = round;
         // Keep only the freshest model per learner (paper's in-memory
         // assumption; lineage stores are opt-in via set_store + evict).
-        s.store.evict(1)?;
+        let evicted = s.store.evict(1)?;
         drop(s);
-        // Release our handles on the outgoing community model, then hand
-        // its buffers back to the arena for the next round's output.
+        // Release our handles on the models leaving circulation — the
+        // replaced community model and this round's other aggregation
+        // inputs — then hand every uniquely-owned buffer back to the
+        // arena: the replaced community model AND the store-evicted
+        // contributions (last round's uploads, just superseded). A
+        // steady-state streamed round draws its ingest buffers and its
+        // aggregation output entirely from this pool, allocating
+        // nothing (asserted in tests/streaming.rs).
+        drop(contributions);
+        drop(selected);
         drop(current);
-        if let (Some(prev), Some(scratch)) = (previous, backend.scratch()) {
-            scratch.reclaim_model(prev);
+        if let Some(scratch) = backend.scratch() {
+            if let Some(prev) = previous {
+                scratch.reclaim_model(prev);
+            }
+            for entry in evicted {
+                scratch.reclaim_model(entry.model);
+            }
         }
         if crate::util::logging::enabled(crate::util::logging::LogLevel::Debug) {
             log_debug(
@@ -647,240 +504,69 @@ impl Controller {
 
     // ---- model ingest bookkeeping ------------------------------------
 
-    fn wire_hold(&self, bytes: usize) {
-        let now = self.wire_in_flight.fetch_add(bytes, Ordering::SeqCst) + bytes;
-        self.wire_peak.fetch_max(now, Ordering::SeqCst);
-    }
-
-    fn wire_release(&self, bytes: usize) {
-        self.wire_in_flight.fetch_sub(bytes, Ordering::SeqCst);
-    }
-
     /// High-water mark of wire-payload bytes held for model ingest. With
     /// one-shot uploads this reaches `Σ in-flight models' byte size`;
     /// with the streaming data plane it is bounded by
     /// `chunk size × in-flight streams` (asserted end-to-end in
     /// `tests/streaming.rs`).
     pub fn peak_wire_ingest_bytes(&self) -> usize {
-        self.wire_peak.load(Ordering::SeqCst)
+        self.ingest.peak_wire_bytes()
     }
 
-    /// Streams currently open on the data plane.
+    /// Streams currently open on the inbound data plane.
     pub fn open_streams(&self) -> usize {
-        self.streams.lock().unwrap().len()
+        self.ingest.open_streams()
     }
 
     // ---- data plane: inbound model streams ---------------------------
     //
-    // Everything here stays off the `CtrlState` mutex; only the final
-    // `End` hand-off (already decoded) takes it, exactly like the
-    // decode-before-lock one-shot path.
+    // The stream engine itself lives in `proto::ingest` (shared with the
+    // learner's inbound side); the controller resolves what a stream
+    // *means*: which purposes it accepts, where delta bases come from,
+    // which buffer pool decode writes into, and what happens at `End`.
+    // None of this touches the `CtrlState` mutex until the final,
+    // already-decoded hand-off — exactly like the decode-before-lock
+    // one-shot path.
 
-    fn on_stream_begin(
-        &self,
-        stream_id: u64,
-        task_id: u64,
-        purpose: StreamPurpose,
-        learner_id: String,
-        layout: Vec<TensorLayoutProto>,
-        meta: TaskMeta,
-    ) -> Message {
-        if layout.is_empty() {
-            return Message::error(ErrorCode::StreamProtocol, "empty stream layout");
+    /// Resolve the shared delta base a peer announced: our community
+    /// model, if (and only if) its round matches the announced identity.
+    fn delta_base_for(&self, base_round: u64) -> Option<Arc<TensorModel>> {
+        let s = self.state.lock().unwrap();
+        match &s.community {
+            Some(m) if s.community_round == base_round => Some(Arc::clone(m)),
+            _ => None,
         }
-        let mut parsed = Vec::with_capacity(layout.len());
-        let mut expected = 0usize;
-        for t in &layout {
-            let elems = match t.elem_count_checked() {
-                Ok(n) => n,
-                Err(e) => return Message::error(ErrorCode::StreamProtocol, format!("{e:#}")),
-            };
-            let bytes = match t.byte_len_checked() {
-                Ok(n) => n,
-                Err(e) => return Message::error(ErrorCode::StreamProtocol, format!("{e:#}")),
-            };
-            expected = match expected.checked_add(bytes) {
-                Some(n) if n <= MAX_STREAM_BYTES => n,
-                _ => {
-                    return Message::error(
-                        ErrorCode::StreamProtocol,
-                        format!("stream exceeds {MAX_STREAM_BYTES} payload bytes"),
-                    )
-                }
-            };
-            parsed.push(StreamTensor {
-                name: t.name.clone(),
-                shape: t.shape.clone(),
-                dtype: t.dtype,
-                order: t.byte_order,
-                elems,
-            });
-        }
-        // Admission control runs BEFORE any buffer is allocated, so an
-        // unauthenticated `Begin` flood cannot commit memory: reclaim
-        // idle streams, then check slot, duplicate id, and the aggregate
-        // announced-bytes budget.
-        self.gc_idle_streams();
-        {
-            let streams = self.streams.lock().unwrap();
-            if streams.len() >= MAX_OPEN_STREAMS {
-                return Message::error(
-                    ErrorCode::StreamProtocol,
-                    format!("too many open streams (max {MAX_OPEN_STREAMS})"),
-                );
-            }
-            if streams.contains_key(&stream_id) {
-                return Message::error(
-                    ErrorCode::StreamProtocol,
-                    format!("stream id {stream_id:#x} already open"),
-                );
-            }
-        }
-        let budget = self.open_stream_bytes.fetch_add(expected, Ordering::SeqCst) + expected;
-        if budget > MAX_TOTAL_STREAM_BYTES {
-            self.open_stream_bytes.fetch_sub(expected, Ordering::SeqCst);
+    }
+
+    fn on_stream_begin(&self, args: StreamBegin) -> Message {
+        if !matches!(args.purpose, StreamPurpose::ShipModel | StreamPurpose::TaskCompletion) {
             return Message::error(
-                ErrorCode::StreamProtocol,
-                format!("open streams would exceed {MAX_TOTAL_STREAM_BYTES} announced bytes"),
+                ErrorCode::Unsupported,
+                "controller accepts only upload streams (ShipModel / TaskCompletion)",
             );
         }
+        let base = if args.codec.needs_base() {
+            self.delta_base_for(args.base_round)
+        } else {
+            None
+        };
         // Pre-size the decode buffers from the arena (when the backend
         // owns one): a steady-state streamed round re-fills the buffers
-        // the previous community model vacated.
-        let scratch = self.effective_backend().scratch().cloned();
-        let bufs: Vec<Vec<f32>> = parsed
-            .iter()
-            .map(|t| match &scratch {
-                Some(s) => s.take(t.elems),
-                None => vec![0.0; t.elems],
-            })
-            .collect();
-        let filled = vec![0usize; parsed.len()];
-        let mut stream = ModelStream {
-            purpose,
-            task_id,
-            learner_id,
-            meta,
-            layout: parsed,
-            bufs,
-            filled,
-            cur_tensor: 0,
-            received: 0,
-            expected,
-            next_seq: 0,
-            carry: Vec::new(),
-            digest: FNV64_INIT,
-            scratch,
-            last_activity: std::time::Instant::now(),
-            dead: false,
-        };
-        let mut streams = self.streams.lock().unwrap();
-        // Re-check under the lock: a racing Begin may have taken the id
-        // or the last slot while we were allocating.
-        if streams.len() >= MAX_OPEN_STREAMS || streams.contains_key(&stream_id) {
-            drop(streams);
-            stream.recycle();
-            self.open_stream_bytes.fetch_sub(expected, Ordering::SeqCst);
-            return Message::error(
-                ErrorCode::StreamProtocol,
-                format!("stream id {stream_id:#x} rejected (slot raced away)"),
-            );
-        }
-        streams.insert(stream_id, Arc::new(Mutex::new(stream)));
-        Message::Ack { task_id: stream_id, ok: true }
-    }
-
-    /// Reclaim streams with no activity for [`STREAM_IDLE_TIMEOUT`]: a
-    /// learner that died mid-stream must not pin its buffers or leak a
-    /// registry slot until the cap locks streaming out entirely.
-    fn gc_idle_streams(&self) {
-        let expired: Vec<u64> = {
-            let streams = self.streams.lock().unwrap();
-            streams
-                .iter()
-                .filter(|(_, s)| {
-                    s.lock().unwrap().last_activity.elapsed() > STREAM_IDLE_TIMEOUT
-                })
-                .map(|(id, _)| *id)
-                .collect()
-        };
-        for id in expired {
-            log_debug("controller", &format!("reclaiming idle stream {id:#x}"));
-            self.kill_stream(id);
-        }
-    }
-
-    fn on_stream_chunk(&self, stream_id: u64, seq: u64, bytes: Vec<u8>) -> Message {
-        let Some(stream) = self.streams.lock().unwrap().get(&stream_id).cloned() else {
-            return Message::error(
-                ErrorCode::StreamProtocol,
-                format!("chunk for unknown stream {stream_id:#x}"),
-            );
-        };
-        self.wire_hold(bytes.len());
-        let sw = Stopwatch::start();
-        let result = {
-            let mut s = stream.lock().unwrap();
-            if s.dead {
-                // We raced a close: the registry entry is already gone
-                // and the buffers were recycled.
-                Err(anyhow::anyhow!("chunk for a closed stream"))
-            } else if seq != s.next_seq {
-                Err(anyhow::anyhow!("chunk seq {seq}, expected {}", s.next_seq))
-            } else {
-                s.last_activity = std::time::Instant::now();
-                s.next_seq += 1;
-                s.ingest(&bytes)
-            }
-        };
-        self.record(FedOp::Serialization, sw.elapsed());
-        self.wire_release(bytes.len());
-        match result {
-            Ok(()) => Message::Ack { task_id: stream_id, ok: true },
-            Err(e) => {
-                self.kill_stream(stream_id);
-                Message::error(ErrorCode::StreamProtocol, format!("{e:#}"))
-            }
-        }
+        // the previous community model and evicted contributions vacated.
+        let pool = self
+            .effective_backend()
+            .scratch()
+            .cloned()
+            .map(|a| a as Arc<dyn BufferPool>);
+        self.ingest.begin(args, pool, base)
     }
 
     fn on_stream_end(&self, stream_id: u64, digest: u64) -> Message {
-        let Some(stream) = self.streams.lock().unwrap().remove(&stream_id) else {
-            return Message::error(
-                ErrorCode::StreamProtocol,
-                format!("end for unknown stream {stream_id:#x}"),
-            );
+        let finished = match self.ingest.end(stream_id, digest) {
+            Ok(f) => f,
+            Err(reply) => return reply,
         };
-        // Sole holder now (the registry entry is gone; chunk handlers
-        // clone the Arc only while the entry exists and hold it briefly).
-        let stream = match Arc::try_unwrap(stream) {
-            Ok(m) => m.into_inner().unwrap(),
-            Err(arc) => {
-                // A racing chunk still holds the Arc: a protocol
-                // violation (chunks after End); drop the stream.
-                let mut s = arc.lock().unwrap();
-                self.open_stream_bytes.fetch_sub(s.expected, Ordering::SeqCst);
-                s.recycle();
-                return Message::error(
-                    ErrorCode::StreamProtocol,
-                    "stream closed while chunks were in flight",
-                );
-            }
-        };
-        self.open_stream_bytes.fetch_sub(stream.expected, Ordering::SeqCst);
-        let (purpose, task_id, learner_id, meta) = (
-            stream.purpose,
-            stream.task_id,
-            stream.learner_id.clone(),
-            stream.meta.clone(),
-        );
-        let model = match stream.finish(digest) {
-            Ok(m) => m,
-            Err((mut s, e)) => {
-                s.recycle();
-                return Message::error(ErrorCode::StreamProtocol, format!("{e:#}"));
-            }
-        };
+        let FinishedStream { purpose, task_id, learner_id, meta, model, .. } = finished;
         match purpose {
             StreamPurpose::ShipModel => {
                 self.ship_model(model);
@@ -892,17 +578,269 @@ impl Controller {
                     Err(e) => Message::error(ErrorCode::Internal, format!("{e:#}")),
                 }
             }
+            // `on_stream_begin` refuses dispatch purposes, so none can
+            // reach `End`.
+            _ => Message::error(ErrorCode::Unsupported, "unexpected dispatch stream"),
         }
     }
 
-    /// Drop a failed/abandoned stream, recycle its buffers, and return
-    /// its announced bytes to the admission budget.
-    fn kill_stream(&self, stream_id: u64) {
-        if let Some(stream) = self.streams.lock().unwrap().remove(&stream_id) {
-            let mut s = stream.lock().unwrap();
-            self.open_stream_bytes.fetch_sub(s.expected, Ordering::SeqCst);
-            s.recycle();
+    // ---- data plane: streamed dispatch (controller → learners) -------
+
+    /// Wire codec streamed dispatch fans models out with, resolved from
+    /// the env (`auto` prefers delta when dispatch streams, since the
+    /// stream itself establishes the shared base).
+    fn dispatch_codec(&self) -> CodecId {
+        self.env.dispatch_codec()
+    }
+
+    /// Codec `encode` calls performed by streamed dispatch so far — the
+    /// encode-once fan-out probe.
+    pub fn dispatch_encode_count(&self) -> u64 {
+        self.dispatch_encodes.load(Ordering::SeqCst)
+    }
+
+    /// Stream one model to every target over the data plane, encoding
+    /// each payload chunk ONCE and fanning the same frame bytes out to
+    /// all learners (`send_raw`), so per-round controller encode work is
+    /// O(model) and peak egress memory is O(chunk) — instead of the
+    /// one-shot broadcast's whole-model frame. All targets share one
+    /// stream id: ids only need to be unique per *receiver*.
+    ///
+    /// Learners that refuse a delta `Begin` with `NotFound` (no shared
+    /// base yet) fall back to an individual full-f32 stream after the
+    /// shared walk (`delta_fallback` env field). Returns
+    /// `(dispatch_time, per-learner final End replies)` mirroring
+    /// [`Controller::broadcast`]; for [`StreamPurpose::Evaluate`] the
+    /// final reply is the in-call `EvaluateModelReply`.
+    pub(crate) fn stream_broadcast(
+        &self,
+        targets: &[Arc<LearnerHandle>],
+        purpose: StreamPurpose,
+        task_id: u64,
+        spec: &TaskSpec,
+        model: &Arc<TensorModel>,
+        model_round: u64,
+    ) -> (Duration, Vec<(String, Result<Message>)>) {
+        #[derive(Clone, Copy, PartialEq)]
+        enum SendState {
+            Alive,
+            NeedsFull,
+            Done,
         }
+        let psk = self.psk;
+        let origin = std::time::Instant::now();
+        let n = targets.len();
+        let chunk_bytes = self.env.effective_stream_chunk().max(1);
+        let configured = self.dispatch_codec();
+        let (codec, base, base_round) = if configured.needs_base() {
+            match self.last_broadcast.lock().unwrap().clone() {
+                Some((round, m)) => (configured, Some(m), round),
+                // Nothing fanned out yet: the first dispatch is full, and
+                // it establishes the base for the next one.
+                None => (CodecId::F32, None, 0),
+            }
+        } else {
+            (configured, None, 0)
+        };
+        let stream_id = client::next_stream_id();
+        let mut state = vec![SendState::Alive; n];
+        let mut replies: Vec<Option<Result<Message>>> = (0..n).map(|_| None).collect();
+        let mut dispatch = Duration::ZERO;
+
+        // Begin fan-out (one encode, shared bytes).
+        let begin = Message::ModelStreamBegin {
+            stream_id,
+            task_id,
+            round: model_round,
+            purpose,
+            learner_id: String::new(),
+            codec,
+            base_round,
+            layout: TensorLayoutProto::codec_layout_of(model, codec),
+            meta: TaskMeta::default(),
+            spec: spec.clone(),
+        }
+        .encode();
+        let acks = self
+            .dispatch_pool
+            .parallel_map(n, |i| targets[i].rpc_raw_timed(psk, &begin, origin));
+        for (i, r) in acks.into_iter().enumerate() {
+            match r {
+                Ok((reply, sent_at)) => {
+                    dispatch = dispatch.max(sent_at);
+                    match client::ack_of(&reply) {
+                        Ok(_) => {}
+                        Err(e)
+                            if e.remote_code() == Some(ErrorCode::NotFound)
+                                && codec.needs_base()
+                                && self.env.delta_fallback =>
+                        {
+                            state[i] = SendState::NeedsFull;
+                        }
+                        Err(e) => {
+                            state[i] = SendState::Done;
+                            replies[i] = Some(Err(anyhow::anyhow!(
+                                "stream dispatch begin refused: {e}"
+                            )));
+                        }
+                    }
+                }
+                Err(e) => {
+                    state[i] = SendState::Done;
+                    replies[i] = Some(Err(e));
+                }
+            }
+        }
+
+        // Chunk walk: encode each tensor once through the codec, slice,
+        // encode each chunk frame once, fan the same bytes out.
+        let mut seq = 0u64;
+        let mut digest = FNV64_INIT;
+        let mut ser_time = Duration::ZERO;
+        for (ti, t) in model.tensors.iter().enumerate() {
+            if !state.iter().any(|s| *s == SendState::Alive) {
+                break;
+            }
+            let sw = Stopwatch::start();
+            let bytes = codec
+                .codec()
+                .encode(&t.data, base.as_ref().map(|b| &b.tensors[ti].data[..]));
+            ser_time += sw.elapsed();
+            self.dispatch_encodes.fetch_add(1, Ordering::SeqCst);
+            for part in bytes.chunks(chunk_bytes) {
+                digest = fnv1a64(digest, part);
+                let frame =
+                    Message::ModelChunk { stream_id, seq, bytes: part.to_vec() }.encode();
+                seq += 1;
+                let results = self.dispatch_pool.parallel_map(n, |i| {
+                    (state[i] == SendState::Alive)
+                        .then(|| targets[i].rpc_raw_timed(psk, &frame, origin))
+                });
+                for (i, r) in results.into_iter().enumerate() {
+                    match r {
+                        None => {}
+                        Some(Ok((reply, sent_at))) => {
+                            dispatch = dispatch.max(sent_at);
+                            if let Err(e) = client::ack_of(&reply) {
+                                state[i] = SendState::Done;
+                                replies[i] = Some(Err(anyhow::anyhow!(
+                                    "stream dispatch chunk refused: {e}"
+                                )));
+                            }
+                        }
+                        Some(Err(e)) => {
+                            state[i] = SendState::Done;
+                            replies[i] = Some(Err(e));
+                        }
+                    }
+                }
+            }
+        }
+        self.record(FedOp::Serialization, ser_time);
+
+        // End fan-out; the reply is the purpose's final answer.
+        let end = Message::ModelStreamEnd { stream_id, digest }.encode();
+        let results = self.dispatch_pool.parallel_map(n, |i| {
+            (state[i] == SendState::Alive).then(|| targets[i].rpc_raw_timed(psk, &end, origin))
+        });
+        for (i, r) in results.into_iter().enumerate() {
+            match r {
+                None => {}
+                Some(Ok((reply, sent_at))) => {
+                    dispatch = dispatch.max(sent_at);
+                    replies[i] = Some(Ok(reply));
+                    state[i] = SendState::Done;
+                }
+                Some(Err(e)) => {
+                    replies[i] = Some(Err(e));
+                    state[i] = SendState::Done;
+                }
+            }
+        }
+
+        // Individual full-codec retries for learners without the base,
+        // in parallel — k cold learners must not serialize k whole-model
+        // streams onto the round's critical path.
+        if state.iter().any(|s| *s == SendState::NeedsFull) {
+            let fallback_results = self.dispatch_pool.parallel_map(n, |i| {
+                (state[i] == SendState::NeedsFull).then(|| {
+                    let h = &targets[i];
+                    log_debug(
+                        "controller",
+                        &format!("{}: no shared delta base, re-sending full", h.id),
+                    );
+                    let meta = TaskMeta::default();
+                    let send = StreamSend::f32(
+                        purpose,
+                        task_id,
+                        model_round,
+                        "",
+                        model,
+                        &meta,
+                        spec,
+                        chunk_bytes,
+                    );
+                    client::stream_model_with(
+                        &mut |msg| match h.rpc(psk, &msg) {
+                            Ok(Message::Error { code, detail }) => {
+                                Err(client::RpcError::Remote { code, detail })
+                            }
+                            Ok(reply) => Ok(reply),
+                            Err(e) => Err(client::RpcError::Transport(e)),
+                        },
+                        &send,
+                    )
+                })
+            });
+            for (i, r) in fallback_results.into_iter().enumerate() {
+                let Some(r) = r else { continue };
+                replies[i] = Some(match r {
+                    Ok(reply) => Ok(reply),
+                    Err(e) => Err(anyhow::anyhow!("full-codec fallback stream failed: {e}")),
+                });
+            }
+            dispatch = dispatch.max(origin.elapsed());
+        }
+
+        // A lossless fan-out becomes the shared base for the next
+        // delta-coded dispatch — but only if at least one learner
+        // actually received the model (a wholly failed fan-out must not
+        // install a base nobody holds: with `delta_fallback: false`
+        // every later dispatch would be refused and the federation could
+        // never recover). The base it displaces is usually the
+        // just-superseded community model, whose arena recycling was
+        // blocked at aggregation time by exactly this handle — hand it
+        // back now that nothing else holds it, so delta dispatch keeps
+        // the steady-state zero-allocation property.
+        let any_delivered = replies
+            .iter()
+            .any(|r| matches!(r, Some(Ok(m)) if !matches!(m, Message::Error { .. })));
+        if any_delivered && configured.needs_base() && codec.is_lossless() {
+            let displaced = self
+                .last_broadcast
+                .lock()
+                .unwrap()
+                .replace((model_round, Arc::clone(model)));
+            if let Some((_, old)) = displaced {
+                if !Arc::ptr_eq(&old, model) {
+                    if let Some(scratch) = self.effective_backend().scratch() {
+                        scratch.reclaim_model(old);
+                    }
+                }
+            }
+        }
+
+        let out = targets
+            .iter()
+            .zip(replies)
+            .map(|(h, r)| {
+                (
+                    h.id.clone(),
+                    r.unwrap_or_else(|| Err(anyhow::anyhow!("stream dispatch incomplete"))),
+                )
+            })
+            .collect();
+        (dispatch, out)
     }
 }
 
@@ -912,11 +850,15 @@ impl Service for Controller {
             return Message::error(ErrorCode::Unavailable, "controller is shut down");
         }
         match msg {
-            Message::Hello { proto_version } => {
+            Message::Hello { proto_version, codecs } => {
                 if proto_version == PROTO_VERSION {
                     Message::HelloAck {
                         proto_version: PROTO_VERSION,
                         component: "controller".into(),
+                        codecs: crate::tensor::codec::negotiate(
+                            &codecs,
+                            &client::SUPPORTED_CODECS,
+                        ),
                     }
                 } else {
                     Message::error(
@@ -940,10 +882,10 @@ impl Service for Controller {
                 // Decode outside every lock; the wire buffer is released
                 // before the model is installed.
                 let wire = model.byte_size();
-                self.wire_hold(wire);
+                self.ingest.wire_hold(wire);
                 let decoded = model.to_model();
                 drop(model);
-                self.wire_release(wire);
+                self.ingest.wire_release(wire);
                 match decoded {
                     Ok(m) => {
                         self.ship_model(m);
@@ -960,10 +902,10 @@ impl Service for Controller {
                 // real memory, not an accounting artifact.
                 let sw = Stopwatch::start();
                 let wire = model.byte_size();
-                self.wire_hold(wire);
+                self.ingest.wire_hold(wire);
                 let decoded = model.to_model();
                 drop(model);
-                self.wire_release(wire);
+                self.ingest.wire_release(wire);
                 self.record(FedOp::Serialization, sw.elapsed());
                 match decoded {
                     Err(e) => {
@@ -978,14 +920,31 @@ impl Service for Controller {
             Message::ModelStreamBegin {
                 stream_id,
                 task_id,
-                round: _,
+                round,
                 purpose,
                 learner_id,
+                codec,
+                base_round,
                 layout,
                 meta,
-            } => self.on_stream_begin(stream_id, task_id, purpose, learner_id, layout, meta),
+                spec,
+            } => self.on_stream_begin(StreamBegin {
+                stream_id,
+                task_id,
+                round,
+                purpose,
+                learner_id,
+                codec,
+                base_round,
+                layout,
+                meta,
+                spec,
+            }),
             Message::ModelChunk { stream_id, seq, bytes } => {
-                self.on_stream_chunk(stream_id, seq, bytes)
+                let sw = Stopwatch::start();
+                let reply = self.ingest.chunk(stream_id, seq, &bytes);
+                self.record(FedOp::Serialization, sw.elapsed());
+                reply
             }
             Message::ModelStreamEnd { stream_id, digest } => {
                 self.on_stream_end(stream_id, digest)
@@ -995,7 +954,7 @@ impl Service for Controller {
                 // this a natural periodic sweep for streams abandoned by
                 // a dead peer (otherwise they'd only be reclaimed when
                 // the next streamed upload begins).
-                self.gc_idle_streams();
+                self.ingest.gc_idle();
                 Message::HeartbeatAck { component: "controller".into(), healthy: true }
             }
             Message::GetModel => {
@@ -1047,9 +1006,16 @@ impl Controller {
                     let mut s = self.state.lock().unwrap();
                     let insert_sw = Stopwatch::start();
                     s.store.insert(entry.clone())?;
-                    s.store.evict(1)?;
+                    let evicted = s.store.evict(1)?;
                     drop(s);
                     self.record(FedOp::StoreInsert, insert_sw.elapsed());
+                    // Superseded uploads go back to the arena (see
+                    // aggregate_from_store).
+                    if let Some(scratch) = self.effective_backend().scratch() {
+                        for e in evicted {
+                            scratch.reclaim_model(e.model);
+                        }
+                    }
                 }
                 self.async_mix(&entry, staleness_alpha)?;
                 self.record(FedOp::Aggregation, sw.elapsed());
@@ -1214,6 +1180,65 @@ mod tests {
     }
 
     #[test]
+    fn streamed_steady_state_recycles_evicted_contributions() {
+        // The full streamed round-trip allocation story: stream ingest
+        // draws decode buffers from the arena, aggregation output draws
+        // from the arena, and BOTH the replaced community model and the
+        // store-evicted contributions (last round's uploads) go back.
+        // Once warm (round 3+), a streamed round allocates nothing.
+        use crate::config::{AggregationBackend, AggregationSpec};
+        let mut e = env();
+        e.aggregation = AggregationSpec {
+            backend: AggregationBackend::Chunked,
+            threads: 2,
+            ..Default::default()
+        };
+        let ctrl = Controller::new(e, None).unwrap();
+        ctrl.ship_model(model(1));
+        let scratch = Arc::clone(ctrl.backend.scratch().expect("chunked backend"));
+        let tensor_count = model(1).tensor_count();
+        let chunk = 64usize;
+        let mut allocs = Vec::new();
+        for round in 1..=6u64 {
+            ctrl.open_round(round, &["a".into(), "b".into()]);
+            for (i, id) in ["a", "b"].into_iter().enumerate() {
+                let m = model(200 + round * 2 + i as u64);
+                stream_via_handle(
+                    &ctrl,
+                    StreamPurpose::TaskCompletion,
+                    round,
+                    id,
+                    &m,
+                    TaskMeta { num_samples: 10, ..Default::default() },
+                    chunk,
+                )
+                .unwrap();
+            }
+            let arrived = ctrl.wait_round_completions(Duration::from_secs(1));
+            assert_eq!(arrived.len(), 2);
+            ctrl.aggregate_from_store(&arrived, round).unwrap();
+            allocs.push(scratch.fresh_allocations());
+        }
+        // Warm-up: round 1 allocates 2 ingest models + 1 output (3T),
+        // round 2 still misses what the first eviction hadn't returned
+        // yet (2T more); from round 3 on, every buffer comes from the
+        // arena.
+        assert_eq!(allocs[2], 5 * tensor_count, "warm-up allocations drifted: {allocs:?}");
+        assert_eq!(
+            allocs.last(),
+            allocs.get(2),
+            "steady-state streamed rounds allocated fresh buffers: {allocs:?}"
+        );
+        // And the wire gauge shows streaming held only chunk-sized
+        // payloads while doing it.
+        assert!(
+            ctrl.peak_wire_ingest_bytes() <= chunk,
+            "streamed ingest held {} wire bytes for {chunk}-byte chunks",
+            ctrl.peak_wire_ingest_bytes()
+        );
+    }
+
+    #[test]
     fn aggregate_result_is_shared_not_copied() {
         let ctrl = Controller::new(env(), None).unwrap();
         ctrl.ship_model(model(1));
@@ -1270,16 +1295,11 @@ mod tests {
         meta: TaskMeta,
         chunk: usize,
     ) -> crate::proto::client::RpcResult<()> {
-        crate::proto::client::stream_model_with(
-            |msg| Ok(ctrl.handle(msg)),
-            purpose,
-            task_id,
-            0,
-            learner_id,
-            m,
-            &meta,
-            chunk,
-        )
+        let spec = TaskSpec::default();
+        let send =
+            StreamSend::f32(purpose, task_id, 0, learner_id, m, &meta, &spec, chunk);
+        crate::proto::client::stream_model_with(&mut |msg| Ok(ctrl.handle(msg)), &send)
+            .map(|_| ())
     }
 
     #[test]
@@ -1352,8 +1372,11 @@ mod tests {
             round: 0,
             purpose: StreamPurpose::TaskCompletion,
             learner_id: "a".into(),
+            codec: CodecId::F32,
+            base_round: 0,
             layout: TensorLayoutProto::f32_layout_of(&m),
             meta: TaskMeta::default(),
+            spec: TaskSpec::default(),
         };
         // Duplicate stream id.
         assert!(matches!(ctrl.handle(begin(5)), Message::Ack { ok: true, .. }));
@@ -1436,16 +1459,19 @@ mod tests {
     }
 
     #[test]
-    fn hello_handshake_checks_version() {
+    fn hello_handshake_checks_version_and_negotiates_codecs() {
         let ctrl = Controller::new(env(), None).unwrap();
-        match ctrl.handle(Message::Hello { proto_version: PROTO_VERSION }) {
-            Message::HelloAck { proto_version, component } => {
+        let offered = vec![CodecId::Delta, CodecId::F32];
+        match ctrl.handle(Message::Hello { proto_version: PROTO_VERSION, codecs: offered }) {
+            Message::HelloAck { proto_version, component, codecs } => {
                 assert_eq!(proto_version, PROTO_VERSION);
                 assert_eq!(component, "controller");
+                // Accepted = intersection, in our preference order.
+                assert_eq!(codecs, vec![CodecId::F32, CodecId::Delta]);
             }
             other => panic!("unexpected {other:?}"),
         }
-        match ctrl.handle(Message::Hello { proto_version: 999 }) {
+        match ctrl.handle(Message::Hello { proto_version: 999, codecs: Vec::new() }) {
             Message::Error { code, .. } => assert_eq!(code, ErrorCode::VersionMismatch),
             other => panic!("unexpected {other:?}"),
         }

@@ -7,7 +7,7 @@
 use super::super::Controller;
 use crate::metrics::{FedOp, RoundReport};
 use crate::proto::client;
-use crate::proto::{Message, ModelProto, TaskSpec};
+use crate::proto::{Message, ModelProto, StreamPurpose, TaskSpec};
 use crate::tensor::{ByteOrder, DType};
 use crate::util::{log_debug, log_warn, Rng, Stopwatch};
 use anyhow::{bail, Result};
@@ -30,18 +30,10 @@ pub(crate) fn run_round_with_budget(
     if participants.is_empty() {
         bail!("round {round}: no registered learners");
     }
-    let (community, _) = ctrl
+    let (community, community_round) = ctrl
         .community()
         .ok_or_else(|| anyhow::anyhow!("round {round}: community model not initialized"))?;
-
-    // Serialize the community model once per round (tensor-as-bytes, §3).
-    let ser_sw = Stopwatch::start();
-    let model_proto = ModelProto::from_model(&community, DType::F32, ByteOrder::Little);
-    ctrl.record(FedOp::Serialization, ser_sw.elapsed());
-    // Release the snapshot now that it's serialized: aggregation replaces
-    // the community model, and a sole-owner `Arc` at that point lets the
-    // controller recycle its buffers into the scratch arena.
-    drop(community);
+    let streamed = ctrl.env.effective_stream_chunk() > 0;
 
     let ids: Vec<String> = participants.iter().map(|h| h.id.clone()).collect();
     ctrl.open_round(round, &ids);
@@ -54,10 +46,32 @@ pub(crate) fn run_round_with_budget(
         step_budget,
     };
     let train_sw = Stopwatch::start();
-    let run_task =
-        Message::RunTask { task_id: round, round, model: model_proto, spec: spec.clone() };
-    let (dispatch_time, acks) = ctrl.broadcast(&participants, &run_task);
-    drop(run_task);
+    let (dispatch_time, acks) = if streamed {
+        // Symmetric data plane: the community model fans out as one
+        // encode-once chunk stream shared by every learner, under the
+        // negotiated wire codec (Serialization is recorded inside).
+        ctrl.stream_broadcast(
+            &participants,
+            StreamPurpose::RunTask,
+            round,
+            &spec,
+            &community,
+            community_round,
+        )
+    } else {
+        // One-shot: serialize the community model once per round
+        // (tensor-as-bytes, §3) and fan the same frame out.
+        let ser_sw = Stopwatch::start();
+        let model_proto = ModelProto::from_model(&community, DType::F32, ByteOrder::Little);
+        ctrl.record(FedOp::Serialization, ser_sw.elapsed());
+        let run_task =
+            Message::RunTask { task_id: round, round, model: model_proto, spec: spec.clone() };
+        ctrl.broadcast(&participants, &run_task)
+    };
+    // Release the snapshot now that it's dispatched: aggregation replaces
+    // the community model, and a sole-owner `Arc` at that point lets the
+    // controller recycle its buffers into the scratch arena.
+    drop(community);
     ctrl.record(FedOp::TrainDispatch, dispatch_time);
     let mut dispatched = 0usize;
     for (id, ack) in &acks {
@@ -103,13 +117,26 @@ pub(crate) fn run_round_with_budget(
     );
 
     // --- Evaluation round (T7–T9, synchronous calls; Fig. 10) ----------
-    let ser_sw = Stopwatch::start();
-    let eval_proto = ModelProto::from_model(&new_model, DType::F32, ByteOrder::Little);
-    ctrl.record(FedOp::Serialization, ser_sw.elapsed());
     let eval_sw = Stopwatch::start();
-    let eval_task = Message::EvaluateModel { task_id: round, round, model: eval_proto };
-    let (eval_dispatch, replies) = ctrl.broadcast(&participants, &eval_task);
-    drop(eval_task);
+    let (eval_dispatch, replies) = if streamed {
+        // The eval stream ships the freshly aggregated community model
+        // (now at `round`); its `End` reply carries the evaluation. It
+        // also refreshes every learner's delta base to the new model.
+        ctrl.stream_broadcast(
+            &participants,
+            StreamPurpose::Evaluate,
+            round,
+            &TaskSpec::default(),
+            &new_model,
+            round,
+        )
+    } else {
+        let ser_sw = Stopwatch::start();
+        let eval_proto = ModelProto::from_model(&new_model, DType::F32, ByteOrder::Little);
+        ctrl.record(FedOp::Serialization, ser_sw.elapsed());
+        let eval_task = Message::EvaluateModel { task_id: round, round, model: eval_proto };
+        ctrl.broadcast(&participants, &eval_task)
+    };
     let eval_round_time = eval_sw.elapsed();
     ctrl.record(FedOp::EvalDispatch, eval_dispatch);
     ctrl.record(FedOp::EvalRound, eval_round_time);

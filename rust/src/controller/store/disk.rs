@@ -128,8 +128,9 @@ impl ModelStore for OnDiskStore {
         self.bytes
     }
 
-    fn evict(&mut self, keep_last: usize) -> Result<usize> {
-        let mut evicted = 0;
+    fn evict(&mut self, keep_last: usize) -> Result<Vec<StoredModel>> {
+        // Entries live on disk, not in memory: nothing to hand back for
+        // buffer recycling — deletion is the whole eviction.
         for (learner, rounds) in self.index.iter_mut() {
             while rounds.len() > keep_last {
                 let round = rounds.remove(0);
@@ -139,10 +140,9 @@ impl ModelStore for OnDiskStore {
                 }
                 std::fs::remove_file(&path).ok();
                 self.entries -= 1;
-                evicted += 1;
             }
         }
-        Ok(evicted)
+        Ok(Vec::new())
     }
 
     fn name(&self) -> &'static str {

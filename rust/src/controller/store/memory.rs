@@ -57,13 +57,13 @@ impl ModelStore for InMemoryStore {
             .sum()
     }
 
-    fn evict(&mut self, keep_last: usize) -> Result<usize> {
-        let mut evicted = 0;
+    fn evict(&mut self, keep_last: usize) -> Result<Vec<StoredModel>> {
+        let mut evicted = Vec::new();
         for v in self.by_learner.values_mut() {
-            // Already round-ordered: drop the oldest prefix in one drain.
+            // Already round-ordered: drop the oldest prefix in one drain,
+            // handing the entries back so their buffers can be recycled.
             let excess = v.len().saturating_sub(keep_last);
-            v.drain(..excess);
-            evicted += excess;
+            evicted.extend(v.drain(..excess));
         }
         Ok(evicted)
     }

@@ -63,8 +63,12 @@ pub trait ModelStore: Send {
     /// Total stored payload bytes (f32 accounting).
     fn byte_size(&self) -> usize;
 
-    /// Remove everything older than `keep_last` entries per learner.
-    fn evict(&mut self, keep_last: usize) -> Result<usize>;
+    /// Remove everything older than `keep_last` entries per learner,
+    /// returning the evicted entries still held in memory so the caller
+    /// can recycle their buffers (e.g. into the aggregation scratch
+    /// arena). Stores whose entries do not live in memory (disk) return
+    /// only what they can hand back.
+    fn evict(&mut self, keep_last: usize) -> Result<Vec<StoredModel>>;
 
     fn name(&self) -> &'static str;
 }
@@ -108,9 +112,15 @@ pub(crate) mod test_support {
         assert_eq!(sel[0].learner_id, "a");
         assert_eq!(sel[0].round, 1);
 
-        // Eviction keeps the most recent per learner.
+        // Eviction keeps the most recent per learner and returns what
+        // it removed (in-memory stores hand the entries back for buffer
+        // recycling; the disk store has nothing in memory to return).
         let evicted = store.evict(1).unwrap();
-        assert_eq!(evicted, 1);
+        if store.name() == "memory" {
+            assert_eq!(evicted.len(), 1);
+            assert_eq!(evicted[0].learner_id, "a");
+            assert_eq!(evicted[0].round, 0);
+        }
         assert_eq!(store.len(), 2);
         assert_eq!(store.latest("a").unwrap().unwrap().round, 1);
 

@@ -39,6 +39,11 @@ pub struct FederationReport {
     /// one-shot uploads this grows with learners × model size, with the
     /// streaming data plane it is bounded by chunk × in-flight streams.
     pub peak_wire_ingest_bytes: usize,
+    /// The data-plane chunk size senders actually used: 0 when the run
+    /// was one-shot, otherwise `stream_chunk_bytes` clamped up to the
+    /// sender floor (sub-floor configs are clamped silently on the wire
+    /// but surfaced here, plus a one-time warning at env-load time).
+    pub effective_stream_chunk_bytes: usize,
 }
 
 /// Unique per-process run counter so in-proc endpoint names never clash
@@ -117,7 +122,9 @@ pub fn run_with_trainer(
         );
         let learner =
             Learner::new(&format!("learner-{i}"), &ctrl_endpoint, psk, make_trainer(i), dataset);
-        learner.set_stream_chunk(env.stream_chunk_bytes);
+        learner.set_stream_chunk(env.effective_stream_chunk());
+        learner.set_upload_codec(env.upload_codec());
+        learner.set_delta_fallback(env.delta_fallback);
         let (ep, server) = serve_component(
             env,
             &format!("learner-{run}-{i}"),
@@ -226,6 +233,7 @@ pub fn run_with_trainer(
         wall_clock: sw.elapsed(),
         missed_heartbeats: missed.load(Ordering::SeqCst),
         peak_wire_ingest_bytes: controller.peak_wire_ingest_bytes(),
+        effective_stream_chunk_bytes: env.effective_stream_chunk(),
     })
 }
 

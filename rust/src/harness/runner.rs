@@ -47,8 +47,11 @@ pub fn full_scale() -> bool {
     std::env::var("FULL").map(|v| v == "1").unwrap_or(false)
 }
 
-/// Collects rows and writes aligned markdown to stdout + CSV to
-/// `bench_out/<name>.csv`.
+/// Collects rows and writes aligned markdown to stdout + CSV and JSON
+/// to `bench_out/<name>.{csv,json}`. The JSON form is what the CI
+/// `bench-regression` job merges into `BENCH_<sha>.json` and diffs
+/// against the checked-in `BENCH_baseline.json` (see `metisfl
+/// bench-check`).
 pub struct ReportWriter {
     name: String,
     headers: Vec<String>,
@@ -98,7 +101,25 @@ impl ReportWriter {
         out
     }
 
-    /// Print markdown to stdout and persist CSV to `bench_out/`.
+    /// Machine-readable form: `{name, headers, rows}`.
+    pub fn to_json(&self) -> crate::json::Value {
+        use crate::json::Value;
+        let headers =
+            Value::Array(self.headers.iter().map(|h| Value::String(h.clone())).collect());
+        let rows = Value::Array(
+            self.rows
+                .iter()
+                .map(|r| Value::Array(r.iter().map(|v| Value::String(v.clone())).collect()))
+                .collect(),
+        );
+        Value::object(vec![
+            ("name", Value::String(self.name.clone())),
+            ("headers", headers),
+            ("rows", rows),
+        ])
+    }
+
+    /// Print markdown to stdout and persist CSV + JSON to `bench_out/`.
     pub fn emit(&self) -> std::io::Result<PathBuf> {
         println!("\n### {}\n", self.name);
         println!("{}", self.to_markdown());
@@ -110,6 +131,10 @@ impl ReportWriter {
         for row in &self.rows {
             writeln!(f, "{}", row.join(","))?;
         }
+        std::fs::write(
+            dir.join(format!("{}.json", self.name)),
+            crate::json::to_string_pretty(&self.to_json()),
+        )?;
         Ok(path)
     }
 }
@@ -152,7 +177,13 @@ mod tests {
         let csv = std::fs::read_to_string(&path).unwrap();
         assert!(csv.starts_with("learners,a,b\n"));
         assert!(csv.contains("200,10.25,x"));
+        // The machine-readable twin for the CI bench-regression gate.
+        let json_path = path.with_extension("json");
+        let v = crate::json::parse(&std::fs::read_to_string(&json_path).unwrap()).unwrap();
+        assert_eq!(v.get("name").unwrap().as_str(), Some("test-report"));
+        assert_eq!(v.get("rows").unwrap().as_array().unwrap().len(), 2);
         std::fs::remove_file(path).ok();
+        std::fs::remove_file(json_path).ok();
     }
 
     #[test]

@@ -8,6 +8,16 @@
 //!   `MarkTaskCompleted` back on the controller.
 //! * `EvaluateModel` — evaluates synchronously and replies in-call.
 //!
+//! With the v3 symmetric data plane, both dispatches can also arrive as
+//! chunked model streams (`ModelStreamBegin` with a `RunTask` /
+//! `Evaluate` purpose): the learner ingests chunks on arrival — in the
+//! connection handler, outside the training executor — through the same
+//! [`StreamIngest`] engine the controller uses for uploads, and the
+//! `End` ack queues the training task (or carries the eval reply).
+//! Lossless streamed dispatches are recorded as the learner's *last
+//! community model*, which is the shared base its delta-coded uploads
+//! encode against.
+//!
 //! Local compute is pluggable via [`Trainer`]: the stress tests use
 //! [`SyntheticTrainer`]; real training uses `runtime::XlaTrainer` (the
 //! AOT-compiled JAX train/eval steps).
@@ -19,9 +29,10 @@ pub use data::Dataset;
 pub use trainer::{SyntheticTrainer, Trainer};
 
 use crate::net::{ClientConn, Psk, Service};
-use crate::proto::client::{self, RpcError};
+use crate::proto::client::{self, RpcError, StreamSend};
+use crate::proto::ingest::{StreamBegin, StreamIngest};
 use crate::proto::{ErrorCode, Message, ModelProto, StreamPurpose, TaskSpec, PROTO_VERSION};
-use crate::tensor::{ByteOrder, DType};
+use crate::tensor::{ByteOrder, CodecId, DType, TensorModel};
 use crate::util::{log_debug, log_warn, ThreadPool};
 use anyhow::Result;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
@@ -42,6 +53,23 @@ pub struct Learner {
     /// Data-plane chunk size for completed-model uploads; 0 = one-shot
     /// `MarkTaskCompleted` (see `FederationEnv::stream_chunk_bytes`).
     stream_chunk: AtomicUsize,
+    /// Wire codec for streamed uploads (resolved by the driver from
+    /// `FederationEnv::upload_codec`; defaults to plain f32).
+    upload_codec: Mutex<CodecId>,
+    /// Codec set the controller accepted in the callback-channel
+    /// handshake; a configured codec the peer negotiated away falls
+    /// back to f32 instead of being refused at `Begin`.
+    accepted_codecs: Mutex<Option<Vec<CodecId>>>,
+    /// Mirror of `FederationEnv::delta_fallback`: retry a refused delta
+    /// upload as full f32 (true, default) or surface the refusal.
+    delta_fallback: AtomicBool,
+    /// Last community model received over a *lossless* dispatch stream,
+    /// with its identity (community round): the shared base delta-coded
+    /// uploads encode against, and the base inbound delta dispatches
+    /// decode against.
+    last_community: Mutex<Option<(u64, Arc<TensorModel>)>>,
+    /// Inbound data-plane engine for streamed dispatch.
+    ingest: StreamIngest,
     shutdown: AtomicBool,
     tasks_completed: AtomicU64,
 }
@@ -63,6 +91,11 @@ impl Learner {
             executor: ThreadPool::new(1),
             callback_conn: Mutex::new(None),
             stream_chunk: AtomicUsize::new(0),
+            upload_codec: Mutex::new(CodecId::F32),
+            accepted_codecs: Mutex::new(None),
+            delta_fallback: AtomicBool::new(true),
+            last_community: Mutex::new(None),
+            ingest: StreamIngest::default(),
             shutdown: AtomicBool::new(false),
             tasks_completed: AtomicU64::new(0),
         })
@@ -76,6 +109,32 @@ impl Learner {
 
     pub fn stream_chunk(&self) -> usize {
         self.stream_chunk.load(Ordering::SeqCst)
+    }
+
+    /// Wire codec for streamed uploads. Delta uploads silently use f32
+    /// until a lossless streamed dispatch has established a base.
+    pub fn set_upload_codec(&self, codec: CodecId) {
+        *self.upload_codec.lock().unwrap() = codec;
+    }
+
+    pub fn upload_codec(&self) -> CodecId {
+        *self.upload_codec.lock().unwrap()
+    }
+
+    /// Mirror `FederationEnv::delta_fallback` (set by the driver).
+    pub fn set_delta_fallback(&self, on: bool) {
+        self.delta_fallback.store(on, Ordering::SeqCst);
+    }
+
+    /// The inbound data-plane engine (clock injection / gauges).
+    pub fn ingest(&self) -> &StreamIngest {
+        &self.ingest
+    }
+
+    /// Identity of the last community model received over a lossless
+    /// streamed dispatch (the learner's delta base), if any.
+    pub fn last_community_round(&self) -> Option<u64> {
+        self.last_community.lock().unwrap().as_ref().map(|(r, _)| *r)
     }
 
     /// Register with the controller (Fig. 8 initialization).
@@ -106,7 +165,8 @@ impl Learner {
         if guard.is_none() {
             let mut conn = crate::net::connect(&self.controller_endpoint, self.psk)
                 .map_err(RpcError::Transport)?;
-            client::hello(conn.as_mut())?;
+            let (_, accepted) = client::hello_negotiate(conn.as_mut())?;
+            *self.accepted_codecs.lock().unwrap() = Some(accepted);
             *guard = Some(conn);
         }
         match f(guard.as_mut().unwrap().as_mut()) {
@@ -121,49 +181,125 @@ impl Learner {
     }
 
     /// Execute one training task and call back `MarkTaskCompleted` —
-    /// one-shot for small models, chunk-streamed when a data-plane chunk
-    /// size is configured.
+    /// one-shot for small models, chunk-streamed (under the configured
+    /// upload codec) when a data-plane chunk size is configured.
     fn run_train_task(self: &Arc<Self>, task_id: u64, round: u64, model: ModelProto, spec: TaskSpec) {
         let learner = Arc::clone(self);
         self.executor.spawn(move || {
             if learner.is_shutdown() {
                 return;
             }
-            let result = (|| -> Result<()> {
-                let m = model.to_model()?;
-                let (trained, meta) = learner.trainer.train(&m, &learner.dataset, &spec)?;
-                let chunk = learner.stream_chunk();
-                let upload = if chunk > 0 {
-                    learner.with_callback_conn(|conn| {
-                        client::stream_model(
-                            conn,
-                            StreamPurpose::TaskCompletion,
-                            task_id,
-                            round,
-                            &learner.id,
-                            &trained,
-                            &meta,
-                            chunk,
-                        )
-                    })
-                } else {
-                    let proto = ModelProto::from_model(&trained, DType::F32, ByteOrder::Little);
-                    learner.with_callback_conn(|conn| {
-                        client::mark_task_completed(conn, task_id, &learner.id, proto, meta)
-                    })
-                };
-                upload.map_err(|e| anyhow::anyhow!("completion callback: {e}"))
-            })();
-            match result {
-                Ok(()) => {
-                    learner.tasks_completed.fetch_add(1, Ordering::SeqCst);
-                    log_debug("learner", &format!("{} completed task {task_id}", learner.id));
-                }
-                Err(e) => {
-                    log_warn("learner", &format!("{} task {task_id} failed: {e:#}", learner.id))
-                }
-            }
+            let result = model
+                .to_model()
+                .and_then(|m| learner.train_and_upload(task_id, round, &m, &spec));
+            learner.log_task_result(task_id, result);
         });
+    }
+
+    /// Streamed-dispatch variant: the model is already decoded (shared
+    /// by pointer with the recorded delta base — no copy).
+    fn run_train_task_model(
+        self: &Arc<Self>,
+        task_id: u64,
+        round: u64,
+        model: Arc<TensorModel>,
+        spec: TaskSpec,
+    ) {
+        let learner = Arc::clone(self);
+        self.executor.spawn(move || {
+            if learner.is_shutdown() {
+                return;
+            }
+            let result = learner.train_and_upload(task_id, round, &model, &spec);
+            learner.log_task_result(task_id, result);
+        });
+    }
+
+    fn log_task_result(&self, task_id: u64, result: Result<()>) {
+        match result {
+            Ok(()) => {
+                self.tasks_completed.fetch_add(1, Ordering::SeqCst);
+                log_debug("learner", &format!("{} completed task {task_id}", self.id));
+            }
+            Err(e) => log_warn("learner", &format!("{} task {task_id} failed: {e:#}", self.id)),
+        }
+    }
+
+    /// Train on `model` and upload the result: one-shot `MarkTaskCompleted`
+    /// when no chunk size is configured, a codec-aware stream otherwise.
+    /// Delta uploads encode against the recorded last community model
+    /// and fall back to full f32 when no base is shared on either side.
+    fn train_and_upload(
+        self: &Arc<Self>,
+        task_id: u64,
+        round: u64,
+        model: &TensorModel,
+        spec: &TaskSpec,
+    ) -> Result<()> {
+        let (trained, meta) = self.trainer.train(model, &self.dataset, spec)?;
+        let chunk = self.stream_chunk();
+        let upload = if chunk > 0 {
+            // Ensure the callback session (and its codec negotiation)
+            // exists before choosing a codec, then honor the peer's
+            // accepted set — a codec the controller negotiated away
+            // falls back to plain f32 instead of a refused Begin.
+            self.with_callback_conn(|_| Ok(()))
+                .map_err(|e| anyhow::anyhow!("controller handshake: {e}"))?;
+            let configured = self.upload_codec();
+            let configured = match self.accepted_codecs.lock().unwrap().as_ref() {
+                Some(accepted) if !accepted.contains(&configured) => CodecId::F32,
+                _ => configured,
+            };
+            let (codec, base, base_round) = if configured.needs_base() {
+                match self.last_community.lock().unwrap().clone() {
+                    Some((r, m)) => (configured, Some(m), r),
+                    // No lossless streamed dispatch seen yet: full send.
+                    None => (CodecId::F32, None, 0),
+                }
+            } else {
+                (configured, None, 0)
+            };
+            let task_spec = TaskSpec::default();
+            let send = StreamSend {
+                purpose: StreamPurpose::TaskCompletion,
+                task_id,
+                round,
+                learner_id: &self.id,
+                model: &trained,
+                meta: &meta,
+                spec: &task_spec,
+                codec,
+                base: base.as_deref(),
+                base_round,
+                chunk_bytes: chunk.max(client::MIN_CHUNK_BYTES),
+            };
+            let fallback = self.delta_fallback.load(Ordering::SeqCst);
+            self.with_callback_conn(|conn| {
+                // The controller may have moved past our base (async
+                // staleness): retry full rather than dropping the round —
+                // unless the env asked refusals to surface
+                // (`delta_fallback: false`).
+                let rpc_fn = &mut |msg| client::rpc(&mut *conn, &msg);
+                if fallback {
+                    client::stream_model_with_fallback(rpc_fn, &send).map(|_| ())
+                } else {
+                    client::stream_model_with(rpc_fn, &send).map(|_| ())
+                }
+            })
+        } else {
+            let proto = ModelProto::from_model(&trained, DType::F32, ByteOrder::Little);
+            self.with_callback_conn(|conn| {
+                client::mark_task_completed(conn, task_id, &self.id, proto, meta)
+            })
+        };
+        upload.map_err(|e| anyhow::anyhow!("completion callback: {e}"))
+    }
+
+    /// Record a lossless streamed dispatch as the new delta base.
+    fn record_community(&self, round: u64, codec: CodecId, model: &Arc<TensorModel>) {
+        if codec.is_lossless() {
+            *self.last_community.lock().unwrap() = Some((round, Arc::clone(model)));
+        }
     }
 }
 
@@ -177,11 +313,15 @@ impl Service for LearnerServicer {
             return Message::error(ErrorCode::Unavailable, "learner is shut down");
         }
         match msg {
-            Message::Hello { proto_version } => {
+            Message::Hello { proto_version, codecs } => {
                 if proto_version == PROTO_VERSION {
                     Message::HelloAck {
                         proto_version: PROTO_VERSION,
                         component: format!("learner/{}", learner.id),
+                        codecs: crate::tensor::codec::negotiate(
+                            &codecs,
+                            &client::SUPPORTED_CODECS,
+                        ),
                     }
                 } else {
                     Message::error(
@@ -209,18 +349,125 @@ impl Service for LearnerServicer {
                     Err(e) => Message::error(ErrorCode::Internal, format!("eval failed: {e:#}")),
                 }
             }
-            Message::Heartbeat { .. } => Message::HeartbeatAck {
-                component: format!("learner/{}", learner.id),
-                healthy: true,
-            },
+            Message::Heartbeat { .. } => {
+                // Like the controller, use the driver's periodic probe to
+                // sweep streams abandoned by a dead peer.
+                learner.ingest.gc_idle();
+                Message::HeartbeatAck {
+                    component: format!("learner/{}", learner.id),
+                    healthy: true,
+                }
+            }
             Message::Shutdown => {
                 learner.shutdown.store(true, Ordering::SeqCst);
                 Message::Ack { task_id: 0, ok: true }
             }
-            // Learners have no inbound data plane: models arrive inline
-            // with RunTask/EvaluateModel (dispatch fan-out reuses one
-            // encoded buffer across all learners — streaming would undo
-            // that sharing).
+            // Symmetric data plane: dispatch can arrive as a chunked
+            // model stream. Chunks decode here, in the connection
+            // handler — outside the training executor — so training and
+            // ingest overlap.
+            Message::ModelStreamBegin {
+                stream_id,
+                task_id,
+                round,
+                purpose,
+                learner_id,
+                codec,
+                base_round,
+                layout,
+                meta,
+                spec,
+            } => {
+                if !matches!(purpose, StreamPurpose::RunTask | StreamPurpose::Evaluate) {
+                    return Message::error(
+                        ErrorCode::Unsupported,
+                        "learner accepts only dispatch streams (RunTask / Evaluate)",
+                    );
+                }
+                let base = if codec.needs_base() {
+                    learner
+                        .last_community
+                        .lock()
+                        .unwrap()
+                        .clone()
+                        .filter(|(r, _)| *r == base_round)
+                        .map(|(_, m)| m)
+                } else {
+                    None
+                };
+                learner.ingest.begin(
+                    StreamBegin {
+                        stream_id,
+                        task_id,
+                        round,
+                        purpose,
+                        learner_id,
+                        codec,
+                        base_round,
+                        layout,
+                        meta,
+                        spec,
+                    },
+                    None,
+                    base,
+                )
+            }
+            Message::ModelChunk { stream_id, seq, bytes } => {
+                learner.ingest.chunk(stream_id, seq, &bytes)
+            }
+            Message::ModelStreamEnd { stream_id, digest } => {
+                let finished = match learner.ingest.end(stream_id, digest) {
+                    Ok(f) => f,
+                    Err(reply) => return reply,
+                };
+                let model = Arc::new(finished.model);
+                // A lossless streamed dispatch carries the community
+                // model bit-exactly: record it (with its identity) as
+                // the delta base for uploads and later dispatches —
+                // but only on the success paths below. The controller
+                // installs its side of the base only when some learner
+                // replied non-error (`any_delivered`); recording ours
+                // on an error reply would let the two bases diverge
+                // permanently under `delta_fallback: false`.
+                match finished.purpose {
+                    StreamPurpose::RunTask => {
+                        // Queue training and ack, exactly like one-shot
+                        // RunTask (Fig. 9).
+                        learner.record_community(finished.round, finished.codec, &model);
+                        learner.run_train_task_model(
+                            finished.task_id,
+                            finished.round,
+                            model,
+                            finished.spec,
+                        );
+                        Message::Ack { task_id: finished.task_id, ok: true }
+                    }
+                    StreamPurpose::Evaluate => {
+                        // The End reply IS the eval reply (Fig. 10's
+                        // synchronous call, streamed).
+                        match learner.trainer.evaluate(&model, &learner.dataset) {
+                            Ok(result) => {
+                                learner.record_community(
+                                    finished.round,
+                                    finished.codec,
+                                    &model,
+                                );
+                                Message::EvaluateModelReply {
+                                    task_id: finished.task_id,
+                                    learner_id: learner.id.clone(),
+                                    result,
+                                }
+                            }
+                            Err(e) => Message::error(
+                                ErrorCode::Internal,
+                                format!("eval failed: {e:#}"),
+                            ),
+                        }
+                    }
+                    // begin() refused upload purposes already.
+                    _ => Message::error(ErrorCode::Unsupported, "unexpected upload stream"),
+                }
+            }
             other => {
                 Message::error(ErrorCode::Unsupported, format!("unexpected {}", other.kind()))
             }
@@ -247,6 +494,7 @@ mod tests {
                 Message::Hello { .. } => Message::HelloAck {
                     proto_version: PROTO_VERSION,
                     component: "capture".into(),
+                    codecs: client::SUPPORTED_CODECS.to_vec(),
                 },
                 Message::MarkTaskCompleted { task_id, learner_id, meta, .. } => {
                     self.completions.lock().unwrap().push((task_id, learner_id, meta));

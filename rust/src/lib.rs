@@ -57,9 +57,10 @@ pub mod prelude {
     pub use crate::driver::{run_simulated, FederationReport};
     pub use crate::learner::Learner;
     pub use crate::metrics::FedOp;
+    pub use crate::config::WireCodecChoice;
     pub use crate::proto::client::{ControllerClient, LearnerClient, RpcError};
     pub use crate::proto::ErrorCode;
-    pub use crate::tensor::{DType, Tensor, TensorModel};
+    pub use crate::tensor::{CodecId, DType, Tensor, TensorModel};
 }
 
 /// Crate-wide result alias.

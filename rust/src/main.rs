@@ -31,7 +31,7 @@ fn main() {
 }
 
 fn usage() -> String {
-    "metisfl <driver|controller|learner|simulate|stress|table1> [options]\n\
+    "metisfl <driver|controller|learner|simulate|stress|table1|bench-check> [options]\n\
      Run `metisfl <subcommand> --help` for options."
         .to_string()
 }
@@ -52,6 +52,7 @@ fn run(args: &[String]) -> anyhow::Result<()> {
             println!("{}", metisfl::baselines::capabilities::render_table());
             Ok(())
         }
+        "bench-check" => cmd_bench_check(rest),
         "--help" | "-h" | "help" => {
             println!("{}", usage());
             Ok(())
@@ -143,6 +144,9 @@ fn cmd_learner(raw: &[String]) -> anyhow::Result<()> {
         trainer,
         dataset,
     );
+    learner.set_stream_chunk(env.effective_stream_chunk());
+    learner.set_upload_codec(env.upload_codec());
+    learner.set_delta_fallback(env.delta_fallback);
     let server = metisfl::net::serve(
         a.get("listen").unwrap(),
         Arc::new(metisfl::learner::LearnerServicer(Arc::clone(&learner))) as Arc<dyn Service>,
@@ -214,6 +218,130 @@ fn cmd_stress(raw: &[String]) -> anyhow::Result<()> {
         seed: 42,
     };
     metisfl::harness::figure_sweep(config).emit_panels()?;
+    Ok(())
+}
+
+/// Throughput metrics the CI perf gate tracks: (report name, column).
+/// Every row of the named report contributes a `<report>/<row>/<column>`
+/// metric; which ones actually gate is decided by what the committed
+/// baseline lists. All are higher-is-better; timing columns are
+/// deliberately excluded — quick-mode wall-clock on shared CI cores is
+/// too noisy for a hard gate, throughput floors are not.
+const GATED_METRICS: &[(&str, &str)] = &[
+    ("codec_ablation", "enc+dec MB/s"),
+    ("agg_ablation_axpy", "GB/s (best)"),
+];
+
+fn cmd_bench_check(raw: &[String]) -> anyhow::Result<()> {
+    let cmd = Command::new(
+        "metisfl bench-check",
+        "merge bench_out/*.json into one report and gate against a baseline",
+    )
+    .opt("dir", Some("bench_out"), "directory holding per-bench JSON reports")
+    .opt("out", None, "write the merged BENCH_<sha>.json here")
+    .opt("baseline", None, "BENCH_baseline.json to compare against (omit to skip the gate)")
+    .opt("threshold", Some("0.25"), "max allowed fractional throughput drop");
+    let a = parse(&cmd, raw)?;
+    let dir = std::path::Path::new(a.get("dir").unwrap());
+    let threshold = a.get_f64("threshold")?;
+
+    // Merge every per-bench report and extract the gated metrics.
+    use metisfl::json::{parse as jparse, to_string_pretty, Value};
+    let mut reports: Vec<Value> = Vec::new();
+    let mut metrics: std::collections::BTreeMap<String, Value> = Default::default();
+    let mut entries: Vec<_> = std::fs::read_dir(dir)
+        .map_err(|e| anyhow::anyhow!("reading {}: {e}", dir.display()))?
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.extension().is_some_and(|x| x == "json"))
+        .collect();
+    entries.sort();
+    for path in entries {
+        let v = jparse(&std::fs::read_to_string(&path)?)
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+        let (Some(name), Some(headers), Some(rows)) = (
+            v.get("name").and_then(|x| x.as_str()).map(str::to_string),
+            v.get("headers").and_then(|x| x.as_array()).map(|a| a.to_vec()),
+            v.get("rows").and_then(|x| x.as_array()).map(|a| a.to_vec()),
+        ) else {
+            continue; // not a ReportWriter file
+        };
+        for (report, column) in GATED_METRICS {
+            if name != *report {
+                continue;
+            }
+            let Some(col) = headers.iter().position(|h| h.as_str() == Some(*column)) else {
+                continue;
+            };
+            for row in &rows {
+                let cells = row.as_array().unwrap_or(&[]);
+                let (Some(label), Some(cell)) =
+                    (cells.first().and_then(|c| c.as_str()), cells.get(col))
+                else {
+                    continue;
+                };
+                if let Some(value) = cell.as_str().and_then(|s| s.parse::<f64>().ok()) {
+                    metrics.insert(format!("{name}/{label}/{column}"), value.into());
+                }
+            }
+        }
+        reports.push(v);
+    }
+    if reports.is_empty() {
+        anyhow::bail!("no bench reports found under {}", dir.display());
+    }
+    let merged = Value::object(vec![
+        ("schema", 1usize.into()),
+        ("metrics", Value::Object(metrics.clone())),
+        ("reports", Value::Array(reports)),
+    ]);
+    if let Some(out) = a.get("out") {
+        std::fs::write(out, to_string_pretty(&merged))?;
+        println!("wrote {out}");
+    }
+
+    // Gate: every baseline metric present in the current run must not
+    // have dropped by more than `threshold`.
+    let Some(baseline_path) = a.get("baseline") else {
+        println!("no --baseline given; merged {} metrics without gating", metrics.len());
+        return Ok(());
+    };
+    let baseline = jparse(&std::fs::read_to_string(baseline_path)?)
+        .map_err(|e| anyhow::anyhow!("parsing {baseline_path}: {e}"))?;
+    let empty: std::collections::BTreeMap<String, Value> = Default::default();
+    let base_metrics = baseline
+        .get("metrics")
+        .and_then(|m| m.as_object())
+        .unwrap_or(&empty);
+    let mut regressions = Vec::new();
+    let mut compared = 0usize;
+    for (key, base) in base_metrics {
+        let Some(base) = base.as_f64() else { continue };
+        let Some(cur) = metrics.get(key).and_then(|v| v.as_f64()) else {
+            println!("warning: baseline metric '{key}' missing from this run");
+            continue;
+        };
+        compared += 1;
+        let floor = base * (1.0 - threshold);
+        let verdict = if cur < floor { "REGRESSION" } else { "ok" };
+        println!("{verdict:>10}  {key}: baseline {base:.2}, current {cur:.2} (floor {floor:.2})");
+        if cur < floor {
+            regressions.push(key.clone());
+        }
+    }
+    if compared == 0 {
+        anyhow::bail!("baseline {baseline_path} shares no metrics with this run");
+    }
+    if !regressions.is_empty() {
+        anyhow::bail!(
+            "throughput regressed >{:.0}% on {} metric(s): {} — if intentional, apply the \
+             'perf-regression-ok' label (see .github/bench/README.md)",
+            threshold * 100.0,
+            regressions.len(),
+            regressions.join(", ")
+        );
+    }
+    println!("bench gate passed ({compared} metric(s) within {:.0}%)", threshold * 100.0);
     Ok(())
 }
 

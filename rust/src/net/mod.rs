@@ -27,30 +27,46 @@
 //! shutdown — issued through the stubs in [`crate::proto::client`]
 //! rather than hand-rolled `match` blocks. Sessions open with a
 //! versioned `Hello`/`HelloAck` handshake
-//! ([`crate::proto::PROTO_VERSION`]); failures carry a structured
+//! ([`crate::proto::PROTO_VERSION`]) that also negotiates the wire
+//! codec set (`Hello` offers, `HelloAck` returns the accepted
+//! intersection); failures carry a structured
 //! [`crate::proto::ErrorCode`]. On tcp, every frame additionally starts
 //! with the [`frame::FRAME_MAGIC`] + [`frame::FRAME_VERSION`] header, so
 //! a non-MetisFL peer fails on its first bytes instead of driving an
 //! unbounded allocation.
 //!
-//! ## Data plane
+//! ## Data plane (symmetric, codec-aware)
 //!
-//! Bulk model payloads move as a chunked stream:
+//! Bulk model payloads move as a chunked stream in **both** directions
+//! — learner → controller uploads AND controller → learner dispatch
+//! (`RunTask` / `Evaluate` purposes, enabled together by
+//! `stream_chunk_bytes`):
 //!
 //! ```text
-//! ModelStreamBegin { stream_id, task_id, round, purpose, layout, meta }
+//! ModelStreamBegin { stream_id, task_id, round, purpose, codec,
+//!                    base_round, layout, meta, spec }
 //! ModelChunk       { stream_id, seq: 0.., bytes }   (element-ordered)
 //! ModelStreamEnd   { stream_id, digest: fnv1a64(payload) }
 //! ```
 //!
 //! Each step is acked, so strict send/recv pairing is preserved on every
-//! transport (including the secure channel's per-record sequence MACs).
-//! The sender encodes one tensor at a time; the receiver decodes each
-//! chunk on arrival straight into arena-backed tensor buffers sized from
-//! `layout` — neither side ever materializes a whole-model wire buffer,
-//! receive overlaps decode, and controller-side peak extra memory is
-//! O(chunk × in-flight streams) instead of O(learners × model). The
-//! streamed and one-shot paths are property-tested bitwise-identical.
+//! transport (including the secure channel's per-record sequence MACs);
+//! the `End` ack doubles as the purpose's reply (`EvaluateModelReply`
+//! for eval streams). The sender encodes one tensor at a time through
+//! the stream's negotiated [`crate::tensor::WireCodec`] (`f32`, lossy
+//! `bf16`, or lossless XOR-`delta` against the last acknowledged
+//! community model — `base_round` names the base; a receiver without it
+//! refuses with `NotFound` and the sender falls back to full f32). The
+//! receiver decodes each chunk on arrival straight into arena-backed
+//! tensor buffers sized from `layout` (the shared engine in
+//! [`crate::proto::ingest`]) — neither side ever materializes a
+//! whole-model wire buffer, receive overlaps decode, and peak extra
+//! memory is O(chunk × in-flight streams) instead of O(peers × model).
+//! On dispatch the controller encodes every chunk ONCE and fans the
+//! same frame bytes out to all selected learners (one shared stream
+//! id), so fan-out encode work is O(model), not O(learners × model).
+//! The streamed and one-shot paths are property-tested
+//! bitwise-identical for the lossless codecs; bf16 is bounded-error.
 
 pub mod frame;
 pub mod inproc;

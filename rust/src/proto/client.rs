@@ -6,11 +6,15 @@
 //!
 //! * [`ControllerClient`] / [`LearnerClient`] — one method per RPC,
 //!   returning domain values or a structured [`RpcError`]. Both open
-//!   their session with the versioned [`hello`] handshake.
-//! * [`stream_model`] — the data-plane sender: walks a model tensor by
-//!   tensor and ships it as `ModelStreamBegin` → `ModelChunk`* →
-//!   `ModelStreamEnd`. Sender-side peak extra memory is one encoded
-//!   tensor plus one chunk, regardless of model size.
+//!   their session with the versioned [`hello`] handshake, which also
+//!   negotiates the wire codec set ([`hello_negotiate`] /
+//!   [`SUPPORTED_CODECS`]).
+//! * [`stream_model_send`] — the data-plane sender: walks a model
+//!   tensor by tensor through a [`StreamSend`]'s codec and ships it as
+//!   `ModelStreamBegin` → `ModelChunk`* → `ModelStreamEnd`. Sender-side
+//!   peak extra memory is one encoded tensor plus one chunk, regardless
+//!   of model size. Delta sends fall back to full f32 when the receiver
+//!   lacks the base ([`stream_model_with_fallback`]).
 //! * Reply interpreters ([`ack_of`], [`eval_reply_of`]) shared with the
 //!   schedulers' broadcast paths, which keep the encode-once
 //!   `send_raw` fan-out but no longer parse replies by hand.
@@ -26,8 +30,12 @@ use super::{
     TensorLayoutProto, PROTO_VERSION,
 };
 use crate::net::{ClientConn, Psk};
-use crate::tensor::{ByteOrder, DType, TensorModel};
+use crate::tensor::{CodecId, TensorModel};
 use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Wire codecs this build offers in the `Hello` handshake, in `auto`
+/// preference order (see [`crate::tensor::codec`]).
+pub const SUPPORTED_CODECS: [CodecId; 3] = CodecId::ALL;
 
 /// Default data-plane chunk size (256 KiB): large enough to amortize
 /// per-chunk framing/ack overhead, small enough that in-flight receive
@@ -132,12 +140,22 @@ fn expect_ack(reply: Message) -> RpcResult<u64> {
     ack_of(&reply)
 }
 
-/// Versioned session opener: announce [`PROTO_VERSION`], return the
-/// peer's version. Mismatches come back as
+/// Versioned session opener: announce [`PROTO_VERSION`] and our codec
+/// set, return the peer's version. Mismatches come back as
 /// `RpcError::Remote { code: VersionMismatch, .. }` from the peer.
 pub fn hello(conn: &mut dyn ClientConn) -> RpcResult<u32> {
-    match rpc(conn, &Message::Hello { proto_version: PROTO_VERSION })? {
-        Message::HelloAck { proto_version, .. } => Ok(proto_version),
+    hello_negotiate(conn).map(|(v, _)| v)
+}
+
+/// [`hello`] that also returns the codec set the peer accepted (the
+/// intersection of [`SUPPORTED_CODECS`] with the peer's own set).
+pub fn hello_negotiate(conn: &mut dyn ClientConn) -> RpcResult<(u32, Vec<CodecId>)> {
+    let msg = Message::Hello {
+        proto_version: PROTO_VERSION,
+        codecs: SUPPORTED_CODECS.to_vec(),
+    };
+    match rpc(conn, &msg)? {
+        Message::HelloAck { proto_version, codecs, .. } => Ok((proto_version, codecs)),
         other => Err(RpcError::Unexpected { expected: "HelloAck", got: other.kind().to_string() }),
     }
 }
@@ -218,15 +236,78 @@ pub fn next_stream_id() -> u64 {
     SALT.wrapping_add(CTR.fetch_add(1, Ordering::Relaxed).wrapping_mul(0x9E37_79B9_7F4A_7C15))
 }
 
-/// Stream one model over the data plane: `Begin` (layout + routing +
-/// metadata) → element-ordered `Chunk`s → `End` (running FNV-1a digest).
+/// Everything one data-plane stream send needs: routing, payload,
+/// codec, and the delta base (when the codec requires one).
+#[derive(Clone)]
+pub struct StreamSend<'a> {
+    pub purpose: StreamPurpose,
+    pub task_id: u64,
+    /// Purpose-dependent round field: scheduler round for uploads,
+    /// community round of the carried model for dispatch streams (the
+    /// identity the receiver records as its future delta base).
+    pub round: u64,
+    pub learner_id: &'a str,
+    pub model: &'a TensorModel,
+    pub meta: &'a TaskMeta,
+    /// Training hyperparameters for `RunTask` dispatch streams
+    /// (default for every other purpose).
+    pub spec: &'a TaskSpec,
+    pub codec: CodecId,
+    /// The shared base model for delta encoding; must be `Some` with a
+    /// matching layout when `codec.needs_base()`.
+    pub base: Option<&'a TensorModel>,
+    /// Identity (community round) of `base`.
+    pub base_round: u64,
+    pub chunk_bytes: usize,
+}
+
+impl<'a> StreamSend<'a> {
+    /// An f32 (no-base) send — the compatibility path every purpose can
+    /// fall back to.
+    #[allow(clippy::too_many_arguments)]
+    pub fn f32(
+        purpose: StreamPurpose,
+        task_id: u64,
+        round: u64,
+        learner_id: &'a str,
+        model: &'a TensorModel,
+        meta: &'a TaskMeta,
+        spec: &'a TaskSpec,
+        chunk_bytes: usize,
+    ) -> StreamSend<'a> {
+        StreamSend {
+            purpose,
+            task_id,
+            round,
+            learner_id,
+            model,
+            meta,
+            spec,
+            codec: CodecId::F32,
+            base: None,
+            base_round: 0,
+            chunk_bytes,
+        }
+    }
+}
+
+/// Stream one model over the data plane: `Begin` (layout + codec +
+/// routing + metadata) → element-ordered `Chunk`s → `End` (running
+/// FNV-1a digest). Returns the peer's `End` reply (an `Ack`, or the
+/// in-call reply for [`StreamPurpose::Evaluate`] streams).
 ///
-/// Tensors are encoded one at a time (f32, little-endian) and sliced
-/// into `chunk_bytes` chunks (clamped to [`MIN_CHUNK_BYTES`]), so the
-/// sender never holds a whole-model wire buffer. Each step is a
+/// Tensors are encoded one at a time through the send's codec and
+/// sliced into `chunk_bytes` chunks (clamped to [`MIN_CHUNK_BYTES`]),
+/// so the sender never holds a whole-model wire buffer. Each step is a
 /// request/response RPC on `conn`, which keeps the data plane working
 /// over every transport (tcp, secure, inproc) with strict send/recv
 /// pairing.
+pub fn stream_model_send(conn: &mut dyn ClientConn, send: &StreamSend<'_>) -> RpcResult<Message> {
+    let send = StreamSend { chunk_bytes: send.chunk_bytes.max(MIN_CHUNK_BYTES), ..send.clone() };
+    stream_model_with(&mut |msg| rpc(&mut *conn, &msg), &send)
+}
+
+/// Compatibility wrapper: f32 send with an `Ack`-only `End` reply.
 #[allow(clippy::too_many_arguments)]
 pub fn stream_model(
     conn: &mut dyn ClientConn,
@@ -238,60 +319,92 @@ pub fn stream_model(
     meta: &TaskMeta,
     chunk_bytes: usize,
 ) -> RpcResult<()> {
-    let chunk_bytes = chunk_bytes.max(MIN_CHUNK_BYTES);
-    stream_model_with(
-        |msg| rpc(&mut *conn, &msg),
-        purpose,
-        task_id,
-        round,
-        learner_id,
-        model,
-        meta,
-        chunk_bytes,
-    )
+    let spec = TaskSpec::default();
+    let send =
+        StreamSend::f32(purpose, task_id, round, learner_id, model, meta, &spec, chunk_bytes);
+    ack_of(&stream_model_send(conn, &send)?)?;
+    Ok(())
 }
 
 /// The data-plane send walk itself — `Begin` → `Chunk`s → `End` with
-/// the running digest — shared by [`stream_model`] and the tests that
-/// must mirror the real sender byte for byte (including adversarial
-/// sub-minimum chunk sizes, which is why this layer does NOT clamp).
-/// `rpc_fn` delivers one request and returns the peer's reply.
+/// the running digest — shared by [`stream_model_send`], the controller
+/// dispatch fallback path, and the tests that must mirror the real
+/// sender byte for byte (including adversarial sub-minimum chunk sizes,
+/// which is why this layer does NOT clamp). `rpc_fn` delivers one
+/// request and returns the peer's reply; the final `End` reply is
+/// returned with remote `Error`s surfaced as [`RpcError::Remote`].
 #[doc(hidden)]
-#[allow(clippy::too_many_arguments)]
-pub fn stream_model_with(
-    mut rpc_fn: impl FnMut(Message) -> RpcResult<Message>,
-    purpose: StreamPurpose,
-    task_id: u64,
-    round: u64,
-    learner_id: &str,
-    model: &TensorModel,
-    meta: &TaskMeta,
-    chunk_bytes: usize,
-) -> RpcResult<()> {
-    let chunk_bytes = chunk_bytes.max(1);
+pub fn stream_model_with<F>(rpc_fn: &mut F, send: &StreamSend<'_>) -> RpcResult<Message>
+where
+    F: FnMut(Message) -> RpcResult<Message>,
+{
+    let chunk_bytes = send.chunk_bytes.max(1);
+    let codec = send.codec.codec();
+    let base = if send.codec.needs_base() {
+        let base = send.base.ok_or_else(|| {
+            RpcError::Transport(anyhow::anyhow!("{} codec requires a base model", send.codec))
+        })?;
+        let aligned = base.tensors.len() == send.model.tensors.len()
+            && base
+                .tensors
+                .iter()
+                .zip(&send.model.tensors)
+                .all(|(b, m)| b.elem_count() == m.elem_count());
+        if !aligned {
+            return Err(RpcError::Transport(anyhow::anyhow!(
+                "delta base layout does not match the model being sent"
+            )));
+        }
+        Some(base)
+    } else {
+        None
+    };
     let stream_id = next_stream_id();
     let begin = Message::ModelStreamBegin {
         stream_id,
-        task_id,
-        round,
-        purpose,
-        learner_id: learner_id.to_string(),
-        layout: TensorLayoutProto::f32_layout_of(model),
-        meta: meta.clone(),
+        task_id: send.task_id,
+        round: send.round,
+        purpose: send.purpose,
+        learner_id: send.learner_id.to_string(),
+        codec: send.codec,
+        base_round: send.base_round,
+        layout: TensorLayoutProto::codec_layout_of(send.model, send.codec),
+        meta: send.meta.clone(),
+        spec: send.spec.clone(),
     };
     expect_ack(rpc_fn(begin)?)?;
     let mut seq = 0u64;
     let mut digest = FNV64_INIT;
-    for t in &model.tensors {
-        let bytes = t.encode_data(DType::F32, ByteOrder::Little);
+    for (i, t) in send.model.tensors.iter().enumerate() {
+        let bytes = codec.encode(&t.data, base.map(|b| &b.tensors[i].data[..]));
         for part in bytes.chunks(chunk_bytes) {
             digest = fnv1a64(digest, part);
             expect_ack(rpc_fn(Message::ModelChunk { stream_id, seq, bytes: part.to_vec() })?)?;
             seq += 1;
         }
     }
-    expect_ack(rpc_fn(Message::ModelStreamEnd { stream_id, digest })?)?;
-    Ok(())
+    match rpc_fn(Message::ModelStreamEnd { stream_id, digest })? {
+        Message::Error { code, detail } => Err(RpcError::Remote { code, detail }),
+        reply => Ok(reply),
+    }
+}
+
+/// [`stream_model_with`] that retries once with the full f32 codec when
+/// a base-needing codec is refused with `NotFound` (the receiver does
+/// not hold the announced base — new peer, stale round, async skew).
+#[doc(hidden)]
+pub fn stream_model_with_fallback<F>(rpc_fn: &mut F, send: &StreamSend<'_>) -> RpcResult<Message>
+where
+    F: FnMut(Message) -> RpcResult<Message>,
+{
+    match stream_model_with(rpc_fn, send) {
+        Err(RpcError::Remote { code: ErrorCode::NotFound, .. }) if send.codec.needs_base() => {
+            let full =
+                StreamSend { codec: CodecId::F32, base: None, base_round: 0, ..send.clone() };
+            stream_model_with(rpc_fn, &full)
+        }
+        other => other,
+    }
 }
 
 /// Typed stub for driver/learner → controller RPCs.
@@ -299,6 +412,8 @@ pub struct ControllerClient {
     conn: Box<dyn ClientConn>,
     /// Protocol version the controller reported in the handshake.
     pub peer_version: u32,
+    /// Codec set the controller accepted in the handshake.
+    pub peer_codecs: Vec<CodecId>,
 }
 
 impl ControllerClient {
@@ -309,8 +424,8 @@ impl ControllerClient {
 
     /// Wrap an existing connection, performing the handshake on it.
     pub fn from_conn(mut conn: Box<dyn ClientConn>) -> RpcResult<ControllerClient> {
-        let peer_version = hello(conn.as_mut())?;
-        Ok(ControllerClient { conn, peer_version })
+        let (peer_version, peer_codecs) = hello_negotiate(conn.as_mut())?;
+        Ok(ControllerClient { conn, peer_version, peer_codecs })
     }
 
     pub fn register(
@@ -404,6 +519,7 @@ impl ControllerClient {
 pub struct LearnerClient {
     conn: Box<dyn ClientConn>,
     pub peer_version: u32,
+    pub peer_codecs: Vec<CodecId>,
 }
 
 impl LearnerClient {
@@ -412,8 +528,8 @@ impl LearnerClient {
     }
 
     pub fn from_conn(mut conn: Box<dyn ClientConn>) -> RpcResult<LearnerClient> {
-        let peer_version = hello(conn.as_mut())?;
-        Ok(LearnerClient { conn, peer_version })
+        let (peer_version, peer_codecs) = hello_negotiate(conn.as_mut())?;
+        Ok(LearnerClient { conn, peer_version, peer_codecs })
     }
 
     /// Fire-and-forget train dispatch; Ok(()) once the learner acked.
@@ -465,10 +581,14 @@ mod tests {
     impl Service for Peer {
         fn handle(&self, msg: Message) -> Message {
             match msg {
-                Message::Hello { proto_version } if proto_version == PROTO_VERSION => {
-                    Message::HelloAck { proto_version: PROTO_VERSION, component: "peer".into() }
+                Message::Hello { proto_version, codecs } if proto_version == PROTO_VERSION => {
+                    Message::HelloAck {
+                        proto_version: PROTO_VERSION,
+                        component: "peer".into(),
+                        codecs: crate::tensor::codec::negotiate(&codecs, &SUPPORTED_CODECS),
+                    }
                 }
-                Message::Hello { proto_version } => Message::error(
+                Message::Hello { proto_version, .. } => Message::error(
                     ErrorCode::VersionMismatch,
                     format!("we speak v{PROTO_VERSION}, peer v{proto_version}"),
                 ),
@@ -486,6 +606,7 @@ mod tests {
         let server = serve("inproc://client-stub-test", Arc::new(Peer), None).unwrap();
         let mut c = ControllerClient::connect(&server.endpoint(), None).unwrap();
         assert_eq!(c.peer_version, PROTO_VERSION);
+        assert_eq!(c.peer_codecs, SUPPORTED_CODECS.to_vec());
         let (component, healthy) = c.heartbeat("t").unwrap();
         assert_eq!(component, "t");
         assert!(healthy);

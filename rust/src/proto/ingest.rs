@@ -1,0 +1,935 @@
+//! Inbound data-plane stream engine, shared by the controller (model
+//! uploads) and the learner (streamed dispatch) — the receiving half of
+//! the symmetric data plane.
+//!
+//! A [`StreamIngest`] owns the registry of in-flight inbound streams.
+//! Chunks decode **on arrival**, directly into pre-sized per-tensor f32
+//! buffers drawn from an optional [`BufferPool`] — the receiver never
+//! materializes a whole-model wire buffer, and receive overlaps decode.
+//! The component embedding the ingest decides what a finished stream
+//! *means* (store a contribution, install a community model, start a
+//! training task, run an evaluation) via the [`FinishedStream`] returned
+//! by [`StreamIngest::end`].
+//!
+//! Hostile-peer hardening (admission control before any buffer
+//! allocation, per-stream and aggregate announced-byte budgets, idle
+//! GC, the dead-flag chunk-race guard) lives here once instead of per
+//! component. Time is injected through a [`Clock`], so the idle-GC
+//! timeout path is deterministic under test.
+
+use super::{ErrorCode, Message, StreamPurpose, TaskMeta, TaskSpec, TensorLayoutProto};
+use crate::proto::wire::{fnv1a64, FNV64_INIT};
+use crate::tensor::{ByteOrder, CodecId, DType, Tensor, TensorModel};
+use crate::util::log_debug;
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Source of decode buffers: the controller plugs its aggregation
+/// [`ScratchArena`](crate::controller::aggregation::ScratchArena) in, so
+/// a steady-state streamed round re-fills the buffers the previous
+/// community model (and the store's evicted contributions) vacated.
+pub trait BufferPool: Send + Sync {
+    /// Check out a zero-extended buffer of exactly `len` elements.
+    fn take(&self, len: usize) -> Vec<f32>;
+    /// Hand a buffer back for reuse.
+    fn recycle(&self, buf: Vec<f32>);
+}
+
+/// Injected time source (tests swap in a deterministic clock).
+pub type Clock = Arc<dyn Fn() -> Instant + Send + Sync>;
+
+/// Caps on the inbound data plane, so a buggy or hostile peer cannot
+/// grow receiver memory without bound: concurrent open streams, the
+/// wire payload one stream may announce, the *aggregate* wire payload
+/// announced across all open streams (decoded f32 buffers can be up to
+/// 2× the wire size for bf16 payloads), and how long an idle stream may
+/// sit before being reclaimed (a peer that dies between `Begin` and
+/// `End` must not pin its buffers — or a registry slot — forever).
+#[derive(Debug, Clone)]
+pub struct IngestLimits {
+    pub max_open_streams: usize,
+    pub max_stream_bytes: usize,
+    pub max_total_stream_bytes: usize,
+    pub idle_timeout: Duration,
+}
+
+impl Default for IngestLimits {
+    fn default() -> IngestLimits {
+        IngestLimits {
+            max_open_streams: 256,
+            max_stream_bytes: 1 << 30,       // 1 GiB wire payload per stream
+            max_total_stream_bytes: 4 << 30, // 4 GiB announced across streams
+            idle_timeout: Duration::from_secs(300),
+        }
+    }
+}
+
+/// Decoded `ModelStreamBegin` fields, as the embedding component's
+/// message handler received them.
+pub struct StreamBegin {
+    pub stream_id: u64,
+    pub task_id: u64,
+    pub round: u64,
+    pub purpose: StreamPurpose,
+    pub learner_id: String,
+    pub codec: CodecId,
+    pub base_round: u64,
+    pub layout: Vec<TensorLayoutProto>,
+    pub meta: TaskMeta,
+    pub spec: TaskSpec,
+}
+
+/// A completed, digest-verified, fully decoded stream.
+pub struct FinishedStream {
+    pub purpose: StreamPurpose,
+    pub task_id: u64,
+    pub round: u64,
+    pub learner_id: String,
+    pub codec: CodecId,
+    pub meta: TaskMeta,
+    pub spec: TaskSpec,
+    pub model: TensorModel,
+}
+
+/// Announced structure of one in-flight tensor.
+struct StreamTensor {
+    name: String,
+    shape: Vec<usize>,
+    dtype: DType,
+    elems: usize,
+}
+
+/// An in-flight inbound model stream: the accumulator that becomes a
+/// [`FinishedStream`] at `End`.
+///
+/// Buffers are pre-sized from the `Begin` layout and drawn from the
+/// ingest's [`BufferPool`] when it has one. Chunks decode **on
+/// arrival** through the stream's codec, directly into the partially
+/// filled tensors; delta streams XOR against the resolved base as they
+/// decode, so no second pass over the model is ever needed.
+pub struct ModelStream {
+    purpose: StreamPurpose,
+    task_id: u64,
+    round: u64,
+    learner_id: String,
+    codec: CodecId,
+    meta: TaskMeta,
+    spec: TaskSpec,
+    /// Announced structure, one entry per tensor.
+    layout: Vec<StreamTensor>,
+    /// Delta base resolved by the embedding component at `Begin`.
+    base: Option<Arc<TensorModel>>,
+    /// Decoded output buffers, pool-drawn when available.
+    bufs: Vec<Vec<f32>>,
+    /// Elements decoded so far, per tensor.
+    filled: Vec<usize>,
+    /// Tensor currently being filled.
+    cur_tensor: usize,
+    /// Wire payload bytes consumed so far / expected in total.
+    received: usize,
+    expected: usize,
+    next_seq: u64,
+    /// Partial-element bytes straddling a chunk boundary (< element size).
+    carry: Vec<u8>,
+    /// Running FNV-1a 64 over the payload bytes.
+    digest: u64,
+    /// Pool to return `bufs` to if the stream dies.
+    pool: Option<Arc<dyn BufferPool>>,
+    /// Last `Begin`/`Chunk` arrival; idle streams past the limit are
+    /// garbage-collected.
+    last_activity: Instant,
+    /// Set by [`ModelStream::recycle`]: the buffers are gone. A chunk
+    /// handler that raced the close (it cloned the registry `Arc`
+    /// before removal) must fail gracefully instead of indexing the
+    /// drained `bufs`.
+    dead: bool,
+}
+
+impl ModelStream {
+    /// Fold one chunk's bytes into the partial model.
+    fn ingest(&mut self, mut bytes: &[u8]) -> Result<()> {
+        if self.received + bytes.len() > self.expected {
+            bail!(
+                "stream overrun: {} + {} > expected {}",
+                self.received,
+                bytes.len(),
+                self.expected
+            );
+        }
+        self.digest = fnv1a64(self.digest, bytes);
+        self.received += bytes.len();
+        let codec = self.codec.codec();
+        let base = self.base.clone();
+        while !bytes.is_empty() {
+            // Advance past tensors that are already full (zero-element
+            // tensors fall through immediately).
+            while self.cur_tensor < self.layout.len()
+                && self.filled[self.cur_tensor] == self.layout[self.cur_tensor].elems
+            {
+                self.cur_tensor += 1;
+            }
+            let t = self.cur_tensor;
+            if t >= self.layout.len() {
+                bail!("stream bytes beyond announced layout");
+            }
+            let elems = self.layout[t].elems;
+            let esz = self.layout[t].dtype.size_bytes();
+            let base_span = |lo: usize, hi: usize| {
+                base.as_ref().map(|b| &b.tensors[t].data[lo..hi])
+            };
+            // Complete a partial element left over from the last chunk.
+            if !self.carry.is_empty() {
+                let need = esz - self.carry.len();
+                let take = need.min(bytes.len());
+                self.carry.extend_from_slice(&bytes[..take]);
+                bytes = &bytes[take..];
+                if self.carry.len() == esz {
+                    let idx = self.filled[t];
+                    let carry = std::mem::take(&mut self.carry);
+                    codec.decode_into(
+                        &carry,
+                        base_span(idx, idx + 1),
+                        &mut self.bufs[t][idx..idx + 1],
+                    );
+                    self.filled[t] += 1;
+                }
+                continue;
+            }
+            // Bulk-decode whole elements into this tensor's buffer.
+            let max_bytes = (elems - self.filled[t]) * esz;
+            let take = bytes.len().min(max_bytes);
+            let whole = (take / esz) * esz;
+            if whole > 0 {
+                let lo = self.filled[t];
+                let n = whole / esz;
+                codec.decode_into(
+                    &bytes[..whole],
+                    base_span(lo, lo + n),
+                    &mut self.bufs[t][lo..lo + n],
+                );
+                self.filled[t] += n;
+            }
+            self.carry.extend_from_slice(&bytes[whole..take]);
+            bytes = &bytes[take..];
+        }
+        Ok(())
+    }
+
+    /// Finish the stream, returning the decoded model.
+    fn finish(mut self, digest: u64) -> std::result::Result<TensorModel, (Self, anyhow::Error)> {
+        if self.received != self.expected {
+            let e = anyhow::anyhow!(
+                "stream truncated: got {} of {} payload bytes",
+                self.received,
+                self.expected
+            );
+            return Err((self, e));
+        }
+        if !self.carry.is_empty() {
+            let e = anyhow::anyhow!("stream ends mid-element ({} carry bytes)", self.carry.len());
+            return Err((self, e));
+        }
+        if digest != self.digest {
+            let e = anyhow::anyhow!(
+                "stream digest mismatch: sender {:#018x}, receiver {:#018x}",
+                digest,
+                self.digest
+            );
+            return Err((self, e));
+        }
+        let bufs = std::mem::take(&mut self.bufs);
+        let tensors = self
+            .layout
+            .iter()
+            .zip(bufs)
+            .map(|(t, data)| Tensor::new(t.name.clone(), t.shape.clone(), data))
+            .collect();
+        Ok(TensorModel::new(tensors))
+    }
+
+    /// Hand every buffer back to the pool (stream abandoned or failed)
+    /// and mark the stream dead for any handler still holding its `Arc`.
+    fn recycle(&mut self) {
+        self.dead = true;
+        self.base = None;
+        if let Some(pool) = &self.pool {
+            for buf in self.bufs.drain(..) {
+                pool.recycle(buf);
+            }
+        } else {
+            self.bufs.clear();
+        }
+    }
+}
+
+/// Test-only handle keeping a stream's `Arc` alive across a close, to
+/// drive the dead-flag chunk-race path deterministically.
+#[doc(hidden)]
+pub struct StreamHold(Arc<Mutex<ModelStream>>);
+
+/// The inbound stream registry + admission control + wire-memory gauge.
+///
+/// Everything here stays off the embedding component's state mutex;
+/// per-stream locks sit below the registry lock, so chunk ingest for
+/// one peer never contends with another peer's stream.
+pub struct StreamIngest {
+    limits: IngestLimits,
+    streams: Mutex<HashMap<u64, Arc<Mutex<ModelStream>>>>,
+    /// Wire bytes announced by currently-open streams (admission budget
+    /// against `limits.max_total_stream_bytes`).
+    open_stream_bytes: AtomicUsize,
+    /// Wire-payload bytes currently held for model ingest (one-shot
+    /// protos being decoded + stream chunks in flight), plus the
+    /// high-water mark. This is the "second whole-model buffer" the
+    /// data plane eliminates; tests assert the streamed bound.
+    wire_in_flight: AtomicUsize,
+    wire_peak: AtomicUsize,
+    clock: Mutex<Clock>,
+}
+
+impl Default for StreamIngest {
+    fn default() -> StreamIngest {
+        StreamIngest::new(IngestLimits::default())
+    }
+}
+
+impl StreamIngest {
+    pub fn new(limits: IngestLimits) -> StreamIngest {
+        StreamIngest {
+            limits,
+            streams: Mutex::new(HashMap::new()),
+            open_stream_bytes: AtomicUsize::new(0),
+            wire_in_flight: AtomicUsize::new(0),
+            wire_peak: AtomicUsize::new(0),
+            clock: Mutex::new(Arc::new(Instant::now) as Clock),
+        }
+    }
+
+    /// Swap the time source (deterministic-clock tests; the default is
+    /// `Instant::now`).
+    pub fn set_clock(&self, clock: Clock) {
+        *self.clock.lock().unwrap() = clock;
+    }
+
+    fn now(&self) -> Instant {
+        let clock = self.clock.lock().unwrap();
+        (clock.as_ref())()
+    }
+
+    // ---- wire-memory gauge -------------------------------------------
+
+    /// Account `bytes` of wire payload held for ingest (also used by
+    /// the embedding component's one-shot decode path, so streamed and
+    /// one-shot runs share one gauge).
+    pub fn wire_hold(&self, bytes: usize) {
+        let now = self.wire_in_flight.fetch_add(bytes, Ordering::SeqCst) + bytes;
+        self.wire_peak.fetch_max(now, Ordering::SeqCst);
+    }
+
+    pub fn wire_release(&self, bytes: usize) {
+        self.wire_in_flight.fetch_sub(bytes, Ordering::SeqCst);
+    }
+
+    /// High-water mark of wire-payload bytes held for model ingest.
+    pub fn peak_wire_bytes(&self) -> usize {
+        self.wire_peak.load(Ordering::SeqCst)
+    }
+
+    /// Streams currently open.
+    pub fn open_streams(&self) -> usize {
+        self.streams.lock().unwrap().len()
+    }
+
+    // ---- protocol steps ----------------------------------------------
+
+    /// Open a stream. `pool` supplies decode buffers (or `None` for
+    /// plain allocation); `base` is the delta base the component
+    /// resolved from `args.base_round` — `None` when it holds no such
+    /// model, which refuses base-needing codecs with `NotFound` so the
+    /// sender can fall back to a full send.
+    pub fn begin(
+        &self,
+        args: StreamBegin,
+        pool: Option<Arc<dyn BufferPool>>,
+        base: Option<Arc<TensorModel>>,
+    ) -> Message {
+        if args.layout.is_empty() {
+            return Message::error(ErrorCode::StreamProtocol, "empty stream layout");
+        }
+        if args.codec.needs_base() && base.is_none() {
+            return Message::error(
+                ErrorCode::NotFound,
+                format!(
+                    "no shared {} base for round {} (send full instead)",
+                    args.codec, args.base_round
+                ),
+            );
+        }
+        let wire_dtype = args.codec.wire_dtype();
+        let mut parsed = Vec::with_capacity(args.layout.len());
+        let mut expected = 0usize;
+        for t in &args.layout {
+            if t.dtype != wire_dtype {
+                return Message::error(
+                    ErrorCode::StreamProtocol,
+                    format!(
+                        "layout dtype {:?} does not match codec {} ({:?})",
+                        t.dtype, args.codec, wire_dtype
+                    ),
+                );
+            }
+            if t.byte_order != ByteOrder::Little {
+                return Message::error(
+                    ErrorCode::StreamProtocol,
+                    "stream payloads are little-endian",
+                );
+            }
+            let elems = match t.elem_count_checked() {
+                Ok(n) => n,
+                Err(e) => return Message::error(ErrorCode::StreamProtocol, format!("{e:#}")),
+            };
+            let bytes = match t.byte_len_checked() {
+                Ok(n) => n,
+                Err(e) => return Message::error(ErrorCode::StreamProtocol, format!("{e:#}")),
+            };
+            expected = match expected.checked_add(bytes) {
+                Some(n) if n <= self.limits.max_stream_bytes => n,
+                _ => {
+                    return Message::error(
+                        ErrorCode::StreamProtocol,
+                        format!("stream exceeds {} payload bytes", self.limits.max_stream_bytes),
+                    )
+                }
+            };
+            parsed.push(StreamTensor {
+                name: t.name.clone(),
+                shape: t.shape.clone(),
+                dtype: t.dtype,
+                elems,
+            });
+        }
+        // A delta base must align elementwise with the announced layout.
+        if let Some(b) = &base {
+            let aligned = b.tensors.len() == parsed.len()
+                && b.tensors.iter().zip(&parsed).all(|(bt, lt)| bt.elem_count() == lt.elems);
+            if !aligned {
+                return Message::error(
+                    ErrorCode::StreamProtocol,
+                    format!("{} base layout does not match the stream layout", args.codec),
+                );
+            }
+        }
+        // Admission control runs BEFORE any buffer is allocated, so an
+        // unauthenticated `Begin` flood cannot commit memory: reclaim
+        // idle streams, then check slot, duplicate id, and the aggregate
+        // announced-bytes budget.
+        self.gc_idle();
+        {
+            let streams = self.streams.lock().unwrap();
+            if streams.len() >= self.limits.max_open_streams {
+                return Message::error(
+                    ErrorCode::StreamProtocol,
+                    format!("too many open streams (max {})", self.limits.max_open_streams),
+                );
+            }
+            if streams.contains_key(&args.stream_id) {
+                return Message::error(
+                    ErrorCode::StreamProtocol,
+                    format!("stream id {:#x} already open", args.stream_id),
+                );
+            }
+        }
+        let budget = self.open_stream_bytes.fetch_add(expected, Ordering::SeqCst) + expected;
+        if budget > self.limits.max_total_stream_bytes {
+            self.open_stream_bytes.fetch_sub(expected, Ordering::SeqCst);
+            return Message::error(
+                ErrorCode::StreamProtocol,
+                format!(
+                    "open streams would exceed {} announced bytes",
+                    self.limits.max_total_stream_bytes
+                ),
+            );
+        }
+        // Pre-size the decode buffers from the pool (when the component
+        // owns one): a steady-state streamed round re-fills the buffers
+        // the previous community model vacated.
+        let bufs: Vec<Vec<f32>> = parsed
+            .iter()
+            .map(|t| match &pool {
+                Some(p) => p.take(t.elems),
+                None => vec![0.0; t.elems],
+            })
+            .collect();
+        let filled = vec![0usize; parsed.len()];
+        let mut stream = ModelStream {
+            purpose: args.purpose,
+            task_id: args.task_id,
+            round: args.round,
+            learner_id: args.learner_id,
+            codec: args.codec,
+            meta: args.meta,
+            spec: args.spec,
+            layout: parsed,
+            base,
+            bufs,
+            filled,
+            cur_tensor: 0,
+            received: 0,
+            expected,
+            next_seq: 0,
+            carry: Vec::new(),
+            digest: FNV64_INIT,
+            pool,
+            last_activity: self.now(),
+            dead: false,
+        };
+        let mut streams = self.streams.lock().unwrap();
+        // Re-check under the lock: a racing Begin may have taken the id
+        // or the last slot while we were allocating.
+        if streams.len() >= self.limits.max_open_streams
+            || streams.contains_key(&args.stream_id)
+        {
+            drop(streams);
+            stream.recycle();
+            self.open_stream_bytes.fetch_sub(expected, Ordering::SeqCst);
+            return Message::error(
+                ErrorCode::StreamProtocol,
+                format!("stream id {:#x} rejected (slot raced away)", args.stream_id),
+            );
+        }
+        streams.insert(args.stream_id, Arc::new(Mutex::new(stream)));
+        Message::Ack { task_id: args.stream_id, ok: true }
+    }
+
+    /// Fold one chunk into its stream. Returns the ack (or a typed
+    /// error, after which the stream is gone).
+    pub fn chunk(&self, stream_id: u64, seq: u64, bytes: &[u8]) -> Message {
+        let Some(stream) = self.streams.lock().unwrap().get(&stream_id).cloned() else {
+            return Message::error(
+                ErrorCode::StreamProtocol,
+                format!("chunk for unknown stream {stream_id:#x}"),
+            );
+        };
+        self.chunk_into(&stream, stream_id, seq, bytes)
+    }
+
+    fn chunk_into(
+        &self,
+        stream: &Arc<Mutex<ModelStream>>,
+        stream_id: u64,
+        seq: u64,
+        bytes: &[u8],
+    ) -> Message {
+        self.wire_hold(bytes.len());
+        let result = {
+            let mut s = stream.lock().unwrap();
+            if s.dead {
+                // We raced a close: the registry entry is already gone
+                // and the buffers were recycled.
+                Err(anyhow::anyhow!("chunk for a closed stream"))
+            } else if seq != s.next_seq {
+                Err(anyhow::anyhow!("chunk seq {seq}, expected {}", s.next_seq))
+            } else {
+                s.last_activity = self.now();
+                s.next_seq += 1;
+                s.ingest(bytes)
+            }
+        };
+        self.wire_release(bytes.len());
+        match result {
+            Ok(()) => Message::Ack { task_id: stream_id, ok: true },
+            Err(e) => {
+                self.kill(stream_id);
+                Message::error(ErrorCode::StreamProtocol, format!("{e:#}"))
+            }
+        }
+    }
+
+    /// Close a stream: verify completeness + digest and hand the decoded
+    /// model back to the embedding component. `Err` carries the reply to
+    /// send the peer (the stream is already torn down).
+    pub fn end(&self, stream_id: u64, digest: u64) -> std::result::Result<FinishedStream, Message> {
+        let Some(stream) = self.streams.lock().unwrap().remove(&stream_id) else {
+            return Err(Message::error(
+                ErrorCode::StreamProtocol,
+                format!("end for unknown stream {stream_id:#x}"),
+            ));
+        };
+        // Sole holder now (the registry entry is gone; chunk handlers
+        // clone the Arc only while the entry exists and hold it briefly).
+        let stream = match Arc::try_unwrap(stream) {
+            Ok(m) => m.into_inner().unwrap(),
+            Err(arc) => {
+                // A racing chunk still holds the Arc: a protocol
+                // violation (chunks after End); drop the stream.
+                let mut s = arc.lock().unwrap();
+                self.open_stream_bytes.fetch_sub(s.expected, Ordering::SeqCst);
+                s.recycle();
+                return Err(Message::error(
+                    ErrorCode::StreamProtocol,
+                    "stream closed while chunks were in flight",
+                ));
+            }
+        };
+        self.open_stream_bytes.fetch_sub(stream.expected, Ordering::SeqCst);
+        let (purpose, task_id, round, learner_id, codec, meta, spec) = (
+            stream.purpose,
+            stream.task_id,
+            stream.round,
+            stream.learner_id.clone(),
+            stream.codec,
+            stream.meta.clone(),
+            stream.spec.clone(),
+        );
+        match stream.finish(digest) {
+            Ok(model) => Ok(FinishedStream {
+                purpose,
+                task_id,
+                round,
+                learner_id,
+                codec,
+                meta,
+                spec,
+                model,
+            }),
+            Err((mut s, e)) => {
+                s.recycle();
+                Err(Message::error(ErrorCode::StreamProtocol, format!("{e:#}")))
+            }
+        }
+    }
+
+    /// Reclaim streams with no activity past the idle timeout: a peer
+    /// that died mid-stream must not pin its buffers or leak a registry
+    /// slot until the cap locks streaming out entirely. Returns how many
+    /// streams were reclaimed.
+    pub fn gc_idle(&self) -> usize {
+        let now = self.now();
+        let expired: Vec<u64> = {
+            let streams = self.streams.lock().unwrap();
+            streams
+                .iter()
+                .filter(|(_, s)| {
+                    now.saturating_duration_since(s.lock().unwrap().last_activity)
+                        > self.limits.idle_timeout
+                })
+                .map(|(id, _)| *id)
+                .collect()
+        };
+        let n = expired.len();
+        for id in expired {
+            log_debug("ingest", &format!("reclaiming idle stream {id:#x}"));
+            self.kill(id);
+        }
+        n
+    }
+
+    /// Drop a failed/abandoned stream, recycle its buffers, and return
+    /// its announced bytes to the admission budget.
+    pub fn kill(&self, stream_id: u64) {
+        if let Some(stream) = self.streams.lock().unwrap().remove(&stream_id) {
+            let mut s = stream.lock().unwrap();
+            self.open_stream_bytes.fetch_sub(s.expected, Ordering::SeqCst);
+            s.recycle();
+        }
+    }
+
+    /// Keep a stream's `Arc` alive outside the registry — the handle a
+    /// racing chunk handler would hold. Test hook for the dead-flag
+    /// path; never used in production code.
+    #[doc(hidden)]
+    pub fn hold_for_test(&self, stream_id: u64) -> Option<StreamHold> {
+        self.streams.lock().unwrap().get(&stream_id).cloned().map(StreamHold)
+    }
+
+    /// Deliver a chunk through a held handle, exactly as a handler that
+    /// cloned the `Arc` before a racing close would.
+    #[doc(hidden)]
+    pub fn chunk_into_held(&self, hold: &StreamHold, seq: u64, bytes: &[u8]) -> Message {
+        // The stream id is only used for registry teardown + ack text;
+        // recover it from the registry if still present, else 0.
+        let id = {
+            let streams = self.streams.lock().unwrap();
+            streams
+                .iter()
+                .find(|(_, s)| Arc::ptr_eq(s, &hold.0))
+                .map(|(id, _)| *id)
+                .unwrap_or(0)
+        };
+        self.chunk_into(&hold.0, id, seq, bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelSpec;
+    use crate::proto::client::{stream_model_with, StreamSend};
+    use crate::proto::client::RpcResult;
+    use crate::util::Rng;
+
+    fn model(seed: u64) -> TensorModel {
+        let layout = ModelSpec::mlp(4, 2, 8).tensor_layout();
+        TensorModel::random_init(&layout, &mut Rng::new(seed))
+    }
+
+    /// Drive a full stream against an ingest through the REAL sender
+    /// walk, dispatching Begin/Chunk/End to the right ingest calls.
+    fn drive(
+        ingest: &StreamIngest,
+        send: &StreamSend<'_>,
+        base: Option<Arc<TensorModel>>,
+    ) -> RpcResult<FinishedStream> {
+        let finished: Mutex<Option<FinishedStream>> = Mutex::new(None);
+        let reply = stream_model_with(
+            &mut |msg| {
+                Ok(match msg {
+                    Message::ModelStreamBegin {
+                        stream_id,
+                        task_id,
+                        round,
+                        purpose,
+                        learner_id,
+                        codec,
+                        base_round,
+                        layout,
+                        meta,
+                        spec,
+                    } => ingest.begin(
+                        StreamBegin {
+                            stream_id,
+                            task_id,
+                            round,
+                            purpose,
+                            learner_id,
+                            codec,
+                            base_round,
+                            layout,
+                            meta,
+                            spec,
+                        },
+                        None,
+                        base.clone(),
+                    ),
+                    Message::ModelChunk { stream_id, seq, bytes } => {
+                        ingest.chunk(stream_id, seq, &bytes)
+                    }
+                    Message::ModelStreamEnd { stream_id, digest } => {
+                        match ingest.end(stream_id, digest) {
+                            Ok(f) => {
+                                let id = f.task_id;
+                                *finished.lock().unwrap() = Some(f);
+                                Message::Ack { task_id: id, ok: true }
+                            }
+                            Err(reply) => reply,
+                        }
+                    }
+                    other => Message::error(ErrorCode::Unsupported, other.kind()),
+                })
+            },
+            send,
+        )?;
+        let _ = reply;
+        Ok(finished.lock().unwrap().take().expect("stream did not finish"))
+    }
+
+    fn send_args<'a>(
+        m: &'a TensorModel,
+        meta: &'a TaskMeta,
+        spec: &'a TaskSpec,
+        codec: CodecId,
+        base: Option<&'a TensorModel>,
+        chunk: usize,
+    ) -> StreamSend<'a> {
+        StreamSend {
+            purpose: StreamPurpose::TaskCompletion,
+            task_id: 7,
+            round: 1,
+            learner_id: "l0",
+            model: m,
+            meta,
+            spec,
+            codec,
+            base,
+            base_round: 1,
+            chunk_bytes: chunk,
+        }
+    }
+
+    #[test]
+    fn every_codec_roundtrips_through_ingest() {
+        let m = model(3);
+        let base = Arc::new(model(4));
+        let meta = TaskMeta { num_samples: 9, ..Default::default() };
+        let spec = TaskSpec::default();
+        for codec in CodecId::ALL {
+            // 13-byte chunks split elements and tensors arbitrarily.
+            for chunk in [13usize, 64, 1 << 20] {
+                let ingest = StreamIngest::default();
+                let b = codec.needs_base().then(|| Arc::clone(&base));
+                let send = send_args(&m, &meta, &spec, codec, b.as_deref(), chunk);
+                let f = drive(&ingest, &send, b.clone()).unwrap();
+                assert_eq!(f.codec, codec);
+                assert_eq!(f.meta.num_samples, 9);
+                assert_eq!(ingest.open_streams(), 0);
+                if codec.is_lossless() {
+                    assert_eq!(f.model, m, "{codec} chunk {chunk}");
+                } else {
+                    // bf16: bounded error, structure preserved.
+                    assert_eq!(f.model.layout(), m.layout());
+                    for (a, b) in m.tensors.iter().zip(&f.model.tensors) {
+                        for (x, y) in a.data.iter().zip(&b.data) {
+                            let bound = x.abs() * (1.0 / 256.0) + f32::MIN_POSITIVE;
+                            assert!((x - y).abs() <= bound, "{x} vs {y}");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn delta_without_base_is_not_found() {
+        let m = model(5);
+        let meta = TaskMeta::default();
+        let spec = TaskSpec::default();
+        let ingest = StreamIngest::default();
+        // The sender believes it has a base; the receiver does not.
+        let base = model(6);
+        let send = send_args(&m, &meta, &spec, CodecId::Delta, Some(&base), 64);
+        let err = drive(&ingest, &send, None).unwrap_err();
+        match err {
+            crate::proto::client::RpcError::Remote { code, .. } => {
+                assert_eq!(code, ErrorCode::NotFound)
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(ingest.open_streams(), 0);
+    }
+
+    #[test]
+    fn idle_gc_uses_injected_clock() {
+        let ingest = StreamIngest::default();
+        let origin = Instant::now();
+        let offset = Arc::new(Mutex::new(Duration::ZERO));
+        let o = Arc::clone(&offset);
+        ingest.set_clock(Arc::new(move || origin + *o.lock().unwrap()));
+
+        let m = model(1);
+        let begin = StreamBegin {
+            stream_id: 9,
+            task_id: 1,
+            round: 0,
+            purpose: StreamPurpose::TaskCompletion,
+            learner_id: "a".into(),
+            codec: CodecId::F32,
+            base_round: 0,
+            layout: TensorLayoutProto::f32_layout_of(&m),
+            meta: TaskMeta::default(),
+            spec: TaskSpec::default(),
+        };
+        assert!(matches!(ingest.begin(begin, None, None), Message::Ack { ok: true, .. }));
+        assert_eq!(ingest.open_streams(), 1);
+        // Just inside the timeout: survives.
+        *offset.lock().unwrap() = IngestLimits::default().idle_timeout;
+        assert_eq!(ingest.gc_idle(), 0);
+        assert_eq!(ingest.open_streams(), 1);
+        // One nanosecond past: reclaimed.
+        *offset.lock().unwrap() =
+            IngestLimits::default().idle_timeout + Duration::from_nanos(1);
+        assert_eq!(ingest.gc_idle(), 1);
+        assert_eq!(ingest.open_streams(), 0);
+        // Budget returned: the same announced bytes admit again.
+        assert_eq!(ingest.open_stream_bytes.load(Ordering::SeqCst), 0);
+    }
+
+    #[test]
+    fn chunk_racing_a_close_errors_instead_of_panicking() {
+        let ingest = StreamIngest::default();
+        let m = model(2);
+        let begin = StreamBegin {
+            stream_id: 11,
+            task_id: 1,
+            round: 0,
+            purpose: StreamPurpose::TaskCompletion,
+            learner_id: "a".into(),
+            codec: CodecId::F32,
+            base_round: 0,
+            layout: TensorLayoutProto::f32_layout_of(&m),
+            meta: TaskMeta::default(),
+            spec: TaskSpec::default(),
+        };
+        assert!(matches!(ingest.begin(begin, None, None), Message::Ack { ok: true, .. }));
+        // A handler clones the Arc (it is mid-chunk)…
+        let hold = ingest.hold_for_test(11).unwrap();
+        // …while End arrives: the close sees the shared Arc, recycles
+        // the buffers, and marks the stream dead.
+        match ingest.end(11, FNV64_INIT) {
+            Err(Message::Error { code, detail }) => {
+                assert_eq!(code, ErrorCode::StreamProtocol);
+                assert!(detail.contains("in flight"), "{detail}");
+            }
+            other => panic!("unexpected {:?}", other.err()),
+        }
+        assert_eq!(ingest.open_streams(), 0);
+        // The racing chunk now lands on the dead stream: a typed error,
+        // not a panic on the drained buffers.
+        match ingest.chunk_into_held(&hold, 0, &[0u8; 4]) {
+            Message::Error { code, detail } => {
+                assert_eq!(code, ErrorCode::StreamProtocol);
+                assert!(detail.contains("closed stream"), "{detail}");
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn begin_rejects_codec_layout_mismatch() {
+        let ingest = StreamIngest::default();
+        let m = model(8);
+        // bf16 codec but an f32 layout: refused before any allocation.
+        let begin = StreamBegin {
+            stream_id: 21,
+            task_id: 1,
+            round: 0,
+            purpose: StreamPurpose::TaskCompletion,
+            learner_id: "a".into(),
+            codec: CodecId::Bf16,
+            base_round: 0,
+            layout: TensorLayoutProto::f32_layout_of(&m),
+            meta: TaskMeta::default(),
+            spec: TaskSpec::default(),
+        };
+        match ingest.begin(begin, None, None) {
+            Message::Error { code, .. } => assert_eq!(code, ErrorCode::StreamProtocol),
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(ingest.open_streams(), 0);
+    }
+
+    #[test]
+    fn begin_rejects_misaligned_delta_base() {
+        let ingest = StreamIngest::default();
+        let m = model(8);
+        let wrong_base = Arc::new(TensorModel::new(vec![Tensor::zeros("x", vec![3])]));
+        let begin = StreamBegin {
+            stream_id: 22,
+            task_id: 1,
+            round: 0,
+            purpose: StreamPurpose::TaskCompletion,
+            learner_id: "a".into(),
+            codec: CodecId::Delta,
+            base_round: 0,
+            layout: TensorLayoutProto::codec_layout_of(&m, CodecId::Delta),
+            meta: TaskMeta::default(),
+            spec: TaskSpec::default(),
+        };
+        match ingest.begin(begin, None, Some(wrong_base)) {
+            Message::Error { code, .. } => assert_eq!(code, ErrorCode::StreamProtocol),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+}

@@ -23,14 +23,19 @@
 //!   bitwise-identical results (property-tested).
 
 pub mod client;
+pub mod ingest;
 pub mod wire;
 
 /// Protocol version spoken by this build, negotiated via
 /// [`Message::Hello`]. v1 = the pre-split single-plane protocol; v2 adds
-/// the typed control plane + streaming data plane.
-pub const PROTO_VERSION: u32 = 2;
+/// the typed control plane + streaming data plane; v3 makes the data
+/// plane symmetric (controller→learner streamed dispatch) and
+/// codec-aware (`Hello` carries an offered codec set, `HelloAck` the
+/// accepted intersection, and every `ModelStreamBegin` names the codec
+/// and delta base it encodes against).
+pub const PROTO_VERSION: u32 = 3;
 
-use crate::tensor::{ByteOrder, DType, Tensor, TensorModel};
+use crate::tensor::{ByteOrder, CodecId, DType, Tensor, TensorModel};
 use anyhow::{bail, Result};
 use wire::{WireReader, WireWriter};
 
@@ -113,6 +118,12 @@ pub enum StreamPurpose {
     ShipModel,
     /// Learner → controller training completion (`MarkTaskCompleted`).
     TaskCompletion,
+    /// Controller → learner training dispatch (`RunTask`): the `End`
+    /// ack queues local training against the streamed model.
+    RunTask,
+    /// Controller → learner evaluation dispatch (`EvaluateModel`): the
+    /// `End` reply is the in-call `EvaluateModelReply`.
+    Evaluate,
 }
 
 impl StreamPurpose {
@@ -120,6 +131,8 @@ impl StreamPurpose {
         match self {
             StreamPurpose::ShipModel => 0,
             StreamPurpose::TaskCompletion => 1,
+            StreamPurpose::RunTask => 2,
+            StreamPurpose::Evaluate => 3,
         }
     }
 
@@ -127,6 +140,8 @@ impl StreamPurpose {
         Ok(match c {
             0 => StreamPurpose::ShipModel,
             1 => StreamPurpose::TaskCompletion,
+            2 => StreamPurpose::RunTask,
+            3 => StreamPurpose::Evaluate,
             _ => bail!("unknown stream purpose {c}"),
         })
     }
@@ -144,21 +159,27 @@ pub struct TensorLayoutProto {
 }
 
 impl TensorLayoutProto {
-    /// The stream layout `stream_model` announces for `model`: one
-    /// entry per tensor, f32 little-endian payload (the data plane's
-    /// only sender encoding today). Single source of truth shared by
-    /// the client stub and the tests that mirror it.
-    pub fn f32_layout_of(model: &TensorModel) -> Vec<TensorLayoutProto> {
+    /// The stream layout the sender announces for `model` under `codec`:
+    /// one entry per tensor, the codec's wire dtype, little-endian.
+    /// Single source of truth shared by the client stub, the controller
+    /// dispatch fan-out, and the tests that mirror them.
+    pub fn codec_layout_of(model: &TensorModel, codec: CodecId) -> Vec<TensorLayoutProto> {
+        let dtype = codec.wire_dtype();
         model
             .tensors
             .iter()
             .map(|t| TensorLayoutProto {
                 name: t.name.clone(),
-                dtype: DType::F32,
+                dtype,
                 byte_order: ByteOrder::Little,
                 shape: t.shape.clone(),
             })
             .collect()
+    }
+
+    /// [`TensorLayoutProto::codec_layout_of`] for the f32 codec.
+    pub fn f32_layout_of(model: &TensorModel) -> Vec<TensorLayoutProto> {
+        Self::codec_layout_of(model, CodecId::F32)
     }
 
     /// Element count, guarding against shape-product overflow from a
@@ -290,7 +311,7 @@ impl ModelProto {
 }
 
 /// Local-training hyperparameters carried by a train task.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone, PartialEq, Default)]
 pub struct TaskSpec {
     pub epochs: usize,
     pub batch_size: usize,
@@ -348,22 +369,32 @@ pub enum Message {
     /// Driver → controller: fetch current community model.
     GetModel,
     ModelReply { model: ModelProto, round: u64 },
-    /// Control-plane session opener: announce our protocol version.
-    Hello { proto_version: u32 },
-    /// Accepting reply to `Hello` (versions matched).
-    HelloAck { proto_version: u32, component: String },
+    /// Control-plane session opener: announce our protocol version and
+    /// the wire codecs we can speak (offered set).
+    Hello { proto_version: u32, codecs: Vec<CodecId> },
+    /// Accepting reply to `Hello` (versions matched); `codecs` is the
+    /// accepted intersection of the offered set with the responder's.
+    HelloAck { proto_version: u32, component: String, codecs: Vec<CodecId> },
     /// Data plane: open a model stream. Carries everything *except* the
-    /// payload — stream identity, routing fields, per-tensor layout (so
-    /// the receiver can pre-size decode buffers), and the task metadata
-    /// that `MarkTaskCompleted` would have carried inline.
+    /// payload — stream identity, routing fields, the wire codec the
+    /// chunks are encoded with (plus the delta base's identity when the
+    /// codec needs one), per-tensor layout (so the receiver can pre-size
+    /// decode buffers), the task metadata that `MarkTaskCompleted` would
+    /// have carried inline, and the `TaskSpec` a streamed `RunTask`
+    /// dispatch would have carried inline.
     ModelStreamBegin {
         stream_id: u64,
         task_id: u64,
         round: u64,
         purpose: StreamPurpose,
         learner_id: String,
+        codec: CodecId,
+        /// Identity (community round) of the shared base model a
+        /// delta-coded stream XORs against; 0 when the codec needs none.
+        base_round: u64,
         layout: Vec<TensorLayoutProto>,
         meta: TaskMeta,
+        spec: TaskSpec,
     },
     /// Data plane: one contiguous slice of the stream's flat payload
     /// (tensor byte blobs concatenated in layout order). `seq` starts at
@@ -402,6 +433,38 @@ const T_HELLO_ACK: u8 = 16;
 const T_STREAM_BEGIN: u8 = 17;
 const T_CHUNK: u8 = 18;
 const T_STREAM_END: u8 = 19;
+
+fn write_codecs(w: &mut WireWriter, codecs: &[CodecId]) {
+    let codes: Vec<u8> = codecs.iter().map(|c| c.code()).collect();
+    w.put_bytes(&codes);
+}
+
+/// Codec-set field of `Hello`/`HelloAck`. Tolerates the field being
+/// absent (empty set): a v2 peer's handshake must still *decode* so the
+/// handler can answer with a structured `VersionMismatch` instead of
+/// the connection dying on a wire error.
+fn read_codecs(r: &mut WireReader) -> Result<Vec<CodecId>> {
+    if r.is_done() {
+        return Ok(Vec::new());
+    }
+    r.get_bytes()?.iter().map(|&c| CodecId::from_code(c)).collect()
+}
+
+fn write_spec(w: &mut WireWriter, spec: &TaskSpec) {
+    w.put_varint(spec.epochs as u64);
+    w.put_varint(spec.batch_size as u64);
+    w.put_f64(spec.learning_rate);
+    w.put_varint(spec.step_budget as u64);
+}
+
+fn read_spec(r: &mut WireReader) -> Result<TaskSpec> {
+    Ok(TaskSpec {
+        epochs: r.get_varint()? as usize,
+        batch_size: r.get_varint()? as usize,
+        learning_rate: r.get_f64()?,
+        step_budget: r.get_varint()? as usize,
+    })
+}
 
 fn write_meta(w: &mut WireWriter, meta: &TaskMeta) {
     w.put_varint(meta.train_time_per_batch_us);
@@ -447,10 +510,7 @@ impl Message {
                 w.put_varint(*task_id);
                 w.put_varint(*round);
                 model.write(&mut w);
-                w.put_varint(spec.epochs as u64);
-                w.put_varint(spec.batch_size as u64);
-                w.put_f64(spec.learning_rate);
-                w.put_varint(spec.step_budget as u64);
+                write_spec(&mut w, spec);
             }
             Message::Ack { task_id, ok } => {
                 w.put_u8(T_ACK);
@@ -499,14 +559,16 @@ impl Message {
                 model.write(&mut w);
                 w.put_varint(*round);
             }
-            Message::Hello { proto_version } => {
+            Message::Hello { proto_version, codecs } => {
                 w.put_u8(T_HELLO);
                 w.put_varint(*proto_version as u64);
+                write_codecs(&mut w, codecs);
             }
-            Message::HelloAck { proto_version, component } => {
+            Message::HelloAck { proto_version, component, codecs } => {
                 w.put_u8(T_HELLO_ACK);
                 w.put_varint(*proto_version as u64);
                 w.put_str(component);
+                write_codecs(&mut w, codecs);
             }
             Message::ModelStreamBegin {
                 stream_id,
@@ -514,8 +576,11 @@ impl Message {
                 round,
                 purpose,
                 learner_id,
+                codec,
+                base_round,
                 layout,
                 meta,
+                spec,
             } => {
                 w.put_u8(T_STREAM_BEGIN);
                 w.put_varint(*stream_id);
@@ -523,11 +588,14 @@ impl Message {
                 w.put_varint(*round);
                 w.put_u8(purpose.code());
                 w.put_str(learner_id);
+                w.put_u8(codec.code());
+                w.put_varint(*base_round);
                 w.put_varint(layout.len() as u64);
                 for t in layout {
                     t.write(&mut w);
                 }
                 write_meta(&mut w, meta);
+                write_spec(&mut w, spec);
             }
             Message::ModelChunk { stream_id, seq, bytes } => {
                 w.put_u8(T_CHUNK);
@@ -564,12 +632,7 @@ impl Message {
                 task_id: r.get_varint()?,
                 round: r.get_varint()?,
                 model: ModelProto::read(&mut r)?,
-                spec: TaskSpec {
-                    epochs: r.get_varint()? as usize,
-                    batch_size: r.get_varint()? as usize,
-                    learning_rate: r.get_f64()?,
-                    step_budget: r.get_varint()? as usize,
-                },
+                spec: read_spec(&mut r)?,
             },
             T_ACK => Message::Ack { task_id: r.get_varint()?, ok: r.get_bool()? },
             T_MARK_COMPLETED => Message::MarkTaskCompleted {
@@ -607,10 +670,14 @@ impl Message {
                 let model = ModelProto::read(&mut r)?;
                 Message::ModelReply { model, round: r.get_varint()? }
             }
-            T_HELLO => Message::Hello { proto_version: r.get_varint()? as u32 },
+            T_HELLO => Message::Hello {
+                proto_version: r.get_varint()? as u32,
+                codecs: read_codecs(&mut r)?,
+            },
             T_HELLO_ACK => Message::HelloAck {
                 proto_version: r.get_varint()? as u32,
                 component: r.get_str()?,
+                codecs: read_codecs(&mut r)?,
             },
             T_STREAM_BEGIN => {
                 let stream_id = r.get_varint()?;
@@ -618,6 +685,8 @@ impl Message {
                 let round = r.get_varint()?;
                 let purpose = StreamPurpose::from_code(r.get_u8()?)?;
                 let learner_id = r.get_str()?;
+                let codec = CodecId::from_code(r.get_u8()?)?;
+                let base_round = r.get_varint()?;
                 let n = r.get_varint()? as usize;
                 if n > 1_000_000 {
                     bail!("implausible stream layout tensor count {n}");
@@ -626,14 +695,18 @@ impl Message {
                     .map(|_| TensorLayoutProto::read(&mut r))
                     .collect::<Result<Vec<_>>>()?;
                 let meta = read_meta(&mut r)?;
+                let spec = read_spec(&mut r)?;
                 Message::ModelStreamBegin {
                     stream_id,
                     task_id,
                     round,
                     purpose,
                     learner_id,
+                    codec,
+                    base_round,
                     layout,
                     meta,
+                    spec,
                 }
             }
             T_CHUNK => Message::ModelChunk {
@@ -671,7 +744,7 @@ impl Message {
                     .map(|t| t.name.len() + 8 * t.shape.len() + 16)
                     .sum::<usize>()
                     + learner_id.len()
-                    + 128
+                    + 192
             }
             _ => 128,
         }
@@ -783,14 +856,21 @@ mod tests {
             Message::Shutdown,
             Message::Error { code: ErrorCode::Rejected, detail: "nope".into() },
             Message::GetModel,
-            Message::Hello { proto_version: PROTO_VERSION },
-            Message::HelloAck { proto_version: PROTO_VERSION, component: "controller".into() },
+            Message::Hello { proto_version: PROTO_VERSION, codecs: CodecId::ALL.to_vec() },
+            Message::Hello { proto_version: PROTO_VERSION, codecs: Vec::new() },
+            Message::HelloAck {
+                proto_version: PROTO_VERSION,
+                component: "controller".into(),
+                codecs: vec![CodecId::F32, CodecId::Delta],
+            },
             Message::ModelStreamBegin {
                 stream_id: 0xDEAD_BEEF,
                 task_id: 7,
                 round: 2,
                 purpose: StreamPurpose::TaskCompletion,
                 learner_id: "l1".into(),
+                codec: CodecId::Delta,
+                base_round: 41,
                 layout: model
                     .tensors
                     .iter()
@@ -802,6 +882,19 @@ mod tests {
                     })
                     .collect(),
                 meta: TaskMeta { num_samples: 100, train_loss: 0.25, ..Default::default() },
+                spec: TaskSpec { epochs: 2, batch_size: 10, learning_rate: 0.5, step_budget: 3 },
+            },
+            Message::ModelStreamBegin {
+                stream_id: 1,
+                task_id: 9,
+                round: 3,
+                purpose: StreamPurpose::RunTask,
+                learner_id: String::new(),
+                codec: CodecId::Bf16,
+                base_round: 0,
+                layout: Vec::new(),
+                meta: TaskMeta::default(),
+                spec: TaskSpec::default(),
             },
             Message::ModelChunk { stream_id: 0xDEAD_BEEF, seq: 3, bytes: vec![1, 2, 3, 4, 5] },
             Message::ModelChunk { stream_id: 1, seq: 0, bytes: Vec::new() },
@@ -851,6 +944,32 @@ mod tests {
         };
         assert!(t.elem_count_checked().is_ok());
         assert!(t.byte_len_checked().is_err());
+    }
+
+    #[test]
+    fn v2_hello_without_codecs_still_decodes() {
+        // A pre-v3 peer's Hello/HelloAck carry no codec set. They must
+        // still decode (as an empty set) so the version check can answer
+        // with a typed VersionMismatch instead of a dropped connection.
+        let mut w = WireWriter::new();
+        w.put_u8(super::T_HELLO);
+        w.put_varint(2);
+        assert_eq!(
+            Message::decode(&w.into_bytes()).unwrap(),
+            Message::Hello { proto_version: 2, codecs: Vec::new() }
+        );
+        let mut w = WireWriter::new();
+        w.put_u8(super::T_HELLO_ACK);
+        w.put_varint(2);
+        w.put_str("controller");
+        assert_eq!(
+            Message::decode(&w.into_bytes()).unwrap(),
+            Message::HelloAck {
+                proto_version: 2,
+                component: "controller".into(),
+                codecs: Vec::new()
+            }
+        );
     }
 
     #[test]

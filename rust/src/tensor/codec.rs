@@ -1,0 +1,328 @@
+//! Negotiable wire codecs for the model data plane.
+//!
+//! The data plane moves tensor payloads as raw byte chunks; a *codec*
+//! decides what those bytes are. Three codecs are spoken today, offered
+//! and accepted in the `Hello`/`HelloAck` handshake and carried per
+//! stream by `ModelStreamBegin`:
+//!
+//! * [`CodecId::F32`] — today's tensor-as-bytes path: 4 bytes/element,
+//!   little-endian, bitwise lossless (the §3 baseline).
+//! * [`CodecId::Bf16`] — half-precision truncation (round-to-nearest-even
+//!   bf16), 2 bytes/element. Lossy: the receiver widens back to f32 on
+//!   decode and every downstream accumulation stays f32/f64, so only the
+//!   wire pays the precision cut. Error is bounded by bf16's 8 mantissa
+//!   bits (≤ 2⁻⁸ relative per element, property-tested).
+//! * [`CodecId::Delta`] — XOR of the current f32 bit pattern against a
+//!   **base model both peers hold** (the last community model the peer
+//!   acknowledged). 4 bytes/element, bitwise lossless, and the bytes are
+//!   overwhelmingly zero when the model moved little — the stream is
+//!   cheap to squeeze with any byte-level compressor and cheap to
+//!   checksum. Requires a shared base; senders fall back to full `F32`
+//!   when no base is shared (new learner, stale round, async staleness).
+//!
+//! Codecs are *element-size-stable*: encoded length is
+//! `elems × wire_dtype().size_bytes()`, which is what lets the chunked
+//! stream receiver pre-size its decode buffers from the announced layout
+//! before any payload byte arrives.
+
+use super::{bf16_bits_to_f32, f32_to_bf16_bits, DType};
+use anyhow::{bail, Result};
+
+/// Identity of a wire codec (negotiated in `Hello`, carried per stream).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CodecId {
+    /// f32 little-endian tensor-as-bytes (lossless, no base).
+    F32,
+    /// bf16 truncation, f32 widen on decode (lossy, no base).
+    Bf16,
+    /// f32 bit-XOR against a shared base model (lossless, needs base).
+    Delta,
+}
+
+impl CodecId {
+    /// Every codec this build speaks, in preference order for `auto`
+    /// resolution (lossless-and-small first).
+    pub const ALL: [CodecId; 3] = [CodecId::F32, CodecId::Bf16, CodecId::Delta];
+
+    pub fn code(self) -> u8 {
+        match self {
+            CodecId::F32 => 0,
+            CodecId::Bf16 => 1,
+            CodecId::Delta => 2,
+        }
+    }
+
+    pub fn from_code(c: u8) -> Result<CodecId> {
+        Ok(match c {
+            0 => CodecId::F32,
+            1 => CodecId::Bf16,
+            2 => CodecId::Delta,
+            _ => bail!("unknown wire codec code {c}"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            CodecId::F32 => "f32",
+            CodecId::Bf16 => "bf16",
+            CodecId::Delta => "delta",
+        }
+    }
+
+    /// Does a decode round-trip reproduce the input bit for bit?
+    pub fn is_lossless(self) -> bool {
+        !matches!(self, CodecId::Bf16)
+    }
+
+    /// Does this codec need a shared base model on both ends?
+    pub fn needs_base(self) -> bool {
+        matches!(self, CodecId::Delta)
+    }
+
+    /// Element type the encoded bytes are sized as on the wire (the
+    /// dtype a stream's `TensorLayoutProto` announces for this codec).
+    pub fn wire_dtype(self) -> DType {
+        match self {
+            CodecId::Bf16 => DType::Bf16,
+            CodecId::F32 | CodecId::Delta => DType::F32,
+        }
+    }
+
+    /// Static codec implementation for this id.
+    pub fn codec(self) -> &'static dyn WireCodec {
+        match self {
+            CodecId::F32 => &F32Codec,
+            CodecId::Bf16 => &Bf16Codec,
+            CodecId::Delta => &DeltaCodec,
+        }
+    }
+}
+
+impl std::fmt::Display for CodecId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Intersection of an offered codec set with ours, preserving `ours`'s
+/// order — the accept set a `HelloAck` carries.
+pub fn negotiate(offered: &[CodecId], ours: &[CodecId]) -> Vec<CodecId> {
+    ours.iter().copied().filter(|c| offered.contains(c)).collect()
+}
+
+/// One wire codec: element bytes in, element bytes out.
+///
+/// `base` is the shared base model's elements aligned with `cur`/`dst`
+/// (same tensor, same local element range); it MUST be `Some` with a
+/// matching length for [`CodecId::Delta`] and is ignored otherwise.
+/// Encoded bytes are little-endian regardless of host order.
+pub trait WireCodec: Send + Sync {
+    fn id(&self) -> CodecId;
+
+    /// Encode `cur` into wire bytes (`cur.len() × wire_dtype` bytes).
+    fn encode(&self, cur: &[f32], base: Option<&[f32]>) -> Vec<u8>;
+
+    /// Decode a whole-element span of wire bytes into `dst`.
+    /// `bytes.len()` must equal `dst.len() × wire_dtype` bytes.
+    fn decode_into(&self, bytes: &[u8], base: Option<&[f32]>, dst: &mut [f32]);
+}
+
+/// Encode an f32 slice as little-endian bytes — the §3 flatten-and-dump
+/// hot path (one memcpy on little-endian hosts), shared by
+/// `Tensor::encode_data` and the wire codecs.
+pub fn encode_f32_slice_le(data: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(data.len() * 4);
+    #[cfg(target_endian = "little")]
+    {
+        // SAFETY: f32 has no invalid bit patterns; the slice covers
+        // exactly the initialized storage.
+        let bytes =
+            unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+        out.extend_from_slice(bytes);
+    }
+    #[cfg(target_endian = "big")]
+    {
+        out.extend(data.iter().flat_map(|v| v.to_le_bytes()));
+    }
+    out
+}
+
+/// The identity codec: f32 little-endian.
+pub struct F32Codec;
+
+impl WireCodec for F32Codec {
+    fn id(&self) -> CodecId {
+        CodecId::F32
+    }
+
+    fn encode(&self, cur: &[f32], _base: Option<&[f32]>) -> Vec<u8> {
+        encode_f32_slice_le(cur)
+    }
+
+    fn decode_into(&self, bytes: &[u8], _base: Option<&[f32]>, dst: &mut [f32]) {
+        assert_eq!(bytes.len(), dst.len() * 4, "f32 codec span mismatch");
+        for (c, d) in bytes.chunks_exact(4).zip(dst.iter_mut()) {
+            *d = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+        }
+    }
+}
+
+/// bf16 truncation codec: 2 bytes/element, widened to f32 on decode so
+/// every accumulation stays full precision.
+pub struct Bf16Codec;
+
+impl WireCodec for Bf16Codec {
+    fn id(&self) -> CodecId {
+        CodecId::Bf16
+    }
+
+    fn encode(&self, cur: &[f32], _base: Option<&[f32]>) -> Vec<u8> {
+        let mut out = Vec::with_capacity(cur.len() * 2);
+        for v in cur {
+            out.extend(f32_to_bf16_bits(*v).to_le_bytes());
+        }
+        out
+    }
+
+    fn decode_into(&self, bytes: &[u8], _base: Option<&[f32]>, dst: &mut [f32]) {
+        assert_eq!(bytes.len(), dst.len() * 2, "bf16 codec span mismatch");
+        for (c, d) in bytes.chunks_exact(2).zip(dst.iter_mut()) {
+            *d = bf16_bits_to_f32(u16::from_le_bytes([c[0], c[1]]));
+        }
+    }
+}
+
+/// XOR-delta codec: wire bytes are `cur.to_bits() ^ base.to_bits()`,
+/// little-endian. Lossless, and all-zero wherever the model did not
+/// move against the shared base.
+pub struct DeltaCodec;
+
+impl WireCodec for DeltaCodec {
+    fn id(&self) -> CodecId {
+        CodecId::Delta
+    }
+
+    fn encode(&self, cur: &[f32], base: Option<&[f32]>) -> Vec<u8> {
+        let base = base.expect("delta codec encode requires a base span");
+        assert_eq!(cur.len(), base.len(), "delta codec base length mismatch");
+        let mut out = Vec::with_capacity(cur.len() * 4);
+        for (c, b) in cur.iter().zip(base) {
+            out.extend((c.to_bits() ^ b.to_bits()).to_le_bytes());
+        }
+        out
+    }
+
+    fn decode_into(&self, bytes: &[u8], base: Option<&[f32]>, dst: &mut [f32]) {
+        let base = base.expect("delta codec decode requires a base span");
+        assert_eq!(bytes.len(), dst.len() * 4, "delta codec span mismatch");
+        assert_eq!(base.len(), dst.len(), "delta codec base length mismatch");
+        for ((c, b), d) in bytes.chunks_exact(4).zip(base).zip(dst.iter_mut()) {
+            let wire = u32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+            *d = f32::from_bits(wire ^ b.to_bits());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+
+    fn gaussian(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = crate::util::Rng::new(seed);
+        (0..n).map(|_| rng.next_gaussian() as f32).collect()
+    }
+
+    #[test]
+    fn codec_id_roundtrips_and_names() {
+        for id in CodecId::ALL {
+            assert_eq!(CodecId::from_code(id.code()).unwrap(), id);
+            assert!(!id.name().is_empty());
+            assert_eq!(id.codec().id(), id);
+        }
+        assert!(CodecId::from_code(99).is_err());
+        assert!(CodecId::F32.is_lossless() && CodecId::Delta.is_lossless());
+        assert!(!CodecId::Bf16.is_lossless());
+        assert!(CodecId::Delta.needs_base());
+        assert_eq!(CodecId::Bf16.wire_dtype(), DType::Bf16);
+    }
+
+    #[test]
+    fn negotiate_preserves_our_order_and_intersects() {
+        let accepted = negotiate(
+            &[CodecId::Delta, CodecId::F32],
+            &[CodecId::F32, CodecId::Bf16, CodecId::Delta],
+        );
+        assert_eq!(accepted, vec![CodecId::F32, CodecId::Delta]);
+        assert!(negotiate(&[], &CodecId::ALL).is_empty());
+    }
+
+    #[test]
+    fn f32_and_delta_roundtrip_bitwise() {
+        let cur = gaussian(257, 1);
+        let base = gaussian(257, 2);
+        // f32: no base.
+        let enc = F32Codec.encode(&cur, None);
+        let mut dst = vec![0.0f32; cur.len()];
+        F32Codec.decode_into(&enc, None, &mut dst);
+        for (a, b) in cur.iter().zip(&dst) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // delta: against a base.
+        let enc = DeltaCodec.encode(&cur, Some(&base));
+        let mut dst = vec![0.0f32; cur.len()];
+        DeltaCodec.decode_into(&enc, Some(&base), &mut dst);
+        for (a, b) in cur.iter().zip(&dst) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn delta_against_identical_base_is_all_zero_bytes() {
+        let cur = gaussian(64, 3);
+        let enc = DeltaCodec.encode(&cur, Some(&cur));
+        assert!(enc.iter().all(|&b| b == 0));
+    }
+
+    #[test]
+    fn bf16_error_bounded_by_mantissa() {
+        // bf16 keeps 8 mantissa bits: relative error ≤ 2⁻⁸ for normal
+        // values (round-to-nearest-even halves the ulp bound).
+        let cur = gaussian(4096, 4);
+        let enc = Bf16Codec.encode(&cur, None);
+        assert_eq!(enc.len(), cur.len() * 2);
+        let mut dst = vec![0.0f32; cur.len()];
+        Bf16Codec.decode_into(&enc, None, &mut dst);
+        for (a, b) in cur.iter().zip(&dst) {
+            let bound = a.abs() * (1.0 / 256.0) + f32::MIN_POSITIVE;
+            assert!((a - b).abs() <= bound, "a={a} b={b}");
+        }
+    }
+
+    #[test]
+    fn prop_split_point_independent_decode() {
+        // Decoding a codec's bytes span-wise at any element split matches
+        // the whole-buffer decode bit for bit — the property the chunked
+        // stream receiver relies on.
+        prop_check("codec split decode", 60, |g| {
+            let n = g.usize_in(1..300);
+            let cur = gaussian(n, g.rng().next_u64());
+            let base = gaussian(n, g.rng().next_u64());
+            for id in CodecId::ALL {
+                let c = id.codec();
+                let b = id.needs_base().then_some(&base[..]);
+                let enc = c.encode(&cur, b);
+                let esz = id.wire_dtype().size_bytes();
+                let mut whole = vec![0.0f32; n];
+                c.decode_into(&enc, b, &mut whole);
+                let split = g.usize_in(0..n + 1);
+                let mut parts = vec![0.0f32; n];
+                c.decode_into(&enc[..split * esz], b.map(|s| &s[..split]), &mut parts[..split]);
+                c.decode_into(&enc[split * esz..], b.map(|s| &s[split..]), &mut parts[split..]);
+                for (a, p) in whole.iter().zip(&parts) {
+                    assert_eq!(a.to_bits(), p.to_bits(), "{id}");
+                }
+            }
+        });
+    }
+}

@@ -213,12 +213,15 @@ fn prop_streaming_trio_roundtrips_any_layout() {
             stream_id: g.rng().next_u64(),
             task_id: g.rng().next_u64(),
             round: g.rng().next_u64(),
-            purpose: if g.bool() {
-                StreamPurpose::ShipModel
-            } else {
-                StreamPurpose::TaskCompletion
+            purpose: match g.usize_in(0..4) {
+                0 => StreamPurpose::ShipModel,
+                1 => StreamPurpose::TaskCompletion,
+                2 => StreamPurpose::RunTask,
+                _ => StreamPurpose::Evaluate,
             },
             learner_id: format!("learner-{}", g.usize_in(0..100)),
+            codec: metisfl::tensor::CodecId::ALL[g.usize_in(0..3)],
+            base_round: g.rng().next_u64(),
             layout,
             meta: TaskMeta {
                 train_time_per_batch_us: g.rng().next_u64() % 10_000,
@@ -226,6 +229,12 @@ fn prop_streaming_trio_roundtrips_any_layout() {
                 completed_epochs: g.usize_in(0..10),
                 num_samples: g.usize_in(0..10_000),
                 train_loss: g.f64_in(-10.0, 10.0),
+            },
+            spec: TaskSpec {
+                epochs: g.usize_in(0..10),
+                batch_size: g.usize_in(0..1000),
+                learning_rate: g.f64_in(0.0, 1.0),
+                step_budget: g.usize_in(0..100),
             },
         };
         let chunk = Message::ModelChunk {
@@ -282,15 +291,19 @@ fn prop_streamed_ingest_equals_one_shot_bitwise() {
         // Stream the identical update in 1..64-byte chunks through the
         // real (unclamped) sender walk.
         let chunk_size = g.usize_in(1..64);
+        let spec = TaskSpec::default();
         client::stream_model_with(
-            |msg| Ok(streamed.handle(msg)),
-            StreamPurpose::TaskCompletion,
-            1,
-            0,
-            "a",
-            &update,
-            &meta,
-            chunk_size,
+            &mut |msg| Ok(streamed.handle(msg)),
+            &client::StreamSend::f32(
+                StreamPurpose::TaskCompletion,
+                1,
+                0,
+                "a",
+                &update,
+                &meta,
+                &spec,
+                chunk_size,
+            ),
         )
         .unwrap();
 

@@ -1,20 +1,27 @@
 //! Data-plane end-to-end scenarios: streamed vs one-shot federations
-//! must be bitwise identical over both transports, streamed ingest must
-//! bound controller wire memory by chunk × in-flight learners (not
-//! learners × model), and the typed control-plane stubs must handshake
-//! against the real controller.
+//! must be bitwise identical over both transports (including the
+//! delta-coded symmetric data plane), streamed ingest must bound
+//! controller wire memory by chunk × in-flight learners (not learners ×
+//! model), streamed dispatch must encode the model once regardless of
+//! fan-out width, idle streams must be reclaimed on a deterministic
+//! clock, and the typed control-plane stubs must handshake against the
+//! real controller.
 
-use metisfl::config::{FederationEnv, ModelSpec, TransportKind};
-use metisfl::controller::Controller;
+use metisfl::config::{FederationEnv, ModelSpec, TransportKind, WireCodecChoice};
+use metisfl::controller::{scheduling, Controller};
 use metisfl::driver::run_with_trainer;
 use metisfl::learner::trainer::RustSgdTrainer;
-use metisfl::learner::SyntheticTrainer;
+use metisfl::learner::{Dataset, Learner, LearnerServicer, SyntheticTrainer};
 use metisfl::net::{serve, Service};
 use metisfl::proto::client::{ControllerClient, RpcError};
-use metisfl::proto::{ErrorCode, Message, PROTO_VERSION};
-use metisfl::tensor::TensorModel;
+use metisfl::proto::wire::FNV64_INIT;
+use metisfl::proto::{
+    ErrorCode, Message, StreamPurpose, TaskMeta, TaskSpec, TensorLayoutProto, PROTO_VERSION,
+};
+use metisfl::tensor::{CodecId, TensorModel};
 use metisfl::util::Rng;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 fn env(name: &str, stream_chunk_bytes: usize) -> FederationEnv {
     FederationEnv::builder(name)
@@ -115,6 +122,192 @@ fn streaming_bounds_controller_ingest_memory_by_chunks_not_models() {
 }
 
 #[test]
+fn delta_codec_federation_is_bitwise_identical_to_one_shot() {
+    // The XOR-delta codec is lossless: a fully delta-coded symmetric
+    // data plane (streamed dispatch + streamed uploads, bases
+    // established by the streams themselves) reproduces the one-shot
+    // federation bit for bit.
+    let one_shot =
+        run_with_trainer(&env("delta-eq-a", 0), |_| Arc::new(RustSgdTrainer)).unwrap();
+    let mut e = env("delta-eq-b", 2048);
+    e.wire_codec = WireCodecChoice::Delta;
+    let streamed = run_with_trainer(&e, |_| Arc::new(RustSgdTrainer)).unwrap();
+    assert_bitwise_equal_runs(&one_shot, &streamed);
+}
+
+#[test]
+fn bf16_uploads_complete_with_bounded_loss_error() {
+    // bf16 halves upload wire size at a bounded precision cost: the
+    // federation completes every round and the per-round community loss
+    // stays close to the f32 run (bf16 keeps 8 mantissa bits, so the
+    // aggregated model moves by ≲2⁻⁸ relative per element).
+    let f32_run =
+        run_with_trainer(&env("bf16-eq-a", 2048), |_| Arc::new(RustSgdTrainer)).unwrap();
+    let mut e = env("bf16-eq-b", 2048);
+    e.wire_codec = WireCodecChoice::Bf16;
+    let bf16_run = run_with_trainer(&e, |_| Arc::new(RustSgdTrainer)).unwrap();
+    assert_eq!(f32_run.round_metrics.len(), bf16_run.round_metrics.len());
+    for (ra, rb) in f32_run.round_metrics.iter().zip(&bf16_run.round_metrics) {
+        assert_eq!(ra.completed, rb.completed, "round {}", ra.round);
+        let (la, lb) = (
+            ra.community_eval_loss.expect("f32 round evaluated"),
+            rb.community_eval_loss.expect("bf16 round evaluated"),
+        );
+        assert!(lb.is_finite());
+        assert!(
+            (la - lb).abs() <= la.abs() * 0.15 + 0.05,
+            "round {}: bf16 loss {lb} drifted too far from f32 loss {la}",
+            ra.round
+        );
+    }
+}
+
+#[test]
+fn streamed_dispatch_encodes_the_model_once_per_fanout() {
+    // Encode-once probe: one streamed sync round against 3 learners
+    // performs exactly tensor_count codec encodes per fan-out (train +
+    // eval = 2 fan-outs), NOT learners × tensor_count — the controller
+    // encodes each chunk once and fans the same bytes out.
+    let e = env("encode-probe", 2048);
+    let ctrl = Controller::new(e.clone(), None).unwrap();
+    let _ctrl_server = serve(
+        "inproc://encode-probe-ctrl",
+        Arc::clone(&ctrl) as Arc<dyn Service>,
+        None,
+    )
+    .unwrap();
+    let mut learners = Vec::new();
+    for i in 0..3 {
+        let dataset = Dataset::synthetic_housing(8, 20, 20, 7 + i as u64);
+        let learner = Learner::new(
+            &format!("probe-l{i}"),
+            "inproc://encode-probe-ctrl",
+            None,
+            Arc::new(SyntheticTrainer::new(0, 0.01)),
+            dataset,
+        );
+        learner.set_stream_chunk(e.effective_stream_chunk());
+        learner.set_upload_codec(e.upload_codec());
+        let ep = format!("inproc://encode-probe-l{i}");
+        let server =
+            serve(&ep, Arc::new(LearnerServicer(Arc::clone(&learner))) as Arc<dyn Service>, None)
+                .unwrap();
+        learner.register(&ep).unwrap();
+        learners.push((learner, server));
+    }
+    let layout = e.model.tensor_layout();
+    ctrl.ship_model(TensorModel::random_init(&layout, &mut Rng::new(5)));
+    assert_eq!(ctrl.dispatch_encode_count(), 0);
+    let mut rng = Rng::new(9);
+    let report = scheduling::run_sync_round(&ctrl, 1, &mut rng).unwrap();
+    assert_eq!(report.completed, 3);
+    assert!(report.community_eval_loss.unwrap().is_finite());
+    let per_fanout = e.model.tensor_count() as u64;
+    assert_eq!(
+        ctrl.dispatch_encode_count(),
+        2 * per_fanout,
+        "dispatch encode work scaled with learner count"
+    );
+    // A second round doubles the fan-outs, still independent of width.
+    let report = scheduling::run_round(&ctrl, 2, &mut rng).unwrap();
+    assert_eq!(report.completed, 3);
+    assert_eq!(ctrl.dispatch_encode_count(), 4 * per_fanout);
+    assert_eq!(ctrl.open_streams(), 0);
+}
+
+fn begin_msg(m: &TensorModel, stream_id: u64) -> Message {
+    Message::ModelStreamBegin {
+        stream_id,
+        task_id: 1,
+        round: 0,
+        purpose: StreamPurpose::TaskCompletion,
+        learner_id: "a".into(),
+        codec: CodecId::F32,
+        base_round: 0,
+        layout: TensorLayoutProto::f32_layout_of(m),
+        meta: TaskMeta::default(),
+        spec: TaskSpec::default(),
+    }
+}
+
+#[test]
+fn idle_streams_reclaimed_on_heartbeat_with_deterministic_clock() {
+    // The 5-minute idle-GC path, driven by an injected clock instead of
+    // wall time: a learner that dies between Begin and End must not pin
+    // its buffers or registry slot past the timeout.
+    let ctrl = Controller::new(env("idle-gc", 0), None).unwrap();
+    let origin = Instant::now();
+    let offset = Arc::new(Mutex::new(Duration::ZERO));
+    let o = Arc::clone(&offset);
+    ctrl.ingest().set_clock(Arc::new(move || origin + *o.lock().unwrap()));
+
+    let layout = ModelSpec::mlp(8, 4, 32).tensor_layout();
+    let m = TensorModel::random_init(&layout, &mut Rng::new(3));
+    assert!(matches!(ctrl.handle(begin_msg(&m, 41)), Message::Ack { ok: true, .. }));
+    assert_eq!(ctrl.open_streams(), 1);
+    // Heartbeats sweep idle streams; inside the window the stream lives.
+    *offset.lock().unwrap() = Duration::from_secs(299);
+    ctrl.handle(Message::Heartbeat { from: "driver".into() });
+    assert_eq!(ctrl.open_streams(), 1);
+    // Past the 5-minute timeout it is reclaimed…
+    *offset.lock().unwrap() = Duration::from_secs(601);
+    ctrl.handle(Message::Heartbeat { from: "driver".into() });
+    assert_eq!(ctrl.open_streams(), 0);
+    // …and both the slot and the announced-bytes budget are returned:
+    // the same stream id opens again.
+    assert!(matches!(ctrl.handle(begin_msg(&m, 41)), Message::Ack { ok: true, .. }));
+    assert_eq!(ctrl.open_streams(), 1);
+}
+
+#[test]
+fn chunk_racing_a_stream_close_fails_gracefully() {
+    // The dead-flag path: a chunk handler that cloned the stream's Arc
+    // just before a racing End must get a typed StreamProtocol error,
+    // never a panic on the drained buffers.
+    let ctrl = Controller::new(env("dead-flag", 0), None).unwrap();
+    let layout = ModelSpec::mlp(8, 4, 32).tensor_layout();
+    let m = TensorModel::random_init(&layout, &mut Rng::new(4));
+    assert!(matches!(ctrl.handle(begin_msg(&m, 77)), Message::Ack { ok: true, .. }));
+    // A racing handler holds the stream…
+    let hold = ctrl.ingest().hold_for_test(77).unwrap();
+    // …while End arrives: close refuses (chunks in flight), recycles.
+    match ctrl.handle(Message::ModelStreamEnd { stream_id: 77, digest: FNV64_INIT }) {
+        Message::Error { code, detail } => {
+            assert_eq!(code, ErrorCode::StreamProtocol);
+            assert!(detail.contains("in flight"), "{detail}");
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+    assert_eq!(ctrl.open_streams(), 0);
+    // The raced chunk lands on the dead stream: graceful typed error.
+    match ctrl.ingest().chunk_into_held(&hold, 0, &[0u8; 8]) {
+        Message::Error { code, detail } => {
+            assert_eq!(code, ErrorCode::StreamProtocol);
+            assert!(detail.contains("closed stream"), "{detail}");
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+}
+
+#[test]
+fn sub_floor_chunk_is_clamped_and_surfaced_in_the_report() {
+    // stream_chunk_bytes below the 1 KiB sender floor used to clamp
+    // silently; the effective value is now surfaced in the report.
+    let floor = metisfl::proto::client::MIN_CHUNK_BYTES;
+    let report = run_with_trainer(&env("clamp-report", 10), |_| {
+        Arc::new(SyntheticTrainer::new(0, 0.01))
+    })
+    .unwrap();
+    assert_eq!(report.effective_stream_chunk_bytes, floor);
+    assert_eq!(report.round_metrics.last().unwrap().completed, 3);
+    let report = run_with_trainer(&env("clamp-report-off", 0), |_| {
+        Arc::new(SyntheticTrainer::new(0, 0.01))
+    })
+    .unwrap();
+    assert_eq!(report.effective_stream_chunk_bytes, 0);
+}
+
+#[test]
 fn controller_client_handshake_and_error_taxonomy_over_tcp() {
     let e = env("stream-stub-tcp", 0);
     let ctrl = Controller::new(e, None).unwrap();
@@ -132,7 +325,7 @@ fn controller_client_handshake_and_error_taxonomy_over_tcp() {
 
     // A mismatched version is refused with VersionMismatch.
     let mut raw = metisfl::net::connect(&server.endpoint(), None).unwrap();
-    match raw.rpc(&Message::Hello { proto_version: 1 }).unwrap() {
+    match raw.rpc(&Message::Hello { proto_version: 1, codecs: Vec::new() }).unwrap() {
         Message::Error { code, .. } => assert_eq!(code, ErrorCode::VersionMismatch),
         other => panic!("unexpected {other:?}"),
     }
