@@ -14,10 +14,12 @@
 use metisfl::baselines::pyserde;
 use metisfl::config::{FederationEnv, ModelSpec, WireCodecChoice};
 use metisfl::harness::runner::{fmt_secs, full_scale, BenchRunner, ReportWriter};
+use metisfl::learner::SyntheticTrainer;
 use metisfl::net::secure::SecureSession;
 use metisfl::proto::{Message, ModelProto};
 use metisfl::tensor::{ByteOrder, CodecId, DType, TensorModel};
 use metisfl::util::{fmt_bytes, Rng};
+use std::sync::Arc;
 
 fn main() {
     let spec = if full_scale() { ModelSpec::paper_1m() } else { ModelSpec::mlp(8, 20, 64) };
@@ -127,13 +129,15 @@ fn main() {
 
     report.emit().unwrap();
 
-    // --- negotiated wire codecs (f32 / bf16 / delta) -------------------
+    // --- negotiated wire codecs (f32 / bf16 / delta / delta-rle) -------
     // Encode+decode through the WireCodec trait the data plane uses; the
     // delta base is a nearby model (one training step away), the regime
-    // delta is designed for.
+    // the delta codecs are designed for. "wire frac of f32" is the
+    // deterministic compression ratio the CI bench gate tracks
+    // (lower is better; see `metisfl bench-check`).
     let mut wire_report = ReportWriter::new(
         "codec_ablation_wire",
-        &["wire codec", "wire size", "zero bytes", "enc+dec MB/s"],
+        &["wire codec", "wire size", "wire frac of f32", "zero bytes", "enc+dec MB/s"],
     );
     let base: TensorModel = {
         let mut m = model.clone();
@@ -164,6 +168,7 @@ fn main() {
         wire_report.row(vec![
             id.name().into(),
             fmt_bytes(wire),
+            format!("{:.3}", wire as f64 / raw_bytes as f64),
             format!("{:.0}%", 100.0 * zeros as f64 / wire as f64),
             mbs(s.mean),
         ]);
@@ -172,22 +177,36 @@ fn main() {
 
     // --- end-to-end federation rows (dispatch-streaming ablation) ------
     // Same small federation per data-plane configuration; wall-clock is
-    // indicative only (not CI-gated), the wire gauge is the load-bearing
-    // column.
+    // indicative only (not CI-gated). The load-bearing columns are the
+    // wire gauge and the per-round wire-byte totals: the "steady-state"
+    // cells shrink the synthetic update magnitude to the converged
+    // regime, where the entropy-coded delta wire must move well under
+    // half of plain delta's bytes (acceptance-tested in
+    // tests/streaming.rs; tracked per row here).
     let mut fed_report = ReportWriter::new(
         "codec_ablation_federation",
-        &["data plane", "fed round mean", "peak wire ingest", "final loss"],
+        &[
+            "data plane",
+            "fed round mean",
+            "peak wire ingest",
+            "wire bytes/round",
+            "wire frac of f32",
+            "final loss",
+        ],
     );
     let fed_spec =
         if full_scale() { ModelSpec::mlp(8, 40, 64) } else { ModelSpec::mlp(8, 10, 32) };
     let rounds = if full_scale() { 4 } else { 2 };
-    let cells: &[(&str, usize, WireCodecChoice)] = &[
-        ("one-shot f32", 0, WireCodecChoice::F32),
-        ("streamed f32 (64 KiB chunks)", 64 * 1024, WireCodecChoice::F32),
-        ("streamed delta (64 KiB chunks)", 64 * 1024, WireCodecChoice::Delta),
-        ("streamed bf16 up+down (64 KiB)", 64 * 1024, WireCodecChoice::Bf16),
+    let cells: &[(&str, usize, WireCodecChoice, f32)] = &[
+        ("one-shot f32", 0, WireCodecChoice::F32, 0.01),
+        ("streamed f32 (64 KiB chunks)", 64 * 1024, WireCodecChoice::F32, 0.01),
+        ("streamed delta (64 KiB chunks)", 64 * 1024, WireCodecChoice::Delta, 0.01),
+        ("streamed delta-rle (64 KiB chunks)", 64 * 1024, WireCodecChoice::DeltaRle, 0.01),
+        ("steady-state delta (small updates)", 64 * 1024, WireCodecChoice::Delta, 1e-6),
+        ("steady-state delta-rle (small updates)", 64 * 1024, WireCodecChoice::DeltaRle, 1e-6),
+        ("streamed bf16 up+down (64 KiB)", 64 * 1024, WireCodecChoice::Bf16, 0.01),
     ];
-    for (label, chunk, codec) in cells {
+    for (label, chunk, codec, update_scale) in cells {
         let env = FederationEnv::builder(&format!("codec-fed-{}", label.replace(' ', "-")))
             .learners(4)
             .rounds(rounds)
@@ -198,7 +217,10 @@ fn main() {
             .wire_codec(*codec)
             .bf16_dispatch(*codec == WireCodecChoice::Bf16)
             .build();
-        match metisfl::driver::run_simulated(&env) {
+        let run = metisfl::driver::run_with_trainer(&env, |_| {
+            Arc::new(SyntheticTrainer::new(0, *update_scale))
+        });
+        match run {
             Ok(report) => {
                 let mean = report
                     .round_metrics
@@ -206,10 +228,17 @@ fn main() {
                     .map(|r| r.federation_round)
                     .sum::<std::time::Duration>()
                     / report.round_metrics.len().max(1) as u32;
+                let raw = report.wire_bytes_sent + report.wire_bytes_saved;
                 fed_report.row(vec![
                     (*label).into(),
                     fmt_secs(mean),
                     fmt_bytes(report.peak_wire_ingest_bytes),
+                    format!("{}", report.wire_bytes_sent / rounds as u64),
+                    if raw > 0 {
+                        format!("{:.3}", report.wire_bytes_sent as f64 / raw as f64)
+                    } else {
+                        "-".into()
+                    },
                     report
                         .final_loss
                         .map(|l| format!("{l:.4}"))
@@ -219,6 +248,8 @@ fn main() {
             Err(e) => fed_report.row(vec![
                 (*label).into(),
                 format!("failed: {e:#}"),
+                "-".into(),
+                "-".into(),
                 "-".into(),
                 "-".into(),
             ]),

@@ -22,6 +22,11 @@ pub enum WireCodecChoice {
     /// XOR-delta against the last acknowledged community model, falling
     /// back to full f32 when no base is shared (see `delta_fallback`).
     Delta,
+    /// Entropy-coded delta: the XOR residual is byte-shuffled and
+    /// zero-run-length encoded per chunk (lossless, with a raw escape so
+    /// adversarial payloads never expand past f32 + a small header).
+    /// Same base/fallback semantics as `delta`.
+    DeltaRle,
 }
 
 impl WireCodecChoice {
@@ -31,6 +36,7 @@ impl WireCodecChoice {
             WireCodecChoice::F32 => "f32",
             WireCodecChoice::Bf16 => "bf16",
             WireCodecChoice::Delta => "delta",
+            WireCodecChoice::DeltaRle => "delta-rle",
         }
     }
 
@@ -40,7 +46,8 @@ impl WireCodecChoice {
             "f32" => WireCodecChoice::F32,
             "bf16" => WireCodecChoice::Bf16,
             "delta" => WireCodecChoice::Delta,
-            other => bail!("unknown wire codec '{other}' (auto|f32|bf16|delta)"),
+            "delta-rle" | "delta_rle" => WireCodecChoice::DeltaRle,
+            other => bail!("unknown wire codec '{other}' (auto|f32|bf16|delta|delta-rle)"),
         })
     }
 }
@@ -231,7 +238,7 @@ pub struct FederationEnv {
     /// controller ALSO streams dispatch (train/eval fan-out) over the
     /// same chunked data plane — the v3 symmetric data plane.
     pub stream_chunk_bytes: usize,
-    /// Data-plane wire codec (`auto | f32 | bf16 | delta`).
+    /// Data-plane wire codec (`auto | f32 | bf16 | delta | delta-rle`).
     pub wire_codec: WireCodecChoice,
     /// bf16 per-codec field: also apply bf16 to controller → learner
     /// dispatch (lossy model broadcast — learners train on a rounded
@@ -423,8 +430,10 @@ impl FederationEnv {
         }
         // Codecs ride the chunked stream: an explicit non-default codec
         // with streaming off would silently do nothing — refuse instead.
-        if matches!(self.wire_codec, WireCodecChoice::Bf16 | WireCodecChoice::Delta)
-            && self.stream_chunk_bytes == 0
+        if matches!(
+            self.wire_codec,
+            WireCodecChoice::Bf16 | WireCodecChoice::Delta | WireCodecChoice::DeltaRle
+        ) && self.stream_chunk_bytes == 0
         {
             bail!(
                 "wire_codec: {} requires stream_chunk_bytes > 0 (codecs ride the streamed \
@@ -464,8 +473,10 @@ impl FederationEnv {
             WireCodecChoice::F32 => CodecId::F32,
             WireCodecChoice::Bf16 => CodecId::Bf16,
             WireCodecChoice::Delta => CodecId::Delta,
+            WireCodecChoice::DeltaRle => CodecId::DeltaRle,
             // Auto: delta needs the streamed dispatch to establish the
             // shared base; without streaming, stay on plain f32.
+            // (delta-rle stays opt-in until it has more mileage.)
             WireCodecChoice::Auto => {
                 if self.effective_stream_chunk() > 0 {
                     CodecId::Delta
@@ -490,6 +501,7 @@ impl FederationEnv {
                     CodecId::F32
                 }
             }
+            WireCodecChoice::DeltaRle => CodecId::DeltaRle,
             WireCodecChoice::Delta | WireCodecChoice::Auto => CodecId::Delta,
         }
     }
@@ -791,6 +803,17 @@ seed: 7
         .unwrap();
         assert_eq!(env.upload_codec(), CodecId::Delta);
         assert!(!env.delta_fallback);
+        // The entropy-coded delta wire resolves on both planes; both
+        // spellings parse.
+        for src in [
+            "stream_chunk_bytes: 2048\nwire_codec: delta-rle\n",
+            "stream_chunk_bytes: 2048\nwire_codec: delta_rle\n",
+        ] {
+            let env = FederationEnv::from_yaml(src).unwrap();
+            assert_eq!(env.wire_codec, WireCodecChoice::DeltaRle);
+            assert_eq!(env.upload_codec(), CodecId::DeltaRle);
+            assert_eq!(env.dispatch_codec(), CodecId::DeltaRle);
+        }
         assert!(FederationEnv::from_yaml("wire_codec: zstd\n").is_err());
     }
 
@@ -801,6 +824,7 @@ seed: 7
         for src in [
             "wire_codec: bf16\n",
             "wire_codec: delta\n",
+            "wire_codec: delta-rle\n",
             "stream_chunk_bytes: 2048\nbf16_dispatch: true\n",
         ] {
             let err = format!("{:#}", FederationEnv::from_yaml(src).unwrap_err());

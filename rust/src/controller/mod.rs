@@ -39,11 +39,65 @@ pub struct LearnerHandle {
     pub num_samples: usize,
     pub index: usize,
     conn: Mutex<Option<Box<dyn ClientConn>>>,
+    /// Codec set the learner accepted in this connection's `Hello`
+    /// handshake (`None` until a connection has been established). The
+    /// fan-out path intersects these across targets so a mixed fleet
+    /// degrades the dispatch codec instead of erroring at `Begin`.
+    accepted: Mutex<Option<Vec<CodecId>>>,
 }
 
 impl LearnerHandle {
     pub fn new(id: String, endpoint: String, num_samples: usize, index: usize) -> LearnerHandle {
-        LearnerHandle { id, endpoint, num_samples, index, conn: Mutex::new(None) }
+        LearnerHandle {
+            id,
+            endpoint,
+            num_samples,
+            index,
+            conn: Mutex::new(None),
+            accepted: Mutex::new(None),
+        }
+    }
+
+    /// Dial + handshake if no connection is cached. Every dispatch
+    /// connection opens with the versioned `Hello`, so the codec set the
+    /// peer speaks is known before any stream `Begin`. Peers that answer
+    /// `Hello` with an application error (legacy builds, test doubles)
+    /// are recorded as f32-only rather than treated as unreachable.
+    fn ensure_conn(&self, guard: &mut Option<Box<dyn ClientConn>>, psk: Psk) -> Result<()> {
+        if guard.is_some() {
+            return Ok(());
+        }
+        let mut conn = crate::net::connect(&self.endpoint, psk)
+            .with_context(|| format!("connecting to learner {}", self.id))?;
+        let accepted = match client::hello_negotiate(conn.as_mut()) {
+            Ok((_version, codecs)) => codecs,
+            Err(e) if e.is_transport() => {
+                return Err(anyhow::anyhow!("handshake with learner {}: {e}", self.id));
+            }
+            Err(e) => {
+                log_debug(
+                    "controller",
+                    &format!("{}: Hello refused ({e}); assuming f32-only peer", self.id),
+                );
+                vec![CodecId::F32]
+            }
+        };
+        *self.accepted.lock().unwrap() = Some(accepted);
+        *guard = Some(conn);
+        Ok(())
+    }
+
+    /// Codec set this learner accepted, handshaking first if this handle
+    /// has never connected. `None` when the learner is unreachable (the
+    /// dispatch itself will surface that error).
+    pub fn accepted_codecs(&self, psk: Psk) -> Option<Vec<CodecId>> {
+        {
+            let mut guard = self.conn.lock().unwrap();
+            if self.ensure_conn(&mut guard, psk).is_err() {
+                return None;
+            }
+        }
+        self.accepted.lock().unwrap().clone()
     }
 
     /// RPC to this learner, (re)connecting lazily. The per-learner lock
@@ -81,12 +135,7 @@ impl LearnerHandle {
         origin: std::time::Instant,
     ) -> Result<(Message, Duration)> {
         let mut guard = self.conn.lock().unwrap();
-        if guard.is_none() {
-            *guard = Some(
-                crate::net::connect(&self.endpoint, psk)
-                    .with_context(|| format!("connecting to learner {}", self.id))?,
-            );
-        }
+        self.ensure_conn(&mut guard, psk)?;
         let conn = guard.as_mut().unwrap();
         let send_res = match req {
             RawOrMsg::Msg(m) => conn.send(m),
@@ -162,11 +211,24 @@ pub struct Controller {
     /// env's wire codec resolves to delta, so it never pins buffers the
     /// arena could otherwise recycle.
     last_broadcast: Mutex<Option<(u64, Arc<TensorModel>)>>,
+    /// Per-learner identity + pointer of the last model each learner
+    /// acknowledged over a lossless dispatch stream. The async protocol
+    /// re-dispatches per learner at divergent community rounds, so a
+    /// single shared base cannot serve it; the upload plane also
+    /// resolves delta bases here when the community model has already
+    /// moved past the round a learner trained on.
+    learner_bases: Mutex<HashMap<String, (u64, Arc<TensorModel>)>>,
     /// Codec `encode` invocations performed by streamed dispatch — the
     /// encode-once probe: fanning one model out to N learners must cost
-    /// `tensor_count` encodes, not `N × tensor_count` (asserted in
-    /// tests/streaming.rs).
+    /// one encode per payload unit (tensor, or frame for framed codecs),
+    /// not `N ×` that (asserted in tests/streaming.rs).
     dispatch_encodes: AtomicU64,
+    /// Data-plane egress totals: payload bytes actually sent by streamed
+    /// dispatch, and their f32-equivalent volume. Together with the
+    /// ingest's receive totals these become the `FederationReport`
+    /// `wire_bytes_sent` / `wire_bytes_saved` gauges.
+    dispatch_wire_sent: AtomicU64,
+    dispatch_wire_raw: AtomicU64,
 }
 
 impl Controller {
@@ -201,7 +263,10 @@ impl Controller {
             xla_slot: Mutex::new(None),
             ingest: StreamIngest::default(),
             last_broadcast: Mutex::new(None),
+            learner_bases: Mutex::new(HashMap::new()),
             dispatch_encodes: AtomicU64::new(0),
+            dispatch_wire_sent: AtomicU64::new(0),
+            dispatch_wire_raw: AtomicU64::new(0),
         }))
     }
 
@@ -518,6 +583,17 @@ impl Controller {
         self.ingest.open_streams()
     }
 
+    /// Data-plane byte totals across both directions: `(sent, raw)`
+    /// where `sent` is payload bytes that actually crossed the wire
+    /// (dispatch egress + upload ingress) and `raw` is their
+    /// f32-equivalent volume. `raw - sent` is what the wire codecs kept
+    /// off the network (`FederationReport::wire_bytes_saved`).
+    pub fn wire_bytes_totals(&self) -> (u64, u64) {
+        let sent = self.dispatch_wire_sent.load(Ordering::SeqCst) + self.ingest.recv_wire_bytes();
+        let raw = self.dispatch_wire_raw.load(Ordering::SeqCst) + self.ingest.recv_raw_bytes();
+        (sent, raw)
+    }
+
     // ---- data plane: inbound model streams ---------------------------
     //
     // The stream engine itself lives in `proto::ingest` (shared with the
@@ -529,13 +605,25 @@ impl Controller {
     // one-shot path.
 
     /// Resolve the shared delta base a peer announced: our community
-    /// model, if (and only if) its round matches the announced identity.
-    fn delta_base_for(&self, base_round: u64) -> Option<Arc<TensorModel>> {
-        let s = self.state.lock().unwrap();
-        match &s.community {
-            Some(m) if s.community_round == base_round => Some(Arc::clone(m)),
-            _ => None,
+    /// model, if its round matches the announced identity — else the
+    /// model we last streamed to *this* learner (per-learner base map),
+    /// which keeps delta uploads working when the community has already
+    /// moved past the round the learner trained on (async staleness).
+    fn delta_base_for(&self, learner_id: &str, base_round: u64) -> Option<Arc<TensorModel>> {
+        {
+            let s = self.state.lock().unwrap();
+            if let Some(m) = &s.community {
+                if s.community_round == base_round {
+                    return Some(Arc::clone(m));
+                }
+            }
         }
+        self.learner_bases
+            .lock()
+            .unwrap()
+            .get(learner_id)
+            .filter(|(round, _)| *round == base_round)
+            .map(|(_, m)| Arc::clone(m))
     }
 
     fn on_stream_begin(&self, args: StreamBegin) -> Message {
@@ -546,7 +634,7 @@ impl Controller {
             );
         }
         let base = if args.codec.needs_base() {
-            self.delta_base_for(args.base_round)
+            self.delta_base_for(&args.learner_id, args.base_round)
         } else {
             None
         };
@@ -599,6 +687,45 @@ impl Controller {
         self.dispatch_encodes.load(Ordering::SeqCst)
     }
 
+    /// Codec the next fan-out will use: the configured dispatch codec,
+    /// degraded to what every reachable target's `Hello` handshake
+    /// accepted. Mixed fleets intersect instead of erroring at `Begin`:
+    /// delta-rle falls back to delta when some peer lacks the framed
+    /// codec, and anything else falls back to the universal f32 floor.
+    fn negotiate_dispatch_codec(&self, targets: &[Arc<LearnerHandle>]) -> CodecId {
+        let configured = self.dispatch_codec();
+        if configured == CodecId::F32 || targets.is_empty() {
+            return configured;
+        }
+        let psk = self.psk;
+        let sets = self
+            .dispatch_pool
+            .parallel_map(targets.len(), |i| targets[i].accepted_codecs(psk));
+        // Unreachable targets (None) don't veto: their dispatch fails on
+        // its own terms either way. Degrading per reachable target and
+        // taking the weakest result walks the shared lossless chain
+        // (CodecId::degrade_to) exactly once per peer.
+        let degraded = sets
+            .iter()
+            .flatten()
+            .map(|set| configured.degrade_to(set))
+            .min_by_key(|c| match c {
+                CodecId::F32 => 0,
+                CodecId::Delta => 1,
+                _ => 2,
+            })
+            .unwrap_or(configured);
+        if degraded != configured {
+            log_debug(
+                "controller",
+                &format!(
+                    "dispatch codec degraded {configured} -> {degraded} (fleet intersection)"
+                ),
+            );
+        }
+        degraded
+    }
+
     /// Stream one model to every target over the data plane, encoding
     /// each payload chunk ONCE and fanning the same frame bytes out to
     /// all learners (`send_raw`), so per-round controller encode work is
@@ -631,7 +758,7 @@ impl Controller {
         let origin = std::time::Instant::now();
         let n = targets.len();
         let chunk_bytes = self.env.effective_stream_chunk().max(1);
-        let configured = self.dispatch_codec();
+        let configured = self.negotiate_dispatch_codec(targets);
         let (codec, base, base_round) = if configured.needs_base() {
             match self.last_broadcast.lock().unwrap().clone() {
                 Some((round, m)) => (configured, Some(m), round),
@@ -692,51 +819,119 @@ impl Controller {
             }
         }
 
-        // Chunk walk: encode each tensor once through the codec, slice,
-        // encode each chunk frame once, fan the same bytes out.
-        let mut seq = 0u64;
+        // Chunk walk: a double-buffered two-stage pipeline. A producer
+        // thread encodes payload chunk N+1 (codec encode + message
+        // framing, each exactly ONCE) while this thread fans chunk N's
+        // bytes out to every learner — compression overlaps the network.
+        // Channel depth 1 = one frame in flight + one being encoded.
         let mut digest = FNV64_INIT;
-        let mut ser_time = Duration::ZERO;
-        for (ti, t) in model.tensors.iter().enumerate() {
-            if !state.iter().any(|s| *s == SendState::Alive) {
-                break;
-            }
-            let sw = Stopwatch::start();
-            let bytes = codec
-                .codec()
-                .encode(&t.data, base.as_ref().map(|b| &b.tensors[ti].data[..]));
-            ser_time += sw.elapsed();
-            self.dispatch_encodes.fetch_add(1, Ordering::SeqCst);
-            for part in bytes.chunks(chunk_bytes) {
-                digest = fnv1a64(digest, part);
-                let frame =
-                    Message::ModelChunk { stream_id, seq, bytes: part.to_vec() }.encode();
-                seq += 1;
-                let results = self.dispatch_pool.parallel_map(n, |i| {
-                    (state[i] == SendState::Alive)
-                        .then(|| targets[i].rpc_raw_timed(psk, &frame, origin))
-                });
-                for (i, r) in results.into_iter().enumerate() {
-                    match r {
-                        None => {}
-                        Some(Ok((reply, sent_at))) => {
-                            dispatch = dispatch.max(sent_at);
-                            if let Err(e) = client::ack_of(&reply) {
-                                state[i] = SendState::Done;
-                                replies[i] = Some(Err(anyhow::anyhow!(
-                                    "stream dispatch chunk refused: {e}"
-                                )));
+        if state.iter().any(|s| *s == SendState::Alive) {
+            let (frame_tx, frame_rx) =
+                std::sync::mpsc::sync_channel::<(usize, usize, Vec<u8>)>(1);
+            let (walk_digest, ser_time) = std::thread::scope(|scope| {
+                let producer_base = base.clone();
+                let producer = scope.spawn(move || {
+                    let codec_impl = codec.codec();
+                    let mut digest = FNV64_INIT;
+                    let mut ser = Duration::ZERO;
+                    let mut seq = 0u64;
+                    let esz = codec.wire_dtype().size_bytes();
+                    let block = (chunk_bytes / 4).max(1);
+                    'walk: for (ti, t) in model.tensors.iter().enumerate() {
+                        let tensor_base =
+                            producer_base.as_ref().map(|b| &b.tensors[ti].data[..]);
+                        if codec_impl.is_framed() {
+                            // One self-delimiting compressed frame per
+                            // element block, never split on the wire.
+                            // Mirrors `client::stream_model_with`'s
+                            // framed walk (same `chunk_bytes / 4` block
+                            // formula, same digest fold) — keep the two
+                            // in lockstep.
+                            let mut lo = 0usize;
+                            while lo < t.data.len() {
+                                let hi = (lo + block).min(t.data.len());
+                                let sw = Stopwatch::start();
+                                let mut payload = Vec::with_capacity((hi - lo) + 16);
+                                codec_impl.encode_frame_into(
+                                    &t.data[lo..hi],
+                                    tensor_base.map(|b| &b[lo..hi]),
+                                    &mut payload,
+                                );
+                                ser += sw.elapsed();
+                                self.dispatch_encodes.fetch_add(1, Ordering::SeqCst);
+                                digest = fnv1a64(digest, &payload);
+                                let raw_equiv = (hi - lo) * 4;
+                                let payload_len = payload.len();
+                                let frame =
+                                    Message::ModelChunk { stream_id, seq, bytes: payload }
+                                        .encode();
+                                if frame_tx.send((raw_equiv, payload_len, frame)).is_err() {
+                                    break 'walk; // every target died
+                                }
+                                seq += 1;
+                                lo = hi;
+                            }
+                        } else {
+                            let sw = Stopwatch::start();
+                            let bytes = codec_impl.encode(&t.data, tensor_base);
+                            ser += sw.elapsed();
+                            self.dispatch_encodes.fetch_add(1, Ordering::SeqCst);
+                            for part in bytes.chunks(chunk_bytes) {
+                                digest = fnv1a64(digest, part);
+                                let raw_equiv = part.len() * 4 / esz;
+                                let frame = Message::ModelChunk {
+                                    stream_id,
+                                    seq,
+                                    bytes: part.to_vec(),
+                                }
+                                .encode();
+                                if frame_tx.send((raw_equiv, part.len(), frame)).is_err() {
+                                    break 'walk;
+                                }
+                                seq += 1;
                             }
                         }
-                        Some(Err(e)) => {
-                            state[i] = SendState::Done;
-                            replies[i] = Some(Err(e));
+                    }
+                    (digest, ser)
+                });
+                for (raw_equiv, payload_len, frame) in frame_rx.iter() {
+                    let live = state.iter().filter(|s| **s == SendState::Alive).count();
+                    if live == 0 {
+                        break;
+                    }
+                    self.dispatch_wire_sent
+                        .fetch_add((payload_len * live) as u64, Ordering::SeqCst);
+                    self.dispatch_wire_raw
+                        .fetch_add((raw_equiv * live) as u64, Ordering::SeqCst);
+                    let results = self.dispatch_pool.parallel_map(n, |i| {
+                        (state[i] == SendState::Alive)
+                            .then(|| targets[i].rpc_raw_timed(psk, &frame, origin))
+                    });
+                    for (i, r) in results.into_iter().enumerate() {
+                        match r {
+                            None => {}
+                            Some(Ok((reply, sent_at))) => {
+                                dispatch = dispatch.max(sent_at);
+                                if let Err(e) = client::ack_of(&reply) {
+                                    state[i] = SendState::Done;
+                                    replies[i] = Some(Err(anyhow::anyhow!(
+                                        "stream dispatch chunk refused: {e}"
+                                    )));
+                                }
+                            }
+                            Some(Err(e)) => {
+                                state[i] = SendState::Done;
+                                replies[i] = Some(Err(e));
+                            }
                         }
                     }
                 }
-            }
+                drop(frame_rx);
+                producer.join().expect("dispatch encode thread panicked")
+            });
+            digest = walk_digest;
+            self.record(FedOp::Serialization, ser_time);
         }
-        self.record(FedOp::Serialization, ser_time);
 
         // End fan-out; the reply is the purpose's final answer.
         let end = Message::ModelStreamEnd { stream_id, digest }.encode();
@@ -781,12 +976,21 @@ impl Controller {
                         chunk_bytes,
                     );
                     client::stream_model_with(
-                        &mut |msg| match h.rpc(psk, &msg) {
-                            Ok(Message::Error { code, detail }) => {
-                                Err(client::RpcError::Remote { code, detail })
+                        &mut |msg| {
+                            // The re-stream is real wire traffic: keep
+                            // the gauges honest (f32 ⇒ sent == raw).
+                            if let Message::ModelChunk { bytes, .. } = &msg {
+                                let len = bytes.len() as u64;
+                                self.dispatch_wire_sent.fetch_add(len, Ordering::SeqCst);
+                                self.dispatch_wire_raw.fetch_add(len, Ordering::SeqCst);
                             }
-                            Ok(reply) => Ok(reply),
-                            Err(e) => Err(client::RpcError::Transport(e)),
+                            match h.rpc(psk, &msg) {
+                                Ok(Message::Error { code, detail }) => {
+                                    Err(client::RpcError::Remote { code, detail })
+                                }
+                                Ok(reply) => Ok(reply),
+                                Err(e) => Err(client::RpcError::Transport(e)),
+                            }
                         },
                         &send,
                     )
@@ -815,6 +1019,19 @@ impl Controller {
         let any_delivered = replies
             .iter()
             .any(|r| matches!(r, Some(Ok(m)) if !matches!(m, Message::Error { .. })));
+        // Per-learner base map first: every learner that acknowledged a
+        // lossless stream now holds `model` bit-exactly (the f32
+        // fallback is lossless too). Overwriting entries here also drops
+        // their handles on the displaced shared base, so the rotation
+        // below sees a unique Arc and can recycle its buffers.
+        if codec.is_lossless() {
+            let mut bases = self.learner_bases.lock().unwrap();
+            for (i, r) in replies.iter().enumerate() {
+                if matches!(r, Some(Ok(m)) if !matches!(m, Message::Error { .. })) {
+                    bases.insert(targets[i].id.clone(), (model_round, Arc::clone(model)));
+                }
+            }
+        }
         if any_delivered && configured.needs_base() && codec.is_lossless() {
             let displaced = self
                 .last_broadcast
@@ -841,6 +1058,112 @@ impl Controller {
             })
             .collect();
         (dispatch, out)
+    }
+
+    /// Stream one model to a single learner — the async protocol's
+    /// re-dispatch path. There is no fan-out to share, but the codec
+    /// wins carry over: delta/delta-rle encode against the last model
+    /// *this* learner acknowledged (per-learner base map), with the
+    /// standard full-f32 fallback when no base is shared. Returns the
+    /// stream's final `End` reply.
+    pub(crate) fn stream_to_learner(
+        &self,
+        target: &Arc<LearnerHandle>,
+        purpose: StreamPurpose,
+        task_id: u64,
+        spec: &TaskSpec,
+        model: &Arc<TensorModel>,
+        model_round: u64,
+    ) -> Result<Message> {
+        let psk = self.psk;
+        let configured = match target.accepted_codecs(psk) {
+            Some(accepted) => self.dispatch_codec().degrade_to(&accepted),
+            None => self.dispatch_codec(),
+        };
+        let (codec, base, base_round) = if configured.needs_base() {
+            match self.learner_bases.lock().unwrap().get(&target.id).cloned() {
+                Some((round, m)) => (configured, Some(m), round),
+                // Nothing acknowledged yet: full send establishes one.
+                None => (CodecId::F32, None, 0),
+            }
+        } else {
+            (configured, None, 0)
+        };
+        let meta = TaskMeta::default();
+        let send = StreamSend {
+            purpose,
+            task_id,
+            round: model_round,
+            learner_id: "",
+            model: model.as_ref(),
+            meta: &meta,
+            spec,
+            codec,
+            base: base.as_deref(),
+            base_round,
+            chunk_bytes: self.env.effective_stream_chunk().max(1),
+        };
+        // One attempt = one codec, so the wire gauges stay exact per
+        // chunk whether the stream succeeds, fails, or falls back: sent
+        // counts encoded payload bytes, raw counts their f32-equivalent
+        // (frame header parse for framed codecs, dtype ratio otherwise).
+        let run_attempt = |send: &StreamSend<'_>| {
+            let codec = send.codec;
+            client::stream_model_with(
+                &mut |msg: Message| {
+                    if let Message::ModelChunk { bytes, .. } = &msg {
+                        self.dispatch_wire_sent.fetch_add(bytes.len() as u64, Ordering::SeqCst);
+                        let raw = if codec.is_framed() {
+                            codec
+                                .codec()
+                                .frame_elems(bytes)
+                                .map(|n| (n * 4) as u64)
+                                .unwrap_or(bytes.len() as u64)
+                        } else {
+                            (bytes.len() * 4 / codec.wire_dtype().size_bytes()) as u64
+                        };
+                        self.dispatch_wire_raw.fetch_add(raw, Ordering::SeqCst);
+                    }
+                    match target.rpc(psk, &msg) {
+                        Ok(Message::Error { code, detail }) => {
+                            Err(client::RpcError::Remote { code, detail })
+                        }
+                        Ok(reply) => Ok(reply),
+                        Err(e) => Err(client::RpcError::Transport(e)),
+                    }
+                },
+                send,
+            )
+        };
+        let reply = match run_attempt(&send) {
+            Err(client::RpcError::Remote { code: ErrorCode::NotFound, .. })
+                if codec.needs_base() && self.env.delta_fallback =>
+            {
+                // The learner lost the base (restart / staleness): the
+                // standard full-f32 retry, mirroring
+                // `stream_model_with_fallback`.
+                let full =
+                    StreamSend { codec: CodecId::F32, base: None, base_round: 0, ..send.clone() };
+                run_attempt(&full)
+            }
+            other => other,
+        }
+        .map_err(|e| anyhow::anyhow!("streamed dispatch to {}: {e}", target.id))?;
+        if codec.is_lossless() && !matches!(reply, Message::Error { .. }) {
+            let displaced = self
+                .learner_bases
+                .lock()
+                .unwrap()
+                .insert(target.id.clone(), (model_round, Arc::clone(model)));
+            if let Some((_, old)) = displaced {
+                if !Arc::ptr_eq(&old, model) {
+                    if let Some(scratch) = self.effective_backend().scratch() {
+                        scratch.reclaim_model(old);
+                    }
+                }
+            }
+        }
+        Ok(reply)
     }
 }
 
@@ -942,7 +1265,7 @@ impl Service for Controller {
             }),
             Message::ModelChunk { stream_id, seq, bytes } => {
                 let sw = Stopwatch::start();
-                let reply = self.ingest.chunk(stream_id, seq, &bytes);
+                let reply = self.ingest.chunk(stream_id, seq, bytes);
                 self.record(FedOp::Serialization, sw.elapsed());
                 reply
             }

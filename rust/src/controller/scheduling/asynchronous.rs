@@ -9,11 +9,19 @@
 //! The paper reports async progress in "community update requests"; we
 //! group `learners` consecutive community updates into one
 //! [`RoundReport`] so async sessions remain comparable to sync rounds.
+//!
+//! With `stream_chunk_bytes > 0` the async session rides the same
+//! codec-aware data plane as sync rounds: the initial fan-out is one
+//! encode-once chunk stream shared by every learner, and each
+//! re-dispatch is a single-target stream delta-coded against the last
+//! model *that* learner acknowledged (per-learner base map — async
+//! learners sit at divergent community rounds, so no single shared base
+//! can serve them).
 
 use super::super::Controller;
 use crate::metrics::{FedOp, RoundReport};
 use crate::proto::client;
-use crate::proto::{Message, ModelProto, TaskSpec};
+use crate::proto::{Message, ModelProto, StreamPurpose, TaskSpec};
 use crate::tensor::{ByteOrder, DType};
 use crate::util::{log_warn, Rng, Stopwatch};
 use anyhow::{bail, Result};
@@ -43,23 +51,37 @@ pub fn run_async_session(
     let start_updates = ctrl.async_updates();
     let mut dispatched_round: u64 = 0;
 
-    // Initial fan-out.
-    let (community, _) = ctrl
-        .community()
-        .ok_or_else(|| anyhow::anyhow!("async session: community model not initialized"))?;
-    let proto = ModelProto::from_model(&community, DType::F32, ByteOrder::Little);
-    // Release the snapshot so async mixing can recycle the model's
-    // buffers when it is replaced.
-    drop(community);
+    // Initial fan-out: streamed (encode-once, codec-aware) when a chunk
+    // size is configured, one-shot otherwise.
+    let streamed = ctrl.env.effective_stream_chunk() > 0;
     let first_sw = Stopwatch::start();
-    let initial_task = Message::RunTask {
-        task_id: dispatched_round,
-        round: dispatched_round,
-        model: proto,
-        spec: spec.clone(),
+    let (dispatch_time, acks) = {
+        let (community, cround) = ctrl
+            .community()
+            .ok_or_else(|| anyhow::anyhow!("async session: community model not initialized"))?;
+        if streamed {
+            ctrl.stream_broadcast(
+                &participants,
+                StreamPurpose::RunTask,
+                dispatched_round,
+                &spec,
+                &community,
+                cround,
+            )
+        } else {
+            let proto = ModelProto::from_model(&community, DType::F32, ByteOrder::Little);
+            // Release the snapshot so async mixing can recycle the
+            // model's buffers when it is replaced.
+            drop(community);
+            let initial_task = Message::RunTask {
+                task_id: dispatched_round,
+                round: dispatched_round,
+                model: proto,
+                spec: spec.clone(),
+            };
+            ctrl.broadcast(&participants, &initial_task)
+        }
     };
-    let (dispatch_time, acks) = ctrl.broadcast(&participants, &initial_task);
-    drop(initial_task);
     ctrl.record(FedOp::TrainDispatch, dispatch_time);
     let mut any_ok = false;
     for (id, a) in &acks {
@@ -99,19 +121,33 @@ pub fn run_async_session(
                 let needs_task = ctrl.learner_needs_task(&h.id);
                 if needs_task {
                     let (community, cround) = ctrl.community().unwrap();
-                    let proto =
-                        ModelProto::from_model(&community, DType::F32, ByteOrder::Little);
                     dispatched_round = cround;
                     let sw = Stopwatch::start();
-                    let r = h.rpc(
-                        ctrl.psk,
-                        &Message::RunTask {
-                            task_id: dispatched_round,
-                            round: dispatched_round,
-                            model: proto,
-                            spec: spec.clone(),
-                        },
-                    );
+                    let r = if streamed {
+                        // Single-target stream, delta-coded against the
+                        // last model this learner acknowledged.
+                        ctrl.stream_to_learner(
+                            h,
+                            StreamPurpose::RunTask,
+                            dispatched_round,
+                            &spec,
+                            &community,
+                            cround,
+                        )
+                    } else {
+                        let proto =
+                            ModelProto::from_model(&community, DType::F32, ByteOrder::Little);
+                        drop(community);
+                        h.rpc(
+                            ctrl.psk,
+                            &Message::RunTask {
+                                task_id: dispatched_round,
+                                round: dispatched_round,
+                                model: proto,
+                                spec: spec.clone(),
+                            },
+                        )
+                    };
                     ctrl.record(FedOp::TrainDispatch, sw.elapsed());
                     match r {
                         Ok(reply) if client::ack_of(&reply).is_ok() => {

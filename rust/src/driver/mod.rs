@@ -44,6 +44,14 @@ pub struct FederationReport {
     /// sender floor (sub-floor configs are clamped silently on the wire
     /// but surfaced here, plus a one-time warning at env-load time).
     pub effective_stream_chunk_bytes: usize,
+    /// Stream payload bytes that actually crossed the controller's wire
+    /// (dispatch egress + upload ingress), in encoded form. 0 for
+    /// one-shot runs (the gauges cover the streamed data plane).
+    pub wire_bytes_sent: u64,
+    /// f32-equivalent bytes the wire codecs kept *off* the wire:
+    /// `raw volume - wire_bytes_sent`. Divide by rounds for the
+    /// compression ablation's bytes-per-round rows.
+    pub wire_bytes_saved: u64,
 }
 
 /// Unique per-process run counter so in-proc endpoint names never clash
@@ -225,6 +233,7 @@ pub fn run_with_trainer(
     }
 
     let final_loss = round_metrics.iter().rev().find_map(|r| r.community_eval_loss);
+    let (wire_sent, wire_raw) = controller.wire_bytes_totals();
     Ok(FederationReport {
         env_name: env.name.clone(),
         round_metrics,
@@ -234,6 +243,8 @@ pub fn run_with_trainer(
         missed_heartbeats: missed.load(Ordering::SeqCst),
         peak_wire_ingest_bytes: controller.peak_wire_ingest_bytes(),
         effective_stream_chunk_bytes: env.effective_stream_chunk(),
+        wire_bytes_sent: wire_sent,
+        wire_bytes_saved: wire_raw.saturating_sub(wire_sent),
     })
 }
 

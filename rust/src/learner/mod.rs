@@ -240,15 +240,16 @@ impl Learner {
         let chunk = self.stream_chunk();
         let upload = if chunk > 0 {
             // Ensure the callback session (and its codec negotiation)
-            // exists before choosing a codec, then honor the peer's
-            // accepted set — a codec the controller negotiated away
-            // falls back to plain f32 instead of a refused Begin.
+            // exists before choosing a codec.
             self.with_callback_conn(|_| Ok(()))
                 .map_err(|e| anyhow::anyhow!("controller handshake: {e}"))?;
             let configured = self.upload_codec();
+            // Honor the peer's accepted set: a codec the controller
+            // negotiated away degrades along the lossless chain
+            // (delta-rle → delta → f32) instead of a refused Begin.
             let configured = match self.accepted_codecs.lock().unwrap().as_ref() {
-                Some(accepted) if !accepted.contains(&configured) => CodecId::F32,
-                _ => configured,
+                Some(accepted) => configured.degrade_to(accepted),
+                None => configured,
             };
             let (codec, base, base_round) = if configured.needs_base() {
                 match self.last_community.lock().unwrap().clone() {
@@ -413,7 +414,7 @@ impl Service for LearnerServicer {
                 )
             }
             Message::ModelChunk { stream_id, seq, bytes } => {
-                learner.ingest.chunk(stream_id, seq, &bytes)
+                learner.ingest.chunk(stream_id, seq, bytes)
             }
             Message::ModelStreamEnd { stream_id, digest } => {
                 let finished = match learner.ingest.end(stream_id, digest) {

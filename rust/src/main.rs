@@ -221,16 +221,34 @@ fn cmd_stress(raw: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// Throughput metrics the CI perf gate tracks: (report name, column).
-/// Every row of the named report contributes a `<report>/<row>/<column>`
-/// metric; which ones actually gate is decided by what the committed
-/// baseline lists. All are higher-is-better; timing columns are
-/// deliberately excluded — quick-mode wall-clock on shared CI cores is
-/// too noisy for a hard gate, throughput floors are not.
-const GATED_METRICS: &[(&str, &str)] = &[
-    ("codec_ablation", "enc+dec MB/s"),
-    ("agg_ablation_axpy", "GB/s (best)"),
+/// Metrics the CI perf gate tracks: (report name, column, lower-is-
+/// better). Every row of the named report contributes a
+/// `<report>/<row>/<column>` metric; which ones actually gate is
+/// decided by what the committed baseline lists. Throughput columns are
+/// higher-is-better (the gate fails on drops); wire-size ratios are
+/// lower-is-better (the gate fails on *growth* — a codec regression
+/// that re-inflates the wire). Timing columns are deliberately
+/// excluded — quick-mode wall-clock on shared CI cores is too noisy
+/// for a hard gate; throughput floors and deterministic size ratios
+/// are not.
+const GATED_METRICS: &[(&str, &str, bool)] = &[
+    ("codec_ablation", "enc+dec MB/s", false),
+    ("agg_ablation_axpy", "GB/s (best)", false),
+    ("codec_ablation_wire", "wire frac of f32", true),
 ];
+
+/// Is the named metric lower-is-better? (Direction travels with the
+/// metric spec, not the baseline file, so a stale baseline cannot flip
+/// a gate's meaning.)
+fn metric_lower_is_better(key: &str) -> bool {
+    GATED_METRICS
+        .iter()
+        .any(|(report, column, lower)| {
+            *lower
+                && key.starts_with(&format!("{report}/"))
+                && key.ends_with(&format!("/{column}"))
+        })
+}
 
 fn cmd_bench_check(raw: &[String]) -> anyhow::Result<()> {
     let cmd = Command::new(
@@ -266,7 +284,7 @@ fn cmd_bench_check(raw: &[String]) -> anyhow::Result<()> {
         ) else {
             continue; // not a ReportWriter file
         };
-        for (report, column) in GATED_METRICS {
+        for (report, column, _lower) in GATED_METRICS {
             if name != *report {
                 continue;
             }
@@ -301,7 +319,8 @@ fn cmd_bench_check(raw: &[String]) -> anyhow::Result<()> {
     }
 
     // Gate: every baseline metric present in the current run must not
-    // have dropped by more than `threshold`.
+    // have moved against its direction by more than `threshold` —
+    // throughput must not drop, wire-size ratios must not grow.
     let Some(baseline_path) = a.get("baseline") else {
         println!("no --baseline given; merged {} metrics without gating", metrics.len());
         return Ok(());
@@ -322,10 +341,23 @@ fn cmd_bench_check(raw: &[String]) -> anyhow::Result<()> {
             continue;
         };
         compared += 1;
-        let floor = base * (1.0 - threshold);
-        let verdict = if cur < floor { "REGRESSION" } else { "ok" };
-        println!("{verdict:>10}  {key}: baseline {base:.2}, current {cur:.2} (floor {floor:.2})");
-        if cur < floor {
+        let regressed = if metric_lower_is_better(key) {
+            let ceiling = base * (1.0 + threshold);
+            let verdict = if cur > ceiling { "REGRESSION" } else { "ok" };
+            println!(
+                "{verdict:>10}  {key}: baseline {base:.3}, current {cur:.3} \
+                 (ceiling {ceiling:.3}, lower is better)"
+            );
+            cur > ceiling
+        } else {
+            let floor = base * (1.0 - threshold);
+            let verdict = if cur < floor { "REGRESSION" } else { "ok" };
+            println!(
+                "{verdict:>10}  {key}: baseline {base:.2}, current {cur:.2} (floor {floor:.2})"
+            );
+            cur < floor
+        };
+        if regressed {
             regressions.push(key.clone());
         }
     }
@@ -334,7 +366,7 @@ fn cmd_bench_check(raw: &[String]) -> anyhow::Result<()> {
     }
     if !regressions.is_empty() {
         anyhow::bail!(
-            "throughput regressed >{:.0}% on {} metric(s): {} — if intentional, apply the \
+            "perf gate tripped >{:.0}% on {} metric(s): {} — if intentional, apply the \
              'perf-regression-ok' label (see .github/bench/README.md)",
             threshold * 100.0,
             regressions.len(),

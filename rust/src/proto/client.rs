@@ -35,7 +35,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Wire codecs this build offers in the `Hello` handshake, in `auto`
 /// preference order (see [`crate::tensor::codec`]).
-pub const SUPPORTED_CODECS: [CodecId; 3] = CodecId::ALL;
+pub const SUPPORTED_CODECS: [CodecId; 4] = CodecId::ALL;
 
 /// Default data-plane chunk size (256 KiB): large enough to amortize
 /// per-chunk framing/ack overhead, small enough that in-flight receive
@@ -375,12 +375,39 @@ where
     expect_ack(rpc_fn(begin)?)?;
     let mut seq = 0u64;
     let mut digest = FNV64_INIT;
-    for (i, t) in send.model.tensors.iter().enumerate() {
-        let bytes = codec.encode(&t.data, base.map(|b| &b.tensors[i].data[..]));
-        for part in bytes.chunks(chunk_bytes) {
-            digest = fnv1a64(digest, part);
-            expect_ack(rpc_fn(Message::ModelChunk { stream_id, seq, bytes: part.to_vec() })?)?;
-            seq += 1;
+    if codec.is_framed() {
+        // Framed codecs (delta-rle): one self-delimiting compressed
+        // frame per chunk, each covering a whole element block within a
+        // single tensor — the receiver decompresses every chunk
+        // independently, overlapped with the next chunk's transfer.
+        // The controller's pipelined fan-out
+        // (`Controller::stream_broadcast`) mirrors this walk (same
+        // block formula, same digest fold) — keep the two in lockstep.
+        let block = (chunk_bytes / 4).max(1);
+        for (i, t) in send.model.tensors.iter().enumerate() {
+            let mut lo = 0usize;
+            while lo < t.data.len() {
+                let hi = (lo + block).min(t.data.len());
+                let mut frame = Vec::with_capacity((hi - lo) + 16);
+                codec.encode_frame_into(
+                    &t.data[lo..hi],
+                    base.map(|b| &b.tensors[i].data[lo..hi]),
+                    &mut frame,
+                );
+                digest = fnv1a64(digest, &frame);
+                expect_ack(rpc_fn(Message::ModelChunk { stream_id, seq, bytes: frame })?)?;
+                seq += 1;
+                lo = hi;
+            }
+        }
+    } else {
+        for (i, t) in send.model.tensors.iter().enumerate() {
+            let bytes = codec.encode(&t.data, base.map(|b| &b.tensors[i].data[..]));
+            for part in bytes.chunks(chunk_bytes) {
+                digest = fnv1a64(digest, part);
+                expect_ack(rpc_fn(Message::ModelChunk { stream_id, seq, bytes: part.to_vec() })?)?;
+                seq += 1;
+            }
         }
     }
     match rpc_fn(Message::ModelStreamEnd { stream_id, digest })? {

@@ -6,6 +6,12 @@
 //! Chunks decode **on arrival**, directly into pre-sized per-tensor f32
 //! buffers drawn from an optional [`BufferPool`] — the receiver never
 //! materializes a whole-model wire buffer, and receive overlaps decode.
+//! Framed codecs (delta-rle) go one stage further: the connection
+//! handler validates + digests a chunk and acks immediately, while a
+//! deferred-decode worker decompresses it — decode of chunk N overlaps
+//! chunk N+1's encode and wire transfer (the receive half of the
+//! data plane's double-buffered pipeline). Decode failures surface as
+//! typed `StreamProtocol` errors on the next chunk or at `End`.
 //! The component embedding the ingest decides what a finished stream
 //! *means* (store a contribution, install a community model, start a
 //! training task, run an evaluation) via the [`FinishedStream`] returned
@@ -23,8 +29,8 @@ use crate::tensor::{ByteOrder, CodecId, DType, Tensor, TensorModel};
 use crate::util::log_debug;
 use anyhow::{bail, Result};
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// Source of decode buffers: the controller plugs its aggregation
@@ -40,6 +46,66 @@ pub trait BufferPool: Send + Sync {
 
 /// Injected time source (tests swap in a deterministic clock).
 pub type Clock = Arc<dyn Fn() -> Instant + Send + Sync>;
+
+/// Wire-payload gauge + byte totals, shared between the ingest front
+/// end (connection handlers) and the deferred-decode worker.
+struct WireStats {
+    /// Wire-payload bytes currently held for model ingest (one-shot
+    /// protos being decoded + stream chunks in flight or queued for the
+    /// decode worker), plus the high-water mark.
+    in_flight: AtomicUsize,
+    peak: AtomicUsize,
+    /// Total data-plane payload bytes received over streams (wire form,
+    /// i.e. compressed for framed codecs, half-size for bf16).
+    recv_wire: AtomicU64,
+    /// f32-equivalent bytes those stream payloads decoded into — the
+    /// raw volume the wire codec avoided moving.
+    recv_raw: AtomicU64,
+}
+
+impl WireStats {
+    fn new() -> WireStats {
+        WireStats {
+            in_flight: AtomicUsize::new(0),
+            peak: AtomicUsize::new(0),
+            recv_wire: AtomicU64::new(0),
+            recv_raw: AtomicU64::new(0),
+        }
+    }
+
+    fn hold(&self, bytes: usize) {
+        let now = self.in_flight.fetch_add(bytes, Ordering::SeqCst) + bytes;
+        self.peak.fetch_max(now, Ordering::SeqCst);
+    }
+
+    fn release(&self, bytes: usize) {
+        self.in_flight.fetch_sub(bytes, Ordering::SeqCst);
+    }
+
+    fn note_recv(&self, wire: usize, raw_equiv: usize) {
+        self.recv_wire.fetch_add(wire as u64, Ordering::SeqCst);
+        self.recv_raw.fetch_add(raw_equiv as u64, Ordering::SeqCst);
+    }
+}
+
+/// Destination span reserved for one framed chunk — fixed under the
+/// same stream lock that validated its `seq`, so frames land at the
+/// right offsets no matter what order the decode worker receives them
+/// in (two handlers racing between lock release and channel enqueue
+/// must not be able to transpose blocks).
+struct FrameSpan {
+    tensor: usize,
+    lo: usize,
+    elems: usize,
+}
+
+/// Work item for the deferred-decode worker (framed streams only).
+enum DecodeJob {
+    /// Decompress one frame into its stream's pre-reserved span.
+    Frame { stream: Arc<Mutex<ModelStream>>, bytes: Vec<u8>, span: FrameSpan },
+    /// Flush marker: every job enqueued before it has been processed.
+    Barrier(mpsc::SyncSender<()>),
+}
 
 /// Caps on the inbound data plane, so a buggy or hostile peer cannot
 /// grow receiver memory without bound: concurrent open streams, the
@@ -128,14 +194,26 @@ pub struct ModelStream {
     filled: Vec<usize>,
     /// Tensor currently being filled.
     cur_tensor: usize,
-    /// Wire payload bytes consumed so far / expected in total.
+    /// Payload bytes consumed so far / expected in total. Element-stable
+    /// codecs count wire bytes; framed codecs count the f32-equivalent
+    /// bytes each frame decoded into (wire bytes vary with compression,
+    /// the decoded volume is what the announced layout fixes).
     received: usize,
     expected: usize,
     next_seq: u64,
-    /// Partial-element bytes straddling a chunk boundary (< element size).
+    /// Partial-element bytes straddling a chunk boundary (< element
+    /// size; element-stable codecs only — frames are never split).
     carry: Vec<u8>,
-    /// Running FNV-1a 64 over the payload bytes.
+    /// Running FNV-1a 64 over the payload bytes as they crossed the wire.
     digest: u64,
+    /// Framed codec: chunks are self-delimiting frames, decoded by the
+    /// deferred-decode worker instead of in the connection handler.
+    framed: bool,
+    /// First failure hit by the deferred-decode worker; surfaced as a
+    /// typed StreamProtocol error on the next chunk or at `End`.
+    deferred: Option<anyhow::Error>,
+    /// Shared byte totals (compressed vs f32-equivalent received).
+    stats: Arc<WireStats>,
     /// Pool to return `bufs` to if the stream dies.
     pool: Option<Arc<dyn BufferPool>>,
     /// Last `Begin`/`Chunk` arrival; idle streams past the limit are
@@ -149,7 +227,8 @@ pub struct ModelStream {
 }
 
 impl ModelStream {
-    /// Fold one chunk's bytes into the partial model.
+    /// Fold one chunk's bytes into the partial model (element-stable
+    /// codecs; the digest was already folded by the front end).
     fn ingest(&mut self, mut bytes: &[u8]) -> Result<()> {
         if self.received + bytes.len() > self.expected {
             bail!(
@@ -159,8 +238,9 @@ impl ModelStream {
                 self.expected
             );
         }
-        self.digest = fnv1a64(self.digest, bytes);
         self.received += bytes.len();
+        let esz = self.codec.wire_dtype().size_bytes();
+        self.stats.note_recv(bytes.len(), bytes.len() * 4 / esz);
         let codec = self.codec.codec();
         let base = self.base.clone();
         while !bytes.is_empty() {
@@ -216,6 +296,56 @@ impl ModelStream {
             bytes = &bytes[take..];
         }
         Ok(())
+    }
+
+    /// Reserve the destination span for one self-delimiting frame —
+    /// the ordering-sensitive half of framed ingest, run in the
+    /// connection handler under the same lock that validated `seq`.
+    /// Parses only the cheap frame header; malformed headers surface
+    /// immediately as chunk errors.
+    fn reserve_frame_span(&mut self, bytes: &[u8]) -> Result<FrameSpan> {
+        let n = self.codec.codec().frame_elems(bytes)?;
+        if n == 0 {
+            bail!("empty frame");
+        }
+        while self.cur_tensor < self.layout.len()
+            && self.filled[self.cur_tensor] == self.layout[self.cur_tensor].elems
+        {
+            self.cur_tensor += 1;
+        }
+        let t = self.cur_tensor;
+        if t >= self.layout.len() {
+            bail!("frame beyond announced layout");
+        }
+        let lo = self.filled[t];
+        let remaining = self.layout[t].elems - lo;
+        if n > remaining {
+            bail!(
+                "frame covers {n} elements but tensor '{}' has {remaining} remaining \
+                 (frames must not span tensors)",
+                self.layout[t].name
+            );
+        }
+        if self.received + n * 4 > self.expected {
+            bail!("stream overrun: {} + {} > expected {}", self.received, n * 4, self.expected);
+        }
+        self.filled[t] += n;
+        self.received += n * 4;
+        self.stats.note_recv(bytes.len(), n * 4);
+        Ok(FrameSpan { tensor: t, lo, elems: n })
+    }
+
+    /// Decompress one frame into its pre-reserved span (the deferred
+    /// half, run on the decode worker — span reservation already fixed
+    /// the destination, so arrival order at the worker is irrelevant).
+    fn decode_reserved(&mut self, span: &FrameSpan, bytes: &[u8]) -> Result<()> {
+        let base = self.base.clone();
+        let (t, lo, n) = (span.tensor, span.lo, span.elems);
+        self.codec.codec().decode_frame(
+            bytes,
+            base.as_ref().map(|b| &b.tensors[t].data[lo..lo + n]),
+            &mut self.bufs[t][lo..lo + n],
+        )
     }
 
     /// Finish the stream, returning the decoded model.
@@ -281,12 +411,17 @@ pub struct StreamIngest {
     /// Wire bytes announced by currently-open streams (admission budget
     /// against `limits.max_total_stream_bytes`).
     open_stream_bytes: AtomicUsize,
-    /// Wire-payload bytes currently held for model ingest (one-shot
-    /// protos being decoded + stream chunks in flight), plus the
-    /// high-water mark. This is the "second whole-model buffer" the
-    /// data plane eliminates; tests assert the streamed bound.
-    wire_in_flight: AtomicUsize,
-    wire_peak: AtomicUsize,
+    /// Wire gauge + received-byte totals. The gauge covers wire payload
+    /// held for ingest (one-shot protos being decoded + stream chunks in
+    /// flight or queued for the decode worker) — the "second whole-model
+    /// buffer" the data plane eliminates; tests assert the streamed
+    /// bound.
+    stats: Arc<WireStats>,
+    /// Deferred-decode worker feed (framed streams): depth-1 channel =
+    /// one frame decompressing + one queued — the double buffer that
+    /// overlaps decode with the next chunk's wire transfer. Spawned
+    /// lazily on the first framed chunk.
+    decode_tx: Mutex<Option<mpsc::SyncSender<DecodeJob>>>,
     clock: Mutex<Clock>,
 }
 
@@ -302,8 +437,8 @@ impl StreamIngest {
             limits,
             streams: Mutex::new(HashMap::new()),
             open_stream_bytes: AtomicUsize::new(0),
-            wire_in_flight: AtomicUsize::new(0),
-            wire_peak: AtomicUsize::new(0),
+            stats: Arc::new(WireStats::new()),
+            decode_tx: Mutex::new(None),
             clock: Mutex::new(Arc::new(Instant::now) as Clock),
         }
     }
@@ -325,22 +460,86 @@ impl StreamIngest {
     /// the embedding component's one-shot decode path, so streamed and
     /// one-shot runs share one gauge).
     pub fn wire_hold(&self, bytes: usize) {
-        let now = self.wire_in_flight.fetch_add(bytes, Ordering::SeqCst) + bytes;
-        self.wire_peak.fetch_max(now, Ordering::SeqCst);
+        self.stats.hold(bytes);
     }
 
     pub fn wire_release(&self, bytes: usize) {
-        self.wire_in_flight.fetch_sub(bytes, Ordering::SeqCst);
+        self.stats.release(bytes);
     }
 
     /// High-water mark of wire-payload bytes held for model ingest.
     pub fn peak_wire_bytes(&self) -> usize {
-        self.wire_peak.load(Ordering::SeqCst)
+        self.stats.peak.load(Ordering::SeqCst)
+    }
+
+    /// Total stream payload bytes received so far, in wire form
+    /// (compressed for framed codecs, half-size for bf16).
+    pub fn recv_wire_bytes(&self) -> u64 {
+        self.stats.recv_wire.load(Ordering::SeqCst)
+    }
+
+    /// f32-equivalent bytes the received stream payloads decoded into —
+    /// `recv_raw_bytes - recv_wire_bytes` is what the wire codec kept
+    /// off the network.
+    pub fn recv_raw_bytes(&self) -> u64 {
+        self.stats.recv_raw.load(Ordering::SeqCst)
     }
 
     /// Streams currently open.
     pub fn open_streams(&self) -> usize {
         self.streams.lock().unwrap().len()
+    }
+
+    // ---- deferred-decode pipeline (framed codecs) --------------------
+
+    /// Hand of the decode-worker channel, spawning the worker on first
+    /// use. The worker owns the back half of the two-stage receive
+    /// pipeline: the connection handler validates/digests chunk N+1 and
+    /// acks while the worker is still decompressing chunk N.
+    fn decode_tx(&self) -> mpsc::SyncSender<DecodeJob> {
+        let mut guard = self.decode_tx.lock().unwrap();
+        if let Some(tx) = guard.as_ref() {
+            return tx.clone();
+        }
+        let (tx, rx) = mpsc::sync_channel::<DecodeJob>(1);
+        let stats = Arc::clone(&self.stats);
+        std::thread::Builder::new()
+            .name("metisfl-ingest-decode".into())
+            .spawn(move || {
+                while let Ok(job) = rx.recv() {
+                    match job {
+                        DecodeJob::Frame { stream, bytes, span } => {
+                            {
+                                let mut s = stream.lock().unwrap();
+                                if !s.dead && s.deferred.is_none() {
+                                    if let Err(e) = s.decode_reserved(&span, &bytes) {
+                                        s.deferred = Some(e);
+                                    }
+                                }
+                            }
+                            stats.release(bytes.len());
+                        }
+                        DecodeJob::Barrier(done) => {
+                            let _ = done.send(());
+                        }
+                    }
+                }
+            })
+            .expect("spawn ingest decode worker");
+        *guard = Some(tx.clone());
+        tx
+    }
+
+    /// Wait until every frame enqueued so far has been decoded (or
+    /// failed into its stream's deferred slot). No-op when the worker
+    /// was never spawned.
+    fn flush_decodes(&self) {
+        let tx = self.decode_tx.lock().unwrap().clone();
+        let Some(tx) = tx else { return };
+        let (done_tx, done_rx) = mpsc::sync_channel(1);
+        if tx.send(DecodeJob::Barrier(done_tx)).is_ok() {
+            let _ = done_rx.recv();
+        }
     }
 
     // ---- protocol steps ----------------------------------------------
@@ -482,6 +681,9 @@ impl StreamIngest {
             next_seq: 0,
             carry: Vec::new(),
             digest: FNV64_INIT,
+            framed: args.codec.is_framed(),
+            deferred: None,
+            stats: Arc::clone(&self.stats),
             pool,
             last_activity: self.now(),
             dead: false,
@@ -505,8 +707,11 @@ impl StreamIngest {
     }
 
     /// Fold one chunk into its stream. Returns the ack (or a typed
-    /// error, after which the stream is gone).
-    pub fn chunk(&self, stream_id: u64, seq: u64, bytes: &[u8]) -> Message {
+    /// error, after which the stream is gone). Framed streams ack as
+    /// soon as the chunk is validated and queued — decompression runs on
+    /// the decode worker while the sender's next chunk is already on the
+    /// wire; a decode failure surfaces on the next chunk or at `End`.
+    pub fn chunk(&self, stream_id: u64, seq: u64, bytes: Vec<u8>) -> Message {
         let Some(stream) = self.streams.lock().unwrap().get(&stream_id).cloned() else {
             return Message::error(
                 ErrorCode::StreamProtocol,
@@ -521,27 +726,60 @@ impl StreamIngest {
         stream: &Arc<Mutex<ModelStream>>,
         stream_id: u64,
         seq: u64,
-        bytes: &[u8],
+        bytes: Vec<u8>,
     ) -> Message {
         self.wire_hold(bytes.len());
+        // Front-end validation under the stream lock: seq ordering, the
+        // dead-flag race guard, any failure the decode worker deferred,
+        // the running digest, and — for framed streams — the frame's
+        // destination-span reservation. Everything ordering-sensitive
+        // happens here, so the worker can apply frames in whatever
+        // order they reach its queue.
         let result = {
             let mut s = stream.lock().unwrap();
             if s.dead {
                 // We raced a close: the registry entry is already gone
                 // and the buffers were recycled.
                 Err(anyhow::anyhow!("chunk for a closed stream"))
+            } else if let Some(e) = s.deferred.take() {
+                Err(anyhow::anyhow!("deferred decode failure: {e:#}"))
             } else if seq != s.next_seq {
                 Err(anyhow::anyhow!("chunk seq {seq}, expected {}", s.next_seq))
             } else {
                 s.last_activity = self.now();
                 s.next_seq += 1;
-                s.ingest(bytes)
+                s.digest = fnv1a64(s.digest, &bytes);
+                if s.framed {
+                    s.reserve_frame_span(&bytes).map(Some)
+                } else {
+                    s.ingest(&bytes).map(|()| None)
+                }
             }
         };
-        self.wire_release(bytes.len());
         match result {
-            Ok(()) => Message::Ack { task_id: stream_id, ok: true },
+            Ok(Some(span)) => {
+                // The worker releases the gauge once the frame is
+                // decoded; a blocked send here is the pipeline's
+                // backpressure. Note the bound is per *ingest*, not per
+                // stream: one frame in decode + one queued across all
+                // framed streams (see the ROADMAP open item on a
+                // per-stream worker pool).
+                let tx = self.decode_tx();
+                let held = bytes.len();
+                let job = DecodeJob::Frame { stream: Arc::clone(stream), bytes, span };
+                if tx.send(job).is_err() {
+                    self.wire_release(held);
+                    self.kill(stream_id);
+                    return Message::error(ErrorCode::Internal, "ingest decode worker gone");
+                }
+                Message::Ack { task_id: stream_id, ok: true }
+            }
+            Ok(None) => {
+                self.wire_release(bytes.len());
+                Message::Ack { task_id: stream_id, ok: true }
+            }
             Err(e) => {
+                self.wire_release(bytes.len());
                 self.kill(stream_id);
                 Message::error(ErrorCode::StreamProtocol, format!("{e:#}"))
             }
@@ -552,6 +790,25 @@ impl StreamIngest {
     /// model back to the embedding component. `Err` carries the reply to
     /// send the peer (the stream is already torn down).
     pub fn end(&self, stream_id: u64, digest: u64) -> std::result::Result<FinishedStream, Message> {
+        // Framed streams decode through the worker: drain it first so
+        // every queued frame (and any failure it deferred) has landed
+        // before the completeness/digest verdict below.
+        let framed = self
+            .streams
+            .lock()
+            .unwrap()
+            .get(&stream_id)
+            .map(|s| s.lock().unwrap().framed);
+        match framed {
+            Some(true) => self.flush_decodes(),
+            Some(false) => {}
+            None => {
+                return Err(Message::error(
+                    ErrorCode::StreamProtocol,
+                    format!("end for unknown stream {stream_id:#x}"),
+                ))
+            }
+        }
         let Some(stream) = self.streams.lock().unwrap().remove(&stream_id) else {
             return Err(Message::error(
                 ErrorCode::StreamProtocol,
@@ -559,8 +816,9 @@ impl StreamIngest {
             ));
         };
         // Sole holder now (the registry entry is gone; chunk handlers
-        // clone the Arc only while the entry exists and hold it briefly).
-        let stream = match Arc::try_unwrap(stream) {
+        // clone the Arc only while the entry exists and hold it briefly,
+        // and the decode worker was drained above).
+        let mut stream = match Arc::try_unwrap(stream) {
             Ok(m) => m.into_inner().unwrap(),
             Err(arc) => {
                 // A racing chunk still holds the Arc: a protocol
@@ -575,6 +833,13 @@ impl StreamIngest {
             }
         };
         self.open_stream_bytes.fetch_sub(stream.expected, Ordering::SeqCst);
+        if let Some(e) = stream.deferred.take() {
+            stream.recycle();
+            return Err(Message::error(
+                ErrorCode::StreamProtocol,
+                format!("deferred decode failure: {e:#}"),
+            ));
+        }
         let (purpose, task_id, round, learner_id, codec, meta, spec) = (
             stream.purpose,
             stream.task_id,
@@ -648,7 +913,7 @@ impl StreamIngest {
     /// Deliver a chunk through a held handle, exactly as a handler that
     /// cloned the `Arc` before a racing close would.
     #[doc(hidden)]
-    pub fn chunk_into_held(&self, hold: &StreamHold, seq: u64, bytes: &[u8]) -> Message {
+    pub fn chunk_into_held(&self, hold: &StreamHold, seq: u64, bytes: Vec<u8>) -> Message {
         // The stream id is only used for registry teardown + ack text;
         // recover it from the registry if still present, else 0.
         let id = {
@@ -715,7 +980,7 @@ mod tests {
                         base.clone(),
                     ),
                     Message::ModelChunk { stream_id, seq, bytes } => {
-                        ingest.chunk(stream_id, seq, &bytes)
+                        ingest.chunk(stream_id, seq, bytes)
                     }
                     Message::ModelStreamEnd { stream_id, digest } => {
                         match ingest.end(stream_id, digest) {
@@ -877,7 +1142,7 @@ mod tests {
         assert_eq!(ingest.open_streams(), 0);
         // The racing chunk now lands on the dead stream: a typed error,
         // not a panic on the drained buffers.
-        match ingest.chunk_into_held(&hold, 0, &[0u8; 4]) {
+        match ingest.chunk_into_held(&hold, 0, vec![0u8; 4]) {
             Message::Error { code, detail } => {
                 assert_eq!(code, ErrorCode::StreamProtocol);
                 assert!(detail.contains("closed stream"), "{detail}");
@@ -908,6 +1173,85 @@ mod tests {
             other => panic!("unexpected {other:?}"),
         }
         assert_eq!(ingest.open_streams(), 0);
+    }
+
+    #[test]
+    fn framed_ingest_counts_compressed_vs_raw_bytes() {
+        // A delta-rle stream whose model barely moved: the wire total
+        // must come in far below the f32-equivalent total, and the
+        // decoded model must still be bit-exact.
+        let base = Arc::new(model(21));
+        let mut m = (*base).clone();
+        for t in &mut m.tensors {
+            for v in t.data.iter_mut().step_by(13) {
+                *v *= 1.0 + 1e-6;
+            }
+        }
+        let meta = TaskMeta::default();
+        let spec = TaskSpec::default();
+        let ingest = StreamIngest::default();
+        let send = send_args(&m, &meta, &spec, CodecId::DeltaRle, Some(&*base), 256);
+        let f = drive(&ingest, &send, Some(Arc::clone(&base))).unwrap();
+        assert_eq!(f.model, m);
+        let wire = ingest.recv_wire_bytes();
+        let raw = ingest.recv_raw_bytes();
+        assert_eq!(raw as usize, m.byte_size_f32());
+        assert!(wire * 4 < raw, "delta-rle moved {wire} of {raw} raw bytes");
+        assert_eq!(ingest.open_streams(), 0);
+    }
+
+    #[test]
+    fn framed_decode_failure_is_deferred_to_end() {
+        // A frame with a valid header but corrupt payload is acked (its
+        // span is reserved in the handler; decompression is deferred),
+        // and the failure surfaces as a typed StreamProtocol error at
+        // End. A frame with a corrupt *header* is refused immediately.
+        let m = model(22);
+        let base = Arc::new(model(22));
+        let ingest = StreamIngest::default();
+        let begin = |stream_id: u64| StreamBegin {
+            stream_id,
+            task_id: 1,
+            round: 0,
+            purpose: StreamPurpose::TaskCompletion,
+            learner_id: "a".into(),
+            codec: CodecId::DeltaRle,
+            base_round: 1,
+            layout: TensorLayoutProto::codec_layout_of(&m, CodecId::DeltaRle),
+            meta: TaskMeta::default(),
+            spec: TaskSpec::default(),
+        };
+        assert!(matches!(
+            ingest.begin(begin(31), None, Some(Arc::clone(&base))),
+            Message::Ack { ok: true, .. }
+        ));
+        // Valid header (RLE flag, 4 elements) but a truncated payload:
+        // the chunk acks, decompression fails on the worker…
+        let bad = vec![1u8, 4, 0];
+        let digest = fnv1a64(FNV64_INIT, &bad);
+        assert!(matches!(ingest.chunk(31, 0, bad), Message::Ack { ok: true, .. }));
+        // …and the deferred failure lands at End.
+        match ingest.end(31, digest) {
+            Err(Message::Error { code, detail }) => {
+                assert_eq!(code, ErrorCode::StreamProtocol);
+                assert!(detail.contains("deferred decode"), "{detail}");
+            }
+            other => panic!("unexpected {:?}", other.err()),
+        }
+        assert_eq!(ingest.open_streams(), 0);
+        // A malformed frame *header* never reaches the worker: refused
+        // at the chunk, stream torn down.
+        assert!(matches!(
+            ingest.begin(begin(32), None, Some(base)),
+            Message::Ack { ok: true, .. }
+        ));
+        match ingest.chunk(32, 0, vec![9u8, 4, 0, 0]) {
+            Message::Error { code, .. } => assert_eq!(code, ErrorCode::StreamProtocol),
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(ingest.open_streams(), 0);
+        // Budget returned: nothing leaks.
+        assert_eq!(ingest.open_stream_bytes.load(Ordering::SeqCst), 0);
     }
 
     #[test]

@@ -32,8 +32,13 @@ pub mod wire;
 /// plane symmetric (controller→learner streamed dispatch) and
 /// codec-aware (`Hello` carries an offered codec set, `HelloAck` the
 /// accepted intersection, and every `ModelStreamBegin` names the codec
-/// and delta base it encodes against).
-pub const PROTO_VERSION: u32 = 3;
+/// and delta base it encodes against); v4 adds the framed `delta-rle`
+/// entropy-coded wire (each `ModelChunk` of a framed stream carries
+/// exactly one self-delimiting compressed frame) and opens every
+/// dispatch connection with the `Hello` handshake, so mixed fleets
+/// degrade the fan-out codec to the accepted intersection instead of
+/// failing at `Begin`.
+pub const PROTO_VERSION: u32 = 4;
 
 use crate::tensor::{ByteOrder, CodecId, DType, Tensor, TensorModel};
 use anyhow::{bail, Result};
@@ -398,8 +403,10 @@ pub enum Message {
     },
     /// Data plane: one contiguous slice of the stream's flat payload
     /// (tensor byte blobs concatenated in layout order). `seq` starts at
-    /// 0 and increments by 1; chunks need not align to element or tensor
-    /// boundaries.
+    /// 0 and increments by 1. For element-size-stable codecs, chunks
+    /// need not align to element or tensor boundaries; for framed codecs
+    /// (delta-rle) every chunk is exactly one self-delimiting frame,
+    /// never split, and never spanning a tensor boundary.
     ModelChunk { stream_id: u64, seq: u64, bytes: Vec<u8> },
     /// Data plane: close a stream. `digest` is the FNV-1a 64 hash of all
     /// payload bytes in stream order ([`wire::fnv1a64`]).

@@ -19,11 +19,22 @@
 //!   cheap to squeeze with any byte-level compressor and cheap to
 //!   checksum. Requires a shared base; senders fall back to full `F32`
 //!   when no base is shared (new learner, stale round, async staleness).
+//! * [`CodecId::DeltaRle`] — the entropy-coded delta wire: the XOR
+//!   residual's four byte planes are transposed (byte-shuffle: all sign/
+//!   exponent bytes run together, where small updates leave long zero
+//!   runs) and zero-run-length encoded, with a per-frame escape to raw
+//!   residual bytes when compression would expand. Bitwise lossless;
+//!   adversarial payloads stay ≤ f32 size + a small frame header.
 //!
-//! Codecs are *element-size-stable*: encoded length is
+//! `F32`/`Bf16`/`Delta` are *element-size-stable*: encoded length is
 //! `elems × wire_dtype().size_bytes()`, which is what lets the chunked
 //! stream receiver pre-size its decode buffers from the announced layout
-//! before any payload byte arrives.
+//! before any payload byte arrives. `DeltaRle` is **framed**
+//! ([`WireCodec::is_framed`]): each `ModelChunk` carries exactly one
+//! self-delimiting variable-length frame covering a whole element block,
+//! so the receiver decompresses chunk N while chunk N+1 is on the wire.
+//! The announced layout still uses the f32 wire dtype — its byte size is
+//! the frame stream's upper bound and the decode buffers' true size.
 
 use super::{bf16_bits_to_f32, f32_to_bf16_bits, DType};
 use anyhow::{bail, Result};
@@ -37,18 +48,23 @@ pub enum CodecId {
     Bf16,
     /// f32 bit-XOR against a shared base model (lossless, needs base).
     Delta,
+    /// Byte-shuffled, zero-run-length-coded XOR residual frames
+    /// (lossless, needs base, variable-length — see [`DeltaRleCodec`]).
+    DeltaRle,
 }
 
 impl CodecId {
     /// Every codec this build speaks, in preference order for `auto`
     /// resolution (lossless-and-small first).
-    pub const ALL: [CodecId; 3] = [CodecId::F32, CodecId::Bf16, CodecId::Delta];
+    pub const ALL: [CodecId; 4] =
+        [CodecId::F32, CodecId::Bf16, CodecId::Delta, CodecId::DeltaRle];
 
     pub fn code(self) -> u8 {
         match self {
             CodecId::F32 => 0,
             CodecId::Bf16 => 1,
             CodecId::Delta => 2,
+            CodecId::DeltaRle => 3,
         }
     }
 
@@ -57,6 +73,7 @@ impl CodecId {
             0 => CodecId::F32,
             1 => CodecId::Bf16,
             2 => CodecId::Delta,
+            3 => CodecId::DeltaRle,
             _ => bail!("unknown wire codec code {c}"),
         })
     }
@@ -66,6 +83,7 @@ impl CodecId {
             CodecId::F32 => "f32",
             CodecId::Bf16 => "bf16",
             CodecId::Delta => "delta",
+            CodecId::DeltaRle => "delta-rle",
         }
     }
 
@@ -76,15 +94,38 @@ impl CodecId {
 
     /// Does this codec need a shared base model on both ends?
     pub fn needs_base(self) -> bool {
-        matches!(self, CodecId::Delta)
+        matches!(self, CodecId::Delta | CodecId::DeltaRle)
+    }
+
+    /// Does this codec emit self-delimiting variable-length frames
+    /// (one per `ModelChunk`) instead of element-size-stable bytes?
+    pub fn is_framed(self) -> bool {
+        matches!(self, CodecId::DeltaRle)
     }
 
     /// Element type the encoded bytes are sized as on the wire (the
     /// dtype a stream's `TensorLayoutProto` announces for this codec).
+    /// For framed codecs this sizes the *decode buffers* and bounds the
+    /// wire stream; actual frame bytes are usually smaller.
     pub fn wire_dtype(self) -> DType {
         match self {
             CodecId::Bf16 => DType::Bf16,
-            CodecId::F32 | CodecId::Delta => DType::F32,
+            CodecId::F32 | CodecId::Delta | CodecId::DeltaRle => DType::F32,
+        }
+    }
+
+    /// Degrade this codec along the lossless chain until the peer's
+    /// accepted set contains it: delta-rle falls back to delta, and
+    /// anything not accepted falls back to the universal f32 floor.
+    /// The single source of truth for learner uploads, the controller
+    /// fan-out, and single-target dispatch.
+    pub fn degrade_to(self, accepted: &[CodecId]) -> CodecId {
+        if accepted.contains(&self) {
+            self
+        } else if self == CodecId::DeltaRle && accepted.contains(&CodecId::Delta) {
+            CodecId::Delta
+        } else {
+            CodecId::F32
         }
     }
 
@@ -94,6 +135,7 @@ impl CodecId {
             CodecId::F32 => &F32Codec,
             CodecId::Bf16 => &Bf16Codec,
             CodecId::Delta => &DeltaCodec,
+            CodecId::DeltaRle => &DeltaRleCodec,
         }
     }
 }
@@ -119,12 +161,54 @@ pub fn negotiate(offered: &[CodecId], ours: &[CodecId]) -> Vec<CodecId> {
 pub trait WireCodec: Send + Sync {
     fn id(&self) -> CodecId;
 
-    /// Encode `cur` into wire bytes (`cur.len() × wire_dtype` bytes).
+    /// Encode `cur` into wire bytes. Element-size-stable codecs produce
+    /// exactly `cur.len() × wire_dtype` bytes; framed codecs produce one
+    /// self-delimiting frame covering all of `cur`.
     fn encode(&self, cur: &[f32], base: Option<&[f32]>) -> Vec<u8>;
 
-    /// Decode a whole-element span of wire bytes into `dst`.
-    /// `bytes.len()` must equal `dst.len() × wire_dtype` bytes.
+    /// Decode a whole-element span of wire bytes into `dst`. For
+    /// element-size-stable codecs `bytes.len()` must equal
+    /// `dst.len() × wire_dtype` bytes; for framed codecs `bytes` must be
+    /// exactly one frame covering `dst.len()` elements. Panics on
+    /// malformed input — trusted-input path (tests, benches); the stream
+    /// ingest uses the fallible [`WireCodec::decode_frame`].
     fn decode_into(&self, bytes: &[u8], base: Option<&[f32]>, dst: &mut [f32]);
+
+    /// Does this codec emit self-delimiting variable-length frames?
+    /// Mirrors [`CodecId::is_framed`].
+    fn is_framed(&self) -> bool {
+        false
+    }
+
+    /// Append one self-contained frame covering exactly `cur` to `out`.
+    /// Element-size-stable codecs append their plain encoding (their
+    /// "frame" is the bytes themselves); framed codecs append a header +
+    /// compressed payload. `out` need not be empty — callers that ever
+    /// want to batch frames into one buffer can; today's senders hand
+    /// each frame's buffer to the wire message, so they pass a fresh
+    /// `Vec` per frame.
+    fn encode_frame_into(&self, cur: &[f32], base: Option<&[f32]>, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.encode(cur, base));
+    }
+
+    /// Element count covered by the frame starting at `bytes` (framed
+    /// codecs only) — what lets the receiver locate the destination and
+    /// base spans before decoding.
+    fn frame_elems(&self, _bytes: &[u8]) -> Result<usize> {
+        bail!("{} is not a framed codec", self.id().name())
+    }
+
+    /// Fallible whole-frame decode — the hostile-input path the stream
+    /// ingest uses. Element-size-stable codecs validate the span length
+    /// and delegate to [`WireCodec::decode_into`].
+    fn decode_frame(&self, bytes: &[u8], base: Option<&[f32]>, dst: &mut [f32]) -> Result<()> {
+        let expected = dst.len() * self.id().wire_dtype().size_bytes();
+        if bytes.len() != expected {
+            bail!("{} span is {} bytes, expected {expected}", self.id().name(), bytes.len());
+        }
+        self.decode_into(bytes, base, dst);
+        Ok(())
+    }
 }
 
 /// Encode an f32 slice as little-endian bytes — the §3 flatten-and-dump
@@ -223,6 +307,243 @@ impl WireCodec for DeltaCodec {
     }
 }
 
+// ---- delta-rle: entropy-coded residual frames --------------------------
+
+/// Frame flag: payload is `n × 4` raw little-endian XOR-residual bytes
+/// (the escape for payloads compression would expand).
+const FRAME_RAW: u8 = 0;
+/// Frame flag: payload is the residual's 4 byte planes (LSB plane
+/// first), each zero-run-length coded.
+const FRAME_RLE: u8 = 1;
+
+/// Cap on a frame's announced element count (hostile-input guard; real
+/// frames cover at most one chunk's block).
+const MAX_FRAME_ELEMS: u64 = 1 << 40;
+
+/// LEB128 varint used inside delta-rle frames (self-contained so the
+/// tensor layer stays independent of the proto wire helpers).
+fn put_varint(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let b = (v & 0x7F) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(b);
+            return;
+        }
+        out.push(b | 0x80);
+    }
+}
+
+fn get_varint(bytes: &[u8], pos: &mut usize) -> Result<u64> {
+    let mut v = 0u64;
+    let mut shift = 0u32;
+    loop {
+        let b = *bytes
+            .get(*pos)
+            .ok_or_else(|| anyhow::anyhow!("truncated varint in delta-rle frame"))?;
+        *pos += 1;
+        v |= u64::from(b & 0x7F) << shift;
+        if b & 0x80 == 0 {
+            return Ok(v);
+        }
+        shift += 7;
+        if shift >= 64 {
+            bail!("varint overflow in delta-rle frame");
+        }
+    }
+}
+
+/// The entropy-coded delta wire: byte-shuffle + zero-run encoding.
+///
+/// Each frame covers one contiguous element block and is self-
+/// delimiting:
+///
+/// ```text
+/// frame   := flag:u8  n:varint  payload
+/// flag 1  := payload is 4 byte planes of (cur ^ base) bit patterns,
+///            plane b = byte b of each little-endian residual word,
+///            LSB plane first; each plane is a sequence of
+///            (zero_run:varint, literal_run:varint, literal bytes…)
+///            pairs until n bytes are produced
+/// flag 0  := payload is n × 4 raw little-endian residual bytes — the
+///            escape taken whenever the RLE form would reach raw size
+/// ```
+///
+/// The shuffle groups each element's sign/exponent byte (and the high
+/// mantissa byte) into contiguous planes: a model that moved little
+/// since the shared base leaves those planes almost entirely zero, so
+/// the zero-run coder collapses them to a handful of bytes. Wholly
+/// random residuals take the escape, bounding every frame at raw size
+/// plus the ≤ 7-byte header. Encoding and decoding are scratch-free:
+/// planes are extracted/accumulated with shifted bit ops directly
+/// against the element buffers.
+pub struct DeltaRleCodec;
+
+impl DeltaRleCodec {
+    #[inline]
+    fn residual_byte(cur: &[f32], base: &[f32], i: usize, plane: u32) -> u8 {
+        (((cur[i].to_bits() ^ base[i].to_bits()) >> (8 * plane)) & 0xFF) as u8
+    }
+}
+
+impl WireCodec for DeltaRleCodec {
+    fn id(&self) -> CodecId {
+        CodecId::DeltaRle
+    }
+
+    fn is_framed(&self) -> bool {
+        true
+    }
+
+    fn encode(&self, cur: &[f32], base: Option<&[f32]>) -> Vec<u8> {
+        let mut out = Vec::with_capacity(cur.len() + 16);
+        self.encode_frame_into(cur, base, &mut out);
+        out
+    }
+
+    fn encode_frame_into(&self, cur: &[f32], base: Option<&[f32]>, out: &mut Vec<u8>) {
+        let base = base.expect("delta-rle codec encode requires a base span");
+        assert_eq!(cur.len(), base.len(), "delta-rle codec base length mismatch");
+        let n = cur.len();
+        let start = out.len();
+        out.push(FRAME_RLE);
+        put_varint(out, n as u64);
+        let payload_start = out.len();
+        // The escape budget: the moment the RLE payload reaches raw
+        // size, compression has lost and we rewrite the frame as raw.
+        let budget = payload_start + n * 4;
+        let mut fits = true;
+        // Each plane recomputes the residual byte on the fly (twice at
+        // run boundaries) instead of materializing the XOR words: the
+        // recompute is cheap ALU on cached data, and it keeps the
+        // encoder scratch-free — the property the zero-alloc steady
+        // state relies on.
+        'planes: for plane in 0..4u32 {
+            let mut i = 0usize;
+            while i < n {
+                let zero_start = i;
+                while i < n && Self::residual_byte(cur, base, i, plane) == 0 {
+                    i += 1;
+                }
+                let lit_start = i;
+                while i < n && Self::residual_byte(cur, base, i, plane) != 0 {
+                    i += 1;
+                }
+                put_varint(out, (lit_start - zero_start) as u64);
+                put_varint(out, (i - lit_start) as u64);
+                for k in lit_start..i {
+                    out.push(Self::residual_byte(cur, base, k, plane));
+                }
+                if out.len() >= budget {
+                    fits = false;
+                    break 'planes;
+                }
+            }
+        }
+        if !fits {
+            out.truncate(start);
+            out.push(FRAME_RAW);
+            put_varint(out, n as u64);
+            for (c, b) in cur.iter().zip(base) {
+                out.extend((c.to_bits() ^ b.to_bits()).to_le_bytes());
+            }
+        }
+    }
+
+    fn frame_elems(&self, bytes: &[u8]) -> Result<usize> {
+        let flag = *bytes
+            .first()
+            .ok_or_else(|| anyhow::anyhow!("empty delta-rle frame"))?;
+        if flag != FRAME_RAW && flag != FRAME_RLE {
+            bail!("unknown delta-rle frame flag {flag}");
+        }
+        let mut pos = 1usize;
+        let n = get_varint(bytes, &mut pos)?;
+        if n > MAX_FRAME_ELEMS {
+            bail!("implausible delta-rle frame length {n}");
+        }
+        Ok(n as usize)
+    }
+
+    fn decode_frame(&self, bytes: &[u8], base: Option<&[f32]>, dst: &mut [f32]) -> Result<()> {
+        let base = match base {
+            Some(b) => b,
+            None => bail!("delta-rle codec decode requires a base span"),
+        };
+        if base.len() != dst.len() {
+            bail!("delta-rle codec base length mismatch");
+        }
+        let flag = *bytes
+            .first()
+            .ok_or_else(|| anyhow::anyhow!("empty delta-rle frame"))?;
+        let mut pos = 1usize;
+        let n = get_varint(bytes, &mut pos)? as usize;
+        if n != dst.len() {
+            bail!("delta-rle frame covers {n} elements, expected {}", dst.len());
+        }
+        match flag {
+            FRAME_RAW => {
+                if bytes.len() - pos != n * 4 {
+                    bail!(
+                        "delta-rle raw frame: {} payload bytes for {n} elements",
+                        bytes.len() - pos
+                    );
+                }
+                for ((c, b), d) in bytes[pos..].chunks_exact(4).zip(base).zip(dst.iter_mut()) {
+                    let wire = u32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+                    *d = f32::from_bits(wire ^ b.to_bits());
+                }
+            }
+            FRAME_RLE => {
+                // Accumulate residual words in-place (dst doubles as the
+                // u32 accumulator via to_bits/from_bits — no scratch).
+                for d in dst.iter_mut() {
+                    *d = f32::from_bits(0);
+                }
+                for plane in 0..4u32 {
+                    let mut i = 0usize;
+                    while i < n {
+                        let zeros = get_varint(bytes, &mut pos)? as usize;
+                        let lits = get_varint(bytes, &mut pos)? as usize;
+                        if zeros == 0 && lits == 0 {
+                            bail!("empty delta-rle run pair");
+                        }
+                        i = match i.checked_add(zeros) {
+                            Some(x) if x <= n => x,
+                            _ => bail!("delta-rle zero run overflows plane"),
+                        };
+                        if lits > n - i {
+                            bail!("delta-rle literal run overflows plane");
+                        }
+                        if bytes.len() - pos < lits {
+                            bail!("delta-rle frame truncated mid-literal-run");
+                        }
+                        for _ in 0..lits {
+                            let b = bytes[pos];
+                            pos += 1;
+                            dst[i] =
+                                f32::from_bits(dst[i].to_bits() | (u32::from(b) << (8 * plane)));
+                            i += 1;
+                        }
+                    }
+                }
+                if pos != bytes.len() {
+                    bail!("trailing bytes after delta-rle frame");
+                }
+                for (d, b) in dst.iter_mut().zip(base) {
+                    *d = f32::from_bits(d.to_bits() ^ b.to_bits());
+                }
+            }
+            other => bail!("unknown delta-rle frame flag {other}"),
+        }
+        Ok(())
+    }
+
+    fn decode_into(&self, bytes: &[u8], base: Option<&[f32]>, dst: &mut [f32]) {
+        self.decode_frame(bytes, base, dst).expect("invalid delta-rle frame");
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -239,12 +560,16 @@ mod tests {
             assert_eq!(CodecId::from_code(id.code()).unwrap(), id);
             assert!(!id.name().is_empty());
             assert_eq!(id.codec().id(), id);
+            assert_eq!(id.codec().is_framed(), id.is_framed());
         }
         assert!(CodecId::from_code(99).is_err());
         assert!(CodecId::F32.is_lossless() && CodecId::Delta.is_lossless());
+        assert!(CodecId::DeltaRle.is_lossless());
         assert!(!CodecId::Bf16.is_lossless());
-        assert!(CodecId::Delta.needs_base());
+        assert!(CodecId::Delta.needs_base() && CodecId::DeltaRle.needs_base());
+        assert!(CodecId::DeltaRle.is_framed() && !CodecId::Delta.is_framed());
         assert_eq!(CodecId::Bf16.wire_dtype(), DType::Bf16);
+        assert_eq!(CodecId::DeltaRle.wire_dtype(), DType::F32);
     }
 
     #[test]
@@ -255,6 +580,21 @@ mod tests {
         );
         assert_eq!(accepted, vec![CodecId::F32, CodecId::Delta]);
         assert!(negotiate(&[], &CodecId::ALL).is_empty());
+    }
+
+    #[test]
+    fn degrade_walks_the_lossless_chain() {
+        let all = CodecId::ALL;
+        assert_eq!(CodecId::DeltaRle.degrade_to(&all), CodecId::DeltaRle);
+        assert_eq!(
+            CodecId::DeltaRle.degrade_to(&[CodecId::F32, CodecId::Delta]),
+            CodecId::Delta
+        );
+        assert_eq!(CodecId::DeltaRle.degrade_to(&[CodecId::F32]), CodecId::F32);
+        assert_eq!(CodecId::Delta.degrade_to(&[CodecId::F32]), CodecId::F32);
+        assert_eq!(CodecId::Bf16.degrade_to(&[CodecId::F32]), CodecId::F32);
+        // Even an empty (legacy) set floors at f32.
+        assert_eq!(CodecId::DeltaRle.degrade_to(&[]), CodecId::F32);
     }
 
     #[test]
@@ -300,15 +640,134 @@ mod tests {
     }
 
     #[test]
+    fn delta_rle_roundtrips_bitwise() {
+        // Sparse, dense, and identical residual regimes all round-trip
+        // bit for bit through the framed codec.
+        let base = gaussian(513, 10);
+        let mut sparse = base.clone();
+        for v in sparse.iter_mut().step_by(23) {
+            *v += 1e-4;
+        }
+        let dense = gaussian(513, 11);
+        let identical = base.clone();
+        for cur in [&sparse, &dense, &identical] {
+            let enc = DeltaRleCodec.encode(cur, Some(&base));
+            assert_eq!(DeltaRleCodec.frame_elems(&enc).unwrap(), cur.len());
+            let mut dst = vec![0.0f32; cur.len()];
+            DeltaRleCodec.decode_frame(&enc, Some(&base), &mut dst).unwrap();
+            for (a, b) in cur.iter().zip(&dst) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn delta_rle_all_zero_residual_collapses() {
+        let cur = gaussian(4096, 12);
+        let enc = DeltaRleCodec.encode(&cur, Some(&cur));
+        // Four planes of one (zeros=n, lits=0) pair each + header.
+        assert!(enc.len() < 64, "all-zero residual encoded to {} bytes", enc.len());
+        assert_eq!(enc[0], FRAME_RLE);
+    }
+
+    #[test]
+    fn delta_rle_adversarial_payload_escapes_to_raw() {
+        // Random cur vs random base: every residual byte is noise, so
+        // compression must escape and the frame stays ≤ raw + header.
+        let cur = gaussian(777, 13);
+        let base = gaussian(777, 14);
+        let enc = DeltaRleCodec.encode(&cur, Some(&base));
+        assert_eq!(enc[0], FRAME_RAW);
+        assert!(enc.len() <= 777 * 4 + 7, "frame expanded to {} bytes", enc.len());
+        let mut dst = vec![0.0f32; 777];
+        DeltaRleCodec.decode_frame(&enc, Some(&base), &mut dst).unwrap();
+        for (a, b) in cur.iter().zip(&dst) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn delta_rle_small_updates_compress_below_half() {
+        // The steady-state regime the codec targets: every element moved
+        // a little, so the sign/exponent and high-mantissa planes are
+        // almost all zero.
+        let base = gaussian(4096, 15);
+        let cur: Vec<f32> = base.iter().map(|v| v * (1.0 + 1e-5)).collect();
+        let enc = DeltaRleCodec.encode(&cur, Some(&base));
+        assert!(
+            enc.len() * 2 <= 4096 * 4,
+            "small-update frame is {} bytes of {} raw",
+            enc.len(),
+            4096 * 4
+        );
+    }
+
+    #[test]
+    fn delta_rle_rejects_malformed_frames() {
+        let cur = gaussian(32, 16);
+        let base = gaussian(32, 17);
+        let enc = DeltaRleCodec.encode(&cur, Some(&base));
+        let mut dst = vec![0.0f32; 32];
+        // Truncated payload.
+        let err = DeltaRleCodec.decode_frame(&enc[..enc.len() - 3], Some(&base), &mut dst);
+        assert!(err.is_err());
+        // Unknown flag byte.
+        let mut bad = enc.clone();
+        bad[0] = 9;
+        assert!(DeltaRleCodec.decode_frame(&bad, Some(&base), &mut dst).is_err());
+        assert!(DeltaRleCodec.frame_elems(&bad).is_err());
+        // Trailing garbage.
+        let mut bad = enc.clone();
+        bad.push(0);
+        assert!(DeltaRleCodec.decode_frame(&bad, Some(&base), &mut dst).is_err());
+        // Element-count mismatch against the destination span.
+        assert!(DeltaRleCodec.decode_frame(&enc, Some(&base[..31]), &mut dst[..31]).is_err());
+        // Missing base.
+        assert!(DeltaRleCodec.decode_frame(&enc, None, &mut dst).is_err());
+        assert!(DeltaRleCodec.frame_elems(&[]).is_err());
+    }
+
+    #[test]
+    fn delta_rle_prop_roundtrip_and_size_bound() {
+        prop_check("delta-rle frame roundtrip", 80, |g| {
+            let n = g.usize_in(1..600);
+            let base = gaussian(n, g.rng().next_u64());
+            let mut cur = base.clone();
+            // Perturb a g-chosen fraction at a g-chosen magnitude: the
+            // sparse→dense sweep covers both RLE and escape regimes.
+            let frac = g.usize_in(1..101);
+            let scale = [1e-6f32, 1e-3, 1.0][g.usize_in(0..3)];
+            for v in cur.iter_mut() {
+                if g.usize_in(0..100) < frac {
+                    *v += scale * g.f32_in(-0.5, 0.5);
+                }
+            }
+            let enc = DeltaRleCodec.encode(&cur, Some(&base));
+            assert!(enc.len() <= n * 4 + 7, "frame for n={n} expanded to {}", enc.len());
+            assert_eq!(DeltaRleCodec.frame_elems(&enc).unwrap(), n);
+            let mut dst = vec![0.0f32; n];
+            DeltaRleCodec.decode_frame(&enc, Some(&base), &mut dst).unwrap();
+            for (a, b) in cur.iter().zip(&dst) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        });
+    }
+
+    #[test]
     fn prop_split_point_independent_decode() {
         // Decoding a codec's bytes span-wise at any element split matches
         // the whole-buffer decode bit for bit — the property the chunked
-        // stream receiver relies on.
+        // stream receiver relies on. Framed codecs are exempt (frames
+        // are never split on the wire; block independence is covered by
+        // `delta_rle_prop_roundtrip_and_size_bound` + the ingest tests).
         prop_check("codec split decode", 60, |g| {
             let n = g.usize_in(1..300);
             let cur = gaussian(n, g.rng().next_u64());
             let base = gaussian(n, g.rng().next_u64());
             for id in CodecId::ALL {
+                if id.is_framed() {
+                    continue;
+                }
                 let c = id.codec();
                 let b = id.needs_base().then_some(&base[..]);
                 let enc = c.encode(&cur, b);

@@ -221,7 +221,14 @@ fn monitor_reports_zero_missed_heartbeats_on_healthy_run() {
 
 #[test]
 fn shipped_env_files_parse_and_validate() {
-    for f in ["envs/quickstart.yaml", "envs/xla_training.yaml", "envs/paper_stress_100k.yaml", "envs/async_semi.yaml"] {
+    for f in [
+        "envs/quickstart.yaml",
+        "envs/xla_training.yaml",
+        "envs/paper_stress_100k.yaml",
+        "envs/async_semi.yaml",
+        "envs/streamed_delta.yaml",
+        "envs/streamed_delta_rle.yaml",
+    ] {
         let env = FederationEnv::from_file(f).unwrap_or_else(|e| panic!("{f}: {e:#}"));
         env.validate().unwrap_or_else(|e| panic!("{f}: {e:#}"));
     }

@@ -220,7 +220,10 @@ fn prop_streaming_trio_roundtrips_any_layout() {
                 _ => StreamPurpose::Evaluate,
             },
             learner_id: format!("learner-{}", g.usize_in(0..100)),
-            codec: metisfl::tensor::CodecId::ALL[g.usize_in(0..3)],
+            codec: {
+                let all = metisfl::tensor::CodecId::ALL;
+                all[g.usize_in(0..all.len())]
+            },
             base_round: g.rng().next_u64(),
             layout,
             meta: TaskMeta {
@@ -276,7 +279,7 @@ fn prop_streamed_ingest_equals_one_shot_bitwise() {
         let streamed = mk_ctrl("prop-streamed");
         let base = rand_model(g, &spec);
         one_shot.ship_model(base.clone());
-        streamed.ship_model(base);
+        streamed.ship_model(base.clone());
         let update = rand_model(g, &spec);
         let meta = TaskMeta { num_samples: g.usize_in(1..500), ..Default::default() };
 
@@ -289,28 +292,35 @@ fn prop_streamed_ingest_equals_one_shot_bitwise() {
         assert!(matches!(reply, Message::Ack { ok: true, .. }), "{reply:?}");
 
         // Stream the identical update in 1..64-byte chunks through the
-        // real (unclamped) sender walk.
+        // real (unclamped) sender walk, under a random lossless codec
+        // (delta codecs encode against the shipped community model,
+        // which the receiver resolves from base_round 0).
+        use metisfl::tensor::CodecId;
+        let codec = [CodecId::F32, CodecId::Delta, CodecId::DeltaRle][g.usize_in(0..3)];
         let chunk_size = g.usize_in(1..64);
         let spec = TaskSpec::default();
         client::stream_model_with(
             &mut |msg| Ok(streamed.handle(msg)),
-            &client::StreamSend::f32(
-                StreamPurpose::TaskCompletion,
-                1,
-                0,
-                "a",
-                &update,
-                &meta,
-                &spec,
-                chunk_size,
-            ),
+            &client::StreamSend {
+                purpose: StreamPurpose::TaskCompletion,
+                task_id: 1,
+                round: 0,
+                learner_id: "a",
+                model: &update,
+                meta: &meta,
+                spec: &spec,
+                codec,
+                base: codec.needs_base().then_some(&base),
+                base_round: 0,
+                chunk_bytes: chunk_size,
+            },
         )
         .unwrap();
 
         let (a, ra) = one_shot.community().unwrap();
         let (b, rb) = streamed.community().unwrap();
         assert_eq!(ra, rb);
-        assert_eq!(*a, *b, "streamed ingest diverged (chunk {chunk_size})");
+        assert_eq!(*a, *b, "streamed ingest diverged ({codec}, chunk {chunk_size})");
     });
 }
 

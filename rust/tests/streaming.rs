@@ -136,6 +136,152 @@ fn delta_codec_federation_is_bitwise_identical_to_one_shot() {
 }
 
 #[test]
+fn delta_rle_federation_is_bitwise_identical_to_one_shot_inproc() {
+    // The entropy-coded delta wire is lossless end to end: a fully
+    // delta-rle symmetric data plane reproduces the one-shot federation
+    // bit for bit, while moving (and accounting) fewer wire bytes.
+    let one_shot =
+        run_with_trainer(&env("rle-eq-a", 0), |_| Arc::new(RustSgdTrainer)).unwrap();
+    let mut e = env("rle-eq-b", 2048);
+    e.wire_codec = WireCodecChoice::DeltaRle;
+    let streamed = run_with_trainer(&e, |_| Arc::new(RustSgdTrainer)).unwrap();
+    assert_bitwise_equal_runs(&one_shot, &streamed);
+    assert!(streamed.wire_bytes_sent > 0, "wire gauge never moved");
+    assert!(streamed.wire_bytes_saved > 0, "delta-rle saved nothing");
+    // One-shot runs bypass the streamed data plane entirely.
+    assert_eq!(one_shot.wire_bytes_sent, 0);
+}
+
+#[test]
+fn delta_rle_federation_is_bitwise_identical_to_one_shot_tcp() {
+    let mut a = env("rle-eq-tcp-a", 0);
+    a.transport = TransportKind::Tcp { base_port: 0 };
+    let mut b = env("rle-eq-tcp-b", 2048);
+    b.transport = TransportKind::Tcp { base_port: 0 };
+    b.wire_codec = WireCodecChoice::DeltaRle;
+    let one_shot = run_with_trainer(&a, |_| Arc::new(RustSgdTrainer)).unwrap();
+    let streamed = run_with_trainer(&b, |_| Arc::new(RustSgdTrainer)).unwrap();
+    assert_bitwise_equal_runs(&one_shot, &streamed);
+}
+
+#[test]
+fn delta_rle_steady_state_wire_bytes_at_most_half_of_delta() {
+    // The acceptance cell: on a steady-state federation whose model
+    // moves only a little per round (small updates), the entropy-coded
+    // wire moves ≤ 50% of plain delta's bytes. Plain delta ships 4 B/elem
+    // of mostly-zero residual; delta-rle run-length-collapses them.
+    let mk = |name: &str, codec: WireCodecChoice| {
+        let mut e = env(name, 2048);
+        e.rounds = 5;
+        e.wire_codec = codec;
+        e
+    };
+    let delta = run_with_trainer(&mk("wire-delta", WireCodecChoice::Delta), |_| {
+        Arc::new(SyntheticTrainer::new(0, 1e-6))
+    })
+    .unwrap();
+    let rle = run_with_trainer(&mk("wire-rle", WireCodecChoice::DeltaRle), |_| {
+        Arc::new(SyntheticTrainer::new(0, 1e-6))
+    })
+    .unwrap();
+    assert!(delta.wire_bytes_sent > 0 && rle.wire_bytes_sent > 0);
+    assert!(
+        2 * rle.wire_bytes_sent <= delta.wire_bytes_sent,
+        "delta-rle moved {} wire bytes, plain delta {} — expected ≤ half",
+        rle.wire_bytes_sent,
+        delta.wire_bytes_sent
+    );
+    // Conservation: what was saved plus what was sent is the raw volume,
+    // which is identical across the two lossless runs.
+    let rle_raw = rle.wire_bytes_sent + rle.wire_bytes_saved;
+    let delta_raw = delta.wire_bytes_sent + delta.wire_bytes_saved;
+    assert_eq!(rle_raw, delta_raw, "raw f32-equivalent volume diverged");
+    // Pipelined framed ingest may hold a few frames per stream, but
+    // never a whole model per learner.
+    assert!(
+        rle.peak_wire_ingest_bytes <= 3 * 4 * (2048 + 64),
+        "framed ingest held {} bytes",
+        rle.peak_wire_ingest_bytes
+    );
+}
+
+#[test]
+fn delta_rle_dispatch_encodes_once_per_fanout() {
+    // Encode-once probe for the framed codec: a fan-out to 3 learners
+    // costs one encode per FRAME (not per learner). The first train
+    // fan-out has no base yet and goes full f32 (tensor_count encodes);
+    // every later fan-out is delta-rle (one encode per element block).
+    let mut e = env("rle-encode-probe", 2048);
+    e.wire_codec = WireCodecChoice::DeltaRle;
+    let ctrl = Controller::new(e.clone(), None).unwrap();
+    let _ctrl_server = serve(
+        "inproc://rle-probe-ctrl",
+        Arc::clone(&ctrl) as Arc<dyn Service>,
+        None,
+    )
+    .unwrap();
+    let mut learners = Vec::new();
+    for i in 0..3 {
+        let dataset = Dataset::synthetic_housing(8, 20, 20, 7 + i as u64);
+        let learner = Learner::new(
+            &format!("rle-probe-l{i}"),
+            "inproc://rle-probe-ctrl",
+            None,
+            Arc::new(SyntheticTrainer::new(0, 0.01)),
+            dataset,
+        );
+        learner.set_stream_chunk(e.effective_stream_chunk());
+        learner.set_upload_codec(e.upload_codec());
+        let ep = format!("inproc://rle-probe-l{i}");
+        let server =
+            serve(&ep, Arc::new(LearnerServicer(Arc::clone(&learner))) as Arc<dyn Service>, None)
+                .unwrap();
+        learner.register(&ep).unwrap();
+        learners.push((learner, server));
+    }
+    let layout = e.model.tensor_layout();
+    ctrl.ship_model(TensorModel::random_init(&layout, &mut Rng::new(5)));
+    let block = e.effective_stream_chunk() / 4;
+    let frames_per_fanout: u64 = layout
+        .iter()
+        .map(|(_, shape)| {
+            let elems: usize = shape.iter().product();
+            elems.div_ceil(block).max(1) as u64
+        })
+        .sum();
+    let tensors = e.model.tensor_count() as u64;
+    let mut rng = Rng::new(9);
+    let report = scheduling::run_sync_round(&ctrl, 1, &mut rng).unwrap();
+    assert_eq!(report.completed, 3);
+    // Round 1: full-f32 train fan-out + delta-rle eval fan-out.
+    assert_eq!(ctrl.dispatch_encode_count(), tensors + frames_per_fanout);
+    // Round 2: both fan-outs are delta-rle. Still independent of the
+    // 3-learner width.
+    let report = scheduling::run_round(&ctrl, 2, &mut rng).unwrap();
+    assert_eq!(report.completed, 3);
+    assert_eq!(ctrl.dispatch_encode_count(), tensors + 3 * frames_per_fanout);
+    assert_eq!(ctrl.open_streams(), 0);
+}
+
+#[test]
+fn async_streamed_session_matches_one_shot_updates() {
+    // The async protocol rides the data plane too: initial fan-out is a
+    // shared stream, re-dispatches are per-learner streams delta-coded
+    // against each learner's own base. The session completes the same
+    // number of community updates as the one-shot path.
+    use metisfl::config::Protocol;
+    for codec in [WireCodecChoice::Delta, WireCodecChoice::DeltaRle] {
+        let mut e = env(&format!("async-stream-{}", codec.name()), 2048);
+        e.protocol = Protocol::Asynchronous { staleness_alpha: 0.5 };
+        e.wire_codec = codec;
+        e.rounds = 2;
+        let report = run_with_trainer(&e, |_| Arc::new(SyntheticTrainer::new(0, 0.01))).unwrap();
+        assert_eq!(report.round_metrics.len(), 2, "{}", codec.name());
+        assert!(report.wire_bytes_sent > 0, "{}: async session never streamed", codec.name());
+    }
+}
+
+#[test]
 fn bf16_uploads_complete_with_bounded_loss_error() {
     // bf16 halves upload wire size at a bounded precision cost: the
     // federation completes every round and the per-round community loss
@@ -280,7 +426,7 @@ fn chunk_racing_a_stream_close_fails_gracefully() {
     }
     assert_eq!(ctrl.open_streams(), 0);
     // The raced chunk lands on the dead stream: graceful typed error.
-    match ctrl.ingest().chunk_into_held(&hold, 0, &[0u8; 8]) {
+    match ctrl.ingest().chunk_into_held(&hold, 0, vec![0u8; 8]) {
         Message::Error { code, detail } => {
             assert_eq!(code, ErrorCode::StreamProtocol);
             assert!(detail.contains("closed stream"), "{detail}");
