@@ -1,7 +1,15 @@
-//! Protocol ablation (E8): synchronous vs semi-synchronous vs
-//! asynchronous execution over the real federation stack (in-proc
-//! transport, synthetic trainers with heterogeneous speeds), measuring
-//! wall-clock per community update — the Table-1 differentiator.
+//! Scheduling ablation (E8): synchronous vs pacing-aware semi-sync vs
+//! deadline-quorum vs asynchronous execution over the real federation
+//! stack (in-proc transport, synthetic trainers with a 10× speed skew),
+//! measuring wall-clock per community update AND the per-round
+//! straggler spread (slowest-minus-fastest completion wall clock) —
+//! the quantity the pacing subsystem exists to shrink.
+//!
+//! The `spread frac of sync` column is gated by `metisfl bench-check`
+//! (lower is better): pacing-aware semi-sync budgets slow learners the
+//! fixed λ-budget and fast learners proportionally more, so their
+//! completions land together; a ratio drifting toward 1.0 means the
+//! machinery regressed.
 
 use metisfl::config::{FederationEnv, ModelSpec, Protocol};
 use metisfl::driver;
@@ -10,7 +18,23 @@ use metisfl::learner::SyntheticTrainer;
 use std::sync::Arc;
 use std::time::Duration;
 
-fn run(protocol: Protocol, learners: usize, rounds: usize) -> (Duration, Duration) {
+struct Cell {
+    wall: Duration,
+    per_update: Duration,
+    /// Mean completion spread over the profiled rounds (round 1 runs on
+    /// fallback budgets while the pacing registry is still empty, so it
+    /// is excluded).
+    spread: Duration,
+}
+
+/// Step-time for learner `i` on an `n`-learner fleet with a 10× skew:
+/// the fastest learner runs at `base`, the slowest at `10 × base`.
+fn skewed_step_us(base: u64, i: usize, n: usize) -> u64 {
+    let f = 1.0 + 9.0 * i as f64 / (n - 1).max(1) as f64;
+    (base as f64 * f).round() as u64
+}
+
+fn run(protocol: Protocol, quorum: f64, learners: usize, rounds: usize, base_us: u64) -> Cell {
     let env = FederationEnv::builder("sched-ablation")
         .learners(learners)
         .rounds(rounds)
@@ -18,37 +42,86 @@ fn run(protocol: Protocol, learners: usize, rounds: usize) -> (Duration, Duratio
         .samples_per_learner(50)
         .batch_size(10)
         .protocol(protocol)
+        .quorum_fraction(quorum)
         .heartbeat_ms(10_000)
         .build();
-    // Heterogeneous learner speeds: learner i sleeps i*300us per step —
-    // the straggler pattern semi-sync/async are designed to absorb.
     let report = driver::run_with_trainer(&env, |idx| {
-        Arc::new(SyntheticTrainer::new(300 * idx as u64, 0.01)) as Arc<dyn metisfl::learner::Trainer>
+        Arc::new(SyntheticTrainer::new(skewed_step_us(base_us, idx, learners), 0.01))
+            as Arc<dyn metisfl::learner::Trainer>
     })
     .expect("federation run");
     let total = report.wall_clock;
     let per_round = total / report.round_metrics.len().max(1) as u32;
-    (total, per_round)
+    let profiled: Vec<Duration> = report
+        .round_metrics
+        .iter()
+        .skip(1)
+        .map(|r| r.completion_spread)
+        .collect();
+    let spread = if profiled.is_empty() {
+        Duration::ZERO
+    } else {
+        profiled.iter().sum::<Duration>() / profiled.len() as u32
+    };
+    Cell { wall: total, per_update: per_round, spread }
 }
 
 fn main() {
     let learners = if full_scale() { 20 } else { 8 };
     let rounds = if full_scale() { 10 } else { 4 };
-    println!("{learners} learners, {rounds} rounds, straggler spread 0..{}us/step", 300 * (learners - 1));
+    let base_us = if full_scale() { 400 } else { 600 };
+    println!(
+        "{learners} learners, {rounds} rounds, 10x speed skew ({base_us}..{}us/step)",
+        10 * base_us
+    );
 
     let mut report = ReportWriter::new(
         "sched_ablation",
-        &["protocol", "wall clock", "per community update"],
+        &[
+            "protocol",
+            "wall clock",
+            "per community update",
+            "round spread",
+            "spread frac of sync",
+        ],
     );
-    for (name, protocol) in [
-        ("synchronous", Protocol::Synchronous),
-        ("semi-synchronous (λ=1)", Protocol::SemiSynchronous { lambda: 1.0 }),
-        ("asynchronous (α=0.5)", Protocol::Asynchronous { staleness_alpha: 0.5 }),
-    ] {
-        let (total, per_update) = run(protocol, learners, rounds);
-        report.row(vec![name.into(), fmt_secs(total), fmt_secs(per_update)]);
+    let cells: Vec<(&str, Cell)> = vec![
+        (
+            "sync fixed",
+            run(Protocol::Synchronous, 1.0, learners, rounds, base_us),
+        ),
+        (
+            "semi-sync paced (lambda=1)",
+            run(Protocol::SemiSynchronous { lambda: 1.0 }, 1.0, learners, rounds, base_us),
+        ),
+        (
+            "quorum sync (q=0.6)",
+            run(Protocol::Synchronous, 0.6, learners, rounds, base_us),
+        ),
+        (
+            "async (alpha=0.5)",
+            run(Protocol::Asynchronous { staleness_alpha: 0.5 }, 1.0, learners, rounds, base_us),
+        ),
+    ];
+    let sync_spread = cells[0].1.spread.as_secs_f64().max(1e-9);
+    for (name, cell) in &cells {
+        let frac = if cell.spread == Duration::ZERO && *name != "sync fixed" {
+            // Async reports carry no round barrier, hence no spread.
+            "-".to_string()
+        } else {
+            format!("{:.3}", cell.spread.as_secs_f64() / sync_spread)
+        };
+        report.row(vec![
+            name.to_string(),
+            fmt_secs(cell.wall),
+            fmt_secs(cell.per_update),
+            fmt_secs(cell.spread),
+            frac,
+        ]);
     }
     report.emit().unwrap();
     println!("paper context: only MetisFL supports async execution (Table 1);");
-    println!("semi-sync bounds straggler stalls; async removes the round barrier.");
+    println!("pacing-aware semi-sync gives learner i a budget of t_target*throughput_i so");
+    println!("the 10x-skew fleet finishes together; quorum rounds aggregate at the cut and");
+    println!("fold late completions through the async staleness path instead of dropping them.");
 }

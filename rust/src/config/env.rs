@@ -116,6 +116,38 @@ pub enum SecureSpec {
     Ckks,
 }
 
+/// Per-learner heterogeneity for the synthetic trainer — the knob that
+/// turns a uniform stress fleet into the straggler-ridden deployments
+/// the pacing subsystem exists for. Learner `i` models one SGD step as
+/// `step_time_us × speed_factors[i % len]` (empty = uniform 1×), with
+/// optional per-task wall-clock jitter and a dropout probability
+/// (a dropped task never calls back — the round-timeout / quorum path
+/// handles it).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct HeteroFleetSpec {
+    /// Per-learner step-time multipliers, cycled by learner index.
+    pub speed_factors: Vec<f64>,
+    /// Uniform ± fraction applied to each task's modeled compute time.
+    pub jitter_frac: f64,
+    /// Probability a training task silently fails (no completion).
+    pub dropout: f64,
+}
+
+impl HeteroFleetSpec {
+    pub fn is_uniform(&self) -> bool {
+        self.speed_factors.is_empty() && self.jitter_frac == 0.0 && self.dropout == 0.0
+    }
+
+    /// Step-time multiplier for learner `index`.
+    pub fn factor(&self, index: usize) -> f64 {
+        if self.speed_factors.is_empty() {
+            1.0
+        } else {
+            self.speed_factors[index % self.speed_factors.len()]
+        }
+    }
+}
+
 /// What executes a learner's local training task.
 #[derive(Debug, Clone, PartialEq)]
 pub enum TrainerKind {
@@ -123,8 +155,27 @@ pub enum TrainerKind {
     Xla { artifacts_dir: String },
     /// Stress-test trainer: produces parameter-shaped noise updates with a
     /// calibrated compute-time model. Matches the paper's stress tests,
-    /// which measure controller ops, not learning quality.
-    Synthetic { step_time_us: u64 },
+    /// which measure controller ops, not learning quality. `hetero`
+    /// (default uniform) gives each learner its own speed/jitter/dropout
+    /// profile for heterogeneous-fleet scenarios.
+    Synthetic { step_time_us: u64, hetero: HeteroFleetSpec },
+}
+
+/// Participant-selection policy (`selector` env block).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub enum SelectorSpec {
+    /// Derive from the `participation` fraction (1.0 = everyone, else a
+    /// uniform random fraction) — the paper's evaluation setting.
+    #[default]
+    Participation,
+    /// The `k` learners with the oldest last participation (never-
+    /// participated learners first).
+    Freshness { k: usize },
+    /// Pacing-aware: prefer fast/reliable learners by profile score,
+    /// with a freshness floor — any learner idle for at least
+    /// `freshness_rounds` rounds (or never scheduled) is force-included
+    /// ahead of the score ranking, so slow sites keep contributing.
+    Pacing { k: usize, freshness_rounds: u64 },
 }
 
 /// Transport between driver/controller/learners.
@@ -215,6 +266,22 @@ pub struct FederationEnv {
     pub transport: TransportKind,
     /// Learner participation per round, in (0, 1]; the paper runs 1.0.
     pub participation: f64,
+    /// Participant-selection policy; [`SelectorSpec::Participation`]
+    /// (default) derives the classic all/random-fraction selector from
+    /// `participation`.
+    pub selector: SelectorSpec,
+    /// Deadline-quorum fraction for sync/semi-sync rounds, in (0, 1]:
+    /// the round aggregates as soon as `ceil(quorum_fraction ×
+    /// dispatched)` learners completed (or the task timeout fires),
+    /// reweighting by the actual participants. 1.0 (default) = classic
+    /// all-or-timeout rounds. Completions that miss the cut are folded
+    /// into the community model through the async staleness path
+    /// instead of being dropped.
+    pub quorum_fraction: f64,
+    /// Staleness exponent for late-completion folding under
+    /// `quorum_fraction < 1.0` (same discount law as the async
+    /// protocol's `staleness_alpha`).
+    pub quorum_late_alpha: f64,
     pub samples_per_learner: usize,
     pub batch_size: usize,
     pub local_epochs: usize,
@@ -346,11 +413,60 @@ impl FederationEnv {
                         .unwrap_or("artifacts")
                         .to_string(),
                 },
-                "synthetic" => TrainerKind::Synthetic {
-                    step_time_us: t.get("step_time_us").and_then(|x| x.as_u64()).unwrap_or(0),
-                },
+                "synthetic" => {
+                    let mut hetero = HeteroFleetSpec::default();
+                    if let Some(fs) = t.get("speed_factors").and_then(|x| x.as_array()) {
+                        hetero.speed_factors = fs
+                            .iter()
+                            .map(|f| {
+                                f.as_f64().ok_or_else(|| {
+                                    anyhow::anyhow!("speed_factors entries must be numbers")
+                                })
+                            })
+                            .collect::<Result<Vec<f64>>>()?;
+                    }
+                    if let Some(j) = t.get("jitter").and_then(|x| x.as_f64()) {
+                        hetero.jitter_frac = j;
+                    }
+                    if let Some(d) = t.get("dropout").and_then(|x| x.as_f64()) {
+                        hetero.dropout = d;
+                    }
+                    TrainerKind::Synthetic {
+                        step_time_us: t
+                            .get("step_time_us")
+                            .and_then(|x| x.as_u64())
+                            .unwrap_or(0),
+                        hetero,
+                    }
+                }
                 other => bail!("unknown trainer kind '{other}'"),
             });
+        }
+        if let Some(s) = v.get("selector") {
+            let kind = s
+                .get("kind")
+                .and_then(|x| x.as_str())
+                .or_else(|| s.as_str())
+                .unwrap_or("participation");
+            let k = s.get("k").and_then(|x| x.as_usize()).unwrap_or(1);
+            b = b.selector(match kind {
+                "participation" => SelectorSpec::Participation,
+                "freshness" => SelectorSpec::Freshness { k },
+                "pacing" => SelectorSpec::Pacing {
+                    k,
+                    freshness_rounds: s
+                        .get("freshness_rounds")
+                        .and_then(|x| x.as_u64())
+                        .unwrap_or(4),
+                },
+                other => bail!("unknown selector kind '{other}' (participation|freshness|pacing)"),
+            });
+        }
+        if let Some(x) = v.get("quorum_fraction").and_then(|x| x.as_f64()) {
+            b = b.quorum_fraction(x);
+        }
+        if let Some(x) = v.get("quorum_late_alpha").and_then(|x| x.as_f64()) {
+            b = b.quorum_late_alpha(x);
         }
         if let Some(t) = v.get("transport") {
             let kind = t.get("kind").and_then(|x| x.as_str()).or_else(|| t.as_str());
@@ -443,6 +559,39 @@ impl FederationEnv {
         }
         if self.bf16_dispatch && self.wire_codec != WireCodecChoice::Bf16 {
             bail!("bf16_dispatch: true requires wire_codec: bf16");
+        }
+        if !(self.quorum_fraction > 0.0 && self.quorum_fraction <= 1.0) {
+            bail!("quorum_fraction must be in (0, 1]");
+        }
+        if self.quorum_late_alpha < 0.0 {
+            bail!("quorum_late_alpha must be >= 0");
+        }
+        match &self.selector {
+            SelectorSpec::Participation => {}
+            SelectorSpec::Freshness { k } => {
+                if *k == 0 {
+                    bail!("selector k must be >= 1");
+                }
+            }
+            SelectorSpec::Pacing { k, freshness_rounds } => {
+                if *k == 0 {
+                    bail!("selector k must be >= 1");
+                }
+                if *freshness_rounds == 0 {
+                    bail!("selector freshness_rounds must be >= 1");
+                }
+            }
+        }
+        if let TrainerKind::Synthetic { hetero, .. } = &self.trainer {
+            if hetero.speed_factors.iter().any(|f| !(*f > 0.0)) {
+                bail!("trainer speed_factors must all be > 0");
+            }
+            if !(0.0..1.0).contains(&hetero.jitter_frac) {
+                bail!("trainer jitter must be in [0, 1)");
+            }
+            if !(0.0..1.0).contains(&hetero.dropout) {
+                bail!("trainer dropout must be in [0, 1)");
+            }
         }
         match self.protocol {
             Protocol::SemiSynchronous { lambda } if lambda <= 0.0 => {
@@ -544,9 +693,15 @@ impl FederationEnvBuilder {
                 model: ModelSpec::paper_100k(),
                 aggregation: AggregationSpec::default(),
                 secure: SecureSpec::None,
-                trainer: TrainerKind::Synthetic { step_time_us: 0 },
+                trainer: TrainerKind::Synthetic {
+                    step_time_us: 0,
+                    hetero: HeteroFleetSpec::default(),
+                },
                 transport: TransportKind::InProc,
                 participation: 1.0,
+                selector: SelectorSpec::Participation,
+                quorum_fraction: 1.0,
+                quorum_late_alpha: 0.5,
                 samples_per_learner: 100,
                 batch_size: 100,
                 local_epochs: 1,
@@ -596,6 +751,18 @@ impl FederationEnvBuilder {
     }
     pub fn participation(mut self, f: f64) -> Self {
         self.env.participation = f;
+        self
+    }
+    pub fn selector(mut self, s: SelectorSpec) -> Self {
+        self.env.selector = s;
+        self
+    }
+    pub fn quorum_fraction(mut self, q: f64) -> Self {
+        self.env.quorum_fraction = q;
+        self
+    }
+    pub fn quorum_late_alpha(mut self, a: f64) -> Self {
+        self.env.quorum_late_alpha = a;
         self
     }
     pub fn samples_per_learner(mut self, n: usize) -> Self {
@@ -730,7 +897,10 @@ seed: 7
         assert_eq!(env.aggregation.backend, AggregationBackend::Sequential);
         assert_eq!(env.aggregation.threads, 4);
         assert_eq!(env.secure, SecureSpec::Masking);
-        assert_eq!(env.trainer, TrainerKind::Synthetic { step_time_us: 150 });
+        assert_eq!(
+            env.trainer,
+            TrainerKind::Synthetic { step_time_us: 150, hetero: HeteroFleetSpec::default() }
+        );
         assert_eq!(env.transport, TransportKind::Tcp { base_port: 43000 });
         assert_eq!(env.participation, 0.5);
         assert_eq!(env.seed, 7);
@@ -832,6 +1002,66 @@ seed: 7
                 err.contains("wire_codec") || err.contains("bf16_dispatch"),
                 "{src}: {err}"
             );
+        }
+    }
+
+    #[test]
+    fn scheduling_fields_parse_and_default() {
+        let env = FederationEnv::builder("t").build();
+        assert_eq!(env.selector, SelectorSpec::Participation);
+        assert_eq!(env.quorum_fraction, 1.0);
+        assert_eq!(env.quorum_late_alpha, 0.5);
+
+        let src = r#"
+quorum_fraction: 0.6
+quorum_late_alpha: 1.5
+selector:
+  kind: pacing
+  k: 3
+  freshness_rounds: 2
+trainer:
+  kind: synthetic
+  step_time_us: 200
+  speed_factors: [1, 2, 10]
+  jitter: 0.1
+  dropout: 0.05
+"#;
+        let env = FederationEnv::from_yaml(src).unwrap();
+        assert_eq!(env.quorum_fraction, 0.6);
+        assert_eq!(env.quorum_late_alpha, 1.5);
+        assert_eq!(env.selector, SelectorSpec::Pacing { k: 3, freshness_rounds: 2 });
+        match &env.trainer {
+            TrainerKind::Synthetic { step_time_us, hetero } => {
+                assert_eq!(*step_time_us, 200);
+                assert_eq!(hetero.speed_factors, vec![1.0, 2.0, 10.0]);
+                assert_eq!(hetero.factor(0), 1.0);
+                assert_eq!(hetero.factor(2), 10.0);
+                assert_eq!(hetero.factor(3), 1.0); // cycles
+                assert_eq!(hetero.jitter_frac, 0.1);
+                assert_eq!(hetero.dropout, 0.05);
+                assert!(!hetero.is_uniform());
+            }
+            other => panic!("unexpected trainer {other:?}"),
+        }
+
+        let env = FederationEnv::from_yaml("selector:\n  kind: freshness\n  k: 2\n").unwrap();
+        assert_eq!(env.selector, SelectorSpec::Freshness { k: 2 });
+    }
+
+    #[test]
+    fn scheduling_fields_are_validated() {
+        for src in [
+            "quorum_fraction: 0.0\n",
+            "quorum_fraction: 1.5\n",
+            "quorum_late_alpha: -1\n",
+            "selector:\n  kind: pacing\n  k: 0\n",
+            "selector:\n  kind: pacing\n  k: 2\n  freshness_rounds: 0\n",
+            "selector:\n  kind: warp\n",
+            "trainer:\n  kind: synthetic\n  speed_factors: [1, 0]\n",
+            "trainer:\n  kind: synthetic\n  jitter: 1.5\n",
+            "trainer:\n  kind: synthetic\n  dropout: 1.0\n",
+        ] {
+            assert!(FederationEnv::from_yaml(src).is_err(), "{src} should be rejected");
         }
     }
 

@@ -13,6 +13,6 @@ pub mod env;
 pub mod yaml;
 
 pub use env::{
-    AggregationBackend, AggregationSpec, FederationEnv, FederationEnvBuilder, ModelSpec,
-    Protocol, SecureSpec, TrainerKind, TransportKind, WireCodecChoice,
+    AggregationBackend, AggregationSpec, FederationEnv, FederationEnvBuilder, HeteroFleetSpec,
+    ModelSpec, Protocol, SecureSpec, SelectorSpec, TrainerKind, TransportKind, WireCodecChoice,
 };

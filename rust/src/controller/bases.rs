@@ -1,0 +1,222 @@
+//! LRU-capped per-learner delta-base map.
+//!
+//! The controller pins, per learner id, the last model that learner
+//! acknowledged over a lossless dispatch stream — the base its next
+//! delta-coded exchange encodes against. In sync rounds every entry
+//! aliases the one shared fan-out model (1 distinct model pinned), but
+//! a large *async* fleet at divergent rounds — or learner churn with
+//! fresh ids — can pin O(learners-ever-seen) distinct models. This map
+//! bounds the number of **distinct pinned models**: when an insert
+//! pushes the distinct count past the cap, least-recently-touched
+//! entries are evicted until it fits. Evicted learners simply degrade
+//! to a full-f32 send on their next dispatch (base miss → `NotFound` →
+//! fallback), and deregistration drops the learner's entry outright.
+
+use crate::tensor::TensorModel;
+use std::collections::{HashMap, HashSet};
+use std::sync::Arc;
+
+/// Default cap on distinct pinned base models (a sync fleet uses 1; an
+/// async fleet rarely has more than a handful of *live* divergent
+/// rounds — anything beyond that is churn the map should shed).
+pub const DEFAULT_BASE_MODEL_CAP: usize = 16;
+
+struct BaseEntry {
+    round: u64,
+    model: Arc<TensorModel>,
+    last_used: u64,
+}
+
+/// Per-learner `(round, model)` base map, LRU-bounded by distinct
+/// pinned models. Callers wrap it in a `Mutex`; every operation is
+/// O(entries) at worst (entry counts are per-registered-learner, small
+/// next to any model).
+pub struct BaseMap {
+    cap_models: usize,
+    tick: u64,
+    entries: HashMap<String, BaseEntry>,
+}
+
+impl BaseMap {
+    pub fn new(cap_models: usize) -> BaseMap {
+        BaseMap { cap_models: cap_models.max(1), tick: 0, entries: HashMap::new() }
+    }
+
+    /// Look up a learner's base, marking it recently used.
+    pub fn get(&mut self, learner_id: &str) -> Option<(u64, Arc<TensorModel>)> {
+        self.tick += 1;
+        let tick = self.tick;
+        self.entries.get_mut(learner_id).map(|e| {
+            e.last_used = tick;
+            (e.round, Arc::clone(&e.model))
+        })
+    }
+
+    /// Install a learner's base. Returns every model handle this insert
+    /// displaced — the learner's previous base plus any LRU-evicted
+    /// entries — so the caller can recycle uniquely-owned buffers into
+    /// the scratch arena.
+    pub fn insert(
+        &mut self,
+        learner_id: &str,
+        round: u64,
+        model: Arc<TensorModel>,
+    ) -> Vec<Arc<TensorModel>> {
+        self.tick += 1;
+        let mut displaced = Vec::new();
+        if let Some(old) = self.entries.insert(
+            learner_id.to_string(),
+            BaseEntry { round, model, last_used: self.tick },
+        ) {
+            displaced.push(old.model);
+        }
+        // Evict least-recently-used *models* (not entries) until the
+        // distinct pinned count fits the cap: dropping an entry whose
+        // model is still pinned by a fresher entry would cost that
+        // learner its delta base without freeing anything. A model's
+        // recency is the newest touch among the entries pinning it;
+        // every entry of the LRU model goes together. The model just
+        // inserted carries the newest tick, so it is evicted only if
+        // the cap is impossible to satisfy otherwise (cap ≥ 1 makes
+        // that unreachable).
+        while self.distinct_models() > self.cap_models {
+            let mut recency: HashMap<usize, u64> = HashMap::new();
+            for e in self.entries.values() {
+                let key = Arc::as_ptr(&e.model) as usize;
+                let r = recency.entry(key).or_insert(0);
+                *r = (*r).max(e.last_used);
+            }
+            let Some(victim) = recency.iter().min_by_key(|(_, r)| **r).map(|(k, _)| *k) else {
+                break;
+            };
+            self.entries.retain(|_, e| {
+                if Arc::as_ptr(&e.model) as usize == victim {
+                    displaced.push(Arc::clone(&e.model));
+                    false
+                } else {
+                    true
+                }
+            });
+        }
+        displaced
+    }
+
+    /// Drop a learner's entry (deregistration), returning its model
+    /// handle for recycling.
+    pub fn remove(&mut self, learner_id: &str) -> Option<Arc<TensorModel>> {
+        self.entries.remove(learner_id).map(|e| e.model)
+    }
+
+    /// Number of per-learner entries (diagnostics/tests; the cap below
+    /// bounds *models*, not entries).
+    #[allow(dead_code)]
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    #[allow(dead_code)]
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Number of distinct models currently pinned (entries sharing an
+    /// `Arc` count once — the sync-fleet case).
+    pub fn distinct_models(&self) -> usize {
+        self.entries
+            .values()
+            .map(|e| Arc::as_ptr(&e.model) as usize)
+            .collect::<HashSet<usize>>()
+            .len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelSpec;
+    use crate::util::Rng;
+
+    fn model(seed: u64) -> Arc<TensorModel> {
+        let layout = ModelSpec::mlp(4, 1, 4).tensor_layout();
+        Arc::new(TensorModel::random_init(&layout, &mut Rng::new(seed)))
+    }
+
+    #[test]
+    fn aliased_entries_count_as_one_model() {
+        let mut m = BaseMap::new(2);
+        let shared = model(1);
+        for i in 0..10 {
+            assert!(m.insert(&format!("l{i}"), 1, Arc::clone(&shared)).is_empty());
+        }
+        // A whole sync fleet pins ONE distinct model: nothing evicted.
+        assert_eq!(m.len(), 10);
+        assert_eq!(m.distinct_models(), 1);
+    }
+
+    #[test]
+    fn distinct_models_are_lru_capped() {
+        let mut m = BaseMap::new(2);
+        m.insert("a", 1, model(1));
+        m.insert("b", 2, model(2));
+        assert_eq!(m.distinct_models(), 2);
+        // Touch `a` so `b` is the LRU entry.
+        assert!(m.get("a").is_some());
+        let displaced = m.insert("c", 3, model(3));
+        assert_eq!(displaced.len(), 1, "one eviction expected");
+        assert_eq!(m.distinct_models(), 2);
+        assert!(m.get("b").is_none(), "LRU entry should be evicted");
+        assert!(m.get("a").is_some());
+        assert!(m.get("c").is_some());
+    }
+
+    #[test]
+    fn eviction_targets_models_not_aliased_entries() {
+        // a1 and a2 alias model A (a1 touched long ago); B is the true
+        // LRU *model*. Inserting C must evict B's entry — evicting a1
+        // would cost a learner its base without freeing anything.
+        let mut m = BaseMap::new(2);
+        let a = model(1);
+        let b = model(2);
+        m.insert("a1", 1, Arc::clone(&a));
+        m.insert("b1", 1, Arc::clone(&b));
+        m.insert("a2", 1, Arc::clone(&a));
+        let displaced = m.insert("c", 1, model(3));
+        assert_eq!(displaced.len(), 1);
+        assert!(Arc::ptr_eq(&displaced[0], &b));
+        assert!(m.get("a1").is_some(), "aliased entry evicted needlessly");
+        assert!(m.get("a2").is_some());
+        assert!(m.get("b1").is_none());
+        assert_eq!(m.distinct_models(), 2);
+    }
+
+    #[test]
+    fn insert_displaces_previous_entry_for_same_learner() {
+        let mut m = BaseMap::new(4);
+        let first = model(1);
+        m.insert("a", 1, Arc::clone(&first));
+        let displaced = m.insert("a", 2, model(2));
+        assert_eq!(displaced.len(), 1);
+        assert!(Arc::ptr_eq(&displaced[0], &first));
+        assert_eq!(m.get("a").unwrap().0, 2);
+    }
+
+    #[test]
+    fn remove_drops_the_entry() {
+        let mut m = BaseMap::new(4);
+        m.insert("a", 1, model(1));
+        assert!(m.remove("a").is_some());
+        assert!(m.remove("a").is_none());
+        assert!(m.is_empty());
+        assert_eq!(m.distinct_models(), 0);
+    }
+
+    #[test]
+    fn cap_one_keeps_only_the_newest_model() {
+        let mut m = BaseMap::new(1);
+        for i in 0..5 {
+            m.insert(&format!("l{i}"), i, model(i));
+        }
+        assert_eq!(m.distinct_models(), 1);
+        assert!(m.get("l4").is_some());
+    }
+}

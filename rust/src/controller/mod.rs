@@ -4,14 +4,17 @@
 //! aggregation rule/backend, and the round lifecycle state. It is exposed
 //! to the network as a [`Service`] handling the Appendix-B RPCs
 //! (`Register`, `MarkTaskCompleted`, heartbeats, …); the round-driving
-//! logic lives in [`scheduling`] (sync / semi-sync / async protocols).
+//! logic lives in [`scheduling`] (sync / semi-sync / async protocols),
+//! fed by the per-learner performance profiles in [`pacing`].
 
 pub mod aggregation;
+mod bases;
+pub mod pacing;
 pub mod scheduling;
 pub mod selector;
 pub mod store;
 
-use crate::config::{FederationEnv, Protocol, SecureSpec};
+use crate::config::{FederationEnv, Protocol, SecureSpec, SelectorSpec};
 use crate::metrics::{FedOp, OpMetrics};
 use crate::net::{ClientConn, Psk, Service};
 use crate::proto::client::{self, StreamSend};
@@ -25,11 +28,13 @@ use crate::tensor::{ByteOrder, CodecId, DType, TensorModel};
 use crate::util::{log_debug, log_info, Stopwatch, ThreadPool};
 use aggregation::{Backend, Contribution, ScratchArena};
 use anyhow::{bail, Context, Result};
-use selector::Selector;
+use bases::BaseMap;
+use pacing::PacingRegistry;
+use selector::{SelectionCtx, Selector};
 use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 use store::{ModelStore, StoredModel};
 
 /// A registered learner as seen by the controller.
@@ -164,6 +169,27 @@ struct RoundState {
     round: u64,
     expecting: HashSet<String>,
     arrived: Vec<String>,
+    /// When the round's tasks were dispatched (arrival offsets below
+    /// are measured from here).
+    opened_at: Instant,
+    /// Offsets of the first and latest in-round completion — their
+    /// difference is the round's straggler spread, the quantity
+    /// pacing-aware semi-sync exists to shrink.
+    first_arrival: Option<Duration>,
+    last_arrival: Option<Duration>,
+}
+
+/// What a round barrier wait observed (see
+/// [`Controller::wait_round_quorum`]).
+pub(crate) struct RoundOutcome {
+    /// Learners that completed in time, sorted by id.
+    pub arrived: Vec<String>,
+    /// Expected learners that had not completed when the round closed
+    /// (timeout or quorum cut) — pacing failure accounting feeds on
+    /// these.
+    pub missing: Vec<String>,
+    /// Wall clock between the first and the last counted completion.
+    pub completion_spread: Duration,
 }
 
 struct CtrlState {
@@ -178,6 +204,15 @@ struct CtrlState {
     last_participation: HashMap<String, u64>,
     /// Round each learner's current task was dispatched at (staleness).
     dispatch_round: HashMap<String, u64>,
+    /// When each learner's current task was handed out — consumed by
+    /// the completion path as the task RTT sample for its profile.
+    task_sent_at: HashMap<String, Instant>,
+    /// Highest task id each learner's completion has been *accepted*
+    /// for (round arrival or late fold). Makes the late-fold path
+    /// idempotent: a duplicate / replayed `MarkTaskCompleted` (lost
+    /// ack + reconnect) must not re-mix a model that was already
+    /// counted.
+    completed_tasks: HashMap<String, u64>,
     round: Option<RoundState>,
     /// Async protocol: community updates applied so far.
     async_updates: u64,
@@ -216,8 +251,20 @@ pub struct Controller {
     /// re-dispatches per learner at divergent community rounds, so a
     /// single shared base cannot serve it; the upload plane also
     /// resolves delta bases here when the community model has already
-    /// moved past the round a learner trained on.
-    learner_bases: Mutex<HashMap<String, (u64, Arc<TensorModel>)>>,
+    /// moved past the round a learner trained on. LRU-capped on
+    /// distinct pinned models (see [`bases::BaseMap`]): evicted
+    /// learners degrade to full-f32 sends, and deregistration drops a
+    /// learner's entry.
+    learner_bases: Mutex<BaseMap>,
+    /// Per-learner performance profiles (EWMA throughput / RTT,
+    /// completion & failure history) — the measurement substrate for
+    /// pacing-aware semi-sync budgets, quorum failure accounting, and
+    /// `Selector::PacingAware`.
+    pacing: PacingRegistry,
+    /// Completions that arrived after their round closed and were
+    /// folded into the community model through the async staleness path
+    /// (deadline-quorum rounds) instead of being dropped.
+    late_folds: AtomicU64,
     /// Codec `encode` invocations performed by streamed dispatch — the
     /// encode-once probe: fanning one model out to N learners must cost
     /// one encode per payload unit (tensor, or frame for framed codecs),
@@ -252,6 +299,8 @@ impl Controller {
                 learners: Vec::new(),
                 last_participation: HashMap::new(),
                 dispatch_round: HashMap::new(),
+                task_sent_at: HashMap::new(),
+                completed_tasks: HashMap::new(),
                 round: None,
                 async_updates: 0,
                 outstanding: HashSet::new(),
@@ -263,7 +312,9 @@ impl Controller {
             xla_slot: Mutex::new(None),
             ingest: StreamIngest::default(),
             last_broadcast: Mutex::new(None),
-            learner_bases: Mutex::new(HashMap::new()),
+            learner_bases: Mutex::new(BaseMap::new(bases::DEFAULT_BASE_MODEL_CAP)),
+            pacing: PacingRegistry::default(),
+            late_folds: AtomicU64::new(0),
             dispatch_encodes: AtomicU64::new(0),
             dispatch_wire_sent: AtomicU64::new(0),
             dispatch_wire_raw: AtomicU64::new(0),
@@ -274,6 +325,23 @@ impl Controller {
     /// idle-GC tests; gauges for ops dashboards).
     pub fn ingest(&self) -> &StreamIngest {
         &self.ingest
+    }
+
+    /// The learner pacing registry (per-learner performance profiles).
+    pub fn pacing(&self) -> &PacingRegistry {
+        &self.pacing
+    }
+
+    /// Completions folded through the async staleness path because they
+    /// arrived after their deadline-quorum round had closed.
+    pub fn late_folds(&self) -> u64 {
+        self.late_folds.load(Ordering::SeqCst)
+    }
+
+    /// Override the LRU cap on distinct pinned delta-base models
+    /// (tests; ops tuning for very large async fleets).
+    pub fn set_learner_base_cap(&self, cap_models: usize) {
+        *self.learner_bases.lock().unwrap() = BaseMap::new(cap_models);
     }
 
     /// Replace the model store (e.g. [`store::OnDiskStore`]).
@@ -352,6 +420,48 @@ impl Controller {
         index
     }
 
+    /// Deregister a learner: drop its handle and every per-learner map
+    /// entry — participation history, staleness bookkeeping, pacing
+    /// profile, and its pinned delta base (whose buffers go back to the
+    /// arena when nothing else holds them).
+    pub fn deregister_learner(&self, id: &str) -> bool {
+        let found = {
+            let mut s = self.state.lock().unwrap();
+            let before = s.learners.len();
+            s.learners.retain(|l| l.id != id);
+            let found = s.learners.len() != before;
+            s.last_participation.remove(id);
+            s.dispatch_round.remove(id);
+            s.task_sent_at.remove(id);
+            s.completed_tasks.remove(id);
+            s.outstanding.remove(id);
+            // Don't leave an open round waiting on the departed
+            // learner: drop it from `expecting` (unless its completion
+            // already arrived — that model is stored and stays
+            // aggregatable), so the barrier re-targets without it and
+            // it is never reported "missing" (which would resurrect
+            // the pacing profile as a failure ghost).
+            if let Some(r) = s.round.as_mut() {
+                if !r.arrived.iter().any(|a| a == id) {
+                    r.expecting.remove(id);
+                }
+            }
+            found
+        };
+        self.pacing.remove(id);
+        if let Some(base) = self.learner_bases.lock().unwrap().remove(id) {
+            if let Some(scratch) = self.effective_backend().scratch() {
+                scratch.reclaim_model(base);
+            }
+        }
+        if found {
+            log_debug("controller", &format!("deregistered learner {id}"));
+        }
+        // Wake the round barrier: its quorum target just shrank.
+        self.round_cv.notify_all();
+        found
+    }
+
     fn learners_snapshot(&self) -> Vec<Arc<LearnerHandle>> {
         self.state.lock().unwrap().learners.clone()
     }
@@ -367,47 +477,88 @@ impl Controller {
 
     // ---- round plumbing used by `scheduling` -------------------------
 
-    /// Open a round: note who we expect and stamp dispatch rounds.
+    /// Open a round: note who we expect and stamp dispatch rounds +
+    /// task send times (the completion path turns the latter into RTT
+    /// profile samples).
     fn open_round(&self, round: u64, expecting: &[String]) {
+        let now = Instant::now();
         let mut s = self.state.lock().unwrap();
         for id in expecting {
             s.dispatch_round.insert(id.clone(), round);
             s.last_participation.insert(id.clone(), round);
+            s.task_sent_at.insert(id.clone(), now);
         }
         s.round = Some(RoundState {
             round,
             expecting: expecting.iter().cloned().collect(),
             arrived: Vec::new(),
+            opened_at: now,
+            first_arrival: None,
+            last_arrival: None,
         });
     }
 
-    /// Block until all expected completions arrived or `timeout` elapsed.
-    /// Returns the learner ids that did arrive.
+    /// Block until all expected completions arrived or `timeout`
+    /// elapsed. Returns the learner ids that did arrive.
+    #[cfg(test)]
     fn wait_round_completions(&self, timeout: Duration) -> Vec<String> {
-        let deadline = std::time::Instant::now() + timeout;
+        self.wait_round_quorum(timeout, 1.0).arrived
+    }
+
+    /// Block until a quorum of the expected completions arrived or
+    /// `timeout` elapsed, then close the round. `quorum` is the
+    /// fraction of expected learners that must complete (1.0 = the
+    /// classic all-or-timeout barrier); the target is at least one.
+    /// Completions landing after the close are "late" — under
+    /// `quorum_fraction < 1` they fold through the async staleness path
+    /// (see [`Controller::complete_task`]).
+    fn wait_round_quorum(&self, timeout: Duration, quorum: f64) -> RoundOutcome {
+        let deadline = Instant::now() + timeout;
         let mut s = self.state.lock().unwrap();
         loop {
             let done = match &s.round {
-                Some(r) => r.arrived.len() >= r.expecting.len(),
+                // Deregistration can empty `expecting` mid-round;
+                // nothing left to wait for.
+                Some(r) if r.expecting.is_empty() => true,
+                Some(r) => {
+                    let target = ((r.expecting.len() as f64 * quorum).ceil() as usize)
+                        .clamp(1, r.expecting.len());
+                    r.arrived.len() >= target
+                }
                 None => true,
             };
             if done {
                 break;
             }
-            let Some(remaining) = deadline.checked_duration_since(std::time::Instant::now())
-            else {
+            let Some(remaining) = deadline.checked_duration_since(Instant::now()) else {
                 break;
             };
             let (guard, _) = self.round_cv.wait_timeout(s, remaining).unwrap();
             s = guard;
         }
-        let mut arrived = s.round.as_ref().map(|r| r.arrived.clone()).unwrap_or_default();
-        s.round = None;
+        let (mut arrived, mut missing, completion_spread) = match s.round.take() {
+            Some(r) => {
+                let spread = match (r.first_arrival, r.last_arrival) {
+                    (Some(first), Some(last)) => last.saturating_sub(first),
+                    _ => Duration::ZERO,
+                };
+                let arrived_set: HashSet<&String> = r.arrived.iter().collect();
+                let missing = r
+                    .expecting
+                    .iter()
+                    .filter(|id| !arrived_set.contains(id))
+                    .cloned()
+                    .collect();
+                (r.arrived, missing, spread)
+            }
+            None => (Vec::new(), Vec::new(), Duration::ZERO),
+        };
         // Sort so aggregation order (and thus fp rounding) is independent
         // of completion timing — parallel and sequential runs of the same
         // federation produce bitwise-identical community models.
         arrived.sort();
-        arrived
+        missing.sort();
+        RoundOutcome { arrived, missing, completion_spread }
     }
 
     /// Aggregate `learner_ids`' latest stored models into a new community
@@ -476,13 +627,37 @@ impl Controller {
     /// Async protocol: mix one completed local model into the community
     /// model immediately, discounted by staleness (Stripelis 2022b).
     fn async_mix(&self, entry: &StoredModel, alpha: f64) -> Result<u64> {
+        self.mix_completion(entry, alpha, true, None)
+    }
+
+    /// Staleness-discounted mix of one completed model into the
+    /// community model — the async protocol's update step, also reused
+    /// by deadline-quorum rounds to fold *late* completions instead of
+    /// dropping them. `async_update` distinguishes the two: the async
+    /// protocol advances the community round and its scheduler
+    /// bookkeeping; a late fold only blends the model (the sync
+    /// schedulers own the round counter). `trained_round` overrides the
+    /// staleness basis with the round the model was actually trained
+    /// for (late folds pass the completion's task id — the learner's
+    /// `dispatch_round` entry may already point at a NEWER task,
+    /// because re-selection overwrites it).
+    fn mix_completion(
+        &self,
+        entry: &StoredModel,
+        alpha: f64,
+        async_update: bool,
+        trained_round: Option<u64>,
+    ) -> Result<u64> {
         let backend = self.effective_backend();
         let mut s = self.state.lock().unwrap();
         let current = s
             .community
             .clone()
             .ok_or_else(|| anyhow::anyhow!("no community model shipped"))?;
-        let dispatched = s.dispatch_round.get(&entry.learner_id).copied().unwrap_or(0);
+        let dispatched = match trained_round {
+            Some(r) => r,
+            None => s.dispatch_round.get(&entry.learner_id).copied().unwrap_or(0),
+        };
         let staleness = s.community_round.saturating_sub(dispatched) as f64;
         let w = (1.0 + staleness).powf(-alpha) * 0.5;
         let models = [Arc::clone(&current), Arc::clone(&entry.model)];
@@ -495,15 +670,19 @@ impl Controller {
         if let (Some(prev), Some(scratch)) = (previous, backend.scratch()) {
             scratch.reclaim_model(prev);
         }
-        s.community_round += 1;
-        s.async_updates += 1;
-        let updates = s.async_updates;
-        // Next task for this learner is dispatched against the new round,
-        // and the learner is idle until the scheduler re-dispatches.
-        let community_round = s.community_round;
-        s.dispatch_round.insert(entry.learner_id.clone(), community_round);
-        s.outstanding.remove(&entry.learner_id);
-        Ok(updates)
+        if async_update {
+            s.community_round += 1;
+            s.async_updates += 1;
+            // Next task for this learner is dispatched against the new
+            // round, and the learner is idle until the scheduler
+            // re-dispatches.
+            let community_round = s.community_round;
+            s.dispatch_round.insert(entry.learner_id.clone(), community_round);
+            s.outstanding.remove(&entry.learner_id);
+        } else {
+            self.late_folds.fetch_add(1, Ordering::SeqCst);
+        }
+        Ok(s.async_updates)
     }
 
     /// Number of async community updates applied so far.
@@ -516,9 +695,12 @@ impl Controller {
         !self.state.lock().unwrap().outstanding.contains(id)
     }
 
-    /// Async protocol: note that a task is in flight for this learner.
+    /// Async protocol: note that a task is in flight for this learner
+    /// (also stamps the dispatch time for the RTT profile sample).
     pub(crate) fn mark_task_outstanding(&self, id: &str) {
-        self.state.lock().unwrap().outstanding.insert(id.to_string());
+        let mut s = self.state.lock().unwrap();
+        s.outstanding.insert(id.to_string());
+        s.task_sent_at.insert(id.to_string(), Instant::now());
     }
 
     /// Dispatch one message to `targets` concurrently. The message is
@@ -535,15 +717,49 @@ impl Controller {
         msg: &Message,
     ) -> (Duration, Vec<(String, Result<Message>)>) {
         let psk = self.psk;
-        let origin = std::time::Instant::now();
         let encoded = msg.encode();
-        let results = self.dispatch_pool.parallel_map(targets.len(), |i| {
-            let h = &targets[i];
-            h.rpc_raw_timed(psk, &encoded, origin)
-        });
-        // Dispatch completes when the slowest send has finished (offsets
-        // are measured from `origin`, so bounded-pool queueing delay is
-        // included — as it is in every framework the paper measures).
+        self.broadcast_with(targets, |i, origin| {
+            targets[i].rpc_raw_timed(psk, &encoded, origin)
+        })
+    }
+
+    /// [`Controller::broadcast`] with per-target frames assembled from
+    /// one shared `prefix` plus a small per-target suffix
+    /// (`prefix ‖ suffixes[i]` goes to `targets[i]`): the pacing-aware
+    /// one-shot dispatch path, where every learner's `RunTask` shares
+    /// one model serialization but carries its own step budget (see
+    /// [`Message::encode_run_task_parts`]). Frames materialize inside
+    /// the dispatch pool, so live whole-model copies are bounded by the
+    /// pool width, not the fleet size.
+    fn broadcast_prefixed(
+        &self,
+        targets: &[Arc<LearnerHandle>],
+        prefix: &[u8],
+        suffixes: &[Vec<u8>],
+    ) -> (Duration, Vec<(String, Result<Message>)>) {
+        assert_eq!(suffixes.len(), targets.len(), "one suffix per target");
+        let psk = self.psk;
+        self.broadcast_with(targets, |i, origin| {
+            let mut frame = Vec::with_capacity(prefix.len() + suffixes[i].len());
+            frame.extend_from_slice(prefix);
+            frame.extend_from_slice(&suffixes[i]);
+            targets[i].rpc_raw_timed(psk, &frame, origin)
+        })
+    }
+
+    /// Shared fan-out tail: run `send(i, origin)` for every target on
+    /// the dispatch pool, take the slowest send-completion offset as
+    /// the round's dispatch time (offsets are measured from `origin`,
+    /// so bounded-pool queueing delay is included — as it is in every
+    /// framework the paper measures), and pair replies with target ids.
+    fn broadcast_with(
+        &self,
+        targets: &[Arc<LearnerHandle>],
+        send: impl Fn(usize, std::time::Instant) -> Result<(Message, Duration)> + Send + Sync,
+    ) -> (Duration, Vec<(String, Result<Message>)>) {
+        let origin = std::time::Instant::now();
+        let results =
+            self.dispatch_pool.parallel_map(targets.len(), |i| send(i, origin));
         let dispatch: Duration = results
             .iter()
             .filter_map(|r| r.as_ref().ok().map(|(_, sent_at)| *sent_at))
@@ -557,12 +773,30 @@ impl Controller {
         (dispatch, out)
     }
 
-    /// Select round participants per the env's participation policy.
+    /// The selector configured in the env (`selector` block, falling
+    /// back to the classic participation-fraction policy).
+    fn selector(&self) -> Selector {
+        match &self.env.selector {
+            SelectorSpec::Participation => Selector::from_participation(self.env.participation),
+            SelectorSpec::Freshness { k } => Selector::FreshnessAware { k: *k },
+            SelectorSpec::Pacing { k, freshness_rounds } => {
+                Selector::PacingAware { k: *k, freshness_rounds: *freshness_rounds }
+            }
+        }
+    }
+
+    /// Select round participants per the env's selection policy, fed by
+    /// participation history and the pacing profiles.
     fn select_participants(&self, rng: &mut crate::util::Rng) -> Vec<Arc<LearnerHandle>> {
         let learners = self.learners_snapshot();
         let ids: Vec<String> = learners.iter().map(|l| l.id.clone()).collect();
-        let last = self.state.lock().unwrap().last_participation.clone();
-        let chosen = Selector::from_participation(self.env.participation).select(&ids, &last, rng);
+        let (last, round) = {
+            let s = self.state.lock().unwrap();
+            (s.last_participation.clone(), s.community_round + 1)
+        };
+        let scores = self.pacing.scores();
+        let ctx = SelectionCtx { last_round: &last, scores: &scores, round };
+        let chosen = self.selector().select(&ids, &ctx, rng);
         let set: HashSet<&String> = chosen.iter().collect();
         learners.into_iter().filter(|l| set.contains(&l.id)).collect()
     }
@@ -623,7 +857,7 @@ impl Controller {
             .unwrap()
             .get(learner_id)
             .filter(|(round, _)| *round == base_round)
-            .map(|(_, m)| Arc::clone(m))
+            .map(|(_, m)| m)
     }
 
     fn on_stream_begin(&self, args: StreamBegin) -> Message {
@@ -739,12 +973,18 @@ impl Controller {
     /// `(dispatch_time, per-learner final End replies)` mirroring
     /// [`Controller::broadcast`]; for [`StreamPurpose::Evaluate`] the
     /// final reply is the in-call `EvaluateModelReply`.
+    ///
+    /// `budgets` (pacing-aware semi-sync) gives learner `i` its own
+    /// `step_budget` override: only the small `Begin` frame is encoded
+    /// per target — the payload chunk fan-out stays encode-once.
+    #[allow(clippy::too_many_arguments)]
     pub(crate) fn stream_broadcast(
         &self,
         targets: &[Arc<LearnerHandle>],
         purpose: StreamPurpose,
         task_id: u64,
         spec: &TaskSpec,
+        budgets: Option<&[usize]>,
         model: &Arc<TensorModel>,
         model_round: u64,
     ) -> (Duration, Vec<(String, Result<Message>)>) {
@@ -757,6 +997,9 @@ impl Controller {
         let psk = self.psk;
         let origin = std::time::Instant::now();
         let n = targets.len();
+        if let Some(bs) = budgets {
+            assert_eq!(bs.len(), n, "one step budget per target");
+        }
         let chunk_bytes = self.env.effective_stream_chunk().max(1);
         let configured = self.negotiate_dispatch_codec(targets);
         let (codec, base, base_round) = if configured.needs_base() {
@@ -774,23 +1017,37 @@ impl Controller {
         let mut replies: Vec<Option<Result<Message>>> = (0..n).map(|_| None).collect();
         let mut dispatch = Duration::ZERO;
 
-        // Begin fan-out (one encode, shared bytes).
-        let begin = Message::ModelStreamBegin {
-            stream_id,
-            task_id,
-            round: model_round,
-            purpose,
-            learner_id: String::new(),
-            codec,
-            base_round,
-            layout: TensorLayoutProto::codec_layout_of(model, codec),
-            meta: TaskMeta::default(),
-            spec: spec.clone(),
-        }
-        .encode();
-        let acks = self
-            .dispatch_pool
-            .parallel_map(n, |i| targets[i].rpc_raw_timed(psk, &begin, origin));
+        // Begin fan-out: one encode + shared bytes normally; with
+        // per-learner budgets, one (small) Begin per target — the spec
+        // is the only thing that differs, and the payload chunks below
+        // are still encoded once for everyone.
+        let spec_for = |i: usize| match budgets {
+            Some(bs) => TaskSpec { step_budget: bs[i], ..spec.clone() },
+            None => spec.clone(),
+        };
+        let make_begin = |s: TaskSpec| {
+            Message::ModelStreamBegin {
+                stream_id,
+                task_id,
+                round: model_round,
+                purpose,
+                learner_id: String::new(),
+                codec,
+                base_round,
+                layout: TensorLayoutProto::codec_layout_of(model, codec),
+                meta: TaskMeta::default(),
+                spec: s,
+            }
+            .encode()
+        };
+        let begin_frames: Vec<Vec<u8>> = match budgets {
+            Some(_) => (0..n).map(|i| make_begin(spec_for(i))).collect(),
+            None => vec![make_begin(spec.clone())],
+        };
+        let acks = self.dispatch_pool.parallel_map(n, |i| {
+            let frame = if begin_frames.len() == 1 { &begin_frames[0] } else { &begin_frames[i] };
+            targets[i].rpc_raw_timed(psk, frame, origin)
+        });
         for (i, r) in acks.into_iter().enumerate() {
             match r {
                 Ok((reply, sent_at)) => {
@@ -965,6 +1222,7 @@ impl Controller {
                         &format!("{}: no shared delta base, re-sending full", h.id),
                     );
                     let meta = TaskMeta::default();
+                    let spec_i = spec_for(i);
                     let send = StreamSend::f32(
                         purpose,
                         task_id,
@@ -972,7 +1230,7 @@ impl Controller {
                         "",
                         model,
                         &meta,
-                        spec,
+                        &spec_i,
                         chunk_bytes,
                     );
                     client::stream_model_with(
@@ -1025,10 +1283,28 @@ impl Controller {
         // their handles on the displaced shared base, so the rotation
         // below sees a unique Arc and can recycle its buffers.
         if codec.is_lossless() {
-            let mut bases = self.learner_bases.lock().unwrap();
-            for (i, r) in replies.iter().enumerate() {
-                if matches!(r, Some(Ok(m)) if !matches!(m, Message::Error { .. })) {
-                    bases.insert(targets[i].id.clone(), (model_round, Arc::clone(model)));
+            let displaced: Vec<Arc<TensorModel>> = {
+                let mut bases = self.learner_bases.lock().unwrap();
+                replies
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, r)| {
+                        matches!(r, Some(Ok(m)) if !matches!(m, Message::Error { .. }))
+                    })
+                    .flat_map(|(i, _)| {
+                        bases.insert(&targets[i].id, model_round, Arc::clone(model))
+                    })
+                    .collect()
+            };
+            // LRU evictions and same-learner displacements both leave
+            // circulation here; uniquely-owned buffers go back to the
+            // arena (in a sync fleet they all alias `model`, so this is
+            // a no-op until the map's last handle drops elsewhere).
+            if let Some(scratch) = self.effective_backend().scratch() {
+                for old in displaced {
+                    if !Arc::ptr_eq(&old, model) {
+                        scratch.reclaim_model(old);
+                    }
                 }
             }
         }
@@ -1081,9 +1357,10 @@ impl Controller {
             None => self.dispatch_codec(),
         };
         let (codec, base, base_round) = if configured.needs_base() {
-            match self.learner_bases.lock().unwrap().get(&target.id).cloned() {
+            match self.learner_bases.lock().unwrap().get(&target.id) {
                 Some((round, m)) => (configured, Some(m), round),
-                // Nothing acknowledged yet: full send establishes one.
+                // Nothing acknowledged yet — or the LRU cap evicted
+                // this learner's base: full send (re)establishes one.
                 None => (CodecId::F32, None, 0),
             }
         } else {
@@ -1154,10 +1431,10 @@ impl Controller {
                 .learner_bases
                 .lock()
                 .unwrap()
-                .insert(target.id.clone(), (model_round, Arc::clone(model)));
-            if let Some((_, old)) = displaced {
-                if !Arc::ptr_eq(&old, model) {
-                    if let Some(scratch) = self.effective_backend().scratch() {
+                .insert(&target.id, model_round, Arc::clone(model));
+            if let Some(scratch) = self.effective_backend().scratch() {
+                for old in displaced {
+                    if !Arc::ptr_eq(&old, model) {
                         scratch.reclaim_model(old);
                     }
                 }
@@ -1200,6 +1477,16 @@ impl Service for Controller {
                 };
                 let idx = self.register_learner(&learner_id, &endpoint, num_samples);
                 Message::RegisterAck { accepted: true, assigned_index: idx }
+            }
+            Message::Deregister { learner_id } => {
+                if self.deregister_learner(&learner_id) {
+                    Message::Ack { task_id: 0, ok: true }
+                } else {
+                    Message::error(
+                        ErrorCode::NotFound,
+                        format!("learner '{learner_id}' is not registered"),
+                    )
+                }
             }
             Message::ShipModel { model } => {
                 // Decode outside every lock; the wire buffer is released
@@ -1305,64 +1592,206 @@ impl Service for Controller {
 
 impl Controller {
     /// Decoded-model completion path shared by the one-shot and
-    /// streaming ingests: store the model (T4–T5) and either tick the
-    /// round barrier (sync/semi-sync) or mix immediately (async).
+    /// streaming ingests: fold the completion telemetry into the
+    /// learner's pacing profile, store the model (T4–T5), and either
+    /// tick the round barrier (sync/semi-sync), fold a late quorum-round
+    /// completion through the async staleness path, or mix immediately
+    /// (async).
     fn complete_task(
         &self,
-        _task_id: u64,
+        task_id: u64,
         learner_id: String,
         model: TensorModel,
         meta: TaskMeta,
     ) -> Result<()> {
+        if let Protocol::Asynchronous { staleness_alpha } = self.env.protocol {
+            return self.complete_task_async(task_id, learner_id, model, meta, staleness_alpha);
+        }
+        // Sync / semi-sync: every acceptance decision — round arrival,
+        // profile observation, the completed-task watermark, whether
+        // the model is stored, whether it late-folds — is made
+        // atomically under ONE state lock, so a replayed or stale
+        // retransmit cannot slip a model in between the checks (e.g.
+        // clobbering the learner's fresh stored model right before its
+        // round aggregates).
+        let (entry, rtt, observe, late, community_round) = {
+            let mut s = self.state.lock().unwrap();
+            // Acceptance: the task was actually dispatched to this
+            // learner — id known AND the claimed task id no newer than
+            // its latest dispatch (a fabricated future id would zero
+            // the staleness discount) — and not accepted before (the
+            // watermark makes every path replay-idempotent: neither
+            // the pacing EWMA/completion count nor the community model
+            // may count one task twice).
+            let latest_dispatch = s.dispatch_round.get(&learner_id).copied();
+            let was_dispatched = latest_dispatch.is_some_and(|latest| task_id <= latest);
+            let unseen = !s
+                .completed_tasks
+                .get(&learner_id)
+                .is_some_and(|accepted| task_id <= *accepted);
+            let accepted = was_dispatched && unseen;
+            // Round membership additionally requires the ROUND's task
+            // id: a straggler's completion from a closed quorum round
+            // must not tick the next round's barrier with a stale
+            // model — it takes the late-fold path below.
+            let in_round = accepted
+                && s.round
+                    .as_ref()
+                    .is_some_and(|r| r.round == task_id && r.expecting.contains(&learner_id));
+            // A completion with no open round claiming it is "late" —
+            // its round closed at the quorum cut. Under deadline-quorum
+            // configs, fold it into the community model with the async
+            // staleness discount instead of dropping the learner's
+            // work on the floor. Scope: the fold mutates the community
+            // model in place, so it reaches the fleet through the NEXT
+            // dispatch; a fold landing after the next round already
+            // dispatched is superseded when that round's FedAvg
+            // replaces the community model (pure FedAvg keeps nothing
+            // of `current` — see the ROADMAP keep-rate open item).
+            let late = accepted
+                && !in_round
+                && s.community.is_some()
+                && self.env.quorum_fraction < 1.0;
+            let community_round = s.community_round;
+            // Store FIRST — only accepted contributions (a refused
+            // completion must not replace the learner's stored model,
+            // which is the round's aggregation input) — and only THEN
+            // mutate barrier/watermark/RTT state: a failed insert exits
+            // here with nothing recorded, so the learner's retry is
+            // not refused as a replay against a phantom arrival.
+            let entry = if in_round || late {
+                let insert_sw = Stopwatch::start();
+                let entry = StoredModel {
+                    learner_id: learner_id.clone(),
+                    round: community_round,
+                    meta: meta.clone(),
+                    model: Arc::new(model),
+                };
+                s.store.insert(entry.clone())?;
+                self.record(FedOp::StoreInsert, insert_sw.elapsed());
+                Some(entry)
+            } else {
+                None
+            };
+            // RTT sample: only the first completion of the learner's
+            // LATEST task may consume the send stamp (an older
+            // straggler must not claim the fresh task's clock).
+            let rtt = if accepted && latest_dispatch == Some(task_id) {
+                s.task_sent_at.remove(&learner_id).map(|t| t.elapsed())
+            } else {
+                None
+            };
+            if accepted {
+                s.completed_tasks.insert(learner_id.clone(), task_id);
+            }
+            if in_round {
+                let r = s.round.as_mut().unwrap();
+                let at = r.opened_at.elapsed();
+                r.first_arrival.get_or_insert(at);
+                r.last_arrival = Some(at);
+                r.arrived.push(learner_id.clone());
+            }
+            (entry, rtt, accepted, late, community_round)
+        };
+        if observe {
+            self.pacing.observe_completion(&learner_id, &meta, rtt, community_round);
+        }
+        if late {
+            let entry = entry.as_ref().expect("late fold implies a stored entry");
+            let sw = Stopwatch::start();
+            // Staleness basis = the round this model was trained for
+            // (its task id), NOT the learner's dispatch_round entry —
+            // re-selection may already have overwritten that with a
+            // newer task.
+            self.mix_completion(entry, self.env.quorum_late_alpha, false, Some(task_id))?;
+            self.record(FedOp::Aggregation, sw.elapsed());
+            log_debug(
+                "controller",
+                &format!("{learner_id}: late completion folded (staleness path)"),
+            );
+        }
+        self.round_cv.notify_all();
+        Ok(())
+    }
+
+    /// Async-protocol completion path: store (for inspection/metrics
+    /// parity with sync) and mix immediately, discounted by staleness.
+    fn complete_task_async(
+        &self,
+        task_id: u64,
+        learner_id: String,
+        model: TensorModel,
+        meta: TaskMeta,
+        staleness_alpha: f64,
+    ) -> Result<()> {
+        let (community_round, rtt, observe, unseen) = {
+            let mut s = self.state.lock().unwrap();
+            // Profile only learners the controller actually handed a
+            // task (the async scheduler marks them outstanding; their
+            // dispatch_round entry appears after the first mix).
+            let known = s.dispatch_round.contains_key(&learner_id)
+                || s.outstanding.contains(&learner_id);
+            // Replay gate: async task ids are the community round a
+            // task was dispatched at, strictly increasing per learner,
+            // so the same watermark used by sync rounds makes the mix
+            // idempotent — a retransmit after a lost ack must not
+            // re-blend the same update (or double-tick async_updates).
+            // `plausible` bounds the watermark a peer can claim: no
+            // task beyond the next community round was ever dispatched,
+            // so a fabricated huge task id can neither mix nor wedge
+            // the learner's future completions behind a poisoned
+            // watermark.
+            let plausible = task_id <= s.community_round.saturating_add(1);
+            let unseen = plausible
+                && !s
+                    .completed_tasks
+                    .get(&learner_id)
+                    .is_some_and(|accepted| task_id <= *accepted);
+            if unseen {
+                s.completed_tasks.insert(learner_id.clone(), task_id);
+            }
+            let rtt = if unseen {
+                s.task_sent_at.remove(&learner_id).map(|t| t.elapsed())
+            } else {
+                None
+            };
+            (s.community_round, rtt, known && unseen, unseen)
+        };
+        if observe {
+            self.pacing.observe_completion(&learner_id, &meta, rtt, community_round);
+        }
+        if !unseen {
+            // Duplicate delivery: everything below already happened for
+            // this task — ack idempotently.
+            self.round_cv.notify_all();
+            return Ok(());
+        }
         let entry = StoredModel {
-            learner_id: learner_id.clone(),
-            round: self.state.lock().unwrap().community_round,
+            learner_id,
+            round: community_round,
             meta,
             model: Arc::new(model),
         };
-
-        match self.env.protocol {
-            Protocol::Asynchronous { staleness_alpha } => {
-                let sw = Stopwatch::start();
-                // Store (for inspection/metrics parity with sync).
-                {
-                    let mut s = self.state.lock().unwrap();
-                    let insert_sw = Stopwatch::start();
-                    s.store.insert(entry.clone())?;
-                    let evicted = s.store.evict(1)?;
-                    drop(s);
-                    self.record(FedOp::StoreInsert, insert_sw.elapsed());
-                    // Superseded uploads go back to the arena (see
-                    // aggregate_from_store).
-                    if let Some(scratch) = self.effective_backend().scratch() {
-                        for e in evicted {
-                            scratch.reclaim_model(e.model);
-                        }
-                    }
+        let sw = Stopwatch::start();
+        {
+            let mut s = self.state.lock().unwrap();
+            let insert_sw = Stopwatch::start();
+            s.store.insert(entry.clone())?;
+            let evicted = s.store.evict(1)?;
+            drop(s);
+            self.record(FedOp::StoreInsert, insert_sw.elapsed());
+            // Superseded uploads go back to the arena (see
+            // aggregate_from_store).
+            if let Some(scratch) = self.effective_backend().scratch() {
+                for e in evicted {
+                    scratch.reclaim_model(e.model);
                 }
-                self.async_mix(&entry, staleness_alpha)?;
-                self.record(FedOp::Aggregation, sw.elapsed());
-                self.round_cv.notify_all();
-                Ok(())
-            }
-            _ => {
-                let mut s = self.state.lock().unwrap();
-                let insert_sw = Stopwatch::start();
-                s.store.insert(entry)?;
-                let insert_time = insert_sw.elapsed();
-                if let Some(r) = s.round.as_mut() {
-                    if r.expecting.contains(&learner_id)
-                        && !r.arrived.iter().any(|a| a == &learner_id)
-                    {
-                        r.arrived.push(learner_id);
-                    }
-                }
-                drop(s);
-                self.record(FedOp::StoreInsert, insert_time);
-                self.round_cv.notify_all();
-                Ok(())
             }
         }
+        self.async_mix(&entry, staleness_alpha)?;
+        self.record(FedOp::Aggregation, sw.elapsed());
+        self.round_cv.notify_all();
+        Ok(())
     }
 }
 
@@ -1562,6 +1991,403 @@ mod tests {
     }
 
     #[test]
+    fn quorum_wait_closes_at_the_cut_and_reports_missing() {
+        let ctrl = Controller::new(env(), None).unwrap();
+        ctrl.ship_model(model(1));
+        ctrl.open_round(1, &["a".into(), "b".into(), "c".into()]);
+        let mp = ModelProto::from_model(&model(2), DType::F32, ByteOrder::Little);
+        for id in ["a", "b"] {
+            ctrl.handle(Message::MarkTaskCompleted {
+                task_id: 1,
+                learner_id: id.into(),
+                model: mp.clone(),
+                meta: TaskMeta { num_samples: 10, ..Default::default() },
+            });
+        }
+        // Quorum 2/3 is already met: returns without waiting for `c`
+        // (the long timeout proves we did not sit in it).
+        let sw = Stopwatch::start();
+        let outcome = ctrl.wait_round_quorum(Duration::from_secs(30), 0.66);
+        assert!(sw.elapsed() < Duration::from_secs(5));
+        assert_eq!(outcome.arrived, vec!["a".to_string(), "b".to_string()]);
+        assert_eq!(outcome.missing, vec!["c".to_string()]);
+        // The missing learner's failure can feed the pacing history.
+        ctrl.pacing().observe_failure("c");
+        assert_eq!(ctrl.pacing().profile("c").unwrap().failures(), 1);
+    }
+
+    #[test]
+    fn quorum_aggregate_is_exact_reweighted_subset() {
+        // Property (several seeds): a deadline-quorum round's aggregate
+        // is bitwise identical to FedAvg over exactly the learners that
+        // met the cut, reweighted by their sample counts — learners
+        // that missed the deadline contribute nothing.
+        for seed in 0..5u64 {
+            let mut e = env();
+            e.quorum_fraction = 0.5;
+            let quorum_ctrl = Controller::new(e, None).unwrap();
+            let direct_ctrl = Controller::new(env(), None).unwrap();
+            quorum_ctrl.ship_model(model(seed));
+            direct_ctrl.ship_model(model(seed));
+
+            let all = ["a", "b", "c", "d"];
+            let expecting: Vec<String> = all.iter().map(|s| s.to_string()).collect();
+            quorum_ctrl.open_round(1, &expecting);
+            // Only half the fleet completes before the cut.
+            let arrived = &all[..2];
+            for (i, id) in arrived.iter().enumerate() {
+                let mp = ModelProto::from_model(
+                    &model(100 + seed * 10 + i as u64),
+                    DType::F32,
+                    ByteOrder::Little,
+                );
+                let meta = TaskMeta { num_samples: 10 + 7 * i, ..Default::default() };
+                quorum_ctrl.handle(Message::MarkTaskCompleted {
+                    task_id: 1,
+                    learner_id: id.to_string(),
+                    model: mp.clone(),
+                    meta: meta.clone(),
+                });
+                direct_ctrl.open_round(1, &[id.to_string()]);
+                direct_ctrl.handle(Message::MarkTaskCompleted {
+                    task_id: 1,
+                    learner_id: id.to_string(),
+                    model: mp,
+                    meta,
+                });
+                direct_ctrl.wait_round_completions(Duration::from_secs(1));
+            }
+            let outcome = quorum_ctrl.wait_round_quorum(Duration::from_secs(5), 0.5);
+            assert_eq!(outcome.arrived.len(), 2, "seed {seed}");
+            let q = quorum_ctrl.aggregate_from_store(&outcome.arrived, 1).unwrap();
+            let ids: Vec<String> = arrived.iter().map(|s| s.to_string()).collect();
+            let d = direct_ctrl.aggregate_from_store(&ids, 1).unwrap();
+            assert_eq!(*q, *d, "seed {seed}: quorum aggregate != reweighted subset");
+        }
+    }
+
+    #[test]
+    fn late_completion_folds_through_staleness_path() {
+        let mut e = env();
+        e.quorum_fraction = 0.5;
+        let ctrl = Controller::new(e, None).unwrap();
+        ctrl.ship_model(model(1));
+        ctrl.open_round(1, &["a".into(), "b".into()]);
+        let fast = model(2);
+        ctrl.handle(Message::MarkTaskCompleted {
+            task_id: 1,
+            learner_id: "a".into(),
+            model: ModelProto::from_model(&fast, DType::F32, ByteOrder::Little),
+            meta: TaskMeta { num_samples: 10, ..Default::default() },
+        });
+        let outcome = ctrl.wait_round_quorum(Duration::from_secs(5), 0.5);
+        assert_eq!(outcome.arrived, vec!["a".to_string()]);
+        let aggregated = ctrl.aggregate_from_store(&outcome.arrived, 1).unwrap();
+        assert_eq!(ctrl.late_folds(), 0);
+
+        // `b` finishes after the round closed: folded via the async
+        // staleness mix, not dropped. Dispatched at round 1, community
+        // now at round 1 → staleness 0 → w = 0.5.
+        let slow = model(3);
+        let reply = ctrl.handle(Message::MarkTaskCompleted {
+            task_id: 1,
+            learner_id: "b".into(),
+            model: ModelProto::from_model(&slow, DType::F32, ByteOrder::Little),
+            meta: TaskMeta { num_samples: 10, ..Default::default() },
+        });
+        assert!(matches!(reply, Message::Ack { ok: true, .. }), "{reply:?}");
+        assert_eq!(ctrl.late_folds(), 1);
+        let (community, round) = ctrl.community().unwrap();
+        // The sync round counter is untouched by the fold…
+        assert_eq!(round, 1);
+        // …and the mix is bitwise the staleness formula's output.
+        let expect = aggregation::WeightedSum::compute(
+            &[aggregated, Arc::new(slow.clone())],
+            &[0.5, 0.5],
+            &ctrl.effective_backend(),
+        )
+        .unwrap();
+        assert_eq!(*community, expect);
+
+        // Replays are idempotent: re-sending b's completion (lost ack +
+        // reconnect) must not mix the same model a second time — and
+        // neither may a replay of a's already-aggregated completion.
+        for (id, m) in [("b", &slow), ("a", &fast)] {
+            let reply = ctrl.handle(Message::MarkTaskCompleted {
+                task_id: 1,
+                learner_id: id.to_string(),
+                model: ModelProto::from_model(m, DType::F32, ByteOrder::Little),
+                meta: TaskMeta { num_samples: 10, ..Default::default() },
+            });
+            assert!(matches!(reply, Message::Ack { ok: true, .. }), "{reply:?}");
+        }
+        assert_eq!(ctrl.late_folds(), 1, "replayed completions re-folded");
+        let (community_after, _) = ctrl.community().unwrap();
+        assert!(Arc::ptr_eq(&community, &community_after));
+
+        // A fabricated FUTURE task id (beyond anything dispatched to
+        // b) must not fold either — it would zero the staleness
+        // discount and inject at full weight.
+        ctrl.handle(Message::MarkTaskCompleted {
+            task_id: 10_000,
+            learner_id: "b".into(),
+            model: ModelProto::from_model(&model(9), DType::F32, ByteOrder::Little),
+            meta: TaskMeta { num_samples: 10, ..Default::default() },
+        });
+        assert_eq!(ctrl.late_folds(), 1, "future task id was folded");
+        let (community_after, _) = ctrl.community().unwrap();
+        assert!(Arc::ptr_eq(&community, &community_after));
+    }
+
+    #[test]
+    fn late_fold_discounts_by_the_trained_round_not_dispatch_round() {
+        // `b` trains for round 1 but its completion lands only after
+        // round 2 aggregated AND b was re-selected for round 3 (so its
+        // dispatch_round entry points at the newer task). The staleness
+        // basis must be the completion's own round (1): staleness =
+        // 2 − 1 = 1 ⇒ w = 0.5 · 2^{-α}.
+        let mut e = env();
+        e.quorum_fraction = 0.5;
+        e.quorum_late_alpha = 1.0;
+        let ctrl = Controller::new(e, None).unwrap();
+        ctrl.ship_model(model(1));
+        let mp = |seed: u64| ModelProto::from_model(&model(seed), DType::F32, ByteOrder::Little);
+        // Round 1: a completes, b misses the cut.
+        ctrl.open_round(1, &["a".into(), "b".into()]);
+        ctrl.handle(Message::MarkTaskCompleted {
+            task_id: 1,
+            learner_id: "a".into(),
+            model: mp(2),
+            meta: TaskMeta { num_samples: 10, ..Default::default() },
+        });
+        let o1 = ctrl.wait_round_quorum(Duration::from_secs(5), 0.5);
+        ctrl.aggregate_from_store(&o1.arrived, 1).unwrap();
+        // Round 2: a again; aggregate → community_round = 2.
+        ctrl.open_round(2, &["a".into()]);
+        ctrl.handle(Message::MarkTaskCompleted {
+            task_id: 2,
+            learner_id: "a".into(),
+            model: mp(3),
+            meta: TaskMeta { num_samples: 10, ..Default::default() },
+        });
+        let o2 = ctrl.wait_round_quorum(Duration::from_secs(5), 0.5);
+        ctrl.aggregate_from_store(&o2.arrived, 2).unwrap();
+        // Round 3 opens and re-selects b, overwriting dispatch_round[b].
+        ctrl.open_round(3, &["a".into(), "b".into()]);
+        let (before, _) = ctrl.community().unwrap();
+        // b's ROUND-1 completion finally arrives.
+        let stale_model = model(4);
+        ctrl.handle(Message::MarkTaskCompleted {
+            task_id: 1,
+            learner_id: "b".into(),
+            model: ModelProto::from_model(&stale_model, DType::F32, ByteOrder::Little),
+            meta: TaskMeta { num_samples: 10, ..Default::default() },
+        });
+        assert_eq!(ctrl.late_folds(), 1);
+        // staleness 1, α = 1 ⇒ w = 0.5 · 2⁻¹ = 0.25 (computed through
+        // the same powf expression as the fold, for bitwise equality).
+        let w = (1.0f64 + 1.0).powf(-1.0) * 0.5;
+        let expect = aggregation::WeightedSum::compute(
+            &[before, Arc::new(stale_model)],
+            &[1.0 - w, w],
+            &ctrl.effective_backend(),
+        )
+        .unwrap();
+        let (community, _) = ctrl.community().unwrap();
+        assert_eq!(*community, expect);
+    }
+
+    #[test]
+    fn stale_completion_does_not_tick_the_next_rounds_barrier() {
+        // A straggler's completion from a closed quorum round arrives
+        // while the NEXT round is open and expecting the same learner:
+        // it must take the late-fold path (its task id names the old
+        // round), not masquerade as the new round's arrival.
+        let mut e = env();
+        e.quorum_fraction = 0.5;
+        let ctrl = Controller::new(e, None).unwrap();
+        ctrl.ship_model(model(1));
+        ctrl.open_round(1, &["a".into(), "b".into()]);
+        ctrl.handle(Message::MarkTaskCompleted {
+            task_id: 1,
+            learner_id: "a".into(),
+            model: ModelProto::from_model(&model(2), DType::F32, ByteOrder::Little),
+            meta: TaskMeta { num_samples: 10, ..Default::default() },
+        });
+        let outcome = ctrl.wait_round_quorum(Duration::from_secs(5), 0.5);
+        ctrl.aggregate_from_store(&outcome.arrived, 1).unwrap();
+        // Round 2 opens, also expecting `b`…
+        ctrl.open_round(2, &["a".into(), "b".into()]);
+        // …and b's ROUND-1 completion lands now.
+        ctrl.handle(Message::MarkTaskCompleted {
+            task_id: 1,
+            learner_id: "b".into(),
+            model: ModelProto::from_model(&model(3), DType::F32, ByteOrder::Little),
+            meta: TaskMeta { num_samples: 10, ..Default::default() },
+        });
+        assert_eq!(ctrl.late_folds(), 1, "stale completion should late-fold");
+        // The round-2 barrier has NOT ticked for b: only a fresh
+        // round-2 completion counts.
+        ctrl.handle(Message::MarkTaskCompleted {
+            task_id: 2,
+            learner_id: "b".into(),
+            model: ModelProto::from_model(&model(4), DType::F32, ByteOrder::Little),
+            meta: TaskMeta { num_samples: 10, ..Default::default() },
+        });
+        let outcome = ctrl.wait_round_quorum(Duration::from_secs(5), 0.5);
+        assert_eq!(outcome.arrived, vec!["b".to_string()]);
+        assert_eq!(ctrl.late_folds(), 1);
+        // Round 2 aggregates b's FRESH model: a replay of the stale
+        // round-1 completion (landing right before aggregation) was
+        // refused at the store too, so it cannot become the round's
+        // aggregation input.
+        ctrl.handle(Message::MarkTaskCompleted {
+            task_id: 1,
+            learner_id: "b".into(),
+            model: ModelProto::from_model(&model(3), DType::F32, ByteOrder::Little),
+            meta: TaskMeta { num_samples: 10, ..Default::default() },
+        });
+        let aggregated = ctrl.aggregate_from_store(&outcome.arrived, 2).unwrap();
+        assert_eq!(*aggregated, model(4), "stale replay clobbered the stored fresh model");
+    }
+
+    #[test]
+    fn deregistration_releases_an_open_round_barrier() {
+        let ctrl = Controller::new(env(), None).unwrap();
+        ctrl.ship_model(model(1));
+        ctrl.register_learner("a", "inproc://a", 10);
+        ctrl.register_learner("b", "inproc://b", 10);
+        ctrl.open_round(1, &["a".into(), "b".into()]);
+        ctrl.handle(Message::MarkTaskCompleted {
+            task_id: 1,
+            learner_id: "a".into(),
+            model: ModelProto::from_model(&model(2), DType::F32, ByteOrder::Little),
+            meta: TaskMeta { num_samples: 10, ..Default::default() },
+        });
+        // `b` departs mid-round: the barrier must re-target to just the
+        // arrived learner instead of burning the full timeout, and `b`
+        // must not be reported missing (no failure ghost in pacing).
+        assert!(ctrl.deregister_learner("b"));
+        let sw = Stopwatch::start();
+        let outcome = ctrl.wait_round_quorum(Duration::from_secs(30), 1.0);
+        assert!(sw.elapsed() < Duration::from_secs(5), "barrier waited on departed learner");
+        assert_eq!(outcome.arrived, vec!["a".to_string()]);
+        assert!(outcome.missing.is_empty());
+        assert!(ctrl.pacing().profile("b").is_none());
+    }
+
+    #[test]
+    fn late_completion_dropped_without_quorum_config() {
+        // Classic rounds (quorum 1.0): a dispatched learner's
+        // completion landing after the round timed out is observed for
+        // its pacing profile but neither folded nor stored (it could
+        // only clobber fresher aggregation inputs) — and a completion
+        // from a never-dispatched peer is refused outright.
+        let ctrl = Controller::new(env(), None).unwrap();
+        ctrl.ship_model(model(1));
+        ctrl.open_round(1, &["a".into(), "b".into()]);
+        ctrl.handle(Message::MarkTaskCompleted {
+            task_id: 1,
+            learner_id: "a".into(),
+            model: ModelProto::from_model(&model(2), DType::F32, ByteOrder::Little),
+            meta: TaskMeta { num_samples: 10, ..Default::default() },
+        });
+        // `b` misses the (tiny) timeout; the round closes without it.
+        let arrived = ctrl.wait_round_completions(Duration::from_millis(50));
+        assert_eq!(arrived, vec!["a".to_string()]);
+        let aggregated = ctrl.aggregate_from_store(&arrived, 1).unwrap();
+        // b's straggler completion now lands: profiled, not folded.
+        let reply = ctrl.handle(Message::MarkTaskCompleted {
+            task_id: 1,
+            learner_id: "b".into(),
+            model: ModelProto::from_model(&model(3), DType::F32, ByteOrder::Little),
+            meta: TaskMeta { num_samples: 10, completed_steps: 5, ..Default::default() },
+        });
+        assert!(matches!(reply, Message::Ack { ok: true, .. }), "{reply:?}");
+        assert_eq!(ctrl.late_folds(), 0);
+        assert_eq!(ctrl.pacing().profile("b").unwrap().completions(), 1);
+        // Never-dispatched peer: refused before any state changes.
+        ctrl.handle(Message::MarkTaskCompleted {
+            task_id: 1,
+            learner_id: "zzz".into(),
+            model: ModelProto::from_model(&model(4), DType::F32, ByteOrder::Little),
+            meta: TaskMeta { num_samples: 10, ..Default::default() },
+        });
+        assert_eq!(ctrl.late_folds(), 0);
+        assert!(ctrl.pacing().profile("zzz").is_none());
+        let (community, _) = ctrl.community().unwrap();
+        assert!(Arc::ptr_eq(&community, &aggregated));
+    }
+
+    #[test]
+    fn completion_telemetry_feeds_pacing_profiles() {
+        let ctrl = Controller::new(env(), None).unwrap();
+        ctrl.ship_model(model(1));
+        ctrl.open_round(1, &["a".into()]);
+        ctrl.handle(Message::MarkTaskCompleted {
+            task_id: 1,
+            learner_id: "a".into(),
+            model: ModelProto::from_model(&model(2), DType::F32, ByteOrder::Little),
+            meta: TaskMeta {
+                num_samples: 10,
+                completed_steps: 50,
+                steps_per_sec: 40.0,
+                train_wall_time_us: 1_250_000,
+                ..Default::default()
+            },
+        });
+        let p = ctrl.pacing().profile("a").expect("profile created");
+        assert_eq!(p.completions(), 1);
+        assert!((p.steps_per_sec().unwrap() - 40.0).abs() < 1e-9);
+        // open_round stamped the send time, so the completion produced
+        // an RTT sample.
+        assert!(p.rtt().is_some());
+    }
+
+    #[test]
+    fn deregister_drops_learner_state_via_service() {
+        let ctrl = Controller::new(env(), None).unwrap();
+        ctrl.register_learner("a", "inproc://a", 10);
+        ctrl.register_learner("b", "inproc://b", 10);
+        ctrl.open_round(1, &["a".into(), "b".into()]);
+        ctrl.pacing().observe_failure("a");
+        ctrl.learner_bases.lock().unwrap().insert("a", 1, Arc::new(model(5)));
+        let reply = ctrl.handle(Message::Deregister { learner_id: "a".into() });
+        assert_eq!(reply, Message::Ack { task_id: 0, ok: true });
+        assert_eq!(ctrl.learner_count(), 1);
+        assert!(ctrl.pacing().profile("a").is_none());
+        assert!(ctrl.learner_bases.lock().unwrap().get("a").is_none());
+        // Unknown learner → typed NotFound.
+        match ctrl.handle(Message::Deregister { learner_id: "a".into() }) {
+            Message::Error { code, .. } => assert_eq!(code, ErrorCode::NotFound),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn learner_base_map_is_capped_by_controller() {
+        let ctrl = Controller::new(env(), None).unwrap();
+        ctrl.set_learner_base_cap(2);
+        let mut bases = ctrl.learner_bases.lock().unwrap();
+        for i in 0..6u64 {
+            bases.insert(&format!("l{i}"), i, Arc::new(model(50 + i)));
+        }
+        assert!(bases.distinct_models() <= 2, "{}", bases.distinct_models());
+        // The most recent entries survive.
+        assert!(bases.get("l5").is_some());
+        drop(bases);
+        // Sync-style aliasing: many learners, one model — no eviction.
+        ctrl.set_learner_base_cap(2);
+        let shared = Arc::new(model(9));
+        let mut bases = ctrl.learner_bases.lock().unwrap();
+        for i in 0..10u64 {
+            bases.insert(&format!("l{i}"), 1, Arc::clone(&shared));
+        }
+        assert_eq!(bases.len(), 10);
+        assert_eq!(bases.distinct_models(), 1);
+    }
+
+    #[test]
     fn aggregate_result_is_shared_not_copied() {
         let ctrl = Controller::new(env(), None).unwrap();
         ctrl.ship_model(model(1));
@@ -1577,6 +2403,32 @@ mod tests {
         let (community, _) = ctrl.community().unwrap();
         // Same allocation: the slot and the return value alias one model.
         assert!(Arc::ptr_eq(&new_model, &community));
+    }
+
+    #[test]
+    fn async_replayed_completion_mixes_once() {
+        let e = FederationEnv::builder("async-replay")
+            .learners(2)
+            .model(ModelSpec::mlp(4, 2, 8))
+            .protocol(Protocol::Asynchronous { staleness_alpha: 1.0 })
+            .build();
+        let ctrl = Controller::new(e, None).unwrap();
+        ctrl.ship_model(model(1));
+        let msg = Message::MarkTaskCompleted {
+            task_id: 1,
+            learner_id: "a".into(),
+            model: ModelProto::from_model(&model(2), DType::F32, ByteOrder::Little),
+            meta: TaskMeta { num_samples: 10, ..Default::default() },
+        };
+        assert!(matches!(ctrl.handle(msg.clone()), Message::Ack { ok: true, .. }));
+        assert_eq!(ctrl.async_updates(), 1);
+        let (community, _) = ctrl.community().unwrap();
+        // A retransmit after a lost ack is acked idempotently: no
+        // second mix, no second community update.
+        assert!(matches!(ctrl.handle(msg), Message::Ack { ok: true, .. }));
+        assert_eq!(ctrl.async_updates(), 1);
+        let (after, _) = ctrl.community().unwrap();
+        assert!(Arc::ptr_eq(&community, &after));
     }
 
     #[test]

@@ -1,0 +1,381 @@
+//! Learner pacing subsystem: per-learner performance profiles driving
+//! straggler-aware scheduling.
+//!
+//! The paper makes task dispatching and scheduling a first-class
+//! controller responsibility, and the semi-synchronous protocol it
+//! cites (Stripelis, Thompson & Ambite, 2022b) derives *per-learner*
+//! step budgets from measured throughput so heterogeneous fleets finish
+//! a round at the same wall clock. This module is the measurement half:
+//! a [`PacingRegistry`] accumulates, per learner id, an EWMA of
+//! steps-per-second (from the completion telemetry carried by
+//! `TaskMeta`), an EWMA of task round-trip time, and a
+//! completion/failure history.
+//!
+//! Three consumers:
+//!
+//! * **True semi-sync** — [`PacingRegistry::step_budgets`] computes
+//!   `budget_i = t_target · throughput_i` (with `t_target` anchored so
+//!   the slowest profiled learner keeps the fixed λ-budget), so fast
+//!   and slow learners finish together instead of everyone running the
+//!   same step count.
+//! * **Deadline-quorum rounds** — reliability feeds failure accounting
+//!   (learners that keep missing the quorum deadline decay their
+//!   [`PerfProfile::reliability`]).
+//! * **`Selector::PacingAware`** — [`PacingRegistry::scores`] ranks
+//!   learners by `throughput × reliability` for selection, with the
+//!   selector's freshness floor keeping slow sites in rotation.
+
+use crate::proto::TaskMeta;
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// EWMA smoothing factor for throughput/RTT samples: high enough to
+/// track a machine whose load shifts, low enough to ride out jitter.
+pub const DEFAULT_EWMA_ALPHA: f64 = 0.4;
+
+/// Cap on how far above the fixed fallback budget a paced budget may
+/// go, so one noisy huge throughput sample (e.g. a zero-sleep synthetic
+/// trainer's first task) cannot hand a learner a multi-hour budget.
+pub const MAX_BUDGET_FACTOR: usize = 100;
+
+/// Accumulated performance history for one learner.
+#[derive(Debug, Clone, Default)]
+pub struct PerfProfile {
+    ewma_steps_per_sec: f64,
+    ewma_rtt_us: f64,
+    completions: u64,
+    failures: u64,
+    last_seen_round: u64,
+}
+
+impl PerfProfile {
+    /// Smoothed local-training throughput, if any completion carried a
+    /// usable measurement.
+    pub fn steps_per_sec(&self) -> Option<f64> {
+        (self.ewma_steps_per_sec > 0.0).then_some(self.ewma_steps_per_sec)
+    }
+
+    /// Smoothed dispatch→completion round-trip time.
+    pub fn rtt(&self) -> Option<Duration> {
+        (self.ewma_rtt_us > 0.0).then(|| Duration::from_micros(self.ewma_rtt_us as u64))
+    }
+
+    pub fn completions(&self) -> u64 {
+        self.completions
+    }
+
+    pub fn failures(&self) -> u64 {
+        self.failures
+    }
+
+    /// Community round of the learner's most recent completion.
+    pub fn last_seen_round(&self) -> u64 {
+        self.last_seen_round
+    }
+
+    /// Laplace-smoothed completion rate in (0, 1): a fresh learner
+    /// starts at 0.5 and converges toward its observed rate, so one
+    /// early timeout does not zero a site out forever.
+    pub fn reliability(&self) -> f64 {
+        (self.completions + 1) as f64 / (self.completions + self.failures + 2) as f64
+    }
+
+    /// Selection score: throughput discounted by reliability. Learners
+    /// with no throughput measurement score 0 (the selector's freshness
+    /// floor — not this score — is what gets them scheduled).
+    pub fn score(&self) -> f64 {
+        self.steps_per_sec().unwrap_or(0.0) * self.reliability()
+    }
+}
+
+/// Extract a steps-per-second measurement from completion telemetry:
+/// the explicit `steps_per_sec` field when the peer filled it, else
+/// derived from `completed_steps / train_wall_time_us`, else from the
+/// legacy per-batch time (pre-v5 peers).
+pub fn steps_per_sec_of(meta: &TaskMeta) -> Option<f64> {
+    if meta.steps_per_sec > 0.0 {
+        return Some(meta.steps_per_sec);
+    }
+    if meta.completed_steps > 0 && meta.train_wall_time_us > 0 {
+        return Some(meta.completed_steps as f64 / (meta.train_wall_time_us as f64 / 1e6));
+    }
+    if meta.train_time_per_batch_us > 0 && meta.completed_steps > 0 {
+        return Some(1e6 / meta.train_time_per_batch_us as f64);
+    }
+    None
+}
+
+/// Per-learner profile registry. Lives on the controller next to the
+/// data-plane gauges; every lock here is leaf-level (never held across
+/// a call into `CtrlState`).
+pub struct PacingRegistry {
+    alpha: f64,
+    profiles: Mutex<HashMap<String, PerfProfile>>,
+}
+
+impl Default for PacingRegistry {
+    fn default() -> PacingRegistry {
+        PacingRegistry::new(DEFAULT_EWMA_ALPHA)
+    }
+}
+
+impl PacingRegistry {
+    pub fn new(alpha: f64) -> PacingRegistry {
+        PacingRegistry { alpha: alpha.clamp(0.01, 1.0), profiles: Mutex::new(HashMap::new()) }
+    }
+
+    /// Fold one task completion into the learner's profile.
+    pub fn observe_completion(
+        &self,
+        learner_id: &str,
+        meta: &TaskMeta,
+        rtt: Option<Duration>,
+        round: u64,
+    ) {
+        let sps = steps_per_sec_of(meta);
+        let mut profiles = self.profiles.lock().unwrap();
+        let p = profiles.entry(learner_id.to_string()).or_default();
+        if let Some(sps) = sps {
+            p.ewma_steps_per_sec = if p.ewma_steps_per_sec > 0.0 {
+                self.alpha * sps + (1.0 - self.alpha) * p.ewma_steps_per_sec
+            } else {
+                sps
+            };
+        }
+        if let Some(rtt) = rtt {
+            // Floor at 1µs so an in-proc sub-microsecond sample still
+            // registers as "measured".
+            let us = (rtt.as_micros() as f64).max(1.0);
+            p.ewma_rtt_us = if p.ewma_rtt_us > 0.0 {
+                self.alpha * us + (1.0 - self.alpha) * p.ewma_rtt_us
+            } else {
+                us
+            };
+        }
+        p.completions += 1;
+        p.last_seen_round = p.last_seen_round.max(round);
+    }
+
+    /// Note a task the learner failed to complete (round timeout, missed
+    /// quorum deadline, dispatch failure).
+    pub fn observe_failure(&self, learner_id: &str) {
+        let mut profiles = self.profiles.lock().unwrap();
+        profiles.entry(learner_id.to_string()).or_default().failures += 1;
+    }
+
+    /// Drop a learner's history (deregistration).
+    pub fn remove(&self, learner_id: &str) {
+        self.profiles.lock().unwrap().remove(learner_id);
+    }
+
+    /// Profile snapshot for one learner.
+    pub fn profile(&self, learner_id: &str) -> Option<PerfProfile> {
+        self.profiles.lock().unwrap().get(learner_id).cloned()
+    }
+
+    /// Smoothed throughput for one learner.
+    pub fn throughput(&self, learner_id: &str) -> Option<f64> {
+        self.profiles.lock().unwrap().get(learner_id).and_then(|p| p.steps_per_sec())
+    }
+
+    /// Selection scores for every profiled learner (see
+    /// [`PerfProfile::score`]).
+    pub fn scores(&self) -> HashMap<String, f64> {
+        self.profiles
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(id, p)| (id.clone(), p.score()))
+            .collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.profiles.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.profiles.lock().unwrap().is_empty()
+    }
+
+    /// Per-learner semi-sync step budgets for `ids`.
+    ///
+    /// `fallback_steps` is the fixed λ-scaled budget (`λ ×
+    /// steps-per-epoch`) every learner gets today. The paced budget is
+    /// `budget_i = t_target · throughput_i` with `t_target =
+    /// fallback_steps / min_throughput` — the wall clock the *slowest
+    /// profiled participant* needs for the fixed budget — so the
+    /// slowest learner keeps exactly `fallback_steps` and every faster
+    /// learner trains proportionally more, all finishing together.
+    /// Learners with no profile get `fallback_steps` (the fixed-budget
+    /// fallback for unseen learners); budgets are clamped to
+    /// `[1, fallback_steps × MAX_BUDGET_FACTOR]`.
+    pub fn step_budgets<S: AsRef<str>>(&self, ids: &[S], fallback_steps: usize) -> Vec<usize> {
+        let fallback = fallback_steps.max(1);
+        let profiles = self.profiles.lock().unwrap();
+        let throughputs: Vec<Option<f64>> = ids
+            .iter()
+            .map(|id| profiles.get(id.as_ref()).and_then(|p| p.steps_per_sec()))
+            .collect();
+        let Some(min_tp) = throughputs
+            .iter()
+            .flatten()
+            .copied()
+            .fold(None::<f64>, |acc, t| Some(acc.map_or(t, |a| a.min(t))))
+        else {
+            return vec![fallback; ids.len()];
+        };
+        let t_target = fallback as f64 / min_tp.max(f64::MIN_POSITIVE);
+        let cap = fallback.saturating_mul(MAX_BUDGET_FACTOR);
+        throughputs
+            .into_iter()
+            .map(|tp| match tp {
+                Some(tp) => ((t_target * tp).round() as usize).clamp(1, cap),
+                None => fallback,
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta(steps_per_sec: f64) -> TaskMeta {
+        TaskMeta { steps_per_sec, completed_steps: 10, ..Default::default() }
+    }
+
+    #[test]
+    fn ewma_converges_to_a_constant_signal() {
+        let reg = PacingRegistry::default();
+        for _ in 0..50 {
+            reg.observe_completion("a", &meta(120.0), None, 1);
+        }
+        let tp = reg.throughput("a").unwrap();
+        assert!((tp - 120.0).abs() < 1e-6, "{tp}");
+    }
+
+    #[test]
+    fn ewma_stays_within_sample_envelope() {
+        // Property: for any bounded sample stream, the EWMA never
+        // leaves [min, max] of the samples seen so far.
+        let reg = PacingRegistry::default();
+        let mut rng = crate::util::Rng::new(7);
+        let (mut lo, mut hi) = (f64::INFINITY, 0.0f64);
+        for _ in 0..200 {
+            let s = 10.0 + 990.0 * rng.next_f64();
+            lo = lo.min(s);
+            hi = hi.max(s);
+            reg.observe_completion("a", &meta(s), None, 1);
+            let tp = reg.throughput("a").unwrap();
+            assert!(tp >= lo - 1e-9 && tp <= hi + 1e-9, "{tp} outside [{lo}, {hi}]");
+        }
+    }
+
+    #[test]
+    fn throughput_derives_from_wall_time_when_not_explicit() {
+        let reg = PacingRegistry::default();
+        let m = TaskMeta {
+            completed_steps: 50,
+            train_wall_time_us: 2_000_000, // 50 steps in 2 s = 25/s
+            ..Default::default()
+        };
+        reg.observe_completion("a", &m, None, 1);
+        assert!((reg.throughput("a").unwrap() - 25.0).abs() < 1e-9);
+        // Legacy (pre-v5) peer: only per-batch time.
+        let reg = PacingRegistry::default();
+        let m = TaskMeta {
+            completed_steps: 5,
+            train_time_per_batch_us: 10_000, // 100 steps/s
+            ..Default::default()
+        };
+        reg.observe_completion("b", &m, None, 1);
+        assert!((reg.throughput("b").unwrap() - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reliability_smooths_and_decays_on_failures() {
+        let reg = PacingRegistry::default();
+        reg.observe_completion("a", &meta(10.0), None, 1);
+        let fresh = reg.profile("a").unwrap().reliability();
+        assert!(fresh > 0.5, "{fresh}");
+        for _ in 0..8 {
+            reg.observe_failure("a");
+        }
+        let decayed = reg.profile("a").unwrap().reliability();
+        assert!(decayed < 0.25, "{decayed}");
+        // Never reaches 0 or 1 (Laplace smoothing).
+        assert!(decayed > 0.0);
+        // A failure-only learner still has a profile (and a score of 0:
+        // no throughput measurement yet).
+        reg.observe_failure("ghost");
+        assert_eq!(reg.profile("ghost").unwrap().score(), 0.0);
+    }
+
+    #[test]
+    fn rtt_ewma_accumulates() {
+        let reg = PacingRegistry::default();
+        reg.observe_completion("a", &meta(10.0), Some(Duration::from_millis(40)), 1);
+        reg.observe_completion("a", &meta(10.0), Some(Duration::from_millis(60)), 2);
+        let rtt = reg.profile("a").unwrap().rtt().unwrap();
+        assert!(rtt > Duration::from_millis(40) && rtt < Duration::from_millis(60), "{rtt:?}");
+        assert_eq!(reg.profile("a").unwrap().last_seen_round(), 2);
+    }
+
+    #[test]
+    fn unseen_learners_fall_back_to_the_fixed_budget() {
+        let reg = PacingRegistry::default();
+        let ids = ["a", "b"];
+        assert_eq!(reg.step_budgets(&ids, 10), vec![10, 10]);
+        // One profiled learner: it anchors t_target, unseen stays fixed.
+        reg.observe_completion("a", &meta(100.0), None, 1);
+        assert_eq!(reg.step_budgets(&ids, 10), vec![10, 10]);
+    }
+
+    #[test]
+    fn skewed_fleet_budgets_equalize_wall_clock() {
+        let reg = PacingRegistry::default();
+        // 10× throughput skew.
+        for _ in 0..5 {
+            reg.observe_completion("slow", &meta(20.0), None, 1);
+            reg.observe_completion("mid", &meta(50.0), None, 1);
+            reg.observe_completion("fast", &meta(200.0), None, 1);
+        }
+        let ids = ["slow", "mid", "fast"];
+        let budgets = reg.step_budgets(&ids, 10);
+        // Slowest keeps the fixed budget; faster learners scale up.
+        assert_eq!(budgets[0], 10);
+        assert_eq!(budgets[1], 25);
+        assert_eq!(budgets[2], 100);
+        // Equal modeled wall clock: budget_i / throughput_i ≈ t_target.
+        let t: Vec<f64> = budgets
+            .iter()
+            .zip([20.0, 50.0, 200.0])
+            .map(|(b, tp)| *b as f64 / tp)
+            .collect();
+        for w in &t {
+            assert!((w - t[0]).abs() / t[0] < 0.1, "wall clocks diverge: {t:?}");
+        }
+    }
+
+    #[test]
+    fn budgets_are_capped_and_floored() {
+        let reg = PacingRegistry::default();
+        reg.observe_completion("slow", &meta(0.001), None, 1);
+        reg.observe_completion("fast", &meta(1e9), None, 1);
+        let budgets = reg.step_budgets(&["slow", "fast"], 10);
+        assert_eq!(budgets[0], 10);
+        assert_eq!(budgets[1], 10 * MAX_BUDGET_FACTOR);
+        assert!(budgets.iter().all(|b| *b >= 1));
+    }
+
+    #[test]
+    fn remove_forgets_a_learner() {
+        let reg = PacingRegistry::default();
+        reg.observe_completion("a", &meta(10.0), None, 1);
+        assert_eq!(reg.len(), 1);
+        reg.remove("a");
+        assert!(reg.is_empty());
+        assert!(reg.throughput("a").is_none());
+    }
+}

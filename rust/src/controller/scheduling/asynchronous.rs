@@ -65,6 +65,7 @@ pub fn run_async_session(
                 StreamPurpose::RunTask,
                 dispatched_round,
                 &spec,
+                None,
                 &community,
                 cround,
             )
@@ -184,6 +185,7 @@ pub fn run_async_session(
                 eval_dispatch: Duration::ZERO,
                 eval_round: Duration::ZERO,
                 federation_round: elapsed,
+                completion_spread: Duration::ZERO,
             });
             ctrl.record(FedOp::FederationRound, elapsed);
         }

@@ -4,9 +4,18 @@
 //! learner trains for a *step budget* proportional to the hyperparameter
 //! `λ` and then synchronizes. Fast and slow learners thus finish at
 //! roughly the same wall-clock time, removing the straggler tail that
-//! plain synchronous FedAvg pays every round. The controller-side flow
-//! is otherwise identical to the synchronous scheduler, so the round
-//! reuses [`super::sync::run_round_with_budget`].
+//! plain synchronous FedAvg pays every round.
+//!
+//! The protocol is **pacing-aware**: the fixed `λ × steps-per-epoch`
+//! budget is only the fallback for learners the controller has never
+//! measured. Once the pacing registry holds throughput profiles, each
+//! learner `i` receives `budget_i = λ · t_target · throughput_i`
+//! (t_target anchored so the slowest profiled learner keeps the fixed
+//! budget — see [`crate::controller::pacing::PacingRegistry::step_budgets`]),
+//! which is what actually equalizes round wall clock on a
+//! heterogeneous fleet. The controller-side flow is otherwise identical
+//! to the synchronous scheduler, so the round reuses
+//! [`super::sync::run_round_with_budget`].
 
 use super::super::Controller;
 use crate::metrics::RoundReport;
@@ -27,7 +36,7 @@ pub fn run_semi_sync_round(
     rng: &mut Rng,
 ) -> Result<RoundReport> {
     let budget = budget_for(ctrl, lambda);
-    super::sync::run_round_with_budget(ctrl, round, budget, rng)
+    super::sync::run_round_with_budget(ctrl, round, budget, true, rng)
 }
 
 #[cfg(test)]

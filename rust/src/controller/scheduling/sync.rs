@@ -14,15 +14,19 @@ use anyhow::{bail, Result};
 use std::time::Duration;
 
 pub fn run_sync_round(ctrl: &Controller, round: u64, rng: &mut Rng) -> Result<RoundReport> {
-    run_round_with_budget(ctrl, round, 0, rng)
+    run_round_with_budget(ctrl, round, 0, false, rng)
 }
 
 /// Shared implementation: `step_budget == 0` → plain sync (train by
-/// epochs); `> 0` → semi-sync (train by step budget).
+/// epochs); `> 0` → semi-sync (train by step budget). With `paced` set,
+/// the fixed budget becomes the *fallback* and each learner receives
+/// its own budget from the pacing profiles (`λ·t_target·throughput_i`),
+/// so a heterogeneous fleet finishes the round at the same wall clock.
 pub(crate) fn run_round_with_budget(
     ctrl: &Controller,
     round: u64,
     step_budget: usize,
+    paced: bool,
     rng: &mut Rng,
 ) -> Result<RoundReport> {
     let round_sw = Stopwatch::start();
@@ -45,6 +49,20 @@ pub(crate) fn run_round_with_budget(
         learning_rate: ctrl.env.learning_rate,
         step_budget,
     };
+    // Per-learner pacing budgets: profiled learners get
+    // `t_target × throughput_i` (the slowest profiled learner anchors
+    // t_target at the fixed budget), unseen learners keep the fixed
+    // fallback. When nobody differs from the fallback (e.g. round 1,
+    // no profiles yet) the round keeps the shared encode-once frame.
+    let budgets: Option<Vec<usize>> = (paced && step_budget > 0)
+        .then(|| ctrl.pacing().step_budgets(&ids, step_budget))
+        .filter(|b| b.iter().any(|x| *x != step_budget));
+    if let Some(b) = &budgets {
+        log_debug(
+            "scheduler",
+            &format!("round {round}: paced step budgets {:?}", b),
+        );
+    }
     let train_sw = Stopwatch::start();
     let (dispatch_time, acks) = if streamed {
         // Symmetric data plane: the community model fans out as one
@@ -55,9 +73,26 @@ pub(crate) fn run_round_with_budget(
             StreamPurpose::RunTask,
             round,
             &spec,
+            budgets.as_deref(),
             &community,
             community_round,
         )
+    } else if let Some(budgets) = &budgets {
+        // Pacing-aware one-shot: every learner gets its own step
+        // budget, but the model bytes are still serialized ONCE and
+        // shared as the frame prefix (spec is the trailing wire field
+        // of RunTask); full frames materialize per send inside the
+        // dispatch pool.
+        let ser_sw = Stopwatch::start();
+        let model_proto = ModelProto::from_model(&community, DType::F32, ByteOrder::Little);
+        let specs: Vec<TaskSpec> = budgets
+            .iter()
+            .map(|b| TaskSpec { step_budget: *b, ..spec.clone() })
+            .collect();
+        let (prefix, suffixes) =
+            Message::encode_run_task_parts(round, round, &model_proto, &specs);
+        ctrl.record(FedOp::Serialization, ser_sw.elapsed());
+        ctrl.broadcast_prefixed(&participants, &prefix, &suffixes)
     } else {
         // One-shot: serialize the community model once per round
         // (tensor-as-bytes, §3) and fan the same frame out.
@@ -88,17 +123,32 @@ pub(crate) fn run_round_with_budget(
     }
 
     // --- Training round barrier (T1–T4) -------------------------------
-    let arrived =
-        ctrl.wait_round_completions(Duration::from_millis(ctrl.env.task_timeout_ms));
+    // Classic rounds (quorum_fraction = 1) wait for everyone or the
+    // timeout; deadline-quorum rounds aggregate as soon as the quorum
+    // completed, reweighting by the actual participants — completions
+    // that miss the cut fold through the async staleness path instead
+    // of being dropped (see Controller::complete_task).
+    let outcome = ctrl.wait_round_quorum(
+        Duration::from_millis(ctrl.env.task_timeout_ms),
+        ctrl.env.quorum_fraction,
+    );
+    let arrived = outcome.arrived;
     let train_round_time = train_sw.elapsed();
     ctrl.record(FedOp::TrainRound, train_round_time);
+    // Learners that were expected but missed the round feed the pacing
+    // failure history (reliability decay → PacingAware deprioritizes
+    // them).
+    for id in &outcome.missing {
+        ctrl.pacing().observe_failure(id);
+    }
     if arrived.len() < dispatched {
         log_warn(
             "scheduler",
             &format!(
-                "round {round}: {}/{} learners completed before timeout",
+                "round {round}: {}/{} learners completed before {}",
                 arrived.len(),
-                dispatched
+                dispatched,
+                if ctrl.env.quorum_fraction < 1.0 { "the quorum cut" } else { "timeout" }
             ),
         );
     }
@@ -127,6 +177,7 @@ pub(crate) fn run_round_with_budget(
             StreamPurpose::Evaluate,
             round,
             &TaskSpec::default(),
+            None,
             &new_model,
             round,
         )
@@ -171,5 +222,6 @@ pub(crate) fn run_round_with_budget(
         eval_dispatch,
         eval_round: eval_round_time,
         federation_round,
+        completion_spread: outcome.completion_spread,
     })
 }

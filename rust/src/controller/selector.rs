@@ -2,12 +2,35 @@
 //!
 //! The paper's stress tests run with all learners participating every
 //! round ([`Selector::All`]); [`Selector::RandomFraction`] implements the
-//! standard client-sampling used in cross-device settings, and
+//! standard client-sampling used in cross-device settings,
 //! [`Selector::FreshnessAware`] prefers learners whose last contribution
-//! is oldest (useful under the async protocol to balance staleness).
+//! is oldest (useful under the async protocol to balance staleness), and
+//! [`Selector::PacingAware`] biases selection by the pacing subsystem's
+//! per-learner profiles (fast/reliable learners first) while a freshness
+//! floor guarantees slow sites still contribute.
 
 use crate::util::Rng;
 use std::collections::HashMap;
+
+/// Inputs a selection decision may consult, assembled by the controller
+/// from its round bookkeeping and the pacing registry.
+pub struct SelectionCtx<'a> {
+    /// Learner id → last round it participated (missing = never).
+    pub last_round: &'a HashMap<String, u64>,
+    /// Learner id → pacing score (`throughput × reliability`; missing =
+    /// no profile yet).
+    pub scores: &'a HashMap<String, f64>,
+    /// The round being selected for.
+    pub round: u64,
+}
+
+impl<'a> SelectionCtx<'a> {
+    /// Freshness sort key: `None` (never participated) orders before
+    /// every `Some(round)` — fresh learners always sort first.
+    fn freshness_key(&self, id: &str) -> Option<u64> {
+        self.last_round.get(id).copied()
+    }
+}
 
 /// Selection policy.
 #[derive(Debug, Clone)]
@@ -16,19 +39,24 @@ pub enum Selector {
     All,
     /// A uniform random fraction in (0, 1], at least one learner.
     RandomFraction(f64),
-    /// The `k` learners with the oldest last-participation round.
+    /// The `k` learners with the oldest last-participation round
+    /// (never-participated learners first).
     FreshnessAware { k: usize },
+    /// The `k` best learners by pacing score, with a freshness floor:
+    /// learners idle for at least `freshness_rounds` rounds (or never
+    /// scheduled) are force-included ahead of the score ranking.
+    PacingAware { k: usize, freshness_rounds: u64 },
 }
 
 impl Selector {
-    /// Choose participant indices out of `learner_ids`.
+    /// Choose participant ids out of `learner_ids`.
     ///
-    /// `last_round` maps learner id → last round it contributed (missing =
-    /// never). `rng` drives the random policy deterministically.
+    /// `ctx` carries participation history and pacing scores; `rng`
+    /// drives the random policy deterministically.
     pub fn select(
         &self,
         learner_ids: &[String],
-        last_round: &HashMap<String, u64>,
+        ctx: &SelectionCtx<'_>,
         rng: &mut Rng,
     ) -> Vec<String> {
         match self {
@@ -43,12 +71,48 @@ impl Selector {
             }
             Selector::FreshnessAware { k } => {
                 let k = (*k).clamp(1, learner_ids.len());
-                let mut scored: Vec<(u64, &String)> = learner_ids
-                    .iter()
-                    .map(|id| (last_round.get(id).copied().unwrap_or(0), id))
-                    .collect();
+                // `Option` ordering (None < Some) distinguishes "never
+                // participated" from "participated at round 0".
+                let mut scored: Vec<(Option<u64>, &String)> =
+                    learner_ids.iter().map(|id| (ctx.freshness_key(id), id)).collect();
                 scored.sort_by(|a, b| a.0.cmp(&b.0).then_with(|| a.1.cmp(b.1)));
                 scored.into_iter().take(k).map(|(_, id)| id.clone()).collect()
+            }
+            Selector::PacingAware { k, freshness_rounds } => {
+                let k = (*k).clamp(1, learner_ids.len());
+                let stale = |id: &String| match ctx.freshness_key(id) {
+                    None => true,
+                    Some(last) => ctx.round.saturating_sub(last) >= *freshness_rounds,
+                };
+                // Freshness floor first: stale learners, oldest first,
+                // fill slots before any score ranking — a 10×-slow site
+                // still contributes every `freshness_rounds` rounds.
+                let mut forced: Vec<(Option<u64>, &String)> = learner_ids
+                    .iter()
+                    .filter(|id| stale(id))
+                    .map(|id| (ctx.freshness_key(id), id))
+                    .collect();
+                forced.sort_by(|a, b| a.0.cmp(&b.0).then_with(|| a.1.cmp(b.1)));
+                let mut chosen: Vec<String> =
+                    forced.into_iter().take(k).map(|(_, id)| id.clone()).collect();
+                if chosen.len() < k {
+                    // Remaining slots go to the fastest/most reliable
+                    // profiled learners (unprofiled ids score 0 and are
+                    // deterministically last, by id).
+                    let mut rest: Vec<(f64, &String)> = learner_ids
+                        .iter()
+                        .filter(|id| !chosen.iter().any(|c| c == *id))
+                        .map(|id| (ctx.scores.get(id).copied().unwrap_or(0.0), id))
+                        .collect();
+                    rest.sort_by(|a, b| {
+                        b.0.partial_cmp(&a.0)
+                            .unwrap_or(std::cmp::Ordering::Equal)
+                            .then_with(|| a.1.cmp(b.1))
+                    });
+                    let need = k - chosen.len();
+                    chosen.extend(rest.into_iter().take(need).map(|(_, id)| id.clone()));
+                }
+                chosen
             }
         }
     }
@@ -71,32 +135,44 @@ mod tests {
         (0..n).map(|i| format!("l{i}")).collect()
     }
 
+    fn ctx<'a>(
+        last: &'a HashMap<String, u64>,
+        scores: &'a HashMap<String, f64>,
+        round: u64,
+    ) -> SelectionCtx<'a> {
+        SelectionCtx { last_round: last, scores, round }
+    }
+
+    fn empty_select(sel: &Selector, l: &[String], seed: u64) -> Vec<String> {
+        let (last, scores) = (HashMap::new(), HashMap::new());
+        sel.select(l, &ctx(&last, &scores, 1), &mut Rng::new(seed))
+    }
+
     #[test]
     fn all_selects_everyone_in_order() {
         let l = ids(5);
-        let sel = Selector::All.select(&l, &HashMap::new(), &mut Rng::new(0));
-        assert_eq!(sel, l);
+        assert_eq!(empty_select(&Selector::All, &l, 0), l);
     }
 
     #[test]
     fn fraction_selects_expected_count_distinct() {
         let l = ids(10);
-        let sel = Selector::RandomFraction(0.3).select(&l, &HashMap::new(), &mut Rng::new(1));
+        let sel = empty_select(&Selector::RandomFraction(0.3), &l, 1);
         assert_eq!(sel.len(), 3);
         let mut d = sel.clone();
         d.sort();
         d.dedup();
         assert_eq!(d.len(), 3);
         // At least one learner even for tiny fractions.
-        let sel = Selector::RandomFraction(0.01).select(&l, &HashMap::new(), &mut Rng::new(2));
+        let sel = empty_select(&Selector::RandomFraction(0.01), &l, 2);
         assert_eq!(sel.len(), 1);
     }
 
     #[test]
     fn fraction_is_deterministic_per_seed() {
         let l = ids(20);
-        let a = Selector::RandomFraction(0.5).select(&l, &HashMap::new(), &mut Rng::new(9));
-        let b = Selector::RandomFraction(0.5).select(&l, &HashMap::new(), &mut Rng::new(9));
+        let a = empty_select(&Selector::RandomFraction(0.5), &l, 9);
+        let b = empty_select(&Selector::RandomFraction(0.5), &l, 9);
         assert_eq!(a, b);
     }
 
@@ -107,9 +183,91 @@ mod tests {
         last.insert("l0".to_string(), 10u64);
         last.insert("l1".to_string(), 2);
         last.insert("l2".to_string(), 7);
-        // l3 never participated → round 0 → first choice.
-        let sel = Selector::FreshnessAware { k: 2 }.select(&l, &last, &mut Rng::new(0));
+        // l3 never participated → first choice.
+        let scores = HashMap::new();
+        let sel = Selector::FreshnessAware { k: 2 }.select(
+            &l,
+            &ctx(&last, &scores, 11),
+            &mut Rng::new(0),
+        );
         assert_eq!(sel, vec!["l3".to_string(), "l1".to_string()]);
+    }
+
+    #[test]
+    fn freshness_distinguishes_never_from_round_zero() {
+        // "a" participated at round 0; "b" never did. The old
+        // `unwrap_or(0)` conflated the two and picked "a" on the id
+        // tiebreak — Option ordering must pick "b".
+        let l = vec!["a".to_string(), "b".to_string()];
+        let mut last = HashMap::new();
+        last.insert("a".to_string(), 0u64);
+        let scores = HashMap::new();
+        let sel = Selector::FreshnessAware { k: 1 }.select(
+            &l,
+            &ctx(&last, &scores, 1),
+            &mut Rng::new(0),
+        );
+        assert_eq!(sel, vec!["b".to_string()]);
+    }
+
+    #[test]
+    fn pacing_ranks_by_score() {
+        let l = ids(4);
+        let mut last = HashMap::new();
+        let mut scores = HashMap::new();
+        for (i, id) in l.iter().enumerate() {
+            last.insert(id.clone(), 5); // everyone fresh
+            scores.insert(id.clone(), i as f64);
+        }
+        let sel = Selector::PacingAware { k: 2, freshness_rounds: 10 }.select(
+            &l,
+            &ctx(&last, &scores, 6),
+            &mut Rng::new(0),
+        );
+        // Highest scores win when nobody is stale.
+        assert_eq!(sel, vec!["l3".to_string(), "l2".to_string()]);
+    }
+
+    #[test]
+    fn pacing_freshness_floor_forces_stale_learners_in() {
+        let l = ids(4);
+        let mut last = HashMap::new();
+        let mut scores = HashMap::new();
+        // l0 is the fastest but l1 has been idle for 6 rounds and l3
+        // has never participated: both pre-empt the score ranking.
+        last.insert("l0".to_string(), 9u64);
+        last.insert("l1".to_string(), 4);
+        last.insert("l2".to_string(), 9);
+        scores.insert("l0".to_string(), 100.0);
+        scores.insert("l1".to_string(), 1.0);
+        scores.insert("l2".to_string(), 50.0);
+        let sel = Selector::PacingAware { k: 3, freshness_rounds: 5 }.select(
+            &l,
+            &ctx(&last, &scores, 10),
+            &mut Rng::new(0),
+        );
+        // Stale first (never-participated l3, then oldest l1), then the
+        // best score (l0).
+        assert_eq!(sel, vec!["l3".to_string(), "l1".to_string(), "l0".to_string()]);
+    }
+
+    #[test]
+    fn pacing_unprofiled_learners_are_stale_and_included() {
+        // A brand-new learner has no last_round and no score: the
+        // freshness floor (not the 0 score) is what schedules it.
+        let l = ids(3);
+        let mut last = HashMap::new();
+        let mut scores = HashMap::new();
+        last.insert("l0".to_string(), 5u64);
+        last.insert("l1".to_string(), 5);
+        scores.insert("l0".to_string(), 10.0);
+        scores.insert("l1".to_string(), 20.0);
+        let sel = Selector::PacingAware { k: 1, freshness_rounds: 4 }.select(
+            &l,
+            &ctx(&last, &scores, 6),
+            &mut Rng::new(0),
+        );
+        assert_eq!(sel, vec!["l2".to_string()]);
     }
 
     #[test]

@@ -69,6 +69,13 @@ impl OnDiskStore {
         let proto = ModelProto::from_model(&entry.model, DType::F32, ByteOrder::Little);
         let model_bytes = crate::proto::Message::ShipModel { model: proto }.encode();
         w.put_bytes(&model_bytes);
+        // v5 telemetry tail AFTER the model payload, mirroring the wire
+        // codec's tolerance trick: files written before these fields
+        // existed simply end at `model_bytes` (read as zeros), and
+        // older binaries reading new files ignore the trailing bytes —
+        // restart survival holds in both directions.
+        w.put_f64(entry.meta.steps_per_sec);
+        w.put_varint(entry.meta.train_wall_time_us);
         let bytes = w.into_bytes();
         let path = self.path_for(&entry.learner_id, entry.round);
         std::fs::create_dir_all(path.parent().unwrap())?;
@@ -82,18 +89,24 @@ impl OnDiskStore {
         let mut r = WireReader::new(&bytes);
         let learner_id = r.get_str()?;
         let round = r.get_varint()?;
-        let meta = TaskMeta {
+        let mut meta = TaskMeta {
             train_time_per_batch_us: r.get_varint()?,
             completed_steps: r.get_varint()? as usize,
             completed_epochs: r.get_varint()? as usize,
             num_samples: r.get_varint()? as usize,
             train_loss: r.get_f64()?,
+            ..Default::default()
         };
         let model_bytes = r.get_bytes()?;
         let model = match crate::proto::Message::decode(model_bytes)? {
             crate::proto::Message::ShipModel { model } => model.to_model()?,
             other => anyhow::bail!("unexpected stored message {}", other.kind()),
         };
+        // Telemetry tail (absent in files written before v5).
+        if !r.is_done() {
+            meta.steps_per_sec = r.get_f64()?;
+            meta.train_wall_time_us = r.get_varint()?;
+        }
         Ok(StoredModel { learner_id, round, meta, model: std::sync::Arc::new(model) })
     }
 }

@@ -61,22 +61,31 @@ fn next_run_id() -> u64 {
     RUN.fetch_add(1, Ordering::SeqCst)
 }
 
-/// Build the per-learner trainer from the env.
-fn trainer_for(env: &FederationEnv) -> Result<Arc<dyn Trainer>> {
-    Ok(match &env.trainer {
-        TrainerKind::Synthetic { step_time_us } => {
-            Arc::new(SyntheticTrainer::new(*step_time_us, 0.01))
-        }
+/// Build one trainer per learner index from the env. Synthetic fleets
+/// honor the heterogeneity profile: learner `i` runs at `step_time_us ×
+/// speed_factors[i % len]` with the configured jitter/dropout, each
+/// instance seeded independently (and deterministically) from the env
+/// seed.
+fn trainers_for(env: &FederationEnv) -> Result<Vec<Arc<dyn Trainer>>> {
+    match &env.trainer {
+        TrainerKind::Synthetic { step_time_us, hetero } => Ok((0..env.learners)
+            .map(|i| {
+                Arc::new(SyntheticTrainer::for_fleet(*step_time_us, hetero, env.seed, i))
+                    as Arc<dyn Trainer>
+            })
+            .collect()),
         TrainerKind::Xla { artifacts_dir } => {
-            Arc::new(crate::runtime::XlaTrainer::load(artifacts_dir, &env.model)?)
+            let t: Arc<dyn Trainer> =
+                Arc::new(crate::runtime::XlaTrainer::load(artifacts_dir, &env.model)?);
+            Ok((0..env.learners).map(|_| Arc::clone(&t)).collect())
         }
-    })
+    }
 }
 
 /// Run a simulated (in-process) federation with the env's trainer.
 pub fn run_simulated(env: &FederationEnv) -> Result<FederationReport> {
-    let trainer = trainer_for(env)?;
-    run_with_trainer(env, |_idx| Arc::clone(&trainer))
+    let trainers = trainers_for(env)?;
+    run_with_trainer(env, |idx| Arc::clone(&trainers[idx]))
 }
 
 /// Run a distributed (localhost TCP) federation with the env's trainer.
@@ -85,8 +94,8 @@ pub fn run_distributed(env: &FederationEnv) -> Result<FederationReport> {
     if !matches!(env.transport, TransportKind::Tcp { .. }) {
         env.transport = TransportKind::Tcp { base_port: 0 };
     }
-    let trainer = trainer_for(&env)?;
-    run_with_trainer(&env, |_idx| Arc::clone(&trainer))
+    let trainers = trainers_for(&env)?;
+    run_with_trainer(&env, |idx| Arc::clone(&trainers[idx]))
 }
 
 /// Core driver: run a federation with a caller-supplied trainer factory

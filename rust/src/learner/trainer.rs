@@ -31,18 +31,71 @@ pub trait Trainer: Send + Sync {
     fn name(&self) -> &'static str;
 }
 
-/// Stress-test trainer with modeled compute time.
+/// Stress-test trainer with modeled compute time. A per-learner
+/// profile (speed multiplier folded into `step_time_us`, jitter,
+/// dropout) turns a uniform fleet into the heterogeneous, flaky
+/// deployments the pacing subsystem schedules around.
 pub struct SyntheticTrainer {
     /// Modeled per-step compute time in microseconds (0 = no sleep).
     pub step_time_us: u64,
     /// Update magnitude relative to parameter scale.
     pub update_scale: f32,
+    /// Uniform ± fraction applied to each task's modeled compute time.
+    jitter_frac: f64,
+    /// Probability a training task fails outright (no completion
+    /// callback reaches the controller — the timeout/quorum path
+    /// handles it).
+    dropout: f64,
+    /// Differentiates per-learner trainer instances so their updates
+    /// (and jitter/dropout draws) are independent yet deterministic.
+    seed: u64,
     invocation: AtomicU64,
 }
 
 impl SyntheticTrainer {
     pub fn new(step_time_us: u64, update_scale: f32) -> SyntheticTrainer {
-        SyntheticTrainer { step_time_us, update_scale, invocation: AtomicU64::new(0) }
+        SyntheticTrainer::with_profile(step_time_us, update_scale, 0.0, 0.0, 0)
+    }
+
+    /// Per-learner trainer for a (possibly heterogeneous) synthetic
+    /// fleet: learner `index` runs at `step_time_us × factor(index)`
+    /// with the fleet's jitter/dropout, seeded deterministically from
+    /// the env seed + index. Single source of truth shared by the
+    /// in-process driver and the standalone `metisfl learner` process,
+    /// so both deployment modes model bit-identical fleets.
+    pub fn for_fleet(
+        step_time_us: u64,
+        hetero: &crate::config::HeteroFleetSpec,
+        env_seed: u64,
+        index: usize,
+    ) -> SyntheticTrainer {
+        let step = (step_time_us as f64 * hetero.factor(index)).round() as u64;
+        SyntheticTrainer::with_profile(
+            step,
+            0.01,
+            hetero.jitter_frac,
+            hetero.dropout,
+            env_seed ^ ((index as u64) << 32) ^ index as u64,
+        )
+    }
+
+    /// Trainer with a heterogeneity profile (see
+    /// [`crate::config::HeteroFleetSpec`]).
+    pub fn with_profile(
+        step_time_us: u64,
+        update_scale: f32,
+        jitter_frac: f64,
+        dropout: f64,
+        seed: u64,
+    ) -> SyntheticTrainer {
+        SyntheticTrainer {
+            step_time_us,
+            update_scale,
+            jitter_frac,
+            dropout,
+            seed,
+            invocation: AtomicU64::new(0),
+        }
     }
 
     fn steps_for(&self, data: &Dataset, spec: &TaskSpec) -> usize {
@@ -68,7 +121,15 @@ impl Trainer for SyntheticTrainer {
         // Deterministic, parameter-shaped pseudo-update: the workload a
         // learner would ship, without the FLOPs. Touch every parameter so
         // memory traffic is realistic.
-        let mut rng = Rng::new(0x7EA4 ^ invocation.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Rng::new(
+            0x7EA4 ^ self.seed.rotate_left(17) ^ invocation.wrapping_mul(0x9E3779B97F4A7C15),
+        );
+        // Dropout draw comes first (and only when configured, so the
+        // default profile's update stream is unchanged): a dropped task
+        // produces no completion callback at all.
+        if self.dropout > 0.0 && rng.gen_bool(self.dropout) {
+            anyhow::bail!("synthetic dropout (invocation {invocation})");
+        }
         let mut out = model.clone();
         for t in &mut out.tensors {
             for v in t.data.iter_mut() {
@@ -76,9 +137,12 @@ impl Trainer for SyntheticTrainer {
             }
         }
         if self.step_time_us > 0 {
-            std::thread::sleep(std::time::Duration::from_micros(
-                self.step_time_us * steps as u64,
-            ));
+            let mut sleep_us = self.step_time_us.saturating_mul(steps as u64);
+            if self.jitter_frac > 0.0 {
+                let j = 1.0 + self.jitter_frac * (2.0 * rng.next_f64() - 1.0);
+                sleep_us = (sleep_us as f64 * j.max(0.0)) as u64;
+            }
+            std::thread::sleep(std::time::Duration::from_micros(sleep_us));
         }
         let elapsed = sw.elapsed();
         let meta = TaskMeta {
@@ -87,6 +151,8 @@ impl Trainer for SyntheticTrainer {
             completed_epochs: spec.epochs.max(1),
             num_samples: data.train_len(),
             train_loss: 1.0 / (1.0 + invocation as f64).sqrt(), // plausibly decreasing
+            steps_per_sec: steps as f64 / elapsed.as_secs_f64().max(1e-9),
+            train_wall_time_us: (elapsed.as_micros() as u64).max(1),
         };
         Ok((out, meta))
     }
@@ -241,6 +307,8 @@ impl Trainer for RustSgdTrainer {
             completed_epochs: spec.epochs.max(1),
             num_samples: data.train_len(),
             train_loss: last_loss,
+            steps_per_sec: steps.max(1) as f64 / elapsed.as_secs_f64().max(1e-9),
+            train_wall_time_us: (elapsed.as_micros() as u64).max(1),
         };
         Ok((m, meta))
     }
@@ -288,6 +356,51 @@ mod tests {
         for (a, b) in out.tensors.iter().zip(&model.tensors) {
             assert_ne!(a.data, b.data, "tensor {} unchanged", a.name);
         }
+    }
+
+    #[test]
+    fn synthetic_trainer_reports_throughput_telemetry() {
+        let (model, data) = setup();
+        let t = SyntheticTrainer::new(0, 0.1);
+        let (_, meta) = t.train(&model, &data, &spec()).unwrap();
+        assert!(meta.steps_per_sec > 0.0);
+        assert!(meta.train_wall_time_us >= 1);
+        // Telemetry is self-consistent within rounding.
+        let derived = meta.completed_steps as f64 / (meta.train_wall_time_us as f64 / 1e6);
+        assert!(
+            (derived - meta.steps_per_sec).abs() / meta.steps_per_sec < 0.5,
+            "{derived} vs {}",
+            meta.steps_per_sec
+        );
+    }
+
+    #[test]
+    fn dropout_profile_fails_tasks_deterministically() {
+        let (model, data) = setup();
+        // dropout = 1 − ε fails essentially every task; two trainers
+        // with the same seed behave identically.
+        let a = SyntheticTrainer::with_profile(0, 0.1, 0.0, 0.99, 7);
+        let b = SyntheticTrainer::with_profile(0, 0.1, 0.0, 0.99, 7);
+        let ra: Vec<bool> = (0..20).map(|_| a.train(&model, &data, &spec()).is_ok()).collect();
+        let rb: Vec<bool> = (0..20).map(|_| b.train(&model, &data, &spec()).is_ok()).collect();
+        assert_eq!(ra, rb);
+        assert!(ra.iter().filter(|ok| !**ok).count() >= 15, "{ra:?}");
+        // dropout = 0 never fails.
+        let c = SyntheticTrainer::with_profile(0, 0.1, 0.0, 0.0, 7);
+        assert!((0..20).all(|_| c.train(&model, &data, &spec()).is_ok()));
+    }
+
+    #[test]
+    fn default_profile_matches_new() {
+        // `new` and `with_profile(.., 0, 0, 0)` must produce identical
+        // update streams (jitter/dropout draws only happen when
+        // configured).
+        let (model, data) = setup();
+        let a = SyntheticTrainer::new(0, 0.1);
+        let b = SyntheticTrainer::with_profile(0, 0.1, 0.0, 0.0, 0);
+        let (ma, _) = a.train(&model, &data, &spec()).unwrap();
+        let (mb, _) = b.train(&model, &data, &spec()).unwrap();
+        assert_eq!(ma, mb);
     }
 
     #[test]

@@ -130,9 +130,9 @@ fn cmd_learner(raw: &[String]) -> anyhow::Result<()> {
         env.seed ^ ((index as u64) << 8),
     );
     let trainer: Arc<dyn metisfl::learner::Trainer> = match &env.trainer {
-        TrainerKind::Synthetic { step_time_us } => {
-            Arc::new(metisfl::learner::SyntheticTrainer::new(*step_time_us, 0.01))
-        }
+        TrainerKind::Synthetic { step_time_us, hetero } => Arc::new(
+            metisfl::learner::SyntheticTrainer::for_fleet(*step_time_us, hetero, env.seed, index),
+        ),
         TrainerKind::Xla { artifacts_dir } => {
             Arc::new(metisfl::runtime::XlaTrainer::load(artifacts_dir, &env.model)?)
         }
@@ -235,6 +235,10 @@ const GATED_METRICS: &[(&str, &str, bool)] = &[
     ("codec_ablation", "enc+dec MB/s", false),
     ("agg_ablation_axpy", "GB/s (best)", false),
     ("codec_ablation_wire", "wire frac of f32", true),
+    // Straggler-spread ratio vs fixed-budget sync on the 10×-skew
+    // fleet: lower is better; a ratio drifting toward 1.0 means the
+    // pacing/quorum machinery stopped absorbing stragglers.
+    ("sched_ablation", "spread frac of sync", true),
 ];
 
 /// Is the named metric lower-is-better? (Direction travels with the

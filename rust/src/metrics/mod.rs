@@ -168,6 +168,10 @@ pub struct RoundReport {
     pub eval_dispatch: Duration,
     pub eval_round: Duration,
     pub federation_round: Duration,
+    /// Wall clock between the round's first and last counted training
+    /// completion — the straggler spread pacing-aware semi-sync
+    /// shrinks (ZERO for async reports, which have no round barrier).
+    pub completion_spread: Duration,
 }
 
 impl RoundReport {

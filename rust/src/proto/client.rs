@@ -203,6 +203,14 @@ pub fn register(
     }
 }
 
+/// Graceful departure: drop the learner's registration and every
+/// per-learner map the controller keeps (pacing profile, pinned delta
+/// base, participation history).
+pub fn deregister(conn: &mut dyn ClientConn, learner_id: &str) -> RpcResult<()> {
+    expect_ack(rpc(conn, &Message::Deregister { learner_id: learner_id.to_string() })?)?;
+    Ok(())
+}
+
 /// One-shot completion callback (small models / compatibility path).
 pub fn mark_task_completed(
     conn: &mut dyn ClientConn,
@@ -462,6 +470,11 @@ impl ControllerClient {
         num_samples: usize,
     ) -> RpcResult<usize> {
         register(self.conn.as_mut(), learner_id, endpoint, num_samples)
+    }
+
+    /// Graceful learner departure.
+    pub fn deregister(&mut self, learner_id: &str) -> RpcResult<()> {
+        deregister(self.conn.as_mut(), learner_id)
     }
 
     /// One-shot community-model initialization.

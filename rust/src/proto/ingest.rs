@@ -8,10 +8,13 @@
 //! materializes a whole-model wire buffer, and receive overlaps decode.
 //! Framed codecs (delta-rle) go one stage further: the connection
 //! handler validates + digests a chunk and acks immediately, while a
-//! deferred-decode worker decompresses it — decode of chunk N overlaps
-//! chunk N+1's encode and wire transfer (the receive half of the
-//! data plane's double-buffered pipeline). Decode failures surface as
-//! typed `StreamProtocol` errors on the next chunk or at `End`.
+//! small deferred-decode worker pool decompresses it — decode of chunk
+//! N overlaps chunk N+1's encode and wire transfer (the receive half
+//! of the data plane's double-buffered pipeline). Streams are hashed
+//! to workers (per-stream FIFO queues), so concurrent framed uploads
+//! decompress in parallel instead of serializing behind one thread.
+//! Decode failures surface as typed `StreamProtocol` errors on the
+//! next chunk or at `End`.
 //! The component embedding the ingest decides what a finished stream
 //! *means* (store a contribution, install a community model, start a
 //! training task, run an evaluation) via the [`FinishedStream`] returned
@@ -417,12 +420,24 @@ pub struct StreamIngest {
     /// buffer" the data plane eliminates; tests assert the streamed
     /// bound.
     stats: Arc<WireStats>,
-    /// Deferred-decode worker feed (framed streams): depth-1 channel =
-    /// one frame decompressing + one queued — the double buffer that
-    /// overlaps decode with the next chunk's wire transfer. Spawned
-    /// lazily on the first framed chunk.
-    decode_tx: Mutex<Option<mpsc::SyncSender<DecodeJob>>>,
+    /// Deferred-decode worker pool (framed streams): each worker owns a
+    /// depth-1 channel — one frame decompressing + one queued per
+    /// worker, the double buffer that overlaps decode with the next
+    /// chunk's wire transfer. Streams map to workers by `stream_id`, so
+    /// one stream's frames stay FIFO on one queue while *concurrent*
+    /// framed uploads decompress on different workers instead of
+    /// serializing behind a single thread (and coupling each other's
+    /// chunk acks through its backpressure). Spawned lazily on the
+    /// first framed chunk.
+    decode_pool: Mutex<Option<Vec<mpsc::SyncSender<DecodeJob>>>>,
     clock: Mutex<Clock>,
+}
+
+/// Size of the deferred-decode worker pool: a few threads cover any
+/// realistic number of simultaneously-bursting framed uploads without
+/// turning every `StreamIngest` into a thread farm.
+fn decode_pool_size() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).clamp(1, 4)
 }
 
 impl Default for StreamIngest {
@@ -438,7 +453,7 @@ impl StreamIngest {
             streams: Mutex::new(HashMap::new()),
             open_stream_bytes: AtomicUsize::new(0),
             stats: Arc::new(WireStats::new()),
-            decode_tx: Mutex::new(None),
+            decode_pool: Mutex::new(None),
             clock: Mutex::new(Arc::new(Instant::now) as Clock),
         }
     }
@@ -492,53 +507,62 @@ impl StreamIngest {
 
     // ---- deferred-decode pipeline (framed codecs) --------------------
 
-    /// Hand of the decode-worker channel, spawning the worker on first
-    /// use. The worker owns the back half of the two-stage receive
-    /// pipeline: the connection handler validates/digests chunk N+1 and
-    /// acks while the worker is still decompressing chunk N.
-    fn decode_tx(&self) -> mpsc::SyncSender<DecodeJob> {
-        let mut guard = self.decode_tx.lock().unwrap();
-        if let Some(tx) = guard.as_ref() {
-            return tx.clone();
-        }
-        let (tx, rx) = mpsc::sync_channel::<DecodeJob>(1);
-        let stats = Arc::clone(&self.stats);
-        std::thread::Builder::new()
-            .name("metisfl-ingest-decode".into())
-            .spawn(move || {
-                while let Ok(job) = rx.recv() {
-                    match job {
-                        DecodeJob::Frame { stream, bytes, span } => {
-                            {
-                                let mut s = stream.lock().unwrap();
-                                if !s.dead && s.deferred.is_none() {
-                                    if let Err(e) = s.decode_reserved(&span, &bytes) {
-                                        s.deferred = Some(e);
+    /// Hand of the decode-worker channel serving `stream_id`, spawning
+    /// the pool on first use. The workers own the back half of the
+    /// two-stage receive pipeline: a connection handler validates /
+    /// digests chunk N+1 and acks while a worker is still
+    /// decompressing chunk N. A stream always maps to the same worker
+    /// (per-stream FIFO queue); distinct streams spread across the
+    /// pool, so concurrent framed uploads decompress in parallel.
+    fn decode_tx(&self, stream_id: u64) -> mpsc::SyncSender<DecodeJob> {
+        let mut guard = self.decode_pool.lock().unwrap();
+        let pool = guard.get_or_insert_with(|| {
+            (0..decode_pool_size())
+                .map(|i| {
+                    let (tx, rx) = mpsc::sync_channel::<DecodeJob>(1);
+                    let stats = Arc::clone(&self.stats);
+                    std::thread::Builder::new()
+                        .name(format!("metisfl-ingest-decode-{i}"))
+                        .spawn(move || {
+                            while let Ok(job) = rx.recv() {
+                                match job {
+                                    DecodeJob::Frame { stream, bytes, span } => {
+                                        {
+                                            let mut s = stream.lock().unwrap();
+                                            if !s.dead && s.deferred.is_none() {
+                                                if let Err(e) = s.decode_reserved(&span, &bytes)
+                                                {
+                                                    s.deferred = Some(e);
+                                                }
+                                            }
+                                        }
+                                        stats.release(bytes.len());
+                                    }
+                                    DecodeJob::Barrier(done) => {
+                                        let _ = done.send(());
                                     }
                                 }
                             }
-                            stats.release(bytes.len());
-                        }
-                        DecodeJob::Barrier(done) => {
-                            let _ = done.send(());
-                        }
-                    }
-                }
-            })
-            .expect("spawn ingest decode worker");
-        *guard = Some(tx.clone());
-        tx
+                        })
+                        .expect("spawn ingest decode worker");
+                    tx
+                })
+                .collect::<Vec<_>>()
+        });
+        pool[(stream_id % pool.len() as u64) as usize].clone()
     }
 
     /// Wait until every frame enqueued so far has been decoded (or
-    /// failed into its stream's deferred slot). No-op when the worker
-    /// was never spawned.
+    /// failed into its stream's deferred slot) on every worker. No-op
+    /// when the pool was never spawned.
     fn flush_decodes(&self) {
-        let tx = self.decode_tx.lock().unwrap().clone();
-        let Some(tx) = tx else { return };
-        let (done_tx, done_rx) = mpsc::sync_channel(1);
-        if tx.send(DecodeJob::Barrier(done_tx)).is_ok() {
-            let _ = done_rx.recv();
+        let pool = self.decode_pool.lock().unwrap().clone();
+        let Some(pool) = pool else { return };
+        for tx in pool {
+            let (done_tx, done_rx) = mpsc::sync_channel(1);
+            if tx.send(DecodeJob::Barrier(done_tx)).is_ok() {
+                let _ = done_rx.recv();
+            }
         }
     }
 
@@ -760,11 +784,10 @@ impl StreamIngest {
             Ok(Some(span)) => {
                 // The worker releases the gauge once the frame is
                 // decoded; a blocked send here is the pipeline's
-                // backpressure. Note the bound is per *ingest*, not per
-                // stream: one frame in decode + one queued across all
-                // framed streams (see the ROADMAP open item on a
-                // per-stream worker pool).
-                let tx = self.decode_tx();
+                // backpressure — scoped to this stream's worker, so one
+                // slow decompression does not couple an unrelated
+                // upload's chunk acks.
+                let tx = self.decode_tx(stream_id);
                 let held = bytes.len();
                 let job = DecodeJob::Frame { stream: Arc::clone(stream), bytes, span };
                 if tx.send(job).is_err() {
@@ -1252,6 +1275,95 @@ mod tests {
         assert_eq!(ingest.open_streams(), 0);
         // Budget returned: nothing leaks.
         assert_eq!(ingest.open_stream_bytes.load(Ordering::SeqCst), 0);
+    }
+
+    #[test]
+    fn concurrent_framed_streams_decode_on_the_worker_pool() {
+        // Two framed uploads interleaved chunk by chunk on one ingest:
+        // their stream ids map to (usually different) pool workers, and
+        // both must decode bit-exactly — the span reservation done at
+        // seq-validation time keeps each stream's frames at the right
+        // offsets no matter which worker decompresses them.
+        let base = Arc::new(model(31));
+        let mut m1 = (*base).clone();
+        let mut m2 = (*base).clone();
+        for t in &mut m1.tensors {
+            for v in t.data.iter_mut().step_by(7) {
+                *v += 0.25;
+            }
+        }
+        for t in &mut m2.tensors {
+            for v in t.data.iter_mut().step_by(5) {
+                *v -= 0.5;
+            }
+        }
+        let ingest = StreamIngest::default();
+        let codec = CodecId::DeltaRle;
+        let begin = |stream_id: u64, m: &TensorModel| StreamBegin {
+            stream_id,
+            task_id: stream_id,
+            round: 1,
+            purpose: StreamPurpose::TaskCompletion,
+            learner_id: format!("l{stream_id}"),
+            codec,
+            base_round: 1,
+            layout: TensorLayoutProto::codec_layout_of(m, codec),
+            meta: TaskMeta::default(),
+            spec: TaskSpec::default(),
+        };
+        // Pre-encode both streams' frames with the real sender walk.
+        let frames_of = |m: &TensorModel| {
+            let impl_ = codec.codec();
+            let block = 64usize;
+            let mut frames = Vec::new();
+            for (i, t) in m.tensors.iter().enumerate() {
+                let mut lo = 0usize;
+                while lo < t.data.len() {
+                    let hi = (lo + block).min(t.data.len());
+                    let mut f = Vec::new();
+                    impl_.encode_frame_into(
+                        &t.data[lo..hi],
+                        Some(&base.tensors[i].data[lo..hi]),
+                        &mut f,
+                    );
+                    frames.push(f);
+                    lo = hi;
+                }
+            }
+            frames
+        };
+        let (f1, f2) = (frames_of(&m1), frames_of(&m2));
+        assert!(matches!(
+            ingest.begin(begin(1000, &m1), None, Some(Arc::clone(&base))),
+            Message::Ack { ok: true, .. }
+        ));
+        assert!(matches!(
+            ingest.begin(begin(1001, &m2), None, Some(Arc::clone(&base))),
+            Message::Ack { ok: true, .. }
+        ));
+        let (mut d1, mut d2) = (FNV64_INIT, FNV64_INIT);
+        let n = f1.len().max(f2.len());
+        for seq in 0..n {
+            if let Some(f) = f1.get(seq) {
+                d1 = fnv1a64(d1, f);
+                assert!(matches!(
+                    ingest.chunk(1000, seq as u64, f.clone()),
+                    Message::Ack { ok: true, .. }
+                ));
+            }
+            if let Some(f) = f2.get(seq) {
+                d2 = fnv1a64(d2, f);
+                assert!(matches!(
+                    ingest.chunk(1001, seq as u64, f.clone()),
+                    Message::Ack { ok: true, .. }
+                ));
+            }
+        }
+        let out1 = ingest.end(1000, d1).map_err(|e| format!("{e:?}")).unwrap();
+        let out2 = ingest.end(1001, d2).map_err(|e| format!("{e:?}")).unwrap();
+        assert_eq!(out1.model, m1);
+        assert_eq!(out2.model, m2);
+        assert_eq!(ingest.open_streams(), 0);
     }
 
     #[test]

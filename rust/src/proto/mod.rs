@@ -37,8 +37,17 @@ pub mod wire;
 /// exactly one self-delimiting compressed frame) and opens every
 /// dispatch connection with the `Hello` handshake, so mixed fleets
 /// degrade the fan-out codec to the accepted intersection instead of
-/// failing at `Begin`.
-pub const PROTO_VERSION: u32 = 4;
+/// failing at `Begin`; v5 adds completion telemetry to `TaskMeta`
+/// (measured steps-per-second + training wall time, feeding the
+/// controller's pacing subsystem) and the `Deregister` control message
+/// for graceful learner departure. The telemetry fields are encoded
+/// last and decoded tolerantly **where meta is the trailing wire
+/// field** (`MarkTaskCompleted`, the on-disk store record) — not in
+/// `ModelStreamBegin`, where `spec` follows meta; cross-version
+/// sessions are still refused outright at `Hello` (exact version
+/// equality), so the tolerance is a decode-robustness property, not a
+/// v4-interop mode.
+pub const PROTO_VERSION: u32 = 5;
 
 use crate::tensor::{ByteOrder, CodecId, DType, Tensor, TensorModel};
 use anyhow::{bail, Result};
@@ -327,6 +336,12 @@ pub struct TaskSpec {
 
 /// Execution metadata returned with a completed train task (App. B:
 /// "training time per batch, number of completed steps and epochs").
+///
+/// The v5 telemetry fields (`steps_per_sec`, `train_wall_time_us`)
+/// feed the controller's per-learner pacing profiles; they are encoded
+/// last and decoded tolerantly (absent → 0) in messages where meta is
+/// the trailing field, so a pre-v5 `MarkTaskCompleted` (or on-disk
+/// store record) still parses.
 #[derive(Debug, Clone, PartialEq, Default)]
 pub struct TaskMeta {
     pub train_time_per_batch_us: u64,
@@ -334,6 +349,12 @@ pub struct TaskMeta {
     pub completed_epochs: usize,
     pub num_samples: usize,
     pub train_loss: f64,
+    /// Measured local-training throughput (SGD steps per second) over
+    /// the whole task, as observed by the learner. 0 = not reported.
+    pub steps_per_sec: f64,
+    /// Wall-clock microseconds the local training took end to end
+    /// (sleeps and data loading included). 0 = not reported.
+    pub train_wall_time_us: u64,
 }
 
 /// Evaluation result.
@@ -350,6 +371,11 @@ pub struct EvalResult {
 pub enum Message {
     /// Learner → controller: join the federation.
     Register { learner_id: String, host: String, port: u16, num_samples: usize },
+    /// Learner (or driver, on a learner's behalf) → controller: leave
+    /// the federation. The controller drops the learner's handle and
+    /// every per-learner map entry (participation history, pacing
+    /// profile, pinned delta base).
+    Deregister { learner_id: String },
     /// Controller → learner reply.
     RegisterAck { accepted: bool, assigned_index: usize },
     /// Driver → controller: initial community model state.
@@ -440,6 +466,7 @@ const T_HELLO_ACK: u8 = 16;
 const T_STREAM_BEGIN: u8 = 17;
 const T_CHUNK: u8 = 18;
 const T_STREAM_END: u8 = 19;
+const T_DEREGISTER: u8 = 20;
 
 fn write_codecs(w: &mut WireWriter, codecs: &[CodecId]) {
     let codes: Vec<u8> = codecs.iter().map(|c| c.code()).collect();
@@ -479,15 +506,31 @@ fn write_meta(w: &mut WireWriter, meta: &TaskMeta) {
     w.put_varint(meta.completed_epochs as u64);
     w.put_varint(meta.num_samples as u64);
     w.put_f64(meta.train_loss);
+    w.put_f64(meta.steps_per_sec);
+    w.put_varint(meta.train_wall_time_us);
 }
 
 fn read_meta(r: &mut WireReader) -> Result<TaskMeta> {
+    let train_time_per_batch_us = r.get_varint()?;
+    let completed_steps = r.get_varint()? as usize;
+    let completed_epochs = r.get_varint()? as usize;
+    let num_samples = r.get_varint()? as usize;
+    let train_loss = r.get_f64()?;
+    // v5 telemetry tail: tolerate a pre-v5 meta that ends here. Only
+    // effective where meta is the message's trailing field ("absent" is
+    // observable as end-of-buffer) — i.e. `MarkTaskCompleted`; in
+    // `ModelStreamBegin` the spec follows meta, but that message can
+    // only come from a same-version peer (Hello requires equality).
+    let (steps_per_sec, train_wall_time_us) =
+        if r.is_done() { (0.0, 0) } else { (r.get_f64()?, r.get_varint()?) };
     Ok(TaskMeta {
-        train_time_per_batch_us: r.get_varint()?,
-        completed_steps: r.get_varint()? as usize,
-        completed_epochs: r.get_varint()? as usize,
-        num_samples: r.get_varint()? as usize,
-        train_loss: r.get_f64()?,
+        train_time_per_batch_us,
+        completed_steps,
+        completed_epochs,
+        num_samples,
+        train_loss,
+        steps_per_sec,
+        train_wall_time_us,
     })
 }
 
@@ -502,6 +545,10 @@ impl Message {
                 w.put_str(host);
                 w.put_varint(*port as u64);
                 w.put_varint(*num_samples as u64);
+            }
+            Message::Deregister { learner_id } => {
+                w.put_u8(T_DEREGISTER);
+                w.put_str(learner_id);
             }
             Message::RegisterAck { accepted, assigned_index } => {
                 w.put_u8(T_REGISTER_ACK);
@@ -630,6 +677,7 @@ impl Message {
                 port: r.get_varint()? as u16,
                 num_samples: r.get_varint()? as usize,
             },
+            T_DEREGISTER => Message::Deregister { learner_id: r.get_str()? },
             T_REGISTER_ACK => Message::RegisterAck {
                 accepted: r.get_bool()?,
                 assigned_index: r.get_varint()? as usize,
@@ -733,6 +781,49 @@ impl Message {
         Ok(msg)
     }
 
+    /// Encode a batch of `RunTask`s that share `(task_id, round,
+    /// model)` but differ per target in their `TaskSpec`, as one shared
+    /// prefix (the model bytes, serialized ONCE) plus one small spec
+    /// suffix per entry: `prefix ‖ suffixes[i]` is byte-identical to
+    /// `Message::RunTask { .., spec: specs[i] }.encode()` (`TaskSpec`
+    /// is deliberately the last field of `RunTask` on the wire). This
+    /// is how pacing-aware semi-sync hands every learner its own step
+    /// budget on the one-shot path without per-learner model encodes —
+    /// and, because callers assemble the full frame only at send time,
+    /// without holding O(learners × model) frame copies alive.
+    pub fn encode_run_task_parts(
+        task_id: u64,
+        round: u64,
+        model: &ModelProto,
+        specs: &[TaskSpec],
+    ) -> (Vec<u8>, Vec<Vec<u8>>) {
+        let hint = Message::RunTask {
+            task_id,
+            round,
+            model: ModelProto::default(),
+            spec: TaskSpec::default(),
+        }
+        .encoded_size_hint();
+        let mut w = WireWriter::with_capacity(
+            hint + model.byte_size()
+                + model.tensors.iter().map(|t| t.name.len() + 24).sum::<usize>(),
+        );
+        w.put_u8(T_RUN_TASK);
+        w.put_varint(task_id);
+        w.put_varint(round);
+        model.write(&mut w);
+        let prefix = w.into_bytes();
+        let suffixes = specs
+            .iter()
+            .map(|spec| {
+                let mut sw = WireWriter::with_capacity(40);
+                write_spec(&mut sw, spec);
+                sw.into_bytes()
+            })
+            .collect();
+        (prefix, suffixes)
+    }
+
     /// Rough encoded size, to pre-size buffers (exact for tensor payloads).
     pub fn encoded_size_hint(&self) -> usize {
         let model_size = |m: &ModelProto| {
@@ -761,6 +852,7 @@ impl Message {
     pub fn kind(&self) -> &'static str {
         match self {
             Message::Register { .. } => "Register",
+            Message::Deregister { .. } => "Deregister",
             Message::RegisterAck { .. } => "RegisterAck",
             Message::ShipModel { .. } => "ShipModel",
             Message::RunTask { .. } => "RunTask",
@@ -826,6 +918,7 @@ mod tests {
                 port: 9000,
                 num_samples: 100,
             },
+            Message::Deregister { learner_id: "l1".into() },
             Message::RegisterAck { accepted: true, assigned_index: 3 },
             Message::ShipModel { model: model.clone() },
             Message::RunTask {
@@ -850,6 +943,8 @@ mod tests {
                     completed_epochs: 1,
                     num_samples: 100,
                     train_loss: 0.5,
+                    steps_per_sec: 666.25,
+                    train_wall_time_us: 15_000,
                 },
             },
             Message::EvaluateModel { task_id: 8, round: 2, model: model.clone() },
@@ -977,6 +1072,71 @@ mod tests {
                 codecs: Vec::new()
             }
         );
+    }
+
+    #[test]
+    fn v4_meta_without_telemetry_tail_still_decodes() {
+        // A pre-v5 `MarkTaskCompleted` ends its meta at `train_loss`.
+        // The tolerant reader must fill the telemetry tail with zeros
+        // instead of erroring at end-of-buffer.
+        let model = ModelProto::from_model(&sample_model(), DType::F32, ByteOrder::Little);
+        let mut w = WireWriter::new();
+        w.put_u8(super::T_MARK_COMPLETED);
+        w.put_varint(7);
+        w.put_str("l1");
+        model.write(&mut w);
+        w.put_varint(1500); // train_time_per_batch_us
+        w.put_varint(10); // completed_steps
+        w.put_varint(1); // completed_epochs
+        w.put_varint(100); // num_samples
+        w.put_f64(0.5); // train_loss — v4 meta ends here
+        match Message::decode(&w.into_bytes()).unwrap() {
+            Message::MarkTaskCompleted { meta, .. } => {
+                assert_eq!(meta.train_time_per_batch_us, 1500);
+                assert_eq!(meta.train_loss, 0.5);
+                assert_eq!(meta.steps_per_sec, 0.0);
+                assert_eq!(meta.train_wall_time_us, 0);
+            }
+            other => panic!("unexpected {}", other.kind()),
+        }
+    }
+
+    #[test]
+    fn run_task_parts_share_the_model_and_differ_per_spec() {
+        let model = ModelProto::from_model(&sample_model(), DType::F32, ByteOrder::Little);
+        let specs: Vec<TaskSpec> = (1..=3)
+            .map(|b| TaskSpec {
+                epochs: 1,
+                batch_size: 10,
+                learning_rate: 0.01,
+                step_budget: b * 7,
+            })
+            .collect();
+        let (prefix, suffixes) = Message::encode_run_task_parts(4, 2, &model, &specs);
+        assert_eq!(suffixes.len(), 3);
+        for (suffix, spec) in suffixes.iter().zip(&specs) {
+            let mut frame = prefix.clone();
+            frame.extend_from_slice(suffix);
+            // Each assembled frame decodes to a full RunTask carrying
+            // that spec.
+            match Message::decode(&frame).unwrap() {
+                Message::RunTask { task_id, round, model: m, spec: s } => {
+                    assert_eq!((task_id, round), (4, 2));
+                    assert_eq!(m, model);
+                    assert_eq!(&s, spec);
+                }
+                other => panic!("unexpected {}", other.kind()),
+            }
+            // And matches the monolithic encoder byte for byte.
+            let direct = Message::RunTask {
+                task_id: 4,
+                round: 2,
+                model: model.clone(),
+                spec: spec.clone(),
+            }
+            .encode();
+            assert_eq!(frame, direct);
+        }
     }
 
     #[test]

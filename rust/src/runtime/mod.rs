@@ -366,6 +366,8 @@ impl Trainer for XlaTrainer {
                 completed_epochs: spec.epochs.max(1),
                 num_samples: data.train_len(),
                 train_loss: last_loss,
+                steps_per_sec: steps.max(1) as f64 / elapsed.as_secs_f64().max(1e-9),
+                train_wall_time_us: (elapsed.as_micros() as u64).max(1),
             },
         ))
     }

@@ -228,6 +228,7 @@ fn shipped_env_files_parse_and_validate() {
         "envs/async_semi.yaml",
         "envs/streamed_delta.yaml",
         "envs/streamed_delta_rle.yaml",
+        "envs/hetero_semi_sync.yaml",
     ] {
         let env = FederationEnv::from_file(f).unwrap_or_else(|e| panic!("{f}: {e:#}"));
         env.validate().unwrap_or_else(|e| panic!("{f}: {e:#}"));

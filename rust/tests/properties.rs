@@ -7,7 +7,7 @@ use metisfl::config::ModelSpec;
 use metisfl::controller::aggregation::{
     AggregationRule, Backend, Contribution, FedAvg, ScratchArena,
 };
-use metisfl::controller::selector::Selector;
+use metisfl::controller::selector::{SelectionCtx, Selector};
 use metisfl::controller::store::{InMemoryStore, ModelStore, StoredModel};
 use metisfl::crypto::PairwiseMasker;
 use metisfl::proto::client;
@@ -232,6 +232,8 @@ fn prop_streaming_trio_roundtrips_any_layout() {
                 completed_epochs: g.usize_in(0..10),
                 num_samples: g.usize_in(0..10_000),
                 train_loss: g.f64_in(-10.0, 10.0),
+                steps_per_sec: g.f64_in(0.0, 10_000.0),
+                train_wall_time_us: g.rng().next_u64() % 100_000_000,
             },
             spec: TaskSpec {
                 epochs: g.usize_in(0..10),
@@ -330,12 +332,33 @@ fn prop_selector_never_exceeds_population_and_is_distinct() {
         let n = g.usize_in(1..30);
         let ids: Vec<String> = (0..n).map(|i| format!("l{i}")).collect();
         let mut rng = Rng::new(g.rng().next_u64());
-        let sel = match g.usize_in(0..3) {
+        let sel = match g.usize_in(0..4) {
             0 => Selector::All,
             1 => Selector::RandomFraction(g.f64_in(0.01, 1.0)),
-            _ => Selector::FreshnessAware { k: g.usize_in(1..40) },
+            2 => Selector::FreshnessAware { k: g.usize_in(1..40) },
+            _ => Selector::PacingAware {
+                k: g.usize_in(1..40),
+                freshness_rounds: g.usize_in(1..10) as u64,
+            },
         };
-        let chosen = sel.select(&ids, &HashMap::new(), &mut rng);
+        // Random partial histories/scores: invariants must hold for
+        // any mix of seen/unseen learners.
+        let mut last = HashMap::new();
+        let mut scores = HashMap::new();
+        for id in &ids {
+            if g.rng().next_u64() % 2 == 0 {
+                last.insert(id.clone(), g.rng().next_u64() % 20);
+            }
+            if g.rng().next_u64() % 2 == 0 {
+                scores.insert(id.clone(), g.f64_in(0.0, 100.0));
+            }
+        }
+        let ctx = SelectionCtx {
+            last_round: &last,
+            scores: &scores,
+            round: g.rng().next_u64() % 25,
+        };
+        let chosen = sel.select(&ids, &ctx, &mut rng);
         assert!(!chosen.is_empty());
         assert!(chosen.len() <= n);
         let mut d = chosen.clone();

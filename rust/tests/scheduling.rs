@@ -1,0 +1,147 @@
+//! End-to-end tests for the straggler-aware scheduling subsystem:
+//! pacing-aware semi-sync on a heterogeneous fleet, deadline-quorum
+//! rounds under dropout, and the pacing selector.
+
+use metisfl::config::{FederationEnv, ModelSpec, Protocol, SelectorSpec};
+use metisfl::driver::run_with_trainer;
+use metisfl::learner::{SyntheticTrainer, Trainer};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn base_env(name: &str) -> FederationEnv {
+    FederationEnv::builder(name)
+        .learners(4)
+        .rounds(5)
+        .model(ModelSpec::mlp(4, 2, 8))
+        .samples_per_learner(80)
+        .batch_size(10)
+        .heartbeat_ms(10_000)
+        .build()
+}
+
+/// 10× speed skew: three fast learners, one straggler.
+fn skewed_trainer(idx: usize) -> Arc<dyn Trainer> {
+    let step_us = if idx == 3 { 5_000 } else { 500 };
+    Arc::new(SyntheticTrainer::new(step_us, 0.01))
+}
+
+#[test]
+fn pacing_semi_sync_shrinks_straggler_spread_vs_sync() {
+    // Fixed-budget sync: every learner runs the same 8 steps, so the
+    // round's completion spread is dominated by the straggler
+    // (~8 × 4.5ms). Pacing-aware semi-sync hands the straggler the
+    // fallback budget and the fast learners ~10× more steps, so
+    // everyone's wall clock converges once profiles exist (round 2+).
+    let sync_report = run_with_trainer(&base_env("sched-sync"), skewed_trainer).unwrap();
+    let mut semi_env = base_env("sched-semi");
+    semi_env.protocol = Protocol::SemiSynchronous { lambda: 1.0 };
+    let semi_report = run_with_trainer(&semi_env, skewed_trainer).unwrap();
+
+    let mean_spread = |rounds: &[metisfl::metrics::RoundReport]| {
+        let s: Vec<Duration> = rounds.iter().skip(1).map(|r| r.completion_spread).collect();
+        s.iter().sum::<Duration>() / s.len().max(1) as u32
+    };
+    let sync_spread = mean_spread(&sync_report.round_metrics);
+    let semi_spread = mean_spread(&semi_report.round_metrics);
+    // The sync fleet's spread must reflect the 10× skew at all…
+    assert!(
+        sync_spread > Duration::from_millis(10),
+        "sync spread implausibly small: {sync_spread:?}"
+    );
+    // …and pacing must at least halve it (in practice it's far more).
+    assert!(
+        semi_spread < sync_spread / 2,
+        "pacing-aware semi-sync did not shrink the straggler tail: \
+         sync {sync_spread:?} vs semi {semi_spread:?}"
+    );
+    // Everyone still participates and completes under both protocols.
+    for r in semi_report.round_metrics.iter().chain(&sync_report.round_metrics) {
+        assert_eq!(r.participants, 4);
+        assert_eq!(r.completed, 4);
+    }
+}
+
+#[test]
+fn paced_budgets_ride_the_streamed_dispatch_plane() {
+    // Same skewed fleet, but over the chunked data plane: per-learner
+    // budgets only change each learner's (small) Begin frame — the
+    // model chunks stay encode-once — and the spread still collapses.
+    let mut semi_env = base_env("sched-semi-streamed");
+    semi_env.protocol = Protocol::SemiSynchronous { lambda: 1.0 };
+    semi_env.stream_chunk_bytes = 2048;
+    let report = run_with_trainer(&semi_env, skewed_trainer).unwrap();
+    let spreads: Vec<Duration> =
+        report.round_metrics.iter().skip(1).map(|r| r.completion_spread).collect();
+    let mean = spreads.iter().sum::<Duration>() / spreads.len().max(1) as u32;
+    // Fixed-budget straggler tail would be ~8 steps × 4.5ms ≈ 36ms;
+    // paced rounds must stay well under half of that.
+    assert!(
+        mean < Duration::from_millis(18),
+        "streamed paced semi-sync kept a straggler tail: {mean:?}"
+    );
+    for r in &report.round_metrics {
+        assert_eq!(r.completed, 4);
+        assert!(r.community_eval_loss.unwrap().is_finite());
+    }
+}
+
+#[test]
+fn quorum_rounds_absorb_a_dropout_learner() {
+    // Learner 3 never completes (dropout 1.0 at the trainer level);
+    // with an 0.75 quorum the round aggregates the three survivors at
+    // the cut instead of burning the whole task timeout.
+    let mut env = base_env("sched-quorum");
+    env.rounds = 3;
+    env.quorum_fraction = 0.75;
+    env.task_timeout_ms = 30_000;
+    let start = std::time::Instant::now();
+    let report = run_with_trainer(&env, |idx| {
+        let dropout = if idx == 3 { 0.999_999 } else { 0.0 };
+        Arc::new(SyntheticTrainer::with_profile(0, 0.01, 0.0, dropout, 7 + idx as u64))
+            as Arc<dyn Trainer>
+    })
+    .unwrap();
+    assert!(
+        start.elapsed() < Duration::from_secs(20),
+        "quorum rounds should not wait out the 30s timeout"
+    );
+    assert_eq!(report.round_metrics.len(), 3);
+    for r in &report.round_metrics {
+        assert_eq!(r.participants, 4);
+        assert_eq!(r.completed, 3, "round {} should close at the quorum cut", r.round);
+        assert!(r.community_eval_loss.unwrap().is_finite());
+    }
+}
+
+#[test]
+fn pacing_selector_runs_partial_rounds() {
+    let mut env = base_env("sched-selector");
+    env.rounds = 4;
+    env.selector = SelectorSpec::Pacing { k: 2, freshness_rounds: 2 };
+    let report = run_with_trainer(&env, skewed_trainer).unwrap();
+    assert_eq!(report.round_metrics.len(), 4);
+    for r in &report.round_metrics {
+        assert_eq!(r.participants, 2, "pacing selector must pick exactly k learners");
+        assert_eq!(r.completed, 2);
+    }
+}
+
+#[test]
+fn hetero_env_file_drives_a_federation() {
+    // The shipped heterogeneous-fleet recipe, shrunk to test scale:
+    // semi-sync + quorum + pacing selector all active at once.
+    let mut env = FederationEnv::from_file("envs/hetero_semi_sync.yaml").unwrap();
+    env.learners = 4;
+    env.rounds = 2;
+    env.selector = SelectorSpec::Pacing { k: 3, freshness_rounds: 2 };
+    // Keep the test fast: shrink the modeled step time 10×.
+    if let metisfl::config::TrainerKind::Synthetic { step_time_us, .. } = &mut env.trainer {
+        *step_time_us = 50;
+    }
+    let report = metisfl::driver::run_simulated(&env).unwrap();
+    assert_eq!(report.round_metrics.len(), 2);
+    for r in &report.round_metrics {
+        assert_eq!(r.participants, 3);
+        assert!(r.completed >= 3 * 4 / 5, "quorum floor: {}", r.completed);
+    }
+}
