@@ -1,6 +1,7 @@
 //! Typed federation environment (the paper's YAML env + model recipe).
 
 use crate::json::Value;
+use crate::net::chaos::ChaosSpec;
 use crate::tensor::CodecId;
 use anyhow::{bail, Context, Result};
 
@@ -315,6 +316,10 @@ pub struct FederationEnv {
     /// with a full f32 stream (true, default) instead of surfacing the
     /// refusal as a dispatch/upload error (false).
     pub delta_fallback: bool,
+    /// Deterministic fault injection (`chaos:` block): which fractions
+    /// of the fleet get which connection faults, expanded per learner
+    /// by [`ChaosSpec::plan_fleet`] from `seed`. Default: all off.
+    pub chaos: ChaosSpec,
 }
 
 impl FederationEnv {
@@ -515,6 +520,40 @@ impl FederationEnv {
         if let Some(x) = v.get("delta_fallback").and_then(|x| x.as_bool()) {
             b = b.delta_fallback(x);
         }
+        if let Some(c) = v.get("chaos") {
+            let mut spec = ChaosSpec::default();
+            if let Some(x) = c.get("seed").and_then(|x| x.as_u64()) {
+                spec.seed = x;
+            }
+            if let Some(x) = c.get("sever_fraction").and_then(|x| x.as_f64()) {
+                spec.sever_fraction = x;
+            }
+            if let Some(x) = c.get("sever_after_sends").and_then(|x| x.as_u64()) {
+                spec.sever_after_sends = x;
+            }
+            if let Some(x) = c.get("refuse_fraction").and_then(|x| x.as_f64()) {
+                spec.refuse_fraction = x;
+            }
+            if let Some(x) = c.get("stall_fraction").and_then(|x| x.as_f64()) {
+                spec.stall_fraction = x;
+            }
+            if let Some(x) = c.get("stall_ms").and_then(|x| x.as_u64()) {
+                spec.stall_ms = x;
+            }
+            if let Some(x) = c.get("duplicate_fraction").and_then(|x| x.as_f64()) {
+                spec.duplicate_fraction = x;
+            }
+            if let Some(x) = c.get("slow_loris").and_then(|x| x.as_usize()) {
+                spec.slow_loris = x;
+            }
+            if let Some(x) = c.get("drip_ms").and_then(|x| x.as_u64()) {
+                spec.drip_ms = x;
+            }
+            if let Some(x) = c.get("corrupt").and_then(|x| x.as_usize()) {
+                spec.corrupt = x;
+            }
+            b = b.chaos(spec);
+        }
         b.try_build()
     }
 
@@ -593,6 +632,7 @@ impl FederationEnv {
                 bail!("trainer dropout must be in [0, 1)");
             }
         }
+        self.chaos.validate()?;
         match self.protocol {
             Protocol::SemiSynchronous { lambda } if lambda <= 0.0 => {
                 bail!("semi-sync lambda must be > 0")
@@ -713,6 +753,7 @@ impl FederationEnvBuilder {
                 wire_codec: WireCodecChoice::Auto,
                 bf16_dispatch: false,
                 delta_fallback: true,
+                chaos: ChaosSpec::default(),
             },
         }
     }
@@ -807,6 +848,10 @@ impl FederationEnvBuilder {
     }
     pub fn delta_fallback(mut self, on: bool) -> Self {
         self.env.delta_fallback = on;
+        self
+    }
+    pub fn chaos(mut self, c: ChaosSpec) -> Self {
+        self.env.chaos = c;
         self
     }
 
@@ -1074,5 +1119,31 @@ trainer:
         assert_eq!(env.aggregation.backend, AggregationBackend::Chunked);
         assert_eq!(env.aggregation.threads, 2);
         assert!(FederationEnv::from_yaml("aggregation:\n  backend: warp\n").is_err());
+    }
+
+    #[test]
+    fn chaos_block_parses_and_validates() {
+        let env = FederationEnv::from_yaml(
+            "chaos:\n  seed: 7\n  sever_fraction: 0.2\n  sever_after_sends: 4\n  \
+             slow_loris: 1\n  drip_ms: 5\n  corrupt: 1\n  duplicate_fraction: 0.1\n",
+        )
+        .unwrap();
+        assert!(!env.chaos.is_off());
+        assert_eq!(env.chaos.seed, 7);
+        assert_eq!(env.chaos.sever_fraction, 0.2);
+        assert_eq!(env.chaos.sever_after_sends, 4);
+        assert_eq!(env.chaos.slow_loris, 1);
+        assert_eq!(env.chaos.drip_ms, 5);
+        assert_eq!(env.chaos.corrupt, 1);
+        assert_eq!(env.chaos.duplicate_fraction, 0.1);
+        // Default: off, and absent from unrelated env files.
+        let plain = FederationEnv::from_yaml("learners: 3\n").unwrap();
+        assert!(plain.chaos.is_off());
+        // Invalid fractions are refused at load time.
+        assert!(FederationEnv::from_yaml("chaos:\n  sever_fraction: 1.5\n").is_err());
+        assert!(FederationEnv::from_yaml(
+            "chaos:\n  sever_fraction: 0.5\n  sever_after_sends: 0\n"
+        )
+        .is_err());
     }
 }

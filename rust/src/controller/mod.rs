@@ -16,6 +16,7 @@ pub mod store;
 
 use crate::config::{FederationEnv, Protocol, SecureSpec, SelectorSpec};
 use crate::metrics::{FedOp, OpMetrics};
+use crate::net::retry::RetryPolicy;
 use crate::net::{ClientConn, Psk, Service};
 use crate::proto::client::{self, StreamSend};
 use crate::proto::ingest::{BufferPool, FinishedStream, StreamBegin, StreamIngest};
@@ -25,7 +26,7 @@ use crate::proto::{
     PROTO_VERSION,
 };
 use crate::tensor::{ByteOrder, CodecId, DType, TensorModel};
-use crate::util::{log_debug, log_info, Stopwatch, ThreadPool};
+use crate::util::{log_debug, log_info, Rng, Stopwatch, ThreadPool};
 use aggregation::{Backend, Contribution, ScratchArena};
 use anyhow::{bail, Context, Result};
 use bases::BaseMap;
@@ -276,6 +277,13 @@ pub struct Controller {
     /// `wire_bytes_sent` / `wire_bytes_saved` gauges.
     dispatch_wire_sent: AtomicU64,
     dispatch_wire_raw: AtomicU64,
+    /// Single-target dispatches abandoned after the unified retry policy
+    /// exhausted its attempts (transport faults only — application
+    /// errors never retry). Surfaced in `FederationReport`.
+    retry_give_ups: AtomicU64,
+    /// Delta→f32 fallback re-sends: streams restarted at full precision
+    /// because the learner no longer held the negotiated delta base.
+    fallback_sends: AtomicU64,
 }
 
 impl Controller {
@@ -318,6 +326,8 @@ impl Controller {
             dispatch_encodes: AtomicU64::new(0),
             dispatch_wire_sent: AtomicU64::new(0),
             dispatch_wire_raw: AtomicU64::new(0),
+            retry_give_ups: AtomicU64::new(0),
+            fallback_sends: AtomicU64::new(0),
         }))
     }
 
@@ -336,6 +346,16 @@ impl Controller {
     /// arrived after their deadline-quorum round had closed.
     pub fn late_folds(&self) -> u64 {
         self.late_folds.load(Ordering::SeqCst)
+    }
+
+    /// Single-target dispatches abandoned after retry exhaustion.
+    pub fn retry_give_ups(&self) -> u64 {
+        self.retry_give_ups.load(Ordering::SeqCst)
+    }
+
+    /// Delta→f32 fallback re-sends across both dispatch paths.
+    pub fn fallback_sends(&self) -> u64 {
+        self.fallback_sends.load(Ordering::SeqCst)
     }
 
     /// Override the LRU cap on distinct pinned delta-base models
@@ -1217,6 +1237,7 @@ impl Controller {
             let fallback_results = self.dispatch_pool.parallel_map(n, |i| {
                 (state[i] == SendState::NeedsFull).then(|| {
                     let h = &targets[i];
+                    self.fallback_sends.fetch_add(1, Ordering::SeqCst);
                     log_debug(
                         "controller",
                         &format!("{}: no shared delta base, re-sending full", h.id),
@@ -1412,20 +1433,51 @@ impl Controller {
                 send,
             )
         };
-        let reply = match run_attempt(&send) {
-            Err(client::RpcError::Remote { code: ErrorCode::NotFound, .. })
-                if codec.needs_base() && self.env.delta_fallback =>
-            {
-                // The learner lost the base (restart / staleness): the
-                // standard full-f32 retry, mirroring
-                // `stream_model_with_fallback`.
-                let full =
-                    StreamSend { codec: CodecId::F32, base: None, base_round: 0, ..send.clone() };
-                run_attempt(&full)
-            }
-            other => other,
-        }
-        .map_err(|e| anyhow::anyhow!("streamed dispatch to {}: {e}", target.id))?;
+        // Transport faults (dial refused, connection severed mid-stream)
+        // retry through the unified policy — each attempt restarts the
+        // stream under a fresh id, and the ingest's per-(task, learner)
+        // watermark makes a replayed completion idempotent. Application
+        // errors never retry; the NotFound delta-base miss resolves
+        // inside a single attempt via the full-f32 fallback.
+        let mut rng =
+            Rng::new(self.env.seed ^ task_id ^ fnv1a64(FNV64_INIT, target.id.as_bytes()));
+        let reply = RetryPolicy::rpc()
+            .run(
+                &mut rng,
+                |_| match run_attempt(&send) {
+                    Err(client::RpcError::Remote { code: ErrorCode::NotFound, .. })
+                        if codec.needs_base() && self.env.delta_fallback =>
+                    {
+                        // The learner lost the base (restart / staleness):
+                        // the standard full-f32 retry, mirroring
+                        // `stream_model_with_fallback`.
+                        self.fallback_sends.fetch_add(1, Ordering::SeqCst);
+                        let full = StreamSend {
+                            codec: CodecId::F32,
+                            base: None,
+                            base_round: 0,
+                            ..send.clone()
+                        };
+                        run_attempt(&full)
+                    }
+                    other => other,
+                },
+                |e| e.is_transport(),
+            )
+            .map_err(|give_up| {
+                if give_up.exhausted {
+                    self.retry_give_ups.fetch_add(1, Ordering::SeqCst);
+                    anyhow::anyhow!(
+                        "streamed dispatch to {}: gave up after {} attempts in {:?}: {}",
+                        target.id,
+                        give_up.attempts,
+                        give_up.elapsed,
+                        give_up.last_error
+                    )
+                } else {
+                    anyhow::anyhow!("streamed dispatch to {}: {}", target.id, give_up.last_error)
+                }
+            })?;
         if codec.is_lossless() && !matches!(reply, Message::Error { .. }) {
             let displaced = self
                 .learner_bases

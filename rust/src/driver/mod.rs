@@ -52,6 +52,20 @@ pub struct FederationReport {
     /// `raw volume - wire_bytes_sent`. Divide by rounds for the
     /// compression ablation's bytes-per-round rows.
     pub wire_bytes_saved: u64,
+    /// Inbound streams the controller refused at admission (open-slot
+    /// cap or aggregate ingest budget) — graceful-degradation evidence
+    /// that overload sheds load instead of wedging.
+    pub streams_refused: u64,
+    /// Streams reclaimed by the idle/lifetime GC (disconnected or
+    /// slow-loris peers whose buffers were released).
+    pub streams_gced: u64,
+    /// Operations abandoned after the unified retry policy exhausted
+    /// its attempts: learner upload give-ups plus controller
+    /// single-target dispatch give-ups.
+    pub retry_give_ups: u64,
+    /// Delta→f32 fallback sends (both directions): streams restarted at
+    /// full precision because the peer lost the negotiated delta base.
+    pub fallback_sends: u64,
 }
 
 /// Unique per-process run counter so in-proc endpoint names never clash
@@ -130,6 +144,10 @@ pub fn run_with_trainer(
     let mut learners: Vec<Arc<Learner>> = Vec::new();
     let mut learner_endpoints: Vec<String> = Vec::new();
     let mut data_rng = Rng::new(env.seed);
+    // Deterministic chaos assignment: the same env + seed always
+    // afflicts the same learner indices with the same faults.
+    let chaos_plans = env.chaos.plan_fleet(env.learners, env.seed);
+    let mut expected_registrations = env.learners;
     for i in 0..env.learners {
         let dataset = Dataset::synthetic_housing(
             env.model.input_dim,
@@ -149,12 +167,27 @@ pub fn run_with_trainer(
             Arc::new(LearnerServicer(Arc::clone(&learner))) as Arc<dyn crate::net::Service>,
             psk,
         )?;
-        learner.register(&ep).with_context(|| format!("registering learner-{i}"))?;
+        let plan = &chaos_plans[i];
+        if !plan.is_noop() {
+            learner.set_chaos(plan.clone());
+        }
+        if plan.refuse_dial {
+            // Every dial from this learner is chaos-refused: it can
+            // never register, so the fleet the controller waits for
+            // shrinks by one (quorum decides whether rounds survive).
+            expected_registrations -= 1;
+            log_warn(
+                "driver",
+                &format!("learner-{i}: chaos refuses its dials; running unregistered"),
+            );
+        } else {
+            learner.register(&ep).with_context(|| format!("registering learner-{i}"))?;
+        }
         learner_endpoints.push(ep);
         learner_servers.push(server);
         learners.push(learner);
     }
-    controller.wait_for_learners(env.learners, Duration::from_secs(30))?;
+    controller.wait_for_learners(expected_registrations, Duration::from_secs(30))?;
 
     // Ship the initial model state (tensors only — Fig. 8).
     let mut init_rng = Rng::new(env.seed ^ 0x5EED_0F_0E715); // "metis" seed salt
@@ -243,6 +276,8 @@ pub fn run_with_trainer(
 
     let final_loss = round_metrics.iter().rev().find_map(|r| r.community_eval_loss);
     let (wire_sent, wire_raw) = controller.wire_bytes_totals();
+    let learner_give_ups: u64 = learners.iter().map(|l| l.retry_give_ups()).sum();
+    let learner_fallbacks: u64 = learners.iter().map(|l| l.fallback_sends()).sum();
     Ok(FederationReport {
         env_name: env.name.clone(),
         round_metrics,
@@ -254,6 +289,10 @@ pub fn run_with_trainer(
         effective_stream_chunk_bytes: env.effective_stream_chunk(),
         wire_bytes_sent: wire_sent,
         wire_bytes_saved: wire_raw.saturating_sub(wire_sent),
+        streams_refused: controller.ingest().streams_refused(),
+        streams_gced: controller.ingest().streams_gced(),
+        retry_give_ups: controller.retry_give_ups() + learner_give_ups,
+        fallback_sends: controller.fallback_sends() + learner_fallbacks,
     })
 }
 

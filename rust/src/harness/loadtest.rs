@@ -1,0 +1,528 @@
+//! Open-loop loadtest: Poisson learner arrivals, per-phase latency
+//! histograms, chaos profiles, and graceful-degradation gates.
+//!
+//! Unlike [`stress`](super::stress), which times one round's controller
+//! operations in isolation, the loadtest drives a *whole federation*
+//! (controller + fleet over the in-process transport) under an open-loop
+//! arrival schedule: learners register at a configured rate whether or
+//! not the controller keeps up, so admission-control behavior is
+//! measured rather than masked by back-pressure. Each phase — dial,
+//! dispatch, train, upload, aggregate, and the whole round — lands in a
+//! log-bucketed [`LatencyHistogram`], reported as p50/p99/p999.
+//!
+//! With a [`ChaosSpec`] the run doubles as a robustness gate:
+//! [`run_loadtest`] hard-asserts that every round's quorum fired and
+//! that no ingest stream stays wedged after a forced GC sweep, and
+//! [`verify_chaos_equivalence`] re-runs the surviving fleet without
+//! chaos and requires the community model to match **bitwise** — faults
+//! may shrink participation, but they must never corrupt the math.
+
+use crate::config::{FederationEnv, HeteroFleetSpec, ModelSpec, TrainerKind};
+use crate::controller::{scheduling, Controller};
+use crate::harness::runner::ReportWriter;
+use crate::learner::{Dataset, Learner, LearnerServicer, SyntheticTrainer, Trainer};
+use crate::metrics::histogram::LatencyHistogram;
+use crate::net::chaos::ChaosSpec;
+use crate::net::{Psk, ServerHandle};
+use crate::proto::wire::{fnv1a64, FNV64_INIT};
+use crate::tensor::TensorModel;
+use crate::util::{log_debug, log_info, Rng, Stopwatch};
+use anyhow::{bail, Context, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Loadtest knobs. `quick()` is the CI smoke preset; the CLI maps
+/// `metisfl loadtest` flags onto these fields.
+#[derive(Debug, Clone)]
+pub struct LoadtestConfig {
+    /// Fleet size (chaos fractions apply to this count).
+    pub learners: usize,
+    /// Open-loop arrival rate, learners per second (exponential
+    /// interarrivals; `<= 0` means all-at-once).
+    pub rate: f64,
+    pub rounds: usize,
+    pub model: ModelSpec,
+    pub chaos: ChaosSpec,
+    /// Deadline-quorum fraction (1.0 = classic full barrier).
+    pub quorum_fraction: f64,
+    /// Streamed data-plane chunk size; chaos faults that act on chunks
+    /// (sever / corrupt / slow-loris) require `> 0`.
+    pub stream_chunk_bytes: usize,
+    pub task_timeout_ms: u64,
+    pub seed: u64,
+    /// Synthetic trainer step time (uniform fleet).
+    pub step_time_us: u64,
+}
+
+impl LoadtestConfig {
+    /// CI smoke preset: small fleet, no chaos, sub-second wall clock.
+    pub fn quick() -> LoadtestConfig {
+        LoadtestConfig {
+            learners: 8,
+            rate: 200.0,
+            rounds: 2,
+            model: ModelSpec::mlp(4, 2, 8),
+            chaos: ChaosSpec::default(),
+            quorum_fraction: 1.0,
+            stream_chunk_bytes: 2048,
+            task_timeout_ms: 10_000,
+            seed: 42,
+            step_time_us: 200,
+        }
+    }
+
+    fn env_for(&self, name: &str, active: usize) -> FederationEnv {
+        FederationEnv::builder(name)
+            .learners(active)
+            .rounds(self.rounds)
+            .model(self.model.clone())
+            .samples_per_learner(20)
+            .batch_size(10)
+            .seed(self.seed)
+            .quorum_fraction(self.quorum_fraction)
+            .task_timeout_ms(self.task_timeout_ms)
+            .stream_chunk_bytes(self.stream_chunk_bytes)
+            .trainer(TrainerKind::Synthetic {
+                step_time_us: self.step_time_us,
+                hetero: HeteroFleetSpec::default(),
+            })
+            .chaos(self.chaos.clone())
+            .build()
+    }
+}
+
+/// Phase names in report order.
+pub const PHASES: [&str; 6] = ["dial", "dispatch", "train", "upload", "aggregate", "round"];
+
+/// What one loadtest run measured and survived.
+#[derive(Debug, Clone)]
+pub struct LoadtestReport {
+    /// `(phase, histogram)` in [`PHASES`] order.
+    pub phases: Vec<(&'static str, LatencyHistogram)>,
+    /// Configured fleet size for this run (after any survivor filter).
+    pub fleet: usize,
+    pub registered: usize,
+    /// Learners whose every dial was chaos-refused.
+    pub refused_dials: usize,
+    pub rounds_completed: usize,
+    /// Completions counted per round (quorum evidence).
+    pub completed_per_round: Vec<usize>,
+    /// FNV-1a over the final community model's tensor names + f32 bits.
+    pub community_digest: u64,
+    pub community_round: u64,
+    pub streams_refused: u64,
+    pub streams_gced: u64,
+    pub retry_give_ups: u64,
+    pub fallback_sends: u64,
+    pub late_folds: u64,
+    pub peak_wire_ingest_bytes: usize,
+}
+
+impl LoadtestReport {
+    pub fn phase(&self, name: &str) -> &LatencyHistogram {
+        &self.phases.iter().find(|(n, _)| *n == name).expect("unknown phase").1
+    }
+
+    /// The `bench_out/loadtest.{csv,json}` table the CI regression gate
+    /// diffs (keys `loadtest/<phase>/p99_ms`).
+    pub fn table(&self) -> ReportWriter {
+        let mut w = ReportWriter::new(
+            "loadtest",
+            &["phase", "p50_ms", "p99_ms", "p999_ms", "max_ms", "samples"],
+        );
+        for (name, h) in &self.phases {
+            w.row(vec![
+                name.to_string(),
+                fmt_ms(h.p50()),
+                fmt_ms(h.p99()),
+                fmt_ms(h.p999()),
+                fmt_ms(h.max()),
+                h.count().to_string(),
+            ]);
+        }
+        w
+    }
+}
+
+fn fmt_ms(d: Duration) -> String {
+    format!("{:.3}", d.as_secs_f64() * 1e3)
+}
+
+/// Bitwise-comparable digest of a model: tensor names + f32 bit
+/// patterns, folded through FNV-1a.
+pub fn model_digest(m: &TensorModel) -> u64 {
+    let mut d = FNV64_INIT;
+    for t in &m.tensors {
+        d = fnv1a64(d, t.name.as_bytes());
+        let mut bytes = Vec::with_capacity(t.data.len() * 4);
+        for v in &t.data {
+            bytes.extend_from_slice(&v.to_bits().to_le_bytes());
+        }
+        d = fnv1a64(d, &bytes);
+    }
+    d
+}
+
+fn next_loadtest_id() -> u64 {
+    static RUN: AtomicU64 = AtomicU64::new(0);
+    RUN.fetch_add(1, Ordering::SeqCst)
+}
+
+/// Run the full configured fleet.
+pub fn run_loadtest(cfg: &LoadtestConfig) -> Result<LoadtestReport> {
+    run_filtered(cfg, None)
+}
+
+/// Core loop; `fleet` restricts the run to a subset of the *original*
+/// learner indices (the chaos-equivalence clean twin) while preserving
+/// every per-learner seed: learner `i` keeps the same id, dataset, and
+/// trainer stream whether or not its siblings exist.
+fn run_filtered(cfg: &LoadtestConfig, fleet: Option<&[usize]>) -> Result<LoadtestReport> {
+    if cfg.learners == 0 || cfg.rounds == 0 {
+        bail!("loadtest needs at least one learner and one round");
+    }
+    let indices: Vec<usize> = match fleet {
+        Some(f) => f.to_vec(),
+        None => (0..cfg.learners).collect(),
+    };
+    let run = next_loadtest_id();
+    let env = cfg.env_for(&format!("loadtest-{run}"), indices.len());
+    env.validate()?;
+    let psk: Psk = None;
+
+    let controller = Controller::new(env.clone(), psk)?;
+    let ctrl_ep = format!("inproc://loadtest-ctrl-{run}");
+    let _ctrl_server =
+        crate::net::serve(&ctrl_ep, Arc::clone(&controller) as Arc<dyn crate::net::Service>, psk)?;
+
+    // Chaos plans are always drawn over the FULL configured fleet so
+    // victim assignment is invariant under the survivor filter.
+    let plans = env.chaos.plan_fleet(cfg.learners, cfg.seed);
+
+    // Per-learner seeds must not depend on which indices run: walk every
+    // index, instantiating only the active ones.
+    let mut data_rng = Rng::new(cfg.seed);
+    let mut learners: Vec<Arc<Learner>> = Vec::with_capacity(indices.len());
+    let mut servers: Vec<Box<dyn ServerHandle>> = Vec::new();
+    let mut endpoints: Vec<String> = Vec::new();
+    let mut refused = 0usize;
+    for i in 0..cfg.learners {
+        let ds_seed = data_rng.split(i as u64).next_u64();
+        if !indices.contains(&i) {
+            continue;
+        }
+        let dataset = Dataset::synthetic_housing(
+            env.model.input_dim,
+            env.samples_per_learner,
+            env.samples_per_learner,
+            ds_seed,
+        );
+        let trainer: Arc<dyn Trainer> = Arc::new(SyntheticTrainer::for_fleet(
+            cfg.step_time_us,
+            &HeteroFleetSpec::default(),
+            cfg.seed,
+            i,
+        ));
+        let learner = Learner::new(&format!("learner-{i}"), &ctrl_ep, psk, trainer, dataset);
+        learner.set_stream_chunk(env.effective_stream_chunk());
+        learner.set_upload_codec(env.upload_codec());
+        learner.set_delta_fallback(env.delta_fallback);
+        let plan = &plans[i];
+        if !plan.is_noop() {
+            learner.set_chaos(plan.clone());
+        }
+        if plan.refuse_dial {
+            refused += 1;
+        }
+        let ep = format!("inproc://loadtest-{run}-l{i}");
+        let server = crate::net::serve(
+            &ep,
+            Arc::new(LearnerServicer(Arc::clone(&learner))) as Arc<dyn crate::net::Service>,
+            psk,
+        )?;
+        endpoints.push(ep);
+        servers.push(server);
+        learners.push(learner);
+    }
+
+    // --- Open-loop arrivals: exponential interarrival schedule --------
+    let mut arrival_rng = Rng::new(cfg.seed ^ 0xA881);
+    let mut offsets: Vec<Duration> = Vec::with_capacity(learners.len());
+    let mut at = Duration::ZERO;
+    for _ in &learners {
+        if cfg.rate > 0.0 {
+            let u = arrival_rng.next_f64();
+            at += Duration::from_secs_f64(-(1.0 - u).ln() / cfg.rate);
+        }
+        offsets.push(at);
+    }
+    let horizon = at;
+
+    let start = Instant::now();
+    let mut joins = Vec::with_capacity(learners.len());
+    for (k, learner) in learners.iter().enumerate() {
+        let learner = Arc::clone(learner);
+        let ep = endpoints[k].clone();
+        let due = start + offsets[k];
+        joins.push(
+            std::thread::Builder::new()
+                .name(format!("loadtest-arrival-{k}"))
+                .spawn(move || {
+                    if let Some(wait) = due.checked_duration_since(Instant::now()) {
+                        std::thread::sleep(wait);
+                    }
+                    let sw = Stopwatch::start();
+                    match learner.register(&ep) {
+                        Ok(_) => Some(sw.elapsed()),
+                        Err(e) => {
+                            log_debug("loadtest", &format!("arrival failed: {e:#}"));
+                            None
+                        }
+                    }
+                })
+                .expect("spawn arrival thread"),
+        );
+    }
+    let mut dial = LatencyHistogram::new();
+    let mut registered = 0usize;
+    for j in joins {
+        if let Some(d) = j.join().expect("arrival thread panicked") {
+            dial.record(d);
+            registered += 1;
+        }
+    }
+    if registered == 0 {
+        bail!("loadtest: no learner survived registration");
+    }
+    controller
+        .wait_for_learners(registered, horizon + Duration::from_secs(30))
+        .context("loadtest: waiting for registrations")?;
+    log_info(
+        "loadtest",
+        &format!(
+            "{registered}/{} registered over {:?} ({refused} chaos-refused)",
+            learners.len(),
+            horizon
+        ),
+    );
+
+    let mut init_rng = Rng::new(cfg.seed ^ 0x5EED_0F_0E715); // driver's salt
+    controller.ship_model(TensorModel::random_init(&env.model.tensor_layout(), &mut init_rng));
+
+    // --- Rounds, with the quorum-fires hard gate -----------------------
+    let mut dispatch = LatencyHistogram::new();
+    let mut train = LatencyHistogram::new();
+    let mut aggregate = LatencyHistogram::new();
+    let mut round_hist = LatencyHistogram::new();
+    let mut completed_per_round = Vec::with_capacity(cfg.rounds);
+    let mut round_rng = Rng::new(cfg.seed ^ 0xD157);
+    for round in 1..=cfg.rounds as u64 {
+        let report = scheduling::run_round(&controller, round, &mut round_rng)
+            .with_context(|| format!("loadtest round {round}"))?;
+        let target = (cfg.quorum_fraction * report.participants as f64).ceil().max(1.0) as usize;
+        if report.completed < target {
+            bail!(
+                "loadtest round {round}: quorum never fired \
+                 ({}/{} completed, target {target})",
+                report.completed,
+                report.participants
+            );
+        }
+        dispatch.record(report.train_dispatch);
+        train.record(report.train_round);
+        aggregate.record(report.aggregation);
+        round_hist.record(report.federation_round);
+        completed_per_round.push(report.completed);
+    }
+
+    // --- No-wedged-streams gate ---------------------------------------
+    // Chaos victims may still be dripping their doomed uploads; advance
+    // the ingest clock in hour-sized jumps (far past both the idle and
+    // lifetime deadlines) until a GC sweep leaves nothing open. Attempts
+    // are finite, so a bounded poll converges or the gate fails.
+    let mut far = Instant::now();
+    let poll_deadline = Instant::now() + Duration::from_secs(20);
+    loop {
+        far += Duration::from_secs(3600);
+        let tick = far;
+        controller.ingest().set_clock(Arc::new(move || tick));
+        let _ = controller.ingest().gc_idle();
+        if controller.ingest().open_streams() == 0
+            && controller.ingest().wire_in_flight_bytes() == 0
+        {
+            break;
+        }
+        if Instant::now() >= poll_deadline {
+            bail!(
+                "loadtest: {} stream(s) still wedged ({} wire bytes in flight) \
+                 after forced GC",
+                controller.ingest().open_streams(),
+                controller.ingest().wire_in_flight_bytes()
+            );
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    let (community, community_round) =
+        controller.community().context("loadtest: community model vanished")?;
+    let mut upload = LatencyHistogram::new();
+    let mut learner_give_ups = 0u64;
+    let mut learner_fallbacks = 0u64;
+    for l in &learners {
+        for d in l.take_upload_timings() {
+            upload.record(d);
+        }
+        learner_give_ups += l.retry_give_ups();
+        learner_fallbacks += l.fallback_sends();
+    }
+
+    let report = LoadtestReport {
+        phases: vec![
+            ("dial", dial),
+            ("dispatch", dispatch),
+            ("train", train),
+            ("upload", upload),
+            ("aggregate", aggregate),
+            ("round", round_hist),
+        ],
+        fleet: learners.len(),
+        registered,
+        refused_dials: refused,
+        rounds_completed: completed_per_round.len(),
+        completed_per_round,
+        community_digest: model_digest(&community),
+        community_round,
+        streams_refused: controller.ingest().streams_refused(),
+        streams_gced: controller.ingest().streams_gced(),
+        retry_give_ups: controller.retry_give_ups() + learner_give_ups,
+        fallback_sends: controller.fallback_sends() + learner_fallbacks,
+        late_folds: controller.late_folds(),
+        peak_wire_ingest_bytes: controller.peak_wire_ingest_bytes(),
+    };
+    for mut s in servers {
+        s.shutdown();
+    }
+    Ok(report)
+}
+
+/// Chaos-vs-clean comparison.
+#[derive(Debug)]
+pub struct EquivalenceReport {
+    pub chaos: LoadtestReport,
+    pub clean: LoadtestReport,
+    /// Original fleet indices untouched by any chaos fault.
+    pub survivors: Vec<usize>,
+}
+
+/// The graceful-degradation acceptance gate: run the chaos scenario,
+/// then re-run ONLY the surviving learners with chaos off and a full
+/// quorum, and require the community models to be bitwise identical.
+/// Also asserts the chaos run closed every round at its quorum (no
+/// late-fold contamination of the aggregate).
+pub fn verify_chaos_equivalence(cfg: &LoadtestConfig) -> Result<EquivalenceReport> {
+    if cfg.chaos.is_off() {
+        bail!("chaos equivalence needs a chaos profile (cfg.chaos is off)");
+    }
+    if cfg.stream_chunk_bytes == 0 {
+        bail!(
+            "chaos equivalence requires the streamed data plane: sever / corrupt / \
+             slow-loris act on model chunks (set stream_chunk_bytes > 0)"
+        );
+    }
+    let chaos = run_loadtest(cfg)?;
+    if chaos.late_folds != 0 {
+        bail!(
+            "chaos run folded {} completion(s) through the late/staleness path — \
+             the aggregate is no longer the plain quorum set",
+            chaos.late_folds
+        );
+    }
+    let plans = cfg.chaos.plan_fleet(cfg.learners, cfg.seed);
+    let survivors: Vec<usize> = (0..cfg.learners).filter(|&i| plans[i].is_noop()).collect();
+    if survivors.is_empty() {
+        bail!("chaos profile leaves no survivors to compare against");
+    }
+    let mut clean_cfg = cfg.clone();
+    clean_cfg.chaos = ChaosSpec::default();
+    clean_cfg.quorum_fraction = 1.0;
+    let clean = run_filtered(&clean_cfg, Some(&survivors))?;
+    if chaos.community_digest != clean.community_digest {
+        bail!(
+            "community model diverged under chaos: {:#018x} (chaos, round {}) vs \
+             {:#018x} (clean survivors, round {})",
+            chaos.community_digest,
+            chaos.community_round,
+            clean.community_digest,
+            clean.community_round
+        );
+    }
+    Ok(EquivalenceReport { chaos, clean, survivors })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_loadtest_completes_with_full_phase_coverage() {
+        let mut cfg = LoadtestConfig::quick();
+        cfg.learners = 4;
+        cfg.rate = 500.0;
+        let report = run_loadtest(&cfg).unwrap();
+        assert_eq!(report.fleet, 4);
+        assert_eq!(report.registered, 4);
+        assert_eq!(report.refused_dials, 0);
+        assert_eq!(report.rounds_completed, 2);
+        assert_eq!(report.completed_per_round, vec![4, 4]);
+        assert_eq!(report.phase("dial").count(), 4);
+        assert_eq!(report.phase("round").count(), 2);
+        assert_eq!(report.phase("upload").count(), 8, "4 learners × 2 rounds");
+        assert!(report.phase("round").p99() > Duration::ZERO);
+        assert_ne!(report.community_digest, 0);
+        assert_eq!(report.retry_give_ups, 0);
+        assert_eq!(report.streams_gced, 0);
+        // The gated table renders one row per phase.
+        let md = report.table().to_markdown();
+        for phase in PHASES {
+            assert!(md.contains(phase), "missing {phase} in:\n{md}");
+        }
+    }
+
+    #[test]
+    fn loadtest_is_deterministic_in_outcome() {
+        let mut cfg = LoadtestConfig::quick();
+        cfg.learners = 3;
+        cfg.rate = 1000.0;
+        let a = run_loadtest(&cfg).unwrap();
+        let b = run_loadtest(&cfg).unwrap();
+        // Latencies differ run to run; the *math* must not.
+        assert_eq!(a.community_digest, b.community_digest);
+        assert_eq!(a.completed_per_round, b.completed_per_round);
+    }
+
+    #[test]
+    fn chaos_equivalence_holds_on_a_small_fleet() {
+        let mut cfg = LoadtestConfig::quick();
+        cfg.learners = 6;
+        cfg.rate = 1000.0;
+        // 1 severed + 1 slow-loris → 4 survivors; quorum 4/6.
+        cfg.chaos = ChaosSpec {
+            seed: 7,
+            sever_fraction: 0.2,
+            slow_loris: 1,
+            drip_ms: 5,
+            ..ChaosSpec::default()
+        };
+        cfg.quorum_fraction = 0.66;
+        let eq = verify_chaos_equivalence(&cfg).unwrap();
+        assert_eq!(eq.survivors.len(), 4);
+        assert_eq!(eq.chaos.completed_per_round, vec![4, 4]);
+        assert_eq!(eq.clean.completed_per_round, vec![4, 4]);
+        // Victims left evidence: give-ups from both victims' retries and
+        // GC'd streams from their abandoned uploads.
+        assert!(eq.chaos.retry_give_ups > 0);
+        assert!(eq.chaos.streams_gced > 0);
+        assert_eq!(eq.clean.retry_give_ups, 0);
+    }
+}

@@ -8,11 +8,15 @@
 //!   timing the six panels of Figs. 5–7 in isolation.
 //! * [`figures`] — the learner-count × framework sweeps for Figs. 5/6/7
 //!   and Table 2 (scaled-down by default; `FULL=1` for the paper's grid).
+//! * [`loadtest`] — the open-loop arrival harness: per-phase latency
+//!   histograms, chaos profiles, and graceful-degradation gates.
 
 pub mod figures;
+pub mod loadtest;
 pub mod runner;
 pub mod stress;
 
 pub use figures::{figure_sweep, FigureConfig, FigureResult};
+pub use loadtest::{run_loadtest, verify_chaos_equivalence, LoadtestConfig, LoadtestReport};
 pub use runner::{BenchRunner, ReportWriter};
 pub use stress::{stress_round, StressTimings};

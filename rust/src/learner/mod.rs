@@ -28,15 +28,19 @@ pub mod trainer;
 pub use data::Dataset;
 pub use trainer::{SyntheticTrainer, Trainer};
 
+use crate::net::chaos::{connect_with_chaos, ChaosPlan};
+use crate::net::retry::RetryPolicy;
 use crate::net::{ClientConn, Psk, Service};
 use crate::proto::client::{self, RpcError, StreamSend};
 use crate::proto::ingest::{StreamBegin, StreamIngest};
+use crate::proto::wire::{fnv1a64, FNV64_INIT};
 use crate::proto::{ErrorCode, Message, ModelProto, StreamPurpose, TaskSpec, PROTO_VERSION};
 use crate::tensor::{ByteOrder, CodecId, DType, TensorModel};
-use crate::util::{log_debug, log_warn, ThreadPool};
+use crate::util::{log_debug, log_warn, Rng, ThreadPool};
 use anyhow::Result;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 /// A learner node.
 pub struct Learner {
@@ -70,9 +74,24 @@ pub struct Learner {
     last_community: Mutex<Option<(u64, Arc<TensorModel>)>>,
     /// Inbound data-plane engine for streamed dispatch.
     ingest: StreamIngest,
+    /// Fault-injection plan for the callback connection (chaos
+    /// harness); `None` in production.
+    chaos: Mutex<Option<ChaosPlan>>,
+    /// Uploads abandoned after the retry policy's budget ran dry.
+    retry_give_ups: AtomicU64,
+    /// Streamed uploads that fell back from a base-needing codec to
+    /// full f32 (the receiver lacked the shared base).
+    fallback_sends: AtomicU64,
+    /// Wall-clock duration of each successful completion upload
+    /// (bounded; the loadtest harness drains it per run).
+    upload_timings: Mutex<Vec<Duration>>,
     shutdown: AtomicBool,
     tasks_completed: AtomicU64,
 }
+
+/// Cap on retained upload timings, so a long-lived learner does not
+/// grow the sample buffer unboundedly between harness drains.
+const MAX_UPLOAD_TIMINGS: usize = 4096;
 
 impl Learner {
     pub fn new(
@@ -96,9 +115,36 @@ impl Learner {
             delta_fallback: AtomicBool::new(true),
             last_community: Mutex::new(None),
             ingest: StreamIngest::default(),
+            chaos: Mutex::new(None),
+            retry_give_ups: AtomicU64::new(0),
+            fallback_sends: AtomicU64::new(0),
+            upload_timings: Mutex::new(Vec::new()),
             shutdown: AtomicBool::new(false),
             tasks_completed: AtomicU64::new(0),
         })
+    }
+
+    /// Route every future callback dial through a fault-injection plan
+    /// (chaos harness). The current connection, if any, is dropped so
+    /// the plan takes effect on the next call.
+    pub fn set_chaos(&self, plan: ChaosPlan) {
+        *self.chaos.lock().unwrap() = Some(plan);
+        *self.callback_conn.lock().unwrap() = None;
+    }
+
+    /// Uploads abandoned after the retry budget ran dry.
+    pub fn retry_give_ups(&self) -> u64 {
+        self.retry_give_ups.load(Ordering::SeqCst)
+    }
+
+    /// Streamed uploads that fell back to full f32.
+    pub fn fallback_sends(&self) -> u64 {
+        self.fallback_sends.load(Ordering::SeqCst)
+    }
+
+    /// Drain the recorded per-upload durations (loadtest harness).
+    pub fn take_upload_timings(&self) -> Vec<Duration> {
+        std::mem::take(&mut *self.upload_timings.lock().unwrap())
     }
 
     /// Upload completed models over the streaming data plane in chunks
@@ -163,8 +209,12 @@ impl Learner {
     ) -> Result<T, RpcError> {
         let mut guard = self.callback_conn.lock().unwrap();
         if guard.is_none() {
-            let mut conn = crate::net::connect(&self.controller_endpoint, self.psk)
-                .map_err(RpcError::Transport)?;
+            let plan = self.chaos.lock().unwrap().clone();
+            let mut conn = match &plan {
+                Some(p) => connect_with_chaos(&self.controller_endpoint, self.psk, p),
+                None => crate::net::connect(&self.controller_endpoint, self.psk),
+            }
+            .map_err(RpcError::Transport)?;
             let (_, accepted) = client::hello_negotiate(conn.as_mut())?;
             *self.accepted_codecs.lock().unwrap() = Some(accepted);
             *guard = Some(conn);
@@ -238,62 +288,110 @@ impl Learner {
     ) -> Result<()> {
         let (trained, meta) = self.trainer.train(model, &self.dataset, spec)?;
         let chunk = self.stream_chunk();
+        // Transport faults retry through the unified policy: each
+        // attempt re-dials (the connection is dropped on a transport
+        // error), streams under a FRESH stream id, and replays are
+        // idempotent — the controller's completed-task watermark drops
+        // duplicates, and any half-delivered stream from a failed
+        // attempt is reclaimed by the receiver's idle/lifetime GC.
+        // Remote application errors never retry.
+        let policy = RetryPolicy::rpc();
+        let mut rng = Rng::new(fnv1a64(FNV64_INIT, self.id.as_bytes()) ^ task_id);
+        let started = Instant::now();
+        let fallback = self.delta_fallback.load(Ordering::SeqCst);
         let upload = if chunk > 0 {
-            // Ensure the callback session (and its codec negotiation)
-            // exists before choosing a codec.
-            self.with_callback_conn(|_| Ok(()))
-                .map_err(|e| anyhow::anyhow!("controller handshake: {e}"))?;
-            let configured = self.upload_codec();
-            // Honor the peer's accepted set: a codec the controller
-            // negotiated away degrades along the lossless chain
-            // (delta-rle → delta → f32) instead of a refused Begin.
-            let configured = match self.accepted_codecs.lock().unwrap().as_ref() {
-                Some(accepted) => configured.degrade_to(accepted),
-                None => configured,
-            };
-            let (codec, base, base_round) = if configured.needs_base() {
-                match self.last_community.lock().unwrap().clone() {
-                    Some((r, m)) => (configured, Some(m), r),
-                    // No lossless streamed dispatch seen yet: full send.
-                    None => (CodecId::F32, None, 0),
-                }
-            } else {
-                (configured, None, 0)
-            };
-            let task_spec = TaskSpec::default();
-            let send = StreamSend {
-                purpose: StreamPurpose::TaskCompletion,
-                task_id,
-                round,
-                learner_id: &self.id,
-                model: &trained,
-                meta: &meta,
-                spec: &task_spec,
-                codec,
-                base: base.as_deref(),
-                base_round,
-                chunk_bytes: chunk.max(client::MIN_CHUNK_BYTES),
-            };
-            let fallback = self.delta_fallback.load(Ordering::SeqCst);
-            self.with_callback_conn(|conn| {
-                // The controller may have moved past our base (async
-                // staleness): retry full rather than dropping the round —
-                // unless the env asked refusals to surface
-                // (`delta_fallback: false`).
-                let rpc_fn = &mut |msg| client::rpc(&mut *conn, &msg);
-                if fallback {
-                    client::stream_model_with_fallback(rpc_fn, &send).map(|_| ())
-                } else {
-                    client::stream_model_with(rpc_fn, &send).map(|_| ())
-                }
-            })
+            // Each attempt returns whether the f32 fallback path fired.
+            policy.run(
+                &mut rng,
+                |_| {
+                    // Ensure the callback session (and its codec
+                    // negotiation) exists before choosing a codec — a
+                    // re-dial renegotiates.
+                    self.with_callback_conn(|_| Ok(()))?;
+                    let configured = self.upload_codec();
+                    // Honor the peer's accepted set: a codec the
+                    // controller negotiated away degrades along the
+                    // lossless chain (delta-rle → delta → f32) instead
+                    // of a refused Begin.
+                    let configured = match self.accepted_codecs.lock().unwrap().as_ref() {
+                        Some(accepted) => configured.degrade_to(accepted),
+                        None => configured,
+                    };
+                    let (codec, base, base_round) = if configured.needs_base() {
+                        match self.last_community.lock().unwrap().clone() {
+                            Some((r, m)) => (configured, Some(m), r),
+                            // No lossless streamed dispatch yet: full send.
+                            None => (CodecId::F32, None, 0),
+                        }
+                    } else {
+                        (configured, None, 0)
+                    };
+                    let task_spec = TaskSpec::default();
+                    let send = StreamSend {
+                        purpose: StreamPurpose::TaskCompletion,
+                        task_id,
+                        round,
+                        learner_id: &self.id,
+                        model: &trained,
+                        meta: &meta,
+                        spec: &task_spec,
+                        codec,
+                        base: base.as_deref(),
+                        base_round,
+                        chunk_bytes: chunk.max(client::MIN_CHUNK_BYTES),
+                    };
+                    self.with_callback_conn(|conn| {
+                        // The controller may have moved past our base
+                        // (async staleness): retry full rather than
+                        // dropping the round — unless the env asked
+                        // refusals to surface (`delta_fallback: false`).
+                        let rpc_fn = &mut |msg| client::rpc(&mut *conn, &msg);
+                        if fallback {
+                            client::stream_model_with_fallback_counted(rpc_fn, &send)
+                                .map(|(_, fell_back)| fell_back)
+                        } else {
+                            client::stream_model_with(rpc_fn, &send).map(|_| false)
+                        }
+                    })
+                },
+                |e| e.is_transport(),
+            )
         } else {
-            let proto = ModelProto::from_model(&trained, DType::F32, ByteOrder::Little);
-            self.with_callback_conn(|conn| {
-                client::mark_task_completed(conn, task_id, &self.id, proto, meta)
-            })
+            policy.run(
+                &mut rng,
+                |_| {
+                    let proto = ModelProto::from_model(&trained, DType::F32, ByteOrder::Little);
+                    self.with_callback_conn(|conn| {
+                        client::mark_task_completed(conn, task_id, &self.id, proto, meta.clone())
+                    })
+                    .map(|()| false)
+                },
+                |e| e.is_transport(),
+            )
         };
-        upload.map_err(|e| anyhow::anyhow!("completion callback: {e}"))
+        match upload {
+            Ok(fell_back) => {
+                if fell_back {
+                    self.fallback_sends.fetch_add(1, Ordering::SeqCst);
+                }
+                let mut timings = self.upload_timings.lock().unwrap();
+                if timings.len() < MAX_UPLOAD_TIMINGS {
+                    timings.push(started.elapsed());
+                }
+                Ok(())
+            }
+            Err(give_up) => {
+                if give_up.exhausted {
+                    self.retry_give_ups.fetch_add(1, Ordering::SeqCst);
+                }
+                anyhow::bail!(
+                    "completion callback: gave up after {} attempts in {:?}: {}",
+                    give_up.attempts,
+                    give_up.elapsed,
+                    give_up.last_error
+                )
+            }
+        }
     }
 
     /// Record a lossless streamed dispatch as the new delta base.

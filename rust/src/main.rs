@@ -7,6 +7,7 @@
 //! * `metisfl learner --env <file> --index <i> --controller <ep>`
 //! * `metisfl simulate [...]`           — quick in-proc federation
 //! * `metisfl stress [...]`             — one cross-framework stress cell
+//! * `metisfl loadtest [...]`           — open-loop arrivals + chaos gates
 //! * `metisfl table1`                   — print the qualitative matrix
 //!
 //! Multi-process deployment: start the controller first, then learners,
@@ -31,7 +32,7 @@ fn main() {
 }
 
 fn usage() -> String {
-    "metisfl <driver|controller|learner|simulate|stress|table1|bench-check> [options]\n\
+    "metisfl <driver|controller|learner|simulate|stress|loadtest|table1|bench-check> [options]\n\
      Run `metisfl <subcommand> --help` for options."
         .to_string()
 }
@@ -48,6 +49,7 @@ fn run(args: &[String]) -> anyhow::Result<()> {
         "learner" => cmd_learner(rest),
         "simulate" => cmd_simulate(rest),
         "stress" => cmd_stress(rest),
+        "loadtest" => cmd_loadtest(rest),
         "table1" => {
             println!("{}", metisfl::baselines::capabilities::render_table());
             Ok(())
@@ -221,6 +223,88 @@ fn cmd_stress(raw: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn cmd_loadtest(raw: &[String]) -> anyhow::Result<()> {
+    let cmd = Command::new(
+        "metisfl loadtest",
+        "open-loop arrival loadtest: per-phase p50/p99/p999 + chaos degradation gates",
+    )
+    .opt("env", None, "env file supplying fleet/model/chaos/quorum settings")
+    .opt("learners", Some("8"), "fleet size")
+    .opt("rate", Some("200"), "open-loop arrival rate, learners/second")
+    .opt("rounds", Some("2"), "federation rounds")
+    .opt("seed", Some("42"), "run seed (chaos, arrivals, data shards)")
+    .opt("chunk", Some("2048"), "stream chunk bytes (chaos faults act on chunks)")
+    .opt("quorum", Some("1.0"), "deadline-quorum fraction (1.0 = full barrier)")
+    .flag("quick", "CI smoke preset (ignores the sizing options)")
+    .flag(
+        "verify-equivalence",
+        "re-run the surviving fleet without chaos; fail unless the community \
+         model matches bitwise",
+    );
+    let a = parse(&cmd, raw)?;
+    let mut cfg = metisfl::harness::LoadtestConfig::quick();
+    if !a.flag("quick") {
+        cfg.learners = a.get_usize("learners")?;
+        cfg.rate = a.get_f64("rate")?;
+        cfg.rounds = a.get_usize("rounds")?;
+        cfg.seed = a.get_u64("seed")?;
+        cfg.stream_chunk_bytes = a.get_usize("chunk")?;
+        cfg.quorum_fraction = a.get_f64("quorum")?;
+    }
+    if let Some(env_file) = a.get("env") {
+        // The env file wins for everything it can express; CLI sizing
+        // flags only apply to env-less runs.
+        let env = FederationEnv::from_file(env_file)?;
+        cfg.learners = env.learners;
+        cfg.rounds = env.rounds;
+        cfg.model = env.model.clone();
+        cfg.chaos = env.chaos.clone();
+        cfg.quorum_fraction = env.quorum_fraction;
+        cfg.stream_chunk_bytes = env.stream_chunk_bytes;
+        cfg.task_timeout_ms = env.task_timeout_ms;
+        cfg.seed = env.seed;
+        if let TrainerKind::Synthetic { step_time_us, .. } = &env.trainer {
+            cfg.step_time_us = *step_time_us;
+        }
+    }
+    let report = if a.flag("verify-equivalence") {
+        let eq = metisfl::harness::verify_chaos_equivalence(&cfg)?;
+        println!(
+            "chaos equivalence OK: community digest {:#018x} reproduced by {} \
+             survivor(s) without chaos",
+            eq.chaos.community_digest,
+            eq.survivors.len()
+        );
+        eq.chaos
+    } else {
+        metisfl::harness::run_loadtest(&cfg)?
+    };
+    report.table().emit()?;
+    println!(
+        "fleet {} · registered {} · dials refused {} · rounds {} · completions/round {:?}",
+        report.fleet,
+        report.registered,
+        report.refused_dials,
+        report.rounds_completed,
+        report.completed_per_round,
+    );
+    println!(
+        "degradation: retry give-ups {} · streams refused {} · streams gc'd {} · \
+         delta fallbacks {} · late folds {} · peak ingest {} B",
+        report.retry_give_ups,
+        report.streams_refused,
+        report.streams_gced,
+        report.fallback_sends,
+        report.late_folds,
+        report.peak_wire_ingest_bytes,
+    );
+    println!(
+        "community model: round {} digest {:#018x}",
+        report.community_round, report.community_digest
+    );
+    Ok(())
+}
+
 /// Metrics the CI perf gate tracks: (report name, column, lower-is-
 /// better). Every row of the named report contributes a
 /// `<report>/<row>/<column>` metric; which ones actually gate is
@@ -239,6 +323,11 @@ const GATED_METRICS: &[(&str, &str, bool)] = &[
     // fleet: lower is better; a ratio drifting toward 1.0 means the
     // pacing/quorum machinery stopped absorbing stragglers.
     ("sched_ablation", "spread frac of sync", true),
+    // Loadtest round/upload p99 latency floors: lower is better. An
+    // exception to the no-timing rule above — p99 over the open-loop
+    // run is far less noisy than a single wall-clock sample, and the
+    // committed baseline leaves generous headroom for shared CI cores.
+    ("loadtest", "p99_ms", true),
 ];
 
 /// Is the named metric lower-is-better? (Direction travels with the

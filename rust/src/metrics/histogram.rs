@@ -1,0 +1,223 @@
+//! Log-bucketed latency histogram (HDR-style, fixed memory).
+//!
+//! `LatencyHistogram` records nanosecond durations into buckets whose
+//! width grows geometrically: 32 sub-buckets per power-of-two octave,
+//! which bounds the relative quantile error at ~3% regardless of the
+//! recorded range (1 ns … ~584 years fits in the same 1920 buckets).
+//! This is the open-loop loadtest's measurement substrate: recording is
+//! O(1) with no allocation after construction, so the arrival threads
+//! can stamp every phase without perturbing the latencies they measure.
+
+use std::time::Duration;
+
+/// Sub-buckets per octave. 32 ⇒ worst-case relative error of one part
+/// in 32 (~3.1%) on any reported quantile.
+const SUBS: u64 = 32;
+
+/// Highest bucket index + 1 for 64-bit nanosecond values (see
+/// [`bucket_of`]: shift ∈ [0, 58] ⇒ max index 59·32 + 31 = 1919).
+const N_BUCKETS: usize = 1920;
+
+/// Bucket index for a nanosecond value.
+fn bucket_of(ns: u64) -> usize {
+    if ns < SUBS {
+        // Values below one octave of sub-buckets are exact.
+        return ns as usize;
+    }
+    let msb = 63 - ns.leading_zeros() as u64; // ≥ 5 here
+    let shift = msb - 5;
+    ((shift + 1) * SUBS + ((ns >> shift) - SUBS)) as usize
+}
+
+/// Upper edge (inclusive) of a bucket, in nanoseconds — quantiles report
+/// this edge, so they over-estimate by at most one sub-bucket width.
+fn bucket_value(idx: usize) -> u64 {
+    let idx = idx as u64;
+    if idx < SUBS {
+        return idx;
+    }
+    let shift = idx / SUBS - 1;
+    let m = idx % SUBS;
+    ((SUBS + m + 1) << shift) - 1
+}
+
+/// Fixed-size log-bucketed histogram of durations.
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    counts: Vec<u64>,
+    count: u64,
+    total_ns: u128,
+    max_ns: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> LatencyHistogram {
+        LatencyHistogram { counts: vec![0; N_BUCKETS], count: 0, total_ns: 0, max_ns: 0 }
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        self.record_ns(u64::try_from(d.as_nanos()).unwrap_or(u64::MAX));
+    }
+
+    pub fn record_ns(&mut self, ns: u64) {
+        self.counts[bucket_of(ns)] += 1;
+        self.count += 1;
+        self.total_ns += ns as u128;
+        self.max_ns = self.max_ns.max(ns);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// The exact maximum recorded value (not bucket-quantized).
+    pub fn max(&self) -> Duration {
+        Duration::from_nanos(self.max_ns)
+    }
+
+    pub fn mean(&self) -> Duration {
+        if self.count == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_nanos((self.total_ns / self.count as u128) as u64)
+    }
+
+    /// Quantile `q ∈ [0, 1]` as the upper edge of the bucket holding the
+    /// `ceil(q·n)`-th smallest sample (so `quantile(1.0)` covers the
+    /// maximum and `quantile(0.0)` degrades to the smallest sample).
+    pub fn quantile(&self, q: f64) -> Duration {
+        if self.count == 0 {
+            return Duration::ZERO;
+        }
+        let target = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (idx, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                // Never report past the true maximum: the top bucket's
+                // edge can exceed it by a sub-bucket width.
+                return Duration::from_nanos(bucket_value(idx).min(self.max_ns));
+            }
+        }
+        self.max()
+    }
+
+    pub fn p50(&self) -> Duration {
+        self.quantile(0.50)
+    }
+
+    pub fn p99(&self) -> Duration {
+        self.quantile(0.99)
+    }
+
+    pub fn p999(&self) -> Duration {
+        self.quantile(0.999)
+    }
+
+    /// Fold another histogram into this one.
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.total_ns += other.total_ns;
+        self.max_ns = self.max_ns.max(other.max_ns);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_are_monotone_and_contiguous() {
+        // Every value maps into a bucket whose upper edge is ≥ it, and
+        // bucket indices never decrease as values grow.
+        let mut prev = (0u64, 0usize);
+        for exp in 0..63u32 {
+            for probe in [1u64 << exp, (1u64 << exp) + 1, (1u64 << exp) + (1u64 << exp) / 2] {
+                let idx = bucket_of(probe);
+                if probe >= prev.0 {
+                    assert!(idx >= prev.1, "non-monotone at {probe}");
+                    prev = (probe, idx);
+                }
+                assert!(bucket_value(idx) >= probe, "edge below value at {probe}");
+                assert!(idx < N_BUCKETS);
+            }
+        }
+        assert_eq!(bucket_of(u64::MAX), N_BUCKETS - 1);
+    }
+
+    #[test]
+    fn relative_error_is_bounded() {
+        // The reported edge overshoots the true value by < 1/32 + one
+        // bucket's rounding for values above the exact range.
+        for &v in &[100u64, 1_000, 50_000, 1_000_000, 123_456_789] {
+            let edge = bucket_value(bucket_of(v));
+            assert!(edge >= v);
+            assert!(
+                (edge - v) as f64 / v as f64 <= 1.0 / 32.0 + 1e-9,
+                "error too large for {v}: edge {edge}"
+            );
+        }
+    }
+
+    #[test]
+    fn quantiles_of_a_known_distribution() {
+        let mut h = LatencyHistogram::new();
+        // 100 samples: 1ms … 100ms.
+        for i in 1..=100u64 {
+            h.record(Duration::from_millis(i));
+        }
+        assert_eq!(h.count(), 100);
+        let p50 = h.p50().as_millis() as f64;
+        let p99 = h.p99().as_millis() as f64;
+        assert!((48.0..=53.0).contains(&p50), "p50 = {p50}ms");
+        assert!((96.0..=103.0).contains(&p99), "p99 = {p99}ms");
+        assert_eq!(h.max(), Duration::from_millis(100));
+        // p999 of 100 samples is the max bucket, capped at true max.
+        assert!(h.p999() <= h.max());
+        let mean = h.mean().as_millis();
+        assert!((50..=51).contains(&mean), "mean = {mean}ms");
+    }
+
+    #[test]
+    fn empty_histogram_reports_zero() {
+        let h = LatencyHistogram::new();
+        assert!(h.is_empty());
+        assert_eq!(h.quantile(0.99), Duration::ZERO);
+        assert_eq!(h.mean(), Duration::ZERO);
+        assert_eq!(h.max(), Duration::ZERO);
+    }
+
+    #[test]
+    fn merge_is_equivalent_to_recording_everything_in_one() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        let mut all = LatencyHistogram::new();
+        for i in 0..50u64 {
+            a.record_ns(i * 1000);
+            all.record_ns(i * 1000);
+        }
+        for i in 50..90u64 {
+            b.record_ns(i * 777);
+            all.record_ns(i * 777);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), all.count());
+        assert_eq!(a.max(), all.max());
+        for q in [0.5, 0.9, 0.99, 0.999] {
+            assert_eq!(a.quantile(q), all.quantile(q));
+        }
+    }
+}

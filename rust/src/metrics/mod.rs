@@ -7,6 +7,8 @@
 //! accumulates wall-clock samples per op; [`RoundReport`] is the per-round
 //! record the driver returns and the bench harness aggregates.
 
+pub mod histogram;
+
 use crate::util::stopwatch::OpTimer;
 use crate::util::Summary;
 use std::collections::BTreeMap;

@@ -1,0 +1,487 @@
+//! Deterministic fault injection for the data plane.
+//!
+//! A [`ChaosConn`] wraps any [`ClientConn`] and injects the connection
+//! faults a federation actually meets in the wild — refused dials,
+//! connections severed mid-stream after N sends, slow-loris trickle
+//! (chunks dripped below the idle-GC radar with the closing `End`
+//! suppressed, so the stream holds receiver budget), stalls (request
+//! accepted, reply never comes), duplicate delivery of control-plane
+//! messages, and corrupt-frame floods on the chunked model stream.
+//!
+//! Faults are *planned*, not sampled at runtime: a [`ChaosSpec`]
+//! (loaded from an env file's `chaos:` block) is expanded once by
+//! [`ChaosSpec::plan_fleet`] into one [`ChaosPlan`] per learner with a
+//! seeded shuffle, so the same `(spec, seed, fleet size)` always
+//! afflicts the same learners the same way — every chaos scenario is
+//! reproducible from the yaml file that described it. Sever state is
+//! shared across re-dials (an [`Arc`]ed counter), so a severed peer
+//! stays dead no matter how many times the retry policy re-dials it.
+
+use super::{ClientConn, Psk};
+use crate::proto::Message;
+use crate::util::Rng;
+use anyhow::{bail, Result};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Fleet-level chaos description, as written in an env file:
+///
+/// ```yaml
+/// chaos:
+///   seed: 7
+///   sever_fraction: 0.2     # fleet fraction severed mid-stream
+///   sever_after_sends: 4
+///   slow_loris: 1           # learners that trickle and never finish
+///   drip_ms: 20
+///   corrupt: 1              # corrupt-frame flooders
+/// ```
+///
+/// Fractions are rounded to learner counts; faults are assigned to
+/// *distinct* learners in a seeded shuffled order (sever, refuse,
+/// stall, duplicate, slow-loris, corrupt), so overlapping requests
+/// spill into "no fault" rather than stacking.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChaosSpec {
+    /// Mixed with the run seed when assigning plans, so one env file
+    /// can describe several distinct (but each reproducible) scenarios.
+    pub seed: u64,
+    /// Fraction of the fleet whose callback connection is severed after
+    /// `sever_after_sends` sends (shared across re-dials: severed peers
+    /// stay dead).
+    pub sever_fraction: f64,
+    pub sever_after_sends: u64,
+    /// Fraction of the fleet whose dials are refused outright.
+    pub refuse_fraction: f64,
+    /// Fraction of the fleet that stalls: requests are accepted but no
+    /// reply ever comes (emulated by holding `recv` for `stall_ms`).
+    pub stall_fraction: f64,
+    pub stall_ms: u64,
+    /// Fraction of the fleet that delivers control-plane messages
+    /// (completions, heartbeats) twice — the replay path the
+    /// completed-task watermarks must absorb.
+    pub duplicate_fraction: f64,
+    /// Number of slow-loris learners: every model chunk is dripped
+    /// after a `drip_ms` sleep and the closing `End` is suppressed, so
+    /// the receiver's stream stays open, pinning its admission budget
+    /// until the lifetime GC reclaims it.
+    pub slow_loris: usize,
+    pub drip_ms: u64,
+    /// Number of corrupt-frame flooders: every model chunk's payload is
+    /// corrupted before sending (digest/frame validation must reject
+    /// the stream, never accept the garbage).
+    pub corrupt: usize,
+}
+
+impl Default for ChaosSpec {
+    fn default() -> ChaosSpec {
+        ChaosSpec {
+            seed: 0,
+            sever_fraction: 0.0,
+            sever_after_sends: 4,
+            refuse_fraction: 0.0,
+            stall_fraction: 0.0,
+            stall_ms: 30_000,
+            duplicate_fraction: 0.0,
+            slow_loris: 0,
+            drip_ms: 20,
+            corrupt: 0,
+        }
+    }
+}
+
+impl ChaosSpec {
+    /// True when no fault is configured (the default): every plan this
+    /// spec produces is a no-op and connections go unwrapped.
+    pub fn is_off(&self) -> bool {
+        self.sever_fraction == 0.0
+            && self.refuse_fraction == 0.0
+            && self.stall_fraction == 0.0
+            && self.duplicate_fraction == 0.0
+            && self.slow_loris == 0
+            && self.corrupt == 0
+    }
+
+    /// Check invariants (env loaders call this via
+    /// [`crate::config::FederationEnv::validate`]).
+    pub fn validate(&self) -> Result<()> {
+        for (name, f) in [
+            ("sever_fraction", self.sever_fraction),
+            ("refuse_fraction", self.refuse_fraction),
+            ("stall_fraction", self.stall_fraction),
+            ("duplicate_fraction", self.duplicate_fraction),
+        ] {
+            if !(0.0..=1.0).contains(&f) {
+                bail!("chaos {name} must be in [0, 1]");
+            }
+        }
+        if self.sever_fraction > 0.0 && self.sever_after_sends == 0 {
+            bail!("chaos sever_after_sends must be >= 1");
+        }
+        Ok(())
+    }
+
+    /// Expand the spec into one plan per learner, deterministically:
+    /// the same `(spec, run_seed, learners)` triple always produces the
+    /// same assignment. Faults go to distinct learners in a seeded
+    /// shuffled order; if the requested counts exceed the fleet, the
+    /// excess is dropped (never stacked).
+    pub fn plan_fleet(&self, learners: usize, run_seed: u64) -> Vec<ChaosPlan> {
+        let mut plans = vec![ChaosPlan::default(); learners];
+        if self.is_off() || learners == 0 {
+            return plans;
+        }
+        let mut rng =
+            Rng::new(run_seed ^ self.seed.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ 0xC4A0_5EED);
+        let mut order: Vec<usize> = (0..learners).collect();
+        rng.shuffle(&mut order);
+        let mut next = order.into_iter();
+        let count = |f: f64| ((f * learners as f64).round() as usize).min(learners);
+        for _ in 0..count(self.sever_fraction) {
+            let Some(i) = next.next() else { return plans };
+            plans[i].sever_after_sends = Some(self.sever_after_sends.max(1));
+        }
+        for _ in 0..count(self.refuse_fraction) {
+            let Some(i) = next.next() else { return plans };
+            plans[i].refuse_dial = true;
+        }
+        for _ in 0..count(self.stall_fraction) {
+            let Some(i) = next.next() else { return plans };
+            plans[i].hold = Some(Duration::from_millis(self.stall_ms));
+        }
+        for _ in 0..count(self.duplicate_fraction) {
+            let Some(i) = next.next() else { return plans };
+            plans[i].duplicate = true;
+        }
+        for _ in 0..self.slow_loris {
+            let Some(i) = next.next() else { return plans };
+            plans[i].drip = Some(Duration::from_millis(self.drip_ms));
+        }
+        for _ in 0..self.corrupt {
+            let Some(i) = next.next() else { return plans };
+            plans[i].corrupt_frames = true;
+        }
+        plans
+    }
+}
+
+/// Sever state shared across every connection (and re-dial) of one
+/// afflicted learner: once the send budget is spent, the peer is dead
+/// for good — the retry policy must give up, not resurrect it.
+#[derive(Debug, Default)]
+struct ChaosState {
+    sends: AtomicU64,
+    severed: AtomicBool,
+}
+
+/// One learner's fault assignment. Cloning shares the sever state, so
+/// the plan can be handed to every re-dial of the same peer.
+#[derive(Debug, Clone, Default)]
+pub struct ChaosPlan {
+    /// Every dial attempt is refused.
+    pub refuse_dial: bool,
+    /// Sever the connection permanently after this many sends (counted
+    /// across re-dials).
+    pub sever_after_sends: Option<u64>,
+    /// Slow-loris: sleep this long before each model chunk and suppress
+    /// the closing `End`, holding the receiver's stream open.
+    pub drip: Option<Duration>,
+    /// Stall: hold every `recv` this long, then fail (the peer accepted
+    /// the request and never replied).
+    pub hold: Option<Duration>,
+    /// Deliver completions/heartbeats twice (watermark replay test).
+    pub duplicate: bool,
+    /// Corrupt every model chunk's payload before sending.
+    pub corrupt_frames: bool,
+    state: Arc<ChaosState>,
+}
+
+impl ChaosPlan {
+    /// A plan with no faults: connections go unwrapped.
+    pub fn is_noop(&self) -> bool {
+        !self.refuse_dial
+            && self.sever_after_sends.is_none()
+            && self.drip.is_none()
+            && self.hold.is_none()
+            && !self.duplicate
+            && !self.corrupt_frames
+    }
+
+    /// True once the sever budget is spent (the peer is gone for good).
+    pub fn severed(&self) -> bool {
+        self.state.severed.load(Ordering::SeqCst)
+    }
+}
+
+/// Dial through a chaos plan: refuse/sever faults apply at connect
+/// time; all other faults wrap the live connection. A no-op plan
+/// returns the raw connection with zero overhead.
+pub fn connect_with_chaos(
+    endpoint: &str,
+    psk: Psk,
+    plan: &ChaosPlan,
+) -> Result<Box<dyn ClientConn>> {
+    if plan.is_noop() {
+        return crate::net::connect(endpoint, psk);
+    }
+    if plan.refuse_dial {
+        bail!("chaos: dial to {endpoint} refused");
+    }
+    if plan.severed() {
+        bail!("chaos: peer severed, re-dial refused");
+    }
+    let inner = crate::net::connect(endpoint, psk)?;
+    Ok(Box::new(ChaosConn { inner, plan: plan.clone() }))
+}
+
+/// A [`ClientConn`] that injects the faults its [`ChaosPlan`] calls
+/// for, deterministically, while keeping request/reply pairing intact
+/// (duplicates drain their own extra reply).
+pub struct ChaosConn {
+    inner: Box<dyn ClientConn>,
+    plan: ChaosPlan,
+}
+
+impl ChaosConn {
+    /// Count one send against the sever budget; severs permanently when
+    /// the budget is spent.
+    fn check_sever(&self) -> Result<()> {
+        let Some(limit) = self.plan.sever_after_sends else { return Ok(()) };
+        if self.plan.severed() {
+            bail!("chaos: connection severed");
+        }
+        let n = self.plan.state.sends.fetch_add(1, Ordering::SeqCst) + 1;
+        if n > limit {
+            self.plan.state.severed.store(true, Ordering::SeqCst);
+            bail!("chaos: connection severed after {limit} sends");
+        }
+        Ok(())
+    }
+}
+
+impl ClientConn for ChaosConn {
+    fn send(&mut self, msg: &Message) -> Result<()> {
+        self.check_sever()?;
+        if let Some(drip) = self.plan.drip {
+            if matches!(msg, Message::ModelChunk { .. }) {
+                std::thread::sleep(drip);
+            }
+            if matches!(msg, Message::ModelStreamEnd { .. }) {
+                // The loris never closes: the receiver's stream stays
+                // open, pinning budget until its lifetime GC fires.
+                bail!("chaos: slow-loris suppressed the stream end");
+            }
+        }
+        if self.plan.corrupt_frames {
+            if let Message::ModelChunk { stream_id, seq, bytes } = msg {
+                let mut bad = bytes.clone();
+                for b in bad.iter_mut().take(16) {
+                    *b ^= 0xA5;
+                }
+                return self
+                    .inner
+                    .send(&Message::ModelChunk { stream_id: *stream_id, seq: *seq, bytes: bad });
+            }
+        }
+        if self.plan.duplicate
+            && matches!(msg, Message::MarkTaskCompleted { .. } | Message::Heartbeat { .. })
+        {
+            // Full extra delivery: the receiver handles the message
+            // twice; draining the duplicate's reply here keeps the
+            // caller's send/recv pairing strict.
+            self.inner.send(msg)?;
+            let _ = self.inner.recv()?;
+        }
+        self.inner.send(msg)
+    }
+
+    fn send_raw(&mut self, bytes: &[u8]) -> Result<()> {
+        self.check_sever()?;
+        self.inner.send_raw(bytes)
+    }
+
+    fn recv(&mut self) -> Result<Message> {
+        if self.plan.severed() {
+            bail!("chaos: connection severed");
+        }
+        if let Some(hold) = self.plan.hold {
+            std::thread::sleep(hold);
+            bail!("chaos: stalled peer never replied");
+        }
+        self.inner.recv()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::{serve, Service};
+    use crate::proto::ErrorCode;
+    use std::sync::Mutex;
+
+    /// Echo-ish service recording what it saw.
+    struct Probe {
+        heartbeats: AtomicU64,
+        chunks: Mutex<Vec<Vec<u8>>>,
+    }
+
+    impl Probe {
+        fn new() -> Probe {
+            Probe { heartbeats: AtomicU64::new(0), chunks: Mutex::new(Vec::new()) }
+        }
+    }
+
+    impl Service for Probe {
+        fn handle(&self, msg: Message) -> Message {
+            match msg {
+                Message::Heartbeat { from } => {
+                    self.heartbeats.fetch_add(1, Ordering::SeqCst);
+                    Message::HeartbeatAck { component: from, healthy: true }
+                }
+                Message::ModelChunk { stream_id, bytes, .. } => {
+                    self.chunks.lock().unwrap().push(bytes);
+                    Message::Ack { task_id: stream_id, ok: true }
+                }
+                other => Message::error(ErrorCode::Unsupported, other.kind()),
+            }
+        }
+    }
+
+    fn hb() -> Message {
+        Message::Heartbeat { from: "chaos-test".into() }
+    }
+
+    #[test]
+    fn noop_plan_passes_through_unwrapped() {
+        let probe = Arc::new(Probe::new());
+        let server = serve("inproc://chaos-noop", Arc::clone(&probe) as _, None).unwrap();
+        let plan = ChaosPlan::default();
+        assert!(plan.is_noop());
+        let mut conn = connect_with_chaos(&server.endpoint(), None, &plan).unwrap();
+        assert!(matches!(conn.rpc(&hb()).unwrap(), Message::HeartbeatAck { .. }));
+        assert_eq!(probe.heartbeats.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn refuse_dial_fails_at_connect() {
+        let plan = ChaosPlan { refuse_dial: true, ..ChaosPlan::default() };
+        let err = connect_with_chaos("inproc://chaos-refused", None, &plan).unwrap_err();
+        assert!(format!("{err:#}").contains("refused"), "{err:#}");
+    }
+
+    #[test]
+    fn sever_kills_the_connection_permanently_across_redials() {
+        let probe = Arc::new(Probe::new());
+        let server = serve("inproc://chaos-sever", Arc::clone(&probe) as _, None).unwrap();
+        let plan = ChaosPlan { sever_after_sends: Some(2), ..ChaosPlan::default() };
+        let mut conn = connect_with_chaos(&server.endpoint(), None, &plan).unwrap();
+        assert!(conn.rpc(&hb()).is_ok());
+        assert!(conn.rpc(&hb()).is_ok());
+        let err = conn.rpc(&hb()).unwrap_err();
+        assert!(format!("{err:#}").contains("severed"), "{err:#}");
+        assert!(plan.severed());
+        // A re-dial with the same plan shares the sever state: the peer
+        // stays dead, the retry policy must give up.
+        let err = connect_with_chaos(&server.endpoint(), None, &plan).unwrap_err();
+        assert!(format!("{err:#}").contains("severed"), "{err:#}");
+        assert_eq!(probe.heartbeats.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn duplicate_delivers_control_messages_twice() {
+        let probe = Arc::new(Probe::new());
+        let server = serve("inproc://chaos-dup", Arc::clone(&probe) as _, None).unwrap();
+        let plan = ChaosPlan { duplicate: true, ..ChaosPlan::default() };
+        let mut conn = connect_with_chaos(&server.endpoint(), None, &plan).unwrap();
+        // One rpc from the caller's view; the service saw it twice and
+        // the reply pairing stayed strict (the next rpc still works).
+        assert!(matches!(conn.rpc(&hb()).unwrap(), Message::HeartbeatAck { .. }));
+        assert_eq!(probe.heartbeats.load(Ordering::SeqCst), 2);
+        assert!(conn.rpc(&hb()).is_ok());
+        assert_eq!(probe.heartbeats.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn corrupt_frames_mangle_chunk_payloads_only() {
+        let probe = Arc::new(Probe::new());
+        let server = serve("inproc://chaos-corrupt", Arc::clone(&probe) as _, None).unwrap();
+        let plan = ChaosPlan { corrupt_frames: true, ..ChaosPlan::default() };
+        let mut conn = connect_with_chaos(&server.endpoint(), None, &plan).unwrap();
+        let clean = vec![1u8, 2, 3, 4];
+        let msg = Message::ModelChunk { stream_id: 9, seq: 0, bytes: clean.clone() };
+        assert!(matches!(conn.rpc(&msg).unwrap(), Message::Ack { ok: true, .. }));
+        let seen = probe.chunks.lock().unwrap();
+        assert_eq!(seen.len(), 1);
+        assert_ne!(seen[0], clean, "payload must arrive corrupted");
+        assert_eq!(seen[0].len(), clean.len());
+    }
+
+    #[test]
+    fn slow_loris_drips_chunks_and_suppresses_end() {
+        let probe = Arc::new(Probe::new());
+        let server = serve("inproc://chaos-loris", Arc::clone(&probe) as _, None).unwrap();
+        let plan = ChaosPlan { drip: Some(Duration::from_millis(1)), ..ChaosPlan::default() };
+        let mut conn = connect_with_chaos(&server.endpoint(), None, &plan).unwrap();
+        let chunk = Message::ModelChunk { stream_id: 5, seq: 0, bytes: vec![0u8; 8] };
+        assert!(conn.rpc(&chunk).is_ok());
+        let err = conn.send(&Message::ModelStreamEnd { stream_id: 5, digest: 0 }).unwrap_err();
+        assert!(format!("{err:#}").contains("slow-loris"), "{err:#}");
+    }
+
+    #[test]
+    fn stall_holds_then_fails_recv() {
+        let probe = Arc::new(Probe::new());
+        let server = serve("inproc://chaos-stall", Arc::clone(&probe) as _, None).unwrap();
+        let plan = ChaosPlan { hold: Some(Duration::from_millis(20)), ..ChaosPlan::default() };
+        let mut conn = connect_with_chaos(&server.endpoint(), None, &plan).unwrap();
+        let start = std::time::Instant::now();
+        let err = conn.rpc(&hb()).unwrap_err();
+        assert!(start.elapsed() >= Duration::from_millis(20));
+        assert!(format!("{err:#}").contains("stalled"), "{err:#}");
+    }
+
+    #[test]
+    fn plan_fleet_is_deterministic_and_disjoint() {
+        let spec = ChaosSpec {
+            sever_fraction: 0.2,
+            slow_loris: 1,
+            corrupt: 1,
+            ..ChaosSpec::default()
+        };
+        let a = spec.plan_fleet(20, 42);
+        let b = spec.plan_fleet(20, 42);
+        assert_eq!(a.len(), 20);
+        let describe = |plans: &[ChaosPlan]| {
+            plans
+                .iter()
+                .map(|p| {
+                    let d = (p.drip, p.hold, p.duplicate, p.corrupt_frames);
+                    (p.refuse_dial, p.sever_after_sends, d)
+                })
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(describe(&a), describe(&b), "same seed, same assignment");
+        let severed = a.iter().filter(|p| p.sever_after_sends.is_some()).count();
+        let loris = a.iter().filter(|p| p.drip.is_some()).count();
+        let corrupt = a.iter().filter(|p| p.corrupt_frames).count();
+        assert_eq!((severed, loris, corrupt), (4, 1, 1));
+        // Faults land on distinct learners.
+        let afflicted = a.iter().filter(|p| !p.is_noop()).count();
+        assert_eq!(afflicted, 6);
+        // A different seed moves the assignment.
+        let c = spec.plan_fleet(20, 43);
+        assert_ne!(describe(&a), describe(&c));
+    }
+
+    #[test]
+    fn spec_validates_and_defaults_off() {
+        let spec = ChaosSpec::default();
+        assert!(spec.is_off());
+        assert!(spec.validate().is_ok());
+        assert!(spec.plan_fleet(4, 1).iter().all(|p| p.is_noop()));
+        let bad = ChaosSpec { sever_fraction: 1.5, ..ChaosSpec::default() };
+        assert!(bad.validate().is_err());
+        let bad = ChaosSpec { sever_fraction: 0.5, sever_after_sends: 0, ..ChaosSpec::default() };
+        assert!(bad.validate().is_err());
+    }
+}

@@ -68,8 +68,10 @@
 //! The streamed and one-shot paths are property-tested
 //! bitwise-identical for the lossless codecs; bf16 is bounded-error.
 
+pub mod chaos;
 pub mod frame;
 pub mod inproc;
+pub mod retry;
 pub mod secure;
 pub mod tcp;
 

@@ -1,0 +1,270 @@
+//! Unified retry/timeout/backoff policy for every network operation
+//! that may transiently fail: dials, control-plane RPCs, and full
+//! data-plane stream sends.
+//!
+//! Before this module each call site hand-rolled its own policy (a
+//! fixed 50 × 20 ms dial loop in `net/tcp.rs`, a silent drop-and-hope
+//! reconnect in the learner's completion callback). A [`RetryPolicy`]
+//! makes the three knobs explicit — capped exponential backoff with
+//! seeded jitter, a per-operation deadline, and a max attempt count —
+//! and gives every give-up the same shape: a [`GiveUp`] carrying the
+//! last error plus how hard we tried, so callers can count it and
+//! route the failure into the pacing/quorum machinery instead of
+//! losing it in a log line.
+//!
+//! Retries are only safe because replays are idempotent: completed-task
+//! watermarks drop duplicate completions, and every stream attempt uses
+//! a fresh `stream_id`, so a half-delivered stream from a failed
+//! attempt can never be confused with its retry (the abandoned stream
+//! is reclaimed by the receiver's idle/lifetime GC). Callers decide
+//! *what* is retryable — transport faults retry, remote application
+//! errors never do.
+
+use crate::util::Rng;
+use std::time::{Duration, Instant};
+
+/// Capped exponential backoff with seeded jitter and a total deadline.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Give up after this many attempts (>= 1; the first try counts).
+    pub max_attempts: u32,
+    /// Backoff before attempt 2; doubles each further attempt.
+    pub base_delay: Duration,
+    /// Ceiling on any single backoff delay.
+    pub max_delay: Duration,
+    /// Total budget across all attempts and sleeps; an attempt is never
+    /// started (nor a sleep taken) that would run past it.
+    pub deadline: Duration,
+    /// ± fraction of jitter applied to each delay (0 = deterministic).
+    pub jitter_frac: f64,
+}
+
+/// A retry loop that ran out of attempts, deadline, or hit a
+/// non-retryable error. Carries the evidence for the degradation
+/// counters (`FederationReport::retry_give_ups`).
+#[derive(Debug)]
+pub struct GiveUp<E> {
+    pub attempts: u32,
+    pub elapsed: Duration,
+    pub last_error: E,
+    /// False when the loop stopped because the error class never
+    /// retries (remote application errors), true when the policy's
+    /// attempt/deadline budget ran dry on retryable failures.
+    pub exhausted: bool,
+}
+
+impl RetryPolicy {
+    /// Dial profile: preserves the old hard-coded loop's ~1 s total
+    /// window (listeners may still be coming up) but backs off
+    /// exponentially instead of hammering every 20 ms.
+    pub fn dial() -> RetryPolicy {
+        RetryPolicy {
+            max_attempts: 64,
+            base_delay: Duration::from_millis(5),
+            max_delay: Duration::from_millis(100),
+            deadline: Duration::from_secs(1),
+            jitter_frac: 0.2,
+        }
+    }
+
+    /// Profile for a full RPC or stream send over an established (or
+    /// re-establishable) connection: a few attempts, backoff in the
+    /// tens of milliseconds, bounded well below a round timeout so a
+    /// give-up still leaves the quorum machinery time to act.
+    pub fn rpc() -> RetryPolicy {
+        RetryPolicy {
+            max_attempts: 3,
+            base_delay: Duration::from_millis(25),
+            max_delay: Duration::from_millis(250),
+            deadline: Duration::from_secs(5),
+            jitter_frac: 0.2,
+        }
+    }
+
+    /// Backoff before attempt `attempt + 1` (so `attempt` is the count
+    /// of failures seen): `base · 2^(attempt-1)` capped at `max_delay`,
+    /// with ±`jitter_frac` of seeded jitter.
+    pub fn delay_for(&self, attempt: u32, rng: &mut Rng) -> Duration {
+        let exp = attempt.saturating_sub(1).min(20);
+        let raw = self
+            .base_delay
+            .saturating_mul(1u32 << exp)
+            .min(self.max_delay);
+        if self.jitter_frac <= 0.0 {
+            return raw;
+        }
+        let spread = rng.gen_range_f64(-self.jitter_frac, self.jitter_frac);
+        raw.mul_f64((1.0 + spread).max(0.0))
+    }
+
+    /// Run `op` until it succeeds, a non-retryable error is hit, or the
+    /// attempt/deadline budget is exhausted. `op` receives the 1-based
+    /// attempt number; `retryable` classifies errors (transport faults
+    /// retry, remote application errors must not).
+    pub fn run<T, E>(
+        &self,
+        rng: &mut Rng,
+        mut op: impl FnMut(u32) -> Result<T, E>,
+        mut retryable: impl FnMut(&E) -> bool,
+    ) -> Result<T, GiveUp<E>> {
+        let start = Instant::now();
+        let mut attempt = 0u32;
+        loop {
+            attempt += 1;
+            match op(attempt) {
+                Ok(v) => return Ok(v),
+                Err(e) => {
+                    if !retryable(&e) {
+                        return Err(GiveUp {
+                            attempts: attempt,
+                            elapsed: start.elapsed(),
+                            last_error: e,
+                            exhausted: false,
+                        });
+                    }
+                    if attempt >= self.max_attempts.max(1) {
+                        return Err(GiveUp {
+                            attempts: attempt,
+                            elapsed: start.elapsed(),
+                            last_error: e,
+                            exhausted: true,
+                        });
+                    }
+                    let delay = self.delay_for(attempt, rng);
+                    if start.elapsed() + delay >= self.deadline {
+                        return Err(GiveUp {
+                            attempts: attempt,
+                            elapsed: start.elapsed(),
+                            last_error: e,
+                            exhausted: true,
+                        });
+                    }
+                    std::thread::sleep(delay);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast() -> RetryPolicy {
+        RetryPolicy {
+            max_attempts: 4,
+            base_delay: Duration::from_micros(100),
+            max_delay: Duration::from_millis(1),
+            deadline: Duration::from_secs(5),
+            jitter_frac: 0.0,
+        }
+    }
+
+    #[test]
+    fn succeeds_after_transient_failures() {
+        let mut rng = Rng::new(1);
+        let mut calls = 0u32;
+        let out = fast().run(
+            &mut rng,
+            |attempt| {
+                calls += 1;
+                assert_eq!(attempt, calls);
+                if attempt < 3 { Err("transient") } else { Ok(attempt) }
+            },
+            |_| true,
+        );
+        assert_eq!(out.unwrap(), 3);
+        assert_eq!(calls, 3);
+    }
+
+    #[test]
+    fn gives_up_after_max_attempts_with_evidence() {
+        let mut rng = Rng::new(2);
+        let err = fast()
+            .run(&mut rng, |_| Err::<(), _>("down"), |_| true)
+            .unwrap_err();
+        assert_eq!(err.attempts, 4);
+        assert_eq!(err.last_error, "down");
+        assert!(err.exhausted);
+    }
+
+    #[test]
+    fn non_retryable_errors_fail_on_first_attempt() {
+        let mut rng = Rng::new(3);
+        let mut calls = 0u32;
+        let err = fast()
+            .run(
+                &mut rng,
+                |_| {
+                    calls += 1;
+                    Err::<(), _>("remote: bad request")
+                },
+                |e| !e.starts_with("remote"),
+            )
+            .unwrap_err();
+        assert_eq!(calls, 1);
+        assert_eq!(err.attempts, 1);
+        assert!(!err.exhausted, "a non-retryable error is not exhaustion");
+    }
+
+    #[test]
+    fn deadline_caps_the_whole_loop() {
+        let policy = RetryPolicy {
+            max_attempts: 1000,
+            base_delay: Duration::from_millis(20),
+            max_delay: Duration::from_millis(20),
+            deadline: Duration::from_millis(50),
+            jitter_frac: 0.0,
+        };
+        let mut rng = Rng::new(4);
+        let start = Instant::now();
+        let err = policy
+            .run(&mut rng, |_| Err::<(), _>("down"), |_| true)
+            .unwrap_err();
+        assert!(err.attempts < 1000, "deadline must cut the loop short");
+        assert!(start.elapsed() < Duration::from_secs(2));
+    }
+
+    #[test]
+    fn backoff_doubles_and_caps() {
+        let p = RetryPolicy {
+            max_attempts: 10,
+            base_delay: Duration::from_millis(10),
+            max_delay: Duration::from_millis(35),
+            deadline: Duration::from_secs(1),
+            jitter_frac: 0.0,
+        };
+        let mut rng = Rng::new(5);
+        assert_eq!(p.delay_for(1, &mut rng), Duration::from_millis(10));
+        assert_eq!(p.delay_for(2, &mut rng), Duration::from_millis(20));
+        assert_eq!(p.delay_for(3, &mut rng), Duration::from_millis(35));
+        assert_eq!(p.delay_for(9, &mut rng), Duration::from_millis(35));
+    }
+
+    #[test]
+    fn jitter_is_seeded_and_bounded() {
+        let p = RetryPolicy { jitter_frac: 0.5, ..fast() };
+        let lo = p.base_delay.mul_f64(0.5);
+        let hi = p.base_delay.mul_f64(1.5);
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for attempt in 1..=20 {
+            let da = p.delay_for(attempt, &mut a);
+            let db = p.delay_for(attempt, &mut b);
+            assert_eq!(da, db, "same seed, same jitter");
+            if attempt == 1 {
+                assert!(da >= lo && da <= hi, "{da:?} outside [{lo:?}, {hi:?}]");
+            }
+        }
+    }
+
+    #[test]
+    fn dial_profile_preserves_the_one_second_window() {
+        let p = RetryPolicy::dial();
+        assert_eq!(p.deadline, Duration::from_secs(1));
+        // Worst-case sleep total within the attempt cap stays in the
+        // same order of magnitude as the old 50 × 20 ms loop.
+        assert!(p.base_delay < Duration::from_millis(20));
+        assert!(p.max_delay <= Duration::from_millis(200));
+    }
+}

@@ -5,6 +5,7 @@
 //! same execution shape as a gRPC server with per-stream dispatch.
 
 use super::frame::{read_frame, write_frame};
+use super::retry::RetryPolicy;
 use super::secure::{confirmation, Handshake, SecureSession};
 use super::{ClientConn, Psk, ServerHandle, Service};
 use crate::proto::Message;
@@ -98,24 +99,25 @@ pub struct TcpClient {
 
 impl TcpClient {
     pub fn connect(addr: &str, psk: Psk) -> Result<TcpClient> {
-        let mut last_err = None;
-        // Brief retry window: learners may dial the controller while its
-        // listener is still coming up.
-        for _ in 0..50 {
-            match TcpStream::connect(addr) {
-                Ok(mut stream) => {
-                    stream.set_nodelay(true).ok();
-                    let session = client_handshake(&mut stream, &psk)
-                        .with_context(|| format!("handshake with {addr}"))?;
-                    return Ok(TcpClient { stream, session });
-                }
-                Err(e) => {
-                    last_err = Some(e);
-                    std::thread::sleep(Duration::from_millis(20));
-                }
-            }
-        }
-        bail!("connect {addr}: {:?}", last_err);
+        // Brief retry window through the unified policy: learners may
+        // dial the controller while its listener is still coming up.
+        // Refused/unreachable sockets retry; a *handshake* failure on an
+        // accepted connection is a peer disagreement and fails at once.
+        let mut rng = entropy_rng();
+        let mut stream = RetryPolicy::dial()
+            .run(&mut rng, |_| TcpStream::connect(addr), |_| true)
+            .map_err(|give_up| {
+                anyhow::anyhow!(
+                    "connect {addr}: gave up after {} attempts in {:?}: {:?}",
+                    give_up.attempts,
+                    give_up.elapsed,
+                    give_up.last_error
+                )
+            })?;
+        stream.set_nodelay(true).ok();
+        let session = client_handshake(&mut stream, &psk)
+            .with_context(|| format!("handshake with {addr}"))?;
+        Ok(TcpClient { stream, session })
     }
 }
 

@@ -432,13 +432,28 @@ pub fn stream_model_with_fallback<F>(rpc_fn: &mut F, send: &StreamSend<'_>) -> R
 where
     F: FnMut(Message) -> RpcResult<Message>,
 {
+    stream_model_with_fallback_counted(rpc_fn, send).map(|(reply, _)| reply)
+}
+
+/// [`stream_model_with_fallback`] that also reports whether the f32
+/// fallback path fired, so callers can tick the degradation counter
+/// (`FederationReport::fallback_sends`) without re-deriving it from the
+/// error flow.
+#[doc(hidden)]
+pub fn stream_model_with_fallback_counted<F>(
+    rpc_fn: &mut F,
+    send: &StreamSend<'_>,
+) -> RpcResult<(Message, bool)>
+where
+    F: FnMut(Message) -> RpcResult<Message>,
+{
     match stream_model_with(rpc_fn, send) {
         Err(RpcError::Remote { code: ErrorCode::NotFound, .. }) if send.codec.needs_base() => {
             let full =
                 StreamSend { codec: CodecId::F32, base: None, base_round: 0, ..send.clone() };
-            stream_model_with(rpc_fn, &full)
+            stream_model_with(rpc_fn, &full).map(|reply| (reply, true))
         }
-        other => other,
+        other => other.map(|reply| (reply, false)),
     }
 }
 

@@ -114,15 +114,20 @@ enum DecodeJob {
 /// grow receiver memory without bound: concurrent open streams, the
 /// wire payload one stream may announce, the *aggregate* wire payload
 /// announced across all open streams (decoded f32 buffers can be up to
-/// 2× the wire size for bf16 payloads), and how long an idle stream may
+/// 2× the wire size for bf16 payloads), how long an idle stream may
 /// sit before being reclaimed (a peer that dies between `Begin` and
-/// `End` must not pin its buffers — or a registry slot — forever).
+/// `End` must not pin its buffers — or a registry slot — forever), and
+/// how long a stream may live in *total*. The lifetime cap closes the
+/// slow-loris hole: a peer trickling one chunk per idle interval keeps
+/// `last_activity` forever fresh, so idle GC alone would let it pin its
+/// admission budget indefinitely.
 #[derive(Debug, Clone)]
 pub struct IngestLimits {
     pub max_open_streams: usize,
     pub max_stream_bytes: usize,
     pub max_total_stream_bytes: usize,
     pub idle_timeout: Duration,
+    pub max_stream_lifetime: Duration,
 }
 
 impl Default for IngestLimits {
@@ -132,6 +137,7 @@ impl Default for IngestLimits {
             max_stream_bytes: 1 << 30,       // 1 GiB wire payload per stream
             max_total_stream_bytes: 4 << 30, // 4 GiB announced across streams
             idle_timeout: Duration::from_secs(300),
+            max_stream_lifetime: Duration::from_secs(900),
         }
     }
 }
@@ -222,6 +228,10 @@ pub struct ModelStream {
     /// Last `Begin`/`Chunk` arrival; idle streams past the limit are
     /// garbage-collected.
     last_activity: Instant,
+    /// When `Begin` was admitted; streams alive past
+    /// `max_stream_lifetime` are reclaimed even if chunks keep
+    /// trickling in (the slow-loris guard).
+    opened_at: Instant,
     /// Set by [`ModelStream::recycle`]: the buffers are gone. A chunk
     /// handler that raced the close (it cloned the registry `Arc`
     /// before removal) must fail gracefully instead of indexing the
@@ -431,6 +441,12 @@ pub struct StreamIngest {
     /// first framed chunk.
     decode_pool: Mutex<Option<Vec<mpsc::SyncSender<DecodeJob>>>>,
     clock: Mutex<Clock>,
+    /// Streams turned away by admission control (slot cap, aggregate
+    /// announced-byte budget, raced slot) — the degradation signal a
+    /// chaos run reads back through `FederationReport`.
+    streams_refused: AtomicU64,
+    /// Streams reclaimed by the idle/lifetime GC.
+    streams_gced: AtomicU64,
 }
 
 /// Size of the deferred-decode worker pool: a few threads cover any
@@ -455,6 +471,8 @@ impl StreamIngest {
             stats: Arc::new(WireStats::new()),
             decode_pool: Mutex::new(None),
             clock: Mutex::new(Arc::new(Instant::now) as Clock),
+            streams_refused: AtomicU64::new(0),
+            streams_gced: AtomicU64::new(0),
         }
     }
 
@@ -503,6 +521,25 @@ impl StreamIngest {
     /// Streams currently open.
     pub fn open_streams(&self) -> usize {
         self.streams.lock().unwrap().len()
+    }
+
+    /// Wire-payload bytes currently held for model ingest (chunks in
+    /// flight or queued for the decode worker). Must drain to zero once
+    /// every stream has finished or been reclaimed — the no-leak gauge
+    /// the chaos tests assert on.
+    pub fn wire_in_flight_bytes(&self) -> usize {
+        self.stats.in_flight.load(Ordering::SeqCst)
+    }
+
+    /// Streams refused by admission control (slot cap, announced-byte
+    /// budget, raced slot).
+    pub fn streams_refused(&self) -> u64 {
+        self.streams_refused.load(Ordering::SeqCst)
+    }
+
+    /// Streams reclaimed by the idle/lifetime GC.
+    pub fn streams_gced(&self) -> u64 {
+        self.streams_gced.load(Ordering::SeqCst)
     }
 
     // ---- deferred-decode pipeline (framed codecs) --------------------
@@ -653,6 +690,7 @@ impl StreamIngest {
         {
             let streams = self.streams.lock().unwrap();
             if streams.len() >= self.limits.max_open_streams {
+                self.streams_refused.fetch_add(1, Ordering::SeqCst);
                 return Message::error(
                     ErrorCode::StreamProtocol,
                     format!("too many open streams (max {})", self.limits.max_open_streams),
@@ -668,6 +706,7 @@ impl StreamIngest {
         let budget = self.open_stream_bytes.fetch_add(expected, Ordering::SeqCst) + expected;
         if budget > self.limits.max_total_stream_bytes {
             self.open_stream_bytes.fetch_sub(expected, Ordering::SeqCst);
+            self.streams_refused.fetch_add(1, Ordering::SeqCst);
             return Message::error(
                 ErrorCode::StreamProtocol,
                 format!(
@@ -679,6 +718,7 @@ impl StreamIngest {
         // Pre-size the decode buffers from the pool (when the component
         // owns one): a steady-state streamed round re-fills the buffers
         // the previous community model vacated.
+        let now = self.now();
         let bufs: Vec<Vec<f32>> = parsed
             .iter()
             .map(|t| match &pool {
@@ -709,7 +749,8 @@ impl StreamIngest {
             deferred: None,
             stats: Arc::clone(&self.stats),
             pool,
-            last_activity: self.now(),
+            last_activity: now,
+            opened_at: now,
             dead: false,
         };
         let mut streams = self.streams.lock().unwrap();
@@ -721,6 +762,7 @@ impl StreamIngest {
             drop(streams);
             stream.recycle();
             self.open_stream_bytes.fetch_sub(expected, Ordering::SeqCst);
+            self.streams_refused.fetch_add(1, Ordering::SeqCst);
             return Message::error(
                 ErrorCode::StreamProtocol,
                 format!("stream id {:#x} rejected (slot raced away)", args.stream_id),
@@ -890,10 +932,12 @@ impl StreamIngest {
         }
     }
 
-    /// Reclaim streams with no activity past the idle timeout: a peer
-    /// that died mid-stream must not pin its buffers or leak a registry
-    /// slot until the cap locks streaming out entirely. Returns how many
-    /// streams were reclaimed.
+    /// Reclaim streams with no activity past the idle timeout OR alive
+    /// past the total-lifetime cap: a peer that died mid-stream must not
+    /// pin its buffers or leak a registry slot until the cap locks
+    /// streaming out entirely, and a slow-loris peer trickling just
+    /// often enough to stay "active" must not hold its admission budget
+    /// forever. Returns how many streams were reclaimed.
     pub fn gc_idle(&self) -> usize {
         let now = self.now();
         let expired: Vec<u64> = {
@@ -901,17 +945,20 @@ impl StreamIngest {
             streams
                 .iter()
                 .filter(|(_, s)| {
-                    now.saturating_duration_since(s.lock().unwrap().last_activity)
-                        > self.limits.idle_timeout
+                    let s = s.lock().unwrap();
+                    now.saturating_duration_since(s.last_activity) > self.limits.idle_timeout
+                        || now.saturating_duration_since(s.opened_at)
+                            > self.limits.max_stream_lifetime
                 })
                 .map(|(id, _)| *id)
                 .collect()
         };
         let n = expired.len();
         for id in expired {
-            log_debug("ingest", &format!("reclaiming idle stream {id:#x}"));
+            log_debug("ingest", &format!("reclaiming idle/expired stream {id:#x}"));
             self.kill(id);
         }
+        self.streams_gced.fetch_add(n as u64, Ordering::SeqCst);
         n
     }
 
@@ -1364,6 +1411,175 @@ mod tests {
         assert_eq!(out1.model, m1);
         assert_eq!(out2.model, m2);
         assert_eq!(ingest.open_streams(), 0);
+    }
+
+    #[test]
+    fn lifetime_gc_reclaims_a_trickling_slow_loris() {
+        // A peer sending one chunk per idle interval keeps
+        // `last_activity` forever fresh, so the idle check alone never
+        // fires — the total-lifetime deadline must reclaim it anyway.
+        let ingest = StreamIngest::default();
+        let origin = Instant::now();
+        let offset = Arc::new(Mutex::new(Duration::ZERO));
+        let o = Arc::clone(&offset);
+        ingest.set_clock(Arc::new(move || origin + *o.lock().unwrap()));
+        let limits = IngestLimits::default();
+        assert!(limits.max_stream_lifetime >= limits.idle_timeout);
+
+        let m = model(41);
+        let begin = StreamBegin {
+            stream_id: 51,
+            task_id: 1,
+            round: 0,
+            purpose: StreamPurpose::TaskCompletion,
+            learner_id: "loris".into(),
+            codec: CodecId::F32,
+            base_round: 0,
+            layout: TensorLayoutProto::f32_layout_of(&m),
+            meta: TaskMeta::default(),
+            spec: TaskSpec::default(),
+        };
+        assert!(matches!(ingest.begin(begin, None, None), Message::Ack { ok: true, .. }));
+        // Trickle one tiny chunk exactly at each idle deadline: always
+        // inside the idle window, so idle GC never fires…
+        let mut seq = 0u64;
+        let mut elapsed = Duration::ZERO;
+        while elapsed < limits.max_stream_lifetime {
+            elapsed += limits.idle_timeout;
+            *offset.lock().unwrap() = elapsed;
+            assert!(matches!(
+                ingest.chunk(51, seq, vec![0u8; 4]),
+                Message::Ack { ok: true, .. }
+            ));
+            seq += 1;
+            if elapsed <= limits.max_stream_lifetime {
+                assert_eq!(ingest.gc_idle(), 0, "not yet past the lifetime cap");
+            }
+        }
+        // …but one nanosecond past the lifetime cap the stream is
+        // reclaimed even though its last chunk just arrived.
+        *offset.lock().unwrap() = limits.max_stream_lifetime + Duration::from_nanos(1);
+        assert!(matches!(ingest.chunk(51, seq, vec![0u8; 4]), Message::Ack { ok: true, .. }));
+        assert_eq!(ingest.gc_idle(), 1);
+        assert_eq!(ingest.open_streams(), 0);
+        assert_eq!(ingest.streams_gced(), 1);
+        assert_eq!(ingest.open_stream_bytes.load(Ordering::SeqCst), 0);
+        assert_eq!(ingest.wire_in_flight_bytes(), 0);
+        // The loris's next trickle gets a typed error, not a slot.
+        assert!(matches!(
+            ingest.chunk(51, seq + 1, vec![0u8; 4]),
+            Message::Error { code: ErrorCode::StreamProtocol, .. }
+        ));
+    }
+
+    /// Pool that counts checkouts/returns, so tests can assert every
+    /// reserved arena buffer came back after a failure.
+    struct CountingPool {
+        taken: AtomicUsize,
+        recycled: AtomicUsize,
+    }
+
+    impl BufferPool for CountingPool {
+        fn take(&self, len: usize) -> Vec<f32> {
+            self.taken.fetch_add(1, Ordering::SeqCst);
+            vec![0.0; len]
+        }
+
+        fn recycle(&self, _buf: Vec<f32>) {
+            self.recycled.fetch_add(1, Ordering::SeqCst);
+        }
+    }
+
+    #[test]
+    fn mid_stream_disconnect_during_delta_rle_releases_everything() {
+        // A framed delta-rle upload dies mid-stream: valid frames are
+        // already queued on (or through) the decode worker, then the
+        // peer vanishes — no more chunks, no End. The gauge must drain,
+        // the forced GC must reclaim the half-open stream (returning
+        // every pool buffer and the admission budget), and a zombie
+        // chunk racing the teardown must get a typed StreamProtocol
+        // error, not a panic.
+        let base = Arc::new(model(42));
+        let mut m = (*base).clone();
+        for t in &mut m.tensors {
+            for v in t.data.iter_mut().step_by(3) {
+                *v += 0.125;
+            }
+        }
+        let ingest = StreamIngest::default();
+        let origin = Instant::now();
+        let offset = Arc::new(Mutex::new(Duration::ZERO));
+        let o = Arc::clone(&offset);
+        ingest.set_clock(Arc::new(move || origin + *o.lock().unwrap()));
+        let pool = Arc::new(CountingPool {
+            taken: AtomicUsize::new(0),
+            recycled: AtomicUsize::new(0),
+        });
+        let codec = CodecId::DeltaRle;
+        let begin = StreamBegin {
+            stream_id: 61,
+            task_id: 1,
+            round: 1,
+            purpose: StreamPurpose::TaskCompletion,
+            learner_id: "gone".into(),
+            codec,
+            base_round: 1,
+            layout: TensorLayoutProto::codec_layout_of(&m, codec),
+            meta: TaskMeta::default(),
+            spec: TaskSpec::default(),
+        };
+        assert!(matches!(
+            ingest.begin(
+                begin,
+                Some(Arc::clone(&pool) as Arc<dyn BufferPool>),
+                Some(Arc::clone(&base))
+            ),
+            Message::Ack { ok: true, .. }
+        ));
+        let n_bufs = pool.taken.load(Ordering::SeqCst);
+        assert!(n_bufs > 0);
+        // First two frames of the real encoding arrive, then silence.
+        let impl_ = codec.codec();
+        for seq in 0..2u64 {
+            let lo = seq as usize * 16;
+            let mut frame = Vec::new();
+            impl_.encode_frame_into(
+                &m.tensors[0].data[lo..lo + 16],
+                Some(&base.tensors[0].data[lo..lo + 16]),
+                &mut frame,
+            );
+            assert!(matches!(
+                ingest.chunk(61, seq, frame),
+                Message::Ack { ok: true, .. }
+            ));
+        }
+        // The deferred worker finishes the queued frames: the wire
+        // gauge drains to zero even though the stream never closed.
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while ingest.wire_in_flight_bytes() != 0 {
+            assert!(Instant::now() < deadline, "wire gauge never drained");
+            std::thread::yield_now();
+        }
+        assert!(ingest.peak_wire_bytes() > 0, "frames were held at some point");
+        // A handler clones the Arc just before the GC wins the race…
+        let hold = ingest.hold_for_test(61).unwrap();
+        *offset.lock().unwrap() =
+            IngestLimits::default().idle_timeout + Duration::from_nanos(1);
+        assert_eq!(ingest.gc_idle(), 1, "half-open stream must be reclaimed");
+        // …and its late chunk gets the typed error.
+        match ingest.chunk_into_held(&hold, 2, vec![1u8, 4, 0]) {
+            Message::Error { code, detail } => {
+                assert_eq!(code, ErrorCode::StreamProtocol);
+                assert!(detail.contains("closed stream"), "{detail}");
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // No leak: every pool buffer returned, budget and gauge at zero.
+        assert_eq!(pool.recycled.load(Ordering::SeqCst), n_bufs);
+        assert_eq!(ingest.open_streams(), 0);
+        assert_eq!(ingest.streams_gced(), 1);
+        assert_eq!(ingest.open_stream_bytes.load(Ordering::SeqCst), 0);
+        assert_eq!(ingest.wire_in_flight_bytes(), 0);
     }
 
     #[test]

@@ -1,0 +1,154 @@
+//! Chaos acceptance: the ISSUE's graceful-degradation scenario — a 20-
+//! learner fleet with 20% severed links, one slow-loris and one corrupt-
+//! frame flooder must still close every round at a 0.7 quorum, and the
+//! community model must match a chaos-free run over the survivors
+//! **bitwise**. Same-seed reruns must reproduce the same victim
+//! assignment and the same math.
+
+use metisfl::config::{FederationEnv, ModelSpec};
+use metisfl::driver::run_with_trainer;
+use metisfl::harness::{verify_chaos_equivalence, LoadtestConfig};
+use metisfl::learner::{SyntheticTrainer, Trainer};
+use metisfl::net::chaos::ChaosSpec;
+use std::sync::Arc;
+
+/// The acceptance scenario from the issue: N=20, sever 20% (4 learners),
+/// one slow-loris, one corrupt-frame flooder, quorum 0.7.
+fn acceptance_cfg() -> LoadtestConfig {
+    let mut cfg = LoadtestConfig::quick();
+    cfg.learners = 20;
+    cfg.rate = 400.0;
+    cfg.rounds = 2;
+    cfg.seed = 0xC4A05;
+    cfg.quorum_fraction = 0.7;
+    cfg.chaos = ChaosSpec {
+        seed: 0xC4A05,
+        sever_fraction: 0.2,
+        slow_loris: 1,
+        corrupt: 1,
+        drip_ms: 5,
+        ..ChaosSpec::default()
+    };
+    cfg
+}
+
+#[test]
+fn acceptance_scenario_degrades_gracefully_and_preserves_the_math() {
+    let cfg = acceptance_cfg();
+    let eq = verify_chaos_equivalence(&cfg).expect("chaos equivalence gate");
+
+    // 4 severed + 1 loris + 1 corruptor leave 14 = ceil(0.7 × 20).
+    assert_eq!(eq.survivors.len(), 14, "survivors: {:?}", eq.survivors);
+    assert_eq!(eq.chaos.completed_per_round, vec![14, 14], "quorum must fire every round");
+    assert_eq!(eq.clean.completed_per_round, vec![14, 14]);
+    assert_eq!(
+        eq.chaos.community_digest, eq.clean.community_digest,
+        "community model must be bitwise identical to the clean survivor run"
+    );
+    assert_eq!(eq.chaos.late_folds, 0, "no late completion may contaminate the aggregate");
+
+    // The faults left evidence in the degradation counters: severed
+    // learners exhausted their retries, and the loris / severed partials
+    // were reclaimed by the forced GC sweep.
+    assert!(eq.chaos.retry_give_ups > 0, "severed uploads should exhaust retries");
+    assert!(eq.chaos.streams_gced > 0, "abandoned partial streams should be GC'd");
+    assert_eq!(eq.clean.retry_give_ups, 0);
+    assert_eq!(eq.clean.streams_gced, 0);
+    assert_eq!(eq.clean.streams_refused, 0);
+}
+
+#[test]
+fn same_seed_reruns_reproduce_victims_and_outcomes() {
+    let cfg = acceptance_cfg();
+
+    // Victim assignment is a pure function of (spec seed, run seed, n).
+    let a = cfg.chaos.plan_fleet(cfg.learners, cfg.seed);
+    let b = cfg.chaos.plan_fleet(cfg.learners, cfg.seed);
+    let mask = |plans: &[metisfl::net::chaos::ChaosPlan]| -> Vec<(bool, bool, bool, bool)> {
+        plans
+            .iter()
+            .map(|p| {
+                (p.refuse_dial, p.sever_after_sends.is_some(), p.drip.is_some(), p.corrupt_frames)
+            })
+            .collect()
+    };
+    assert_eq!(mask(&a), mask(&b), "same-seed plans must pick the same victims");
+
+    // And the end-to-end outcome is identical: same quorum trace, same
+    // community model bits.
+    let r1 = verify_chaos_equivalence(&cfg).unwrap();
+    let r2 = verify_chaos_equivalence(&cfg).unwrap();
+    assert_eq!(r1.survivors, r2.survivors);
+    assert_eq!(r1.chaos.completed_per_round, r2.chaos.completed_per_round);
+    assert_eq!(r1.chaos.community_digest, r2.chaos.community_digest);
+    assert_eq!(r1.clean.community_digest, r2.clean.community_digest);
+}
+
+#[test]
+fn driver_report_surfaces_degradation_counters() {
+    // A plain driver run (not the loadtest harness) with severed links:
+    // the round must close at quorum and the FederationReport must carry
+    // the give-up evidence. A clean run reports all-zero counters.
+    let chaos_env = FederationEnv::builder("chaos-driver")
+        .learners(6)
+        .rounds(1)
+        .model(ModelSpec::mlp(4, 2, 8))
+        .samples_per_learner(20)
+        .batch_size(10)
+        .stream_chunk_bytes(512)
+        .quorum_fraction(0.66)
+        .task_timeout_ms(8_000)
+        .heartbeat_ms(10_000)
+        .chaos(ChaosSpec { seed: 11, sever_fraction: 0.34, ..ChaosSpec::default() })
+        .build();
+    let report = run_with_trainer(&chaos_env, |_| {
+        Arc::new(SyntheticTrainer::new(0, 0.01)) as Arc<dyn Trainer>
+    })
+    .unwrap();
+    let r = &report.round_metrics[0];
+    assert_eq!(r.participants, 6, "severed learners still register (sever ≠ refuse)");
+    assert_eq!(r.completed, 4, "quorum closes the round over the 4 survivors");
+    assert!(report.retry_give_ups > 0, "severed uploads must exhaust their retries");
+
+    let clean_env = FederationEnv::builder("clean-driver")
+        .learners(4)
+        .rounds(1)
+        .model(ModelSpec::mlp(4, 2, 8))
+        .samples_per_learner(20)
+        .batch_size(10)
+        .stream_chunk_bytes(512)
+        .heartbeat_ms(10_000)
+        .build();
+    let clean = run_with_trainer(&clean_env, |_| {
+        Arc::new(SyntheticTrainer::new(0, 0.01)) as Arc<dyn Trainer>
+    })
+    .unwrap();
+    assert_eq!(clean.retry_give_ups, 0);
+    assert_eq!(clean.fallback_sends, 0);
+    assert_eq!(clean.streams_refused, 0);
+    assert_eq!(clean.streams_gced, 0);
+}
+
+#[test]
+fn refused_dials_shrink_the_registered_fleet() {
+    // refuse_fraction victims never manage to register; the driver must
+    // proceed with the smaller fleet instead of hanging on a barrier.
+    let env = FederationEnv::builder("chaos-refuse")
+        .learners(5)
+        .rounds(1)
+        .model(ModelSpec::mlp(4, 2, 8))
+        .samples_per_learner(20)
+        .batch_size(10)
+        .stream_chunk_bytes(512)
+        .task_timeout_ms(8_000)
+        .heartbeat_ms(10_000)
+        .chaos(ChaosSpec { seed: 3, refuse_fraction: 0.2, ..ChaosSpec::default() })
+        .build();
+    let report = run_with_trainer(&env, |_| {
+        Arc::new(SyntheticTrainer::new(0, 0.01)) as Arc<dyn Trainer>
+    })
+    .unwrap();
+    let r = &report.round_metrics[0];
+    assert_eq!(r.participants, 4, "the refused learner never joins");
+    assert_eq!(r.completed, 4);
+}
