@@ -53,6 +53,59 @@ impl WireCodecChoice {
     }
 }
 
+/// Hierarchical aggregation topology (`topology:` env block). The
+/// default is the flat (single-tier) topology every earlier release
+/// ran: all learners speak to the root controller directly. With
+/// `aggregators > 0` the driver interposes that many aggregator nodes
+/// between the root and the fleet: learners are assigned round-robin
+/// by index (shard `i` owns learners `i, i+A, i+2A, …` — see
+/// [`TopologySpec::shard_of`]), each aggregator folds its shard's
+/// arrivals locally, and the root ingests one partial sum per shard.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TopologySpec {
+    /// Number of intermediate aggregator nodes; 0 (default) = flat.
+    pub aggregators: usize,
+    /// Shard-local quorum fraction in (0, 1], or 0.0 (default) to
+    /// inherit the env's `quorum_fraction`. Each aggregator closes its
+    /// shard barrier at `ceil(q × shard_dispatched)` arrivals, which
+    /// rolls up to the root's own quorum over shards.
+    pub shard_quorum: f64,
+}
+
+impl Default for TopologySpec {
+    fn default() -> TopologySpec {
+        TopologySpec { aggregators: 0, shard_quorum: 0.0 }
+    }
+}
+
+impl TopologySpec {
+    /// Single-tier topology (no aggregators interposed)?
+    pub fn is_flat(&self) -> bool {
+        self.aggregators == 0
+    }
+
+    /// Shard owning learner `index`: round-robin over aggregators, so
+    /// fleet heterogeneity (speed factors cycle by index) spreads
+    /// across shards instead of concentrating in one.
+    pub fn shard_of(&self, index: usize) -> usize {
+        if self.aggregators == 0 {
+            0
+        } else {
+            index % self.aggregators
+        }
+    }
+
+    /// Effective shard-local quorum: the explicit `shard_quorum` when
+    /// set, else the env-wide `quorum_fraction`.
+    pub fn effective_shard_quorum(&self, env_quorum: f64) -> f64 {
+        if self.shard_quorum > 0.0 {
+            self.shard_quorum
+        } else {
+            env_quorum
+        }
+    }
+}
+
 /// Communication/aggregation protocol (Table 1, "Communication Protocol").
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Protocol {
@@ -320,6 +373,10 @@ pub struct FederationEnv {
     /// of the fleet get which connection faults, expanded per learner
     /// by [`ChaosSpec::plan_fleet`] from `seed`. Default: all off.
     pub chaos: ChaosSpec,
+    /// Hierarchical aggregation (`topology:` block): how many
+    /// aggregator nodes to interpose between the root controller and
+    /// the fleet, and the shard-local quorum. Default: flat.
+    pub topology: TopologySpec,
 }
 
 impl FederationEnv {
@@ -554,6 +611,16 @@ impl FederationEnv {
             }
             b = b.chaos(spec);
         }
+        if let Some(t) = v.get("topology") {
+            let mut spec = TopologySpec::default();
+            if let Some(x) = t.get("aggregators").and_then(|x| x.as_usize()) {
+                spec.aggregators = x;
+            }
+            if let Some(x) = t.get("shard_quorum").and_then(|x| x.as_f64()) {
+                spec.shard_quorum = x;
+            }
+            b = b.topology(spec);
+        }
         b.try_build()
     }
 
@@ -633,6 +700,21 @@ impl FederationEnv {
             }
         }
         self.chaos.validate()?;
+        if !self.topology.is_flat() {
+            if self.topology.aggregators > self.learners {
+                bail!(
+                    "topology: {} aggregators for {} learners (every shard must own \
+                     at least one learner)",
+                    self.topology.aggregators,
+                    self.learners
+                );
+            }
+            if self.topology.shard_quorum < 0.0 || self.topology.shard_quorum > 1.0 {
+                bail!("topology shard_quorum must be in (0, 1] (or 0 to inherit)");
+            }
+        } else if self.topology.shard_quorum != 0.0 {
+            bail!("topology shard_quorum requires aggregators > 0");
+        }
         match self.protocol {
             Protocol::SemiSynchronous { lambda } if lambda <= 0.0 => {
                 bail!("semi-sync lambda must be > 0")
@@ -663,12 +745,14 @@ impl FederationEnv {
             WireCodecChoice::Bf16 => CodecId::Bf16,
             WireCodecChoice::Delta => CodecId::Delta,
             WireCodecChoice::DeltaRle => CodecId::DeltaRle,
-            // Auto: delta needs the streamed dispatch to establish the
-            // shared base; without streaming, stay on plain f32.
-            // (delta-rle stays opt-in until it has more mileage.)
+            // Auto: delta codecs need the streamed dispatch to
+            // establish the shared base; without streaming, stay on
+            // plain f32. With streaming, prefer the entropy-coded
+            // delta-rle wire (CI-gated since PR 4); peers that only
+            // speak delta negotiate down via the Hello intersection.
             WireCodecChoice::Auto => {
                 if self.effective_stream_chunk() > 0 {
-                    CodecId::Delta
+                    CodecId::DeltaRle
                 } else {
                     CodecId::F32
                 }
@@ -690,8 +774,8 @@ impl FederationEnv {
                     CodecId::F32
                 }
             }
-            WireCodecChoice::DeltaRle => CodecId::DeltaRle,
-            WireCodecChoice::Delta | WireCodecChoice::Auto => CodecId::Delta,
+            WireCodecChoice::DeltaRle | WireCodecChoice::Auto => CodecId::DeltaRle,
+            WireCodecChoice::Delta => CodecId::Delta,
         }
     }
 }
@@ -754,6 +838,7 @@ impl FederationEnvBuilder {
                 bf16_dispatch: false,
                 delta_fallback: true,
                 chaos: ChaosSpec::default(),
+                topology: TopologySpec::default(),
             },
         }
     }
@@ -852,6 +937,10 @@ impl FederationEnvBuilder {
     }
     pub fn chaos(mut self, c: ChaosSpec) -> Self {
         self.env.chaos = c;
+        self
+    }
+    pub fn topology(mut self, t: TopologySpec) -> Self {
+        self.env.topology = t;
         self
     }
 
@@ -998,8 +1087,14 @@ seed: 7
         assert!(!env.bf16_dispatch);
         // Auto without streaming: everything stays f32.
         assert_eq!(env.upload_codec(), CodecId::F32);
-        // Auto with streaming: lossless delta both ways.
+        // Auto with streaming: the entropy-coded lossless delta wire on
+        // both planes (delta-only peers negotiate down at Hello).
         let env = FederationEnv::from_yaml("stream_chunk_bytes: 2048\n").unwrap();
+        assert_eq!(env.upload_codec(), CodecId::DeltaRle);
+        assert_eq!(env.dispatch_codec(), CodecId::DeltaRle);
+        // Explicit delta still means plain delta on both planes.
+        let env =
+            FederationEnv::from_yaml("stream_chunk_bytes: 2048\nwire_codec: delta\n").unwrap();
         assert_eq!(env.upload_codec(), CodecId::Delta);
         assert_eq!(env.dispatch_codec(), CodecId::Delta);
         // bf16 compresses uploads; dispatch stays lossless unless opted in.
@@ -1119,6 +1214,46 @@ trainer:
         assert_eq!(env.aggregation.backend, AggregationBackend::Chunked);
         assert_eq!(env.aggregation.threads, 2);
         assert!(FederationEnv::from_yaml("aggregation:\n  backend: warp\n").is_err());
+    }
+
+    #[test]
+    fn topology_block_parses_and_validates() {
+        // Default: flat, exactly what every pre-v6 env ran.
+        let plain = FederationEnv::from_yaml("learners: 8\n").unwrap();
+        assert!(plain.topology.is_flat());
+        assert_eq!(plain.topology.effective_shard_quorum(plain.quorum_fraction), 1.0);
+
+        let env = FederationEnv::from_yaml(
+            "learners: 12\nquorum_fraction: 0.75\ntopology:\n  aggregators: 4\n  \
+             shard_quorum: 0.5\n",
+        )
+        .unwrap();
+        assert!(!env.topology.is_flat());
+        assert_eq!(env.topology.aggregators, 4);
+        assert_eq!(env.topology.shard_quorum, 0.5);
+        assert_eq!(env.topology.effective_shard_quorum(env.quorum_fraction), 0.5);
+        // Round-robin shard assignment.
+        assert_eq!(env.topology.shard_of(0), 0);
+        assert_eq!(env.topology.shard_of(5), 1);
+        assert_eq!(env.topology.shard_of(11), 3);
+
+        // shard_quorum 0 inherits the env-wide quorum.
+        let env = FederationEnv::from_yaml(
+            "learners: 12\nquorum_fraction: 0.75\ntopology:\n  aggregators: 3\n",
+        )
+        .unwrap();
+        assert_eq!(env.topology.shard_quorum, 0.0);
+        assert_eq!(env.topology.effective_shard_quorum(env.quorum_fraction), 0.75);
+
+        // More shards than learners, out-of-range shard quorum, and a
+        // shard quorum without aggregators are all load-time errors.
+        assert!(FederationEnv::from_yaml("learners: 2\ntopology:\n  aggregators: 3\n").is_err());
+        assert!(FederationEnv::from_yaml(
+            "learners: 8\ntopology:\n  aggregators: 2\n  shard_quorum: 1.5\n"
+        )
+        .is_err());
+        assert!(FederationEnv::from_yaml("learners: 8\ntopology:\n  shard_quorum: 0.5\n")
+            .is_err());
     }
 
     #[test]

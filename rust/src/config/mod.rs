@@ -14,5 +14,6 @@ pub mod yaml;
 
 pub use env::{
     AggregationBackend, AggregationSpec, FederationEnv, FederationEnvBuilder, HeteroFleetSpec,
-    ModelSpec, Protocol, SecureSpec, SelectorSpec, TrainerKind, TransportKind, WireCodecChoice,
+    ModelSpec, Protocol, SecureSpec, SelectorSpec, TopologySpec, TrainerKind, TransportKind,
+    WireCodecChoice,
 };

@@ -1,0 +1,1044 @@
+//! Hierarchical aggregation tier: sharded aggregators between the root
+//! controller and the fleet.
+//!
+//! The controller is the scalability bottleneck of a flat federation —
+//! fan-out, quorum bookkeeping, and the delta-base map are all O(fleet)
+//! in one process. An [`AggregatorNode`] interposes: it *embeds* a full
+//! shard-local [`Controller`] (the same aggregate-on-arrival ingest,
+//! round barrier, and streamed data plane the root runs), registers
+//! with the root as a learner-like peer, and forwards **one partial
+//! weighted sum + the shard's total weight** upstream per round. Root
+//! ingest is O(aggregators) instead of O(learners), and dispatch
+//! becomes a tree: the root encodes once for A aggregators, each
+//! aggregator re-fans-out to its own shard.
+//!
+//! Because weighted FedAvg is associative — each shard folds its
+//! arrivals in sorted-id order, the root folds shard partials in
+//! sorted-id order, and every coefficient is `wᵢ/W` — the root
+//! community model is **bitwise identical** to a flat controller
+//! folding the same groups in the same order (see
+//! [`two_tier_reference`], which is exactly that grouped fold).
+//! Adaptive server rules (FedAdam & co.) keep their state at the root:
+//! the shard env forces plain `fedavg`, so a partial is always the
+//! associative weighted sum the root rule expects as one contribution.
+
+use super::aggregation::{AggregationRule, Backend, Contribution, FedAvg};
+use super::Controller;
+use crate::config::{FederationEnv, TopologySpec};
+use crate::net::retry::RetryPolicy;
+use crate::net::{ClientConn, Psk, Service};
+use crate::proto::client::{self, RpcError, StreamSend};
+use crate::proto::ingest::{StreamBegin, StreamIngest};
+use crate::proto::wire::{fnv1a64, FNV64_INIT};
+use crate::proto::{
+    ErrorCode, EvalResult, Message, ModelProto, StreamPurpose, TaskMeta, TaskSpec, PROTO_VERSION,
+};
+use crate::tensor::{ByteOrder, CodecId, DType, TensorModel};
+use crate::util::{log_debug, log_info, log_warn, Rng, ThreadPool};
+use anyhow::{bail, Result};
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Derive the shard-local environment an aggregator's embedded
+/// controller runs: same model/protocol/data-plane settings as the
+/// root, shard-sized fleet, the effective shard quorum, and — always —
+/// plain `fedavg` (adaptive server optimizers keep their state at the
+/// root; a shard must forward the associative weighted sum).
+fn shard_env(env: &FederationEnv, id: &str, shard_size: usize) -> FederationEnv {
+    let mut e = env.clone();
+    e.name = format!("{}/{}", env.name, id);
+    e.learners = shard_size.max(1);
+    e.quorum_fraction = env.topology.effective_shard_quorum(env.quorum_fraction);
+    e.aggregation.rule = "fedavg".into();
+    e.topology = TopologySpec::default();
+    e
+}
+
+/// An intermediate aggregator: shard-local controller + upstream
+/// learner-like client, exposed to the network via
+/// [`AggregatorServicer`].
+pub struct AggregatorNode {
+    pub id: String,
+    upstream: String,
+    psk: Psk,
+    /// The embedded shard controller — aggregate-on-arrival ingest,
+    /// round barrier, pacing, and the streamed data plane, unchanged.
+    inner: Arc<Controller>,
+    /// Ingest engine for *dispatch* streams arriving from the root
+    /// (RunTask / Evaluate). Kept separate from the embedded
+    /// controller's upload plane so a root dispatch never contends with
+    /// a shard learner's completion stream.
+    ingest: StreamIngest,
+    /// Stream ids currently routed to `ingest` (root dispatch) rather
+    /// than the embedded controller's upload plane. Ids are
+    /// process-salted (see `client::next_stream_id`), so a shard
+    /// learner's upload id practically never collides with a live
+    /// dispatch id; entries are removed at `End` (or on chunk error).
+    dispatch_streams: Mutex<HashSet<u64>>,
+    /// Identity + pointer of the last losslessly dispatched model —
+    /// the delta base for decoding the next delta-coded dispatch and
+    /// for encoding the partial-sum upload (mirror of the learner's
+    /// `last_community`).
+    last_model: Mutex<Option<(u64, Arc<TensorModel>)>>,
+    upstream_conn: Mutex<Option<Box<dyn ClientConn>>>,
+    /// Codec set the root accepted in this connection's `Hello`.
+    accepted_upstream: Mutex<Option<Vec<CodecId>>>,
+    /// Single-threaded: shard rounds execute in dispatch order.
+    executor: ThreadPool,
+    shutdown: AtomicBool,
+    /// Partial uploads abandoned after retry exhaustion (this node's
+    /// own upstream leg; the embedded controller counts its own).
+    retry_give_ups: AtomicU64,
+    /// Delta→f32 fallback re-sends on the upstream leg.
+    fallback_sends: AtomicU64,
+    /// Shard rounds whose partial sum reached the root.
+    rounds_forwarded: AtomicU64,
+}
+
+impl AggregatorNode {
+    pub fn new(
+        id: &str,
+        upstream: &str,
+        env: &FederationEnv,
+        shard_size: usize,
+        psk: Psk,
+    ) -> Result<Arc<AggregatorNode>> {
+        let inner = Controller::new(shard_env(env, id, shard_size), psk)?;
+        log_info("aggregator", &format!("{id}: shard controller up (≤{shard_size} learners)"));
+        Ok(Arc::new(AggregatorNode {
+            id: id.to_string(),
+            upstream: upstream.to_string(),
+            psk,
+            inner,
+            ingest: StreamIngest::default(),
+            dispatch_streams: Mutex::new(HashSet::new()),
+            last_model: Mutex::new(None),
+            upstream_conn: Mutex::new(None),
+            accepted_upstream: Mutex::new(None),
+            executor: ThreadPool::new(1),
+            shutdown: AtomicBool::new(false),
+            retry_give_ups: AtomicU64::new(0),
+            fallback_sends: AtomicU64::new(0),
+            rounds_forwarded: AtomicU64::new(0),
+        }))
+    }
+
+    /// The embedded shard controller (registration barriers, counters,
+    /// shard-local gauges).
+    pub fn inner(&self) -> &Arc<Controller> {
+        &self.inner
+    }
+
+    pub fn is_shutdown(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst)
+    }
+
+    /// Give-ups across both leg directions: this node's upstream
+    /// partial uploads plus the embedded controller's shard dispatches.
+    pub fn retry_give_ups(&self) -> u64 {
+        self.retry_give_ups.load(Ordering::SeqCst) + self.inner.retry_give_ups()
+    }
+
+    /// Delta→f32 fallbacks across both legs.
+    pub fn fallback_sends(&self) -> u64 {
+        self.fallback_sends.load(Ordering::SeqCst) + self.inner.fallback_sends()
+    }
+
+    /// Shard rounds whose partial sum reached the root.
+    pub fn rounds_forwarded(&self) -> u64 {
+        self.rounds_forwarded.load(Ordering::SeqCst)
+    }
+
+    /// Run `f` against the (lazily dialed) upstream connection — the
+    /// same discipline as the learner's callback leg: a fresh
+    /// connection opens with the versioned `Hello` handshake, transport
+    /// failures drop it so the next call re-dials, remote application
+    /// errors keep it.
+    fn with_upstream_conn<T>(
+        &self,
+        f: impl FnOnce(&mut dyn ClientConn) -> Result<T, RpcError>,
+    ) -> Result<T, RpcError> {
+        let mut guard = self.upstream_conn.lock().unwrap();
+        if guard.is_none() {
+            let mut conn =
+                crate::net::connect(&self.upstream, self.psk).map_err(RpcError::Transport)?;
+            let (_, accepted) = client::hello_negotiate(conn.as_mut())?;
+            *self.accepted_upstream.lock().unwrap() = Some(accepted);
+            *guard = Some(conn);
+        }
+        match f(guard.as_mut().unwrap().as_mut()) {
+            Ok(v) => Ok(v),
+            Err(e) => {
+                if e.is_transport() {
+                    *guard = None; // force reconnect next time
+                }
+                Err(e)
+            }
+        }
+    }
+
+    /// Register with the root as a learner-like peer: the root's
+    /// scheduler, quorum barrier, and pacing treat the whole shard as
+    /// one participant weighted by its aggregate sample count.
+    pub fn register(&self, own_endpoint: &str, shard_samples: usize) -> Result<usize> {
+        self.with_upstream_conn(|conn| client::register(conn, &self.id, own_endpoint, shard_samples))
+            .map_err(|e| anyhow::anyhow!("aggregator {}: upstream registration: {e}", self.id))
+    }
+
+    /// Graceful departure from the root.
+    pub fn deregister(&self) -> Result<()> {
+        self.with_upstream_conn(|conn| client::deregister(conn, &self.id))
+            .map_err(|e| anyhow::anyhow!("aggregator {}: upstream deregistration: {e}", self.id))
+    }
+
+    /// Record a lossless dispatched model as the shared delta base.
+    fn record_model(&self, round: u64, codec: CodecId, model: &Arc<TensorModel>) {
+        if codec.is_lossless() {
+            *self.last_model.lock().unwrap() = Some((round, Arc::clone(model)));
+        }
+    }
+
+    /// Queue a shard round on the single-threaded executor (rounds run
+    /// in dispatch order, like the learner's training executor).
+    fn queue_shard_round(
+        self: &Arc<Self>,
+        task_id: u64,
+        model_round: u64,
+        model: Arc<TensorModel>,
+        spec: TaskSpec,
+    ) {
+        let node = Arc::clone(self);
+        self.executor.spawn(move || {
+            if node.is_shutdown() {
+                return;
+            }
+            if let Err(e) = node.run_shard_round(task_id, model_round, model, spec) {
+                log_warn("aggregator", &format!("{}: round {task_id} failed: {e:#}", node.id));
+            }
+        });
+    }
+
+    /// One shard round: install the dispatched model as the shard's
+    /// community model, re-fan-out to the shard, run the shard barrier,
+    /// fold the arrivals (sorted-id order — the flat fold order), and
+    /// forward the partial sum + total weight upstream.
+    fn run_shard_round(
+        &self,
+        task_id: u64,
+        model_round: u64,
+        model: Arc<TensorModel>,
+        spec: TaskSpec,
+    ) -> Result<()> {
+        let started = Instant::now();
+        // The dispatched model becomes the shard's community model at
+        // the dispatched round, so the shard-local data plane (delta
+        // bases, fold input) matches what a flat controller holds.
+        {
+            let mut s = self.inner.state.lock().unwrap();
+            s.community = Some(Arc::clone(&model));
+            s.community_round = model_round;
+        }
+        let targets = self.inner.learners_snapshot();
+        if targets.is_empty() {
+            bail!("shard {} has no registered learners", self.id);
+        }
+        let ids: Vec<String> = targets.iter().map(|h| h.id.clone()).collect();
+        self.inner.open_round(task_id, &ids);
+        let streamed = self.inner.env.stream_chunk_bytes > 0;
+        let (_dispatch, replies) = if streamed {
+            self.inner.stream_broadcast(
+                &targets,
+                StreamPurpose::RunTask,
+                task_id,
+                &spec,
+                None,
+                &model,
+                model_round,
+            )
+        } else {
+            let proto = ModelProto::from_model(&model, DType::F32, ByteOrder::Little);
+            let msg = Message::RunTask { task_id, round: model_round, model: proto, spec };
+            self.inner.broadcast(&targets, &msg)
+        };
+        let mut delivered = 0usize;
+        for (lid, r) in &replies {
+            match r {
+                Ok(m) if !matches!(m, Message::Error { .. }) => delivered += 1,
+                Ok(m) => log_warn(
+                    "aggregator",
+                    &format!("{}: dispatch to {lid} refused: {}", self.id, m.kind()),
+                ),
+                Err(e) => {
+                    log_warn("aggregator", &format!("{}: dispatch to {lid} failed: {e:#}", self.id))
+                }
+            }
+        }
+        if delivered == 0 {
+            // Nothing can arrive: close the barrier so the next round
+            // starts clean, then surface the failure (the root sees a
+            // missing shard, exactly like a failed learner).
+            let _ = self.inner.wait_round_quorum(Duration::ZERO, 1.0);
+            bail!("shard {}: no learner accepted round {task_id}", self.id);
+        }
+        let timeout = Duration::from_millis(self.inner.env.task_timeout_ms);
+        let outcome = self.inner.wait_round_quorum(timeout, self.inner.env.quorum_fraction);
+        for id in &outcome.missing {
+            self.inner.pacing().observe_failure(id);
+        }
+        if outcome.arrived.is_empty() {
+            bail!("shard {}: round {task_id} closed with no completions", self.id);
+        }
+        // The shard's total weight — read before the fold, which evicts
+        // the stored contributions.
+        let weight: usize = {
+            let s = self.inner.state.lock().unwrap();
+            s.store
+                .select_latest(&outcome.arrived)?
+                .iter()
+                .map(|m| m.meta.num_samples.max(1))
+                .sum()
+        };
+        let partial = self.inner.aggregate_from_store(&outcome.arrived, task_id)?;
+        self.upload_partial(task_id, model_round, &partial, weight, started.elapsed())?;
+        self.rounds_forwarded.fetch_add(1, Ordering::SeqCst);
+        log_debug(
+            "aggregator",
+            &format!(
+                "{}: round {task_id} folded {}/{} learners (weight {weight}) and forwarded",
+                self.id,
+                outcome.arrived.len(),
+                ids.len()
+            ),
+        );
+        Ok(())
+    }
+
+    /// Forward the shard's partial weighted sum + total weight to the
+    /// root: a `PartialAggregate` stream over the same codec-negotiated
+    /// chunked data plane learners upload on (one-shot
+    /// `MarkTaskCompleted` when the env doesn't stream). The shard
+    /// weight rides `TaskMeta::num_samples`, so the root's FedAvg
+    /// reweighting over partials needs no new wire state.
+    fn upload_partial(
+        &self,
+        task_id: u64,
+        model_round: u64,
+        partial: &Arc<TensorModel>,
+        weight: usize,
+        elapsed: Duration,
+    ) -> Result<()> {
+        let meta = TaskMeta {
+            num_samples: weight,
+            train_wall_time_us: (elapsed.as_micros() as u64).max(1),
+            ..TaskMeta::default()
+        };
+        let chunk = self.inner.env.stream_chunk_bytes;
+        let policy = RetryPolicy::rpc();
+        let mut rng = Rng::new(fnv1a64(FNV64_INIT, self.id.as_bytes()) ^ task_id);
+        let fallback = self.inner.env.delta_fallback;
+        let upload = if chunk > 0 {
+            policy.run(
+                &mut rng,
+                |_| {
+                    // Ensure the upstream session (and its codec
+                    // negotiation) exists before choosing a codec — a
+                    // re-dial renegotiates.
+                    self.with_upstream_conn(|_| Ok(()))?;
+                    let configured = self.inner.env.upload_codec();
+                    let configured = match self.accepted_upstream.lock().unwrap().as_ref() {
+                        Some(accepted) => configured.degrade_to(accepted),
+                        None => configured,
+                    };
+                    let (codec, base, base_round) = if configured.needs_base() {
+                        match self.last_model.lock().unwrap().clone() {
+                            // The root installed the same base when its
+                            // lossless dispatch stream was acked.
+                            Some((r, m)) => (configured, Some(m), r),
+                            None => (CodecId::F32, None, 0),
+                        }
+                    } else {
+                        (configured, None, 0)
+                    };
+                    let task_spec = TaskSpec::default();
+                    let send = StreamSend {
+                        purpose: StreamPurpose::PartialAggregate,
+                        task_id,
+                        round: model_round,
+                        learner_id: &self.id,
+                        model: partial,
+                        meta: &meta,
+                        spec: &task_spec,
+                        codec,
+                        base: base.as_deref(),
+                        base_round,
+                        chunk_bytes: chunk.max(client::MIN_CHUNK_BYTES),
+                    };
+                    self.with_upstream_conn(|conn| {
+                        let rpc_fn = &mut |msg| client::rpc(&mut *conn, &msg);
+                        if fallback {
+                            client::stream_model_with_fallback_counted(rpc_fn, &send)
+                                .map(|(_, fell_back)| fell_back)
+                        } else {
+                            client::stream_model_with(rpc_fn, &send).map(|_| false)
+                        }
+                    })
+                },
+                |e| e.is_transport(),
+            )
+        } else {
+            policy.run(
+                &mut rng,
+                |_| {
+                    let proto = ModelProto::from_model(partial, DType::F32, ByteOrder::Little);
+                    self.with_upstream_conn(|conn| {
+                        client::mark_task_completed(conn, task_id, &self.id, proto, meta.clone())
+                    })
+                    .map(|()| false)
+                },
+                |e| e.is_transport(),
+            )
+        };
+        match upload {
+            Ok(fell_back) => {
+                if fell_back {
+                    self.fallback_sends.fetch_add(1, Ordering::SeqCst);
+                }
+                Ok(())
+            }
+            Err(give_up) => {
+                if give_up.exhausted {
+                    self.retry_give_ups.fetch_add(1, Ordering::SeqCst);
+                }
+                bail!(
+                    "partial upload: gave up after {} attempts in {:?}: {}",
+                    give_up.attempts,
+                    give_up.elapsed,
+                    give_up.last_error
+                )
+            }
+        }
+    }
+
+    /// Evaluate on the shard and combine: sample-weighted mean loss,
+    /// summed samples, slowest shard member's eval time (tree depth
+    /// adds latency, not work).
+    fn eval_on_shard(&self, task_id: u64, round: u64, model: &Arc<TensorModel>) -> Message {
+        let targets = self.inner.learners_snapshot();
+        if targets.is_empty() {
+            return Message::error(
+                ErrorCode::Unavailable,
+                format!("shard {} has no learners to evaluate on", self.id),
+            );
+        }
+        let streamed = self.inner.env.stream_chunk_bytes > 0;
+        let (_d, replies) = if streamed {
+            self.inner.stream_broadcast(
+                &targets,
+                StreamPurpose::Evaluate,
+                task_id,
+                &TaskSpec::default(),
+                None,
+                model,
+                round,
+            )
+        } else {
+            let proto = ModelProto::from_model(model, DType::F32, ByteOrder::Little);
+            self.inner.broadcast(&targets, &Message::EvaluateModel { task_id, round, model: proto })
+        };
+        let mut weighted = 0.0f64;
+        let mut samples = 0usize;
+        let mut max_t = 0u64;
+        for (lid, r) in &replies {
+            match r {
+                Ok(Message::EvaluateModelReply { result, .. }) => {
+                    weighted += result.loss * result.num_samples as f64;
+                    samples += result.num_samples;
+                    max_t = max_t.max(result.eval_time_us);
+                }
+                Ok(other) => log_warn(
+                    "aggregator",
+                    &format!("{}: eval on {lid}: unexpected {}", self.id, other.kind()),
+                ),
+                Err(e) => {
+                    log_warn("aggregator", &format!("{}: eval on {lid} failed: {e:#}", self.id))
+                }
+            }
+        }
+        if samples == 0 {
+            return Message::error(
+                ErrorCode::Internal,
+                format!("shard {}: no evaluation completed", self.id),
+            );
+        }
+        Message::EvaluateModelReply {
+            task_id,
+            learner_id: self.id.clone(),
+            result: EvalResult {
+                loss: weighted / samples as f64,
+                num_samples: samples,
+                eval_time_us: max_t,
+            },
+        }
+    }
+}
+
+/// The aggregator's [`Service`] facade. Shard membership and learner
+/// completions route straight to the embedded controller (an
+/// aggregator IS its shard's controller); root-originated dispatch
+/// decodes on the node's own ingest and re-fans-out.
+pub struct AggregatorServicer(pub Arc<AggregatorNode>);
+
+impl Service for AggregatorServicer {
+    fn handle(&self, msg: Message) -> Message {
+        let node = &self.0;
+        if node.is_shutdown() {
+            return Message::error(ErrorCode::Unavailable, "aggregator is shut down");
+        }
+        match msg {
+            Message::Hello { proto_version, codecs } => {
+                if proto_version == PROTO_VERSION {
+                    Message::HelloAck {
+                        proto_version: PROTO_VERSION,
+                        component: format!("aggregator/{}", node.id),
+                        codecs: crate::tensor::codec::negotiate(&codecs, &client::SUPPORTED_CODECS),
+                    }
+                } else {
+                    Message::error(
+                        ErrorCode::VersionMismatch,
+                        format!("aggregator speaks v{PROTO_VERSION}, peer v{proto_version}"),
+                    )
+                }
+            }
+            // Shard membership, learner completions, and model reads go
+            // straight to the embedded shard controller.
+            msg @ (Message::Register { .. }
+            | Message::Deregister { .. }
+            | Message::MarkTaskCompleted { .. }
+            | Message::ShipModel { .. }
+            | Message::GetModel) => node.inner.handle(msg),
+            Message::Heartbeat { .. } => {
+                // Sweep idle streams on BOTH planes (root dispatch and
+                // shard uploads), like the flat components do.
+                node.ingest.gc_idle();
+                node.inner.ingest().gc_idle();
+                Message::HeartbeatAck {
+                    component: format!("aggregator/{}", node.id),
+                    healthy: true,
+                }
+            }
+            Message::Shutdown => {
+                node.shutdown.store(true, Ordering::SeqCst);
+                node.inner.handle(Message::Shutdown)
+            }
+            Message::RunTask { task_id, round, model, spec } => match model.to_model() {
+                Ok(m) => {
+                    node.queue_shard_round(task_id, round, Arc::new(m), spec);
+                    Message::Ack { task_id, ok: true }
+                }
+                Err(e) => Message::error(ErrorCode::InvalidModel, format!("bad model: {e:#}")),
+            },
+            Message::EvaluateModel { task_id, round, model } => match model.to_model() {
+                Ok(m) => node.eval_on_shard(task_id, round, &Arc::new(m)),
+                Err(e) => Message::error(ErrorCode::InvalidModel, format!("bad model: {e:#}")),
+            },
+            Message::ModelStreamBegin {
+                stream_id,
+                task_id,
+                round,
+                purpose,
+                learner_id,
+                codec,
+                base_round,
+                layout,
+                meta,
+                spec,
+            } => {
+                if matches!(purpose, StreamPurpose::RunTask | StreamPurpose::Evaluate) {
+                    // Dispatch stream from the root: decode on the
+                    // node's own ingest, not the shard upload plane.
+                    let base = if codec.needs_base() {
+                        node.last_model
+                            .lock()
+                            .unwrap()
+                            .clone()
+                            .filter(|(r, _)| *r == base_round)
+                            .map(|(_, m)| m)
+                    } else {
+                        None
+                    };
+                    let reply = node.ingest.begin(
+                        StreamBegin {
+                            stream_id,
+                            task_id,
+                            round,
+                            purpose,
+                            learner_id,
+                            codec,
+                            base_round,
+                            layout,
+                            meta,
+                            spec,
+                        },
+                        None,
+                        base,
+                    );
+                    if !matches!(reply, Message::Error { .. }) {
+                        node.dispatch_streams.lock().unwrap().insert(stream_id);
+                    }
+                    reply
+                } else {
+                    // Upload stream from a shard learner.
+                    node.inner.handle(Message::ModelStreamBegin {
+                        stream_id,
+                        task_id,
+                        round,
+                        purpose,
+                        learner_id,
+                        codec,
+                        base_round,
+                        layout,
+                        meta,
+                        spec,
+                    })
+                }
+            }
+            Message::ModelChunk { stream_id, seq, bytes } => {
+                if node.dispatch_streams.lock().unwrap().contains(&stream_id) {
+                    let reply = node.ingest.chunk(stream_id, seq, bytes);
+                    if matches!(reply, Message::Error { .. }) {
+                        node.dispatch_streams.lock().unwrap().remove(&stream_id);
+                    }
+                    reply
+                } else {
+                    node.inner.handle(Message::ModelChunk { stream_id, seq, bytes })
+                }
+            }
+            Message::ModelStreamEnd { stream_id, digest } => {
+                if node.dispatch_streams.lock().unwrap().remove(&stream_id) {
+                    let finished = match node.ingest.end(stream_id, digest) {
+                        Ok(f) => f,
+                        Err(reply) => return reply,
+                    };
+                    let model = Arc::new(finished.model);
+                    match finished.purpose {
+                        StreamPurpose::RunTask => {
+                            node.record_model(finished.round, finished.codec, &model);
+                            node.queue_shard_round(
+                                finished.task_id,
+                                finished.round,
+                                model,
+                                finished.spec,
+                            );
+                            Message::Ack { task_id: finished.task_id, ok: true }
+                        }
+                        StreamPurpose::Evaluate => {
+                            // The End reply IS the combined shard eval
+                            // reply. Record the base only on success,
+                            // matching the learner's discipline.
+                            let reply = node.eval_on_shard(finished.task_id, finished.round, &model);
+                            if !matches!(reply, Message::Error { .. }) {
+                                node.record_model(finished.round, finished.codec, &model);
+                            }
+                            reply
+                        }
+                        _ => Message::error(ErrorCode::Unsupported, "unexpected upload stream"),
+                    }
+                } else {
+                    node.inner.handle(Message::ModelStreamEnd { stream_id, digest })
+                }
+            }
+            other => {
+                Message::error(ErrorCode::Unsupported, format!("unexpected {}", other.kind()))
+            }
+        }
+    }
+}
+
+/// Reference two-tier fold: FedAvg each shard's contributions (sorted
+/// the way the shard barrier sorts arrivals), then FedAvg the partials
+/// in shard order with each shard's summed weight. This IS the flat
+/// fold regrouped associatively — `current` is passed through for rule
+/// parity but plain FedAvg ignores it. Empty shards are skipped (a
+/// severed aggregator degrades the root to the surviving shards).
+pub fn two_tier_reference(
+    current: &TensorModel,
+    shards: &[Vec<Contribution>],
+    backend: &Backend,
+) -> Result<TensorModel> {
+    let mut rule = FedAvg::new();
+    let mut partials: Vec<Contribution> = Vec::new();
+    for shard in shards {
+        if shard.is_empty() {
+            continue;
+        }
+        let weight: f64 = shard.iter().map(|c| c.weight).sum();
+        let folded = rule.aggregate(current, shard, backend)?;
+        partials.push(Contribution { model: Arc::new(folded), weight });
+    }
+    if partials.is_empty() {
+        bail!("two_tier_reference: every shard is empty");
+    }
+    rule.aggregate(current, &partials, backend)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{AggregationBackend, AggregationSpec, ModelSpec, TransportKind};
+    use crate::net::chaos::ChaosPlan;
+    use crate::proto::ingest::StreamIngest;
+    use std::sync::Mutex as StdMutex;
+
+    fn digest(m: &TensorModel) -> u64 {
+        let mut h = FNV64_INIT;
+        for t in &m.tensors {
+            for v in &t.data {
+                h = fnv1a64(h, &v.to_bits().to_le_bytes());
+            }
+        }
+        h
+    }
+
+    fn test_env(name: &str, learners: usize) -> FederationEnv {
+        FederationEnv::builder(name)
+            .learners(learners)
+            .rounds(1)
+            .model(ModelSpec::mlp(4, 2, 8))
+            .aggregation(AggregationSpec {
+                backend: AggregationBackend::Sequential,
+                ..AggregationSpec::default()
+            })
+            .transport(TransportKind::InProc)
+            .samples_per_learner(10)
+            .seed(7)
+            .task_timeout_ms(10_000)
+            .build()
+    }
+
+    fn layout_model(seed: u64) -> TensorModel {
+        let layout = ModelSpec::mlp(4, 2, 8).tensor_layout();
+        TensorModel::random_init(&layout, &mut Rng::new(seed))
+    }
+
+    /// Learner stub: any RunTask dispatch (one-shot or streamed) makes
+    /// it call `MarkTaskCompleted` back to its aggregator with a fixed
+    /// deterministic update and weight, synchronously, then ack.
+    struct StubLearner {
+        id: String,
+        weight: usize,
+        callback: String,
+        update: TensorModel,
+        ingest: StreamIngest,
+        uploads: StdMutex<u64>,
+    }
+
+    impl StubLearner {
+        fn new(id: &str, weight: usize, callback: &str, seed: u64) -> StubLearner {
+            StubLearner {
+                id: id.to_string(),
+                weight,
+                callback: callback.to_string(),
+                update: layout_model(seed),
+                ingest: StreamIngest::default(),
+                uploads: StdMutex::new(0),
+            }
+        }
+
+        fn contribution(&self) -> Contribution {
+            Contribution { model: Arc::new(self.update.clone()), weight: self.weight as f64 }
+        }
+
+        fn upload(&self, task_id: u64) {
+            let mut conn = crate::net::connect(&self.callback, None).unwrap();
+            client::hello_negotiate(conn.as_mut()).unwrap();
+            let proto = ModelProto::from_model(&self.update, DType::F32, ByteOrder::Little);
+            let meta = TaskMeta {
+                num_samples: self.weight,
+                completed_steps: 1,
+                train_wall_time_us: 1_000,
+                ..TaskMeta::default()
+            };
+            client::mark_task_completed(conn.as_mut(), task_id, &self.id, proto, meta).unwrap();
+            *self.uploads.lock().unwrap() += 1;
+        }
+    }
+
+    impl Service for StubLearner {
+        fn handle(&self, msg: Message) -> Message {
+            match msg {
+                Message::Hello { .. } => Message::HelloAck {
+                    proto_version: PROTO_VERSION,
+                    component: format!("learner/{}", self.id),
+                    codecs: client::SUPPORTED_CODECS.to_vec(),
+                },
+                Message::RunTask { task_id, .. } => {
+                    self.upload(task_id);
+                    Message::Ack { task_id, ok: true }
+                }
+                Message::ModelStreamBegin {
+                    stream_id,
+                    task_id,
+                    round,
+                    purpose,
+                    learner_id,
+                    codec,
+                    base_round,
+                    layout,
+                    meta,
+                    spec,
+                } => self.ingest.begin(
+                    StreamBegin {
+                        stream_id,
+                        task_id,
+                        round,
+                        purpose,
+                        learner_id,
+                        codec,
+                        base_round,
+                        layout,
+                        meta,
+                        spec,
+                    },
+                    None,
+                    None,
+                ),
+                Message::ModelChunk { stream_id, seq, bytes } => {
+                    self.ingest.chunk(stream_id, seq, bytes)
+                }
+                Message::ModelStreamEnd { stream_id, digest } => {
+                    match self.ingest.end(stream_id, digest) {
+                        Ok(f) => match f.purpose {
+                            StreamPurpose::RunTask => {
+                                self.upload(f.task_id);
+                                Message::Ack { task_id: f.task_id, ok: true }
+                            }
+                            StreamPurpose::Evaluate => Message::EvaluateModelReply {
+                                task_id: f.task_id,
+                                learner_id: self.id.clone(),
+                                result: EvalResult {
+                                    loss: 0.5,
+                                    num_samples: self.weight,
+                                    eval_time_us: 10,
+                                },
+                            },
+                            _ => Message::error(ErrorCode::Unsupported, "unexpected purpose"),
+                        },
+                        Err(reply) => reply,
+                    }
+                }
+                Message::Heartbeat { .. } => {
+                    Message::HeartbeatAck { component: self.id.clone(), healthy: true }
+                }
+                Message::Shutdown => Message::Ack { task_id: 0, ok: true },
+                other => {
+                    Message::error(ErrorCode::Unsupported, format!("unexpected {}", other.kind()))
+                }
+            }
+        }
+    }
+
+    /// Satellite: `Deregister` of a mid-round learner behind an
+    /// aggregator — the shard barrier re-targets, the partial sum
+    /// excludes the departed learner, and the root community model is
+    /// bitwise equal to the direct fold over the survivors.
+    #[test]
+    fn deregister_behind_aggregator_retargets_and_stays_bitwise() {
+        let env = test_env("h-dereg", 3);
+        let root = Controller::new(env.clone(), None).unwrap();
+        let _root_srv =
+            crate::net::serve("inproc://h-dereg-root", root.clone() as Arc<dyn Service>, None)
+                .unwrap();
+        let initial = layout_model(42);
+        root.ship_model(initial.clone());
+
+        let node = AggregatorNode::new("agg-0", "inproc://h-dereg-root", &env, 3, None).unwrap();
+        let svc = Arc::new(AggregatorServicer(Arc::clone(&node)));
+        let _agg_srv =
+            crate::net::serve("inproc://h-dereg-agg0", svc.clone() as Arc<dyn Service>, None)
+                .unwrap();
+
+        let la = Arc::new(StubLearner::new("l-a", 3, "inproc://h-dereg-agg0", 101));
+        let lb = Arc::new(StubLearner::new("l-b", 5, "inproc://h-dereg-agg0", 102));
+        let _sa =
+            crate::net::serve("inproc://h-dereg-la", la.clone() as Arc<dyn Service>, None).unwrap();
+        let _sb =
+            crate::net::serve("inproc://h-dereg-lb", lb.clone() as Arc<dyn Service>, None).unwrap();
+        node.inner().register_learner("l-a", "inproc://h-dereg-la", 3);
+        node.inner().register_learner("l-b", "inproc://h-dereg-lb", 5);
+        // A third shard member whose endpoint is never served: its
+        // dispatch fails, and under full quorum the shard barrier would
+        // hold until the task timeout — unless it deregisters.
+        node.inner().register_learner("l-ghost", "inproc://h-dereg-ghost", 7);
+        node.register("inproc://h-dereg-agg0", 15).unwrap();
+
+        root.open_round(1, &["agg-0".to_string()]);
+        let proto = ModelProto::from_model(&initial, DType::F32, ByteOrder::Little);
+        let reply = svc.handle(Message::RunTask {
+            task_id: 1,
+            round: 0,
+            model: proto,
+            spec: TaskSpec::default(),
+        });
+        assert!(matches!(reply, Message::Ack { ok: true, .. }), "dispatch refused: {reply:?}");
+
+        // Let the live learners complete, then pull the ghost out
+        // mid-round: the barrier must re-target and close.
+        while *la.uploads.lock().unwrap() == 0 || *lb.uploads.lock().unwrap() == 0 {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        let reply = svc.handle(Message::Deregister { learner_id: "l-ghost".to_string() });
+        assert!(matches!(reply, Message::Ack { ok: true, .. }), "deregister failed: {reply:?}");
+
+        let outcome = root.wait_round_quorum(Duration::from_secs(10), 1.0);
+        assert_eq!(outcome.arrived, vec!["agg-0".to_string()]);
+        // The stored partial's weight excludes the departed learner.
+        {
+            let s = root.state.lock().unwrap();
+            let stored = s.store.select_latest(&["agg-0".to_string()]).unwrap();
+            assert_eq!(stored.len(), 1);
+            assert_eq!(stored[0].meta.num_samples, 8, "3 + 5, ghost's 7 excluded");
+        }
+        let community = root.aggregate_from_store(&["agg-0".to_string()], 1).unwrap();
+
+        // Direct fold over the survivors, in the shard's sorted-id
+        // order, through the same backend.
+        let backend = Backend::Sequential;
+        let expected =
+            two_tier_reference(&initial, &[vec![la.contribution(), lb.contribution()]], &backend)
+                .unwrap();
+        assert_eq!(digest(&community), digest(&expected), "tiered fold diverged from direct fold");
+    }
+
+    /// Satellite: sever an aggregator via the dispatch-direction chaos
+    /// plan — the root's streamed fan-out gives up on the dead shard,
+    /// the quorum barrier closes on the survivors, and the community
+    /// model equals the reference fold over the surviving shards only.
+    #[test]
+    fn severed_aggregator_degrades_root_to_surviving_shards() {
+        let mut env = test_env("h-sever", 2);
+        env.quorum_fraction = 0.5;
+        env.stream_chunk_bytes = 2048;
+        let root = Controller::new(env.clone(), None).unwrap();
+        let _root_srv =
+            crate::net::serve("inproc://h-sever-root", root.clone() as Arc<dyn Service>, None)
+                .unwrap();
+        let initial = layout_model(43);
+        root.ship_model(initial.clone());
+
+        let mut nodes = Vec::new();
+        let mut stubs = Vec::new();
+        for i in 0..2 {
+            let node = AggregatorNode::new(
+                &format!("agg-{i}"),
+                "inproc://h-sever-root",
+                &env,
+                1,
+                None,
+            )
+            .unwrap();
+            let svc = Arc::new(AggregatorServicer(Arc::clone(&node)));
+            let ep = format!("inproc://h-sever-agg{i}");
+            let _srv = crate::net::serve(&ep, svc as Arc<dyn Service>, None).unwrap();
+            let stub = Arc::new(StubLearner::new(&format!("l-{i}"), 4, &ep, 200 + i as u64));
+            let lep = format!("inproc://h-sever-l{i}");
+            let _lsrv = crate::net::serve(&lep, stub.clone() as Arc<dyn Service>, None).unwrap();
+            node.inner().register_learner(&format!("l-{i}"), &lep, 4);
+            node.register(&ep, 4).unwrap();
+            nodes.push((node, _srv));
+            stubs.push((stub, _lsrv));
+        }
+
+        // Kill the root→agg-1 link before the round: every dial routes
+        // through a transport that dies on the first send.
+        let mut sever = ChaosPlan::default();
+        sever.sever_after_sends = Some(0);
+        assert!(root.set_dispatch_chaos("agg-1", sever));
+        assert!(!root.set_dispatch_chaos("nobody", ChaosPlan::default()));
+
+        let targets = root.learners_snapshot();
+        let ids: Vec<String> = targets.iter().map(|h| h.id.clone()).collect();
+        root.open_round(1, &ids);
+        let model = Arc::new(initial.clone());
+        let (_d, _replies) = root.stream_broadcast(
+            &targets,
+            StreamPurpose::RunTask,
+            1,
+            &TaskSpec::default(),
+            None,
+            &model,
+            0,
+        );
+        let outcome = root.wait_round_quorum(Duration::from_secs(10), env.quorum_fraction);
+        assert_eq!(outcome.arrived, vec!["agg-0".to_string()]);
+        assert_eq!(outcome.missing, vec!["agg-1".to_string()]);
+        assert!(root.retry_give_ups() > 0, "severed dispatch must surface as a give-up");
+
+        let community = root.aggregate_from_store(&outcome.arrived, 1).unwrap();
+        let backend = Backend::Sequential;
+        let expected = two_tier_reference(
+            &initial,
+            &[vec![stubs[0].0.contribution()], Vec::new()],
+            &backend,
+        )
+        .unwrap();
+        assert_eq!(
+            digest(&community),
+            digest(&expected),
+            "root must degrade to the surviving shard, bitwise"
+        );
+    }
+
+    /// Satellite: a peer that only speaks the pre-v5 codec set (f32 +
+    /// delta) negotiates the auto/delta-rle dispatch down to delta on
+    /// both directions instead of refusing at `Begin`.
+    #[test]
+    fn delta_only_peer_negotiates_down() {
+        struct LegacyPeer;
+        impl Service for LegacyPeer {
+            fn handle(&self, msg: Message) -> Message {
+                match msg {
+                    Message::Hello { proto_version, codecs } => Message::HelloAck {
+                        proto_version,
+                        component: "legacy".into(),
+                        codecs: codecs
+                            .into_iter()
+                            .filter(|c| matches!(c, CodecId::F32 | CodecId::Delta))
+                            .collect(),
+                    },
+                    other => Message::error(
+                        ErrorCode::Unsupported,
+                        format!("unexpected {}", other.kind()),
+                    ),
+                }
+            }
+        }
+        let mut env = test_env("h-compat", 1);
+        env.stream_chunk_bytes = 2048;
+        assert_eq!(env.dispatch_codec(), CodecId::DeltaRle, "auto must prefer delta-rle");
+        let root = Controller::new(env, None).unwrap();
+        let _srv =
+            crate::net::serve("inproc://h-compat-peer", Arc::new(LegacyPeer), None).unwrap();
+        root.register_learner("legacy", "inproc://h-compat-peer", 1);
+        let negotiated = root.negotiate_dispatch_codec(&root.learners_snapshot());
+        assert_eq!(negotiated, CodecId::Delta, "dispatch must degrade delta-rle → delta");
+        // Upload direction: the same accepted set degrades the
+        // configured upload codec along the lossless chain.
+        assert_eq!(CodecId::DeltaRle.degrade_to(&[CodecId::F32, CodecId::Delta]), CodecId::Delta);
+    }
+
+    /// The reference fold with one shard of one contribution is the
+    /// identity (coefficient 1.0 is exact), and shard grouping
+    /// preserves total weight through the root fold.
+    #[test]
+    fn two_tier_reference_single_contribution_is_identity() {
+        let current = layout_model(7);
+        let update = layout_model(8);
+        let backend = Backend::Sequential;
+        let c = Contribution { model: Arc::new(update.clone()), weight: 5.0 };
+        let folded = two_tier_reference(&current, &[vec![c]], &backend).unwrap();
+        assert_eq!(digest(&folded), digest(&update));
+        assert!(two_tier_reference(&current, &[Vec::new()], &backend).is_err());
+    }
+}

@@ -9,6 +9,7 @@
 
 pub mod aggregation;
 mod bases;
+pub mod hierarchy;
 pub mod pacing;
 pub mod scheduling;
 pub mod selector;
@@ -16,6 +17,7 @@ pub mod store;
 
 use crate::config::{FederationEnv, Protocol, SecureSpec, SelectorSpec};
 use crate::metrics::{FedOp, OpMetrics};
+use crate::net::chaos::{connect_with_chaos, ChaosPlan};
 use crate::net::retry::RetryPolicy;
 use crate::net::{ClientConn, Psk, Service};
 use crate::proto::client::{self, StreamSend};
@@ -50,6 +52,12 @@ pub struct LearnerHandle {
     /// fan-out path intersects these across targets so a mixed fleet
     /// degrades the dispatch codec instead of erroring at `Begin`.
     accepted: Mutex<Option<Vec<CodecId>>>,
+    /// Fault-injection plan for the *dispatch* direction (chaos
+    /// harness). When set, every (re)dial of this handle's connection
+    /// routes through the chaos transport — the same plan the learner's
+    /// callback side wraps, so a severed link kills both directions of
+    /// the conversation, not just the upload half.
+    chaos: Mutex<Option<ChaosPlan>>,
 }
 
 impl LearnerHandle {
@@ -61,6 +69,7 @@ impl LearnerHandle {
             index,
             conn: Mutex::new(None),
             accepted: Mutex::new(None),
+            chaos: Mutex::new(None),
         }
     }
 
@@ -73,8 +82,12 @@ impl LearnerHandle {
         if guard.is_some() {
             return Ok(());
         }
-        let mut conn = crate::net::connect(&self.endpoint, psk)
-            .with_context(|| format!("connecting to learner {}", self.id))?;
+        let plan = self.chaos.lock().unwrap().clone();
+        let mut conn = match &plan {
+            Some(p) => connect_with_chaos(&self.endpoint, psk, p),
+            None => crate::net::connect(&self.endpoint, psk),
+        }
+        .with_context(|| format!("connecting to learner {}", self.id))?;
         let accepted = match client::hello_negotiate(conn.as_mut()) {
             Ok((_version, codecs)) => codecs,
             Err(e) if e.is_transport() => {
@@ -486,6 +499,26 @@ impl Controller {
         self.state.lock().unwrap().learners.clone()
     }
 
+    /// Route every future dispatch dial to `learner_id` through a
+    /// fault-injection plan (chaos harness) — the controller→learner
+    /// mirror of [`crate::learner::Learner::set_chaos`]. The cached
+    /// connection, if any, is dropped so the plan takes effect on the
+    /// next call. Returns false when the learner is not registered.
+    pub fn set_dispatch_chaos(&self, learner_id: &str, plan: ChaosPlan) -> bool {
+        let handle = self
+            .learners_snapshot()
+            .into_iter()
+            .find(|h| h.id == learner_id);
+        match handle {
+            Some(h) => {
+                *h.chaos.lock().unwrap() = Some(plan);
+                *h.conn.lock().unwrap() = None;
+                true
+            }
+            None => false,
+        }
+    }
+
     /// Metrics snapshot.
     pub fn metrics(&self) -> OpMetrics {
         self.metrics.lock().unwrap().clone()
@@ -881,10 +914,16 @@ impl Controller {
     }
 
     fn on_stream_begin(&self, args: StreamBegin) -> Message {
-        if !matches!(args.purpose, StreamPurpose::ShipModel | StreamPurpose::TaskCompletion) {
+        if !matches!(
+            args.purpose,
+            StreamPurpose::ShipModel
+                | StreamPurpose::TaskCompletion
+                | StreamPurpose::PartialAggregate
+        ) {
             return Message::error(
                 ErrorCode::Unsupported,
-                "controller accepts only upload streams (ShipModel / TaskCompletion)",
+                "controller accepts only upload streams \
+                 (ShipModel / TaskCompletion / PartialAggregate)",
             );
         }
         let base = if args.codec.needs_base() {
@@ -914,7 +953,13 @@ impl Controller {
                 self.ship_model(model);
                 Message::Ack { task_id: stream_id, ok: true }
             }
-            StreamPurpose::TaskCompletion => {
+            // A shard's partial aggregate rides the completion path: the
+            // aggregator is registered as a learner-like peer, its
+            // partial weighted sum is the "trained model", and the shard
+            // total weight arrives in `meta.num_samples` — so the root's
+            // quorum barrier, staleness watermark, and FedAvg reweighting
+            // all generalize over shards with no extra state.
+            StreamPurpose::TaskCompletion | StreamPurpose::PartialAggregate => {
                 match self.complete_task(task_id, learner_id, model, meta) {
                     Ok(()) => Message::Ack { task_id: stream_id, ok: true },
                     Err(e) => Message::error(ErrorCode::Internal, format!("{e:#}")),

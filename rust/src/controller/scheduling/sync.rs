@@ -7,7 +7,7 @@
 use super::super::Controller;
 use crate::metrics::{FedOp, RoundReport};
 use crate::proto::client;
-use crate::proto::{Message, ModelProto, StreamPurpose, TaskSpec};
+use crate::proto::{Message, ModelProto, StreamPurpose, TaskMeta, TaskSpec};
 use crate::tensor::{ByteOrder, DType};
 use crate::util::{log_debug, log_warn, Rng, Stopwatch};
 use anyhow::{bail, Result};
@@ -200,6 +200,21 @@ pub(crate) fn run_round_with_budget(
                 Ok((_, result)) => {
                     weighted_loss += result.loss * result.num_samples as f64;
                     total_samples += result.num_samples;
+                    // Eval-only participants (no train completion this
+                    // round) still reveal their speed: synthesize a
+                    // pacing observation from the eval timing so
+                    // `Selector::PacingAware` can score them. Train
+                    // completers already fed richer step-rate data via
+                    // `complete_task` — don't dilute it with eval noise.
+                    if arrived.binary_search(id).is_err() {
+                        let meta = TaskMeta {
+                            num_samples: result.num_samples,
+                            completed_steps: result.num_samples,
+                            train_wall_time_us: result.eval_time_us.max(1),
+                            ..Default::default()
+                        };
+                        ctrl.pacing().observe_completion(id, &meta, Some(eval_round_time), round);
+                    }
                 }
                 Err(e) => log_warn("scheduler", &format!("{id}: eval rejected: {e}")),
             },
@@ -224,4 +239,112 @@ pub(crate) fn run_round_with_budget(
         federation_round,
         completion_spread: outcome.completion_spread,
     })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{FederationEnv, ModelSpec, TransportKind};
+    use crate::net::Service;
+    use crate::proto::{ErrorCode, EvalResult, PROTO_VERSION};
+    use crate::tensor::TensorModel;
+    use std::sync::Arc;
+
+    /// Stub learner: acks train dispatch, but only `completes` ones
+    /// call the completion callback. Everyone answers evaluation.
+    struct EvalStub {
+        id: String,
+        callback: String,
+        completes: bool,
+        update: TensorModel,
+    }
+
+    impl Service for EvalStub {
+        fn handle(&self, msg: Message) -> Message {
+            match msg {
+                Message::Hello { .. } => Message::HelloAck {
+                    proto_version: PROTO_VERSION,
+                    component: format!("learner/{}", self.id),
+                    codecs: client::SUPPORTED_CODECS.to_vec(),
+                },
+                Message::RunTask { task_id, .. } => {
+                    if self.completes {
+                        let mut conn = crate::net::connect(&self.callback, None).unwrap();
+                        client::hello_negotiate(conn.as_mut()).unwrap();
+                        let proto =
+                            ModelProto::from_model(&self.update, DType::F32, ByteOrder::Little);
+                        let meta = TaskMeta {
+                            num_samples: 10,
+                            completed_steps: 8,
+                            train_wall_time_us: 2_000,
+                            ..TaskMeta::default()
+                        };
+                        client::mark_task_completed(conn.as_mut(), task_id, &self.id, proto, meta)
+                            .unwrap();
+                    }
+                    Message::Ack { task_id, ok: true }
+                }
+                Message::EvaluateModel { task_id, .. } => Message::EvaluateModelReply {
+                    task_id,
+                    learner_id: self.id.clone(),
+                    result: EvalResult { loss: 0.25, num_samples: 10, eval_time_us: 500 },
+                },
+                other => {
+                    Message::error(ErrorCode::Unsupported, format!("unexpected {}", other.kind()))
+                }
+            }
+        }
+    }
+
+    /// Eval-round timings feed the pacing registry: a learner that only
+    /// ever evaluates (here: misses the train quorum but answers the
+    /// eval broadcast) still ends up with a throughput profile for
+    /// `Selector::Pacing` — while train completers keep their richer
+    /// step-rate observation undiluted.
+    #[test]
+    fn eval_only_learner_feeds_pacing_registry() {
+        let mut env = FederationEnv::builder("sync-eval-pacing")
+            .learners(2)
+            .rounds(1)
+            .model(ModelSpec::mlp(4, 2, 8))
+            .transport(TransportKind::InProc)
+            .task_timeout_ms(10_000)
+            .build();
+        env.quorum_fraction = 0.5;
+        let ctrl = Controller::new(env, None).unwrap();
+        let _srv = crate::net::serve(
+            "inproc://sync-eval-root",
+            ctrl.clone() as Arc<dyn Service>,
+            None,
+        )
+        .unwrap();
+        let layout = ModelSpec::mlp(4, 2, 8).tensor_layout();
+        ctrl.ship_model(TensorModel::random_init(&layout, &mut Rng::new(4)));
+        let update = TensorModel::random_init(&layout, &mut Rng::new(5));
+        let mut servers = Vec::new();
+        for (id, completes) in [("worker", true), ("evaluator", false)] {
+            let stub = Arc::new(EvalStub {
+                id: id.to_string(),
+                callback: "inproc://sync-eval-root".into(),
+                completes,
+                update: update.clone(),
+            });
+            let ep = format!("inproc://sync-eval-{id}");
+            servers.push(crate::net::serve(&ep, stub as Arc<dyn Service>, None).unwrap());
+            ctrl.register_learner(id, &ep, 10);
+        }
+
+        let report = run_sync_round(&ctrl, 1, &mut Rng::new(9)).unwrap();
+        assert_eq!(report.completed, 1, "only the worker completes training");
+        // The quorum-missing learner answered evaluation, so it now has
+        // a throughput synthesized from eval telemetry (10 samples in
+        // 500µs → 20k/s). A bare `observe_failure` entry would have no
+        // throughput at all.
+        let tp = ctrl.pacing().throughput("evaluator").expect("eval-only learner unprofiled");
+        assert!((tp - 20_000.0).abs() < 1.0, "eval throughput off: {tp}");
+        // The train completer's profile stays train-derived:
+        // 8 steps / 2ms = 4000 steps/s, not overwritten by eval timing.
+        let tp = ctrl.pacing().throughput("worker").expect("train completer unprofiled");
+        assert!((tp - 4_000.0).abs() < 1.0, "train profile diluted by eval: {tp}");
+    }
 }

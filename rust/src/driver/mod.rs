@@ -10,8 +10,10 @@
 //! [`run_simulated`] (in-process transport) and [`run_distributed`]
 //! (framed TCP on localhost).
 
-use crate::config::{FederationEnv, Protocol, SecureSpec, TrainerKind, TransportKind};
+use crate::config::{FederationEnv, Protocol, SecureSpec, TopologySpec, TrainerKind, TransportKind};
+use crate::controller::hierarchy::{AggregatorNode, AggregatorServicer};
 use crate::controller::{scheduling, Controller};
+use crate::harness::loadtest::model_digest;
 use crate::learner::{Dataset, Learner, LearnerServicer, SyntheticTrainer, Trainer};
 use crate::metrics::{OpMetrics, RoundReport};
 use crate::net::{Psk, ServerHandle};
@@ -52,6 +54,12 @@ pub struct FederationReport {
     /// `raw volume - wire_bytes_sent`. Divide by rounds for the
     /// compression ablation's bytes-per-round rows.
     pub wire_bytes_saved: u64,
+    /// Encoded stream bytes the (root) controller *received* over its
+    /// upload ingest. Deterministic for a fixed env + seed, so the
+    /// topology ablation gates on the 2-tier/flat ratio of this total:
+    /// a root behind aggregators ingests O(aggregators) partial sums
+    /// instead of O(learners) uploads.
+    pub wire_ingest_bytes: u64,
     /// Inbound streams the controller refused at admission (open-slot
     /// cap or aggregate ingest budget) — graceful-degradation evidence
     /// that overload sheds load instead of wedging.
@@ -66,6 +74,11 @@ pub struct FederationReport {
     /// Delta→f32 fallback sends (both directions): streams restarted at
     /// full precision because the peer lost the negotiated delta base.
     pub fallback_sends: u64,
+    /// FNV-1a digest over the final community model's exact f32 bits
+    /// (0 when no community model exists). Two runs that must be
+    /// bitwise identical — e.g. a flat fleet vs the same fleet behind
+    /// aggregators — compare equal here.
+    pub community_digest: u64,
 }
 
 /// Unique per-process run counter so in-proc endpoint names never clash
@@ -93,6 +106,86 @@ fn trainers_for(env: &FederationEnv) -> Result<Vec<Arc<dyn Trainer>>> {
                 Arc::new(crate::runtime::XlaTrainer::load(artifacts_dir, &env.model)?);
             Ok((0..env.learners).map(|_| Arc::clone(&t)).collect())
         }
+    }
+}
+
+/// The deterministic initial community model every deployment of `env`
+/// starts from. Exported so reference computations (tests, benches) can
+/// reproduce a run's exact starting bits without driving a federation.
+pub fn initial_model(env: &FederationEnv) -> TensorModel {
+    let mut init_rng = Rng::new(env.seed ^ 0x5EED_0F_0E715); // "metis" seed salt
+    TensorModel::random_init(&env.model.tensor_layout(), &mut init_rng)
+}
+
+/// The deterministic dataset of learner `index` under `env` — the same
+/// bits whether the learner sits behind an aggregator or talks to the
+/// controller directly. Replays the driver's shared seed sequence, so
+/// learner `i`'s data is independent of which other learners exist.
+pub fn learner_dataset(env: &FederationEnv, index: usize) -> Dataset {
+    let mut data_rng = Rng::new(env.seed);
+    let mut seed = 0u64;
+    for i in 0..=index {
+        seed = data_rng.split(i as u64).next_u64();
+    }
+    Dataset::synthetic_housing(
+        env.model.input_dim,
+        env.samples_per_learner,
+        env.samples_per_learner, // paper: same 100 samples for test
+        seed,
+    )
+}
+
+/// Heartbeat monitor over every component endpoint. Dropped via
+/// [`Monitor::stop`] at shutdown.
+struct Monitor {
+    stop: Arc<AtomicBool>,
+    missed: Arc<AtomicU64>,
+    handle: std::thread::JoinHandle<()>,
+}
+
+impl Monitor {
+    fn spawn(endpoints: Vec<String>, period: Duration, psk: Psk) -> Monitor {
+        let stop = Arc::new(AtomicBool::new(false));
+        let missed = Arc::new(AtomicU64::new(0));
+        let handle = {
+            let stop = Arc::clone(&stop);
+            let missed = Arc::clone(&missed);
+            std::thread::Builder::new()
+                .name("metisfl-monitor".into())
+                .spawn(move || {
+                    while !stop.load(Ordering::SeqCst) {
+                        for ep in &endpoints {
+                            if stop.load(Ordering::SeqCst) {
+                                return;
+                            }
+                            let healthy = crate::net::connect(ep, psk)
+                                .map_err(client::RpcError::Transport)
+                                .and_then(|mut c| client::heartbeat(c.as_mut(), "driver"))
+                                .map(|(_, healthy)| healthy)
+                                .unwrap_or(false);
+                            if !healthy {
+                                missed.fetch_add(1, Ordering::SeqCst);
+                                log_warn("driver", &format!("heartbeat missed for {ep}"));
+                            }
+                        }
+                        // Sleep in short slices so shutdown is prompt even
+                        // with long heartbeat periods.
+                        let deadline = std::time::Instant::now() + period;
+                        while std::time::Instant::now() < deadline && !stop.load(Ordering::SeqCst)
+                        {
+                            std::thread::sleep(Duration::from_millis(10).min(period));
+                        }
+                    }
+                })
+                .expect("spawn monitor")
+        };
+        Monitor { stop, missed, handle }
+    }
+
+    fn stop(self) -> u64 {
+        self.stop.store(true, Ordering::SeqCst);
+        let _ = self.handle.join();
+        self.missed.load(Ordering::SeqCst)
     }
 }
 
@@ -125,6 +218,9 @@ pub fn run_with_trainer(
              (see examples/secure_aggregation.rs and DESIGN.md §Substitutions)"
         );
     }
+    if !env.topology.is_flat() {
+        return run_two_tier(env, make_trainer);
+    }
     let run = next_run_id();
     let sw = Stopwatch::start();
     let psk: Psk = None;
@@ -143,20 +239,18 @@ pub fn run_with_trainer(
     let mut learner_servers: Vec<Box<dyn ServerHandle>> = Vec::new();
     let mut learners: Vec<Arc<Learner>> = Vec::new();
     let mut learner_endpoints: Vec<String> = Vec::new();
-    let mut data_rng = Rng::new(env.seed);
     // Deterministic chaos assignment: the same env + seed always
     // afflicts the same learner indices with the same faults.
     let chaos_plans = env.chaos.plan_fleet(env.learners, env.seed);
     let mut expected_registrations = env.learners;
     for i in 0..env.learners {
-        let dataset = Dataset::synthetic_housing(
-            env.model.input_dim,
-            env.samples_per_learner,
-            env.samples_per_learner, // paper: same 100 samples for test
-            data_rng.split(i as u64).next_u64(),
+        let learner = Learner::new(
+            &format!("learner-{i}"),
+            &ctrl_endpoint,
+            psk,
+            make_trainer(i),
+            learner_dataset(env, i),
         );
-        let learner =
-            Learner::new(&format!("learner-{i}"), &ctrl_endpoint, psk, make_trainer(i), dataset);
         learner.set_stream_chunk(env.effective_stream_chunk());
         learner.set_upload_codec(env.upload_codec());
         learner.set_delta_fallback(env.delta_fallback);
@@ -182,6 +276,12 @@ pub fn run_with_trainer(
             );
         } else {
             learner.register(&ep).with_context(|| format!("registering learner-{i}"))?;
+            if !plan.is_noop() {
+                // The same faults afflict the dispatch direction of the
+                // link, with an independent budget (a shared one would
+                // let upload traffic spend the dispatch sever budget).
+                controller.set_dispatch_chaos(&format!("learner-{i}"), plan.fresh());
+            }
         }
         learner_endpoints.push(ep);
         learner_servers.push(server);
@@ -190,48 +290,14 @@ pub fn run_with_trainer(
     controller.wait_for_learners(expected_registrations, Duration::from_secs(30))?;
 
     // Ship the initial model state (tensors only — Fig. 8).
-    let mut init_rng = Rng::new(env.seed ^ 0x5EED_0F_0E715); // "metis" seed salt
-    let initial = TensorModel::random_init(&env.model.tensor_layout(), &mut init_rng);
-    controller.ship_model(initial);
+    controller.ship_model(initial_model(env));
 
     // --- Monitoring: heartbeat thread ----------------------------------
-    let stop_monitor = Arc::new(AtomicBool::new(false));
-    let missed = Arc::new(AtomicU64::new(0));
-    let monitor = {
-        let stop = Arc::clone(&stop_monitor);
-        let missed = Arc::clone(&missed);
-        let endpoints: Vec<String> = std::iter::once(ctrl_endpoint.clone())
-            .chain(learner_endpoints.iter().cloned())
-            .collect();
-        let period = Duration::from_millis(env.heartbeat_ms);
-        std::thread::Builder::new()
-            .name("metisfl-monitor".into())
-            .spawn(move || {
-                while !stop.load(Ordering::SeqCst) {
-                    for ep in &endpoints {
-                        if stop.load(Ordering::SeqCst) {
-                            return;
-                        }
-                        let healthy = crate::net::connect(ep, psk)
-                            .map_err(client::RpcError::Transport)
-                            .and_then(|mut c| client::heartbeat(c.as_mut(), "driver"))
-                            .map(|(_, healthy)| healthy)
-                            .unwrap_or(false);
-                        if !healthy {
-                            missed.fetch_add(1, Ordering::SeqCst);
-                            log_warn("driver", &format!("heartbeat missed for {ep}"));
-                        }
-                    }
-                    // Sleep in short slices so shutdown is prompt even
-                    // with long heartbeat periods.
-                    let deadline = std::time::Instant::now() + period;
-                    while std::time::Instant::now() < deadline && !stop.load(Ordering::SeqCst) {
-                        std::thread::sleep(Duration::from_millis(10).min(period));
-                    }
-                }
-            })
-            .expect("spawn monitor")
-    };
+    let monitor = Monitor::spawn(
+        std::iter::once(ctrl_endpoint.clone()).chain(learner_endpoints.iter().cloned()).collect(),
+        Duration::from_millis(env.heartbeat_ms),
+        psk,
+    );
 
     // --- Federated training --------------------------------------------
     let mut round_rng = Rng::new(env.seed ^ 0xD157);
@@ -260,8 +326,7 @@ pub fn run_with_trainer(
     };
 
     // --- Shutdown: learners first, then controller (Fig. 8) ------------
-    stop_monitor.store(true, Ordering::SeqCst);
-    let _ = monitor.join();
+    let missed_heartbeats = monitor.stop();
     for ep in &learner_endpoints {
         if let Ok(mut c) = crate::net::connect(ep, psk) {
             let _ = client::shutdown(c.as_mut());
@@ -284,15 +349,218 @@ pub fn run_with_trainer(
         op_metrics: controller.metrics(),
         final_loss,
         wall_clock: sw.elapsed(),
-        missed_heartbeats: missed.load(Ordering::SeqCst),
+        missed_heartbeats,
         peak_wire_ingest_bytes: controller.peak_wire_ingest_bytes(),
         effective_stream_chunk_bytes: env.effective_stream_chunk(),
         wire_bytes_sent: wire_sent,
         wire_bytes_saved: wire_raw.saturating_sub(wire_sent),
-        streams_refused: controller.ingest().streams_refused(),
-        streams_gced: controller.ingest().streams_gced(),
+        wire_ingest_bytes: controller.ingest().recv_wire_bytes(),
         retry_give_ups: controller.retry_give_ups() + learner_give_ups,
         fallback_sends: controller.fallback_sends() + learner_fallbacks,
+        streams_refused: controller.ingest().streams_refused(),
+        streams_gced: controller.ingest().streams_gced(),
+        community_digest: controller.community().map(|(m, _)| model_digest(&m)).unwrap_or(0),
+    })
+}
+
+/// Two-tier run: root controller ← aggregator shard owners ← learners.
+///
+/// Learners register with (and upload to) their shard's aggregator; each
+/// round the root opens a barrier over the aggregators, every aggregator
+/// runs a full local round on its shard (dispatch, quorum, fold) and
+/// forwards exactly one weighted partial sum upstream. The root then folds
+/// `aggregators` partials instead of `learners` uploads, so its peak wire
+/// ingest is bounded by O(chunk × aggregators).
+fn run_two_tier(
+    env: &FederationEnv,
+    make_trainer: impl Fn(usize) -> Arc<dyn Trainer>,
+) -> Result<FederationReport> {
+    let topo = &env.topology;
+    if matches!(env.protocol, Protocol::Asynchronous { .. }) {
+        bail!("topology.aggregators > 1 requires a synchronous or semi-synchronous protocol");
+    }
+    if topo.aggregators > env.learners {
+        bail!(
+            "topology.aggregators ({}) exceeds the learner fleet ({})",
+            topo.aggregators,
+            env.learners
+        );
+    }
+    let run = next_run_id();
+    let sw = Stopwatch::start();
+    let psk: Psk = None;
+
+    // --- Root controller: sees only the aggregator tier ---------------
+    let mut root_env = env.clone();
+    root_env.learners = topo.aggregators;
+    root_env.topology = TopologySpec::default();
+    let controller = Controller::new(root_env, psk)?;
+    let (ctrl_endpoint, ctrl_server) = serve_component(
+        env,
+        &format!("ctrl-{run}"),
+        0,
+        Arc::clone(&controller) as Arc<dyn crate::net::Service>,
+        psk,
+    )?;
+    log_info(
+        "driver",
+        &format!(
+            "two-tier root at {ctrl_endpoint} ({} aggregators over {} learners)",
+            topo.aggregators, env.learners
+        ),
+    );
+
+    // --- Aggregator tier ----------------------------------------------
+    let mut shard_sizes = vec![0usize; topo.aggregators];
+    for i in 0..env.learners {
+        shard_sizes[topo.shard_of(i)] += 1;
+    }
+    let mut agg_nodes: Vec<Arc<AggregatorNode>> = Vec::new();
+    let mut agg_endpoints: Vec<String> = Vec::new();
+    let mut agg_servers: Vec<Box<dyn ServerHandle>> = Vec::new();
+    for s in 0..topo.aggregators {
+        let node =
+            AggregatorNode::new(&format!("agg-{s}"), &ctrl_endpoint, env, shard_sizes[s], psk)?;
+        let (ep, server) = serve_component(
+            env,
+            &format!("agg-{run}-{s}"),
+            (s + 1) as u16,
+            Arc::new(AggregatorServicer(Arc::clone(&node))) as Arc<dyn crate::net::Service>,
+            psk,
+        )?;
+        agg_endpoints.push(ep);
+        agg_servers.push(server);
+        agg_nodes.push(node);
+    }
+
+    // --- Learner fleet: each learner dials its shard's aggregator ------
+    let mut learner_servers: Vec<Box<dyn ServerHandle>> = Vec::new();
+    let mut learners: Vec<Arc<Learner>> = Vec::new();
+    let mut learner_endpoints: Vec<String> = Vec::new();
+    let chaos_plans = env.chaos.plan_fleet(env.learners, env.seed);
+    let mut expected_per_shard = shard_sizes.clone();
+    for i in 0..env.learners {
+        let shard = topo.shard_of(i);
+        let learner = Learner::new(
+            &format!("learner-{i}"),
+            &agg_endpoints[shard],
+            psk,
+            make_trainer(i),
+            learner_dataset(env, i),
+        );
+        learner.set_stream_chunk(env.effective_stream_chunk());
+        learner.set_upload_codec(env.upload_codec());
+        learner.set_delta_fallback(env.delta_fallback);
+        let (ep, server) = serve_component(
+            env,
+            &format!("learner-{run}-{i}"),
+            (topo.aggregators + 1 + i) as u16,
+            Arc::new(LearnerServicer(Arc::clone(&learner))) as Arc<dyn crate::net::Service>,
+            psk,
+        )?;
+        let plan = &chaos_plans[i];
+        if !plan.is_noop() {
+            learner.set_chaos(plan.clone());
+        }
+        if plan.refuse_dial {
+            expected_per_shard[shard] -= 1;
+            log_warn(
+                "driver",
+                &format!("learner-{i}: chaos refuses its dials; running unregistered"),
+            );
+        } else {
+            learner.register(&ep).with_context(|| format!("registering learner-{i}"))?;
+            if !plan.is_noop() {
+                agg_nodes[shard].inner().set_dispatch_chaos(&format!("learner-{i}"), plan.fresh());
+            }
+        }
+        learner_endpoints.push(ep);
+        learner_servers.push(server);
+        learners.push(learner);
+    }
+
+    // Topology-aware registration barrier: each aggregator first waits
+    // for its own shard, then announces itself (with the shard's total
+    // sample count as its weight) to the root, which in turn waits for
+    // the full aggregator tier.
+    for s in 0..topo.aggregators {
+        agg_nodes[s]
+            .inner()
+            .wait_for_learners(expected_per_shard[s], Duration::from_secs(30))
+            .with_context(|| format!("shard {s} registration barrier"))?;
+        agg_nodes[s]
+            .register(&agg_endpoints[s], expected_per_shard[s] * env.samples_per_learner)
+            .with_context(|| format!("registering agg-{s} upstream"))?;
+    }
+    controller.wait_for_learners(topo.aggregators, Duration::from_secs(30))?;
+
+    controller.ship_model(initial_model(env));
+
+    let monitor = Monitor::spawn(
+        std::iter::once(ctrl_endpoint.clone())
+            .chain(agg_endpoints.iter().cloned())
+            .chain(learner_endpoints.iter().cloned())
+            .collect(),
+        Duration::from_millis(env.heartbeat_ms),
+        psk,
+    );
+
+    // --- Federated training over the tree ------------------------------
+    let mut round_rng = Rng::new(env.seed ^ 0xD157);
+    let mut round_metrics = Vec::with_capacity(env.rounds);
+    for round in 1..=env.rounds as u64 {
+        let report = scheduling::run_round(&controller, round, &mut round_rng)?;
+        log_info(
+            "driver",
+            &format!(
+                "round {round}/{}: fed_round={:?} agg={:?} loss={:?} (two-tier)",
+                env.rounds, report.federation_round, report.aggregation, report.community_eval_loss
+            ),
+        );
+        round_metrics.push(report);
+    }
+
+    // --- Shutdown: learners, then aggregators, then root ---------------
+    let missed_heartbeats = monitor.stop();
+    for ep in learner_endpoints.iter().chain(agg_endpoints.iter()) {
+        if let Ok(mut c) = crate::net::connect(ep, psk) {
+            let _ = client::shutdown(c.as_mut());
+        }
+    }
+    if let Ok(mut c) = crate::net::connect(&ctrl_endpoint, psk) {
+        let _ = client::shutdown(c.as_mut());
+    }
+    for mut s in learner_servers.into_iter().chain(agg_servers) {
+        s.shutdown();
+    }
+    drop(ctrl_server);
+
+    let final_loss = round_metrics.iter().rev().find_map(|r| r.community_eval_loss);
+    let (wire_sent, wire_raw) = controller.wire_bytes_totals();
+    let learner_give_ups: u64 = learners.iter().map(|l| l.retry_give_ups()).sum();
+    let learner_fallbacks: u64 = learners.iter().map(|l| l.fallback_sends()).sum();
+    let agg_give_ups: u64 = agg_nodes.iter().map(|n| n.retry_give_ups()).sum();
+    let agg_fallbacks: u64 = agg_nodes.iter().map(|n| n.fallback_sends()).sum();
+    Ok(FederationReport {
+        env_name: env.name.clone(),
+        round_metrics,
+        op_metrics: controller.metrics(),
+        final_loss,
+        wall_clock: sw.elapsed(),
+        missed_heartbeats,
+        // Root-tier counters only: the acceptance criterion is that the
+        // ROOT's ingest stays O(chunk × aggregators) however large the
+        // learner fleet grows.
+        peak_wire_ingest_bytes: controller.peak_wire_ingest_bytes(),
+        effective_stream_chunk_bytes: env.effective_stream_chunk(),
+        wire_bytes_sent: wire_sent,
+        wire_bytes_saved: wire_raw.saturating_sub(wire_sent),
+        wire_ingest_bytes: controller.ingest().recv_wire_bytes(),
+        retry_give_ups: controller.retry_give_ups() + agg_give_ups + learner_give_ups,
+        fallback_sends: controller.fallback_sends() + agg_fallbacks + learner_fallbacks,
+        streams_refused: controller.ingest().streams_refused(),
+        streams_gced: controller.ingest().streams_gced(),
+        community_digest: controller.community().map(|(m, _)| model_digest(&m)).unwrap_or(0),
     })
 }
 

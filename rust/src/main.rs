@@ -4,6 +4,7 @@
 //!
 //! * `metisfl driver --env <file>`      — full lifecycle from an env file
 //! * `metisfl controller --env <file>`  — standalone controller process
+//! * `metisfl aggregator --env <file> --upstream <ep>` — shard aggregator tier
 //! * `metisfl learner --env <file> --index <i> --controller <ep>`
 //! * `metisfl simulate [...]`           — quick in-proc federation
 //! * `metisfl stress [...]`             — one cross-framework stress cell
@@ -32,7 +33,8 @@ fn main() {
 }
 
 fn usage() -> String {
-    "metisfl <driver|controller|learner|simulate|stress|loadtest|table1|bench-check> [options]\n\
+    "metisfl <driver|controller|aggregator|learner|simulate|stress|loadtest|table1|bench-check> \
+     [options]\n\
      Run `metisfl <subcommand> --help` for options."
         .to_string()
 }
@@ -46,6 +48,7 @@ fn run(args: &[String]) -> anyhow::Result<()> {
     match sub.as_str() {
         "driver" => cmd_driver(rest),
         "controller" => cmd_controller(rest),
+        "aggregator" => cmd_aggregator(rest),
         "learner" => cmd_learner(rest),
         "simulate" => cmd_simulate(rest),
         "stress" => cmd_stress(rest),
@@ -111,6 +114,54 @@ fn cmd_controller(raw: &[String]) -> anyhow::Result<()> {
         std::thread::sleep(std::time::Duration::from_millis(100));
     }
     log_info("main", "controller received shutdown");
+    Ok(())
+}
+
+fn cmd_aggregator(raw: &[String]) -> anyhow::Result<()> {
+    let cmd = Command::new(
+        "metisfl aggregator",
+        "run an intermediate aggregator owning one learner shard",
+    )
+    .opt("env", None, "federated environment YAML/JSON file")
+    .opt("id", Some("agg-0"), "aggregator id (used as upstream learner id)")
+    .opt("upstream", Some("tcp://127.0.0.1:42500"), "root controller endpoint")
+    .opt("listen", Some("tcp://127.0.0.1:0"), "endpoint to serve the shard on")
+    .opt("shard-size", Some("0"), "learners in this shard (0 = env.learners / aggregators)");
+    let a = parse(&cmd, raw)?;
+    let env = FederationEnv::from_file(
+        a.get("env").ok_or_else(|| anyhow::anyhow!("--env <file> is required"))?,
+    )?;
+    let mut shard_size = a.get_usize("shard-size")?;
+    if shard_size == 0 {
+        shard_size = env.learners / env.topology.aggregators.max(1);
+    }
+    let node = metisfl::controller::hierarchy::AggregatorNode::new(
+        a.get("id").unwrap(),
+        a.get("upstream").unwrap(),
+        &env,
+        shard_size.max(1),
+        None,
+    )?;
+    let server = metisfl::net::serve(
+        a.get("listen").unwrap(),
+        Arc::new(metisfl::controller::hierarchy::AggregatorServicer(Arc::clone(&node)))
+            as Arc<dyn Service>,
+        None,
+    )?;
+    // Wait for the shard before announcing upstream, so the root's
+    // registration barrier reflects fully-formed shards (topology-aware
+    // registration: learners → aggregator → controller).
+    node.inner()
+        .wait_for_learners(shard_size.max(1), std::time::Duration::from_secs(300))?;
+    node.register(&server.endpoint(), shard_size.max(1) * env.samples_per_learner)?;
+    log_info(
+        "main",
+        &format!("aggregator {} serving shard on {}", a.get("id").unwrap(), server.endpoint()),
+    );
+    while !node.is_shutdown() {
+        std::thread::sleep(std::time::Duration::from_millis(100));
+    }
+    log_info("main", "aggregator received shutdown");
     Ok(())
 }
 
@@ -323,6 +374,11 @@ const GATED_METRICS: &[(&str, &str, bool)] = &[
     // fleet: lower is better; a ratio drifting toward 1.0 means the
     // pacing/quorum machinery stopped absorbing stragglers.
     ("sched_ablation", "spread frac of sync", true),
+    // Root-tier ingest bytes under a 2-tier topology as a fraction of
+    // the flat run's: lower is better; drifting toward 1.0 means the
+    // aggregator tier stopped shielding the root (partial sums are no
+    // longer replacing per-learner uploads).
+    ("topo_ablation", "root ingest frac of flat", true),
     // Loadtest round/upload p99 latency floors: lower is better. An
     // exception to the no-timing rule above — p99 over the open-loop
     // run is far less noisy than a single wall-clock sample, and the

@@ -211,6 +211,14 @@ impl ChaosPlan {
     pub fn severed(&self) -> bool {
         self.state.severed.load(Ordering::SeqCst)
     }
+
+    /// A copy of this plan with its own fresh fault state: same faults,
+    /// independent send budget / sever latch. Use when afflicting the
+    /// *other* direction of the same link — a clone would share the
+    /// budget and let one direction's traffic spend the other's.
+    pub fn fresh(&self) -> ChaosPlan {
+        ChaosPlan { state: Arc::new(ChaosState::default()), ..self.clone() }
+    }
 }
 
 /// Dial through a chaos plan: refuse/sever faults apply at connect

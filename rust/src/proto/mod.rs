@@ -46,8 +46,12 @@ pub mod wire;
 /// `ModelStreamBegin`, where `spec` follows meta; cross-version
 /// sessions are still refused outright at `Hello` (exact version
 /// equality), so the tolerance is a decode-robustness property, not a
-/// v4-interop mode.
-pub const PROTO_VERSION: u32 = 5;
+/// v4-interop mode. v6 adds the hierarchical aggregation tier: the
+/// `PartialAggregate` stream purpose carries one shard's partial
+/// weighted sum upstream from an aggregator to the root controller
+/// (shard total weight rides `TaskMeta::num_samples`), reusing the
+/// existing data-plane framing unchanged.
+pub const PROTO_VERSION: u32 = 6;
 
 use crate::tensor::{ByteOrder, CodecId, DType, Tensor, TensorModel};
 use anyhow::{bail, Result};
@@ -138,6 +142,12 @@ pub enum StreamPurpose {
     /// Controller → learner evaluation dispatch (`EvaluateModel`): the
     /// `End` reply is the in-call `EvaluateModelReply`.
     Evaluate,
+    /// Aggregator → root controller: one shard's partial weighted sum
+    /// (un-normalized) for the round, computed over the shard's arrived
+    /// learners in sorted-id order. `TaskMeta::num_samples` carries the
+    /// shard's total weight so the root can fold shards with the exact
+    /// arithmetic of a flat fleet.
+    PartialAggregate,
 }
 
 impl StreamPurpose {
@@ -147,6 +157,7 @@ impl StreamPurpose {
             StreamPurpose::TaskCompletion => 1,
             StreamPurpose::RunTask => 2,
             StreamPurpose::Evaluate => 3,
+            StreamPurpose::PartialAggregate => 4,
         }
     }
 
@@ -156,6 +167,7 @@ impl StreamPurpose {
             1 => StreamPurpose::TaskCompletion,
             2 => StreamPurpose::RunTask,
             3 => StreamPurpose::Evaluate,
+            4 => StreamPurpose::PartialAggregate,
             _ => bail!("unknown stream purpose {c}"),
         })
     }
@@ -996,6 +1008,20 @@ mod tests {
                 base_round: 0,
                 layout: Vec::new(),
                 meta: TaskMeta::default(),
+                spec: TaskSpec::default(),
+            },
+            Message::ModelStreamBegin {
+                stream_id: 2,
+                task_id: 10,
+                round: 4,
+                purpose: StreamPurpose::PartialAggregate,
+                learner_id: "agg-0".into(),
+                codec: CodecId::DeltaRle,
+                base_round: 3,
+                layout: Vec::new(),
+                // For partial-sum uploads num_samples carries the
+                // shard's total weight.
+                meta: TaskMeta { num_samples: 75, ..Default::default() },
                 spec: TaskSpec::default(),
             },
             Message::ModelChunk { stream_id: 0xDEAD_BEEF, seq: 3, bytes: vec![1, 2, 3, 4, 5] },

@@ -1,0 +1,161 @@
+//! Hierarchical aggregation acceptance (ISSUE: aggregator tier).
+//!
+//! The load-bearing claims, end to end through real federations:
+//!
+//! 1. A fleet behind a single aggregator produces the **bitwise**
+//!    identical community model to the same fleet talking to the
+//!    controller directly — the tier is pure plumbing, zero math drift.
+//! 2. A 4-shard fleet matches [`two_tier_reference`] — the flat fold
+//!    regrouped associatively by shard — bitwise, round-for-round.
+//! 3. The root's ingest shrinks from O(learners) to O(aggregators):
+//!    its received stream bytes drop with the fan-in, and its peak
+//!    buffered ingest stays bounded by chunk × aggregator count.
+
+use metisfl::config::{
+    AggregationBackend, AggregationSpec, FederationEnv, ModelSpec, Protocol, TopologySpec,
+};
+use metisfl::controller::aggregation::{Backend, Contribution};
+use metisfl::controller::hierarchy::two_tier_reference;
+use metisfl::driver::{self, run_with_trainer};
+use metisfl::harness::loadtest::model_digest;
+use metisfl::learner::trainer::RustSgdTrainer;
+use metisfl::learner::Trainer;
+use metisfl::proto::TaskSpec;
+use std::sync::Arc;
+
+/// A streaming env with deterministic SGD everywhere: any digest
+/// mismatch is a real data-plane or fold-order bug, never noise.
+fn env(name: &str, learners: usize, rounds: usize, aggregators: usize) -> FederationEnv {
+    let mut e = FederationEnv::builder(name)
+        .learners(learners)
+        .rounds(rounds)
+        .model(ModelSpec::mlp(8, 3, 32))
+        .aggregation(AggregationSpec {
+            backend: AggregationBackend::Sequential,
+            ..AggregationSpec::default()
+        })
+        .samples_per_learner(12)
+        .batch_size(6)
+        .learning_rate(0.05)
+        .quorum_fraction(1.0)
+        .stream_chunk_bytes(2048)
+        .heartbeat_ms(5_000)
+        .seed(0x70_70)
+        .build();
+    if aggregators > 0 {
+        e.topology = TopologySpec { aggregators, shard_quorum: 0.0 };
+    }
+    e
+}
+
+fn sgd(_idx: usize) -> Arc<dyn Trainer> {
+    Arc::new(RustSgdTrainer)
+}
+
+#[test]
+fn single_aggregator_matches_flat_bitwise() {
+    let flat = run_with_trainer(&env("hier-flat1", 4, 3, 0), sgd).unwrap();
+    let tiered = run_with_trainer(&env("hier-tier1", 4, 3, 1), sgd).unwrap();
+    assert_ne!(flat.community_digest, 0, "flat run produced no community model");
+    assert_eq!(
+        flat.community_digest, tiered.community_digest,
+        "a single-shard tier must reproduce the flat fold bitwise"
+    );
+    for (f, t) in flat.round_metrics.iter().zip(&tiered.round_metrics) {
+        assert_eq!(f.completed, 4, "flat round {} incomplete", f.round);
+        // The root sees exactly one learner-like peer: the aggregator.
+        assert_eq!(t.participants, 1, "tiered round {} participants", t.round);
+        assert_eq!(t.completed, 1, "tiered round {} incomplete", t.round);
+    }
+    assert_eq!(flat.retry_give_ups + tiered.retry_give_ups, 0);
+}
+
+#[test]
+fn four_shard_fleet_matches_grouped_reference_and_bounds_root_ingest() {
+    const LEARNERS: usize = 24;
+    const AGGS: usize = 4;
+    let flat_env = env("hier-flat4", LEARNERS, 1, 0);
+    let tier_env = env("hier-tier4", LEARNERS, 1, AGGS);
+
+    let flat = run_with_trainer(&flat_env, sgd).unwrap();
+    let tiered = run_with_trainer(&tier_env, sgd).unwrap();
+    assert_eq!(tiered.round_metrics.len(), 1);
+    assert_eq!(tiered.round_metrics[0].completed, AGGS);
+
+    // --- Claim 2: bitwise equal to the shard-grouped reference fold ---
+    // Replicate exactly what each shard's barrier saw: learner `i`
+    // trains the deterministic initial model on its deterministic shard
+    // of data, lands in shard `i % AGGS`, and each tier folds arrivals
+    // in id-sorted order.
+    let initial = driver::initial_model(&tier_env);
+    let spec = TaskSpec {
+        epochs: tier_env.local_epochs,
+        batch_size: tier_env.batch_size,
+        learning_rate: tier_env.learning_rate,
+        step_budget: 0,
+    };
+    let mut shards: Vec<Vec<(String, Contribution)>> = (0..AGGS).map(|_| Vec::new()).collect();
+    for i in 0..LEARNERS {
+        let data = driver::learner_dataset(&tier_env, i);
+        let (model, meta) = RustSgdTrainer.train(&initial, &data, &spec).unwrap();
+        shards[tier_env.topology.shard_of(i)].push((
+            format!("learner-{i}"),
+            Contribution { model: Arc::new(model), weight: meta.num_samples as f64 },
+        ));
+    }
+    let shards: Vec<Vec<Contribution>> = shards
+        .into_iter()
+        .map(|mut shard| {
+            shard.sort_by(|a, b| a.0.cmp(&b.0)); // the barrier sorts ids as strings
+            shard.into_iter().map(|(_, c)| c).collect()
+        })
+        .collect();
+    let reference = two_tier_reference(&initial, &shards, &Backend::Sequential).unwrap();
+    assert_eq!(
+        tiered.community_digest,
+        model_digest(&reference),
+        "tiered community model drifted from the shard-grouped flat fold"
+    );
+    assert_ne!(
+        flat.community_digest, 0,
+        "flat baseline produced no community model"
+    );
+
+    // --- Claim 3: the aggregator tier shields the root ----------------
+    // Deterministic totals: the root ingests AGGS partial-sum streams
+    // instead of LEARNERS uploads, so its received bytes drop with the
+    // fan-in (~AGGS/LEARNERS; assert a loose 1/2 so codec-size noise
+    // across model contents can never flake this).
+    assert!(tiered.wire_ingest_bytes > 0, "tiered root ingested nothing");
+    assert!(
+        tiered.wire_ingest_bytes * 2 < flat.wire_ingest_bytes,
+        "root ingest did not shrink: tiered {} B vs flat {} B",
+        tiered.wire_ingest_bytes,
+        flat.wire_ingest_bytes
+    );
+    // Peak buffered ingest is O(chunk × aggregators) — 8× margin covers
+    // per-chunk framing and decode scratch, and stays far below the
+    // O(learners × model) a flat 24-learner burst could pin.
+    let bound = 8 * AGGS * tiered.effective_stream_chunk_bytes;
+    assert!(
+        tiered.peak_wire_ingest_bytes <= bound,
+        "tiered root peak ingest {} B exceeds O(chunk × aggregators) bound {} B",
+        tiered.peak_wire_ingest_bytes,
+        bound
+    );
+}
+
+#[test]
+fn topology_env_misconfigurations_are_rejected() {
+    // More shards than learners can never form full shards.
+    let mut bad = env("hier-bad-shards", 2, 1, 0);
+    bad.topology = TopologySpec { aggregators: 5, shard_quorum: 0.0 };
+    let err = format!("{:#}", run_with_trainer(&bad, sgd).unwrap_err());
+    assert!(err.contains("aggregators"), "{err}");
+
+    // The tree round barrier is a synchronous construct.
+    let mut async_env = env("hier-bad-async", 4, 1, 2);
+    async_env.protocol = Protocol::Asynchronous { staleness_alpha: 0.5 };
+    let err = format!("{:#}", run_with_trainer(&async_env, sgd).unwrap_err());
+    assert!(err.contains("synchronous"), "{err}");
+}
