@@ -635,6 +635,132 @@ impl FederationEnv {
         }
     }
 
+    /// Emit the environment as YAML that [`FederationEnv::from_yaml`]
+    /// parses back to an identical value — the serializer the trace
+    /// recorder embeds in trace headers so a replay can rebuild this
+    /// run's exact environment without the original env file. Every
+    /// field is written explicitly (no default elision), keeping the
+    /// round-trip independent of builder-default drift.
+    pub fn to_yaml_source(&self) -> String {
+        // Quote strings the subset parser would mis-type as numbers or
+        // keywords; bare tokens stay bare for readability.
+        fn scalar(s: &str) -> String {
+            let bare = !s.is_empty()
+                && s.chars()
+                    .all(|c| c.is_ascii_alphanumeric() || matches!(c, '-' | '_' | '.' | '/'))
+                && s.parse::<f64>().is_err()
+                && !matches!(s, "true" | "false" | "null" | "~");
+            if bare {
+                s.to_string()
+            } else {
+                format!("\"{s}\"")
+            }
+        }
+        let mut o = String::with_capacity(1024);
+        o.push_str(&format!("name: {}\n", scalar(&self.name)));
+        o.push_str(&format!("learners: {}\n", self.learners));
+        o.push_str(&format!("rounds: {}\n", self.rounds));
+        match self.protocol {
+            Protocol::Synchronous => o.push_str("protocol: synchronous\n"),
+            Protocol::SemiSynchronous { lambda } => {
+                o.push_str("protocol:\n  kind: semi_synchronous\n");
+                o.push_str(&format!("  lambda: {lambda}\n"));
+            }
+            Protocol::Asynchronous { staleness_alpha } => {
+                o.push_str("protocol:\n  kind: asynchronous\n");
+                o.push_str(&format!("  staleness_alpha: {staleness_alpha}\n"));
+            }
+        }
+        o.push_str("model:\n");
+        o.push_str(&format!("  input_dim: {}\n", self.model.input_dim));
+        o.push_str(&format!("  hidden_layers: {}\n", self.model.hidden_layers));
+        o.push_str(&format!("  hidden_units: {}\n", self.model.hidden_units));
+        o.push_str(&format!("  output_dim: {}\n", self.model.output_dim));
+        o.push_str("aggregation:\n");
+        o.push_str(&format!("  rule: {}\n", scalar(&self.aggregation.rule)));
+        let backend = match self.aggregation.backend {
+            AggregationBackend::Sequential => "sequential",
+            AggregationBackend::Parallel => "parallel",
+            AggregationBackend::Chunked => "chunked",
+            AggregationBackend::Xla => "xla",
+        };
+        o.push_str(&format!("  backend: {backend}\n"));
+        o.push_str(&format!("  threads: {}\n", self.aggregation.threads));
+        o.push_str(&format!("  server_lr: {}\n", self.aggregation.server_lr));
+        let secure = match self.secure {
+            SecureSpec::None => "none",
+            SecureSpec::Masking => "masking",
+            SecureSpec::Ckks => "ckks",
+        };
+        o.push_str(&format!("secure: {secure}\n"));
+        match &self.trainer {
+            TrainerKind::Xla { artifacts_dir } => {
+                o.push_str("trainer:\n  kind: xla\n");
+                o.push_str(&format!("  artifacts_dir: {}\n", scalar(artifacts_dir)));
+            }
+            TrainerKind::Synthetic { step_time_us, hetero } => {
+                o.push_str("trainer:\n  kind: synthetic\n");
+                o.push_str(&format!("  step_time_us: {step_time_us}\n"));
+                if !hetero.speed_factors.is_empty() {
+                    let fs: Vec<String> =
+                        hetero.speed_factors.iter().map(|f| f.to_string()).collect();
+                    o.push_str(&format!("  speed_factors: [{}]\n", fs.join(", ")));
+                }
+                o.push_str(&format!("  jitter: {}\n", hetero.jitter_frac));
+                o.push_str(&format!("  dropout: {}\n", hetero.dropout));
+            }
+        }
+        match &self.transport {
+            TransportKind::InProc => o.push_str("transport: inproc\n"),
+            TransportKind::Tcp { base_port } => {
+                o.push_str("transport:\n  kind: tcp\n");
+                o.push_str(&format!("  base_port: {base_port}\n"));
+            }
+        }
+        o.push_str(&format!("participation: {}\n", self.participation));
+        match &self.selector {
+            SelectorSpec::Participation => o.push_str("selector: participation\n"),
+            SelectorSpec::Freshness { k } => {
+                o.push_str("selector:\n  kind: freshness\n");
+                o.push_str(&format!("  k: {k}\n"));
+            }
+            SelectorSpec::Pacing { k, freshness_rounds } => {
+                o.push_str("selector:\n  kind: pacing\n");
+                o.push_str(&format!("  k: {k}\n"));
+                o.push_str(&format!("  freshness_rounds: {freshness_rounds}\n"));
+            }
+        }
+        o.push_str(&format!("quorum_fraction: {}\n", self.quorum_fraction));
+        o.push_str(&format!("quorum_late_alpha: {}\n", self.quorum_late_alpha));
+        o.push_str(&format!("samples_per_learner: {}\n", self.samples_per_learner));
+        o.push_str(&format!("batch_size: {}\n", self.batch_size));
+        o.push_str(&format!("local_epochs: {}\n", self.local_epochs));
+        o.push_str(&format!("learning_rate: {}\n", self.learning_rate));
+        o.push_str(&format!("seed: {}\n", self.seed));
+        o.push_str(&format!("heartbeat_ms: {}\n", self.heartbeat_ms));
+        o.push_str(&format!("task_timeout_ms: {}\n", self.task_timeout_ms));
+        o.push_str(&format!("stream_chunk_bytes: {}\n", self.stream_chunk_bytes));
+        o.push_str(&format!("wire_codec: {}\n", self.wire_codec.name()));
+        o.push_str(&format!("bf16_dispatch: {}\n", self.bf16_dispatch));
+        o.push_str(&format!("delta_fallback: {}\n", self.delta_fallback));
+        let c = &self.chaos;
+        o.push_str("chaos:\n");
+        o.push_str(&format!("  seed: {}\n", c.seed));
+        o.push_str(&format!("  sever_fraction: {}\n", c.sever_fraction));
+        o.push_str(&format!("  sever_after_sends: {}\n", c.sever_after_sends));
+        o.push_str(&format!("  refuse_fraction: {}\n", c.refuse_fraction));
+        o.push_str(&format!("  stall_fraction: {}\n", c.stall_fraction));
+        o.push_str(&format!("  stall_ms: {}\n", c.stall_ms));
+        o.push_str(&format!("  duplicate_fraction: {}\n", c.duplicate_fraction));
+        o.push_str(&format!("  slow_loris: {}\n", c.slow_loris));
+        o.push_str(&format!("  drip_ms: {}\n", c.drip_ms));
+        o.push_str(&format!("  corrupt: {}\n", c.corrupt));
+        o.push_str("topology:\n");
+        o.push_str(&format!("  aggregators: {}\n", self.topology.aggregators));
+        o.push_str(&format!("  shard_quorum: {}\n", self.topology.shard_quorum));
+        o
+    }
+
     /// Validate invariants; called by `build()` in debug builds and by
     /// loaders always.
     pub fn validate(&self) -> Result<()> {
@@ -1254,6 +1380,72 @@ trainer:
         .is_err());
         assert!(FederationEnv::from_yaml("learners: 8\ntopology:\n  shard_quorum: 0.5\n")
             .is_err());
+    }
+
+    #[test]
+    fn to_yaml_source_roundtrips_defaults_and_maximal_envs() {
+        // Builder defaults round-trip exactly.
+        let env = FederationEnv::builder("plain").build();
+        let back = FederationEnv::from_yaml(&env.to_yaml_source()).unwrap();
+        assert_eq!(env, back);
+
+        // A maximal env exercising every enum arm and optional block.
+        let mut env = FederationEnv::builder("chaos-max")
+            .learners(12)
+            .rounds(7)
+            .protocol(Protocol::SemiSynchronous { lambda: 1.5 })
+            .model(ModelSpec { input_dim: 6, hidden_layers: 3, hidden_units: 16, output_dim: 2 })
+            .aggregation(AggregationSpec {
+                rule: "fedadam".into(),
+                backend: AggregationBackend::Chunked,
+                threads: 3,
+                server_lr: 0.05,
+            })
+            .secure(SecureSpec::Masking)
+            .trainer(TrainerKind::Synthetic {
+                step_time_us: 250,
+                hetero: HeteroFleetSpec {
+                    speed_factors: vec![1.0, 2.5, 10.0],
+                    jitter_frac: 0.1,
+                    dropout: 0.05,
+                },
+            })
+            .transport(TransportKind::Tcp { base_port: 43999 })
+            .participation(0.75)
+            .selector(SelectorSpec::Pacing { k: 4, freshness_rounds: 2 })
+            .quorum_fraction(0.6)
+            .quorum_late_alpha(1.25)
+            .learning_rate(0.015)
+            .seed(99)
+            .stream_chunk_bytes(4096)
+            .wire_codec(WireCodecChoice::DeltaRle)
+            .chaos(ChaosSpec {
+                seed: 11,
+                sever_fraction: 0.2,
+                sever_after_sends: 3,
+                refuse_fraction: 0.1,
+                stall_fraction: 0.1,
+                stall_ms: 250,
+                duplicate_fraction: 0.25,
+                slow_loris: 1,
+                drip_ms: 5,
+                corrupt: 1,
+            })
+            .topology(TopologySpec { aggregators: 3, shard_quorum: 0.5 })
+            .build();
+        env.delta_fallback = false;
+        let back = FederationEnv::from_yaml(&env.to_yaml_source()).unwrap();
+        assert_eq!(env, back);
+
+        // Async protocol + xla trainer + freshness selector arms, and a
+        // name the parser would otherwise type as a number.
+        let env = FederationEnv::builder("1234")
+            .protocol(Protocol::Asynchronous { staleness_alpha: 0.5 })
+            .trainer(TrainerKind::Xla { artifacts_dir: "artifacts/run 1".into() })
+            .selector(SelectorSpec::Freshness { k: 2 })
+            .build();
+        let back = FederationEnv::from_yaml(&env.to_yaml_source()).unwrap();
+        assert_eq!(env, back);
     }
 
     #[test]

@@ -34,12 +34,13 @@ use crate::proto::{
     ErrorCode, EvalResult, Message, ModelProto, StreamPurpose, TaskMeta, TaskSpec, PROTO_VERSION,
 };
 use crate::tensor::{ByteOrder, CodecId, DType, TensorModel};
-use crate::util::{log_debug, log_info, log_warn, Rng, ThreadPool};
+use crate::proto::ingest::IngestLimits;
+use crate::util::{log_debug, log_info, log_warn, Rng, Stopwatch, ThreadPool};
 use anyhow::{bail, Result};
 use std::collections::HashSet;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 /// Derive the shard-local environment an aggregator's embedded
 /// controller runs: same model/protocol/data-plane settings as the
@@ -106,18 +107,23 @@ impl AggregatorNode {
         psk: Psk,
     ) -> Result<Arc<AggregatorNode>> {
         let inner = Controller::new(shard_env(env, id, shard_size), psk)?;
+        let clock = inner.clock().clone();
         log_info("aggregator", &format!("{id}: shard controller up (≤{shard_size} learners)"));
         Ok(Arc::new(AggregatorNode {
             id: id.to_string(),
             upstream: upstream.to_string(),
             psk,
+            ingest: StreamIngest::with_clock(
+                IngestLimits::default(),
+                clock.clone(),
+                Arc::clone(inner.counters()),
+            ),
             inner,
-            ingest: StreamIngest::default(),
             dispatch_streams: Mutex::new(HashSet::new()),
             last_model: Mutex::new(None),
             upstream_conn: Mutex::new(None),
             accepted_upstream: Mutex::new(None),
-            executor: ThreadPool::new(1),
+            executor: ThreadPool::with_clock(1, clock),
             shutdown: AtomicBool::new(false),
             retry_give_ups: AtomicU64::new(0),
             fallback_sends: AtomicU64::new(0),
@@ -231,7 +237,7 @@ impl AggregatorNode {
         model: Arc<TensorModel>,
         spec: TaskSpec,
     ) -> Result<()> {
-        let started = Instant::now();
+        let started = Stopwatch::start_with(self.inner.clock());
         // The dispatched model becomes the shard's community model at
         // the dispatched round, so the shard-local data plane (delta
         // bases, fold input) matches what a flat controller holds.
@@ -340,6 +346,7 @@ impl AggregatorNode {
         let fallback = self.inner.env.delta_fallback;
         let upload = if chunk > 0 {
             policy.run(
+                self.inner.clock(),
                 &mut rng,
                 |_| {
                     // Ensure the upstream session (and its codec
@@ -389,6 +396,7 @@ impl AggregatorNode {
             )
         } else {
             policy.run(
+                self.inner.clock(),
                 &mut rng,
                 |_| {
                     let proto = ModelProto::from_model(partial, DType::F32, ByteOrder::Little);
@@ -886,7 +894,7 @@ mod tests {
         // Let the live learners complete, then pull the ghost out
         // mid-round: the barrier must re-target and close.
         while *la.uploads.lock().unwrap() == 0 || *lb.uploads.lock().unwrap() == 0 {
-            std::thread::sleep(Duration::from_millis(10));
+            crate::util::Clock::system().sleep(Duration::from_millis(10));
         }
         let reply = svc.handle(Message::Deregister { learner_id: "l-ghost".to_string() });
         assert!(matches!(reply, Message::Ack { ok: true, .. }), "deregister failed: {reply:?}");

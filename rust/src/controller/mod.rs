@@ -16,18 +16,21 @@ pub mod selector;
 pub mod store;
 
 use crate::config::{FederationEnv, Protocol, SecureSpec, SelectorSpec};
+use crate::metrics::counters::{names, Counter, CounterRegistry};
 use crate::metrics::{FedOp, OpMetrics};
 use crate::net::chaos::{connect_with_chaos, ChaosPlan};
 use crate::net::retry::RetryPolicy;
 use crate::net::{ClientConn, Psk, Service};
 use crate::proto::client::{self, StreamSend};
-use crate::proto::ingest::{BufferPool, FinishedStream, StreamBegin, StreamIngest};
+use crate::proto::ingest::{BufferPool, FinishedStream, IngestLimits, StreamBegin, StreamIngest};
 use crate::proto::wire::{fnv1a64, FNV64_INIT};
+use crate::runtime::trace::TraceRecorder;
 use crate::proto::{
     ErrorCode, Message, ModelProto, StreamPurpose, TaskMeta, TaskSpec, TensorLayoutProto,
     PROTO_VERSION,
 };
 use crate::tensor::{ByteOrder, CodecId, DType, TensorModel};
+use crate::util::clock::{Clock, Timestamp};
 use crate::util::{log_debug, log_info, Rng, Stopwatch, ThreadPool};
 use aggregation::{Backend, Contribution, ScratchArena};
 use anyhow::{bail, Context, Result};
@@ -35,9 +38,9 @@ use bases::BaseMap;
 use pacing::PacingRegistry;
 use selector::{SelectionCtx, Selector};
 use std::collections::{HashMap, HashSet};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 use store::{ModelStore, StoredModel};
 
 /// A registered learner as seen by the controller.
@@ -58,10 +61,24 @@ pub struct LearnerHandle {
     /// callback side wraps, so a severed link kills both directions of
     /// the conversation, not just the upload half.
     chaos: Mutex<Option<ChaosPlan>>,
+    /// Clock that paces this handle's dials, chaos stalls, and dispatch
+    /// timing samples. Handles registered through a controller inherit
+    /// its clock, so sim fleets measure RPC time in virtual time.
+    clock: Clock,
 }
 
 impl LearnerHandle {
     pub fn new(id: String, endpoint: String, num_samples: usize, index: usize) -> LearnerHandle {
+        Self::with_clock(id, endpoint, num_samples, index, Clock::system())
+    }
+
+    pub fn with_clock(
+        id: String,
+        endpoint: String,
+        num_samples: usize,
+        index: usize,
+        clock: Clock,
+    ) -> LearnerHandle {
         LearnerHandle {
             id,
             endpoint,
@@ -70,6 +87,7 @@ impl LearnerHandle {
             conn: Mutex::new(None),
             accepted: Mutex::new(None),
             chaos: Mutex::new(None),
+            clock,
         }
     }
 
@@ -84,7 +102,7 @@ impl LearnerHandle {
         }
         let plan = self.chaos.lock().unwrap().clone();
         let mut conn = match &plan {
-            Some(p) => connect_with_chaos(&self.endpoint, psk, p),
+            Some(p) => connect_with_chaos(&self.endpoint, psk, p, &self.clock),
             None => crate::net::connect(&self.endpoint, psk),
         }
         .with_context(|| format!("connecting to learner {}", self.id))?;
@@ -122,16 +140,18 @@ impl LearnerHandle {
     /// RPC to this learner, (re)connecting lazily. The per-learner lock
     /// serializes concurrent calls onto one connection.
     pub fn rpc(&self, psk: Psk, msg: &Message) -> Result<Message> {
-        self.rpc_timed(psk, msg, std::time::Instant::now()).map(|(m, _)| m)
+        let origin = self.clock.now();
+        self.rpc_timed(psk, msg, origin).map(|(m, _)| m)
     }
 
-    /// RPC that also reports *when* (relative to `origin`) the send
-    /// (dispatch) phase finished, separate from the reply wait.
+    /// RPC that also reports *when* (relative to `origin`, a stamp taken
+    /// on this handle's clock) the send (dispatch) phase finished,
+    /// separate from the reply wait.
     pub fn rpc_timed(
         &self,
         psk: Psk,
         msg: &Message,
-        origin: std::time::Instant,
+        origin: Timestamp,
     ) -> Result<(Message, Duration)> {
         self.rpc_inner(psk, RawOrMsg::Msg(msg), origin)
     }
@@ -142,7 +162,7 @@ impl LearnerHandle {
         &self,
         psk: Psk,
         bytes: &[u8],
-        origin: std::time::Instant,
+        origin: Timestamp,
     ) -> Result<(Message, Duration)> {
         self.rpc_inner(psk, RawOrMsg::Raw(bytes), origin)
     }
@@ -151,7 +171,7 @@ impl LearnerHandle {
         &self,
         psk: Psk,
         req: RawOrMsg<'_>,
-        origin: std::time::Instant,
+        origin: Timestamp,
     ) -> Result<(Message, Duration)> {
         let mut guard = self.conn.lock().unwrap();
         self.ensure_conn(&mut guard, psk)?;
@@ -160,7 +180,7 @@ impl LearnerHandle {
             RawOrMsg::Msg(m) => conn.send(m),
             RawOrMsg::Raw(b) => conn.send_raw(b),
         };
-        let sent_at = origin.elapsed();
+        let sent_at = self.clock.since(origin);
         let result = send_res.and_then(|_| conn.recv());
         match result {
             Ok(reply) => Ok((reply, sent_at)),
@@ -179,13 +199,12 @@ enum RawOrMsg<'a> {
 
 /// Completion record delivered by `MarkTaskCompleted`.
 struct RoundState {
-    #[allow(dead_code)]
     round: u64,
     expecting: HashSet<String>,
     arrived: Vec<String>,
-    /// When the round's tasks were dispatched (arrival offsets below
-    /// are measured from here).
-    opened_at: Instant,
+    /// When the round's tasks were dispatched, on the controller clock
+    /// (arrival offsets below are measured from here).
+    opened_at: Timestamp,
     /// Offsets of the first and latest in-round completion — their
     /// difference is the round's straggler spread, the quantity
     /// pacing-aware semi-sync exists to shrink.
@@ -218,9 +237,10 @@ struct CtrlState {
     last_participation: HashMap<String, u64>,
     /// Round each learner's current task was dispatched at (staleness).
     dispatch_round: HashMap<String, u64>,
-    /// When each learner's current task was handed out — consumed by
-    /// the completion path as the task RTT sample for its profile.
-    task_sent_at: HashMap<String, Instant>,
+    /// When each learner's current task was handed out (controller
+    /// clock) — consumed by the completion path as the task RTT sample
+    /// for its profile.
+    task_sent_at: HashMap<String, Timestamp>,
     /// Highest task id each learner's completion has been *accepted*
     /// for (round arrival or late fold). Makes the late-fold path
     /// idempotent: a duplicate / replayed `MarkTaskCompleted` (lost
@@ -241,6 +261,15 @@ pub use aggregation::XlaAggFn;
 pub struct Controller {
     pub env: FederationEnv,
     pub psk: Psk,
+    /// Time source for every controller-side stamp, wait, and sleep:
+    /// round open/arrival offsets, quorum deadlines, dispatch timing,
+    /// retry backoff, and the ingest GC all read this one handle.
+    /// `Clock::system()` for real fleets, `Clock::sim()` for simulated
+    /// and replayed runs.
+    clock: Clock,
+    /// Degradation/wire counter registry shared with the ingest engine
+    /// (and snapshotted whole into `FederationReport` / traces).
+    counters: Arc<CounterRegistry>,
     backend: Backend,
     state: Mutex<CtrlState>,
     round_cv: Condvar,
@@ -278,29 +307,47 @@ pub struct Controller {
     /// Completions that arrived after their round closed and were
     /// folded into the community model through the async staleness path
     /// (deadline-quorum rounds) instead of being dropped.
-    late_folds: AtomicU64,
+    late_folds: Counter,
     /// Codec `encode` invocations performed by streamed dispatch — the
     /// encode-once probe: fanning one model out to N learners must cost
     /// one encode per payload unit (tensor, or frame for framed codecs),
     /// not `N ×` that (asserted in tests/streaming.rs).
-    dispatch_encodes: AtomicU64,
+    dispatch_encodes: Counter,
     /// Data-plane egress totals: payload bytes actually sent by streamed
     /// dispatch, and their f32-equivalent volume. Together with the
     /// ingest's receive totals these become the `FederationReport`
     /// `wire_bytes_sent` / `wire_bytes_saved` gauges.
-    dispatch_wire_sent: AtomicU64,
-    dispatch_wire_raw: AtomicU64,
+    dispatch_wire_sent: Counter,
+    dispatch_wire_raw: Counter,
     /// Single-target dispatches abandoned after the unified retry policy
     /// exhausted its attempts (transport faults only — application
     /// errors never retry). Surfaced in `FederationReport`.
-    retry_give_ups: AtomicU64,
+    retry_give_ups: Counter,
     /// Delta→f32 fallback re-sends: streams restarted at full precision
     /// because the learner no longer held the negotiated delta base.
-    fallback_sends: AtomicU64,
+    fallback_sends: Counter,
+    /// Deterministic-trace recorder (see [`crate::runtime::trace`]).
+    /// Lock hierarchy: `recorder` is taken *before* `state` /
+    /// `learner_bases`, and held across each recorded event plus the
+    /// state mutation it describes, so the trace order is the
+    /// controller's serialized timeline. `None` unless a recording is
+    /// active.
+    recorder: Mutex<Option<TraceRecorder>>,
+    /// Fast-path gate so non-recording runs never touch the recorder
+    /// mutex (set by `start_recording`, cleared by `finish_recording`).
+    recording: AtomicBool,
 }
 
 impl Controller {
     pub fn new(env: FederationEnv, psk: Psk) -> Result<Arc<Controller>> {
+        Self::with_clock(env, psk, Clock::system())
+    }
+
+    /// Construct against an explicit time source. `Clock::sim()` runs
+    /// the whole control plane — pacing stamps, quorum deadlines, retry
+    /// backoff, ingest GC — in discrete virtual time (`loadtest --sim`,
+    /// trace replay).
+    pub fn with_clock(env: FederationEnv, psk: Psk, clock: Clock) -> Result<Arc<Controller>> {
         env.validate()?;
         if env.secure != SecureSpec::None && !matches!(env.transport, crate::config::TransportKind::InProc) {
             bail!("secure aggregation is only wired for in-process simulation (see DESIGN.md)");
@@ -308,9 +355,8 @@ impl Controller {
         let backend = Backend::from_spec(&env.aggregation);
         let rule = aggregation::rule_from_spec(&env.aggregation)?;
         let dispatch_threads = env.learners.clamp(1, 16);
+        let counters = CounterRegistry::new();
         Ok(Arc::new(Controller {
-            env,
-            psk,
             backend,
             state: Mutex::new(CtrlState {
                 community: None,
@@ -328,24 +374,34 @@ impl Controller {
             }),
             round_cv: Condvar::new(),
             metrics: Mutex::new(OpMetrics::new()),
-            dispatch_pool: ThreadPool::new(dispatch_threads),
+            dispatch_pool: ThreadPool::with_clock(dispatch_threads, clock.clone()),
             shutdown: AtomicBool::new(false),
             xla_slot: Mutex::new(None),
-            ingest: StreamIngest::default(),
+            ingest: StreamIngest::with_clock(
+                IngestLimits::default(),
+                clock.clone(),
+                Arc::clone(&counters),
+            ),
             last_broadcast: Mutex::new(None),
             learner_bases: Mutex::new(BaseMap::new(bases::DEFAULT_BASE_MODEL_CAP)),
             pacing: PacingRegistry::default(),
-            late_folds: AtomicU64::new(0),
-            dispatch_encodes: AtomicU64::new(0),
-            dispatch_wire_sent: AtomicU64::new(0),
-            dispatch_wire_raw: AtomicU64::new(0),
-            retry_give_ups: AtomicU64::new(0),
-            fallback_sends: AtomicU64::new(0),
+            late_folds: counters.counter(names::LATE_FOLDS),
+            dispatch_encodes: counters.counter(names::DISPATCH_ENCODES),
+            dispatch_wire_sent: counters.counter(names::DISPATCH_WIRE_SENT),
+            dispatch_wire_raw: counters.counter(names::DISPATCH_WIRE_RAW),
+            retry_give_ups: counters.counter(names::RETRY_GIVE_UPS),
+            fallback_sends: counters.counter(names::FALLBACK_SENDS),
+            recorder: Mutex::new(None),
+            recording: AtomicBool::new(false),
+            env,
+            psk,
+            clock,
+            counters,
         }))
     }
 
-    /// The inbound data-plane engine (clock injection for deterministic
-    /// idle-GC tests; gauges for ops dashboards).
+    /// The inbound data-plane engine (it runs on the controller's
+    /// clock; gauges for ops dashboards).
     pub fn ingest(&self) -> &StreamIngest {
         &self.ingest
     }
@@ -355,20 +411,33 @@ impl Controller {
         &self.pacing
     }
 
+    /// The controller's time source (shared by its ingest engine,
+    /// dispatch pool, and every registered learner handle).
+    pub fn clock(&self) -> &Clock {
+        &self.clock
+    }
+
+    /// The degradation/wire counter registry. `snapshot()` gives every
+    /// counter in one call — the `FederationReport` and trace footer
+    /// read it whole instead of polling accessors one by one.
+    pub fn counters(&self) -> &Arc<CounterRegistry> {
+        &self.counters
+    }
+
     /// Completions folded through the async staleness path because they
     /// arrived after their deadline-quorum round had closed.
     pub fn late_folds(&self) -> u64 {
-        self.late_folds.load(Ordering::SeqCst)
+        self.late_folds.get()
     }
 
     /// Single-target dispatches abandoned after retry exhaustion.
     pub fn retry_give_ups(&self) -> u64 {
-        self.retry_give_ups.load(Ordering::SeqCst)
+        self.retry_give_ups.get()
     }
 
     /// Delta→f32 fallback re-sends across both dispatch paths.
     pub fn fallback_sends(&self) -> u64 {
-        self.fallback_sends.load(Ordering::SeqCst)
+        self.fallback_sends.get()
     }
 
     /// Override the LRU cap on distinct pinned delta-base models
@@ -410,13 +479,14 @@ impl Controller {
 
     /// Wait until `n` learners registered (driver startup barrier).
     pub fn wait_for_learners(&self, n: usize, timeout: Duration) -> Result<()> {
-        let deadline = std::time::Instant::now() + timeout;
+        let deadline = self.clock.now() + timeout;
         let mut state = self.state.lock().unwrap();
         while state.learners.len() < n {
             let remaining = deadline
-                .checked_duration_since(std::time::Instant::now())
+                .checked_sub(self.clock.now())
+                .filter(|d| !d.is_zero())
                 .ok_or_else(|| anyhow::anyhow!("timeout waiting for {n} learners"))?;
-            let (s, _) = self.round_cv.wait_timeout(state, remaining).unwrap();
+            let (s, _) = self.clock.wait_timeout(&self.round_cv, state, remaining);
             state = s;
         }
         Ok(())
@@ -432,7 +502,22 @@ impl Controller {
     }
 
     /// Set the community model directly (driver-local initialization).
+    /// When recording, the install is captured as a synthetic inbound
+    /// `ShipModel` frame so a replay seeds the identical model.
     pub fn ship_model(&self, model: TensorModel) {
+        let _rec = self.trace(|r, tick| {
+            let msg = Message::ShipModel {
+                model: ModelProto::from_model(&model, DType::F32, ByteOrder::Little),
+            };
+            r.inbound(tick, &msg.encode());
+        });
+        self.install_model(model);
+    }
+
+    /// `ship_model` minus the trace hook — the `ShipModel` RPC arm lands
+    /// here (its frame was already recorded by the `handle` wrapper,
+    /// which still holds the recorder lock).
+    fn install_model(&self, model: TensorModel) {
         let mut s = self.state.lock().unwrap();
         s.community = Some(Arc::new(model));
         log_info("controller", "community model initialized");
@@ -442,11 +527,12 @@ impl Controller {
     pub fn register_learner(&self, id: &str, endpoint: &str, num_samples: usize) -> usize {
         let mut s = self.state.lock().unwrap();
         let index = s.learners.len();
-        s.learners.push(Arc::new(LearnerHandle::new(
+        s.learners.push(Arc::new(LearnerHandle::with_clock(
             id.to_string(),
             endpoint.to_string(),
             num_samples,
             index,
+            self.clock.clone(),
         )));
         log_debug("controller", &format!("registered learner {id} at {endpoint} (#{index})"));
         self.round_cv.notify_all();
@@ -528,13 +614,103 @@ impl Controller {
         self.metrics.lock().unwrap().record(op, d);
     }
 
+    // ---- deterministic trace record/replay ---------------------------
+
+    /// Run `f` against the trace recorder if a recording is active and
+    /// return the held guard, so the caller can extend the recorder
+    /// critical section across the state mutation the event describes
+    /// (trace order == live order == replay order).
+    fn trace<F>(&self, f: F) -> Option<std::sync::MutexGuard<'_, Option<TraceRecorder>>>
+    where
+        F: FnOnce(&mut TraceRecorder, Timestamp),
+    {
+        if !self.recording.load(Ordering::Acquire) {
+            return None;
+        }
+        let mut g = self.recorder.lock().unwrap();
+        let tick = self.clock.now();
+        match g.as_mut() {
+            Some(r) => f(r, tick),
+            None => return None,
+        }
+        Some(g)
+    }
+
+    /// Start recording a deterministic trace of every state-bearing
+    /// event: raw inbound frames plus scheduler decisions (round
+    /// open/close, aggregation, async marks, delta-base pins). The
+    /// trace embeds this controller's environment so `metisfl replay`
+    /// can rebuild an identical one.
+    pub fn start_recording(&self) {
+        let mut g = self.recorder.lock().unwrap();
+        *g = Some(TraceRecorder::new(&self.env.to_yaml_source()));
+        drop(g);
+        self.recording.store(true, Ordering::Release);
+        log_info("controller", "trace recording started");
+    }
+
+    /// Seal and return the active recording (`None` if none). The
+    /// footer captures the community digest and counter snapshot *as of
+    /// the last recorded event*: the recorder lock is taken first, so
+    /// every frame in the trace has fully applied, and any frame still
+    /// waiting on the lock seals out — absent from both the timeline
+    /// and the footer.
+    pub fn finish_recording(&self) -> Option<Vec<u8>> {
+        let mut g = self.recorder.lock().unwrap();
+        let rec = g.take();
+        let digest = self
+            .community()
+            .map(|(m, _)| crate::runtime::trace::model_digest(&m))
+            .unwrap_or(0);
+        let counters = self.counters.snapshot();
+        self.recording.store(false, Ordering::Release);
+        drop(g);
+        let rec = rec?;
+        log_info(
+            "controller",
+            &format!("trace recording finished ({} events)", rec.events()),
+        );
+        Some(rec.finish(digest, &counters))
+    }
+
+    /// Replay shims (see [`crate::runtime::trace::replay`]): thin
+    /// entries over the same internals the live schedulers drive.
+    pub(crate) fn replay_open_round(&self, round: u64, expecting: &[String]) {
+        self.open_round(round, expecting);
+    }
+
+    /// Close the open round exactly where the recording closed it:
+    /// zero timeout — whoever has arrived by this point in the event
+    /// order is the cut.
+    pub(crate) fn replay_close_round(&self) -> Vec<String> {
+        self.wait_round_quorum(Duration::ZERO, 1.0).arrived
+    }
+
+    pub(crate) fn replay_aggregate(&self, ids: &[String], round: u64) -> Result<()> {
+        self.aggregate_from_store(ids, round)?;
+        Ok(())
+    }
+
+    pub(crate) fn replay_mark_outstanding(&self, id: &str) {
+        self.mark_task_outstanding(id);
+    }
+
+    /// Re-install a recorded delta-base pin (`model` is the replay's
+    /// own community snapshot at `round` — the same model the live
+    /// dispatch pinned, rebuilt from the same events).
+    pub(crate) fn replay_set_base(&self, id: &str, round: u64, model: Arc<TensorModel>) {
+        let displaced = self.learner_bases.lock().unwrap().insert(id, round, model);
+        drop(displaced);
+    }
+
     // ---- round plumbing used by `scheduling` -------------------------
 
     /// Open a round: note who we expect and stamp dispatch rounds +
     /// task send times (the completion path turns the latter into RTT
     /// profile samples).
     fn open_round(&self, round: u64, expecting: &[String]) {
-        let now = Instant::now();
+        let _rec = self.trace(|r, tick| r.round_open(tick, round, expecting));
+        let now = self.clock.now();
         let mut s = self.state.lock().unwrap();
         for id in expecting {
             s.dispatch_round.insert(id.clone(), round);
@@ -566,7 +742,7 @@ impl Controller {
     /// `quorum_fraction < 1` they fold through the async staleness path
     /// (see [`Controller::complete_task`]).
     fn wait_round_quorum(&self, timeout: Duration, quorum: f64) -> RoundOutcome {
-        let deadline = Instant::now() + timeout;
+        let deadline = self.clock.now() + timeout;
         let mut s = self.state.lock().unwrap();
         loop {
             let done = match &s.round {
@@ -583,12 +759,27 @@ impl Controller {
             if done {
                 break;
             }
-            let Some(remaining) = deadline.checked_duration_since(Instant::now()) else {
+            let Some(remaining) =
+                deadline.checked_sub(self.clock.now()).filter(|d| !d.is_zero())
+            else {
                 break;
             };
-            let (guard, _) = self.round_cv.wait_timeout(s, remaining).unwrap();
+            let (guard, _) = self.clock.wait_timeout(&self.round_cv, s, remaining);
             s = guard;
         }
+        // Close under the recorder lock (recorder → state order): drop
+        // the wait loop's state guard, take the recorder, re-lock state
+        // and take the round. A completion landing in the gap is either
+        // recorded before the close (and is in `arrived`) or after it
+        // (and late-folds) — consistent in both timelines.
+        drop(s);
+        let rec = if self.recording.load(Ordering::Acquire) {
+            Some(self.recorder.lock().unwrap())
+        } else {
+            None
+        };
+        let mut s = self.state.lock().unwrap();
+        let closing_round = s.round.as_ref().map(|r| r.round);
         let (mut arrived, mut missing, completion_spread) = match s.round.take() {
             Some(r) => {
                 let spread = match (r.first_arrival, r.last_arrival) {
@@ -611,6 +802,12 @@ impl Controller {
         // federation produce bitwise-identical community models.
         arrived.sort();
         missing.sort();
+        drop(s);
+        if let (Some(mut g), Some(round)) = (rec, closing_round) {
+            if let Some(r) = g.as_mut() {
+                r.round_close(self.clock.now(), round, &arrived);
+            }
+        }
         RoundOutcome { arrived, missing, completion_spread }
     }
 
@@ -622,6 +819,7 @@ impl Controller {
     /// backend the output is written into recycled scratch buffers, so a
     /// steady-state round performs zero O(params) allocation.
     fn aggregate_from_store(&self, learner_ids: &[String], round: u64) -> Result<Arc<TensorModel>> {
+        let _rec = self.trace(|r, tick| r.aggregate(tick, round, learner_ids));
         let backend = self.effective_backend();
         let mut s = self.state.lock().unwrap();
         let current = s
@@ -733,7 +931,7 @@ impl Controller {
             s.dispatch_round.insert(entry.learner_id.clone(), community_round);
             s.outstanding.remove(&entry.learner_id);
         } else {
-            self.late_folds.fetch_add(1, Ordering::SeqCst);
+            self.late_folds.incr();
         }
         Ok(s.async_updates)
     }
@@ -751,9 +949,11 @@ impl Controller {
     /// Async protocol: note that a task is in flight for this learner
     /// (also stamps the dispatch time for the RTT profile sample).
     pub(crate) fn mark_task_outstanding(&self, id: &str) {
+        let _rec = self.trace(|r, tick| r.mark_outstanding(tick, id));
+        let now = self.clock.now();
         let mut s = self.state.lock().unwrap();
         s.outstanding.insert(id.to_string());
-        s.task_sent_at.insert(id.to_string(), Instant::now());
+        s.task_sent_at.insert(id.to_string(), now);
     }
 
     /// Dispatch one message to `targets` concurrently. The message is
@@ -808,9 +1008,9 @@ impl Controller {
     fn broadcast_with(
         &self,
         targets: &[Arc<LearnerHandle>],
-        send: impl Fn(usize, std::time::Instant) -> Result<(Message, Duration)> + Send + Sync,
+        send: impl Fn(usize, Timestamp) -> Result<(Message, Duration)> + Send + Sync,
     ) -> (Duration, Vec<(String, Result<Message>)>) {
-        let origin = std::time::Instant::now();
+        let origin = self.clock.now();
         let results =
             self.dispatch_pool.parallel_map(targets.len(), |i| send(i, origin));
         let dispatch: Duration = results
@@ -876,8 +1076,8 @@ impl Controller {
     /// f32-equivalent volume. `raw - sent` is what the wire codecs kept
     /// off the network (`FederationReport::wire_bytes_saved`).
     pub fn wire_bytes_totals(&self) -> (u64, u64) {
-        let sent = self.dispatch_wire_sent.load(Ordering::SeqCst) + self.ingest.recv_wire_bytes();
-        let raw = self.dispatch_wire_raw.load(Ordering::SeqCst) + self.ingest.recv_raw_bytes();
+        let sent = self.dispatch_wire_sent.get() + self.ingest.recv_wire_bytes();
+        let raw = self.dispatch_wire_raw.get() + self.ingest.recv_raw_bytes();
         (sent, raw)
     }
 
@@ -983,7 +1183,7 @@ impl Controller {
     /// Codec `encode` calls performed by streamed dispatch so far — the
     /// encode-once fan-out probe.
     pub fn dispatch_encode_count(&self) -> u64 {
-        self.dispatch_encodes.load(Ordering::SeqCst)
+        self.dispatch_encodes.get()
     }
 
     /// Codec the next fan-out will use: the configured dispatch codec,
@@ -1060,7 +1260,7 @@ impl Controller {
             Done,
         }
         let psk = self.psk;
-        let origin = std::time::Instant::now();
+        let origin = self.clock.now();
         let n = targets.len();
         if let Some(bs) = budgets {
             assert_eq!(bs.len(), n, "one step budget per target");
@@ -1180,7 +1380,7 @@ impl Controller {
                                     &mut payload,
                                 );
                                 ser += sw.elapsed();
-                                self.dispatch_encodes.fetch_add(1, Ordering::SeqCst);
+                                self.dispatch_encodes.incr();
                                 digest = fnv1a64(digest, &payload);
                                 let raw_equiv = (hi - lo) * 4;
                                 let payload_len = payload.len();
@@ -1197,7 +1397,7 @@ impl Controller {
                             let sw = Stopwatch::start();
                             let bytes = codec_impl.encode(&t.data, tensor_base);
                             ser += sw.elapsed();
-                            self.dispatch_encodes.fetch_add(1, Ordering::SeqCst);
+                            self.dispatch_encodes.incr();
                             for part in bytes.chunks(chunk_bytes) {
                                 digest = fnv1a64(digest, part);
                                 let raw_equiv = part.len() * 4 / esz;
@@ -1221,10 +1421,8 @@ impl Controller {
                     if live == 0 {
                         break;
                     }
-                    self.dispatch_wire_sent
-                        .fetch_add((payload_len * live) as u64, Ordering::SeqCst);
-                    self.dispatch_wire_raw
-                        .fetch_add((raw_equiv * live) as u64, Ordering::SeqCst);
+                    self.dispatch_wire_sent.add((payload_len * live) as u64);
+                    self.dispatch_wire_raw.add((raw_equiv * live) as u64);
                     let results = self.dispatch_pool.parallel_map(n, |i| {
                         (state[i] == SendState::Alive)
                             .then(|| targets[i].rpc_raw_timed(psk, &frame, origin))
@@ -1282,7 +1480,7 @@ impl Controller {
             let fallback_results = self.dispatch_pool.parallel_map(n, |i| {
                 (state[i] == SendState::NeedsFull).then(|| {
                     let h = &targets[i];
-                    self.fallback_sends.fetch_add(1, Ordering::SeqCst);
+                    self.fallback_sends.incr();
                     log_debug(
                         "controller",
                         &format!("{}: no shared delta base, re-sending full", h.id),
@@ -1305,8 +1503,8 @@ impl Controller {
                             // the gauges honest (f32 ⇒ sent == raw).
                             if let Message::ModelChunk { bytes, .. } = &msg {
                                 let len = bytes.len() as u64;
-                                self.dispatch_wire_sent.fetch_add(len, Ordering::SeqCst);
-                                self.dispatch_wire_raw.fetch_add(len, Ordering::SeqCst);
+                                self.dispatch_wire_sent.add(len);
+                                self.dispatch_wire_raw.add(len);
                             }
                             match h.rpc(psk, &msg) {
                                 Ok(Message::Error { code, detail }) => {
@@ -1327,7 +1525,7 @@ impl Controller {
                     Err(e) => Err(anyhow::anyhow!("full-codec fallback stream failed: {e}")),
                 });
             }
-            dispatch = dispatch.max(origin.elapsed());
+            dispatch = dispatch.max(self.clock.since(origin));
         }
 
         // A lossless fan-out becomes the shared base for the next
@@ -1349,17 +1547,25 @@ impl Controller {
         // their handles on the displaced shared base, so the rotation
         // below sees a unique Arc and can recycle its buffers.
         if codec.is_lossless() {
+            let delivered: Vec<usize> = replies
+                .iter()
+                .enumerate()
+                .filter(|(_, r)| matches!(r, Some(Ok(m)) if !matches!(m, Message::Error { .. })))
+                .map(|(i, _)| i)
+                .collect();
+            // Record each pin before installing it, and hold the
+            // recorder lock across the inserts (recorder → bases order,
+            // same as the upload plane's base resolution).
+            let _rec = self.trace(|r, tick| {
+                for &i in &delivered {
+                    r.base_set(tick, &targets[i].id, model_round);
+                }
+            });
             let displaced: Vec<Arc<TensorModel>> = {
                 let mut bases = self.learner_bases.lock().unwrap();
-                replies
+                delivered
                     .iter()
-                    .enumerate()
-                    .filter(|(_, r)| {
-                        matches!(r, Some(Ok(m)) if !matches!(m, Message::Error { .. }))
-                    })
-                    .flat_map(|(i, _)| {
-                        bases.insert(&targets[i].id, model_round, Arc::clone(model))
-                    })
+                    .flat_map(|&i| bases.insert(&targets[i].id, model_round, Arc::clone(model)))
                     .collect()
             };
             // LRU evictions and same-learner displacements both leave
@@ -1455,7 +1661,7 @@ impl Controller {
             client::stream_model_with(
                 &mut |msg: Message| {
                     if let Message::ModelChunk { bytes, .. } = &msg {
-                        self.dispatch_wire_sent.fetch_add(bytes.len() as u64, Ordering::SeqCst);
+                        self.dispatch_wire_sent.add(bytes.len() as u64);
                         let raw = if codec.is_framed() {
                             codec
                                 .codec()
@@ -1465,7 +1671,7 @@ impl Controller {
                         } else {
                             (bytes.len() * 4 / codec.wire_dtype().size_bytes()) as u64
                         };
-                        self.dispatch_wire_raw.fetch_add(raw, Ordering::SeqCst);
+                        self.dispatch_wire_raw.add(raw);
                     }
                     match target.rpc(psk, &msg) {
                         Ok(Message::Error { code, detail }) => {
@@ -1488,6 +1694,7 @@ impl Controller {
             Rng::new(self.env.seed ^ task_id ^ fnv1a64(FNV64_INIT, target.id.as_bytes()));
         let reply = RetryPolicy::rpc()
             .run(
+                &self.clock,
                 &mut rng,
                 |_| match run_attempt(&send) {
                     Err(client::RpcError::Remote { code: ErrorCode::NotFound, .. })
@@ -1496,7 +1703,7 @@ impl Controller {
                         // The learner lost the base (restart / staleness):
                         // the standard full-f32 retry, mirroring
                         // `stream_model_with_fallback`.
-                        self.fallback_sends.fetch_add(1, Ordering::SeqCst);
+                        self.fallback_sends.incr();
                         let full = StreamSend {
                             codec: CodecId::F32,
                             base: None,
@@ -1511,7 +1718,7 @@ impl Controller {
             )
             .map_err(|give_up| {
                 if give_up.exhausted {
-                    self.retry_give_ups.fetch_add(1, Ordering::SeqCst);
+                    self.retry_give_ups.incr();
                     anyhow::anyhow!(
                         "streamed dispatch to {}: gave up after {} attempts in {:?}: {}",
                         target.id,
@@ -1524,6 +1731,7 @@ impl Controller {
                 }
             })?;
         if codec.is_lossless() && !matches!(reply, Message::Error { .. }) {
+            let _rec = self.trace(|r, tick| r.base_set(tick, &target.id, model_round));
             let displaced = self
                 .learner_bases
                 .lock()
@@ -1543,6 +1751,19 @@ impl Controller {
 
 impl Service for Controller {
     fn handle(&self, msg: Message) -> Message {
+        // Record the frame byte-exact and hold the recorder lock across
+        // the whole dispatch: the live timeline is serialized in exactly
+        // the order a replay re-applies it.
+        let _rec = self.trace(|r, tick| r.inbound(tick, &msg.encode()));
+        self.handle_inner(msg)
+    }
+}
+
+impl Controller {
+    /// The actual RPC dispatch ([`Service::handle`] wraps it with the
+    /// trace hook). Must never call back into `handle` or `ship_model`:
+    /// the recorder lock is held across the whole dispatch.
+    fn handle_inner(&self, msg: Message) -> Message {
         if self.is_shutdown() {
             return Message::error(ErrorCode::Unavailable, "controller is shut down");
         }
@@ -1595,7 +1816,9 @@ impl Service for Controller {
                 self.ingest.wire_release(wire);
                 match decoded {
                     Ok(m) => {
-                        self.ship_model(m);
+                        // Not `ship_model`: the handle wrapper already
+                        // recorded this frame (and holds the recorder).
+                        self.install_model(m);
                         Message::Ack { task_id: 0, ok: true }
                     }
                     Err(e) => Message::error(ErrorCode::InvalidModel, format!("bad model: {e:#}")),
@@ -1774,7 +1997,7 @@ impl Controller {
             // LATEST task may consume the send stamp (an older
             // straggler must not claim the fresh task's clock).
             let rtt = if accepted && latest_dispatch == Some(task_id) {
-                s.task_sent_at.remove(&learner_id).map(|t| t.elapsed())
+                s.task_sent_at.remove(&learner_id).map(|t| self.clock.since(t))
             } else {
                 None
             };
@@ -1783,7 +2006,7 @@ impl Controller {
             }
             if in_round {
                 let r = s.round.as_mut().unwrap();
-                let at = r.opened_at.elapsed();
+                let at = self.clock.since(r.opened_at);
                 r.first_arrival.get_or_insert(at);
                 r.last_arrival = Some(at);
                 r.arrived.push(learner_id.clone());
@@ -1848,7 +2071,7 @@ impl Controller {
                 s.completed_tasks.insert(learner_id.clone(), task_id);
             }
             let rtt = if unseen {
-                s.task_sent_at.remove(&learner_id).map(|t| t.elapsed())
+                s.task_sent_at.remove(&learner_id).map(|t| self.clock.since(t))
             } else {
                 None
             };

@@ -54,7 +54,7 @@ pub fn run_async_session(
     // Initial fan-out: streamed (encode-once, codec-aware) when a chunk
     // size is configured, one-shot otherwise.
     let streamed = ctrl.env.effective_stream_chunk() > 0;
-    let first_sw = Stopwatch::start();
+    let first_sw = Stopwatch::start_with(ctrl.clock());
     let (dispatch_time, acks) = {
         let (community, cround) = ctrl
             .community()
@@ -104,12 +104,13 @@ pub fn run_async_session(
     // Re-dispatch loop: poll completed counts; when a learner finishes,
     // its handle becomes idle. We track idleness via a per-learner
     // outstanding flag updated from completion deltas.
-    let deadline = std::time::Instant::now()
-        + Duration::from_millis(ctrl.env.task_timeout_ms) * (rounds as u32 + 1);
-    let mut report_sw = Stopwatch::start();
+    let session_sw = Stopwatch::start_with(ctrl.clock());
+    let session_budget =
+        Duration::from_millis(ctrl.env.task_timeout_ms) * (rounds as u32 + 1);
+    let mut report_sw = Stopwatch::start_with(ctrl.clock());
     let mut last_seen = start_updates;
     while ctrl.async_updates() - start_updates < updates_target {
-        if std::time::Instant::now() > deadline {
+        if session_sw.elapsed() > session_budget {
             log_warn("async", "session deadline exceeded; stopping early");
             break;
         }
@@ -123,7 +124,7 @@ pub fn run_async_session(
                 if needs_task {
                     let (community, cround) = ctrl.community().unwrap();
                     dispatched_round = cround;
-                    let sw = Stopwatch::start();
+                    let sw = Stopwatch::start_with(ctrl.clock());
                     let r = if streamed {
                         // Single-target stream, delta-coded against the
                         // last model this learner acknowledged.
@@ -166,7 +167,7 @@ pub fn run_async_session(
             }
             last_seen = updates;
         } else {
-            std::thread::sleep(Duration::from_micros(200));
+            ctrl.clock().sleep(Duration::from_micros(200));
         }
 
         // Emit a report every `n` community updates.

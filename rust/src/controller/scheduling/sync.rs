@@ -29,7 +29,7 @@ pub(crate) fn run_round_with_budget(
     paced: bool,
     rng: &mut Rng,
 ) -> Result<RoundReport> {
-    let round_sw = Stopwatch::start();
+    let round_sw = Stopwatch::start_with(ctrl.clock());
     let participants = ctrl.select_participants(rng);
     if participants.is_empty() {
         bail!("round {round}: no registered learners");
@@ -63,7 +63,7 @@ pub(crate) fn run_round_with_budget(
             &format!("round {round}: paced step budgets {:?}", b),
         );
     }
-    let train_sw = Stopwatch::start();
+    let train_sw = Stopwatch::start_with(ctrl.clock());
     let (dispatch_time, acks) = if streamed {
         // Symmetric data plane: the community model fans out as one
         // encode-once chunk stream shared by every learner, under the
@@ -83,7 +83,7 @@ pub(crate) fn run_round_with_budget(
         // shared as the frame prefix (spec is the trailing wire field
         // of RunTask); full frames materialize per send inside the
         // dispatch pool.
-        let ser_sw = Stopwatch::start();
+        let ser_sw = Stopwatch::start_with(ctrl.clock());
         let model_proto = ModelProto::from_model(&community, DType::F32, ByteOrder::Little);
         let specs: Vec<TaskSpec> = budgets
             .iter()
@@ -96,7 +96,7 @@ pub(crate) fn run_round_with_budget(
     } else {
         // One-shot: serialize the community model once per round
         // (tensor-as-bytes, §3) and fan the same frame out.
-        let ser_sw = Stopwatch::start();
+        let ser_sw = Stopwatch::start_with(ctrl.clock());
         let model_proto = ModelProto::from_model(&community, DType::F32, ByteOrder::Little);
         ctrl.record(FedOp::Serialization, ser_sw.elapsed());
         let run_task =
@@ -157,7 +157,7 @@ pub(crate) fn run_round_with_budget(
     }
 
     // --- Aggregation (T4–T7) -------------------------------------------
-    let agg_sw = Stopwatch::start();
+    let agg_sw = Stopwatch::start_with(ctrl.clock());
     let new_model = ctrl.aggregate_from_store(&arrived, round)?;
     let aggregation_time = agg_sw.elapsed();
     ctrl.record(FedOp::Aggregation, aggregation_time);
@@ -167,7 +167,7 @@ pub(crate) fn run_round_with_budget(
     );
 
     // --- Evaluation round (T7–T9, synchronous calls; Fig. 10) ----------
-    let eval_sw = Stopwatch::start();
+    let eval_sw = Stopwatch::start_with(ctrl.clock());
     let (eval_dispatch, replies) = if streamed {
         // The eval stream ships the freshly aggregated community model
         // (now at `round`); its `End` reply carries the evaluation. It
@@ -182,7 +182,7 @@ pub(crate) fn run_round_with_budget(
             round,
         )
     } else {
-        let ser_sw = Stopwatch::start();
+        let ser_sw = Stopwatch::start_with(ctrl.clock());
         let eval_proto = ModelProto::from_model(&new_model, DType::F32, ByteOrder::Little);
         ctrl.record(FedOp::Serialization, ser_sw.elapsed());
         let eval_task = Message::EvaluateModel { task_id: round, round, model: eval_proto };

@@ -19,8 +19,9 @@ use crate::metrics::{OpMetrics, RoundReport};
 use crate::net::{Psk, ServerHandle};
 use crate::proto::client;
 use crate::tensor::TensorModel;
-use crate::util::{log_info, log_warn, Rng, Stopwatch};
+use crate::util::{log_info, log_warn, Clock, Rng, Stopwatch};
 use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
@@ -79,6 +80,15 @@ pub struct FederationReport {
     /// bitwise identical — e.g. a flat fleet vs the same fleet behind
     /// aggregators — compare equal here.
     pub community_digest: u64,
+    /// One-call snapshot of the run's [`CounterRegistry`] set: the
+    /// controller's registry with every learner's merged in, keyed by
+    /// [`crate::metrics::counters::names`]. The scalar degradation
+    /// fields above are views into the same counters, kept as the
+    /// stable report surface; this map is what the trace recorder
+    /// embeds and the replay gate compares wholesale.
+    ///
+    /// [`CounterRegistry`]: crate::metrics::counters::CounterRegistry
+    pub counters: BTreeMap<String, u64>,
 }
 
 /// Unique per-process run counter so in-proc endpoint names never clash
@@ -170,10 +180,9 @@ impl Monitor {
                         }
                         // Sleep in short slices so shutdown is prompt even
                         // with long heartbeat periods.
-                        let deadline = std::time::Instant::now() + period;
-                        while std::time::Instant::now() < deadline && !stop.load(Ordering::SeqCst)
-                        {
-                            std::thread::sleep(Duration::from_millis(10).min(period));
+                        let sw = Stopwatch::start();
+                        while sw.elapsed() < period && !stop.load(Ordering::SeqCst) {
+                            Clock::system().sleep(Duration::from_millis(10).min(period));
                         }
                     }
                 })
@@ -343,6 +352,10 @@ pub fn run_with_trainer(
     let (wire_sent, wire_raw) = controller.wire_bytes_totals();
     let learner_give_ups: u64 = learners.iter().map(|l| l.retry_give_ups()).sum();
     let learner_fallbacks: u64 = learners.iter().map(|l| l.fallback_sends()).sum();
+    let mut counters = controller.counters().snapshot();
+    for l in &learners {
+        l.counters().merge_into(&mut counters);
+    }
     Ok(FederationReport {
         env_name: env.name.clone(),
         round_metrics,
@@ -360,6 +373,7 @@ pub fn run_with_trainer(
         streams_refused: controller.ingest().streams_refused(),
         streams_gced: controller.ingest().streams_gced(),
         community_digest: controller.community().map(|(m, _)| model_digest(&m)).unwrap_or(0),
+        counters,
     })
 }
 
@@ -541,6 +555,13 @@ fn run_two_tier(
     let learner_fallbacks: u64 = learners.iter().map(|l| l.fallback_sends()).sum();
     let agg_give_ups: u64 = agg_nodes.iter().map(|n| n.retry_give_ups()).sum();
     let agg_fallbacks: u64 = agg_nodes.iter().map(|n| n.fallback_sends()).sum();
+    let mut counters = controller.counters().snapshot();
+    for n in &agg_nodes {
+        n.inner().counters().merge_into(&mut counters);
+    }
+    for l in &learners {
+        l.counters().merge_into(&mut counters);
+    }
     Ok(FederationReport {
         env_name: env.name.clone(),
         round_metrics,
@@ -561,6 +582,7 @@ fn run_two_tier(
         streams_refused: controller.ingest().streams_refused(),
         streams_gced: controller.ingest().streams_gced(),
         community_digest: controller.community().map(|(m, _)| model_digest(&m)).unwrap_or(0),
+        counters,
     })
 }
 

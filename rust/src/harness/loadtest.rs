@@ -17,20 +17,20 @@
 //! chaos and requires the community model to match **bitwise** — faults
 //! may shrink participation, but they must never corrupt the math.
 
-use crate::config::{FederationEnv, HeteroFleetSpec, ModelSpec, TrainerKind};
+use crate::config::{FederationEnv, HeteroFleetSpec, ModelSpec, TrainerKind, WireCodecChoice};
 use crate::controller::{scheduling, Controller};
 use crate::harness::runner::ReportWriter;
 use crate::learner::{Dataset, Learner, LearnerServicer, SyntheticTrainer, Trainer};
 use crate::metrics::histogram::LatencyHistogram;
 use crate::net::chaos::ChaosSpec;
 use crate::net::{Psk, ServerHandle};
-use crate::proto::wire::{fnv1a64, FNV64_INIT};
 use crate::tensor::TensorModel;
-use crate::util::{log_debug, log_info, Rng, Stopwatch};
+use crate::util::{log_debug, log_info, Clock, Rng, Stopwatch};
 use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 /// Loadtest knobs. `quick()` is the CI smoke preset; the CLI maps
 /// `metisfl loadtest` flags onto these fields.
@@ -53,6 +53,19 @@ pub struct LoadtestConfig {
     pub seed: u64,
     /// Synthetic trainer step time (uniform fleet).
     pub step_time_us: u64,
+    /// Data-plane wire codec for the run (`Auto` resolves per the env's
+    /// rules; the replay property test sweeps f32 / delta / delta-rle).
+    pub wire_codec: WireCodecChoice,
+    /// Run the whole federation on a [`Clock::sim`] discrete-event
+    /// clock: arrival gaps, modeled compute, timeouts, and backoffs all
+    /// elapse in virtual time, so a 1k-learner fleet over simulated
+    /// minutes completes in real seconds (`metisfl loadtest --sim`).
+    pub sim: bool,
+    /// Record a deterministic trace of the controller's timeline
+    /// (`metisfl loadtest --record <file>`): every inbound frame and
+    /// scheduler decision, sealed with the final community digest, so
+    /// `metisfl replay` can re-drive the run and assert it bitwise.
+    pub record: bool,
 }
 
 impl LoadtestConfig {
@@ -69,6 +82,9 @@ impl LoadtestConfig {
             task_timeout_ms: 10_000,
             seed: 42,
             step_time_us: 200,
+            wire_codec: WireCodecChoice::Auto,
+            sim: false,
+            record: false,
         }
     }
 
@@ -88,6 +104,7 @@ impl LoadtestConfig {
                 hetero: HeteroFleetSpec::default(),
             })
             .chaos(self.chaos.clone())
+            .wire_codec(self.wire_codec)
             .build()
     }
 }
@@ -117,6 +134,14 @@ pub struct LoadtestReport {
     pub fallback_sends: u64,
     pub late_folds: u64,
     pub peak_wire_ingest_bytes: usize,
+    /// One-call snapshot of the controller's [`CounterRegistry`] with
+    /// every learner registry merged in — the degradation evidence the
+    /// trace recorder and replay gate compare wholesale.
+    pub counters: BTreeMap<String, u64>,
+    /// The sealed trace bytes when the run was recorded (`cfg.record`),
+    /// sealed *before* the post-round drain sweep so the footer's
+    /// counters cover exactly the recorded timeline.
+    pub trace: Option<Vec<u8>>,
 }
 
 impl LoadtestReport {
@@ -149,20 +174,9 @@ fn fmt_ms(d: Duration) -> String {
     format!("{:.3}", d.as_secs_f64() * 1e3)
 }
 
-/// Bitwise-comparable digest of a model: tensor names + f32 bit
-/// patterns, folded through FNV-1a.
-pub fn model_digest(m: &TensorModel) -> u64 {
-    let mut d = FNV64_INIT;
-    for t in &m.tensors {
-        d = fnv1a64(d, t.name.as_bytes());
-        let mut bytes = Vec::with_capacity(t.data.len() * 4);
-        for v in &t.data {
-            bytes.extend_from_slice(&v.to_bits().to_le_bytes());
-        }
-        d = fnv1a64(d, &bytes);
-    }
-    d
-}
+/// Bitwise-comparable digest of a model (canonical implementation lives
+/// with the trace format it seals).
+pub use crate::runtime::trace::model_digest;
 
 fn next_loadtest_id() -> u64 {
     static RUN: AtomicU64 = AtomicU64::new(0);
@@ -190,8 +204,14 @@ fn run_filtered(cfg: &LoadtestConfig, fleet: Option<&[usize]>) -> Result<Loadtes
     let env = cfg.env_for(&format!("loadtest-{run}"), indices.len());
     env.validate()?;
     let psk: Psk = None;
+    let clock = if cfg.sim { Clock::sim() } else { Clock::system() };
 
-    let controller = Controller::new(env.clone(), psk)?;
+    let controller = Controller::with_clock(env.clone(), psk, clock.clone())?;
+    if cfg.record {
+        // Before any learner dials in: registrations are part of the
+        // recorded timeline.
+        controller.start_recording();
+    }
     let ctrl_ep = format!("inproc://loadtest-ctrl-{run}");
     let _ctrl_server =
         crate::net::serve(&ctrl_ep, Arc::clone(&controller) as Arc<dyn crate::net::Service>, psk)?;
@@ -218,13 +238,18 @@ fn run_filtered(cfg: &LoadtestConfig, fleet: Option<&[usize]>) -> Result<Loadtes
             env.samples_per_learner,
             ds_seed,
         );
-        let trainer: Arc<dyn Trainer> = Arc::new(SyntheticTrainer::for_fleet(
-            cfg.step_time_us,
-            &HeteroFleetSpec::default(),
-            cfg.seed,
-            i,
-        ));
-        let learner = Learner::new(&format!("learner-{i}"), &ctrl_ep, psk, trainer, dataset);
+        let trainer: Arc<dyn Trainer> = Arc::new(
+            SyntheticTrainer::for_fleet(cfg.step_time_us, &HeteroFleetSpec::default(), cfg.seed, i)
+                .on_clock(clock.clone()),
+        );
+        let learner = Learner::with_clock(
+            &format!("learner-{i}"),
+            &ctrl_ep,
+            psk,
+            trainer,
+            dataset,
+            clock.clone(),
+        );
         learner.set_stream_chunk(env.effective_stream_chunk());
         learner.set_upload_codec(env.upload_codec());
         learner.set_delta_fallback(env.delta_fallback);
@@ -259,20 +284,26 @@ fn run_filtered(cfg: &LoadtestConfig, fleet: Option<&[usize]>) -> Result<Loadtes
     }
     let horizon = at;
 
-    let start = Instant::now();
+    let start = clock.now();
     let mut joins = Vec::with_capacity(learners.len());
     for (k, learner) in learners.iter().enumerate() {
         let learner = Arc::clone(learner);
         let ep = endpoints[k].clone();
         let due = start + offsets[k];
+        let clock = clock.clone();
         joins.push(
             std::thread::Builder::new()
                 .name(format!("loadtest-arrival-{k}"))
                 .spawn(move || {
-                    if let Some(wait) = due.checked_duration_since(Instant::now()) {
-                        std::thread::sleep(wait);
+                    // Register as busy so simulated time cannot jump past
+                    // an arrival mid-dial; the sleep below suspends the
+                    // registration while this thread is parked.
+                    let _busy = clock.busy();
+                    let wait = due.saturating_sub(clock.now());
+                    if !wait.is_zero() {
+                        clock.sleep(wait);
                     }
-                    let sw = Stopwatch::start();
+                    let sw = Stopwatch::start_with(&clock);
                     match learner.register(&ep) {
                         Ok(_) => Some(sw.elapsed()),
                         Err(e) => {
@@ -336,24 +367,29 @@ fn run_filtered(cfg: &LoadtestConfig, fleet: Option<&[usize]>) -> Result<Loadtes
         completed_per_round.push(report.completed);
     }
 
+    // Seal the trace BEFORE the drain sweep below: `gc_force` reclaims
+    // from the harness thread, outside any recorded event, so counters
+    // it bumps (streams_gced) must land after the footer or a faithful
+    // replay would come up short.
+    let trace = if cfg.record { controller.finish_recording() } else { None };
+
     // --- No-wedged-streams gate ---------------------------------------
-    // Chaos victims may still be dripping their doomed uploads; advance
-    // the ingest clock in hour-sized jumps (far past both the idle and
-    // lifetime deadlines) until a GC sweep leaves nothing open. Attempts
-    // are finite, so a bounded poll converges or the gate fails.
-    let mut far = Instant::now();
-    let poll_deadline = Instant::now() + Duration::from_secs(20);
+    // Chaos victims may still be dripping their doomed uploads; every
+    // round has closed, so any stream still open is abandoned by
+    // construction. Force-reclaim them, then poll (real time — this
+    // gates on real handler threads finishing mid-decode frames, not on
+    // the run's timeline) until the wire accounting drains; re-force
+    // each pass in case a victim trickled in a late chunk between
+    // sweeps.
+    let drain = Stopwatch::start();
     loop {
-        far += Duration::from_secs(3600);
-        let tick = far;
-        controller.ingest().set_clock(Arc::new(move || tick));
-        let _ = controller.ingest().gc_idle();
+        let _ = controller.ingest().gc_force();
         if controller.ingest().open_streams() == 0
             && controller.ingest().wire_in_flight_bytes() == 0
         {
             break;
         }
-        if Instant::now() >= poll_deadline {
+        if drain.elapsed() >= Duration::from_secs(20) {
             bail!(
                 "loadtest: {} stream(s) still wedged ({} wire bytes in flight) \
                  after forced GC",
@@ -361,7 +397,7 @@ fn run_filtered(cfg: &LoadtestConfig, fleet: Option<&[usize]>) -> Result<Loadtes
                 controller.ingest().wire_in_flight_bytes()
             );
         }
-        std::thread::sleep(Duration::from_millis(10));
+        Clock::system().sleep(Duration::from_millis(10));
     }
 
     let (community, community_round) =
@@ -369,12 +405,14 @@ fn run_filtered(cfg: &LoadtestConfig, fleet: Option<&[usize]>) -> Result<Loadtes
     let mut upload = LatencyHistogram::new();
     let mut learner_give_ups = 0u64;
     let mut learner_fallbacks = 0u64;
+    let mut counters = controller.counters().snapshot();
     for l in &learners {
         for d in l.take_upload_timings() {
             upload.record(d);
         }
         learner_give_ups += l.retry_give_ups();
         learner_fallbacks += l.fallback_sends();
+        l.counters().merge_into(&mut counters);
     }
 
     let report = LoadtestReport {
@@ -399,6 +437,8 @@ fn run_filtered(cfg: &LoadtestConfig, fleet: Option<&[usize]>) -> Result<Loadtes
         fallback_sends: controller.fallback_sends() + learner_fallbacks,
         late_folds: controller.late_folds(),
         peak_wire_ingest_bytes: controller.peak_wire_ingest_bytes(),
+        counters,
+        trace,
     };
     for mut s in servers {
         s.shutdown();
@@ -499,6 +539,40 @@ mod tests {
         // Latencies differ run to run; the *math* must not.
         assert_eq!(a.community_digest, b.community_digest);
         assert_eq!(a.completed_per_round, b.completed_per_round);
+    }
+
+    #[test]
+    fn sim_loadtest_compresses_virtual_time_and_preserves_the_math() {
+        let mut cfg = LoadtestConfig::quick();
+        cfg.learners = 4;
+        cfg.rate = 2.0; // ~2 virtual seconds of arrivals
+        cfg.step_time_us = 100_000; // heavy virtual compute per step
+        cfg.sim = true;
+        let real = Stopwatch::start();
+        let sim_report = run_loadtest(&cfg).unwrap();
+        // Virtual seconds of arrivals + compute must not cost
+        // proportional real time.
+        assert!(
+            real.elapsed() < Duration::from_secs(20),
+            "sim run took {:?} real",
+            real.elapsed()
+        );
+        assert_eq!(sim_report.rounds_completed, 2);
+        assert_eq!(sim_report.completed_per_round, vec![4, 4]);
+        // Train latencies are virtual: the modeled compute shows up in
+        // the phase histogram even though it never elapsed for real.
+        assert!(sim_report.phase("train").max() >= Duration::from_millis(100));
+
+        // Same math as a wall-clock run of the same seed.
+        let mut wall_cfg = cfg.clone();
+        wall_cfg.sim = false;
+        wall_cfg.rate = 1000.0;
+        wall_cfg.step_time_us = 100;
+        let wall = run_loadtest(&wall_cfg).unwrap();
+        assert_eq!(
+            sim_report.community_digest, wall.community_digest,
+            "sim timing leaked into the math"
+        );
     }
 
     #[test]

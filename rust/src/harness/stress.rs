@@ -165,7 +165,7 @@ pub fn stress_round(
         .map(|(update, payload)| {
             let _downloaded = decode_model(profile, payload, &w.community);
             if !w.learner_compute.is_zero() {
-                std::thread::sleep(w.learner_compute);
+                crate::util::Clock::system().sleep(w.learner_compute);
             }
             encode_model(profile, update)
         })

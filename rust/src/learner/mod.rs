@@ -28,19 +28,21 @@ pub mod trainer;
 pub use data::Dataset;
 pub use trainer::{SyntheticTrainer, Trainer};
 
+use crate::metrics::counters::{names, Counter, CounterRegistry};
 use crate::net::chaos::{connect_with_chaos, ChaosPlan};
 use crate::net::retry::RetryPolicy;
 use crate::net::{ClientConn, Psk, Service};
 use crate::proto::client::{self, RpcError, StreamSend};
-use crate::proto::ingest::{StreamBegin, StreamIngest};
+use crate::proto::ingest::{IngestLimits, StreamBegin, StreamIngest};
 use crate::proto::wire::{fnv1a64, FNV64_INIT};
 use crate::proto::{ErrorCode, Message, ModelProto, StreamPurpose, TaskSpec, PROTO_VERSION};
 use crate::tensor::{ByteOrder, CodecId, DType, TensorModel};
-use crate::util::{log_debug, log_warn, Rng, ThreadPool};
+use crate::util::clock::Clock;
+use crate::util::{log_debug, log_warn, Rng, Stopwatch, ThreadPool};
 use anyhow::Result;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 /// A learner node.
 pub struct Learner {
@@ -77,11 +79,17 @@ pub struct Learner {
     /// Fault-injection plan for the callback connection (chaos
     /// harness); `None` in production.
     chaos: Mutex<Option<ChaosPlan>>,
+    /// Time source for upload timing, retry backoff, chaos stalls, and
+    /// the ingest GC (`Clock::sim()` under `loadtest --sim`).
+    clock: Clock,
+    /// Degradation counter registry shared with this learner's ingest
+    /// engine (snapshotted whole by the harness).
+    counters: Arc<CounterRegistry>,
     /// Uploads abandoned after the retry policy's budget ran dry.
-    retry_give_ups: AtomicU64,
+    retry_give_ups: Counter,
     /// Streamed uploads that fell back from a base-needing codec to
     /// full f32 (the receiver lacked the shared base).
-    fallback_sends: AtomicU64,
+    fallback_sends: Counter,
     /// Wall-clock duration of each successful completion upload
     /// (bounded; the loadtest harness drains it per run).
     upload_timings: Mutex<Vec<Duration>>,
@@ -101,27 +109,53 @@ impl Learner {
         trainer: Arc<dyn Trainer>,
         dataset: Dataset,
     ) -> Arc<Learner> {
+        Self::with_clock(id, controller_endpoint, psk, trainer, dataset, Clock::system())
+    }
+
+    /// Construct against an explicit time source (`Clock::sim()` runs
+    /// uploads, retries, and the ingest GC in discrete virtual time).
+    pub fn with_clock(
+        id: &str,
+        controller_endpoint: &str,
+        psk: Psk,
+        trainer: Arc<dyn Trainer>,
+        dataset: Dataset,
+        clock: Clock,
+    ) -> Arc<Learner> {
+        let counters = CounterRegistry::new();
         Arc::new(Learner {
             id: id.to_string(),
             controller_endpoint: controller_endpoint.to_string(),
             psk,
             trainer,
             dataset: Arc::new(dataset),
-            executor: ThreadPool::new(1),
+            executor: ThreadPool::with_clock(1, clock.clone()),
             callback_conn: Mutex::new(None),
             stream_chunk: AtomicUsize::new(0),
             upload_codec: Mutex::new(CodecId::F32),
             accepted_codecs: Mutex::new(None),
             delta_fallback: AtomicBool::new(true),
             last_community: Mutex::new(None),
-            ingest: StreamIngest::default(),
+            ingest: StreamIngest::with_clock(
+                IngestLimits::default(),
+                clock.clone(),
+                Arc::clone(&counters),
+            ),
             chaos: Mutex::new(None),
-            retry_give_ups: AtomicU64::new(0),
-            fallback_sends: AtomicU64::new(0),
+            retry_give_ups: counters.counter(names::RETRY_GIVE_UPS),
+            fallback_sends: counters.counter(names::FALLBACK_SENDS),
+            clock,
+            counters,
             upload_timings: Mutex::new(Vec::new()),
             shutdown: AtomicBool::new(false),
             tasks_completed: AtomicU64::new(0),
         })
+    }
+
+    /// The learner's degradation counter registry (shared with its
+    /// ingest engine).
+    pub fn counters(&self) -> &Arc<CounterRegistry> {
+        &self.counters
     }
 
     /// Route every future callback dial through a fault-injection plan
@@ -134,12 +168,12 @@ impl Learner {
 
     /// Uploads abandoned after the retry budget ran dry.
     pub fn retry_give_ups(&self) -> u64 {
-        self.retry_give_ups.load(Ordering::SeqCst)
+        self.retry_give_ups.get()
     }
 
     /// Streamed uploads that fell back to full f32.
     pub fn fallback_sends(&self) -> u64 {
-        self.fallback_sends.load(Ordering::SeqCst)
+        self.fallback_sends.get()
     }
 
     /// Drain the recorded per-upload durations (loadtest harness).
@@ -172,7 +206,7 @@ impl Learner {
         self.delta_fallback.store(on, Ordering::SeqCst);
     }
 
-    /// The inbound data-plane engine (clock injection / gauges).
+    /// The inbound data-plane engine (runs on this learner's clock).
     pub fn ingest(&self) -> &StreamIngest {
         &self.ingest
     }
@@ -211,7 +245,7 @@ impl Learner {
         if guard.is_none() {
             let plan = self.chaos.lock().unwrap().clone();
             let mut conn = match &plan {
-                Some(p) => connect_with_chaos(&self.controller_endpoint, self.psk, p),
+                Some(p) => connect_with_chaos(&self.controller_endpoint, self.psk, p, &self.clock),
                 None => crate::net::connect(&self.controller_endpoint, self.psk),
             }
             .map_err(RpcError::Transport)?;
@@ -297,11 +331,12 @@ impl Learner {
         // Remote application errors never retry.
         let policy = RetryPolicy::rpc();
         let mut rng = Rng::new(fnv1a64(FNV64_INIT, self.id.as_bytes()) ^ task_id);
-        let started = Instant::now();
+        let started = Stopwatch::start_with(&self.clock);
         let fallback = self.delta_fallback.load(Ordering::SeqCst);
         let upload = if chunk > 0 {
             // Each attempt returns whether the f32 fallback path fired.
             policy.run(
+                &self.clock,
                 &mut rng,
                 |_| {
                     // Ensure the callback session (and its codec
@@ -358,6 +393,7 @@ impl Learner {
             )
         } else {
             policy.run(
+                &self.clock,
                 &mut rng,
                 |_| {
                     let proto = ModelProto::from_model(&trained, DType::F32, ByteOrder::Little);
@@ -372,7 +408,7 @@ impl Learner {
         match upload {
             Ok(fell_back) => {
                 if fell_back {
-                    self.fallback_sends.fetch_add(1, Ordering::SeqCst);
+                    self.fallback_sends.incr();
                 }
                 let mut timings = self.upload_timings.lock().unwrap();
                 if timings.len() < MAX_UPLOAD_TIMINGS {
@@ -382,7 +418,7 @@ impl Learner {
             }
             Err(give_up) => {
                 if give_up.exhausted {
-                    self.retry_give_ups.fetch_add(1, Ordering::SeqCst);
+                    self.retry_give_ups.incr();
                 }
                 anyhow::bail!(
                     "completion callback: gave up after {} attempts in {:?}: {}",
@@ -644,10 +680,10 @@ mod tests {
         });
         assert_eq!(reply, Message::Ack { task_id: 9, ok: true });
         // Wait for the background completion callback.
-        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        let sw = Stopwatch::start();
         while learner.tasks_completed() == 0 {
-            assert!(std::time::Instant::now() < deadline, "no completion");
-            std::thread::sleep(std::time::Duration::from_millis(2));
+            assert!(sw.elapsed() < std::time::Duration::from_secs(5), "no completion");
+            Clock::system().sleep(std::time::Duration::from_millis(2));
         }
         let completions = capture.completions.lock().unwrap();
         assert_eq!(completions.len(), 1);
@@ -725,10 +761,10 @@ mod tests {
             spec: TaskSpec { epochs: 1, batch_size: 10, learning_rate: 0.1, step_budget: 0 },
         });
         assert_eq!(reply, Message::Ack { task_id: 1, ok: true });
-        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        let sw = Stopwatch::start();
         while learner.tasks_completed() == 0 {
-            assert!(std::time::Instant::now() < deadline, "no streamed completion");
-            std::thread::sleep(std::time::Duration::from_millis(2));
+            assert!(sw.elapsed() < std::time::Duration::from_secs(5), "no streamed completion");
+            Clock::system().sleep(std::time::Duration::from_millis(2));
         }
         assert_eq!(ctrl.async_updates(), 1, "stream did not reach the controller");
         assert_eq!(ctrl.open_streams(), 0);

@@ -14,7 +14,7 @@
 use super::data::Dataset;
 use crate::proto::{EvalResult, TaskMeta, TaskSpec};
 use crate::tensor::TensorModel;
-use crate::util::{Rng, Stopwatch};
+use crate::util::{Clock, Rng, Stopwatch};
 use anyhow::Result;
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -50,6 +50,10 @@ pub struct SyntheticTrainer {
     /// (and jitter/dropout draws) are independent yet deterministic.
     seed: u64,
     invocation: AtomicU64,
+    /// Clock the modeled compute sleep runs on. Under [`Clock::sim`]
+    /// the sleep parks on virtual time, so a simulated fleet's compute
+    /// phase costs no wall clock.
+    clock: Clock,
 }
 
 impl SyntheticTrainer {
@@ -95,7 +99,16 @@ impl SyntheticTrainer {
             dropout,
             seed,
             invocation: AtomicU64::new(0),
+            clock: Clock::system(),
         }
+    }
+
+    /// Rebind the modeled-compute sleep (and reported timings) to
+    /// `clock`. Builder-style so fleet construction reads as
+    /// `SyntheticTrainer::for_fleet(..).on_clock(clock)`.
+    pub fn on_clock(mut self, clock: Clock) -> SyntheticTrainer {
+        self.clock = clock;
+        self
     }
 
     fn steps_for(&self, data: &Dataset, spec: &TaskSpec) -> usize {
@@ -115,7 +128,7 @@ impl Trainer for SyntheticTrainer {
         data: &Dataset,
         spec: &TaskSpec,
     ) -> Result<(TensorModel, TaskMeta)> {
-        let sw = Stopwatch::start();
+        let sw = Stopwatch::start_with(&self.clock);
         let steps = self.steps_for(data, spec);
         let invocation = self.invocation.fetch_add(1, Ordering::SeqCst);
         // Deterministic, parameter-shaped pseudo-update: the workload a
@@ -142,7 +155,7 @@ impl Trainer for SyntheticTrainer {
                 let j = 1.0 + self.jitter_frac * (2.0 * rng.next_f64() - 1.0);
                 sleep_us = (sleep_us as f64 * j.max(0.0)) as u64;
             }
-            std::thread::sleep(std::time::Duration::from_micros(sleep_us));
+            self.clock.sleep(std::time::Duration::from_micros(sleep_us));
         }
         let elapsed = sw.elapsed();
         let meta = TaskMeta {

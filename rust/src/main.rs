@@ -9,6 +9,7 @@
 //! * `metisfl simulate [...]`           — quick in-proc federation
 //! * `metisfl stress [...]`             — one cross-framework stress cell
 //! * `metisfl loadtest [...]`           — open-loop arrivals + chaos gates
+//! * `metisfl replay --trace <file>`    — re-drive a recorded run, verify bitwise
 //! * `metisfl table1`                   — print the qualitative matrix
 //!
 //! Multi-process deployment: start the controller first, then learners,
@@ -17,7 +18,7 @@
 use metisfl::cli::{CliError, Command};
 use metisfl::config::{FederationEnv, ModelSpec, Protocol, TrainerKind};
 use metisfl::net::Service;
-use metisfl::util::log_info;
+use metisfl::util::{log_info, Clock};
 use std::sync::Arc;
 
 fn main() {
@@ -33,7 +34,7 @@ fn main() {
 }
 
 fn usage() -> String {
-    "metisfl <driver|controller|aggregator|learner|simulate|stress|loadtest|table1|bench-check> \
+    "metisfl <driver|controller|aggregator|learner|simulate|stress|loadtest|replay|table1|bench-check> \
      [options]\n\
      Run `metisfl <subcommand> --help` for options."
         .to_string()
@@ -53,6 +54,7 @@ fn run(args: &[String]) -> anyhow::Result<()> {
         "simulate" => cmd_simulate(rest),
         "stress" => cmd_stress(rest),
         "loadtest" => cmd_loadtest(rest),
+        "replay" => cmd_replay(rest),
         "table1" => {
             println!("{}", metisfl::baselines::capabilities::render_table());
             Ok(())
@@ -111,7 +113,7 @@ fn cmd_controller(raw: &[String]) -> anyhow::Result<()> {
     )?;
     log_info("main", &format!("controller serving on {}", server.endpoint()));
     while !controller.is_shutdown() {
-        std::thread::sleep(std::time::Duration::from_millis(100));
+        Clock::system().sleep(std::time::Duration::from_millis(100));
     }
     log_info("main", "controller received shutdown");
     Ok(())
@@ -159,7 +161,7 @@ fn cmd_aggregator(raw: &[String]) -> anyhow::Result<()> {
         &format!("aggregator {} serving shard on {}", a.get("id").unwrap(), server.endpoint()),
     );
     while !node.is_shutdown() {
-        std::thread::sleep(std::time::Duration::from_millis(100));
+        Clock::system().sleep(std::time::Duration::from_millis(100));
     }
     log_info("main", "aggregator received shutdown");
     Ok(())
@@ -208,7 +210,7 @@ fn cmd_learner(raw: &[String]) -> anyhow::Result<()> {
     learner.register(&server.endpoint())?;
     log_info("main", &format!("learner-{index} serving on {}", server.endpoint()));
     while !learner.is_shutdown() {
-        std::thread::sleep(std::time::Duration::from_millis(100));
+        Clock::system().sleep(std::time::Duration::from_millis(100));
     }
     Ok(())
 }
@@ -286,7 +288,9 @@ fn cmd_loadtest(raw: &[String]) -> anyhow::Result<()> {
     .opt("seed", Some("42"), "run seed (chaos, arrivals, data shards)")
     .opt("chunk", Some("2048"), "stream chunk bytes (chaos faults act on chunks)")
     .opt("quorum", Some("1.0"), "deadline-quorum fraction (1.0 = full barrier)")
+    .opt("record", None, "write a deterministic trace of the run to this file")
     .flag("quick", "CI smoke preset (ignores the sizing options)")
+    .flag("sim", "run on a simulated clock: virtual arrivals/compute/timeouts")
     .flag(
         "verify-equivalence",
         "re-run the surviving fleet without chaos; fail unless the community \
@@ -314,10 +318,13 @@ fn cmd_loadtest(raw: &[String]) -> anyhow::Result<()> {
         cfg.stream_chunk_bytes = env.stream_chunk_bytes;
         cfg.task_timeout_ms = env.task_timeout_ms;
         cfg.seed = env.seed;
+        cfg.wire_codec = env.wire_codec;
         if let TrainerKind::Synthetic { step_time_us, .. } = &env.trainer {
             cfg.step_time_us = *step_time_us;
         }
     }
+    cfg.sim = a.flag("sim");
+    cfg.record = a.get("record").is_some();
     let report = if a.flag("verify-equivalence") {
         let eq = metisfl::harness::verify_chaos_equivalence(&cfg)?;
         println!(
@@ -353,6 +360,46 @@ fn cmd_loadtest(raw: &[String]) -> anyhow::Result<()> {
         "community model: round {} digest {:#018x}",
         report.community_round, report.community_digest
     );
+    if let Some(path) = a.get("record") {
+        let bytes = report
+            .trace
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("run produced no trace despite --record"))?;
+        std::fs::write(path, bytes).map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
+        println!("trace: {} bytes -> {path} (verify with `metisfl replay --trace {path}`)", bytes.len());
+    }
+    Ok(())
+}
+
+fn cmd_replay(raw: &[String]) -> anyhow::Result<()> {
+    let cmd = Command::new(
+        "metisfl replay",
+        "re-drive a recorded controller trace on a simulated clock and verify the \
+         community model reproduces bitwise",
+    )
+    .opt("trace", None, "trace file written by `loadtest --record`")
+    .flag("strict-counters", "also fail on replayable-counter drift (digest always gates)");
+    let a = parse(&cmd, raw)?;
+    let path = a
+        .get("trace")
+        .ok_or_else(|| anyhow::anyhow!("--trace <file> is required"))?;
+    let bytes = std::fs::read(path).map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+    let outcome = metisfl::runtime::trace::replay_trace(&bytes)?;
+    println!(
+        "replayed {} event(s): recorded digest {:#018x}, replayed digest {:#018x}",
+        outcome.events, outcome.recorded_digest, outcome.replayed_digest
+    );
+    let drift = outcome.counter_diffs();
+    for (name, rec, rep) in &drift {
+        println!("counter drift: {name}: recorded {rec}, replayed {rep}");
+    }
+    if let Some(d) = &outcome.divergence {
+        anyhow::bail!("replay diverged: {d}");
+    }
+    if a.flag("strict-counters") && !drift.is_empty() {
+        anyhow::bail!("replay drifted on {} replayable counter(s)", drift.len());
+    }
+    println!("replay OK: community model reproduced bitwise");
     Ok(())
 }
 

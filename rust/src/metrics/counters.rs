@@ -1,0 +1,155 @@
+//! Named monotonic counters behind one registry.
+//!
+//! The degradation/wire counters used to be scattered as ad-hoc
+//! `AtomicU64` fields across `Controller`, `StreamIngest`, and the
+//! driver, and every new counter meant five-file plumbing (field,
+//! increment site, accessor, report field, report fill). A
+//! [`CounterRegistry`] collapses that: components register a counter by
+//! name once (`registry.counter("streams_gced")`), bump the returned
+//! handle on the hot path (one relaxed atomic add — no registry lock),
+//! and [`snapshot`](CounterRegistry::snapshot) hands the whole set to
+//! `FederationReport` / the trace recorder in a single call.
+//!
+//! Counter names are `&'static str` by design: the set of counters is a
+//! closed, code-defined vocabulary (see the `names` module), not
+//! user data.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Stable counter names shared by components, reports, and traces.
+pub mod names {
+    /// Framed-upload streams refused at admission (per-learner cap).
+    pub const STREAMS_REFUSED: &str = "streams_refused";
+    /// Open streams reclaimed by idle/lifetime GC.
+    pub const STREAMS_GCED: &str = "streams_gced";
+    /// Dispatch RPCs abandoned after exhausting the retry budget.
+    pub const RETRY_GIVE_UPS: &str = "retry_give_ups";
+    /// Deltas that fell back to full-f32 sends (missing base).
+    pub const FALLBACK_SENDS: &str = "fallback_sends";
+    /// Encoded bytes received on the upload path.
+    pub const WIRE_BYTES_IN: &str = "wire_bytes_in";
+    /// Raw (decoded) bytes the upload path expanded to.
+    pub const WIRE_BYTES_RAW: &str = "wire_bytes_raw";
+    /// Encoded bytes sent on the dispatch path.
+    pub const DISPATCH_WIRE_SENT: &str = "dispatch_wire_sent";
+    /// Raw bytes the dispatch path would have sent uncoded.
+    pub const DISPATCH_WIRE_RAW: &str = "dispatch_wire_raw";
+    /// Dispatch-side encode operations (encode-once fan-out ⇒ per
+    /// round, not per learner).
+    pub const DISPATCH_ENCODES: &str = "dispatch_encodes";
+    /// Completions that missed their round barrier and were folded in
+    /// with staleness discounting.
+    pub const LATE_FOLDS: &str = "late_folds";
+    /// Upload frames dropped by seq/decode validation.
+    pub const FRAMES_REJECTED: &str = "frames_rejected";
+}
+
+/// A cheap cloneable handle to one named counter. Increments are
+/// relaxed atomics; no lock is taken after registration.
+#[derive(Clone, Debug, Default)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn incr(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Raise the counter to `n` if below it (peak-style counters).
+    pub fn fetch_max(&self, n: u64) {
+        self.0.fetch_max(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Get-or-create registry of named [`Counter`]s.
+#[derive(Default, Debug)]
+pub struct CounterRegistry {
+    counters: Mutex<BTreeMap<&'static str, Counter>>,
+}
+
+impl CounterRegistry {
+    pub fn new() -> Arc<CounterRegistry> {
+        Arc::new(CounterRegistry::default())
+    }
+
+    /// Handle for `name`, registering it (at zero) on first use.
+    pub fn counter(&self, name: &'static str) -> Counter {
+        self.counters.lock().unwrap().entry(name).or_default().clone()
+    }
+
+    /// Point-in-time view of every registered counter.
+    pub fn snapshot(&self) -> BTreeMap<String, u64> {
+        self.counters
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.to_string(), v.get()))
+            .collect()
+    }
+
+    /// Sum another registry's snapshot into an accumulating map
+    /// (report merging across controller + learners).
+    pub fn merge_into(&self, acc: &mut BTreeMap<String, u64>) {
+        for (k, v) in self.snapshot() {
+            *acc.entry(k).or_insert(0) += v;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_handles_share_state() {
+        let reg = CounterRegistry::new();
+        let a = reg.counter(names::LATE_FOLDS);
+        let b = reg.counter(names::LATE_FOLDS);
+        a.add(3);
+        b.incr();
+        assert_eq!(reg.counter(names::LATE_FOLDS).get(), 4);
+    }
+
+    #[test]
+    fn snapshot_sees_all_registered_counters() {
+        let reg = CounterRegistry::new();
+        reg.counter(names::STREAMS_GCED).add(2);
+        reg.counter(names::RETRY_GIVE_UPS);
+        let snap = reg.snapshot();
+        assert_eq!(snap.get(names::STREAMS_GCED), Some(&2));
+        assert_eq!(snap.get(names::RETRY_GIVE_UPS), Some(&0));
+        assert!(!snap.contains_key(names::FALLBACK_SENDS));
+    }
+
+    #[test]
+    fn merge_into_sums_by_name() {
+        let a = CounterRegistry::new();
+        let b = CounterRegistry::new();
+        a.counter(names::WIRE_BYTES_IN).add(10);
+        b.counter(names::WIRE_BYTES_IN).add(5);
+        b.counter(names::FRAMES_REJECTED).incr();
+        let mut acc = BTreeMap::new();
+        a.merge_into(&mut acc);
+        b.merge_into(&mut acc);
+        assert_eq!(acc[names::WIRE_BYTES_IN], 15);
+        assert_eq!(acc[names::FRAMES_REJECTED], 1);
+    }
+
+    #[test]
+    fn fetch_max_keeps_peak() {
+        let reg = CounterRegistry::new();
+        let c = reg.counter("peak_streams");
+        c.fetch_max(3);
+        c.fetch_max(1);
+        assert_eq!(c.get(), 3);
+    }
+}

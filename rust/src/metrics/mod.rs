@@ -7,7 +7,10 @@
 //! accumulates wall-clock samples per op; [`RoundReport`] is the per-round
 //! record the driver returns and the bench harness aggregates.
 
+pub mod counters;
 pub mod histogram;
+
+pub use counters::{Counter, CounterRegistry};
 
 use crate::util::stopwatch::OpTimer;
 use crate::util::Summary;

@@ -19,7 +19,7 @@
 
 use super::{ClientConn, Psk};
 use crate::proto::Message;
-use crate::util::Rng;
+use crate::util::{Clock, Rng};
 use anyhow::{bail, Result};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
@@ -223,11 +223,14 @@ impl ChaosPlan {
 
 /// Dial through a chaos plan: refuse/sever faults apply at connect
 /// time; all other faults wrap the live connection. A no-op plan
-/// returns the raw connection with zero overhead.
+/// returns the raw connection with zero overhead. Drip/stall delays
+/// sleep on `clock`, so simulated runs inject the same faults in
+/// virtual time.
 pub fn connect_with_chaos(
     endpoint: &str,
     psk: Psk,
     plan: &ChaosPlan,
+    clock: &Clock,
 ) -> Result<Box<dyn ClientConn>> {
     if plan.is_noop() {
         return crate::net::connect(endpoint, psk);
@@ -239,7 +242,7 @@ pub fn connect_with_chaos(
         bail!("chaos: peer severed, re-dial refused");
     }
     let inner = crate::net::connect(endpoint, psk)?;
-    Ok(Box::new(ChaosConn { inner, plan: plan.clone() }))
+    Ok(Box::new(ChaosConn { inner, plan: plan.clone(), clock: clock.clone() }))
 }
 
 /// A [`ClientConn`] that injects the faults its [`ChaosPlan`] calls
@@ -248,6 +251,7 @@ pub fn connect_with_chaos(
 pub struct ChaosConn {
     inner: Box<dyn ClientConn>,
     plan: ChaosPlan,
+    clock: Clock,
 }
 
 impl ChaosConn {
@@ -272,7 +276,7 @@ impl ClientConn for ChaosConn {
         self.check_sever()?;
         if let Some(drip) = self.plan.drip {
             if matches!(msg, Message::ModelChunk { .. }) {
-                std::thread::sleep(drip);
+                self.clock.sleep(drip);
             }
             if matches!(msg, Message::ModelStreamEnd { .. }) {
                 // The loris never closes: the receiver's stream stays
@@ -313,7 +317,7 @@ impl ClientConn for ChaosConn {
             bail!("chaos: connection severed");
         }
         if let Some(hold) = self.plan.hold {
-            std::thread::sleep(hold);
+            self.clock.sleep(hold);
             bail!("chaos: stalled peer never replied");
         }
         self.inner.recv()
@@ -365,7 +369,7 @@ mod tests {
         let server = serve("inproc://chaos-noop", Arc::clone(&probe) as _, None).unwrap();
         let plan = ChaosPlan::default();
         assert!(plan.is_noop());
-        let mut conn = connect_with_chaos(&server.endpoint(), None, &plan).unwrap();
+        let mut conn = connect_with_chaos(&server.endpoint(), None, &plan, &Clock::system()).unwrap();
         assert!(matches!(conn.rpc(&hb()).unwrap(), Message::HeartbeatAck { .. }));
         assert_eq!(probe.heartbeats.load(Ordering::SeqCst), 1);
     }
@@ -373,7 +377,7 @@ mod tests {
     #[test]
     fn refuse_dial_fails_at_connect() {
         let plan = ChaosPlan { refuse_dial: true, ..ChaosPlan::default() };
-        let err = connect_with_chaos("inproc://chaos-refused", None, &plan).unwrap_err();
+        let err = connect_with_chaos("inproc://chaos-refused", None, &plan, &Clock::system()).unwrap_err();
         assert!(format!("{err:#}").contains("refused"), "{err:#}");
     }
 
@@ -382,7 +386,7 @@ mod tests {
         let probe = Arc::new(Probe::new());
         let server = serve("inproc://chaos-sever", Arc::clone(&probe) as _, None).unwrap();
         let plan = ChaosPlan { sever_after_sends: Some(2), ..ChaosPlan::default() };
-        let mut conn = connect_with_chaos(&server.endpoint(), None, &plan).unwrap();
+        let mut conn = connect_with_chaos(&server.endpoint(), None, &plan, &Clock::system()).unwrap();
         assert!(conn.rpc(&hb()).is_ok());
         assert!(conn.rpc(&hb()).is_ok());
         let err = conn.rpc(&hb()).unwrap_err();
@@ -390,7 +394,7 @@ mod tests {
         assert!(plan.severed());
         // A re-dial with the same plan shares the sever state: the peer
         // stays dead, the retry policy must give up.
-        let err = connect_with_chaos(&server.endpoint(), None, &plan).unwrap_err();
+        let err = connect_with_chaos(&server.endpoint(), None, &plan, &Clock::system()).unwrap_err();
         assert!(format!("{err:#}").contains("severed"), "{err:#}");
         assert_eq!(probe.heartbeats.load(Ordering::SeqCst), 2);
     }
@@ -400,7 +404,7 @@ mod tests {
         let probe = Arc::new(Probe::new());
         let server = serve("inproc://chaos-dup", Arc::clone(&probe) as _, None).unwrap();
         let plan = ChaosPlan { duplicate: true, ..ChaosPlan::default() };
-        let mut conn = connect_with_chaos(&server.endpoint(), None, &plan).unwrap();
+        let mut conn = connect_with_chaos(&server.endpoint(), None, &plan, &Clock::system()).unwrap();
         // One rpc from the caller's view; the service saw it twice and
         // the reply pairing stayed strict (the next rpc still works).
         assert!(matches!(conn.rpc(&hb()).unwrap(), Message::HeartbeatAck { .. }));
@@ -414,7 +418,7 @@ mod tests {
         let probe = Arc::new(Probe::new());
         let server = serve("inproc://chaos-corrupt", Arc::clone(&probe) as _, None).unwrap();
         let plan = ChaosPlan { corrupt_frames: true, ..ChaosPlan::default() };
-        let mut conn = connect_with_chaos(&server.endpoint(), None, &plan).unwrap();
+        let mut conn = connect_with_chaos(&server.endpoint(), None, &plan, &Clock::system()).unwrap();
         let clean = vec![1u8, 2, 3, 4];
         let msg = Message::ModelChunk { stream_id: 9, seq: 0, bytes: clean.clone() };
         assert!(matches!(conn.rpc(&msg).unwrap(), Message::Ack { ok: true, .. }));
@@ -429,7 +433,7 @@ mod tests {
         let probe = Arc::new(Probe::new());
         let server = serve("inproc://chaos-loris", Arc::clone(&probe) as _, None).unwrap();
         let plan = ChaosPlan { drip: Some(Duration::from_millis(1)), ..ChaosPlan::default() };
-        let mut conn = connect_with_chaos(&server.endpoint(), None, &plan).unwrap();
+        let mut conn = connect_with_chaos(&server.endpoint(), None, &plan, &Clock::system()).unwrap();
         let chunk = Message::ModelChunk { stream_id: 5, seq: 0, bytes: vec![0u8; 8] };
         assert!(conn.rpc(&chunk).is_ok());
         let err = conn.send(&Message::ModelStreamEnd { stream_id: 5, digest: 0 }).unwrap_err();
@@ -441,8 +445,8 @@ mod tests {
         let probe = Arc::new(Probe::new());
         let server = serve("inproc://chaos-stall", Arc::clone(&probe) as _, None).unwrap();
         let plan = ChaosPlan { hold: Some(Duration::from_millis(20)), ..ChaosPlan::default() };
-        let mut conn = connect_with_chaos(&server.endpoint(), None, &plan).unwrap();
-        let start = std::time::Instant::now();
+        let mut conn = connect_with_chaos(&server.endpoint(), None, &plan, &Clock::system()).unwrap();
+        let start = crate::util::Stopwatch::start();
         let err = conn.rpc(&hb()).unwrap_err();
         assert!(start.elapsed() >= Duration::from_millis(20));
         assert!(format!("{err:#}").contains("stalled"), "{err:#}");

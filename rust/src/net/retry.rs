@@ -20,8 +20,8 @@
 //! *what* is retryable — transport faults retry, remote application
 //! errors never do.
 
-use crate::util::Rng;
-use std::time::{Duration, Instant};
+use crate::util::{Clock, Rng, Stopwatch};
+use std::time::Duration;
 
 /// Capped exponential backoff with seeded jitter and a total deadline.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -98,16 +98,19 @@ impl RetryPolicy {
     }
 
     /// Run `op` until it succeeds, a non-retryable error is hit, or the
-    /// attempt/deadline budget is exhausted. `op` receives the 1-based
-    /// attempt number; `retryable` classifies errors (transport faults
-    /// retry, remote application errors must not).
+    /// attempt/deadline budget is exhausted. Elapsed time and backoff
+    /// sleeps run on `clock`, so simulated runs retry in virtual time.
+    /// `op` receives the 1-based attempt number; `retryable` classifies
+    /// errors (transport faults retry, remote application errors must
+    /// not).
     pub fn run<T, E>(
         &self,
+        clock: &Clock,
         rng: &mut Rng,
         mut op: impl FnMut(u32) -> Result<T, E>,
         mut retryable: impl FnMut(&E) -> bool,
     ) -> Result<T, GiveUp<E>> {
-        let start = Instant::now();
+        let start = Stopwatch::start_with(clock);
         let mut attempt = 0u32;
         loop {
             attempt += 1;
@@ -139,7 +142,7 @@ impl RetryPolicy {
                             exhausted: true,
                         });
                     }
-                    std::thread::sleep(delay);
+                    clock.sleep(delay);
                 }
             }
         }
@@ -165,6 +168,7 @@ mod tests {
         let mut rng = Rng::new(1);
         let mut calls = 0u32;
         let out = fast().run(
+            &Clock::system(),
             &mut rng,
             |attempt| {
                 calls += 1;
@@ -181,7 +185,7 @@ mod tests {
     fn gives_up_after_max_attempts_with_evidence() {
         let mut rng = Rng::new(2);
         let err = fast()
-            .run(&mut rng, |_| Err::<(), _>("down"), |_| true)
+            .run(&Clock::system(), &mut rng, |_| Err::<(), _>("down"), |_| true)
             .unwrap_err();
         assert_eq!(err.attempts, 4);
         assert_eq!(err.last_error, "down");
@@ -194,6 +198,7 @@ mod tests {
         let mut calls = 0u32;
         let err = fast()
             .run(
+                &Clock::system(),
                 &mut rng,
                 |_| {
                     calls += 1;
@@ -217,12 +222,37 @@ mod tests {
             jitter_frac: 0.0,
         };
         let mut rng = Rng::new(4);
-        let start = Instant::now();
+        let sw = Stopwatch::start();
         let err = policy
-            .run(&mut rng, |_| Err::<(), _>("down"), |_| true)
+            .run(&Clock::system(), &mut rng, |_| Err::<(), _>("down"), |_| true)
             .unwrap_err();
         assert!(err.attempts < 1000, "deadline must cut the loop short");
-        assert!(start.elapsed() < Duration::from_secs(2));
+        assert!(sw.elapsed() < Duration::from_secs(2));
+    }
+
+    #[test]
+    fn sim_clock_retries_in_virtual_time() {
+        // Backoff sleeps totalling ~100 real seconds complete in well
+        // under a real second on the sim clock, and the deadline is
+        // enforced against virtual elapsed time.
+        let policy = RetryPolicy {
+            max_attempts: 8,
+            base_delay: Duration::from_secs(10),
+            max_delay: Duration::from_secs(60),
+            deadline: Duration::from_secs(45),
+            jitter_frac: 0.0,
+        };
+        let sim = Clock::sim();
+        let mut rng = Rng::new(6);
+        let real = Stopwatch::start();
+        let err = policy
+            .run(&sim, &mut rng, |_| Err::<(), _>("down"), |_| true)
+            .unwrap_err();
+        assert!(err.exhausted);
+        // 10s + 20s sleeps fit the 45s deadline; a third (40s) would not.
+        assert_eq!(err.attempts, 3);
+        assert!(err.elapsed >= Duration::from_secs(30));
+        assert!(real.elapsed() < Duration::from_secs(2));
     }
 
     #[test]

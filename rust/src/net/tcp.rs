@@ -9,7 +9,7 @@ use super::retry::RetryPolicy;
 use super::secure::{confirmation, Handshake, SecureSession};
 use super::{ClientConn, Psk, ServerHandle, Service};
 use crate::proto::Message;
-use crate::util::{log_debug, log_warn, Rng};
+use crate::util::{log_debug, log_warn, Clock, Rng};
 use anyhow::{bail, Context, Result};
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
@@ -103,9 +103,12 @@ impl TcpClient {
         // dial the controller while its listener is still coming up.
         // Refused/unreachable sockets retry; a *handshake* failure on an
         // accepted connection is a peer disagreement and fails at once.
+        // TCP is a real-OS transport: dial pacing is pinned to the
+        // system clock even when the federation runs simulated time
+        // (sim fleets ride the inproc transport).
         let mut rng = entropy_rng();
         let mut stream = RetryPolicy::dial()
-            .run(&mut rng, |_| TcpStream::connect(addr), |_| true)
+            .run(&Clock::system(), &mut rng, |_| TcpStream::connect(addr), |_| true)
             .map_err(|give_up| {
                 anyhow::anyhow!(
                     "connect {addr}: gave up after {} attempts in {:?}: {:?}",
@@ -178,7 +181,7 @@ impl TcpServer {
                             conn_threads.push(h);
                         }
                         Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                            std::thread::sleep(Duration::from_millis(5));
+                            Clock::system().sleep(Duration::from_millis(5));
                         }
                         Err(e) => {
                             log_warn("net", &format!("accept error: {e}"));

@@ -10,9 +10,10 @@
 //! handler validates + digests a chunk and acks immediately, while a
 //! small deferred-decode worker pool decompresses it — decode of chunk
 //! N overlaps chunk N+1's encode and wire transfer (the receive half
-//! of the data plane's double-buffered pipeline). Streams are hashed
-//! to workers (per-stream FIFO queues), so concurrent framed uploads
-//! decompress in parallel instead of serializing behind one thread.
+//! of the data plane's double-buffered pipeline). Pending frames live
+//! in per-stream FIFO queues served round-robin by every worker (work
+//! conservation: a burst of hot framed uploads spreads across the whole
+//! pool instead of hashing onto one worker while others idle).
 //! Decode failures surface as typed `StreamProtocol` errors on the
 //! next chunk or at `End`.
 //! The component embedding the ingest decides what a finished stream
@@ -23,18 +24,23 @@
 //! Hostile-peer hardening (admission control before any buffer
 //! allocation, per-stream and aggregate announced-byte budgets, idle
 //! GC, the dead-flag chunk-race guard) lives here once instead of per
-//! component. Time is injected through a [`Clock`], so the idle-GC
-//! timeout path is deterministic under test.
+//! component. Time is injected through the crate-wide
+//! [`Clock`](crate::util::Clock) handle, so the idle-GC timeout path is
+//! deterministic under test and in simulated runs; degradation counters
+//! live in the embedding component's
+//! [`CounterRegistry`](crate::metrics::CounterRegistry).
 
 use super::{ErrorCode, Message, StreamPurpose, TaskMeta, TaskSpec, TensorLayoutProto};
+use crate::metrics::counters::{names, Counter, CounterRegistry};
 use crate::proto::wire::{fnv1a64, FNV64_INIT};
 use crate::tensor::{ByteOrder, CodecId, DType, Tensor, TensorModel};
-use crate::util::log_debug;
+use crate::util::clock::Timestamp;
+use crate::util::{log_debug, Clock};
 use anyhow::{bail, Result};
-use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
-use std::time::{Duration, Instant};
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
 
 /// Source of decode buffers: the controller plugs its aggregation
 /// [`ScratchArena`](crate::controller::aggregation::ScratchArena) in, so
@@ -47,11 +53,11 @@ pub trait BufferPool: Send + Sync {
     fn recycle(&self, buf: Vec<f32>);
 }
 
-/// Injected time source (tests swap in a deterministic clock).
-pub type Clock = Arc<dyn Fn() -> Instant + Send + Sync>;
-
 /// Wire-payload gauge + byte totals, shared between the ingest front
-/// end (connection handlers) and the deferred-decode worker.
+/// end (connection handlers) and the deferred-decode worker. The byte
+/// totals are registry [`Counter`]s, so `FederationReport` and the
+/// trace recorder read them through the same snapshot as every other
+/// degradation counter.
 struct WireStats {
     /// Wire-payload bytes currently held for model ingest (one-shot
     /// protos being decoded + stream chunks in flight or queued for the
@@ -60,19 +66,19 @@ struct WireStats {
     peak: AtomicUsize,
     /// Total data-plane payload bytes received over streams (wire form,
     /// i.e. compressed for framed codecs, half-size for bf16).
-    recv_wire: AtomicU64,
+    recv_wire: Counter,
     /// f32-equivalent bytes those stream payloads decoded into — the
     /// raw volume the wire codec avoided moving.
-    recv_raw: AtomicU64,
+    recv_raw: Counter,
 }
 
 impl WireStats {
-    fn new() -> WireStats {
+    fn new(counters: &CounterRegistry) -> WireStats {
         WireStats {
             in_flight: AtomicUsize::new(0),
             peak: AtomicUsize::new(0),
-            recv_wire: AtomicU64::new(0),
-            recv_raw: AtomicU64::new(0),
+            recv_wire: counters.counter(names::WIRE_BYTES_IN),
+            recv_raw: counters.counter(names::WIRE_BYTES_RAW),
         }
     }
 
@@ -86,8 +92,8 @@ impl WireStats {
     }
 
     fn note_recv(&self, wire: usize, raw_equiv: usize) {
-        self.recv_wire.fetch_add(wire as u64, Ordering::SeqCst);
-        self.recv_raw.fetch_add(raw_equiv as u64, Ordering::SeqCst);
+        self.recv_wire.add(wire as u64);
+        self.recv_raw.add(raw_equiv as u64);
     }
 }
 
@@ -102,12 +108,175 @@ struct FrameSpan {
     elems: usize,
 }
 
-/// Work item for the deferred-decode worker (framed streams only).
-enum DecodeJob {
-    /// Decompress one frame into its stream's pre-reserved span.
-    Frame { stream: Arc<Mutex<ModelStream>>, bytes: Vec<u8>, span: FrameSpan },
-    /// Flush marker: every job enqueued before it has been processed.
-    Barrier(mpsc::SyncSender<()>),
+/// One frame awaiting deferred decode (framed streams only).
+struct PendingFrame {
+    stream: Arc<Mutex<ModelStream>>,
+    bytes: Vec<u8>,
+    span: FrameSpan,
+}
+
+/// Shared state of the deferred-decode pool: per-stream FIFO queues of
+/// pending frames plus a round-robin service order. Every worker pulls
+/// from the front stream and rotates it to the back, so a burst of hot
+/// framed uploads spreads across the whole pool (work conservation)
+/// while each stream's own frames stay FIFO-queued. Frames *may*
+/// decode out of order or concurrently — their destination spans were
+/// fixed at seq validation, so arrival order at a worker is irrelevant.
+struct DecodeQueues {
+    /// Streams with pending frames, service order. Invariant: a stream
+    /// id appears here exactly once iff it has an entry in `jobs`.
+    order: VecDeque<u64>,
+    jobs: HashMap<u64, VecDeque<PendingFrame>>,
+    /// Frames currently being decoded, per stream (flush barrier).
+    active: HashMap<u64, usize>,
+    /// Total queued frames (backpressure against `DecodePool::cap`).
+    queued: usize,
+    shutdown: bool,
+}
+
+/// The deferred-decode worker pool's shared half (workers hold an
+/// `Arc`; the [`StreamIngest`] keeps the join handles).
+struct DecodePool {
+    m: Mutex<DecodeQueues>,
+    /// Signals workers: a frame was queued (or shutdown).
+    work: Condvar,
+    /// Signals flushers: a stream's last pending/active frame finished.
+    done: Condvar,
+    /// Signals enqueuers: queue depth dropped below `cap`.
+    space: Condvar,
+    /// Max frames queued across all streams — the pool-wide double
+    /// buffer that bounds receiver memory and provides the chunk-ack
+    /// backpressure a slow decode is supposed to exert.
+    cap: usize,
+}
+
+impl DecodePool {
+    fn new(cap: usize) -> DecodePool {
+        DecodePool {
+            m: Mutex::new(DecodeQueues {
+                order: VecDeque::new(),
+                jobs: HashMap::new(),
+                active: HashMap::new(),
+                queued: 0,
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+            space: Condvar::new(),
+            cap,
+        }
+    }
+
+    /// Queue one frame for `stream_id`, blocking while the pool is at
+    /// capacity (the backpressure that stalls the sender's next chunk
+    /// ack). Returns false if the pool is shutting down (the frame was
+    /// not queued).
+    fn enqueue(&self, stream_id: u64, frame: PendingFrame) -> bool {
+        let mut g = self.m.lock().unwrap();
+        while g.queued >= self.cap && !g.shutdown {
+            g = self.space.wait(g).unwrap();
+        }
+        if g.shutdown {
+            return false;
+        }
+        let q = g.jobs.entry(stream_id).or_default();
+        let newly = q.is_empty();
+        q.push_back(frame);
+        g.queued += 1;
+        if newly {
+            g.order.push_back(stream_id);
+        }
+        drop(g);
+        self.work.notify_one();
+        true
+    }
+
+    /// Drop every *queued* frame for `stream_id` (kill path), releasing
+    /// its wire-gauge bytes. Frames already mid-decode finish against
+    /// the dead flag.
+    fn prune(&self, stream_id: u64, stats: &WireStats) {
+        let mut g = self.m.lock().unwrap();
+        if let Some(q) = g.jobs.remove(&stream_id) {
+            g.queued -= q.len();
+            g.order.retain(|id| *id != stream_id);
+            for f in q {
+                stats.release(f.bytes.len());
+            }
+            drop(g);
+            self.space.notify_all();
+            self.done.notify_all();
+        }
+    }
+
+    /// Wait until `stream_id` has no queued or in-flight frames (every
+    /// failure it will ever defer has landed) — End's barrier before
+    /// the completeness/digest verdict. Unlike a pool-wide barrier,
+    /// this never waits on *other* streams' backlogs.
+    fn flush_stream(&self, stream_id: u64) {
+        let mut g = self.m.lock().unwrap();
+        while !g.shutdown
+            && (g.jobs.contains_key(&stream_id) || g.active.contains_key(&stream_id))
+        {
+            g = self.done.wait(g).unwrap();
+        }
+    }
+
+    fn worker_loop(self: &Arc<Self>, stats: &WireStats, clock: &Clock) {
+        loop {
+            let (id, frame) = {
+                let mut g = self.m.lock().unwrap();
+                loop {
+                    if g.shutdown {
+                        return;
+                    }
+                    if let Some(id) = g.order.pop_front() {
+                        let q = g.jobs.get_mut(&id).expect("queued stream has jobs");
+                        let frame = q.pop_front().expect("queued stream has a frame");
+                        if q.is_empty() {
+                            g.jobs.remove(&id);
+                        } else {
+                            // Rotate: the next worker serves the next
+                            // stream before this one's next frame.
+                            g.order.push_back(id);
+                        }
+                        g.queued -= 1;
+                        *g.active.entry(id).or_insert(0) += 1;
+                        self.space.notify_all();
+                        break (id, frame);
+                    }
+                    g = self.work.wait(g).unwrap();
+                }
+            };
+            {
+                // Busy for the decode: simulated time must not jump
+                // past a deadline while a completion's frames are
+                // still decompressing.
+                let _busy = clock.busy();
+                let mut s = frame.stream.lock().unwrap();
+                if !s.dead && s.deferred.is_none() {
+                    if let Err(e) = s.decode_reserved(&frame.span, &frame.bytes) {
+                        s.deferred = Some(e);
+                    }
+                }
+            }
+            stats.release(frame.bytes.len());
+            let mut g = self.m.lock().unwrap();
+            let a = g.active.get_mut(&id).expect("active entry");
+            *a -= 1;
+            if *a == 0 {
+                g.active.remove(&id);
+            }
+            drop(g);
+            self.done.notify_all();
+        }
+    }
+
+    fn shutdown(&self) {
+        self.m.lock().unwrap().shutdown = true;
+        self.work.notify_all();
+        self.space.notify_all();
+        self.done.notify_all();
+    }
 }
 
 /// Caps on the inbound data plane, so a buggy or hostile peer cannot
@@ -225,13 +394,13 @@ pub struct ModelStream {
     stats: Arc<WireStats>,
     /// Pool to return `bufs` to if the stream dies.
     pool: Option<Arc<dyn BufferPool>>,
-    /// Last `Begin`/`Chunk` arrival; idle streams past the limit are
-    /// garbage-collected.
-    last_activity: Instant,
+    /// Last `Begin`/`Chunk` arrival (on the ingest's clock); idle
+    /// streams past the limit are garbage-collected.
+    last_activity: Timestamp,
     /// When `Begin` was admitted; streams alive past
     /// `max_stream_lifetime` are reclaimed even if chunks keep
     /// trickling in (the slow-loris guard).
-    opened_at: Instant,
+    opened_at: Timestamp,
     /// Set by [`ModelStream::recycle`]: the buffers are gone. A chunk
     /// handler that raced the close (it cloned the registry `Arc`
     /// before removal) must fail gracefully instead of indexing the
@@ -430,23 +599,26 @@ pub struct StreamIngest {
     /// buffer" the data plane eliminates; tests assert the streamed
     /// bound.
     stats: Arc<WireStats>,
-    /// Deferred-decode worker pool (framed streams): each worker owns a
-    /// depth-1 channel — one frame decompressing + one queued per
-    /// worker, the double buffer that overlaps decode with the next
-    /// chunk's wire transfer. Streams map to workers by `stream_id`, so
-    /// one stream's frames stay FIFO on one queue while *concurrent*
-    /// framed uploads decompress on different workers instead of
-    /// serializing behind a single thread (and coupling each other's
-    /// chunk acks through its backpressure). Spawned lazily on the
-    /// first framed chunk.
-    decode_pool: Mutex<Option<Vec<mpsc::SyncSender<DecodeJob>>>>,
-    clock: Mutex<Clock>,
+    /// Deferred-decode worker pool (framed streams): per-stream FIFO
+    /// queues served round-robin by every worker, with a pool-wide
+    /// queue-depth cap for backpressure — one slow decompression never
+    /// idles the other workers, and a burst of hot framed uploads
+    /// spreads across the whole pool. Spawned lazily on the first
+    /// framed chunk.
+    decode_pool: Mutex<Option<Arc<DecodePool>>>,
+    decode_workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    /// Injected time source: idle/lifetime GC deadlines run on this
+    /// clock (real or simulated).
+    clock: Clock,
+    /// Shared degradation counters (the embedding component's registry,
+    /// which `FederationReport` and the trace recorder snapshot).
+    counters: Arc<CounterRegistry>,
     /// Streams turned away by admission control (slot cap, aggregate
     /// announced-byte budget, raced slot) — the degradation signal a
     /// chaos run reads back through `FederationReport`.
-    streams_refused: AtomicU64,
+    streams_refused: Counter,
     /// Streams reclaimed by the idle/lifetime GC.
-    streams_gced: AtomicU64,
+    streams_gced: Counter,
 }
 
 /// Size of the deferred-decode worker pool: a few threads cover any
@@ -463,28 +635,44 @@ impl Default for StreamIngest {
 }
 
 impl StreamIngest {
+    /// System clock, private counter registry. Components embedding an
+    /// ingest in a clocked/reported context use
+    /// [`StreamIngest::with_clock`] instead.
     pub fn new(limits: IngestLimits) -> StreamIngest {
+        StreamIngest::with_clock(limits, Clock::system(), CounterRegistry::new())
+    }
+
+    /// The single injection point: the embedding component hands the
+    /// ingest its [`Clock`] (GC deadlines follow real or simulated
+    /// time) and its [`CounterRegistry`] (refused/GC'd-stream and wire
+    /// byte counters land in the same snapshot as everything else).
+    /// This replaces the old per-module `set_clock` fake-clock seam.
+    pub fn with_clock(
+        limits: IngestLimits,
+        clock: Clock,
+        counters: Arc<CounterRegistry>,
+    ) -> StreamIngest {
         StreamIngest {
             limits,
             streams: Mutex::new(HashMap::new()),
             open_stream_bytes: AtomicUsize::new(0),
-            stats: Arc::new(WireStats::new()),
+            stats: Arc::new(WireStats::new(&counters)),
             decode_pool: Mutex::new(None),
-            clock: Mutex::new(Arc::new(Instant::now) as Clock),
-            streams_refused: AtomicU64::new(0),
-            streams_gced: AtomicU64::new(0),
+            decode_workers: Mutex::new(Vec::new()),
+            clock,
+            streams_refused: counters.counter(names::STREAMS_REFUSED),
+            streams_gced: counters.counter(names::STREAMS_GCED),
+            counters,
         }
     }
 
-    /// Swap the time source (deterministic-clock tests; the default is
-    /// `Instant::now`).
-    pub fn set_clock(&self, clock: Clock) {
-        *self.clock.lock().unwrap() = clock;
+    /// The registry this ingest reports into.
+    pub fn counters(&self) -> &Arc<CounterRegistry> {
+        &self.counters
     }
 
-    fn now(&self) -> Instant {
-        let clock = self.clock.lock().unwrap();
-        (clock.as_ref())()
+    fn now(&self) -> Timestamp {
+        self.clock.now()
     }
 
     // ---- wire-memory gauge -------------------------------------------
@@ -508,14 +696,14 @@ impl StreamIngest {
     /// Total stream payload bytes received so far, in wire form
     /// (compressed for framed codecs, half-size for bf16).
     pub fn recv_wire_bytes(&self) -> u64 {
-        self.stats.recv_wire.load(Ordering::SeqCst)
+        self.stats.recv_wire.get()
     }
 
     /// f32-equivalent bytes the received stream payloads decoded into —
     /// `recv_raw_bytes - recv_wire_bytes` is what the wire codec kept
     /// off the network.
     pub fn recv_raw_bytes(&self) -> u64 {
-        self.stats.recv_raw.load(Ordering::SeqCst)
+        self.stats.recv_raw.get()
     }
 
     /// Streams currently open.
@@ -534,73 +722,44 @@ impl StreamIngest {
     /// Streams refused by admission control (slot cap, announced-byte
     /// budget, raced slot).
     pub fn streams_refused(&self) -> u64 {
-        self.streams_refused.load(Ordering::SeqCst)
+        self.streams_refused.get()
     }
 
     /// Streams reclaimed by the idle/lifetime GC.
     pub fn streams_gced(&self) -> u64 {
-        self.streams_gced.load(Ordering::SeqCst)
+        self.streams_gced.get()
     }
 
     // ---- deferred-decode pipeline (framed codecs) --------------------
 
-    /// Hand of the decode-worker channel serving `stream_id`, spawning
-    /// the pool on first use. The workers own the back half of the
+    /// Handle on the deferred-decode pool, spawning it (and its
+    /// workers) on first use. The workers own the back half of the
     /// two-stage receive pipeline: a connection handler validates /
     /// digests chunk N+1 and acks while a worker is still
-    /// decompressing chunk N. A stream always maps to the same worker
-    /// (per-stream FIFO queue); distinct streams spread across the
-    /// pool, so concurrent framed uploads decompress in parallel.
-    fn decode_tx(&self, stream_id: u64) -> mpsc::SyncSender<DecodeJob> {
+    /// decompressing chunk N. Per-stream FIFO queues are served
+    /// round-robin by *every* worker, so a burst of hot framed uploads
+    /// spreads across the whole pool instead of hashing onto one
+    /// worker while the others idle.
+    fn pool(&self) -> Arc<DecodePool> {
         let mut guard = self.decode_pool.lock().unwrap();
-        let pool = guard.get_or_insert_with(|| {
-            (0..decode_pool_size())
-                .map(|i| {
-                    let (tx, rx) = mpsc::sync_channel::<DecodeJob>(1);
-                    let stats = Arc::clone(&self.stats);
-                    std::thread::Builder::new()
-                        .name(format!("metisfl-ingest-decode-{i}"))
-                        .spawn(move || {
-                            while let Ok(job) = rx.recv() {
-                                match job {
-                                    DecodeJob::Frame { stream, bytes, span } => {
-                                        {
-                                            let mut s = stream.lock().unwrap();
-                                            if !s.dead && s.deferred.is_none() {
-                                                if let Err(e) = s.decode_reserved(&span, &bytes)
-                                                {
-                                                    s.deferred = Some(e);
-                                                }
-                                            }
-                                        }
-                                        stats.release(bytes.len());
-                                    }
-                                    DecodeJob::Barrier(done) => {
-                                        let _ = done.send(());
-                                    }
-                                }
-                            }
-                        })
-                        .expect("spawn ingest decode worker");
-                    tx
-                })
-                .collect::<Vec<_>>()
-        });
-        pool[(stream_id % pool.len() as u64) as usize].clone()
-    }
-
-    /// Wait until every frame enqueued so far has been decoded (or
-    /// failed into its stream's deferred slot) on every worker. No-op
-    /// when the pool was never spawned.
-    fn flush_decodes(&self) {
-        let pool = self.decode_pool.lock().unwrap().clone();
-        let Some(pool) = pool else { return };
-        for tx in pool {
-            let (done_tx, done_rx) = mpsc::sync_channel(1);
-            if tx.send(DecodeJob::Barrier(done_tx)).is_ok() {
-                let _ = done_rx.recv();
-            }
+        if let Some(pool) = guard.as_ref() {
+            return Arc::clone(pool);
         }
+        let pool = Arc::new(DecodePool::new(decode_pool_size() * 2));
+        let mut workers = self.decode_workers.lock().unwrap();
+        for i in 0..decode_pool_size() {
+            let p = Arc::clone(&pool);
+            let stats = Arc::clone(&self.stats);
+            let clock = self.clock.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("metisfl-ingest-decode-{i}"))
+                    .spawn(move || p.worker_loop(&stats, &clock))
+                    .expect("spawn ingest decode worker"),
+            );
+        }
+        *guard = Some(Arc::clone(&pool));
+        pool
     }
 
     // ---- protocol steps ----------------------------------------------
@@ -690,7 +849,7 @@ impl StreamIngest {
         {
             let streams = self.streams.lock().unwrap();
             if streams.len() >= self.limits.max_open_streams {
-                self.streams_refused.fetch_add(1, Ordering::SeqCst);
+                self.streams_refused.incr();
                 return Message::error(
                     ErrorCode::StreamProtocol,
                     format!("too many open streams (max {})", self.limits.max_open_streams),
@@ -706,7 +865,7 @@ impl StreamIngest {
         let budget = self.open_stream_bytes.fetch_add(expected, Ordering::SeqCst) + expected;
         if budget > self.limits.max_total_stream_bytes {
             self.open_stream_bytes.fetch_sub(expected, Ordering::SeqCst);
-            self.streams_refused.fetch_add(1, Ordering::SeqCst);
+            self.streams_refused.incr();
             return Message::error(
                 ErrorCode::StreamProtocol,
                 format!(
@@ -762,7 +921,7 @@ impl StreamIngest {
             drop(streams);
             stream.recycle();
             self.open_stream_bytes.fetch_sub(expected, Ordering::SeqCst);
-            self.streams_refused.fetch_add(1, Ordering::SeqCst);
+            self.streams_refused.incr();
             return Message::error(
                 ErrorCode::StreamProtocol,
                 format!("stream id {:#x} rejected (slot raced away)", args.stream_id),
@@ -824,18 +983,17 @@ impl StreamIngest {
         };
         match result {
             Ok(Some(span)) => {
-                // The worker releases the gauge once the frame is
-                // decoded; a blocked send here is the pipeline's
-                // backpressure — scoped to this stream's worker, so one
-                // slow decompression does not couple an unrelated
-                // upload's chunk acks.
-                let tx = self.decode_tx(stream_id);
+                // The pool releases the gauge once the frame is
+                // decoded; a blocked enqueue here (pool at its
+                // queue-depth cap) is the pipeline's backpressure —
+                // the stall a slow decode is supposed to exert on the
+                // sender's next chunk ack.
                 let held = bytes.len();
-                let job = DecodeJob::Frame { stream: Arc::clone(stream), bytes, span };
-                if tx.send(job).is_err() {
+                let frame = PendingFrame { stream: Arc::clone(stream), bytes, span };
+                if !self.pool().enqueue(stream_id, frame) {
                     self.wire_release(held);
                     self.kill(stream_id);
-                    return Message::error(ErrorCode::Internal, "ingest decode worker gone");
+                    return Message::error(ErrorCode::Internal, "ingest decode pool gone");
                 }
                 Message::Ack { task_id: stream_id, ok: true }
             }
@@ -855,9 +1013,11 @@ impl StreamIngest {
     /// model back to the embedding component. `Err` carries the reply to
     /// send the peer (the stream is already torn down).
     pub fn end(&self, stream_id: u64, digest: u64) -> std::result::Result<FinishedStream, Message> {
-        // Framed streams decode through the worker: drain it first so
-        // every queued frame (and any failure it deferred) has landed
-        // before the completeness/digest verdict below.
+        // Framed streams decode through the pool: drain THIS stream's
+        // queue first so every queued frame (and any failure it
+        // deferred) has landed before the completeness/digest verdict
+        // below. The barrier is per-stream — End never waits on some
+        // other upload's decode backlog.
         let framed = self
             .streams
             .lock()
@@ -865,7 +1025,12 @@ impl StreamIngest {
             .get(&stream_id)
             .map(|s| s.lock().unwrap().framed);
         match framed {
-            Some(true) => self.flush_decodes(),
+            Some(true) => {
+                let pool = self.decode_pool.lock().unwrap().clone();
+                if let Some(pool) = pool {
+                    pool.flush_stream(stream_id);
+                }
+            }
             Some(false) => {}
             None => {
                 return Err(Message::error(
@@ -946,9 +1111,8 @@ impl StreamIngest {
                 .iter()
                 .filter(|(_, s)| {
                     let s = s.lock().unwrap();
-                    now.saturating_duration_since(s.last_activity) > self.limits.idle_timeout
-                        || now.saturating_duration_since(s.opened_at)
-                            > self.limits.max_stream_lifetime
+                    now.saturating_sub(s.last_activity) > self.limits.idle_timeout
+                        || now.saturating_sub(s.opened_at) > self.limits.max_stream_lifetime
                 })
                 .map(|(id, _)| *id)
                 .collect()
@@ -958,13 +1122,35 @@ impl StreamIngest {
             log_debug("ingest", &format!("reclaiming idle/expired stream {id:#x}"));
             self.kill(id);
         }
-        self.streams_gced.fetch_add(n as u64, Ordering::SeqCst);
+        self.streams_gced.add(n as u64);
+        n
+    }
+
+    /// Forcibly reclaim every open stream regardless of its deadlines —
+    /// the harness's end-of-run wedge gate for fleets that finish with
+    /// half-open streams (peers that died mid-upload), without faking
+    /// time past the idle window. Returns how many were reclaimed.
+    pub fn gc_force(&self) -> usize {
+        let ids: Vec<u64> = self.streams.lock().unwrap().keys().copied().collect();
+        let n = ids.len();
+        for id in ids {
+            log_debug("ingest", &format!("force-reclaiming stream {id:#x}"));
+            self.kill(id);
+        }
+        self.streams_gced.add(n as u64);
         n
     }
 
     /// Drop a failed/abandoned stream, recycle its buffers, and return
-    /// its announced bytes to the admission budget.
+    /// its announced bytes to the admission budget. Frames it still has
+    /// queued on the decode pool are pruned (their gauge bytes
+    /// released); a frame already mid-decode finishes against the dead
+    /// flag and releases its own bytes.
     pub fn kill(&self, stream_id: u64) {
+        let pool = self.decode_pool.lock().unwrap().clone();
+        if let Some(pool) = pool {
+            pool.prune(stream_id, &self.stats);
+        }
         if let Some(stream) = self.streams.lock().unwrap().remove(&stream_id) {
             let mut s = stream.lock().unwrap();
             self.open_stream_bytes.fetch_sub(s.expected, Ordering::SeqCst);
@@ -995,6 +1181,18 @@ impl StreamIngest {
                 .unwrap_or(0)
         };
         self.chunk_into(&hold.0, id, seq, bytes)
+    }
+}
+
+impl Drop for StreamIngest {
+    fn drop(&mut self) {
+        let pool = self.decode_pool.lock().unwrap().take();
+        if let Some(pool) = pool {
+            pool.shutdown();
+        }
+        for h in self.decode_workers.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
     }
 }
 
@@ -1147,11 +1345,10 @@ mod tests {
 
     #[test]
     fn idle_gc_uses_injected_clock() {
-        let ingest = StreamIngest::default();
-        let origin = Instant::now();
-        let offset = Arc::new(Mutex::new(Duration::ZERO));
-        let o = Arc::clone(&offset);
-        ingest.set_clock(Arc::new(move || origin + *o.lock().unwrap()));
+        let clock = Clock::sim();
+        let ingest =
+            StreamIngest::with_clock(IngestLimits::default(), clock.clone(), CounterRegistry::new());
+        let t0 = clock.now();
 
         let m = model(1);
         let begin = StreamBegin {
@@ -1169,12 +1366,11 @@ mod tests {
         assert!(matches!(ingest.begin(begin, None, None), Message::Ack { ok: true, .. }));
         assert_eq!(ingest.open_streams(), 1);
         // Just inside the timeout: survives.
-        *offset.lock().unwrap() = IngestLimits::default().idle_timeout;
+        clock.advance_to(t0 + IngestLimits::default().idle_timeout);
         assert_eq!(ingest.gc_idle(), 0);
         assert_eq!(ingest.open_streams(), 1);
         // One nanosecond past: reclaimed.
-        *offset.lock().unwrap() =
-            IngestLimits::default().idle_timeout + Duration::from_nanos(1);
+        clock.advance_to(t0 + IngestLimits::default().idle_timeout + Duration::from_nanos(1));
         assert_eq!(ingest.gc_idle(), 1);
         assert_eq!(ingest.open_streams(), 0);
         // Budget returned: the same announced bytes admit again.
@@ -1327,10 +1523,11 @@ mod tests {
     #[test]
     fn concurrent_framed_streams_decode_on_the_worker_pool() {
         // Two framed uploads interleaved chunk by chunk on one ingest:
-        // their stream ids map to (usually different) pool workers, and
-        // both must decode bit-exactly — the span reservation done at
-        // seq-validation time keeps each stream's frames at the right
-        // offsets no matter which worker decompresses them.
+        // the pool serves their per-stream queues round-robin across
+        // all workers, and both must decode bit-exactly — the span
+        // reservation done at seq-validation time keeps each stream's
+        // frames at the right offsets no matter which worker
+        // decompresses them, in whatever order.
         let base = Arc::new(model(31));
         let mut m1 = (*base).clone();
         let mut m2 = (*base).clone();
@@ -1418,11 +1615,10 @@ mod tests {
         // A peer sending one chunk per idle interval keeps
         // `last_activity` forever fresh, so the idle check alone never
         // fires — the total-lifetime deadline must reclaim it anyway.
-        let ingest = StreamIngest::default();
-        let origin = Instant::now();
-        let offset = Arc::new(Mutex::new(Duration::ZERO));
-        let o = Arc::clone(&offset);
-        ingest.set_clock(Arc::new(move || origin + *o.lock().unwrap()));
+        let clock = Clock::sim();
+        let ingest =
+            StreamIngest::with_clock(IngestLimits::default(), clock.clone(), CounterRegistry::new());
+        let t0 = clock.now();
         let limits = IngestLimits::default();
         assert!(limits.max_stream_lifetime >= limits.idle_timeout);
 
@@ -1446,7 +1642,7 @@ mod tests {
         let mut elapsed = Duration::ZERO;
         while elapsed < limits.max_stream_lifetime {
             elapsed += limits.idle_timeout;
-            *offset.lock().unwrap() = elapsed;
+            clock.advance_to(t0 + elapsed);
             assert!(matches!(
                 ingest.chunk(51, seq, vec![0u8; 4]),
                 Message::Ack { ok: true, .. }
@@ -1458,7 +1654,7 @@ mod tests {
         }
         // …but one nanosecond past the lifetime cap the stream is
         // reclaimed even though its last chunk just arrived.
-        *offset.lock().unwrap() = limits.max_stream_lifetime + Duration::from_nanos(1);
+        clock.advance_to(t0 + limits.max_stream_lifetime + Duration::from_nanos(1));
         assert!(matches!(ingest.chunk(51, seq, vec![0u8; 4]), Message::Ack { ok: true, .. }));
         assert_eq!(ingest.gc_idle(), 1);
         assert_eq!(ingest.open_streams(), 0);
@@ -1506,11 +1702,10 @@ mod tests {
                 *v += 0.125;
             }
         }
-        let ingest = StreamIngest::default();
-        let origin = Instant::now();
-        let offset = Arc::new(Mutex::new(Duration::ZERO));
-        let o = Arc::clone(&offset);
-        ingest.set_clock(Arc::new(move || origin + *o.lock().unwrap()));
+        let clock = Clock::sim();
+        let ingest =
+            StreamIngest::with_clock(IngestLimits::default(), clock.clone(), CounterRegistry::new());
+        let t0 = clock.now();
         let pool = Arc::new(CountingPool {
             taken: AtomicUsize::new(0),
             recycled: AtomicUsize::new(0),
@@ -1553,18 +1748,19 @@ mod tests {
                 Message::Ack { ok: true, .. }
             ));
         }
-        // The deferred worker finishes the queued frames: the wire
+        // The deferred pool finishes the queued frames: the wire
         // gauge drains to zero even though the stream never closed.
-        let deadline = Instant::now() + Duration::from_secs(10);
+        // (Real-time deadline — the pool workers run on OS threads
+        // regardless of the ingest's virtual clock.)
+        let sw = crate::util::Stopwatch::start();
         while ingest.wire_in_flight_bytes() != 0 {
-            assert!(Instant::now() < deadline, "wire gauge never drained");
+            assert!(sw.elapsed() < Duration::from_secs(10), "wire gauge never drained");
             std::thread::yield_now();
         }
         assert!(ingest.peak_wire_bytes() > 0, "frames were held at some point");
         // A handler clones the Arc just before the GC wins the race…
         let hold = ingest.hold_for_test(61).unwrap();
-        *offset.lock().unwrap() =
-            IngestLimits::default().idle_timeout + Duration::from_nanos(1);
+        clock.advance_to(t0 + IngestLimits::default().idle_timeout + Duration::from_nanos(1));
         assert_eq!(ingest.gc_idle(), 1, "half-open stream must be reclaimed");
         // …and its late chunk gets the typed error.
         match ingest.chunk_into_held(&hold, 2, vec![1u8, 4, 0]) {

@@ -18,6 +18,8 @@
 //! payloads. One compile per artifact per process (cached), shared by all
 //! simulated learners.
 
+pub mod trace;
+
 use crate::config::ModelSpec;
 use crate::json::{self, Value};
 use crate::learner::{Dataset, Trainer};

@@ -1,0 +1,534 @@
+//! Deterministic trace record/replay for the controller.
+//!
+//! A recording controller appends every event that can influence its
+//! state to a compact binary trace: raw inbound frames (registrations,
+//! completions, stream chunks — byte-exact), plus the scheduler-side
+//! decisions that do not arrive over the wire (round open/close,
+//! aggregation, async task marks, delta-base installs). The trace embeds
+//! the run's full environment (via [`FederationEnv::to_yaml_source`])
+//! and ends with a footer holding the final community-model digest and a
+//! whole-registry counter snapshot.
+//!
+//! [`replay`] re-drives a fresh controller from the trace on a
+//! [`Clock::sim`] virtual clock: each event's recorded tick advances the
+//! clock, inbound frames go through the ordinary [`Service::handle`]
+//! path, and scheduler events call the same internal entry points the
+//! live schedulers used. Because the recorder lock serializes the live
+//! timeline (see `Controller::handle`), applying the same events in the
+//! same order MUST reproduce the same state — the replay asserts the
+//! community digest bitwise and cross-checks round membership, making
+//! any nondeterminism in the control or data plane a loud, diffable
+//! failure instead of a heisenbug.
+//!
+//! ## Wire format (`MFTR1`)
+//!
+//! ```text
+//! "MFTR1\n"                                 magic
+//! u32 env_len, env_len bytes                env YAML source
+//! repeated events:
+//!   u8 kind, u64 tick_nanos, u32 payload_len, payload
+//! footer (kind 0xFF, must be last):
+//!   u64 community_digest
+//!   u32 n, n × { u32 key_len, key, u64 value }
+//! ```
+//!
+//! All integers are little-endian. Id lists inside payloads are
+//! `u32 count` followed by `count` length-prefixed strings.
+
+use crate::config::FederationEnv;
+use crate::controller::Controller;
+use crate::metrics::counters::names;
+use crate::net::Service;
+use crate::proto::wire::{fnv1a64, FNV64_INIT};
+use crate::proto::Message;
+use crate::tensor::TensorModel;
+use crate::util::clock::{Clock, Timestamp};
+use crate::util::log_debug;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Trace file magic (format version 1).
+pub const TRACE_MAGIC: &[u8; 6] = b"MFTR1\n";
+
+const EV_INBOUND: u8 = 0;
+const EV_ROUND_OPEN: u8 = 2;
+const EV_ROUND_CLOSE: u8 = 3;
+const EV_AGGREGATE: u8 = 4;
+const EV_MARK_OUTSTANDING: u8 = 5;
+const EV_BASE_SET: u8 = 6;
+const EV_FOOTER: u8 = 0xFF;
+
+/// Community snapshots kept during replay for `BaseSet` resolution: the
+/// live base inserts always reference a model that *was* the community
+/// at the recorded round, so a short history suffices (a synchronous
+/// run only ever needs the latest one).
+const BASE_HISTORY_CAP: usize = 32;
+
+/// Counters a replay is expected to reproduce exactly: everything
+/// driven purely by the recorded event order. Dispatch-side counters
+/// (`dispatch_*`, retry give-ups, fallback sends) are excluded — a
+/// replay applies the *effects* of dispatch, it never redials the
+/// network that produced them.
+pub const REPLAYABLE_COUNTERS: &[&str] = &[
+    names::STREAMS_REFUSED,
+    names::STREAMS_GCED,
+    names::LATE_FOLDS,
+    names::WIRE_BYTES_IN,
+    names::WIRE_BYTES_RAW,
+    names::FRAMES_REJECTED,
+];
+
+/// Bitwise-comparable digest of a model: tensor names + f32 bit
+/// patterns, folded through FNV-1a. This is the identity the trace
+/// footer records and the chaos-equivalence / replay gates compare.
+pub fn model_digest(m: &TensorModel) -> u64 {
+    let mut d = FNV64_INIT;
+    for t in &m.tensors {
+        d = fnv1a64(d, t.name.as_bytes());
+        let mut bytes = Vec::with_capacity(t.data.len() * 4);
+        for v in &t.data {
+            bytes.extend_from_slice(&v.to_bits().to_le_bytes());
+        }
+        d = fnv1a64(d, &bytes);
+    }
+    d
+}
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_u32(buf, s.len() as u32);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+fn put_ids(buf: &mut Vec<u8>, ids: &[String]) {
+    put_u32(buf, ids.len() as u32);
+    for id in ids {
+        put_str(buf, id);
+    }
+}
+
+/// Append-only event recorder. The controller owns one behind a mutex
+/// whose guard is held across each recorded event *and* the state
+/// mutation it describes, so the buffer order is the controller's
+/// observed timeline.
+pub struct TraceRecorder {
+    buf: Vec<u8>,
+    events: u64,
+}
+
+impl TraceRecorder {
+    pub fn new(env_source: &str) -> TraceRecorder {
+        let mut buf = Vec::with_capacity(env_source.len() + 4096);
+        buf.extend_from_slice(TRACE_MAGIC);
+        put_u32(&mut buf, env_source.len() as u32);
+        buf.extend_from_slice(env_source.as_bytes());
+        TraceRecorder { buf, events: 0 }
+    }
+
+    fn event(&mut self, kind: u8, tick: Timestamp, payload: &[u8]) {
+        self.buf.push(kind);
+        put_u64(&mut self.buf, tick.as_nanos() as u64);
+        put_u32(&mut self.buf, payload.len() as u32);
+        self.buf.extend_from_slice(payload);
+        self.events += 1;
+    }
+
+    /// Events recorded so far (footer excluded).
+    pub fn events(&self) -> u64 {
+        self.events
+    }
+
+    /// One raw inbound frame, byte-exact as it arrived on the wire.
+    pub fn inbound(&mut self, tick: Timestamp, wire: &[u8]) {
+        self.event(EV_INBOUND, tick, wire);
+    }
+
+    /// Scheduler opened `round` expecting `ids`.
+    pub fn round_open(&mut self, tick: Timestamp, round: u64, ids: &[String]) {
+        let mut p = Vec::with_capacity(12 + ids.len() * 16);
+        put_u64(&mut p, round);
+        put_ids(&mut p, ids);
+        self.event(EV_ROUND_OPEN, tick, &p);
+    }
+
+    /// Round barrier closed; `arrived` (sorted) made the cut.
+    pub fn round_close(&mut self, tick: Timestamp, round: u64, arrived: &[String]) {
+        let mut p = Vec::with_capacity(12 + arrived.len() * 16);
+        put_u64(&mut p, round);
+        put_ids(&mut p, arrived);
+        self.event(EV_ROUND_CLOSE, tick, &p);
+    }
+
+    /// Scheduler aggregated `ids`' stored models into round `round`.
+    pub fn aggregate(&mut self, tick: Timestamp, round: u64, ids: &[String]) {
+        let mut p = Vec::with_capacity(12 + ids.len() * 16);
+        put_u64(&mut p, round);
+        put_ids(&mut p, ids);
+        self.event(EV_AGGREGATE, tick, &p);
+    }
+
+    /// Async scheduler marked a task outstanding for `id`.
+    pub fn mark_outstanding(&mut self, tick: Timestamp, id: &str) {
+        let mut p = Vec::with_capacity(id.len() + 4);
+        put_str(&mut p, id);
+        self.event(EV_MARK_OUTSTANDING, tick, &p);
+    }
+
+    /// Dispatch installed the community-at-`round` model as `id`'s
+    /// delta base (the model itself is reconstructed from the replay's
+    /// own community history — see [`replay`]).
+    pub fn base_set(&mut self, tick: Timestamp, id: &str, round: u64) {
+        let mut p = Vec::with_capacity(id.len() + 12);
+        put_str(&mut p, id);
+        put_u64(&mut p, round);
+        self.event(EV_BASE_SET, tick, &p);
+    }
+
+    /// Seal the trace: append the footer (final community digest +
+    /// counter snapshot) and hand back the finished bytes.
+    pub fn finish(mut self, community_digest: u64, counters: &BTreeMap<String, u64>) -> Vec<u8> {
+        let mut p = Vec::with_capacity(16 + counters.len() * 32);
+        put_u64(&mut p, community_digest);
+        put_u32(&mut p, counters.len() as u32);
+        for (k, v) in counters {
+            put_str(&mut p, k);
+            put_u64(&mut p, *v);
+        }
+        // The footer is a summary, not a timeline entry: tick 0.
+        self.event(EV_FOOTER, Duration::ZERO, &p);
+        self.buf
+    }
+}
+
+/// One decoded trace event (tick carried alongside in [`Trace`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TraceEvent {
+    Inbound { wire: Vec<u8> },
+    RoundOpen { round: u64, ids: Vec<String> },
+    RoundClose { round: u64, arrived: Vec<String> },
+    Aggregate { round: u64, ids: Vec<String> },
+    MarkOutstanding { id: String },
+    BaseSet { id: String, round: u64 },
+}
+
+/// A fully parsed trace: environment + timeline + footer.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub env_source: String,
+    pub events: Vec<(Timestamp, TraceEvent)>,
+    pub community_digest: u64,
+    pub counters: BTreeMap<String, u64>,
+}
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.buf.len() - self.pos < n {
+            bail!("trace truncated at byte {} (wanted {n} more)", self.pos);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn str_block(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        Ok(String::from_utf8(self.take(n)?.to_vec()).context("non-UTF-8 string in trace")?)
+    }
+
+    fn ids(&mut self) -> Result<Vec<String>> {
+        let n = self.u32()?;
+        (0..n).map(|_| self.str_block()).collect()
+    }
+
+    fn done(&self) -> bool {
+        self.pos >= self.buf.len()
+    }
+}
+
+impl Trace {
+    /// Parse a finished trace. Fails on bad magic, truncation, or a
+    /// missing footer (an unfinished recording is not replayable — its
+    /// expected digest was never sealed).
+    pub fn decode(bytes: &[u8]) -> Result<Trace> {
+        let mut c = Cursor { buf: bytes, pos: 0 };
+        if c.take(TRACE_MAGIC.len()).map(|m| m != TRACE_MAGIC).unwrap_or(true) {
+            bail!("not a MetisFL trace (bad magic; expected {:?})", TRACE_MAGIC);
+        }
+        let env_len = c.u32()? as usize;
+        let env_source =
+            String::from_utf8(c.take(env_len)?.to_vec()).context("non-UTF-8 trace env")?;
+        let mut events = Vec::new();
+        let mut footer: Option<(u64, BTreeMap<String, u64>)> = None;
+        while !c.done() {
+            let kind = c.u8()?;
+            let tick = Duration::from_nanos(c.u64()?);
+            let len = c.u32()? as usize;
+            let mut p = Cursor { buf: c.take(len)?, pos: 0 };
+            match kind {
+                EV_INBOUND => {
+                    events.push((tick, TraceEvent::Inbound { wire: p.buf.to_vec() }));
+                }
+                EV_ROUND_OPEN => {
+                    events.push((tick, TraceEvent::RoundOpen { round: p.u64()?, ids: p.ids()? }));
+                }
+                EV_ROUND_CLOSE => {
+                    events.push((
+                        tick,
+                        TraceEvent::RoundClose { round: p.u64()?, arrived: p.ids()? },
+                    ));
+                }
+                EV_AGGREGATE => {
+                    events.push((tick, TraceEvent::Aggregate { round: p.u64()?, ids: p.ids()? }));
+                }
+                EV_MARK_OUTSTANDING => {
+                    events.push((tick, TraceEvent::MarkOutstanding { id: p.str_block()? }));
+                }
+                EV_BASE_SET => {
+                    events.push((
+                        tick,
+                        TraceEvent::BaseSet { id: p.str_block()?, round: p.u64()? },
+                    ));
+                }
+                EV_FOOTER => {
+                    let digest = p.u64()?;
+                    let n = p.u32()?;
+                    let mut counters = BTreeMap::new();
+                    for _ in 0..n {
+                        let k = p.str_block()?;
+                        let v = p.u64()?;
+                        counters.insert(k, v);
+                    }
+                    footer = Some((digest, counters));
+                    if !c.done() {
+                        bail!("trace has {} trailing bytes after the footer", c.buf.len() - c.pos);
+                    }
+                }
+                other => bail!("unknown trace event kind {other} at byte {}", c.pos),
+            }
+        }
+        let (community_digest, counters) =
+            footer.context("trace has no footer (recording was never finished)")?;
+        Ok(Trace { env_source, events, community_digest, counters })
+    }
+}
+
+/// What a replay produced, against what the recording promised.
+#[derive(Debug)]
+pub struct ReplayOutcome {
+    /// Timeline events applied (footer excluded).
+    pub events: usize,
+    pub recorded_digest: u64,
+    pub replayed_digest: u64,
+    pub recorded_counters: BTreeMap<String, u64>,
+    pub replayed_counters: BTreeMap<String, u64>,
+    /// First detected divergence; `None` means the replay reproduced
+    /// the recorded community model bitwise (and every round closed on
+    /// the recorded membership).
+    pub divergence: Option<String>,
+}
+
+impl ReplayOutcome {
+    pub fn matches(&self) -> bool {
+        self.divergence.is_none()
+    }
+
+    /// Mismatches among [`REPLAYABLE_COUNTERS`] as
+    /// `(name, recorded, replayed)`. Informational alongside the digest
+    /// gate: a chaos run sealed while abandoned streams still had
+    /// decode work in flight can legitimately differ by a few wire
+    /// bytes without the math diverging.
+    pub fn counter_diffs(&self) -> Vec<(String, u64, u64)> {
+        REPLAYABLE_COUNTERS
+            .iter()
+            .filter_map(|name| {
+                let rec = self.recorded_counters.get(*name).copied().unwrap_or(0);
+                let rep = self.replayed_counters.get(*name).copied().unwrap_or(0);
+                (rec != rep).then(|| (name.to_string(), rec, rep))
+            })
+            .collect()
+    }
+}
+
+/// Decode `bytes` and [`replay`] the trace.
+pub fn replay_trace(bytes: &[u8]) -> Result<ReplayOutcome> {
+    let trace = Trace::decode(bytes)?;
+    replay(&trace)
+}
+
+/// Re-drive a fresh controller from a recorded trace on a simulated
+/// clock and compare the outcome against the footer. Structural
+/// failures (undecodable frame, aggregation error) return `Err`;
+/// behavioral divergence lands in [`ReplayOutcome::divergence`] so the
+/// caller can print both digests.
+pub fn replay(trace: &Trace) -> Result<ReplayOutcome> {
+    let env = FederationEnv::from_yaml(&trace.env_source)
+        .context("parsing the trace's embedded environment")?;
+    let clock = Clock::sim();
+    let controller = Controller::with_clock(env, None, clock.clone())?;
+    // Community snapshots by round, for BaseSet reconstruction: the
+    // live insert always stored a pointer to the model that was the
+    // community at `round`, which this replay has just as well — it
+    // built it from the same events.
+    let mut history: BTreeMap<u64, Arc<TensorModel>> = BTreeMap::new();
+    let mut divergence: Option<String> = None;
+    for (i, (tick, ev)) in trace.events.iter().enumerate() {
+        clock.advance_to(*tick);
+        match ev {
+            TraceEvent::Inbound { wire } => {
+                let msg = Message::decode(wire)
+                    .with_context(|| format!("trace event {i}: undecodable inbound frame"))?;
+                let reply = controller.handle(msg);
+                // Refusals are part of the recorded behavior (delta-base
+                // misses, duplicate-completion gates): they must re-occur
+                // identically, never abort the replay.
+                if matches!(reply, Message::Error { .. }) {
+                    log_debug("replay", &format!("event {i}: inbound refused: {reply:?}"));
+                }
+            }
+            TraceEvent::RoundOpen { round, ids } => controller.replay_open_round(*round, ids),
+            TraceEvent::RoundClose { round, arrived } => {
+                let got = controller.replay_close_round();
+                if got != *arrived && divergence.is_none() {
+                    divergence = Some(format!(
+                        "round {round} closed on {got:?}; the recording closed on {arrived:?}"
+                    ));
+                }
+            }
+            TraceEvent::Aggregate { round, ids } => {
+                controller
+                    .replay_aggregate(ids, *round)
+                    .with_context(|| format!("trace event {i}: aggregate for round {round}"))?;
+            }
+            TraceEvent::MarkOutstanding { id } => controller.replay_mark_outstanding(id),
+            TraceEvent::BaseSet { id, round } => match history.get(round) {
+                Some(m) => controller.replay_set_base(id, *round, Arc::clone(m)),
+                None if divergence.is_none() => {
+                    divergence = Some(format!(
+                        "trace event {i}: no community snapshot for round {round} \
+                         (history cap {BASE_HISTORY_CAP})"
+                    ));
+                }
+                None => {}
+            },
+        }
+        if let Some((m, r)) = controller.community() {
+            history.insert(r, m);
+            while history.len() > BASE_HISTORY_CAP {
+                let oldest = *history.keys().next().expect("non-empty history");
+                history.remove(&oldest);
+            }
+        }
+    }
+    let replayed_digest = controller.community().map(|(m, _)| model_digest(&m)).unwrap_or(0);
+    if divergence.is_none() && replayed_digest != trace.community_digest {
+        divergence = Some(format!(
+            "community digest {replayed_digest:#018x} != recorded {:#018x}",
+            trace.community_digest
+        ));
+    }
+    Ok(ReplayOutcome {
+        events: trace.events.len(),
+        recorded_digest: trace.community_digest,
+        replayed_digest,
+        recorded_counters: trace.counters.clone(),
+        replayed_counters: controller.counters().snapshot(),
+        divergence,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(ms: u64) -> Timestamp {
+        Duration::from_millis(ms)
+    }
+
+    #[test]
+    fn recorder_roundtrips_through_the_decoder() {
+        let mut rec = TraceRecorder::new("learners: 2\n");
+        rec.inbound(t(1), &[1, 2, 3]);
+        rec.round_open(t(2), 1, &["a".into(), "b".into()]);
+        rec.mark_outstanding(t(3), "a");
+        rec.base_set(t(4), "b", 7);
+        rec.round_close(t(5), 1, &["a".into()]);
+        rec.aggregate(t(6), 1, &["a".into()]);
+        assert_eq!(rec.events(), 6);
+        let mut counters = BTreeMap::new();
+        counters.insert("late_folds".to_string(), 3u64);
+        counters.insert("wire_bytes_in".to_string(), 1024u64);
+        let bytes = rec.finish(0xDEAD_BEEF, &counters);
+
+        let trace = Trace::decode(&bytes).unwrap();
+        assert_eq!(trace.env_source, "learners: 2\n");
+        assert_eq!(trace.community_digest, 0xDEAD_BEEF);
+        assert_eq!(trace.counters, counters);
+        assert_eq!(trace.events.len(), 6);
+        assert_eq!(trace.events[0], (t(1), TraceEvent::Inbound { wire: vec![1, 2, 3] }));
+        assert_eq!(
+            trace.events[1],
+            (t(2), TraceEvent::RoundOpen { round: 1, ids: vec!["a".into(), "b".into()] })
+        );
+        assert_eq!(trace.events[2], (t(3), TraceEvent::MarkOutstanding { id: "a".into() }));
+        assert_eq!(trace.events[3], (t(4), TraceEvent::BaseSet { id: "b".into(), round: 7 }));
+        assert_eq!(
+            trace.events[4],
+            (t(5), TraceEvent::RoundClose { round: 1, arrived: vec!["a".into()] })
+        );
+        assert_eq!(
+            trace.events[5],
+            (t(6), TraceEvent::Aggregate { round: 1, ids: vec!["a".into()] })
+        );
+    }
+
+    #[test]
+    fn decoder_rejects_bad_magic_truncation_and_unfinished_traces() {
+        assert!(Trace::decode(b"not a trace at all").is_err());
+        let bytes = TraceRecorder::new("x: 1\n").finish(7, &BTreeMap::new());
+        assert!(Trace::decode(&bytes).is_ok());
+        assert!(Trace::decode(&bytes[..bytes.len() - 3]).is_err(), "truncated footer");
+        // An unfinished recording (no footer) is not replayable.
+        let mut rec = TraceRecorder::new("x: 1\n");
+        rec.inbound(t(1), &[9]);
+        let unfinished = rec.buf.clone();
+        let err = format!("{:#}", Trace::decode(&unfinished).unwrap_err());
+        assert!(err.contains("footer"), "{err}");
+    }
+
+    #[test]
+    fn model_digest_separates_name_and_bit_changes() {
+        use crate::config::ModelSpec;
+        use crate::util::Rng;
+        let layout = ModelSpec::mlp(4, 1, 4).tensor_layout();
+        let a = TensorModel::random_init(&layout, &mut Rng::new(1));
+        let b = TensorModel::random_init(&layout, &mut Rng::new(2));
+        assert_eq!(model_digest(&a), model_digest(&a));
+        assert_ne!(model_digest(&a), model_digest(&b));
+    }
+}

@@ -1,0 +1,616 @@
+//! Unified virtual-time API: the one seam through which the whole crate
+//! reads the clock, sleeps, and waits on deadlines.
+//!
+//! Every component takes a [`Clock`] handle at construction instead of
+//! calling `Instant::now()` / `thread::sleep` directly (those calls live
+//! only in this module). Two implementations share the handle:
+//!
+//! * [`Clock::system`] — real wall clock. `now()` is monotonic time
+//!   since a process-wide epoch; `sleep` and `wait_timeout` are the std
+//!   primitives. Zero-cost: no allocation, no extra synchronization.
+//! * [`Clock::sim`] — a discrete-event simulated clock. Sleepers park
+//!   on a binary heap of wake deadlines; when every registered-busy
+//!   thread is blocked waiting on the clock, time *jumps* to the next
+//!   waiter's deadline instead of passing in real time. A 1k-learner
+//!   federation whose learners "train" for simulated seconds per round
+//!   completes in real milliseconds per round (`metisfl loadtest
+//!   --sim`), and timeout/GC/backoff paths become deterministic and
+//!   fast to exercise.
+//!
+//! Timestamps are [`Duration`]s since the clock's epoch (not
+//! `Instant`s, which cannot be fabricated for simulated time). They are
+//! only meaningful relative to the clock that produced them.
+//!
+//! ## Simulated-time liveness model
+//!
+//! The sim clock cannot see threads the way a kernel scheduler can, so
+//! it combines two signals to decide when jumping is safe:
+//!
+//! * **Busy registration.** Threads doing work that may produce clock
+//!   events (thread-pool workers executing tasks, harness arrival
+//!   threads) hold a [`BusyGuard`]. While any registered thread is
+//!   busy, time never jumps — a quorum deadline cannot fire while a
+//!   completion is being processed. Entering a clock wait suspends the
+//!   current thread's own registration (a busy thread that sleeps is
+//!   not busy).
+//! * **Quiescence grace.** Unregistered compute (scoped encoder
+//!   threads, transport internals) is covered by a short real-time
+//!   grace window: a waiter only jumps after observing no clock
+//!   activity for two consecutive grace periods. In a discrete-event
+//!   model compute takes zero virtual time, so a rare premature jump
+//!   during untracked compute is a modeling choice, not a correctness
+//!   bug — the guard + grace combination just keeps event ordering
+//!   stable on the paths that matter (completions vs. deadlines).
+
+use once_cell::sync::Lazy;
+use std::cell::Cell;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashSet};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+/// A point on a [`Clock`]'s timeline: the time elapsed since that
+/// clock's epoch. Only comparable to timestamps from the same clock.
+pub type Timestamp = Duration;
+
+// The process-wide monotonic anchor. Every system-clock reading in the
+// crate derives from this single `Instant` — keeping the only
+// `Instant::now()` call sites in this module is what makes wall time an
+// injected dependency everywhere else.
+static EPOCH: Lazy<Instant> = Lazy::new(Instant::now);
+
+/// Milliseconds since process start (log timestamps).
+pub fn uptime_ms() -> u128 {
+    EPOCH.elapsed().as_millis()
+}
+
+/// Real-time grace a sim waiter observes before concluding the system
+/// is quiescent (two consecutive windows with no clock activity).
+const SIM_GRACE: Duration = Duration::from_micros(500);
+
+/// Real-time slice for simulated condvar waits: short enough that a
+/// virtual-deadline check happens promptly, long enough not to spin.
+const SIM_CV_SLICE: Duration = Duration::from_micros(300);
+
+thread_local! {
+    // How many [`BusyGuard`]s the current thread holds. The global busy
+    // count tracks *threads* (0→1 / 1→0 transitions), so nested guards
+    // are free and a clock wait can suspend the whole thread's
+    // registration with one decrement.
+    static BUSY_DEPTH: Cell<u32> = const { Cell::new(0) };
+}
+
+#[derive(Default)]
+struct SimInner {
+    now: Duration,
+    /// Registered threads currently runnable (not blocked on the clock).
+    busy: u64,
+    /// Token source for heap entries.
+    seq: u64,
+    /// Bumped on every clock event (new sleeper, jump, busy
+    /// transition); waiters use it to detect quiescence.
+    activity: u64,
+    /// Pending wake deadlines, earliest first. Lazy deletion: entries
+    /// whose waiter already left are parked in `cancelled` and skipped
+    /// when the heap is pruned.
+    heap: BinaryHeap<Reverse<(Duration, u64)>>,
+    cancelled: HashSet<u64>,
+}
+
+impl SimInner {
+    /// Drop cancelled and already-served entries off the top.
+    fn prune(&mut self) {
+        while let Some(&Reverse((t, tok))) = self.heap.peek() {
+            if self.cancelled.remove(&tok) || t <= self.now {
+                self.heap.pop();
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn bump(&mut self) {
+        self.activity = self.activity.wrapping_add(1);
+    }
+
+    /// Jump to the earliest pending deadline (caller established
+    /// quiescence). Returns true if time moved.
+    fn advance_to_next(&mut self) -> bool {
+        self.prune();
+        match self.heap.peek() {
+            Some(&Reverse((t, _))) => {
+                self.now = t;
+                self.bump();
+                self.prune();
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// One quiescence-detection step for a waiter that just saw a real
+    /// grace period elapse: jump only on the second consecutive
+    /// no-activity observation.
+    fn poll_advance(&mut self, last_seen: &mut Option<u64>) -> bool {
+        if self.busy != 0 {
+            *last_seen = None;
+            return false;
+        }
+        if *last_seen == Some(self.activity) {
+            self.advance_to_next()
+        } else {
+            *last_seen = Some(self.activity);
+            false
+        }
+    }
+}
+
+struct SimState {
+    m: Mutex<SimInner>,
+    cv: Condvar,
+}
+
+impl SimState {
+    fn new() -> SimState {
+        SimState { m: Mutex::new(SimInner::default()), cv: Condvar::new() }
+    }
+
+    /// Temporarily drop this thread's busy registration (entering a
+    /// clock wait). Returns whether a resume is owed.
+    fn suspend_busy(self: &Arc<Self>) -> bool {
+        if BUSY_DEPTH.with(|c| c.get()) == 0 {
+            return false;
+        }
+        let mut g = self.m.lock().unwrap();
+        g.busy = g.busy.saturating_sub(1);
+        g.bump();
+        self.cv.notify_all();
+        true
+    }
+
+    fn resume_busy(self: &Arc<Self>) {
+        let mut g = self.m.lock().unwrap();
+        g.busy += 1;
+        g.bump();
+    }
+
+    fn sleep(self: &Arc<Self>, d: Duration) {
+        if d.is_zero() {
+            return;
+        }
+        let suspended = self.suspend_busy();
+        let mut g = self.m.lock().unwrap();
+        let wake = g.now + d;
+        let token = g.seq;
+        g.seq += 1;
+        g.heap.push(Reverse((wake, token)));
+        g.bump();
+        // A new earliest deadline changes every waiter's jump target.
+        self.cv.notify_all();
+        let mut last_seen: Option<u64> = None;
+        while g.now < wake {
+            let (g2, timeout) = self.cv.wait_timeout(g, SIM_GRACE).unwrap();
+            g = g2;
+            if g.now >= wake {
+                break;
+            }
+            if timeout.timed_out() {
+                if g.poll_advance(&mut last_seen) {
+                    self.cv.notify_all();
+                }
+            } else {
+                last_seen = None;
+            }
+        }
+        drop(g);
+        if suspended {
+            self.resume_busy();
+        }
+    }
+
+    /// Wait on the caller's condvar under simulated time: register the
+    /// virtual deadline, then wait in short real slices so a real
+    /// notify still wakes promptly. Returns `(guard, timed_out)`;
+    /// `timed_out == false` means a notify arrived (the caller's
+    /// predicate loop re-checks, exactly like std's condvar contract).
+    fn cv_wait<'a, T>(
+        self: &Arc<Self>,
+        cv: &Condvar,
+        mut guard: MutexGuard<'a, T>,
+        dur: Duration,
+    ) -> (MutexGuard<'a, T>, bool) {
+        let suspended = self.suspend_busy();
+        let (wake, token) = {
+            let mut g = self.m.lock().unwrap();
+            let wake = g.now + dur;
+            let token = g.seq;
+            g.seq += 1;
+            g.heap.push(Reverse((wake, token)));
+            g.bump();
+            self.cv.notify_all();
+            (wake, token)
+        };
+        let mut last_seen: Option<u64> = None;
+        loop {
+            let (g2, timeout) = cv.wait_timeout(guard, SIM_CV_SLICE).unwrap();
+            guard = g2;
+            let mut g = self.m.lock().unwrap();
+            if g.now >= wake {
+                drop(g);
+                if suspended {
+                    self.resume_busy();
+                }
+                return (guard, true);
+            }
+            if !timeout.timed_out() {
+                // Real notify: unregister our deadline and hand control
+                // back to the caller's predicate loop.
+                g.cancelled.insert(token);
+                drop(g);
+                if suspended {
+                    self.resume_busy();
+                }
+                return (guard, false);
+            }
+            if g.poll_advance(&mut last_seen) {
+                self.cv.notify_all();
+            }
+            drop(g);
+        }
+    }
+
+    fn advance_to(self: &Arc<Self>, t: Timestamp) {
+        let mut g = self.m.lock().unwrap();
+        if t > g.now {
+            g.now = t;
+            g.bump();
+            g.prune();
+            self.cv.notify_all();
+        }
+    }
+}
+
+/// A cloneable clock handle: real wall time or discrete-event simulated
+/// time behind one API. See the module docs for the model.
+#[derive(Clone)]
+pub struct Clock {
+    inner: ClockInner,
+}
+
+#[derive(Clone)]
+enum ClockInner {
+    System,
+    Sim(Arc<SimState>),
+}
+
+impl std::fmt::Debug for Clock {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match &self.inner {
+            ClockInner::System => write!(f, "Clock::system"),
+            ClockInner::Sim(_) => write!(f, "Clock::sim(t={:?})", self.now()),
+        }
+    }
+}
+
+impl Default for Clock {
+    fn default() -> Clock {
+        Clock::system()
+    }
+}
+
+impl Clock {
+    /// The real wall clock (process-wide monotonic epoch).
+    pub fn system() -> Clock {
+        Clock { inner: ClockInner::System }
+    }
+
+    /// A fresh simulated clock starting at `t = 0`.
+    pub fn sim() -> Clock {
+        Clock { inner: ClockInner::Sim(Arc::new(SimState::new())) }
+    }
+
+    pub fn is_sim(&self) -> bool {
+        matches!(self.inner, ClockInner::Sim(_))
+    }
+
+    /// Current time on this clock's timeline.
+    pub fn now(&self) -> Timestamp {
+        match &self.inner {
+            ClockInner::System => EPOCH.elapsed(),
+            ClockInner::Sim(s) => s.m.lock().unwrap().now,
+        }
+    }
+
+    /// Time elapsed since `earlier` (zero if `earlier` is in the
+    /// future — mirrors `Instant::elapsed`'s monotonic saturation).
+    pub fn since(&self, earlier: Timestamp) -> Duration {
+        self.now().saturating_sub(earlier)
+    }
+
+    /// Sleep for `d` on this clock's timeline. Simulated sleeps park on
+    /// the wake heap and return when virtual time reaches the deadline
+    /// (jumping there if the system is otherwise idle).
+    pub fn sleep(&self, d: Duration) {
+        match &self.inner {
+            ClockInner::System => std::thread::sleep(d),
+            ClockInner::Sim(s) => s.sleep(d),
+        }
+    }
+
+    /// Condvar wait with a deadline on this clock's timeline. Returns
+    /// `(guard, timed_out)`. Callers keep their standard predicate
+    /// loop: `timed_out == false` only promises that a notify (or a
+    /// spurious wake) happened, not that the predicate holds.
+    pub fn wait_timeout<'a, T>(
+        &self,
+        cv: &Condvar,
+        guard: MutexGuard<'a, T>,
+        dur: Duration,
+    ) -> (MutexGuard<'a, T>, bool) {
+        match &self.inner {
+            ClockInner::System => {
+                let (g, timeout) = cv.wait_timeout(guard, dur).unwrap();
+                (g, timeout.timed_out())
+            }
+            ClockInner::Sim(s) => s.cv_wait(cv, guard, dur),
+        }
+    }
+
+    /// Register the current thread as busy (runnable) for simulated-time
+    /// accounting; a no-op on the system clock. While any busy thread
+    /// exists, simulated time never jumps.
+    pub fn busy(&self) -> BusyGuard {
+        match &self.inner {
+            ClockInner::System => BusyGuard { state: None },
+            ClockInner::Sim(s) => {
+                let depth = BUSY_DEPTH.with(|c| {
+                    let v = c.get();
+                    c.set(v + 1);
+                    v
+                });
+                if depth == 0 {
+                    let mut g = s.m.lock().unwrap();
+                    g.busy += 1;
+                    g.bump();
+                }
+                BusyGuard { state: Some(Arc::clone(s)) }
+            }
+        }
+    }
+
+    /// Temporarily shed the current thread's busy registration around a
+    /// non-clock blocking wait (e.g. a pool barrier) so a blocked
+    /// caller cannot wedge simulated time. No-op on the system clock or
+    /// when the thread holds no [`BusyGuard`].
+    pub fn suspended(&self) -> SuspendGuard {
+        match &self.inner {
+            ClockInner::System => SuspendGuard { state: None },
+            ClockInner::Sim(s) => {
+                if s.suspend_busy() {
+                    SuspendGuard { state: Some(Arc::clone(s)) }
+                } else {
+                    SuspendGuard { state: None }
+                }
+            }
+        }
+    }
+
+    /// Move simulated time forward to `t` (replay driving; no-op on the
+    /// system clock and for past timestamps).
+    pub fn advance_to(&self, t: Timestamp) {
+        if let ClockInner::Sim(s) = &self.inner {
+            s.advance_to(t);
+        }
+    }
+}
+
+/// RAII busy registration (see [`Clock::busy`]).
+pub struct BusyGuard {
+    state: Option<Arc<SimState>>,
+}
+
+impl Drop for BusyGuard {
+    fn drop(&mut self) {
+        if let Some(s) = &self.state {
+            let depth = BUSY_DEPTH.with(|c| {
+                let v = c.get() - 1;
+                c.set(v);
+                v
+            });
+            if depth == 0 {
+                let mut g = s.m.lock().unwrap();
+                g.busy = g.busy.saturating_sub(1);
+                g.bump();
+                s.cv.notify_all();
+            }
+        }
+    }
+}
+
+/// RAII busy suspension (see [`Clock::suspended`]).
+pub struct SuspendGuard {
+    state: Option<Arc<SimState>>,
+}
+
+impl Drop for SuspendGuard {
+    fn drop(&mut self) {
+        if let Some(s) = &self.state {
+            s.resume_busy();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    #[test]
+    fn system_clock_is_monotonic() {
+        let c = Clock::system();
+        let a = c.now();
+        let b = c.now();
+        assert!(b >= a);
+        assert!(!c.is_sim());
+    }
+
+    #[test]
+    fn sim_sleep_jumps_instead_of_waiting() {
+        // An hour of virtual sleep must complete in (well under) a
+        // second of real time, via a single heap jump — this is also
+        // the no-busy-wait property: 3600 s / grace would be millions
+        // of iterations if the waiter spun.
+        let real = Clock::system();
+        let sim = Clock::sim();
+        let t0 = real.now();
+        sim.sleep(Duration::from_secs(3600));
+        assert!(sim.now() >= Duration::from_secs(3600));
+        assert!(
+            real.since(t0) < Duration::from_secs(2),
+            "sim sleep took {:?} real",
+            real.since(t0)
+        );
+    }
+
+    #[test]
+    fn sleepers_wake_in_heap_deadline_order() {
+        let sim = Clock::sim();
+        let order = Arc::new(Mutex::new(Vec::new()));
+        let mut handles = Vec::new();
+        for secs in [30u64, 10, 20] {
+            let c = sim.clone();
+            let order = Arc::clone(&order);
+            handles.push(std::thread::spawn(move || {
+                c.sleep(Duration::from_secs(secs));
+                order.lock().unwrap().push(secs);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(*order.lock().unwrap(), vec![10, 20, 30]);
+        assert!(sim.now() >= Duration::from_secs(30));
+    }
+
+    #[test]
+    fn busy_guard_blocks_time_jumps() {
+        let sim = Clock::sim();
+        let woke = Arc::new(AtomicBool::new(false));
+        let guard = sim.busy();
+        let sleeper = {
+            let c = sim.clone();
+            let woke = Arc::clone(&woke);
+            std::thread::spawn(move || {
+                c.sleep(Duration::from_secs(5));
+                woke.store(true, Ordering::SeqCst);
+            })
+        };
+        // With a busy thread registered, the sleeper cannot jump.
+        std::thread::sleep(Duration::from_millis(30));
+        assert!(!woke.load(Ordering::SeqCst), "time jumped while a thread was busy");
+        drop(guard);
+        sleeper.join().unwrap();
+        assert!(woke.load(Ordering::SeqCst));
+    }
+
+    #[test]
+    fn nested_busy_guards_count_one_thread() {
+        let sim = Clock::sim();
+        let g1 = sim.busy();
+        let g2 = sim.busy();
+        drop(g1);
+        // Still busy: the outer guard remains.
+        let woke = Arc::new(AtomicBool::new(false));
+        let sleeper = {
+            let c = sim.clone();
+            let woke = Arc::clone(&woke);
+            std::thread::spawn(move || {
+                c.sleep(Duration::from_secs(1));
+                woke.store(true, Ordering::SeqCst);
+            })
+        };
+        std::thread::sleep(Duration::from_millis(20));
+        assert!(!woke.load(Ordering::SeqCst));
+        drop(g2);
+        sleeper.join().unwrap();
+    }
+
+    #[test]
+    fn cv_wait_times_out_on_virtual_deadline() {
+        let sim = Clock::sim();
+        let real = Clock::system();
+        let m = Mutex::new(());
+        let cv = Condvar::new();
+        let t0 = real.now();
+        let (_g, timed_out) = sim.wait_timeout(&cv, m.lock().unwrap(), Duration::from_secs(600));
+        assert!(timed_out);
+        assert!(sim.now() >= Duration::from_secs(600));
+        assert!(real.since(t0) < Duration::from_secs(2));
+    }
+
+    #[test]
+    fn cv_wait_returns_on_real_notify() {
+        let sim = Clock::sim();
+        let shared = Arc::new((Mutex::new(false), Condvar::new()));
+        let notifier = {
+            let shared = Arc::clone(&shared);
+            std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_millis(10));
+                *shared.0.lock().unwrap() = true;
+                shared.1.notify_all();
+            })
+        };
+        let mut guard = shared.0.lock().unwrap();
+        let mut timed_out = false;
+        while !*guard && !timed_out {
+            let (g, to) = sim.wait_timeout(&shared.1, guard, Duration::from_secs(3600));
+            guard = g;
+            timed_out = to;
+        }
+        assert!(*guard, "notify lost");
+        // The virtual deadline never needed to fire.
+        assert!(sim.now() < Duration::from_secs(3600));
+        drop(guard);
+        notifier.join().unwrap();
+    }
+
+    #[test]
+    fn suspended_guard_allows_jumps_while_parked() {
+        let sim = Clock::sim();
+        let woke = Arc::new(AtomicBool::new(false));
+        let c = sim.clone();
+        let woke2 = Arc::clone(&woke);
+        let sleeper = std::thread::spawn(move || {
+            c.sleep(Duration::from_secs(2));
+            woke2.store(true, Ordering::SeqCst);
+        });
+        // A busy thread that parks on non-clock work suspends its
+        // registration, so the sleeper can jump.
+        let _busy = sim.busy();
+        {
+            let _parked = sim.suspended();
+            sleeper.join().unwrap();
+        }
+        assert!(woke.load(Ordering::SeqCst));
+    }
+
+    #[test]
+    fn advance_to_is_monotonic_and_sim_only() {
+        let sim = Clock::sim();
+        sim.advance_to(Duration::from_secs(10));
+        assert_eq!(sim.now(), Duration::from_secs(10));
+        sim.advance_to(Duration::from_secs(5));
+        assert_eq!(sim.now(), Duration::from_secs(10), "advance_to went backwards");
+        let sys = Clock::system();
+        let before = sys.now();
+        sys.advance_to(before + Duration::from_secs(3600));
+        assert!(sys.now() < before + Duration::from_secs(1800));
+    }
+
+    #[test]
+    fn timestamps_and_since_saturate() {
+        let c = Clock::system();
+        let now = c.now();
+        assert_eq!(c.since(now + Duration::from_secs(100)), Duration::ZERO);
+    }
+}

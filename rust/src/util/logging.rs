@@ -7,7 +7,6 @@
 use once_cell::sync::Lazy;
 use std::io::Write;
 use std::sync::Mutex;
-use std::time::Instant;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub enum LogLevel {
@@ -18,7 +17,6 @@ pub enum LogLevel {
     Off = 4,
 }
 
-static START: Lazy<Instant> = Lazy::new(Instant::now);
 static LEVEL: Lazy<LogLevel> = Lazy::new(|| {
     match std::env::var("METISFL_LOG").unwrap_or_default().to_ascii_lowercase().as_str() {
         "debug" => LogLevel::Debug,
@@ -43,7 +41,7 @@ pub fn log_at(l: LogLevel, component: &str, msg: &str) {
     if !enabled(l) {
         return;
     }
-    let ms = START.elapsed().as_millis();
+    let ms = crate::util::clock::uptime_ms();
     let tag = match l {
         LogLevel::Debug => "DEBUG",
         LogLevel::Info => "INFO ",

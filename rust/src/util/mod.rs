@@ -7,11 +7,14 @@
 //! * [`threadpool`] — fixed-size pool + scoped `parallel_for`, the OpenMP
 //!   analog used by the parallel aggregator (paper Fig. 4).
 //! * [`rng`] — deterministic xoshiro256** PRNG (seedable, splittable).
-//! * [`stopwatch`] — wall-clock timers for the T1–T9 operation metrics.
+//! * [`clock`] — the unified time seam: real or discrete-event simulated
+//!   time behind one injectable [`Clock`] handle.
+//! * [`stopwatch`] — clock-based timers for the T1–T9 operation metrics.
 //! * [`logging`] — leveled stderr logger (`METISFL_LOG=debug|info|warn`).
 //! * [`stats`] — mean / std / percentile summaries for the bench harness.
 //! * [`prop`] — miniature property-based testing runner.
 
+pub mod clock;
 pub mod logging;
 pub mod prop;
 pub mod rng;
@@ -19,6 +22,7 @@ pub mod stats;
 pub mod stopwatch;
 pub mod threadpool;
 
+pub use clock::{Clock, Timestamp};
 pub use logging::{log_debug, log_info, log_warn, LogLevel};
 pub use rng::Rng;
 pub use stats::Summary;

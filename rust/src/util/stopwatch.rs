@@ -1,22 +1,32 @@
-//! Wall-clock instrumentation used by the T1–T9 operation metrics
-//! (paper Fig. 1) and the bench harness.
+//! Clock-based instrumentation used by the T1–T9 operation metrics
+//! (paper Fig. 1) and the bench harness. Timers read whatever [`Clock`]
+//! they were started on, so the same instrumentation works under real
+//! and simulated time.
 
-use std::time::{Duration, Instant};
+use crate::util::clock::{Clock, Timestamp};
+use std::time::Duration;
 
-/// A restartable wall-clock stopwatch.
+/// A restartable stopwatch over a [`Clock`].
 #[derive(Debug, Clone)]
 pub struct Stopwatch {
-    started: Instant,
+    clock: Clock,
+    started: Timestamp,
 }
 
 impl Stopwatch {
+    /// Start on the system clock.
     pub fn start() -> Self {
-        Stopwatch { started: Instant::now() }
+        Self::start_with(&Clock::system())
     }
 
-    /// Elapsed time since `start`/`restart`.
+    /// Start on an explicit clock (use this inside clocked components).
+    pub fn start_with(clock: &Clock) -> Self {
+        Stopwatch { clock: clock.clone(), started: clock.now() }
+    }
+
+    /// Elapsed time since `start`/`lap`.
     pub fn elapsed(&self) -> Duration {
-        self.started.elapsed()
+        self.clock.since(self.started)
     }
 
     /// Elapsed seconds as f64.
@@ -26,8 +36,8 @@ impl Stopwatch {
 
     /// Reset the origin and return the time elapsed until now.
     pub fn lap(&mut self) -> Duration {
-        let now = Instant::now();
-        let d = now - self.started;
+        let now = self.clock.now();
+        let d = now.saturating_sub(self.started);
         self.started = now;
         d
     }
@@ -101,6 +111,14 @@ mod tests {
         let first = sw.lap();
         assert!(first >= Duration::from_millis(2));
         assert!(sw.elapsed() < first);
+    }
+
+    #[test]
+    fn stopwatch_follows_sim_clock() {
+        let sim = Clock::sim();
+        let sw = Stopwatch::start_with(&sim);
+        sim.advance_to(Duration::from_secs(90));
+        assert_eq!(sw.elapsed(), Duration::from_secs(90));
     }
 
     #[test]

@@ -13,6 +13,7 @@
 //! `benches/agg_ablation.rs`), and simplicity keeps the scheduler easy to
 //! reason about under panics.
 
+use crate::util::clock::Clock;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
@@ -30,11 +31,20 @@ pub struct ThreadPool {
     queue: Arc<Queue>,
     workers: Vec<JoinHandle<()>>,
     size: usize,
+    clock: Clock,
 }
 
 impl ThreadPool {
-    /// Create a pool with `size` workers (`size >= 1`).
+    /// Create a pool with `size` workers (`size >= 1`) on the system clock.
     pub fn new(size: usize) -> Self {
+        Self::with_clock(size, Clock::system())
+    }
+
+    /// Create a pool whose workers register as busy with `clock` while
+    /// executing a task, so simulated time cannot jump past a deadline
+    /// while in-flight work (e.g. a completion being processed) could
+    /// still produce events.
+    pub fn with_clock(size: usize, clock: Clock) -> Self {
         let size = size.max(1);
         let queue = Arc::new(Queue {
             tasks: Mutex::new((VecDeque::new(), false)),
@@ -43,13 +53,14 @@ impl ThreadPool {
         let workers = (0..size)
             .map(|i| {
                 let q = Arc::clone(&queue);
+                let c = clock.clone();
                 std::thread::Builder::new()
                     .name(format!("metisfl-pool-{i}"))
-                    .spawn(move || worker_loop(q))
+                    .spawn(move || worker_loop(q, c))
                     .expect("spawn pool worker")
             })
             .collect();
-        ThreadPool { queue, workers, size }
+        ThreadPool { queue, workers, size, clock }
     }
 
     /// Pool with one worker per available hardware thread.
@@ -103,6 +114,9 @@ impl ThreadPool {
                 d.task_done(false);
             });
         }
+        // A busy caller parked on the barrier is not runnable: shed its
+        // registration so simulated time can serve the workers' sleeps.
+        let _parked = self.clock.suspended();
         done.wait();
     }
 
@@ -231,7 +245,7 @@ impl Drop for PanicGuard<'_> {
     }
 }
 
-fn worker_loop(q: Arc<Queue>) {
+fn worker_loop(q: Arc<Queue>, clock: Clock) {
     loop {
         let task = {
             let mut guard = q.tasks.lock().unwrap();
@@ -247,6 +261,9 @@ fn worker_loop(q: Arc<Queue>) {
         };
         match task {
             Some(t) => {
+                // Busy for the task's duration: simulated time must not
+                // jump while this work could still produce clock events.
+                let _busy = clock.busy();
                 // Worker survives task panics; the barrier's PanicGuard
                 // reports them to the waiting caller.
                 let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(t));
@@ -364,10 +381,32 @@ mod tests {
                 d.fetch_add(1, Ordering::SeqCst);
             });
         }
-        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        let sw = crate::util::Stopwatch::start();
         while done.load(Ordering::SeqCst) != 16 {
-            assert!(std::time::Instant::now() < deadline, "tasks did not finish");
+            assert!(sw.elapsed() < std::time::Duration::from_secs(5), "tasks did not finish");
             std::thread::yield_now();
         }
+    }
+
+    #[test]
+    fn sim_pool_workers_register_busy() {
+        // A worker sleeping on the sim clock suspends its own busy
+        // registration, so the sleep completes via a jump even though
+        // the worker is "executing" the task.
+        let sim = Clock::sim();
+        let pool = ThreadPool::with_clock(2, sim.clone());
+        let done = Arc::new(AtomicUsize::new(0));
+        let d = Arc::clone(&done);
+        let c = sim.clone();
+        pool.spawn(move || {
+            c.sleep(std::time::Duration::from_secs(30));
+            d.fetch_add(1, Ordering::SeqCst);
+        });
+        let sw = crate::util::Stopwatch::start();
+        while done.load(Ordering::SeqCst) != 1 {
+            assert!(sw.elapsed() < std::time::Duration::from_secs(5), "sim sleep wedged");
+            std::thread::yield_now();
+        }
+        assert!(sim.now() >= std::time::Duration::from_secs(30));
     }
 }

@@ -67,7 +67,7 @@ impl Trainer for HangingTrainer {
         _data: &Dataset,
         _spec: &TaskSpec,
     ) -> anyhow::Result<(TensorModel, TaskMeta)> {
-        std::thread::sleep(std::time::Duration::from_secs(3600));
+        metisfl::util::Clock::system().sleep(std::time::Duration::from_secs(3600));
         unreachable!()
     }
 
@@ -97,7 +97,7 @@ fn round_completes_with_survivors_when_one_learner_fails() {
 #[test]
 fn round_times_out_on_hanging_learner_and_continues() {
     let e = env("fail-hang", 3, 500); // 500ms timeout
-    let start = std::time::Instant::now();
+    let start = metisfl::util::Stopwatch::start();
     let report = run_with_trainer(&e, |idx| {
         if idx == 0 {
             Arc::new(HangingTrainer) as Arc<dyn Trainer>

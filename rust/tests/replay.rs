@@ -1,0 +1,125 @@
+//! Trace record/replay determinism gates.
+//!
+//! Property swept: for every wire codec × chaos seed × quorum fraction
+//! cell, recording a loadtest run and re-driving the trace through a
+//! fresh controller on a simulated clock must reproduce the recorded
+//! community model **bitwise** (and, for chaos-free runs, the full
+//! replayable counter set). The chaos cells exercise the interesting
+//! timeline shapes: partial streams, quorum cuts with stragglers, and
+//! late completions folded through the staleness path.
+
+use metisfl::config::WireCodecChoice;
+use metisfl::harness::{run_loadtest, LoadtestConfig};
+use metisfl::net::chaos::ChaosSpec;
+use metisfl::runtime::trace::{replay_trace, Trace};
+
+fn record_cfg(codec: WireCodecChoice, chaos_seed: u64, quorum: f64) -> LoadtestConfig {
+    let mut cfg = LoadtestConfig::quick();
+    cfg.learners = 6;
+    cfg.rounds = 2;
+    cfg.quorum_fraction = quorum;
+    cfg.wire_codec = codec;
+    cfg.record = true;
+    cfg.seed = 0x7E57 ^ chaos_seed;
+    if chaos_seed != 0 {
+        cfg.chaos = ChaosSpec {
+            seed: chaos_seed,
+            sever_fraction: 0.2,
+            sever_after_sends: 4,
+            ..ChaosSpec::default()
+        };
+    }
+    cfg
+}
+
+/// Record one run, replay its trace, and return `(report digest,
+/// replay outcome)` after asserting the bitwise gate.
+fn record_and_replay(cfg: &LoadtestConfig) -> (u64, metisfl::runtime::trace::ReplayOutcome) {
+    let report = run_loadtest(cfg).expect("recorded loadtest run");
+    let trace = report.trace.as_ref().expect("cfg.record must yield a trace");
+    let outcome = replay_trace(trace).expect("replay must apply cleanly");
+    assert!(
+        outcome.matches(),
+        "replay diverged (codec {:?}, chaos seed {}, quorum {}): {:?}",
+        cfg.wire_codec,
+        cfg.chaos.seed,
+        cfg.quorum_fraction,
+        outcome.divergence
+    );
+    assert_eq!(outcome.replayed_digest, outcome.recorded_digest);
+    (report.community_digest, outcome)
+}
+
+#[test]
+fn replay_reproduces_clean_runs_bitwise_across_codecs() {
+    for codec in [WireCodecChoice::F32, WireCodecChoice::Delta, WireCodecChoice::DeltaRle] {
+        let cfg = record_cfg(codec, 0, 1.0);
+        let (report_digest, outcome) = record_and_replay(&cfg);
+        // A full-quorum clean run seals with nothing in flight: the
+        // report's digest is the footer's digest, and every replayable
+        // counter must match exactly.
+        assert_eq!(
+            outcome.recorded_digest, report_digest,
+            "codec {codec:?}: footer digest != report digest"
+        );
+        assert!(
+            outcome.counter_diffs().is_empty(),
+            "codec {codec:?}: counter drift {:?}",
+            outcome.counter_diffs()
+        );
+        assert!(outcome.events > 0);
+    }
+}
+
+#[test]
+fn replay_reproduces_chaos_quorum_runs_bitwise_across_codecs() {
+    // Severed links + deadline quorums: rounds close at the cut, doomed
+    // partial streams litter the timeline, and stragglers may late-fold.
+    // The digest gate is absolute; counters are informational here (a
+    // victim's decode work can still be in flight when the trace seals).
+    for (codec, chaos_seed) in [
+        (WireCodecChoice::F32, 7),
+        (WireCodecChoice::Delta, 9),
+        (WireCodecChoice::DeltaRle, 11),
+    ] {
+        let cfg = record_cfg(codec, chaos_seed, 0.6);
+        record_and_replay(&cfg);
+    }
+}
+
+#[test]
+fn replay_reproduces_a_simulated_clock_recording() {
+    // Recording on a virtual clock: ticks are discrete-event times, and
+    // the replay (also sim-clocked) must land on the same bits.
+    let mut cfg = record_cfg(WireCodecChoice::DeltaRle, 0, 1.0);
+    cfg.sim = true;
+    let (report_digest, outcome) = record_and_replay(&cfg);
+    assert_eq!(outcome.recorded_digest, report_digest);
+    assert!(outcome.counter_diffs().is_empty(), "{:?}", outcome.counter_diffs());
+}
+
+#[test]
+fn replaying_twice_is_itself_deterministic() {
+    let cfg = record_cfg(WireCodecChoice::Delta, 7, 0.6);
+    let report = run_loadtest(&cfg).expect("recorded loadtest run");
+    let trace = report.trace.expect("trace");
+    let a = replay_trace(&trace).expect("first replay");
+    let b = replay_trace(&trace).expect("second replay");
+    assert!(a.matches() && b.matches());
+    assert_eq!(a.replayed_digest, b.replayed_digest);
+    assert_eq!(a.replayed_counters, b.replayed_counters);
+}
+
+#[test]
+fn trace_embeds_a_parsable_environment() {
+    let cfg = record_cfg(WireCodecChoice::F32, 0, 1.0);
+    let report = run_loadtest(&cfg).expect("recorded loadtest run");
+    let trace = Trace::decode(report.trace.as_ref().unwrap()).expect("decode");
+    let env = metisfl::config::FederationEnv::from_yaml(&trace.env_source)
+        .expect("embedded env must round-trip");
+    assert_eq!(env.learners, cfg.learners);
+    assert_eq!(env.rounds, cfg.rounds);
+    assert_eq!(env.wire_codec, cfg.wire_codec);
+    assert_eq!(env.seed, cfg.seed);
+    assert_eq!(trace.community_digest, report.community_digest);
+}

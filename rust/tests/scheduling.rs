@@ -94,7 +94,7 @@ fn quorum_rounds_absorb_a_dropout_learner() {
     env.rounds = 3;
     env.quorum_fraction = 0.75;
     env.task_timeout_ms = 30_000;
-    let start = std::time::Instant::now();
+    let start = metisfl::util::Stopwatch::start();
     let report = run_with_trainer(&env, |idx| {
         let dropout = if idx == 3 { 0.999_999 } else { 0.0 };
         Arc::new(SyntheticTrainer::with_profile(0, 0.01, 0.0, dropout, 7 + idx as u64))

@@ -19,9 +19,9 @@ use metisfl::proto::{
     ErrorCode, Message, StreamPurpose, TaskMeta, TaskSpec, TensorLayoutProto, PROTO_VERSION,
 };
 use metisfl::tensor::{CodecId, TensorModel};
-use metisfl::util::Rng;
-use std::sync::{Arc, Mutex};
-use std::time::{Duration, Instant};
+use metisfl::util::{Clock, Rng};
+use std::sync::Arc;
+use std::time::Duration;
 
 fn env(name: &str, stream_chunk_bytes: usize) -> FederationEnv {
     FederationEnv::builder(name)
@@ -378,25 +378,21 @@ fn begin_msg(m: &TensorModel, stream_id: u64) -> Message {
 
 #[test]
 fn idle_streams_reclaimed_on_heartbeat_with_deterministic_clock() {
-    // The 5-minute idle-GC path, driven by an injected clock instead of
+    // The 5-minute idle-GC path, driven by simulated time instead of
     // wall time: a learner that dies between Begin and End must not pin
     // its buffers or registry slot past the timeout.
-    let ctrl = Controller::new(env("idle-gc", 0), None).unwrap();
-    let origin = Instant::now();
-    let offset = Arc::new(Mutex::new(Duration::ZERO));
-    let o = Arc::clone(&offset);
-    ctrl.ingest().set_clock(Arc::new(move || origin + *o.lock().unwrap()));
+    let ctrl = Controller::with_clock(env("idle-gc", 0), None, Clock::sim()).unwrap();
 
     let layout = ModelSpec::mlp(8, 4, 32).tensor_layout();
     let m = TensorModel::random_init(&layout, &mut Rng::new(3));
     assert!(matches!(ctrl.handle(begin_msg(&m, 41)), Message::Ack { ok: true, .. }));
     assert_eq!(ctrl.open_streams(), 1);
     // Heartbeats sweep idle streams; inside the window the stream lives.
-    *offset.lock().unwrap() = Duration::from_secs(299);
+    ctrl.clock().advance_to(Duration::from_secs(299));
     ctrl.handle(Message::Heartbeat { from: "driver".into() });
     assert_eq!(ctrl.open_streams(), 1);
     // Past the 5-minute timeout it is reclaimed…
-    *offset.lock().unwrap() = Duration::from_secs(601);
+    ctrl.clock().advance_to(Duration::from_secs(601));
     ctrl.handle(Message::Heartbeat { from: "driver".into() });
     assert_eq!(ctrl.open_streams(), 0);
     // …and both the slot and the announced-bytes budget are returned:
