@@ -1,5 +1,6 @@
 //! Typed federation environment (the paper's YAML env + model recipe).
 
+use crate::controller::health::HealthSpec;
 use crate::json::Value;
 use crate::net::chaos::ChaosSpec;
 use crate::tensor::CodecId;
@@ -377,6 +378,11 @@ pub struct FederationEnv {
     /// aggregator nodes to interpose between the root controller and
     /// the fleet, and the shard-local quorum. Default: flat.
     pub topology: TopologySpec,
+    /// Fleet health monitoring (`health:` block): heartbeat probe
+    /// period plus the missed-beat thresholds at which the failure
+    /// detector suspects / declares a peer dead. Consumed by the
+    /// driver's monitor and (in two-tier runs) the failover path.
+    pub health: HealthSpec,
 }
 
 impl FederationEnv {
@@ -609,6 +615,12 @@ impl FederationEnv {
             if let Some(x) = c.get("corrupt").and_then(|x| x.as_usize()) {
                 spec.corrupt = x;
             }
+            if let Some(x) = c.get("reconnect_after_ms").and_then(|x| x.as_u64()) {
+                spec.reconnect_after_ms = x;
+            }
+            if let Some(x) = c.get("kill_aggregator_at_round").and_then(|x| x.as_u64()) {
+                spec.kill_aggregator_at_round = x;
+            }
             b = b.chaos(spec);
         }
         if let Some(t) = v.get("topology") {
@@ -620,6 +632,22 @@ impl FederationEnv {
                 spec.shard_quorum = x;
             }
             b = b.topology(spec);
+        }
+        if let Some(h) = v.get("health") {
+            let mut spec = HealthSpec::default();
+            if let Some(x) = h.get("interval_ms").and_then(|x| x.as_u64()) {
+                spec.interval_ms = x;
+            }
+            if let Some(x) = h.get("suspect_after").and_then(|x| x.as_u64()) {
+                spec.suspect_after = x as u32;
+            }
+            if let Some(x) = h.get("dead_after").and_then(|x| x.as_u64()) {
+                spec.dead_after = x as u32;
+            }
+            if let Some(x) = h.get("ewma_alpha").and_then(|x| x.as_f64()) {
+                spec.ewma_alpha = x;
+            }
+            b = b.health(spec);
         }
         b.try_build()
     }
@@ -755,9 +783,17 @@ impl FederationEnv {
         o.push_str(&format!("  slow_loris: {}\n", c.slow_loris));
         o.push_str(&format!("  drip_ms: {}\n", c.drip_ms));
         o.push_str(&format!("  corrupt: {}\n", c.corrupt));
+        o.push_str(&format!("  reconnect_after_ms: {}\n", c.reconnect_after_ms));
+        o.push_str(&format!("  kill_aggregator_at_round: {}\n", c.kill_aggregator_at_round));
         o.push_str("topology:\n");
         o.push_str(&format!("  aggregators: {}\n", self.topology.aggregators));
         o.push_str(&format!("  shard_quorum: {}\n", self.topology.shard_quorum));
+        let h = &self.health;
+        o.push_str("health:\n");
+        o.push_str(&format!("  interval_ms: {}\n", h.interval_ms));
+        o.push_str(&format!("  suspect_after: {}\n", h.suspect_after));
+        o.push_str(&format!("  dead_after: {}\n", h.dead_after));
+        o.push_str(&format!("  ewma_alpha: {}\n", h.ewma_alpha));
         o
     }
 
@@ -826,6 +862,13 @@ impl FederationEnv {
             }
         }
         self.chaos.validate()?;
+        self.health.validate()?;
+        if self.chaos.kill_aggregator_at_round > 0 && self.topology.aggregators < 2 {
+            bail!(
+                "chaos kill_aggregator_at_round requires a topology with >= 2 aggregators \
+                 (failover needs a surviving shard to re-home onto)"
+            );
+        }
         if !self.topology.is_flat() {
             if self.topology.aggregators > self.learners {
                 bail!(
@@ -965,6 +1008,7 @@ impl FederationEnvBuilder {
                 delta_fallback: true,
                 chaos: ChaosSpec::default(),
                 topology: TopologySpec::default(),
+                health: HealthSpec::default(),
             },
         }
     }
@@ -1067,6 +1111,10 @@ impl FederationEnvBuilder {
     }
     pub fn topology(mut self, t: TopologySpec) -> Self {
         self.env.topology = t;
+        self
+    }
+    pub fn health(mut self, h: HealthSpec) -> Self {
+        self.env.health = h;
         self
     }
 
@@ -1430,8 +1478,16 @@ trainer:
                 slow_loris: 1,
                 drip_ms: 5,
                 corrupt: 1,
+                reconnect_after_ms: 40,
+                kill_aggregator_at_round: 2,
             })
             .topology(TopologySpec { aggregators: 3, shard_quorum: 0.5 })
+            .health(HealthSpec {
+                interval_ms: 200,
+                suspect_after: 2,
+                dead_after: 4,
+                ewma_alpha: 0.3,
+            })
             .build();
         env.delta_fallback = false;
         let back = FederationEnv::from_yaml(&env.to_yaml_source()).unwrap();
@@ -1472,5 +1528,46 @@ trainer:
             "chaos:\n  sever_fraction: 0.5\n  sever_after_sends: 0\n"
         )
         .is_err());
+        // The aggregator kill needs a survivor to fail over onto.
+        assert!(FederationEnv::from_yaml("chaos:\n  kill_aggregator_at_round: 1\n").is_err());
+        assert!(FederationEnv::from_yaml(
+            "learners: 4\ntopology:\n  aggregators: 1\nchaos:\n  kill_aggregator_at_round: 1\n"
+        )
+        .is_err());
+        let env = FederationEnv::from_yaml(
+            "learners: 4\ntopology:\n  aggregators: 2\nchaos:\n  kill_aggregator_at_round: 2\n  \
+             reconnect_after_ms: 30\n",
+        )
+        .unwrap();
+        assert_eq!(env.chaos.kill_aggregator_at_round, 2);
+        assert_eq!(env.chaos.reconnect_after_ms, 30);
+    }
+
+    #[test]
+    fn health_block_parses_defaults_and_validates() {
+        // Absent block: production-safe defaults.
+        let plain = FederationEnv::from_yaml("learners: 3\n").unwrap();
+        assert_eq!(plain.health, HealthSpec::default());
+        assert!(plain.health.validate().is_ok());
+
+        let env = FederationEnv::from_yaml(
+            "health:\n  interval_ms: 50\n  suspect_after: 2\n  dead_after: 6\n  \
+             ewma_alpha: 0.4\n",
+        )
+        .unwrap();
+        assert_eq!(
+            env.health,
+            HealthSpec { interval_ms: 50, suspect_after: 2, dead_after: 6, ewma_alpha: 0.4 }
+        );
+
+        for src in [
+            "health:\n  interval_ms: 0\n",
+            "health:\n  suspect_after: 0\n",
+            "health:\n  suspect_after: 5\n  dead_after: 3\n",
+            "health:\n  ewma_alpha: 0\n",
+            "health:\n  ewma_alpha: 1.5\n",
+        ] {
+            assert!(FederationEnv::from_yaml(src).is_err(), "{src} should be rejected");
+        }
     }
 }

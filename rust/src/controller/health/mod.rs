@@ -1,0 +1,287 @@
+//! Fleet health: heartbeat-driven failure detection.
+//!
+//! The federation's control plane never learns about a dead peer from
+//! the transport — a severed aggregator just stops answering. This
+//! module turns the existing `Heartbeat`/`HeartbeatAck` RPC into a
+//! failure detector: a prober (the driver's monitor for the root tier,
+//! each aggregator for its shard) feeds every probe outcome into a
+//! [`FailureDetector`], which classifies each peer as
+//! [`PeerStatus::Alive`], [`PeerStatus::Suspect`] or
+//! [`PeerStatus::Dead`] from two signals:
+//!
+//! * **Missed beats** — consecutive failed probes, the crash-stop
+//!   signal. `suspect_after` misses raise suspicion, `dead_after`
+//!   misses declare death (and the driver's failover path re-homes the
+//!   dead aggregator's learners).
+//! * **Ack silence** — time since the last successful ack, measured
+//!   against an EWMA of the peer's observed inter-ack gap (floored at
+//!   the probe interval). A peer whose acks historically arrive every
+//!   5 s is not suspected after 3 s of silence just because the probe
+//!   interval is 1 s.
+//!
+//! All time flows through the PR-8 [`Clock`] API, so the detector is
+//! fully exercisable on a simulated clock: tests advance virtual time
+//! and watch a peer decay Alive → Suspect → Dead in zero wall time.
+
+use crate::util::{Clock, Timestamp};
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// The `health:` env block: probe cadence and failure thresholds.
+///
+/// ```yaml
+/// health:
+///   interval_ms: 1000   # probe period
+///   suspect_after: 3    # consecutive misses -> Suspect
+///   dead_after: 5       # consecutive misses -> Dead (failover fires)
+///   ewma_alpha: 0.2     # inter-ack gap smoothing, in (0, 1]
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HealthSpec {
+    /// Heartbeat probe period in milliseconds.
+    pub interval_ms: u64,
+    /// Consecutive missed probes (or silence horizons) before a peer
+    /// is suspected.
+    pub suspect_after: u32,
+    /// Consecutive missed probes (or silence horizons) before a peer
+    /// is declared dead.
+    pub dead_after: u32,
+    /// EWMA smoothing factor for the observed inter-ack gap, in
+    /// (0, 1]: higher adapts faster, lower remembers longer.
+    pub ewma_alpha: f64,
+}
+
+impl Default for HealthSpec {
+    fn default() -> HealthSpec {
+        HealthSpec { interval_ms: 1000, suspect_after: 3, dead_after: 5, ewma_alpha: 0.2 }
+    }
+}
+
+impl HealthSpec {
+    /// Probe period as a [`Duration`].
+    pub fn interval(&self) -> Duration {
+        Duration::from_millis(self.interval_ms)
+    }
+
+    /// Check invariants (env loaders call this via
+    /// [`crate::config::FederationEnv::validate`]).
+    pub fn validate(&self) -> Result<()> {
+        if self.interval_ms == 0 {
+            bail!("health interval_ms must be >= 1");
+        }
+        if self.suspect_after == 0 {
+            bail!("health suspect_after must be >= 1");
+        }
+        if self.dead_after < self.suspect_after {
+            bail!("health dead_after must be >= suspect_after");
+        }
+        if !(self.ewma_alpha > 0.0 && self.ewma_alpha <= 1.0) {
+            bail!("health ewma_alpha must be in (0, 1]");
+        }
+        Ok(())
+    }
+}
+
+/// A peer's classification, ordered by severity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum PeerStatus {
+    /// Acks arriving (or no evidence yet): the peer participates.
+    Alive,
+    /// Enough misses/silence to stop trusting the peer, not enough to
+    /// act — probing continues.
+    Suspect,
+    /// The peer is gone: failover may re-home its dependents.
+    Dead,
+}
+
+#[derive(Debug, Default)]
+struct PeerHealth {
+    last_ack: Option<Timestamp>,
+    /// EWMA of the inter-ack gap, seconds.
+    ewma_gap: Option<f64>,
+    /// Consecutive failed probes since the last successful ack.
+    misses: u32,
+    /// Acks that arrived but reported `healthy: false` (the peer is
+    /// alive yet degraded — open rounds wedged, retries giving up).
+    degraded_acks: u64,
+}
+
+/// Per-peer failure detector fed by heartbeat probe outcomes.
+pub struct FailureDetector {
+    spec: HealthSpec,
+    clock: Clock,
+    peers: Mutex<HashMap<String, PeerHealth>>,
+}
+
+impl FailureDetector {
+    pub fn new(spec: HealthSpec, clock: Clock) -> FailureDetector {
+        FailureDetector { spec, clock, peers: Mutex::new(HashMap::new()) }
+    }
+
+    pub fn spec(&self) -> &HealthSpec {
+        &self.spec
+    }
+
+    /// Record a successful probe: any ack proves liveness (misses
+    /// reset), and the inter-ack gap feeds the EWMA horizon. An ack
+    /// with `healthy: false` still counts as alive — the peer is
+    /// responding — but is tallied as degraded.
+    pub fn observe_ack(&self, peer: &str, healthy: bool) {
+        let now = self.clock.now();
+        let mut peers = self.peers.lock().unwrap();
+        let p = peers.entry(peer.to_string()).or_default();
+        if let Some(last) = p.last_ack {
+            let gap = now.saturating_sub(last).as_secs_f64();
+            p.ewma_gap = Some(match p.ewma_gap {
+                Some(e) => e + self.spec.ewma_alpha * (gap - e),
+                None => gap,
+            });
+        }
+        p.last_ack = Some(now);
+        p.misses = 0;
+        if !healthy {
+            p.degraded_acks += 1;
+        }
+    }
+
+    /// Record a failed probe (dial refused, transport error, timeout).
+    pub fn observe_miss(&self, peer: &str) {
+        let mut peers = self.peers.lock().unwrap();
+        let p = peers.entry(peer.to_string()).or_default();
+        p.misses = p.misses.saturating_add(1);
+    }
+
+    /// Classify `peer` now: the worst of the missed-beat count and the
+    /// silence-vs-EWMA-horizon signal. Unknown peers are `Alive` (no
+    /// evidence against them).
+    pub fn status(&self, peer: &str) -> PeerStatus {
+        let peers = self.peers.lock().unwrap();
+        let Some(p) = peers.get(peer) else { return PeerStatus::Alive };
+        let mut worst = PeerStatus::Alive;
+        if p.misses >= self.spec.dead_after {
+            return PeerStatus::Dead;
+        }
+        if p.misses >= self.spec.suspect_after {
+            worst = PeerStatus::Suspect;
+        }
+        if let Some(last) = p.last_ack {
+            // Silence horizon: the peer's own observed cadence, never
+            // tighter than the configured probe interval.
+            let horizon = self.spec.interval().as_secs_f64().max(p.ewma_gap.unwrap_or(0.0));
+            let silence = self.clock.since(last).as_secs_f64();
+            if silence >= horizon * f64::from(self.spec.dead_after) {
+                return PeerStatus::Dead;
+            }
+            if silence >= horizon * f64::from(self.spec.suspect_after) {
+                worst = worst.max(PeerStatus::Suspect);
+            }
+        }
+        worst
+    }
+
+    /// How many of `peer`'s acks reported `healthy: false`.
+    pub fn degraded_acks(&self, peer: &str) -> u64 {
+        self.peers.lock().unwrap().get(peer).map_or(0, |p| p.degraded_acks)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> HealthSpec {
+        HealthSpec { interval_ms: 1000, suspect_after: 2, dead_after: 4, ewma_alpha: 0.5 }
+    }
+
+    #[test]
+    fn spec_defaults_validate_and_bad_specs_are_refused() {
+        assert!(HealthSpec::default().validate().is_ok());
+        assert_eq!(HealthSpec::default().interval(), Duration::from_millis(1000));
+        for bad in [
+            HealthSpec { interval_ms: 0, ..HealthSpec::default() },
+            HealthSpec { suspect_after: 0, ..HealthSpec::default() },
+            HealthSpec { suspect_after: 6, dead_after: 5, ..HealthSpec::default() },
+            HealthSpec { ewma_alpha: 0.0, ..HealthSpec::default() },
+            HealthSpec { ewma_alpha: 1.5, ..HealthSpec::default() },
+        ] {
+            assert!(bad.validate().is_err(), "{bad:?} should be rejected");
+        }
+    }
+
+    #[test]
+    fn consecutive_misses_decay_alive_suspect_dead_and_an_ack_resets() {
+        let det = FailureDetector::new(spec(), Clock::sim());
+        assert_eq!(det.status("agg-0"), PeerStatus::Alive, "no evidence yet");
+        det.observe_miss("agg-0");
+        assert_eq!(det.status("agg-0"), PeerStatus::Alive);
+        det.observe_miss("agg-0");
+        assert_eq!(det.status("agg-0"), PeerStatus::Suspect);
+        det.observe_miss("agg-0");
+        assert_eq!(det.status("agg-0"), PeerStatus::Suspect);
+        det.observe_miss("agg-0");
+        assert_eq!(det.status("agg-0"), PeerStatus::Dead);
+        // A suspect peer that answers again is rehabilitated in one ack.
+        let det = FailureDetector::new(spec(), Clock::sim());
+        det.observe_miss("agg-1");
+        det.observe_miss("agg-1");
+        assert_eq!(det.status("agg-1"), PeerStatus::Suspect);
+        det.observe_ack("agg-1", true);
+        assert_eq!(det.status("agg-1"), PeerStatus::Alive);
+    }
+
+    #[test]
+    fn silence_on_the_sim_clock_kills_without_a_single_probe_miss() {
+        // Pure time-based decay, zero wall time: the peer acked once,
+        // then went silent. suspect at 2x interval, dead at 4x.
+        let clock = Clock::sim();
+        let det = FailureDetector::new(spec(), clock.clone());
+        det.observe_ack("agg-0", true);
+        assert_eq!(det.status("agg-0"), PeerStatus::Alive);
+        clock.advance_to(Duration::from_millis(1999));
+        assert_eq!(det.status("agg-0"), PeerStatus::Alive);
+        clock.advance_to(Duration::from_millis(2000));
+        assert_eq!(det.status("agg-0"), PeerStatus::Suspect);
+        clock.advance_to(Duration::from_millis(3999));
+        assert_eq!(det.status("agg-0"), PeerStatus::Suspect);
+        clock.advance_to(Duration::from_millis(4000));
+        assert_eq!(det.status("agg-0"), PeerStatus::Dead);
+    }
+
+    #[test]
+    fn ewma_gap_widens_the_silence_horizon_for_slow_but_steady_peers() {
+        // A peer that acks every 5 s (probe interval 1 s) must not be
+        // suspected after 2 s of silence — its own cadence is the
+        // horizon. With ewma_alpha 0.5 and three 5 s gaps the EWMA sits
+        // at 5 s, so suspicion starts at 10 s of silence, death at 20.
+        let clock = Clock::sim();
+        let det = FailureDetector::new(spec(), clock.clone());
+        for i in 0..4u64 {
+            clock.advance_to(Duration::from_secs(5 * i));
+            det.observe_ack("slow", true);
+        }
+        // 6 s of silence: way past 2x the probe interval, well inside
+        // 2x the observed cadence.
+        clock.advance_to(Duration::from_secs(15 + 6));
+        assert_eq!(det.status("slow"), PeerStatus::Alive);
+        clock.advance_to(Duration::from_secs(15 + 10));
+        assert_eq!(det.status("slow"), PeerStatus::Suspect);
+        clock.advance_to(Duration::from_secs(15 + 20));
+        assert_eq!(det.status("slow"), PeerStatus::Dead);
+    }
+
+    #[test]
+    fn degraded_acks_count_but_do_not_kill() {
+        let clock = Clock::sim();
+        let det = FailureDetector::new(spec(), clock.clone());
+        det.observe_ack("learner-3", false);
+        det.observe_ack("learner-3", false);
+        det.observe_ack("learner-3", true);
+        assert_eq!(det.degraded_acks("learner-3"), 2);
+        // The peer answers, so it is alive — degradation is a signal
+        // for operators, not a death sentence.
+        assert_eq!(det.status("learner-3"), PeerStatus::Alive);
+        assert_eq!(det.degraded_acks("unknown"), 0);
+    }
+}

@@ -23,6 +23,7 @@
 //! associative weighted sum the root rule expects as one contribution.
 
 use super::aggregation::{AggregationRule, Backend, Contribution, FedAvg};
+use super::health::FailureDetector;
 use super::Controller;
 use crate::config::{FederationEnv, TopologySpec};
 use crate::net::retry::RetryPolicy;
@@ -31,7 +32,8 @@ use crate::proto::client::{self, RpcError, StreamSend};
 use crate::proto::ingest::{StreamBegin, StreamIngest};
 use crate::proto::wire::{fnv1a64, FNV64_INIT};
 use crate::proto::{
-    ErrorCode, EvalResult, Message, ModelProto, StreamPurpose, TaskMeta, TaskSpec, PROTO_VERSION,
+    ErrorCode, EvalResult, HealthProbe, Message, ModelProto, StreamPurpose, TaskMeta, TaskSpec,
+    PROTO_VERSION,
 };
 use crate::tensor::{ByteOrder, CodecId, DType, TensorModel};
 use crate::proto::ingest::IngestLimits;
@@ -88,6 +90,9 @@ pub struct AggregatorNode {
     accepted_upstream: Mutex<Option<Vec<CodecId>>>,
     /// Single-threaded: shard rounds execute in dispatch order.
     executor: ThreadPool,
+    /// Failure detector over this shard's learners, fed by the probe
+    /// sweeps a root heartbeat cascades into ([`AggregatorNode::probe_shard`]).
+    detector: FailureDetector,
     shutdown: AtomicBool,
     /// Partial uploads abandoned after retry exhaustion (this node's
     /// own upstream leg; the embedded controller counts its own).
@@ -123,6 +128,7 @@ impl AggregatorNode {
             last_model: Mutex::new(None),
             upstream_conn: Mutex::new(None),
             accepted_upstream: Mutex::new(None),
+            detector: FailureDetector::new(env.health, clock.clone()),
             executor: ThreadPool::with_clock(1, clock),
             shutdown: AtomicBool::new(false),
             retry_give_ups: AtomicU64::new(0),
@@ -139,6 +145,58 @@ impl AggregatorNode {
 
     pub fn is_shutdown(&self) -> bool {
         self.shutdown.load(Ordering::SeqCst)
+    }
+
+    /// Crash-stop this aggregator (chaos kill): every subsequent RPC —
+    /// probes included — answers `Unavailable`, so the root's failure
+    /// detector counts misses until it declares the node dead and the
+    /// driver's failover path re-homes the shard. The embedded shard
+    /// controller is shut down too, so queued shard rounds exit instead
+    /// of dispatching from a dead node.
+    pub fn kill(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        let _ = self.inner.handle(Message::Shutdown);
+    }
+
+    /// This shard's failure detector (fed by [`AggregatorNode::probe_shard`]).
+    pub fn detector(&self) -> &FailureDetector {
+        &self.detector
+    }
+
+    /// Component state for heartbeat acks: the embedded controller's
+    /// snapshot, plus this node's own dispatch ingest plane and its
+    /// upstream give-ups.
+    pub fn health_probe(&self) -> HealthProbe {
+        let inner = self.inner.health_probe();
+        HealthProbe {
+            open_rounds: inner.open_rounds,
+            open_streams: inner.open_streams + self.ingest.open_streams() as u64,
+            retry_give_ups: self.retry_give_ups(),
+        }
+    }
+
+    /// Probe every shard learner once (the aggregator→learner heartbeat
+    /// leg), feeding this node's failure detector. Queued on the round
+    /// executor by an incoming root heartbeat, so probing cascades down
+    /// the tree: the driver probes the root tier, each aggregator
+    /// probes its own shard.
+    pub fn probe_shard(self: &Arc<Self>) {
+        let node = Arc::clone(self);
+        self.executor.spawn(move || {
+            if node.is_shutdown() {
+                return;
+            }
+            for h in node.inner.learners_snapshot() {
+                let from = format!("aggregator/{}", node.id);
+                let outcome = crate::net::connect(&h.endpoint, node.psk)
+                    .map_err(RpcError::Transport)
+                    .and_then(|mut conn| client::heartbeat_probe(conn.as_mut(), &from));
+                match outcome {
+                    Ok((_, healthy, _)) => node.detector.observe_ack(&h.id, healthy),
+                    Err(_) => node.detector.observe_miss(&h.id),
+                }
+            }
+        });
     }
 
     /// Give-ups across both leg directions: this node's upstream
@@ -528,12 +586,17 @@ impl Service for AggregatorServicer {
             | Message::GetModel) => node.inner.handle(msg),
             Message::Heartbeat { .. } => {
                 // Sweep idle streams on BOTH planes (root dispatch and
-                // shard uploads), like the flat components do.
+                // shard uploads), like the flat components do — then
+                // cascade: a root probe triggers this node's own probe
+                // sweep of its shard learners (on the round executor).
                 node.ingest.gc_idle();
                 node.inner.ingest().gc_idle();
+                node.probe_shard();
+                let health = node.health_probe();
                 Message::HeartbeatAck {
                     component: format!("aggregator/{}", node.id),
-                    healthy: true,
+                    healthy: health.is_healthy(),
+                    health,
                 }
             }
             Message::Shutdown => {
@@ -662,6 +725,18 @@ impl Service for AggregatorServicer {
             }
         }
     }
+}
+
+/// Deterministic failover re-homing plan: orphan learner `i` (in the
+/// dead shard's sorted order) joins surviving aggregator
+/// `assignments[i]` (an index into the sorted survivor list),
+/// round-robin so re-homed load spreads evenly. Shared by the driver's
+/// failover path and the tests that reconstruct the post-failover
+/// grouping for the bitwise reference fold — both sides MUST derive
+/// the same plan.
+pub fn rehome_assignments(orphans: usize, survivors: usize) -> Vec<usize> {
+    assert!(survivors > 0, "failover needs at least one surviving aggregator");
+    (0..orphans).map(|i| i % survivors).collect()
 }
 
 /// Reference two-tier fold: FedAvg each shard's contributions (sorted
@@ -836,9 +911,11 @@ mod tests {
                         Err(reply) => reply,
                     }
                 }
-                Message::Heartbeat { .. } => {
-                    Message::HeartbeatAck { component: self.id.clone(), healthy: true }
-                }
+                Message::Heartbeat { .. } => Message::HeartbeatAck {
+                    component: self.id.clone(),
+                    healthy: true,
+                    health: HealthProbe::default(),
+                },
                 Message::Shutdown => Message::Ack { task_id: 0, ok: true },
                 other => {
                     Message::error(ErrorCode::Unsupported, format!("unexpected {}", other.kind()))
@@ -1034,6 +1111,74 @@ mod tests {
         // Upload direction: the same accepted set degrades the
         // configured upload codec along the lossless chain.
         assert_eq!(CodecId::DeltaRle.degrade_to(&[CodecId::F32, CodecId::Delta]), CodecId::Delta);
+    }
+
+    /// Tentpole: a root heartbeat makes the aggregator (a) report real
+    /// component state instead of a hardcoded `healthy: true`, and (b)
+    /// cascade a probe sweep over its own shard, feeding its failure
+    /// detector — a served learner stays Alive while a ghost endpoint
+    /// decays to Dead.
+    #[test]
+    fn aggregator_heartbeat_reports_state_and_cascades_probes() {
+        use super::super::health::PeerStatus;
+        let env = test_env("h-health", 2);
+        let node =
+            AggregatorNode::new("agg-h", "inproc://h-health-root-unused", &env, 2, None).unwrap();
+        let svc = AggregatorServicer(Arc::clone(&node));
+        let live = Arc::new(StubLearner::new("l-live", 4, "inproc://h-health-cb-unused", 300));
+        let _lsrv =
+            crate::net::serve("inproc://h-health-live", live as Arc<dyn Service>, None).unwrap();
+        node.inner().register_learner("l-live", "inproc://h-health-live", 4);
+        node.inner().register_learner("l-ghost", "inproc://h-health-ghost", 4);
+
+        // Each heartbeat queues one probe sweep; with dead_after 5 the
+        // ghost must be declared dead within a handful of sweeps.
+        let sw = Stopwatch::start();
+        loop {
+            match svc.handle(Message::Heartbeat { from: "root".into() }) {
+                Message::HeartbeatAck { component, healthy, health } => {
+                    assert_eq!(component, "aggregator/agg-h");
+                    assert!(healthy, "fresh aggregator must ack healthy");
+                    assert_eq!(health.retry_give_ups, 0);
+                }
+                other => panic!("unexpected {}", other.kind()),
+            }
+            if node.detector().status("l-ghost") == PeerStatus::Dead {
+                break;
+            }
+            assert!(sw.elapsed() < Duration::from_secs(10), "ghost never declared dead");
+            crate::util::Clock::system().sleep(Duration::from_millis(5));
+        }
+        assert_eq!(node.detector().status("l-live"), PeerStatus::Alive);
+
+        // An upstream give-up degrades the ack.
+        node.retry_give_ups.fetch_add(1, Ordering::SeqCst);
+        match svc.handle(Message::Heartbeat { from: "root".into() }) {
+            Message::HeartbeatAck { healthy, health, .. } => {
+                assert!(!healthy, "give-ups must degrade the ack");
+                assert_eq!(health.retry_give_ups, 1);
+            }
+            other => panic!("unexpected {}", other.kind()),
+        }
+
+        // kill(): a crash-stopped node refuses everything, probes
+        // included — that is the miss signal failover keys off.
+        node.kill();
+        assert!(matches!(
+            svc.handle(Message::Heartbeat { from: "root".into() }),
+            Message::Error { code: ErrorCode::Unavailable, .. }
+        ));
+    }
+
+    /// The re-homing plan is deterministic round-robin and panics
+    /// without survivors (failover is impossible then by construction —
+    /// env validation refuses single-aggregator kill plans).
+    #[test]
+    fn rehome_assignments_round_robin() {
+        assert_eq!(rehome_assignments(0, 3), Vec::<usize>::new());
+        assert_eq!(rehome_assignments(4, 2), vec![0, 1, 0, 1]);
+        assert_eq!(rehome_assignments(3, 5), vec![0, 1, 2]);
+        assert!(std::panic::catch_unwind(|| rehome_assignments(1, 0)).is_err());
     }
 
     /// The reference fold with one shard of one contribution is the

@@ -9,6 +9,7 @@
 
 pub mod aggregation;
 mod bases;
+pub mod health;
 pub mod hierarchy;
 pub mod pacing;
 pub mod scheduling;
@@ -26,8 +27,8 @@ use crate::proto::ingest::{BufferPool, FinishedStream, IngestLimits, StreamBegin
 use crate::proto::wire::{fnv1a64, FNV64_INIT};
 use crate::runtime::trace::TraceRecorder;
 use crate::proto::{
-    ErrorCode, Message, ModelProto, StreamPurpose, TaskMeta, TaskSpec, TensorLayoutProto,
-    PROTO_VERSION,
+    ErrorCode, HealthProbe, Message, ModelProto, StreamPurpose, TaskMeta, TaskSpec,
+    TensorLayoutProto, PROTO_VERSION,
 };
 use crate::tensor::{ByteOrder, CodecId, DType, TensorModel};
 use crate::util::clock::{Clock, Timestamp};
@@ -438,6 +439,19 @@ impl Controller {
     /// Delta→f32 fallback re-sends across both dispatch paths.
     pub fn fallback_sends(&self) -> u64 {
         self.fallback_sends.get()
+    }
+
+    /// Real component state for `HeartbeatAck`: whether a round is
+    /// open, how many ingest streams are live (wedged streams show up
+    /// here until the GC reclaims them), and how many dispatches were
+    /// abandoned after retry exhaustion. The ack's `healthy` flag is
+    /// [`HealthProbe::is_healthy`] over this snapshot.
+    pub fn health_probe(&self) -> HealthProbe {
+        HealthProbe {
+            open_rounds: u64::from(self.state.lock().unwrap().round.is_some()),
+            open_streams: self.open_streams() as u64,
+            retry_give_ups: self.retry_give_ups(),
+        }
     }
 
     /// Override the LRU cap on distinct pinned delta-base models
@@ -1885,7 +1899,12 @@ impl Controller {
                 // a dead peer (otherwise they'd only be reclaimed when
                 // the next streamed upload begins).
                 self.ingest.gc_idle();
-                Message::HeartbeatAck { component: "controller".into(), healthy: true }
+                let health = self.health_probe();
+                Message::HeartbeatAck {
+                    component: "controller".into(),
+                    healthy: health.is_healthy(),
+                    health,
+                }
             }
             Message::GetModel => {
                 // Snapshot under the lock, serialize after releasing it —
@@ -2981,6 +3000,32 @@ mod tests {
             Message::Error { .. }
         ));
         assert!(ctrl.is_shutdown());
+    }
+
+    #[test]
+    fn heartbeat_ack_reports_real_component_state() {
+        let ctrl = Controller::new(env(), None).unwrap();
+        match ctrl.handle(Message::Heartbeat { from: "driver".into() }) {
+            Message::HeartbeatAck { component, healthy, health } => {
+                assert_eq!(component, "controller");
+                assert!(healthy);
+                assert_eq!(health, HealthProbe::default());
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // An open round and a retry give-up surface in the probe; the
+        // give-up flips the ack to degraded.
+        ctrl.ship_model(model(1));
+        ctrl.open_round(1, &["a".into()]);
+        ctrl.retry_give_ups.incr();
+        match ctrl.handle(Message::Heartbeat { from: "driver".into() }) {
+            Message::HeartbeatAck { healthy, health, .. } => {
+                assert!(!healthy, "retry give-ups must degrade the ack");
+                assert_eq!(health.open_rounds, 1);
+                assert_eq!(health.retry_give_ups, 1);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
     }
 
     #[test]

@@ -11,6 +11,7 @@
 //! (framed TCP on localhost).
 
 use crate::config::{FederationEnv, Protocol, SecureSpec, TopologySpec, TrainerKind, TransportKind};
+use crate::controller::health::{FailureDetector, PeerStatus};
 use crate::controller::hierarchy::{AggregatorNode, AggregatorServicer};
 use crate::controller::{scheduling, Controller};
 use crate::harness::loadtest::model_digest;
@@ -80,6 +81,17 @@ pub struct FederationReport {
     /// bitwise identical — e.g. a flat fleet vs the same fleet behind
     /// aggregators — compare equal here.
     pub community_digest: u64,
+    /// Aggregator failovers the driver executed mid-run: shard owners
+    /// the failure detector declared dead whose learners were re-homed
+    /// onto survivors. 0 for flat runs and kills never scheduled.
+    pub failovers: u64,
+    /// Learners re-homed onto surviving aggregators across all
+    /// failovers.
+    pub rehomed_learners: u64,
+    /// Rounds from the kill round (inclusive) to the first round every
+    /// surviving aggregator completed — the recovery metric the CI
+    /// bench gate bounds, lower is better. 0 when no failover ran.
+    pub rounds_to_recover: u64,
     /// One-call snapshot of the run's [`CounterRegistry`] set: the
     /// controller's registry with every learner's merged in, keyed by
     /// [`crate::metrics::counters::names`]. The scalar degradation
@@ -214,12 +226,31 @@ pub fn run_distributed(env: &FederationEnv) -> Result<FederationReport> {
     run_with_trainer(&env, |idx| Arc::clone(&trainers[idx]))
 }
 
+/// Run the env's federation and also record the (root) controller's
+/// deterministic trace (`metisfl driver --record`). Recording starts
+/// before the first registration frame and seals right after the last
+/// round, so chaos and failover wire events — a dead aggregator's
+/// deregistration, the re-homed shard's refreshed weights — are part of
+/// the replayable timeline.
+pub fn run_recorded(env: &FederationEnv) -> Result<(FederationReport, Option<Vec<u8>>)> {
+    let trainers = trainers_for(env)?;
+    run_federation(env, |idx| Arc::clone(&trainers[idx]), true)
+}
+
 /// Core driver: run a federation with a caller-supplied trainer factory
 /// (one call per learner index).
 pub fn run_with_trainer(
     env: &FederationEnv,
     make_trainer: impl Fn(usize) -> Arc<dyn Trainer>,
 ) -> Result<FederationReport> {
+    run_federation(env, make_trainer, false).map(|(report, _)| report)
+}
+
+fn run_federation(
+    env: &FederationEnv,
+    make_trainer: impl Fn(usize) -> Arc<dyn Trainer>,
+    record: bool,
+) -> Result<(FederationReport, Option<Vec<u8>>)> {
     env.validate()?;
     if env.secure != SecureSpec::None {
         bail!(
@@ -228,7 +259,7 @@ pub fn run_with_trainer(
         );
     }
     if !env.topology.is_flat() {
-        return run_two_tier(env, make_trainer);
+        return run_two_tier(env, make_trainer, record);
     }
     let run = next_run_id();
     let sw = Stopwatch::start();
@@ -236,6 +267,11 @@ pub fn run_with_trainer(
 
     // --- Initialization (Fig. 8) --------------------------------------
     let controller = Controller::new(env.clone(), psk)?;
+    if record {
+        // Before serving: registrations are part of the recorded
+        // timeline.
+        controller.start_recording();
+    }
     let (ctrl_endpoint, _ctrl_server) = serve_component(
         env,
         &format!("ctrl-{run}"),
@@ -334,6 +370,10 @@ pub fn run_with_trainer(
         }
     };
 
+    // Seal the trace before any shutdown traffic: Shutdown frames are
+    // not part of the replayable timeline.
+    let trace = if record { controller.finish_recording() } else { None };
+
     // --- Shutdown: learners first, then controller (Fig. 8) ------------
     let missed_heartbeats = monitor.stop();
     for ep in &learner_endpoints {
@@ -356,25 +396,31 @@ pub fn run_with_trainer(
     for l in &learners {
         l.counters().merge_into(&mut counters);
     }
-    Ok(FederationReport {
-        env_name: env.name.clone(),
-        round_metrics,
-        op_metrics: controller.metrics(),
-        final_loss,
-        wall_clock: sw.elapsed(),
-        missed_heartbeats,
-        peak_wire_ingest_bytes: controller.peak_wire_ingest_bytes(),
-        effective_stream_chunk_bytes: env.effective_stream_chunk(),
-        wire_bytes_sent: wire_sent,
-        wire_bytes_saved: wire_raw.saturating_sub(wire_sent),
-        wire_ingest_bytes: controller.ingest().recv_wire_bytes(),
-        retry_give_ups: controller.retry_give_ups() + learner_give_ups,
-        fallback_sends: controller.fallback_sends() + learner_fallbacks,
-        streams_refused: controller.ingest().streams_refused(),
-        streams_gced: controller.ingest().streams_gced(),
-        community_digest: controller.community().map(|(m, _)| model_digest(&m)).unwrap_or(0),
-        counters,
-    })
+    Ok((
+        FederationReport {
+            env_name: env.name.clone(),
+            round_metrics,
+            op_metrics: controller.metrics(),
+            final_loss,
+            wall_clock: sw.elapsed(),
+            missed_heartbeats,
+            peak_wire_ingest_bytes: controller.peak_wire_ingest_bytes(),
+            effective_stream_chunk_bytes: env.effective_stream_chunk(),
+            wire_bytes_sent: wire_sent,
+            wire_bytes_saved: wire_raw.saturating_sub(wire_sent),
+            wire_ingest_bytes: controller.ingest().recv_wire_bytes(),
+            retry_give_ups: controller.retry_give_ups() + learner_give_ups,
+            fallback_sends: controller.fallback_sends() + learner_fallbacks,
+            streams_refused: controller.ingest().streams_refused(),
+            streams_gced: controller.ingest().streams_gced(),
+            community_digest: controller.community().map(|(m, _)| model_digest(&m)).unwrap_or(0),
+            failovers: 0,
+            rehomed_learners: 0,
+            rounds_to_recover: 0,
+            counters,
+        },
+        trace,
+    ))
 }
 
 /// Two-tier run: root controller ← aggregator shard owners ← learners.
@@ -388,7 +434,8 @@ pub fn run_with_trainer(
 fn run_two_tier(
     env: &FederationEnv,
     make_trainer: impl Fn(usize) -> Arc<dyn Trainer>,
-) -> Result<FederationReport> {
+    record: bool,
+) -> Result<(FederationReport, Option<Vec<u8>>)> {
     let topo = &env.topology;
     if matches!(env.protocol, Protocol::Asynchronous { .. }) {
         bail!("topology.aggregators > 1 requires a synchronous or semi-synchronous protocol");
@@ -409,6 +456,12 @@ fn run_two_tier(
     root_env.learners = topo.aggregators;
     root_env.topology = TopologySpec::default();
     let controller = Controller::new(root_env, psk)?;
+    if record {
+        // Before serving: the aggregator tier's registrations (and a
+        // failover's re-registrations) are part of the recorded
+        // timeline.
+        controller.start_recording();
+    }
     let (ctrl_endpoint, ctrl_server) = serve_component(
         env,
         &format!("ctrl-{run}"),
@@ -520,9 +573,84 @@ fn run_two_tier(
     );
 
     // --- Federated training over the tree ------------------------------
+    // Chaos kill plan: the env may schedule one aggregator's crash-stop
+    // at the top of a round. The same env + seed always selects the
+    // same victim; failover re-homes its orphaned shard onto the
+    // survivors before that round runs.
+    let kill_round = env.chaos.kill_aggregator_at_round;
+    let victim = env.chaos.kill_victim(topo.aggregators, env.seed);
+    let mut shard_of: Vec<usize> = (0..env.learners).map(|i| topo.shard_of(i)).collect();
+    let mut live_aggregators = topo.aggregators;
+    let mut failovers = 0u64;
+    let mut rehomed_learners = 0u64;
+    let mut rounds_to_recover = 0u64;
     let mut round_rng = Rng::new(env.seed ^ 0xD157);
     let mut round_metrics = Vec::with_capacity(env.rounds);
     for round in 1..=env.rounds as u64 {
+        if let Some(v) = victim.filter(|_| round == kill_round) {
+            // --- Failover: kill, detect, re-home ------------------------
+            let victim_id = format!("agg-{v}");
+            log_warn("driver", &format!("chaos: crash-stopping {victim_id} at round {round}"));
+            agg_nodes[v].kill();
+
+            // Detect the death through the probe path, not by fiat: the
+            // detector sees only misses once the node crash-stops, and
+            // declares Dead after `dead_after` of them.
+            let detector = FailureDetector::new(env.health, controller.clock().clone());
+            while detector.status(&victim_id) != PeerStatus::Dead {
+                let outcome = crate::net::connect(&agg_endpoints[v], psk)
+                    .map_err(client::RpcError::Transport)
+                    .and_then(|mut c| client::heartbeat_probe(c.as_mut(), "driver"));
+                match outcome {
+                    Ok((_, healthy, _)) => detector.observe_ack(&victim_id, healthy),
+                    Err(_) => detector.observe_miss(&victim_id),
+                }
+                controller.clock().sleep(env.health.interval());
+            }
+            log_warn("driver", &format!("{victim_id} declared dead; re-homing its shard"));
+
+            // Root-side removal goes over the wire so a recorded trace
+            // replays the failover exactly.
+            {
+                let mut c = crate::net::connect(&ctrl_endpoint, psk)?;
+                client::deregister(c.as_mut(), &victim_id)
+                    .map_err(|e| anyhow::anyhow!("deregistering {victim_id} at root: {e}"))?;
+            }
+
+            // Re-home the orphaned shard round-robin over the survivors
+            // (both sides in index order, so tests can reconstruct the
+            // exact plan for the bitwise reference fold). Re-homing
+            // drops each learner's delta base: the first dispatch from
+            // the new aggregator degrades to full f32 and re-seeds it.
+            let orphans: Vec<usize> = (0..env.learners).filter(|&i| shard_of[i] == v).collect();
+            let survivors: Vec<usize> = (0..topo.aggregators).filter(|&s| s != v).collect();
+            let plan = crate::controller::hierarchy::rehome_assignments(
+                orphans.len(),
+                survivors.len(),
+            );
+            for (j, &i) in orphans.iter().enumerate() {
+                let target = survivors[plan[j]];
+                learners[i].rehome(&agg_endpoints[target]);
+                learners[i]
+                    .register(&learner_endpoints[i])
+                    .with_context(|| format!("re-homing learner-{i} onto agg-{target}"))?;
+                shard_of[i] = target;
+            }
+            rehomed_learners += orphans.len() as u64;
+
+            // Refresh every survivor's upstream registration so the
+            // root's sample weights match the new shard memberships
+            // (Deregister + Register — the graceful re-target path).
+            for &s in &survivors {
+                let members = shard_of.iter().filter(|&&x| x == s).count();
+                agg_nodes[s].deregister().with_context(|| format!("re-targeting agg-{s}"))?;
+                agg_nodes[s]
+                    .register(&agg_endpoints[s], members * env.samples_per_learner)
+                    .with_context(|| format!("re-registering agg-{s} upstream"))?;
+            }
+            live_aggregators = survivors.len();
+            failovers += 1;
+        }
         let report = scheduling::run_round(&controller, round, &mut round_rng)?;
         log_info(
             "driver",
@@ -531,8 +659,17 @@ fn run_two_tier(
                 env.rounds, report.federation_round, report.aggregation, report.community_eval_loss
             ),
         );
+        if failovers > 0 && rounds_to_recover == 0 && report.completed == live_aggregators {
+            // First fully-reported round at the new topology; the count
+            // includes the kill round itself.
+            rounds_to_recover = round - kill_round + 1;
+        }
         round_metrics.push(report);
     }
+
+    // Seal the trace before any shutdown traffic: Shutdown frames are
+    // not part of the replayable timeline.
+    let trace = if record { controller.finish_recording() } else { None };
 
     // --- Shutdown: learners, then aggregators, then root ---------------
     let missed_heartbeats = monitor.stop();
@@ -562,28 +699,34 @@ fn run_two_tier(
     for l in &learners {
         l.counters().merge_into(&mut counters);
     }
-    Ok(FederationReport {
-        env_name: env.name.clone(),
-        round_metrics,
-        op_metrics: controller.metrics(),
-        final_loss,
-        wall_clock: sw.elapsed(),
-        missed_heartbeats,
-        // Root-tier counters only: the acceptance criterion is that the
-        // ROOT's ingest stays O(chunk × aggregators) however large the
-        // learner fleet grows.
-        peak_wire_ingest_bytes: controller.peak_wire_ingest_bytes(),
-        effective_stream_chunk_bytes: env.effective_stream_chunk(),
-        wire_bytes_sent: wire_sent,
-        wire_bytes_saved: wire_raw.saturating_sub(wire_sent),
-        wire_ingest_bytes: controller.ingest().recv_wire_bytes(),
-        retry_give_ups: controller.retry_give_ups() + agg_give_ups + learner_give_ups,
-        fallback_sends: controller.fallback_sends() + agg_fallbacks + learner_fallbacks,
-        streams_refused: controller.ingest().streams_refused(),
-        streams_gced: controller.ingest().streams_gced(),
-        community_digest: controller.community().map(|(m, _)| model_digest(&m)).unwrap_or(0),
-        counters,
-    })
+    Ok((
+        FederationReport {
+            env_name: env.name.clone(),
+            round_metrics,
+            op_metrics: controller.metrics(),
+            final_loss,
+            wall_clock: sw.elapsed(),
+            missed_heartbeats,
+            // Root-tier counters only: the acceptance criterion is that
+            // the ROOT's ingest stays O(chunk × aggregators) however
+            // large the learner fleet grows.
+            peak_wire_ingest_bytes: controller.peak_wire_ingest_bytes(),
+            effective_stream_chunk_bytes: env.effective_stream_chunk(),
+            wire_bytes_sent: wire_sent,
+            wire_bytes_saved: wire_raw.saturating_sub(wire_sent),
+            wire_ingest_bytes: controller.ingest().recv_wire_bytes(),
+            retry_give_ups: controller.retry_give_ups() + agg_give_ups + learner_give_ups,
+            fallback_sends: controller.fallback_sends() + agg_fallbacks + learner_fallbacks,
+            streams_refused: controller.ingest().streams_refused(),
+            streams_gced: controller.ingest().streams_gced(),
+            community_digest: controller.community().map(|(m, _)| model_digest(&m)).unwrap_or(0),
+            failovers,
+            rehomed_learners,
+            rounds_to_recover,
+            counters,
+        },
+        trace,
+    ))
 }
 
 /// Serve a component on the env's transport; returns (endpoint, handle).

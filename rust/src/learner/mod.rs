@@ -47,7 +47,10 @@ use std::time::Duration;
 /// A learner node.
 pub struct Learner {
     pub id: String,
-    controller_endpoint: String,
+    /// Endpoint of the upstream the learner registers with and calls
+    /// back to — mutable because failover re-homes the learner onto a
+    /// surviving aggregator mid-run (see [`Learner::rehome`]).
+    controller_endpoint: Mutex<String>,
     psk: Psk,
     trainer: Arc<dyn Trainer>,
     dataset: Arc<Dataset>,
@@ -125,7 +128,7 @@ impl Learner {
         let counters = CounterRegistry::new();
         Arc::new(Learner {
             id: id.to_string(),
-            controller_endpoint: controller_endpoint.to_string(),
+            controller_endpoint: Mutex::new(controller_endpoint.to_string()),
             psk,
             trainer,
             dataset: Arc::new(dataset),
@@ -217,6 +220,19 @@ impl Learner {
         self.last_community.lock().unwrap().as_ref().map(|(r, _)| *r)
     }
 
+    /// Point the learner at a new upstream (failover re-homing). Drops
+    /// the callback connection (the next call re-dials and re-runs the
+    /// codec handshake against the new peer) and forgets the recorded
+    /// delta base — the new aggregator does not hold our old base, so
+    /// the first re-homed upload degrades to full f32 instead of
+    /// shipping a delta nobody can decode.
+    pub fn rehome(&self, new_endpoint: &str) {
+        *self.controller_endpoint.lock().unwrap() = new_endpoint.to_string();
+        *self.callback_conn.lock().unwrap() = None;
+        *self.accepted_codecs.lock().unwrap() = None;
+        *self.last_community.lock().unwrap() = None;
+    }
+
     /// Register with the controller (Fig. 8 initialization).
     pub fn register(&self, own_endpoint: &str) -> Result<usize> {
         self.with_callback_conn(|conn| {
@@ -243,10 +259,11 @@ impl Learner {
     ) -> Result<T, RpcError> {
         let mut guard = self.callback_conn.lock().unwrap();
         if guard.is_none() {
+            let endpoint = self.controller_endpoint.lock().unwrap().clone();
             let plan = self.chaos.lock().unwrap().clone();
             let mut conn = match &plan {
-                Some(p) => connect_with_chaos(&self.controller_endpoint, self.psk, p, &self.clock),
-                None => crate::net::connect(&self.controller_endpoint, self.psk),
+                Some(p) => connect_with_chaos(&endpoint, self.psk, p, &self.clock),
+                None => crate::net::connect(&endpoint, self.psk),
             }
             .map_err(RpcError::Transport)?;
             let (_, accepted) = client::hello_negotiate(conn.as_mut())?;
@@ -485,12 +502,19 @@ impl Service for LearnerServicer {
                 }
             }
             Message::Heartbeat { .. } => {
-                // Like the controller, use the driver's periodic probe to
-                // sweep streams abandoned by a dead peer.
+                // Like the controller, use the periodic probe to sweep
+                // streams abandoned by a dead peer — then report real
+                // state, not a hardcoded `true`.
                 learner.ingest.gc_idle();
+                let health = crate::proto::HealthProbe {
+                    open_rounds: 0,
+                    open_streams: learner.ingest.open_streams() as u64,
+                    retry_give_ups: learner.retry_give_ups(),
+                };
                 Message::HeartbeatAck {
                     component: format!("learner/{}", learner.id),
-                    healthy: true,
+                    healthy: health.is_healthy(),
+                    health,
                 }
             }
             Message::Shutdown => {
@@ -718,6 +742,50 @@ mod tests {
             servicer.handle(Message::EvaluateModel { task_id: 1, round: 1, model: model() }),
             Message::Error { .. }
         ));
+    }
+
+    #[test]
+    fn heartbeat_ack_reports_real_learner_state() {
+        let (learner, _capture, _h) = setup("degraded-ack");
+        let servicer = LearnerServicer(Arc::clone(&learner));
+        match servicer.handle(Message::Heartbeat { from: "driver".into() }) {
+            Message::HeartbeatAck { component, healthy, health } => {
+                assert_eq!(component, "learner/l0");
+                assert!(healthy, "fresh learner must ack healthy");
+                assert_eq!(health, crate::proto::HealthProbe::default());
+            }
+            other => panic!("unexpected {}", other.kind()),
+        }
+        // A learner that has abandoned an upload acks degraded — alive,
+        // answering, but no longer claiming `healthy: true`.
+        learner.retry_give_ups.incr();
+        match servicer.handle(Message::Heartbeat { from: "driver".into() }) {
+            Message::HeartbeatAck { healthy, health, .. } => {
+                assert!(!healthy, "give-ups must degrade the ack");
+                assert_eq!(health.retry_give_ups, 1);
+            }
+            other => panic!("unexpected {}", other.kind()),
+        }
+    }
+
+    #[test]
+    fn rehome_swaps_the_upstream_and_drops_the_delta_base() {
+        let (learner, _capture, _h) = setup("rehome-a");
+        // Pretend a lossless dispatch established a delta base.
+        let layout = ModelSpec::mlp(4, 2, 8).tensor_layout();
+        let base = Arc::new(TensorModel::random_init(&layout, &mut Rng::new(11)));
+        learner.record_community(3, CodecId::Delta, &base);
+        assert_eq!(learner.last_community_round(), Some(3));
+        // Stand up a second capture controller and re-home onto it: the
+        // base is forgotten (first upload to the new peer must be full
+        // f32) and registration lands on the new endpoint.
+        let capture_b = Arc::new(Capture { completions: StdMutex::new(Vec::new()) });
+        let ep_b = "inproc://ctrl-rehome-b";
+        let _hb = crate::net::serve(ep_b, capture_b, None).unwrap();
+        learner.rehome(ep_b);
+        assert_eq!(learner.last_community_round(), None);
+        assert_eq!(learner.controller_endpoint.lock().unwrap().as_str(), ep_b);
+        learner.register("inproc://l0").unwrap();
     }
 
     #[test]

@@ -82,18 +82,44 @@ fn parse(cmd: &Command, raw: &[String]) -> anyhow::Result<metisfl::cli::Args> {
 fn cmd_driver(raw: &[String]) -> anyhow::Result<()> {
     let cmd = Command::new("metisfl driver", "run a full federation from an env file")
         .opt("env", None, "federated environment YAML/JSON file")
+        .opt("record", None, "write the root controller's replayable trace to this file")
         .flag("distributed", "use localhost TCP instead of in-proc");
     let a = parse(&cmd, raw)?;
     let env_file = a
         .get("env")
         .ok_or_else(|| anyhow::anyhow!("--env <file> is required"))?;
     let env = FederationEnv::from_file(env_file)?;
-    let report = if a.flag("distributed") {
+    let report = if let Some(path) = a.get("record") {
+        if a.flag("distributed") {
+            anyhow::bail!("--record runs on the env's own transport; drop --distributed");
+        }
+        let (report, trace) = metisfl::driver::run_recorded(&env)?;
+        let bytes = trace.ok_or_else(|| anyhow::anyhow!("recording produced no trace"))?;
+        std::fs::write(path, &bytes).map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
+        println!("trace written to {path} ({} bytes)", bytes.len());
+        report
+    } else if a.flag("distributed") {
         metisfl::driver::run_distributed(&env)?
     } else {
         metisfl::driver::run_simulated(&env)?
     };
     print_report(&report);
+    // A run with a scheduled aggregator kill emits the failover report
+    // the CI bench gate bounds (bench_out/failover.json); the row label
+    // is the env name, so the baseline key stays stable per scenario.
+    if env.chaos.kill_aggregator_at_round > 0 {
+        let mut w = metisfl::harness::ReportWriter::new(
+            "failover",
+            &["scenario", "failovers", "rehomed_learners", "rounds_to_recover"],
+        );
+        w.row(vec![
+            env.name.clone(),
+            report.failovers.to_string(),
+            report.rehomed_learners.to_string(),
+            report.rounds_to_recover.to_string(),
+        ]);
+        w.emit()?;
+    }
     Ok(())
 }
 
@@ -431,6 +457,11 @@ const GATED_METRICS: &[(&str, &str, bool)] = &[
     // run is far less noisy than a single wall-clock sample, and the
     // committed baseline leaves generous headroom for shared CI cores.
     ("loadtest", "p99_ms", true),
+    // Rounds to re-home a chaos-killed aggregator's shard and complete
+    // a full round on the new topology: lower is better, and the
+    // baseline's ceiling is the acceptance bar (a drift upward means
+    // failover stopped recovering within the round budget).
+    ("failover", "rounds_to_recover", true),
 ];
 
 /// Is the named metric lower-is-better? (Direction travels with the
@@ -592,5 +623,11 @@ fn print_report(report: &metisfl::driver::FederationReport) {
     }
     if report.missed_heartbeats > 0 {
         println!("missed heartbeats: {}", report.missed_heartbeats);
+    }
+    if report.failovers > 0 {
+        println!(
+            "failovers: {} ({} learner(s) re-homed, recovered in {} round(s))",
+            report.failovers, report.rehomed_learners, report.rounds_to_recover
+        );
     }
 }

@@ -71,6 +71,17 @@ pub struct ChaosSpec {
     /// corrupted before sending (digest/frame validation must reject
     /// the stream, never accept the garbage).
     pub corrupt: usize,
+    /// Churn instead of permanent loss: severed peers may re-dial after
+    /// this many milliseconds (0 = never, the classic permanent sever).
+    /// Once a rejoin succeeds the sever budget is disarmed — the peer
+    /// is back for good and its retried completions must be absorbed
+    /// idempotently by the completed-task watermarks.
+    pub reconnect_after_ms: u64,
+    /// Two-tier runs only: kill one aggregator (picked deterministically
+    /// by [`ChaosSpec::kill_victim`]) right before this round opens
+    /// (1-based; 0 = off). The driver detects the death via heartbeat
+    /// probes and re-homes the orphaned shard's learners.
+    pub kill_aggregator_at_round: u64,
 }
 
 impl Default for ChaosSpec {
@@ -86,6 +97,8 @@ impl Default for ChaosSpec {
             slow_loris: 0,
             drip_ms: 20,
             corrupt: 0,
+            reconnect_after_ms: 0,
+            kill_aggregator_at_round: 0,
         }
     }
 }
@@ -137,9 +150,12 @@ impl ChaosSpec {
         rng.shuffle(&mut order);
         let mut next = order.into_iter();
         let count = |f: f64| ((f * learners as f64).round() as usize).min(learners);
+        let reconnect =
+            (self.reconnect_after_ms > 0).then(|| Duration::from_millis(self.reconnect_after_ms));
         for _ in 0..count(self.sever_fraction) {
             let Some(i) = next.next() else { return plans };
             plans[i].sever_after_sends = Some(self.sever_after_sends.max(1));
+            plans[i].reconnect_after = reconnect;
         }
         for _ in 0..count(self.refuse_fraction) {
             let Some(i) = next.next() else { return plans };
@@ -163,15 +179,36 @@ impl ChaosSpec {
         }
         plans
     }
+
+    /// Which aggregator `kill_aggregator_at_round` takes down, picked
+    /// deterministically from `(spec seed, run seed, fleet size)` —
+    /// the same env file always kills the same shard, so the failover
+    /// scenario is reproducible end to end. `None` when the kill is
+    /// off or there are no aggregators.
+    pub fn kill_victim(&self, aggregators: usize, run_seed: u64) -> Option<usize> {
+        if self.kill_aggregator_at_round == 0 || aggregators == 0 {
+            return None;
+        }
+        let mut rng =
+            Rng::new(run_seed ^ self.seed.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ 0xFA_110_4E4);
+        Some(rng.gen_range(aggregators))
+    }
 }
 
 /// Sever state shared across every connection (and re-dial) of one
 /// afflicted learner: once the send budget is spent, the peer is dead
-/// for good — the retry policy must give up, not resurrect it.
+/// for good — the retry policy must give up, not resurrect it — unless
+/// the plan grants a reconnect window, in which case the first re-dial
+/// after the window rejoins the peer and disarms the sever budget.
 #[derive(Debug, Default)]
 struct ChaosState {
     sends: AtomicU64,
     severed: AtomicBool,
+    /// Clock micros when the sever latched (meaningful while severed).
+    severed_at_us: AtomicU64,
+    /// Set when a reconnect window elapsed and a re-dial was let back
+    /// in: the peer has rejoined and sends are unlimited from here on.
+    reconnected: AtomicBool,
 }
 
 /// One learner's fault assignment. Cloning shares the sever state, so
@@ -183,6 +220,10 @@ pub struct ChaosPlan {
     /// Sever the connection permanently after this many sends (counted
     /// across re-dials).
     pub sever_after_sends: Option<u64>,
+    /// Churn: a severed peer's re-dial is allowed back in after this
+    /// window (measured on the dialing clock); `None` keeps the sever
+    /// permanent.
+    pub reconnect_after: Option<Duration>,
     /// Slow-loris: sleep this long before each model chunk and suppress
     /// the closing `End`, holding the receiver's stream open.
     pub drip: Option<Duration>,
@@ -239,7 +280,18 @@ pub fn connect_with_chaos(
         bail!("chaos: dial to {endpoint} refused");
     }
     if plan.severed() {
-        bail!("chaos: peer severed, re-dial refused");
+        let rejoins = plan.reconnect_after.is_some_and(|window| {
+            let cut = Duration::from_micros(plan.state.severed_at_us.load(Ordering::SeqCst));
+            clock.since(cut) >= window
+        });
+        if rejoins {
+            // The churn window elapsed: this re-dial rejoins the peer
+            // and disarms the sever budget for good.
+            plan.state.reconnected.store(true, Ordering::SeqCst);
+            plan.state.severed.store(false, Ordering::SeqCst);
+        } else {
+            bail!("chaos: peer severed, re-dial refused");
+        }
     }
     let inner = crate::net::connect(endpoint, psk)?;
     Ok(Box::new(ChaosConn { inner, plan: plan.clone(), clock: clock.clone() }))
@@ -259,11 +311,19 @@ impl ChaosConn {
     /// the budget is spent.
     fn check_sever(&self) -> Result<()> {
         let Some(limit) = self.plan.sever_after_sends else { return Ok(()) };
+        if self.plan.state.reconnected.load(Ordering::SeqCst) {
+            // Rejoined after the churn window: the budget is disarmed.
+            return Ok(());
+        }
         if self.plan.severed() {
             bail!("chaos: connection severed");
         }
         let n = self.plan.state.sends.fetch_add(1, Ordering::SeqCst) + 1;
         if n > limit {
+            self.plan.state.severed_at_us.store(
+                u64::try_from(self.clock.now().as_micros()).unwrap_or(u64::MAX),
+                Ordering::SeqCst,
+            );
             self.plan.state.severed.store(true, Ordering::SeqCst);
             bail!("chaos: connection severed after {limit} sends");
         }
@@ -348,7 +408,11 @@ mod tests {
             match msg {
                 Message::Heartbeat { from } => {
                     self.heartbeats.fetch_add(1, Ordering::SeqCst);
-                    Message::HeartbeatAck { component: from, healthy: true }
+                    Message::HeartbeatAck {
+                        component: from,
+                        healthy: true,
+                        health: Default::default(),
+                    }
                 }
                 Message::ModelChunk { stream_id, bytes, .. } => {
                     self.chunks.lock().unwrap().push(bytes);
@@ -397,6 +461,63 @@ mod tests {
         let err = connect_with_chaos(&server.endpoint(), None, &plan, &Clock::system()).unwrap_err();
         assert!(format!("{err:#}").contains("severed"), "{err:#}");
         assert_eq!(probe.heartbeats.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn severed_peer_rejoins_after_the_reconnect_window() {
+        let probe = Arc::new(Probe::new());
+        let server = serve("inproc://chaos-rejoin", Arc::clone(&probe) as _, None).unwrap();
+        let clock = Clock::sim();
+        let plan = ChaosPlan {
+            sever_after_sends: Some(1),
+            reconnect_after: Some(Duration::from_millis(50)),
+            ..ChaosPlan::default()
+        };
+        let mut conn = connect_with_chaos(&server.endpoint(), None, &plan, &clock).unwrap();
+        assert!(conn.rpc(&hb()).is_ok());
+        assert!(conn.rpc(&hb()).is_err());
+        assert!(plan.severed());
+        // Inside the window the re-dial is still refused.
+        let err = connect_with_chaos(&server.endpoint(), None, &plan, &clock).unwrap_err();
+        assert!(format!("{err:#}").contains("severed"), "{err:#}");
+        // After the window the peer rejoins, and the sever budget is
+        // disarmed: the rejoined link survives arbitrarily many sends.
+        clock.advance_to(clock.now() + Duration::from_millis(60));
+        let mut conn = connect_with_chaos(&server.endpoint(), None, &plan, &clock).unwrap();
+        for _ in 0..5 {
+            assert!(matches!(conn.rpc(&hb()).unwrap(), Message::HeartbeatAck { .. }));
+        }
+        assert!(!plan.severed());
+        assert_eq!(probe.heartbeats.load(Ordering::SeqCst), 6);
+    }
+
+    #[test]
+    fn plan_fleet_propagates_reconnect_windows_to_severed_plans() {
+        let spec =
+            ChaosSpec { sever_fraction: 0.5, reconnect_after_ms: 25, ..ChaosSpec::default() };
+        let plans = spec.plan_fleet(4, 9);
+        let severed: Vec<_> = plans.iter().filter(|p| p.sever_after_sends.is_some()).collect();
+        assert_eq!(severed.len(), 2);
+        assert!(severed.iter().all(|p| p.reconnect_after == Some(Duration::from_millis(25))));
+        assert!(plans
+            .iter()
+            .filter(|p| p.sever_after_sends.is_none())
+            .all(|p| p.reconnect_after.is_none()));
+    }
+
+    #[test]
+    fn kill_victim_is_deterministic_and_gated() {
+        let off = ChaosSpec::default();
+        assert_eq!(off.kill_victim(4, 7), None);
+        let spec = ChaosSpec { kill_aggregator_at_round: 2, ..ChaosSpec::default() };
+        let v = spec.kill_victim(4, 7).unwrap();
+        assert!(v < 4);
+        assert_eq!(spec.kill_victim(4, 7), Some(v), "same seed, same victim");
+        assert_eq!(spec.kill_victim(0, 7), None);
+        // Different run seeds spread the pick across the fleet.
+        let picks: std::collections::HashSet<usize> =
+            (0..32).filter_map(|s| spec.kill_victim(4, s)).collect();
+        assert!(picks.len() > 1);
     }
 
     #[test]

@@ -26,7 +26,7 @@
 
 use super::wire::{fnv1a64, FNV64_INIT};
 use super::{
-    ErrorCode, EvalResult, Message, ModelProto, StreamPurpose, TaskMeta, TaskSpec,
+    ErrorCode, EvalResult, HealthProbe, Message, ModelProto, StreamPurpose, TaskMeta, TaskSpec,
     TensorLayoutProto, PROTO_VERSION,
 };
 use crate::net::{ClientConn, Psk};
@@ -162,8 +162,18 @@ pub fn hello_negotiate(conn: &mut dyn ClientConn) -> RpcResult<(u32, Vec<CodecId
 
 /// Liveness probe; returns `(component, healthy)`.
 pub fn heartbeat(conn: &mut dyn ClientConn, from: &str) -> RpcResult<(String, bool)> {
+    heartbeat_probe(conn, from).map(|(component, healthy, _)| (component, healthy))
+}
+
+/// [`heartbeat`] that also returns the component's [`HealthProbe`]
+/// payload (zeros when the peer predates it), for probers that feed a
+/// failure detector.
+pub fn heartbeat_probe(
+    conn: &mut dyn ClientConn,
+    from: &str,
+) -> RpcResult<(String, bool, HealthProbe)> {
     match rpc(conn, &Message::Heartbeat { from: from.to_string() })? {
-        Message::HeartbeatAck { component, healthy } => Ok((component, healthy)),
+        Message::HeartbeatAck { component, healthy, health } => Ok((component, healthy, health)),
         other => Err(RpcError::Unexpected {
             expected: "HeartbeatAck",
             got: other.kind().to_string(),
@@ -647,9 +657,11 @@ mod tests {
                     ErrorCode::VersionMismatch,
                     format!("we speak v{PROTO_VERSION}, peer v{proto_version}"),
                 ),
-                Message::Heartbeat { from } => {
-                    Message::HeartbeatAck { component: from, healthy: true }
-                }
+                Message::Heartbeat { from } => Message::HeartbeatAck {
+                    component: from,
+                    healthy: true,
+                    health: HealthProbe::default(),
+                },
                 Message::Shutdown => Message::Ack { task_id: 0, ok: true },
                 other => Message::error(ErrorCode::Unsupported, other.kind()),
             }

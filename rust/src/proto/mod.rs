@@ -50,7 +50,9 @@ pub mod wire;
 /// `PartialAggregate` stream purpose carries one shard's partial
 /// weighted sum upstream from an aggregator to the root controller
 /// (shard total weight rides `TaskMeta::num_samples`), reusing the
-/// existing data-plane framing unchanged.
+/// existing data-plane framing unchanged. The [`HealthProbe`] payload
+/// in `HeartbeatAck` is a trailing field decoded tolerantly (absent →
+/// zeros), so it rides v6 without a version bump.
 pub const PROTO_VERSION: u32 = 6;
 
 use crate::tensor::{ByteOrder, CodecId, DType, Tensor, TensorModel};
@@ -377,6 +379,30 @@ pub struct EvalResult {
     pub eval_time_us: u64,
 }
 
+/// Component state snapshot carried by [`Message::HeartbeatAck`]: what
+/// "healthy" actually means, in numbers. Encoded as a trailing field
+/// and decoded tolerantly (absent → all zeros), so an ack from a peer
+/// that predates the payload still parses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct HealthProbe {
+    /// Rounds currently open (barrier not yet satisfied).
+    pub open_rounds: u64,
+    /// Data-plane streams mid-flight right now (after idle GC).
+    pub open_streams: u64,
+    /// Sends abandoned after exhausting their retry budget — the
+    /// component's "I gave up on a peer" counter.
+    pub retry_give_ups: u64,
+}
+
+impl HealthProbe {
+    /// The health verdict the ack's `healthy` bit reports: a component
+    /// is degraded once it has abandoned sends (open rounds and live
+    /// streams are normal mid-round states, give-ups are not).
+    pub fn is_healthy(&self) -> bool {
+        self.retry_give_ups == 0
+    }
+}
+
 /// All protocol messages. Request/response pairing is handled by the
 /// transport; `Ack` is the generic fast reply.
 #[derive(Debug, Clone, PartialEq)]
@@ -404,7 +430,9 @@ pub enum Message {
     EvaluateModelReply { task_id: u64, learner_id: String, result: EvalResult },
     /// Driver → any: liveness probe (Fig. 8 "Monitoring").
     Heartbeat { from: String },
-    HeartbeatAck { component: String, healthy: bool },
+    /// Reply to `Heartbeat`: `healthy` is the component's own verdict
+    /// ([`HealthProbe::is_healthy`]), `health` the numbers behind it.
+    HeartbeatAck { component: String, healthy: bool, health: HealthProbe },
     /// Driver → any: orderly shutdown (learners first, then controller).
     Shutdown,
     /// Structured error reply (see [`ErrorCode`]).
@@ -608,10 +636,13 @@ impl Message {
                 w.put_u8(T_HEARTBEAT);
                 w.put_str(from);
             }
-            Message::HeartbeatAck { component, healthy } => {
+            Message::HeartbeatAck { component, healthy, health } => {
                 w.put_u8(T_HEARTBEAT_ACK);
                 w.put_str(component);
                 w.put_bool(*healthy);
+                w.put_varint(health.open_rounds);
+                w.put_varint(health.open_streams);
+                w.put_varint(health.retry_give_ups);
             }
             Message::Shutdown => w.put_u8(T_SHUTDOWN),
             Message::Error { code, detail } => {
@@ -723,10 +754,22 @@ impl Message {
                 },
             },
             T_HEARTBEAT => Message::Heartbeat { from: r.get_str()? },
-            T_HEARTBEAT_ACK => Message::HeartbeatAck {
-                component: r.get_str()?,
-                healthy: r.get_bool()?,
-            },
+            T_HEARTBEAT_ACK => {
+                let component = r.get_str()?;
+                let healthy = r.get_bool()?;
+                // Health payload is the trailing field; tolerate an ack
+                // that ends at `healthy` (pre-payload peers, stubs).
+                let health = if r.is_done() {
+                    HealthProbe::default()
+                } else {
+                    HealthProbe {
+                        open_rounds: r.get_varint()?,
+                        open_streams: r.get_varint()?,
+                        retry_give_ups: r.get_varint()?,
+                    }
+                };
+                Message::HeartbeatAck { component, healthy, health }
+            }
             T_SHUTDOWN => Message::Shutdown,
             T_ERROR => Message::Error {
                 code: ErrorCode::from_code(r.get_u8()?)?,
@@ -966,7 +1009,16 @@ mod tests {
                 result: EvalResult { loss: 0.25, num_samples: 100, eval_time_us: 800 },
             },
             Message::Heartbeat { from: "driver".into() },
-            Message::HeartbeatAck { component: "controller".into(), healthy: true },
+            Message::HeartbeatAck {
+                component: "controller".into(),
+                healthy: true,
+                health: HealthProbe::default(),
+            },
+            Message::HeartbeatAck {
+                component: "aggregator/1".into(),
+                healthy: false,
+                health: HealthProbe { open_rounds: 1, open_streams: 4, retry_give_ups: 2 },
+            },
             Message::Shutdown,
             Message::Error { code: ErrorCode::Rejected, detail: "nope".into() },
             Message::GetModel,
@@ -1098,6 +1150,29 @@ mod tests {
                 codecs: Vec::new()
             }
         );
+    }
+
+    #[test]
+    fn heartbeat_ack_without_health_tail_still_decodes() {
+        // A pre-PR-9 ack ends at the `healthy` bool. The tolerant
+        // reader must fill the health payload with zeros instead of
+        // erroring at end-of-buffer.
+        let mut w = WireWriter::new();
+        w.put_u8(super::T_HEARTBEAT_ACK);
+        w.put_str("learner/l1");
+        w.put_bool(true);
+        assert_eq!(
+            Message::decode(&w.into_bytes()).unwrap(),
+            Message::HeartbeatAck {
+                component: "learner/l1".into(),
+                healthy: true,
+                health: HealthProbe::default(),
+            }
+        );
+        assert!(HealthProbe::default().is_healthy());
+        assert!(!HealthProbe { retry_give_ups: 1, ..Default::default() }.is_healthy());
+        assert!(HealthProbe { open_rounds: 3, open_streams: 9, ..Default::default() }
+            .is_healthy());
     }
 
     #[test]

@@ -8,6 +8,7 @@
 use metisfl::config::{FederationEnv, ModelSpec};
 use metisfl::driver::run_with_trainer;
 use metisfl::harness::{verify_chaos_equivalence, LoadtestConfig};
+use metisfl::learner::trainer::RustSgdTrainer;
 use metisfl::learner::{SyntheticTrainer, Trainer};
 use metisfl::net::chaos::ChaosSpec;
 use std::sync::Arc;
@@ -127,6 +128,60 @@ fn driver_report_surfaces_degradation_counters() {
     assert_eq!(clean.fallback_sends, 0);
     assert_eq!(clean.streams_refused, 0);
     assert_eq!(clean.streams_gced, 0);
+}
+
+#[test]
+fn severed_learner_reconnects_and_its_retried_completions_stay_idempotent() {
+    // Churn instead of permanent loss: one severed learner re-dials
+    // after 10 ms — inside the rpc retry profile's 25 ms first backoff,
+    // so the retried stream lands on attempt 2 and at quorum 1.0 every
+    // round still closes over the full fleet. The retried uploads and
+    // completion callbacks hit the controller's completed-task
+    // watermark, which must absorb them idempotently.
+    let churn_env = FederationEnv::builder("chaos-churn")
+        .learners(4)
+        .rounds(2)
+        .model(ModelSpec::mlp(4, 2, 8))
+        .samples_per_learner(20)
+        .batch_size(10)
+        .learning_rate(0.05)
+        .stream_chunk_bytes(512)
+        .quorum_fraction(1.0)
+        .task_timeout_ms(8_000)
+        .heartbeat_ms(10_000)
+        .chaos(ChaosSpec {
+            seed: 5,
+            sever_fraction: 0.25,
+            sever_after_sends: 4,
+            reconnect_after_ms: 10,
+            ..ChaosSpec::default()
+        })
+        .build();
+    let report = run_with_trainer(&churn_env, |_| {
+        Arc::new(RustSgdTrainer) as Arc<dyn Trainer>
+    })
+    .unwrap();
+    for r in &report.round_metrics {
+        assert_eq!(r.participants, 4, "severed learners still register (sever ≠ refuse)");
+        assert_eq!(r.completed, 4, "round {}: the rejoined learner must complete", r.round);
+    }
+    assert_eq!(report.retry_give_ups, 0, "rejoin must resolve inside the retry budget");
+
+    // Bitwise: churn is pure transport noise. The fold over the full
+    // fleet must equal the chaos-free run's bits exactly — a retried
+    // completion that double-folded would drift the digest.
+    let mut clean_env = churn_env.clone();
+    clean_env.name = "chaos-churn-clean".into();
+    clean_env.chaos = ChaosSpec::default();
+    let clean = run_with_trainer(&clean_env, |_| {
+        Arc::new(RustSgdTrainer) as Arc<dyn Trainer>
+    })
+    .unwrap();
+    assert_ne!(report.community_digest, 0, "churn run produced no community model");
+    assert_eq!(
+        report.community_digest, clean.community_digest,
+        "rejoined fleet must match the chaos-free fold bitwise"
+    );
 }
 
 #[test]

@@ -1,0 +1,154 @@
+//! Fleet health & aggregator failover acceptance (ISSUE: robustness).
+//!
+//! The load-bearing claims, end to end through a real two-tier
+//! federation with a chaos-scheduled aggregator crash:
+//!
+//! 1. The driver detects the death through heartbeat probes (not by
+//!    fiat), re-homes the orphaned shard's learners onto the survivors
+//!    mid-run, and the fleet recovers within `rounds_to_recover <= 2`.
+//! 2. The round barrier and quorum re-target the new topology: every
+//!    round completes with the full surviving tier.
+//! 3. **Bitwise**: the post-failover community model equals the flat
+//!    fold regrouped over the surviving-plus-re-homed topology —
+//!    failover is pure plumbing, zero math drift.
+//! 4. The same env + seed reproduces the same victim and outcome.
+
+use metisfl::config::{
+    AggregationBackend, AggregationSpec, FederationEnv, ModelSpec, TopologySpec,
+};
+use metisfl::controller::aggregation::{Backend, Contribution};
+use metisfl::controller::health::HealthSpec;
+use metisfl::controller::hierarchy::{rehome_assignments, two_tier_reference};
+use metisfl::driver::{self, run_with_trainer};
+use metisfl::harness::loadtest::model_digest;
+use metisfl::learner::trainer::RustSgdTrainer;
+use metisfl::learner::Trainer;
+use metisfl::net::chaos::ChaosSpec;
+use metisfl::proto::TaskSpec;
+use std::sync::Arc;
+
+const LEARNERS: usize = 6;
+const AGGS: usize = 3;
+const ROUNDS: usize = 3;
+const KILL_ROUND: u64 = 2;
+
+/// A deterministic two-tier env with one aggregator scheduled to
+/// crash-stop right before round 2 opens. Millisecond-scale health
+/// thresholds keep the detection loop fast without changing its shape.
+fn failover_env(name: &str) -> FederationEnv {
+    let mut e = FederationEnv::builder(name)
+        .learners(LEARNERS)
+        .rounds(ROUNDS)
+        .model(ModelSpec::mlp(8, 3, 32))
+        .aggregation(AggregationSpec {
+            backend: AggregationBackend::Sequential,
+            ..AggregationSpec::default()
+        })
+        .samples_per_learner(12)
+        .batch_size(6)
+        .learning_rate(0.05)
+        .quorum_fraction(1.0)
+        .stream_chunk_bytes(2048)
+        .heartbeat_ms(5_000)
+        .health(HealthSpec { interval_ms: 2, suspect_after: 2, dead_after: 3, ewma_alpha: 0.2 })
+        .seed(0xFA_11)
+        .build();
+    e.topology = TopologySpec { aggregators: AGGS, shard_quorum: 0.0 };
+    e.chaos = ChaosSpec { kill_aggregator_at_round: KILL_ROUND, ..ChaosSpec::default() };
+    e
+}
+
+fn sgd(_idx: usize) -> Arc<dyn Trainer> {
+    Arc::new(RustSgdTrainer)
+}
+
+/// Replicate what every tier saw, round for round: each learner trains
+/// the previous community model on its deterministic dataset, lands in
+/// its (round-dependent) shard, each shard folds arrivals in id-sorted
+/// order, and the root folds the shard partials. Rounds at or past the
+/// kill use the post-failover grouping; the victim's slot goes empty
+/// and [`two_tier_reference`] skips it.
+fn reference_digest(env: &FederationEnv, pre: &[usize], post: &[usize]) -> u64 {
+    let spec = TaskSpec {
+        epochs: env.local_epochs,
+        batch_size: env.batch_size,
+        learning_rate: env.learning_rate,
+        step_budget: 0,
+    };
+    let mut community = driver::initial_model(env);
+    for round in 1..=ROUNDS as u64 {
+        let assign = if round >= KILL_ROUND { post } else { pre };
+        let mut shards: Vec<Vec<(String, Contribution)>> =
+            (0..AGGS).map(|_| Vec::new()).collect();
+        for i in 0..LEARNERS {
+            let data = driver::learner_dataset(env, i);
+            let (model, meta) = RustSgdTrainer.train(&community, &data, &spec).unwrap();
+            shards[assign[i]].push((
+                format!("learner-{i}"),
+                Contribution { model: Arc::new(model), weight: meta.num_samples as f64 },
+            ));
+        }
+        let shards: Vec<Vec<Contribution>> = shards
+            .into_iter()
+            .map(|mut shard| {
+                shard.sort_by(|a, b| a.0.cmp(&b.0)); // the barrier sorts ids as strings
+                shard.into_iter().map(|(_, c)| c).collect()
+            })
+            .collect();
+        community = two_tier_reference(&community, &shards, &Backend::Sequential).unwrap();
+    }
+    model_digest(&community)
+}
+
+#[test]
+fn aggregator_death_rehomes_shard_and_stays_bitwise() {
+    let env = failover_env("failover-e2e");
+    let victim = env.chaos.kill_victim(AGGS, env.seed).expect("kill plan armed");
+    let report = run_with_trainer(&env, sgd).unwrap();
+
+    // --- Claim 1: one failover, fast recovery -------------------------
+    let orphans: Vec<usize> =
+        (0..LEARNERS).filter(|&i| env.topology.shard_of(i) == victim).collect();
+    assert_eq!(report.failovers, 1);
+    assert_eq!(report.rehomed_learners, orphans.len() as u64);
+    assert!(
+        (1..=2).contains(&report.rounds_to_recover),
+        "fleet took {} round(s) to recover (acceptance bar: <= 2)",
+        report.rounds_to_recover
+    );
+    assert_eq!(report.retry_give_ups, 0, "failover must not burn retry budgets");
+
+    // --- Claim 2: quorum fires every round on the live topology -------
+    assert_eq!(report.round_metrics.len(), ROUNDS);
+    for r in &report.round_metrics {
+        let expect = if r.round < KILL_ROUND { AGGS } else { AGGS - 1 };
+        assert_eq!(r.participants, expect, "round {} participants", r.round);
+        assert_eq!(r.completed, expect, "round {} incomplete", r.round);
+    }
+
+    // --- Claim 3: bitwise equal to the re-homed reference fold --------
+    let pre: Vec<usize> = (0..LEARNERS).map(|i| env.topology.shard_of(i)).collect();
+    let survivors: Vec<usize> = (0..AGGS).filter(|&s| s != victim).collect();
+    let plan = rehome_assignments(orphans.len(), survivors.len());
+    let mut post = pre.clone();
+    for (j, &i) in orphans.iter().enumerate() {
+        post[i] = survivors[plan[j]];
+    }
+    assert_ne!(report.community_digest, 0, "run produced no community model");
+    assert_eq!(
+        report.community_digest,
+        reference_digest(&env, &pre, &post),
+        "post-failover community drifted from the re-homed reference fold"
+    );
+}
+
+#[test]
+fn same_seed_reproduces_the_same_victim_and_outcome() {
+    let a = run_with_trainer(&failover_env("failover-repro"), sgd).unwrap();
+    let b = run_with_trainer(&failover_env("failover-repro"), sgd).unwrap();
+    assert_ne!(a.community_digest, 0);
+    assert_eq!(a.community_digest, b.community_digest, "same env + seed must be bitwise stable");
+    assert_eq!(a.failovers, b.failovers);
+    assert_eq!(a.rehomed_learners, b.rehomed_learners);
+    assert_eq!(a.rounds_to_recover, b.rounds_to_recover);
+}

@@ -8,7 +8,9 @@
 //! timeline shapes: partial streams, quorum cuts with stragglers, and
 //! late completions folded through the staleness path.
 
-use metisfl::config::WireCodecChoice;
+use metisfl::config::{FederationEnv, ModelSpec, TopologySpec, WireCodecChoice};
+use metisfl::controller::health::HealthSpec;
+use metisfl::driver::run_recorded;
 use metisfl::harness::{run_loadtest, LoadtestConfig};
 use metisfl::net::chaos::ChaosSpec;
 use metisfl::runtime::trace::{replay_trace, Trace};
@@ -108,6 +110,56 @@ fn replaying_twice_is_itself_deterministic() {
     assert!(a.matches() && b.matches());
     assert_eq!(a.replayed_digest, b.replayed_digest);
     assert_eq!(a.replayed_counters, b.replayed_counters);
+}
+
+/// A two-tier driver env for the hierarchical replay gates; `kill > 0`
+/// arms the chaos kill (with millisecond health thresholds so the
+/// detection loop stays fast).
+fn two_tier_env(name: &str, kill: u64) -> FederationEnv {
+    let mut e = FederationEnv::builder(name)
+        .learners(6)
+        .rounds(2)
+        .model(ModelSpec::mlp(6, 2, 16))
+        .quorum_fraction(1.0)
+        .stream_chunk_bytes(2048)
+        .heartbeat_ms(5_000)
+        .seed(0x7133)
+        .build();
+    e.topology = TopologySpec { aggregators: 3, shard_quorum: 0.0 };
+    if kill > 0 {
+        e.chaos = ChaosSpec { kill_aggregator_at_round: kill, ..ChaosSpec::default() };
+        e.health = HealthSpec { interval_ms: 2, suspect_after: 2, dead_after: 3, ewma_alpha: 0.2 };
+    }
+    e
+}
+
+#[test]
+fn replay_reproduces_a_two_tier_driver_recording() {
+    // Hierarchical topology through the driver's recorder: the trace
+    // captures only the ROOT's frames (the aggregator tier's
+    // registrations and partial-sum uploads), so a fresh sim-clocked
+    // controller must re-fold the tier's partials to the same bits.
+    let (report, trace) = run_recorded(&two_tier_env("replay-two-tier", 0)).unwrap();
+    let trace = trace.expect("driver recording must yield a trace");
+    let outcome = replay_trace(&trace).expect("replay must apply cleanly");
+    assert!(outcome.matches(), "two-tier replay diverged: {:?}", outcome.divergence);
+    assert_ne!(report.community_digest, 0);
+    assert_eq!(outcome.recorded_digest, report.community_digest);
+    assert_eq!(outcome.replayed_digest, report.community_digest);
+}
+
+#[test]
+fn replay_reproduces_a_failover_run_including_the_rehomed_rounds() {
+    // The failover's root-side mutations (the dead aggregator's
+    // deregistration, the survivors' refreshed weights) travel over the
+    // wire, so the recorded timeline replays the re-homed topology
+    // exactly — registrations, partial sums, and all.
+    let (report, trace) = run_recorded(&two_tier_env("replay-failover", 2)).unwrap();
+    assert_eq!(report.failovers, 1, "the kill plan must have fired");
+    let trace = trace.expect("driver recording must yield a trace");
+    let outcome = replay_trace(&trace).expect("replay must apply cleanly");
+    assert!(outcome.matches(), "failover replay diverged: {:?}", outcome.divergence);
+    assert_eq!(outcome.replayed_digest, report.community_digest);
 }
 
 #[test]
