@@ -107,6 +107,21 @@ impl TopologySpec {
     }
 }
 
+/// Observability plane (`observability:` block): live Prometheus-text
+/// metrics exposition and causal span tracing. Both default off — the
+/// hot path pays only a relaxed atomic load per would-be span.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct ObservabilitySpec {
+    /// Bind address for the metrics side listener (e.g.
+    /// `127.0.0.1:9464`); empty (default) = no listener. The driver
+    /// serves the controller's registry as Prometheus text format on
+    /// `GET /metrics` (see [`crate::obs::ExpoServer`]).
+    pub listen_addr: String,
+    /// Record causal spans on every component's
+    /// [`crate::obs::SpanSink`] (controller, aggregators, learners).
+    pub spans: bool,
+}
+
 /// Communication/aggregation protocol (Table 1, "Communication Protocol").
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Protocol {
@@ -383,6 +398,9 @@ pub struct FederationEnv {
     /// detector suspects / declares a peer dead. Consumed by the
     /// driver's monitor and (in two-tier runs) the failover path.
     pub health: HealthSpec,
+    /// Observability plane (`observability:` block): metrics exposition
+    /// listener + span tracing toggle. Default: both off.
+    pub observability: ObservabilitySpec,
 }
 
 impl FederationEnv {
@@ -649,6 +667,16 @@ impl FederationEnv {
             }
             b = b.health(spec);
         }
+        if let Some(ob) = v.get("observability") {
+            let mut spec = ObservabilitySpec::default();
+            if let Some(x) = ob.get("listen_addr").and_then(|x| x.as_str()) {
+                spec.listen_addr = x.to_string();
+            }
+            if let Some(x) = ob.get("spans").and_then(|x| x.as_bool()) {
+                spec.spans = x;
+            }
+            b = b.observability(spec);
+        }
         b.try_build()
     }
 
@@ -794,6 +822,9 @@ impl FederationEnv {
         o.push_str(&format!("  suspect_after: {}\n", h.suspect_after));
         o.push_str(&format!("  dead_after: {}\n", h.dead_after));
         o.push_str(&format!("  ewma_alpha: {}\n", h.ewma_alpha));
+        o.push_str("observability:\n");
+        o.push_str(&format!("  listen_addr: {}\n", scalar(&self.observability.listen_addr)));
+        o.push_str(&format!("  spans: {}\n", self.observability.spans));
         o
     }
 
@@ -1009,6 +1040,7 @@ impl FederationEnvBuilder {
                 chaos: ChaosSpec::default(),
                 topology: TopologySpec::default(),
                 health: HealthSpec::default(),
+                observability: ObservabilitySpec::default(),
             },
         }
     }
@@ -1115,6 +1147,10 @@ impl FederationEnvBuilder {
     }
     pub fn health(mut self, h: HealthSpec) -> Self {
         self.env.health = h;
+        self
+    }
+    pub fn observability(mut self, o: ObservabilitySpec) -> Self {
+        self.env.observability = o;
         self
     }
 

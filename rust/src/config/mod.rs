@@ -14,6 +14,6 @@ pub mod yaml;
 
 pub use env::{
     AggregationBackend, AggregationSpec, FederationEnv, FederationEnvBuilder, HeteroFleetSpec,
-    ModelSpec, Protocol, SecureSpec, SelectorSpec, TopologySpec, TrainerKind, TransportKind,
-    WireCodecChoice,
+    ModelSpec, ObservabilitySpec, Protocol, SecureSpec, SelectorSpec, TopologySpec, TrainerKind,
+    TransportKind, WireCodecChoice,
 };

@@ -28,6 +28,7 @@ use super::Controller;
 use crate::config::{FederationEnv, TopologySpec};
 use crate::net::retry::RetryPolicy;
 use crate::net::{ClientConn, Psk, Service};
+use crate::obs::SpanCtx;
 use crate::proto::client::{self, RpcError, StreamSend};
 use crate::proto::ingest::{StreamBegin, StreamIngest};
 use crate::proto::wire::{fnv1a64, FNV64_INIT};
@@ -272,13 +273,14 @@ impl AggregatorNode {
         model_round: u64,
         model: Arc<TensorModel>,
         spec: TaskSpec,
+        ctx: SpanCtx,
     ) {
         let node = Arc::clone(self);
         self.executor.spawn(move || {
             if node.is_shutdown() {
                 return;
             }
-            if let Err(e) = node.run_shard_round(task_id, model_round, model, spec) {
+            if let Err(e) = node.run_shard_round(task_id, model_round, model, spec, ctx) {
                 log_warn("aggregator", &format!("{}: round {task_id} failed: {e:#}", node.id));
             }
         });
@@ -294,8 +296,21 @@ impl AggregatorNode {
         model_round: u64,
         model: Arc<TensorModel>,
         spec: TaskSpec,
+        ctx: SpanCtx,
     ) -> Result<()> {
         let started = Stopwatch::start_with(self.inner.clock());
+        // Parent the whole shard round under the root's dispatch span
+        // (`ctx` rode the dispatch stream's meta), and hand the shard
+        // span to the embedded controller so its own fan-out /
+        // aggregation spans nest under it — one trace, two tiers.
+        let shard_span = self
+            .inner
+            .span_sink()
+            .begin("shard_round", ctx)
+            .peer(&self.id)
+            .round(model_round)
+            .task(task_id);
+        self.inner.set_span_parent(shard_span.ctx());
         // The dispatched model becomes the shard's community model at
         // the dispatched round, so the shard-local data plane (delta
         // bases, fold input) matches what a flat controller holds.
@@ -365,7 +380,14 @@ impl AggregatorNode {
                 .sum()
         };
         let partial = self.inner.aggregate_from_store(&outcome.arrived, task_id)?;
-        self.upload_partial(task_id, model_round, &partial, weight, started.elapsed())?;
+        self.upload_partial(
+            task_id,
+            model_round,
+            &partial,
+            weight,
+            started.elapsed(),
+            shard_span.ctx(),
+        )?;
         self.rounds_forwarded.fetch_add(1, Ordering::SeqCst);
         log_debug(
             "aggregator",
@@ -392,12 +414,23 @@ impl AggregatorNode {
         partial: &Arc<TensorModel>,
         weight: usize,
         elapsed: Duration,
+        ctx: SpanCtx,
     ) -> Result<()> {
+        let upload_span = self
+            .inner
+            .span_sink()
+            .begin("partial_upload", ctx)
+            .peer(&self.id)
+            .round(model_round)
+            .task(task_id);
+        // The upload span's context rides the meta, so the ROOT's
+        // ingest span parents under this hop.
         let meta = TaskMeta {
             num_samples: weight,
             train_wall_time_us: (elapsed.as_micros() as u64).max(1),
             ..TaskMeta::default()
-        };
+        }
+        .with_span_ctx(upload_span.ctx());
         let chunk = self.inner.env.stream_chunk_bytes;
         let policy = RetryPolicy::rpc();
         let mut rng = Rng::new(fnv1a64(FNV64_INIT, self.id.as_bytes()) ^ task_id);
@@ -490,7 +523,21 @@ impl AggregatorNode {
     /// Evaluate on the shard and combine: sample-weighted mean loss,
     /// summed samples, slowest shard member's eval time (tree depth
     /// adds latency, not work).
-    fn eval_on_shard(&self, task_id: u64, round: u64, model: &Arc<TensorModel>) -> Message {
+    fn eval_on_shard(
+        &self,
+        task_id: u64,
+        round: u64,
+        model: &Arc<TensorModel>,
+        ctx: SpanCtx,
+    ) -> Message {
+        let eval_span = self
+            .inner
+            .span_sink()
+            .begin("shard_eval", ctx)
+            .peer(&self.id)
+            .round(round)
+            .task(task_id);
+        self.inner.set_span_parent(eval_span.ctx());
         let targets = self.inner.learners_snapshot();
         if targets.is_empty() {
             return Message::error(
@@ -603,15 +650,16 @@ impl Service for AggregatorServicer {
                 node.shutdown.store(true, Ordering::SeqCst);
                 node.inner.handle(Message::Shutdown)
             }
+            // One-shot dispatch carries no meta, hence no trace context.
             Message::RunTask { task_id, round, model, spec } => match model.to_model() {
                 Ok(m) => {
-                    node.queue_shard_round(task_id, round, Arc::new(m), spec);
+                    node.queue_shard_round(task_id, round, Arc::new(m), spec, SpanCtx::UNSET);
                     Message::Ack { task_id, ok: true }
                 }
                 Err(e) => Message::error(ErrorCode::InvalidModel, format!("bad model: {e:#}")),
             },
             Message::EvaluateModel { task_id, round, model } => match model.to_model() {
-                Ok(m) => node.eval_on_shard(task_id, round, &Arc::new(m)),
+                Ok(m) => node.eval_on_shard(task_id, round, &Arc::new(m), SpanCtx::UNSET),
                 Err(e) => Message::error(ErrorCode::InvalidModel, format!("bad model: {e:#}")),
             },
             Message::ModelStreamBegin {
@@ -693,6 +741,7 @@ impl Service for AggregatorServicer {
                         Err(reply) => return reply,
                     };
                     let model = Arc::new(finished.model);
+                    let ctx = finished.meta.span_ctx();
                     match finished.purpose {
                         StreamPurpose::RunTask => {
                             node.record_model(finished.round, finished.codec, &model);
@@ -701,6 +750,7 @@ impl Service for AggregatorServicer {
                                 finished.round,
                                 model,
                                 finished.spec,
+                                ctx,
                             );
                             Message::Ack { task_id: finished.task_id, ok: true }
                         }
@@ -708,7 +758,12 @@ impl Service for AggregatorServicer {
                             // The End reply IS the combined shard eval
                             // reply. Record the base only on success,
                             // matching the learner's discipline.
-                            let reply = node.eval_on_shard(finished.task_id, finished.round, &model);
+                            let reply = node.eval_on_shard(
+                                finished.task_id,
+                                finished.round,
+                                &model,
+                                ctx,
+                            );
                             if !matches!(reply, Message::Error { .. }) {
                                 node.record_model(finished.round, finished.codec, &model);
                             }

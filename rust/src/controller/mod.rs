@@ -22,6 +22,7 @@ use crate::metrics::{FedOp, OpMetrics};
 use crate::net::chaos::{connect_with_chaos, ChaosPlan};
 use crate::net::retry::RetryPolicy;
 use crate::net::{ClientConn, Psk, Service};
+use crate::obs::{SpanCtx, SpanSink};
 use crate::proto::client::{self, StreamSend};
 use crate::proto::ingest::{BufferPool, FinishedStream, IngestLimits, StreamBegin, StreamIngest};
 use crate::proto::wire::{fnv1a64, FNV64_INIT};
@@ -337,6 +338,21 @@ pub struct Controller {
     /// Fast-path gate so non-recording runs never touch the recorder
     /// mutex (set by `start_recording`, cleared by `finish_recording`).
     recording: AtomicBool,
+    /// Span recorder for controller-side operations — round brackets,
+    /// dispatch fan-outs, ingest, aggregation, late folds (see
+    /// [`crate::obs::span`]). Disabled by default; the driver enables
+    /// it when the env's `observability.spans` flag is set.
+    spans: Arc<SpanSink>,
+    /// Trace context inherited from upstream: a
+    /// [`hierarchy::AggregatorNode`] parents its embedded controller's
+    /// work under the root dispatch span that caused it. Unset on a
+    /// root controller, where rounds root fresh traces.
+    span_parent: Mutex<SpanCtx>,
+    /// Context of the current round's root span (installed by the
+    /// scheduler / shard-round driver for the round's duration).
+    /// Dispatch and aggregation spans parent under it, falling back to
+    /// `span_parent` between rounds.
+    round_ctx: Mutex<SpanCtx>,
 }
 
 impl Controller {
@@ -357,6 +373,11 @@ impl Controller {
         let rule = aggregation::rule_from_spec(&env.aggregation)?;
         let dispatch_threads = env.learners.clamp(1, 16);
         let counters = CounterRegistry::new();
+        // Keyed by env name so a two-tier run's shard controllers
+        // (shard_env renames them "<root>/<agg-id>") allocate span ids
+        // under distinct prefixes — ids must stay unique across every
+        // sink that can feed one trace.
+        let spans = SpanSink::new(format!("controller/{}", env.name), clock.clone());
         Ok(Arc::new(Controller {
             backend,
             state: Mutex::new(CtrlState {
@@ -394,6 +415,9 @@ impl Controller {
             fallback_sends: counters.counter(names::FALLBACK_SENDS),
             recorder: Mutex::new(None),
             recording: AtomicBool::new(false),
+            spans,
+            span_parent: Mutex::new(SpanCtx::UNSET),
+            round_ctx: Mutex::new(SpanCtx::UNSET),
             env,
             psk,
             clock,
@@ -423,6 +447,42 @@ impl Controller {
     /// read it whole instead of polling accessors one by one.
     pub fn counters(&self) -> &Arc<CounterRegistry> {
         &self.counters
+    }
+
+    /// This controller's span sink. Spans record only after `enable()`;
+    /// a disabled sink costs one atomic load per would-be span (see
+    /// [`crate::obs::SpanSink`]).
+    pub fn span_sink(&self) -> &Arc<SpanSink> {
+        &self.spans
+    }
+
+    /// Parent future controller-side spans (round roots included)
+    /// under `ctx` — the hierarchy tier joins shard work to the root's
+    /// federation-wide trace through this seam.
+    pub(crate) fn set_span_parent(&self, ctx: SpanCtx) {
+        *self.span_parent.lock().unwrap() = ctx;
+    }
+
+    pub(crate) fn span_parent(&self) -> SpanCtx {
+        *self.span_parent.lock().unwrap()
+    }
+
+    /// Install / clear the current round root span's context (held for
+    /// the scheduler's round scope).
+    pub(crate) fn set_round_ctx(&self, ctx: SpanCtx) {
+        *self.round_ctx.lock().unwrap() = ctx;
+    }
+
+    /// Context controller-side work spans parent under: the open
+    /// round's root span when one is active, else the inherited
+    /// upstream context.
+    pub(crate) fn work_ctx(&self) -> SpanCtx {
+        let ctx = *self.round_ctx.lock().unwrap();
+        if ctx.is_set() {
+            ctx
+        } else {
+            self.span_parent()
+        }
     }
 
     /// Completions folded through the async staleness path because they
@@ -671,7 +731,14 @@ impl Controller {
     /// and the footer.
     pub fn finish_recording(&self) -> Option<Vec<u8>> {
         let mut g = self.recorder.lock().unwrap();
-        let rec = g.take();
+        let mut rec = g.take();
+        // Spans recorded so far ride the trace as one observability
+        // batch (replay ignores it; `trace dump` renders it).
+        if let Some(r) = rec.as_mut() {
+            let spans = self.spans.drain();
+            r.spans(self.clock.now(), &spans);
+        }
+        let rec = rec;
         let digest = self
             .community()
             .map(|(m, _)| crate::runtime::trace::model_digest(&m))
@@ -724,6 +791,7 @@ impl Controller {
     /// profile samples).
     fn open_round(&self, round: u64, expecting: &[String]) {
         let _rec = self.trace(|r, tick| r.round_open(tick, round, expecting));
+        crate::util::logging::set_round(round);
         let now = self.clock.now();
         let mut s = self.state.lock().unwrap();
         for id in expecting {
@@ -822,6 +890,7 @@ impl Controller {
                 r.round_close(self.clock.now(), round, &arrived);
             }
         }
+        crate::util::logging::clear_round();
         RoundOutcome { arrived, missing, completion_spread }
     }
 
@@ -834,6 +903,7 @@ impl Controller {
     /// steady-state round performs zero O(params) allocation.
     fn aggregate_from_store(&self, learner_ids: &[String], round: u64) -> Result<Arc<TensorModel>> {
         let _rec = self.trace(|r, tick| r.aggregate(tick, round, learner_ids));
+        let _span = self.spans.begin("aggregate", self.work_ctx()).round(round);
         let backend = self.effective_backend();
         let mut s = self.state.lock().unwrap();
         let current = s
@@ -1292,6 +1362,16 @@ impl Controller {
             (configured, None, 0)
         };
         let stream_id = client::next_stream_id();
+        // One span for the whole fan-out (per-target spans would cost
+        // O(fleet) on the hot path); its context rides every Begin's
+        // meta so each receiver parents its work under this dispatch.
+        let dispatch_span = self
+            .spans
+            .begin(dispatch_op(purpose), self.work_ctx())
+            .round(model_round)
+            .task(task_id)
+            .stream(stream_id);
+        let dispatch_ctx = dispatch_span.ctx();
         let mut state = vec![SendState::Alive; n];
         let mut replies: Vec<Option<Result<Message>>> = (0..n).map(|_| None).collect();
         let mut dispatch = Duration::ZERO;
@@ -1314,7 +1394,7 @@ impl Controller {
                 codec,
                 base_round,
                 layout: TensorLayoutProto::codec_layout_of(model, codec),
-                meta: TaskMeta::default(),
+                meta: TaskMeta::default().with_span_ctx(dispatch_ctx),
                 spec: s,
             }
             .encode()
@@ -1499,7 +1579,7 @@ impl Controller {
                         "controller",
                         &format!("{}: no shared delta base, re-sending full", h.id),
                     );
-                    let meta = TaskMeta::default();
+                    let meta = TaskMeta::default().with_span_ctx(dispatch_ctx);
                     let spec_i = spec_for(i);
                     let send = StreamSend::f32(
                         purpose,
@@ -1652,7 +1732,13 @@ impl Controller {
         } else {
             (configured, None, 0)
         };
-        let meta = TaskMeta::default();
+        let dispatch_span = self
+            .spans
+            .begin(dispatch_op(purpose), self.work_ctx())
+            .peer(&target.id)
+            .round(model_round)
+            .task(task_id);
+        let meta = TaskMeta::default().with_span_ctx(dispatch_span.ctx());
         let send = StreamSend {
             purpose,
             task_id,
@@ -1760,6 +1846,14 @@ impl Controller {
             }
         }
         Ok(reply)
+    }
+}
+
+/// Span op name for an outbound model fan-out, by stream purpose.
+fn dispatch_op(purpose: StreamPurpose) -> &'static str {
+    match purpose {
+        StreamPurpose::Evaluate => "eval_dispatch",
+        _ => "dispatch",
     }
 }
 
@@ -1943,6 +2037,15 @@ impl Controller {
         model: TensorModel,
         meta: TaskMeta,
     ) -> Result<()> {
+        // Parent under the SENDER's span (the learner's upload attempt,
+        // or an aggregator's partial upload), carried in the meta's
+        // trace-context tail — this is the hop that stitches
+        // cross-process work into one trace.
+        let ingest_span = self
+            .spans
+            .begin("ingest", meta.span_ctx())
+            .peer(&learner_id)
+            .task(task_id);
         if let Protocol::Asynchronous { staleness_alpha } = self.env.protocol {
             return self.complete_task_async(task_id, learner_id, model, meta, staleness_alpha);
         }
@@ -2037,6 +2140,11 @@ impl Controller {
         }
         if late {
             let entry = entry.as_ref().expect("late fold implies a stored entry");
+            let _fold_span = self
+                .spans
+                .begin("late_fold", ingest_span.ctx())
+                .peer(&learner_id)
+                .task(task_id);
             let sw = Stopwatch::start();
             // Staleness basis = the round this model was trained for
             // (its task id), NOT the learner's dispatch_round entry —

@@ -6,6 +6,7 @@
 
 use super::super::Controller;
 use crate::metrics::{FedOp, RoundReport};
+use crate::obs::SpanCtx;
 use crate::proto::client;
 use crate::proto::{Message, ModelProto, StreamPurpose, TaskMeta, TaskSpec};
 use crate::tensor::{ByteOrder, DType};
@@ -30,6 +31,11 @@ pub(crate) fn run_round_with_budget(
     rng: &mut Rng,
 ) -> Result<RoundReport> {
     let round_sw = Stopwatch::start_with(ctrl.clock());
+    // Root span for the round. On a root controller this opens a fresh
+    // trace; behind an aggregator it parents under the shard-round span
+    // (`span_parent`), so the whole federation shares one trace.
+    let round_span = ctrl.span_sink().begin("round", ctrl.span_parent()).round(round);
+    ctrl.set_round_ctx(round_span.ctx());
     let participants = ctrl.select_participants(rng);
     if participants.is_empty() {
         bail!("round {round}: no registered learners");
@@ -128,10 +134,12 @@ pub(crate) fn run_round_with_budget(
     // completed, reweighting by the actual participants — completions
     // that miss the cut fold through the async staleness path instead
     // of being dropped (see Controller::complete_task).
+    let barrier_span = ctrl.span_sink().begin("barrier", round_span.ctx()).round(round);
     let outcome = ctrl.wait_round_quorum(
         Duration::from_millis(ctrl.env.task_timeout_ms),
         ctrl.env.quorum_fraction,
     );
+    barrier_span.end();
     let arrived = outcome.arrived;
     let train_round_time = train_sw.elapsed();
     ctrl.record(FedOp::TrainRound, train_round_time);
@@ -226,6 +234,7 @@ pub(crate) fn run_round_with_budget(
 
     let federation_round = round_sw.elapsed();
     ctrl.record(FedOp::FederationRound, federation_round);
+    ctrl.set_round_ctx(SpanCtx::UNSET);
     Ok(RoundReport {
         round,
         participants: participants.len(),

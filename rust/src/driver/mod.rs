@@ -267,6 +267,13 @@ fn run_federation(
 
     // --- Initialization (Fig. 8) --------------------------------------
     let controller = Controller::new(env.clone(), psk)?;
+    // Route log timestamps through the run's clock (system here, but
+    // the seam keeps driver logs and sim-clock harness logs uniform).
+    crate::util::logging::set_clock(controller.clock().clone());
+    if env.observability.spans {
+        controller.span_sink().enable();
+    }
+    let mut expo = start_expo(env, &controller)?;
     if record {
         // Before serving: registrations are part of the recorded
         // timeline.
@@ -299,6 +306,9 @@ fn run_federation(
         learner.set_stream_chunk(env.effective_stream_chunk());
         learner.set_upload_codec(env.upload_codec());
         learner.set_delta_fallback(env.delta_fallback);
+        if env.observability.spans {
+            learner.span_sink().enable();
+        }
         let (ep, server) = serve_component(
             env,
             &format!("learner-{run}-{i}"),
@@ -387,6 +397,9 @@ fn run_federation(
     for mut s in learner_servers {
         s.shutdown();
     }
+    if let Some(e) = expo.as_mut() {
+        e.stop();
+    }
 
     let final_loss = round_metrics.iter().rev().find_map(|r| r.community_eval_loss);
     let (wire_sent, wire_raw) = controller.wire_bytes_totals();
@@ -456,6 +469,13 @@ fn run_two_tier(
     root_env.learners = topo.aggregators;
     root_env.topology = TopologySpec::default();
     let controller = Controller::new(root_env, psk)?;
+    crate::util::logging::set_clock(controller.clock().clone());
+    if env.observability.spans {
+        controller.span_sink().enable();
+    }
+    // The side listener serves the ROOT's registry; shard registries are
+    // folded into the final report's counter snapshot instead.
+    let mut expo = start_expo(env, &controller)?;
     if record {
         // Before serving: the aggregator tier's registrations (and a
         // failover's re-registrations) are part of the recorded
@@ -488,6 +508,9 @@ fn run_two_tier(
     for s in 0..topo.aggregators {
         let node =
             AggregatorNode::new(&format!("agg-{s}"), &ctrl_endpoint, env, shard_sizes[s], psk)?;
+        if env.observability.spans {
+            node.inner().span_sink().enable();
+        }
         let (ep, server) = serve_component(
             env,
             &format!("agg-{run}-{s}"),
@@ -518,6 +541,9 @@ fn run_two_tier(
         learner.set_stream_chunk(env.effective_stream_chunk());
         learner.set_upload_codec(env.upload_codec());
         learner.set_delta_fallback(env.delta_fallback);
+        if env.observability.spans {
+            learner.span_sink().enable();
+        }
         let (ep, server) = serve_component(
             env,
             &format!("learner-{run}-{i}"),
@@ -684,6 +710,9 @@ fn run_two_tier(
     for mut s in learner_servers.into_iter().chain(agg_servers) {
         s.shutdown();
     }
+    if let Some(e) = expo.as_mut() {
+        e.stop();
+    }
     drop(ctrl_server);
 
     let final_loss = round_metrics.iter().rev().find_map(|r| r.community_eval_loss);
@@ -727,6 +756,33 @@ fn run_two_tier(
         },
         trace,
     ))
+}
+
+/// Start the env's optional live metrics listener over the (root)
+/// controller's registry. `observability.listen_addr: ""` (the default)
+/// keeps the plane fully off — no socket, no thread.
+fn start_expo(
+    env: &FederationEnv,
+    controller: &Arc<Controller>,
+) -> Result<Option<crate::obs::ExpoServer>> {
+    if env.observability.listen_addr.is_empty() {
+        return Ok(None);
+    }
+    let server = crate::obs::ExpoServer::serve(
+        &env.observability.listen_addr,
+        Arc::clone(controller.counters()),
+    )
+    .map_err(|e| {
+        anyhow::anyhow!("observability listener {}: {e}", env.observability.listen_addr)
+    })?;
+    log_info(
+        "driver",
+        &format!(
+            "metrics exposition at http://{}/metrics (`metisfl metrics --addr {0}`)",
+            server.addr()
+        ),
+    );
+    Ok(Some(server))
 }
 
 /// Serve a component on the env's transport; returns (endpoint, handle).

@@ -17,7 +17,9 @@
 //! chaos and requires the community model to match **bitwise** — faults
 //! may shrink participation, but they must never corrupt the math.
 
-use crate::config::{FederationEnv, HeteroFleetSpec, ModelSpec, TrainerKind, WireCodecChoice};
+use crate::config::{
+    FederationEnv, HeteroFleetSpec, ModelSpec, ObservabilitySpec, TrainerKind, WireCodecChoice,
+};
 use crate::controller::{scheduling, Controller};
 use crate::harness::runner::ReportWriter;
 use crate::learner::{Dataset, Learner, LearnerServicer, SyntheticTrainer, Trainer};
@@ -66,6 +68,12 @@ pub struct LoadtestConfig {
     /// scheduler decision, sealed with the final community digest, so
     /// `metisfl replay` can re-drive the run and assert it bitwise.
     pub record: bool,
+    /// Enable span tracing on the controller and every learner for the
+    /// run (`metisfl loadtest --spans`). The report is then published
+    /// under the `loadtest_spans` name so the CI regression gate can
+    /// hold the instrumented run to its own ceiling without clobbering
+    /// the spans-off baseline.
+    pub spans: bool,
 }
 
 impl LoadtestConfig {
@@ -85,6 +93,7 @@ impl LoadtestConfig {
             wire_codec: WireCodecChoice::Auto,
             sim: false,
             record: false,
+            spans: false,
         }
     }
 
@@ -105,6 +114,7 @@ impl LoadtestConfig {
             })
             .chaos(self.chaos.clone())
             .wire_codec(self.wire_codec)
+            .observability(ObservabilitySpec { listen_addr: String::new(), spans: self.spans })
             .build()
     }
 }
@@ -115,6 +125,9 @@ pub const PHASES: [&str; 6] = ["dial", "dispatch", "train", "upload", "aggregate
 /// What one loadtest run measured and survived.
 #[derive(Debug, Clone)]
 pub struct LoadtestReport {
+    /// Report name the gated table publishes under: `loadtest`, or
+    /// `loadtest_spans` when the run was traced (`cfg.spans`).
+    pub name: &'static str,
     /// `(phase, histogram)` in [`PHASES`] order.
     pub phases: Vec<(&'static str, LatencyHistogram)>,
     /// Configured fleet size for this run (after any survivor filter).
@@ -149,11 +162,12 @@ impl LoadtestReport {
         &self.phases.iter().find(|(n, _)| *n == name).expect("unknown phase").1
     }
 
-    /// The `bench_out/loadtest.{csv,json}` table the CI regression gate
-    /// diffs (keys `loadtest/<phase>/p99_ms`).
+    /// The `bench_out/<name>.{csv,json}` table the CI regression gate
+    /// diffs (keys `loadtest/<phase>/p99_ms`, or `loadtest_spans/...`
+    /// for a traced run).
     pub fn table(&self) -> ReportWriter {
         let mut w = ReportWriter::new(
-            "loadtest",
+            self.name,
             &["phase", "p50_ms", "p99_ms", "p999_ms", "max_ms", "samples"],
         );
         for (name, h) in &self.phases {
@@ -162,7 +176,7 @@ impl LoadtestReport {
                 fmt_ms(h.p50()),
                 fmt_ms(h.p99()),
                 fmt_ms(h.p999()),
-                fmt_ms(h.max()),
+                fmt_ms(Some(h.max())),
                 h.count().to_string(),
             ]);
         }
@@ -170,8 +184,13 @@ impl LoadtestReport {
     }
 }
 
-fn fmt_ms(d: Duration) -> String {
-    format!("{:.3}", d.as_secs_f64() * 1e3)
+/// Empty histograms have no quantiles; render them as `-` rather than
+/// a fake zero the regression gate would happily "pass".
+fn fmt_ms(d: Option<Duration>) -> String {
+    match d {
+        Some(d) => format!("{:.3}", d.as_secs_f64() * 1e3),
+        None => "-".to_string(),
+    }
 }
 
 /// Bitwise-comparable digest of a model (canonical implementation lives
@@ -205,8 +224,14 @@ fn run_filtered(cfg: &LoadtestConfig, fleet: Option<&[usize]>) -> Result<Loadtes
     env.validate()?;
     let psk: Psk = None;
     let clock = if cfg.sim { Clock::sim() } else { Clock::system() };
+    // Log timestamps follow the run's clock: a sim run logs virtual
+    // millis that line up with its trace ticks and span intervals.
+    crate::util::logging::set_clock(clock.clone());
 
     let controller = Controller::with_clock(env.clone(), psk, clock.clone())?;
+    if cfg.spans {
+        controller.span_sink().enable();
+    }
     if cfg.record {
         // Before any learner dials in: registrations are part of the
         // recorded timeline.
@@ -253,6 +278,9 @@ fn run_filtered(cfg: &LoadtestConfig, fleet: Option<&[usize]>) -> Result<Loadtes
         learner.set_stream_chunk(env.effective_stream_chunk());
         learner.set_upload_codec(env.upload_codec());
         learner.set_delta_fallback(env.delta_fallback);
+        if cfg.spans {
+            learner.span_sink().enable();
+        }
         let plan = &plans[i];
         if !plan.is_noop() {
             learner.set_chaos(plan.clone());
@@ -416,6 +444,7 @@ fn run_filtered(cfg: &LoadtestConfig, fleet: Option<&[usize]>) -> Result<Loadtes
     }
 
     let report = LoadtestReport {
+        name: if cfg.spans { "loadtest_spans" } else { "loadtest" },
         phases: vec![
             ("dial", dial),
             ("dispatch", dispatch),
@@ -518,7 +547,7 @@ mod tests {
         assert_eq!(report.phase("dial").count(), 4);
         assert_eq!(report.phase("round").count(), 2);
         assert_eq!(report.phase("upload").count(), 8, "4 learners × 2 rounds");
-        assert!(report.phase("round").p99() > Duration::ZERO);
+        assert!(report.phase("round").p99().unwrap() > Duration::ZERO);
         assert_ne!(report.community_digest, 0);
         assert_eq!(report.retry_give_ups, 0);
         assert_eq!(report.streams_gced, 0);
@@ -573,6 +602,23 @@ mod tests {
             sim_report.community_digest, wall.community_digest,
             "sim timing leaked into the math"
         );
+    }
+
+    #[test]
+    fn spans_run_publishes_under_its_own_report_name() {
+        let mut cfg = LoadtestConfig::quick();
+        cfg.learners = 3;
+        cfg.rate = 1000.0;
+        cfg.spans = true;
+        let traced = run_loadtest(&cfg).unwrap();
+        assert_eq!(traced.name, "loadtest_spans");
+        assert_eq!(traced.rounds_completed, 2);
+        // Tracing must never perturb the math.
+        let mut off = cfg.clone();
+        off.spans = false;
+        let base = run_loadtest(&off).unwrap();
+        assert_eq!(base.name, "loadtest");
+        assert_eq!(traced.community_digest, base.community_digest);
     }
 
     #[test]

@@ -32,6 +32,7 @@ use crate::metrics::counters::{names, Counter, CounterRegistry};
 use crate::net::chaos::{connect_with_chaos, ChaosPlan};
 use crate::net::retry::RetryPolicy;
 use crate::net::{ClientConn, Psk, Service};
+use crate::obs::{SpanCtx, SpanSink};
 use crate::proto::client::{self, RpcError, StreamSend};
 use crate::proto::ingest::{IngestLimits, StreamBegin, StreamIngest};
 use crate::proto::wire::{fnv1a64, FNV64_INIT};
@@ -96,6 +97,11 @@ pub struct Learner {
     /// Wall-clock duration of each successful completion upload
     /// (bounded; the loadtest harness drains it per run).
     upload_timings: Mutex<Vec<Duration>>,
+    /// Span recorder for learner-side work — train, upload, and each
+    /// upload attempt (so severed-then-retried uploads leave a span per
+    /// attempt). Parents under the dispatch context carried in the
+    /// stream's `TaskMeta`; disabled by default.
+    spans: Arc<SpanSink>,
     shutdown: AtomicBool,
     tasks_completed: AtomicU64,
 }
@@ -126,6 +132,7 @@ impl Learner {
         clock: Clock,
     ) -> Arc<Learner> {
         let counters = CounterRegistry::new();
+        let spans = SpanSink::new(format!("learner/{id}"), clock.clone());
         Arc::new(Learner {
             id: id.to_string(),
             controller_endpoint: Mutex::new(controller_endpoint.to_string()),
@@ -150,6 +157,7 @@ impl Learner {
             clock,
             counters,
             upload_timings: Mutex::new(Vec::new()),
+            spans,
             shutdown: AtomicBool::new(false),
             tasks_completed: AtomicU64::new(0),
         })
@@ -159,6 +167,12 @@ impl Learner {
     /// ingest engine).
     pub fn counters(&self) -> &Arc<CounterRegistry> {
         &self.counters
+    }
+
+    /// The learner's span recorder (enable via
+    /// [`crate::obs::SpanSink::enable`]; drained by the harness).
+    pub fn span_sink(&self) -> &Arc<SpanSink> {
+        &self.spans
     }
 
     /// Route every future callback dial through a fault-injection plan
@@ -290,9 +304,11 @@ impl Learner {
             if learner.is_shutdown() {
                 return;
             }
+            // One-shot RunTask carries no task meta, hence no trace
+            // context — the task roots its own trace if spans are on.
             let result = model
                 .to_model()
-                .and_then(|m| learner.train_and_upload(task_id, round, &m, &spec));
+                .and_then(|m| learner.train_and_upload(task_id, round, &m, &spec, SpanCtx::UNSET));
             learner.log_task_result(task_id, result);
         });
     }
@@ -305,13 +321,14 @@ impl Learner {
         round: u64,
         model: Arc<TensorModel>,
         spec: TaskSpec,
+        ctx: SpanCtx,
     ) {
         let learner = Arc::clone(self);
         self.executor.spawn(move || {
             if learner.is_shutdown() {
                 return;
             }
-            let result = learner.train_and_upload(task_id, round, &model, &spec);
+            let result = learner.train_and_upload(task_id, round, &model, &spec, ctx);
             learner.log_task_result(task_id, result);
         });
     }
@@ -336,8 +353,11 @@ impl Learner {
         round: u64,
         model: &TensorModel,
         spec: &TaskSpec,
+        ctx: SpanCtx,
     ) -> Result<()> {
+        let train_span = self.spans.begin("train", ctx).task(task_id).round(round);
         let (trained, meta) = self.trainer.train(model, &self.dataset, spec)?;
+        train_span.end();
         let chunk = self.stream_chunk();
         // Transport faults retry through the unified policy: each
         // attempt re-dials (the connection is dropped on a transport
@@ -350,12 +370,23 @@ impl Learner {
         let mut rng = Rng::new(fnv1a64(FNV64_INIT, self.id.as_bytes()) ^ task_id);
         let started = Stopwatch::start_with(&self.clock);
         let fallback = self.delta_fallback.load(Ordering::SeqCst);
+        // One span brackets the whole upload (including backoff);
+        // each retry attempt gets a child span, and the ATTEMPT's
+        // context rides the wire meta — the controller's ingest span
+        // parents under the exact attempt that delivered it.
+        let upload_span = self.spans.begin("upload", ctx).task(task_id).round(round);
+        let upload_ctx = upload_span.ctx();
         let upload = if chunk > 0 {
             // Each attempt returns whether the f32 fallback path fired.
             policy.run(
                 &self.clock,
                 &mut rng,
                 |_| {
+                    let attempt_span = self
+                        .spans
+                        .begin("upload_attempt", upload_ctx)
+                        .task(task_id)
+                        .round(round);
                     // Ensure the callback session (and its codec
                     // negotiation) exists before choosing a codec — a
                     // re-dial renegotiates.
@@ -379,13 +410,14 @@ impl Learner {
                         (configured, None, 0)
                     };
                     let task_spec = TaskSpec::default();
+                    let meta_wire = meta.clone().with_span_ctx(attempt_span.ctx());
                     let send = StreamSend {
                         purpose: StreamPurpose::TaskCompletion,
                         task_id,
                         round,
                         learner_id: &self.id,
                         model: &trained,
-                        meta: &meta,
+                        meta: &meta_wire,
                         spec: &task_spec,
                         codec,
                         base: base.as_deref(),
@@ -413,9 +445,15 @@ impl Learner {
                 &self.clock,
                 &mut rng,
                 |_| {
+                    let attempt_span = self
+                        .spans
+                        .begin("upload_attempt", upload_ctx)
+                        .task(task_id)
+                        .round(round);
+                    let meta_wire = meta.clone().with_span_ctx(attempt_span.ctx());
                     let proto = ModelProto::from_model(&trained, DType::F32, ByteOrder::Little);
                     self.with_callback_conn(|conn| {
-                        client::mark_task_completed(conn, task_id, &self.id, proto, meta.clone())
+                        client::mark_task_completed(conn, task_id, &self.id, proto, meta_wire)
                     })
                     .map(|()| false)
                 },
@@ -593,11 +631,13 @@ impl Service for LearnerServicer {
                         // Queue training and ack, exactly like one-shot
                         // RunTask (Fig. 9).
                         learner.record_community(finished.round, finished.codec, &model);
+                        let ctx = finished.meta.span_ctx();
                         learner.run_train_task_model(
                             finished.task_id,
                             finished.round,
                             model,
                             finished.spec,
+                            ctx,
                         );
                         Message::Ack { task_id: finished.task_id, ok: true }
                     }

@@ -166,6 +166,7 @@ impl Trainer for SyntheticTrainer {
             train_loss: 1.0 / (1.0 + invocation as f64).sqrt(), // plausibly decreasing
             steps_per_sec: steps as f64 / elapsed.as_secs_f64().max(1e-9),
             train_wall_time_us: (elapsed.as_micros() as u64).max(1),
+            ..TaskMeta::default()
         };
         Ok((out, meta))
     }
@@ -322,6 +323,7 @@ impl Trainer for RustSgdTrainer {
             train_loss: last_loss,
             steps_per_sec: steps.max(1) as f64 / elapsed.as_secs_f64().max(1e-9),
             train_wall_time_us: (elapsed.as_micros() as u64).max(1),
+            ..TaskMeta::default()
         };
         Ok((m, meta))
     }

@@ -44,6 +44,7 @@ pub mod json;
 pub mod learner;
 pub mod metrics;
 pub mod net;
+pub mod obs;
 pub mod proto;
 pub mod runtime;
 pub mod tensor;

@@ -10,6 +10,8 @@
 //! * `metisfl stress [...]`             — one cross-framework stress cell
 //! * `metisfl loadtest [...]`           — open-loop arrivals + chaos gates
 //! * `metisfl replay --trace <file>`    — re-drive a recorded run, verify bitwise
+//! * `metisfl trace dump|diff [...]`    — timeline view / first-divergence bisection
+//! * `metisfl metrics [...]`            — Prometheus text exposition of a registry
 //! * `metisfl table1`                   — print the qualitative matrix
 //!
 //! Multi-process deployment: start the controller first, then learners,
@@ -34,8 +36,8 @@ fn main() {
 }
 
 fn usage() -> String {
-    "metisfl <driver|controller|aggregator|learner|simulate|stress|loadtest|replay|table1|bench-check> \
-     [options]\n\
+    "metisfl <driver|controller|aggregator|learner|simulate|stress|loadtest|replay|trace|metrics|\
+     table1|bench-check> [options]\n\
      Run `metisfl <subcommand> --help` for options."
         .to_string()
 }
@@ -55,6 +57,8 @@ fn run(args: &[String]) -> anyhow::Result<()> {
         "stress" => cmd_stress(rest),
         "loadtest" => cmd_loadtest(rest),
         "replay" => cmd_replay(rest),
+        "trace" => cmd_trace(rest),
+        "metrics" => cmd_metrics(rest),
         "table1" => {
             println!("{}", metisfl::baselines::capabilities::render_table());
             Ok(())
@@ -318,6 +322,11 @@ fn cmd_loadtest(raw: &[String]) -> anyhow::Result<()> {
     .flag("quick", "CI smoke preset (ignores the sizing options)")
     .flag("sim", "run on a simulated clock: virtual arrivals/compute/timeouts")
     .flag(
+        "spans",
+        "trace spans on every process; the table lands as 'loadtest_spans' so the \
+         perf gate bounds the instrumentation overhead separately",
+    )
+    .flag(
         "verify-equivalence",
         "re-run the surviving fleet without chaos; fail unless the community \
          model matches bitwise",
@@ -351,6 +360,7 @@ fn cmd_loadtest(raw: &[String]) -> anyhow::Result<()> {
     }
     cfg.sim = a.flag("sim");
     cfg.record = a.get("record").is_some();
+    cfg.spans = a.flag("spans");
     let report = if a.flag("verify-equivalence") {
         let eq = metisfl::harness::verify_chaos_equivalence(&cfg)?;
         println!(
@@ -420,12 +430,221 @@ fn cmd_replay(raw: &[String]) -> anyhow::Result<()> {
         println!("counter drift: {name}: recorded {rec}, replayed {rep}");
     }
     if let Some(d) = &outcome.divergence {
-        anyhow::bail!("replay diverged: {d}");
+        anyhow::bail!(
+            "replay diverged: {d}\n\
+             (bisect: re-record the scenario and compare the two trace files with \
+             `metisfl trace diff --a <old> --b <new>`; render either timeline with \
+             `metisfl trace dump --trace <file>`)"
+        );
     }
     if a.flag("strict-counters") && !drift.is_empty() {
         anyhow::bail!("replay drifted on {} replayable counter(s)", drift.len());
     }
     println!("replay OK: community model reproduced bitwise");
+    Ok(())
+}
+
+fn cmd_trace(raw: &[String]) -> anyhow::Result<()> {
+    match raw.first().map(String::as_str) {
+        Some("dump") => cmd_trace_dump(&raw[1..]),
+        Some("diff") => cmd_trace_diff(&raw[1..]),
+        Some("--help") | Some("-h") | None => {
+            println!(
+                "metisfl trace <dump|diff> [options]\n\
+                 dump  — render a recorded trace as a per-tick timeline\n\
+                 diff  — first-divergence bisection between two traces"
+            );
+            Ok(())
+        }
+        Some(other) => anyhow::bail!("unknown trace subcommand '{other}' (expected dump|diff)"),
+    }
+}
+
+fn cmd_trace_dump(raw: &[String]) -> anyhow::Result<()> {
+    let cmd = Command::new(
+        "metisfl trace dump",
+        "render a recorded MFTR1 trace as a human-readable per-tick timeline",
+    )
+    .opt("trace", None, "trace file written by `loadtest --record` / `driver --record`");
+    let a = parse(&cmd, raw)?;
+    let path = a
+        .get("trace")
+        .ok_or_else(|| anyhow::anyhow!("--trace <file> is required"))?;
+    let bytes = std::fs::read(path).map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+    let trace = metisfl::runtime::trace::Trace::decode(&bytes)?;
+    let env_name = FederationEnv::from_yaml(&trace.env_source)
+        .map(|e| e.name)
+        .unwrap_or_else(|_| "<unparseable env>".to_string());
+    println!(
+        "trace of '{env_name}': {} event(s), community digest {:#018x}",
+        trace.events.len(),
+        trace.community_digest
+    );
+    for (i, (tick, ev)) in trace.events.iter().enumerate() {
+        println!("{i:>6}  {:>12.3}ms  {}", tick.as_secs_f64() * 1e3, describe_event(ev));
+    }
+    if !trace.counters.is_empty() {
+        println!("footer counters ({}):", trace.counters.len());
+        for (name, v) in &trace.counters {
+            println!("        {name} = {v}");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_trace_diff(raw: &[String]) -> anyhow::Result<()> {
+    let cmd = Command::new(
+        "metisfl trace diff",
+        "bisect two recorded traces to their first diverging event (span batches are \
+         observability payload and are ignored)",
+    )
+    .opt("a", None, "first trace file (e.g. the committed/known-good recording)")
+    .opt("b", None, "second trace file (e.g. the re-recorded run under test)");
+    let a = parse(&cmd, raw)?;
+    let pa = a.get("a").ok_or_else(|| anyhow::anyhow!("--a <file> is required"))?;
+    let pb = a.get("b").ok_or_else(|| anyhow::anyhow!("--b <file> is required"))?;
+    let ta = metisfl::runtime::trace::Trace::decode(
+        &std::fs::read(pa).map_err(|e| anyhow::anyhow!("reading {pa}: {e}"))?,
+    )?;
+    let tb = metisfl::runtime::trace::Trace::decode(
+        &std::fs::read(pb).map_err(|e| anyhow::anyhow!("reading {pb}: {e}"))?,
+    )?;
+    if ta.env_source != tb.env_source {
+        println!("note: the embedded environments differ; diffing timelines anyway");
+    }
+    // Spans are observability payload riding the trace: two equivalent
+    // runs may batch them differently (thread interleaving assigns span
+    // ids), so the divergence walk sees only the replayable timeline.
+    let timeline = |t: &metisfl::runtime::trace::Trace| -> Vec<(
+        std::time::Duration,
+        metisfl::runtime::trace::TraceEvent,
+    )> {
+        t.events
+            .iter()
+            .filter(|(_, ev)| !matches!(ev, metisfl::runtime::trace::TraceEvent::Spans { .. }))
+            .cloned()
+            .collect()
+    };
+    let (ea, eb) = (timeline(&ta), timeline(&tb));
+    let n = ea.len().min(eb.len());
+    for i in 0..n {
+        let (tick_a, ev_a) = &ea[i];
+        let (tick_b, ev_b) = &eb[i];
+        if tick_a != tick_b || ev_a != ev_b {
+            println!("first divergence at event {i}:");
+            println!("  a: tick {:>12.3}ms  {}", tick_a.as_secs_f64() * 1e3, describe_event(ev_a));
+            println!("  b: tick {:>12.3}ms  {}", tick_b.as_secs_f64() * 1e3, describe_event(ev_b));
+            anyhow::bail!("traces diverge at event {i}");
+        }
+    }
+    if ea.len() != eb.len() {
+        let (longer, tick, ev) =
+            if ea.len() > eb.len() { ("a", &ea[n].0, &ea[n].1) } else { ("b", &eb[n].0, &eb[n].1) };
+        println!(
+            "timelines agree for {n} event(s); {longer} continues at tick {:>.3}ms with: {}",
+            tick.as_secs_f64() * 1e3,
+            describe_event(ev)
+        );
+        anyhow::bail!(
+            "traces diverge at event {n}: a has {} event(s), b has {}",
+            ea.len(),
+            eb.len()
+        );
+    }
+    if ta.community_digest != tb.community_digest {
+        anyhow::bail!(
+            "timelines match event-for-event but the sealed digests differ: \
+             {:#018x} vs {:#018x} (non-replayable state leaked into the math)",
+            ta.community_digest,
+            tb.community_digest
+        );
+    }
+    for (name, va) in &ta.counters {
+        let vb = tb.counters.get(name).copied().unwrap_or(0);
+        if *va != vb {
+            println!("footer counter drift: {name}: a {va}, b {vb}");
+        }
+    }
+    println!("traces identical: {n} event(s), digest {:#018x}", ta.community_digest);
+    Ok(())
+}
+
+/// One human-readable line (or indented block, for span batches) per
+/// trace event — `trace dump` must render every [`TraceEvent`] variant.
+fn describe_event(ev: &metisfl::runtime::trace::TraceEvent) -> String {
+    use metisfl::runtime::trace::TraceEvent as E;
+    let join = |ids: &[String]| ids.join(", ");
+    match ev {
+        E::Inbound { wire } => match metisfl::proto::Message::decode(wire) {
+            Ok(m) => format!("inbound {} ({} B)", m.kind(), wire.len()),
+            Err(_) => format!("inbound <undecodable> ({} B)", wire.len()),
+        },
+        E::RoundOpen { round, ids } => {
+            format!("round {round} open, expecting {}: {}", ids.len(), join(ids))
+        }
+        E::RoundClose { round, arrived } => {
+            format!("round {round} close, arrived {}: {}", arrived.len(), join(arrived))
+        }
+        E::Aggregate { round, ids } => {
+            format!("aggregate round {round} over {} contribution(s): {}", ids.len(), join(ids))
+        }
+        E::MarkOutstanding { id } => format!("mark outstanding: {id}"),
+        E::BaseSet { id, round } => format!("delta base for {id} pinned at round {round}"),
+        E::Spans { spans } => {
+            let mut s = format!("{} span(s):", spans.len());
+            for sp in spans {
+                s.push_str(&format!(
+                    "\n          trace {:#018x} span {:#06x} parent {:#06x}  {:<14} \
+                     round {} task {}{}  [{:.3}ms .. {:.3}ms]",
+                    sp.trace_id,
+                    sp.span_id,
+                    sp.parent,
+                    sp.op,
+                    sp.round,
+                    sp.task_id,
+                    if sp.peer.is_empty() {
+                        String::new()
+                    } else {
+                        format!(" peer {}", sp.peer)
+                    },
+                    sp.t_start.as_secs_f64() * 1e3,
+                    sp.t_end.as_secs_f64() * 1e3,
+                ));
+            }
+            s
+        }
+    }
+}
+
+fn cmd_metrics(raw: &[String]) -> anyhow::Result<()> {
+    let cmd = Command::new(
+        "metisfl metrics",
+        "render a metrics registry snapshot in Prometheus text exposition format",
+    )
+    .opt(
+        "addr",
+        None,
+        "scrape a live `observability.listen_addr` exposition listener (host:port)",
+    )
+    .opt("env", None, "env file: construct the controller and render its registry schema");
+    let a = parse(&cmd, raw)?;
+    if let Some(addr) = a.get("addr") {
+        use std::io::{Read, Write};
+        let mut stream = std::net::TcpStream::connect(addr)
+            .map_err(|e| anyhow::anyhow!("connecting {addr}: {e}"))?;
+        stream.write_all(b"GET /metrics HTTP/1.0\r\nConnection: close\r\n\r\n")?;
+        let mut resp = String::new();
+        stream.read_to_string(&mut resp)?;
+        let body = resp.split_once("\r\n\r\n").map(|(_, b)| b).unwrap_or(resp.as_str());
+        print!("{body}");
+        return Ok(());
+    }
+    let env_file = a
+        .get("env")
+        .ok_or_else(|| anyhow::anyhow!("one of --addr <host:port> or --env <file> is required"))?;
+    let env = FederationEnv::from_file(env_file)?;
+    let controller = metisfl::controller::Controller::new(env, None)?;
+    print!("{}", metisfl::obs::render_prometheus(&controller.counters().full_snapshot()));
     Ok(())
 }
 
@@ -457,6 +676,11 @@ const GATED_METRICS: &[(&str, &str, bool)] = &[
     // run is far less noisy than a single wall-clock sample, and the
     // committed baseline leaves generous headroom for shared CI cores.
     ("loadtest", "p99_ms", true),
+    // The same ceilings with span tracing on (`loadtest --quick
+    // --spans`): the gate is what bounds the instrumentation overhead —
+    // if spans cost more than the threshold over the spans-on baseline,
+    // the observability plane got too expensive to leave enabled.
+    ("loadtest_spans", "p99_ms", true),
     // Rounds to re-home a chaos-killed aggregator's shard and complete
     // a full round on the new topology: lower is better, and the
     // baseline's ceiling is the acceptance bar (a drift upward means

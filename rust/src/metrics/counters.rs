@@ -14,9 +14,13 @@
 //! closed, code-defined vocabulary (see the `names` module), not
 //! user data.
 
-use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
+
+/// The unified registry (PR-10) under its historical name: every
+/// construction/threading site written against the counters-only
+/// registry keeps compiling, and gains gauge/histogram handles.
+pub use super::registry::MetricsRegistry as CounterRegistry;
 
 /// Stable counter names shared by components, reports, and traces.
 pub mod names {
@@ -70,44 +74,10 @@ impl Counter {
     }
 }
 
-/// Get-or-create registry of named [`Counter`]s.
-#[derive(Default, Debug)]
-pub struct CounterRegistry {
-    counters: Mutex<BTreeMap<&'static str, Counter>>,
-}
-
-impl CounterRegistry {
-    pub fn new() -> Arc<CounterRegistry> {
-        Arc::new(CounterRegistry::default())
-    }
-
-    /// Handle for `name`, registering it (at zero) on first use.
-    pub fn counter(&self, name: &'static str) -> Counter {
-        self.counters.lock().unwrap().entry(name).or_default().clone()
-    }
-
-    /// Point-in-time view of every registered counter.
-    pub fn snapshot(&self) -> BTreeMap<String, u64> {
-        self.counters
-            .lock()
-            .unwrap()
-            .iter()
-            .map(|(k, v)| (k.to_string(), v.get()))
-            .collect()
-    }
-
-    /// Sum another registry's snapshot into an accumulating map
-    /// (report merging across controller + learners).
-    pub fn merge_into(&self, acc: &mut BTreeMap<String, u64>) {
-        for (k, v) in self.snapshot() {
-            *acc.entry(k).or_insert(0) += v;
-        }
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::collections::BTreeMap;
 
     #[test]
     fn counter_handles_share_state() {

@@ -85,6 +85,11 @@ impl LatencyHistogram {
         Duration::from_nanos(self.max_ns)
     }
 
+    /// Exact sum of all recorded values (Prometheus `_sum`).
+    pub fn total(&self) -> Duration {
+        Duration::from_nanos(u64::try_from(self.total_ns).unwrap_or(u64::MAX))
+    }
+
     pub fn mean(&self) -> Duration {
         if self.count == 0 {
             return Duration::ZERO;
@@ -95,9 +100,12 @@ impl LatencyHistogram {
     /// Quantile `q ∈ [0, 1]` as the upper edge of the bucket holding the
     /// `ceil(q·n)`-th smallest sample (so `quantile(1.0)` covers the
     /// maximum and `quantile(0.0)` degrades to the smallest sample).
-    pub fn quantile(&self, q: f64) -> Duration {
+    /// `None` when nothing has been recorded — an empty histogram has
+    /// no quantiles, and reporting 0 here has twice been misread as "a
+    /// phase with zero latency" instead of "a phase that never ran".
+    pub fn quantile(&self, q: f64) -> Option<Duration> {
         if self.count == 0 {
-            return Duration::ZERO;
+            return None;
         }
         let target = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
         let mut seen = 0u64;
@@ -106,21 +114,21 @@ impl LatencyHistogram {
             if seen >= target {
                 // Never report past the true maximum: the top bucket's
                 // edge can exceed it by a sub-bucket width.
-                return Duration::from_nanos(bucket_value(idx).min(self.max_ns));
+                return Some(Duration::from_nanos(bucket_value(idx).min(self.max_ns)));
             }
         }
-        self.max()
+        Some(self.max())
     }
 
-    pub fn p50(&self) -> Duration {
+    pub fn p50(&self) -> Option<Duration> {
         self.quantile(0.50)
     }
 
-    pub fn p99(&self) -> Duration {
+    pub fn p99(&self) -> Option<Duration> {
         self.quantile(0.99)
     }
 
-    pub fn p999(&self) -> Duration {
+    pub fn p999(&self) -> Option<Duration> {
         self.quantile(0.999)
     }
 
@@ -180,24 +188,45 @@ mod tests {
             h.record(Duration::from_millis(i));
         }
         assert_eq!(h.count(), 100);
-        let p50 = h.p50().as_millis() as f64;
-        let p99 = h.p99().as_millis() as f64;
+        let p50 = h.p50().unwrap().as_millis() as f64;
+        let p99 = h.p99().unwrap().as_millis() as f64;
         assert!((48.0..=53.0).contains(&p50), "p50 = {p50}ms");
         assert!((96.0..=103.0).contains(&p99), "p99 = {p99}ms");
         assert_eq!(h.max(), Duration::from_millis(100));
         // p999 of 100 samples is the max bucket, capped at true max.
-        assert!(h.p999() <= h.max());
+        assert!(h.p999().unwrap() <= h.max());
         let mean = h.mean().as_millis();
         assert!((50..=51).contains(&mean), "mean = {mean}ms");
     }
 
     #[test]
-    fn empty_histogram_reports_zero() {
+    fn empty_histogram_has_no_quantiles() {
         let h = LatencyHistogram::new();
         assert!(h.is_empty());
-        assert_eq!(h.quantile(0.99), Duration::ZERO);
+        assert_eq!(h.quantile(0.99), None);
+        assert_eq!(h.p50(), None);
+        assert_eq!(h.p99(), None);
+        assert_eq!(h.p999(), None);
         assert_eq!(h.mean(), Duration::ZERO);
         assert_eq!(h.max(), Duration::ZERO);
+    }
+
+    #[test]
+    fn quantiles_appear_exactly_when_nonempty() {
+        // Property: for any single recorded value v, every quantile is
+        // Some and lands in v's bucket (edge ≥ v, capped at true max).
+        let mut rng = crate::util::Rng::new(7);
+        for _ in 0..200 {
+            let v = rng.next_u64() >> (rng.next_u64() % 48);
+            let mut h = LatencyHistogram::new();
+            h.record_ns(v);
+            for q in [0.0, 0.5, 0.99, 0.999, 1.0] {
+                let got = h.quantile(q).expect("nonempty histogram must have quantiles");
+                // The bucket edge is ≥ v but the report caps at the
+                // true max (= v here), so it must be exact.
+                assert_eq!(got.as_nanos() as u64, v);
+            }
+        }
     }
 
     #[test]
@@ -218,6 +247,46 @@ mod tests {
         assert_eq!(a.max(), all.max());
         for q in [0.5, 0.9, 0.99, 0.999] {
             assert_eq!(a.quantile(q), all.quantile(q));
+        }
+    }
+
+    #[test]
+    fn merge_of_disjoint_octaves_is_loss_free() {
+        // Property: merging histograms whose samples live in entirely
+        // different octaves (one sub-microsecond, one around a
+        // terasecond bucket) must preserve count, max, mean, and every
+        // quantile vs. a histogram that recorded everything directly —
+        // i.e. merge is bucket-exact, not approximate, regardless of
+        // how the population splits.
+        let mut rng = crate::util::Rng::new(11);
+        for _ in 0..50 {
+            let mut a = LatencyHistogram::new();
+            let mut b = LatencyHistogram::new();
+            let mut all = LatencyHistogram::new();
+            for _ in 0..(1 + rng.gen_range(40)) {
+                let v = rng.next_u64() % 4096; // octaves 0..12
+                a.record_ns(v);
+                all.record_ns(v);
+            }
+            for _ in 0..rng.gen_range(40) {
+                let v = (1u64 << 40) + rng.next_u64() % (1 << 30); // octave ~40
+                b.record_ns(v);
+                all.record_ns(v);
+            }
+            a.merge(&b);
+            assert_eq!(a.count(), all.count());
+            assert_eq!(a.max(), all.max());
+            assert_eq!(a.mean(), all.mean());
+            for q in [0.0, 0.25, 0.5, 0.9, 0.99, 0.999, 1.0] {
+                assert_eq!(a.quantile(q), all.quantile(q));
+            }
+            // Merging an empty histogram is the identity.
+            let before = a.clone();
+            a.merge(&LatencyHistogram::new());
+            assert_eq!(a.count(), before.count());
+            for q in [0.5, 0.99] {
+                assert_eq!(a.quantile(q), before.quantile(q));
+            }
         }
     }
 }

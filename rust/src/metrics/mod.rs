@@ -9,8 +9,10 @@
 
 pub mod counters;
 pub mod histogram;
+pub mod registry;
 
 pub use counters::{Counter, CounterRegistry};
+pub use registry::{Gauge, Histogram, MetricsRegistry, MetricsSnapshot};
 
 use crate::util::stopwatch::OpTimer;
 use crate::util::Summary;

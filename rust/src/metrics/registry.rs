@@ -1,0 +1,239 @@
+//! Unified metrics registry: counters, gauges, and latency histograms
+//! behind one get-or-create surface with a single snapshot call.
+//!
+//! PR-3..9 grew three parallel metric mechanisms: the named
+//! [`Counter`]s (this module's predecessor `CounterRegistry`), ad-hoc
+//! peak/level gauges riding counters via `fetch_max`, and the loadtest's
+//! hand-threaded per-phase [`LatencyHistogram`]s. A [`MetricsRegistry`]
+//! folds them into one registry with typed handles:
+//!
+//! * [`Counter`] — monotone u64, relaxed-atomic hot path (unchanged).
+//! * [`Gauge`] — a settable i64 level (open streams, fleet size).
+//! * [`Histogram`] — a shared [`LatencyHistogram`] behind a mutex, for
+//!   multi-thread phase recording.
+//!
+//! `snapshot()` keeps the historical counters-only map (trace footers,
+//! `FederationReport`, cross-component merging are all keyed on it);
+//! [`full_snapshot`](MetricsRegistry::full_snapshot) returns the whole
+//! typed set for the Prometheus exposition path (`metisfl metrics`,
+//! the `observability.listen_addr` side listener).
+//!
+//! `CounterRegistry` remains as a name for this type, so every existing
+//! construction/threading site keeps compiling unchanged.
+
+use super::counters::Counter;
+use super::histogram::LatencyHistogram;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// A cheap cloneable handle to one named level (may go down, unlike a
+/// [`Counter`]).
+#[derive(Clone, Debug, Default)]
+pub struct Gauge(Arc<AtomicI64>);
+
+impl Gauge {
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: i64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn sub(&self, n: i64) {
+        self.0.fetch_sub(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A cheap cloneable handle to one named latency histogram. Recording
+/// takes the histogram's own mutex (not the registry's), so concurrent
+/// recorders of *different* histograms never contend.
+#[derive(Clone, Debug, Default)]
+pub struct Histogram(Arc<Mutex<LatencyHistogram>>);
+
+impl Histogram {
+    pub fn record(&self, d: Duration) {
+        self.0.lock().unwrap().record(d);
+    }
+
+    pub fn record_ns(&self, ns: u64) {
+        self.0.lock().unwrap().record_ns(ns);
+    }
+
+    /// Point-in-time copy of the underlying histogram.
+    pub fn get(&self) -> LatencyHistogram {
+        self.0.lock().unwrap().clone()
+    }
+}
+
+/// Typed point-in-time view of every registered metric.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsSnapshot {
+    pub counters: BTreeMap<String, u64>,
+    pub gauges: BTreeMap<String, i64>,
+    pub histograms: BTreeMap<String, LatencyHistogram>,
+}
+
+/// Get-or-create registry of named counters, gauges, and histograms.
+/// Metric names are `&'static str` by design: the set is a closed,
+/// code-defined vocabulary (see [`super::counters::names`]), not user
+/// data.
+#[derive(Default, Debug)]
+pub struct MetricsRegistry {
+    counters: Mutex<BTreeMap<&'static str, Counter>>,
+    gauges: Mutex<BTreeMap<&'static str, Gauge>>,
+    histograms: Mutex<BTreeMap<&'static str, Histogram>>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Arc<MetricsRegistry> {
+        Arc::new(MetricsRegistry::default())
+    }
+
+    /// Handle for counter `name`, registering it (at zero) on first use.
+    pub fn counter(&self, name: &'static str) -> Counter {
+        self.counters.lock().unwrap().entry(name).or_default().clone()
+    }
+
+    /// Handle for gauge `name`, registering it (at zero) on first use.
+    pub fn gauge(&self, name: &'static str) -> Gauge {
+        self.gauges.lock().unwrap().entry(name).or_default().clone()
+    }
+
+    /// Handle for histogram `name`, registering it (empty) on first use.
+    pub fn histogram(&self, name: &'static str) -> Histogram {
+        self.histograms.lock().unwrap().entry(name).or_default().clone()
+    }
+
+    /// Point-in-time view of every registered counter (the historical
+    /// counters-only surface: trace footers, `FederationReport`,
+    /// [`merge_into`](MetricsRegistry::merge_into) consume this).
+    pub fn snapshot(&self) -> BTreeMap<String, u64> {
+        self.counters
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.to_string(), v.get()))
+            .collect()
+    }
+
+    /// Point-in-time view of every registered metric, all types. Each
+    /// histogram is copied under its own lock, so its internal fields
+    /// (bucket counts vs. total count vs. max) are mutually consistent.
+    pub fn full_snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            counters: self.snapshot(),
+            gauges: self
+                .gauges
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(k, v)| (k.to_string(), v.get()))
+                .collect(),
+            histograms: self
+                .histograms
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(k, v)| (k.to_string(), v.get()))
+                .collect(),
+        }
+    }
+
+    /// Sum this registry's counter snapshot into an accumulating map
+    /// (report merging across controller + learners).
+    pub fn merge_into(&self, acc: &mut BTreeMap<String, u64>) {
+        for (k, v) in self.snapshot() {
+            *acc.entry(k).or_insert(0) += v;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn typed_handles_share_state_by_name() {
+        let reg = MetricsRegistry::new();
+        reg.gauge("open_streams").set(5);
+        reg.gauge("open_streams").add(2);
+        assert_eq!(reg.gauge("open_streams").get(), 7);
+        reg.gauge("open_streams").sub(10);
+        assert_eq!(reg.gauge("open_streams").get(), -3);
+
+        reg.histogram("phase").record(Duration::from_millis(5));
+        reg.histogram("phase").record(Duration::from_millis(7));
+        assert_eq!(reg.histogram("phase").get().count(), 2);
+    }
+
+    #[test]
+    fn full_snapshot_carries_all_three_types() {
+        let reg = MetricsRegistry::new();
+        reg.counter("c").add(3);
+        reg.gauge("g").set(-4);
+        reg.histogram("h").record(Duration::from_micros(10));
+        let snap = reg.full_snapshot();
+        assert_eq!(snap.counters["c"], 3);
+        assert_eq!(snap.gauges["g"], -4);
+        assert_eq!(snap.histograms["h"].count(), 1);
+        // The counters-only surface matches the typed one.
+        assert_eq!(reg.snapshot(), snap.counters);
+    }
+
+    #[test]
+    fn concurrent_hammer_yields_consistent_snapshots() {
+        // N threads bump one counter and record into one histogram in
+        // lockstep pairs; every observed snapshot must be internally
+        // consistent (histogram count == sum of its buckets — a torn
+        // read would break that) and sequential snapshots must be
+        // monotone for counters.
+        let reg = MetricsRegistry::new();
+        const THREADS: usize = 8;
+        const OPS: u64 = 2_000;
+        let mut handles = Vec::new();
+        for t in 0..THREADS {
+            let c = reg.counter("hits");
+            let h = reg.histogram("lat");
+            handles.push(std::thread::spawn(move || {
+                for i in 0..OPS {
+                    c.incr();
+                    h.record_ns(1 + (t as u64 * OPS + i) % 1_000_000);
+                }
+            }));
+        }
+        let observer = {
+            let reg = Arc::clone(&reg);
+            std::thread::spawn(move || {
+                let mut last_hits = 0u64;
+                for _ in 0..200 {
+                    let snap = reg.full_snapshot();
+                    let hits = snap.counters["hits"];
+                    assert!(hits >= last_hits, "counter went backwards: {last_hits} -> {hits}");
+                    last_hits = hits;
+                    let h = &snap.histograms["lat"];
+                    assert!(h.count() <= THREADS as u64 * OPS);
+                    assert_eq!(
+                        h.quantile(1.0).map(|_| ()).is_some(),
+                        !h.is_empty(),
+                        "quantile/emptiness disagree"
+                    );
+                    std::thread::yield_now();
+                }
+            })
+        };
+        for hnd in handles {
+            hnd.join().unwrap();
+        }
+        observer.join().unwrap();
+        let snap = reg.full_snapshot();
+        assert_eq!(snap.counters["hits"], THREADS as u64 * OPS);
+        assert_eq!(snap.histograms["lat"].count(), THREADS as u64 * OPS);
+    }
+}

@@ -1,0 +1,182 @@
+//! Metrics exposition: Prometheus text rendering + a live side listener.
+//!
+//! [`render_prometheus`] turns a [`MetricsSnapshot`] into Prometheus
+//! text format 0.0.4 (counters and gauges as single samples, histograms
+//! as quantile summaries), which is what `metisfl metrics` prints and
+//! what the optional [`ExpoServer`] serves live. The server is a
+//! deliberately minimal HTTP/1.0 responder on `std::net` — one accept
+//! loop, every request answered with a fresh snapshot, connection
+//! closed — because the consumer is `curl`/Prometheus scraping a
+//! long-running loadtest, not a web framework's worth of surface. It
+//! is enabled by the `observability: {listen_addr: ...}` env block.
+
+use crate::metrics::{MetricsRegistry, MetricsSnapshot};
+use crate::util::logging::{log_info, log_warn};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Render a snapshot as Prometheus text format 0.0.4. Counter names
+/// get a `metisfl_` prefix and a `_total` suffix (the exporter
+/// convention for monotone series); histograms render as summaries
+/// (`{quantile="..."}` samples + `_sum` + `_count`), in seconds.
+pub fn render_prometheus(snap: &MetricsSnapshot) -> String {
+    let mut out = String::new();
+    for (name, v) in &snap.counters {
+        out.push_str(&format!("# TYPE metisfl_{name}_total counter\n"));
+        out.push_str(&format!("metisfl_{name}_total {v}\n"));
+    }
+    for (name, v) in &snap.gauges {
+        out.push_str(&format!("# TYPE metisfl_{name} gauge\n"));
+        out.push_str(&format!("metisfl_{name} {v}\n"));
+    }
+    for (name, h) in &snap.histograms {
+        out.push_str(&format!("# TYPE metisfl_{name}_seconds summary\n"));
+        for (label, q) in [("0.5", 0.5), ("0.99", 0.99), ("0.999", 0.999)] {
+            if let Some(d) = h.quantile(q) {
+                out.push_str(&format!(
+                    "metisfl_{name}_seconds{{quantile=\"{label}\"}} {}\n",
+                    d.as_secs_f64()
+                ));
+            }
+        }
+        out.push_str(&format!("metisfl_{name}_seconds_sum {}\n", h.total().as_secs_f64()));
+        out.push_str(&format!("metisfl_{name}_seconds_count {}\n", h.count()));
+    }
+    out
+}
+
+/// Live metrics endpoint: serves the owning registry's current snapshot
+/// to every HTTP request on `listen_addr`. Stop with
+/// [`ExpoServer::stop`] (also called on drop).
+pub struct ExpoServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl ExpoServer {
+    /// Bind `listen_addr` (e.g. `127.0.0.1:9464`; port 0 picks a free
+    /// one) and serve `registry` snapshots until stopped.
+    pub fn serve(listen_addr: &str, registry: Arc<MetricsRegistry>) -> std::io::Result<ExpoServer> {
+        let listener = TcpListener::bind(listen_addr)?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name("metisfl-expo".into())
+            .spawn(move || {
+                log_info("expo", &format!("serving metrics on http://{addr}/metrics"));
+                for conn in listener.incoming() {
+                    if stop2.load(Ordering::Acquire) {
+                        break;
+                    }
+                    match conn {
+                        Ok(stream) => {
+                            if let Err(e) = respond(stream, &registry) {
+                                log_warn("expo", &format!("scrape failed: {e}"));
+                            }
+                        }
+                        Err(e) => log_warn("expo", &format!("accept failed: {e}")),
+                    }
+                }
+            })?;
+        Ok(ExpoServer { addr, stop, handle: Some(handle) })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Shut the listener down and join the accept thread.
+    pub fn stop(&mut self) {
+        if self.handle.is_none() {
+            return;
+        }
+        self.stop.store(true, Ordering::Release);
+        // Unblock the accept loop with a throwaway connection.
+        let _ = TcpStream::connect_timeout(&self.addr, Duration::from_secs(1));
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ExpoServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn respond(mut stream: TcpStream, registry: &MetricsRegistry) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(Duration::from_secs(2)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(2)))?;
+    // Drain (and ignore) the request line + headers; any path serves
+    // metrics. A scraper that sends nothing within the timeout is
+    // answered anyway — the body is the whole protocol.
+    let mut buf = [0u8; 1024];
+    let _ = stream.read(&mut buf);
+    let body = render_prometheus(&registry.full_snapshot());
+    let header = format!(
+        "HTTP/1.0 200 OK\r\nContent-Type: text/plain; version=0.0.4\r\nContent-Length: {}\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(header.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_all_metric_types() {
+        let reg = MetricsRegistry::new();
+        reg.counter("late_folds").add(3);
+        reg.gauge("open_streams").set(2);
+        reg.histogram("round").record(Duration::from_millis(250));
+        let text = render_prometheus(&reg.full_snapshot());
+        assert!(text.contains("metisfl_late_folds_total 3"));
+        assert!(text.contains("metisfl_open_streams 2"));
+        assert!(text.contains("metisfl_round_seconds{quantile=\"0.99\"}"));
+        assert!(text.contains("metisfl_round_seconds_count 1"));
+        // An empty histogram renders count 0 and no quantile samples.
+        reg.histogram("empty");
+        let text = render_prometheus(&reg.full_snapshot());
+        assert!(text.contains("metisfl_empty_seconds_count 0"));
+        assert!(!text.contains("metisfl_empty_seconds{"));
+    }
+
+    #[test]
+    fn server_serves_live_snapshots_and_stops_cleanly() {
+        let reg = MetricsRegistry::new();
+        reg.counter("late_folds").add(7);
+        let mut srv = ExpoServer::serve("127.0.0.1:0", Arc::clone(&reg)).unwrap();
+        let addr = srv.addr();
+
+        let scrape = |path: &str| -> String {
+            let mut s = TcpStream::connect(addr).unwrap();
+            write!(s, "GET {path} HTTP/1.0\r\nHost: x\r\n\r\n").unwrap();
+            let _ = s.shutdown(std::net::Shutdown::Write);
+            let mut out = String::new();
+            s.read_to_string(&mut out).unwrap();
+            out
+        };
+
+        let first = scrape("/metrics");
+        assert!(first.starts_with("HTTP/1.0 200 OK"));
+        assert!(first.contains("metisfl_late_folds_total 7"));
+
+        // Live: a second scrape sees the updated value.
+        reg.counter("late_folds").add(1);
+        assert!(scrape("/").contains("metisfl_late_folds_total 8"));
+
+        srv.stop();
+        srv.stop(); // idempotent
+    }
+}

@@ -1,0 +1,15 @@
+//! Observability plane: correlated span tracing ([`span`]) and metrics
+//! exposition ([`expo`]).
+//!
+//! Counters/gauges/histograms live in [`crate::metrics`]; this module
+//! is the layer that makes a *running federation* inspectable — spans
+//! correlate distributed work into causal trees (carried across the
+//! wire by `TaskMeta`'s trace-context tail), and the exposition path
+//! renders live registry snapshots in Prometheus text format
+//! (`metisfl metrics`, the `observability.listen_addr` side listener).
+
+pub mod expo;
+pub mod span;
+
+pub use expo::{render_prometheus, ExpoServer};
+pub use span::{assert_single_tree, ActiveSpan, Span, SpanCtx, SpanSink};

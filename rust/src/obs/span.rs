@@ -1,0 +1,421 @@
+//! Correlated span tracing: who caused what, across processes.
+//!
+//! End-of-run counter totals say *how much* happened; they cannot say
+//! *why* a particular upload retried or which round a late fold belongs
+//! to. Spans fill that gap: every interesting operation (dispatch,
+//! ingest, aggregate, round barrier, shard fold, train, upload, retry
+//! attempt) records a [`Span`] — an interval on the component's
+//! [`Clock`] plus identity fields — into its component's [`SpanSink`].
+//! Causality crosses the wire as a compact [`SpanCtx`] (`trace_id` +
+//! parent `span_id`) riding `TaskMeta`'s tolerant trailing fields, so
+//! one `trace_id` stitches root → aggregator → learner → retry →
+//! late-fold into a single tree no matter how many processes the work
+//! touched.
+//!
+//! Recording is built to be cheap enough to leave compiled in:
+//!
+//! * A disabled sink (the default) costs one relaxed atomic load per
+//!   would-be span; no ids are allocated and nothing is stored.
+//! * An enabled sink appends to one of a small fixed set of
+//!   mutex-guarded rings selected by thread id, so concurrent writers
+//!   (dispatch pool, ingest threads, arrival threads) rarely contend on
+//!   the same lock. Rings are bounded: once full, the oldest span is
+//!   overwritten and a drop counter bumps — tracing can never grow
+//!   memory without bound on a long run.
+//!
+//! Span ids are deterministic per sink (a component-name hash in the
+//! high bits, a sequence counter in the low bits), which keeps sim-run
+//! traces reproducible and makes ids self-describing in dumps.
+
+use crate::proto::wire::{fnv1a64, FNV64_INIT};
+use crate::util::clock::{Clock, Timestamp};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Ring shards per sink. Writers pick one by thread id, so up to this
+/// many threads record without touching the same mutex.
+const SHARDS: usize = 8;
+
+/// Default per-sink span capacity (across all shards).
+const DEFAULT_CAP: usize = 65_536;
+
+/// The wire-portable slice of a span: the correlation id of the whole
+/// causal tree plus the immediate parent's span id. `trace_id == 0`
+/// means "no trace context" (pre-span peers, disabled sinks).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct SpanCtx {
+    pub trace_id: u64,
+    pub parent_span: u64,
+}
+
+impl SpanCtx {
+    /// The absent context: roots a fresh trace when used with
+    /// [`SpanSink::begin`].
+    pub const UNSET: SpanCtx = SpanCtx { trace_id: 0, parent_span: 0 };
+
+    pub fn is_set(&self) -> bool {
+        self.trace_id != 0
+    }
+}
+
+/// One completed operation interval, with enough identity to join it
+/// back to rounds, tasks, and streams.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Span {
+    pub trace_id: u64,
+    pub span_id: u64,
+    /// span_id of the causing span (0 = trace root).
+    pub parent: u64,
+    /// Operation name — a closed, code-defined vocabulary ("dispatch",
+    /// "ingest", "train", "retry_attempt", ...).
+    pub op: &'static str,
+    /// The remote party involved, when there is one (learner id,
+    /// aggregator id); empty otherwise.
+    pub peer: String,
+    pub round: u64,
+    pub task_id: u64,
+    pub stream_id: u64,
+    pub t_start: Timestamp,
+    pub t_end: Timestamp,
+}
+
+impl Span {
+    pub fn ctx(&self) -> SpanCtx {
+        SpanCtx { trace_id: self.trace_id, parent_span: self.span_id }
+    }
+}
+
+#[derive(Default)]
+struct Shard {
+    spans: VecDeque<Span>,
+}
+
+/// Per-component span recorder. Cheap to consult when disabled; bounded
+/// and shard-locked when enabled. Components create one at construction
+/// (see `Controller::span_sink`, `Learner::span_sink`) and tests or the
+/// harness enable + drain it.
+pub struct SpanSink {
+    component: String,
+    clock: Clock,
+    enabled: AtomicBool,
+    /// High 32 bits of every span id this sink allocates.
+    id_prefix: u64,
+    seq: AtomicU64,
+    shards: Vec<Mutex<Shard>>,
+    cap_per_shard: usize,
+    dropped: AtomicU64,
+}
+
+impl SpanSink {
+    /// A sink for `component`, stamping intervals from `clock`.
+    /// Starts disabled.
+    pub fn new(component: impl Into<String>, clock: Clock) -> Arc<SpanSink> {
+        let component = component.into();
+        let id_prefix = (fnv1a64(FNV64_INIT, component.as_bytes()) & 0xFFFF_FFFF) << 32;
+        Arc::new(SpanSink {
+            component,
+            clock,
+            enabled: AtomicBool::new(false),
+            id_prefix,
+            seq: AtomicU64::new(1),
+            shards: (0..SHARDS).map(|_| Mutex::new(Shard::default())).collect(),
+            cap_per_shard: DEFAULT_CAP / SHARDS,
+            dropped: AtomicU64::new(0),
+        })
+    }
+
+    pub fn component(&self) -> &str {
+        &self.component
+    }
+
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Release);
+    }
+
+    pub fn enable(&self) {
+        self.set_enabled(true);
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Spans overwritten because a ring shard was full.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    fn next_id(&self) -> u64 {
+        // Low 32 bits wrap within the component prefix; a sink would
+        // need 4 billion spans in one run to collide.
+        self.id_prefix | (self.seq.fetch_add(1, Ordering::Relaxed) & 0xFFFF_FFFF)
+    }
+
+    /// Open a span under `ctx` (a fresh trace root when `ctx` is
+    /// unset). The span records itself on drop / [`ActiveSpan::end`].
+    /// On a disabled sink this is inert and `ctx()` passes the incoming
+    /// context through unchanged, so a spans-off component in the
+    /// middle of a federation does not sever the tree.
+    pub fn begin(self: &Arc<Self>, op: &'static str, ctx: SpanCtx) -> ActiveSpan {
+        if !self.is_enabled() {
+            return ActiveSpan { sink: None, span: None, passthrough: ctx };
+        }
+        let span_id = self.next_id();
+        let trace_id = if ctx.is_set() { ctx.trace_id } else { span_id };
+        let span = Span {
+            trace_id,
+            span_id,
+            parent: ctx.parent_span,
+            op,
+            peer: String::new(),
+            round: 0,
+            task_id: 0,
+            stream_id: 0,
+            t_start: self.clock.now(),
+            t_end: Timestamp::ZERO,
+        };
+        ActiveSpan { sink: Some(Arc::clone(self)), span: Some(span), passthrough: ctx }
+    }
+
+    fn record(&self, mut span: Span) {
+        span.t_end = self.clock.now().max(span.t_start);
+        let shard = thread_shard();
+        let mut g = self.shards[shard].lock().unwrap();
+        if g.spans.len() >= self.cap_per_shard {
+            g.spans.pop_front();
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        g.spans.push_back(span);
+    }
+
+    /// Remove and return every recorded span, ordered by start time
+    /// (then span id, for a stable order under simulated time's equal
+    /// timestamps).
+    pub fn drain(&self) -> Vec<Span> {
+        let mut all: Vec<Span> = Vec::new();
+        for shard in &self.shards {
+            all.extend(shard.lock().unwrap().spans.drain(..));
+        }
+        all.sort_by_key(|s| (s.t_start, s.span_id));
+        all
+    }
+
+    /// Non-destructive copy of every recorded span, same order as
+    /// [`drain`](SpanSink::drain).
+    pub fn snapshot(&self) -> Vec<Span> {
+        let mut all = Vec::new();
+        for shard in &self.shards {
+            all.extend(shard.lock().unwrap().spans.iter().cloned());
+        }
+        all.sort_by_key(|s| (s.t_start, s.span_id));
+        all
+    }
+}
+
+impl std::fmt::Debug for SpanSink {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SpanSink")
+            .field("component", &self.component)
+            .field("enabled", &self.is_enabled())
+            .finish()
+    }
+}
+
+fn thread_shard() -> usize {
+    // Thread ids are unique per live thread; hashing the Debug repr
+    // avoids the unstable `as_u64()` API.
+    use std::hash::{Hash, Hasher};
+    let mut h = std::collections::hash_map::DefaultHasher::new();
+    std::thread::current().id().hash(&mut h);
+    (h.finish() as usize) % SHARDS
+}
+
+/// An open span. Annotate it with builder-style setters, hand its
+/// [`ctx`](ActiveSpan::ctx) to downstream work (locally or via
+/// `TaskMeta`), and let it record on drop (or call
+/// [`end`](ActiveSpan::end) to close it at a precise point).
+pub struct ActiveSpan {
+    sink: Option<Arc<SpanSink>>,
+    span: Option<Span>,
+    /// Incoming context, forwarded verbatim when the sink is disabled.
+    passthrough: SpanCtx,
+}
+
+impl ActiveSpan {
+    /// The context downstream spans should parent under.
+    pub fn ctx(&self) -> SpanCtx {
+        match &self.span {
+            Some(s) => s.ctx(),
+            None => self.passthrough,
+        }
+    }
+
+    pub fn peer(mut self, peer: &str) -> ActiveSpan {
+        if let Some(s) = self.span.as_mut() {
+            s.peer = peer.to_string();
+        }
+        self
+    }
+
+    pub fn round(mut self, round: u64) -> ActiveSpan {
+        if let Some(s) = self.span.as_mut() {
+            s.round = round;
+        }
+        self
+    }
+
+    pub fn task(mut self, task_id: u64) -> ActiveSpan {
+        if let Some(s) = self.span.as_mut() {
+            s.task_id = task_id;
+        }
+        self
+    }
+
+    pub fn stream(mut self, stream_id: u64) -> ActiveSpan {
+        if let Some(s) = self.span.as_mut() {
+            s.stream_id = stream_id;
+        }
+        self
+    }
+
+    /// Close and record the span now.
+    pub fn end(self) {}
+}
+
+impl Drop for ActiveSpan {
+    fn drop(&mut self) {
+        if let (Some(sink), Some(span)) = (self.sink.take(), self.span.take()) {
+            sink.record(span);
+        }
+    }
+}
+
+/// Check that `spans` form a single connected tree: exactly one root
+/// (parent absent from the set), every other span's parent present, and
+/// every span sharing one trace id. Returns the root's span_id.
+/// Test/tooling helper — this is the acceptance predicate for
+/// cross-process correlation.
+pub fn assert_single_tree(spans: &[Span]) -> Result<u64, String> {
+    if spans.is_empty() {
+        return Err("no spans recorded".into());
+    }
+    let trace = spans[0].trace_id;
+    if let Some(s) = spans.iter().find(|s| s.trace_id != trace) {
+        return Err(format!(
+            "multiple traces: {trace:#x} and {:#x} (span '{}' from '{}')",
+            s.trace_id, s.op, s.peer
+        ));
+    }
+    let ids: std::collections::HashSet<u64> = spans.iter().map(|s| s.span_id).collect();
+    if ids.len() != spans.len() {
+        return Err("duplicate span ids".into());
+    }
+    let roots: Vec<&Span> = spans.iter().filter(|s| !ids.contains(&s.parent)).collect();
+    match roots.as_slice() {
+        [root] => Ok(root.span_id),
+        [] => Err("no root span (parent cycle?)".into()),
+        many => Err(format!(
+            "{} disconnected roots: {:?}",
+            many.len(),
+            many.iter().map(|s| s.op).collect::<Vec<_>>()
+        )),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn disabled_sink_records_nothing_and_passes_ctx_through() {
+        let sink = SpanSink::new("test", Clock::system());
+        let incoming = SpanCtx { trace_id: 9, parent_span: 4 };
+        let sp = sink.begin("op", incoming);
+        assert_eq!(sp.ctx(), incoming);
+        sp.end();
+        assert!(sink.drain().is_empty());
+    }
+
+    #[test]
+    fn enabled_sink_roots_traces_and_parents_children() {
+        let sink = SpanSink::new("test", Clock::system());
+        sink.enable();
+        let root = sink.begin("root", SpanCtx::UNSET).round(3);
+        let root_ctx = root.ctx();
+        assert!(root_ctx.is_set());
+        let child = sink.begin("child", root_ctx).peer("l1").task(7);
+        let child_ctx = child.ctx();
+        assert_eq!(child_ctx.trace_id, root_ctx.trace_id);
+        child.end();
+        root.end();
+        let spans = sink.drain();
+        assert_eq!(spans.len(), 2);
+        assert_single_tree(&spans).unwrap();
+        let child_span = spans.iter().find(|s| s.op == "child").unwrap();
+        assert_eq!(child_span.parent, root_ctx.parent_span);
+        assert_eq!(child_span.peer, "l1");
+        assert_eq!(child_span.task_id, 7);
+        assert!(sink.drain().is_empty(), "drain must consume");
+    }
+
+    #[test]
+    fn span_intervals_follow_the_sim_clock() {
+        let clock = Clock::sim();
+        let sink = SpanSink::new("test", clock.clone());
+        sink.enable();
+        clock.advance_to(Duration::from_secs(10));
+        let sp = sink.begin("op", SpanCtx::UNSET);
+        clock.advance_to(Duration::from_secs(12));
+        sp.end();
+        let spans = sink.drain();
+        assert_eq!(spans[0].t_start, Duration::from_secs(10));
+        assert_eq!(spans[0].t_end, Duration::from_secs(12));
+    }
+
+    #[test]
+    fn ring_is_bounded_and_counts_drops() {
+        let sink = SpanSink::new("test", Clock::system());
+        sink.enable();
+        for _ in 0..(DEFAULT_CAP / SHARDS) + 10 {
+            sink.begin("op", SpanCtx::UNSET).end();
+        }
+        // Single-threaded: every span landed in one shard.
+        assert_eq!(sink.dropped(), 10);
+        assert_eq!(sink.snapshot().len(), DEFAULT_CAP / SHARDS);
+    }
+
+    #[test]
+    fn span_ids_carry_the_component_prefix() {
+        let a = SpanSink::new("controller", Clock::system());
+        let b = SpanSink::new("learner/l1", Clock::system());
+        a.enable();
+        b.enable();
+        a.begin("op", SpanCtx::UNSET).end();
+        b.begin("op", SpanCtx::UNSET).end();
+        let (sa, sb) = (a.drain(), b.drain());
+        assert_ne!(sa[0].span_id >> 32, sb[0].span_id >> 32);
+        assert_eq!(sa[0].span_id & 0xFFFF_FFFF, sb[0].span_id & 0xFFFF_FFFF);
+    }
+
+    #[test]
+    fn single_tree_rejects_forests_and_mixed_traces() {
+        let mk = |trace_id, span_id, parent| Span {
+            trace_id,
+            span_id,
+            parent,
+            op: "op",
+            peer: String::new(),
+            round: 0,
+            task_id: 0,
+            stream_id: 0,
+            t_start: Timestamp::ZERO,
+            t_end: Timestamp::ZERO,
+        };
+        assert!(assert_single_tree(&[mk(1, 10, 0), mk(1, 11, 10)]).is_ok());
+        assert!(assert_single_tree(&[mk(1, 10, 0), mk(1, 11, 99)]).is_err());
+        assert!(assert_single_tree(&[mk(1, 10, 0), mk(2, 11, 10)]).is_err());
+        assert!(assert_single_tree(&[]).is_err());
+    }
+}

@@ -52,7 +52,11 @@ pub mod wire;
 /// (shard total weight rides `TaskMeta::num_samples`), reusing the
 /// existing data-plane framing unchanged. The [`HealthProbe`] payload
 /// in `HeartbeatAck` is a trailing field decoded tolerantly (absent →
-/// zeros), so it rides v6 without a version bump.
+/// zeros), so it rides v6 without a version bump. The span trace
+/// context (`TaskMeta::trace_id` + `TaskMeta::parent_span`) rides v6
+/// the same way: two varints appended after the telemetry tail,
+/// decoded tolerantly (absent → 0 = "no trace"), so instrumented and
+/// uninstrumented frames coexist within the version.
 pub const PROTO_VERSION: u32 = 6;
 
 use crate::tensor::{ByteOrder, CodecId, DType, Tensor, TensorModel};
@@ -369,6 +373,27 @@ pub struct TaskMeta {
     /// Wall-clock microseconds the local training took end to end
     /// (sleeps and data loading included). 0 = not reported.
     pub train_wall_time_us: u64,
+    /// Span trace correlation id: every span caused by the same root
+    /// operation (a round dispatch, a shard fold) shares one trace_id
+    /// across processes. 0 = no trace context attached.
+    pub trace_id: u64,
+    /// span_id of the sender-side span that caused this message, so the
+    /// receiver can parent its own spans under it. 0 = no parent.
+    pub parent_span: u64,
+}
+
+impl TaskMeta {
+    /// The trace context this meta carries, if any.
+    pub fn span_ctx(&self) -> crate::obs::SpanCtx {
+        crate::obs::SpanCtx { trace_id: self.trace_id, parent_span: self.parent_span }
+    }
+
+    /// Attach a trace context (no-op fields when `ctx` is unset).
+    pub fn with_span_ctx(mut self, ctx: crate::obs::SpanCtx) -> TaskMeta {
+        self.trace_id = ctx.trace_id;
+        self.parent_span = ctx.parent_span;
+        self
+    }
 }
 
 /// Evaluation result.
@@ -548,6 +573,8 @@ fn write_meta(w: &mut WireWriter, meta: &TaskMeta) {
     w.put_f64(meta.train_loss);
     w.put_f64(meta.steps_per_sec);
     w.put_varint(meta.train_wall_time_us);
+    w.put_varint(meta.trace_id);
+    w.put_varint(meta.parent_span);
 }
 
 fn read_meta(r: &mut WireReader) -> Result<TaskMeta> {
@@ -563,6 +590,11 @@ fn read_meta(r: &mut WireReader) -> Result<TaskMeta> {
     // only come from a same-version peer (Hello requires equality).
     let (steps_per_sec, train_wall_time_us) =
         if r.is_done() { (0.0, 0) } else { (r.get_f64()?, r.get_varint()?) };
+    // Span trace-context tail (PR-10): same tolerance, one layer
+    // further out — a meta that ends at the telemetry tail carries no
+    // trace context (0 = unset), so pre-span frames still parse.
+    let (trace_id, parent_span) =
+        if r.is_done() { (0, 0) } else { (r.get_varint()?, r.get_varint()?) };
     Ok(TaskMeta {
         train_time_per_batch_us,
         completed_steps,
@@ -571,6 +603,8 @@ fn read_meta(r: &mut WireReader) -> Result<TaskMeta> {
         train_loss,
         steps_per_sec,
         train_wall_time_us,
+        trace_id,
+        parent_span,
     })
 }
 
@@ -1000,6 +1034,8 @@ mod tests {
                     train_loss: 0.5,
                     steps_per_sec: 666.25,
                     train_wall_time_us: 15_000,
+                    trace_id: 0xABCD_EF01_2345_6789,
+                    parent_span: 42,
                 },
             },
             Message::EvaluateModel { task_id: 8, round: 2, model: model.clone() },
@@ -1197,6 +1233,36 @@ mod tests {
                 assert_eq!(meta.train_loss, 0.5);
                 assert_eq!(meta.steps_per_sec, 0.0);
                 assert_eq!(meta.train_wall_time_us, 0);
+            }
+            other => panic!("unexpected {}", other.kind()),
+        }
+    }
+
+    #[test]
+    fn meta_without_trace_ctx_tail_still_decodes() {
+        // A pre-PR-10 v6 `MarkTaskCompleted` ends its meta at the v5
+        // telemetry tail. The tolerant reader must leave the trace
+        // context unset (0) instead of erroring at end-of-buffer.
+        let model = ModelProto::from_model(&sample_model(), DType::F32, ByteOrder::Little);
+        let mut w = WireWriter::new();
+        w.put_u8(super::T_MARK_COMPLETED);
+        w.put_varint(7);
+        w.put_str("l1");
+        model.write(&mut w);
+        w.put_varint(1500); // train_time_per_batch_us
+        w.put_varint(10); // completed_steps
+        w.put_varint(1); // completed_epochs
+        w.put_varint(100); // num_samples
+        w.put_f64(0.5); // train_loss
+        w.put_f64(666.25); // steps_per_sec
+        w.put_varint(15_000); // train_wall_time_us — pre-span meta ends here
+        match Message::decode(&w.into_bytes()).unwrap() {
+            Message::MarkTaskCompleted { meta, .. } => {
+                assert_eq!(meta.steps_per_sec, 666.25);
+                assert_eq!(meta.train_wall_time_us, 15_000);
+                assert_eq!(meta.trace_id, 0);
+                assert_eq!(meta.parent_span, 0);
+                assert!(!meta.span_ctx().is_set());
             }
             other => panic!("unexpected {}", other.kind()),
         }

@@ -370,6 +370,7 @@ impl Trainer for XlaTrainer {
                 train_loss: last_loss,
                 steps_per_sec: steps.max(1) as f64 / elapsed.as_secs_f64().max(1e-9),
                 train_wall_time_us: (elapsed.as_micros() as u64).max(1),
+                ..TaskMeta::default()
             },
         ))
     }

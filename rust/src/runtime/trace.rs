@@ -58,6 +58,7 @@ const EV_ROUND_CLOSE: u8 = 3;
 const EV_AGGREGATE: u8 = 4;
 const EV_MARK_OUTSTANDING: u8 = 5;
 const EV_BASE_SET: u8 = 6;
+const EV_SPANS: u8 = 7;
 const EV_FOOTER: u8 = 0xFF;
 
 /// Community snapshots kept during replay for `BaseSet` resolution: the
@@ -193,6 +194,30 @@ impl TraceRecorder {
         self.event(EV_BASE_SET, tick, &p);
     }
 
+    /// Controller-side spans, batched (kind 7). Spans are observability
+    /// payload only: replay ignores them; `metisfl trace dump` renders
+    /// them as a per-trace timeline.
+    pub fn spans(&mut self, tick: Timestamp, spans: &[crate::obs::Span]) {
+        if spans.is_empty() {
+            return;
+        }
+        let mut p = Vec::with_capacity(4 + spans.len() * 72);
+        put_u32(&mut p, spans.len() as u32);
+        for s in spans {
+            put_u64(&mut p, s.trace_id);
+            put_u64(&mut p, s.span_id);
+            put_u64(&mut p, s.parent);
+            put_str(&mut p, s.op);
+            put_str(&mut p, &s.peer);
+            put_u64(&mut p, s.round);
+            put_u64(&mut p, s.task_id);
+            put_u64(&mut p, s.stream_id);
+            put_u64(&mut p, s.t_start.as_nanos() as u64);
+            put_u64(&mut p, s.t_end.as_nanos() as u64);
+        }
+        self.event(EV_SPANS, tick, &p);
+    }
+
     /// Seal the trace: append the footer (final community digest +
     /// counter snapshot) and hand back the finished bytes.
     pub fn finish(mut self, community_digest: u64, counters: &BTreeMap<String, u64>) -> Vec<u8> {
@@ -209,6 +234,22 @@ impl TraceRecorder {
     }
 }
 
+/// One span as recorded in a trace. Mirrors [`crate::obs::Span`] with
+/// an owned `op` (the in-memory span uses a static vocabulary).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SpanRecord {
+    pub trace_id: u64,
+    pub span_id: u64,
+    pub parent: u64,
+    pub op: String,
+    pub peer: String,
+    pub round: u64,
+    pub task_id: u64,
+    pub stream_id: u64,
+    pub t_start: Timestamp,
+    pub t_end: Timestamp,
+}
+
 /// One decoded trace event (tick carried alongside in [`Trace`]).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum TraceEvent {
@@ -218,6 +259,7 @@ pub enum TraceEvent {
     Aggregate { round: u64, ids: Vec<String> },
     MarkOutstanding { id: String },
     BaseSet { id: String, round: u64 },
+    Spans { spans: Vec<SpanRecord> },
 }
 
 /// A fully parsed trace: environment + timeline + footer.
@@ -314,6 +356,25 @@ impl Trace {
                         tick,
                         TraceEvent::BaseSet { id: p.str_block()?, round: p.u64()? },
                     ));
+                }
+                EV_SPANS => {
+                    let n = p.u32()?;
+                    let mut spans = Vec::with_capacity(n as usize);
+                    for _ in 0..n {
+                        spans.push(SpanRecord {
+                            trace_id: p.u64()?,
+                            span_id: p.u64()?,
+                            parent: p.u64()?,
+                            op: p.str_block()?,
+                            peer: p.str_block()?,
+                            round: p.u64()?,
+                            task_id: p.u64()?,
+                            stream_id: p.u64()?,
+                            t_start: Duration::from_nanos(p.u64()?),
+                            t_end: Duration::from_nanos(p.u64()?),
+                        });
+                    }
+                    events.push((tick, TraceEvent::Spans { spans }));
                 }
                 EV_FOOTER => {
                     let digest = p.u64()?;
@@ -436,6 +497,9 @@ pub fn replay(trace: &Trace) -> Result<ReplayOutcome> {
                 }
                 None => {}
             },
+            // Spans are observability payload: they never influenced the
+            // recorded controller's state, so replay skips them.
+            TraceEvent::Spans { .. } => {}
         }
         if let Some((m, r)) = controller.community() {
             history.insert(r, m);
@@ -505,6 +569,45 @@ mod tests {
             trace.events[5],
             (t(6), TraceEvent::Aggregate { round: 1, ids: vec!["a".into()] })
         );
+    }
+
+    #[test]
+    fn span_batches_roundtrip_and_replay_ignores_them() {
+        use crate::obs::SpanSink;
+        use crate::util::clock::Clock;
+        let clock = Clock::sim();
+        let sink = SpanSink::new("controller", clock.clone());
+        sink.enable();
+        let root = sink.begin("round", crate::obs::SpanCtx::UNSET).round(1);
+        clock.advance_to(Duration::from_millis(5));
+        let child = sink.begin("dispatch", root.ctx()).peer("l0").round(1).task(1);
+        clock.advance_to(Duration::from_millis(8));
+        child.end();
+        root.end();
+        let spans = sink.drain();
+        assert_eq!(spans.len(), 2);
+
+        let mut rec = TraceRecorder::new("learners: 1\n");
+        rec.spans(t(9), &spans);
+        // An empty batch records nothing.
+        rec.spans(t(10), &[]);
+        assert_eq!(rec.events(), 1);
+        let bytes = rec.finish(0, &BTreeMap::new());
+        let trace = Trace::decode(&bytes).unwrap();
+        assert_eq!(trace.events.len(), 1);
+        match &trace.events[0].1 {
+            TraceEvent::Spans { spans: got } => {
+                assert_eq!(got.len(), 2);
+                let dispatch = got.iter().find(|s| s.op == "dispatch").unwrap();
+                let round = got.iter().find(|s| s.op == "round").unwrap();
+                assert_eq!(dispatch.parent, round.span_id);
+                assert_eq!(dispatch.trace_id, round.trace_id);
+                assert_eq!(dispatch.peer, "l0");
+                assert_eq!(dispatch.t_start, Duration::from_millis(5));
+                assert_eq!(dispatch.t_end, Duration::from_millis(8));
+            }
+            other => panic!("unexpected event {other:?}"),
+        }
     }
 
     #[test]

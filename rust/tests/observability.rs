@@ -1,0 +1,253 @@
+//! Observability-plane acceptance (ISSUE: correlated span tracing).
+//!
+//! The load-bearing claims, end to end through real federations:
+//!
+//! 1. ONE trace id stitches the whole causal chain across process
+//!    boundaries — root controller round → dispatch → aggregator shard
+//!    round → learner train/upload → the retried attempt of a
+//!    chaos-severed upload → ingest — into a single connected tree,
+//!    with child intervals causally ordered against their parents.
+//! 2. Tracing is observation only: a spans-on run produces the bitwise
+//!    identical community model to the spans-off run.
+//! 3. Span batches ride the recorded MFTR1 trace without perturbing it:
+//!    replay ignores them and still reproduces the digest bitwise.
+//! 4. The exposition listener speaks enough HTTP that a plain GET
+//!    returns the registry in Prometheus text format.
+
+use metisfl::config::{FederationEnv, ModelSpec, ObservabilitySpec};
+use metisfl::controller::hierarchy::{AggregatorNode, AggregatorServicer};
+use metisfl::controller::{scheduling, Controller};
+use metisfl::driver::run_simulated;
+use metisfl::harness::{run_loadtest, LoadtestConfig};
+use metisfl::learner::{Dataset, Learner, LearnerServicer, SyntheticTrainer};
+use metisfl::net::chaos::ChaosSpec;
+use metisfl::net::{serve, Service};
+use metisfl::obs::{assert_single_tree, Span};
+use metisfl::runtime::trace::{replay_trace, Trace, TraceEvent};
+use metisfl::tensor::TensorModel;
+use metisfl::util::Rng;
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+#[test]
+fn one_trace_id_spans_root_aggregator_learner_and_the_retry() {
+    // Two-tier federation, streamed data plane, full quorum. Learner-1's
+    // upload link is chaos-severed mid-stream with a short reconnect
+    // window, so its upload fails once and succeeds on the retry — the
+    // round still closes with every contribution.
+    let env = FederationEnv::builder("obs-two-tier")
+        .learners(2)
+        .rounds(1)
+        .model(ModelSpec::mlp(4, 2, 8))
+        .samples_per_learner(12)
+        .batch_size(6)
+        .quorum_fraction(1.0)
+        .stream_chunk_bytes(2048)
+        .heartbeat_ms(5_000)
+        .seed(0x0B5)
+        .build();
+
+    // Root controller sees exactly one learner-like peer: the aggregator.
+    let mut root_env = env.clone();
+    root_env.learners = 1;
+    let ctrl = Controller::new(root_env, None).unwrap();
+    ctrl.span_sink().enable();
+    let ctrl_server =
+        serve("inproc://obs-root", Arc::clone(&ctrl) as Arc<dyn Service>, None).unwrap();
+
+    let node = AggregatorNode::new("agg-0", &ctrl_server.endpoint(), &env, 2, None).unwrap();
+    node.inner().span_sink().enable();
+    let agg_server = serve(
+        "inproc://obs-agg",
+        Arc::new(AggregatorServicer(Arc::clone(&node))) as Arc<dyn Service>,
+        None,
+    )
+    .unwrap();
+
+    let mut learners = Vec::new();
+    let mut servers = Vec::new();
+    for i in 0..2usize {
+        let learner = Learner::new(
+            &format!("learner-{i}"),
+            &agg_server.endpoint(),
+            None,
+            Arc::new(SyntheticTrainer::new(0, 0.01)),
+            Dataset::synthetic_housing(4, 12, 12, i as u64),
+        );
+        learner.set_stream_chunk(2048);
+        learner.span_sink().enable();
+        if i == 1 {
+            // Send budget 3 = hello + register + Begin: the upload's
+            // first chunk severs the link mid-stream. The retry backoff
+            // (≥20 ms) outlasts the 10 ms reconnect window, so the
+            // re-dial rejoins and attempt 2 delivers. (A one-learner
+            // fleet makes the victim assignment trivially this plan.)
+            let spec = ChaosSpec {
+                sever_fraction: 1.0,
+                sever_after_sends: 3,
+                reconnect_after_ms: 10,
+                ..ChaosSpec::default()
+            };
+            learner.set_chaos(spec.plan_fleet(1, 0).remove(0));
+        }
+        let server = serve(
+            &format!("inproc://obs-l{i}"),
+            Arc::new(LearnerServicer(Arc::clone(&learner))) as Arc<dyn Service>,
+            None,
+        )
+        .unwrap();
+        learner.register(&server.endpoint()).unwrap();
+        servers.push(server);
+        learners.push(learner);
+    }
+    node.inner().wait_for_learners(2, Duration::from_secs(10)).unwrap();
+    node.register(&agg_server.endpoint(), 2 * env.samples_per_learner).unwrap();
+    ctrl.wait_for_learners(1, Duration::from_secs(10)).unwrap();
+
+    ctrl.ship_model(TensorModel::random_init(&env.model.tensor_layout(), &mut Rng::new(5)));
+    let report = scheduling::run_round(&ctrl, 1, &mut Rng::new(6)).unwrap();
+    assert_eq!(report.completed, 1, "the aggregator tier must complete the root round");
+
+    // --- Claim 1: one connected tree across all three tiers -----------
+    let mut spans: Vec<Span> = ctrl.span_sink().drain();
+    spans.extend(node.inner().span_sink().drain());
+    for l in &learners {
+        spans.extend(l.span_sink().drain());
+    }
+    // The root controller's round span is the only parentless span of
+    // the trace of record (the inner "round" parents under shard_round).
+    let root = spans
+        .iter()
+        .find(|s| s.op == "round" && s.parent == 0)
+        .expect("no root round span recorded")
+        .clone();
+    let trace: Vec<Span> =
+        spans.iter().filter(|s| s.trace_id == root.trace_id).cloned().collect();
+    let root_id = assert_single_tree(&trace)
+        .unwrap_or_else(|e| panic!("spans do not form a single tree: {e}\n{trace:#?}"));
+    assert_eq!(root_id, root.span_id);
+
+    // Every tier contributed its op to the one trace.
+    let count = |op: &str| trace.iter().filter(|s| s.op == op).count();
+    for op in [
+        "round",
+        "barrier",
+        "dispatch",
+        "aggregate",
+        "ingest",
+        "shard_round",
+        "partial_upload",
+        "train",
+        "upload",
+        "upload_attempt",
+    ] {
+        assert!(count(op) > 0, "no '{op}' span in the trace: {trace:#?}");
+    }
+
+    // The severed learner's upload span has ≥ 2 attempt children — the
+    // retry is part of the tree, not a fresh trace.
+    let mut attempts_per_upload: HashMap<u64, usize> = HashMap::new();
+    for s in trace.iter().filter(|s| s.op == "upload_attempt") {
+        *attempts_per_upload.entry(s.parent).or_insert(0) += 1;
+    }
+    assert!(
+        attempts_per_upload.values().any(|&n| n >= 2),
+        "no upload recorded a retried attempt: {attempts_per_upload:?}"
+    );
+
+    // Causal interval ordering on the shared clock: no span ends before
+    // it starts, and no child starts before its parent did.
+    let by_id: HashMap<u64, &Span> = trace.iter().map(|s| (s.span_id, s)).collect();
+    for s in &trace {
+        assert!(s.t_end >= s.t_start, "span '{}' ends before it starts", s.op);
+        if let Some(p) = by_id.get(&s.parent) {
+            assert!(
+                s.t_start >= p.t_start,
+                "child '{}' ({:?}) starts before its parent '{}' ({:?})",
+                s.op,
+                s.t_start,
+                p.op,
+                p.t_start
+            );
+        }
+    }
+}
+
+#[test]
+fn spans_on_run_is_bitwise_identical_to_spans_off() {
+    let mk = |name: &str, spans: bool| {
+        FederationEnv::builder(name)
+            .learners(3)
+            .rounds(2)
+            .model(ModelSpec::mlp(4, 2, 8))
+            .samples_per_learner(12)
+            .batch_size(6)
+            .stream_chunk_bytes(2048)
+            .heartbeat_ms(5_000)
+            .seed(77)
+            .observability(ObservabilitySpec { listen_addr: String::new(), spans })
+            .build()
+    };
+    let off = run_simulated(&mk("obs-off", false)).unwrap();
+    let on = run_simulated(&mk("obs-on", true)).unwrap();
+    assert_ne!(on.community_digest, 0, "spans-on run produced no community model");
+    assert_eq!(
+        off.community_digest, on.community_digest,
+        "span tracing perturbed the math"
+    );
+}
+
+#[test]
+fn recorded_trace_carries_span_batches_and_still_replays_bitwise() {
+    let mut cfg = LoadtestConfig::quick();
+    cfg.learners = 3;
+    cfg.rate = 1000.0;
+    cfg.record = true;
+    cfg.spans = true;
+    let report = run_loadtest(&cfg).unwrap();
+    let bytes = report.trace.expect("recorded run produced no trace");
+
+    let trace = Trace::decode(&bytes).unwrap();
+    let recorded_spans: usize = trace
+        .events
+        .iter()
+        .map(|(_, e)| match e {
+            TraceEvent::Spans { spans } => spans.len(),
+            _ => 0,
+        })
+        .sum();
+    assert!(recorded_spans > 0, "no spans rode the recorded trace");
+
+    // Replay must skip the observability payload and reproduce bitwise.
+    let outcome = replay_trace(&bytes).unwrap();
+    assert!(outcome.divergence.is_none(), "replay diverged: {:?}", outcome.divergence);
+}
+
+#[test]
+fn exposition_listener_serves_prometheus_text_over_plain_get() {
+    use metisfl::metrics::MetricsRegistry;
+    use metisfl::obs::ExpoServer;
+    use std::io::{Read, Write};
+
+    let reg = MetricsRegistry::new();
+    reg.counter("obs_test").add(7);
+    reg.gauge("obs_test_open").set(3);
+    reg.histogram("obs_test_latency").record(Duration::from_millis(12));
+
+    let mut server = ExpoServer::serve("127.0.0.1:0", Arc::clone(&reg)).unwrap();
+    let mut stream = std::net::TcpStream::connect(server.addr()).unwrap();
+    stream.write_all(b"GET /metrics HTTP/1.0\r\nConnection: close\r\n\r\n").unwrap();
+    let mut resp = String::new();
+    stream.read_to_string(&mut resp).unwrap();
+    server.stop();
+
+    assert!(resp.starts_with("HTTP/1.0 200"), "bad status line: {resp}");
+    let body = resp.split_once("\r\n\r\n").map(|(_, b)| b).unwrap_or("");
+    assert!(body.contains("metisfl_obs_test_total 7"), "counter missing:\n{body}");
+    assert!(body.contains("metisfl_obs_test_open 3"), "gauge missing:\n{body}");
+    assert!(
+        body.contains("metisfl_obs_test_latency_seconds_count 1"),
+        "histogram summary missing:\n{body}"
+    );
+}

@@ -234,6 +234,8 @@ fn prop_streaming_trio_roundtrips_any_layout() {
                 train_loss: g.f64_in(-10.0, 10.0),
                 steps_per_sec: g.f64_in(0.0, 10_000.0),
                 train_wall_time_us: g.rng().next_u64() % 100_000_000,
+                trace_id: g.rng().next_u64(),
+                parent_span: g.rng().next_u64(),
             },
             spec: TaskSpec {
                 epochs: g.usize_in(0..10),
